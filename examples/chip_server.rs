@@ -1,0 +1,141 @@
+//! END-TO-END driver: the full three-layer stack on a real workload.
+//!
+//! 1. loads the AOT HLO artifacts (L2 jax model + L1 pallas kernels)
+//!    into PJRT and trains an AND gate **through the XLA path** on a
+//!    mismatched die — proving the learning loop composes across all
+//!    three layers;
+//! 2. starts the chip-array coordinator with 4 XLA-engine dies (distinct
+//!    mismatch personalities) and serves a mixed batch of sampling +
+//!    annealing jobs, reporting latency percentiles, throughput, batch
+//!    and reprogram counts.
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example chip_server
+//! ```
+
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+use pchip::analog::Personality;
+use pchip::chimera::Topology;
+use pchip::config::Config;
+use pchip::coordinator::{ChipArrayServer, EngineKind, JobRequest, JobResult};
+use pchip::experiments::{fig7_gate_learning, GateExperiment};
+use pchip::learning::Hw;
+use pchip::problems::{maxcut::Graph, sk};
+use pchip::runtime::{ArtifactSet, Runtime};
+use pchip::sampler::XlaSampler;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+    let dir = cfg.artifacts_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+
+    // ---- phase 1: hardware-aware learning through the AOT path --------
+    println!("=== phase 1: CD learning of AND through PJRT (L1+L2+L3) ===");
+    let rt = Runtime::cpu()?;
+    let set = ArtifactSet::load_some(&rt, &dir, &["gibbs_b8"])?;
+    println!("platform: {}, artifacts: {:?}", rt.platform(), set.names());
+    let topo = Topology::new();
+    let mut exp = GateExperiment::and_default();
+    // a tighter budget than the software run —each epoch costs PJRT calls
+    exp.params.epochs = 60;
+    exp.params.lr = 0.12;
+    exp.params.samples_per_pattern = 12;
+    exp.eval_samples = 1500;
+    exp.snapshot_epochs = vec![0, 59];
+    let personality = Personality::sample(&topo, exp.chip_seed, exp.mismatch);
+    let engine = XlaSampler::new(&set, 8, exp.chip_seed)?;
+    let mut chip = Hw::new(engine, personality);
+    let t0 = Instant::now();
+    let report = fig7_gate_learning(&exp, &mut chip, Some("e2e_xla_and"))?;
+    println!(
+        "trained AND via XLA in {:.1?}: final KL {:.4}, valid mass {:.3} (PJRT calls: {})",
+        t0.elapsed(),
+        report.final_kl,
+        report.final_valid_mass,
+        chip.engine.calls
+    );
+    anyhow::ensure!(report.final_valid_mass > 0.7, "E2E learning did not converge");
+
+    // ---- phase 2: serve a mixed workload over 4 XLA dies --------------
+    println!("\n=== phase 2: chip-array serving (4 XLA dies) ===");
+    let mut cfg = Config::default();
+    cfg.server.chips = 4;
+    cfg.server.queue_depth = 256;
+    let srv = ChipArrayServer::start(&cfg, EngineKind::Xla { artifacts_dir: dir })?;
+
+    let h_glass = srv.register_problem(sk::chimera_pm_j(&topo, 1))?;
+    let h_gauss = srv.register_problem(sk::chimera_gaussian(&topo, 2))?;
+    let g = Graph::chimera_native(&topo, 0.5, 3);
+    let h_cut = srv.register_problem(g.to_ising_native(&topo)?)?;
+
+    let n_jobs = 96usize;
+    let t0 = Instant::now();
+    let mut tickets = Vec::new();
+    for i in 0..n_jobs {
+        let req = match i % 8 {
+            7 => JobRequest::Anneal {
+                problem: h_glass,
+                params: pchip::annealing::AnnealParams {
+                    steps: 24,
+                    sweeps_per_step: 8,
+                    ..Default::default()
+                },
+            },
+            k => JobRequest::Sample {
+                problem: [h_glass, h_gauss, h_cut][k % 3],
+                sweeps: 32,
+                beta: 1.5,
+                chains: 4,
+            },
+        };
+        tickets.push(srv.submit(req)?);
+    }
+    let mut lat_us = Vec::new();
+    let mut ok = 0usize;
+    let mut anneal_best = f64::INFINITY;
+    for t in tickets {
+        match t.wait() {
+            JobResult::Samples { latency, energies, .. } => {
+                ok += 1;
+                lat_us.push(latency.as_micros() as u64);
+                assert!(!energies.is_empty());
+            }
+            JobResult::Annealed { best_energy, latency, .. } => {
+                ok += 1;
+                lat_us.push(latency.as_micros() as u64);
+                anneal_best = anneal_best.min(best_energy);
+            }
+            JobResult::Failed(e) => eprintln!("job failed: {e}"),
+        }
+    }
+    let elapsed = t0.elapsed();
+    lat_us.sort_unstable();
+    let stats = srv.stats();
+    println!("served {ok}/{n_jobs} jobs in {elapsed:.2?} → {:.1} jobs/s", ok as f64 / elapsed.as_secs_f64());
+    println!(
+        "latency: p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
+        lat_us[lat_us.len() / 2] as f64 / 1e3,
+        lat_us[lat_us.len() * 95 / 100] as f64 / 1e3,
+        lat_us[(lat_us.len() * 99 / 100).min(lat_us.len() - 1)] as f64 / 1e3
+    );
+    println!(
+        "batches {}  reprograms {}  simulated chip time {:.1} µs  best anneal energy {:.0}",
+        stats.batches.load(Ordering::Relaxed),
+        stats.reprograms.load(Ordering::Relaxed),
+        stats.chip_time_ns.load(Ordering::Relaxed) as f64 / 1e3,
+        anneal_best
+    );
+    anyhow::ensure!(ok == n_jobs, "jobs dropped");
+    // affinity should keep reprograms near the problem count × dies
+    let reprograms = stats.reprograms.load(Ordering::Relaxed);
+    anyhow::ensure!(reprograms <= 16, "affinity routing broken: {reprograms} reprograms");
+    println!("\nE2E OK — all three layers composed (pallas kernel → jax scan → HLO text → PJRT → rust coordinator)");
+    Ok(())
+}

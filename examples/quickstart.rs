@@ -1,0 +1,62 @@
+//! Quickstart: program a tiny Ising problem onto a simulated die and
+//! sample it — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::chimera::Topology;
+use pchip::config::MismatchConfig;
+use pchip::learning::{Hw, TrainableChip};
+use pchip::problems::IsingProblem;
+use pchip::sampler::{Sampler, SoftwareSampler};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The hardware graph: 440 spins, 7×8 Chimera cells.
+    let topo = Topology::new();
+    println!("chip: {} spins, {} couplers", pchip::N_SPINS, topo.edges.len());
+
+    // 2. A die personality: every DAC/multiplier/tanh instance gets its
+    //    own frozen process-variation mismatch (the paper's premise).
+    let personality = Personality::sample(&topo, /*seed=*/ 7, MismatchConfig::default());
+
+    // 3. A problem: ferromagnetic pair + a biased third spin.
+    let (a, b) = topo.edges[0]; // vertical 0 ↔ horizontal 0 of cell 0
+    let mut problem = IsingProblem::new("quickstart");
+    problem.couplings.push((a, b, 1.0)); // J > 0 favours alignment
+    problem.h[8] = 0.6; // spin 8 (cell 1) biased up
+    let (j_codes, enables, h_codes, scale) = problem.to_codes(&topo)?;
+
+    // 4. A sampling engine wrapped with the personality → a trainable,
+    //    programmable "chip".
+    let engine = SoftwareSampler::new(/*chains=*/ 8, /*seed=*/ 1);
+    let mut chip = Hw::new(engine, personality);
+    chip.program_codes(&ProgrammedWeights { j_codes, enables, h_codes })?;
+    chip.set_beta((1.5 * scale) as f32);
+
+    // 5. Sample and look at the statistics.
+    let mut aligned = 0usize;
+    let mut spin8_up = 0usize;
+    let mut n = 0usize;
+    chip.sweeps(32)?; // thermalize
+    for _ in 0..400 {
+        chip.sweeps(2)?;
+        for st in chip.states() {
+            aligned += (st[a] == st[b]) as usize;
+            spin8_up += (st[8] == 1) as usize;
+            n += 1;
+        }
+    }
+    println!(
+        "P(spin{a} == spin{b})  = {:.3}   (ferro pair, expect >> 0.5)",
+        aligned as f64 / n as f64
+    );
+    println!(
+        "P(spin8 = +1)        = {:.3}   (biased spin, expect > 0.5)",
+        spin8_up as f64 / n as f64
+    );
+    println!("energy of all-up     = {:.2}", problem.energy(&vec![1i8; pchip::N_SPINS]));
+    println!("\nnext: examples/train_gate.rs (Fig 7), examples/chip_server.rs (serving)");
+    Ok(())
+}

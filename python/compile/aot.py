@@ -1,0 +1,174 @@
+"""AOT export: lower the L2 chip model to HLO text artifacts.
+
+Interchange is HLO *text*, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 rust crate links) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and round-trips
+cleanly -- see /opt/xla-example/README.md and gen_hlo.py there.
+
+Artifacts (written to ../artifacts/ relative to python/):
+
+  gibbs_b{1,8,32}.hlo.txt     S=8 chromatic Gibbs sweeps, batch B
+  gibbs_trace_b8.hlo.txt      S=32 sweeps + per-sweep trace (annealing)
+  energy_b32.hlo.txt          batched Ising energy
+  cd_stats_b32.hlo.txt        <mm>, <m> sufficient statistics
+  cd_update.hlo.txt           CD parameter step
+  transfer_b32.hlo.txt        mismatch-aware tanh transfer
+  manifest.json               shapes + argument order for every artifact
+  golden/                     topology + fixed-seed personality golden
+                              files cross-checked by the rust tests
+
+The Makefile only re-runs this when compile/ sources change; python never
+runs on the rust request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import chimera, mismatch, model
+
+S_SWEEPS = 8        # sweeps per gibbs_block call (rust loops calls)
+S_TRACE = 32        # sweeps per gibbs_trace call
+GIBBS_BATCHES = (1, 8, 32)
+N = chimera.N_PAD
+
+F32 = jnp.float32
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True).
+
+    NOTE: the default printer elides large array constants as `{...}`,
+    which the rust-side text parser then silently materializes as zeros —
+    the baked color masks would vanish and no spin would ever commit.
+    Print with `print_large_constants=True` (caught by
+    rust/tests/xla_integration.rs and the artifact self-check below).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # 0.5.1's parser does not know newer metadata attributes
+    # (source_end_line etc.) — strip metadata entirely.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def artifact_specs() -> dict[str, tuple]:
+    """name -> (fn, [input ShapeDtypeStructs])."""
+    arts: dict[str, tuple] = {}
+    for b in GIBBS_BATCHES:
+        arts[f"gibbs_b{b}"] = (
+            model.gibbs_block,
+            [spec(b, N), spec(N, N), spec(N), spec(N), spec(N),
+             spec(S_SWEEPS, 2, b, N), spec(1)],
+        )
+    arts["gibbs_trace_b8"] = (
+        model.gibbs_trace,
+        [spec(8, N), spec(N, N), spec(N), spec(N), spec(N),
+         spec(S_TRACE, 2, 8, N), spec(1)],
+    )
+    arts["energy_b32"] = (model.energy, [spec(32, N), spec(N, N), spec(N)])
+    arts["cd_stats_b32"] = (model.cd_stats, [spec(32, N)])
+    arts["cd_update"] = (
+        model.cd_update,
+        [spec(N, N), spec(N, N), spec(N), spec(N), spec(1)],
+    )
+    arts["transfer_b32"] = (model.transfer, [spec(32, N), spec(N), spec(N), spec(1)])
+    return arts
+
+
+def write_golden(outdir: str) -> None:
+    """Topology + fixed-seed personality goldens for rust cross-checks."""
+    golden = os.path.join(outdir, "golden")
+    os.makedirs(golden, exist_ok=True)
+    edges = chimera.edges()
+    with open(os.path.join(golden, "edges.json"), "w") as f:
+        json.dump(edges, f)
+    colors = [chimera.color(s) for s in range(chimera.N_SPINS)]
+    with open(os.path.join(golden, "colors.json"), "w") as f:
+        json.dump(colors, f)
+    # Fixed-seed mismatch personality digest (rust regenerates its own
+    # personalities; this golden pins the *python* test fixture).
+    p = mismatch.sample(seed=7)
+    digest = {
+        "seed": 7,
+        "g_beta_head": [float(x) for x in p.g_beta[:8]],
+        "o_beta_head": [float(x) for x in p.o_beta[:8]],
+        "g_beta_mean": float(np.mean(p.g_beta[: chimera.N_SPINS])),
+        "n_spins": chimera.N_SPINS,
+        "n_edges": len(edges),
+        "degree_histogram": chimera.degree_histogram(),
+    }
+    with open(os.path.join(golden, "personality_seed7.json"), "w") as f:
+        json.dump(digest, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the sentinel artifact (Makefile target); "
+                         "all artifacts land in its directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names to regenerate")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest: dict[str, dict] = {}
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, in_specs) in artifact_specs().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in in_specs],
+            "dtype": "f32",
+            "sweeps": S_SWEEPS if name.startswith("gibbs_b") else
+                      (S_TRACE if name.startswith("gibbs_trace") else None),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest["_meta"] = {
+        "n_pad": N,
+        "n_spins": chimera.N_SPINS,
+        "rows": chimera.ROWS,
+        "cols": chimera.COLS,
+        "dead_cell": list(chimera.DEAD_CELL),
+        "s_sweeps": S_SWEEPS,
+        "s_trace": S_TRACE,
+        "gibbs_batches": list(GIBBS_BATCHES),
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    write_golden(outdir)
+
+    # Sentinel for the Makefile dependency edge.
+    with open(os.path.join(outdir, "model.hlo.txt"), "w") as f:
+        f.write("# sentinel: see manifest.json for the artifact set\n")
+    print(f"manifest + golden written to {outdir}")
+
+
+if __name__ == "__main__":
+    main()

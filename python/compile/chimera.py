@@ -1,0 +1,136 @@
+"""Chimera graph topology for the 440-spin p-bit chip.
+
+The chip arranges spins as a 7x8 array of Chimera unit cells; each cell is
+a K4,4 bipartite "restricted Boltzmann machine" with 4 *vertical* spins
+(coupled to the cells above/below) and 4 *horizontal* spins (coupled to the
+cells left/right).  One cell -- (ROWS-1, COLS-1) -- is replaced by bias
+circuits and SPI interfaces on the die, leaving 55 active cells * 8 spins =
+440 spins.
+
+Spin indexing (must match rust/src/chimera/topology.rs exactly; a golden
+edge list is cross-checked in tests):
+
+    cell_idx = active-cell rank in row-major order, skipping the dead cell
+    spin_id  = cell_idx*8 + side*4 + k     side: 0=vertical, 1=horizontal
+                                           k: 0..3 within the side
+
+For MXU tiling the spin vector is padded 440 -> 448 (= 7*64); pad spins
+have no couplers and are masked out of every update.
+
+Two-coloring: Chimera is bipartite under
+
+    color(r, c, side) = (r + c + side) mod 2
+
+(in-cell K4,4 edges flip `side`; inter-cell vertical edges flip `r`;
+horizontal edges flip `c`), so a two-phase chromatic update is an exact
+Gibbs sweep.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+ROWS = 7
+COLS = 8
+CELL = 8  # spins per unit cell (4 vertical + 4 horizontal)
+DEAD_CELL = (ROWS - 1, COLS - 1)  # replaced by bias/SPI circuitry
+N_SPINS = (ROWS * COLS - 1) * CELL  # 440
+N_PAD = 448  # 7 * 64, MXU-friendly padding
+VERTICAL = 0
+HORIZONTAL = 1
+
+
+def cell_index(r: int, c: int) -> int | None:
+    """Active-cell rank of cell (r, c); None for the dead cell."""
+    if (r, c) == DEAD_CELL:
+        return None
+    idx = r * COLS + c
+    dead_linear = DEAD_CELL[0] * COLS + DEAD_CELL[1]
+    return idx - 1 if idx > dead_linear else idx
+
+
+def spin_id(r: int, c: int, side: int, k: int) -> int | None:
+    """Global spin id, or None if the cell is dead."""
+    ci = cell_index(r, c)
+    if ci is None:
+        return None
+    return ci * CELL + side * 4 + k
+
+
+def spin_coords(s: int) -> tuple[int, int, int, int]:
+    """Inverse of spin_id: (r, c, side, k)."""
+    ci, rem = divmod(s, CELL)
+    side, k = divmod(rem, 4)
+    dead_linear = DEAD_CELL[0] * COLS + DEAD_CELL[1]
+    linear = ci if ci < dead_linear else ci + 1
+    r, c = divmod(linear, COLS)
+    return r, c, side, k
+
+
+def edges() -> list[tuple[int, int]]:
+    """Canonical (i < j) edge list of the 440-spin Chimera graph."""
+    out: list[tuple[int, int]] = []
+    for r in range(ROWS):
+        for c in range(COLS):
+            if cell_index(r, c) is None:
+                continue
+            # in-cell K4,4
+            for kv in range(4):
+                for kh in range(4):
+                    a = spin_id(r, c, VERTICAL, kv)
+                    b = spin_id(r, c, HORIZONTAL, kh)
+                    out.append((min(a, b), max(a, b)))
+            # vertical coupler to the cell below
+            if r + 1 < ROWS and cell_index(r + 1, c) is not None:
+                for k in range(4):
+                    a = spin_id(r, c, VERTICAL, k)
+                    b = spin_id(r + 1, c, VERTICAL, k)
+                    out.append((min(a, b), max(a, b)))
+            # horizontal coupler to the cell on the right
+            if c + 1 < COLS and cell_index(r, c + 1) is not None:
+                for k in range(4):
+                    a = spin_id(r, c, HORIZONTAL, k)
+                    b = spin_id(r, c + 1, HORIZONTAL, k)
+                    out.append((min(a, b), max(a, b)))
+    return sorted(set(out))
+
+
+def color(s: int) -> int:
+    """Bipartition color of spin s (0 or 1)."""
+    r, c, side, _ = spin_coords(s)
+    return (r + c + side) % 2
+
+
+def color_masks() -> np.ndarray:
+    """[2, N_PAD] float32 masks; pad spins belong to no color."""
+    m = np.zeros((2, N_PAD), dtype=np.float32)
+    for s in range(N_SPINS):
+        m[color(s), s] = 1.0
+    return m
+
+
+def adjacency_mask() -> np.ndarray:
+    """[N_PAD, N_PAD] float32 symmetric 0/1 coupler mask."""
+    a = np.zeros((N_PAD, N_PAD), dtype=np.float32)
+    for i, j in edges():
+        a[i, j] = 1.0
+        a[j, i] = 1.0
+    return a
+
+
+def active_mask() -> np.ndarray:
+    """[N_PAD] float32, 1 for real spins, 0 for padding."""
+    m = np.zeros(N_PAD, dtype=np.float32)
+    m[:N_SPINS] = 1.0
+    return m
+
+
+def degree_histogram() -> dict[int, int]:
+    deg = np.zeros(N_SPINS, dtype=int)
+    for i, j in edges():
+        deg[i] += 1
+        deg[j] += 1
+    hist: dict[int, int] = {}
+    for d in deg:
+        hist[int(d)] = hist.get(int(d), 0) + 1
+    return hist

@@ -1,0 +1,46 @@
+"""L1 pallas kernel: batched pairwise correlation <m_i m_j>.
+
+The contrastive-divergence update needs the data-phase and model-phase
+correlation matrices (Fig 7a of the paper).  On-chip this is done by the
+host reading spins over SPI and accumulating; here it is one MXU outer
+product per (row-tile, column-tile) pair:
+
+    C[bi, bj] = m[:, bi]^T @ m[:, bj] / B
+
+Grid is (N/64, N/64); each program owns one 64x64 output tile, so the whole
+correlation matrix streams through VMEM tile by tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _corr_kernel(ma_ref, mb_ref, out_ref, *, inv_b):
+    out_ref[...] = (ma_ref[...].T @ mb_ref[...]) * inv_b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def corr(m, *, interpret=True):
+    """[B, N] spins -> [N, N] correlation matrix <m_i m_j>."""
+    b, n = m.shape
+    assert n % BLOCK_N == 0
+    grid = (n // BLOCK_N, n // BLOCK_N)
+    kernel = functools.partial(_corr_kernel, inv_b=1.0 / b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, BLOCK_N), lambda i, j: (0, i)),
+            pl.BlockSpec((b, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(m, m)

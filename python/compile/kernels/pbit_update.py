@@ -1,0 +1,102 @@
+"""L1 pallas kernel: one chromatic half-sweep of the p-bit array.
+
+TPU mapping of the chip's analog datapath (DESIGN.md section
+Hardware-Adaptation):
+
+  * the 6-way analog current summation per node + bias branch becomes one
+    MXU matvec over the padded 448-spin vector -- the effective coupling
+    matrix (with all DAC / Gilbert-multiplier mismatch pre-folded by the
+    rust coordinator) stays resident in VMEM across the whole sweep;
+  * the WTA tanh + random-current injection + comparator become a VPU
+    elementwise tail;
+  * the two-phase chromatic schedule (Chimera is bipartite) is expressed
+    by the caller invoking this kernel twice per sweep with alternating
+    color masks.
+
+Two block layouts, same math (asserted equal in python/tests):
+
+  * ``block_n=64`` -- grid of 64-column output tiles (448 = 7 x 64), the
+    HBM<->VMEM schedule a real TPU would use; each program reads the full
+    spin matrix [B, 448] plus a [448, 64] coupling tile.
+  * ``block_n=None`` (default) -- a single program over the whole padded
+    array. The entire working set (J_eff 448x448 f32 = 802 KB + state)
+    fits VMEM, so on TPU one program is also viable; on the CPU PJRT
+    backend that executes the AOT artifacts it lowers to straight-line
+    HLO that XLA fuses ~7x faster than the grid loop (EXPERIMENTS.md
+    section Perf) -- so it is the export default.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 64
+
+
+def _half_sweep_kernel(
+    m_full_ref,  # [B, N]     full spin state (matvec operand)
+    jt_ref,      # [N, BN]    coupling tile into this output block
+    h_ref,       # [1, BN]    effective bias
+    g_ref,       # [1, BN]    tanh slope mismatch
+    o_ref,       # [1, BN]    input-referred offset
+    u_ref,       # [B, BN]    uniform random currents in (-1, 1)
+    mask_ref,    # [1, BN]    color mask (1.0 commits)
+    beta_ref,    # [1, 1]     inverse temperature
+    m_blk_ref,   # [B, BN]    current state of this output block
+    out_ref,     # [B, BN]
+):
+    # Current summation: every spin's current flows into this column tile.
+    i_tot = m_full_ref[...] @ jt_ref[...] + h_ref[...]
+    # WTA tanh with per-p-bit slope/offset mismatch.
+    act = jnp.tanh(beta_ref[0, 0] * g_ref[...] * i_tot + o_ref[...])
+    # Random current + comparator; ties resolve high.
+    new = jnp.where(act + u_ref[...] >= 0.0, 1.0, -1.0).astype(jnp.float32)
+    out_ref[...] = jnp.where(mask_ref[...] > 0.0, new, m_blk_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def pbit_half_sweep(m, jt_eff, h_eff, g, o, u, color_mask, beta, *,
+                    interpret=True, block_n=None):
+    """Apply one chromatic half-sweep; see kernels/ref.py for the math.
+
+    Shapes: m,u [B,N]; jt_eff [N,N]; h_eff,g,o,color_mask [N]; beta [1].
+    ``block_n`` selects the tiled grid (e.g. 64) or single-program
+    (None) layout -- identical results either way.
+    """
+    b, n = m.shape
+    row = lambda x: x.reshape(1, n)
+    args = (m, jt_eff, row(h_eff), row(g), row(o), u, row(color_mask),
+            beta.reshape(1, 1), m)
+    if block_n is None:
+        return pl.pallas_call(
+            _half_sweep_kernel,
+            out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+            interpret=interpret,
+        )(*args)
+    assert n % block_n == 0, f"N={n} must be a multiple of {block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _half_sweep_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, n), lambda j: (0, 0)),          # m (full)
+            pl.BlockSpec((n, block_n), lambda j: (0, j)),    # jt tile
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),    # h
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),    # g
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),    # o
+            pl.BlockSpec((b, block_n), lambda j: (0, j)),    # u
+            pl.BlockSpec((1, block_n), lambda j: (0, j)),    # mask
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),          # beta
+            pl.BlockSpec((b, block_n), lambda j: (0, j)),    # m block
+        ],
+        out_specs=pl.BlockSpec((b, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(*args)

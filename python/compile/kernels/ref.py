@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the pallas kernels.
+
+These are the CORE correctness signal: every pallas kernel is asserted
+allclose against these references in python/tests/, and the rust software
+sampler is asserted against the same math through golden files.
+
+Math (DESIGN.md section 5, eqns 1-2 of the paper with mismatch folded in):
+
+    I_i   = sum_j Jt_eff[j, i] * m_j + h_eff_i        (current summation)
+    act_i = tanh(beta * g_i * I_i + o_i)              (WTA tanh, slope/offset
+                                                       mismatch per p-bit)
+    m_i'  = sgn(act_i + u_i)                          (random current + WTA
+                                                       comparator)
+
+only spins of the active color commit; sgn(0) resolves to +1 (the
+comparator's self-biased output stage breaks ties high).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pbit_half_sweep_ref(m, jt_eff, h_eff, g, o, u, color_mask, beta):
+    """One chromatic half-sweep of the p-bit update.
+
+    Args:
+      m:          [B, N] spins in {-1, +1} as f32.
+      jt_eff:     [N, N] effective coupling, laid out so column i collects
+                  the currents flowing INTO p-bit i (I = m @ jt_eff).
+      h_eff:      [N] effective bias current.
+      g:          [N] per-p-bit tanh slope mismatch (nominal 1).
+      o:          [N] per-p-bit input-referred offset (nominal 0).
+      u:          [B, N] uniform random currents in (-1, 1).
+      color_mask: [N] 1.0 where this half-sweep commits, else 0.0.
+      beta:       [1] inverse temperature (V_temp knob).
+
+    Returns [B, N] updated spins.
+    """
+    i_tot = m @ jt_eff + h_eff
+    act = jnp.tanh(beta[0] * g * i_tot + o)
+    new = jnp.where(act + u >= 0.0, 1.0, -1.0)
+    return jnp.where(color_mask > 0.0, new, m)
+
+
+def corr_ref(m):
+    """Batched pairwise correlation <m_i m_j>: [B, N] -> [N, N]."""
+    b = m.shape[0]
+    return (m.T @ m) / jnp.float32(b)
+
+
+def energy_ref(m, j_sym, h):
+    """Ising energy E = -1/2 m^T J m - h^T m per batch row: -> [B]."""
+    return -0.5 * jnp.sum(m * (m @ j_sym), axis=-1) - m @ h
+
+
+def transfer_ref(i_in, g, o, beta):
+    """Mismatch-aware tanh transfer curve (Fig 8a calibration path)."""
+    return jnp.tanh(beta[0] * g * i_in + o)

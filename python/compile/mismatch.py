@@ -1,0 +1,103 @@
+"""Process-variation mismatch model (python side).
+
+The chip shares one supply between analog and digital and uses unmatched
+analog standard cells, so every DAC, Gilbert multiplier and WTA-tanh
+instance carries static per-instance mismatch.  The authoritative,
+circuit-derived personality generator lives in rust (rust/src/analog/);
+this module provides an equivalent parameterization for python-side tests
+and for golden-file cross-checks.
+
+Parameter semantics (DESIGN.md section 5):
+
+  g_dac[i,j]   symmetric  -- one R-2R weight DAC per undirected coupler
+                            ("current converted into a bias voltage and
+                            distributed to the respective nodes")
+  g_mul[i,j]   asymmetric -- each node has its own Gilbert multiplier, so
+                            the two directions of a coupler differ
+  o_mul[i,j]   asymmetric -- multiplier offset; present even when the
+                            enable bit is off, scaled by `leak`
+  g_beta[i]               -- WTA tanh slope mismatch per p-bit
+  o_beta[i]               -- input-referred offset (tanh + comparator)
+  g_bias[i]               -- bias-branch DAC gain
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import chimera
+
+
+@dataclass(frozen=True)
+class MismatchConfig:
+    sigma_dac: float = 0.05
+    sigma_mul: float = 0.04
+    sigma_off: float = 0.02  # in units of max weight current
+    sigma_beta: float = 0.08
+    sigma_obeta: float = 0.03
+    leak: float = 0.1  # residual coupling of a disabled connection
+
+    @classmethod
+    def ideal(cls) -> "MismatchConfig":
+        return cls(0.0, 0.0, 0.0, 0.0, 0.0, 0.0)
+
+
+@dataclass(frozen=True)
+class Personality:
+    """One chip instance's static mismatch parameters (padded to N_PAD)."""
+
+    g_dac: np.ndarray   # [N, N] symmetric, masked by adjacency
+    g_mul: np.ndarray   # [N, N] asymmetric, masked by adjacency
+    o_mul: np.ndarray   # [N, N] asymmetric, masked by adjacency
+    g_beta: np.ndarray  # [N]
+    o_beta: np.ndarray  # [N]
+    g_bias: np.ndarray  # [N]
+
+
+def sample(seed: int, cfg: MismatchConfig = MismatchConfig()) -> Personality:
+    rng = np.random.default_rng(seed)
+    n = chimera.N_PAD
+    adj = chimera.adjacency_mask()
+    act = chimera.active_mask()
+
+    upper = rng.normal(1.0, cfg.sigma_dac, (n, n)).astype(np.float32)
+    g_dac = np.triu(upper, 1)
+    g_dac = (g_dac + g_dac.T) * adj  # one DAC per undirected coupler
+
+    g_mul = rng.normal(1.0, cfg.sigma_mul, (n, n)).astype(np.float32) * adj
+    o_mul = rng.normal(0.0, cfg.sigma_off, (n, n)).astype(np.float32) * adj
+
+    g_beta = (rng.normal(1.0, cfg.sigma_beta, n).astype(np.float32)) * act
+    o_beta = (rng.normal(0.0, cfg.sigma_obeta, n).astype(np.float32)) * act
+    g_bias = (rng.normal(1.0, cfg.sigma_dac, n).astype(np.float32)) * act
+    return Personality(g_dac, g_mul, o_mul, g_beta, o_beta, g_bias)
+
+
+def fold(j: np.ndarray, h: np.ndarray, en: np.ndarray, p: Personality,
+         leak: float = MismatchConfig().leak):
+    """Fold mismatch into effective tensors the kernels consume.
+
+    Args:
+      j:  [N, N] symmetric programmed weights (normalized units, J[i,j] is
+          the coupling code / 127).
+      h:  [N] programmed biases.
+      en: [N, N] symmetric 0/1 enable bits.
+
+    Returns (jt_eff, h_eff) where jt_eff[j, i] is the current into p-bit i
+    from spin j (I = m @ jt_eff), including disabled-coupler leakage.
+    """
+    adj = chimera.adjacency_mask()
+    en = en * adj
+    # j_eff[i, j]: current into i contributed by m_j.  Disabled couplers
+    # still pass a `leak` fraction of the programmed current (paper:
+    # "setting the weight to zero might not necessarily remove a
+    # connection"), which the enable bit exists to suppress -- we model
+    # the residual after the enable as leak * weight.
+    gain = p.g_mul * p.g_dac
+    j_eff = (en + (adj - en) * leak) * gain * j
+    # The multiplier's static offset current is independent of the spin
+    # sign, so it folds into the bias: every physical coupler contributes.
+    h_eff = h * p.g_bias + (p.o_mul * adj).sum(axis=1)
+    return np.ascontiguousarray(j_eff.T), h_eff.astype(np.float32)

@@ -1,0 +1,98 @@
+"""L2: the jax chip model -- build-time only, never on the request path.
+
+Every public function here is AOT-lowered to HLO text by `aot.py` and
+executed from the rust coordinator through PJRT.  All chip non-idealities
+enter through the *input tensors* (jt_eff, h_eff, g, o), which the rust
+side computes from its circuit-level analog models; the HLO itself is
+personality-agnostic, so one artifact serves every simulated chip instance.
+
+Randomness is likewise an input: the rust coordinator generates the
+chip-accurate decimated-LFSR bitstream and feeds it in as the uniform
+tensor `u`, keeping threefry out of the hot loop and making the sampler
+bit-reproducible against the cycle-level chip simulator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import chimera
+from .kernels.corr import corr
+from .kernels.pbit_update import pbit_half_sweep
+
+# Color masks are static chip facts -> baked into the lowered HLO.
+_MASKS = chimera.color_masks()
+
+
+def gibbs_block(m0, jt_eff, h_eff, g, o, u, beta):
+    """Run S full chromatic Gibbs sweeps over the p-bit array.
+
+    Args:
+      m0:     [B, N] initial spins (+-1 f32).
+      jt_eff: [N, N] effective coupling (I = m @ jt_eff), mismatch folded.
+      h_eff:  [N] effective bias.
+      g, o:   [N] tanh slope / offset mismatch.
+      u:      [S, 2, B, N] uniform randoms in (-1, 1), one [B, N] slab per
+              half-sweep (phase 0 = color 0 commits, phase 1 = color 1).
+      beta:   [1] inverse temperature.
+
+    Returns a 1-tuple ([B, N] final spins,) -- tuple for the HLO bridge.
+    """
+    mask0 = jnp.asarray(_MASKS[0])
+    mask1 = jnp.asarray(_MASKS[1])
+
+    def sweep(m, u_s):
+        m = pbit_half_sweep(m, jt_eff, h_eff, g, o, u_s[0], mask0, beta)
+        m = pbit_half_sweep(m, jt_eff, h_eff, g, o, u_s[1], mask1, beta)
+        return m, None
+
+    m, _ = jax.lax.scan(sweep, m0, u)
+    return (m,)
+
+
+def gibbs_trace(m0, jt_eff, h_eff, g, o, u, beta):
+    """Like gibbs_block but also returns the per-sweep state trace
+    ([S, B, N]) -- used for annealing-energy traces (Fig 9a)."""
+    mask0 = jnp.asarray(_MASKS[0])
+    mask1 = jnp.asarray(_MASKS[1])
+
+    def sweep(m, u_s):
+        m = pbit_half_sweep(m, jt_eff, h_eff, g, o, u_s[0], mask0, beta)
+        m = pbit_half_sweep(m, jt_eff, h_eff, g, o, u_s[1], mask1, beta)
+        return m, m
+
+    m, trace = jax.lax.scan(sweep, m0, u)
+    return (m, trace)
+
+
+def energy(m, j_sym, h):
+    """Ising energy per batch row: E = -1/2 m^T J m - h^T m -> ([B],)."""
+    e = -0.5 * jnp.sum(m * (m @ j_sym), axis=-1) - m @ h
+    return (e,)
+
+
+def cd_stats(m):
+    """CD sufficient statistics: (<m_i m_j> [N, N], <m_i> [N])."""
+    return (corr(m), jnp.mean(m, axis=0))
+
+
+def cd_update(c_data, c_model, mean_data, mean_model, lr):
+    """Contrastive-divergence parameter step (Fig 7a):
+
+        dJ = lr * (<mm>_data - <mm>_model)   restricted to Chimera edges
+        dh = lr * (<m>_data  - <m>_model)
+
+    Returns (dJ [N, N], dh [N]).  Quantization to 8-bit codes happens in
+    the rust trainer, which owns the weight registers.
+    """
+    adj = jnp.asarray(chimera.adjacency_mask())
+    act = jnp.asarray(chimera.active_mask())
+    dj = lr[0] * (c_data - c_model) * adj
+    dh = lr[0] * (mean_data - mean_model) * act
+    return (dj, dh)
+
+
+def transfer(i_in, g, o, beta):
+    """Mismatch-aware tanh transfer (Fig 8a calibration): ([B, N],)."""
+    return (jnp.tanh(beta[0] * g * i_in + o),)

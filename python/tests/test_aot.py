@@ -1,0 +1,114 @@
+"""AOT export path: HLO text integrity and manifest consistency.
+
+The rust integration tests validate numerics through PJRT; these tests
+pin the *export* invariants that bit us once already (the default HLO
+printer elides large constants as `{...}`, silently zeroing the baked
+color masks on the rust side).
+"""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, chimera, model
+
+
+@pytest.fixture(scope="module")
+def gibbs_text():
+    lowered = jax.jit(model.gibbs_block).lower(
+        aot.spec(8, aot.N), aot.spec(aot.N, aot.N), aot.spec(aot.N),
+        aot.spec(aot.N), aot.spec(aot.N), aot.spec(aot.S_SWEEPS, 2, 8, aot.N),
+        aot.spec(1),
+    )
+    return aot.to_hlo_text(lowered)
+
+
+def test_no_elided_constants(gibbs_text):
+    assert "{...}" not in gibbs_text
+
+
+def test_no_unparseable_metadata(gibbs_text):
+    # xla_extension 0.5.1's parser rejects newer metadata attributes
+    assert "source_end_line" not in gibbs_text
+    assert "metadata={" not in gibbs_text
+
+
+def test_entry_signature_matches_manifest_order(gibbs_text):
+    # parameters must appear as m, jt, h, g, o, u, beta
+    import re
+    entry = gibbs_text[gibbs_text.index("ENTRY"):]
+    params = {}
+    for m in re.finditer(r"parameter\((\d+)\)", entry):
+        # find the shape just before
+        line = entry[:m.end()].splitlines()[-1]
+        shape = re.search(r"(f32|pred)\[([\d,]*)\]", line)
+        params[int(m.group(1))] = shape.group(2) if shape else ""
+    assert params[0] == "8,448"          # m
+    assert params[1] == "448,448"        # jt_eff
+    assert params[2] == "448"            # h_eff
+    assert params[5] == f"{aot.S_SWEEPS},2,8,448"  # u
+    assert params[6] == "1"              # beta
+
+
+def test_masks_are_baked_as_full_constants(gibbs_text):
+    # the two color masks appear as 448-element f32 constants
+    count = gibbs_text.count("f32[448]{0} constant({")
+    assert count >= 2, "color-mask constants missing from HLO text"
+
+
+def test_artifact_specs_cover_every_batch():
+    arts = aot.artifact_specs()
+    for b in aot.GIBBS_BATCHES:
+        assert f"gibbs_b{b}" in arts
+        fn, specs = arts[f"gibbs_b{b}"]
+        assert specs[0].shape == (b, chimera.N_PAD)
+        assert specs[5].shape == (aot.S_SWEEPS, 2, b, chimera.N_PAD)
+    assert "energy_b32" in arts and "cd_stats_b32" in arts
+
+
+def test_manifest_on_disk_if_built():
+    outdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(outdir, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    with open(path) as f:
+        manifest = json.load(f)
+    meta = manifest["_meta"]
+    assert meta["n_spins"] == 440
+    assert meta["n_pad"] == 448
+    for name, e in manifest.items():
+        if name == "_meta":
+            continue
+        art = os.path.join(outdir, e["file"])
+        assert os.path.exists(art), f"missing artifact {art}"
+        with open(art) as f:
+            text = f.read()
+        assert "{...}" not in text, f"{name}: elided constants"
+
+
+def test_golden_edges_match_topology():
+    outdir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(outdir, "golden", "edges.json")
+    if not os.path.exists(path):
+        pytest.skip("golden not built")
+    with open(path) as f:
+        edges = [tuple(e) for e in json.load(f)]
+    assert edges == chimera.edges()
+
+
+def test_mismatch_fold_shapes():
+    from compile import mismatch
+    p = mismatch.sample(3)
+    n = chimera.N_PAD
+    j = np.zeros((n, n), dtype=np.float32)
+    h = np.zeros(n, dtype=np.float32)
+    en = chimera.adjacency_mask()
+    jt, h_eff = mismatch.fold(j, h, en, p)
+    assert jt.shape == (n, n)
+    assert h_eff.shape == (n,)
+    # zero weights -> only offsets remain, and only on active spins
+    assert np.all(jt == 0)
+    assert np.all(h_eff[chimera.N_SPINS:] == 0)

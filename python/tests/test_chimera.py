@@ -1,0 +1,100 @@
+"""Topology invariants of the 440-spin Chimera graph."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import chimera
+
+
+def test_spin_count():
+    assert chimera.N_SPINS == 440  # the paper's headline spin count
+    assert chimera.N_PAD == 448
+    assert chimera.ROWS * chimera.COLS - 1 == 55
+
+
+def test_edge_count():
+    # 55 cells * 16 in-cell edges + inter-cell couplers.  Vertical pairs:
+    # per column, 6 adjacent row pairs * 8 cols = 48, minus pairs touching
+    # the dead cell (6,7): (5,7)-(6,7) -> 47 pairs * 4 wires.  Horizontal:
+    # per row, 7 adjacent col pairs * 7 rows = 49, minus (6,6)-(6,7) ->
+    # 48 pairs * 4 wires.
+    e = chimera.edges()
+    assert len(e) == 55 * 16 + 47 * 4 + 48 * 4
+    assert len(set(e)) == len(e)
+    assert all(i < j for i, j in e)
+
+
+def test_dead_cell_has_no_spins():
+    assert chimera.cell_index(*chimera.DEAD_CELL) is None
+    assert chimera.spin_id(*chimera.DEAD_CELL, 0, 0) is None
+
+
+@given(st.integers(0, chimera.N_SPINS - 1))
+def test_spin_id_roundtrip(s):
+    r, c, side, k = chimera.spin_coords(s)
+    assert chimera.spin_id(r, c, side, k) == s
+    assert 0 <= r < chimera.ROWS and 0 <= c < chimera.COLS
+    assert side in (0, 1) and 0 <= k < 4
+
+
+def test_two_coloring_is_proper():
+    # The chromatic Gibbs schedule is only exact if no edge is monochrome.
+    for i, j in chimera.edges():
+        assert chimera.color(i) != chimera.color(j), (i, j)
+
+
+def test_color_masks_partition_active_spins():
+    m = chimera.color_masks()
+    assert m.shape == (2, chimera.N_PAD)
+    total = m[0] + m[1]
+    assert np.all(total[: chimera.N_SPINS] == 1.0)
+    assert np.all(total[chimera.N_SPINS:] == 0.0)
+
+
+def test_adjacency_symmetric_zero_diag():
+    a = chimera.adjacency_mask()
+    assert np.array_equal(a, a.T)
+    assert np.all(np.diag(a) == 0)
+    assert a[:, chimera.N_SPINS:].sum() == 0  # padding is isolated
+
+
+def test_degrees():
+    # Interior spins have 4 (K4,4) + 2 (both neighbours) = 6 couplers --
+    # matching the paper's "each node has 6 current inputs"; boundary and
+    # dead-cell-adjacent spins have 5.
+    hist = chimera.degree_histogram()
+    assert set(hist) <= {4, 5, 6}
+    assert hist[6] > hist[5] > 0
+    a = chimera.adjacency_mask()
+    deg = a.sum(axis=1)[: chimera.N_SPINS]
+    assert deg.max() == 6
+
+
+def test_k44_structure_in_cell():
+    # No vertical-vertical or horizontal-horizontal edges inside a cell.
+    for i, j in chimera.edges():
+        ri, ci, si, _ = chimera.spin_coords(i)
+        rj, cj, sj, _ = chimera.spin_coords(j)
+        if (ri, ci) == (rj, cj):
+            assert si != sj
+        else:
+            assert si == sj  # inter-cell couplers link like sides
+
+
+def test_intercell_couplers_link_same_k():
+    for i, j in chimera.edges():
+        ri, ci, si, ki = chimera.spin_coords(i)
+        rj, cj, sj, kj = chimera.spin_coords(j)
+        if (ri, ci) != (rj, cj):
+            assert ki == kj
+            if si == chimera.VERTICAL:
+                assert ci == cj and abs(ri - rj) == 1
+            else:
+                assert ri == rj and abs(ci - cj) == 1
+
+
+@pytest.mark.parametrize("r,c", [(0, 0), (3, 4), (6, 6)])
+def test_cell_index_skips_dead(r, c):
+    ci = chimera.cell_index(r, c)
+    assert ci is not None and 0 <= ci < 55

@@ -1,0 +1,130 @@
+"""L1 pallas kernels vs pure-jnp oracles -- the CORE correctness signal.
+
+hypothesis sweeps batch size, beta, mismatch magnitude and seeds; every
+case asserts allclose between the interpret-mode pallas kernel and ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import chimera, mismatch
+from compile.kernels.corr import corr
+from compile.kernels.pbit_update import pbit_half_sweep
+from compile.kernels.ref import corr_ref, energy_ref, pbit_half_sweep_ref
+
+N = chimera.N_PAD
+
+
+def _random_case(seed: int, b: int, sigma: float, beta_val: float):
+    rng = np.random.default_rng(seed)
+    m = rng.choice([-1.0, 1.0], size=(b, N)).astype(np.float32)
+    cfg = mismatch.MismatchConfig(
+        sigma_dac=sigma, sigma_mul=sigma, sigma_off=sigma / 2,
+        sigma_beta=sigma, sigma_obeta=sigma / 2,
+    )
+    p = mismatch.sample(seed + 1, cfg)
+    j = rng.normal(0.0, 0.3, (N, N)).astype(np.float32)
+    j = ((j + j.T) / 2) * chimera.adjacency_mask()
+    h = (rng.normal(0.0, 0.2, N) * chimera.active_mask()).astype(np.float32)
+    en = chimera.adjacency_mask()
+    jt_eff, h_eff = mismatch.fold(j, h, en, p)
+    u = rng.uniform(-1.0, 1.0, (b, N)).astype(np.float32)
+    beta = np.array([beta_val], dtype=np.float32)
+    return m, jt_eff, h_eff, p.g_beta, p.o_beta, u, beta
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    b=st.sampled_from([1, 2, 8]),
+    sigma=st.sampled_from([0.0, 0.05, 0.15]),
+    beta_val=st.sampled_from([0.25, 1.0, 3.0]),
+    color=st.integers(0, 1),
+)
+def test_half_sweep_matches_ref(seed, b, sigma, beta_val, color):
+    m, jt, h, g, o, u, beta = _random_case(seed, b, sigma, beta_val)
+    mask = chimera.color_masks()[color]
+    got = pbit_half_sweep(m, jt, h, g, o, u, mask, beta)
+    want = pbit_half_sweep_ref(m, jt, h, g, o, u, mask, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_half_sweep_only_touches_active_color():
+    m, jt, h, g, o, u, beta = _random_case(3, 4, 0.1, 1.0)
+    mask = chimera.color_masks()[0]
+    out = np.asarray(pbit_half_sweep(m, jt, h, g, o, u, mask, beta))
+    frozen = mask == 0.0
+    np.testing.assert_array_equal(out[:, frozen], m[:, frozen])
+    assert np.all(np.abs(out) <= 1.0)
+    assert set(np.unique(out)) <= {-1.0, 1.0}
+
+
+def test_half_sweep_deterministic_at_high_beta():
+    # beta -> inf: tanh saturates; with |u| < 1 the update is sgn(I).
+    m, jt, h, g, o, u, beta = _random_case(11, 2, 0.0, 1.0)
+    beta = np.array([1e4], dtype=np.float32)
+    mask = chimera.color_masks()[1]
+    out = np.asarray(pbit_half_sweep(m, jt, h, g, o, u * 0.5, mask, beta))
+    i_tot = m @ jt + h
+    want = np.where(i_tot >= 0, 1.0, -1.0)
+    active = (mask > 0) & (np.abs(i_tot) > 1e-3).all(axis=0)
+    np.testing.assert_array_equal(out[:, active], want[:, active])
+
+
+def test_tie_breaks_high():
+    # act + u == 0 must resolve to +1 (comparator output stage).
+    b = 1
+    m = np.ones((b, N), dtype=np.float32)
+    z = np.zeros(N, dtype=np.float32)
+    jt = np.zeros((N, N), dtype=np.float32)
+    u = np.zeros((b, N), dtype=np.float32)
+    mask = np.ones(N, dtype=np.float32)
+    out = np.asarray(pbit_half_sweep(-m, jt, z, z + 1, z, u, mask,
+                                     np.array([1.0], np.float32)))
+    assert np.all(out == 1.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.sampled_from([1, 4, 32]))
+def test_corr_matches_ref(seed, b):
+    rng = np.random.default_rng(seed)
+    m = rng.choice([-1.0, 1.0], size=(b, N)).astype(np.float32)
+    got = np.asarray(corr(m))
+    want = np.asarray(corr_ref(m))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_corr_diagonal_is_one():
+    rng = np.random.default_rng(0)
+    m = rng.choice([-1.0, 1.0], size=(16, N)).astype(np.float32)
+    c = np.asarray(corr(m))
+    np.testing.assert_allclose(np.diag(c), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(c, c.T, rtol=1e-6)
+
+
+def test_energy_ref_golden():
+    # 3-spin chain J01=J12=1, h=0, all-up: E = -(1+1) = -2.
+    n = N
+    j = np.zeros((n, n), dtype=np.float32)
+    j[0, 1] = j[1, 0] = 1.0
+    j[1, 2] = j[2, 1] = 1.0
+    m = np.zeros((1, n), dtype=np.float32)
+    m[0, :3] = 1.0
+    h = np.zeros(n, dtype=np.float32)
+    e = np.asarray(energy_ref(m, j, h))
+    np.testing.assert_allclose(e, [-2.0], atol=1e-6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.sampled_from([1, 8]))
+def test_tiled_and_single_block_layouts_agree(seed, b):
+    """block_n=64 (TPU-shaped grid) and block_n=None (fused export
+    default) must produce bit-identical results."""
+    m, jt, h, g, o, u, beta = _random_case(seed, b, 0.1, 1.0)
+    mask = chimera.color_masks()[seed % 2]
+    tiled = pbit_half_sweep(m, jt, h, g, o, u, mask, beta, block_n=64)
+    single = pbit_half_sweep(m, jt, h, g, o, u, mask, beta, block_n=None)
+    np.testing.assert_array_equal(np.asarray(tiled), np.asarray(single))

@@ -1,0 +1,198 @@
+"""L2 model invariants.
+
+The key statistical test: the chromatic Gibbs sampler must converge to the
+exact Boltzmann distribution on a single Chimera cell (8 spins, K4,4),
+verified by exhaustive enumeration -- this is what makes the chip a
+"Gibbs Sampling" Ising machine (Table 1) rather than a heuristic annealer.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from compile import chimera, model
+from compile.kernels.ref import energy_ref, transfer_ref
+
+N = chimera.N_PAD
+
+
+def _cell_problem(seed=0, scale=0.4):
+    """Random J, h supported on cell 0 only (spins 0..7)."""
+    rng = np.random.default_rng(seed)
+    j = np.zeros((N, N), dtype=np.float32)
+    adj = chimera.adjacency_mask()
+    for i in range(8):
+        for k in range(8):
+            if adj[i, k] and i < k:
+                w = rng.normal(0.0, scale)
+                j[i, k] = j[k, i] = w
+    h = np.zeros(N, dtype=np.float32)
+    h[:8] = rng.normal(0.0, scale / 2, 8)
+    return j, h
+
+
+def _exact_boltzmann(j, h, beta, n_spins=8):
+    states = np.array(
+        [[1 if (s >> b) & 1 else -1 for b in range(n_spins)]
+         for s in range(2 ** n_spins)], dtype=np.float32)
+    jj = j[:n_spins, :n_spins]
+    hh = h[:n_spins]
+    e = -0.5 * np.sum(states * (states @ jj), axis=1) - states @ hh
+    w = np.exp(-beta * (e - e.min()))
+    return states, w / w.sum()
+
+
+def _run_chains(j, h, beta, n_calls, burn, seed=0, b=32):
+    rng = np.random.default_rng(seed)
+    jt = np.ascontiguousarray(j.T)
+    g = np.ones(N, dtype=np.float32)
+    o = np.zeros(N, dtype=np.float32)
+    m = rng.choice([-1.0, 1.0], (b, N)).astype(np.float32)
+    f = jax.jit(model.gibbs_block)
+    beta_arr = np.array([beta], dtype=np.float32)
+    samples = []
+    for call in range(n_calls):
+        u = rng.uniform(-1.0, 1.0, (8, 2, b, N)).astype(np.float32)
+        m = np.asarray(f(m, jt, h, g, o, u, beta_arr)[0])
+        if call >= burn:
+            samples.append(m.copy())
+    return np.concatenate(samples, axis=0)
+
+
+def test_gibbs_matches_exact_boltzmann_on_cell():
+    j, h = _cell_problem(seed=1)
+    beta = 1.0
+    states, p_exact = _exact_boltzmann(j, h, beta)
+    samp = _run_chains(j, h, beta, n_calls=400, burn=20, seed=2)
+    n = len(samp)
+    # Consecutive call-final states are autocorrelated; be conservative.
+    n_eff = n / 3.0
+
+    # (a) first and second moments match exact within 5 sigma -- these are
+    # exactly the CD sufficient statistics the chip trains on.
+    mag_exact = p_exact @ states
+    mag_emp = samp[:, :8].mean(axis=0)
+    se_mag = np.sqrt((1 - mag_exact**2) / n_eff) + 1e-3
+    np.testing.assert_array_less(np.abs(mag_emp - mag_exact), 5 * se_mag)
+
+    adj = chimera.adjacency_mask()[:8, :8]
+    c_exact = (states.T * p_exact) @ states
+    c_emp = samp[:, :8].T @ samp[:, :8] / n
+    se_c = np.sqrt((1 - c_exact**2) / n_eff) + 1e-3
+    bad = np.abs(c_emp - c_exact)[adj > 0] > (5 * se_c)[adj > 0]
+    assert not bad.any(), "edge correlations off >5 sigma"
+
+    # (b) full 256-state KL bounded by finite-sample bias allowance
+    # (E[KL] ~ (K-1)/(2 n_eff) for a perfect sampler).
+    bits = (samp[:, :8] > 0).astype(int)
+    idx = bits @ (1 << np.arange(8))
+    p_emp = np.bincount(idx, minlength=256) / n
+    kl = np.sum(np.where(p_exact > 0,
+                         p_exact * np.log(p_exact / np.maximum(p_emp, 1e-12)),
+                         0.0))
+    assert kl < 255 / (2 * n_eff) * 3 + 0.01, f"KL = {kl}"
+
+
+def test_gibbs_respects_padding_and_range():
+    j, h = _cell_problem(seed=3)
+    samp = _run_chains(j, h, 1.0, n_calls=3, burn=0, seed=4, b=8)
+    assert set(np.unique(samp)) <= {-1.0, 1.0}
+
+
+def test_trace_last_equals_block_output():
+    rng = np.random.default_rng(5)
+    j, h = _cell_problem(seed=5)
+    jt = np.ascontiguousarray(j.T)
+    g = np.ones(N, dtype=np.float32)
+    o = np.zeros(N, dtype=np.float32)
+    b = 8
+    m0 = rng.choice([-1.0, 1.0], (b, N)).astype(np.float32)
+    u = rng.uniform(-1.0, 1.0, (32, 2, b, N)).astype(np.float32)
+    beta = np.array([1.0], dtype=np.float32)
+    m_final, trace = jax.jit(model.gibbs_trace)(m0, jt, h, g, o, u, beta)
+    np.testing.assert_array_equal(np.asarray(trace)[-1], np.asarray(m_final))
+    assert np.asarray(trace).shape == (32, b, N)
+
+
+def test_energy_model_matches_ref():
+    rng = np.random.default_rng(6)
+    j, h = _cell_problem(seed=6)
+    m = rng.choice([-1.0, 1.0], (32, N)).astype(np.float32)
+    got = np.asarray(jax.jit(model.energy)(m, j, h)[0])
+    want = np.asarray(energy_ref(m, j, h))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cd_update_restricted_to_edges():
+    rng = np.random.default_rng(7)
+    c_data = rng.normal(0, 1, (N, N)).astype(np.float32)
+    c_model = rng.normal(0, 1, (N, N)).astype(np.float32)
+    md = rng.normal(0, 1, N).astype(np.float32)
+    mm = rng.normal(0, 1, N).astype(np.float32)
+    lr = np.array([0.05], dtype=np.float32)
+    dj, dh = jax.jit(model.cd_update)(c_data, c_model, md, mm, lr)
+    dj, dh = np.asarray(dj), np.asarray(dh)
+    adj = chimera.adjacency_mask()
+    assert np.all(dj[adj == 0] == 0.0)
+    np.testing.assert_allclose(
+        dj[adj > 0], 0.05 * (c_data - c_model)[adj > 0], rtol=1e-5)
+    assert np.all(dh[chimera.N_SPINS:] == 0.0)
+
+
+def test_cd_update_fixed_point():
+    # When data and model statistics agree the update is exactly zero.
+    c = np.random.default_rng(8).normal(0, 1, (N, N)).astype(np.float32)
+    m = np.random.default_rng(9).normal(0, 1, N).astype(np.float32)
+    lr = np.array([0.1], dtype=np.float32)
+    dj, dh = jax.jit(model.cd_update)(c, c, m, m, lr)
+    assert np.all(np.asarray(dj) == 0.0)
+    assert np.all(np.asarray(dh) == 0.0)
+
+
+def test_transfer_matches_ref():
+    rng = np.random.default_rng(10)
+    i_in = rng.normal(0, 2, (32, N)).astype(np.float32)
+    g = rng.normal(1, 0.1, N).astype(np.float32)
+    o = rng.normal(0, 0.05, N).astype(np.float32)
+    beta = np.array([1.7], dtype=np.float32)
+    got = np.asarray(jax.jit(model.transfer)(i_in, g, o, beta)[0])
+    want = np.asarray(transfer_ref(i_in, g, o, beta))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_mismatch_changes_equilibrium_but_learning_signal_sees_it():
+    """The hardware-aware-learning premise: a mismatched chip samples a
+    *different* distribution, and that difference is visible in the CD
+    statistics (so training through the hardware can absorb it)."""
+    from compile import mismatch
+
+    j, h = _cell_problem(seed=11, scale=0.6)
+    en = chimera.adjacency_mask()
+    p = mismatch.sample(seed=12, cfg=mismatch.MismatchConfig(
+        sigma_dac=0.15, sigma_mul=0.15, sigma_off=0.08,
+        sigma_beta=0.2, sigma_obeta=0.1))
+    jt_eff, h_eff = mismatch.fold(j, h, en, p)
+
+    rng = np.random.default_rng(13)
+    b = 32
+    f = jax.jit(model.gibbs_block)
+    beta = np.array([1.0], dtype=np.float32)
+
+    def mean_spins(jt, hh, g, o, seed):
+        r = np.random.default_rng(seed)
+        m = r.choice([-1.0, 1.0], (b, N)).astype(np.float32)
+        acc = []
+        for call in range(60):
+            u = r.uniform(-1.0, 1.0, (8, 2, b, N)).astype(np.float32)
+            m = np.asarray(f(m, jt, hh, g, o, u, beta)[0])
+            if call >= 10:
+                acc.append(m[:, :8].mean(axis=0))
+        return np.mean(acc, axis=0)
+
+    ideal = mean_spins(np.ascontiguousarray(j.T), h,
+                       np.ones(N, np.float32), np.zeros(N, np.float32), 14)
+    hw = mean_spins(jt_eff, h_eff, p.g_beta, p.o_beta, 14)
+    # Mismatch must actually matter at this sigma...
+    assert np.max(np.abs(ideal - hw)) > 0.02
+    # ...and both must stay valid magnetizations.
+    assert np.all(np.abs(ideal) <= 1) and np.all(np.abs(hw) <= 1)

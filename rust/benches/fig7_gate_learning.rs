@@ -1,0 +1,71 @@
+//! Bench: Fig 7 — AND-gate hardware-aware CD learning.
+//!
+//! Regenerates the paper's learning curves (distribution vs epoch,
+//! correlation convergence) on three corners — ideal die, default
+//! mismatch, heavy mismatch — and times the per-epoch cost. The paper's
+//! qualitative claim to reproduce: the mismatched die learns the gate
+//! essentially as well as the ideal one.
+
+use pchip::config::MismatchConfig;
+use pchip::experiments::{fig7_gate_learning, software_chip, GateExperiment};
+use pchip::learning::TrainableChip;
+use pchip::sampler::Sampler;
+use pchip::util::bench::{write_csv, Bench};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== fig7: AND-gate CD learning across mismatch corners ===");
+    let corners = [
+        ("ideal", MismatchConfig::ideal()),
+        ("default", MismatchConfig::default()),
+        (
+            "heavy",
+            MismatchConfig {
+                sigma_dac: 0.12,
+                sigma_mul: 0.10,
+                sigma_off: 0.05,
+                sigma_beta: 0.20,
+                sigma_obeta: 0.08,
+                leak: 0.15,
+                sigma_r2r: 0.03,
+            },
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (name, corner) in corners {
+        let mut exp = GateExperiment::and_default();
+        exp.mismatch = corner;
+        exp.params.epochs = 120;
+        exp.eval_samples = 3000;
+        exp.snapshot_epochs = vec![0, 119];
+        let mut chip = software_chip(exp.chip_seed, corner, 8);
+        let t0 = std::time::Instant::now();
+        let report = fig7_gate_learning(&exp, &mut chip, Some(&format!("fig7_bench_{name}")))?;
+        let dt = t0.elapsed();
+        println!(
+            "{name:>8}: final KL {:.4}  valid mass {:.3}  corr-gap {:.4}  ({:.1?} for {} epochs)",
+            report.final_kl,
+            report.final_valid_mass,
+            report.epochs.last().unwrap().corr_gap,
+            dt,
+            exp.params.epochs
+        );
+        rows.push(vec![
+            report.final_kl,
+            report.final_valid_mass,
+            dt.as_secs_f64() / exp.params.epochs as f64,
+        ]);
+    }
+    write_csv("fig7_corners", "final_kl,valid_mass,sec_per_epoch", &rows)?;
+
+    // per-epoch microbench on the default corner
+    let exp = GateExperiment::and_default();
+    let mut chip = software_chip(7, MismatchConfig::default(), 8);
+    let mut trainer =
+        pchip::learning::CdTrainer::new(exp.layout.clone(), exp.dataset.clone(), exp.params);
+    chip.program_codes(&trainer.codes)?;
+    chip.set_beta(exp.params.beta as f32);
+    Bench::new(2, 10).run("cd_epoch(and, batch=8, cd-4)", || {
+        trainer.epoch(&mut chip).unwrap();
+    });
+    Ok(())
+}

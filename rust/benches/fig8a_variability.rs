@@ -1,0 +1,58 @@
+//! Bench: Fig 8a — per-p-bit tanh transfer variability vs mismatch
+//! corner, plus the sweep's measurement cost.
+//!
+//! Shape to reproduce: the ideal die's curves collapse onto one tanh;
+//! mismatch spreads slopes (σ_beta) and zero-crossings (σ_obeta, DAC
+//! gain), with spread growing monotonically in the corner severity.
+
+use pchip::config::MismatchConfig;
+use pchip::experiments::{fig8a_bias_sweep, software_chip};
+use pchip::util::bench::{write_csv, Bench};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== fig8a: bias-sweep variability vs corner ===");
+    let pbits: Vec<usize> = (0..32).map(|k| (k * 13) % pchip::N_SPINS).collect();
+    let codes: Vec<i8> = (-120..=120).step_by(15).map(|c| c as i8).collect();
+
+    let corners = [
+        ("ideal", MismatchConfig::ideal()),
+        ("quarter", scale_corner(0.25)),
+        ("half", scale_corner(0.5)),
+        ("default", MismatchConfig::default()),
+        ("double", scale_corner(2.0)),
+    ];
+    let mut rows = Vec::new();
+    for (name, corner) in corners {
+        let mut chip = software_chip(7, corner, 8);
+        let r = fig8a_bias_sweep(&mut chip, &pbits, &codes, 2500, 1.0,
+                                 Some(&format!("fig8a_bench_{name}")))?;
+        println!(
+            "{name:>8}: slope CV {:.4}   offset σ {:.2} codes",
+            r.slope_cv, r.offset_sd_codes
+        );
+        rows.push(vec![r.slope_cv, r.offset_sd_codes]);
+    }
+    write_csv("fig8a_corners", "slope_cv,offset_sd_codes", &rows)?;
+
+    // measurement cost: one full 33-point sweep over 32 p-bits
+    let mut chip = software_chip(9, MismatchConfig::default(), 8);
+    Bench::new(1, 5)
+        .throughput((codes.len() * 2500) as f64, "samples")
+        .run("fig8a_sweep(32 pbits, 17 codes, 2500 samples)", || {
+            fig8a_bias_sweep(&mut chip, &pbits, &codes, 2500, 1.0, None).unwrap();
+        });
+    Ok(())
+}
+
+fn scale_corner(s: f64) -> MismatchConfig {
+    let d = MismatchConfig::default();
+    MismatchConfig {
+        sigma_dac: d.sigma_dac * s,
+        sigma_mul: d.sigma_mul * s,
+        sigma_off: d.sigma_off * s,
+        sigma_beta: d.sigma_beta * s,
+        sigma_obeta: d.sigma_obeta * s,
+        leak: d.leak,
+        sigma_r2r: d.sigma_r2r * s,
+    }
+}

@@ -1,0 +1,63 @@
+//! Bench: Fig 9a — 440-spin spin-glass annealing.
+//!
+//! Shape to reproduce: energy decreases monotonically (in running-min)
+//! as V_temp ramps; slower ramps reach lower energy; mismatch degrades
+//! the final energy only mildly. Also times the anneal throughput.
+
+use pchip::annealing::{AnnealParams, BetaSchedule};
+use pchip::config::MismatchConfig;
+use pchip::experiments::{fig9a_sk_anneal, software_chip};
+use pchip::util::bench::{write_csv, Bench};
+
+fn main() -> anyhow::Result<()> {
+    println!("=== fig9a: SK-glass annealing ===");
+    // ramp-length ablation (the paper's Fig 9a single trace + extension)
+    let mut rows = Vec::new();
+    for (name, steps, spc) in [("fast", 24usize, 4usize), ("medium", 96, 8), ("slow", 256, 8)] {
+        let params = AnnealParams {
+            schedule: BetaSchedule::Geometric { b0: 0.08, b1: 4.0 },
+            steps,
+            sweeps_per_step: spc,
+            record_every: 2,
+        };
+        let mut chip = software_chip(5, MismatchConfig::default(), 8);
+        let r = fig9a_sk_anneal(&mut chip, 1, &params, Some(&format!("fig9a_bench_{name}")))?;
+        println!(
+            "{name:>8} ({:>5} sweeps): best E {:.0}  (bound {:.0}, ratio {:.3})",
+            steps * spc,
+            r.best_energy,
+            r.energy_lower_bound,
+            r.best_energy / r.energy_lower_bound
+        );
+        rows.push(vec![(steps * spc) as f64, r.best_energy, r.best_energy / r.energy_lower_bound]);
+    }
+    write_csv("fig9a_ramps", "total_sweeps,best_energy,bound_ratio", &rows)?;
+
+    // mismatch ablation
+    let params = AnnealParams {
+        schedule: BetaSchedule::Geometric { b0: 0.08, b1: 4.0 },
+        steps: 96,
+        sweeps_per_step: 8,
+        record_every: 4,
+    };
+    let mut rows = Vec::new();
+    for (name, corner) in
+        [("ideal", MismatchConfig::ideal()), ("default", MismatchConfig::default())]
+    {
+        let mut chip = software_chip(6, corner, 8);
+        let r = fig9a_sk_anneal(&mut chip, 1, &params, None)?;
+        println!("{name:>8}: best E {:.0} (ratio {:.3})", r.best_energy, r.best_energy / r.energy_lower_bound);
+        rows.push(vec![r.best_energy, r.best_energy / r.energy_lower_bound]);
+    }
+    write_csv("fig9a_mismatch", "best_energy,bound_ratio", &rows)?;
+
+    // anneal wall-clock
+    let mut chip = software_chip(5, MismatchConfig::default(), 8);
+    let total_sweeps = (params.steps * params.sweeps_per_step * 8) as f64; // ×8 chains
+    Bench::new(1, 5)
+        .throughput(total_sweeps * pchip::N_SPINS as f64, "flips")
+        .run("fig9a_anneal(96 steps × 8 sweeps × 8 chains)", || {
+            fig9a_sk_anneal(&mut chip, 1, &params, None).unwrap();
+        });
+    Ok(())
+}

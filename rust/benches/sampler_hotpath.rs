@@ -1,0 +1,110 @@
+//! Bench: the sampling hot paths (the §Perf instrument).
+//!
+//! * software CSR engine: flips/s vs batch size, LFSR vs host noise;
+//! * cycle-level chip: flips/s (the dense reference pipeline);
+//! * XLA engine: sweeps/s vs batch, PJRT dispatch amortization.
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::chimera::{Topology, N_SPINS};
+use pchip::config::{repo_artifacts_dir, MismatchConfig};
+use pchip::rng::HostRng;
+use pchip::sampler::{NoiseSource, Sampler, SoftwareSampler, XlaSampler};
+use pchip::util::bench::{write_csv, Bench};
+
+fn glass_folded(topo: &Topology, seed: u64) -> pchip::analog::Folded {
+    let p = Personality::sample(topo, seed, MismatchConfig::default());
+    let mut rng = HostRng::new(seed);
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    for e in 0..topo.edges.len() {
+        w.j_codes[e] = if rng.spin() > 0 { 127 } else { -127 };
+        w.enables[e] = true;
+    }
+    p.fold(topo, &w)
+}
+
+fn main() -> anyhow::Result<()> {
+    let topo = Topology::new();
+    let folded = glass_folded(&topo, 3);
+    let sweeps_per_iter = 100usize;
+    println!("=== sampler hot path ===");
+
+    // software engine vs batch
+    let mut rows = Vec::new();
+    for batch in [1usize, 4, 8, 32] {
+        let mut s = SoftwareSampler::new(batch, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        let flips = (sweeps_per_iter * batch * N_SPINS) as f64;
+        let m = Bench::new(2, 10).throughput(flips, "flips").run(
+            &format!("software_lfsr(batch={batch}, {sweeps_per_iter} sweeps)"),
+            || s.sweeps(sweeps_per_iter).unwrap(),
+        );
+        rows.push(vec![batch as f64, m.throughput.unwrap().0]);
+    }
+    write_csv("hotpath_software_batch", "batch,flips_per_sec", &rows)?;
+
+    // noise-source ablation
+    for (name, noise) in [
+        ("lfsr", NoiseSource::lfsr(1, 8)),
+        ("host", NoiseSource::host(1, 8)),
+    ] {
+        let mut s = SoftwareSampler::with_noise(8, noise, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        let flips = (sweeps_per_iter * 8 * N_SPINS) as f64;
+        Bench::new(2, 10)
+            .throughput(flips, "flips")
+            .run(&format!("software_{name}(batch=8)"), || s.sweeps(sweeps_per_iter).unwrap());
+    }
+
+    // cycle-level chip (dense per-p-bit pipeline, batch 1)
+    let mut chip = pchip::chip::PbitChip::power_up(3, MismatchConfig::default());
+    {
+        let mut rng = HostRng::new(3);
+        let ne = chip.topo.edges.len();
+        let j: Vec<i8> = (0..ne).map(|_| if rng.spin() > 0 { 127 } else { -127 }).collect();
+        chip.program(&j, &vec![true; ne], &vec![0; N_SPINS])?;
+        chip.set_beta(1.5)?;
+    }
+    Bench::new(2, 10)
+        .throughput((sweeps_per_iter * N_SPINS) as f64, "flips")
+        .run("cycle_level_chip(batch=1)", || {
+            for _ in 0..sweeps_per_iter {
+                chip.sweep();
+            }
+        });
+
+    // XLA engine: dispatch amortization (sweeps per PJRT call is fixed
+    // per artifact; compare batch variants)
+    let dir = repo_artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = pchip::runtime::Runtime::cpu()?;
+        let set = pchip::runtime::ArtifactSet::load_some(
+            &rt,
+            &dir,
+            &["gibbs_b1", "gibbs_b8", "gibbs_b32"],
+        )?;
+        let mut rows = Vec::new();
+        for batch in [1usize, 8, 32] {
+            let mut xs = XlaSampler::new(&set, batch, 5)?;
+            xs.load(&folded);
+            xs.set_beta(1.5);
+            let s_per_call = xs.s_sweeps;
+            let flips = (sweeps_per_iter * batch * N_SPINS) as f64;
+            let m = Bench::new(1, 5).throughput(flips, "flips").run(
+                &format!("xla(batch={batch}, {s_per_call} sweeps/call)"),
+                || xs.sweeps(sweeps_per_iter).unwrap(),
+            );
+            rows.push(vec![batch as f64, m.throughput.unwrap().0]);
+        }
+        write_csv("hotpath_xla_batch", "batch,flips_per_sec", &rows)?;
+    } else {
+        eprintln!("(artifacts not built — skipping XLA hot path)");
+    }
+
+    println!(
+        "\nreference: silicon rate 440 spins / 50 ns = {:.2e} flips/s",
+        N_SPINS as f64 / 50e-9
+    );
+    Ok(())
+}

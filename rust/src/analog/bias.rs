@@ -1,0 +1,62 @@
+//! Bias generator (Fig 6): the external-resistor-programmed scale
+//! currents that set the relative strength of the coupling weights, the
+//! bias weights, the random number DACs and the tanh — the chip's four
+//! global knobs. The annealing voltage V_temp maps onto the tanh scale
+//! (effective β).
+
+/// Global analog scales, all nominally 1.0 full-scale.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BiasGenerator {
+    /// Coupling-weight DAC full-scale (I_J).
+    pub coupling_scale: f64,
+    /// Bias-weight DAC full-scale (I_h).
+    pub bias_scale: f64,
+    /// RNG DAC full-scale (I_rand).
+    pub rng_scale: f64,
+    /// tanh gain — the electrical image of β / V_temp.
+    pub tanh_scale: f64,
+}
+
+impl Default for BiasGenerator {
+    fn default() -> Self {
+        Self { coupling_scale: 1.0, bias_scale: 1.0, rng_scale: 1.0, tanh_scale: 1.0 }
+    }
+}
+
+impl BiasGenerator {
+    /// Configure for a given inverse temperature: the chip implements
+    /// annealing by raising V_temp, which scales the tanh stage.
+    pub fn with_beta(beta: f64) -> Self {
+        Self { tanh_scale: beta, ..Self::default() }
+    }
+
+    /// Effective β seen by the p-bit update.
+    pub fn beta(&self) -> f64 {
+        self.tanh_scale
+    }
+
+    /// Ratio of random current to coupling current — controls how
+    /// stochastic the update is at fixed β (an ablation knob).
+    pub fn noise_ratio(&self) -> f64 {
+        self.rng_scale / self.coupling_scale.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_unity() {
+        let b = BiasGenerator::default();
+        assert_eq!(b.beta(), 1.0);
+        assert_eq!(b.noise_ratio(), 1.0);
+    }
+
+    #[test]
+    fn beta_knob() {
+        let b = BiasGenerator::with_beta(3.5);
+        assert_eq!(b.beta(), 3.5);
+        assert_eq!(b.coupling_scale, 1.0);
+    }
+}

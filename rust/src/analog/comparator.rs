@@ -1,0 +1,65 @@
+//! WTA comparator + self-biased differential amplifier (Fig 6).
+//!
+//! The tanh output current and the RNG DAC's random current sum on the
+//! comparator input; the comparator resolves the sign into the spin
+//! flip-flop. Its input-referred offset adds to the WTA offset (they are
+//! merged into one o_β term when folding for the kernels); here it is
+//! kept separate so the cycle-level chip model reflects the real
+//! signal chain. Ties resolve +1 (the self-biased output stage's skew).
+
+use crate::rng::HostRng;
+
+/// One comparator instance with frozen input-referred offset.
+#[derive(Debug, Clone, Copy)]
+pub struct Comparator {
+    pub offset: f64,
+}
+
+impl Comparator {
+    pub fn sample(rng: &mut HostRng, sigma_offset: f64) -> Self {
+        Self { offset: rng.normal_ms(0.0, sigma_offset) }
+    }
+
+    pub fn ideal() -> Self {
+        Self { offset: 0.0 }
+    }
+
+    /// Resolve the differential input to a spin.
+    #[inline]
+    pub fn decide(&self, differential: f64) -> i8 {
+        if differential + self.offset >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_sign() {
+        let c = Comparator::ideal();
+        assert_eq!(c.decide(0.3), 1);
+        assert_eq!(c.decide(-0.3), -1);
+        assert_eq!(c.decide(0.0), 1, "ties must resolve high");
+    }
+
+    #[test]
+    fn offset_biases_decisions() {
+        let c = Comparator { offset: 0.2 };
+        assert_eq!(c.decide(-0.1), 1);
+        assert_eq!(c.decide(-0.3), -1);
+    }
+
+    #[test]
+    fn sampled_offsets_centered() {
+        let mut rng = HostRng::new(6);
+        let n = 2000;
+        let mean: f64 =
+            (0..n).map(|_| Comparator::sample(&mut rng, 0.05).offset).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.005);
+    }
+}

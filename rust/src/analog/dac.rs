@@ -1,0 +1,142 @@
+//! MOS R-2R current-mode DAC (Fig 3 of the paper).
+//!
+//! The 8-bit weight/bias/RNG DACs are MOS-transistor R-2R ladders chosen
+//! for area efficiency. Two non-idealities matter at 1 V supply with no
+//! output-resistance enhancement (both called out in the paper):
+//!
+//! * a per-instance **gain error** — the ladder's output resistance loads
+//!   the summing node, scaling the full-scale current;
+//! * **INL/DNL** from per-bit element mismatch — each ladder rung's
+//!   binary weight deviates from its nominal 2^k ratio.
+//!
+//! Codes are sign-magnitude like the silicon: bit 7 steers the Gilbert
+//! multiplier polarity, bits 6..0 set the magnitude.
+
+use crate::rng::HostRng;
+
+/// Behavioral 8-bit R-2R DAC instance with frozen mismatch.
+#[derive(Debug, Clone)]
+pub struct R2rDac {
+    /// Per-instance gain (nominal 1.0).
+    gain: f64,
+    /// Effective weight of each magnitude bit (nominal 2^k/127 · fs/?).
+    bit_weights: [f64; 7],
+}
+
+impl R2rDac {
+    /// Draw a DAC instance. `sigma_gain` models the finite-Rout loading,
+    /// `sigma_r2r` the per-rung element mismatch.
+    pub fn sample(rng: &mut HostRng, sigma_gain: f64, sigma_r2r: f64) -> Self {
+        let gain = rng.normal_ms(1.0, sigma_gain);
+        // rung k nominally contributes 2^k; element mismatch scales each
+        // rung independently (relative sigma grows for the small rungs —
+        // fewer unit devices — as 1/sqrt(2^k)).
+        let bit_weights = std::array::from_fn(|k| {
+            let rel = sigma_r2r / (2f64.powi(k as i32)).sqrt();
+            2f64.powi(k as i32) * rng.normal_ms(1.0, rel)
+        });
+        Self { gain, bit_weights }
+    }
+
+    /// An exactly ideal instance.
+    pub fn ideal() -> Self {
+        Self { gain: 1.0, bit_weights: std::array::from_fn(|k| 2f64.powi(k as i32)) }
+    }
+
+    /// Instance gain (used when folding into J_eff).
+    pub fn gain(&self) -> f64 {
+        self.gain
+    }
+
+    /// Convert a signed 8-bit weight code to a normalized output current
+    /// in ≈[−1, 1] (full scale = code ±127).
+    pub fn convert(&self, code: i8) -> f64 {
+        let mag = (code as i32).unsigned_abs().min(127);
+        let mut acc = 0.0;
+        for k in 0..7 {
+            if (mag >> k) & 1 == 1 {
+                acc += self.bit_weights[k];
+            }
+        }
+        let current = self.gain * acc / 127.0;
+        if code < 0 {
+            -current
+        } else {
+            current
+        }
+    }
+
+    /// Integral nonlinearity profile: deviation of `convert` from the
+    /// ideal straight line, in LSB, over all positive codes.
+    pub fn inl(&self) -> Vec<f64> {
+        let fs = self.convert(127);
+        (0..=127i8)
+            .map(|c| {
+                let ideal = fs * (c as f64) / 127.0;
+                (self.convert(c) - ideal) * 127.0 / fs.abs().max(1e-12)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_is_linear() {
+        let d = R2rDac::ideal();
+        assert_eq!(d.convert(0), 0.0);
+        assert!((d.convert(127) - 1.0).abs() < 1e-12);
+        assert!((d.convert(-127) + 1.0).abs() < 1e-12);
+        assert!((d.convert(64) - 64.0 / 127.0).abs() < 1e-12);
+        let inl = d.inl();
+        assert!(inl.iter().all(|&x| x.abs() < 1e-9));
+    }
+
+    #[test]
+    fn sign_magnitude_symmetry() {
+        let mut rng = HostRng::new(1);
+        let d = R2rDac::sample(&mut rng, 0.05, 0.02);
+        for c in [1i8, 17, 63, 127] {
+            assert_eq!(d.convert(c), -d.convert(-c));
+        }
+    }
+
+    #[test]
+    fn monotonic_in_code_for_small_mismatch() {
+        let mut rng = HostRng::new(2);
+        for seed in 0..20 {
+            let _ = seed;
+            let d = R2rDac::sample(&mut rng, 0.05, 0.01);
+            let mut prev = f64::NEG_INFINITY;
+            for c in 0..=127i8 {
+                let v = d.convert(c);
+                assert!(v >= prev - 0.02, "non-monotonic at {c}");
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn gain_spread_matches_sigma() {
+        let mut rng = HostRng::new(3);
+        let n = 2000;
+        let gains: Vec<f64> = (0..n)
+            .map(|_| R2rDac::sample(&mut rng, 0.05, 0.0).convert(127))
+            .collect();
+        let mean = gains.iter().sum::<f64>() / n as f64;
+        let var = gains.iter().map(|g| (g - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.01);
+        assert!((var.sqrt() - 0.05).abs() < 0.01, "sigma {}", var.sqrt());
+    }
+
+    #[test]
+    fn inl_grows_with_mismatch() {
+        let mut rng = HostRng::new(4);
+        let tight = R2rDac::sample(&mut rng, 0.0, 0.002);
+        let loose = R2rDac::sample(&mut rng, 0.0, 0.05);
+        let max_inl = |d: &R2rDac| d.inl().iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        assert!(max_inl(&loose) > max_inl(&tight));
+    }
+}

@@ -1,0 +1,292 @@
+//! Per-chip process-variation personality and the fold into kernel
+//! tensors (DESIGN.md §5).
+//!
+//! A [`Personality`] freezes every analog instance on one simulated die:
+//! one weight DAC per undirected coupler (the current is converted to a
+//! bias voltage and distributed, so both directions share it), one
+//! Gilbert multiplier **per direction** (each node owns its input
+//! multipliers, so J_eff is slightly asymmetric — a real consequence of
+//! the standard-cell methodology), and per p-bit bias DAC / WTA tanh /
+//! comparator.
+//!
+//! [`Personality::fold`] lowers programmed register codes into the four
+//! effective tensors the L1 kernel consumes (`jt_eff`, `h_eff`, `g`,
+//! `o`); the cycle-level chip simulator uses the *same* folded values, so
+//! the XLA sampler and the chip agree bit-for-bit given the same uniform
+//! randoms (modulo f32 tanh ulps — see `rust/tests/chip_vs_xla.rs`).
+
+use crate::chimera::{Topology, N_PAD, N_SPINS};
+use crate::config::MismatchConfig;
+use crate::rng::HostRng;
+
+use super::comparator::Comparator;
+use super::dac::R2rDac;
+use super::multiplier::GilbertMultiplier;
+use super::tanh::WtaTanh;
+
+/// Analog instances hanging off one undirected coupler (i < j).
+#[derive(Debug, Clone)]
+pub struct EdgeCircuits {
+    /// Shared weight DAC (one per coupler to save area).
+    pub dac: R2rDac,
+    /// Multiplier on node i's summing wire (input from m_j).
+    pub mul_into_i: GilbertMultiplier,
+    /// Multiplier on node j's summing wire (input from m_i).
+    pub mul_into_j: GilbertMultiplier,
+}
+
+/// Analog instances of one p-bit.
+#[derive(Debug, Clone)]
+pub struct SpinCircuits {
+    pub bias_dac: R2rDac,
+    pub wta: WtaTanh,
+    pub comparator: Comparator,
+}
+
+/// Register state the personality folds (owned by [`crate::spi::RegMap`]).
+#[derive(Debug, Clone)]
+pub struct ProgrammedWeights {
+    /// 8-bit coupling code per canonical edge (same order as
+    /// `Topology::edges`).
+    pub j_codes: Vec<i8>,
+    /// Enable bit per canonical edge.
+    pub enables: Vec<bool>,
+    /// 8-bit bias code per spin.
+    pub h_codes: Vec<i8>,
+}
+
+impl ProgrammedWeights {
+    pub fn zeros(n_edges: usize) -> Self {
+        Self { j_codes: vec![0; n_edges], enables: vec![false; n_edges], h_codes: vec![0; N_SPINS] }
+    }
+}
+
+/// Effective tensors ready for the L1 kernel / chip hot loop.
+#[derive(Debug, Clone)]
+pub struct Folded {
+    /// `[N_PAD * N_PAD]` row-major, laid out transposed: entry
+    /// `[j * N_PAD + i]` is the current into p-bit i from spin j, so the
+    /// kernel's `I = m @ jt_eff` works directly.
+    pub jt_eff: Vec<f32>,
+    /// `[N_PAD]` effective bias current (bias DAC + multiplier offsets).
+    pub h_eff: Vec<f32>,
+    /// `[N_PAD]` tanh slope mismatch.
+    pub g: Vec<f32>,
+    /// `[N_PAD]` input-referred offset.
+    pub o: Vec<f32>,
+}
+
+impl Folded {
+    /// Current into p-bit `i` from spin `j`.
+    #[inline]
+    pub fn j_eff(&self, i: usize, j: usize) -> f32 {
+        self.jt_eff[j * N_PAD + i]
+    }
+}
+
+/// One simulated die's frozen mismatch.
+#[derive(Debug, Clone)]
+pub struct Personality {
+    pub seed: u64,
+    pub cfg: MismatchConfig,
+    pub edges: Vec<EdgeCircuits>,
+    pub spins: Vec<SpinCircuits>,
+}
+
+impl Personality {
+    /// Draw a die. The per-instance draws consume the RNG in a fixed
+    /// order, so (seed, cfg) fully determines the personality.
+    pub fn sample(topo: &Topology, seed: u64, cfg: MismatchConfig) -> Self {
+        let mut rng = HostRng::new(seed ^ 0xC41B_5EED_0000_0000);
+        let edges = topo
+            .edges
+            .iter()
+            .map(|_| EdgeCircuits {
+                dac: R2rDac::sample(&mut rng, cfg.sigma_dac, cfg.sigma_r2r),
+                mul_into_i: GilbertMultiplier::sample(&mut rng, cfg.sigma_mul, cfg.sigma_off),
+                mul_into_j: GilbertMultiplier::sample(&mut rng, cfg.sigma_mul, cfg.sigma_off),
+            })
+            .collect();
+        let spins = (0..N_SPINS)
+            .map(|_| SpinCircuits {
+                bias_dac: R2rDac::sample(&mut rng, cfg.sigma_dac, cfg.sigma_r2r),
+                // the comparator's input-referred offset is folded into
+                // the WTA offset term (one o_β per p-bit) so the kernel
+                // and the cycle-level chip share one signal-chain model.
+                wta: WtaTanh::sample(&mut rng, cfg.sigma_beta, cfg.sigma_obeta),
+                comparator: Comparator::ideal(),
+            })
+            .collect();
+        Self { seed, cfg, edges, spins }
+    }
+
+    /// An exactly ideal die (software-baseline corner).
+    pub fn ideal(topo: &Topology) -> Self {
+        Self {
+            seed: 0,
+            cfg: MismatchConfig::ideal(),
+            edges: topo
+                .edges
+                .iter()
+                .map(|_| EdgeCircuits {
+                    dac: R2rDac::ideal(),
+                    mul_into_i: GilbertMultiplier::ideal(),
+                    mul_into_j: GilbertMultiplier::ideal(),
+                })
+                .collect(),
+            spins: (0..N_SPINS)
+                .map(|_| SpinCircuits {
+                    bias_dac: R2rDac::ideal(),
+                    wta: WtaTanh::ideal(),
+                    comparator: Comparator::ideal(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Lower programmed codes through the analog models into effective
+    /// kernel tensors. Weight codes are normalized so code 127 ≙ 1.0.
+    pub fn fold(&self, topo: &Topology, w: &ProgrammedWeights) -> Folded {
+        assert_eq!(w.j_codes.len(), topo.edges.len());
+        assert_eq!(w.enables.len(), topo.edges.len());
+        let mut jt_eff = vec![0.0f32; N_PAD * N_PAD];
+        let mut h_eff = vec![0.0f32; N_PAD];
+        let mut g = vec![0.0f32; N_PAD];
+        let mut o = vec![0.0f32; N_PAD];
+
+        for (e, &(i, j)) in topo.edges.iter().enumerate() {
+            let ckt = &self.edges[e];
+            let weight_current = ckt.dac.convert(w.j_codes[e]);
+            // A disabled coupler still leaks `leak` of its current and
+            // offset — the very reason the enable bit exists (paper).
+            let scale = if w.enables[e] { 1.0 } else { self.cfg.leak };
+            // current into i from m_j: multiplier gain × weight; the
+            // static offset flows into i's node regardless of m_j.
+            let into_i = scale * ckt.mul_into_i.gain * weight_current;
+            let into_j = scale * ckt.mul_into_j.gain * weight_current;
+            jt_eff[j * N_PAD + i] = into_i as f32;
+            jt_eff[i * N_PAD + j] = into_j as f32;
+            h_eff[i] += (scale * ckt.mul_into_i.offset) as f32;
+            h_eff[j] += (scale * ckt.mul_into_j.offset) as f32;
+        }
+        for (s, ckt) in self.spins.iter().enumerate() {
+            h_eff[s] += ckt.bias_dac.convert(w.h_codes[s]) as f32;
+            g[s] = ckt.wta.slope as f32;
+            o[s] = ckt.wta.offset as f32;
+        }
+        // padding lanes: g = 1 keeps tanh well-defined, everything else 0.
+        for s in N_SPINS..N_PAD {
+            g[s] = 1.0;
+        }
+        Folded { jt_eff, h_eff, g, o }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new()
+    }
+
+    fn all_on(topo: &Topology, code: i8) -> ProgrammedWeights {
+        ProgrammedWeights {
+            j_codes: vec![code; topo.edges.len()],
+            enables: vec![true; topo.edges.len()],
+            h_codes: vec![0; N_SPINS],
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let t = topo();
+        let a = Personality::sample(&t, 7, MismatchConfig::default());
+        let b = Personality::sample(&t, 7, MismatchConfig::default());
+        assert_eq!(a.spins[13].wta.slope, b.spins[13].wta.slope);
+        assert_eq!(a.edges[100].dac.convert(55), b.edges[100].dac.convert(55));
+        let c = Personality::sample(&t, 8, MismatchConfig::default());
+        assert_ne!(a.spins[13].wta.slope, c.spins[13].wta.slope);
+    }
+
+    #[test]
+    fn ideal_fold_reproduces_codes() {
+        let t = topo();
+        let p = Personality::ideal(&t);
+        let w = all_on(&t, 127);
+        let f = p.fold(&t, &w);
+        for &(i, j) in t.edges.iter().take(50) {
+            assert!((f.j_eff(i, j) - 1.0).abs() < 1e-6);
+            assert!((f.j_eff(j, i) - 1.0).abs() < 1e-6);
+        }
+        assert!(f.h_eff.iter().all(|&x| x == 0.0));
+        assert!(f.g[..N_SPINS].iter().all(|&x| x == 1.0));
+        assert!(f.o.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fold_zeroes_non_edges_and_padding() {
+        let t = topo();
+        let p = Personality::sample(&t, 3, MismatchConfig::default());
+        let f = p.fold(&t, &all_on(&t, 64));
+        // vertical spins 0 and 1 of cell 0 are not coupled
+        assert_eq!(f.j_eff(0, 1), 0.0);
+        for pad in N_SPINS..N_PAD {
+            for s in 0..N_PAD {
+                assert_eq!(f.j_eff(pad, s), 0.0);
+                assert_eq!(f.j_eff(s, pad), 0.0);
+            }
+            assert_eq!(f.h_eff[pad], 0.0);
+        }
+    }
+
+    #[test]
+    fn asymmetry_from_per_direction_multipliers() {
+        let t = topo();
+        let p = Personality::sample(&t, 11, MismatchConfig::default());
+        let f = p.fold(&t, &all_on(&t, 127));
+        let mut asym = 0usize;
+        for &(i, j) in &t.edges {
+            if (f.j_eff(i, j) - f.j_eff(j, i)).abs() > 1e-6 {
+                asym += 1;
+            }
+        }
+        // essentially every coupler should differ between directions
+        assert!(asym > t.edges.len() * 9 / 10, "only {asym} asymmetric");
+    }
+
+    #[test]
+    fn disabled_coupler_leaks() {
+        let t = topo();
+        let cfg = MismatchConfig { leak: 0.1, ..MismatchConfig::default() };
+        let p = Personality::sample(&t, 5, cfg);
+        let mut w = all_on(&t, 127);
+        let f_on = p.fold(&t, &w);
+        w.enables[0] = false;
+        let f_off = p.fold(&t, &w);
+        let (i, j) = t.edges[0];
+        let ratio = f_off.j_eff(i, j) / f_on.j_eff(i, j);
+        assert!((ratio - 0.1).abs() < 1e-5, "leak ratio {ratio}");
+    }
+
+    #[test]
+    fn offsets_accumulate_on_bias() {
+        let t = topo();
+        let cfg = MismatchConfig { sigma_off: 0.05, ..MismatchConfig::default() };
+        let p = Personality::sample(&t, 9, cfg);
+        let f = p.fold(&t, &all_on(&t, 0));
+        // with all codes zero, h_eff is purely multiplier offsets — most
+        // spins should see a nonzero static current.
+        let nonzero = f.h_eff[..N_SPINS].iter().filter(|&&x| x != 0.0).count();
+        assert!(nonzero > N_SPINS * 9 / 10);
+    }
+
+    #[test]
+    fn ideal_mismatchless_offsets_zero() {
+        let t = topo();
+        let p = Personality::ideal(&t);
+        let f = p.fold(&t, &all_on(&t, 0));
+        assert!(f.h_eff.iter().all(|&x| x == 0.0));
+        assert!(f.jt_eff.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,33 @@
+//! Behavioral models of the chip's analog standard cells (Figs 3–6).
+//!
+//! The die shares one 1 V supply between analog and digital and lays the
+//! analog blocks out as unmatched, pitch-matched standard cells placed by
+//! the digital P&R flow — the paper's central area trick. The price is
+//! static per-instance mismatch in every block, which these models carry
+//! explicitly and which the hardware-aware CD trainer absorbs.
+//!
+//! | silicon block | model |
+//! |---|---|
+//! | MOS R-2R weight/bias/RNG DAC (Fig 3) | [`R2rDac`]: gain error + per-rung INL |
+//! | current-mode Gilbert multiplier (Fig 5) | [`GilbertMultiplier`]: gain + static offset |
+//! | WTA tanh (Fig 4, Lazzaro '88) | [`WtaTanh`]: slope + input-referred offset |
+//! | WTA comparator + self-biased amp (Fig 6) | [`Comparator`]: offset, ties high |
+//! | external-resistor bias generator (Fig 6) | [`BiasGenerator`]: 4 global scales |
+//!
+//! [`Personality`] freezes one die's instances; [`Personality::fold`]
+//! lowers programmed codes into the effective tensors every sampler
+//! (XLA, software, cycle-level chip) consumes.
+
+mod bias;
+mod comparator;
+mod dac;
+mod mismatch;
+mod multiplier;
+mod tanh;
+
+pub use bias::BiasGenerator;
+pub use comparator::Comparator;
+pub use dac::R2rDac;
+pub use mismatch::{EdgeCircuits, Folded, Personality, ProgrammedWeights, SpinCircuits};
+pub use multiplier::GilbertMultiplier;
+pub use tanh::WtaTanh;

@@ -1,0 +1,83 @@
+//! Current-mode Gilbert multiplier (Fig 5 of the paper).
+//!
+//! Implements eqn (1)'s weight × spin product: the weight DAC's current
+//! is steered by the spin's differential voltage, so the output is
+//! `±I_weight` in differential form (which is how bipolar weights come
+//! for free). The unmatched standard-cell layout gives each instance a
+//! static **gain error** and a static **offset current** that flows into
+//! the summing node regardless of the spin — the paper's motivation for
+//! learning *through* the hardware.
+
+use crate::rng::HostRng;
+
+/// One Gilbert multiplier instance with frozen mismatch.
+#[derive(Debug, Clone, Copy)]
+pub struct GilbertMultiplier {
+    /// Multiplicative gain (nominal 1).
+    pub gain: f64,
+    /// Static differential offset current, in full-scale weight units.
+    pub offset: f64,
+}
+
+impl GilbertMultiplier {
+    pub fn sample(rng: &mut HostRng, sigma_gain: f64, sigma_offset: f64) -> Self {
+        Self {
+            gain: rng.normal_ms(1.0, sigma_gain),
+            offset: rng.normal_ms(0.0, sigma_offset),
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Self { gain: 1.0, offset: 0.0 }
+    }
+
+    /// Multiply a weight current by a spin (±1), returning the output
+    /// current including the instance offset.
+    #[inline]
+    pub fn multiply(&self, weight_current: f64, spin: i8) -> f64 {
+        debug_assert!(spin == 1 || spin == -1);
+        self.gain * weight_current * spin as f64 + self.offset
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_multiplies_exactly() {
+        let m = GilbertMultiplier::ideal();
+        assert_eq!(m.multiply(0.5, 1), 0.5);
+        assert_eq!(m.multiply(0.5, -1), -0.5);
+        assert_eq!(m.multiply(0.0, -1), 0.0);
+    }
+
+    #[test]
+    fn offset_is_spin_independent() {
+        let m = GilbertMultiplier { gain: 1.0, offset: 0.03 };
+        let up = m.multiply(0.2, 1);
+        let dn = m.multiply(0.2, -1);
+        // offset shifts both branches the same way
+        assert!((up + dn - 2.0 * 0.03).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gain_scales_product() {
+        let m = GilbertMultiplier { gain: 1.1, offset: 0.0 };
+        assert!((m.multiply(0.5, -1) + 0.55).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_statistics() {
+        let mut rng = HostRng::new(10);
+        let n = 3000;
+        let insts: Vec<_> =
+            (0..n).map(|_| GilbertMultiplier::sample(&mut rng, 0.04, 0.02)).collect();
+        let gmean = insts.iter().map(|m| m.gain).sum::<f64>() / n as f64;
+        let omean = insts.iter().map(|m| m.offset).sum::<f64>() / n as f64;
+        assert!((gmean - 1.0).abs() < 0.01);
+        assert!(omean.abs() < 0.01);
+        let gsd = (insts.iter().map(|m| (m.gain - gmean).powi(2)).sum::<f64>() / n as f64).sqrt();
+        assert!((gsd - 0.04).abs() < 0.01);
+    }
+}

@@ -1,0 +1,95 @@
+//! Winner-take-all tanh circuit (Fig 4, after Lazzaro et al. 1988).
+//!
+//! The WTA stage pins the current-summing node (better current matching)
+//! and computes the tanh of eqn (2): each branch is a Fermi function of
+//! the current difference and their subtraction yields tanh. Mismatch
+//! appears as a per-instance **slope** (effective β multiplier, from tail
+//! current and device Gm spread) and an **input-referred offset** (which
+//! also absorbs the downstream comparator offset).
+
+use crate::rng::HostRng;
+
+/// One WTA tanh instance with frozen mismatch.
+#[derive(Debug, Clone, Copy)]
+pub struct WtaTanh {
+    /// Slope mismatch multiplying the global β (nominal 1).
+    pub slope: f64,
+    /// Input-referred offset current (nominal 0).
+    pub offset: f64,
+}
+
+impl WtaTanh {
+    pub fn sample(rng: &mut HostRng, sigma_slope: f64, sigma_offset: f64) -> Self {
+        Self {
+            slope: rng.normal_ms(1.0, sigma_slope).max(0.05),
+            offset: rng.normal_ms(0.0, sigma_offset),
+        }
+    }
+
+    pub fn ideal() -> Self {
+        Self { slope: 1.0, offset: 0.0 }
+    }
+
+    /// tanh(β · slope · I + offset): the differential activation fed to
+    /// the comparator.
+    #[inline]
+    pub fn activate(&self, beta: f64, current: f64) -> f64 {
+        (beta * self.slope * current + self.offset).tanh()
+    }
+
+    /// The two Fermi branches whose difference is `activate` — exposed
+    /// for the Fig 8a transfer-curve experiment, which measures each
+    /// branch via the chip's bias sweep.
+    pub fn fermi_branches(&self, beta: f64, current: f64) -> (f64, f64) {
+        let x = beta * self.slope * current + self.offset;
+        let plus = 1.0 / (1.0 + (-2.0 * x).exp());
+        (plus, 1.0 - plus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_tanh() {
+        let w = WtaTanh::ideal();
+        assert_eq!(w.activate(1.0, 0.0), 0.0);
+        assert!((w.activate(1.0, 1.0) - 1f64.tanh()).abs() < 1e-12);
+        assert!((w.activate(2.0, 0.5) - 1f64.tanh()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn branches_subtract_to_tanh() {
+        let mut rng = HostRng::new(4);
+        let w = WtaTanh::sample(&mut rng, 0.08, 0.03);
+        for i in [-2.0, -0.3, 0.0, 0.7, 1.9] {
+            let (p, m) = w.fermi_branches(1.3, i);
+            assert!((p - m - w.activate(1.3, i)).abs() < 1e-12);
+            assert!((0.0..=1.0).contains(&p) && (0.0..=1.0).contains(&m));
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        let w = WtaTanh::ideal();
+        assert!(w.activate(5.0, 10.0) > 0.999999);
+        assert!(w.activate(5.0, -10.0) < -0.999999);
+    }
+
+    #[test]
+    fn offset_shifts_zero_crossing() {
+        let w = WtaTanh { slope: 1.0, offset: 0.1 };
+        // activate(-offset/beta·slope) == 0
+        assert!(w.activate(1.0, -0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slope_never_sampled_nonpositive() {
+        let mut rng = HostRng::new(5);
+        for _ in 0..5000 {
+            let w = WtaTanh::sample(&mut rng, 0.5, 0.0);
+            assert!(w.slope > 0.0);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated annealing on the p-bit array (Fig 9a) and time-to-solution
+//! accounting (Table 1).
+//!
+//! On silicon the anneal is a V_temp voltage ramp; here the schedule
+//! drives the β knob of any [`crate::sampler::Sampler`], and the TTS
+//! estimator converts measured success probabilities into the
+//! TTS(99 %) figure Table 1 compares across chips.
+
+mod sa;
+mod schedule;
+mod tts;
+
+pub use sa::{anneal, AnnealParams};
+pub use schedule::BetaSchedule;
+pub use tts::{tts99, TtsEstimate};

@@ -1,0 +1,84 @@
+//! β (inverse-temperature) schedules — the V_temp ramp shapes.
+
+/// An annealing schedule mapping progress ∈ [0, 1] to β.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BetaSchedule {
+    /// Fixed β (free-running sampling).
+    Constant(f64),
+    /// Linear ramp β₀ → β₁.
+    Linear { b0: f64, b1: f64 },
+    /// Geometric ramp β₀ → β₁ (equal multiplicative steps — the classic
+    /// SA choice; matches a linearly-ramped V_temp through the tanh
+    /// stage's exponential transconductance).
+    Geometric { b0: f64, b1: f64 },
+}
+
+impl BetaSchedule {
+    /// β at progress t ∈ [0, 1].
+    pub fn beta(&self, t: f64) -> f64 {
+        let t = t.clamp(0.0, 1.0);
+        match *self {
+            Self::Constant(b) => b,
+            Self::Linear { b0, b1 } => b0 + (b1 - b0) * t,
+            Self::Geometric { b0, b1 } => b0 * (b1 / b0).powf(t),
+        }
+    }
+
+    /// β at step `k` of `n` (progress = k/(n−1)).
+    pub fn beta_at(&self, k: usize, n: usize) -> f64 {
+        if n <= 1 {
+            return self.beta(1.0);
+        }
+        self.beta(k as f64 / (n - 1) as f64)
+    }
+
+    pub fn final_beta(&self) -> f64 {
+        self.beta(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        let lin = BetaSchedule::Linear { b0: 0.1, b1: 5.0 };
+        assert_eq!(lin.beta(0.0), 0.1);
+        assert_eq!(lin.beta(1.0), 5.0);
+        let geo = BetaSchedule::Geometric { b0: 0.1, b1: 5.0 };
+        assert!((geo.beta(0.0) - 0.1).abs() < 1e-12);
+        assert!((geo.beta(1.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geometric_is_multiplicative() {
+        let geo = BetaSchedule::Geometric { b0: 1.0, b1: 16.0 };
+        let r1 = geo.beta(0.25) / geo.beta(0.0);
+        let r2 = geo.beta(0.5) / geo.beta(0.25);
+        assert!((r1 - r2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_increasing() {
+        for sched in [
+            BetaSchedule::Linear { b0: 0.2, b1: 4.0 },
+            BetaSchedule::Geometric { b0: 0.2, b1: 4.0 },
+        ] {
+            let mut prev = 0.0;
+            for k in 0..=10 {
+                let b = sched.beta_at(k, 11);
+                assert!(b >= prev);
+                prev = b;
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range_progress() {
+        let lin = BetaSchedule::Linear { b0: 1.0, b1: 2.0 };
+        assert_eq!(lin.beta(-0.5), 1.0);
+        assert_eq!(lin.beta(1.5), 2.0);
+        assert_eq!(lin.beta_at(0, 1), 2.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! Time-to-solution (Table 1's comparison metric).
+//!
+//! TTS(99 %) = t_anneal × ln(1 − 0.99) / ln(1 − p_success): the expected
+//! wall-clock to reach the target at 99 % confidence given independent
+//! restarts of duration `t_anneal` that each succeed with probability
+//! `p_success`.
+
+/// A TTS measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct TtsEstimate {
+    /// Per-restart success probability.
+    pub p_success: f64,
+    /// Duration of one restart in nanoseconds (simulated chip time).
+    pub t_anneal_ns: f64,
+    /// TTS(99 %) in nanoseconds (∞ if no restart succeeded).
+    pub tts99_ns: f64,
+    pub restarts: usize,
+}
+
+/// Compute TTS(99 %).
+pub fn tts99(p_success: f64, t_anneal_ns: f64, restarts: usize) -> TtsEstimate {
+    let tts = if p_success <= 0.0 {
+        f64::INFINITY
+    } else if p_success >= 1.0 {
+        t_anneal_ns
+    } else {
+        t_anneal_ns * (0.01f64).ln() / (1.0 - p_success).ln()
+    };
+    TtsEstimate { p_success, t_anneal_ns, tts99_ns: tts, restarts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn certain_success_is_one_anneal() {
+        let t = tts99(1.0, 500.0, 10);
+        assert_eq!(t.tts99_ns, 500.0);
+    }
+
+    #[test]
+    fn never_succeeds_is_infinite() {
+        assert!(tts99(0.0, 500.0, 10).tts99_ns.is_infinite());
+    }
+
+    #[test]
+    fn half_success_needs_log_restarts() {
+        // p = 0.5 → need log2(100) ≈ 6.64 restarts
+        let t = tts99(0.5, 100.0, 10);
+        assert!((t.tts99_ns - 100.0 * (0.01f64).ln() / (0.5f64).ln()).abs() < 1e-9);
+        assert!((t.tts99_ns / 100.0 - 6.6438).abs() < 1e-3);
+    }
+
+    #[test]
+    fn monotone_in_success_probability() {
+        let lo = tts99(0.1, 100.0, 1).tts99_ns;
+        let hi = tts99(0.9, 100.0, 1).tts99_ns;
+        assert!(hi < lo);
+    }
+}

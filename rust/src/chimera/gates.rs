@@ -1,0 +1,98 @@
+//! Spin layouts for the logic-gate learning experiments (Figs 7, 8b).
+//!
+//! A gate is learned as a Boltzmann machine over one Chimera cell: the
+//! visible spins carry the gate's terminals, the remaining cell spins are
+//! hidden units. The K4,4 structure means vertical spins never couple
+//! directly to vertical spins, so layouts put correlated terminals on
+//! opposite sides where possible.
+
+use super::topology::{spin_id, HORIZONTAL, VERTICAL};
+
+/// Placement of a learned gate on the die.
+#[derive(Debug, Clone)]
+pub struct GateLayout {
+    /// Human-readable gate name ("AND", "FULL_ADDER", ...).
+    pub name: &'static str,
+    /// Global spin ids of the visible units, in terminal order.
+    pub visible: Vec<usize>,
+    /// Global spin ids of the hidden units.
+    pub hidden: Vec<usize>,
+}
+
+impl GateLayout {
+    /// All spins the gate occupies.
+    pub fn spins(&self) -> Vec<usize> {
+        let mut v = self.visible.clone();
+        v.extend(&self.hidden);
+        v
+    }
+
+    pub fn n_visible(&self) -> usize {
+        self.visible.len()
+    }
+}
+
+/// AND gate in cell (r, c): visible (A, B, OUT) on the vertical side,
+/// all four horizontal spins hidden — a classic 3×4 RBM column.
+pub fn and_gate_layout(r: usize, c: usize) -> GateLayout {
+    let v = |k| spin_id(r, c, VERTICAL, k).expect("gate placed on dead cell");
+    let h = |k| spin_id(r, c, HORIZONTAL, k).expect("gate placed on dead cell");
+    GateLayout {
+        name: "AND",
+        visible: vec![v(0), v(1), v(2)],
+        hidden: vec![h(0), h(1), h(2), h(3)],
+    }
+}
+
+/// Full adder in cell (r, c): visible (A, B, Cin, S, Cout) across both
+/// sides (A,B,Cin,S vertical; Cout horizontal 0), three hidden units.
+pub fn full_adder_layout(r: usize, c: usize) -> GateLayout {
+    let v = |k| spin_id(r, c, VERTICAL, k).expect("gate placed on dead cell");
+    let h = |k| spin_id(r, c, HORIZONTAL, k).expect("gate placed on dead cell");
+    GateLayout {
+        name: "FULL_ADDER",
+        visible: vec![v(0), v(1), v(2), v(3), h(0)],
+        hidden: vec![h(1), h(2), h(3)],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chimera::topology::{Topology, N_SPINS};
+
+    #[test]
+    fn and_layout_shape() {
+        let g = and_gate_layout(0, 0);
+        assert_eq!(g.n_visible(), 3);
+        assert_eq!(g.hidden.len(), 4);
+        assert_eq!(g.spins().len(), 7);
+        assert!(g.spins().iter().all(|&s| s < N_SPINS));
+    }
+
+    #[test]
+    fn adder_layout_shape() {
+        let g = full_adder_layout(2, 3);
+        assert_eq!(g.n_visible(), 5);
+        assert_eq!(g.spins().len(), 8);
+    }
+
+    #[test]
+    fn and_visible_couple_through_hidden() {
+        // Every (visible, hidden) pair in the AND layout is a physical
+        // coupler: visibles are vertical, hiddens horizontal, same cell.
+        let t = Topology::new();
+        let g = and_gate_layout(0, 0);
+        for &v in &g.visible {
+            for &h in &g.hidden {
+                assert!(t.connected(v, h), "({v},{h}) not coupled");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn dead_cell_rejected() {
+        and_gate_layout(6, 7);
+    }
+}

@@ -1,0 +1,19 @@
+//! Chimera graph topology of the 440-spin die.
+//!
+//! 7×8 unit cells, each a K4,4 bipartite RBM (4 *vertical* spins coupling
+//! to the cells above/below, 4 *horizontal* spins coupling left/right);
+//! cell (6,7) is replaced by bias circuits and the SPI interface, leaving
+//! 55 active cells × 8 = 440 spins. Indexing is bit-identical to
+//! `python/compile/chimera.py` and pinned by the golden files in
+//! `artifacts/golden/` (see `rust/tests/golden_topology.rs`).
+
+mod embedding;
+mod gates;
+mod topology;
+
+pub use embedding::{Embedding, EmbedError};
+pub use gates::{and_gate_layout, full_adder_layout, GateLayout};
+pub use topology::{
+    cell_index, color, color_masks, edges, spin_coords, spin_id, CellCoord, SpinCoord, Topology,
+    CELL, COLS, DEAD_CELL, HORIZONTAL, N_PAD, N_SPINS, ROWS, VERTICAL,
+};

@@ -1,0 +1,229 @@
+//! Spin indexing, edge list, adjacency and the bipartite two-coloring.
+
+/// Cell-grid rows on the die.
+pub const ROWS: usize = 7;
+/// Cell-grid columns on the die.
+pub const COLS: usize = 8;
+/// Spins per unit cell (4 vertical + 4 horizontal).
+pub const CELL: usize = 8;
+/// The cell replaced by bias circuits and the SPI interface.
+pub const DEAD_CELL: (usize, usize) = (ROWS - 1, COLS - 1);
+/// Physical spins on the die.
+pub const N_SPINS: usize = (ROWS * COLS - 1) * CELL; // 440
+/// MXU-padded spin-vector length (7 × 64).
+pub const N_PAD: usize = 448;
+/// Side index of vertical spins (couple to cells above/below).
+pub const VERTICAL: usize = 0;
+/// Side index of horizontal spins (couple to cells left/right).
+pub const HORIZONTAL: usize = 1;
+
+/// (row, col) of a unit cell.
+pub type CellCoord = (usize, usize);
+/// (row, col, side, k) of a spin.
+pub type SpinCoord = (usize, usize, usize, usize);
+
+/// Active-cell rank of cell (r, c) in row-major order skipping the dead
+/// cell; `None` for the dead cell itself.
+pub fn cell_index(r: usize, c: usize) -> Option<usize> {
+    debug_assert!(r < ROWS && c < COLS);
+    if (r, c) == DEAD_CELL {
+        return None;
+    }
+    let idx = r * COLS + c;
+    let dead = DEAD_CELL.0 * COLS + DEAD_CELL.1;
+    Some(if idx > dead { idx - 1 } else { idx })
+}
+
+/// Global spin id of (r, c, side, k); `None` if the cell is dead.
+pub fn spin_id(r: usize, c: usize, side: usize, k: usize) -> Option<usize> {
+    debug_assert!(side < 2 && k < 4);
+    cell_index(r, c).map(|ci| ci * CELL + side * 4 + k)
+}
+
+/// Inverse of [`spin_id`].
+pub fn spin_coords(s: usize) -> SpinCoord {
+    debug_assert!(s < N_SPINS);
+    let ci = s / CELL;
+    let rem = s % CELL;
+    let (side, k) = (rem / 4, rem % 4);
+    let dead = DEAD_CELL.0 * COLS + DEAD_CELL.1;
+    let linear = if ci < dead { ci } else { ci + 1 };
+    (linear / COLS, linear % COLS, side, k)
+}
+
+/// Bipartition color of spin `s`. Chimera is bipartite under
+/// `(r + c + side) mod 2`, so a two-phase chromatic update is an exact
+/// Gibbs sweep.
+pub fn color(s: usize) -> usize {
+    let (r, c, side, _) = spin_coords(s);
+    (r + c + side) % 2
+}
+
+/// Canonical `(i, j)` with `i < j` edge list of the 440-spin graph.
+pub fn edges() -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(55 * 16 + 95 * 4);
+    for r in 0..ROWS {
+        for c in 0..COLS {
+            if cell_index(r, c).is_none() {
+                continue;
+            }
+            // in-cell K4,4
+            for kv in 0..4 {
+                for kh in 0..4 {
+                    let a = spin_id(r, c, VERTICAL, kv).unwrap();
+                    let b = spin_id(r, c, HORIZONTAL, kh).unwrap();
+                    out.push((a.min(b), a.max(b)));
+                }
+            }
+            // vertical coupler to the cell below
+            if r + 1 < ROWS && cell_index(r + 1, c).is_some() {
+                for k in 0..4 {
+                    let a = spin_id(r, c, VERTICAL, k).unwrap();
+                    let b = spin_id(r + 1, c, VERTICAL, k).unwrap();
+                    out.push((a.min(b), a.max(b)));
+                }
+            }
+            // horizontal coupler to the cell on the right
+            if c + 1 < COLS && cell_index(r, c + 1).is_some() {
+                for k in 0..4 {
+                    let a = spin_id(r, c, HORIZONTAL, k).unwrap();
+                    let b = spin_id(r, c + 1, HORIZONTAL, k).unwrap();
+                    out.push((a.min(b), a.max(b)));
+                }
+            }
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// `[2][N_PAD]` color masks (1.0 where that color commits); padding
+/// belongs to neither color.
+pub fn color_masks() -> [Vec<f32>; 2] {
+    let mut m = [vec![0.0f32; N_PAD], vec![0.0f32; N_PAD]];
+    for s in 0..N_SPINS {
+        m[color(s)][s] = 1.0;
+    }
+    m
+}
+
+/// Precomputed topology: adjacency in CSR-ish form for the hot paths.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Canonical edge list, i < j.
+    pub edges: Vec<(usize, usize)>,
+    /// neighbors[i] = sorted list of js with a physical coupler to i.
+    pub neighbors: Vec<Vec<usize>>,
+    /// Spins of color 0 / color 1 in ascending order.
+    pub color_groups: [Vec<usize>; 2],
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        let edges = edges();
+        let mut neighbors = vec![Vec::new(); N_SPINS];
+        for &(i, j) in &edges {
+            neighbors[i].push(j);
+            neighbors[j].push(i);
+        }
+        for n in &mut neighbors {
+            n.sort_unstable();
+        }
+        let mut color_groups = [Vec::new(), Vec::new()];
+        for s in 0..N_SPINS {
+            color_groups[color(s)].push(s);
+        }
+        Self { edges, neighbors, color_groups }
+    }
+
+    /// Degree of spin i (≤ 6: 4 in-cell + up to 2 inter-cell).
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// Whether (i, j) is a physical coupler.
+    pub fn connected(&self, i: usize, j: usize) -> bool {
+        self.neighbors[i].binary_search(&j).is_ok()
+    }
+
+    /// Spins of one Chimera cell (by active-cell rank).
+    pub fn cell_spins(cell_rank: usize) -> [usize; CELL] {
+        let base = cell_rank * CELL;
+        std::array::from_fn(|k| base + k)
+    }
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_match_the_paper() {
+        assert_eq!(N_SPINS, 440);
+        assert_eq!(edges().len(), 55 * 16 + 47 * 4 + 48 * 4);
+    }
+
+    #[test]
+    fn spin_id_roundtrip() {
+        for s in 0..N_SPINS {
+            let (r, c, side, k) = spin_coords(s);
+            assert_eq!(spin_id(r, c, side, k), Some(s));
+        }
+    }
+
+    #[test]
+    fn dead_cell_excluded() {
+        assert_eq!(cell_index(DEAD_CELL.0, DEAD_CELL.1), None);
+        assert_eq!(spin_id(DEAD_CELL.0, DEAD_CELL.1, 0, 0), None);
+    }
+
+    #[test]
+    fn two_coloring_is_proper() {
+        for (i, j) in edges() {
+            assert_ne!(color(i), color(j), "edge ({i},{j}) monochrome");
+        }
+    }
+
+    #[test]
+    fn color_groups_partition() {
+        let t = Topology::new();
+        assert_eq!(t.color_groups[0].len() + t.color_groups[1].len(), N_SPINS);
+    }
+
+    #[test]
+    fn degrees_max_six() {
+        // "Each node has 6 current inputs summed on the output node".
+        let t = Topology::new();
+        let max = (0..N_SPINS).map(|i| t.degree(i)).max().unwrap();
+        assert_eq!(max, 6);
+        let min = (0..N_SPINS).map(|i| t.degree(i)).min().unwrap();
+        assert!(min >= 4);
+    }
+
+    #[test]
+    fn connected_is_symmetric_and_correct() {
+        let t = Topology::new();
+        assert!(t.connected(0, 4)); // vertical 0 ↔ horizontal 0 of cell 0
+        assert!(t.connected(4, 0));
+        assert!(!t.connected(0, 1)); // two vertical spins of one cell
+        assert!(!t.connected(0, 0));
+    }
+
+    #[test]
+    fn masks_cover_active_only() {
+        let m = color_masks();
+        for s in 0..N_SPINS {
+            assert_eq!(m[0][s] + m[1][s], 1.0);
+        }
+        for s in N_SPINS..N_PAD {
+            assert_eq!(m[0][s] + m[1][s], 0.0);
+        }
+    }
+}

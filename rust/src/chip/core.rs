@@ -1,0 +1,303 @@
+//! The full 440-p-bit chip: registers, analog personality, RNG bank,
+//! spin state and clocking.
+
+use anyhow::Result;
+
+use crate::analog::{Folded, Personality};
+use crate::chimera::{Topology, N_SPINS};
+use crate::config::MismatchConfig;
+use crate::rng::ChipRngBank;
+use crate::spi::{SpiBus, SpiFrame, RegMap};
+
+use super::pbit;
+
+/// Master clock of the RNG / update logic (paper: LFSRs at 200 MHz).
+pub const MASTER_CLOCK_HZ: f64 = 200e6;
+/// Effective time per full-array sample — Table 1 reports 50 ns TTS per
+/// attempted solution read; one chromatic sweep of all 440 p-bits takes
+/// 10 master cycles (two phases × pipeline depth 5).
+pub const SAMPLE_TIME_NS: f64 = 50.0;
+
+/// Spin-update schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateOrder {
+    /// Two-phase chromatic schedule (exact Gibbs; the chip's mode —
+    /// Table 1 row "Ising Hamiltonian: Gibbs Sampling").
+    Chromatic,
+    /// One spin at a time in index order (classic sequential Gibbs).
+    Sequential,
+    /// Everyone from the same snapshot (parallel dynamics — fast but
+    /// biased on frustrated graphs; ablation mode).
+    Synchronous,
+}
+
+/// One simulated die.
+pub struct PbitChip {
+    pub topo: Topology,
+    pub personality: Personality,
+    pub regs: RegMap,
+    pub bus: SpiBus,
+    rng: ChipRngBank,
+    state: Vec<i8>,
+    folded: Folded,
+    folded_dirty: bool,
+    /// Master-clock cycles consumed so far.
+    pub cycles: u64,
+    /// Full-array sweeps performed so far.
+    pub sweeps: u64,
+    scratch_u: Vec<f32>,
+}
+
+impl PbitChip {
+    /// Power up a die with personality `seed` and mismatch corner `cfg`.
+    pub fn power_up(seed: u64, cfg: MismatchConfig) -> Self {
+        let topo = Topology::new();
+        let personality = Personality::sample(&topo, seed, cfg);
+        let regs = RegMap::new(&topo);
+        let folded = personality.fold(&topo, &regs.weights);
+        // power-on spin state: flip-flops come up pseudo-randomly but
+        // deterministically per seed (real silicon would be random).
+        let mut hr = crate::rng::HostRng::new(seed ^ 0x00E5_7A7E);
+        let state = (0..N_SPINS).map(|_| hr.spin()).collect();
+        Self {
+            topo,
+            personality,
+            regs,
+            bus: SpiBus::new(),
+            rng: ChipRngBank::new(seed),
+            state,
+            folded,
+            folded_dirty: false,
+            cycles: 0,
+            sweeps: 0,
+            scratch_u: vec![0.0; crate::N_PAD],
+        }
+    }
+
+    /// An ideal (mismatch-free) die — the software-model reference.
+    pub fn ideal(seed: u64) -> Self {
+        let mut chip = Self::power_up(seed, MismatchConfig::ideal());
+        chip.personality = Personality::ideal(&chip.topo);
+        chip.refold();
+        chip
+    }
+
+    // ---- programming ----------------------------------------------------
+
+    /// Program a problem over the SPI bus (counts wire clocks).
+    pub fn program(&mut self, j_codes: &[i8], enables: &[bool], h_codes: &[i8]) -> Result<()> {
+        self.bus.program_problem(&mut self.regs, j_codes, enables, h_codes)?;
+        self.folded_dirty = true;
+        Ok(())
+    }
+
+    /// Set the annealing knob (β quantized to the V_temp register,
+    /// code = β·32 clamped to u8 — chip-accurate quantization).
+    pub fn set_beta(&mut self, beta: f64) -> Result<()> {
+        let code = (beta * 32.0).round().clamp(0.0, 255.0) as u8;
+        self.bus.transact(
+            &mut self.regs,
+            SpiFrame::write(crate::spi::Address::VTemp.encode(), code),
+        )?;
+        Ok(())
+    }
+
+    pub fn beta(&self) -> f64 {
+        self.regs.beta()
+    }
+
+    /// Direct (test-bench) state injection — bypasses SPI, used by the
+    /// trainer for clamping visible units.
+    pub fn force_spins(&mut self, idx: &[usize], values: &[i8]) {
+        for (&i, &v) in idx.iter().zip(values) {
+            self.state[i] = v;
+        }
+    }
+
+    pub fn state(&self) -> &[i8] {
+        &self.state
+    }
+
+    pub fn randomize_state(&mut self, seed: u64) {
+        let mut hr = crate::rng::HostRng::new(seed);
+        for s in self.state.iter_mut() {
+            *s = hr.spin();
+        }
+    }
+
+    /// Folded effective tensors (refolds lazily after programming).
+    pub fn folded(&mut self) -> &Folded {
+        if self.folded_dirty {
+            self.refold();
+        }
+        &self.folded
+    }
+
+    fn refold(&mut self) {
+        self.folded = self.personality.fold(&self.topo, &self.regs.weights);
+        self.folded_dirty = false;
+    }
+
+    // ---- clocking --------------------------------------------------------
+
+    /// One full-array sweep under the given schedule; `clamped` spins are
+    /// frozen (the CD positive phase clamps visibles).
+    pub fn sweep_with(&mut self, order: UpdateOrder, clamped: &[usize]) {
+        if self.folded_dirty {
+            self.refold();
+        }
+        let beta = self.regs.beta() as f32;
+        // fresh LFSR uniforms for every p-bit this sweep
+        let mut u = std::mem::take(&mut self.scratch_u);
+        self.rng.fill_slab(&mut u);
+        let mut is_clamped = vec![false; N_SPINS];
+        for &c in clamped {
+            is_clamped[c] = true;
+        }
+        match order {
+            UpdateOrder::Chromatic => {
+                for phase in 0..2 {
+                    // Split borrows: color groups are part of topo.
+                    let group = std::mem::take(&mut self.topo.color_groups[phase]);
+                    for &i in &group {
+                        if !is_clamped[i] {
+                            self.state[i] =
+                                pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                        }
+                    }
+                    self.topo.color_groups[phase] = group;
+                    // second phase sees fresh randoms, as on silicon
+                    if phase == 0 {
+                        self.rng.fill_slab(&mut u);
+                    }
+                }
+            }
+            UpdateOrder::Sequential => {
+                for i in 0..N_SPINS {
+                    if !is_clamped[i] {
+                        self.state[i] =
+                            pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                    }
+                }
+            }
+            UpdateOrder::Synchronous => {
+                let snapshot = self.state.clone();
+                for i in 0..N_SPINS {
+                    if !is_clamped[i] {
+                        self.state[i] = pbit::update_pbit(&self.folded, &snapshot, i, beta, u[i]);
+                    }
+                }
+            }
+        }
+        self.scratch_u = u;
+        self.sweeps += 1;
+        self.cycles += (SAMPLE_TIME_NS * MASTER_CLOCK_HZ / 1e9) as u64;
+    }
+
+    /// Convenience: chromatic sweep, nothing clamped.
+    pub fn sweep(&mut self) {
+        self.sweep_with(UpdateOrder::Chromatic, &[]);
+    }
+
+    /// Run `n` sweeps and latch the final state into the SPI readout
+    /// shadow; returns the state read back over the bus.
+    pub fn sample(&mut self, n_sweeps: usize) -> Result<Vec<i8>> {
+        for _ in 0..n_sweeps {
+            self.sweep();
+        }
+        let state = self.state.clone();
+        self.regs.latch_spins(&state);
+        self.regs.read_all_spins()
+    }
+
+    /// Elapsed simulated wall-clock in nanoseconds.
+    pub fn elapsed_ns(&self) -> f64 {
+        self.cycles as f64 / MASTER_CLOCK_HZ * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_up_state_is_reproducible() {
+        let a = PbitChip::power_up(3, MismatchConfig::default());
+        let b = PbitChip::power_up(3, MismatchConfig::default());
+        assert_eq!(a.state(), b.state());
+        let c = PbitChip::power_up(4, MismatchConfig::default());
+        assert_ne!(a.state(), c.state());
+    }
+
+    #[test]
+    fn free_running_chip_is_stochastic() {
+        let mut chip = PbitChip::ideal(1);
+        let s0 = chip.sample(5).unwrap();
+        let s1 = chip.sample(5).unwrap();
+        assert_ne!(s0, s1, "free p-bits must keep flipping");
+        assert!(s0.iter().all(|&s| s == 1 || s == -1));
+    }
+
+    #[test]
+    fn clamping_freezes_spins() {
+        let mut chip = PbitChip::ideal(2);
+        chip.force_spins(&[0, 7, 100], &[1, -1, 1]);
+        for _ in 0..10 {
+            chip.sweep_with(UpdateOrder::Chromatic, &[0, 7, 100]);
+        }
+        assert_eq!(chip.state()[0], 1);
+        assert_eq!(chip.state()[7], -1);
+        assert_eq!(chip.state()[100], 1);
+    }
+
+    #[test]
+    fn strong_ferro_coupler_aligns_pair_at_high_beta() {
+        let mut chip = PbitChip::ideal(5);
+        let ne = chip.topo.edges.len();
+        let mut j = vec![0i8; ne];
+        let mut en = vec![false; ne];
+        j[0] = 127;
+        en[0] = true;
+        chip.program(&j, &en, &vec![0i8; N_SPINS]).unwrap();
+        chip.set_beta(7.9).unwrap();
+        let (a, b) = chip.topo.edges[0];
+        let mut agree = 0usize;
+        let n = 200;
+        for _ in 0..n {
+            chip.sweep();
+            if chip.state()[a] == chip.state()[b] {
+                agree += 1;
+            }
+        }
+        assert!(agree > n * 9 / 10, "aligned only {agree}/{n}");
+    }
+
+    #[test]
+    fn beta_quantizes_like_vtemp() {
+        let mut chip = PbitChip::ideal(6);
+        chip.set_beta(1.01).unwrap();
+        assert_eq!(chip.beta(), 32.0 / 32.0); // rounds to code 32
+        chip.set_beta(2.5).unwrap();
+        assert_eq!(chip.beta(), 80.0 / 32.0);
+    }
+
+    #[test]
+    fn time_accounting_advances() {
+        let mut chip = PbitChip::ideal(7);
+        let t0 = chip.elapsed_ns();
+        chip.sample(10).unwrap();
+        assert!(chip.elapsed_ns() > t0);
+        assert_eq!(chip.sweeps, 10);
+        // 10 sweeps × 50 ns
+        assert!((chip.elapsed_ns() - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn update_orders_all_run() {
+        let mut chip = PbitChip::power_up(8, MismatchConfig::default());
+        for order in [UpdateOrder::Chromatic, UpdateOrder::Sequential, UpdateOrder::Synchronous] {
+            chip.sweep_with(order, &[]);
+        }
+        assert_eq!(chip.sweeps, 3);
+    }
+}

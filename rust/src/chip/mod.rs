@@ -1,0 +1,14 @@
+//! Cycle-level behavioral simulator of the die — the "silicon" the
+//! coordinator talks to.
+//!
+//! Composes the analog standard-cell models ([`crate::analog`]), the
+//! decimated-LFSR RNG ([`crate::rng`]) and the SPI register file
+//! ([`crate::spi`]) into a chip you program and clock. The same folded
+//! effective tensors drive the AOT XLA sampler, so the two paths
+//! cross-validate (see `rust/tests/`).
+
+mod core;
+mod pbit;
+
+pub use self::core::{PbitChip, UpdateOrder, MASTER_CLOCK_HZ, SAMPLE_TIME_NS};
+pub use pbit::{update_pbit, TANH_SAT};

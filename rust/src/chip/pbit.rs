@@ -1,0 +1,109 @@
+//! The single p-bit update pipeline, eqns (1)–(2) through the analog
+//! signal chain.
+//!
+//! Arithmetic is deliberately f32 to mirror the L1 kernel bit-for-bit
+//! (modulo libm-vs-XLA tanh ulps): current summation → WTA tanh with
+//! slope/offset mismatch → random-current injection → comparator
+//! (ties high).
+
+use crate::analog::Folded;
+use crate::chimera::N_PAD;
+
+/// Compute the next state of p-bit `i` given the full spin state,
+/// the folded effective tensors, the global β and this p-bit's uniform
+/// random draw `u ∈ (−1, 1)`.
+#[inline]
+pub fn update_pbit(folded: &Folded, state: &[i8], i: usize, beta: f32, u: f32) -> i8 {
+    // eqn (1): current summation on the output wire. The folded matrix
+    // is sparse (≤6 couplers/node) but stored dense in transposed
+    // layout; the hot software sampler uses the CSR path instead —
+    // this function is the readable reference pipeline.
+    let mut current = folded.h_eff[i];
+    let col = &folded.jt_eff;
+    for (j, &s) in state.iter().enumerate() {
+        let w = col[j * N_PAD + i];
+        if w != 0.0 {
+            current += w * s as f32;
+        }
+    }
+    decide(folded, i, beta, current, u)
+}
+
+/// rust's f32 tanh returns exactly ±1.0 beyond this |x| (measured:
+/// tanhf(9.2) == 1.0), so the saturated fast path below is bit-exact.
+pub const TANH_SAT: f32 = 9.25;
+
+/// The tanh → noise → comparator tail, shared by the fast CSR path.
+#[inline(always)]
+pub fn decide(folded: &Folded, i: usize, beta: f32, current: f32, u: f32) -> i8 {
+    // eqn (2): WTA tanh with per-instance slope and offset …
+    let x = beta * folded.g[i] * current + folded.o[i];
+    // saturated fast path (clamped spins, deep anneals): tanhf(|x| ≥
+    // 9.25) is exactly ±1.0, and |u| < 1, so the comparator's sign is
+    // the sign of x — skip the libm call, bit-identically.
+    let act = if x >= TANH_SAT {
+        1.0
+    } else if x <= -TANH_SAT {
+        -1.0
+    } else {
+        x.tanh()
+    };
+    // … plus the RNG DAC current, resolved by the comparator (ties high).
+    if act + u >= 0.0 {
+        1
+    } else {
+        -1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::{Personality, ProgrammedWeights};
+    use crate::chimera::{Topology, N_SPINS};
+
+    fn folded_with_bias(code: i8) -> Folded {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        w.h_codes[0] = code;
+        p.fold(&t, &w)
+    }
+
+    #[test]
+    fn strong_bias_pins_spin() {
+        let f = folded_with_bias(127);
+        let state = vec![-1i8; N_SPINS];
+        // β large: tanh(β·1.0) ≈ 1 > |u| for any u < 1
+        assert_eq!(update_pbit(&f, &state, 0, 100.0, -0.999), 1);
+        let f = folded_with_bias(-127);
+        assert_eq!(update_pbit(&f, &state, 0, 100.0, 0.999), -1);
+    }
+
+    #[test]
+    fn zero_input_follows_noise() {
+        let f = folded_with_bias(0);
+        let state = vec![1i8; N_SPINS];
+        assert_eq!(update_pbit(&f, &state, 3, 1.0, 0.5), 1);
+        assert_eq!(update_pbit(&f, &state, 3, 1.0, -0.5), -1);
+        assert_eq!(update_pbit(&f, &state, 3, 1.0, 0.0), 1, "tie breaks high");
+    }
+
+    #[test]
+    fn coupler_pulls_neighbor() {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        // edge 0 couples spins (0, 4) ferromagnetically at full scale
+        w.j_codes[0] = 127;
+        w.enables[0] = true;
+        let f = p.fold(&t, &w);
+        let (i, j) = t.edges[0];
+        let mut state = vec![1i8; N_SPINS];
+        state[j] = -1;
+        // at high β spin i follows its only active neighbor j
+        assert_eq!(update_pbit(&f, &state, i, 50.0, 0.9), -1);
+        state[j] = 1;
+        assert_eq!(update_pbit(&f, &state, i, 50.0, -0.9), 1);
+    }
+}

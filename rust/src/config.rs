@@ -1,0 +1,192 @@
+//! Configuration system: TOML-lite file + env overrides, shared by the
+//! CLI, the coordinator, examples and benches.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::toml_lite::Doc;
+
+/// Locate the artifacts directory: `$PCHIP_ARTIFACTS`, else
+/// `<crate root>/artifacts`, else `./artifacts`.
+pub fn repo_artifacts_dir() -> PathBuf {
+    if let Some(p) = std::env::var_os("PCHIP_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cand = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if cand.exists() {
+        cand
+    } else {
+        PathBuf::from("artifacts")
+    }
+}
+
+/// Results directory for experiment CSV/JSON output.
+pub fn results_dir() -> PathBuf {
+    if let Some(p) = std::env::var_os("PCHIP_RESULTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results")
+}
+
+/// Mismatch magnitudes of one fabricated chip corner (DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MismatchConfig {
+    /// R-2R DAC gain sigma (finite output resistance at 1 V supply).
+    pub sigma_dac: f64,
+    /// Gilbert multiplier gain sigma.
+    pub sigma_mul: f64,
+    /// Multiplier static offset sigma, in units of full-scale weight.
+    pub sigma_off: f64,
+    /// WTA tanh slope sigma.
+    pub sigma_beta: f64,
+    /// Input-referred tanh+comparator offset sigma.
+    pub sigma_obeta: f64,
+    /// Residual coupling of a disabled connection (enable-bit leakage).
+    pub leak: f64,
+    /// R-2R per-bit element mismatch sigma (drives INL/DNL).
+    pub sigma_r2r: f64,
+}
+
+impl Default for MismatchConfig {
+    fn default() -> Self {
+        Self {
+            sigma_dac: 0.05,
+            sigma_mul: 0.04,
+            sigma_off: 0.02,
+            sigma_beta: 0.08,
+            sigma_obeta: 0.03,
+            leak: 0.1,
+            sigma_r2r: 0.01,
+        }
+    }
+}
+
+impl MismatchConfig {
+    /// A perfectly matched (ideal) chip — the software-baseline corner.
+    pub fn ideal() -> Self {
+        Self {
+            sigma_dac: 0.0,
+            sigma_mul: 0.0,
+            sigma_off: 0.0,
+            sigma_beta: 0.0,
+            sigma_obeta: 0.0,
+            leak: 0.0,
+            sigma_r2r: 0.0,
+        }
+    }
+
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            sigma_dac: doc.f64_or("mismatch.sigma_dac", d.sigma_dac)?,
+            sigma_mul: doc.f64_or("mismatch.sigma_mul", d.sigma_mul)?,
+            sigma_off: doc.f64_or("mismatch.sigma_off", d.sigma_off)?,
+            sigma_beta: doc.f64_or("mismatch.sigma_beta", d.sigma_beta)?,
+            sigma_obeta: doc.f64_or("mismatch.sigma_obeta", d.sigma_obeta)?,
+            leak: doc.f64_or("mismatch.leak", d.leak)?,
+            sigma_r2r: doc.f64_or("mismatch.sigma_r2r", d.sigma_r2r)?,
+        })
+    }
+}
+
+/// Coordinator / serving parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Number of simulated chip instances behind the router.
+    pub chips: usize,
+    /// Base seed; chip k gets personality seed `seed + k`.
+    pub seed: u64,
+    /// Max jobs waiting in the queue before backpressure kicks in.
+    pub queue_depth: usize,
+    /// Max batch a single dispatch may aggregate.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub batch_window_us: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { chips: 4, seed: 1, queue_depth: 256, max_batch: 32, batch_window_us: 200 }
+    }
+}
+
+impl ServerConfig {
+    fn from_doc(doc: &Doc) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            chips: doc.usize_or("server.chips", d.chips)?,
+            seed: doc.u64_or("server.seed", d.seed)?,
+            queue_depth: doc.usize_or("server.queue_depth", d.queue_depth)?,
+            max_batch: doc.usize_or("server.max_batch", d.max_batch)?,
+            batch_window_us: doc.u64_or("server.batch_window_us", d.batch_window_us)?,
+        })
+    }
+}
+
+/// Top-level config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub mismatch: MismatchConfig,
+    pub server: ServerConfig,
+    /// Artifacts directory override (else auto-located).
+    pub artifacts: Option<PathBuf>,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = Doc::parse(text).context("parsing config")?;
+        Ok(Self {
+            mismatch: MismatchConfig::from_doc(&doc)?,
+            server: ServerConfig::from_doc(&doc)?,
+            artifacts: doc.str_opt("artifacts")?.map(PathBuf::from),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.artifacts.clone().unwrap_or_else(repo_artifacts_dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_default() {
+        assert_eq!(Config::parse("").unwrap(), Config::default());
+    }
+
+    #[test]
+    fn partial_config_overrides() {
+        let c = Config::parse("[mismatch]\nsigma_dac = 0.2\n[server]\nchips = 2\n").unwrap();
+        assert_eq!(c.mismatch.sigma_dac, 0.2);
+        assert_eq!(c.mismatch.sigma_mul, MismatchConfig::default().sigma_mul);
+        assert_eq!(c.server.chips, 2);
+    }
+
+    #[test]
+    fn artifacts_override() {
+        let c = Config::parse("artifacts = \"/tmp/a\"\n").unwrap();
+        assert_eq!(c.artifacts_dir(), PathBuf::from("/tmp/a"));
+    }
+
+    #[test]
+    fn ideal_corner_is_zero() {
+        let m = MismatchConfig::ideal();
+        assert_eq!(m.sigma_dac, 0.0);
+        assert_eq!(m.leak, 0.0);
+    }
+
+    #[test]
+    fn bad_type_is_an_error() {
+        assert!(Config::parse("[server]\nchips = \"two\"\n").is_err());
+        assert!(Config::parse("[server]\nchips = -1\n").is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Dynamic batcher: groups same-problem jobs up to the chain budget.
+//!
+//! Pure data structure (no threads, no clocks) so the invariants are
+//! property-testable: no job lost or duplicated, per-problem FIFO order,
+//! chain budget respected, anneal jobs dispatch alone.
+
+use std::collections::VecDeque;
+
+use super::job::{JobId, JobRequest};
+
+/// A queued job awaiting dispatch.
+#[derive(Debug)]
+pub struct QueuedJob {
+    pub id: JobId,
+    pub request: JobRequest,
+}
+
+/// A dispatchable batch: same problem, total chains ≤ budget.
+#[derive(Debug)]
+pub struct Batch {
+    pub problem: u64,
+    pub jobs: Vec<QueuedJob>,
+}
+
+impl Batch {
+    /// Total chains the batch needs (anneals take the whole die).
+    pub fn chains(&self) -> usize {
+        self.jobs.iter().map(|j| j.request.chains()).fold(0usize, usize::saturating_add)
+    }
+}
+
+/// FIFO queue with same-problem aggregation.
+#[derive(Debug)]
+pub struct Batcher {
+    queue: VecDeque<QueuedJob>,
+    /// Max jobs waiting before `push` refuses (backpressure).
+    pub depth: usize,
+    /// Chain budget per dispatched batch (the engine's batch size).
+    pub max_chains: usize,
+}
+
+impl Batcher {
+    pub fn new(depth: usize, max_chains: usize) -> Self {
+        Self { queue: VecDeque::new(), depth, max_chains }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Enqueue; `Err(job)` when the queue is full (backpressure).
+    pub fn push(&mut self, job: QueuedJob) -> Result<(), QueuedJob> {
+        if self.queue.len() >= self.depth {
+            return Err(job);
+        }
+        self.queue.push_back(job);
+        Ok(())
+    }
+
+    /// Pop the next batch: the head job plus any later jobs with the
+    /// same problem handle, while the chain budget holds. Anneal jobs
+    /// (whole-die) always dispatch alone.
+    pub fn pop_batch(&mut self) -> Option<Batch> {
+        let head = self.queue.pop_front()?;
+        let problem = head.request.problem();
+        let mut chains = head.request.chains();
+        let mut jobs = vec![head];
+        if chains < self.max_chains {
+            let mut i = 0;
+            while i < self.queue.len() {
+                let cand = &self.queue[i];
+                let c = cand.request.chains();
+                if cand.request.problem() == problem
+                    && c != usize::MAX
+                    && chains.saturating_add(c) <= self.max_chains
+                {
+                    chains += c;
+                    let job = self.queue.remove(i).expect("index in range");
+                    jobs.push(job);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        Some(Batch { problem, jobs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annealing::AnnealParams;
+    use crate::util::prop;
+
+    fn sample(id: JobId, problem: u64, chains: usize) -> QueuedJob {
+        QueuedJob { id, request: JobRequest::Sample { problem, sweeps: 8, beta: 1.0, chains } }
+    }
+
+    fn anneal(id: JobId, problem: u64) -> QueuedJob {
+        QueuedJob { id, request: JobRequest::Anneal { problem, params: AnnealParams::default() } }
+    }
+
+    #[test]
+    fn aggregates_same_problem() {
+        let mut b = Batcher::new(16, 32);
+        b.push(sample(1, 7, 8)).unwrap();
+        b.push(sample(2, 9, 8)).unwrap();
+        b.push(sample(3, 7, 8)).unwrap();
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.problem, 7);
+        assert_eq!(batch.jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn respects_chain_budget() {
+        let mut b = Batcher::new(16, 32);
+        for id in 0..5 {
+            b.push(sample(id, 1, 12)).unwrap();
+        }
+        let batch = b.pop_batch().unwrap();
+        // 12 + 12 = 24 ≤ 32, adding a third would exceed
+        assert_eq!(batch.jobs.len(), 2);
+        assert!(batch.chains() <= 32);
+    }
+
+    #[test]
+    fn anneal_dispatches_alone() {
+        let mut b = Batcher::new(16, 32);
+        b.push(anneal(1, 3)).unwrap();
+        b.push(sample(2, 3, 4)).unwrap();
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.jobs.len(), 1);
+        assert_eq!(batch.jobs[0].id, 1);
+    }
+
+    #[test]
+    fn backpressure_at_depth() {
+        let mut b = Batcher::new(2, 32);
+        b.push(sample(1, 1, 1)).unwrap();
+        b.push(sample(2, 1, 1)).unwrap();
+        assert!(b.push(sample(3, 1, 1)).is_err());
+        b.pop_batch().unwrap();
+        b.push(sample(3, 1, 1)).unwrap();
+    }
+
+    /// Property: across arbitrary push/pop interleavings no job is lost
+    /// or duplicated, batches are single-problem, and budget holds.
+    #[test]
+    fn prop_no_loss_no_duplication() {
+        prop::check("batcher conservation", 300, |rng| {
+            let depth = rng.below(32) + 1;
+            let max_chains = rng.below(31) + 2;
+            let mut b = Batcher::new(depth, max_chains);
+            let mut pushed = Vec::new();
+            let mut popped = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..rng.below(60) + 1 {
+                if rng.uniform() < 0.6 {
+                    let job = if rng.uniform() < 0.15 {
+                        anneal(next_id, rng.below(3) as u64)
+                    } else {
+                        sample(next_id, rng.below(3) as u64, rng.below(max_chains) + 1)
+                    };
+                    if b.push(job).is_ok() {
+                        pushed.push(next_id);
+                    }
+                    next_id += 1;
+                } else if let Some(batch) = b.pop_batch() {
+                    // single problem per batch
+                    assert!(batch.jobs.iter().all(|j| j.request.problem() == batch.problem));
+                    // budget: sample-only batches fit max_chains
+                    if batch.jobs.iter().all(|j| j.request.chains() != usize::MAX) {
+                        assert!(batch.chains() <= max_chains.max(batch.jobs[0].request.chains()));
+                    } else {
+                        assert_eq!(batch.jobs.len(), 1);
+                    }
+                    popped.extend(batch.jobs.iter().map(|j| j.id));
+                }
+            }
+            while let Some(batch) = b.pop_batch() {
+                popped.extend(batch.jobs.iter().map(|j| j.id));
+            }
+            pushed.sort_unstable();
+            popped.sort_unstable();
+            assert_eq!(pushed, popped, "jobs lost or duplicated");
+        });
+    }
+
+    /// Property: per-problem FIFO order is preserved.
+    #[test]
+    fn prop_per_problem_fifo() {
+        prop::check("batcher per-problem fifo", 200, |rng| {
+            let mut b = Batcher::new(usize::MAX, rng.below(8) + 1);
+            let n = rng.below(40) + 2;
+            for id in 0..n as u64 {
+                let _ = b.push(sample(id, rng.below(3) as u64, 1));
+            }
+            let mut seen: std::collections::HashMap<u64, u64> = Default::default();
+            while let Some(batch) = b.pop_batch() {
+                for j in &batch.jobs {
+                    let p = j.request.problem();
+                    if let Some(&prev) = seen.get(&p) {
+                        assert!(j.id > prev, "problem {p}: {} after {}", j.id, prev);
+                    }
+                    seen.insert(p, j.id);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,120 @@
+//! Job and result types crossing the client ⇄ coordinator boundary.
+
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::annealing::AnnealParams;
+
+/// Opaque id of a registered problem.
+pub type ProblemHandle = u64;
+/// Monotone job id.
+pub type JobId = u64;
+
+/// What a client can ask the chip array to do.
+#[derive(Debug, Clone)]
+pub enum JobRequest {
+    /// Free-running Gibbs sampling at fixed β: returns `chains` states.
+    Sample { problem: ProblemHandle, sweeps: usize, beta: f64, chains: usize },
+    /// A full annealing run; returns the energy trace and best state.
+    Anneal { problem: ProblemHandle, params: AnnealParams },
+}
+
+impl JobRequest {
+    pub fn problem(&self) -> ProblemHandle {
+        match *self {
+            JobRequest::Sample { problem, .. } => problem,
+            JobRequest::Anneal { problem, .. } => problem,
+        }
+    }
+
+    /// Chain budget the job consumes in a batch.
+    pub fn chains(&self) -> usize {
+        match *self {
+            JobRequest::Sample { chains, .. } => chains.max(1),
+            // an anneal occupies the whole die
+            JobRequest::Anneal { .. } => usize::MAX,
+        }
+    }
+}
+
+/// What comes back.
+#[derive(Debug, Clone)]
+pub enum JobResult {
+    Samples {
+        /// One state per requested chain.
+        states: Vec<Vec<i8>>,
+        /// Ising energy of each state.
+        energies: Vec<f64>,
+        /// Which die served it.
+        chip: usize,
+        /// Simulated chip time consumed (ns).
+        chip_time_ns: f64,
+        /// Host wall-clock latency.
+        latency: Duration,
+    },
+    Annealed {
+        best_energy: f64,
+        best_state: Vec<i8>,
+        /// (sweep, beta, mean energy, min energy) rows.
+        trace: Vec<(u64, f64, f64, f64)>,
+        chip: usize,
+        latency: Duration,
+    },
+    Failed(String),
+}
+
+/// Handle for awaiting one job's result.
+pub struct JobTicket {
+    pub id: JobId,
+    pub(crate) rx: mpsc::Receiver<JobResult>,
+}
+
+impl JobTicket {
+    /// Block until the result arrives.
+    pub fn wait(self) -> JobResult {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| JobResult::Failed("coordinator shut down".into()))
+    }
+
+    /// Poll without blocking.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chains_budget() {
+        let s = JobRequest::Sample { problem: 1, sweeps: 8, beta: 1.0, chains: 0 };
+        assert_eq!(s.chains(), 1, "zero-chain request normalizes to 1");
+        let a = JobRequest::Anneal { problem: 2, params: AnnealParams::default() };
+        assert_eq!(a.chains(), usize::MAX);
+        assert_eq!(a.problem(), 2);
+    }
+
+    #[test]
+    fn ticket_roundtrip() {
+        let (tx, rx) = mpsc::channel();
+        let t = JobTicket { id: 9, rx };
+        tx.send(JobResult::Failed("x".into())).unwrap();
+        match t.wait() {
+            JobResult::Failed(m) => assert_eq!(m, "x"),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn dropped_sender_reports_shutdown() {
+        let (tx, rx) = mpsc::channel::<JobResult>();
+        drop(tx);
+        let t = JobTicket { id: 1, rx };
+        match t.wait() {
+            JobResult::Failed(m) => assert!(m.contains("shut down")),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! The chip-array coordinator: an asynchronous job server over a fleet
+//! of simulated dies.
+//!
+//! Serving architecture (vLLM-router-shaped, thread + channel based —
+//! the offline vendor set has no async runtime, and the workload is
+//! compute-bound anyway):
+//!
+//! ```text
+//!  clients ──submit──▶ bounded queue ──▶ dispatcher ──▶ worker 0 (die #0)
+//!                      (backpressure)    │ batcher      worker 1 (die #1)
+//!                                        │ router   ──▶ …
+//!                                        ▼
+//!                            problem-affinity map (reprogramming a die
+//!                            over SPI is the expensive operation — jobs
+//!                            for the same problem stick to a die)
+//! ```
+//!
+//! * [`Batcher`] — groups same-problem jobs up to the chain budget
+//!   within a batching window (pure logic, property-tested).
+//! * [`Router`] — problem→die affinity with least-loaded fallback
+//!   (pure logic, property-tested).
+//! * [`ChipArrayServer`] — worker threads each own one die personality
+//!   and one sampling engine; python never runs here.
+
+mod batcher;
+mod job;
+mod router;
+mod server;
+
+pub use batcher::{Batch, Batcher, QueuedJob};
+pub use job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
+pub use router::Router;
+pub use server::{ChipArrayServer, EngineKind, ServerStats};

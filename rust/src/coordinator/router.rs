@@ -1,0 +1,144 @@
+//! Problem-affinity router.
+//!
+//! Reprogramming a die is the expensive step (thousands of SPI frames +
+//! a personality refold), so batches for a problem stick to the die that
+//! already holds its weights; new problems go to the least-loaded die.
+//! An affinity is evicted when its die is claimed by a different
+//! problem (dies hold one weight image at a time).
+
+use std::collections::HashMap;
+
+/// Pure routing state (property-tested; the server wraps it).
+#[derive(Debug)]
+pub struct Router {
+    /// problem → die currently programmed with it.
+    affinity: HashMap<u64, usize>,
+    /// die → problem it holds (reverse map).
+    resident: Vec<Option<u64>>,
+    /// die → in-flight batches.
+    load: Vec<usize>,
+    /// count of reprogram events (metric: affinity effectiveness).
+    pub reprograms: u64,
+}
+
+impl Router {
+    pub fn new(n_workers: usize) -> Self {
+        assert!(n_workers > 0);
+        Self {
+            affinity: HashMap::new(),
+            resident: vec![None; n_workers],
+            load: vec![0; n_workers],
+            reprograms: 0,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Choose a die for a batch of `problem`; records the dispatch.
+    /// Returns (die, needs_reprogram).
+    pub fn route(&mut self, problem: u64) -> (usize, bool) {
+        if let Some(&w) = self.affinity.get(&problem) {
+            self.load[w] += 1;
+            return (w, false);
+        }
+        // least-loaded die; prefer one holding no live affinity
+        let w = (0..self.load.len())
+            .min_by_key(|&w| (self.load[w], self.resident[w].is_some() as usize, w))
+            .expect("at least one worker");
+        if let Some(old) = self.resident[w].replace(problem) {
+            self.affinity.remove(&old);
+        }
+        self.affinity.insert(problem, w);
+        self.reprograms += 1;
+        self.load[w] += 1;
+        (w, true)
+    }
+
+    /// A batch finished on die `w`.
+    pub fn complete(&mut self, w: usize) {
+        assert!(self.load[w] > 0, "completion without dispatch on die {w}");
+        self.load[w] -= 1;
+    }
+
+    pub fn load(&self, w: usize) -> usize {
+        self.load[w]
+    }
+
+    /// Which problem die `w` holds.
+    pub fn resident(&self, w: usize) -> Option<u64> {
+        self.resident[w]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn affinity_sticks() {
+        let mut r = Router::new(3);
+        let (w1, re1) = r.route(7);
+        assert!(re1);
+        r.complete(w1);
+        let (w2, re2) = r.route(7);
+        assert_eq!(w1, w2);
+        assert!(!re2, "affinity hit must not reprogram");
+        assert_eq!(r.reprograms, 1);
+    }
+
+    #[test]
+    fn spreads_new_problems() {
+        let mut r = Router::new(3);
+        let (a, _) = r.route(1);
+        let (b, _) = r.route(2);
+        let (c, _) = r.route(3);
+        let mut ws = [a, b, c];
+        ws.sort_unstable();
+        assert_eq!(ws, [0, 1, 2], "three problems over three idle dies");
+    }
+
+    #[test]
+    fn eviction_removes_old_affinity() {
+        let mut r = Router::new(1);
+        let (w, _) = r.route(1);
+        r.complete(w);
+        let (_, re) = r.route(2); // evicts problem 1
+        assert!(re);
+        r.complete(0);
+        let (_, re) = r.route(1); // must reprogram again
+        assert!(re);
+        assert_eq!(r.reprograms, 3);
+    }
+
+    /// Properties: routed die in range; load bookkeeping consistent;
+    /// resident/affinity maps stay mutually inverse.
+    #[test]
+    fn prop_router_invariants() {
+        prop::check("router invariants", 300, |rng| {
+            let n = rng.below(6) + 1;
+            let mut r = Router::new(n);
+            let mut inflight: Vec<usize> = vec![0; n];
+            for _ in 0..rng.below(100) {
+                if rng.uniform() < 0.7 {
+                    let p = rng.below(8) as u64;
+                    let (w, _) = r.route(p);
+                    assert!(w < n);
+                    inflight[w] += 1;
+                    assert_eq!(r.resident(w), Some(p));
+                } else if let Some(w) = (0..n).find(|&w| inflight[w] > 0) {
+                    r.complete(w);
+                    inflight[w] -= 1;
+                }
+                for w in 0..n {
+                    assert_eq!(r.load(w), inflight[w], "load mismatch on {w}");
+                    if let Some(p) = r.resident(w) {
+                        assert_eq!(r.affinity.get(&p), Some(&w), "maps not inverse");
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,517 @@
+//! The threaded chip-array server: dispatcher + one worker per die.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::analog::{Personality, ProgrammedWeights};
+use crate::annealing;
+use crate::chimera::Topology;
+use crate::config::{Config, MismatchConfig};
+use crate::learning::{Hw, TrainableChip};
+use crate::problems::IsingProblem;
+use crate::sampler::{SoftwareSampler, XlaSampler};
+
+use super::batcher::{Batch, Batcher, QueuedJob};
+use super::job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
+use super::router::Router;
+
+/// Which sampling engine each die runs.
+#[derive(Debug, Clone)]
+pub enum EngineKind {
+    /// Pure-rust CSR Gibbs (fast, no PJRT).
+    Software,
+    /// The AOT PJRT path (loads artifacts from the given directory).
+    Xla { artifacts_dir: std::path::PathBuf },
+}
+
+/// A registered problem: logical form + lowered register codes.
+pub struct ProblemSpec {
+    pub problem: IsingProblem,
+    pub codes: ProgrammedWeights,
+    /// code → logical coupling scale (β_chip = β_logical × scale).
+    pub scale: f64,
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub jobs_completed: AtomicU64,
+    pub jobs_failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub reprograms: AtomicU64,
+    pub total_latency_us: AtomicU64,
+    pub chip_time_ns: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.jobs_completed.load(Ordering::Relaxed).max(1);
+        Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
+    }
+}
+
+enum Msg {
+    Job(QueuedJob, mpsc::Sender<JobResult>),
+    Done(usize),
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Run { batch: Batch, spec: Arc<ProblemSpec>, needs_program: bool, replies: Vec<mpsc::Sender<JobResult>>, submitted: Vec<Instant> },
+    Shutdown,
+}
+
+/// The chip-array coordinator (see module docs).
+pub struct ChipArrayServer {
+    submit_tx: mpsc::SyncSender<Msg>,
+    stats: Arc<ServerStats>,
+    problems: Arc<Mutex<HashMap<ProblemHandle, Arc<ProblemSpec>>>>,
+    next_problem: AtomicU64,
+    next_job: AtomicU64,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    topo: Topology,
+}
+
+impl ChipArrayServer {
+    /// Start the server: `cfg.server.chips` worker threads, each owning
+    /// a die with personality seed `cfg.server.seed + k` and mismatch
+    /// corner `cfg.mismatch`.
+    pub fn start(cfg: &Config, engine: EngineKind) -> Result<Self> {
+        let n = cfg.server.chips.max(1);
+        let stats = Arc::new(ServerStats::default());
+        let (submit_tx, submit_rx) =
+            mpsc::sync_channel::<Msg>(cfg.server.queue_depth + 2 * n + 2);
+
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for k in 0..n {
+            let (tx, rx) = mpsc::channel::<WorkerMsg>();
+            worker_txs.push(tx);
+            let seed = cfg.server.seed + k as u64;
+            let mcfg = cfg.mismatch;
+            let ekind = engine.clone();
+            let stats_k = stats.clone();
+            let done_tx = submit_tx.clone();
+            workers.push(std::thread::Builder::new().name(format!("die-{k}")).spawn(
+                move || worker_main(k, seed, mcfg, ekind, rx, done_tx, stats_k),
+            )?);
+        }
+
+        let stats_d = stats.clone();
+        let batcher = Batcher::new(cfg.server.queue_depth, cfg.server.max_batch);
+        let window = Duration::from_micros(cfg.server.batch_window_us);
+        let problems: Arc<Mutex<HashMap<ProblemHandle, Arc<ProblemSpec>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let problems_d = problems.clone();
+        let dispatcher = std::thread::Builder::new().name("dispatcher".into()).spawn(move || {
+            dispatcher_main(submit_rx, worker_txs, batcher, window, stats_d, problems_d)
+        })?;
+
+        Ok(Self {
+            submit_tx,
+            stats,
+            problems,
+            next_problem: AtomicU64::new(1),
+            next_job: AtomicU64::new(1),
+            dispatcher: Some(dispatcher),
+            workers,
+            topo: Topology::new(),
+        })
+    }
+
+    /// Register a problem: lower to codes once, share across dies.
+    pub fn register_problem(&self, problem: IsingProblem) -> Result<ProblemHandle> {
+        let (j_codes, enables, h_codes, scale) = problem.to_codes(&self.topo)?;
+        let spec = ProblemSpec {
+            problem,
+            codes: ProgrammedWeights { j_codes, enables, h_codes },
+            scale,
+        };
+        let id = self.next_problem.fetch_add(1, Ordering::Relaxed);
+        self.problems.lock().unwrap().insert(id, Arc::new(spec));
+        Ok(id)
+    }
+
+    /// Submit a job; blocks only when the bounded queue is full
+    /// (backpressure).
+    pub fn submit(&self, request: JobRequest) -> Result<JobTicket> {
+        let spec_exists = self.problems.lock().unwrap().contains_key(&request.problem());
+        if !spec_exists {
+            return Err(anyhow!("unknown problem handle {}", request.problem()));
+        }
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        // attach the spec lookup at dispatch time via the shared map —
+        // the dispatcher needs it, so smuggle the Arc into the message.
+        self.submit_tx
+            .send(Msg::Job(QueuedJob { id, request }, tx))
+            .map_err(|_| anyhow!("server shut down"))?;
+        Ok(JobTicket { id, rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn run(&self, request: JobRequest) -> Result<JobResult> {
+        Ok(self.submit(request)?.wait())
+    }
+
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn spec(&self, h: ProblemHandle) -> Option<Arc<ProblemSpec>> {
+        self.problems.lock().unwrap().get(&h).cloned()
+    }
+}
+
+impl Drop for ChipArrayServer {
+    fn drop(&mut self) {
+        let _ = self.submit_tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_main(
+    rx: mpsc::Receiver<Msg>,
+    worker_txs: Vec<mpsc::Sender<WorkerMsg>>,
+    mut batcher: Batcher,
+    window: Duration,
+    stats: Arc<ServerStats>,
+    problems: Arc<Mutex<HashMap<ProblemHandle, Arc<ProblemSpec>>>>,
+) {
+    let n = worker_txs.len();
+    let mut router = Router::new(n);
+    let mut replies: HashMap<JobId, (mpsc::Sender<JobResult>, Instant)> = HashMap::new();
+    let mut shutting_down = false;
+    loop {
+        let msg = if shutting_down || !batcher.is_empty() {
+            match rx.recv_timeout(window) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        };
+        // Drain everything immediately available before dispatching so
+        // bursts of same-problem jobs coalesce into real batches instead
+        // of head-of-line singletons (EXPERIMENTS.md §Perf: this took
+        // the serving demo from 96 batches to ~12 for 96 jobs).
+        let mut pending = msg;
+        loop {
+            match pending {
+                Some(Msg::Job(job, reply)) => {
+                    replies.insert(job.id, (reply.clone(), Instant::now()));
+                    if let Err(job) = batcher.push(job) {
+                        // queue full: fail fast (backpressure to client)
+                        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                        replies.remove(&job.id);
+                        let _ = reply.send(JobResult::Failed("queue full".into()));
+                    }
+                }
+                Some(Msg::Done(w)) => router.complete(w),
+                Some(Msg::Shutdown) => shutting_down = true,
+                None => break,
+            }
+            pending = rx.try_recv().ok();
+        }
+        // dispatch while some die is idle and work is queued
+        loop {
+            let idle = (0..n).find(|&w| router.load(w) == 0);
+            let (Some(_), false) = (idle, batcher.is_empty()) else { break };
+            let Some(batch) = batcher.pop_batch() else { break };
+            let spec = problems.lock().unwrap().get(&batch.problem).cloned();
+            let Some(spec) = spec else {
+                for j in &batch.jobs {
+                    if let Some((tx, _)) = replies.remove(&j.id) {
+                        let _ = tx.send(JobResult::Failed("problem vanished".into()));
+                    }
+                }
+                continue;
+            };
+            let (w, needs_program) = router.route(batch.problem);
+            if needs_program {
+                stats.reprograms.fetch_add(1, Ordering::Relaxed);
+            }
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            let mut rs = Vec::with_capacity(batch.jobs.len());
+            let mut ts = Vec::with_capacity(batch.jobs.len());
+            for j in &batch.jobs {
+                let (tx, t0) = replies.remove(&j.id).expect("reply registered");
+                rs.push(tx);
+                ts.push(t0);
+            }
+            let _ = worker_txs[w].send(WorkerMsg::Run {
+                batch,
+                spec,
+                needs_program,
+                replies: rs,
+                submitted: ts,
+            });
+        }
+        if shutting_down && batcher.is_empty() && (0..n).all(|w| router.load(w) == 0) {
+            break;
+        }
+    }
+    for tx in &worker_txs {
+        let _ = tx.send(WorkerMsg::Shutdown);
+    }
+}
+
+fn worker_main(
+    k: usize,
+    seed: u64,
+    mcfg: MismatchConfig,
+    engine: EngineKind,
+    rx: mpsc::Receiver<WorkerMsg>,
+    done_tx: mpsc::SyncSender<Msg>,
+    stats: Arc<ServerStats>,
+) {
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, seed, mcfg);
+    match engine {
+        EngineKind::Software => {
+            let chip = Hw::new(SoftwareSampler::new(32, seed), personality);
+            worker_loop(k, chip, rx, done_tx, stats);
+        }
+        EngineKind::Xla { artifacts_dir } => {
+            // PJRT handles are not Send: build the client inside the thread.
+            let rt = crate::runtime::Runtime::cpu().expect("pjrt client");
+            let set = crate::runtime::ArtifactSet::load_some(
+                &rt,
+                &artifacts_dir,
+                &["gibbs_b32", "gibbs_b8", "gibbs_b1"],
+            )
+            .expect("compile artifacts");
+            let engine = XlaSampler::new(&set, 32, seed).expect("xla sampler");
+            let chip = Hw::new(engine, personality);
+            worker_loop(k, chip, rx, done_tx, stats);
+        }
+    }
+}
+
+fn worker_loop<C: TrainableChip>(
+    k: usize,
+    mut chip: C,
+    rx: mpsc::Receiver<WorkerMsg>,
+    done_tx: mpsc::SyncSender<Msg>,
+    stats: Arc<ServerStats>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Shutdown => break,
+            WorkerMsg::Run { batch, spec, needs_program, replies, submitted } => {
+                if needs_program {
+                    if let Err(e) = chip.program_codes(&spec.codes) {
+                        for tx in &replies {
+                            let _ = tx.send(JobResult::Failed(format!("program: {e}")));
+                        }
+                        let _ = done_tx.send(Msg::Done(k));
+                        continue;
+                    }
+                }
+                run_batch(k, &mut chip, &batch, &spec, replies, submitted, &stats);
+                let _ = done_tx.send(Msg::Done(k));
+            }
+        }
+    }
+}
+
+fn run_batch<C: TrainableChip>(
+    k: usize,
+    chip: &mut C,
+    batch: &Batch,
+    spec: &ProblemSpec,
+    replies: Vec<mpsc::Sender<JobResult>>,
+    submitted: Vec<Instant>,
+    stats: &ServerStats,
+) {
+    use crate::chip::SAMPLE_TIME_NS;
+    // group jobs with identical (beta, sweeps) into one engine run
+    let mut groups: HashMap<(u64, usize), Vec<usize>> = HashMap::new();
+    for (idx, j) in batch.jobs.iter().enumerate() {
+        match j.request {
+            JobRequest::Sample { beta, sweeps, .. } => {
+                groups.entry((beta.to_bits(), sweeps)).or_default().push(idx);
+            }
+            JobRequest::Anneal { .. } => {
+                groups.entry((f64::NAN.to_bits(), usize::MAX)).or_default().push(idx);
+            }
+        }
+    }
+    for ((beta_bits, sweeps), idxs) in groups {
+        if sweeps == usize::MAX {
+            // anneal jobs: run each alone on the whole die
+            for &idx in &idxs {
+                let JobRequest::Anneal { params, .. } = batch.jobs[idx].request else { continue };
+                chip.set_clamps(&[]);
+                chip.randomize(0xA11EA ^ batch.jobs[idx].id);
+                let t0 = submitted[idx];
+                let result = annealing::anneal(chip, &spec.problem, &params, spec.scale);
+                let msg = match result {
+                    Ok((trace, best)) => {
+                        let (be, bs) = best
+                            .into_iter()
+                            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                            .unwrap_or((f64::INFINITY, Vec::new()));
+                        JobResult::Annealed {
+                            best_energy: be,
+                            best_state: bs,
+                            trace: trace.rows.clone(),
+                            chip: k,
+                            latency: t0.elapsed(),
+                        }
+                    }
+                    Err(e) => JobResult::Failed(format!("anneal: {e}")),
+                };
+                stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .total_latency_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                let n_sweeps = params.steps as u64 * params.sweeps_per_step as u64;
+                stats
+                    .chip_time_ns
+                    .fetch_add((n_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
+                let _ = replies[idx].send(msg);
+            }
+            continue;
+        }
+        let beta = f64::from_bits(beta_bits);
+        chip.set_clamps(&[]);
+        chip.set_beta((beta * spec.scale) as f32);
+        if let Err(e) = chip.sweeps(sweeps) {
+            for &idx in &idxs {
+                let _ = replies[idx].send(JobResult::Failed(format!("sweeps: {e}")));
+                stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            }
+            continue;
+        }
+        let states = chip.states();
+        let mut cursor = 0usize;
+        for &idx in &idxs {
+            let JobRequest::Sample { chains, .. } = batch.jobs[idx].request else { continue };
+            let chains = chains.max(1);
+            let mut job_states = Vec::with_capacity(chains);
+            for c in 0..chains {
+                job_states.push(states[(cursor + c) % states.len()].clone());
+            }
+            cursor += chains;
+            let energies: Vec<f64> =
+                job_states.iter().map(|s| spec.problem.energy(s)).collect();
+            let lat = submitted[idx].elapsed();
+            stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            stats.total_latency_us.fetch_add(lat.as_micros() as u64, Ordering::Relaxed);
+            stats
+                .chip_time_ns
+                .fetch_add((sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
+            let _ = replies[idx].send(JobResult::Samples {
+                states: job_states,
+                energies,
+                chip: k,
+                chip_time_ns: sweeps as f64 * SAMPLE_TIME_NS,
+                latency: lat,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::sk;
+
+    fn server(chips: usize) -> (ChipArrayServer, ProblemHandle) {
+        let mut cfg = Config::default();
+        cfg.server.chips = chips;
+        cfg.server.queue_depth = 64;
+        let srv = ChipArrayServer::start(&cfg, EngineKind::Software).unwrap();
+        let topo = Topology::new();
+        let h = srv.register_problem(sk::chimera_pm_j(&topo, 4)).unwrap();
+        (srv, h)
+    }
+
+    #[test]
+    fn sample_job_roundtrip() {
+        let (srv, h) = server(2);
+        let res = srv
+            .run(JobRequest::Sample { problem: h, sweeps: 8, beta: 1.0, chains: 4 })
+            .unwrap();
+        match res {
+            JobResult::Samples { states, energies, .. } => {
+                assert_eq!(states.len(), 4);
+                assert_eq!(energies.len(), 4);
+                assert!(states[0].iter().all(|&s| s == 1 || s == -1));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_problem_rejected() {
+        let (srv, _) = server(1);
+        assert!(srv
+            .submit(JobRequest::Sample { problem: 999, sweeps: 1, beta: 1.0, chains: 1 })
+            .is_err());
+    }
+
+    #[test]
+    fn many_jobs_all_complete() {
+        let (srv, h) = server(3);
+        let tickets: Vec<_> = (0..24)
+            .map(|_| {
+                srv.submit(JobRequest::Sample { problem: h, sweeps: 4, beta: 1.0, chains: 2 })
+                    .unwrap()
+            })
+            .collect();
+        let mut ok = 0;
+        for t in tickets {
+            if let JobResult::Samples { .. } = t.wait() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 24);
+        assert!(srv.stats().batches.load(Ordering::Relaxed) <= 24);
+    }
+
+    #[test]
+    fn anneal_job_roundtrip() {
+        let (srv, h) = server(1);
+        let params = crate::annealing::AnnealParams {
+            steps: 8,
+            sweeps_per_step: 2,
+            ..Default::default()
+        };
+        match srv.run(JobRequest::Anneal { problem: h, params }).unwrap() {
+            JobResult::Annealed { best_energy, trace, best_state, .. } => {
+                assert!(best_energy.is_finite());
+                assert_eq!(trace.len(), 8);
+                assert_eq!(best_state.len(), crate::N_SPINS);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn affinity_avoids_reprogramming() {
+        let (srv, h) = server(1);
+        for _ in 0..6 {
+            srv.run(JobRequest::Sample { problem: h, sweeps: 2, beta: 1.0, chains: 1 }).unwrap();
+        }
+        let re = srv.stats().reprograms.load(Ordering::Relaxed);
+        assert_eq!(re, 1, "one problem on one die should program once, got {re}");
+    }
+}

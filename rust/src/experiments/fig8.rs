@@ -1,0 +1,201 @@
+//! Fig 8a — per-p-bit tanh transfer curves and chip variability measured
+//! exactly the way the authors did: sweep the bias DAC code, average the
+//! spin, fit the resulting tanh.
+//!
+//! Fig 8b — the full-adder distribution during learning (same machinery
+//! as Fig 7 on the 5-visible adder layout).
+
+use anyhow::Result;
+
+use crate::chimera::full_adder_layout;
+use crate::config::MismatchConfig;
+use crate::learning::dataset;
+use crate::learning::TrainableChip;
+use crate::util::bench::write_csv;
+
+use super::fig7::{fig7_gate_learning, GateExperiment, GateReport};
+
+/// Fig 8a output.
+#[derive(Debug, Clone)]
+pub struct BiasSweepReport {
+    /// Bias codes swept.
+    pub codes: Vec<i8>,
+    /// `[pbit][code]` measured ⟨m⟩.
+    pub mean_spin: Vec<Vec<f64>>,
+    /// Per-p-bit fitted slope (β·g_i, from the steepest-point secant).
+    pub slopes: Vec<f64>,
+    /// Per-p-bit fitted offset (code where ⟨m⟩ crosses 0).
+    pub offsets: Vec<f64>,
+    /// Relative slope spread (σ/μ) — the paper's variability number.
+    pub slope_cv: f64,
+    pub offset_sd_codes: f64,
+}
+
+/// Sweep the bias DAC of `pbits` and measure ⟨m⟩ (Fig 8a).
+pub fn fig8a_bias_sweep<C: TrainableChip>(
+    chip: &mut C,
+    pbits: &[usize],
+    codes: &[i8],
+    samples_per_point: usize,
+    beta: f64,
+    csv_name: Option<&str>,
+) -> Result<BiasSweepReport> {
+    let topo = crate::chimera::Topology::new();
+    let ne = topo.edges.len();
+    chip.set_beta(beta as f32);
+    let mut mean_spin = vec![vec![0.0f64; codes.len()]; pbits.len()];
+    for (ci, &code) in codes.iter().enumerate() {
+        // program the swept bias on all observed p-bits at once — they
+        // are chosen non-interacting (no couplers enabled).
+        let mut w = crate::analog::ProgrammedWeights::zeros(ne);
+        for &p in pbits {
+            w.h_codes[p] = code;
+        }
+        chip.program_codes(&w)?;
+        chip.sweeps(8)?; // thermalize
+        let mut acc = vec![0.0f64; pbits.len()];
+        let mut n = 0usize;
+        while n * chip.batch() < samples_per_point {
+            chip.sweeps(1)?;
+            for st in chip.states() {
+                for (k, &p) in pbits.iter().enumerate() {
+                    acc[k] += st[p] as f64;
+                }
+            }
+            n += 1;
+        }
+        for (k, a) in acc.iter().enumerate() {
+            mean_spin[k][ci] = a / (n * chip.batch()) as f64;
+        }
+    }
+    // fit slope & offset per p-bit
+    let mut slopes = Vec::with_capacity(pbits.len());
+    let mut offsets = Vec::with_capacity(pbits.len());
+    for curve in &mean_spin {
+        let (slope, offset) = fit_tanh(codes, curve);
+        slopes.push(slope);
+        offsets.push(offset);
+    }
+    let mu = slopes.iter().sum::<f64>() / slopes.len() as f64;
+    let sd =
+        (slopes.iter().map(|s| (s - mu).powi(2)).sum::<f64>() / slopes.len() as f64).sqrt();
+    let omu = offsets.iter().sum::<f64>() / offsets.len() as f64;
+    let osd =
+        (offsets.iter().map(|o| (o - omu).powi(2)).sum::<f64>() / offsets.len() as f64).sqrt();
+    if let Some(name) = csv_name {
+        let mut rows = Vec::new();
+        for (ci, &code) in codes.iter().enumerate() {
+            let mut row = vec![code as f64];
+            for curve in &mean_spin {
+                row.push(curve[ci]);
+            }
+            rows.push(row);
+        }
+        let header = std::iter::once("code".to_string())
+            .chain(pbits.iter().map(|p| format!("pbit{p}")))
+            .collect::<Vec<_>>()
+            .join(",");
+        write_csv(name, &header, &rows)?;
+    }
+    Ok(BiasSweepReport {
+        codes: codes.to_vec(),
+        mean_spin,
+        slopes,
+        offsets,
+        slope_cv: sd / mu.abs().max(1e-12),
+        offset_sd_codes: osd,
+    })
+}
+
+/// tanh fit by linearization: atanh(⟨m⟩) = slope·(code/127) + b, solved
+/// by least squares over the unsaturated points (|⟨m⟩| < 0.95, which
+/// de-weights the noisy tails); offset is the zero-crossing in codes.
+fn fit_tanh(codes: &[i8], curve: &[f64]) -> (f64, f64) {
+    let (mut sx, mut sy, mut sxx, mut sxy, mut n) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    for (i, &c) in codes.iter().enumerate() {
+        let y = curve[i];
+        if y.abs() >= 0.95 {
+            continue;
+        }
+        let x = c as f64 / 127.0;
+        let z = y.atanh();
+        sx += x;
+        sy += z;
+        sxx += x * x;
+        sxy += x * z;
+        n += 1.0;
+    }
+    if n < 3.0 {
+        // fully saturated curve (very steep tanh): report a floor fit
+        return (f64::INFINITY, 0.0);
+    }
+    let denom = (n * sxx - sx * sx).max(1e-12);
+    let slope = (n * sxy - sx * sy) / denom;
+    let intercept = (sy - slope * sx) / n;
+    let offset_codes = -intercept / slope.max(1e-12) * 127.0;
+    (slope, offset_codes)
+}
+
+/// Fig 8b: full-adder learning = the Fig 7 machinery on the adder layout.
+pub fn fig8b_adder_learning<C: TrainableChip>(
+    params: crate::learning::CdParams,
+    mismatch: MismatchConfig,
+    chip: &mut C,
+    snapshot_epochs: Vec<usize>,
+    eval_samples: usize,
+    csv_name: Option<&str>,
+) -> Result<GateReport> {
+    let exp = GateExperiment {
+        layout: full_adder_layout(0, 1),
+        dataset: dataset::full_adder(),
+        params,
+        mismatch,
+        chip_seed: 0,
+        snapshot_epochs,
+        eval_samples,
+    };
+    fig7_gate_learning(&exp, chip, csv_name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::{ideal_chip, software_chip};
+
+    #[test]
+    fn ideal_chip_sweep_matches_theory() {
+        let mut chip = ideal_chip(1, 8);
+        let codes: Vec<i8> = (-120..=120).step_by(24).map(|c| c as i8).collect();
+        let r = fig8a_bias_sweep(&mut chip, &[0, 100], &codes, 1200, 1.0, None).unwrap();
+        // ⟨m⟩ = tanh(β h) with h = code/127
+        for curve in &r.mean_spin {
+            for (ci, &code) in codes.iter().enumerate() {
+                let want = ((code as f64 / 127.0) as f64).tanh();
+                assert!(
+                    (curve[ci] - want).abs() < 0.08,
+                    "code {code}: {} vs {want}",
+                    curve[ci]
+                );
+            }
+        }
+        // ideal chip: slopes essentially identical
+        assert!(r.slope_cv < 0.08, "ideal slope CV {}", r.slope_cv);
+    }
+
+    #[test]
+    fn mismatched_chip_shows_spread() {
+        let cfg = MismatchConfig { sigma_beta: 0.2, sigma_obeta: 0.1, ..Default::default() };
+        let mut chip = software_chip(3, cfg, 8);
+        let codes: Vec<i8> = (-120..=120).step_by(30).map(|c| c as i8).collect();
+        let pbits: Vec<usize> = (0..16).map(|k| k * 16).collect();
+        let r = fig8a_bias_sweep(&mut chip, &pbits, &codes, 600, 1.0, None).unwrap();
+        let mut ideal = ideal_chip(4, 8);
+        let ri = fig8a_bias_sweep(&mut ideal, &pbits, &codes, 600, 1.0, None).unwrap();
+        assert!(
+            r.slope_cv > 2.0 * ri.slope_cv,
+            "mismatched CV {} vs ideal {}",
+            r.slope_cv,
+            ri.slope_cv
+        );
+    }
+}

@@ -1,0 +1,214 @@
+//! Fig 9a — simulated annealing of a 440-spin Chimera spin glass
+//! (energy falls as V_temp ramps); Fig 9b — Max-Cut on the chip vs
+//! greedy / exact baselines.
+
+use anyhow::Result;
+
+use crate::annealing::{anneal, AnnealParams, BetaSchedule};
+use crate::chimera::Topology;
+use crate::learning::TrainableChip;
+use crate::metrics::EnergyTrace;
+use crate::problems::{maxcut::Graph, sk, IsingProblem};
+use crate::util::bench::write_csv;
+
+/// Fig 9a output.
+#[derive(Debug, Clone)]
+pub struct SkAnnealReport {
+    pub trace: EnergyTrace,
+    pub best_energy: f64,
+    /// Energy of the all-up state (the "random start" reference level).
+    pub initial_energy_scale: f64,
+    /// For ±J glasses: −n_edges is a lower bound on the energy.
+    pub energy_lower_bound: f64,
+}
+
+/// Run the Fig 9a experiment on the given chip.
+pub fn fig9a_sk_anneal<C: TrainableChip>(
+    chip: &mut C,
+    seed: u64,
+    params: &AnnealParams,
+    csv_name: Option<&str>,
+) -> Result<SkAnnealReport> {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, seed);
+    let (j, en, h, scale) = problem.to_codes(&topo)?;
+    chip.program_codes(&crate::analog::ProgrammedWeights {
+        j_codes: j,
+        enables: en,
+        h_codes: h,
+    })?;
+    chip.randomize(seed ^ 0xA55A);
+    let (trace, best) = anneal(chip, &problem, params, scale)?;
+    let best_energy =
+        best.iter().map(|(e, _)| *e).fold(f64::INFINITY, f64::min);
+    if let Some(name) = csv_name {
+        write_csv(name, "sweep,beta,mean_energy,min_energy", &trace.csv_rows())?;
+    }
+    Ok(SkAnnealReport {
+        best_energy,
+        initial_energy_scale: 0.0,
+        energy_lower_bound: -(topo.edges.len() as f64),
+        trace,
+    })
+}
+
+/// Fig 9b output.
+#[derive(Debug, Clone)]
+pub struct MaxCutReport {
+    /// (sweep, best cut so far) series for the chip.
+    pub chip_cut_trace: Vec<(u64, f64)>,
+    pub chip_best_cut: f64,
+    pub greedy_cut: f64,
+    /// Exact optimum when the instance is small enough.
+    pub exact_cut: Option<f64>,
+    pub total_weight: f64,
+    pub n_edges: usize,
+}
+
+/// Run Max-Cut on a native-Chimera instance (the hardware-realistic
+/// workload) and compare against baselines.
+pub fn fig9b_maxcut<C: TrainableChip>(
+    chip: &mut C,
+    graph: &Graph,
+    problem: &IsingProblem,
+    params: &AnnealParams,
+    unembed: Option<&crate::chimera::Embedding>,
+    csv_name: Option<&str>,
+) -> Result<MaxCutReport> {
+    let topo = Topology::new();
+    let (j, en, h, scale) = problem.to_codes(&topo)?;
+    chip.program_codes(&crate::analog::ProgrammedWeights {
+        j_codes: j,
+        enables: en,
+        h_codes: h,
+    })?;
+    chip.randomize(0xCA7);
+
+    // annealing loop with cut tracking
+    let mut best_cut = 0.0f64;
+    let mut trace = Vec::new();
+    let mut sweeps_done = 0u64;
+    for k in 0..params.steps {
+        let beta_logical = params.schedule.beta_at(k, params.steps);
+        chip.set_beta((beta_logical * scale) as f32);
+        chip.sweeps(params.sweeps_per_step)?;
+        sweeps_done += params.sweeps_per_step as u64;
+        for st in chip.states() {
+            let cut = match unembed {
+                Some(emb) => {
+                    let logical = emb.unembed(&st);
+                    graph.cut_value(&logical)
+                }
+                None => graph.cut_value(&st),
+            };
+            best_cut = best_cut.max(cut);
+        }
+        trace.push((sweeps_done, best_cut));
+    }
+
+    let (greedy_cut, _) = graph.greedy_baseline(50, 99);
+    let exact_cut = if graph.n <= 20 { Some(graph.exact_max_cut()?) } else { None };
+    if let Some(name) = csv_name {
+        let rows: Vec<Vec<f64>> =
+            trace.iter().map(|&(s, c)| vec![s as f64, c, greedy_cut]).collect();
+        write_csv(name, "sweep,chip_best_cut,greedy_cut", &rows)?;
+    }
+    Ok(MaxCutReport {
+        chip_cut_trace: trace,
+        chip_best_cut: best_cut,
+        greedy_cut,
+        exact_cut,
+        total_weight: graph.total_weight(),
+        n_edges: graph.edges.len(),
+    })
+}
+
+/// Default Fig 9a schedule (geometric V_temp ramp).
+pub fn default_sk_params() -> AnnealParams {
+    AnnealParams {
+        schedule: BetaSchedule::Geometric { b0: 0.08, b1: 4.0 },
+        steps: 96,
+        sweeps_per_step: 8,
+        record_every: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::software_chip;
+    use crate::config::MismatchConfig;
+
+    #[test]
+    fn sk_anneal_reaches_low_energy() {
+        let mut chip = software_chip(2, MismatchConfig::default(), 8);
+        let params = AnnealParams {
+            schedule: BetaSchedule::Geometric { b0: 0.1, b1: 4.0 },
+            steps: 32,
+            sweeps_per_step: 4,
+            record_every: 4,
+        };
+        let r = fig9a_sk_anneal(&mut chip, 5, &params, None).unwrap();
+        // a short anneal on a ±J Chimera glass should already reach
+        // below 55% of the (loose) lower bound on a mismatched die;
+        // the fig9a bench runs the full-budget version
+        assert!(
+            r.best_energy < 0.55 * r.energy_lower_bound.abs() * -1.0,
+            "best {} vs bound {}",
+            r.best_energy,
+            r.energy_lower_bound
+        );
+        // energy must decrease along the anneal
+        let first = r.trace.rows.first().unwrap().2;
+        let last = r.trace.rows.last().unwrap().2;
+        assert!(last < first);
+    }
+
+    #[test]
+    fn maxcut_native_beats_half_weight() {
+        let topo = Topology::new();
+        let g = Graph::chimera_native(&topo, 0.6, 3);
+        let p = g.to_ising_native(&topo).unwrap();
+        let mut chip = software_chip(4, MismatchConfig::default(), 8);
+        let params = AnnealParams {
+            schedule: BetaSchedule::Geometric { b0: 0.2, b1: 3.0 },
+            steps: 24,
+            sweeps_per_step: 4,
+            record_every: 1,
+        };
+        let r = fig9b_maxcut(&mut chip, &g, &p, &params, None, None).unwrap();
+        // random cut expects W/2; the chip must clearly beat it
+        assert!(
+            r.chip_best_cut > 0.6 * r.total_weight,
+            "cut {} of W={}",
+            r.chip_best_cut,
+            r.total_weight
+        );
+        // trace is monotone
+        for w in 1..r.chip_cut_trace.len() {
+            assert!(r.chip_cut_trace[w].1 >= r.chip_cut_trace[w - 1].1);
+        }
+    }
+
+    #[test]
+    fn maxcut_embedded_k8_near_exact() {
+        let topo = Topology::new();
+        let g = Graph::random(8, 0.8, 11);
+        let emb = crate::chimera::Embedding::clique(&topo, 2, 1.5).unwrap();
+        let p = g.to_ising_embedded(&topo, &emb).unwrap();
+        let mut chip = software_chip(6, MismatchConfig::default(), 8);
+        let params = AnnealParams {
+            schedule: BetaSchedule::Geometric { b0: 0.2, b1: 4.0 },
+            steps: 32,
+            sweeps_per_step: 4,
+            record_every: 1,
+        };
+        let r = fig9b_maxcut(&mut chip, &g, &p, &params, Some(&emb), None).unwrap();
+        let exact = r.exact_cut.unwrap();
+        assert!(
+            r.chip_best_cut >= 0.85 * exact,
+            "embedded cut {} vs exact {exact}",
+            r.chip_best_cut
+        );
+    }
+}

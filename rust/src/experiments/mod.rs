@@ -1,0 +1,49 @@
+//! Paper-evaluation experiments, one function per table/figure.
+//!
+//! Examples, benches and the CLI all call into here so every artifact is
+//! regenerated from a single implementation:
+//!
+//! | paper artifact | function |
+//! |---|---|
+//! | Fig 7b/7c AND-gate CD learning | [`fig7_gate_learning`] |
+//! | Fig 8a bias-sweep variability | [`fig8a_bias_sweep`] |
+//! | Fig 8b full-adder distribution | [`fig8b_adder_learning`] |
+//! | Fig 9a SK-glass annealing | [`fig9a_sk_anneal`] |
+//! | Fig 9b Max-Cut | [`fig9b_maxcut`] |
+//! | Table 1 TTS / throughput | [`table1_tts`] |
+
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+pub use fig7::{fig7_gate_learning, GateExperiment, GateReport};
+pub use fig8::{fig8a_bias_sweep, fig8b_adder_learning, BiasSweepReport};
+pub use fig9::{fig9a_sk_anneal, fig9b_maxcut, MaxCutReport, SkAnnealReport};
+pub use table1::{table1_tts, Table1Report};
+
+use crate::config::MismatchConfig;
+use crate::learning::Hw;
+use crate::sampler::SoftwareSampler;
+
+/// Which engine an experiment drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-rust CSR sampler (fast default).
+    Software,
+    /// AOT PJRT path (requires `make artifacts`).
+    Xla,
+}
+
+/// Build a software-engine chip with the given mismatch corner.
+pub fn software_chip(seed: u64, cfg: MismatchConfig, batch: usize) -> Hw<SoftwareSampler> {
+    let topo = crate::chimera::Topology::new();
+    let personality = crate::analog::Personality::sample(&topo, seed, cfg);
+    Hw::new(SoftwareSampler::new(batch, seed), personality)
+}
+
+/// Build an ideal (mismatch-free) software chip.
+pub fn ideal_chip(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
+    let topo = crate::chimera::Topology::new();
+    Hw::new(SoftwareSampler::new(batch, seed), crate::analog::Personality::ideal(&topo))
+}

@@ -1,0 +1,227 @@
+//! On-chip mismatch extraction (the paper's Fig 8a protocol: "The
+//! average value of the spins should produce a tanh function when the
+//! bias is swept. We utilized this to calculate the mismatch on-chip").
+//!
+//! Sweep each p-bit's bias DAC with all couplers disabled, average the
+//! spin, and fit ⟨m⟩ = tanh(β·ĝ·(code/127) + ô): the fitted ĝ, ô are
+//! direct estimates of the WTA slope and input-referred offset of that
+//! p-bit — without any access to the die's internals. The estimates can
+//! seed compensation (pre-distorted codes) or simply quantify a die
+//! before deployment.
+
+use anyhow::Result;
+
+use crate::analog::{Personality, ProgrammedWeights};
+use crate::chimera::N_SPINS;
+
+use super::TrainableChip;
+
+/// Per-p-bit mismatch estimates from the bias-sweep protocol.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    /// p-bits measured.
+    pub pbits: Vec<usize>,
+    /// Estimated tanh slope multiplier ĝ (nominal 1).
+    pub g_hat: Vec<f64>,
+    /// Estimated input-referred offset ô (nominal 0, in current units).
+    pub o_hat: Vec<f64>,
+}
+
+impl CalibrationReport {
+    /// Compare against the true personality (only possible in
+    /// simulation — on silicon this is the whole point of calibrating).
+    pub fn errors_vs(&self, p: &Personality) -> (f64, f64) {
+        let mut ge = 0.0;
+        let mut oe = 0.0;
+        for (k, &i) in self.pbits.iter().enumerate() {
+            ge += (self.g_hat[k] - p.spins[i].wta.slope).abs();
+            oe += (self.o_hat[k] - p.spins[i].wta.offset).abs();
+        }
+        (ge / self.pbits.len() as f64, oe / self.pbits.len() as f64)
+    }
+}
+
+/// Run the calibration sweep on `pbits` at unit β.
+///
+/// `samples_per_point` trades time for estimate variance: the slope
+/// estimate's σ scales as ~1/√samples.
+pub fn calibrate<C: TrainableChip>(
+    chip: &mut C,
+    pbits: &[usize],
+    codes: &[i8],
+    samples_per_point: usize,
+) -> Result<CalibrationReport> {
+    let topo = crate::chimera::Topology::new();
+    chip.set_beta(1.0);
+    chip.set_clamps(&[]);
+    let mut curves = vec![vec![0.0f64; codes.len()]; pbits.len()];
+    for (ci, &code) in codes.iter().enumerate() {
+        let mut w = ProgrammedWeights::zeros(topo.edges.len());
+        for &p in pbits {
+            w.h_codes[p] = code;
+        }
+        chip.program_codes(&w)?;
+        chip.sweeps(8)?;
+        let mut n = 0usize;
+        while n * chip.batch() < samples_per_point {
+            chip.sweeps(1)?;
+            for st in chip.states() {
+                for (k, &p) in pbits.iter().enumerate() {
+                    curves[k][ci] += st[p] as f64;
+                }
+            }
+            n += 1;
+        }
+        for curve in curves.iter_mut() {
+            curve[ci] /= (n * chip.batch()) as f64;
+        }
+    }
+    // atanh-linearized least squares: atanh(⟨m⟩) = ĝ·x + ô, x = code/127.
+    // NOTE: the bias code itself passes through that p-bit's bias DAC
+    // (gain error g_bias), so ĝ estimates the *product* g_beta·g_bias —
+    // exactly the lumped quantity that matters for compensation.
+    let mut g_hat = Vec::with_capacity(pbits.len());
+    let mut o_hat = Vec::with_capacity(pbits.len());
+    for curve in &curves {
+        let (mut sx, mut sy, mut sxx, mut sxy, mut n) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for (ci, &code) in codes.iter().enumerate() {
+            let y = curve[ci];
+            if y.abs() >= 0.95 {
+                continue;
+            }
+            let x = code as f64 / 127.0;
+            let z = y.atanh();
+            sx += x;
+            sy += z;
+            sxx += x * x;
+            sxy += x * z;
+            n += 1.0;
+        }
+        if n < 3.0 {
+            g_hat.push(f64::NAN);
+            o_hat.push(f64::NAN);
+            continue;
+        }
+        let denom = (n * sxx - sx * sx).max(1e-12);
+        let a = (n * sxy - sx * sy) / denom;
+        let b = (sy - a * sx) / n;
+        g_hat.push(a);
+        o_hat.push(b);
+    }
+    Ok(CalibrationReport { pbits: pbits.to_vec(), g_hat, o_hat })
+}
+
+/// Pre-distort bias codes through calibration estimates: to realize an
+/// intended logical bias `h` on p-bit `i`, program `h/ĝ_i − ô_i/ĝ_i`.
+/// Returns compensated codes clipped to the 8-bit range.
+pub fn compensate_biases(report: &CalibrationReport, intended: &[(usize, f64)]) -> Vec<(usize, i8)> {
+    intended
+        .iter()
+        .map(|&(i, h)| {
+            let k = report.pbits.iter().position(|&p| p == i).expect("p-bit was calibrated");
+            let (g, o) = (report.g_hat[k], report.o_hat[k]);
+            let code = ((h - o) / g.max(1e-6) * 127.0).round().clamp(-127.0, 127.0) as i8;
+            (i, code)
+        })
+        .collect()
+}
+
+/// Calibrate every p-bit on the die (batch sweep, all at once — they
+/// are isolated with couplers disabled).
+pub fn calibrate_full_die<C: TrainableChip>(
+    chip: &mut C,
+    codes: &[i8],
+    samples_per_point: usize,
+) -> Result<CalibrationReport> {
+    let all: Vec<usize> = (0..N_SPINS).collect();
+    calibrate(chip, &all, codes, samples_per_point)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chimera::Topology;
+    use crate::config::MismatchConfig;
+    use crate::learning::Hw;
+    use crate::sampler::{Sampler, SoftwareSampler};
+
+    fn codes() -> Vec<i8> {
+        (-110..=110).step_by(20).map(|c| c as i8).collect()
+    }
+
+    #[test]
+    fn recovers_mismatch_parameters() {
+        let topo = Topology::new();
+        let cfg = MismatchConfig {
+            sigma_beta: 0.15,
+            sigma_obeta: 0.08,
+            ..MismatchConfig::default()
+        };
+        let personality = Personality::sample(&topo, 31, cfg);
+        let mut chip = Hw::new(SoftwareSampler::new(8, 31), personality.clone());
+        let pbits = [0usize, 50, 111, 222, 333];
+        let r = calibrate(&mut chip, &pbits, &codes(), 4000).unwrap();
+        for (k, &i) in pbits.iter().enumerate() {
+            // ĝ estimates g_beta·g_bias (lumped); compare against that.
+            let truth = personality.spins[i].wta.slope * personality.spins[i].bias_dac.gain();
+            assert!(
+                (r.g_hat[k] - truth).abs() < 0.12,
+                "p-bit {i}: ĝ {} vs g·g_dac {}",
+                r.g_hat[k],
+                truth
+            );
+            let o_truth = personality.spins[i].wta.offset;
+            assert!(
+                (r.o_hat[k] - o_truth).abs() < 0.08,
+                "p-bit {i}: ô {} vs {}",
+                r.o_hat[k],
+                o_truth
+            );
+        }
+    }
+
+    #[test]
+    fn ideal_die_calibrates_to_nominal() {
+        let topo = Topology::new();
+        let mut chip = Hw::new(SoftwareSampler::new(8, 1), Personality::ideal(&topo));
+        let r = calibrate(&mut chip, &[7, 99], &codes(), 4000).unwrap();
+        for k in 0..2 {
+            assert!((r.g_hat[k] - 1.0).abs() < 0.08, "ĝ {}", r.g_hat[k]);
+            assert!(r.o_hat[k].abs() < 0.04, "ô {}", r.o_hat[k]);
+        }
+        let (ge, oe) = r.errors_vs(&Personality::ideal(&topo));
+        assert!(ge < 0.08 && oe < 0.04);
+    }
+
+    #[test]
+    fn compensation_straightens_the_response() {
+        // After compensation, programming an intended bias of 0.4 on a
+        // mismatched p-bit yields ⟨m⟩ close to tanh(0.4).
+        let topo = Topology::new();
+        let cfg = MismatchConfig { sigma_beta: 0.2, sigma_obeta: 0.1, ..Default::default() };
+        let personality = Personality::sample(&topo, 77, cfg);
+        let mut chip = Hw::new(SoftwareSampler::new(8, 77), personality);
+        let pbits = [123usize];
+        let r = calibrate(&mut chip, &pbits, &codes(), 5000).unwrap();
+        let comp = compensate_biases(&r, &[(123, 0.4)]);
+        let mut w = ProgrammedWeights::zeros(topo.edges.len());
+        for &(i, c) in &comp {
+            w.h_codes[i] = c;
+        }
+        chip.program_codes(&w).unwrap();
+        chip.set_beta(1.0);
+        chip.sweeps(16).unwrap();
+        let mut acc = 0.0;
+        let mut n = 0;
+        for _ in 0..600 {
+            chip.sweeps(1).unwrap();
+            for st in chip.states() {
+                acc += st[123] as f64;
+                n += 1;
+            }
+        }
+        let got = acc / n as f64;
+        let want = 0.4f64.tanh();
+        assert!((got - want).abs() < 0.08, "compensated ⟨m⟩ {got} vs {want}");
+    }
+}

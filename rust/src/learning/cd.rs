@@ -1,0 +1,323 @@
+//! The contrastive-divergence trainer (Fig 7a).
+//!
+//! Per epoch:
+//! 1. **positive phase** — for each truth-table pattern, clamp the
+//!    layout's visible spins and let the hidden spins thermalize for
+//!    `k_sweeps`; accumulate ⟨m_i m_j⟩ and ⟨m_i⟩ over the gate spins;
+//! 2. **negative phase** — release the clamps and sample freely;
+//!    accumulate the model statistics;
+//! 3. **update** — `w += lr (⟨·⟩_data − ⟨·⟩_model)`, clip to ±1,
+//!    quantize to 8-bit codes, and **program through the hardware**
+//!    (SPI on the cycle-level chip, personality fold for the engines).
+//!
+//! Because both phases run through the same mismatched silicon, the
+//! learned codes compensate the chip's non-idealities — there is no
+//! place where an idealized model enters.
+
+use anyhow::Result;
+
+use crate::analog::ProgrammedWeights;
+use crate::chimera::{GateLayout, Topology};
+use crate::metrics::{kl_divergence, StateHistogram};
+use crate::problems::edge_index;
+
+use super::dataset::Dataset;
+use super::TrainableChip;
+
+/// Trainer hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct CdParams {
+    pub lr: f64,
+    /// Per-epoch multiplicative learning-rate decay (1.0 = constant).
+    pub lr_decay: f64,
+    pub epochs: usize,
+    /// Thermalization sweeps per phase (CD-k).
+    pub k_sweeps: usize,
+    /// Samples collected per pattern per phase.
+    pub samples_per_pattern: usize,
+    /// Training inverse temperature (V_temp during learning).
+    pub beta: f64,
+    /// Clip for the float shadow weights.
+    pub clip: f64,
+}
+
+impl Default for CdParams {
+    fn default() -> Self {
+        Self {
+            lr: 0.08,
+            lr_decay: 0.99,
+            epochs: 150,
+            k_sweeps: 4,
+            samples_per_pattern: 24,
+            beta: 2.0,
+            clip: 1.0,
+        }
+    }
+}
+
+/// Per-epoch observables (the Fig 7b/7c series).
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// KL(target ‖ model) over the visible states.
+    pub kl: f64,
+    /// Mean |⟨mm⟩_data − ⟨mm⟩_model| over learned edges.
+    pub corr_gap: f64,
+    /// Probability mass on valid truth-table states.
+    pub valid_mass: f64,
+}
+
+/// The CD trainer bound to one gate layout on one chip.
+pub struct CdTrainer {
+    pub layout: GateLayout,
+    pub dataset: Dataset,
+    pub params: CdParams,
+    #[allow(dead_code)]
+    topo: Topology,
+    /// Learnable edges: (i, j, canonical edge index).
+    edges: Vec<(usize, usize, usize)>,
+    /// Float shadow weights per learnable edge.
+    w: Vec<f64>,
+    /// Float shadow biases per layout spin.
+    b: Vec<f64>,
+    /// Register image programmed into the chip.
+    pub codes: ProgrammedWeights,
+    /// Epochs completed (drives lr decay).
+    epochs_done: usize,
+}
+
+impl CdTrainer {
+    pub fn new(layout: GateLayout, dataset: Dataset, params: CdParams) -> Self {
+        assert_eq!(layout.n_visible(), dataset.n_visible(), "layout/dataset arity mismatch");
+        let topo = Topology::new();
+        let spins = layout.spins();
+        let mut edges = Vec::new();
+        for (a, &i) in spins.iter().enumerate() {
+            for &j in &spins[a + 1..] {
+                if let Some(e) = edge_index(&topo, i, j) {
+                    edges.push((i.min(j), i.max(j), e));
+                }
+            }
+        }
+        let n_edges_hw = topo.edges.len();
+        let mut codes = ProgrammedWeights::zeros(n_edges_hw);
+        // enable exactly the gate's couplers (everything else leaks only)
+        for &(_, _, e) in &edges {
+            codes.enables[e] = true;
+        }
+        let nb = spins.len();
+        let ne = edges.len();
+        Self {
+            layout,
+            dataset,
+            params,
+            topo,
+            edges,
+            w: vec![0.0; ne],
+            b: vec![0.0; nb],
+            codes,
+            epochs_done: 0,
+        }
+    }
+
+    /// Number of learnable couplers.
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn quantize(&mut self) {
+        for (k, &(_, _, e)) in self.edges.iter().enumerate() {
+            self.codes.j_codes[e] = (self.w[k] * 127.0).round().clamp(-127.0, 127.0) as i8;
+        }
+        for (k, &s) in self.layout.spins().iter().enumerate() {
+            self.codes.h_codes[s] = (self.b[k] * 127.0).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    /// Collect phase statistics: (⟨m_i m_j⟩ per edge, ⟨m_i⟩ per spin).
+    fn phase_stats<C: TrainableChip>(
+        &self,
+        chip: &mut C,
+        clamp: Option<&[i8]>,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let spins = self.layout.spins();
+        let mut c_acc = vec![0.0; self.edges.len()];
+        let mut m_acc = vec![0.0; spins.len()];
+        let mut n = 0usize;
+        match clamp {
+            Some(pattern) => {
+                let clamps: Vec<(usize, i8)> =
+                    self.layout.visible.iter().copied().zip(pattern.iter().copied()).collect();
+                chip.set_clamps(&clamps);
+            }
+            None => chip.set_clamps(&[]),
+        }
+        chip.sweeps(self.params.k_sweeps)?;
+        for _ in 0..self.params.samples_per_pattern {
+            chip.sweeps(1)?;
+            for st in chip.states() {
+                for (k, &(i, j, _)) in self.edges.iter().enumerate() {
+                    c_acc[k] += (st[i] * st[j]) as f64;
+                }
+                for (k, &s) in spins.iter().enumerate() {
+                    m_acc[k] += st[s] as f64;
+                }
+                n += 1;
+            }
+        }
+        let nf = n as f64;
+        Ok((c_acc.iter().map(|x| x / nf).collect(), m_acc.iter().map(|x| x / nf).collect()))
+    }
+
+    /// One CD epoch; returns the correlation gap.
+    pub fn epoch<C: TrainableChip>(&mut self, chip: &mut C) -> Result<f64> {
+        let ne = self.edges.len();
+        let nb = self.layout.spins().len();
+        let mut c_data = vec![0.0; ne];
+        let mut m_data = vec![0.0; nb];
+        // positive phase over all patterns (uniform data distribution)
+        let patterns = self.dataset.patterns.clone();
+        for pattern in &patterns {
+            let (c, m) = self.phase_stats(chip, Some(pattern))?;
+            for k in 0..ne {
+                c_data[k] += c[k] / patterns.len() as f64;
+            }
+            for k in 0..nb {
+                m_data[k] += m[k] / patterns.len() as f64;
+            }
+        }
+        // negative phase
+        let (c_model, m_model) = self.phase_stats(chip, None)?;
+        // update (decayed learning rate settles the quantized codes)
+        let lr = self.params.lr * self.params.lr_decay.powi(self.epochs_done as i32);
+        self.epochs_done += 1;
+        let mut gap = 0.0;
+        for k in 0..ne {
+            let d = c_data[k] - c_model[k];
+            gap += d.abs();
+            self.w[k] = (self.w[k] + lr * d).clamp(-self.params.clip, self.params.clip);
+        }
+        for k in 0..nb {
+            let d = m_data[k] - m_model[k];
+            self.b[k] = (self.b[k] + lr * d).clamp(-self.params.clip, self.params.clip);
+        }
+        self.quantize();
+        chip.program_codes(&self.codes)?;
+        Ok(gap / ne as f64)
+    }
+
+    /// Sample the free-running visible distribution (for Fig 7b / 8b).
+    pub fn visible_histogram<C: TrainableChip>(
+        &self,
+        chip: &mut C,
+        n_samples: usize,
+    ) -> Result<StateHistogram> {
+        chip.set_clamps(&[]);
+        let mut hist = StateHistogram::new(&self.layout.visible);
+        chip.sweeps(self.params.k_sweeps * 4)?;
+        while (hist.total() as usize) < n_samples {
+            chip.sweeps(2)?;
+            for st in chip.states() {
+                hist.record(&st);
+            }
+        }
+        Ok(hist)
+    }
+
+    /// Evaluate: KL(target ‖ model) and valid-state mass.
+    pub fn evaluate<C: TrainableChip>(
+        &self,
+        chip: &mut C,
+        n_samples: usize,
+    ) -> Result<(f64, f64)> {
+        let hist = self.visible_histogram(chip, n_samples)?;
+        let p_model = hist.probabilities();
+        let p_target = self.dataset.target_distribution();
+        let kl = kl_divergence(&p_target, &p_model, 1e-4);
+        let valid: f64 = p_target
+            .iter()
+            .zip(&p_model)
+            .filter(|&(&t, _)| t > 0.0)
+            .map(|(_, &m)| m)
+            .sum();
+        Ok((kl, valid))
+    }
+
+    /// Full training run with per-epoch stats every `eval_every` epochs.
+    pub fn train<C: TrainableChip>(
+        &mut self,
+        chip: &mut C,
+        eval_every: usize,
+        eval_samples: usize,
+    ) -> Result<Vec<EpochStats>> {
+        chip.program_codes(&self.codes)?;
+        chip.set_beta(self.params.beta as f32);
+        let mut stats = Vec::new();
+        for epoch in 0..self.params.epochs {
+            let gap = self.epoch(chip)?;
+            if epoch % eval_every == 0 || epoch == self.params.epochs - 1 {
+                let (kl, valid) = self.evaluate(chip, eval_samples)?;
+                stats.push(EpochStats { epoch, kl, corr_gap: gap, valid_mass: valid });
+            }
+        }
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Personality;
+    use crate::chimera::and_gate_layout;
+    use crate::learning::dataset::and_gate;
+    use crate::learning::Hw;
+    use crate::sampler::SoftwareSampler;
+
+    fn trainer(params: CdParams) -> CdTrainer {
+        CdTrainer::new(and_gate_layout(0, 0), and_gate(), params)
+    }
+
+    #[test]
+    fn learnable_edges_are_the_k34_block() {
+        let t = trainer(CdParams::default());
+        // AND layout: 3 visible (vertical) × 4 hidden (horizontal) = 12
+        assert_eq!(t.n_edges(), 12);
+        assert_eq!(t.codes.enables.iter().filter(|&&e| e).count(), 12);
+    }
+
+    #[test]
+    fn quantize_round_trips() {
+        let mut t = trainer(CdParams::default());
+        t.w[0] = 0.5;
+        t.b[1] = -1.0;
+        t.quantize();
+        let e = t.edges[0].2;
+        assert_eq!(t.codes.j_codes[e], 64);
+        let s = t.layout.spins()[1];
+        assert_eq!(t.codes.h_codes[s], -127);
+    }
+
+    #[test]
+    fn and_gate_learns_on_ideal_chip() {
+        // Small-budget training must already pull valid mass well above
+        // the 0.5 chance level (full convergence is exercised by the
+        // fig7 bench / example with a real budget).
+        let topo = Topology::new();
+        let params = CdParams {
+            epochs: 30,
+            lr: 0.15,
+            lr_decay: 1.0, // short run: keep the rate up
+            k_sweeps: 3,
+            samples_per_pattern: 12,
+            ..CdParams::default()
+        };
+        let mut tr = trainer(params);
+        let engine = SoftwareSampler::new(8, 42);
+        let mut chip = Hw::new(engine, Personality::ideal(&topo));
+        let stats = tr.train(&mut chip, 29, 1500).unwrap();
+        let last = stats.last().unwrap();
+        // 4 valid of 8 states: chance = 0.5; trained should be >0.7
+        assert!(last.valid_mass > 0.7, "valid mass {}", last.valid_mass);
+        assert!(last.kl < 1.2, "kl {}", last.kl);
+    }
+}

@@ -1,0 +1,184 @@
+//! Gate truth tables as spin datasets (false ↦ −1, true ↦ +1).
+
+/// A named dataset of visible patterns, uniformly weighted.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: &'static str,
+    /// Each pattern covers the layout's visible spins in order.
+    pub patterns: Vec<Vec<i8>>,
+}
+
+impl Dataset {
+    /// Target distribution over all 2^k visible states (uniform on the
+    /// valid patterns) in the same bit order as
+    /// [`crate::metrics::StateHistogram`] (bit b set ⇔ visible b = +1).
+    pub fn target_distribution(&self) -> Vec<f64> {
+        let k = self.patterns[0].len();
+        let mut p = vec![0.0; 1 << k];
+        let w = 1.0 / self.patterns.len() as f64;
+        for pat in &self.patterns {
+            let idx =
+                pat.iter().enumerate().fold(0usize, |acc, (b, &v)| acc | (((v > 0) as usize) << b));
+            p[idx] += w;
+        }
+        p
+    }
+
+    pub fn n_visible(&self) -> usize {
+        self.patterns[0].len()
+    }
+}
+
+fn b(x: bool) -> i8 {
+    if x {
+        1
+    } else {
+        -1
+    }
+}
+
+/// AND gate: (A, B, OUT).
+pub fn and_gate() -> Dataset {
+    let patterns = (0..4)
+        .map(|i| {
+            let (a, bb) = (i & 1 == 1, i & 2 == 2);
+            vec![b(a), b(bb), b(a && bb)]
+        })
+        .collect();
+    Dataset { name: "AND", patterns }
+}
+
+/// OR gate: (A, B, OUT).
+pub fn or_gate() -> Dataset {
+    let patterns = (0..4)
+        .map(|i| {
+            let (a, bb) = (i & 1 == 1, i & 2 == 2);
+            vec![b(a), b(bb), b(a || bb)]
+        })
+        .collect();
+    Dataset { name: "OR", patterns }
+}
+
+/// XOR gate: (A, B, OUT) — not linearly separable; needs the hidden
+/// units (a classic stress test for the RBM cell).
+pub fn xor_gate() -> Dataset {
+    let patterns = (0..4)
+        .map(|i| {
+            let (a, bb) = (i & 1 == 1, i & 2 == 2);
+            vec![b(a), b(bb), b(a ^ bb)]
+        })
+        .collect();
+    Dataset { name: "XOR", patterns }
+}
+
+/// NAND gate: (A, B, OUT).
+pub fn nand_gate() -> Dataset {
+    let patterns = (0..4)
+        .map(|i| {
+            let (a, bb) = (i & 1 == 1, i & 2 == 2);
+            vec![b(a), b(bb), b(!(a && bb))]
+        })
+        .collect();
+    Dataset { name: "NAND", patterns }
+}
+
+/// NOR gate: (A, B, OUT).
+pub fn nor_gate() -> Dataset {
+    let patterns = (0..4)
+        .map(|i| {
+            let (a, bb) = (i & 1 == 1, i & 2 == 2);
+            vec![b(a), b(bb), b(!(a || bb))]
+        })
+        .collect();
+    Dataset { name: "NOR", patterns }
+}
+
+/// 3-input majority: (A, B, C, OUT) — 4 visible units; exercises a
+/// 4-visible layout (use the adder layout's first 4 terminals).
+pub fn majority3() -> Dataset {
+    let patterns = (0..8)
+        .map(|i| {
+            let (a, bb, c) = (i & 1 == 1, i & 2 == 2, i & 4 == 4);
+            let maj = (a as u8 + bb as u8 + c as u8) >= 2;
+            vec![b(a), b(bb), b(c), b(maj)]
+        })
+        .collect();
+    Dataset { name: "MAJ3", patterns }
+}
+
+/// Full adder: (A, B, Cin, S, Cout) — the Fig 8b workload.
+pub fn full_adder() -> Dataset {
+    let patterns = (0..8)
+        .map(|i| {
+            let (a, bb, c) = (i & 1 == 1, i & 2 == 2, i & 4 == 4);
+            let sum = a ^ bb ^ c;
+            let cout = (a && bb) || (c && (a ^ bb));
+            vec![b(a), b(bb), b(c), b(sum), b(cout)]
+        })
+        .collect();
+    Dataset { name: "FULL_ADDER", patterns }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn and_truth_table() {
+        let d = and_gate();
+        assert_eq!(d.patterns.len(), 4);
+        assert_eq!(d.patterns[3], vec![1, 1, 1]);
+        assert_eq!(d.patterns[1], vec![1, -1, -1]);
+    }
+
+    #[test]
+    fn xor_is_odd_parity() {
+        for p in xor_gate().patterns {
+            let ones = p[..2].iter().filter(|&&v| v > 0).count();
+            assert_eq!(p[2] > 0, ones % 2 == 1);
+        }
+    }
+
+    #[test]
+    fn adder_arithmetic() {
+        for p in full_adder().patterns {
+            let (a, bb, c) = (p[0] > 0, p[1] > 0, p[2] > 0);
+            let total = a as u8 + bb as u8 + c as u8;
+            assert_eq!(p[3] > 0, total & 1 == 1, "sum bit");
+            assert_eq!(p[4] > 0, total >= 2, "carry bit");
+        }
+    }
+
+    #[test]
+    fn nand_nor_are_complements() {
+        for (p_and, p_nand) in and_gate().patterns.iter().zip(nand_gate().patterns.iter()) {
+            assert_eq!(p_and[2], -p_nand[2]);
+        }
+        for (p_or, p_nor) in or_gate().patterns.iter().zip(nor_gate().patterns.iter()) {
+            assert_eq!(p_or[2], -p_nor[2]);
+        }
+    }
+
+    #[test]
+    fn majority_truth_table() {
+        let d = majority3();
+        assert_eq!(d.patterns.len(), 8);
+        for p in &d.patterns {
+            let ups = p[..3].iter().filter(|&&v| v > 0).count();
+            assert_eq!(p[3] > 0, ups >= 2);
+        }
+    }
+
+    #[test]
+    fn target_distribution_uniform_on_valid() {
+        let d = and_gate();
+        let p = d.target_distribution();
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.iter().filter(|&&x| x > 0.0).count(), 4);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // (A=1,B=1,OUT=1) → index 0b111
+        assert_eq!(p[0b111], 0.25);
+        // invalid state (A=1,B=1,OUT=0) → index 0b011
+        assert_eq!(p[0b011], 0.0);
+    }
+}

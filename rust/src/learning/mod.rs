@@ -1,0 +1,82 @@
+//! In-situ hardware-aware learning (Fig 7a): contrastive divergence run
+//! *through* the chip's own mismatched analog path, so the learned
+//! weights absorb every DAC gain error, multiplier offset and tanh slope
+//! deviation — the paper's central claim.
+//!
+//! * [`dataset`] — gate truth tables as visible spin patterns.
+//! * [`CdTrainer`] — the CD-k loop: clamped positive phase, free
+//!   negative phase, quantized 8-bit weight updates programmed back over
+//!   SPI (or refolded for the software/XLA engines).
+
+pub mod calibration;
+mod cd;
+pub mod dataset;
+
+pub use calibration::{calibrate, calibrate_full_die, compensate_biases, CalibrationReport};
+pub use cd::{CdParams, CdTrainer, EpochStats};
+
+use anyhow::Result;
+
+use crate::analog::{Personality, ProgrammedWeights};
+use crate::chimera::Topology;
+use crate::sampler::{ChipSampler, Sampler};
+
+/// A sampler that can be (re)programmed with register codes — what the
+/// trainer needs: the cycle-level chip does it over SPI; the software /
+/// XLA engines via a personality fold.
+pub trait TrainableChip: Sampler {
+    fn program_codes(&mut self, w: &ProgrammedWeights) -> Result<()>;
+}
+
+impl TrainableChip for ChipSampler {
+    fn program_codes(&mut self, w: &ProgrammedWeights) -> Result<()> {
+        self.chip.program(&w.j_codes, &w.enables, &w.h_codes)
+    }
+}
+
+/// Wrap a tensor-driven engine with a die personality, making it a
+/// [`TrainableChip`]: programming folds codes through the analog models
+/// and reloads the engine.
+pub struct Hw<S: Sampler> {
+    pub engine: S,
+    pub personality: Personality,
+    pub topo: Topology,
+}
+
+impl<S: Sampler> Hw<S> {
+    pub fn new(engine: S, personality: Personality) -> Self {
+        Self { engine, personality, topo: Topology::new() }
+    }
+}
+
+impl<S: Sampler> Sampler for Hw<S> {
+    fn load(&mut self, folded: &crate::analog::Folded) {
+        self.engine.load(folded);
+    }
+    fn set_beta(&mut self, beta: f32) {
+        self.engine.set_beta(beta);
+    }
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.engine.set_clamps(clamps);
+    }
+    fn batch(&self) -> usize {
+        self.engine.batch()
+    }
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        self.engine.sweeps(n)
+    }
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.engine.states()
+    }
+    fn randomize(&mut self, seed: u64) {
+        self.engine.randomize(seed);
+    }
+}
+
+impl<S: Sampler> TrainableChip for Hw<S> {
+    fn program_codes(&mut self, w: &ProgrammedWeights) -> Result<()> {
+        let folded = self.personality.fold(&self.topo, w);
+        self.engine.load(&folded);
+        Ok(())
+    }
+}

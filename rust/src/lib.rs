@@ -1,0 +1,55 @@
+//! # pchip — a CMOS probabilistic-computing chip, reproduced in software
+//!
+//! Reproduction of *"A CMOS Probabilistic Computing Chip With In-situ
+//! Hardware Aware Learning"* (Jhonsa et al., UCSB, 2025): a 440-spin
+//! p-bit Ising machine on a Chimera graph with an analog current-mode
+//! update path, whose process-variation mismatch is absorbed by
+//! hardware-aware contrastive-divergence learning.
+//!
+//! The crate is the **L3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — pallas kernels (`python/compile/kernels/`): the p-bit
+//!   update and correlation hot-spots, MXU-shaped.
+//! * **L2** — the jax chip model (`python/compile/model.py`), AOT-lowered
+//!   once to HLO text artifacts (`make artifacts`).
+//! * **L3** — this crate: circuit-level substrates (analog standard-cell
+//!   models, decimated-LFSR RNG, SPI), the cycle-accurate chip simulator,
+//!   PJRT-backed and pure-rust samplers, the CD trainer, annealing/TTS,
+//!   the problem library, and an async job coordinator. Python never runs
+//!   on the request path.
+//!
+//! ## Quick map
+//!
+//! | paper artifact | module / binary |
+//! |---|---|
+//! | eqns (1),(2) p-bit update | [`sampler`], [`chip`] |
+//! | Chimera topology (Fig 1) | [`chimera`] |
+//! | R-2R DAC / Gilbert mult / WTA tanh (Figs 3-6) | [`analog`] |
+//! | decimated LFSR RNG | [`rng`] |
+//! | hardware-aware CD (Fig 7) | [`learning`] |
+//! | bias-sweep variability (Fig 8a) | `examples/bias_sweep.rs` |
+//! | full-adder learning (Fig 8b) | `examples/train_adder.rs` |
+//! | SK annealing / Max-Cut (Fig 9) | [`annealing`], [`problems`] |
+//! | TTS comparison (Table 1) | `benches/table1_tts.rs` |
+
+pub mod analog;
+pub mod annealing;
+pub mod chimera;
+pub mod chip;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod learning;
+pub mod metrics;
+pub mod problems;
+pub mod rng;
+pub mod runtime;
+pub mod sampler;
+pub mod spi;
+pub mod util;
+
+/// Number of physical spins on the die (7x8 Chimera cells, one replaced
+/// by bias/SPI circuitry: 55 cells x 8 spins).
+pub const N_SPINS: usize = 440;
+/// Spin vector length after MXU padding (7 x 64).
+pub const N_PAD: usize = 448;

@@ -1,0 +1,394 @@
+//! `pchip` — the coordinator CLI.
+//!
+//! ```text
+//! pchip info                         chip facts + artifact status
+//! pchip train  [--gate and|or|xor|adder] [--epochs N] [--lr X] …
+//! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
+//! pchip maxcut [--native-keep P | --clique-n N]
+//! pchip sweep  [--pbits N] [--points N]           (Fig 8a bias sweep)
+//! pchip tts    [--restarts N]                     (Table 1)
+//! pchip serve  [--jobs N] [--chips K] [--engine sw|xla]   E2E demo load
+//! ```
+//!
+//! All subcommands accept `--config path.toml` and `--engine sw|xla` and
+//! write CSV series into `results/`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use pchip::annealing::{AnnealParams, BetaSchedule};
+use pchip::chimera::Topology;
+use pchip::config::Config;
+use pchip::coordinator::{ChipArrayServer, EngineKind, JobRequest, JobResult};
+use pchip::experiments as exp;
+use pchip::learning::{dataset, CdParams, Hw, TrainableChip};
+use pchip::problems::maxcut::Graph;
+use pchip::runtime::{ArtifactSet, Runtime};
+use pchip::sampler::XlaSampler;
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got `{}`", argv[i]))?;
+            let v = argv.get(i + 1).ok_or_else(|| anyhow!("--{k} needs a value"))?;
+            flags.insert(k.to_string(), v.clone());
+            i += 2;
+        }
+        Ok(Self { flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: `{v}`")),
+        }
+    }
+
+    fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    match args.flags.get("config") {
+        Some(p) => Config::load(std::path::Path::new(p)),
+        None => Ok(Config::default()),
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "train" => cmd_train(&args),
+        "anneal" => cmd_anneal(&args),
+        "maxcut" => cmd_maxcut(&args),
+        "sweep" => cmd_sweep(&args),
+        "tts" => cmd_tts(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `pchip help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "pchip — 440-spin CMOS p-bit chip reproduction\n\n\
+         subcommands:\n  \
+         info    chip facts + artifact status\n  \
+         train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
+         anneal  SK spin-glass annealing (Fig 9a)\n  \
+         maxcut  Max-Cut optimization (Fig 9b)\n  \
+         sweep   bias-sweep variability (Fig 8a)\n  \
+         tts     time-to-solution measurement (Table 1)\n  \
+         serve   chip-array serving demo (batched sampling jobs)\n\n\
+         common flags: --config FILE --engine sw|xla --seed N"
+    );
+}
+
+/// Build a trainable chip for the chosen engine and run `f` on it.
+fn with_chip<F, R>(args: &Args, cfg: &Config, batch: usize, f: F) -> Result<R>
+where
+    F: FnOnce(&mut dyn ErasedChip) -> Result<R>,
+{
+    let seed: u64 = args.get("seed", cfg.server.seed)?;
+    match args.str_or("engine", "sw").as_str() {
+        "sw" => {
+            let mut chip = exp::software_chip(seed, cfg.mismatch, batch);
+            f(&mut chip)
+        }
+        "xla" => {
+            let rt = Runtime::cpu()?;
+            let set = ArtifactSet::load_some(
+                &rt,
+                &cfg.artifacts_dir(),
+                &["gibbs_b32", "gibbs_b8", "gibbs_b1"],
+            )?;
+            let engine = XlaSampler::new(&set, batch, seed)?;
+            let topo = Topology::new();
+            let personality = pchip::analog::Personality::sample(&topo, seed, cfg.mismatch);
+            let mut chip = Hw::new(engine, personality);
+            f(&mut chip)
+        }
+        other => bail!("unknown engine `{other}` (sw|xla)"),
+    }
+}
+
+/// Object-safe alias over TrainableChip (the CLI doesn't need generics).
+trait ErasedChip: TrainableChip {}
+impl<T: TrainableChip> ErasedChip for T {}
+
+impl TrainableChip for &mut dyn ErasedChip {
+    fn program_codes(&mut self, w: &pchip::analog::ProgrammedWeights) -> Result<()> {
+        (**self).program_codes(w)
+    }
+}
+
+impl pchip::sampler::Sampler for &mut dyn ErasedChip {
+    fn load(&mut self, folded: &pchip::analog::Folded) {
+        (**self).load(folded)
+    }
+    fn set_beta(&mut self, beta: f32) {
+        (**self).set_beta(beta)
+    }
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        (**self).set_clamps(clamps)
+    }
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        (**self).sweeps(n)
+    }
+    fn states(&self) -> Vec<Vec<i8>> {
+        (**self).states()
+    }
+    fn randomize(&mut self, seed: u64) {
+        (**self).randomize(seed)
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!("pchip: 440-spin Chimera p-bit chip (7x8 cells, one dead)");
+    let topo = Topology::new();
+    println!("  spins: {}   couplers: {}", pchip::N_SPINS, topo.edges.len());
+    println!("  sample time: {} ns   master clock: 200 MHz", pchip::chip::SAMPLE_TIME_NS);
+    println!("  mismatch corner: {:?}", cfg.mismatch);
+    let dir = cfg.artifacts_dir();
+    match pchip::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!(
+                "  artifacts ({}): {} entries, N_PAD={}",
+                dir.display(),
+                m.entries.len(),
+                m.meta.n_pad
+            );
+        }
+        Err(_) => println!("  artifacts: NOT BUILT (run `make artifacts`)"),
+    }
+    for (k, v) in exp::table1::spec_row() {
+        println!("  {k}: {v}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let gate = args.str_or("gate", "and");
+    let epochs: usize = args.get("epochs", 150)?;
+    let mut params = CdParams { epochs, ..CdParams::default() };
+    params.lr = args.get("lr", params.lr)?;
+    params.beta = args.get("beta", params.beta)?;
+    let (layout, data) = match gate.as_str() {
+        "and" => (pchip::chimera::and_gate_layout(0, 0), dataset::and_gate()),
+        "or" => (pchip::chimera::and_gate_layout(0, 0), dataset::or_gate()),
+        "xor" => (pchip::chimera::and_gate_layout(0, 0), dataset::xor_gate()),
+        "adder" => (pchip::chimera::full_adder_layout(0, 1), dataset::full_adder()),
+        g => bail!("unknown gate `{g}`"),
+    };
+    let name = format!("train_{gate}");
+    let exp_cfg = exp::GateExperiment {
+        layout,
+        dataset: data,
+        params,
+        mismatch: cfg.mismatch,
+        chip_seed: args.get("seed", 7)?,
+        snapshot_epochs: vec![0, epochs / 8, epochs / 2, epochs.saturating_sub(1)],
+        eval_samples: 4000,
+    };
+    let report = with_chip(args, &cfg, 8, |mut chip| {
+        exp::fig7_gate_learning(&exp_cfg, &mut chip, Some(&name))
+    })?;
+    println!(
+        "gate {gate}: final KL {:.4}, valid mass {:.3}",
+        report.final_kl, report.final_valid_mass
+    );
+    println!("  per-epoch series → results/{name}.csv");
+    for (epoch, dist) in &report.snapshots {
+        let peak: f64 = dist.iter().cloned().fold(0.0, f64::max);
+        println!("  epoch {epoch}: distribution peak {peak:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_anneal(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let params = AnnealParams {
+        schedule: BetaSchedule::Geometric { b0: args.get("b0", 0.08)?, b1: args.get("b1", 4.0)? },
+        steps: args.get("steps", 96)?,
+        sweeps_per_step: args.get("sweeps-per-step", 8)?,
+        record_every: 1,
+    };
+    let seed = args.get("seed", 1u64)?;
+    let report = with_chip(args, &cfg, 8, |mut chip| {
+        exp::fig9a_sk_anneal(&mut chip, seed, &params, Some("fig9a_sk"))
+    })?;
+    println!(
+        "SK anneal (seed {seed}): best energy {:.0} (bound {:.0})",
+        report.best_energy, report.energy_lower_bound
+    );
+    println!("  trace → results/fig9a_sk.csv");
+    Ok(())
+}
+
+fn cmd_maxcut(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let topo = Topology::new();
+    let params = AnnealParams {
+        schedule: BetaSchedule::Geometric { b0: 0.2, b1: 4.0 },
+        steps: args.get("steps", 48)?,
+        sweeps_per_step: args.get("sweeps-per-step", 4)?,
+        record_every: 1,
+    };
+    let clique_n: usize = args.get("clique-n", 0)?;
+    let report = if clique_n > 0 {
+        anyhow::ensure!(clique_n % 4 == 0 && clique_n <= 28, "--clique-n must be 4·t ≤ 28");
+        let g = Graph::random(clique_n, 0.7, args.get("seed", 2)?);
+        let emb = pchip::chimera::Embedding::clique(&topo, clique_n / 4, 1.5)?;
+        let p = g.to_ising_embedded(&topo, &emb)?;
+        with_chip(args, &cfg, 8, |mut chip| {
+            exp::fig9b_maxcut(&mut chip, &g, &p, &params, Some(&emb), Some("fig9b_maxcut"))
+        })?
+    } else {
+        let keep: f64 = args.get("native-keep", 0.6)?;
+        let g = Graph::chimera_native(&topo, keep, args.get("seed", 2)?);
+        let p = g.to_ising_native(&topo)?;
+        with_chip(args, &cfg, 8, |mut chip| {
+            exp::fig9b_maxcut(&mut chip, &g, &p, &params, None, Some("fig9b_maxcut"))
+        })?
+    };
+    println!(
+        "max-cut: chip {:.0} | greedy {:.0} | exact {} | W {:.0}",
+        report.chip_best_cut,
+        report.greedy_cut,
+        report.exact_cut.map(|c| format!("{c:.0}")).unwrap_or_else(|| "n/a".into()),
+        report.total_weight
+    );
+    println!("  trace → results/fig9b_maxcut.csv");
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n_pbits: usize = args.get("pbits", 24)?;
+    let points: usize = args.get("points", 33)?;
+    let pbits: Vec<usize> = (0..n_pbits).map(|k| (k * 18) % pchip::N_SPINS).collect();
+    let codes: Vec<i8> = (0..points)
+        .map(|i| (-120 + (240 * i / (points - 1).max(1)) as i32) as i8)
+        .collect();
+    let samples: usize = args.get("samples", 2000)?;
+    let report = with_chip(args, &cfg, 8, |mut chip| {
+        exp::fig8a_bias_sweep(&mut chip, &pbits, &codes, samples, 1.0, Some("fig8a_sweep"))
+    })?;
+    println!(
+        "bias sweep over {} p-bits: slope CV {:.3}, offset σ {:.2} codes",
+        pbits.len(),
+        report.slope_cv,
+        report.offset_sd_codes
+    );
+    println!("  curves → results/fig8a_sweep.csv");
+    Ok(())
+}
+
+fn cmd_tts(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let restarts: usize = args.get("restarts", 24)?;
+    let params = exp::table1::default_tts_params();
+    let seed = args.get("seed", 3u64)?;
+    let report = with_chip(args, &cfg, 8, |mut chip| {
+        exp::table1_tts(&mut chip, seed, restarts, &params, Some("table1_tts"))
+    })?;
+    println!(
+        "TTS(99%): {:.0} ns  (p_success {:.3}, restart {:.0} ns, {} restarts)",
+        report.tts.tts99_ns, report.p_success, report.chip_time_per_restart_ns, restarts
+    );
+    println!(
+        "  chip-referred {:.2e} flips/s; host engine {:.2e} flips/s",
+        report.chip_flips_per_sec, report.host_flips_per_sec
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    cfg.server.chips = args.get("chips", cfg.server.chips)?;
+    let jobs: usize = args.get("jobs", 64)?;
+    let engine = match args.str_or("engine", "sw").as_str() {
+        "sw" => EngineKind::Software,
+        "xla" => EngineKind::Xla { artifacts_dir: cfg.artifacts_dir() },
+        other => bail!("unknown engine `{other}`"),
+    };
+    let srv = ChipArrayServer::start(&cfg, engine)?;
+    let topo = Topology::new();
+    // a mixed workload over three problems
+    let h1 = srv.register_problem(pchip::problems::sk::chimera_pm_j(&topo, 1))?;
+    let h2 = srv.register_problem(pchip::problems::sk::chimera_gaussian(&topo, 2))?;
+    let g = Graph::chimera_native(&topo, 0.5, 3);
+    let h3 = srv.register_problem(g.to_ising_native(&topo)?)?;
+    let handles = [h1, h2, h3];
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            srv.submit(JobRequest::Sample {
+                problem: handles[i % 3],
+                sweeps: 32,
+                beta: 1.5,
+                chains: 4,
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut ok = 0;
+    let mut lat_us: Vec<u64> = Vec::new();
+    for t in tickets {
+        match t.wait() {
+            JobResult::Samples { latency, .. } => {
+                ok += 1;
+                lat_us.push(latency.as_micros() as u64);
+            }
+            JobResult::Failed(e) => eprintln!("job failed: {e}"),
+            _ => {}
+        }
+    }
+    lat_us.sort_unstable();
+    let elapsed = t0.elapsed();
+    let stats = srv.stats();
+    use std::sync::atomic::Ordering;
+    println!(
+        "served {ok}/{jobs} jobs in {elapsed:.2?} ({:.0} jobs/s)",
+        ok as f64 / elapsed.as_secs_f64()
+    );
+    if !lat_us.is_empty() {
+        println!(
+            "  latency p50 {} µs  p95 {} µs  p99 {} µs",
+            lat_us[lat_us.len() / 2],
+            lat_us[lat_us.len() * 95 / 100],
+            lat_us[(lat_us.len() * 99 / 100).min(lat_us.len() - 1)]
+        );
+    }
+    println!(
+        "  batches {}  reprograms {}  chip-time {:.1} µs",
+        stats.batches.load(Ordering::Relaxed),
+        stats.reprograms.load(Ordering::Relaxed),
+        stats.chip_time_ns.load(Ordering::Relaxed) as f64 / 1000.0
+    );
+    Ok(())
+}

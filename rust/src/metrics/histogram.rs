@@ -1,0 +1,142 @@
+//! Distributions over small spin subsets (gate visible units).
+
+use std::collections::BTreeMap;
+
+/// Histogram over the 2^k states of k chosen spins (k ≤ 20).
+#[derive(Debug, Clone)]
+pub struct StateHistogram {
+    /// The spins being observed, in bit order (bit b = spins[b] > 0).
+    pub spins: Vec<usize>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl StateHistogram {
+    pub fn new(spins: &[usize]) -> Self {
+        assert!(spins.len() <= 20, "histogram over {} spins too large", spins.len());
+        Self { spins: spins.to_vec(), counts: vec![0; 1 << spins.len()], total: 0 }
+    }
+
+    /// Index of a full chip state restricted to the observed spins.
+    pub fn index_of(&self, state: &[i8]) -> usize {
+        self.spins
+            .iter()
+            .enumerate()
+            .fold(0usize, |acc, (b, &s)| acc | (((state[s] > 0) as usize) << b))
+    }
+
+    pub fn record(&mut self, state: &[i8]) {
+        let idx = self.index_of(state);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    /// Record a pattern given directly over the observed spins.
+    pub fn record_pattern(&mut self, pattern: &[i8]) {
+        debug_assert_eq!(pattern.len(), self.spins.len());
+        let idx = pattern
+            .iter()
+            .enumerate()
+            .fold(0usize, |acc, (b, &v)| acc | (((v > 0) as usize) << b));
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Empirical probabilities over all 2^k states.
+    pub fn probabilities(&self) -> Vec<f64> {
+        let t = self.total.max(1) as f64;
+        self.counts.iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Probability of one pattern (±1 over the observed spins).
+    pub fn probability(&self, pattern: &[i8]) -> f64 {
+        let idx = pattern
+            .iter()
+            .enumerate()
+            .fold(0usize, |acc, (b, &v)| acc | (((v > 0) as usize) << b));
+        self.counts[idx] as f64 / self.total.max(1) as f64
+    }
+
+    /// Non-zero entries as (state-index, probability), descending.
+    pub fn top(&self, k: usize) -> Vec<(usize, f64)> {
+        let p = self.probabilities();
+        let mut idx: Vec<usize> = (0..p.len()).filter(|&i| p[i] > 0.0).collect();
+        idx.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+        idx.into_iter().take(k).map(|i| (i, p[i])).collect()
+    }
+
+    pub fn clear(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.total = 0;
+    }
+
+    /// Pretty map of bit-pattern string → probability (for reports).
+    pub fn as_map(&self) -> BTreeMap<String, f64> {
+        let k = self.spins.len();
+        self.probabilities()
+            .into_iter()
+            .enumerate()
+            .filter(|&(_, p)| p > 0.0)
+            .map(|(i, p)| {
+                let bits: String =
+                    (0..k).map(|b| if (i >> b) & 1 == 1 { '1' } else { '0' }).collect();
+                (bits, p)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_normalizes() {
+        let mut h = StateHistogram::new(&[3, 5]);
+        let mut state = vec![-1i8; 10];
+        h.record(&state); // (0,0)
+        state[3] = 1;
+        h.record(&state); // (1,0)
+        h.record(&state);
+        let p = h.probabilities();
+        assert_eq!(p.len(), 4);
+        assert!((p[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p[1] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(h.total(), 3);
+    }
+
+    #[test]
+    fn pattern_probability() {
+        let mut h = StateHistogram::new(&[0, 1, 2]);
+        h.record_pattern(&[1, -1, 1]);
+        h.record_pattern(&[1, -1, 1]);
+        h.record_pattern(&[-1, -1, -1]);
+        assert!((h.probability(&[1, -1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(h.probability(&[1, 1, 1]), 0.0);
+    }
+
+    #[test]
+    fn top_orders_descending() {
+        let mut h = StateHistogram::new(&[0]);
+        for _ in 0..3 {
+            h.record_pattern(&[1]);
+        }
+        h.record_pattern(&[-1]);
+        let top = h.top(2);
+        assert_eq!(top[0].0, 1);
+        assert!(top[0].1 > top[1].1);
+    }
+
+    #[test]
+    fn as_map_bit_strings() {
+        let mut h = StateHistogram::new(&[0, 1]);
+        h.record_pattern(&[1, -1]);
+        let m = h.as_map();
+        assert_eq!(m.len(), 1);
+        assert!(m.contains_key("10"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Measurement toolkit: distributions, divergences, correlation
+//! statistics, energy traces and report writers — everything the paper's
+//! figures are made of.
+
+mod histogram;
+mod stats;
+mod trace;
+
+pub use histogram::StateHistogram;
+pub use stats::{corr_edges, kl_divergence, magnetization, success_probability, Welford};
+pub use trace::EnergyTrace;

@@ -1,0 +1,132 @@
+//! Divergences, correlations and running statistics.
+
+/// KL(p ‖ q) in nats; q is floored at `eps` to keep the divergence
+/// finite under sampling zeros.
+pub fn kl_divergence(p: &[f64], q: &[f64], eps: f64) -> f64 {
+    debug_assert_eq!(p.len(), q.len());
+    p.iter()
+        .zip(q)
+        .filter(|&(&pi, _)| pi > 0.0)
+        .map(|(&pi, &qi)| pi * (pi / qi.max(eps)).ln())
+        .sum()
+}
+
+/// Mean spin ⟨m_i⟩ over a set of states for the chosen spins.
+pub fn magnetization(states: &[Vec<i8>], spins: &[usize]) -> Vec<f64> {
+    let n = states.len().max(1) as f64;
+    spins
+        .iter()
+        .map(|&s| states.iter().map(|st| st[s] as f64).sum::<f64>() / n)
+        .collect()
+}
+
+/// Pairwise correlations ⟨m_i m_j⟩ over the given edges.
+pub fn corr_edges(states: &[Vec<i8>], edges: &[(usize, usize)]) -> Vec<f64> {
+    let n = states.len().max(1) as f64;
+    edges
+        .iter()
+        .map(|&(i, j)| states.iter().map(|st| (st[i] * st[j]) as f64).sum::<f64>() / n)
+        .collect()
+}
+
+/// Fraction of states whose energy reaches `target` within `tol`.
+pub fn success_probability(energies: &[f64], target: f64, tol: f64) -> f64 {
+    if energies.is_empty() {
+        return 0.0;
+    }
+    energies.iter().filter(|&&e| e <= target + tol).count() as f64 / energies.len() as f64
+}
+
+/// Welford running mean/variance.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = [0.25, 0.25, 0.5];
+        assert!(kl_divergence(&p, &p, 1e-12).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kl_positive_and_asymmetric() {
+        let p = [0.9, 0.1];
+        let q = [0.5, 0.5];
+        let a = kl_divergence(&p, &q, 1e-12);
+        let b = kl_divergence(&q, &p, 1e-12);
+        assert!(a > 0.0 && b > 0.0 && (a - b).abs() > 1e-6);
+    }
+
+    #[test]
+    fn magnetization_and_corr() {
+        let states = vec![vec![1i8, 1, -1], vec![1, -1, -1]];
+        let m = magnetization(&states, &[0, 1, 2]);
+        assert_eq!(m, vec![1.0, 0.0, -1.0]);
+        let c = corr_edges(&states, &[(0, 1), (0, 2)]);
+        assert_eq!(c, vec![0.0, -1.0]);
+    }
+
+    #[test]
+    fn success_probability_counts() {
+        let e = [-10.0, -9.5, -8.0];
+        assert_eq!(success_probability(&e, -10.0, 0.6), 2.0 / 3.0);
+        assert_eq!(success_probability(&[], -1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.mean(), 3.0);
+        assert!((w.variance() - 2.5).abs() < 1e-12);
+        assert_eq!(w.count(), 5);
+    }
+}

@@ -1,0 +1,82 @@
+//! Energy-vs-time traces (the Fig 9a series).
+
+use crate::util::json::{obj, Json};
+
+/// A recorded annealing / sampling trajectory.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyTrace {
+    /// (sweep index, β at that sweep, mean energy, min energy) rows.
+    pub rows: Vec<(u64, f64, f64, f64)>,
+}
+
+impl EnergyTrace {
+    pub fn push(&mut self, sweep: u64, beta: f64, mean_e: f64, min_e: f64) {
+        self.rows.push((sweep, beta, mean_e, min_e));
+    }
+
+    pub fn final_min(&self) -> Option<f64> {
+        self.rows.last().map(|r| r.3)
+    }
+
+    pub fn best(&self) -> Option<f64> {
+        self.rows.iter().map(|r| r.3).fold(None, |acc, x| {
+            Some(match acc {
+                None => x,
+                Some(a) if x < a => x,
+                Some(a) => a,
+            })
+        })
+    }
+
+    /// Monotone running minimum (what Fig 9a effectively plots).
+    pub fn running_min(&self) -> Vec<f64> {
+        let mut best = f64::INFINITY;
+        self.rows
+            .iter()
+            .map(|r| {
+                best = best.min(r.3);
+                best
+            })
+            .collect()
+    }
+
+    /// CSV rows: sweep, beta, mean_energy, min_energy.
+    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
+        self.rows.iter().map(|&(s, b, me, mn)| vec![s as f64, b, me, mn]).collect()
+    }
+
+    pub fn to_json(&self, name: &str) -> Json {
+        obj(vec![
+            ("name", Json::from(name)),
+            ("sweeps", Json::from(self.rows.iter().map(|r| r.0 as f64).collect::<Vec<_>>())),
+            ("beta", Json::from(self.rows.iter().map(|r| r.1).collect::<Vec<_>>())),
+            ("mean_energy", Json::from(self.rows.iter().map(|r| r.2).collect::<Vec<_>>())),
+            ("min_energy", Json::from(self.rows.iter().map(|r| r.3).collect::<Vec<_>>())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_min_is_monotone() {
+        let mut t = EnergyTrace::default();
+        t.push(0, 0.1, -1.0, -2.0);
+        t.push(1, 0.2, -3.0, -4.0);
+        t.push(2, 0.3, -2.0, -3.0);
+        assert_eq!(t.running_min(), vec![-2.0, -4.0, -4.0]);
+        assert_eq!(t.best(), Some(-4.0));
+        assert_eq!(t.final_min(), Some(-3.0));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut t = EnergyTrace::default();
+        t.push(0, 1.0, -1.0, -1.5);
+        let j = t.to_json("test");
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "test");
+        assert_eq!(j.req("min_energy").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

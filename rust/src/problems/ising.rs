@@ -1,0 +1,185 @@
+//! Logical Ising problems and their lowering to chip register codes.
+//!
+//! Convention throughout: `E(m) = −Σ_{i<j} J_ij m_i m_j − Σ_i h_i m_i`,
+//! so positive J is ferromagnetic and positive h favours +1.
+
+use anyhow::{bail, Result};
+
+use crate::chimera::{Topology, N_SPINS};
+
+/// A problem over the hardware spins (after any embedding).
+#[derive(Debug, Clone)]
+pub struct IsingProblem {
+    /// Sparse couplings `(i, j, J_ij)` with `i < j`, each a physical edge.
+    pub couplings: Vec<(usize, usize, f64)>,
+    /// Per-spin bias, length [`N_SPINS`].
+    pub h: Vec<f64>,
+    /// Human-readable tag for reports.
+    pub name: String,
+}
+
+impl IsingProblem {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { couplings: Vec::new(), h: vec![0.0; N_SPINS], name: name.into() }
+    }
+
+    /// Validate that every coupling is a physical coupler.
+    pub fn validate(&self, topo: &Topology) -> Result<()> {
+        for &(i, j, _) in &self.couplings {
+            if i >= j {
+                bail!("coupling ({i},{j}) not canonical (need i < j)");
+            }
+            if !topo.connected(i, j) {
+                bail!("({i},{j}) is not a physical coupler");
+            }
+        }
+        Ok(())
+    }
+
+    /// Ising energy of a ±1 state.
+    pub fn energy(&self, m: &[i8]) -> f64 {
+        let mut e = 0.0;
+        for &(i, j, w) in &self.couplings {
+            e -= w * (m[i] as f64) * (m[j] as f64);
+        }
+        for (i, &hh) in self.h.iter().enumerate() {
+            if hh != 0.0 {
+                e -= hh * m[i] as f64;
+            }
+        }
+        e
+    }
+
+    /// Spins that carry any coupling or bias (the problem's support).
+    pub fn support(&self) -> Vec<usize> {
+        let mut used = vec![false; N_SPINS];
+        for &(i, j, _) in &self.couplings {
+            used[i] = true;
+            used[j] = true;
+        }
+        for (i, &hh) in self.h.iter().enumerate() {
+            if hh != 0.0 {
+                used[i] = true;
+            }
+        }
+        (0..N_SPINS).filter(|&i| used[i]).collect()
+    }
+
+    /// Largest coefficient magnitude (the 8-bit full-scale reference).
+    pub fn max_abs(&self) -> f64 {
+        let cj = self.couplings.iter().map(|&(_, _, w)| w.abs()).fold(0.0, f64::max);
+        let ch = self.h.iter().map(|x| x.abs()).fold(0.0, f64::max);
+        cj.max(ch)
+    }
+
+    /// Lower to 8-bit register codes: scale so `max_abs` maps to ±127,
+    /// enable exactly the used couplers. Returns (j_codes, enables,
+    /// h_codes, scale) where `J_physical = code/127 × scale`.
+    pub fn to_codes(&self, topo: &Topology) -> Result<(Vec<i8>, Vec<bool>, Vec<i8>, f64)> {
+        self.validate(topo)?;
+        let scale = self.max_abs();
+        if scale == 0.0 {
+            return Ok((vec![0; topo.edges.len()], vec![false; topo.edges.len()], vec![0; N_SPINS], 1.0));
+        }
+        let mut j_codes = vec![0i8; topo.edges.len()];
+        let mut enables = vec![false; topo.edges.len()];
+        for &(i, j, w) in &self.couplings {
+            let e = edge_index(topo, i, j).expect("validated edge");
+            j_codes[e] = quantize(w / scale);
+            enables[e] = true;
+        }
+        let h_codes = self.h.iter().map(|&x| quantize(x / scale)).collect();
+        Ok((j_codes, enables, h_codes, scale))
+    }
+
+    /// The effective β a chip must run at so that `β_chip · J_code/127`
+    /// equals `β_logical · J`: β_chip = β_logical × scale.
+    pub fn beta_for(&self, beta_logical: f64) -> f64 {
+        beta_logical * self.max_abs().max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Canonical edge index of (i, j), i < j (binary search on the sorted
+/// edge list).
+pub fn edge_index(topo: &Topology, i: usize, j: usize) -> Option<usize> {
+    let key = (i.min(j), i.max(j));
+    topo.edges.binary_search(&key).ok()
+}
+
+fn quantize(x: f64) -> i8 {
+    (x * 127.0).round().clamp(-127.0, 127.0) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new()
+    }
+
+    #[test]
+    fn energy_golden() {
+        let t = topo();
+        let mut p = IsingProblem::new("pair");
+        let (i, j) = t.edges[0];
+        p.couplings.push((i, j, 1.0));
+        p.h[i] = 0.5;
+        let mut m = vec![1i8; N_SPINS];
+        assert_eq!(p.energy(&m), -1.5);
+        m[j] = -1;
+        assert_eq!(p.energy(&m), 0.5);
+    }
+
+    #[test]
+    fn validate_rejects_non_edges() {
+        let t = topo();
+        let mut p = IsingProblem::new("bad");
+        p.couplings.push((0, 1, 1.0)); // same-side pair: not a coupler
+        assert!(p.validate(&t).is_err());
+        let mut q = IsingProblem::new("swapped");
+        let (i, j) = t.edges[0];
+        q.couplings.push((j, i, 1.0));
+        assert!(q.validate(&t).is_err());
+    }
+
+    #[test]
+    fn codes_roundtrip_scale() {
+        let t = topo();
+        let mut p = IsingProblem::new("scaled");
+        let (a, b) = t.edges[0];
+        let (c, d) = t.edges[10];
+        p.couplings.push((a, b, 2.0));
+        p.couplings.push((c, d, -1.0));
+        p.h[a] = 0.5;
+        let (j_codes, enables, h_codes, scale) = p.to_codes(&t).unwrap();
+        assert_eq!(scale, 2.0);
+        assert_eq!(j_codes[0], 127);
+        assert_eq!(j_codes[10], -64); // −0.5 × 127 rounds to −64
+        assert!(enables[0] && enables[10]);
+        assert_eq!(enables.iter().filter(|&&e| e).count(), 2);
+        assert_eq!(h_codes[a], 32); // 0.25 × 127 ≈ 31.75 → 32
+    }
+
+    #[test]
+    fn edge_index_finds_all() {
+        let t = topo();
+        for (e, &(i, j)) in t.edges.iter().enumerate() {
+            assert_eq!(edge_index(&t, i, j), Some(e));
+            assert_eq!(edge_index(&t, j, i), Some(e));
+        }
+        assert_eq!(edge_index(&t, 0, 1), None);
+    }
+
+    #[test]
+    fn support_tracks_usage() {
+        let t = topo();
+        let mut p = IsingProblem::new("s");
+        let (i, j) = t.edges[5];
+        p.couplings.push((i, j, 0.3));
+        p.h[100] = -0.2;
+        let s = p.support();
+        assert!(s.contains(&i) && s.contains(&j) && s.contains(&100));
+        assert_eq!(s.len(), 3);
+    }
+}

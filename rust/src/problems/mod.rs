@@ -1,0 +1,17 @@
+//! Ising problem library: everything the paper's evaluation runs.
+//!
+//! * [`IsingProblem`] — logical-level couplings/biases with energy,
+//!   8-bit code lowering, and exact enumeration for small instances.
+//! * [`sk`] — Chimera-structured ±J spin glass over all 440 spins
+//!   (Fig 9a; a literal Sherrington–Kirkpatrick all-to-all cannot embed
+//!   natively — see DESIGN.md substitutions).
+//! * [`maxcut`] — Max-Cut instances (Fig 9b) with greedy / exact
+//!   baselines.
+
+mod exact;
+pub mod ising;
+pub mod maxcut;
+pub mod sk;
+
+pub use exact::{exact_boltzmann, exact_ground_state};
+pub use ising::{edge_index, IsingProblem};

@@ -1,0 +1,279 @@
+//! Per-cell 32-bit LFSRs and the chip-level RNG bank.
+//!
+//! Each Chimera unit cell holds one 32-bit LFSR advanced by its decimated
+//! clock. A 32-bit register yields only 4 unique 8-bit lanes per cycle,
+//! but each cell needs 8 random codes (one per p-bit); the die routes the
+//! **normal bit sequence to the 4 vertical nodes and the bit-reversed
+//! sequence to the 4 horizontal nodes** (paper, RNG paragraph). The RNG
+//! DAC converts each 8-bit code to a uniform differential current in
+//! (−1, +1) full-scale.
+
+use super::decimator::{DecimatedClocks, N_USED};
+use super::lfsr::{Lfsr, LFSR32_TAPS};
+
+/// One unit cell's 32-bit LFSR with the normal/reversed lane split.
+#[derive(Debug, Clone)]
+pub struct CellRng {
+    lfsr: Lfsr,
+}
+
+impl CellRng {
+    pub fn new(seed: u64) -> Self {
+        Self { lfsr: Lfsr::new(32, &LFSR32_TAPS, seed) }
+    }
+
+    /// Advance one cell clock.
+    pub fn clock(&mut self) {
+        self.lfsr.step();
+    }
+
+    /// Raw 32-bit register (hot-path lane access).
+    #[inline]
+    pub fn state32(&self) -> u32 {
+        self.lfsr.state() as u32
+    }
+
+    /// The four 8-bit lanes of the register (normal bit order) — routed
+    /// to the vertical p-bits k = 0..3.
+    pub fn vertical_codes(&self) -> [u8; 4] {
+        let s = self.lfsr.state() as u32;
+        [(s >> 24) as u8, (s >> 16) as u8, (s >> 8) as u8, s as u8]
+    }
+
+    /// The same four lanes bit-reversed — routed to the horizontal
+    /// p-bits k = 0..3.
+    pub fn horizontal_codes(&self) -> [u8; 4] {
+        let v = self.vertical_codes();
+        [v[0].reverse_bits(), v[1].reverse_bits(), v[2].reverse_bits(), v[3].reverse_bits()]
+    }
+
+    /// All 8 codes in spin order (vertical 0..3, horizontal 0..3).
+    pub fn codes(&self) -> [u8; 8] {
+        let v = self.vertical_codes();
+        let h = self.horizontal_codes();
+        [v[0], v[1], v[2], v[3], h[0], h[1], h[2], h[3]]
+    }
+}
+
+/// Map an 8-bit RNG-DAC code to a uniform value in (−1, 1).
+///
+/// The differential DAC output is (code − 127.5)/128, covering ±255/256
+/// of full scale in 256 equal steps — strictly inside (−1, 1), matching
+/// a real ladder whose top code lands one LSB short of the reference.
+#[inline]
+pub fn code_to_uniform(code: u8) -> f32 {
+    (code as f32 - 127.5) / 128.0
+}
+
+/// Precomputed DAC transfer (hot-path form of [`code_to_uniform`]).
+static UNIFORM_LUT: [f32; 256] = {
+    let mut lut = [0.0f32; 256];
+    let mut c = 0usize;
+    while c < 256 {
+        lut[c] = (c as f32 - 127.5) / 128.0;
+        c += 1;
+    }
+    lut
+};
+
+/// Same transfer through the bit-reversed lane routing (horizontal
+/// p-bits): LUT over the un-reversed code.
+static UNIFORM_REV_LUT: [f32; 256] = {
+    let mut lut = [0.0f32; 256];
+    let mut c = 0usize;
+    while c < 256 {
+        lut[c] = ((c as u8).reverse_bits() as f32 - 127.5) / 128.0;
+        c += 1;
+    }
+    lut
+};
+
+/// The whole chip's RNG: decimator + 55 cell LFSRs.
+#[derive(Debug, Clone)]
+pub struct ChipRngBank {
+    clocks: DecimatedClocks,
+    cells: Vec<CellRng>,
+}
+
+impl ChipRngBank {
+    pub fn new(seed: u64) -> Self {
+        let cells = (0..N_USED)
+            .map(|k| {
+                // distinct per-cell power-up states (silicon would have
+                // random flop init; we make it reproducible).
+                let s = splitmix(seed.wrapping_add(0x100 + k as u64));
+                CellRng::new(s)
+            })
+            .collect();
+        Self { clocks: DecimatedClocks::new(seed), cells }
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Advance one 200 MHz master cycle: clock the cells whose derived
+    /// clock fired. Returns the enable word for observability.
+    pub fn master_cycle(&mut self) -> u64 {
+        let en = self.clocks.step_used();
+        let mut w = en;
+        while w != 0 {
+            let k = w.trailing_zeros() as usize;
+            self.cells[k].clock();
+            w &= w - 1;
+        }
+        en
+    }
+
+    /// Master cycles per sample period before the end-of-period strobe.
+    const REFRESH_CYCLES: usize = 48;
+
+    /// One sample period of RNG activity: 48 decimated master cycles,
+    /// then an end-of-period strobe that clocks any cell the decimator
+    /// missed — every cell advances ≥ once per sample, bounded work.
+    pub fn refresh_all(&mut self) {
+        let mut pending = (1u64 << N_USED) - 1;
+        for _ in 0..Self::REFRESH_CYCLES {
+            pending &= !self.master_cycle();
+            if pending == 0 {
+                break;
+            }
+        }
+        // end-of-period strobe (the chip's sample clock forces a final
+        // shift on lagging cells so no p-bit sees a stale random twice)
+        while pending != 0 {
+            let k = pending.trailing_zeros() as usize;
+            self.cells[k].clock();
+            pending &= pending - 1;
+        }
+    }
+
+    /// Current uniform values for every spin of every cell,
+    /// `[cell][spin-in-cell]`, in (−1, 1).
+    pub fn uniforms(&self) -> Vec<[f32; 8]> {
+        self.cells
+            .iter()
+            .map(|c| {
+                let codes = c.codes();
+                std::array::from_fn(|i| code_to_uniform(codes[i]))
+            })
+            .collect()
+    }
+
+    /// Fill a flat `[N_PAD]` slab with per-spin uniforms (padding = 0).
+    pub fn fill_slab(&mut self, slab: &mut [f32]) {
+        self.refresh_all();
+        for (cell, c) in self.cells.iter().enumerate() {
+            // hot path: LUT lookups straight off the register lanes
+            // (identical values to code_to_uniform / reverse_bits).
+            let s = c.state32();
+            let base = cell * 8;
+            let bytes = [(s >> 24) as u8, (s >> 16) as u8, (s >> 8) as u8, s as u8];
+            slab[base] = UNIFORM_LUT[bytes[0] as usize];
+            slab[base + 1] = UNIFORM_LUT[bytes[1] as usize];
+            slab[base + 2] = UNIFORM_LUT[bytes[2] as usize];
+            slab[base + 3] = UNIFORM_LUT[bytes[3] as usize];
+            slab[base + 4] = UNIFORM_REV_LUT[bytes[0] as usize];
+            slab[base + 5] = UNIFORM_REV_LUT[bytes[1] as usize];
+            slab[base + 6] = UNIFORM_REV_LUT[bytes[2] as usize];
+            slab[base + 7] = UNIFORM_REV_LUT[bytes[3] as usize];
+        }
+        for v in slab.iter_mut().skip(self.cells.len() * 8) {
+            *v = 0.0;
+        }
+    }
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_layout() {
+        let c = CellRng::new(0x1234_5678);
+        let v = c.vertical_codes();
+        assert_eq!(v, [0x12, 0x34, 0x56, 0x78]);
+        let h = c.horizontal_codes();
+        assert_eq!(h[0], 0x12u8.reverse_bits());
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut acc = 0.0f64;
+        let n = 256;
+        for code in 0..=255u8 {
+            let u = code_to_uniform(code);
+            assert!(u > -1.0 && u < 1.0);
+            acc += u as f64;
+        }
+        assert!((acc / n as f64).abs() < 1e-6, "DAC not symmetric");
+    }
+
+    #[test]
+    fn bank_refresh_clocks_every_cell() {
+        let mut bank = ChipRngBank::new(5);
+        let before: Vec<[u8; 8]> = bank.cells.iter().map(|c| c.codes()).collect();
+        bank.refresh_all();
+        let after: Vec<[u8; 8]> = bank.cells.iter().map(|c| c.codes()).collect();
+        let changed = before.iter().zip(&after).filter(|(b, a)| b != a).count();
+        assert_eq!(changed, N_USED, "refresh_all must clock all 55 cells");
+    }
+
+    #[test]
+    fn slab_fills_all_active_lanes() {
+        let mut bank = ChipRngBank::new(9);
+        let mut slab = vec![9.0f32; crate::N_PAD];
+        bank.fill_slab(&mut slab);
+        assert!(slab[..440].iter().all(|&u| (-1.0..1.0).contains(&u)));
+        assert!(slab[440..].iter().all(|&u| u == 0.0));
+    }
+
+    /// The paper flags the normal/reversed sequence trick as a possible
+    /// correlation source but reports no degradation; quantify it: the
+    /// correlation between a lane and its reversal across time must be
+    /// small.
+    #[test]
+    fn reversed_lane_correlation_is_small() {
+        let mut c = CellRng::new(0xBEEF);
+        let n = 20_000;
+        let (mut sv, mut sh, mut svh, mut svv, mut shh) = (0.0, 0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            c.clock();
+            let v = code_to_uniform(c.vertical_codes()[0]) as f64;
+            let h = code_to_uniform(c.horizontal_codes()[0]) as f64;
+            sv += v;
+            sh += h;
+            svh += v * h;
+            svv += v * v;
+            shh += h * h;
+        }
+        let nf = n as f64;
+        let cov = svh / nf - (sv / nf) * (sh / nf);
+        let corr = cov / ((svv / nf - (sv / nf).powi(2)).sqrt() * (shh / nf - (sh / nf).powi(2)).sqrt());
+        assert!(corr.abs() < 0.05, "normal/reversed correlation {corr}");
+    }
+
+    #[test]
+    fn distinct_cells_decorrelated() {
+        let mut bank = ChipRngBank::new(2);
+        let mut agree = 0usize;
+        let n = 2_000;
+        for _ in 0..n {
+            bank.refresh_all();
+            let u = bank.uniforms();
+            if (u[0][0] > 0.0) == (u[1][0] > 0.0) {
+                agree += 1;
+            }
+        }
+        let frac = agree as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.06, "cells 0/1 sign agreement {frac}");
+    }
+}

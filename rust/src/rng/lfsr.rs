@@ -1,0 +1,151 @@
+//! Fibonacci linear-feedback shift registers.
+
+/// Maximal-length taps for a 32-bit LFSR (x³² + x²² + x² + x + 1),
+/// expressed as bit positions (0-based) XORed into the feedback.
+pub const LFSR32_TAPS: [u32; 4] = [31, 21, 1, 0];
+
+/// Maximal-length taps for a 63-bit LFSR (x⁶³ + x⁶² + 1) — used for the
+/// two fast seed LFSRs feeding the decimator.
+pub const LFSR63_TAPS: [u32; 2] = [62, 61];
+
+/// A Fibonacci LFSR over up to 64 bits.
+///
+/// `step()` shifts left by one, feeding back the XOR of the tap bits;
+/// the output bit is the bit shifted out (MSB of the register).
+#[derive(Debug, Clone)]
+pub struct Lfsr {
+    state: u64,
+    width: u32,
+    /// OR of 1<<tap — feedback computed branchlessly via popcount parity.
+    tap_mask: u64,
+}
+
+impl Lfsr {
+    /// Create with a nonzero seed (an all-zero LFSR is stuck; the seed is
+    /// forced nonzero the way the chip's reset tree does).
+    pub fn new(width: u32, taps: &[u32], seed: u64) -> Self {
+        assert!(width >= 2 && width <= 64, "width {width} out of range");
+        assert!(taps.iter().all(|&t| t < width), "tap beyond width");
+        let mask = Self::mask_for(width);
+        let mut state = seed & mask;
+        if state == 0 {
+            state = 1; // hardware reset forces a lane high
+        }
+        let tap_mask = taps.iter().fold(0u64, |acc, &t| acc | (1u64 << t));
+        Self { state, width, tap_mask }
+    }
+
+    fn mask_for(width: u32) -> u64 {
+        if width == 64 {
+            u64::MAX
+        } else {
+            (1u64 << width) - 1
+        }
+    }
+
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Advance one clock; returns the output (shifted-out) bit.
+    #[inline]
+    pub fn step(&mut self) -> u8 {
+        let out = ((self.state >> (self.width - 1)) & 1) as u8;
+        // XOR of the tap bits == parity of state & tap_mask (branchless).
+        let fb = ((self.state & self.tap_mask).count_ones() & 1) as u64;
+        self.state = ((self.state << 1) | fb) & Self::mask_for(self.width);
+        out
+    }
+
+    /// Advance `n` clocks, returning the last output bit.
+    pub fn step_n(&mut self, n: usize) -> u8 {
+        let mut last = 0;
+        for _ in 0..n {
+            last = self.step();
+        }
+        last
+    }
+
+    /// Read `bits` output bits MSB-first as an integer.
+    pub fn next_bits(&mut self, bits: u32) -> u64 {
+        assert!(bits <= 64);
+        let mut v = 0u64;
+        for _ in 0..bits {
+            v = (v << 1) | self.step() as u64;
+        }
+        v
+    }
+
+    /// The low `bits` of the raw register (the chip taps register lanes
+    /// directly rather than serializing, for the per-cell value reads).
+    pub fn window(&self, bits: u32) -> u64 {
+        self.state & Self::mask_for(bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_seed_unsticks() {
+        let mut l = Lfsr::new(8, &[7, 5, 4, 3], 0);
+        assert_ne!(l.state(), 0);
+        l.step_n(100);
+        assert_ne!(l.state(), 0);
+    }
+
+    #[test]
+    fn small_lfsr_is_maximal_length() {
+        // 8-bit maximal taps x^8+x^6+x^5+x^4+1 → period 255.
+        let taps = [7, 5, 4, 3];
+        let mut l = Lfsr::new(8, &taps, 0xA5);
+        let start = l.state();
+        let mut period = 0usize;
+        loop {
+            l.step();
+            period += 1;
+            if l.state() == start || period > 300 {
+                break;
+            }
+        }
+        assert_eq!(period, 255);
+    }
+
+    #[test]
+    fn lfsr32_taps_give_long_period() {
+        // Don't walk 2^32 states; check no short cycle within 1e6 steps.
+        let mut l = Lfsr::new(32, &LFSR32_TAPS, 0xDEADBEEF);
+        let start = l.state();
+        for i in 1..=1_000_000usize {
+            l.step();
+            assert!(!(l.state() == start && i < 1_000_000), "short cycle at {i}");
+        }
+    }
+
+    #[test]
+    fn output_bits_balanced() {
+        let mut l = Lfsr::new(32, &LFSR32_TAPS, 12345);
+        let n = 100_000;
+        let ones: u32 = (0..n).map(|_| l.step() as u32).sum();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "bit bias {frac}");
+    }
+
+    #[test]
+    fn window_reads_low_bits() {
+        let l = Lfsr::new(32, &LFSR32_TAPS, 0x1234_5678);
+        assert_eq!(l.window(8), 0x78);
+        assert_eq!(l.window(16), 0x5678);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tap_beyond_width_panics() {
+        Lfsr::new(8, &[8], 1);
+    }
+}

@@ -1,0 +1,21 @@
+//! Random-number substrate: the chip's decimated-LFSR RNG, reproduced
+//! structurally, plus a fast splitmix/xoshiro generator for host-side
+//! sampling (mismatch personalities, workloads).
+//!
+//! On the die (paper, RNG section): bitstreams from **two LFSRs clocked at
+//! 200 MHz** are decimated into **64 unique random clocks**, of which
+//! **55** drive a **32-bit LFSR in each Chimera unit cell**. Each cell
+//! LFSR yields only 4 unique 8-bit values per cycle, so the **vertical
+//! nodes read the normal bit sequence and the horizontal nodes the
+//! reversed sequence** — trading a possible correlation for area, which
+//! the paper reports as harmless and which `tests` quantify.
+
+mod cellrng;
+mod decimator;
+mod lfsr;
+mod pcg;
+
+pub use cellrng::{code_to_uniform, CellRng, ChipRngBank};
+pub use decimator::{DecimatedClocks, N_CLOCKS, N_USED};
+pub use lfsr::{Lfsr, LFSR32_TAPS, LFSR63_TAPS};
+pub use pcg::HostRng;

@@ -1,0 +1,160 @@
+//! Host-side PRNG (splitmix64-seeded xoshiro256++) for everything that is
+//! *not* chip randomness: mismatch personalities, workload generation,
+//! test fixtures. Deterministic, dependency-free, not cryptographic.
+
+/// xoshiro256++ with convenience samplers.
+#[derive(Debug, Clone)]
+pub struct HostRng {
+    s: [u64; 4],
+    /// cached second normal from Box–Muller
+    spare: Option<f64>,
+}
+
+impl HostRng {
+    pub fn new(seed: u64) -> Self {
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.uniform() * n as f64) as usize % n.max(1)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// N(mu, sigma²).
+    pub fn normal_ms(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Random spin ±1.
+    #[inline]
+    pub fn spin(&mut self) -> i8 {
+        if self.next_u64() & 1 == 0 {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = HostRng::new(42);
+        let mut b = HostRng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut r = HostRng::new(1);
+        let n = 100_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            acc += u;
+        }
+        assert!((acc / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = HostRng::new(2);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn spin_balanced() {
+        let mut r = HostRng::new(3);
+        let s: i32 = (0..100_000).map(|_| r.spin() as i32).sum();
+        assert!(s.abs() < 2_000);
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = HostRng::new(4);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

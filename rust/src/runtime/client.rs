@@ -1,0 +1,91 @@
+//! PJRT client wrapper: HLO text → compiled executable → execute.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::literal::{literal_f32, TensorF32};
+
+/// Process-wide PJRT runtime. Cheap to clone (Arc inside the xla crate).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client. One per process is plenty; executables
+    /// keep a handle to it.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
+        Ok(Executable {
+            inner: Arc::new(exe),
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled AOT artifact, executable from the request path.
+///
+/// All artifacts are lowered with `return_tuple=True`, so the raw output
+/// is always a tuple; [`Executable::run`] unpacks it into its elements.
+#[derive(Clone)]
+pub struct Executable {
+    inner: Arc<xla::PjRtLoadedExecutable>,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host tensors, returning the tuple elements as literals.
+    pub fn run_raw(&self, inputs: &[TensorF32]) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(literal_f32)
+            .collect::<Result<_>>()
+            .with_context(|| format!("building inputs for {}", self.name))?;
+        let out = self
+            .inner
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {}: {e}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple result of {}: {e}", self.name))
+    }
+
+    /// Execute and flatten every tuple element to a host `Vec<f32>`.
+    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        self.run_raw(inputs)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec {}: {e}", self.name)))
+            .collect()
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact registry: the manifest written by `python -m compile.aot` and
+//! the set of compiled executables the coordinator serves from.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::client::{Executable, Runtime};
+use crate::util::json::Json;
+
+/// One artifact's entry in `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub sweeps: Option<usize>,
+}
+
+/// Global facts about the lowered model.
+#[derive(Debug, Clone)]
+pub struct ManifestMeta {
+    pub n_pad: usize,
+    pub n_spins: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub s_sweeps: usize,
+    pub s_trace: usize,
+    pub gibbs_batches: Vec<usize>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: HashMap<String, ManifestEntry>,
+    pub meta: ManifestMeta,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+        let meta_v = root.req("_meta")?;
+        let meta = ManifestMeta {
+            n_pad: meta_v.req("n_pad")?.as_usize()?,
+            n_spins: meta_v.req("n_spins")?.as_usize()?,
+            rows: meta_v.req("rows")?.as_usize()?,
+            cols: meta_v.req("cols")?.as_usize()?,
+            s_sweeps: meta_v.req("s_sweeps")?.as_usize()?,
+            s_trace: meta_v.req("s_trace")?.as_usize()?,
+            gibbs_batches: meta_v.req("gibbs_batches")?.usize_array()?,
+        };
+        let mut entries = HashMap::new();
+        for (k, v) in root.as_obj()? {
+            if k == "_meta" {
+                continue;
+            }
+            let inputs = v
+                .req("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|a| a.usize_array())
+                .collect::<Result<Vec<_>>>()?;
+            let sweeps = match v.get("sweeps") {
+                Some(Json::Null) | None => None,
+                Some(x) => Some(x.as_usize()?),
+            };
+            entries.insert(
+                k.clone(),
+                ManifestEntry { file: v.req("file")?.as_str()?.to_string(), inputs, sweeps },
+            );
+        }
+        Ok(Self { entries, meta, dir: dir.to_path_buf() })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries.get(name).ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
+    }
+}
+
+/// All compiled executables needed to serve the chip model.
+pub struct ArtifactSet {
+    pub manifest: Manifest,
+    exes: HashMap<String, Executable>,
+}
+
+impl ArtifactSet {
+    /// Compile every artifact in the manifest on the given runtime.
+    pub fn load_all(rt: &Runtime, dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut exes = HashMap::new();
+        for (name, e) in &manifest.entries {
+            let exe = rt.load_hlo_text(&dir.join(&e.file))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Self { manifest, exes })
+    }
+
+    /// Compile only the named artifacts (faster startup for examples).
+    pub fn load_some(rt: &Runtime, dir: &Path, names: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let mut exes = HashMap::new();
+        for &name in names {
+            let e = manifest.entry(name)?;
+            exes.insert(name.to_string(), rt.load_hlo_text(&dir.join(&e.file))?);
+        }
+        Ok(Self { manifest, exes })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.exes.get(name).ok_or_else(|| anyhow!("artifact `{name}` not loaded"))
+    }
+
+    /// Pick the gibbs artifact whose batch capacity best fits `batch`
+    /// (smallest capacity ≥ batch, else the largest available).
+    pub fn gibbs_for_batch(&self, batch: usize) -> Result<(&Executable, usize)> {
+        let mut sizes: Vec<usize> = self.manifest.meta.gibbs_batches.clone();
+        sizes.sort_unstable();
+        let cap = sizes
+            .iter()
+            .copied()
+            .find(|&b| b >= batch)
+            .or_else(|| sizes.last().copied())
+            .ok_or_else(|| anyhow!("no gibbs artifacts in manifest"))?;
+        Ok((self.get(&format!("gibbs_b{cap}"))?, cap))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.exes.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let dir = crate::config::repo_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.meta.n_spins, 440);
+        assert_eq!(m.meta.n_pad, 448);
+        assert!(m.entries.contains_key("gibbs_b32"));
+        let e = m.entry("gibbs_b32").unwrap();
+        assert_eq!(e.inputs[0], vec![32, 448]);
+        assert_eq!(e.sweeps, Some(m.meta.s_sweeps));
+        assert!(m.entry("cd_update").unwrap().sweeps.is_none());
+    }
+}

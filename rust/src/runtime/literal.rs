@@ -1,0 +1,85 @@
+//! Host-side tensor type and conversions to/from `xla::Literal`.
+
+use anyhow::{anyhow, Result};
+
+/// A dense row-major f32 tensor on the host.
+///
+/// This is the only data type that crosses the rust ⇄ PJRT boundary; all
+/// chip state (spins, effective couplings, LFSR random slabs) is staged
+/// through it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "dims {dims:?} inconsistent with data length {}",
+            data.len()
+        );
+        Self { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        let len = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![0.0; len] }
+    }
+
+    pub fn filled(dims: &[usize], v: f32) -> Self {
+        let len = dims.iter().product();
+        Self { dims: dims.to_vec(), data: vec![v; len] }
+    }
+
+    pub fn scalar1(v: f32) -> Self {
+        Self { dims: vec![1], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Build an `xla::Literal` from a host tensor.
+pub fn literal_f32(t: &TensorF32) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.dims))
+}
+
+/// Extract a host vector from a literal (dims must be known by caller).
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_product_checked() {
+        let t = TensorF32::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorF32::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn zeros_and_filled() {
+        assert_eq!(TensorF32::zeros(&[4]).data, vec![0.0; 4]);
+        assert_eq!(TensorF32::filled(&[2, 2], 1.5).data, vec![1.5; 4]);
+        assert_eq!(TensorF32::scalar1(2.0).dims, vec![1]);
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load and execute the AOT artifacts from the rust hot path.
+//!
+//! `make artifacts` lowers the L2 jax chip model to HLO *text* (the
+//! interchange format xla_extension 0.5.1 accepts — serialized protos from
+//! jax ≥ 0.5 carry 64-bit instruction ids it rejects). This module wraps
+//! the `xla` crate: one [`Runtime`] (PJRT CPU client) per process, one
+//! compiled [`Executable`] per artifact, reused across every request.
+//! Python is never on this path.
+
+mod client;
+mod executables;
+mod literal;
+
+pub use client::{Executable, Runtime};
+pub use executables::{ArtifactSet, Manifest, ManifestEntry};
+pub use literal::{literal_f32, literal_to_vec, TensorF32};

@@ -1,0 +1,62 @@
+//! Hardware-honest clamping: freeze a spin by zeroing its tanh slope and
+//! driving its offset to ±CLAMP_OFFSET.
+//!
+//! With g=0 the synaptic current is ignored; tanh(±10) ≈ ±(1−4e−9) beats
+//! every RNG-DAC code (max |u| = 255/256 ≈ 0.996), so the comparator
+//! always resolves to the clamped value — exactly what a bench clamp
+//! through the bias DAC would do, but without consuming weight range.
+
+use crate::analog::Folded;
+
+/// Offset magnitude used for clamping (tanh(10) ≈ 1 − 4e−9).
+pub const CLAMP_OFFSET: f32 = 10.0;
+
+/// Return (g, o) with `clamps` applied on top of the folded tensors.
+pub fn apply_clamps(folded: &Folded, clamps: &[(usize, i8)]) -> (Vec<f32>, Vec<f32>) {
+    let mut g = folded.g.clone();
+    let mut o = folded.o.clone();
+    for &(i, v) in clamps {
+        debug_assert!(v == 1 || v == -1);
+        g[i] = 0.0;
+        o[i] = CLAMP_OFFSET * v as f32;
+    }
+    (g, o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::{Personality, ProgrammedWeights};
+    use crate::chimera::Topology;
+    use crate::chip::update_pbit;
+
+    #[test]
+    fn clamped_pbit_never_flips() {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        // strong opposing bias on spin 0 — the clamp must still win
+        w.h_codes[0] = -127;
+        let folded = p.fold(&t, &w);
+        let (g, o) = apply_clamps(&folded, &[(0, 1)]);
+        let mut f2 = folded.clone();
+        f2.g = g;
+        f2.o = o;
+        let state = vec![-1i8; crate::N_SPINS];
+        for u in [-0.996, -0.5, 0.0, 0.5, 0.996] {
+            assert_eq!(update_pbit(&f2, &state, 0, 5.0, u), 1, "u={u}");
+        }
+    }
+
+    #[test]
+    fn unclamped_lanes_untouched() {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let folded = p.fold(&t, &ProgrammedWeights::zeros(t.edges.len()));
+        let (g, o) = apply_clamps(&folded, &[(3, -1)]);
+        assert_eq!(g[0], folded.g[0]);
+        assert_eq!(o[0], folded.o[0]);
+        assert_eq!(g[3], 0.0);
+        assert_eq!(o[3], -CLAMP_OFFSET);
+    }
+}

@@ -1,0 +1,104 @@
+//! Samplers: three interchangeable engines for the p-bit update loop.
+//!
+//! * [`SoftwareSampler`] — optimized pure-rust chromatic Gibbs (CSR over
+//!   the ≤6-neighbor Chimera adjacency). The Table 1 software baseline
+//!   and the trainer's fast path.
+//! * [`XlaSampler`] — the AOT path: executes the L2 `gibbs_b{B}` HLO
+//!   artifacts through PJRT, feeding LFSR-generated uniforms from the
+//!   rust side. This is the production request path.
+//! * [`ChipSampler`] — adapter over the cycle-level [`crate::chip::PbitChip`]
+//!   (batch 1, SPI readout) — the "measured silicon" reference.
+//!
+//! All three consume the same [`crate::analog::Folded`] tensors, so any
+//! experiment can swap engines; `rust/tests/` cross-validates them.
+
+mod clamp;
+mod noise;
+mod software;
+mod xla;
+
+pub use clamp::apply_clamps;
+pub use noise::{ChainNoise, NoiseSource};
+pub use software::SoftwareSampler;
+pub use xla::XlaSampler;
+
+use anyhow::Result;
+
+use crate::analog::Folded;
+
+/// A batched p-bit sampling engine.
+pub trait Sampler {
+    /// Load effective tensors (reprogram the problem).
+    fn load(&mut self, folded: &Folded);
+
+    /// Set the inverse temperature (V_temp knob).
+    fn set_beta(&mut self, beta: f32);
+
+    /// Clamp spins to fixed values (empty to release). Clamping is
+    /// implemented the hardware-honest way: slope to 0, offset to ±big,
+    /// so the artifact needs no special support.
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]);
+
+    /// Number of parallel chains.
+    fn batch(&self) -> usize;
+
+    /// Advance every chain by `n` full chromatic sweeps.
+    fn sweeps(&mut self, n: usize) -> Result<()>;
+
+    /// Current spin state of every chain, `[batch][N_SPINS]`.
+    fn states(&self) -> Vec<Vec<i8>>;
+
+    /// Re-randomize all chain states.
+    fn randomize(&mut self, seed: u64);
+}
+
+/// Adapter: the cycle-level chip as a batch-1 [`Sampler`].
+pub struct ChipSampler {
+    pub chip: crate::chip::PbitChip,
+    clamps: Vec<(usize, i8)>,
+}
+
+impl ChipSampler {
+    pub fn new(chip: crate::chip::PbitChip) -> Self {
+        Self { chip, clamps: Vec::new() }
+    }
+}
+
+impl Sampler for ChipSampler {
+    fn load(&mut self, _folded: &Folded) {
+        // The chip folds its own personality from its registers; loading
+        // external tensors is a no-op — program the chip via SPI instead.
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.chip.set_beta(beta as f64).expect("set_beta");
+    }
+
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.clamps = clamps.to_vec();
+        let (idx, vals): (Vec<usize>, Vec<i8>) = clamps.iter().copied().unzip();
+        self.chip.force_spins(&idx, &vals);
+    }
+
+    fn batch(&self) -> usize {
+        1
+    }
+
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        let clamped: Vec<usize> = self.clamps.iter().map(|&(i, _)| i).collect();
+        for _ in 0..n {
+            self.chip.sweep_with(crate::chip::UpdateOrder::Chromatic, &clamped);
+        }
+        Ok(())
+    }
+
+    fn states(&self) -> Vec<Vec<i8>> {
+        vec![self.chip.state().to_vec()]
+    }
+
+    fn randomize(&mut self, seed: u64) {
+        self.chip.randomize_state(seed);
+        let (idx, vals): (Vec<usize>, Vec<i8>) = self.clamps.iter().copied().unzip();
+        self.chip.force_spins(&idx, &vals);
+    }
+}

@@ -1,0 +1,124 @@
+//! Pluggable uniform-noise sources for the samplers.
+//!
+//! [`NoiseSource::Lfsr`] is chip-accurate (the decimated-LFSR bank, one
+//! per chain); [`NoiseSource::Host`] is the fast xoshiro path for
+//! software-baseline throughput runs — an ablation in itself, since it
+//! quantifies how much the LFSR's structure costs (nothing measurable;
+//! see `benches/sampler_hotpath.rs`).
+
+use crate::chimera::N_PAD;
+use crate::rng::{ChipRngBank, HostRng};
+
+/// Per-chain uniform noise generator.
+pub enum NoiseSource {
+    /// Chip-accurate decimated-LFSR banks (one per chain).
+    Lfsr(Vec<ChipRngBank>),
+    /// Fast host PRNG (one per chain).
+    Host(Vec<HostRng>),
+}
+
+impl NoiseSource {
+    pub fn lfsr(seed: u64, chains: usize) -> Self {
+        Self::Lfsr((0..chains).map(|c| ChipRngBank::new(seed.wrapping_add(c as u64))).collect())
+    }
+
+    pub fn host(seed: u64, chains: usize) -> Self {
+        Self::Host(
+            (0..chains).map(|c| HostRng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9))).collect(),
+        )
+    }
+
+    pub fn chains(&self) -> usize {
+        match self {
+            Self::Lfsr(v) => v.len(),
+            Self::Host(v) => v.len(),
+        }
+    }
+
+    /// Split into independent per-chain noise handles (for parallel
+    /// sweeps); order matches chain index.
+    pub fn split_chains(&mut self) -> Vec<ChainNoise<'_>> {
+        match self {
+            Self::Lfsr(banks) => banks.iter_mut().map(ChainNoise::Lfsr).collect(),
+            Self::Host(rngs) => rngs.iter_mut().map(ChainNoise::Host).collect(),
+        }
+    }
+
+    /// Fill `slab` (length N_PAD) with uniforms in (−1, 1) for chain `c`.
+    pub fn fill(&mut self, c: usize, slab: &mut [f32]) {
+        debug_assert_eq!(slab.len(), N_PAD);
+        match self {
+            Self::Lfsr(banks) => banks[c].fill_slab(slab),
+            Self::Host(rngs) => {
+                let r = &mut rngs[c];
+                for v in slab.iter_mut() {
+                    // map to (−1, 1) with the same 256-level quantization
+                    // as the RNG DAC so the two sources are statistically
+                    // interchangeable.
+                    let code = (r.next_u64() & 0xFF) as u8;
+                    *v = crate::rng::code_to_uniform(code);
+                }
+            }
+        }
+    }
+}
+
+/// A single chain's noise generator (borrowed out of [`NoiseSource`]).
+pub enum ChainNoise<'a> {
+    Lfsr(&'a mut ChipRngBank),
+    Host(&'a mut HostRng),
+}
+
+impl ChainNoise<'_> {
+    /// Same values as `NoiseSource::fill` for this chain.
+    #[inline]
+    pub fn fill(&mut self, slab: &mut [f32]) {
+        match self {
+            Self::Lfsr(bank) => bank.fill_slab(slab),
+            Self::Host(r) => {
+                for v in slab.iter_mut() {
+                    let code = (r.next_u64() & 0xFF) as u8;
+                    *v = crate::rng::code_to_uniform(code);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_sources_fill_in_range() {
+        for mut src in [NoiseSource::lfsr(1, 2), NoiseSource::host(1, 2)] {
+            let mut slab = vec![0.0f32; N_PAD];
+            src.fill(1, &mut slab);
+            assert!(slab[..440].iter().all(|&u| u > -1.0 && u < 1.0));
+        }
+    }
+
+    #[test]
+    fn host_source_statistics() {
+        let mut src = NoiseSource::host(3, 1);
+        let mut slab = vec![0.0f32; N_PAD];
+        let mut acc = 0.0f64;
+        let n = 500;
+        for _ in 0..n {
+            src.fill(0, &mut slab);
+            acc += slab[..440].iter().map(|&x| x as f64).sum::<f64>();
+        }
+        let mean = acc / (n as f64 * 440.0);
+        assert!(mean.abs() < 0.01, "host noise mean {mean}");
+    }
+
+    #[test]
+    fn chains_independent() {
+        let mut src = NoiseSource::lfsr(5, 2);
+        let mut a = vec![0.0f32; N_PAD];
+        let mut b = vec![0.0f32; N_PAD];
+        src.fill(0, &mut a);
+        src.fill(1, &mut b);
+        assert_ne!(a, b);
+    }
+}

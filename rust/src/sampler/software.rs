@@ -1,0 +1,333 @@
+//! Optimized pure-rust chromatic Gibbs sampler — the software baseline of
+//! Table 1 and the trainer's fast negative-phase engine.
+//!
+//! Layout: fixed-width CSR (Chimera degree ≤ 6) with the folded coupling
+//! weights gathered per target spin, so the inner loop is six fused
+//! multiply-adds, a tanh and a compare per p-bit update. Batched chains
+//! amortize noise generation and improve cache reuse of the CSR arrays.
+
+use anyhow::Result;
+
+use crate::analog::Folded;
+use crate::chimera::{Topology, N_PAD, N_SPINS};
+
+use super::clamp::apply_clamps;
+use super::noise::NoiseSource;
+use super::Sampler;
+
+/// Max couplers per p-bit on the Chimera die.
+const DEG: usize = 6;
+
+/// Pure-rust batched Gibbs engine.
+pub struct SoftwareSampler {
+    topo: Topology,
+    /// `[N_SPINS * DEG]` neighbor ids (padded with self, weight 0).
+    nbr_idx: Vec<u32>,
+    /// `[N_SPINS * DEG]` folded coupling into the target spin.
+    nbr_w: Vec<f32>,
+    h_eff: Vec<f32>,
+    g: Vec<f32>,
+    o: Vec<f32>,
+    /// base (unclamped) g/o for re-applying clamps
+    g_base: Vec<f32>,
+    o_base: Vec<f32>,
+    clamps: Vec<(usize, i8)>,
+    beta: f32,
+    /// `[batch][N_SPINS]` spin states.
+    states: Vec<Vec<i8>>,
+    noise: NoiseSource,
+    slab: Vec<f32>,
+    /// total p-bit updates performed (for flips/s accounting)
+    pub updates: u64,
+}
+
+impl SoftwareSampler {
+    /// Create with `batch` chains and the given noise source seed
+    /// (LFSR-accurate by default; see [`Self::with_noise`]).
+    pub fn new(batch: usize, seed: u64) -> Self {
+        Self::with_noise(batch, NoiseSource::lfsr(seed, batch), seed)
+    }
+
+    pub fn with_noise(batch: usize, noise: NoiseSource, seed: u64) -> Self {
+        assert_eq!(noise.chains(), batch);
+        let topo = Topology::new();
+        let mut s = Self {
+            topo,
+            nbr_idx: vec![0; N_SPINS * DEG],
+            nbr_w: vec![0.0; N_SPINS * DEG],
+            h_eff: vec![0.0; N_PAD],
+            g: vec![1.0; N_PAD],
+            o: vec![0.0; N_PAD],
+            g_base: vec![1.0; N_PAD],
+            o_base: vec![0.0; N_PAD],
+            clamps: Vec::new(),
+            beta: 1.0,
+            states: Vec::new(),
+            noise,
+            slab: vec![0.0; N_PAD],
+            updates: 0,
+        };
+        // neighbor indices are a topology fact; weights filled by load()
+        for i in 0..N_SPINS {
+            for (k, &j) in s.topo.neighbors[i].iter().enumerate() {
+                s.nbr_idx[i * DEG + k] = j as u32;
+            }
+            for k in s.topo.neighbors[i].len()..DEG {
+                s.nbr_idx[i * DEG + k] = i as u32; // self with weight 0
+            }
+        }
+        s.states = (0..batch).map(|c| random_state(seed ^ (0xA11CE + c as u64))).collect();
+        s
+    }
+
+    #[inline(always)]
+    fn update_one(&self, state: &[i8], i: usize, u: f32) -> i8 {
+        update_spin(
+            &self.nbr_idx, &self.nbr_w, &self.h_eff, &self.g, &self.o, self.beta, state, i, u,
+        )
+    }
+}
+
+/// The p-bit update over raw tensor slices (shared by the serial and
+/// parallel sweep paths).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn update_spin(
+    nbr_idx: &[u32],
+    nbr_w: &[f32],
+    h_eff: &[f32],
+    g: &[f32],
+    o: &[f32],
+    beta: f32,
+    state: &[i8],
+    i: usize,
+    u: f32,
+) -> i8 {
+    let base = i * DEG;
+    let mut cur = h_eff[i];
+    // Chimera degree is ≤ 6: fully unrolled gather.
+    for k in 0..DEG {
+        cur += nbr_w[base + k]
+            * unsafe { *state.get_unchecked(nbr_idx[base + k] as usize) } as f32;
+    }
+    // identical tanh tail to chip::pbit::decide (incl. the bit-exact
+    // saturation fast path) — keeps the engines in lockstep.
+    let x = beta * g[i] * cur + o[i];
+    let act = if x >= crate::chip::TANH_SAT {
+        1.0
+    } else if x <= -crate::chip::TANH_SAT {
+        -1.0
+    } else {
+        x.tanh()
+    };
+    if act + u >= 0.0 {
+        1
+    } else {
+        -1
+    }
+}
+
+fn random_state(seed: u64) -> Vec<i8> {
+    let mut r = crate::rng::HostRng::new(seed);
+    (0..N_SPINS).map(|_| r.spin()).collect()
+}
+
+impl Sampler for SoftwareSampler {
+    fn load(&mut self, folded: &Folded) {
+        for i in 0..N_SPINS {
+            for (k, &j) in self.topo.neighbors[i].iter().enumerate() {
+                // current into i from m_j
+                self.nbr_w[i * DEG + k] = folded.j_eff(i, j);
+            }
+        }
+        self.h_eff.copy_from_slice(&folded.h_eff);
+        self.g_base.copy_from_slice(&folded.g);
+        self.o_base.copy_from_slice(&folded.o);
+        let (g, o) = apply_clamps(folded, &self.clamps);
+        self.g = g;
+        self.o = o;
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.beta = beta;
+    }
+
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.clamps = clamps.to_vec();
+        self.g.copy_from_slice(&self.g_base);
+        self.o.copy_from_slice(&self.o_base);
+        for &(i, v) in clamps {
+            self.g[i] = 0.0;
+            self.o[i] = super::clamp::CLAMP_OFFSET * v as f32;
+        }
+        for chain in self.states.iter_mut() {
+            for &(i, v) in clamps {
+                chain[i] = v;
+            }
+        }
+    }
+
+    fn batch(&self) -> usize {
+        self.states.len()
+    }
+
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        let batch = self.states.len();
+        self.updates += (n * batch * N_SPINS) as u64;
+        // Chains are fully independent (own state, own noise bank), so
+        // spread them over scoped threads when the work amortizes the
+        // spawn cost; the per-chain sequences are identical either way.
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        if cores > 1 && batch >= 4 && n * batch >= 32 {
+            // field-level split borrows: states/noise mutable per chain,
+            // everything else shared read-only
+            let states = &mut self.states;
+            let chains = self.noise.split_chains();
+            let (nbr_idx, nbr_w) = (&self.nbr_idx, &self.nbr_w);
+            let (h_eff, g, o) = (&self.h_eff, &self.g, &self.o);
+            let (beta, groups) = (self.beta, &self.topo.color_groups);
+            std::thread::scope(|scope| {
+                for (state, mut noise) in states.iter_mut().zip(chains) {
+                    scope.spawn(move || {
+                        let mut slab = vec![0.0f32; N_PAD];
+                        for _ in 0..n {
+                            for phase in 0..2 {
+                                noise.fill(&mut slab);
+                                for &i in &groups[phase] {
+                                    state[i] = update_spin(
+                                        nbr_idx, nbr_w, h_eff, g, o, beta, state, i, slab[i],
+                                    );
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            return Ok(());
+        }
+        for _ in 0..n {
+            for c in 0..batch {
+                let mut slab = std::mem::take(&mut self.slab);
+                let mut state = std::mem::take(&mut self.states[c]);
+                for phase in 0..2 {
+                    self.noise.fill(c, &mut slab);
+                    for &i in &self.topo.color_groups[phase] {
+                        state[i] = self.update_one(&state, i, slab[i]);
+                    }
+                }
+                self.states[c] = state;
+                self.slab = slab;
+            }
+        }
+        Ok(())
+    }
+
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.states.clone()
+    }
+
+    fn randomize(&mut self, seed: u64) {
+        for (c, chain) in self.states.iter_mut().enumerate() {
+            *chain = random_state(seed ^ (0xF00D + c as u64));
+            for &(i, v) in &self.clamps {
+                chain[i] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::{Personality, ProgrammedWeights};
+
+    fn folded_ferro_pair() -> (Folded, (usize, usize)) {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        w.j_codes[0] = 127;
+        w.enables[0] = true;
+        (p.fold(&t, &w), t.edges[0])
+    }
+
+    #[test]
+    fn ferro_pair_aligns() {
+        let (f, (a, b)) = folded_ferro_pair();
+        let mut s = SoftwareSampler::new(4, 1);
+        s.load(&f);
+        s.set_beta(6.0);
+        s.sweeps(50).unwrap();
+        let mut agree = 0;
+        let mut total = 0;
+        for _ in 0..100 {
+            s.sweeps(1).unwrap();
+            for st in s.states() {
+                agree += (st[a] == st[b]) as usize;
+                total += 1;
+            }
+        }
+        assert!(agree > total * 9 / 10, "{agree}/{total}");
+    }
+
+    #[test]
+    fn single_spin_bias_statistics() {
+        // P(+1) = (1 + tanh(β h)) / 2 for an isolated biased spin.
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        w.h_codes[10] = 64; // 64/127 ≈ 0.504
+        let f = p.fold(&t, &w);
+        let mut s = SoftwareSampler::new(8, 2);
+        s.load(&f);
+        s.set_beta(1.0);
+        s.sweeps(10).unwrap();
+        let mut up = 0usize;
+        let mut tot = 0usize;
+        for _ in 0..400 {
+            s.sweeps(1).unwrap();
+            for st in s.states() {
+                up += (st[10] == 1) as usize;
+                tot += 1;
+            }
+        }
+        let h = 64.0 / 127.0;
+        let want = (1.0 + (h as f64).tanh()) / 2.0;
+        let got = up as f64 / tot as f64;
+        assert!((got - want).abs() < 0.03, "P(up) {got} vs {want}");
+    }
+
+    #[test]
+    fn clamps_hold_through_sweeps() {
+        let (f, (a, _)) = folded_ferro_pair();
+        let mut s = SoftwareSampler::new(2, 3);
+        s.load(&f);
+        s.set_clamps(&[(a, -1)]);
+        s.sweeps(20).unwrap();
+        for st in s.states() {
+            assert_eq!(st[a], -1);
+        }
+        // release and confirm it can flip again
+        s.set_clamps(&[]);
+        s.set_beta(0.1);
+        let mut flipped = false;
+        for _ in 0..50 {
+            s.sweeps(1).unwrap();
+            flipped |= s.states().iter().any(|st| st[a] == 1);
+        }
+        assert!(flipped);
+    }
+
+    #[test]
+    fn updates_counter_tracks_flips() {
+        let mut s = SoftwareSampler::new(3, 4);
+        s.sweeps(5).unwrap();
+        assert_eq!(s.updates, 3 * 5 * N_SPINS as u64);
+    }
+
+    #[test]
+    fn host_noise_variant_runs() {
+        let mut s = SoftwareSampler::with_noise(2, NoiseSource::host(9, 2), 9);
+        s.sweeps(3).unwrap();
+        assert_eq!(s.states().len(), 2);
+    }
+}

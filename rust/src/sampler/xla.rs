@@ -1,0 +1,170 @@
+//! The AOT production path: p-bit sweeps executed by the PJRT-compiled
+//! L2 `gibbs_b{B}` artifacts.
+//!
+//! The rust side owns everything stateful — spin state, LFSR noise,
+//! clamps, β — and streams it through the personality-agnostic HLO as
+//! input tensors. One call = `s_sweeps` full chromatic sweeps (the scan
+//! is baked into the artifact so the PJRT dispatch cost is amortized;
+//! `benches/sampler_hotpath.rs` sweeps this knob).
+
+use anyhow::{Context, Result};
+
+use crate::analog::Folded;
+use crate::chimera::{N_PAD, N_SPINS};
+use crate::runtime::{ArtifactSet, Executable, TensorF32};
+
+use super::noise::NoiseSource;
+use super::Sampler;
+
+/// PJRT-backed batched Gibbs engine.
+pub struct XlaSampler {
+    exe: Executable,
+    /// sweeps per artifact call (manifest `s_sweeps`)
+    pub s_sweeps: usize,
+    batch: usize,
+    jt: TensorF32,
+    h: TensorF32,
+    g_base: Vec<f32>,
+    o_base: Vec<f32>,
+    g: TensorF32,
+    o: TensorF32,
+    /// flat [batch, N_PAD] spin state as ±1 f32
+    m: Vec<f32>,
+    beta: f32,
+    clamps: Vec<(usize, i8)>,
+    noise: NoiseSource,
+    slab: Vec<f32>,
+    u: Vec<f32>,
+    /// PJRT calls made (for dispatch-amortization accounting)
+    pub calls: u64,
+}
+
+impl XlaSampler {
+    /// Build on the gibbs artifact that fits `batch` chains.
+    pub fn new(artifacts: &ArtifactSet, batch: usize, seed: u64) -> Result<Self> {
+        let (exe, cap) = artifacts.gibbs_for_batch(batch)?;
+        let s_sweeps = artifacts.manifest.meta.s_sweeps;
+        let mut s = Self {
+            exe: exe.clone(),
+            s_sweeps,
+            batch: cap,
+            jt: TensorF32::zeros(&[N_PAD, N_PAD]),
+            h: TensorF32::zeros(&[N_PAD]),
+            g_base: vec![1.0; N_PAD],
+            o_base: vec![0.0; N_PAD],
+            g: TensorF32::filled(&[N_PAD], 1.0),
+            o: TensorF32::zeros(&[N_PAD]),
+            m: vec![1.0; cap * N_PAD],
+            beta: 1.0,
+            clamps: Vec::new(),
+            noise: NoiseSource::lfsr(seed, cap),
+            slab: vec![0.0; N_PAD],
+            u: vec![0.0; s_sweeps * 2 * cap * N_PAD],
+            calls: 0,
+        };
+        s.randomize(seed);
+        Ok(s)
+    }
+
+    fn fill_noise(&mut self) {
+        let (s_sweeps, batch) = (self.s_sweeps, self.batch);
+        for sweep in 0..s_sweeps {
+            for phase in 0..2 {
+                for c in 0..batch {
+                    self.noise.fill(c, &mut self.slab);
+                    let off = ((sweep * 2 + phase) * batch + c) * N_PAD;
+                    self.u[off..off + N_PAD].copy_from_slice(&self.slab);
+                }
+            }
+        }
+    }
+
+    fn reapply_clamps(&mut self) {
+        self.g.data.copy_from_slice(&self.g_base);
+        self.o.data.copy_from_slice(&self.o_base);
+        for &(i, v) in &self.clamps {
+            self.g.data[i] = 0.0;
+            self.o.data[i] = super::clamp::CLAMP_OFFSET * v as f32;
+        }
+        for c in 0..self.batch {
+            for &(i, v) in &self.clamps {
+                self.m[c * N_PAD + i] = v as f32;
+            }
+        }
+    }
+
+    /// Run exactly one artifact call (`s_sweeps` sweeps).
+    pub fn run_block(&mut self) -> Result<()> {
+        self.fill_noise();
+        let m_t = TensorF32::new(vec![self.batch, N_PAD], self.m.clone());
+        let u_t = TensorF32::new(vec![self.s_sweeps, 2, self.batch, N_PAD], self.u.clone());
+        let beta_t = TensorF32::scalar1(self.beta);
+        let out = self
+            .exe
+            .run(&[m_t, self.jt.clone(), self.h.clone(), self.g.clone(), self.o.clone(), u_t, beta_t])
+            .context("gibbs artifact execution")?;
+        self.m.copy_from_slice(&out[0]);
+        self.calls += 1;
+        Ok(())
+    }
+}
+
+impl Sampler for XlaSampler {
+    fn load(&mut self, folded: &Folded) {
+        self.jt.data.copy_from_slice(&folded.jt_eff);
+        self.h.data.copy_from_slice(&folded.h_eff);
+        self.g_base.copy_from_slice(&folded.g);
+        self.o_base.copy_from_slice(&folded.o);
+        self.reapply_clamps();
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.beta = beta;
+    }
+
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.clamps = clamps.to_vec();
+        self.reapply_clamps();
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Advance by at least `n` sweeps (rounded up to whole artifact
+    /// calls of `s_sweeps` each).
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        let blocks = n.div_ceil(self.s_sweeps);
+        for _ in 0..blocks {
+            self.run_block()?;
+        }
+        Ok(())
+    }
+
+    fn states(&self) -> Vec<Vec<i8>> {
+        (0..self.batch)
+            .map(|c| {
+                self.m[c * N_PAD..c * N_PAD + N_SPINS]
+                    .iter()
+                    .map(|&x| if x >= 0.0 { 1i8 } else { -1i8 })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn randomize(&mut self, seed: u64) {
+        // Same per-chain seeding discipline as SoftwareSampler::randomize
+        // so cross-engine tests can start from identical states.
+        for c in 0..self.batch {
+            let mut r = crate::rng::HostRng::new(seed ^ (0xF00D + c as u64));
+            for i in 0..N_PAD {
+                self.m[c * N_PAD + i] = if i < N_SPINS { r.spin() as f32 } else { 1.0 };
+            }
+        }
+        for c in 0..self.batch {
+            for &(i, v) in &self.clamps {
+                self.m[c * N_PAD + i] = v as f32;
+            }
+        }
+    }
+}

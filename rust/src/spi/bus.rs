@@ -1,0 +1,198 @@
+//! Bit-serial SPI transaction layer.
+//!
+//! Frame format (32 clocks, MSB first):
+//!
+//! ```text
+//! [ r/w (1) | addr (16) | data (8) | crc7 (7) ]
+//! ```
+//!
+//! The CRC is a 7-bit polynomial (0x09, as in SD cards) over the first
+//! 25 bits; a frame with a bad CRC is rejected by the slave, modeling
+//! the noisy shared-supply environment the paper's methodology accepts.
+
+use anyhow::{bail, Result};
+
+use super::regmap::{Address, RegMap};
+
+/// Bits per SPI frame.
+pub const FRAME_BITS: usize = 32;
+
+/// A decoded SPI frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpiFrame {
+    pub write: bool,
+    pub addr: u16,
+    pub data: u8,
+}
+
+impl SpiFrame {
+    pub fn write(addr: u16, data: u8) -> Self {
+        Self { write: true, addr, data }
+    }
+
+    pub fn read(addr: u16) -> Self {
+        Self { write: false, addr, data: 0 }
+    }
+
+    /// Serialize to the 32-bit wire word.
+    pub fn to_wire(&self) -> u32 {
+        let payload: u32 =
+            ((self.write as u32) << 24) | ((self.addr as u32) << 8) | self.data as u32;
+        (payload << 7) | crc7(payload) as u32
+    }
+
+    /// Deserialize and CRC-check a wire word.
+    pub fn from_wire(word: u32) -> Result<Self> {
+        let payload = word >> 7;
+        let crc = (word & 0x7F) as u8;
+        if crc7(payload) != crc {
+            bail!("SPI CRC mismatch on word {word:#010x}");
+        }
+        Ok(Self {
+            write: (payload >> 24) & 1 == 1,
+            addr: ((payload >> 8) & 0xFFFF) as u16,
+            data: (payload & 0xFF) as u8,
+        })
+    }
+}
+
+fn crc7(payload25: u32) -> u8 {
+    // CRC-7/MMC over the 25 payload bits, MSB first.
+    let mut crc: u8 = 0;
+    for k in (0..25).rev() {
+        let bit = ((payload25 >> k) & 1) as u8;
+        let msb = (crc >> 6) & 1;
+        crc = ((crc << 1) | bit) & 0x7F;
+        if msb == 1 {
+            crc ^= 0x09;
+        }
+    }
+    // flush 7 zero bits
+    for _ in 0..7 {
+        let msb = (crc >> 6) & 1;
+        crc = (crc << 1) & 0x7F;
+        if msb == 1 {
+            crc ^= 0x09;
+        }
+    }
+    crc
+}
+
+/// The SPI slave: shifts frames in/out of the register map and counts
+/// wire clocks (the basis for program-time accounting in TTS).
+#[derive(Debug)]
+pub struct SpiBus {
+    pub clocks_elapsed: u64,
+}
+
+impl SpiBus {
+    pub fn new() -> Self {
+        Self { clocks_elapsed: 0 }
+    }
+
+    /// Execute one frame against the register file. Returns read data
+    /// (writes echo the written byte).
+    pub fn transact(&mut self, regs: &mut RegMap, frame: SpiFrame) -> Result<u8> {
+        self.clocks_elapsed += FRAME_BITS as u64;
+        let addr = Address::decode(frame.addr, regs.n_edges())?;
+        if frame.write {
+            regs.write(addr, frame.data)?;
+            Ok(frame.data)
+        } else {
+            regs.read(addr)
+        }
+    }
+
+    /// Round-trip a frame through the wire encoding (exercises CRC).
+    pub fn transact_wire(&mut self, regs: &mut RegMap, word: u32) -> Result<u8> {
+        let frame = SpiFrame::from_wire(word)?;
+        self.transact(regs, frame)
+    }
+
+    /// Program a whole problem: couplings, enables, biases. Returns the
+    /// number of frames sent (for time accounting).
+    pub fn program_problem(
+        &mut self,
+        regs: &mut RegMap,
+        j_codes: &[i8],
+        enables: &[bool],
+        h_codes: &[i8],
+    ) -> Result<u64> {
+        let mut frames = 0u64;
+        for (e, &c) in j_codes.iter().enumerate() {
+            self.transact(regs, SpiFrame::write(Address::Coupling(e).encode(), c as u8))?;
+            frames += 1;
+        }
+        for (e, &en) in enables.iter().enumerate() {
+            self.transact(regs, SpiFrame::write(Address::Enable(e).encode(), en as u8))?;
+            frames += 1;
+        }
+        for (s, &h) in h_codes.iter().enumerate() {
+            self.transact(regs, SpiFrame::write(Address::Bias(s).encode(), h as u8))?;
+            frames += 1;
+        }
+        Ok(frames)
+    }
+}
+
+impl Default for SpiBus {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chimera::Topology;
+
+    #[test]
+    fn wire_roundtrip() {
+        for frame in [SpiFrame::write(0x1234, 0xAB), SpiFrame::read(0x2007), SpiFrame::write(0, 0)]
+        {
+            assert_eq!(SpiFrame::from_wire(frame.to_wire()).unwrap(), frame);
+        }
+    }
+
+    #[test]
+    fn corrupted_word_rejected() {
+        let w = SpiFrame::write(0x0005, 0x5A).to_wire();
+        for bit in [0u32, 3, 8, 20, 31] {
+            assert!(SpiFrame::from_wire(w ^ (1 << bit)).is_err(), "bit {bit} undetected");
+        }
+    }
+
+    #[test]
+    fn transact_write_then_read() {
+        let t = Topology::new();
+        let mut regs = RegMap::new(&t);
+        let mut bus = SpiBus::new();
+        bus.transact(&mut regs, SpiFrame::write(0x0002, 99)).unwrap();
+        let v = bus.transact(&mut regs, SpiFrame::read(0x0002)).unwrap();
+        assert_eq!(v, 99);
+        assert_eq!(bus.clocks_elapsed, 2 * FRAME_BITS as u64);
+    }
+
+    #[test]
+    fn program_problem_counts_frames() {
+        let t = Topology::new();
+        let mut regs = RegMap::new(&t);
+        let mut bus = SpiBus::new();
+        let ne = t.edges.len();
+        let frames = bus
+            .program_problem(&mut regs, &vec![1; ne], &vec![true; ne], &vec![0; 440])
+            .unwrap();
+        assert_eq!(frames, (2 * ne + 440) as u64);
+        assert!(regs.weights.enables.iter().all(|&e| e));
+    }
+
+    #[test]
+    fn wire_transact_path() {
+        let t = Topology::new();
+        let mut regs = RegMap::new(&t);
+        let mut bus = SpiBus::new();
+        let word = SpiFrame::write(0x2000, 0x7F).to_wire();
+        bus.transact_wire(&mut regs, word).unwrap();
+        assert_eq!(regs.weights.h_codes[0], 0x7F);
+    }
+}

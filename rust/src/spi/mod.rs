@@ -1,0 +1,14 @@
+//! SPI interface simulation: the weight-load / spin-readout path.
+//!
+//! The die's dead cell hosts the SPI slave through which the host
+//! programs 8-bit coupling codes, enable bits and biases, and reads spin
+//! states back. The coordinator drives this exactly like a lab bench
+//! would, so the program/readback path (including its serialization
+//! cost, which Table 1-style TTS accounting must amortize) is exercised
+//! end-to-end.
+
+mod bus;
+mod regmap;
+
+pub use bus::{SpiBus, SpiFrame, FRAME_BITS};
+pub use regmap::{Address, RegMap};

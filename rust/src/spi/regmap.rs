@@ -1,0 +1,237 @@
+//! Chip register map.
+//!
+//! Address space (16-bit):
+//!
+//! | range | register |
+//! |---|---|
+//! | `0x0000 + e` | coupling code of canonical edge `e` (i8) |
+//! | `0x1000 + e` | enable bit of edge `e` (bit 0) |
+//! | `0x2000 + s` | bias code of spin `s` (i8) |
+//! | `0x3000 + w` | spin readout word `w` (8 spins per byte, read-only) |
+//! | `0x4000` | control: bit0 run, bit1 anneal-enable |
+//! | `0x4001` | V_temp code (unsigned, β = code/32) |
+
+use anyhow::{bail, Result};
+
+use crate::analog::ProgrammedWeights;
+use crate::chimera::{Topology, N_SPINS};
+
+/// Decoded register address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Address {
+    Coupling(usize),
+    Enable(usize),
+    Bias(usize),
+    Readout(usize),
+    Control,
+    VTemp,
+}
+
+impl Address {
+    pub fn decode(addr: u16, n_edges: usize) -> Result<Self> {
+        let a = addr as usize;
+        Ok(match a {
+            _ if a < 0x1000 => {
+                if a >= n_edges {
+                    bail!("coupling address {a:#06x} beyond edge count {n_edges}");
+                }
+                Address::Coupling(a)
+            }
+            _ if a < 0x2000 => {
+                let e = a - 0x1000;
+                if e >= n_edges {
+                    bail!("enable address {a:#06x} beyond edge count {n_edges}");
+                }
+                Address::Enable(e)
+            }
+            _ if a < 0x3000 => {
+                let s = a - 0x2000;
+                if s >= N_SPINS {
+                    bail!("bias address {a:#06x} beyond spin count");
+                }
+                Address::Bias(s)
+            }
+            _ if a < 0x4000 => {
+                let w = a - 0x3000;
+                if w >= N_SPINS.div_ceil(8) {
+                    bail!("readout address {a:#06x} beyond spin words");
+                }
+                Address::Readout(w)
+            }
+            0x4000 => Address::Control,
+            0x4001 => Address::VTemp,
+            _ => bail!("unmapped address {a:#06x}"),
+        })
+    }
+
+    pub fn encode(&self) -> u16 {
+        match *self {
+            Address::Coupling(e) => e as u16,
+            Address::Enable(e) => 0x1000 + e as u16,
+            Address::Bias(s) => 0x2000 + s as u16,
+            Address::Readout(w) => 0x3000 + w as u16,
+            Address::Control => 0x4000,
+            Address::VTemp => 0x4001,
+        }
+    }
+}
+
+/// The programmable register file plus readout shadow.
+#[derive(Debug, Clone)]
+pub struct RegMap {
+    pub weights: ProgrammedWeights,
+    /// Latched spin states for readout (updated by the chip model).
+    pub spin_shadow: Vec<i8>,
+    pub run: bool,
+    pub anneal_enable: bool,
+    pub vtemp_code: u8,
+    n_edges: usize,
+}
+
+impl RegMap {
+    pub fn new(topo: &Topology) -> Self {
+        let n_edges = topo.edges.len();
+        Self {
+            weights: ProgrammedWeights::zeros(n_edges),
+            spin_shadow: vec![1; N_SPINS],
+            run: false,
+            anneal_enable: false,
+            vtemp_code: 32, // β = 1.0
+            n_edges,
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    /// β implied by the V_temp register (code/32, so code 32 ≙ β = 1).
+    pub fn beta(&self) -> f64 {
+        self.vtemp_code as f64 / 32.0
+    }
+
+    pub fn write(&mut self, addr: Address, value: u8) -> Result<()> {
+        match addr {
+            Address::Coupling(e) => self.weights.j_codes[e] = value as i8,
+            Address::Enable(e) => self.weights.enables[e] = value & 1 == 1,
+            Address::Bias(s) => self.weights.h_codes[s] = value as i8,
+            Address::Readout(_) => bail!("readout registers are read-only"),
+            Address::Control => {
+                self.run = value & 1 == 1;
+                self.anneal_enable = value & 2 == 2;
+            }
+            Address::VTemp => self.vtemp_code = value,
+        }
+        Ok(())
+    }
+
+    pub fn read(&self, addr: Address) -> Result<u8> {
+        Ok(match addr {
+            Address::Coupling(e) => self.weights.j_codes[e] as u8,
+            Address::Enable(e) => self.weights.enables[e] as u8,
+            Address::Bias(s) => self.weights.h_codes[s] as u8,
+            Address::Readout(w) => {
+                let mut byte = 0u8;
+                for b in 0..8 {
+                    let s = w * 8 + b;
+                    if s < N_SPINS && self.spin_shadow[s] > 0 {
+                        byte |= 1 << b;
+                    }
+                }
+                byte
+            }
+            Address::Control => (self.run as u8) | ((self.anneal_enable as u8) << 1),
+            Address::VTemp => self.vtemp_code,
+        })
+    }
+
+    /// Latch a spin state into the readout shadow.
+    pub fn latch_spins(&mut self, spins: &[i8]) {
+        self.spin_shadow[..N_SPINS].copy_from_slice(&spins[..N_SPINS]);
+    }
+
+    /// Read all spins back through the byte-wide readout registers —
+    /// the slow path a real host would take.
+    pub fn read_all_spins(&self) -> Result<Vec<i8>> {
+        let mut out = Vec::with_capacity(N_SPINS);
+        for w in 0..N_SPINS.div_ceil(8) {
+            let byte = self.read(Address::Readout(w))?;
+            for b in 0..8 {
+                let s = w * 8 + b;
+                if s < N_SPINS {
+                    out.push(if byte & (1 << b) != 0 { 1 } else { -1 });
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::new()
+    }
+
+    #[test]
+    fn address_roundtrip() {
+        let t = topo();
+        let n = t.edges.len();
+        for addr in [
+            Address::Coupling(0),
+            Address::Coupling(n - 1),
+            Address::Enable(17),
+            Address::Bias(439),
+            Address::Readout(54),
+            Address::Control,
+            Address::VTemp,
+        ] {
+            assert_eq!(Address::decode(addr.encode(), n).unwrap(), addr);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range() {
+        let t = topo();
+        let n = t.edges.len();
+        assert!(Address::decode(n as u16, n).is_err()); // beyond last edge
+        assert!(Address::decode(0x2000 + 440, n).is_err());
+        assert!(Address::decode(0x5000, n).is_err());
+    }
+
+    #[test]
+    fn weight_write_read() {
+        let t = topo();
+        let mut r = RegMap::new(&t);
+        r.write(Address::Coupling(5), (-77i8) as u8).unwrap();
+        assert_eq!(r.read(Address::Coupling(5)).unwrap() as i8, -77);
+        assert_eq!(r.weights.j_codes[5], -77);
+        r.write(Address::Enable(5), 1).unwrap();
+        assert!(r.weights.enables[5]);
+    }
+
+    #[test]
+    fn readout_is_read_only_and_packs_bits() {
+        let t = topo();
+        let mut r = RegMap::new(&t);
+        assert!(r.write(Address::Readout(0), 0xFF).is_err());
+        let mut spins = vec![-1i8; N_SPINS];
+        spins[0] = 1;
+        spins[9] = 1;
+        r.latch_spins(&spins);
+        assert_eq!(r.read(Address::Readout(0)).unwrap(), 0b0000_0001);
+        assert_eq!(r.read(Address::Readout(1)).unwrap(), 0b0000_0010);
+        assert_eq!(r.read_all_spins().unwrap(), spins);
+    }
+
+    #[test]
+    fn vtemp_maps_to_beta() {
+        let t = topo();
+        let mut r = RegMap::new(&t);
+        assert_eq!(r.beta(), 1.0);
+        r.write(Address::VTemp, 96).unwrap();
+        assert_eq!(r.beta(), 3.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Tiny criterion-style benchmark harness (criterion is not available in
+//! the offline vendor set). Provides warmup, timed iterations, and
+//! mean / p50 / p95 reporting, plus a CSV writer so every paper
+//! figure/table bench can dump its series to `results/`.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional derived throughput (unit/s), set via [`Bench::throughput`].
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        let t = |d: Duration| {
+            if d.as_secs_f64() >= 1.0 {
+                format!("{:.3} s", d.as_secs_f64())
+            } else if d.as_secs_f64() >= 1e-3 {
+                format!("{:.3} ms", d.as_secs_f64() * 1e3)
+            } else {
+                format!("{:.3} µs", d.as_secs_f64() * 1e6)
+            }
+        };
+        let tp = self
+            .throughput
+            .map(|(v, unit)| format!("  [{v:.3e} {unit}/s]"))
+            .unwrap_or_default();
+        println!(
+            "bench {:<42} mean {:>11}  p50 {:>11}  p95 {:>11}  min {:>11}  ({} iters){tp}",
+            self.name,
+            t(self.mean),
+            t(self.p50),
+            t(self.p95),
+            t(self.min),
+            self.iters
+        );
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    warmup: usize,
+    iters: usize,
+    elements: Option<(f64, &'static str)>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup: 3, iters: 20, elements: None }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Self { warmup, iters, elements: None }
+    }
+
+    /// Declare that each iteration processes `n` of `unit`, enabling
+    /// throughput reporting (e.g. `.throughput(1e6, "flips")`).
+    pub fn throughput(mut self, n: f64, unit: &'static str) -> Self {
+        self.elements = Some((n, unit));
+        self
+    }
+
+    /// Run `f` and report. Returns the measurement for CSV logging.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<Duration> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort_unstable();
+        let total: Duration = times.iter().sum();
+        let mean = total / self.iters as u32;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            p50: times[self.iters / 2],
+            p95: times[(self.iters * 95 / 100).min(self.iters - 1)],
+            min: times[0],
+            throughput: self.elements.map(|(n, u)| (n / mean.as_secs_f64(), u)),
+        };
+        m.report();
+        m
+    }
+}
+
+/// Write rows to `results/<name>.csv` (header + rows of f64 columns).
+pub fn write_csv(name: &str, header: &str, rows: &[Vec<f64>]) -> std::io::Result<std::path::PathBuf> {
+    let dir = crate::config::results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut text = String::from(header);
+    text.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        text.push_str(&cells.join(","));
+        text.push('\n');
+    }
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bench::new(1, 5);
+        let m = b.run("spin-loop", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.p95 >= m.p50);
+        assert!(m.min <= m.mean);
+    }
+
+    #[test]
+    fn throughput_derived() {
+        let b = Bench::new(0, 3).throughput(1000.0, "ops");
+        let m = b.run("nop", || std::thread::sleep(Duration::from_micros(50)));
+        let (tp, unit) = m.throughput.unwrap();
+        assert_eq!(unit, "ops");
+        assert!(tp > 0.0 && tp < 1e9);
+    }
+
+    #[test]
+    fn csv_writes() {
+        std::env::set_var("PCHIP_RESULTS", std::env::temp_dir().join("pchip_test_results"));
+        let p = write_csv("unit_test", "a,b", &[vec![1.0, 2.0], vec![3.0, 4.5]]).unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert!(text.contains("3,4.5"));
+        std::env::remove_var("PCHIP_RESULTS");
+    }
+}

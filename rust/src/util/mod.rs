@@ -1,0 +1,9 @@
+//! In-tree utility substrates that would normally come from crates.io —
+//! the build is fully offline, so JSON, the TOML-lite config format, the
+//! bench harness and the property-test driver are implemented here
+//! (DESIGN.md §Dependencies).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod toml_lite;

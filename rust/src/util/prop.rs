@@ -1,0 +1,58 @@
+//! Property-test driver (proptest is not in the offline vendor set).
+//!
+//! [`check`] runs an invariant over many seeded random cases and, on
+//! failure, reports the seed so the case can be replayed exactly:
+//!
+//! ```ignore
+//! prop::check("router pairs jobs", 500, |rng| {
+//!     let n = rng.below(64) + 1;
+//!     /* build a case from rng, assert the invariant */
+//! });
+//! ```
+//!
+//! No shrinking; cases should be built smallest-first where practical.
+
+use crate::rng::HostRng;
+
+/// Run `cases` random cases of `f`. Panics with the offending seed on the
+/// first failure (assert! inside `f` as usual).
+pub fn check<F: FnMut(&mut HostRng)>(name: &str, cases: u64, mut f: F) {
+    // Fixed base so CI is deterministic; override with PCHIP_PROP_SEED.
+    let base: u64 = std::env::var("PCHIP_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000);
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = HostRng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property `{name}` failed at case {case} (replay with PCHIP_PROP_SEED={base} and case {case}, rng seed {seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("u64 xor involution", 100, |rng| {
+            let x = rng.next_u64();
+            let k = rng.next_u64();
+            assert_eq!((x ^ k) ^ k, x);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn surfaces_failures() {
+        check("always fails eventually", 50, |rng| {
+            assert!(rng.uniform() < 0.9, "hit the failing tail");
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! TOML-lite: the subset of TOML the config system needs — `[section]`
+//! headers, `key = value` with string / float / integer / boolean values,
+//! `#` comments. Nested tables via dotted section names.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Num(x) => Ok(*x),
+            _ => bail!("expected number, got {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("expected unsigned integer, got {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_u64(&self) -> Result<u64> {
+        Ok(self.as_usize()? as u64)
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+/// A parsed document: map from "section.key" (root keys have no prefix).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected `key = value`", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(full, val);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Read with default: `doc.f64_or("mismatch.sigma_dac", 0.05)`.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map(|v| v.as_f64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key).map(|v| v.as_u64()).transpose().map(|o| o.unwrap_or(default))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Result<Option<String>> {
+        self.get(key).map(|v| v.as_str().map(str::to_string)).transpose()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let Some(body) = body.strip_suffix('"') else {
+            bail!("unterminated string");
+        };
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    match s.parse::<f64>() {
+        Ok(x) => Ok(Value::Num(x)),
+        Err(_) => bail!("cannot parse value `{s}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_types() {
+        let doc = Doc::parse(
+            "top = 1\n[mismatch]\nsigma_dac = 0.05 # comment\nname = \"chip0\"\nflag = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(doc.get("mismatch.sigma_dac").unwrap().as_f64().unwrap(), 0.05);
+        assert_eq!(doc.get("mismatch.name").unwrap().as_str().unwrap(), "chip0");
+        assert!(doc.get("mismatch.flag").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.f64_or("a.b", 2.5).unwrap(), 2.5);
+        assert_eq!(doc.usize_or("x", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Doc::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("k").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = Doc::parse("a = -3\nb = 1.5e-3\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_f64().unwrap(), -3.0);
+        assert_eq!(doc.get("b").unwrap().as_f64().unwrap(), 1.5e-3);
+        assert!(doc.get("a").unwrap().as_usize().is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! End-to-end learning tests: hardware-aware CD convergence through
+//! (a) the cycle-level chip over SPI and (b) the XLA AOT path —
+//! the paper's central claim exercised on both extremes of the stack.
+
+use pchip::analog::Personality;
+use pchip::chimera::{and_gate_layout, Topology};
+use pchip::chip::PbitChip;
+use pchip::config::{repo_artifacts_dir, MismatchConfig};
+use pchip::learning::dataset::and_gate;
+use pchip::learning::{CdParams, CdTrainer, Hw};
+use pchip::runtime::{ArtifactSet, Runtime};
+use pchip::sampler::{ChipSampler, XlaSampler};
+
+fn quick_params() -> CdParams {
+    CdParams {
+        lr: 0.15,
+        epochs: 25,
+        k_sweeps: 3,
+        samples_per_pattern: 10,
+        ..CdParams::default()
+    }
+}
+
+/// CD through the cycle-level chip: weights travel over the SPI bus,
+/// sampling happens through the full analog pipeline.
+#[test]
+fn cd_learns_and_gate_on_cycle_level_chip() {
+    let chip = PbitChip::power_up(13, MismatchConfig::default());
+    let mut sampler = ChipSampler::new(chip);
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), and_gate(), quick_params());
+    let stats = trainer.train(&mut sampler, 24, 1200).unwrap();
+    let last = stats.last().unwrap();
+    assert!(
+        last.valid_mass > 0.65,
+        "SPI-path learning failed: valid mass {}",
+        last.valid_mass
+    );
+    // the chip accounted SPI traffic for every reprogram
+    assert!(sampler.chip.bus.clocks_elapsed > 0);
+}
+
+/// CD through the AOT path: every sweep is a PJRT execution of the
+/// pallas-kernel-bearing HLO. Skipped when artifacts are not built.
+#[test]
+fn cd_learns_and_gate_through_xla() {
+    let dir = repo_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let set = ArtifactSet::load_some(&rt, &dir, &["gibbs_b8"]).unwrap();
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, 13, MismatchConfig::default());
+    let engine = XlaSampler::new(&set, 8, 13).unwrap();
+    let mut chip = Hw::new(engine, personality);
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), and_gate(), quick_params());
+    let stats = trainer.train(&mut chip, 24, 1200).unwrap();
+    let last = stats.last().unwrap();
+    assert!(
+        last.valid_mass > 0.65,
+        "XLA-path learning failed: valid mass {}",
+        last.valid_mass
+    );
+}
+
+/// Trained codes must beat untrained (zero) codes on the same die —
+/// the minimal statement that learning actually learned something
+/// (the cross-die transfer question is explored in the fig7 bench,
+/// where it is averaged over instances rather than asserted per-seed).
+#[test]
+fn trained_codes_beat_untrained() {
+    let heavy = MismatchConfig {
+        sigma_dac: 0.12,
+        sigma_mul: 0.10,
+        sigma_off: 0.06,
+        sigma_beta: 0.25,
+        sigma_obeta: 0.10,
+        leak: 0.15,
+        sigma_r2r: 0.03,
+    };
+    let topo = Topology::new();
+    let mut params = quick_params();
+    params.epochs = 40;
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), and_gate(), params);
+    let mut die = Hw::new(
+        pchip::sampler::SoftwareSampler::new(8, 21),
+        Personality::sample(&topo, 21, heavy),
+    );
+    // untrained baseline: zero weights, enables on
+    use pchip::learning::TrainableChip;
+    use pchip::sampler::Sampler;
+    die.program_codes(&trainer.codes).unwrap();
+    die.set_beta(params.beta as f32);
+    let (kl_untrained, valid_untrained) = trainer.evaluate(&mut die, 3000).unwrap();
+
+    trainer.train(&mut die, 39, 1500).unwrap();
+    let (kl_trained, valid_trained) = trainer.evaluate(&mut die, 3000).unwrap();
+    // valid-state mass is the robust observable on a short budget: KL
+    // against the *uniform*-over-valid target can exceed ln 2 while the
+    // gate is already functionally correct (unequal valid peaks).
+    assert!(
+        valid_trained > valid_untrained + 0.15,
+        "valid mass did not grow: {valid_untrained} -> {valid_trained} (KL {kl_untrained} -> {kl_trained})"
+    );
+    assert!(valid_trained > 0.65, "gate not functional: {valid_trained}");
+}

@@ -1,0 +1,198 @@
+//! Integration: AOT artifacts → PJRT → rust, cross-validated against the
+//! software sampler and the cycle-level chip. Requires `make artifacts`.
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::chimera::{Topology, N_PAD, N_SPINS};
+use pchip::config::{repo_artifacts_dir, MismatchConfig};
+use pchip::runtime::{ArtifactSet, Runtime, TensorF32};
+use pchip::sampler::{Sampler, SoftwareSampler, XlaSampler};
+
+fn artifacts() -> Option<(Runtime, ArtifactSet)> {
+    let dir = repo_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    let set = ArtifactSet::load_some(
+        &rt,
+        &dir,
+        &["gibbs_b8", "gibbs_b32", "energy_b32", "cd_stats_b32", "transfer_b32"],
+    )
+    .expect("compile artifacts");
+    Some((rt, set))
+}
+
+#[test]
+fn energy_artifact_matches_rust_energy() {
+    let Some((_rt, set)) = artifacts() else { return };
+    let topo = Topology::new();
+    let mut problem = pchip::problems::sk::chimera_pm_j(&topo, 3);
+    problem.h[7] = 0.5;
+    // dense symmetric J and h tensors
+    let mut j = vec![0.0f32; N_PAD * N_PAD];
+    for &(i, jj, w) in &problem.couplings {
+        j[i * N_PAD + jj] = w as f32;
+        j[jj * N_PAD + i] = w as f32;
+    }
+    let h: Vec<f32> =
+        (0..N_PAD).map(|i| if i < N_SPINS { problem.h[i] as f32 } else { 0.0 }).collect();
+    // batch of random states
+    let mut rng = pchip::rng::HostRng::new(9);
+    let mut m = vec![0.0f32; 32 * N_PAD];
+    let mut states = Vec::new();
+    for c in 0..32 {
+        let st: Vec<i8> = (0..N_SPINS).map(|_| rng.spin()).collect();
+        for i in 0..N_PAD {
+            m[c * N_PAD + i] = if i < N_SPINS { st[i] as f32 } else { 1.0 };
+        }
+        states.push(st);
+    }
+    let exe = set.get("energy_b32").unwrap();
+    let out = exe
+        .run(&[
+            TensorF32::new(vec![32, N_PAD], m),
+            TensorF32::new(vec![N_PAD, N_PAD], j),
+            TensorF32::new(vec![N_PAD], h),
+        ])
+        .unwrap();
+    for (c, st) in states.iter().enumerate() {
+        let want = problem.energy(st);
+        let got = out[0][c] as f64;
+        assert!(
+            (want - got).abs() < 1e-2,
+            "chain {c}: rust {want} vs xla {got}"
+        );
+    }
+}
+
+#[test]
+fn cd_stats_artifact_matches_direct_correlation() {
+    let Some((_rt, set)) = artifacts() else { return };
+    let mut rng = pchip::rng::HostRng::new(11);
+    let mut m = vec![0.0f32; 32 * N_PAD];
+    for v in m.iter_mut() {
+        *v = rng.spin() as f32;
+    }
+    let exe = set.get("cd_stats_b32").unwrap();
+    let out = exe.run(&[TensorF32::new(vec![32, N_PAD], m.clone())]).unwrap();
+    let corr = &out[0];
+    let mean = &out[1];
+    // spot-check entries against direct computation
+    for &(i, j) in &[(0usize, 4usize), (17, 21), (100, 200)] {
+        let want: f32 =
+            (0..32).map(|c| m[c * N_PAD + i] * m[c * N_PAD + j]).sum::<f32>() / 32.0;
+        let got = corr[i * N_PAD + j];
+        assert!((want - got).abs() < 1e-5, "corr[{i},{j}] {got} vs {want}");
+    }
+    let want_mean: f32 = (0..32).map(|c| m[c * N_PAD +9]).sum::<f32>() / 32.0;
+    assert!((mean[9] - want_mean).abs() < 1e-6);
+}
+
+#[test]
+fn transfer_artifact_is_tanh() {
+    let Some((_rt, set)) = artifacts() else { return };
+    let exe = set.get("transfer_b32").unwrap();
+    let mut i_in = vec![0.0f32; 32 * N_PAD];
+    i_in[0] = 1.0;
+    i_in[1] = -2.0;
+    let g = vec![1.0f32; N_PAD];
+    let o = vec![0.0f32; N_PAD];
+    let out = exe
+        .run(&[
+            TensorF32::new(vec![32, N_PAD], i_in),
+            TensorF32::new(vec![N_PAD], g),
+            TensorF32::new(vec![N_PAD], o),
+            TensorF32::scalar1(1.5),
+        ])
+        .unwrap();
+    assert!((out[0][0] - (1.5f32).tanh()).abs() < 1e-6);
+    assert!((out[0][1] - (-3.0f32).tanh()).abs() < 1e-6);
+    assert!(out[0][2].abs() < 1e-9);
+}
+
+/// With J = 0 every spin is independent, so after one artifact call the
+/// XLA state must agree with the software sampler exactly (same LFSR
+/// noise stream, same initial state, modulo tanh ulps on |act+u| ≈ 0).
+#[test]
+fn xla_matches_software_on_independent_spins() {
+    let Some((_rt, set)) = artifacts() else { return };
+    let topo = Topology::new();
+    let p = Personality::sample(&topo, 21, MismatchConfig::default());
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    for (s, h) in w.h_codes.iter_mut().enumerate() {
+        *h = ((s as i32 % 255) - 127) as i8;
+    }
+    let folded = p.fold(&topo, &w);
+
+    let mut xs = XlaSampler::new(&set, 8, 77).unwrap();
+    let mut ss = SoftwareSampler::new(8, 77);
+    xs.load(&folded);
+    ss.load(&folded);
+    xs.set_beta(1.3);
+    ss.set_beta(1.3);
+    xs.randomize(5);
+    ss.randomize(5);
+    let sweeps = xs.s_sweeps;
+    xs.sweeps(sweeps).unwrap();
+    ss.sweeps(sweeps).unwrap();
+    let a = xs.states();
+    let b = ss.states();
+    let mut diff = 0usize;
+    for c in 0..8 {
+        for i in 0..N_SPINS {
+            if a[c][i] != b[c][i] {
+                diff += 1;
+            }
+        }
+    }
+    let frac = diff as f64 / (8.0 * N_SPINS as f64);
+    assert!(frac < 0.005, "XLA vs software disagreement {frac} ({diff} spins)");
+}
+
+/// Coupled problem: the two engines agree statistically (same folded
+/// tensors, independent noise) — magnetizations within sampling error.
+#[test]
+fn xla_matches_software_statistics_when_coupled() {
+    let Some((_rt, set)) = artifacts() else { return };
+    let topo = Topology::new();
+    let p = Personality::sample(&topo, 31, MismatchConfig::default());
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    let mut rng = pchip::rng::HostRng::new(13);
+    for e in 0..topo.edges.len() {
+        w.j_codes[e] = (rng.below(129) as i32 - 64) as i8;
+        w.enables[e] = true;
+    }
+    for s in 0..N_SPINS {
+        w.h_codes[s] = (rng.below(65) as i32 - 32) as i8;
+    }
+    let folded = p.fold(&topo, &w);
+
+    let mut xs = XlaSampler::new(&set, 32, 99).unwrap();
+    let mut ss = SoftwareSampler::new(32, 123);
+    xs.load(&folded);
+    ss.load(&folded);
+    xs.set_beta(1.0);
+    ss.set_beta(1.0);
+
+    let spins: Vec<usize> = (0..N_SPINS).step_by(13).collect();
+    let mut mx = vec![0.0; spins.len()];
+    let mut msw = vec![0.0; spins.len()];
+    let rounds = 60;
+    for _ in 0..rounds {
+        xs.sweeps(8).unwrap();
+        ss.sweeps(8).unwrap();
+        let xa = xs.states();
+        let sb = ss.states();
+        for (k, &s) in spins.iter().enumerate() {
+            mx[k] += xa.iter().map(|st| st[s] as f64).sum::<f64>() / xa.len() as f64;
+            msw[k] += sb.iter().map(|st| st[s] as f64).sum::<f64>() / sb.len() as f64;
+        }
+    }
+    let mut worst = 0.0f64;
+    for k in 0..spins.len() {
+        worst = worst.max((mx[k] / rounds as f64 - msw[k] / rounds as f64).abs());
+    }
+    // 32 chains × 60 rounds → SE ≈ 0.023 per magnetization; allow 5σ
+    assert!(worst < 0.12, "worst magnetization gap {worst}");
+}
