@@ -118,7 +118,10 @@ fn main() -> anyhow::Result<()> {
     let elapsed = t0.elapsed();
     lat_us.sort_unstable();
     let stats = srv.stats();
-    println!("served {ok}/{n_jobs} jobs in {elapsed:.2?} → {:.1} jobs/s", ok as f64 / elapsed.as_secs_f64());
+    println!(
+        "served {ok}/{n_jobs} jobs in {elapsed:.2?} → {:.1} jobs/s",
+        ok as f64 / elapsed.as_secs_f64()
+    );
     println!(
         "latency: p50 {:.1} ms  p95 {:.1} ms  p99 {:.1} ms",
         lat_us[lat_us.len() / 2] as f64 / 1e3,

@@ -26,7 +26,11 @@ fn main() -> anyhow::Result<()> {
     // --- instance 1: native Chimera graph, 440 vertices -----------------
     let g = Graph::chimera_native(&topo, 0.6, 2);
     let p = g.to_ising_native(&topo)?;
-    println!("Fig 9b — Max-Cut, native Chimera instance ({} vertices, {} edges)", g.n, g.edges.len());
+    println!(
+        "Fig 9b — Max-Cut, native Chimera instance ({} vertices, {} edges)",
+        g.n,
+        g.edges.len()
+    );
     let mut chip = software_chip(3, MismatchConfig::default(), 8);
     let r = fig9b_maxcut(&mut chip, &g, &p, &params, None, Some("fig9b_maxcut_native"))?;
     println!("  cut progress:");
@@ -42,7 +46,11 @@ fn main() -> anyhow::Result<()> {
     let gk = Graph::random(16, 0.7, 5);
     let emb = Embedding::clique(&topo, 4, 1.5)?;
     let pk = gk.to_ising_embedded(&topo, &emb)?;
-    println!("\nMax-Cut, embedded K16 instance ({} logical edges, chains of {})", gk.edges.len(), emb.chains[0].len());
+    println!(
+        "\nMax-Cut, embedded K16 instance ({} logical edges, chains of {})",
+        gk.edges.len(),
+        emb.chains[0].len()
+    );
     let mut chip2 = software_chip(4, MismatchConfig::default(), 8);
     let rk = fig9b_maxcut(&mut chip2, &gk, &pk, &params, Some(&emb), Some("fig9b_maxcut_k16"))?;
     println!(

@@ -41,7 +41,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{:>10}", "target");
     for s in 0..report.target.len() {
-        let bits: String = (0..3).rev().map(|b| if (s >> b) & 1 == 1 { '1' } else { '0' }).collect();
+        let bits: String =
+            (0..3).rev().map(|b| if (s >> b) & 1 == 1 { '1' } else { '0' }).collect();
         print!("{bits:>8}");
         for (_, dist) in &report.snapshots {
             print!("{:>10.3}", dist[s]);

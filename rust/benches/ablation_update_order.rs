@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     println!("(chromatic = exact Gibbs; synchronous is expected to trail on frustrated graphs)");
 
     // single-spin correctness check per schedule: P(+1) for a biased spin
-    println!("\nsingle-spin P(+1), bias 64/127 at beta=1 (exact: {:.3}):", ((64.0/127.0f64).tanh()+1.0)/2.0);
+    let exact = ((64.0 / 127.0f64).tanh() + 1.0) / 2.0;
+    println!("\nsingle-spin P(+1), bias 64/127 at beta=1 (exact: {exact:.3}):");
     for (name, order) in orders {
         let mut chip = PbitChip::power_up(3, MismatchConfig::ideal());
         chip.personality = pchip::analog::Personality::ideal(&chip.topo);

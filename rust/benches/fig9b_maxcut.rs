@@ -4,11 +4,12 @@
 //! search on native instances and tracks the exact optimum on small
 //! embedded cliques.
 
-use pchip::annealing::{AnnealParams, BetaSchedule};
+use pchip::annealing::{temper, AnnealParams, BetaLadder, BetaSchedule, TemperingParams};
 use pchip::chimera::{Embedding, Topology};
 use pchip::config::MismatchConfig;
 use pchip::experiments::{fig9b_maxcut, software_chip};
 use pchip::problems::maxcut::Graph;
+use pchip::sampler::Sampler;
 use pchip::util::bench::{write_csv, Bench};
 
 fn main() -> anyhow::Result<()> {
@@ -57,9 +58,39 @@ fn main() -> anyhow::Result<()> {
     }
     write_csv("fig9b_cliques", "n,chip_cut,greedy_cut,exact_cut", &rows)?;
 
-    // cost of one full native max-cut anneal
+    // replica exchange on the densest native instance: same per-replica
+    // sweep budget as the anneal (64 × 6), 8 replicas on one die
     let g = Graph::chimera_native(&topo, 0.6, 2);
     let p = g.to_ising_native(&topo)?;
+    {
+        let mut chip = software_chip(2, MismatchConfig::default(), 8);
+        let scale = pchip::experiments::program_problem(&mut chip, &topo, &p)?;
+        chip.randomize(0xCA7);
+        let tp = TemperingParams {
+            ladder: BetaLadder::geometric(0.15, 4.0, 8),
+            sweeps_per_round: 6,
+            rounds: 64,
+            adapt_every: 0,
+            record_every: 4,
+            seed: 0xC07,
+        };
+        let run = temper(&mut chip, &p, &tp, scale)?;
+        let temper_cut = g.cut_value(&run.best_state);
+        let anneal = fig9b_maxcut(&mut chip, &g, &p, &params, None, None)?;
+        println!(
+            "tempering keep=0.6: cut {:>5.0} vs anneal {:>5.0} (swap acc {:.2})",
+            temper_cut,
+            anneal.chip_best_cut,
+            run.swaps.mean_acceptance()
+        );
+        write_csv(
+            "fig9b_temper",
+            "temper_cut,anneal_cut,swap_acceptance",
+            &[vec![temper_cut, anneal.chip_best_cut, run.swaps.mean_acceptance()]],
+        )?;
+    }
+
+    // cost of one full native max-cut anneal
     let mut chip = software_chip(2, MismatchConfig::default(), 8);
     Bench::new(1, 5).run("fig9b_native_anneal(64×6 sweeps, 8 chains)", || {
         fig9b_maxcut(&mut chip, &g, &p, &params, None, None).unwrap();

@@ -8,8 +8,10 @@
 //! comparison: cycle-level chip vs software CSR vs XLA path.
 
 use pchip::config::MismatchConfig;
-use pchip::experiments::table1::{default_tts_params, spec_row, table1_tts};
 use pchip::experiments::software_chip;
+use pchip::experiments::table1::{
+    default_tts_params, default_tts_temper_params, spec_row, table1_tts, table1_tts_tempering,
+};
 use pchip::util::bench::write_csv;
 
 fn main() -> anyhow::Result<()> {
@@ -19,7 +21,10 @@ fn main() -> anyhow::Result<()> {
     }
 
     let params = default_tts_params();
-    println!("\nTTS on planted ±J glasses (anneal: {} steps × {} sweeps):", params.steps, params.sweeps_per_step);
+    println!(
+        "\nTTS on planted ±J glasses (anneal: {} steps × {} sweeps):",
+        params.steps, params.sweeps_per_step
+    );
     let mut rows = Vec::new();
     for (name, corner) in
         [("ideal", MismatchConfig::ideal()), ("default", MismatchConfig::default())]
@@ -45,6 +50,44 @@ fn main() -> anyhow::Result<()> {
         rows.push(vec![p_mean, tts_med]);
     }
     write_csv("table1_corners", "p_success,tts99_ns", &rows)?;
+
+    // sampling-mode comparison: annealing restarts vs replica exchange
+    // at the same per-replica sweep budget (192 sweeps, 50 ns each)
+    let tp = default_tts_temper_params();
+    println!(
+        "\nTTS mode comparison (tempering: {} rounds × {} sweeps, {} replicas):",
+        tp.rounds,
+        tp.sweeps_per_round,
+        tp.ladder.len()
+    );
+    let mut rows = Vec::new();
+    {
+        let mut chip = software_chip(8, MismatchConfig::default(), 8);
+        let mut p_a = 0.0;
+        let mut p_t = 0.0;
+        let mut tts_a: Vec<f64> = Vec::new();
+        let mut tts_t: Vec<f64> = Vec::new();
+        let instances = 3;
+        for seed in 0..instances {
+            let ra = table1_tts(&mut chip, 100 + seed, 16, &params, None)?;
+            let rt = table1_tts_tempering(&mut chip, 100 + seed, 16, &tp, None)?;
+            p_a += ra.p_success;
+            p_t += rt.p_success;
+            if ra.tts.tts99_ns.is_finite() {
+                tts_a.push(ra.tts.tts99_ns);
+            }
+            if rt.tts.tts99_ns.is_finite() {
+                tts_t.push(rt.tts.tts99_ns);
+            }
+        }
+        let (pa, pt) = (p_a / instances as f64, p_t / instances as f64);
+        let (ma, mt) = (median(&mut tts_a), median(&mut tts_t));
+        println!("  anneal   : mean p_success {pa:.3}   median TTS99 {:.1} µs", ma / 1e3);
+        println!("  tempering: mean p_success {pt:.3}   median TTS99 {:.1} µs", mt / 1e3);
+        rows.push(vec![pa, ma]);
+        rows.push(vec![pt, mt]);
+    }
+    write_csv("table1_modes", "p_success,tts99_ns", &rows)?;
 
     // engine throughput comparison (chip-referred vs host wall-clock)
     println!("\nengine throughput (host wall-clock):");

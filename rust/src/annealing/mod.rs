@@ -1,15 +1,27 @@
-//! Simulated annealing on the p-bit array (Fig 9a) and time-to-solution
-//! accounting (Table 1).
+//! Simulated annealing on the p-bit array (Fig 9a), replica-exchange
+//! (parallel tempering) sampling, and time-to-solution accounting
+//! (Table 1).
 //!
 //! On silicon the anneal is a V_temp voltage ramp; here the schedule
 //! drives the β knob of any [`crate::sampler::Sampler`], and the TTS
 //! estimator converts measured success probabilities into the
 //! TTS(99 %) figure Table 1 compares across chips.
+//!
+//! Two sampling modes share this module:
+//!
+//! * [`anneal`] — one β ramp over every chain (the paper's Fig 9a
+//!   experiment; on silicon, the V_temp ramp).
+//! * [`temper`] — K replicas pinned to a [`BetaLadder`], exchanging
+//!   temperatures by Metropolis swap moves every few sweeps. The
+//!   standard algorithmic lever for frustrated instances where a single
+//!   annealed replica stalls.
 
 mod sa;
 mod schedule;
+mod tempering;
 mod tts;
 
 pub use sa::{anneal, AnnealParams};
-pub use schedule::BetaSchedule;
-pub use tts::{tts99, TtsEstimate};
+pub use schedule::{BetaLadder, BetaSchedule};
+pub use tempering::{temper, temper_observed, TemperingParams, TemperingRun};
+pub use tts::{tts99, tts99_counts, TtsEstimate};

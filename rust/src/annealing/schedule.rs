@@ -1,4 +1,5 @@
-//! β (inverse-temperature) schedules — the V_temp ramp shapes.
+//! β (inverse-temperature) schedules — the V_temp ramp shapes — and the
+//! β-ladders the replica-exchange engine runs on.
 
 /// An annealing schedule mapping progress ∈ [0, 1] to β.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -37,6 +38,96 @@ impl BetaSchedule {
     }
 }
 
+/// A fixed β-ladder for replica exchange: one rung per replica, sorted
+/// ascending (rung 0 is the hottest / most-mobile replica, the last rung
+/// the coldest / most-greedy one).
+///
+/// Constructed geometrically — the spacing that equalizes swap
+/// acceptance when the specific heat is roughly constant — and optionally
+/// re-spaced from *measured* acceptance rates with [`BetaLadder::adapted`]
+/// (feedback-optimized parallel tempering: rungs crowd into the gaps
+/// where swaps are rare, typically around a phase transition).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BetaLadder {
+    /// Rung temperatures, strictly ascending.
+    pub betas: Vec<f64>,
+}
+
+impl BetaLadder {
+    /// Geometric ladder of `k ≥ 2` rungs from β₀ (hot) to β₁ (cold).
+    pub fn geometric(b0: f64, b1: f64, k: usize) -> Self {
+        assert!(k >= 2, "a ladder needs at least two rungs, got {k}");
+        assert!(b0 > 0.0 && b1 > b0, "need 0 < b0 < b1, got {b0}..{b1}");
+        let sched = BetaSchedule::Geometric { b0, b1 };
+        Self { betas: (0..k).map(|j| sched.beta_at(j, k)).collect() }
+    }
+
+    /// Sample any [`BetaSchedule`] at `k` equally-spaced progress points.
+    pub fn from_schedule(sched: BetaSchedule, k: usize) -> Self {
+        assert!(k >= 2, "a ladder needs at least two rungs, got {k}");
+        let betas: Vec<f64> = (0..k).map(|j| sched.beta_at(j, k)).collect();
+        assert!(
+            betas.windows(2).all(|w| w[1] > w[0]),
+            "schedule must be strictly increasing to form a ladder"
+        );
+        Self { betas }
+    }
+
+    /// Number of rungs (replicas).
+    pub fn len(&self) -> usize {
+        self.betas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.betas.is_empty()
+    }
+
+    /// Hottest rung (smallest β).
+    pub fn hottest(&self) -> f64 {
+        self.betas[0]
+    }
+
+    /// Coldest rung (largest β) — the rung whose marginals answer the
+    /// sampling question.
+    pub fn coldest(&self) -> f64 {
+        *self.betas.last().unwrap()
+    }
+
+    /// Re-space the interior rungs from measured adjacent-pair swap
+    /// acceptance rates (`acceptance.len() == len() − 1`).
+    ///
+    /// Each gap is assigned a "resistance" ∝ 1/acceptance; new rungs are
+    /// placed at equal cumulative resistance, interpolating in ln β.
+    /// Endpoints are pinned, ordering is preserved, and a ladder whose
+    /// acceptance is already uniform comes back unchanged.
+    pub fn adapted(&self, acceptance: &[f64]) -> Self {
+        let k = self.betas.len();
+        assert_eq!(acceptance.len(), k - 1, "need one acceptance rate per adjacent pair");
+        // Clamp so an all-rejected gap pulls hard but not infinitely.
+        let resist: Vec<f64> = acceptance.iter().map(|&a| 1.0 / a.clamp(0.02, 1.0)).collect();
+        let mut cum = Vec::with_capacity(k);
+        cum.push(0.0);
+        for &r in &resist {
+            cum.push(cum.last().unwrap() + r);
+        }
+        let total = *cum.last().unwrap();
+        let lnb: Vec<f64> = self.betas.iter().map(|b| b.ln()).collect();
+        let mut out = Vec::with_capacity(k);
+        for j in 0..k {
+            let target = total * j as f64 / (k - 1) as f64;
+            let gap = cum
+                .windows(2)
+                .position(|w| target <= w[1] + 1e-12)
+                .unwrap_or(k - 2);
+            let frac = ((target - cum[gap]) / resist[gap].max(1e-300)).clamp(0.0, 1.0);
+            out.push((lnb[gap] + frac * (lnb[gap + 1] - lnb[gap])).exp());
+        }
+        out[0] = self.betas[0];
+        out[k - 1] = self.betas[k - 1];
+        Self { betas: out }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +162,52 @@ mod tests {
                 assert!(b >= prev);
                 prev = b;
             }
+        }
+    }
+
+    #[test]
+    fn ladder_geometric_endpoints_and_order() {
+        let l = BetaLadder::geometric(0.1, 4.0, 8);
+        assert_eq!(l.len(), 8);
+        assert!((l.hottest() - 0.1).abs() < 1e-12);
+        assert!((l.coldest() - 4.0).abs() < 1e-12);
+        assert!(l.betas.windows(2).all(|w| w[1] > w[0]));
+        // geometric: constant ratio between rungs
+        let r0 = l.betas[1] / l.betas[0];
+        for w in l.betas.windows(2) {
+            assert!((w[1] / w[0] - r0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ladder_uniform_acceptance_is_a_fixed_point() {
+        let l = BetaLadder::geometric(0.2, 3.0, 6);
+        let a = l.adapted(&[0.4; 5]);
+        for (x, y) in l.betas.iter().zip(&a.betas) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn ladder_adapts_toward_the_bottleneck() {
+        // gap 0 rejects everything → rungs must crowd into it
+        let l = BetaLadder::geometric(0.5, 2.0, 5);
+        let a = l.adapted(&[0.02, 0.9, 0.9, 0.9]);
+        let old_gap0 = l.betas[1] - l.betas[0];
+        let new_gap0 = a.betas[1] - a.betas[0];
+        assert!(new_gap0 < old_gap0, "bottleneck gap should shrink: {old_gap0} → {new_gap0}");
+        // endpoints pinned, order preserved
+        assert_eq!(a.betas[0], l.betas[0]);
+        assert_eq!(a.betas[4], l.betas[4]);
+        assert!(a.betas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn ladder_from_schedule_matches_geometric() {
+        let a = BetaLadder::geometric(0.1, 4.0, 7);
+        let b = BetaLadder::from_schedule(BetaSchedule::Geometric { b0: 0.1, b1: 4.0 }, 7);
+        for (x, y) in a.betas.iter().zip(&b.betas) {
+            assert!((x - y).abs() < 1e-12);
         }
     }
 

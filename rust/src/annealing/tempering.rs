@@ -1,0 +1,366 @@
+//! Replica exchange (parallel tempering) — the multi-replica sampling
+//! mode that un-sticks frustrated instances where a single annealed
+//! replica stalls.
+//!
+//! K replicas of the same problem run concurrently as K chains of one
+//! batched sampler, each pinned to a rung of a [`BetaLadder`]. Every
+//! `sweeps_per_round` sweeps, adjacent-temperature replicas attempt a
+//! Metropolis **swap move**: exchange temperatures with probability
+//! `min(1, exp(Δβ · ΔE))`. Cold replicas that fall into a local valley
+//! are recycled through the hot end where they can escape.
+//!
+//! The swap criterion uses the *logical* problem energy. On an ideal
+//! personality with losslessly-quantized coefficients this is exactly
+//! the sampled Hamiltonian (the code↔logical scale cancels in Δβ · ΔE),
+//! so swaps preserve detailed balance and every rung samples its exact
+//! Boltzmann distribution — the coldest rung's marginals are validated
+//! against brute-force enumeration in `rust/tests/tempering_stats.rs`.
+//! On a mismatched die the analog path already perturbs the sampled
+//! distribution away from any single Hamiltonian, and the swap move is
+//! heuristic to the same degree as the sampling itself (as on silicon).
+//!
+//! The implementation leans on the batched samplers' layout: replicas
+//! share one set of CSR coupling arrays and differ only in their state
+//! row, noise stream and per-chain β, so a swap is an O(1) exchange of
+//! two β entries — **no spin state is copied**. Engines expose this via
+//! [`Sampler::set_betas`]; the pure-rust [`SoftwareSampler`] supports it
+//! natively, while the AOT/XLA artifact (scalar-β signature) and the
+//! cycle-level chip (one V_temp rail) report unsupported.
+//!
+//! [`SoftwareSampler`]: crate::sampler::SoftwareSampler
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::{EnergyTrace, SwapStats};
+use crate::problems::IsingProblem;
+use crate::rng::HostRng;
+use crate::sampler::Sampler;
+
+use super::schedule::BetaLadder;
+
+/// Parameters of one tempering run.
+#[derive(Debug, Clone)]
+pub struct TemperingParams {
+    /// The β-ladder; one replica per rung. `ladder.len()` must not
+    /// exceed the sampler's batch.
+    pub ladder: BetaLadder,
+    /// Sweeps between swap phases (the "S" knob: small S mixes
+    /// temperatures faster, large S amortizes the energy evaluation).
+    pub sweeps_per_round: usize,
+    /// Number of sweep+swap rounds.
+    pub rounds: usize,
+    /// Re-space the ladder from measured acceptance every this many
+    /// rounds (0 = fixed ladder). Endpoints stay pinned.
+    pub adapt_every: usize,
+    /// Record the energy trace every `record_every` rounds.
+    pub record_every: usize,
+    /// Seed of the swap-decision RNG (replica dynamics themselves draw
+    /// from the sampler's own noise streams).
+    pub seed: u64,
+}
+
+impl Default for TemperingParams {
+    fn default() -> Self {
+        Self {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 4,
+            rounds: 128,
+            adapt_every: 0,
+            record_every: 4,
+            seed: 0x7E6F,
+        }
+    }
+}
+
+impl TemperingParams {
+    /// Per-replica sweeps of the whole run.
+    pub fn total_sweeps(&self) -> usize {
+        self.rounds * self.sweeps_per_round
+    }
+
+    /// Simulated chip time of one run in ns. Replicas run concurrently
+    /// on-die (one chain each), so wall time is sweeps × sample time —
+    /// directly comparable with an anneal's restart time in
+    /// [`crate::annealing::tts99`].
+    pub fn chip_time_ns(&self) -> f64 {
+        self.total_sweeps() as f64 * crate::chip::SAMPLE_TIME_NS
+    }
+}
+
+/// What a tempering run returns.
+#[derive(Debug, Clone)]
+pub struct TemperingRun {
+    /// (sweep, coldest-rung β, mean replica energy, min replica energy)
+    /// rows — same shape as an anneal trace so the Fig 9 tooling can
+    /// overlay the two modes.
+    pub trace: EnergyTrace,
+    /// Best energy seen by any replica at any round.
+    pub best_energy: f64,
+    pub best_state: Vec<i8>,
+    /// Swap acceptance / round-trip diagnostics.
+    pub swaps: SwapStats,
+    /// The final ladder (differs from the input when `adapt_every > 0`).
+    pub ladder: BetaLadder,
+    /// Per-replica sweeps performed.
+    pub total_sweeps: u64,
+}
+
+/// Run replica exchange on a batched sampler. `beta_scale` converts
+/// logical β to the chip knob exactly as in [`super::anneal`]; the swap
+/// criterion uses logical β × logical energy, which equals chip-β ×
+/// chip-energy because the scale cancels.
+///
+/// The sampler's first `ladder.len()` chains are the replicas; any extra
+/// chains run at the hottest β as free scouts (they join the best-energy
+/// search but not the swap dynamics).
+pub fn temper<S: Sampler>(
+    sampler: &mut S,
+    problem: &IsingProblem,
+    params: &TemperingParams,
+    beta_scale: f64,
+) -> Result<TemperingRun> {
+    temper_observed(sampler, problem, params, beta_scale, |_, _, _| {})
+}
+
+/// [`temper`] with a per-round observer `observe(round, states,
+/// chain_at_rung)` called after each sweep phase — the hook the
+/// statistical validation tests use to accumulate per-rung marginals.
+pub fn temper_observed<S, F>(
+    sampler: &mut S,
+    problem: &IsingProblem,
+    params: &TemperingParams,
+    beta_scale: f64,
+    mut observe: F,
+) -> Result<TemperingRun>
+where
+    S: Sampler,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let k = params.ladder.len();
+    let batch = sampler.batch();
+    ensure!(k >= 2, "tempering needs at least two rungs, got {k}");
+    ensure!(
+        k <= batch,
+        "ladder has {k} rungs but the sampler only has {batch} chains"
+    );
+    ensure!(params.sweeps_per_round > 0, "sweeps_per_round must be positive");
+    ensure!(params.record_every > 0, "record_every must be positive");
+
+    let mut ladder = params.ladder.clone();
+    // chain_at_rung[r] = chain currently holding rung r's temperature.
+    let mut chain_at_rung: Vec<usize> = (0..k).collect();
+    // Round-trip labels: which ladder end each chain last visited.
+    const END_NONE: u8 = 0;
+    const END_HOT: u8 = 1;
+    const END_COLD: u8 = 2;
+    let mut last_end = vec![END_NONE; batch];
+
+    let mut swaps = SwapStats::new(k);
+    // Windowed counters for ladder adaptation (reset after each adapt).
+    let mut window = SwapStats::new(k);
+    let mut rng = HostRng::new(params.seed ^ 0x7E3A_94C1);
+    let mut trace = EnergyTrace::default();
+    let mut best = (f64::INFINITY, Vec::new());
+    let mut sweeps_done = 0u64;
+
+    let mut chain_betas = vec![0.0f32; batch];
+    for round in 0..params.rounds {
+        // 1. pin each chain to its rung's chip-β; extras scout hot
+        for b in chain_betas.iter_mut() {
+            *b = (ladder.hottest() * beta_scale) as f32;
+        }
+        for (r, &c) in chain_at_rung.iter().enumerate() {
+            chain_betas[c] = (ladder.betas[r] * beta_scale) as f32;
+        }
+        sampler.set_betas(&chain_betas)?;
+
+        // 2. sweep all replicas
+        sampler.sweeps(params.sweeps_per_round)?;
+        sweeps_done += params.sweeps_per_round as u64;
+
+        // 3. energies (logical), best-state tracking (over every chain,
+        //    scouts included), observer
+        let states = sampler.states();
+        let energies: Vec<f64> = states.iter().map(|s| problem.energy(s)).collect();
+        for (e, s) in energies.iter().zip(&states) {
+            if *e < best.0 {
+                best = (*e, s.clone());
+            }
+        }
+        observe(round, &states, &chain_at_rung);
+
+        // 4. swap phase: alternate even/odd pairings so every adjacent
+        //    pair is attempted every other round
+        for r in ((round % 2)..k - 1).step_by(2) {
+            let (ca, cb) = (chain_at_rung[r], chain_at_rung[r + 1]);
+            let d_beta = ladder.betas[r + 1] - ladder.betas[r];
+            let d_energy = energies[cb] - energies[ca];
+            // π swap ratio = exp((β_cold − β_hot)(E_cold − E_hot))
+            let log_a = d_beta * d_energy;
+            let accept = log_a >= 0.0 || rng.uniform() < log_a.exp();
+            swaps.record(r, accept);
+            window.record(r, accept);
+            if accept {
+                chain_at_rung.swap(r, r + 1);
+            }
+        }
+
+        // 5. round-trip accounting at the ladder ends
+        let hot_chain = chain_at_rung[0];
+        let cold_chain = chain_at_rung[k - 1];
+        if last_end[hot_chain] == END_COLD {
+            swaps.round_trips += 1;
+        }
+        last_end[hot_chain] = END_HOT;
+        last_end[cold_chain] = END_COLD;
+
+        // 6. trace (over the K replicas only — hot scouts would skew the
+        //    mean against an anneal trace) + optional ladder adaptation
+        if round % params.record_every == 0 || round == params.rounds - 1 {
+            let replica_e = chain_at_rung.iter().map(|&c| energies[c]);
+            let mean = replica_e.clone().sum::<f64>() / k as f64;
+            let min = replica_e.fold(f64::INFINITY, f64::min);
+            trace.push(sweeps_done, ladder.coldest(), mean, min);
+        }
+        if params.adapt_every > 0 && round > 0 && round % params.adapt_every == 0 {
+            // Pairs never attempted in this window (short windows only
+            // see one parity) carry no information: fill them with the
+            // window's mean acceptance instead of letting a 0 read as
+            // "fully rejecting" and wrench the ladder toward them.
+            let mut rates = window.acceptance_rates();
+            let measured: Vec<f64> = window
+                .attempts
+                .iter()
+                .zip(&rates)
+                .filter(|(&a, _)| a > 0)
+                .map(|(_, &r)| r)
+                .collect();
+            if !measured.is_empty() {
+                let fill = measured.iter().sum::<f64>() / measured.len() as f64;
+                for (a, r) in window.attempts.iter().zip(rates.iter_mut()) {
+                    if *a == 0 {
+                        *r = fill;
+                    }
+                }
+                ladder = ladder.adapted(&rates);
+            }
+            window = SwapStats::new(k);
+        }
+    }
+
+    Ok(TemperingRun {
+        trace,
+        best_energy: best.0,
+        best_state: best.1,
+        swaps,
+        ladder,
+        total_sweeps: sweeps_done,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Personality;
+    use crate::chimera::Topology;
+    use crate::problems::sk;
+    use crate::sampler::SoftwareSampler;
+
+    fn glass_sampler(seed: u64, batch: usize) -> (SoftwareSampler, IsingProblem, f64) {
+        let topo = Topology::new();
+        let problem = sk::chimera_pm_j(&topo, seed);
+        let personality = Personality::ideal(&topo);
+        let (j, en, h, scale) = problem.to_codes(&topo).unwrap();
+        let mut w = crate::analog::ProgrammedWeights::zeros(topo.edges.len());
+        w.j_codes = j;
+        w.enables = en;
+        w.h_codes = h;
+        let folded = personality.fold(&topo, &w);
+        let mut s = SoftwareSampler::new(batch, seed);
+        s.load(&folded);
+        (s, problem, scale)
+    }
+
+    #[test]
+    fn tempering_lowers_energy_on_a_glass() {
+        let (mut s, problem, scale) = glass_sampler(7, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 2,
+            rounds: 48,
+            record_every: 4,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        let first_mean = run.trace.rows.first().unwrap().2;
+        assert!(
+            run.best_energy < first_mean - 50.0,
+            "tempering should drop energy substantially: {first_mean} → {}",
+            run.best_energy
+        );
+        assert_eq!(run.best_state.len(), crate::N_SPINS);
+        assert_eq!(run.total_sweeps, 96);
+    }
+
+    #[test]
+    fn swaps_are_attempted_and_some_accepted() {
+        let (mut s, problem, scale) = glass_sampler(3, 16);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.3, 2.0, 16),
+            sweeps_per_round: 2,
+            rounds: 60,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        let attempts: u64 = run.swaps.attempts.iter().sum();
+        // 15 pairs, alternating parity → ~450 attempts over 60 rounds
+        assert!(attempts > 300, "attempts {attempts}");
+        assert!(run.swaps.mean_acceptance() > 0.0, "no swap ever accepted");
+    }
+
+    #[test]
+    fn ladder_larger_than_batch_is_rejected() {
+        let (mut s, problem, scale) = glass_sampler(1, 4);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            ..Default::default()
+        };
+        assert!(temper(&mut s, &problem, &params, scale).is_err());
+    }
+
+    #[test]
+    fn adaptation_keeps_endpoints_and_order() {
+        let (mut s, problem, scale) = glass_sampler(5, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 2,
+            rounds: 40,
+            adapt_every: 10,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        assert!((run.ladder.hottest() - 0.1).abs() < 1e-12);
+        assert!((run.ladder.coldest() - 4.0).abs() < 1e-12);
+        assert!(run.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn observer_sees_every_round() {
+        let (mut s, problem, scale) = glass_sampler(2, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 2.0, 4),
+            sweeps_per_round: 1,
+            rounds: 12,
+            ..Default::default()
+        };
+        let mut seen = 0usize;
+        temper_observed(&mut s, &problem, &params, scale, |round, states, map| {
+            assert_eq!(round, seen);
+            assert_eq!(states.len(), 8);
+            assert_eq!(map.len(), 4);
+            seen += 1;
+        })
+        .unwrap();
+        assert_eq!(seen, 12);
+    }
+}

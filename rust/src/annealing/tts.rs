@@ -17,6 +17,17 @@ pub struct TtsEstimate {
     pub restarts: usize,
 }
 
+/// TTS(99 %) from raw success counts — the tempering-mode entry point,
+/// where one "restart" is a whole K-replica tempering run (its duration
+/// is [`crate::annealing::TemperingParams::chip_time_ns`]; replicas run
+/// concurrently on-die, so K does not multiply the time) rather than a
+/// single-replica anneal. Head-to-head numbers against [`tts99`] are
+/// directly comparable when the per-replica sweep budgets match.
+pub fn tts99_counts(successes: usize, attempts: usize, t_run_ns: f64) -> TtsEstimate {
+    let p = successes as f64 / attempts.max(1) as f64;
+    tts99(p, t_run_ns, attempts)
+}
+
 /// Compute TTS(99 %).
 pub fn tts99(p_success: f64, t_anneal_ns: f64, restarts: usize) -> TtsEstimate {
     let tts = if p_success <= 0.0 {
@@ -57,5 +68,16 @@ mod tests {
         let lo = tts99(0.1, 100.0, 1).tts99_ns;
         let hi = tts99(0.9, 100.0, 1).tts99_ns;
         assert!(hi < lo);
+    }
+
+    #[test]
+    fn counts_agree_with_probability_form() {
+        let a = tts99_counts(3, 12, 400.0);
+        let b = tts99(0.25, 400.0, 12);
+        assert_eq!(a.tts99_ns, b.tts99_ns);
+        assert_eq!(a.p_success, 0.25);
+        assert_eq!(a.restarts, 12);
+        // zero attempts must not divide by zero
+        assert!(tts99_counts(0, 0, 100.0).tts99_ns.is_infinite());
     }
 }

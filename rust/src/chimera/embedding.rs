@@ -32,7 +32,9 @@ pub enum EmbedError {
 impl std::fmt::Display for EmbedError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            Self::MissingCoupler(i, j) => write!(f, "no physical coupler for logical edge ({i},{j})"),
+            Self::MissingCoupler(i, j) => {
+                write!(f, "no physical coupler for logical edge ({i},{j})")
+            }
             Self::BlockTooLarge { t } => write!(f, "clique block t={t} does not fit the die"),
             Self::BrokenChain(i) => write!(f, "chain for logical spin {i} is disconnected"),
             Self::ChainOverlap(s) => write!(f, "physical spin {s} used by two chains"),
@@ -303,7 +305,8 @@ mod tests {
         // chain couplers present with -3.0 … wait: stored as chain_strength
         assert!(j_phys.iter().any(|&(_, _, w)| w == 3.0));
         // logical weight split sums back to 1.0
-        let logical_sum: f64 = j_phys.iter().filter(|&&(_, _, w)| w != 3.0).map(|&(_, _, w)| w).sum();
+        let logical_sum: f64 =
+            j_phys.iter().filter(|&&(_, _, w)| w != 3.0).map(|&(_, _, w)| w).sum();
         assert!((logical_sum - 1.0).abs() < 1e-12);
         // biases split across chains sum back
         let total_h: f64 = h_phys.iter().sum();

@@ -1,9 +1,15 @@
 //! Job and result types crossing the client ⇄ coordinator boundary.
+//!
+//! A job's life: the client builds a [`JobRequest`] and gets back a
+//! [`JobTicket`]; the dispatcher queues it (bounded — a full queue fails
+//! the job immediately as backpressure), batches it with same-problem
+//! neighbours, routes the batch to a die, and the die's worker thread
+//! finally pushes one [`JobResult`] through the ticket's channel.
 
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::annealing::AnnealParams;
+use crate::annealing::{AnnealParams, TemperingParams};
 
 /// Opaque id of a registered problem.
 pub type ProblemHandle = u64;
@@ -17,6 +23,10 @@ pub enum JobRequest {
     Sample { problem: ProblemHandle, sweeps: usize, beta: f64, chains: usize },
     /// A full annealing run; returns the energy trace and best state.
     Anneal { problem: ProblemHandle, params: AnnealParams },
+    /// A replica-exchange run: every chain of the die becomes a replica
+    /// on the params' β-ladder. Requires a per-chain-β engine (the
+    /// software sampler; the XLA artifact fails the job — ROADMAP).
+    Tempering { problem: ProblemHandle, params: TemperingParams },
 }
 
 impl JobRequest {
@@ -24,6 +34,7 @@ impl JobRequest {
         match *self {
             JobRequest::Sample { problem, .. } => problem,
             JobRequest::Anneal { problem, .. } => problem,
+            JobRequest::Tempering { problem, .. } => problem,
         }
     }
 
@@ -31,8 +42,8 @@ impl JobRequest {
     pub fn chains(&self) -> usize {
         match *self {
             JobRequest::Sample { chains, .. } => chains.max(1),
-            // an anneal occupies the whole die
-            JobRequest::Anneal { .. } => usize::MAX,
+            // anneals and tempering runs occupy the whole die
+            JobRequest::Anneal { .. } | JobRequest::Tempering { .. } => usize::MAX,
         }
     }
 }
@@ -57,6 +68,19 @@ pub enum JobResult {
         best_state: Vec<i8>,
         /// (sweep, beta, mean energy, min energy) rows.
         trace: Vec<(u64, f64, f64, f64)>,
+        chip: usize,
+        latency: Duration,
+    },
+    Tempered {
+        /// Best energy over every replica and round.
+        best_energy: f64,
+        best_state: Vec<i8>,
+        /// (sweep, coldest β, mean energy, min energy) rows.
+        trace: Vec<(u64, f64, f64, f64)>,
+        /// Swap acceptance per adjacent rung pair.
+        swap_acceptance: Vec<f64>,
+        /// Completed hot → cold → hot replica round trips.
+        round_trips: u64,
         chip: usize,
         latency: Duration,
     },
@@ -94,6 +118,9 @@ mod tests {
         let a = JobRequest::Anneal { problem: 2, params: AnnealParams::default() };
         assert_eq!(a.chains(), usize::MAX);
         assert_eq!(a.problem(), 2);
+        let t = JobRequest::Tempering { problem: 3, params: TemperingParams::default() };
+        assert_eq!(t.chains(), usize::MAX, "tempering occupies the whole die");
+        assert_eq!(t.problem(), 3);
     }
 
     #[test]

@@ -21,6 +21,58 @@
 //!   (pure logic, property-tested).
 //! * [`ChipArrayServer`] — worker threads each own one die personality
 //!   and one sampling engine; python never runs here.
+//!
+//! # Job lifecycle
+//!
+//! 1. **Register** — [`ChipArrayServer::register_problem`] lowers the
+//!    logical Ising problem to 8-bit register codes once; every die
+//!    shares the [`ProblemSpec`] by `Arc`.
+//! 2. **Submit** — [`ChipArrayServer::submit`] enqueues a
+//!    [`JobRequest`] and hands back a [`JobTicket`]. The queue is
+//!    bounded: when full, the job fails immediately with "queue full"
+//!    (backpressure to the client, never unbounded memory).
+//! 3. **Batch** — the dispatcher drains every immediately-available
+//!    job so bursts of same-problem requests coalesce; [`Batcher`]
+//!    aggregates them up to the die's chain budget. Whole-die jobs
+//!    ([`JobRequest::Anneal`], [`JobRequest::Tempering`]) always
+//!    dispatch alone.
+//! 4. **Route** — [`Router`] sends the batch to the die already
+//!    programmed with that problem if any (reprogramming over SPI is
+//!    the expensive step), else the least-loaded die.
+//! 5. **Run + reply** — the worker reprograms if needed, runs the
+//!    batch on its engine, and answers each job's ticket with a
+//!    [`JobResult`]. [`ServerStats`] aggregates latency, batch and
+//!    reprogram counters.
+//!
+//! Replica-exchange workloads can additionally fan out across dies with
+//! [`ChipArrayServer::run_tempering_fanout`]: `n` independent tempering
+//! runs (distinct swap seeds) spread over idle dies, best-energy result
+//! wins.
+//!
+//! # Example
+//!
+//! Serve a ±J glass from a two-die array and read back samples:
+//!
+//! ```
+//! use pchip::chimera::Topology;
+//! use pchip::config::Config;
+//! use pchip::coordinator::{ChipArrayServer, EngineKind, JobRequest, JobResult};
+//!
+//! let mut cfg = Config::default();
+//! cfg.server.chips = 2;
+//! let srv = ChipArrayServer::start(&cfg, EngineKind::Software).unwrap();
+//! let topo = Topology::new();
+//! let h = srv.register_problem(pchip::problems::sk::chimera_pm_j(&topo, 1)).unwrap();
+//!
+//! let res = srv.run(JobRequest::Sample { problem: h, sweeps: 4, beta: 1.0, chains: 2 }).unwrap();
+//! match res {
+//!     JobResult::Samples { states, energies, .. } => {
+//!         assert_eq!(states.len(), 2);
+//!         assert!(energies.iter().all(|e| e.is_finite()));
+//!     }
+//!     other => panic!("unexpected {other:?}"),
+//! }
+//! ```
 
 mod batcher;
 mod job;
@@ -30,4 +82,4 @@ mod server;
 pub use batcher::{Batch, Batcher, QueuedJob};
 pub use job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
 pub use router::Router;
-pub use server::{ChipArrayServer, EngineKind, ServerStats};
+pub use server::{ChipArrayServer, EngineKind, ProblemSpec, ServerStats};

@@ -9,7 +9,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::analog::{Personality, ProgrammedWeights};
-use crate::annealing;
+use crate::annealing::{self, TemperingParams};
 use crate::chimera::Topology;
 use crate::config::{Config, MismatchConfig};
 use crate::learning::{Hw, TrainableChip};
@@ -23,9 +23,13 @@ use super::router::Router;
 /// Which sampling engine each die runs.
 #[derive(Debug, Clone)]
 pub enum EngineKind {
-    /// Pure-rust CSR Gibbs (fast, no PJRT).
+    /// Pure-rust CSR Gibbs (fast, no PJRT). Supports every job kind,
+    /// including [`JobRequest::Tempering`] (per-chain β).
     Software,
     /// The AOT PJRT path (loads artifacts from the given directory).
+    /// Requires the `xla` cargo feature — without it the worker thread
+    /// panics at startup with a pointer at the feature flag. Tempering
+    /// jobs fail on this engine (scalar-β artifact; see ROADMAP).
     Xla { artifacts_dir: std::path::PathBuf },
 }
 
@@ -62,11 +66,23 @@ enum Msg {
 }
 
 enum WorkerMsg {
-    Run { batch: Batch, spec: Arc<ProblemSpec>, needs_program: bool, replies: Vec<mpsc::Sender<JobResult>>, submitted: Vec<Instant> },
+    Run {
+        batch: Batch,
+        spec: Arc<ProblemSpec>,
+        needs_program: bool,
+        replies: Vec<mpsc::Sender<JobResult>>,
+        submitted: Vec<Instant>,
+    },
     Shutdown,
 }
 
-/// The chip-array coordinator (see module docs).
+/// The chip-array coordinator (see the [module docs](crate::coordinator)
+/// for the job lifecycle).
+///
+/// One dispatcher thread owns the queue/batcher/router; each of
+/// `cfg.server.chips` worker threads owns a die — a personality sampled
+/// from the mismatch corner plus one sampling engine. Dropping the
+/// server drains in-flight work and joins every thread.
 pub struct ChipArrayServer {
     submit_tx: mpsc::SyncSender<Msg>,
     stats: Arc<ServerStats>,
@@ -158,6 +174,53 @@ impl ChipArrayServer {
     /// Convenience: submit and wait.
     pub fn run(&self, request: JobRequest) -> Result<JobResult> {
         Ok(self.submit(request)?.wait())
+    }
+
+    /// Fan a tempering workload out across the die array: submit `runs`
+    /// independent replica-exchange runs of the same problem (each with
+    /// a distinct swap seed, each occupying one die with its own
+    /// K-replica ladder), wait for all, and return the best-energy
+    /// result. The dispatcher spreads the runs over idle dies, so with
+    /// `runs ≤ chips` they execute concurrently.
+    pub fn run_tempering_fanout(
+        &self,
+        problem: ProblemHandle,
+        params: &TemperingParams,
+        runs: usize,
+    ) -> Result<JobResult> {
+        let runs = runs.max(1);
+        let tickets: Vec<JobTicket> = (0..runs)
+            .map(|r| {
+                let mut p = params.clone();
+                p.seed = params.seed.wrapping_add(r as u64).wrapping_mul(0x9E37_79B9);
+                self.submit(JobRequest::Tempering { problem, params: p })
+            })
+            .collect::<Result<_>>()?;
+        let mut best: Option<(f64, JobResult)> = None;
+        let mut failure: Option<String> = None;
+        for t in tickets {
+            let r = t.wait();
+            let e = match &r {
+                JobResult::Tempered { best_energy, .. } => *best_energy,
+                JobResult::Failed(msg) => {
+                    failure = Some(msg.clone());
+                    continue;
+                }
+                _ => continue,
+            };
+            let better = match &best {
+                Some((cur, _)) => e < *cur,
+                None => true,
+            };
+            if better {
+                best = Some((e, r));
+            }
+        }
+        match (best, failure) {
+            (Some((_, r)), _) => Ok(r),
+            (None, Some(msg)) => Ok(JobResult::Failed(msg)),
+            (None, None) => Ok(JobResult::Failed("no tempering run returned".into())),
+        }
     }
 
     pub fn stats(&self) -> &ServerStats {
@@ -340,7 +403,8 @@ fn run_batch<C: TrainableChip>(
     stats: &ServerStats,
 ) {
     use crate::chip::SAMPLE_TIME_NS;
-    // group jobs with identical (beta, sweeps) into one engine run
+    // group jobs with identical (beta, sweeps) into one engine run;
+    // whole-die jobs (anneal / tempering) get sentinel keys and run alone
     let mut groups: HashMap<(u64, usize), Vec<usize>> = HashMap::new();
     for (idx, j) in batch.jobs.iter().enumerate() {
         match j.request {
@@ -350,42 +414,15 @@ fn run_batch<C: TrainableChip>(
             JobRequest::Anneal { .. } => {
                 groups.entry((f64::NAN.to_bits(), usize::MAX)).or_default().push(idx);
             }
+            JobRequest::Tempering { .. } => {
+                groups.entry((f64::INFINITY.to_bits(), usize::MAX)).or_default().push(idx);
+            }
         }
     }
     for ((beta_bits, sweeps), idxs) in groups {
         if sweeps == usize::MAX {
-            // anneal jobs: run each alone on the whole die
             for &idx in &idxs {
-                let JobRequest::Anneal { params, .. } = batch.jobs[idx].request else { continue };
-                chip.set_clamps(&[]);
-                chip.randomize(0xA11EA ^ batch.jobs[idx].id);
-                let t0 = submitted[idx];
-                let result = annealing::anneal(chip, &spec.problem, &params, spec.scale);
-                let msg = match result {
-                    Ok((trace, best)) => {
-                        let (be, bs) = best
-                            .into_iter()
-                            .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
-                            .unwrap_or((f64::INFINITY, Vec::new()));
-                        JobResult::Annealed {
-                            best_energy: be,
-                            best_state: bs,
-                            trace: trace.rows.clone(),
-                            chip: k,
-                            latency: t0.elapsed(),
-                        }
-                    }
-                    Err(e) => JobResult::Failed(format!("anneal: {e}")),
-                };
-                stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .total_latency_us
-                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
-                let n_sweeps = params.steps as u64 * params.sweeps_per_step as u64;
-                stats
-                    .chip_time_ns
-                    .fetch_add((n_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
-                let _ = replies[idx].send(msg);
+                run_whole_die_job(k, chip, batch, idx, spec, &replies[idx], submitted[idx], stats);
             }
             continue;
         }
@@ -426,6 +463,69 @@ fn run_batch<C: TrainableChip>(
             });
         }
     }
+}
+
+/// Run one whole-die job (anneal or tempering) on `chip` and reply.
+#[allow(clippy::too_many_arguments)]
+fn run_whole_die_job<C: TrainableChip>(
+    k: usize,
+    chip: &mut C,
+    batch: &Batch,
+    idx: usize,
+    spec: &ProblemSpec,
+    reply: &mpsc::Sender<JobResult>,
+    t0: Instant,
+    stats: &ServerStats,
+) {
+    use crate::chip::SAMPLE_TIME_NS;
+    let job = &batch.jobs[idx];
+    chip.set_clamps(&[]);
+    chip.randomize(0xA11EA ^ job.id);
+    let (msg, n_sweeps) = match &job.request {
+        JobRequest::Anneal { params, .. } => {
+            let msg = match annealing::anneal(chip, &spec.problem, params, spec.scale) {
+                Ok((trace, best)) => {
+                    let (be, bs) = best
+                        .into_iter()
+                        .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                        .unwrap_or((f64::INFINITY, Vec::new()));
+                    JobResult::Annealed {
+                        best_energy: be,
+                        best_state: bs,
+                        trace: trace.rows,
+                        chip: k,
+                        latency: t0.elapsed(),
+                    }
+                }
+                Err(e) => JobResult::Failed(format!("anneal: {e}")),
+            };
+            (msg, (params.steps * params.sweeps_per_step) as u64)
+        }
+        JobRequest::Tempering { params, .. } => {
+            let msg = match annealing::temper(chip, &spec.problem, params, spec.scale) {
+                Ok(run) => JobResult::Tempered {
+                    best_energy: run.best_energy,
+                    best_state: run.best_state,
+                    trace: run.trace.rows,
+                    swap_acceptance: run.swaps.acceptance_rates(),
+                    round_trips: run.swaps.round_trips,
+                    chip: k,
+                    latency: t0.elapsed(),
+                },
+                Err(e) => JobResult::Failed(format!("tempering: {e}")),
+            };
+            (msg, params.total_sweeps() as u64)
+        }
+        JobRequest::Sample { .. } => return,
+    };
+    if matches!(msg, JobResult::Failed(_)) {
+        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    } else {
+        stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        stats.total_latency_us.fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        stats.chip_time_ns.fetch_add((n_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
+    }
+    let _ = reply.send(msg);
 }
 
 #[cfg(test)]
@@ -503,6 +603,42 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn tempering_job_roundtrip() {
+        let (srv, h) = server(1);
+        let params = TemperingParams {
+            ladder: crate::annealing::BetaLadder::geometric(0.2, 3.0, 8),
+            sweeps_per_round: 2,
+            rounds: 12,
+            ..Default::default()
+        };
+        match srv.run(JobRequest::Tempering { problem: h, params }).unwrap() {
+            JobResult::Tempered { best_energy, best_state, swap_acceptance, trace, .. } => {
+                assert!(best_energy.is_finite());
+                assert_eq!(best_state.len(), crate::N_SPINS);
+                assert_eq!(swap_acceptance.len(), 7);
+                assert!(!trace.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tempering_fanout_returns_best_run() {
+        let (srv, h) = server(2);
+        let params = TemperingParams {
+            ladder: crate::annealing::BetaLadder::geometric(0.2, 3.0, 4),
+            sweeps_per_round: 2,
+            rounds: 8,
+            ..Default::default()
+        };
+        match srv.run_tempering_fanout(h, &params, 4).unwrap() {
+            JobResult::Tempered { best_energy, .. } => assert!(best_energy.is_finite()),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 4);
     }
 
     #[test]

@@ -4,7 +4,9 @@
 
 use anyhow::Result;
 
-use crate::annealing::{anneal, AnnealParams, BetaSchedule};
+use crate::annealing::{
+    anneal, temper, AnnealParams, BetaLadder, BetaSchedule, TemperingParams, TemperingRun,
+};
 use crate::chimera::Topology;
 use crate::learning::TrainableChip;
 use crate::metrics::EnergyTrace;
@@ -31,12 +33,7 @@ pub fn fig9a_sk_anneal<C: TrainableChip>(
 ) -> Result<SkAnnealReport> {
     let topo = Topology::new();
     let problem = sk::chimera_pm_j(&topo, seed);
-    let (j, en, h, scale) = problem.to_codes(&topo)?;
-    chip.program_codes(&crate::analog::ProgrammedWeights {
-        j_codes: j,
-        enables: en,
-        h_codes: h,
-    })?;
+    let scale = super::program_problem(chip, &topo, &problem)?;
     chip.randomize(seed ^ 0xA55A);
     let (trace, best) = anneal(chip, &problem, params, scale)?;
     let best_energy =
@@ -76,12 +73,7 @@ pub fn fig9b_maxcut<C: TrainableChip>(
     csv_name: Option<&str>,
 ) -> Result<MaxCutReport> {
     let topo = Topology::new();
-    let (j, en, h, scale) = problem.to_codes(&topo)?;
-    chip.program_codes(&crate::analog::ProgrammedWeights {
-        j_codes: j,
-        enables: en,
-        h_codes: h,
-    })?;
+    let scale = super::program_problem(chip, &topo, problem)?;
     chip.randomize(0xCA7);
 
     // annealing loop with cut tracking
@@ -131,6 +123,100 @@ pub fn default_sk_params() -> AnnealParams {
         sweeps_per_step: 8,
         record_every: 1,
     }
+}
+
+/// Default tempering setup matching [`default_sk_params`]'s per-replica
+/// sweep budget (96 × 8 = 768 sweeps) and β span, so the two modes are
+/// directly comparable on the same die.
+pub fn default_sk_temper_params() -> TemperingParams {
+    TemperingParams {
+        ladder: BetaLadder::geometric(0.08, 4.0, 8),
+        sweeps_per_round: 8,
+        rounds: 96,
+        adapt_every: 0,
+        record_every: 1,
+        seed: 0x9A77,
+    }
+}
+
+/// Head-to-head: single-replica annealing vs replica exchange on the
+/// same instance and die with equal per-replica sweep budgets.
+#[derive(Debug, Clone)]
+pub struct TemperVsAnnealReport {
+    pub anneal: SkAnnealReport,
+    pub temper: TemperingRun,
+    /// The comparison target: the best energy the anneal reached.
+    pub target_energy: f64,
+    /// Per-replica sweeps each mode needed to first reach the target
+    /// (`None` = never within budget).
+    pub anneal_sweeps_to_target: Option<u64>,
+    pub temper_sweeps_to_target: Option<u64>,
+}
+
+/// First sweep count at which the trace's running minimum reaches
+/// `target` (within a small whisker).
+pub fn sweeps_to_reach(trace: &EnergyTrace, target: f64) -> Option<u64> {
+    let mut best = f64::INFINITY;
+    for &(sweep, _, _, min_e) in &trace.rows {
+        best = best.min(min_e);
+        if best <= target + 1e-9 {
+            return Some(sweep);
+        }
+    }
+    None
+}
+
+/// Run the Fig 9a instance through both sampling modes. The anneal's
+/// best energy becomes the target; the report says how many sweeps each
+/// mode needed to get there (`benches/fig9a_sk.rs` prints the table).
+pub fn fig9a_sk_temper_vs_anneal<C: TrainableChip>(
+    chip: &mut C,
+    seed: u64,
+    anneal_params: &AnnealParams,
+    temper_params: &TemperingParams,
+    csv_name: Option<&str>,
+) -> Result<TemperVsAnnealReport> {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, seed);
+    let scale = super::program_problem(chip, &topo, &problem)?;
+
+    chip.randomize(seed ^ 0xA55A);
+    let (a_trace, a_best) = anneal(chip, &problem, anneal_params, scale)?;
+    let anneal_best = a_best.iter().map(|(e, _)| *e).fold(f64::INFINITY, f64::min);
+
+    chip.randomize(seed ^ 0x7E39);
+    let run = temper(chip, &problem, temper_params, scale)?;
+    // tempering leaves per-chain βs pinned; restore a uniform knob for
+    // whatever runs on this die next
+    chip.set_beta(1.0);
+
+    let target = anneal_best;
+    let anneal_report = SkAnnealReport {
+        best_energy: anneal_best,
+        initial_energy_scale: 0.0,
+        energy_lower_bound: -(topo.edges.len() as f64),
+        trace: a_trace,
+    };
+    let report = TemperVsAnnealReport {
+        anneal_sweeps_to_target: sweeps_to_reach(&anneal_report.trace, target),
+        temper_sweeps_to_target: sweeps_to_reach(&run.trace, target),
+        anneal: anneal_report,
+        temper: run,
+        target_energy: target,
+    };
+    if let Some(name) = csv_name {
+        write_csv(
+            &format!("{name}_anneal"),
+            "sweep,beta,mean_energy,min_energy",
+            &report.anneal.trace.csv_rows(),
+        )?;
+        write_csv(
+            &format!("{name}_temper"),
+            "sweep,beta,mean_energy,min_energy",
+            &report.temper.trace.csv_rows(),
+        )?;
+    }
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -188,6 +274,46 @@ mod tests {
         for w in 1..r.chip_cut_trace.len() {
             assert!(r.chip_cut_trace[w].1 >= r.chip_cut_trace[w - 1].1);
         }
+    }
+
+    #[test]
+    fn temper_vs_anneal_report_is_consistent() {
+        let mut chip = software_chip(3, MismatchConfig::default(), 8);
+        let anneal_params = AnnealParams {
+            schedule: BetaSchedule::Geometric { b0: 0.1, b1: 4.0 },
+            steps: 24,
+            sweeps_per_step: 4,
+            record_every: 1,
+        };
+        let temper_params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 4,
+            rounds: 24,
+            record_every: 1,
+            ..Default::default()
+        };
+        let r =
+            fig9a_sk_temper_vs_anneal(&mut chip, 7, &anneal_params, &temper_params, None).unwrap();
+        assert_eq!(r.target_energy, r.anneal.best_energy);
+        assert!(r.temper.best_energy.is_finite() && r.temper.best_energy < 0.0);
+        // the anneal reaches its own best by construction
+        let a = r.anneal_sweeps_to_target.expect("anneal reaches its own best");
+        assert!(a <= 24 * 4);
+        if let Some(t) = r.temper_sweeps_to_target {
+            assert!(t <= r.temper.total_sweeps);
+        }
+        // swap diagnostics were collected
+        assert!(r.temper.swaps.attempts.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn sweeps_to_reach_uses_running_min() {
+        let mut t = EnergyTrace::default();
+        t.push(4, 0.5, -1.0, -5.0);
+        t.push(8, 0.7, -2.0, -3.0); // later row is worse; running min holds
+        assert_eq!(sweeps_to_reach(&t, -5.0), Some(4));
+        assert_eq!(sweeps_to_reach(&t, -4.9), Some(4));
+        assert_eq!(sweeps_to_reach(&t, -6.0), None);
     }
 
     #[test]

@@ -19,11 +19,19 @@ pub mod table1;
 
 pub use fig7::{fig7_gate_learning, GateExperiment, GateReport};
 pub use fig8::{fig8a_bias_sweep, fig8b_adder_learning, BiasSweepReport};
-pub use fig9::{fig9a_sk_anneal, fig9b_maxcut, MaxCutReport, SkAnnealReport};
-pub use table1::{table1_tts, Table1Report};
+pub use fig9::{
+    fig9a_sk_anneal, fig9a_sk_temper_vs_anneal, fig9b_maxcut, MaxCutReport, SkAnnealReport,
+    TemperVsAnnealReport,
+};
+pub use table1::{table1_tts, table1_tts_tempering, Table1Report};
 
+use anyhow::Result;
+
+use crate::analog::ProgrammedWeights;
+use crate::chimera::Topology;
 use crate::config::MismatchConfig;
-use crate::learning::Hw;
+use crate::learning::{Hw, TrainableChip};
+use crate::problems::IsingProblem;
 use crate::sampler::SoftwareSampler;
 
 /// Which engine an experiment drives.
@@ -46,4 +54,17 @@ pub fn software_chip(seed: u64, cfg: MismatchConfig, batch: usize) -> Hw<Softwar
 pub fn ideal_chip(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
     let topo = crate::chimera::Topology::new();
     Hw::new(SoftwareSampler::new(batch, seed), crate::analog::Personality::ideal(&topo))
+}
+
+/// Lower `problem` to 8-bit register codes and program it onto `chip`.
+/// Returns the code → logical scale (β_chip = β_logical × scale) —
+/// the one lowering block every experiment shares.
+pub fn program_problem<C: TrainableChip>(
+    chip: &mut C,
+    topo: &Topology,
+    problem: &IsingProblem,
+) -> Result<f64> {
+    let (j_codes, enables, h_codes, scale) = problem.to_codes(topo)?;
+    chip.program_codes(&ProgrammedWeights { j_codes, enables, h_codes })?;
+    Ok(scale)
 }

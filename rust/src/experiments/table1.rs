@@ -4,7 +4,10 @@
 
 use anyhow::Result;
 
-use crate::annealing::{anneal, tts99, AnnealParams, BetaSchedule, TtsEstimate};
+use crate::annealing::{
+    anneal, temper, tts99, tts99_counts, AnnealParams, BetaLadder, BetaSchedule, TemperingParams,
+    TtsEstimate,
+};
 use crate::chimera::Topology;
 use crate::chip::SAMPLE_TIME_NS;
 use crate::learning::TrainableChip;
@@ -38,12 +41,7 @@ pub fn table1_tts<C: TrainableChip>(
 ) -> Result<Table1Report> {
     let topo = Topology::new();
     let (problem, _hidden, e0) = sk::planted(&topo, seed);
-    let (j, en, h, scale) = problem.to_codes(&topo)?;
-    chip.program_codes(&crate::analog::ProgrammedWeights {
-        j_codes: j,
-        enables: en,
-        h_codes: h,
-    })?;
+    let scale = super::program_problem(chip, &topo, &problem)?;
 
     let sweeps_per_restart = params.steps * params.sweeps_per_step;
     let mut successes = 0usize;
@@ -94,6 +92,78 @@ pub fn table1_tts<C: TrainableChip>(
     Ok(report)
 }
 
+/// Measure TTS on the same planted ±J glass with replica exchange: run
+/// `repeats` independent tempering runs, count how many reach the
+/// planted ground energy. One "restart" is a whole K-replica run (its
+/// replicas occupy the die concurrently, so chip time stays sweeps ×
+/// 50 ns) — numbers are directly comparable with [`table1_tts`] when
+/// the per-replica sweep budgets match.
+pub fn table1_tts_tempering<C: TrainableChip>(
+    chip: &mut C,
+    seed: u64,
+    repeats: usize,
+    params: &TemperingParams,
+    csv_name: Option<&str>,
+) -> Result<Table1Report> {
+    let topo = Topology::new();
+    let (problem, _hidden, e0) = sk::planted(&topo, seed);
+    let scale = super::program_problem(chip, &topo, &problem)?;
+
+    let mut successes = 0usize;
+    let t_host = std::time::Instant::now();
+    for r in 0..repeats {
+        chip.randomize(seed ^ (0x7E44 + r as u64));
+        let mut p = params.clone();
+        p.seed = params.seed.wrapping_add(r as u64);
+        let run = temper(chip, &problem, &p, scale)?;
+        if run.best_energy <= e0 + 1e-6 {
+            successes += 1;
+        }
+    }
+    chip.set_beta(1.0);
+    let host_elapsed = t_host.elapsed().as_secs_f64();
+    let total_sweeps = (repeats * params.total_sweeps()) as f64;
+    let host_flips = total_sweeps * chip.batch() as f64 * crate::N_SPINS as f64;
+
+    let tts = tts99_counts(successes, repeats, params.chip_time_ns());
+    let report = Table1Report {
+        p_success: tts.p_success,
+        tts,
+        chip_time_per_restart_ns: params.chip_time_ns(),
+        host_flips_per_sec: host_flips / host_elapsed,
+        chip_flips_per_sec: crate::N_SPINS as f64 / (SAMPLE_TIME_NS * 1e-9),
+        restarts: repeats,
+        sweeps_per_restart: params.total_sweeps(),
+    };
+    if let Some(name) = csv_name {
+        write_csv(
+            name,
+            "p_success,tts99_ns,chip_time_per_restart_ns,host_flips_per_sec,chip_flips_per_sec",
+            &[vec![
+                report.p_success,
+                report.tts.tts99_ns,
+                report.chip_time_per_restart_ns,
+                report.host_flips_per_sec,
+                report.chip_flips_per_sec,
+            ]],
+        )?;
+    }
+    Ok(report)
+}
+
+/// Default tempering setup matching [`default_tts_params`]'s per-replica
+/// budget (48 × 4 = 192 sweeps) and β span.
+pub fn default_tts_temper_params() -> TemperingParams {
+    TemperingParams {
+        ladder: BetaLadder::geometric(0.15, 5.0, 8),
+        sweeps_per_round: 4,
+        rounds: 48,
+        adapt_every: 0,
+        record_every: 8,
+        seed: 0x7715,
+    }
+}
+
 /// The static spec constants Table 1 quotes for "This Work".
 pub fn spec_row() -> Vec<(&'static str, String)> {
     vec![
@@ -135,6 +205,18 @@ mod tests {
         assert!(r.tts.tts99_ns.is_finite());
         assert!(r.chip_flips_per_sec > 8e9); // 440 / 50ns = 8.8e9
         assert_eq!(r.sweeps_per_restart, 48 * 4);
+    }
+
+    #[test]
+    fn tempering_tts_on_planted_glass() {
+        let mut chip = software_chip(9, MismatchConfig::ideal(), 8);
+        let params = default_tts_temper_params();
+        let r = table1_tts_tempering(&mut chip, 3, 6, &params, None).unwrap();
+        assert!(r.p_success > 0.0, "no tempering run found the planted state");
+        assert!(r.tts.tts99_ns.is_finite());
+        assert_eq!(r.sweeps_per_restart, 48 * 4);
+        // K replicas run concurrently: restart time must not scale with K
+        assert_eq!(r.chip_time_per_restart_ns, 192.0 * SAMPLE_TIME_NS);
     }
 
     #[test]

@@ -114,7 +114,10 @@ pub fn calibrate<C: TrainableChip>(
 /// Pre-distort bias codes through calibration estimates: to realize an
 /// intended logical bias `h` on p-bit `i`, program `h/ĝ_i − ô_i/ĝ_i`.
 /// Returns compensated codes clipped to the 8-bit range.
-pub fn compensate_biases(report: &CalibrationReport, intended: &[(usize, f64)]) -> Vec<(usize, i8)> {
+pub fn compensate_biases(
+    report: &CalibrationReport,
+    intended: &[(usize, f64)],
+) -> Vec<(usize, i8)> {
     intended
         .iter()
         .map(|&(i, h)| {

@@ -56,6 +56,9 @@ impl<S: Sampler> Sampler for Hw<S> {
     fn set_beta(&mut self, beta: f32) {
         self.engine.set_beta(beta);
     }
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        self.engine.set_betas(betas)
+    }
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
         self.engine.set_clamps(clamps);
     }

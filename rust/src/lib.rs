@@ -11,26 +11,27 @@
 //! * **L1** — pallas kernels (`python/compile/kernels/`): the p-bit
 //!   update and correlation hot-spots, MXU-shaped.
 //! * **L2** — the jax chip model (`python/compile/model.py`), AOT-lowered
-//!   once to HLO text artifacts (`make artifacts`).
+//!   once to HLO text artifacts (`python -m compile.aot`).
 //! * **L3** — this crate: circuit-level substrates (analog standard-cell
 //!   models, decimated-LFSR RNG, SPI), the cycle-accurate chip simulator,
-//!   PJRT-backed and pure-rust samplers, the CD trainer, annealing/TTS,
-//!   the problem library, and an async job coordinator. Python never runs
-//!   on the request path.
+//!   PJRT-backed and pure-rust samplers, the CD trainer, annealing / TTS
+//!   and a replica-exchange (parallel tempering) engine, the problem
+//!   library, and an async job coordinator. Python never runs on the
+//!   request path.
 //!
-//! ## Quick map
+//! The paper-figure → module map and the quickstart live in the
+//! top-level `README.md`; `docs/ARCHITECTURE.md` walks the three layers
+//! and the coordinator's job lifecycle in detail.
 //!
-//! | paper artifact | module / binary |
-//! |---|---|
-//! | eqns (1),(2) p-bit update | [`sampler`], [`chip`] |
-//! | Chimera topology (Fig 1) | [`chimera`] |
-//! | R-2R DAC / Gilbert mult / WTA tanh (Figs 3-6) | [`analog`] |
-//! | decimated LFSR RNG | [`rng`] |
-//! | hardware-aware CD (Fig 7) | [`learning`] |
-//! | bias-sweep variability (Fig 8a) | `examples/bias_sweep.rs` |
-//! | full-adder learning (Fig 8b) | `examples/train_adder.rs` |
-//! | SK annealing / Max-Cut (Fig 9) | [`annealing`], [`problems`] |
-//! | TTS comparison (Table 1) | `benches/table1_tts.rs` |
+//! Two sampling modes are first-class: a β-ramp anneal
+//! ([`annealing::anneal`], the paper's Fig 9a) and replica exchange
+//! ([`annealing::temper`]) — K replicas on a [`annealing::BetaLadder`]
+//! trading temperatures through Metropolis swap moves, served through
+//! the coordinator as [`coordinator::JobRequest::Tempering`].
+//!
+//! The PJRT path is behind the `xla` cargo feature; the default build
+//! substitutes a stub [`runtime`] so everything else works without an
+//! `xla_extension` install.
 
 pub mod analog;
 pub mod annealing;

@@ -4,6 +4,7 @@
 //! pchip info                         chip facts + artifact status
 //! pchip train  [--gate and|or|xor|adder] [--epochs N] [--lr X] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
+//! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
 //! pchip maxcut [--native-keep P | --clique-n N]
 //! pchip sweep  [--pbits N] [--points N]           (Fig 8a bias sweep)
 //! pchip tts    [--restarts N]                     (Table 1)
@@ -77,6 +78,7 @@ fn main() -> Result<()> {
         "info" => cmd_info(&args),
         "train" => cmd_train(&args),
         "anneal" => cmd_anneal(&args),
+        "temper" => cmd_temper(&args),
         "maxcut" => cmd_maxcut(&args),
         "sweep" => cmd_sweep(&args),
         "tts" => cmd_tts(&args),
@@ -96,6 +98,7 @@ fn print_help() {
          info    chip facts + artifact status\n  \
          train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
+         temper  replica-exchange sampling vs annealing, head-to-head\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
          sweep   bias-sweep variability (Fig 8a)\n  \
          tts     time-to-solution measurement (Table 1)\n  \
@@ -148,6 +151,9 @@ impl pchip::sampler::Sampler for &mut dyn ErasedChip {
     }
     fn set_beta(&mut self, beta: f32) {
         (**self).set_beta(beta)
+    }
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        (**self).set_betas(betas)
     }
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
         (**self).set_clamps(clamps)
@@ -247,6 +253,61 @@ fn cmd_anneal(args: &Args) -> Result<()> {
         report.best_energy, report.energy_lower_bound
     );
     println!("  trace → results/fig9a_sk.csv");
+    Ok(())
+}
+
+fn cmd_temper(args: &Args) -> Result<()> {
+    use pchip::annealing::{BetaLadder, TemperingParams};
+    let cfg = load_config(args)?;
+    let b0: f64 = args.get("b0", 0.08)?;
+    let b1: f64 = args.get("b1", 4.0)?;
+    let replicas: usize = args.get("replicas", 8)?;
+    anyhow::ensure!(replicas >= 2, "--replicas must be at least 2, got {replicas}");
+    anyhow::ensure!(b0 > 0.0 && b1 > b0, "need 0 < --b0 < --b1, got {b0}..{b1}");
+    let rounds: usize = args.get("rounds", 96)?;
+    let sweeps_per_round: usize = args.get("sweeps-per-round", 8)?;
+    let seed = args.get("seed", 1u64)?;
+    let anneal_params = AnnealParams {
+        schedule: BetaSchedule::Geometric { b0, b1 },
+        steps: rounds,
+        sweeps_per_step: sweeps_per_round,
+        record_every: 1,
+    };
+    let temper_params = TemperingParams {
+        ladder: BetaLadder::geometric(b0, b1, replicas),
+        sweeps_per_round,
+        rounds,
+        adapt_every: args.get("adapt-every", 0)?,
+        record_every: 1,
+        seed: args.get("swap-seed", 0x9A77u64)?,
+    };
+    let report = with_chip(args, &cfg, replicas.max(8), |mut chip| {
+        exp::fig9a_sk_temper_vs_anneal(
+            &mut chip,
+            seed,
+            &anneal_params,
+            &temper_params,
+            Some("fig9a_temper"),
+        )
+    })?;
+    println!(
+        "SK seed {seed}: anneal best {:.0} | tempering best {:.0} (bound {:.0})",
+        report.anneal.best_energy, report.temper.best_energy, report.anneal.energy_lower_bound
+    );
+    let fmt = |s: Option<u64>| s.map(|v| v.to_string()).unwrap_or_else(|| "never".into());
+    println!(
+        "  sweeps to reach anneal-best {:.0}:  anneal {}  tempering {}",
+        report.target_energy,
+        fmt(report.anneal_sweeps_to_target),
+        fmt(report.temper_sweeps_to_target)
+    );
+    println!(
+        "  swaps: mean acceptance {:.2}, bottleneck {:.2}, round trips {}",
+        report.temper.swaps.mean_acceptance(),
+        report.temper.swaps.min_acceptance(),
+        report.temper.swaps.round_trips
+    );
+    println!("  traces → results/fig9a_temper_{{anneal,temper}}.csv");
     Ok(())
 }
 

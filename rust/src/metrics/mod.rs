@@ -4,8 +4,10 @@
 
 mod histogram;
 mod stats;
+mod swap;
 mod trace;
 
 pub use histogram::StateHistogram;
 pub use stats::{corr_edges, kl_divergence, magnetization, success_probability, Welford};
+pub use swap::SwapStats;
 pub use trace::EnergyTrace;

@@ -1,0 +1,129 @@
+//! Replica-exchange diagnostics: per-pair swap acceptance and replica
+//! round trips.
+//!
+//! The two numbers that tell you whether a tempering run is healthy:
+//!
+//! * **acceptance per adjacent pair** — too low (≲ 5 %) and the ladder
+//!   has a gap replicas cannot cross; too high (≳ 90 %) and rungs are
+//!   wasted. [`crate::annealing::BetaLadder::adapted`] consumes these
+//!   rates to re-space the ladder.
+//! * **round trips** — how many times a replica travelled hot → cold →
+//!   hot. Acceptance can look fine while replicas ping-pong between two
+//!   rungs; round trips measure actual mixing across the whole ladder.
+
+use crate::util::json::{obj, Json};
+
+/// Swap statistics for one tempering run.
+#[derive(Debug, Clone, Default)]
+pub struct SwapStats {
+    /// Attempted swaps per adjacent rung pair (`len = rungs − 1`).
+    pub attempts: Vec<u64>,
+    /// Accepted swaps per adjacent rung pair.
+    pub accepts: Vec<u64>,
+    /// Completed hot → cold → hot replica round trips.
+    pub round_trips: u64,
+}
+
+impl SwapStats {
+    pub fn new(rungs: usize) -> Self {
+        assert!(rungs >= 2, "need at least two rungs, got {rungs}");
+        Self { attempts: vec![0; rungs - 1], accepts: vec![0; rungs - 1], round_trips: 0 }
+    }
+
+    /// Record one swap attempt between rungs `k` and `k + 1`.
+    pub fn record(&mut self, k: usize, accepted: bool) {
+        self.attempts[k] += 1;
+        if accepted {
+            self.accepts[k] += 1;
+        }
+    }
+
+    /// Acceptance rate of the pair (k, k+1); 0 when never attempted.
+    pub fn acceptance(&self, k: usize) -> f64 {
+        if self.attempts[k] == 0 {
+            0.0
+        } else {
+            self.accepts[k] as f64 / self.attempts[k] as f64
+        }
+    }
+
+    /// Acceptance rate per adjacent pair.
+    pub fn acceptance_rates(&self) -> Vec<f64> {
+        (0..self.attempts.len()).map(|k| self.acceptance(k)).collect()
+    }
+
+    /// Attempt-weighted mean acceptance across all pairs.
+    pub fn mean_acceptance(&self) -> f64 {
+        let att: u64 = self.attempts.iter().sum();
+        if att == 0 {
+            0.0
+        } else {
+            self.accepts.iter().sum::<u64>() as f64 / att as f64
+        }
+    }
+
+    /// Lowest per-pair acceptance (the ladder's bottleneck).
+    pub fn min_acceptance(&self) -> f64 {
+        self.acceptance_rates().into_iter().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Merge another run's counters into this one (fan-out collection).
+    pub fn merge(&mut self, other: &SwapStats) {
+        assert_eq!(self.attempts.len(), other.attempts.len(), "rung count mismatch");
+        for k in 0..self.attempts.len() {
+            self.attempts[k] += other.attempts[k];
+            self.accepts[k] += other.accepts[k];
+        }
+        self.round_trips += other.round_trips;
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("acceptance", Json::from(self.acceptance_rates())),
+            ("attempts", Json::from(self.attempts.iter().map(|&a| a as f64).collect::<Vec<_>>())),
+            ("round_trips", Json::from(self.round_trips as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acceptance_bookkeeping() {
+        let mut s = SwapStats::new(4);
+        s.record(0, true);
+        s.record(0, false);
+        s.record(1, true);
+        assert_eq!(s.acceptance(0), 0.5);
+        assert_eq!(s.acceptance(1), 1.0);
+        assert_eq!(s.acceptance(2), 0.0);
+        assert!((s.mean_acceptance() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min_acceptance(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = SwapStats::new(3);
+        a.record(0, true);
+        a.round_trips = 2;
+        let mut b = SwapStats::new(3);
+        b.record(0, false);
+        b.record(1, true);
+        b.round_trips = 1;
+        a.merge(&b);
+        assert_eq!(a.attempts, vec![2, 1]);
+        assert_eq!(a.accepts, vec![1, 1]);
+        assert_eq!(a.round_trips, 3);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut s = SwapStats::new(3);
+        s.record(1, true);
+        let j = s.to_json();
+        assert_eq!(j.req("acceptance").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(j.req("round_trips").unwrap().as_f64().unwrap(), 0.0);
+    }
+}

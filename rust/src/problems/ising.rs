@@ -79,7 +79,8 @@ impl IsingProblem {
         self.validate(topo)?;
         let scale = self.max_abs();
         if scale == 0.0 {
-            return Ok((vec![0; topo.edges.len()], vec![false; topo.edges.len()], vec![0; N_SPINS], 1.0));
+            let ne = topo.edges.len();
+            return Ok((vec![0; ne], vec![false; ne], vec![0; N_SPINS], 1.0));
         }
         let mut j_codes = vec![0i8; topo.edges.len()];
         let mut enables = vec![false; topo.edges.len()];

@@ -142,8 +142,9 @@ impl Graph {
         let mut best = 0.0f64;
         for bits in 0..(1usize << (self.n - 1)) {
             // fix vertex n-1 on side +1 (cut symmetric under global flip)
-            let m: Vec<i8> =
-                (0..self.n).map(|v| if v < self.n - 1 && (bits >> v) & 1 == 1 { -1 } else { 1 }).collect();
+            let m: Vec<i8> = (0..self.n)
+                .map(|v| if v < self.n - 1 && (bits >> v) & 1 == 1 { -1 } else { 1 })
+                .collect();
             best = best.max(self.cut_value(&m));
         }
         Ok(best)

@@ -257,7 +257,8 @@ mod tests {
         }
         let nf = n as f64;
         let cov = svh / nf - (sv / nf) * (sh / nf);
-        let corr = cov / ((svv / nf - (sv / nf).powi(2)).sqrt() * (shh / nf - (sh / nf).powi(2)).sqrt());
+        let corr = cov
+            / ((svv / nf - (sv / nf).powi(2)).sqrt() * (shh / nf - (sh / nf).powi(2)).sqrt());
         assert!(corr.abs() < 0.05, "normal/reversed correlation {corr}");
     }
 

@@ -1,5 +1,7 @@
-//! Host-side tensor type and conversions to/from `xla::Literal`.
+//! Host-side tensor type and (feature-gated) conversions to/from
+//! `xla::Literal`.
 
+#[cfg(feature = "xla")]
 use anyhow::{anyhow, Result};
 
 /// A dense row-major f32 tensor on the host.
@@ -48,6 +50,7 @@ impl TensorF32 {
 }
 
 /// Build an `xla::Literal` from a host tensor.
+#[cfg(feature = "xla")]
 pub fn literal_f32(t: &TensorF32) -> Result<xla::Literal> {
     let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
     xla::Literal::vec1(&t.data)
@@ -56,6 +59,7 @@ pub fn literal_f32(t: &TensorF32) -> Result<xla::Literal> {
 }
 
 /// Extract a host vector from a literal (dims must be known by caller).
+#[cfg(feature = "xla")]
 pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>> {
     l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))
 }

@@ -7,10 +7,20 @@
 //! compiled [`Executable`] per artifact, reused across every request.
 //! Python is never on this path.
 
+//! Built without the `xla` cargo feature (the default), a stub with the
+//! same API stands in: everything compiles, and the PJRT entry points
+//! fail at call time with a pointer at the feature flag.
+
+#[cfg(feature = "xla")]
+mod client;
+#[cfg(not(feature = "xla"))]
+#[path = "stub.rs"]
 mod client;
 mod executables;
 mod literal;
 
 pub use client::{Executable, Runtime};
 pub use executables::{ArtifactSet, Manifest, ManifestEntry};
-pub use literal::{literal_f32, literal_to_vec, TensorF32};
+#[cfg(feature = "xla")]
+pub use literal::{literal_f32, literal_to_vec};
+pub use literal::TensorF32;

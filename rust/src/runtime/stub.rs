@@ -1,0 +1,56 @@
+//! Stub PJRT runtime, compiled when the `xla` cargo feature is off
+//! (the default — CI and most dev loops). Same API surface as the real
+//! `client` wrapper; every entry point fails at call time with
+//! a pointer at the feature flag, so the pure-rust engines, the
+//! coordinator and every experiment keep working unchanged and the
+//! `xla` crate (which needs a local `xla_extension` install) stays out
+//! of the default build graph.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::literal::TensorF32;
+
+const NO_XLA: &str = "pchip was built without the `xla` feature; \
+     rebuild with `cargo build --features xla` (needs a local xla_extension, see README)";
+
+/// Stub of the process-wide PJRT runtime.
+pub struct Runtime {}
+
+impl Runtime {
+    /// Always fails: the PJRT client needs the `xla` feature.
+    pub fn cpu() -> Result<Self> {
+        bail!(NO_XLA)
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".into()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Always fails: compiling HLO needs the `xla` feature.
+    pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+        bail!(NO_XLA)
+    }
+}
+
+/// Stub of a compiled AOT artifact.
+#[derive(Clone)]
+pub struct Executable {
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Always fails: execution needs the `xla` feature.
+    pub fn run(&self, _inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        bail!(NO_XLA)
+    }
+}

@@ -11,6 +11,35 @@
 //!
 //! All three consume the same [`crate::analog::Folded`] tensors, so any
 //! experiment can swap engines; `rust/tests/` cross-validates them.
+//!
+//! # Example: sampling a ferromagnetic pair
+//!
+//! Program a single strong coupler onto an ideal die and watch the two
+//! spins align (the 30-second version of `examples/quickstart.rs`):
+//!
+//! ```
+//! use pchip::analog::{Personality, ProgrammedWeights};
+//! use pchip::chimera::Topology;
+//! use pchip::sampler::{Sampler, SoftwareSampler};
+//!
+//! let topo = Topology::new();
+//! let (a, b) = topo.edges[0];
+//! let mut w = ProgrammedWeights::zeros(topo.edges.len());
+//! w.j_codes[0] = 127; // J = +1: ferromagnetic
+//! w.enables[0] = true;
+//! let folded = Personality::ideal(&topo).fold(&topo, &w);
+//!
+//! let mut s = SoftwareSampler::new(/*chains=*/ 4, /*seed=*/ 1);
+//! s.load(&folded);
+//! s.set_beta(6.0); // cold: alignment should dominate
+//! s.sweeps(60).unwrap();
+//! let states = s.states();
+//! let aligned = states.iter().filter(|st| st[a] == st[b]).count();
+//! assert!(aligned >= 3, "ferro pair aligned in {aligned}/4 chains");
+//! ```
+//!
+//! For replica exchange, chains take *individual* temperatures through
+//! [`Sampler::set_betas`]; see [`crate::annealing::temper`].
 
 mod clamp;
 mod noise;
@@ -33,6 +62,19 @@ pub trait Sampler {
 
     /// Set the inverse temperature (V_temp knob).
     fn set_beta(&mut self, beta: f32);
+
+    /// Pin each chain to its own inverse temperature (`betas.len()`
+    /// must equal [`Sampler::batch`]) — the replica-exchange knob:
+    /// a tempering swap is an O(1) exchange of two β entries, with no
+    /// state copied.
+    ///
+    /// Default: unsupported. [`SoftwareSampler`] implements it; the AOT
+    /// artifact takes a single scalar β and the cycle-level chip has one
+    /// V_temp rail, so [`XlaSampler`] and [`ChipSampler`] report an
+    /// error (see ROADMAP: per-replica β in the XLA artifact).
+    fn set_betas(&mut self, _betas: &[f32]) -> Result<()> {
+        Err(anyhow::anyhow!("this engine does not support per-chain β (tempering)"))
+    }
 
     /// Clamp spins to fixed values (empty to release). Clamping is
     /// implemented the hardware-honest way: slope to 0, offset to ±big,

@@ -24,7 +24,9 @@ impl NoiseSource {
 
     pub fn host(seed: u64, chains: usize) -> Self {
         Self::Host(
-            (0..chains).map(|c| HostRng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9))).collect(),
+            (0..chains)
+                .map(|c| HostRng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9)))
+                .collect(),
         )
     }
 

@@ -32,7 +32,9 @@ pub struct SoftwareSampler {
     g_base: Vec<f32>,
     o_base: Vec<f32>,
     clamps: Vec<(usize, i8)>,
-    beta: f32,
+    /// Per-chain β (all equal after [`Sampler::set_beta`]; individually
+    /// pinned by [`Sampler::set_betas`] for replica exchange).
+    betas: Vec<f32>,
     /// `[batch][N_SPINS]` spin states.
     states: Vec<Vec<i8>>,
     noise: NoiseSource,
@@ -61,7 +63,7 @@ impl SoftwareSampler {
             g_base: vec![1.0; N_PAD],
             o_base: vec![0.0; N_PAD],
             clamps: Vec::new(),
-            beta: 1.0,
+            betas: vec![1.0; batch],
             states: Vec::new(),
             noise,
             slab: vec![0.0; N_PAD],
@@ -81,10 +83,8 @@ impl SoftwareSampler {
     }
 
     #[inline(always)]
-    fn update_one(&self, state: &[i8], i: usize, u: f32) -> i8 {
-        update_spin(
-            &self.nbr_idx, &self.nbr_w, &self.h_eff, &self.g, &self.o, self.beta, state, i, u,
-        )
+    fn update_one(&self, state: &[i8], beta: f32, i: usize, u: f32) -> i8 {
+        update_spin(&self.nbr_idx, &self.nbr_w, &self.h_eff, &self.g, &self.o, beta, state, i, u)
     }
 }
 
@@ -149,7 +149,18 @@ impl Sampler for SoftwareSampler {
     }
 
     fn set_beta(&mut self, beta: f32) {
-        self.beta = beta;
+        self.betas.fill(beta);
+    }
+
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            betas.len() == self.states.len(),
+            "expected {} per-chain β values, got {}",
+            self.states.len(),
+            betas.len()
+        );
+        self.betas.copy_from_slice(betas);
+        Ok(())
     }
 
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
@@ -185,9 +196,10 @@ impl Sampler for SoftwareSampler {
             let chains = self.noise.split_chains();
             let (nbr_idx, nbr_w) = (&self.nbr_idx, &self.nbr_w);
             let (h_eff, g, o) = (&self.h_eff, &self.g, &self.o);
-            let (beta, groups) = (self.beta, &self.topo.color_groups);
+            let (betas, groups) = (&self.betas, &self.topo.color_groups);
             std::thread::scope(|scope| {
-                for (state, mut noise) in states.iter_mut().zip(chains) {
+                for (c, (state, mut noise)) in states.iter_mut().zip(chains).enumerate() {
+                    let beta = betas[c];
                     scope.spawn(move || {
                         let mut slab = vec![0.0f32; N_PAD];
                         for _ in 0..n {
@@ -209,10 +221,11 @@ impl Sampler for SoftwareSampler {
             for c in 0..batch {
                 let mut slab = std::mem::take(&mut self.slab);
                 let mut state = std::mem::take(&mut self.states[c]);
+                let beta = self.betas[c];
                 for phase in 0..2 {
                     self.noise.fill(c, &mut slab);
                     for &i in &self.topo.color_groups[phase] {
-                        state[i] = self.update_one(&state, i, slab[i]);
+                        state[i] = self.update_one(&state, beta, i, slab[i]);
                     }
                 }
                 self.states[c] = state;
@@ -322,6 +335,44 @@ mod tests {
         let mut s = SoftwareSampler::new(3, 4);
         s.sweeps(5).unwrap();
         assert_eq!(s.updates, 3 * 5 * N_SPINS as u64);
+    }
+
+    #[test]
+    fn per_chain_betas_give_per_chain_statistics() {
+        // one biased spin, chain 0 hot (β≈0) and chain 1 cold (β large):
+        // the cold chain should hold the bias almost always, the hot one
+        // should coin-flip.
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        w.h_codes[20] = 127;
+        let f = p.fold(&t, &w);
+        let mut s = SoftwareSampler::new(2, 5);
+        s.load(&f);
+        s.set_betas(&[0.01, 8.0]).unwrap();
+        s.sweeps(10).unwrap();
+        let (mut hot_up, mut cold_up, mut tot) = (0usize, 0usize, 0usize);
+        for _ in 0..300 {
+            s.sweeps(1).unwrap();
+            let st = s.states();
+            hot_up += (st[0][20] == 1) as usize;
+            cold_up += (st[1][20] == 1) as usize;
+            tot += 1;
+        }
+        let hot = hot_up as f64 / tot as f64;
+        let cold = cold_up as f64 / tot as f64;
+        assert!(cold > 0.95, "cold chain P(up) {cold}");
+        assert!((hot - 0.5).abs() < 0.15, "hot chain P(up) {hot}");
+    }
+
+    #[test]
+    fn set_betas_checks_length() {
+        let mut s = SoftwareSampler::new(3, 1);
+        assert!(s.set_betas(&[1.0, 2.0]).is_err());
+        assert!(s.set_betas(&[1.0, 2.0, 3.0]).is_ok());
+        // set_beta resets every chain
+        s.set_beta(0.7);
+        s.sweeps(1).unwrap();
     }
 
     #[test]

@@ -99,10 +99,16 @@ impl XlaSampler {
         let m_t = TensorF32::new(vec![self.batch, N_PAD], self.m.clone());
         let u_t = TensorF32::new(vec![self.s_sweeps, 2, self.batch, N_PAD], self.u.clone());
         let beta_t = TensorF32::scalar1(self.beta);
-        let out = self
-            .exe
-            .run(&[m_t, self.jt.clone(), self.h.clone(), self.g.clone(), self.o.clone(), u_t, beta_t])
-            .context("gibbs artifact execution")?;
+        let inputs = [
+            m_t,
+            self.jt.clone(),
+            self.h.clone(),
+            self.g.clone(),
+            self.o.clone(),
+            u_t,
+            beta_t,
+        ];
+        let out = self.exe.run(&inputs).context("gibbs artifact execution")?;
         self.m.copy_from_slice(&out[0]);
         self.calls += 1;
         Ok(())

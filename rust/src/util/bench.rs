@@ -99,7 +99,11 @@ impl Bench {
 }
 
 /// Write rows to `results/<name>.csv` (header + rows of f64 columns).
-pub fn write_csv(name: &str, header: &str, rows: &[Vec<f64>]) -> std::io::Result<std::path::PathBuf> {
+pub fn write_csv(
+    name: &str,
+    header: &str,
+    rows: &[Vec<f64>],
+) -> std::io::Result<std::path::PathBuf> {
     let dir = crate::config::results_dir();
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{name}.csv"));

@@ -389,6 +389,7 @@ mod tests {
         let text = r#"{"gibbs_b8": {"file": "gibbs_b8.hlo.txt", "inputs": [[8,448],[448,448]], "sweeps": 8}, "_meta": {"n_pad": 448}}"#;
         let v = Json::parse(text).unwrap();
         let e = v.req("gibbs_b8").unwrap();
-        assert_eq!(e.req("inputs").unwrap().as_arr().unwrap()[0].usize_array().unwrap(), vec![8, 448]);
+        let inputs = e.req("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs[0].usize_array().unwrap(), vec![8, 448]);
     }
 }

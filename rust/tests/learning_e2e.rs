@@ -5,11 +5,10 @@
 use pchip::analog::Personality;
 use pchip::chimera::{and_gate_layout, Topology};
 use pchip::chip::PbitChip;
-use pchip::config::{repo_artifacts_dir, MismatchConfig};
+use pchip::config::MismatchConfig;
 use pchip::learning::dataset::and_gate;
 use pchip::learning::{CdParams, CdTrainer, Hw};
-use pchip::runtime::{ArtifactSet, Runtime};
-use pchip::sampler::{ChipSampler, XlaSampler};
+use pchip::sampler::ChipSampler;
 
 fn quick_params() -> CdParams {
     CdParams {
@@ -40,9 +39,16 @@ fn cd_learns_and_gate_on_cycle_level_chip() {
 }
 
 /// CD through the AOT path: every sweep is a PJRT execution of the
-/// pallas-kernel-bearing HLO. Skipped when artifacts are not built.
+/// pallas-kernel-bearing HLO. Needs `--features xla` plus the HLO
+/// artifacts (`python -m compile.aot`), neither of which CI has.
+#[cfg(feature = "xla")]
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn cd_learns_and_gate_through_xla() {
+    use pchip::config::repo_artifacts_dir;
+    use pchip::runtime::{ArtifactSet, Runtime};
+    use pchip::sampler::XlaSampler;
+
     let dir = repo_artifacts_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP: artifacts not built");

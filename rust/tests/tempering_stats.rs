@@ -1,0 +1,217 @@
+//! Statistical validation of the replica-exchange engine.
+//!
+//! 1. On a small exactly-solvable instance (±1 couplings and biases in
+//!    one Chimera cell, so 8-bit quantization is exact), the coldest
+//!    rung's marginals must match the brute-force Boltzmann marginals
+//!    from `problems::exact` — swap moves must not disturb detailed
+//!    balance at any rung.
+//! 2. On the Fig 9a SK bench instance, adjacent-pair swap acceptance
+//!    must land in a sane band: not frozen (ladder gap too wide), not
+//!    saturated (rungs wasted).
+//!
+//! Both tests use the chip-accurate LFSR noise path, so they are fully
+//! deterministic.
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::annealing::{temper, temper_observed, BetaLadder, TemperingParams};
+use pchip::chimera::Topology;
+use pchip::problems::{exact_boltzmann, sk, IsingProblem};
+use pchip::sampler::{Sampler, SoftwareSampler};
+
+/// Frustrated ±1 problem inside the first Chimera cell, with two ±1
+/// biases. Every coefficient maps to code ±127 exactly, so the lowered
+/// problem *is* the logical problem (scale = 1).
+fn small_exact_problem(topo: &Topology) -> IsingProblem {
+    let cell_edges: Vec<(usize, usize)> =
+        topo.edges.iter().copied().filter(|&(i, j)| i < 8 && j < 8).collect();
+    assert!(cell_edges.len() >= 5, "expected a K4,4 cell at spins 0..8");
+    let mut p = IsingProblem::new("tempering-exact");
+    for (k, &(i, j)) in cell_edges.iter().take(5).enumerate() {
+        // alternate signs → frustration
+        p.couplings.push((i, j, if k % 2 == 0 { 1.0 } else { -1.0 }));
+    }
+    let (a, b) = cell_edges[0];
+    p.h[a] = 1.0;
+    p.h[b] = -1.0;
+    p
+}
+
+fn loaded_sampler(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+) -> SoftwareSampler {
+    let (j, en, h, scale) = problem.to_codes(topo).unwrap();
+    assert_eq!(scale, 1.0, "±1 coefficients must lower losslessly");
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    w.j_codes = j;
+    w.enables = en;
+    w.h_codes = h;
+    let folded = Personality::ideal(topo).fold(topo, &w);
+    let mut s = SoftwareSampler::new(batch, seed);
+    s.load(&folded);
+    s
+}
+
+#[test]
+fn coldest_rung_marginals_match_exact_boltzmann() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let beta_target = 1.0;
+
+    // ground truth by enumeration
+    let (states, probs) = exact_boltzmann(&problem, beta_target).unwrap();
+    let exact_m: Vec<f64> = (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect();
+
+    let mut sampler = loaded_sampler(&problem, &topo, 4, 11);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.25, beta_target, 4),
+        sweeps_per_round: 2,
+        rounds: 4200,
+        adapt_every: 0,
+        record_every: 100,
+        seed: 0xB017,
+    };
+    let burn_in = 200usize;
+    let mut sums = vec![0.0f64; support.len()];
+    let mut n = 0usize;
+    let run = temper_observed(&mut sampler, &problem, &params, 1.0, |round, states, rungs| {
+        if round < burn_in {
+            return;
+        }
+        let cold = &states[rungs[rungs.len() - 1]];
+        for (k, &s) in support.iter().enumerate() {
+            sums[k] += cold[s] as f64;
+        }
+        n += 1;
+    })
+    .unwrap();
+
+    assert!(n > 3500, "expected post-burn-in samples, got {n}");
+    for (k, &s) in support.iter().enumerate() {
+        let got = sums[k] / n as f64;
+        let want = exact_m[k];
+        assert!(
+            (got - want).abs() < 0.15,
+            "spin {s}: tempered marginal {got:.3} vs exact {want:.3}"
+        );
+    }
+    // healthy ladder on an easy instance: lively swaps and actual
+    // hot↔cold replica traffic
+    assert!(run.swaps.mean_acceptance() > 0.2, "acceptance {}", run.swaps.mean_acceptance());
+    assert!(run.swaps.round_trips >= 5, "round trips {}", run.swaps.round_trips);
+}
+
+#[test]
+fn coldest_rung_mean_energy_matches_exact() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let beta_target = 1.0;
+    let (states, probs) = exact_boltzmann(&problem, beta_target).unwrap();
+    let support = problem.support();
+    // expand each support assignment to a full state to reuse energy()
+    let mut full = vec![1i8; pchip::N_SPINS];
+    let exact_e: f64 = states
+        .iter()
+        .zip(&probs)
+        .map(|(s, &p)| {
+            for (k, &spin) in support.iter().enumerate() {
+                full[spin] = s[k];
+            }
+            problem.energy(&full) * p
+        })
+        .sum();
+
+    let mut sampler = loaded_sampler(&problem, &topo, 4, 23);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.25, beta_target, 4),
+        sweeps_per_round: 2,
+        rounds: 4200,
+        adapt_every: 0,
+        record_every: 100,
+        seed: 0xE4E7,
+    };
+    let mut acc = 0.0f64;
+    let mut n = 0usize;
+    temper_observed(&mut sampler, &problem, &params, 1.0, |round, states, rungs| {
+        if round < 200 {
+            return;
+        }
+        acc += problem.energy(&states[rungs[rungs.len() - 1]]);
+        n += 1;
+    })
+    .unwrap();
+    let got = acc / n as f64;
+    assert!(
+        (got - exact_e).abs() < 0.35,
+        "tempered ⟨E⟩ {got:.3} vs exact {exact_e:.3}"
+    );
+}
+
+#[test]
+fn swap_acceptance_in_sane_band_on_sk_instance() {
+    let topo = Topology::new();
+    // the Fig 9a bench instance (seed 1)
+    let problem = sk::chimera_pm_j(&topo, 1);
+    let mut sampler = loaded_sampler(&problem, &topo, 16, 31);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.3, 2.0, 16),
+        sweeps_per_round: 2,
+        rounds: 200,
+        adapt_every: 0,
+        record_every: 20,
+        seed: 0x5A5A,
+    };
+    let run = temper(&mut sampler, &problem, &params, 1.0).unwrap();
+
+    // every adjacent pair attempted on alternate rounds
+    for (k, &att) in run.swaps.attempts.iter().enumerate() {
+        assert!(att >= 90, "pair {k} attempted only {att} times");
+    }
+    let mean = run.swaps.mean_acceptance();
+    assert!(
+        (0.05..=0.95).contains(&mean),
+        "mean swap acceptance {mean} outside the sane band"
+    );
+    // no pair may be fully saturated (wasted rung) and at most a couple
+    // may be near-frozen (ladder gap)
+    let rates = run.swaps.acceptance_rates();
+    let frozen = rates.iter().filter(|&&a| a < 0.01).count();
+    assert!(frozen <= 2, "{frozen} of {} pairs frozen: {rates:?}", rates.len());
+    let saturated = rates.iter().filter(|&&a| a > 0.995).count();
+    assert!(saturated <= 2, "{saturated} of {} pairs saturated: {rates:?}", rates.len());
+}
+
+#[test]
+fn adaptation_improves_the_bottleneck_acceptance() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 1);
+    // deliberately poor ladder: huge span, few rungs
+    let ladder = BetaLadder::geometric(0.1, 4.0, 8);
+    let base = TemperingParams {
+        ladder,
+        sweeps_per_round: 2,
+        rounds: 240,
+        adapt_every: 0,
+        record_every: 40,
+        seed: 0xADA7,
+    };
+    let mut s1 = loaded_sampler(&problem, &topo, 8, 41);
+    let fixed = temper(&mut s1, &problem, &base, 1.0).unwrap();
+    let mut s2 = loaded_sampler(&problem, &topo, 8, 41);
+    let adaptive = TemperingParams { adapt_every: 40, ..base.clone() };
+    let adapted = temper(&mut s2, &problem, &adaptive, 1.0).unwrap();
+    // adaptation must not make the bottleneck dramatically worse, and
+    // the ladder must have actually moved
+    assert_ne!(adapted.ladder.betas, base.ladder.betas, "ladder never adapted");
+    assert!(
+        adapted.swaps.min_acceptance() >= fixed.swaps.min_acceptance() * 0.5,
+        "adapted bottleneck {} vs fixed {}",
+        adapted.swaps.min_acceptance(),
+        fixed.swaps.min_acceptance()
+    );
+}

@@ -1,5 +1,13 @@
 //! Integration: AOT artifacts → PJRT → rust, cross-validated against the
-//! software sampler and the cycle-level chip. Requires `make artifacts`.
+//! software sampler and the cycle-level chip.
+//!
+//! Compiled only with `--features xla` and `#[ignore]`d by default:
+//! these tests need the HLO artifacts produced by the L2 lowering
+//! (`python -m compile.aot`, see README §The XLA path), which are not
+//! available in CI. Run them locally with
+//! `cargo test --features xla -- --ignored`.
+
+#![cfg(feature = "xla")]
 
 use pchip::analog::{Personality, ProgrammedWeights};
 use pchip::chimera::{Topology, N_PAD, N_SPINS};
@@ -24,6 +32,7 @@ fn artifacts() -> Option<(Runtime, ArtifactSet)> {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn energy_artifact_matches_rust_energy() {
     let Some((_rt, set)) = artifacts() else { return };
     let topo = Topology::new();
@@ -67,6 +76,7 @@ fn energy_artifact_matches_rust_energy() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn cd_stats_artifact_matches_direct_correlation() {
     let Some((_rt, set)) = artifacts() else { return };
     let mut rng = pchip::rng::HostRng::new(11);
@@ -90,6 +100,7 @@ fn cd_stats_artifact_matches_direct_correlation() {
 }
 
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn transfer_artifact_is_tanh() {
     let Some((_rt, set)) = artifacts() else { return };
     let exe = set.get("transfer_b32").unwrap();
@@ -115,6 +126,7 @@ fn transfer_artifact_is_tanh() {
 /// XLA state must agree with the software sampler exactly (same LFSR
 /// noise stream, same initial state, modulo tanh ulps on |act+u| ≈ 0).
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn xla_matches_software_on_independent_spins() {
     let Some((_rt, set)) = artifacts() else { return };
     let topo = Topology::new();
@@ -153,6 +165,7 @@ fn xla_matches_software_on_independent_spins() {
 /// Coupled problem: the two engines agree statistically (same folded
 /// tensors, independent noise) — magnetizations within sampling error.
 #[test]
+#[ignore = "needs PJRT artifacts (python -m compile.aot); see README §The XLA path"]
 fn xla_matches_software_statistics_when_coupled() {
     let Some((_rt, set)) = artifacts() else { return };
     let topo = Topology::new();
