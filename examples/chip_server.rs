@@ -113,6 +113,7 @@ fn main() -> anyhow::Result<()> {
                 anneal_best = anneal_best.min(best_energy);
             }
             JobResult::Failed(e) => eprintln!("job failed: {e}"),
+            other => eprintln!("unexpected result kind: {other:?}"),
         }
     }
     let elapsed = t0.elapsed();

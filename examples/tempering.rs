@@ -14,7 +14,8 @@
 
 use pchip::annealing::{AnnealParams, BetaLadder, BetaSchedule, TemperingParams};
 use pchip::config::MismatchConfig;
-use pchip::experiments::{fig9a_sk_temper_vs_anneal, software_chip};
+use pchip::coordinator::ShardedTemperingParams;
+use pchip::experiments::{fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal, software_chip};
 
 fn main() -> anyhow::Result<()> {
     let (b0, b1) = (0.08, 4.0);
@@ -80,5 +81,28 @@ fn main() -> anyhow::Result<()> {
         (Some(t), _) => println!("tempering matched the anneal's best energy at sweep {t}"),
         (None, _) => println!("tempering did not reach the anneal's best within this budget"),
     }
+
+    // The same ladder sharded across two dies: each die sweeps its half
+    // of the rungs concurrently, boundary replicas swap β-assignments at
+    // barrier-synchronized cross-worker swap phases.
+    let sharded_params = ShardedTemperingParams {
+        base: TemperingParams { adapt_every: 0, ..temper_params },
+        shards: 2,
+        barrier_timeout: std::time::Duration::from_secs(30),
+    };
+    let s = fig9a_sk_temper_sharded(1, &sharded_params, MismatchConfig::default(), 4, None)?;
+    println!("\nsharded across 2 dies (4 rungs each):");
+    println!(
+        "  best E {:.0} (single die: {:.0}, bound {:.0})",
+        s.sharded.run.best_energy, s.single.best_energy, s.energy_lower_bound
+    );
+    for (pair, acc) in s.sharded.boundary_pairs.iter().zip(s.sharded.boundary_acceptance()) {
+        println!("  die boundary at rungs {pair}↔{}: acceptance {acc:.2}", pair + 1);
+    }
+    println!(
+        "  merged: mean acceptance {:.2}, cross-shard round trips {}",
+        s.sharded.run.swaps.mean_acceptance(),
+        s.sharded.cross_shard_round_trips()
+    );
     Ok(())
 }

@@ -9,7 +9,10 @@
 
 use pchip::annealing::{AnnealParams, BetaLadder, BetaSchedule, TemperingParams};
 use pchip::config::MismatchConfig;
-use pchip::experiments::{fig9a_sk_anneal, fig9a_sk_temper_vs_anneal, software_chip};
+use pchip::coordinator::ShardedTemperingParams;
+use pchip::experiments::{
+    fig9a_sk_anneal, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal, software_chip,
+};
 use pchip::util::bench::{write_csv, Bench};
 
 fn main() -> anyhow::Result<()> {
@@ -105,6 +108,57 @@ fn main() -> anyhow::Result<()> {
     write_csv(
         "fig9a_temper_vs_anneal",
         "seed,anneal_best,anneal_sweeps,temper_best,temper_sweeps,swap_acceptance",
+        &rows,
+    )?;
+
+    // one ladder sharded across the die array: head-to-head vs the same
+    // ladder on a single die, with the merged swap diagnostics the
+    // coordinator reports (boundary-pair acceptance, cross-shard round
+    // trips)
+    println!("\n--- sharded tempering across the die array ---");
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let params = ShardedTemperingParams {
+            base: TemperingParams {
+                ladder: BetaLadder::geometric(0.08, 4.0, 8),
+                sweeps_per_round: 8,
+                rounds: 96,
+                adapt_every: 0,
+                record_every: 1,
+                seed: 0x9A77,
+            },
+            shards,
+            barrier_timeout: std::time::Duration::from_secs(60),
+        };
+        let r = fig9a_sk_temper_sharded(
+            1,
+            &params,
+            MismatchConfig::default(),
+            8 / shards,
+            if shards == 2 { Some("fig9a_sharded") } else { None },
+        )?;
+        let bacc = r.sharded.boundary_acceptance();
+        println!(
+            "{shards} shard(s): best E {:>6.0} (single die {:>6.0})  merged acc {:.2}  \
+             boundary acc {:?}  cross-shard round trips {}",
+            r.sharded.run.best_energy,
+            r.single.best_energy,
+            r.sharded.run.swaps.mean_acceptance(),
+            bacc.iter().map(|a| (a * 100.0).round() / 100.0).collect::<Vec<_>>(),
+            r.sharded.cross_shard_round_trips()
+        );
+        rows.push(vec![
+            shards as f64,
+            r.sharded.run.best_energy,
+            r.single.best_energy,
+            r.sharded.run.swaps.mean_acceptance(),
+            bacc.iter().copied().fold(f64::INFINITY, f64::min),
+            r.sharded.cross_shard_round_trips() as f64,
+        ]);
+    }
+    write_csv(
+        "fig9a_sharded_arms",
+        "shards,sharded_best,single_best,merged_acceptance,min_boundary_acceptance,cross_shard_round_trips",
         &rows,
     )?;
 

@@ -8,9 +8,11 @@
 //! comparison: cycle-level chip vs software CSR vs XLA path.
 
 use pchip::config::MismatchConfig;
+use pchip::coordinator::ShardedTemperingParams;
 use pchip::experiments::software_chip;
 use pchip::experiments::table1::{
-    default_tts_params, default_tts_temper_params, spec_row, table1_tts, table1_tts_tempering,
+    default_tts_params, default_tts_temper_params, spec_row, table1_tts, table1_tts_sharded,
+    table1_tts_tempering,
 };
 use pchip::util::bench::write_csv;
 
@@ -88,6 +90,54 @@ fn main() -> anyhow::Result<()> {
         rows.push(vec![pt, mt]);
     }
     write_csv("table1_modes", "p_success,tts99_ns", &rows)?;
+
+    // the sharded arm: the same tempering ladder spread across a die
+    // array, with the coordinator's merged swap diagnostics
+    println!("\nTTS sharded across the die array (same ladder, 2 and 4 dies):");
+    let mut rows = Vec::new();
+    for shards in [2usize, 4] {
+        let params = ShardedTemperingParams {
+            base: default_tts_temper_params(),
+            shards,
+            barrier_timeout: std::time::Duration::from_secs(60),
+        };
+        let mut p_acc = 0.0;
+        let mut tts_acc: Vec<f64> = Vec::new();
+        let mut cross_trips = 0u64;
+        let mut min_boundary = f64::INFINITY;
+        let instances = 3;
+        for seed in 0..instances {
+            let r = table1_tts_sharded(
+                100 + seed,
+                16,
+                &params,
+                MismatchConfig::default(),
+                8 / shards,
+                if seed == 0 && shards == 2 { Some("table1_sharded") } else { None },
+            )?;
+            p_acc += r.report.p_success;
+            if r.report.tts.tts99_ns.is_finite() {
+                tts_acc.push(r.report.tts.tts99_ns);
+            }
+            cross_trips += r.cross_shard_round_trips;
+            for &k in &r.boundary_pairs {
+                min_boundary = min_boundary.min(r.boundary.acceptance(k));
+            }
+        }
+        let p_mean = p_acc / instances as f64;
+        let tts_med = median(&mut tts_acc);
+        println!(
+            "  {shards} dies: mean p_success {p_mean:.3}   median TTS99 {:.1} µs   \
+             min boundary acc {min_boundary:.2}   cross-shard round trips {cross_trips}",
+            tts_med / 1e3
+        );
+        rows.push(vec![shards as f64, p_mean, tts_med, min_boundary, cross_trips as f64]);
+    }
+    write_csv(
+        "table1_sharded_arms",
+        "shards,p_success,tts99_ns,min_boundary_acceptance,cross_shard_round_trips",
+        &rows,
+    )?;
 
     // engine throughput comparison (chip-referred vs host wall-clock)
     println!("\nengine throughput (host wall-clock):");

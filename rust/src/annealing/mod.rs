@@ -23,5 +23,5 @@ mod tts;
 
 pub use sa::{anneal, AnnealParams};
 pub use schedule::{BetaLadder, BetaSchedule};
-pub use tempering::{temper, temper_observed, TemperingParams, TemperingRun};
+pub use tempering::{temper, temper_observed, TemperingCore, TemperingParams, TemperingRun};
 pub use tts::{tts99, tts99_counts, TtsEstimate};

@@ -93,6 +93,33 @@ impl BetaLadder {
         *self.betas.last().unwrap()
     }
 
+    /// Partition the ladder into `shards` contiguous rung ranges — the
+    /// shard plan of the cross-die tempering coordinator
+    /// ([`crate::coordinator::run_sharded_tempering`]). Rung counts are
+    /// balanced (sizes differ by at most one, larger shards first), the
+    /// ranges are in ladder order, every rung lands in exactly one
+    /// range, the first range starts at the hottest rung and the last
+    /// ends at the coldest.
+    ///
+    /// Panics unless `1 ≤ shards ≤ len()`.
+    pub fn partition(&self, shards: usize) -> Vec<std::ops::Range<usize>> {
+        let k = self.len();
+        assert!(
+            shards >= 1 && shards <= k,
+            "need between 1 and {k} shards for a {k}-rung ladder, got {shards}"
+        );
+        let base = k / shards;
+        let rem = k % shards;
+        let mut out = Vec::with_capacity(shards);
+        let mut start = 0;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            out.push(start..start + len);
+            start += len;
+        }
+        out
+    }
+
     /// Re-space the interior rungs from measured adjacent-pair swap
     /// acceptance rates (`acceptance.len() == len() − 1`).
     ///
@@ -209,6 +236,49 @@ mod tests {
         for (x, y) in a.betas.iter().zip(&b.betas) {
             assert!((x - y).abs() < 1e-12);
         }
+    }
+
+    /// Property: a partition covers every rung exactly once, in order,
+    /// with the endpoints pinned (first range starts at rung 0, last
+    /// ends at the coldest rung) and balanced sizes.
+    #[test]
+    fn prop_partition_covers_every_rung_once_in_order() {
+        crate::util::prop::check("ladder partition", 300, |rng| {
+            let k = rng.below(30) + 2;
+            let shards = rng.below(k) + 1;
+            let ladder = BetaLadder::geometric(0.1, 4.0, k);
+            let ranges = ladder.partition(shards);
+            assert_eq!(ranges.len(), shards);
+            // contiguous, ordered, endpoints pinned
+            assert_eq!(ranges[0].start, 0, "first shard must start at the hottest rung");
+            assert_eq!(ranges[shards - 1].end, k, "last shard must end at the coldest rung");
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "ranges must tile the ladder");
+            }
+            // every rung exactly once, every shard non-empty, balanced
+            let mut covered = vec![0usize; k];
+            for r in &ranges {
+                assert!(!r.is_empty(), "empty shard in {ranges:?}");
+                assert!(r.len() <= k / shards + 1, "unbalanced shard in {ranges:?}");
+                for rung in r.clone() {
+                    covered[rung] += 1;
+                }
+            }
+            assert!(covered.iter().all(|&c| c == 1), "rung covered ≠ once: {covered:?}");
+        });
+    }
+
+    #[test]
+    fn partition_single_shard_is_the_whole_ladder() {
+        let l = BetaLadder::geometric(0.1, 4.0, 8);
+        assert_eq!(l.partition(1), vec![0..8]);
+        assert_eq!(l.partition(8), (0..8).map(|i| i..i + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn partition_rejects_more_shards_than_rungs() {
+        BetaLadder::geometric(0.1, 4.0, 4).partition(5);
     }
 
     #[test]

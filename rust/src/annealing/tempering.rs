@@ -105,6 +105,219 @@ pub struct TemperingRun {
     pub total_sweeps: u64,
 }
 
+/// The resumable tempering state machine: everything [`temper`] tracks
+/// *between* sweep phases — the rung↔chain map, swap RNG, diagnostics,
+/// trace, best-state and the (possibly adapting) ladder.
+///
+/// One round of replica exchange splits into two halves:
+///
+/// 1. a **sweep phase** — pin per-chain βs ([`Self::chain_betas`]), run
+///    `sweeps_per_round` sweeps, read back states and energies. This
+///    half touches only the sampler and can run anywhere (one die, or
+///    one *shard* of a die array).
+/// 2. a **swap phase** — [`Self::finish_round`]: Metropolis swap moves
+///    over adjacent rung pairs, round-trip bookkeeping, trace recording
+///    and optional ladder adaptation. This half touches only the core's
+///    own state and is where a distributed run must synchronize.
+///
+/// [`temper`] drives the core against a single sampler;
+/// [`crate::coordinator::run_sharded_tempering`] drives the same core
+/// with the sweep phase fanned out across dies, pausing each shard at
+/// the swap barrier. Because every β-comparison, RNG draw and counter
+/// update lives here, a 1-shard sharded run is **bit-identical** to
+/// [`temper`] (proven by `rust/tests/sharded_equivalence.rs`).
+pub struct TemperingCore {
+    params: TemperingParams,
+    ladder: BetaLadder,
+    /// chain_at_rung[r] = chain currently holding rung r's temperature.
+    chain_at_rung: Vec<usize>,
+    /// Round-trip labels: which ladder end each chain last visited.
+    last_end: Vec<u8>,
+    swaps: SwapStats,
+    /// Windowed counters for ladder adaptation (reset after each adapt).
+    window: SwapStats,
+    rng: HostRng,
+    trace: EnergyTrace,
+    best: (f64, Vec<i8>),
+    sweeps_done: u64,
+    batch: usize,
+}
+
+const END_NONE: u8 = 0;
+const END_HOT: u8 = 1;
+const END_COLD: u8 = 2;
+
+impl TemperingCore {
+    /// Core over `batch` chains with the identity rung→chain assignment
+    /// (rung r starts on chain r; extra chains scout at the hottest β).
+    pub fn new(params: &TemperingParams, batch: usize) -> Result<Self> {
+        let k = params.ladder.len();
+        Self::with_assignment(params, batch, (0..k).collect())
+    }
+
+    /// Core with an explicit initial rung→chain assignment — the sharded
+    /// coordinator maps rung ranges onto per-die chain blocks, so rung r
+    /// of shard s starts on chain `offset(s) + (r − range(s).start)`.
+    pub fn with_assignment(
+        params: &TemperingParams,
+        batch: usize,
+        chain_at_rung: Vec<usize>,
+    ) -> Result<Self> {
+        let k = params.ladder.len();
+        ensure!(k >= 2, "tempering needs at least two rungs, got {k}");
+        ensure!(
+            k <= batch,
+            "ladder has {k} rungs but the sampler only has {batch} chains"
+        );
+        ensure!(params.sweeps_per_round > 0, "sweeps_per_round must be positive");
+        ensure!(params.record_every > 0, "record_every must be positive");
+        ensure!(
+            chain_at_rung.len() == k,
+            "assignment covers {} rungs but the ladder has {k}",
+            chain_at_rung.len()
+        );
+        let mut seen = vec![false; batch];
+        for &c in &chain_at_rung {
+            ensure!(c < batch, "rung assigned to chain {c} but there are only {batch} chains");
+            ensure!(!seen[c], "chain {c} assigned to two rungs");
+            seen[c] = true;
+        }
+        Ok(Self {
+            params: params.clone(),
+            ladder: params.ladder.clone(),
+            chain_at_rung,
+            last_end: vec![END_NONE; batch],
+            swaps: SwapStats::new(k),
+            window: SwapStats::new(k),
+            rng: HostRng::new(params.seed ^ 0x7E3A_94C1),
+            trace: EnergyTrace::default(),
+            best: (f64::INFINITY, Vec::new()),
+            sweeps_done: 0,
+            batch,
+        })
+    }
+
+    /// Number of chains the core accounts for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Rounds the run is configured for.
+    pub fn rounds(&self) -> usize {
+        self.params.rounds
+    }
+
+    /// Sweeps in each sweep phase.
+    pub fn sweeps_per_round(&self) -> usize {
+        self.params.sweeps_per_round
+    }
+
+    /// The current rung→chain map (rung 0 = hottest).
+    pub fn chain_at_rung(&self) -> &[usize] {
+        &self.chain_at_rung
+    }
+
+    /// Chip-β for every chain this round: each replica chain pinned to
+    /// its rung's β × `beta_scale`, every non-replica chain scouting at
+    /// the hottest β.
+    pub fn chain_betas(&self, beta_scale: f64) -> Vec<f32> {
+        let mut betas = vec![(self.ladder.hottest() * beta_scale) as f32; self.batch];
+        for (r, &c) in self.chain_at_rung.iter().enumerate() {
+            betas[c] = (self.ladder.betas[r] * beta_scale) as f32;
+        }
+        betas
+    }
+
+    /// Complete round `round` from its sweep-phase output: best-state
+    /// tracking over every chain (scouts included), the Metropolis swap
+    /// phase, round-trip accounting, trace recording and (when
+    /// `adapt_every > 0`) ladder adaptation. `energies`/`states` are
+    /// indexed by chain and must cover the full batch.
+    pub fn finish_round(&mut self, round: usize, energies: &[f64], states: &[Vec<i8>]) {
+        assert_eq!(energies.len(), self.batch, "need one energy per chain");
+        assert_eq!(states.len(), self.batch, "need one state per chain");
+        let k = self.ladder.len();
+        self.sweeps_done += self.params.sweeps_per_round as u64;
+
+        for (e, s) in energies.iter().zip(states) {
+            if *e < self.best.0 {
+                self.best = (*e, s.clone());
+            }
+        }
+
+        // swap phase: alternate even/odd pairings so every adjacent
+        // pair is attempted every other round
+        for r in ((round % 2)..k - 1).step_by(2) {
+            let (ca, cb) = (self.chain_at_rung[r], self.chain_at_rung[r + 1]);
+            let d_beta = self.ladder.betas[r + 1] - self.ladder.betas[r];
+            let d_energy = energies[cb] - energies[ca];
+            // π swap ratio = exp((β_cold − β_hot)(E_cold − E_hot))
+            let log_a = d_beta * d_energy;
+            let accept = log_a >= 0.0 || self.rng.uniform() < log_a.exp();
+            self.swaps.record(r, accept);
+            self.window.record(r, accept);
+            if accept {
+                self.chain_at_rung.swap(r, r + 1);
+            }
+        }
+
+        // round-trip accounting at the ladder ends
+        let hot_chain = self.chain_at_rung[0];
+        let cold_chain = self.chain_at_rung[k - 1];
+        if self.last_end[hot_chain] == END_COLD {
+            self.swaps.round_trips += 1;
+        }
+        self.last_end[hot_chain] = END_HOT;
+        self.last_end[cold_chain] = END_COLD;
+
+        // trace (over the K replicas only — hot scouts would skew the
+        // mean against an anneal trace) + optional ladder adaptation
+        if round % self.params.record_every == 0 || round == self.params.rounds - 1 {
+            let replica_e = self.chain_at_rung.iter().map(|&c| energies[c]);
+            let mean = replica_e.clone().sum::<f64>() / k as f64;
+            let min = replica_e.fold(f64::INFINITY, f64::min);
+            self.trace.push(self.sweeps_done, self.ladder.coldest(), mean, min);
+        }
+        if self.params.adapt_every > 0 && round > 0 && round % self.params.adapt_every == 0 {
+            // Pairs never attempted in this window (short windows only
+            // see one parity) carry no information: fill them with the
+            // window's mean acceptance instead of letting a 0 read as
+            // "fully rejecting" and wrench the ladder toward them.
+            let mut rates = self.window.acceptance_rates();
+            let measured: Vec<f64> = self
+                .window
+                .attempts
+                .iter()
+                .zip(&rates)
+                .filter(|(&a, _)| a > 0)
+                .map(|(_, &r)| r)
+                .collect();
+            if !measured.is_empty() {
+                let fill = measured.iter().sum::<f64>() / measured.len() as f64;
+                for (a, r) in self.window.attempts.iter().zip(rates.iter_mut()) {
+                    if *a == 0 {
+                        *r = fill;
+                    }
+                }
+                self.ladder = self.ladder.adapted(&rates);
+            }
+            self.window = SwapStats::new(k);
+        }
+    }
+
+    /// Finalize into a [`TemperingRun`].
+    pub fn into_run(self) -> TemperingRun {
+        TemperingRun {
+            trace: self.trace,
+            best_energy: self.best.0,
+            best_state: self.best.1,
+            swaps: self.swaps,
+            ladder: self.ladder,
+            total_sweeps: self.sweeps_done,
+        }
+    }
+}
+
 /// Run replica exchange on a batched sampler. `beta_scale` converts
 /// logical β to the chip knob exactly as in [`super::anneal`]; the swap
 /// criterion uses logical β × logical energy, which equals chip-β ×
@@ -136,126 +349,18 @@ where
     S: Sampler,
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
-    let k = params.ladder.len();
-    let batch = sampler.batch();
-    ensure!(k >= 2, "tempering needs at least two rungs, got {k}");
-    ensure!(
-        k <= batch,
-        "ladder has {k} rungs but the sampler only has {batch} chains"
-    );
-    ensure!(params.sweeps_per_round > 0, "sweeps_per_round must be positive");
-    ensure!(params.record_every > 0, "record_every must be positive");
-
-    let mut ladder = params.ladder.clone();
-    // chain_at_rung[r] = chain currently holding rung r's temperature.
-    let mut chain_at_rung: Vec<usize> = (0..k).collect();
-    // Round-trip labels: which ladder end each chain last visited.
-    const END_NONE: u8 = 0;
-    const END_HOT: u8 = 1;
-    const END_COLD: u8 = 2;
-    let mut last_end = vec![END_NONE; batch];
-
-    let mut swaps = SwapStats::new(k);
-    // Windowed counters for ladder adaptation (reset after each adapt).
-    let mut window = SwapStats::new(k);
-    let mut rng = HostRng::new(params.seed ^ 0x7E3A_94C1);
-    let mut trace = EnergyTrace::default();
-    let mut best = (f64::INFINITY, Vec::new());
-    let mut sweeps_done = 0u64;
-
-    let mut chain_betas = vec![0.0f32; batch];
+    let mut core = TemperingCore::new(params, sampler.batch())?;
     for round in 0..params.rounds {
-        // 1. pin each chain to its rung's chip-β; extras scout hot
-        for b in chain_betas.iter_mut() {
-            *b = (ladder.hottest() * beta_scale) as f32;
-        }
-        for (r, &c) in chain_at_rung.iter().enumerate() {
-            chain_betas[c] = (ladder.betas[r] * beta_scale) as f32;
-        }
-        sampler.set_betas(&chain_betas)?;
-
-        // 2. sweep all replicas
+        // sweep phase
+        sampler.set_betas(&core.chain_betas(beta_scale))?;
         sampler.sweeps(params.sweeps_per_round)?;
-        sweeps_done += params.sweeps_per_round as u64;
-
-        // 3. energies (logical), best-state tracking (over every chain,
-        //    scouts included), observer
         let states = sampler.states();
         let energies: Vec<f64> = states.iter().map(|s| problem.energy(s)).collect();
-        for (e, s) in energies.iter().zip(&states) {
-            if *e < best.0 {
-                best = (*e, s.clone());
-            }
-        }
-        observe(round, &states, &chain_at_rung);
-
-        // 4. swap phase: alternate even/odd pairings so every adjacent
-        //    pair is attempted every other round
-        for r in ((round % 2)..k - 1).step_by(2) {
-            let (ca, cb) = (chain_at_rung[r], chain_at_rung[r + 1]);
-            let d_beta = ladder.betas[r + 1] - ladder.betas[r];
-            let d_energy = energies[cb] - energies[ca];
-            // π swap ratio = exp((β_cold − β_hot)(E_cold − E_hot))
-            let log_a = d_beta * d_energy;
-            let accept = log_a >= 0.0 || rng.uniform() < log_a.exp();
-            swaps.record(r, accept);
-            window.record(r, accept);
-            if accept {
-                chain_at_rung.swap(r, r + 1);
-            }
-        }
-
-        // 5. round-trip accounting at the ladder ends
-        let hot_chain = chain_at_rung[0];
-        let cold_chain = chain_at_rung[k - 1];
-        if last_end[hot_chain] == END_COLD {
-            swaps.round_trips += 1;
-        }
-        last_end[hot_chain] = END_HOT;
-        last_end[cold_chain] = END_COLD;
-
-        // 6. trace (over the K replicas only — hot scouts would skew the
-        //    mean against an anneal trace) + optional ladder adaptation
-        if round % params.record_every == 0 || round == params.rounds - 1 {
-            let replica_e = chain_at_rung.iter().map(|&c| energies[c]);
-            let mean = replica_e.clone().sum::<f64>() / k as f64;
-            let min = replica_e.fold(f64::INFINITY, f64::min);
-            trace.push(sweeps_done, ladder.coldest(), mean, min);
-        }
-        if params.adapt_every > 0 && round > 0 && round % params.adapt_every == 0 {
-            // Pairs never attempted in this window (short windows only
-            // see one parity) carry no information: fill them with the
-            // window's mean acceptance instead of letting a 0 read as
-            // "fully rejecting" and wrench the ladder toward them.
-            let mut rates = window.acceptance_rates();
-            let measured: Vec<f64> = window
-                .attempts
-                .iter()
-                .zip(&rates)
-                .filter(|(&a, _)| a > 0)
-                .map(|(_, &r)| r)
-                .collect();
-            if !measured.is_empty() {
-                let fill = measured.iter().sum::<f64>() / measured.len() as f64;
-                for (a, r) in window.attempts.iter().zip(rates.iter_mut()) {
-                    if *a == 0 {
-                        *r = fill;
-                    }
-                }
-                ladder = ladder.adapted(&rates);
-            }
-            window = SwapStats::new(k);
-        }
+        observe(round, &states, core.chain_at_rung());
+        // swap phase
+        core.finish_round(round, &energies, &states);
     }
-
-    Ok(TemperingRun {
-        trace,
-        best_energy: best.0,
-        best_state: best.1,
-        swaps,
-        ladder,
-        total_sweeps: sweeps_done,
-    })
+    Ok(core.into_run())
 }
 
 #[cfg(test)]
@@ -342,6 +447,38 @@ mod tests {
         assert!((run.ladder.hottest() - 0.1).abs() < 1e-12);
         assert!((run.ladder.coldest() - 4.0).abs() < 1e-12);
         assert!(run.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn core_rejects_bad_assignments() {
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 2.0, 4),
+            ..Default::default()
+        };
+        // duplicate chain
+        assert!(TemperingCore::with_assignment(&params, 8, vec![0, 1, 1, 3]).is_err());
+        // chain out of range
+        assert!(TemperingCore::with_assignment(&params, 4, vec![0, 1, 2, 4]).is_err());
+        // wrong arity
+        assert!(TemperingCore::with_assignment(&params, 8, vec![0, 1, 2]).is_err());
+        // a permuted assignment is fine
+        assert!(TemperingCore::with_assignment(&params, 8, vec![5, 1, 7, 3]).is_ok());
+    }
+
+    #[test]
+    fn core_scout_chains_run_at_the_hottest_beta() {
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.5, 2.0, 2),
+            ..Default::default()
+        };
+        let core = TemperingCore::with_assignment(&params, 4, vec![2, 0]).unwrap();
+        let betas = core.chain_betas(1.0);
+        assert_eq!(betas.len(), 4);
+        assert!((betas[2] - 0.5).abs() < 1e-6, "rung 0 chain");
+        assert!((betas[0] - 2.0).abs() < 1e-6, "rung 1 chain");
+        // chains 1 and 3 are scouts: hottest β
+        assert!((betas[1] - 0.5).abs() < 1e-6);
+        assert!((betas[3] - 0.5).abs() < 1e-6);
     }
 
     #[test]

@@ -61,9 +61,20 @@ impl Batcher {
         Ok(())
     }
 
+    /// Put a popped batch back at the head of the queue, preserving
+    /// order — the dispatcher defers a gang job (sharded tempering)
+    /// that needs more idle dies than are currently free. Bypasses the
+    /// depth check: these jobs were already admitted.
+    pub fn unpop(&mut self, batch: Batch) {
+        for job in batch.jobs.into_iter().rev() {
+            self.queue.push_front(job);
+        }
+    }
+
     /// Pop the next batch: the head job plus any later jobs with the
-    /// same problem handle, while the chain budget holds. Anneal jobs
-    /// (whole-die) always dispatch alone.
+    /// same problem handle, while the chain budget holds. Whole-die and
+    /// gang jobs (anneal / tempering / sharded tempering) always
+    /// dispatch alone.
     pub fn pop_batch(&mut self) -> Option<Batch> {
         let head = self.queue.pop_front()?;
         let problem = head.request.problem();
@@ -102,6 +113,40 @@ mod tests {
 
     fn anneal(id: JobId, problem: u64) -> QueuedJob {
         QueuedJob { id, request: JobRequest::Anneal { problem, params: AnnealParams::default() } }
+    }
+
+    fn sharded(id: JobId, problem: u64) -> QueuedJob {
+        QueuedJob {
+            id,
+            request: JobRequest::ShardedTempering {
+                problem,
+                params: crate::coordinator::ShardedTemperingParams::default(),
+            },
+        }
+    }
+
+    #[test]
+    fn sharded_tempering_dispatches_alone() {
+        let mut b = Batcher::new(16, 32);
+        b.push(sharded(1, 3)).unwrap();
+        b.push(sample(2, 3, 4)).unwrap();
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.jobs.len(), 1, "gang jobs must not aggregate");
+        assert_eq!(batch.jobs[0].id, 1);
+    }
+
+    #[test]
+    fn unpop_restores_head_order() {
+        let mut b = Batcher::new(16, 32);
+        b.push(sharded(1, 3)).unwrap();
+        b.push(sample(2, 3, 4)).unwrap();
+        let batch = b.pop_batch().unwrap();
+        b.unpop(batch);
+        // same job comes back first, later jobs untouched behind it
+        let again = b.pop_batch().unwrap();
+        assert_eq!(again.jobs[0].id, 1);
+        let next = b.pop_batch().unwrap();
+        assert_eq!(next.jobs[0].id, 2);
     }
 
     #[test]
@@ -160,9 +205,13 @@ mod tests {
             let mut popped = Vec::new();
             let mut next_id = 0u64;
             for _ in 0..rng.below(60) + 1 {
-                if rng.uniform() < 0.6 {
-                    let job = if rng.uniform() < 0.15 {
+                let dice = rng.uniform();
+                if dice < 0.55 {
+                    let kind = rng.uniform();
+                    let job = if kind < 0.15 {
                         anneal(next_id, rng.below(3) as u64)
+                    } else if kind < 0.25 {
+                        sharded(next_id, rng.below(3) as u64)
                     } else {
                         sample(next_id, rng.below(3) as u64, rng.below(max_chains) + 1)
                     };
@@ -170,6 +219,11 @@ mod tests {
                         pushed.push(next_id);
                     }
                     next_id += 1;
+                } else if dice < 0.65 {
+                    // a deferred gang dispatch: pop then immediately unpop
+                    if let Some(batch) = b.pop_batch() {
+                        b.unpop(batch);
+                    }
                 } else if let Some(batch) = b.pop_batch() {
                     // single problem per batch
                     assert!(batch.jobs.iter().all(|j| j.request.problem() == batch.problem));

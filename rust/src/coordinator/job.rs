@@ -11,6 +11,8 @@ use std::time::Duration;
 
 use crate::annealing::{AnnealParams, TemperingParams};
 
+use super::sharded::ShardedTemperingParams;
+
 /// Opaque id of a registered problem.
 pub type ProblemHandle = u64;
 /// Monotone job id.
@@ -27,6 +29,13 @@ pub enum JobRequest {
     /// on the params' β-ladder. Requires a per-chain-β engine (the
     /// software sampler; the XLA artifact fails the job — ROADMAP).
     Tempering { problem: ProblemHandle, params: TemperingParams },
+    /// One β-ladder sharded across `params.shards` dies with
+    /// barrier-synchronized cross-worker swap phases (see
+    /// [`crate::coordinator::run_sharded_tempering`]). A gang job: the
+    /// dispatcher holds it until that many dies are idle at once, then
+    /// seats them all. Fails fast when the array is smaller than the
+    /// shard count.
+    ShardedTempering { problem: ProblemHandle, params: ShardedTemperingParams },
 }
 
 impl JobRequest {
@@ -35,6 +44,7 @@ impl JobRequest {
             JobRequest::Sample { problem, .. } => problem,
             JobRequest::Anneal { problem, .. } => problem,
             JobRequest::Tempering { problem, .. } => problem,
+            JobRequest::ShardedTempering { problem, .. } => problem,
         }
     }
 
@@ -42,8 +52,11 @@ impl JobRequest {
     pub fn chains(&self) -> usize {
         match *self {
             JobRequest::Sample { chains, .. } => chains.max(1),
-            // anneals and tempering runs occupy the whole die
-            JobRequest::Anneal { .. } | JobRequest::Tempering { .. } => usize::MAX,
+            // anneals and tempering runs occupy the whole die; sharded
+            // tempering occupies several, but still batches alone
+            JobRequest::Anneal { .. }
+            | JobRequest::Tempering { .. }
+            | JobRequest::ShardedTempering { .. } => usize::MAX,
         }
     }
 }
@@ -82,6 +95,31 @@ pub enum JobResult {
         /// Completed hot → cold → hot replica round trips.
         round_trips: u64,
         chip: usize,
+        latency: Duration,
+    },
+    ShardedTempered {
+        /// Best energy over every replica on every die.
+        best_energy: f64,
+        best_state: Vec<i8>,
+        /// (sweep, coldest β, mean energy, min energy) rows.
+        trace: Vec<(u64, f64, f64, f64)>,
+        /// Merged swap acceptance per adjacent rung pair (interior and
+        /// boundary pairs alike).
+        swap_acceptance: Vec<f64>,
+        /// Completed hot → cold → hot round trips over the full ladder.
+        round_trips: u64,
+        /// Pair indices straddling a die boundary (`pair k` = rungs
+        /// `k, k+1`), in ladder order.
+        boundary_pairs: Vec<usize>,
+        /// Acceptance of each boundary pair, in `boundary_pairs` order.
+        boundary_acceptance: Vec<f64>,
+        /// Round trips that crossed dies (= `round_trips` when more
+        /// than one shard ran; 0 for a degenerate 1-shard job).
+        cross_shard_round_trips: u64,
+        /// How many shards (dies) shared the ladder.
+        shards: usize,
+        /// Which dies were seated, in shard order (hot → cold).
+        dies: Vec<usize>,
         latency: Duration,
     },
     Failed(String),

@@ -44,10 +44,20 @@
 //!    [`JobResult`]. [`ServerStats`] aggregates latency, batch and
 //!    reprogram counters.
 //!
-//! Replica-exchange workloads can additionally fan out across dies with
-//! [`ChipArrayServer::run_tempering_fanout`]: `n` independent tempering
-//! runs (distinct swap seeds) spread over idle dies, best-energy result
-//! wins.
+//! Replica-exchange workloads scale across the array two ways:
+//!
+//! * **Fan-out** — [`ChipArrayServer::run_tempering_fanout`]: `n`
+//!   independent tempering runs (distinct swap seeds) spread over idle
+//!   dies; the best-energy result wins and every per-die failure is
+//!   surfaced in the returned [`FanoutReport`].
+//! * **Sharding** — [`JobRequest::ShardedTempering`] /
+//!   [`run_sharded_tempering`]: **one** β-ladder partitioned into
+//!   contiguous rung ranges, one die per range, sweeping concurrently
+//!   and meeting at barrier-synchronized cross-worker swap phases where
+//!   boundary replicas trade β-assignments (O(1), no state copied).
+//!   The protocol lives in `coordinator/sharded.rs`;
+//!   `rust/tests/sharded_equivalence.rs` proves a 1-shard run
+//!   bit-identical to the single-die engine.
 //!
 //! # Example
 //!
@@ -78,8 +88,13 @@ mod batcher;
 mod job;
 mod router;
 mod server;
+mod sharded;
 
 pub use batcher::{Batch, Batcher, QueuedJob};
 pub use job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
 pub use router::Router;
-pub use server::{ChipArrayServer, EngineKind, ProblemSpec, ServerStats};
+pub use server::{ChipArrayServer, EngineKind, FanoutReport, ProblemSpec, ServerStats};
+pub use sharded::{
+    run_sharded_tempering, run_sharded_tempering_observed, ShardPlan, ShardedRun,
+    ShardedTemperingParams,
+};

@@ -5,13 +5,27 @@
 //! already holds its weights; new problems go to the least-loaded die.
 //! An affinity is evicted when its die is claimed by a different
 //! problem (dies hold one weight image at a time).
+//!
+//! Three routing shapes, one invariant (every affinity entry points at
+//! a die resident with that problem):
+//!
+//! * [`Router::route`] — sticky: cheap sample batches serialize on the
+//!   warm die rather than pay a reprogram.
+//! * [`Router::route_spread`] — whole-die runs (anneal / tempering):
+//!   prefer an **idle** warm die, but reprogram an idle die over
+//!   serializing — a long run amortizes the SPI cost.
+//! * [`Router::route_gang`] — sharded tempering: claim N distinct idle
+//!   dies at once (warm → empty → evict), or `None` until enough are
+//!   idle. Several dies may then hold the same problem; `resident`
+//!   tracks each, `affinity` points at one of them.
 
 use std::collections::HashMap;
 
 /// Pure routing state (property-tested; the server wraps it).
 #[derive(Debug)]
 pub struct Router {
-    /// problem → die currently programmed with it.
+    /// problem → one die currently programmed with it (the sticky
+    /// target; more dies may also be resident after gang dispatches).
     affinity: HashMap<u64, usize>,
     /// die → problem it holds (reverse map).
     resident: Vec<Option<u64>>,
@@ -43,17 +57,102 @@ impl Router {
             self.load[w] += 1;
             return (w, false);
         }
-        // least-loaded die; prefer one holding no live affinity
+        // a die left warm by a gang/spread dispatch: adopt it for free
+        if let Some(w) = self.warm_die(problem) {
+            self.affinity.insert(problem, w);
+            self.load[w] += 1;
+            return (w, false);
+        }
+        // least-loaded die; prefer one holding no live weight image
         let w = (0..self.load.len())
             .min_by_key(|&w| (self.load[w], self.resident[w].is_some() as usize, w))
             .expect("at least one worker");
-        if let Some(old) = self.resident[w].replace(problem) {
-            self.affinity.remove(&old);
-        }
+        self.claim(w, problem);
         self.affinity.insert(problem, w);
-        self.reprograms += 1;
         self.load[w] += 1;
         (w, true)
+    }
+
+    /// Route a whole-die run (anneal / tempering): prefer the warm
+    /// affinity die when idle, else any idle warm die, else reprogram
+    /// the emptiest idle die (a long run amortizes the SPI cost), and
+    /// only serialize behind the warm die when nothing is idle.
+    pub fn route_spread(&mut self, problem: u64) -> (usize, bool) {
+        if let Some(&w) = self.affinity.get(&problem) {
+            if self.load[w] == 0 {
+                self.load[w] += 1;
+                return (w, false);
+            }
+        }
+        if let Some(w) = (0..self.load.len())
+            .find(|&w| self.load[w] == 0 && self.resident[w] == Some(problem))
+        {
+            self.affinity.entry(problem).or_insert(w);
+            self.load[w] += 1;
+            return (w, false);
+        }
+        let idle = (0..self.load.len())
+            .filter(|&w| self.load[w] == 0)
+            .min_by_key(|&w| (self.resident[w].is_some() as usize, w));
+        if let Some(w) = idle {
+            self.claim(w, problem);
+            self.affinity.entry(problem).or_insert(w);
+            self.load[w] += 1;
+            return (w, true);
+        }
+        // nothing idle: fall back to sticky routing
+        self.route(problem)
+    }
+
+    /// Claim `n` distinct **idle** dies for a gang job of `problem`
+    /// (sharded tempering), or `None` while fewer than `n` are idle.
+    /// Dies are picked warm-first, then empty, then eviction victims,
+    /// and returned as (die, needs_reprogram) in claim order.
+    pub fn route_gang(&mut self, problem: u64, n: usize) -> Option<Vec<(usize, bool)>> {
+        assert!(n >= 1, "a gang needs at least one die");
+        let mut idle: Vec<usize> =
+            (0..self.load.len()).filter(|&w| self.load[w] == 0).collect();
+        if idle.len() < n {
+            return None;
+        }
+        idle.sort_by_key(|&w| {
+            let class = match self.resident[w] {
+                Some(p) if p == problem => 0,
+                None => 1,
+                Some(_) => 2,
+            };
+            (class, w)
+        });
+        let mut out = Vec::with_capacity(n);
+        for &w in idle.iter().take(n) {
+            let needs = self.resident[w] != Some(problem);
+            if needs {
+                self.claim(w, problem);
+            }
+            self.load[w] += 1;
+            out.push((w, needs));
+        }
+        // the sticky target stays valid: point it at one gang member
+        let (w0, _) = out[0];
+        self.affinity.insert(problem, w0);
+        Some(out)
+    }
+
+    /// Install `problem` on die `w` (a reprogram): evict the old
+    /// resident, dropping its affinity entry only if it pointed here —
+    /// another die may still hold that problem warm.
+    fn claim(&mut self, w: usize, problem: u64) {
+        if let Some(old) = self.resident[w].replace(problem) {
+            if self.affinity.get(&old) == Some(&w) {
+                self.affinity.remove(&old);
+            }
+        }
+        self.reprograms += 1;
+    }
+
+    /// Any die already holding `problem`'s weight image.
+    fn warm_die(&self, problem: u64) -> Option<usize> {
+        (0..self.load.len()).find(|&w| self.resident[w] == Some(problem))
     }
 
     /// A batch finished on die `w`.
@@ -113,8 +212,51 @@ mod tests {
         assert_eq!(r.reprograms, 3);
     }
 
-    /// Properties: routed die in range; load bookkeeping consistent;
-    /// resident/affinity maps stay mutually inverse.
+    #[test]
+    fn spread_prefers_an_idle_die_over_serializing() {
+        let mut r = Router::new(2);
+        let (w0, re0) = r.route_spread(7);
+        assert!(re0);
+        // die w0 busy: a second whole-die run must take the other die
+        let (w1, re1) = r.route_spread(7);
+        assert_ne!(w0, w1, "whole-die runs must not serialize while a die is idle");
+        assert!(re1, "the cold die needs programming");
+        // both busy: now serialize on the sticky die rather than block
+        let (w2, re2) = r.route_spread(7);
+        assert!(!re2);
+        assert!(w2 == w0 || w2 == w1);
+        // after completing, an idle die warm with the problem is free
+        r.complete(w0);
+        r.complete(w1);
+        r.complete(w2);
+        let (_, re3) = r.route_spread(7);
+        assert!(!re3, "both dies hold problem 7 — no reprogram needed");
+    }
+
+    #[test]
+    fn gang_claims_distinct_idle_dies_or_none() {
+        let mut r = Router::new(3);
+        assert!(r.route_gang(5, 4).is_none(), "gang larger than the array");
+        let gang = r.route_gang(5, 2).unwrap();
+        let dies: Vec<usize> = gang.iter().map(|&(w, _)| w).collect();
+        assert_eq!(gang.len(), 2);
+        assert_ne!(dies[0], dies[1]);
+        assert!(gang.iter().all(|&(_, re)| re), "cold dies all reprogram");
+        // only one die idle now: a 2-gang must wait
+        assert!(r.route_gang(6, 2).is_none());
+        for &w in &dies {
+            r.complete(w);
+        }
+        // warm dies are reused without reprogramming
+        let gang2 = r.route_gang(5, 2).unwrap();
+        assert!(gang2.iter().all(|&(_, re)| !re), "warm gang re-claimed: {gang2:?}");
+    }
+
+    /// Properties over all three routing shapes: routed dies in range
+    /// and idle when required, load bookkeeping consistent, and every
+    /// affinity entry points at a die resident with that problem
+    /// (gang/spread dispatches may leave extra warm dies without an
+    /// affinity entry — that is allowed, dangling entries are not).
     #[test]
     fn prop_router_invariants() {
         prop::check("router invariants", 300, |rng| {
@@ -122,21 +264,48 @@ mod tests {
             let mut r = Router::new(n);
             let mut inflight: Vec<usize> = vec![0; n];
             for _ in 0..rng.below(100) {
-                if rng.uniform() < 0.7 {
+                let dice = rng.uniform();
+                if dice < 0.45 {
                     let p = rng.below(8) as u64;
                     let (w, _) = r.route(p);
                     assert!(w < n);
                     inflight[w] += 1;
                     assert_eq!(r.resident(w), Some(p));
+                } else if dice < 0.6 {
+                    let p = rng.below(8) as u64;
+                    let (w, _) = r.route_spread(p);
+                    assert!(w < n);
+                    inflight[w] += 1;
+                    assert_eq!(r.resident(w), Some(p));
+                } else if dice < 0.7 {
+                    let p = rng.below(8) as u64;
+                    let want = rng.below(n) + 1;
+                    let idle_before = (0..n).filter(|&w| inflight[w] == 0).count();
+                    match r.route_gang(p, want) {
+                        Some(gang) => {
+                            assert!(idle_before >= want, "gang granted without enough idle dies");
+                            assert_eq!(gang.len(), want);
+                            let mut dies: Vec<usize> = gang.iter().map(|&(w, _)| w).collect();
+                            dies.sort_unstable();
+                            dies.dedup();
+                            assert_eq!(dies.len(), want, "gang dies must be distinct");
+                            for &(w, _) in &gang {
+                                assert_eq!(inflight[w], 0, "gang claimed a busy die");
+                                inflight[w] += 1;
+                                assert_eq!(r.resident(w), Some(p));
+                            }
+                        }
+                        None => assert!(idle_before < want, "gang refused despite idle dies"),
+                    }
                 } else if let Some(w) = (0..n).find(|&w| inflight[w] > 0) {
                     r.complete(w);
                     inflight[w] -= 1;
                 }
                 for w in 0..n {
                     assert_eq!(r.load(w), inflight[w], "load mismatch on {w}");
-                    if let Some(p) = r.resident(w) {
-                        assert_eq!(r.affinity.get(&p), Some(&w), "maps not inverse");
-                    }
+                }
+                for (&p, &w) in r.affinity.iter() {
+                    assert_eq!(r.resident(w), Some(p), "affinity entry dangles: {p} → {w}");
                 }
             }
         });

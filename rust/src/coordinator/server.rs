@@ -19,6 +19,7 @@ use crate::sampler::{SoftwareSampler, XlaSampler};
 use super::batcher::{Batch, Batcher, QueuedJob};
 use super::job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
 use super::router::Router;
+use super::sharded::{self, ShardedTemperingParams};
 
 /// Which sampling engine each die runs.
 #[derive(Debug, Clone)]
@@ -26,11 +27,19 @@ pub enum EngineKind {
     /// Pure-rust CSR Gibbs (fast, no PJRT). Supports every job kind,
     /// including [`JobRequest::Tempering`] (per-chain β).
     Software,
+    /// [`EngineKind::Software`] with a custom chain count — smaller or
+    /// larger dies for heterogeneous arrays and failure-injection tests
+    /// (a die with fewer chains than a ladder has rungs fails tempering
+    /// jobs while still serving sample jobs).
+    SoftwareBatch { batch: usize },
     /// The AOT PJRT path (loads artifacts from the given directory).
     /// Requires the `xla` cargo feature — without it the worker thread
     /// panics at startup with a pointer at the feature flag. Tempering
     /// jobs fail on this engine (scalar-β artifact; see ROADMAP).
     Xla { artifacts_dir: std::path::PathBuf },
+    /// Heterogeneous array: die `k` runs `kinds[k % kinds.len()]`.
+    /// One level only — a nested `PerDie` panics at worker startup.
+    PerDie(Vec<EngineKind>),
 }
 
 /// A registered problem: logical form + lowered register codes.
@@ -39,6 +48,22 @@ pub struct ProblemSpec {
     pub codes: ProgrammedWeights,
     /// code → logical coupling scale (β_chip = β_logical × scale).
     pub scale: f64,
+}
+
+/// What [`ChipArrayServer::run_tempering_fanout`] returns: the winning
+/// run plus the diagnostics of every die that failed. Callers that only
+/// care about the answer read `best`; callers that care about array
+/// health must check `failures` — a die erroring out no longer hides
+/// behind the dies that succeeded.
+#[derive(Debug)]
+pub struct FanoutReport {
+    /// Best-energy [`JobResult::Tempered`] across the runs that
+    /// succeeded, or [`JobResult::Failed`] when none did.
+    pub best: JobResult,
+    /// One diagnostic per failed run, in completion order.
+    pub failures: Vec<String>,
+    /// How many runs were submitted.
+    pub runs: usize,
 }
 
 /// Aggregate serving metrics.
@@ -72,6 +97,18 @@ enum WorkerMsg {
         needs_program: bool,
         replies: Vec<mpsc::Sender<JobResult>>,
         submitted: Vec<Instant>,
+    },
+    /// Seat this die as one shard of a sharded tempering gang: program
+    /// if needed, randomize, then follow the exchange coordinator's
+    /// sweep/swap protocol until the run finishes (or the coordinator
+    /// hangs up). The worker reports `Done` when it leaves the seat.
+    ShardSeat {
+        shard: usize,
+        spec: Arc<ProblemSpec>,
+        needs_program: bool,
+        randomize_seed: u64,
+        cmd_rx: mpsc::Receiver<sharded::ShardCmd>,
+        out_tx: mpsc::Sender<sharded::ShardMsg>,
     },
     Shutdown,
 }
@@ -180,14 +217,20 @@ impl ChipArrayServer {
     /// independent replica-exchange runs of the same problem (each with
     /// a distinct swap seed, each occupying one die with its own
     /// K-replica ladder), wait for all, and return the best-energy
-    /// result. The dispatcher spreads the runs over idle dies, so with
-    /// `runs ≤ chips` they execute concurrently.
+    /// result **plus every per-die failure** — a die that errors is
+    /// reported, never silently dropped. The dispatcher spreads the
+    /// runs over idle dies, so with `runs ≤ chips` they execute
+    /// concurrently.
+    ///
+    /// For a *single* ladder cooperatively sharded across dies (rather
+    /// than independent ladders per die), see
+    /// [`ChipArrayServer::run_sharded_tempering`].
     pub fn run_tempering_fanout(
         &self,
         problem: ProblemHandle,
         params: &TemperingParams,
         runs: usize,
-    ) -> Result<JobResult> {
+    ) -> Result<FanoutReport> {
         let runs = runs.max(1);
         let tickets: Vec<JobTicket> = (0..runs)
             .map(|r| {
@@ -197,16 +240,19 @@ impl ChipArrayServer {
             })
             .collect::<Result<_>>()?;
         let mut best: Option<(f64, JobResult)> = None;
-        let mut failure: Option<String> = None;
+        let mut failures = Vec::new();
         for t in tickets {
             let r = t.wait();
             let e = match &r {
                 JobResult::Tempered { best_energy, .. } => *best_energy,
                 JobResult::Failed(msg) => {
-                    failure = Some(msg.clone());
+                    failures.push(msg.clone());
                     continue;
                 }
-                _ => continue,
+                other => {
+                    failures.push(format!("unexpected result kind: {other:?}"));
+                    continue;
+                }
             };
             let better = match &best {
                 Some((cur, _)) => e < *cur,
@@ -216,11 +262,27 @@ impl ChipArrayServer {
                 best = Some((e, r));
             }
         }
-        match (best, failure) {
-            (Some((_, r)), _) => Ok(r),
-            (None, Some(msg)) => Ok(JobResult::Failed(msg)),
-            (None, None) => Ok(JobResult::Failed("no tempering run returned".into())),
-        }
+        let best = match best {
+            Some((_, r)) => r,
+            None if !failures.is_empty() => JobResult::Failed(format!(
+                "all {runs} tempering runs failed: {}",
+                failures.join("; ")
+            )),
+            None => JobResult::Failed("no tempering run returned".into()),
+        };
+        Ok(FanoutReport { best, failures, runs })
+    }
+
+    /// Run one β-ladder sharded across `params.shards` dies (see
+    /// [`crate::coordinator::run_sharded_tempering`] for the protocol).
+    /// Convenience for submit-and-wait on a
+    /// [`JobRequest::ShardedTempering`] job.
+    pub fn run_sharded_tempering(
+        &self,
+        problem: ProblemHandle,
+        params: &ShardedTemperingParams,
+    ) -> Result<JobResult> {
+        self.run(JobRequest::ShardedTempering { problem, params: params.clone() })
     }
 
     pub fn stats(&self) -> &ServerStats {
@@ -300,12 +362,50 @@ fn dispatcher_main(
             let Some(spec) = spec else {
                 for j in &batch.jobs {
                     if let Some((tx, _)) = replies.remove(&j.id) {
+                        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
                         let _ = tx.send(JobResult::Failed("problem vanished".into()));
                     }
                 }
                 continue;
             };
-            let (w, needs_program) = router.route(batch.problem);
+            // Gang jobs (sharded tempering) need `shards` idle dies at
+            // once; defer the batch (head-of-line — a gang must not
+            // starve behind a trickle of singles) until they free up.
+            if let Some(shards) = sharded_shards(&batch) {
+                let job = batch.jobs.into_iter().next().expect("singleton batch");
+                let (reply, t0) = replies.remove(&job.id).expect("reply registered");
+                if shards == 0 || shards > n {
+                    stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(JobResult::Failed(format!(
+                        "sharded tempering wants {shards} dies but the array has {n}"
+                    )));
+                    continue;
+                }
+                match router.route_gang(job.request.problem(), shards) {
+                    Some(gang) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        dispatch_sharded(job, spec, gang, &worker_txs, reply, t0, &stats);
+                    }
+                    None => {
+                        // not enough idle dies yet — wait for Done msgs
+                        replies.insert(job.id, (reply, t0));
+                        batcher.unpop(Batch { problem: job.request.problem(), jobs: vec![job] });
+                        break;
+                    }
+                }
+                continue;
+            }
+            let whole_die = matches!(
+                batch.jobs[0].request,
+                JobRequest::Anneal { .. } | JobRequest::Tempering { .. }
+            );
+            let (w, needs_program) = if whole_die {
+                // long whole-die runs spread over idle dies instead of
+                // serializing behind the single warm die
+                router.route_spread(batch.problem)
+            } else {
+                router.route(batch.problem)
+            };
             if needs_program {
                 stats.reprograms.fetch_add(1, Ordering::Relaxed);
             }
@@ -334,6 +434,98 @@ fn dispatcher_main(
     }
 }
 
+/// `Some(shards)` when the batch is a lone sharded-tempering job.
+fn sharded_shards(batch: &Batch) -> Option<usize> {
+    match &batch.jobs[..] {
+        [job] => match &job.request {
+            JobRequest::ShardedTempering { params, .. } => Some(params.shards),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Seat the gang's dies and spawn the exchange-coordinator thread that
+/// drives the sweep/swap protocol and answers the job ticket. Worker
+/// load is released die-by-die through the normal `Done` path as each
+/// seat ends (when the coordinator finishes or hangs up on it).
+fn dispatch_sharded(
+    job: QueuedJob,
+    spec: Arc<ProblemSpec>,
+    gang: Vec<(usize, bool)>,
+    worker_txs: &[mpsc::Sender<WorkerMsg>],
+    reply: mpsc::Sender<JobResult>,
+    t0: Instant,
+    stats: &Arc<ServerStats>,
+) {
+    use crate::chip::SAMPLE_TIME_NS;
+    let JobRequest::ShardedTempering { params, .. } = job.request else {
+        unreachable!("dispatch_sharded called on a non-sharded job");
+    };
+    let (out_tx, out_rx) = mpsc::channel();
+    let mut cmd_txs = Vec::with_capacity(gang.len());
+    let dies: Vec<usize> = gang.iter().map(|&(w, _)| w).collect();
+    for (shard, &(w, needs_program)) in gang.iter().enumerate() {
+        if needs_program {
+            stats.reprograms.fetch_add(1, Ordering::Relaxed);
+        }
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        cmd_txs.push(cmd_tx);
+        let _ = worker_txs[w].send(WorkerMsg::ShardSeat {
+            shard,
+            spec: spec.clone(),
+            needs_program,
+            randomize_seed: 0xA11EA
+                ^ job.id
+                ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            cmd_rx,
+            out_tx: out_tx.clone(),
+        });
+    }
+    drop(out_tx);
+    let stats = stats.clone();
+    let scale = spec.scale;
+    let spawned = std::thread::Builder::new().name("shard-coordinator".into()).spawn(move || {
+        let result = sharded::drive_sharded(&params, scale, &cmd_txs, &out_rx, |_, _, _| {});
+        drop(cmd_txs); // hang up on any seat still waiting for a command
+        let n_sweeps = params.base.total_sweeps() as u64;
+        let msg = match result {
+            Ok(sr) => JobResult::ShardedTempered {
+                best_energy: sr.run.best_energy,
+                boundary_acceptance: sr.boundary_acceptance(),
+                cross_shard_round_trips: sr.cross_shard_round_trips(),
+                best_state: sr.run.best_state,
+                trace: sr.run.trace.rows,
+                swap_acceptance: sr.run.swaps.acceptance_rates(),
+                round_trips: sr.run.swaps.round_trips,
+                boundary_pairs: sr.boundary_pairs,
+                shards: sr.shards,
+                dies,
+                latency: t0.elapsed(),
+            },
+            Err(e) => JobResult::Failed(format!("sharded tempering: {e:#}")),
+        };
+        if matches!(msg, JobResult::Failed(_)) {
+            stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            stats
+                .total_latency_us
+                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+            stats
+                .chip_time_ns
+                .fetch_add((n_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
+        }
+        let _ = reply.send(msg);
+    });
+    if spawned.is_err() {
+        // the closure (and with it the reply sender) is dropped: the
+        // ticket sees the hangup and reports "coordinator shut down";
+        // seats exit once their cmd channels drop.
+        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 fn worker_main(
     k: usize,
     seed: u64,
@@ -345,9 +537,23 @@ fn worker_main(
 ) {
     let topo = Topology::new();
     let personality = Personality::sample(&topo, seed, mcfg);
+    let engine = match engine {
+        EngineKind::PerDie(kinds) => {
+            assert!(!kinds.is_empty(), "EngineKind::PerDie needs at least one engine");
+            kinds[k % kinds.len()].clone()
+        }
+        other => other,
+    };
     match engine {
+        EngineKind::PerDie(_) => {
+            panic!("EngineKind::PerDie cannot nest — give die {k} a concrete engine")
+        }
         EngineKind::Software => {
             let chip = Hw::new(SoftwareSampler::new(32, seed), personality);
+            worker_loop(k, chip, rx, done_tx, stats);
+        }
+        EngineKind::SoftwareBatch { batch } => {
+            let chip = Hw::new(SoftwareSampler::new(batch.max(1), seed), personality);
             worker_loop(k, chip, rx, done_tx, stats);
         }
         EngineKind::Xla { artifacts_dir } => {
@@ -389,6 +595,25 @@ fn worker_loop<C: TrainableChip>(
                 run_batch(k, &mut chip, &batch, &spec, replies, submitted, &stats);
                 let _ = done_tx.send(Msg::Done(k));
             }
+            WorkerMsg::ShardSeat { shard, spec, needs_program, randomize_seed, cmd_rx, out_tx } => {
+                if needs_program {
+                    if let Err(e) = chip.program_codes(&spec.codes) {
+                        let _ = out_tx.send(sharded::ShardMsg::Error {
+                            shard,
+                            message: format!("program (die {k}): {e}"),
+                        });
+                        let _ = done_tx.send(Msg::Done(k));
+                        continue;
+                    }
+                }
+                chip.set_clamps(&[]);
+                chip.randomize(randomize_seed);
+                sharded::shard_worker_loop(shard, &mut chip, &spec.problem, &cmd_rx, &out_tx);
+                // the seat pinned per-chain βs; restore a uniform knob
+                // for whatever runs on this die next
+                chip.set_beta(1.0);
+                let _ = done_tx.send(Msg::Done(k));
+            }
         }
     }
 }
@@ -416,6 +641,12 @@ fn run_batch<C: TrainableChip>(
             }
             JobRequest::Tempering { .. } => {
                 groups.entry((f64::INFINITY.to_bits(), usize::MAX)).or_default().push(idx);
+            }
+            // never reaches a single-die worker (the dispatcher seats
+            // gangs itself); grouped defensively so a routing bug fails
+            // the job instead of wedging the batch
+            JobRequest::ShardedTempering { .. } => {
+                groups.entry((f64::NEG_INFINITY.to_bits(), usize::MAX)).or_default().push(idx);
             }
         }
     }
@@ -516,6 +747,12 @@ fn run_whole_die_job<C: TrainableChip>(
             };
             (msg, params.total_sweeps() as u64)
         }
+        JobRequest::ShardedTempering { .. } => (
+            JobResult::Failed(
+                "sharded tempering reached a single-die worker (dispatcher bug)".into(),
+            ),
+            0,
+        ),
         JobRequest::Sample { .. } => return,
     };
     if matches!(msg, JobResult::Failed(_)) {
@@ -634,12 +871,78 @@ mod tests {
             rounds: 8,
             ..Default::default()
         };
-        match srv.run_tempering_fanout(h, &params, 4).unwrap() {
+        let report = srv.run_tempering_fanout(h, &params, 4).unwrap();
+        match report.best {
             JobResult::Tempered { best_energy, .. } => assert!(best_energy.is_finite()),
             other => panic!("unexpected {other:?}"),
         }
+        assert!(report.failures.is_empty(), "healthy array: {:?}", report.failures);
+        assert_eq!(report.runs, 4);
         assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 4);
     }
+
+    #[test]
+    fn sharded_tempering_job_roundtrip() {
+        let (srv, h) = server(3);
+        let params = ShardedTemperingParams {
+            base: TemperingParams {
+                ladder: crate::annealing::BetaLadder::geometric(0.2, 3.0, 6),
+                sweeps_per_round: 2,
+                rounds: 12,
+                ..Default::default()
+            },
+            shards: 3,
+            barrier_timeout: Duration::from_secs(30),
+        };
+        match srv.run_sharded_tempering(h, &params).unwrap() {
+            JobResult::ShardedTempered {
+                best_energy,
+                best_state,
+                swap_acceptance,
+                boundary_pairs,
+                boundary_acceptance,
+                shards,
+                dies,
+                trace,
+                ..
+            } => {
+                assert!(best_energy.is_finite());
+                assert_eq!(best_state.len(), crate::N_SPINS);
+                assert_eq!(swap_acceptance.len(), 5);
+                // 6 rungs over 3 shards → boundaries after rungs 1 and 3
+                assert_eq!(boundary_pairs, vec![1, 3]);
+                assert_eq!(boundary_acceptance.len(), 2);
+                assert_eq!(shards, 3);
+                assert_eq!(dies.len(), 3);
+                assert!(!trace.is_empty());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 1);
+        // every seat released its die: a follow-up job still runs
+        srv.run(JobRequest::Sample { problem: h, sweeps: 2, beta: 1.0, chains: 1 }).unwrap();
+    }
+
+    #[test]
+    fn sharded_tempering_larger_than_array_fails_fast() {
+        let (srv, h) = server(2);
+        let params = ShardedTemperingParams {
+            base: TemperingParams::default(),
+            shards: 5,
+            barrier_timeout: Duration::from_secs(5),
+        };
+        match srv.run_sharded_tempering(h, &params).unwrap() {
+            JobResult::Failed(msg) => {
+                assert!(msg.contains("5 dies") && msg.contains("has 2"), "{msg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_failed.load(Ordering::Relaxed), 1);
+    }
+
+    // Fan-out failure surfacing (a die that cannot host the ladder) is
+    // regression-tested end to end in tests/sharded_equivalence.rs:
+    // fanout_reports_the_failing_die_instead_of_hiding_it.
 
     #[test]
     fn affinity_avoids_reprogramming() {

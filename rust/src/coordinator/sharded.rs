@@ -1,0 +1,523 @@
+//! Sharded parallel tempering: **one** β-ladder spread across the die
+//! array, with cross-worker swap phases at the shard boundaries.
+//!
+//! [`crate::coordinator::ChipArrayServer::run_tempering_fanout`] runs
+//! *independent* ladders per die; this module is the next rung of the
+//! ROADMAP — the dies cooperate on a single replica-exchange run:
+//!
+//! ```text
+//!   rungs   0 1 2 │ 3 4 5 │ 6 7        (one BetaLadder, partitioned)
+//!           ──────┴───────┴─────
+//!   die 0   sweep phase  ╮
+//!   die 1   sweep phase  ├─ barrier ─▶ swap phase (coordinator) ─▶ next round
+//!   die 2   sweep phase  ╯             interior + boundary pairs
+//! ```
+//!
+//! Per round, every shard runs `sweeps_per_round` sweeps concurrently
+//! on its own die, then parks at the **swap barrier**. The coordinator
+//! collects each shard's post-sweep states/energies, executes the swap
+//! phase of [`TemperingCore`] — interior pairs *and* the boundary pairs
+//! that straddle two dies — and hands each shard its next β slice.
+//! A swap only re-pins two β entries (boundary replicas trade their
+//! β-assignment, never their 440-spin state), so a cross-die exchange
+//! costs the same O(1) as an on-die one; the expensive part is the
+//! barrier, which is why `sweeps_per_round` amortizes it.
+//!
+//! Because the entire swap phase (RNG draws, counters, trace,
+//! adaptation) lives in the shared [`TemperingCore`], a 1-shard run is
+//! **bit-identical** to [`crate::annealing::temper`] and a K-shard run
+//! is the same Markov chain with differently-seeded noise streams —
+//! both pinned by `rust/tests/sharded_equivalence.rs`.
+//!
+//! A stalled worker cannot deadlock the run: every barrier carries a
+//! timeout ([`ShardedTemperingParams::barrier_timeout`]) and expires
+//! into a diagnostic error naming the stalled shard(s).
+//!
+//! [`TemperingCore`]: crate::annealing::TemperingCore
+
+use std::ops::Range;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::annealing::{TemperingCore, TemperingParams, TemperingRun};
+use crate::metrics::SwapStats;
+use crate::problems::IsingProblem;
+use crate::sampler::Sampler;
+
+/// Parameters of one sharded tempering run.
+#[derive(Debug, Clone)]
+pub struct ShardedTemperingParams {
+    /// The underlying tempering run (ladder, rounds, swap seed, …).
+    pub base: TemperingParams,
+    /// How many dies share the ladder (1 = plain [`temper`] semantics).
+    ///
+    /// [`temper`]: crate::annealing::temper
+    pub shards: usize,
+    /// How long the coordinator waits at each swap barrier before
+    /// declaring a worker stalled and failing the run with a
+    /// diagnostic (never a deadlock).
+    pub barrier_timeout: Duration,
+}
+
+impl Default for ShardedTemperingParams {
+    fn default() -> Self {
+        Self {
+            base: TemperingParams::default(),
+            shards: 2,
+            barrier_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The shard layout: which rung range each die hosts and where its
+/// chain block sits in the coordinator's global chain numbering.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Contiguous rung range per shard ([`BetaLadder::partition`]).
+    ///
+    /// [`BetaLadder::partition`]: crate::annealing::BetaLadder::partition
+    pub ranges: Vec<Range<usize>>,
+    /// Chain count of each shard's die.
+    pub batches: Vec<usize>,
+    /// Global chain index where each shard's block starts.
+    pub offsets: Vec<usize>,
+    /// Total chains across the array (replicas + hot scouts).
+    pub total_chains: usize,
+}
+
+impl ShardPlan {
+    /// Plan `batches.len()` shards over `ladder`, checking every die
+    /// has enough chains for its rung range.
+    pub fn new(ladder: &crate::annealing::BetaLadder, batches: &[usize]) -> Result<Self> {
+        let shards = batches.len();
+        ensure!(shards >= 1, "sharded tempering needs at least one shard");
+        ensure!(
+            shards <= ladder.len(),
+            "cannot spread {} rungs across {shards} shards",
+            ladder.len()
+        );
+        let ranges = ladder.partition(shards);
+        let mut offsets = Vec::with_capacity(shards);
+        let mut total = 0usize;
+        for (s, range) in ranges.iter().enumerate() {
+            ensure!(
+                batches[s] >= range.len(),
+                "shard {s} hosts rungs {range:?} ({} replicas) but its die has only {} chains",
+                range.len(),
+                batches[s]
+            );
+            offsets.push(total);
+            total += batches[s];
+        }
+        Ok(Self { ranges, batches: batches.to_vec(), offsets, total_chains: total })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// Initial rung→global-chain assignment: rung `r` of shard `s`
+    /// starts on chain `offsets[s] + (r − ranges[s].start)`; the rest of
+    /// each die's block are hot scouts.
+    pub fn chain_at_rung(&self) -> Vec<usize> {
+        self.ranges
+            .iter()
+            .zip(&self.offsets)
+            .flat_map(|(range, &off)| (0..range.len()).map(move |p| off + p))
+            .collect()
+    }
+
+    /// Adjacent-pair indices that straddle a shard boundary (pair `k`
+    /// couples rungs `k` and `k + 1`).
+    pub fn boundary_pairs(&self) -> Vec<usize> {
+        self.ranges.iter().skip(1).map(|r| r.start - 1).collect()
+    }
+
+    /// Adjacent-pair indices entirely inside shard `s`.
+    pub fn interior_pairs(&self, s: usize) -> Vec<usize> {
+        let r = &self.ranges[s];
+        (r.start..r.end.saturating_sub(1)).collect()
+    }
+
+    /// Which shard hosts rung `r`.
+    pub fn shard_of(&self, rung: usize) -> usize {
+        self.ranges.iter().position(|range| range.contains(&rung)).expect("rung in plan")
+    }
+}
+
+/// What a sharded run returns: the merged [`TemperingRun`] plus the
+/// per-shard / boundary attribution of its swap diagnostics.
+#[derive(Debug, Clone)]
+pub struct ShardedRun {
+    /// The global run — trace, best state, *merged* swap stats, final
+    /// ladder. With one shard this is bit-identical to
+    /// [`crate::annealing::temper`]'s output.
+    pub run: TemperingRun,
+    /// Swap counters attributed to each shard's interior pairs
+    /// (boundary pairs belong to neither die; round trips are global).
+    /// Merging these with [`ShardedRun::boundary`] in **any order**
+    /// reproduces `run.swaps` — see `SwapStats::merge`.
+    pub per_shard: Vec<SwapStats>,
+    /// Swap counters of the cross-die boundary pairs only. With more
+    /// than one shard its `round_trips` carries the cross-shard round
+    /// trips (a hot→cold→hot excursion traverses every boundary).
+    pub boundary: SwapStats,
+    /// Pair indices of the shard boundaries (`pair k` = rungs `k, k+1`).
+    pub boundary_pairs: Vec<usize>,
+    /// How many dies shared the ladder.
+    pub shards: usize,
+}
+
+impl ShardedRun {
+    /// Acceptance rate of each boundary pair, in `boundary_pairs` order.
+    pub fn boundary_acceptance(&self) -> Vec<f64> {
+        self.boundary_pairs.iter().map(|&k| self.boundary.acceptance(k)).collect()
+    }
+
+    /// Completed hot→cold→hot excursions across the whole sharded
+    /// ladder (0 when the run was not actually sharded).
+    pub fn cross_shard_round_trips(&self) -> u64 {
+        if self.shards > 1 {
+            self.boundary.round_trips
+        } else {
+            0
+        }
+    }
+}
+
+/// Coordinator → shard-worker commands.
+pub(crate) enum ShardCmd {
+    /// Run one sweep phase: pin the β slice, sweep, report back.
+    Phase { betas: Vec<f32>, sweeps: usize },
+    /// The run is over; leave the seat.
+    Finish,
+}
+
+/// Shard-worker → coordinator messages.
+pub(crate) enum ShardMsg {
+    /// Sent once on joining: how many chains this die contributes.
+    Ready { shard: usize, batch: usize },
+    /// One sweep phase's output (all of the die's chains, in order).
+    Phase { shard: usize, states: Vec<Vec<i8>>, energies: Vec<f64> },
+    /// The shard failed (engine error, unsupported per-chain β, …).
+    Error { shard: usize, message: String },
+}
+
+/// The shard worker's half of the protocol: announce the die, then
+/// sweep on command until told (or hung up on) to finish. Runs on the
+/// die-owning thread — a [`ChipArrayServer`] worker seat or a thread
+/// spawned by [`run_sharded_tempering`].
+///
+/// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
+pub(crate) fn shard_worker_loop<S: Sampler>(
+    shard: usize,
+    sampler: &mut S,
+    problem: &IsingProblem,
+    cmd_rx: &mpsc::Receiver<ShardCmd>,
+    out_tx: &mpsc::Sender<ShardMsg>,
+) {
+    if out_tx.send(ShardMsg::Ready { shard, batch: sampler.batch() }).is_err() {
+        return; // coordinator already gone
+    }
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            ShardCmd::Finish => break,
+            ShardCmd::Phase { betas, sweeps } => {
+                let msg = match sweep_phase(shard, sampler, problem, &betas, sweeps) {
+                    Ok(m) => m,
+                    Err(e) => ShardMsg::Error { shard, message: format!("{e:#}") },
+                };
+                let failed = matches!(msg, ShardMsg::Error { .. });
+                if out_tx.send(msg).is_err() || failed {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One sweep phase on the shard's die: pin the β slice, sweep, read
+/// back states and (logical) energies.
+fn sweep_phase<S: Sampler>(
+    shard: usize,
+    sampler: &mut S,
+    problem: &IsingProblem,
+    betas: &[f32],
+    sweeps: usize,
+) -> Result<ShardMsg> {
+    sampler.set_betas(betas)?;
+    sampler.sweeps(sweeps)?;
+    let states = sampler.states();
+    let energies = states.iter().map(|s| problem.energy(s)).collect();
+    Ok(ShardMsg::Phase { shard, states, energies })
+}
+
+fn recv_by(
+    rx: &mpsc::Receiver<ShardMsg>,
+    deadline: Instant,
+) -> Result<ShardMsg, mpsc::RecvTimeoutError> {
+    rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
+}
+
+/// The coordinator's half of the protocol: handshake with every seat,
+/// then drive the round loop — fan the β slices out, wait (bounded) at
+/// the swap barrier, run the swap phase in the shared [`TemperingCore`].
+/// `observe(round, global_states, chain_at_rung)` mirrors
+/// [`crate::annealing::temper_observed`] with chains in shard order.
+pub(crate) fn drive_sharded<F>(
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    out_rx: &mpsc::Receiver<ShardMsg>,
+    mut observe: F,
+) -> Result<ShardedRun>
+where
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let shards = cmd_txs.len();
+    ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
+
+    // Handshake: learn each die's chain count (bounded wait — a worker
+    // that dies before joining must not hang the job).
+    let mut batches = vec![0usize; shards];
+    let mut joined = vec![false; shards];
+    let deadline = Instant::now() + params.barrier_timeout;
+    for _ in 0..shards {
+        match recv_by(out_rx, deadline) {
+            Ok(ShardMsg::Ready { shard, batch }) => {
+                batches[shard] = batch;
+                joined[shard] = true;
+            }
+            Ok(ShardMsg::Error { shard, message }) => {
+                bail!("shard {shard} failed during setup: {message}")
+            }
+            Ok(ShardMsg::Phase { shard, .. }) => {
+                bail!("protocol error: shard {shard} sent a sweep phase before joining")
+            }
+            Err(_) => {
+                let missing: Vec<usize> =
+                    (0..shards).filter(|&s| !joined[s]).collect();
+                bail!(
+                    "sharded tempering: shard(s) {missing:?} never joined within {:?}",
+                    params.barrier_timeout
+                );
+            }
+        }
+    }
+
+    let plan = ShardPlan::new(&params.base.ladder, &batches)?;
+    let mut core =
+        TemperingCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
+
+    let sweeps = params.base.sweeps_per_round;
+    let mut states: Vec<Vec<i8>> = vec![Vec::new(); plan.total_chains];
+    let mut energies = vec![0.0f64; plan.total_chains];
+    for round in 0..params.base.rounds {
+        // 1. fan this round's β slices out to the shards
+        let betas = core.chain_betas(beta_scale);
+        for s in 0..shards {
+            let slice = betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
+            if cmd_txs[s].send(ShardCmd::Phase { betas: slice, sweeps }).is_err() {
+                bail!("sharded tempering: shard {s} hung up before round {round}");
+            }
+        }
+        // 2. swap barrier: every shard must report, within the timeout
+        let deadline = Instant::now() + params.barrier_timeout;
+        let mut seen = vec![false; shards];
+        for _ in 0..shards {
+            match recv_by(out_rx, deadline) {
+                Ok(ShardMsg::Phase { shard, states: st, energies: en }) => {
+                    ensure!(
+                        st.len() == plan.batches[shard] && en.len() == plan.batches[shard],
+                        "shard {shard} reported {} chains, expected {}",
+                        st.len(),
+                        plan.batches[shard]
+                    );
+                    let off = plan.offsets[shard];
+                    for (i, (s_i, e_i)) in st.into_iter().zip(en).enumerate() {
+                        states[off + i] = s_i;
+                        energies[off + i] = e_i;
+                    }
+                    seen[shard] = true;
+                }
+                Ok(ShardMsg::Error { shard, message }) => {
+                    bail!("sharded tempering: shard {shard} failed at round {round}: {message}")
+                }
+                Ok(ShardMsg::Ready { shard, .. }) => {
+                    bail!("protocol error: shard {shard} re-joined mid-run")
+                }
+                Err(_) => {
+                    let stalled: Vec<usize> = (0..shards).filter(|&s| !seen[s]).collect();
+                    bail!(
+                        "sharded tempering: swap-phase barrier timed out after {:?} at round \
+                         {round}; stalled shard(s): {stalled:?}",
+                        params.barrier_timeout
+                    );
+                }
+            }
+        }
+        // 3. swap phase — interior and boundary pairs alike, O(1) each
+        //    (β-assignments move, spin states stay on their dies)
+        observe(round, &states, core.chain_at_rung());
+        core.finish_round(round, &energies, &states);
+    }
+    for tx in cmd_txs {
+        let _ = tx.send(ShardCmd::Finish);
+    }
+
+    let run = core.into_run();
+    let boundary_pairs = plan.boundary_pairs();
+    let mut per_shard: Vec<SwapStats> =
+        (0..shards).map(|s| run.swaps.restricted(&plan.interior_pairs(s))).collect();
+    let mut boundary = run.swaps.restricted(&boundary_pairs);
+    // Round-trip attribution: with >1 shard every hot→cold→hot trip is
+    // cross-shard (it traverses each boundary); with one shard the lone
+    // die owns them. Either way the merge reproduces `run.swaps`.
+    if shards == 1 {
+        per_shard[0].round_trips = run.swaps.round_trips;
+    } else {
+        boundary.round_trips = run.swaps.round_trips;
+    }
+    Ok(ShardedRun { run, per_shard, boundary, boundary_pairs, shards })
+}
+
+/// Run one β-ladder across `samplers.len()` dies, one shard each (see
+/// the [module docs](self) for the protocol). The samplers are moved
+/// into per-shard worker threads; the caller prepares them (problem
+/// loaded, states randomized) exactly as for [`temper`].
+///
+/// On success all worker threads have exited. On a barrier timeout the
+/// stalled worker thread is *abandoned* (it still owns its sampler) —
+/// the run fails with a diagnostic instead of deadlocking, which is the
+/// contract `rust/tests/sharded_equivalence.rs` pins down.
+///
+/// [`temper`]: crate::annealing::temper
+pub fn run_sharded_tempering<S>(
+    samplers: Vec<S>,
+    problem: &IsingProblem,
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+) -> Result<ShardedRun>
+where
+    S: Sampler + Send + 'static,
+{
+    run_sharded_tempering_observed(samplers, problem, params, beta_scale, |_, _, _| {})
+}
+
+/// [`run_sharded_tempering`] with the per-round observer of
+/// [`crate::annealing::temper_observed`]: `observe(round, states,
+/// chain_at_rung)` over the **global** chain numbering (shard blocks
+/// concatenated in rung order) — the hook the cross-engine equivalence
+/// suite uses to compare runs round by round.
+pub fn run_sharded_tempering_observed<S, F>(
+    samplers: Vec<S>,
+    problem: &IsingProblem,
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    observe: F,
+) -> Result<ShardedRun>
+where
+    S: Sampler + Send + 'static,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    ensure!(
+        samplers.len() == params.shards,
+        "params ask for {} shards but {} samplers were provided",
+        params.shards,
+        samplers.len()
+    );
+    let problem = Arc::new(problem.clone());
+    let (out_tx, out_rx) = mpsc::channel();
+    let mut cmd_txs = Vec::with_capacity(samplers.len());
+    let mut joins = Vec::with_capacity(samplers.len());
+    for (shard, mut sampler) in samplers.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
+        cmd_txs.push(cmd_tx);
+        let out = out_tx.clone();
+        let prob = problem.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("shard-{shard}"))
+                .spawn(move || shard_worker_loop(shard, &mut sampler, &prob, &cmd_rx, &out))
+                .map_err(|e| anyhow!("spawning shard {shard}: {e}"))?,
+        );
+    }
+    drop(out_tx);
+    let result = drive_sharded(params, beta_scale, &cmd_txs, &out_rx, observe);
+    drop(cmd_txs);
+    if result.is_ok() {
+        // every worker saw Finish (or a hangup) — reap them
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+    // on error the stalled worker may never return: abandon the handles
+    // (threads exit when their cmd channel drops, or die with the
+    // process) rather than deadlocking here.
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::annealing::BetaLadder;
+
+    fn plan(rungs: usize, batches: &[usize]) -> ShardPlan {
+        ShardPlan::new(&BetaLadder::geometric(0.1, 4.0, rungs), batches).unwrap()
+    }
+
+    #[test]
+    fn plan_lays_out_chain_blocks() {
+        let p = plan(8, &[4, 6, 4]);
+        assert_eq!(p.ranges, vec![0..3, 3..6, 6..8]);
+        assert_eq!(p.offsets, vec![0, 4, 10]);
+        assert_eq!(p.total_chains, 14);
+        // rung 3 (first of shard 1) lands on chain 4; rung 6 on chain 10
+        let map = p.chain_at_rung();
+        assert_eq!(map, vec![0, 1, 2, 4, 5, 6, 10, 11]);
+        assert_eq!(p.boundary_pairs(), vec![2, 5]);
+        assert_eq!(p.interior_pairs(0), vec![0, 1]);
+        assert_eq!(p.interior_pairs(1), vec![3, 4]);
+        assert_eq!(p.interior_pairs(2), vec![6]);
+        assert_eq!(p.shard_of(0), 0);
+        assert_eq!(p.shard_of(5), 1);
+        assert_eq!(p.shard_of(7), 2);
+    }
+
+    #[test]
+    fn plan_interior_and_boundary_pairs_tile_the_ladder() {
+        for (rungs, batches) in
+            [(8usize, vec![8usize]), (8, vec![4, 4]), (9, vec![3, 3, 3]), (5, vec![2, 1, 1, 1])]
+        {
+            let p = plan(rungs, &batches);
+            let mut pairs: Vec<usize> = p.boundary_pairs();
+            for s in 0..p.shards() {
+                pairs.extend(p.interior_pairs(s));
+            }
+            pairs.sort_unstable();
+            assert_eq!(pairs, (0..rungs - 1).collect::<Vec<_>>(), "{batches:?}");
+        }
+    }
+
+    #[test]
+    fn plan_rejects_undersized_dies() {
+        let ladder = BetaLadder::geometric(0.1, 4.0, 8);
+        // shard 0 needs 4 chains but has 3
+        assert!(ShardPlan::new(&ladder, &[3, 4]).is_err());
+        // more shards than rungs
+        assert!(ShardPlan::new(&ladder, &[1; 9]).is_err());
+        // exactly-sized dies are fine
+        assert!(ShardPlan::new(&ladder, &[4, 4]).is_ok());
+    }
+
+    #[test]
+    fn single_shard_plan_is_identity() {
+        let p = plan(6, &[8]);
+        assert_eq!(p.ranges, vec![0..6]);
+        assert_eq!(p.chain_at_rung(), vec![0, 1, 2, 3, 4, 5]);
+        assert!(p.boundary_pairs().is_empty());
+        assert_eq!(p.interior_pairs(0), vec![0, 1, 2, 3, 4]);
+    }
+}

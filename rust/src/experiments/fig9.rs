@@ -8,9 +8,12 @@ use crate::annealing::{
     anneal, temper, AnnealParams, BetaLadder, BetaSchedule, TemperingParams, TemperingRun,
 };
 use crate::chimera::Topology;
+use crate::config::MismatchConfig;
+use crate::coordinator::{run_sharded_tempering, ShardedRun, ShardedTemperingParams};
 use crate::learning::TrainableChip;
 use crate::metrics::EnergyTrace;
 use crate::problems::{maxcut::Graph, sk, IsingProblem};
+use crate::sampler::Sampler;
 use crate::util::bench::write_csv;
 
 /// Fig 9a output.
@@ -219,11 +222,72 @@ pub fn fig9a_sk_temper_vs_anneal<C: TrainableChip>(
     Ok(report)
 }
 
+/// The Fig 9a extension for the die array: one ladder sharded across
+/// `params.shards` dies vs the same ladder on a single die.
+#[derive(Debug, Clone)]
+pub struct ShardedSkReport {
+    /// The cross-die run (merged trace / swap stats, per-shard and
+    /// boundary attribution).
+    pub sharded: ShardedRun,
+    /// The single-die reference run of `params.base` on die 0.
+    pub single: TemperingRun,
+    /// −n_edges, the ±J lower bound both arms are scored against.
+    pub energy_lower_bound: f64,
+}
+
+/// Run the Fig 9a SK instance with one β-ladder sharded across
+/// `params.shards` software dies (distinct mismatch personalities, as
+/// in the coordinator's array) and, for reference, the same ladder on
+/// a single die. Per-die chain counts are `die_batch` or the shard's
+/// rung count, whichever is larger; spare chains scout at the hottest
+/// β exactly as in [`crate::annealing::temper`].
+pub fn fig9a_sk_temper_sharded(
+    seed: u64,
+    params: &ShardedTemperingParams,
+    mcfg: MismatchConfig,
+    die_batch: usize,
+    csv_name: Option<&str>,
+) -> Result<ShardedSkReport> {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, seed);
+    let rungs = params.base.ladder.len();
+
+    // single-die reference (die personality 0, all rungs on one die)
+    let mut single_chip = super::software_chip(0xD1E5, mcfg, die_batch.max(rungs));
+    let scale = super::program_problem(&mut single_chip, &topo, &problem)?;
+    single_chip.randomize(seed ^ 0x7E39);
+    let single = temper(&mut single_chip, &problem, &params.base, scale)?;
+
+    // the sharded arm: one die personality per shard
+    let (samplers, scale) =
+        super::sharded_die_array(params, &problem, mcfg, die_batch, 0xD1E5, |s| {
+            seed ^ 0xB04D ^ ((s as u64) << 8)
+        })?;
+    let sharded = run_sharded_tempering(samplers, &problem, params, scale)?;
+
+    if let Some(name) = csv_name {
+        write_csv(
+            &format!("{name}_single"),
+            "sweep,beta,mean_energy,min_energy",
+            &single.trace.csv_rows(),
+        )?;
+        write_csv(
+            &format!("{name}_sharded"),
+            "sweep,beta,mean_energy,min_energy",
+            &sharded.run.trace.csv_rows(),
+        )?;
+    }
+    Ok(ShardedSkReport {
+        sharded,
+        single,
+        energy_lower_bound: -(topo.edges.len() as f64),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::experiments::software_chip;
-    use crate::config::MismatchConfig;
 
     #[test]
     fn sk_anneal_reaches_low_energy() {
@@ -304,6 +368,35 @@ mod tests {
         }
         // swap diagnostics were collected
         assert!(r.temper.swaps.attempts.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn sharded_sk_report_is_consistent() {
+        let params = ShardedTemperingParams {
+            base: TemperingParams {
+                ladder: BetaLadder::geometric(0.2, 3.0, 4),
+                sweeps_per_round: 2,
+                rounds: 16,
+                record_every: 2,
+                ..Default::default()
+            },
+            shards: 2,
+            barrier_timeout: std::time::Duration::from_secs(30),
+        };
+        let r = fig9a_sk_temper_sharded(3, &params, MismatchConfig::default(), 4, None).unwrap();
+        assert!(r.sharded.run.best_energy.is_finite() && r.sharded.run.best_energy < 0.0);
+        assert!(r.single.best_energy.is_finite());
+        assert_eq!(r.sharded.shards, 2);
+        // 4 rungs over 2 shards → one boundary after rung 1
+        assert_eq!(r.sharded.boundary_pairs, vec![1]);
+        // merging the attribution reproduces the global counters
+        let mut merged = r.sharded.boundary.clone();
+        for s in &r.sharded.per_shard {
+            merged.merge(s);
+        }
+        assert_eq!(merged.attempts, r.sharded.run.swaps.attempts);
+        assert_eq!(merged.accepts, r.sharded.run.swaps.accepts);
+        assert_eq!(merged.round_trips, r.sharded.run.swaps.round_trips);
     }
 
     #[test]

@@ -20,10 +20,12 @@ pub mod table1;
 pub use fig7::{fig7_gate_learning, GateExperiment, GateReport};
 pub use fig8::{fig8a_bias_sweep, fig8b_adder_learning, BiasSweepReport};
 pub use fig9::{
-    fig9a_sk_anneal, fig9a_sk_temper_vs_anneal, fig9b_maxcut, MaxCutReport, SkAnnealReport,
-    TemperVsAnnealReport,
+    fig9a_sk_anneal, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal, fig9b_maxcut,
+    MaxCutReport, ShardedSkReport, SkAnnealReport, TemperVsAnnealReport,
 };
-pub use table1::{table1_tts, table1_tts_tempering, Table1Report};
+pub use table1::{
+    table1_tts, table1_tts_sharded, table1_tts_tempering, ShardedTtsReport, Table1Report,
+};
 
 use anyhow::Result;
 
@@ -54,6 +56,43 @@ pub fn software_chip(seed: u64, cfg: MismatchConfig, batch: usize) -> Hw<Softwar
 pub fn ideal_chip(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
     let topo = crate::chimera::Topology::new();
     Hw::new(SoftwareSampler::new(batch, seed), crate::analog::Personality::ideal(&topo))
+}
+
+/// Build the die array for a sharded tempering run: one software chip
+/// per shard of `params.base.ladder`, each programmed with `problem`
+/// and sized `die_batch` (or its rung count, whichever is larger).
+///
+/// Die seeds step by 0x1000 from `seed_base` — the LFSR noise banks
+/// seed chain c with (die_seed + c), so nearby die seeds would alias
+/// chain streams across dies. `randomize_seed(shard)` seeds each die's
+/// starting states. Returns the chips in shard (rung) order plus the
+/// shared code→logical scale.
+pub fn sharded_die_array(
+    params: &crate::coordinator::ShardedTemperingParams,
+    problem: &IsingProblem,
+    mcfg: MismatchConfig,
+    die_batch: usize,
+    seed_base: u64,
+    randomize_seed: impl Fn(usize) -> u64,
+) -> Result<(Vec<Hw<SoftwareSampler>>, f64)> {
+    let topo = Topology::new();
+    let rungs = params.base.ladder.len();
+    anyhow::ensure!(
+        params.shards >= 1 && params.shards <= rungs,
+        "need between 1 and {rungs} shards, got {}",
+        params.shards
+    );
+    let ranges = params.base.ladder.partition(params.shards);
+    let mut chips = Vec::with_capacity(params.shards);
+    let mut scale = 1.0;
+    for (s, range) in ranges.iter().enumerate() {
+        let die_seed = seed_base + 0x1000 * (s as u64 + 1);
+        let mut chip = software_chip(die_seed, mcfg, die_batch.max(range.len()));
+        scale = program_problem(&mut chip, &topo, problem)?;
+        crate::sampler::Sampler::randomize(&mut chip, randomize_seed(s));
+        chips.push(chip);
+    }
+    Ok((chips, scale))
 }
 
 /// Lower `problem` to 8-bit register codes and program it onto `chip`.

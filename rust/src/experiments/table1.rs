@@ -10,8 +10,12 @@ use crate::annealing::{
 };
 use crate::chimera::Topology;
 use crate::chip::SAMPLE_TIME_NS;
+use crate::config::MismatchConfig;
+use crate::coordinator::{run_sharded_tempering, ShardedTemperingParams};
 use crate::learning::TrainableChip;
+use crate::metrics::SwapStats;
 use crate::problems::sk;
+use crate::sampler::Sampler;
 use crate::util::bench::write_csv;
 
 /// Table 1 measurement for one engine.
@@ -151,6 +155,106 @@ pub fn table1_tts_tempering<C: TrainableChip>(
     Ok(report)
 }
 
+/// [`table1_tts_tempering`] with the ladder sharded across a die array.
+#[derive(Debug, Clone)]
+pub struct ShardedTtsReport {
+    pub report: Table1Report,
+    /// Swap counters merged over every repeat (global: interior and
+    /// boundary pairs alike).
+    pub merged_swaps: SwapStats,
+    /// Boundary-pair counters merged over every repeat.
+    pub boundary: SwapStats,
+    /// Pair indices of the shard boundaries.
+    pub boundary_pairs: Vec<usize>,
+    /// Hot→cold→hot excursions that crossed dies, summed over repeats.
+    pub cross_shard_round_trips: u64,
+}
+
+/// Measure TTS on the planted ±J glass with **one ladder sharded
+/// across `params.shards` dies** — the cross-die analog of
+/// [`table1_tts_tempering`]. Each repeat rebuilds the same die array
+/// (fixed per-shard personalities) and counts a success when the run's
+/// best energy reaches the planted ground energy. Chip time per repeat
+/// stays sweeps × 50 ns: the shards run concurrently, which is the
+/// entire point of the array.
+pub fn table1_tts_sharded(
+    seed: u64,
+    repeats: usize,
+    params: &ShardedTemperingParams,
+    mcfg: MismatchConfig,
+    die_batch: usize,
+    csv_name: Option<&str>,
+) -> Result<ShardedTtsReport> {
+    let topo = Topology::new();
+    let (problem, _hidden, e0) = sk::planted(&topo, seed);
+    let rungs = params.base.ladder.len();
+    anyhow::ensure!(
+        params.shards >= 1 && params.shards <= rungs,
+        "need between 1 and {rungs} shards, got {}",
+        params.shards
+    );
+
+    let mut successes = 0usize;
+    let mut merged_swaps = SwapStats::new(rungs);
+    let mut boundary = SwapStats::new(rungs);
+    let mut boundary_pairs = Vec::new();
+    let mut cross_trips = 0u64;
+    let mut total_chains = 0usize;
+    let t_host = std::time::Instant::now();
+    for r in 0..repeats {
+        // rebuild the same die array each repeat (fixed personalities),
+        // re-randomizing the starting states per repeat and shard
+        let (samplers, scale) =
+            super::sharded_die_array(params, &problem, mcfg, die_batch, 0x7A81, |s| {
+                seed ^ (0x7E44 + r as u64) ^ ((s as u64) << 16)
+            })?;
+        total_chains = samplers.iter().map(|c| c.batch()).sum();
+        let mut p = params.clone();
+        p.base.seed = params.base.seed.wrapping_add(r as u64);
+        let run = run_sharded_tempering(samplers, &problem, &p, scale)?;
+        if run.run.best_energy <= e0 + 1e-6 {
+            successes += 1;
+        }
+        merged_swaps.merge(&run.run.swaps);
+        boundary.merge(&run.boundary);
+        cross_trips += run.cross_shard_round_trips();
+        boundary_pairs = run.boundary_pairs;
+    }
+    let host_elapsed = t_host.elapsed().as_secs_f64();
+    let total_sweeps = (repeats * params.base.total_sweeps()) as f64;
+    let host_flips = total_sweeps * total_chains as f64 * crate::N_SPINS as f64;
+
+    let tts = tts99_counts(successes, repeats, params.base.chip_time_ns());
+    let report = Table1Report {
+        p_success: tts.p_success,
+        tts,
+        chip_time_per_restart_ns: params.base.chip_time_ns(),
+        host_flips_per_sec: host_flips / host_elapsed,
+        chip_flips_per_sec: crate::N_SPINS as f64 / (SAMPLE_TIME_NS * 1e-9),
+        restarts: repeats,
+        sweeps_per_restart: params.base.total_sweeps(),
+    };
+    if let Some(name) = csv_name {
+        write_csv(
+            name,
+            "p_success,tts99_ns,chip_time_per_restart_ns,cross_shard_round_trips",
+            &[vec![
+                report.p_success,
+                report.tts.tts99_ns,
+                report.chip_time_per_restart_ns,
+                cross_trips as f64,
+            ]],
+        )?;
+    }
+    Ok(ShardedTtsReport {
+        report,
+        merged_swaps,
+        boundary,
+        boundary_pairs,
+        cross_shard_round_trips: cross_trips,
+    })
+}
+
 /// Default tempering setup matching [`default_tts_params`]'s per-replica
 /// budget (48 × 4 = 192 sweeps) and β span.
 pub fn default_tts_temper_params() -> TemperingParams {
@@ -205,6 +309,23 @@ mod tests {
         assert!(r.tts.tts99_ns.is_finite());
         assert!(r.chip_flips_per_sec > 8e9); // 440 / 50ns = 8.8e9
         assert_eq!(r.sweeps_per_restart, 48 * 4);
+    }
+
+    #[test]
+    fn sharded_tts_on_planted_glass() {
+        let params = ShardedTemperingParams {
+            base: default_tts_temper_params(),
+            shards: 2,
+            barrier_timeout: std::time::Duration::from_secs(30),
+        };
+        let r = table1_tts_sharded(3, 4, &params, MismatchConfig::ideal(), 4, None).unwrap();
+        assert!(r.report.p_success > 0.0, "no sharded run found the planted state");
+        assert_eq!(r.report.sweeps_per_restart, 48 * 4);
+        // shards run concurrently: chip time must not scale with K or shards
+        assert_eq!(r.report.chip_time_per_restart_ns, 192.0 * SAMPLE_TIME_NS);
+        // 8 rungs over 2 shards → one boundary pair, which saw traffic
+        assert_eq!(r.boundary_pairs, vec![3]);
+        assert!(r.boundary.attempts[3] > 0, "boundary pair never attempted");
     }
 
     #[test]

@@ -27,7 +27,13 @@
 //! ([`annealing::anneal`], the paper's Fig 9a) and replica exchange
 //! ([`annealing::temper`]) — K replicas on a [`annealing::BetaLadder`]
 //! trading temperatures through Metropolis swap moves, served through
-//! the coordinator as [`coordinator::JobRequest::Tempering`].
+//! the coordinator as [`coordinator::JobRequest::Tempering`]. One
+//! ladder can further be **sharded across the die array**
+//! ([`coordinator::run_sharded_tempering`],
+//! [`coordinator::JobRequest::ShardedTempering`]): dies sweep their
+//! rung ranges concurrently and meet at barrier-synchronized swap
+//! phases, bit-identical to the single-die engine in the 1-shard case
+//! (`rust/tests/sharded_equivalence.rs`).
 //!
 //! The PJRT path is behind the `xla` cargo feature; the default build
 //! substitutes a stub [`runtime`] so everything else works without an

@@ -5,6 +5,7 @@
 //! pchip train  [--gate and|or|xor|adder] [--epochs N] [--lr X] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
+//!              [--shards N] [--barrier-timeout-ms T]
 //! pchip maxcut [--native-keep P | --clique-n N]
 //! pchip sweep  [--pbits N] [--points N]           (Fig 8a bias sweep)
 //! pchip tts    [--restarts N]                     (Table 1)
@@ -99,6 +100,7 @@ fn print_help() {
          train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
          temper  replica-exchange sampling vs annealing, head-to-head\n  \
+         \u{20}       (--shards N shards the ladder across N software dies)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
          sweep   bias-sweep variability (Fig 8a)\n  \
          tts     time-to-solution measurement (Table 1)\n  \
@@ -308,6 +310,46 @@ fn cmd_temper(args: &Args) -> Result<()> {
         report.temper.swaps.round_trips
     );
     println!("  traces → results/fig9a_temper_{{anneal,temper}}.csv");
+
+    // --shards N: the same ladder sharded across N software dies with
+    // cross-worker swap phases (sw engine only — the sharded protocol
+    // needs per-chain β on every die)
+    let shards: usize = args.get("shards", 1)?;
+    if shards > 1 {
+        anyhow::ensure!(
+            shards <= replicas,
+            "--shards {shards} cannot exceed --replicas {replicas}"
+        );
+        let sharded_params = pchip::coordinator::ShardedTemperingParams {
+            base: temper_params.clone(),
+            shards,
+            barrier_timeout: std::time::Duration::from_millis(
+                args.get("barrier-timeout-ms", 30_000u64)?,
+            ),
+        };
+        let r = exp::fig9a_sk_temper_sharded(
+            seed,
+            &sharded_params,
+            cfg.mismatch,
+            replicas.max(8) / shards.max(1),
+            Some("fig9a_sharded"),
+        )?;
+        println!(
+            "sharded ({shards} dies, {} rungs each ±1): best {:.0} vs single-die {:.0}",
+            replicas / shards,
+            r.sharded.run.best_energy,
+            r.single.best_energy
+        );
+        let bacc = r.sharded.boundary_acceptance();
+        println!(
+            "  merged swaps: mean acceptance {:.2}, boundary acceptance {:?}, \
+             cross-shard round trips {}",
+            r.sharded.run.swaps.mean_acceptance(),
+            bacc.iter().map(|a| (a * 100.0).round() / 100.0).collect::<Vec<_>>(),
+            r.sharded.cross_shard_round_trips()
+        );
+        println!("  traces → results/fig9a_sharded_{{single,sharded}}.csv");
+    }
     Ok(())
 }
 

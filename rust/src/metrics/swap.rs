@@ -67,7 +67,12 @@ impl SwapStats {
         self.acceptance_rates().into_iter().fold(f64::INFINITY, f64::min)
     }
 
-    /// Merge another run's counters into this one (fan-out collection).
+    /// Merge another run's counters into this one (fan-out collection,
+    /// per-shard attribution). Element-wise addition, so merging is
+    /// associative and commutative over shard order — the property
+    /// tests below pin that down, and the sharded coordinator relies on
+    /// it: merging per-shard stats in any order reproduces the global
+    /// counters.
     pub fn merge(&mut self, other: &SwapStats) {
         assert_eq!(self.attempts.len(), other.attempts.len(), "rung count mismatch");
         for k in 0..self.attempts.len() {
@@ -75,6 +80,20 @@ impl SwapStats {
             self.accepts[k] += other.accepts[k];
         }
         self.round_trips += other.round_trips;
+    }
+
+    /// Copy with only the listed adjacent-pair counters kept (same rung
+    /// count, other pairs zeroed, round trips cleared) — the attribution
+    /// helper the sharded coordinator uses to split one global
+    /// [`SwapStats`] into per-shard and boundary-pair views whose merge
+    /// reproduces the original pair counters.
+    pub fn restricted(&self, pairs: &[usize]) -> SwapStats {
+        let mut out = SwapStats::new(self.attempts.len() + 1);
+        for &k in pairs {
+            out.attempts[k] = self.attempts[k];
+            out.accepts[k] = self.accepts[k];
+        }
+        out
     }
 
     pub fn to_json(&self) -> Json {
@@ -116,6 +135,66 @@ mod tests {
         assert_eq!(a.attempts, vec![2, 1]);
         assert_eq!(a.accepts, vec![1, 1]);
         assert_eq!(a.round_trips, 3);
+    }
+
+    #[test]
+    fn restricted_keeps_only_listed_pairs() {
+        let mut s = SwapStats::new(5);
+        for k in 0..4 {
+            s.record(k, k % 2 == 0);
+            s.record(k, true);
+        }
+        s.round_trips = 7;
+        let r = s.restricted(&[1, 3]);
+        assert_eq!(r.attempts, vec![0, 2, 0, 2]);
+        assert_eq!(r.accepts, vec![0, 2, 0, 2]);
+        assert_eq!(r.round_trips, 0, "restriction never claims round trips");
+        // complementary restrictions merge back to the pair counters
+        let mut merged = s.restricted(&[0, 2]);
+        merged.merge(&r);
+        assert_eq!(merged.attempts, s.attempts);
+        assert_eq!(merged.accepts, s.accepts);
+    }
+
+    fn random_stats(rng: &mut crate::rng::HostRng, rungs: usize) -> SwapStats {
+        let mut s = SwapStats::new(rungs);
+        for _ in 0..rng.below(40) {
+            let k = rng.below(rungs - 1);
+            s.record(k, rng.uniform() < 0.5);
+        }
+        s.round_trips = rng.below(5) as u64;
+        s
+    }
+
+    /// Property: merging per-shard stats is commutative and associative
+    /// over shard order — the sharded coordinator may collect shards in
+    /// any completion order and still report the same merged counters.
+    #[test]
+    fn prop_merge_is_associative_and_commutative() {
+        crate::util::prop::check("swap-stats merge", 200, |rng| {
+            let rungs = rng.below(10) + 2;
+            let a = random_stats(rng, rungs);
+            let b = random_stats(rng, rungs);
+            let c = random_stats(rng, rungs);
+            // commutative: a ⊕ b == b ⊕ a
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab.attempts, ba.attempts);
+            assert_eq!(ab.accepts, ba.accepts);
+            assert_eq!(ab.round_trips, ba.round_trips);
+            // associative: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c.attempts, a_bc.attempts);
+            assert_eq!(ab_c.accepts, a_bc.accepts);
+            assert_eq!(ab_c.round_trips, a_bc.round_trips);
+        });
     }
 
     #[test]

@@ -8,7 +8,9 @@ use std::sync::Arc;
 
 use pchip::chimera::Topology;
 use pchip::config::Config;
-use pchip::coordinator::{ChipArrayServer, EngineKind, JobRequest, JobResult};
+use pchip::coordinator::{
+    ChipArrayServer, EngineKind, JobRequest, JobResult, ShardedTemperingParams,
+};
 use pchip::problems::sk;
 
 fn server(chips: usize, queue_depth: usize) -> (ChipArrayServer, Vec<u64>) {
@@ -122,6 +124,66 @@ fn shutdown_is_clean_under_load() {
 }
 
 #[test]
+fn sharded_gang_defers_behind_live_load_without_deadlock() {
+    // A gang job needs 2 idle dies at once; submit it behind a burst of
+    // sample jobs so the dispatcher has to defer it, then make sure
+    // everything — the gang and the singles — completes.
+    let (srv, hs) = server(2, 128);
+    let mut sample_tickets = Vec::new();
+    for i in 0..8usize {
+        sample_tickets.push(
+            srv.submit(JobRequest::Sample {
+                problem: hs[i % hs.len()],
+                sweeps: 8,
+                beta: 1.0,
+                chains: 2,
+            })
+            .unwrap(),
+        );
+    }
+    let gang_params = ShardedTemperingParams {
+        base: pchip::annealing::TemperingParams {
+            ladder: pchip::annealing::BetaLadder::geometric(0.2, 3.0, 4),
+            sweeps_per_round: 2,
+            rounds: 10,
+            ..Default::default()
+        },
+        shards: 2,
+        barrier_timeout: std::time::Duration::from_secs(30),
+    };
+    let gang = srv
+        .submit(JobRequest::ShardedTempering { problem: hs[0], params: gang_params })
+        .unwrap();
+    let mut trailing = Vec::new();
+    for i in 0..8usize {
+        trailing.push(
+            srv.submit(JobRequest::Sample {
+                problem: hs[i % hs.len()],
+                sweeps: 4,
+                beta: 1.0,
+                chains: 2,
+            })
+            .unwrap(),
+        );
+    }
+    match gang.wait() {
+        JobResult::ShardedTempered { shards, dies, .. } => {
+            assert_eq!(shards, 2);
+            assert_eq!(dies.len(), 2);
+        }
+        other => panic!("gang job: {other:?}"),
+    }
+    for t in sample_tickets.into_iter().chain(trailing) {
+        match t.wait() {
+            JobResult::Samples { .. } => {}
+            other => panic!("sample job: {other:?}"),
+        }
+    }
+    assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 17);
+    assert_eq!(srv.stats().jobs_failed.load(Ordering::Relaxed), 0);
+}
+
+#[test]
 fn mixed_anneal_and_sample_load() {
     let (srv, hs) = server(2, 128);
     let mut tickets = Vec::new();
@@ -150,6 +212,7 @@ fn mixed_anneal_and_sample_load() {
             }
             JobResult::Samples { .. } => samples += 1,
             JobResult::Failed(e) => panic!("{e}"),
+            other => panic!("unexpected result kind: {other:?}"),
         }
     }
     assert_eq!(anneals, 3);

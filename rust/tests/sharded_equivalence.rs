@@ -1,0 +1,364 @@
+//! Cross-engine equivalence suite for the sharded tempering
+//! coordinator (`coordinator/sharded.rs`).
+//!
+//! The distributed sampler only counts if it provably matches the
+//! single-die one:
+//!
+//! 1. **1 shard ≡ `temper`** — with the same seeds and ladder, a
+//!    1-shard sharded run must reproduce the single-die engine's
+//!    states, energies, swap decisions, trace and best state
+//!    *bit-for-bit*, every round.
+//! 2. **K shards ≡ Boltzmann** — on a small exactly-enumerable
+//!    instance, the coldest rung of a cross-die run must still sample
+//!    its exact Boltzmann marginals (same statistical bands as the
+//!    single-die suite in `tempering_stats.rs`).
+//! 3. **Protocol liveness** — a stalled worker expires the swap
+//!    barrier into a diagnostic error (never a deadlock), and
+//!    `JobTicket::try_wait` stays non-blocking while a sharded job is
+//!    in flight.
+//! 4. **Fan-out honesty** — `run_tempering_fanout` reports per-die
+//!    failures instead of silently returning the best surviving die.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::annealing::{temper_observed, BetaLadder, TemperingParams};
+use pchip::chimera::Topology;
+use pchip::config::Config;
+use pchip::coordinator::{
+    run_sharded_tempering, run_sharded_tempering_observed, ChipArrayServer, EngineKind,
+    JobRequest, JobResult, ShardedTemperingParams,
+};
+use pchip::problems::{exact_boltzmann, sk, IsingProblem};
+use pchip::sampler::{Sampler, SoftwareSampler};
+
+/// Load `problem` onto an ideal (mismatch-free) die so the lowered
+/// model is exactly the logical one — same helper as
+/// `tempering_stats.rs`.
+fn loaded_sampler(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+) -> SoftwareSampler {
+    let (j, en, h, scale) = problem.to_codes(topo).unwrap();
+    assert_eq!(scale, 1.0, "±1 coefficients must lower losslessly");
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    w.j_codes = j;
+    w.enables = en;
+    w.h_codes = h;
+    let folded = Personality::ideal(topo).fold(topo, &w);
+    let mut s = SoftwareSampler::new(batch, seed);
+    s.load(&folded);
+    s
+}
+
+/// Frustrated ±1 problem inside the first Chimera cell with two ±1
+/// biases (exactly-enumerable; quantization-lossless) — the instance
+/// `tempering_stats.rs` validates the single-die engine on.
+fn small_exact_problem(topo: &Topology) -> IsingProblem {
+    let cell_edges: Vec<(usize, usize)> =
+        topo.edges.iter().copied().filter(|&(i, j)| i < 8 && j < 8).collect();
+    assert!(cell_edges.len() >= 5, "expected a K4,4 cell at spins 0..8");
+    let mut p = IsingProblem::new("sharded-exact");
+    for (k, &(i, j)) in cell_edges.iter().take(5).enumerate() {
+        p.couplings.push((i, j, if k % 2 == 0 { 1.0 } else { -1.0 }));
+    }
+    let (a, b) = cell_edges[0];
+    p.h[a] = 1.0;
+    p.h[b] = -1.0;
+    p
+}
+
+#[test]
+fn one_shard_run_is_bit_identical_to_temper() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.2, 3.0, 8),
+        sweeps_per_round: 2,
+        rounds: 40,
+        adapt_every: 10, // exercise ladder adaptation through the core
+        record_every: 4,
+        seed: 0xBEEF,
+    };
+
+    // single-die reference
+    let mut reference = loaded_sampler(&problem, &topo, 8, 77);
+    let mut ref_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let ref_run = temper_observed(&mut reference, &problem, &params, 1.0, |round, states, map| {
+        ref_log.push((round, states.to_vec(), map.to_vec()));
+    })
+    .unwrap();
+
+    // the same sampler seed driven through the sharded coordinator
+    let sharded_sampler = loaded_sampler(&problem, &topo, 8, 77);
+    let sharded_params = ShardedTemperingParams {
+        base: params.clone(),
+        shards: 1,
+        barrier_timeout: Duration::from_secs(60),
+    };
+    let mut sh_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let sharded = run_sharded_tempering_observed(
+        vec![sharded_sampler],
+        &problem,
+        &sharded_params,
+        1.0,
+        |round, states, map| {
+            sh_log.push((round, states.to_vec(), map.to_vec()));
+        },
+    )
+    .unwrap();
+
+    // every round: identical spin states and rung→chain maps
+    assert_eq!(ref_log.len(), sh_log.len());
+    for ((ra, sa, ma), (rb, sb, mb)) in ref_log.iter().zip(&sh_log) {
+        assert_eq!(ra, rb);
+        assert_eq!(ma, mb, "rung→chain maps diverged at round {ra}");
+        assert_eq!(sa, sb, "spin states diverged at round {ra}");
+    }
+    // identical outputs, bit for bit
+    assert_eq!(ref_run.best_energy, sharded.run.best_energy);
+    assert_eq!(ref_run.best_state, sharded.run.best_state);
+    assert_eq!(ref_run.total_sweeps, sharded.run.total_sweeps);
+    assert_eq!(ref_run.trace.rows, sharded.run.trace.rows);
+    assert_eq!(ref_run.swaps.attempts, sharded.run.swaps.attempts);
+    assert_eq!(ref_run.swaps.accepts, sharded.run.swaps.accepts);
+    assert_eq!(ref_run.swaps.round_trips, sharded.run.swaps.round_trips);
+    assert_eq!(ref_run.ladder.betas, sharded.run.ladder.betas, "adapted ladders diverged");
+    // degenerate attribution: no boundary, one shard owns everything
+    assert!(sharded.boundary_pairs.is_empty());
+    assert_eq!(sharded.shards, 1);
+    assert_eq!(sharded.cross_shard_round_trips(), 0);
+    assert_eq!(sharded.per_shard.len(), 1);
+    assert_eq!(sharded.per_shard[0].attempts, ref_run.swaps.attempts);
+    assert_eq!(sharded.per_shard[0].round_trips, ref_run.swaps.round_trips);
+}
+
+#[test]
+fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let beta_target = 1.0;
+
+    // ground truth by enumeration
+    let (states, probs) = exact_boltzmann(&problem, beta_target).unwrap();
+    let exact_m: Vec<f64> = (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect();
+
+    // 4 rungs over 2 dies, 2 chains each. Die seeds are spaced wider
+    // than the batch: the LFSR banks seed chain c with (seed + c), so
+    // nearby die seeds would alias noise streams across dies.
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, beta_target, 4),
+            sweeps_per_round: 2,
+            rounds: 4200,
+            adapt_every: 0,
+            record_every: 100,
+            seed: 0xB017,
+        },
+        shards: 2,
+        barrier_timeout: Duration::from_secs(60),
+    };
+    let dies = vec![
+        loaded_sampler(&problem, &topo, 2, 11),
+        loaded_sampler(&problem, &topo, 2, 0x1011),
+    ];
+    let burn_in = 200usize;
+    let mut sums = vec![0.0f64; support.len()];
+    let mut n = 0usize;
+    let run = run_sharded_tempering_observed(
+        dies,
+        &problem,
+        &params,
+        1.0,
+        |round, states, rungs| {
+            if round < burn_in {
+                return;
+            }
+            let cold = &states[rungs[rungs.len() - 1]];
+            for (k, &s) in support.iter().enumerate() {
+                sums[k] += cold[s] as f64;
+            }
+            n += 1;
+        },
+    )
+    .unwrap();
+
+    assert!(n > 3500, "expected post-burn-in samples, got {n}");
+    for (k, &s) in support.iter().enumerate() {
+        let got = sums[k] / n as f64;
+        let want = exact_m[k];
+        assert!(
+            (got - want).abs() < 0.15,
+            "spin {s}: sharded coldest-rung marginal {got:.3} vs exact {want:.3}"
+        );
+    }
+    // the cross-die boundary must carry real traffic, and the global
+    // dynamics must stay healthy despite the die boundary
+    assert_eq!(run.boundary_pairs, vec![1]);
+    assert!(run.boundary.attempts[1] > 500, "boundary starved: {:?}", run.boundary.attempts);
+    assert!(run.boundary.acceptance(1) > 0.05, "boundary frozen");
+    let mean_acc = run.run.swaps.mean_acceptance();
+    assert!(mean_acc > 0.2, "acceptance {mean_acc}");
+    assert!(run.cross_shard_round_trips() >= 5, "round trips {}", run.cross_shard_round_trips());
+    // per-shard + boundary attribution merges back to the global stats
+    let mut merged = run.boundary.clone();
+    for s in &run.per_shard {
+        merged.merge(s);
+    }
+    assert_eq!(merged.attempts, run.run.swaps.attempts);
+    assert_eq!(merged.accepts, run.run.swaps.accepts);
+    assert_eq!(merged.round_trips, run.run.swaps.round_trips);
+}
+
+/// A sampler whose sweep phase hangs — the failure the barrier timeout
+/// exists for (a wedged die, a dead worker, an overloaded host).
+struct StallingSampler {
+    inner: SoftwareSampler,
+    stall: Duration,
+}
+
+impl Sampler for StallingSampler {
+    fn load(&mut self, folded: &pchip::analog::Folded) {
+        self.inner.load(folded);
+    }
+    fn set_beta(&mut self, beta: f32) {
+        self.inner.set_beta(beta);
+    }
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        self.inner.set_betas(betas)
+    }
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.inner.set_clamps(clamps);
+    }
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        std::thread::sleep(self.stall);
+        self.inner.sweeps(n)
+    }
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.inner.states()
+    }
+    fn randomize(&mut self, seed: u64) {
+        self.inner.randomize(seed);
+    }
+}
+
+#[test]
+fn stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 4),
+            sweeps_per_round: 2,
+            rounds: 8,
+            ..Default::default()
+        },
+        shards: 2,
+        barrier_timeout: Duration::from_millis(250),
+    };
+    let healthy = StallingSampler {
+        inner: loaded_sampler(&problem, &topo, 2, 21),
+        stall: Duration::ZERO,
+    };
+    let stalled = StallingSampler {
+        inner: loaded_sampler(&problem, &topo, 2, 0x1021),
+        stall: Duration::from_secs(30),
+    };
+    let t0 = Instant::now();
+    let err = run_sharded_tempering(vec![healthy, stalled], &problem, &params, 1.0)
+        .expect_err("a stalled shard must fail the run");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("barrier timed out"), "diagnostic missing: {msg}");
+    assert!(msg.contains("[1]"), "stalled shard not named: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "timed out the slow way ({elapsed:?}) — barrier did not bound the wait"
+    );
+}
+
+#[test]
+fn try_wait_never_blocks_during_a_sharded_run() {
+    let mut cfg = Config::default();
+    cfg.server.chips = 2;
+    let srv = ChipArrayServer::start(&cfg, EngineKind::Software).unwrap();
+    let topo = Topology::new();
+    let h = srv.register_problem(sk::chimera_pm_j(&topo, 4)).unwrap();
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 3.0, 8),
+            sweeps_per_round: 4,
+            rounds: 40,
+            ..Default::default()
+        },
+        shards: 2,
+        barrier_timeout: Duration::from_secs(60),
+    };
+    let ticket = srv.submit(JobRequest::ShardedTempering { problem: h, params }).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let result = loop {
+        let t = Instant::now();
+        let polled = ticket.try_wait();
+        assert!(
+            t.elapsed() < Duration::from_millis(500),
+            "try_wait blocked for {:?} mid-run",
+            t.elapsed()
+        );
+        if let Some(r) = polled {
+            break r;
+        }
+        assert!(Instant::now() < deadline, "sharded job never completed");
+        std::thread::sleep(Duration::from_millis(1));
+    };
+    match result {
+        JobResult::ShardedTempered { best_energy, shards, dies, swap_acceptance, .. } => {
+            assert!(best_energy.is_finite());
+            assert_eq!(shards, 2);
+            assert_eq!(dies.len(), 2);
+            assert_eq!(swap_acceptance.len(), 7);
+        }
+        other => panic!("unexpected result: {other:?}"),
+    }
+}
+
+#[test]
+fn fanout_reports_the_failing_die_instead_of_hiding_it() {
+    // die 1 has only 4 chains: an 8-rung ladder fails there while die 0
+    // serves it fine — the old fanout silently took die 0's best.
+    let mut cfg = Config::default();
+    cfg.server.chips = 2;
+    let engine = EngineKind::PerDie(vec![
+        EngineKind::Software,
+        EngineKind::SoftwareBatch { batch: 4 },
+    ]);
+    let srv = ChipArrayServer::start(&cfg, engine).unwrap();
+    let topo = Topology::new();
+    let h = srv.register_problem(sk::chimera_pm_j(&topo, 4)).unwrap();
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.2, 3.0, 8),
+        sweeps_per_round: 2,
+        rounds: 16,
+        ..Default::default()
+    };
+    let report = srv.run_tempering_fanout(h, &params, 6).unwrap();
+    match &report.best {
+        JobResult::Tempered { best_energy, .. } => assert!(best_energy.is_finite()),
+        other => panic!("healthy die should still win: {other:?}"),
+    }
+    assert!(!report.failures.is_empty(), "per-die failure was swallowed");
+    assert!(
+        report.failures.iter().all(|m| m.contains("chains")),
+        "diagnostic should name the chain shortfall: {:?}",
+        report.failures
+    );
+    assert_eq!(report.runs, 6);
+}
