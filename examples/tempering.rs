@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         adapt_every: 24, // re-space the ladder from measured acceptance
         record_every: 1,
         seed: 0x9A77,
+        ..Default::default()
     };
     println!(
         "tempering: {} replicas on β ∈ [{b0}, {b1}], {} rounds × {} sweeps (anneal: {} sweeps)",
@@ -104,5 +105,29 @@ fn main() -> anyhow::Result<()> {
         s.sharded.run.swaps.mean_acceptance(),
         s.sharded.cross_shard_round_trips()
     );
+
+    // Feedback-optimize the ladder offline: measure the up-mover
+    // profile f(β), re-space at constant round-trip flux, auto-size K —
+    // then race the tuned ladder against the geometric one at equal K.
+    let tuner = pchip::annealing::TunerParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(b0, b1, 8),
+            sweeps_per_round: 8,
+            rounds: 48,
+            record_every: 8,
+            seed: 0x9A77,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut chip = software_chip(5, MismatchConfig::default(), 16);
+    let t = pchip::experiments::fig9a_sk_ladder_tuning(&mut chip, 1, &tuner, 96, None)?;
+    println!("\nflux-tuned ladder (K auto-sized to {}):", t.tuned.k());
+    println!(
+        "  round trips/sweep: tuned {:.4} vs geometric {:.4} at equal K",
+        t.tuned_round_trips_per_sweep(),
+        t.geometric_round_trips_per_sweep()
+    );
+    println!("  see docs/TUNING.md for reading these diagnostics");
     Ok(())
 }

@@ -7,11 +7,12 @@
 //! compares single-replica annealing against parallel tempering at an
 //! equal per-replica sweep budget.
 
-use pchip::annealing::{AnnealParams, BetaLadder, BetaSchedule, TemperingParams};
+use pchip::annealing::{AnnealParams, BetaLadder, BetaSchedule, TemperingParams, TunerParams};
 use pchip::config::MismatchConfig;
 use pchip::coordinator::ShardedTemperingParams;
 use pchip::experiments::{
-    fig9a_sk_anneal, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal, software_chip,
+    fig9a_sk_anneal, fig9a_sk_ladder_tuning, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal,
+    software_chip,
 };
 use pchip::util::bench::{write_csv, Bench};
 
@@ -72,9 +73,9 @@ fn main() -> anyhow::Result<()> {
             ladder: BetaLadder::geometric(0.08, 4.0, 8),
             sweeps_per_round: 8,
             rounds: 96,
-            adapt_every: 0,
             record_every: 1,
             seed: 0x9A77 ^ seed,
+            ..Default::default()
         };
         let mut chip = software_chip(5, MismatchConfig::default(), 8);
         let r = fig9a_sk_temper_vs_anneal(
@@ -123,9 +124,9 @@ fn main() -> anyhow::Result<()> {
                 ladder: BetaLadder::geometric(0.08, 4.0, 8),
                 sweeps_per_round: 8,
                 rounds: 96,
-                adapt_every: 0,
                 record_every: 1,
                 seed: 0x9A77,
+                ..Default::default()
             },
             shards,
             barrier_timeout: std::time::Duration::from_secs(60),
@@ -159,6 +160,59 @@ fn main() -> anyhow::Result<()> {
     write_csv(
         "fig9a_sharded_arms",
         "shards,sharded_best,single_best,merged_acceptance,min_boundary_acceptance,cross_shard_round_trips",
+        &rows,
+    )?;
+
+    // the tuned-ladder arm: feedback-optimize the ladder by round-trip
+    // flux (auto-sized K), then race it against a geometric ladder at
+    // the same K and budget — round trips per sweep is the figure of
+    // merit (mixing across the whole ladder, not just pair acceptance)
+    println!("\n--- flux-tuned ladder vs geometric baseline ---");
+    let mut rows = Vec::new();
+    for seed in [1u64, 2, 3] {
+        let tuner = TunerParams {
+            base: TemperingParams {
+                ladder: BetaLadder::geometric(0.08, 4.0, 8),
+                sweeps_per_round: 8,
+                rounds: 48,
+                record_every: 8,
+                seed: 0x9A77 ^ seed,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut chip = software_chip(5, MismatchConfig::default(), 16);
+        let r = fig9a_sk_ladder_tuning(
+            &mut chip,
+            seed,
+            &tuner,
+            96,
+            if seed == 1 { Some("fig9a_tuned_ladder") } else { None },
+        )?;
+        println!(
+            "seed {seed}: K {} ({}) after {} iters  |  round trips/sweep \
+             tuned {:.4} vs geometric {:.4}  |  best E tuned {:>6.0} geo {:>6.0}",
+            r.tuned.k(),
+            if r.tuned.converged { "converged" } else { "unconverged" },
+            r.tuned.iterations.len(),
+            r.tuned_round_trips_per_sweep(),
+            r.geometric_round_trips_per_sweep(),
+            r.tuned_run.best_energy,
+            r.geometric_run.best_energy,
+        );
+        rows.push(vec![
+            seed as f64,
+            r.tuned.k() as f64,
+            if r.tuned.converged { 1.0 } else { 0.0 },
+            r.tuned_round_trips_per_sweep(),
+            r.geometric_round_trips_per_sweep(),
+            r.tuned_run.best_energy,
+            r.geometric_run.best_energy,
+        ]);
+    }
+    write_csv(
+        "fig9a_tuned_arms",
+        "seed,k,converged,tuned_rt_per_sweep,geometric_rt_per_sweep,tuned_best,geometric_best",
         &rows,
     )?;
 

@@ -70,9 +70,9 @@ fn main() -> anyhow::Result<()> {
             ladder: BetaLadder::geometric(0.15, 4.0, 8),
             sweeps_per_round: 6,
             rounds: 64,
-            adapt_every: 0,
             record_every: 4,
             seed: 0xC07,
+            ..Default::default()
         };
         let run = temper(&mut chip, &p, &tp, scale)?;
         let temper_cut = g.cut_value(&run.best_state);

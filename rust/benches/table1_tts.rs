@@ -11,8 +11,8 @@ use pchip::config::MismatchConfig;
 use pchip::coordinator::ShardedTemperingParams;
 use pchip::experiments::software_chip;
 use pchip::experiments::table1::{
-    default_tts_params, default_tts_temper_params, spec_row, table1_tts, table1_tts_sharded,
-    table1_tts_tempering,
+    default_tts_params, default_tts_temper_params, default_tts_tuner_params, spec_row, table1_tts,
+    table1_tts_sharded, table1_tts_tempering, table1_tts_tuned,
 };
 use pchip::util::bench::write_csv;
 
@@ -138,6 +138,49 @@ fn main() -> anyhow::Result<()> {
         "shards,p_success,tts99_ns,min_boundary_acceptance,cross_shard_round_trips",
         &rows,
     )?;
+
+    // the tuned-ladder arm: flux-tuned vs geometric at the same K —
+    // tuning is a one-off cost amortized over every later job, so TTS
+    // is charged only for the measurement repeats
+    println!("\nTTS with a flux-tuned ladder (vs geometric at the same K):");
+    {
+        let mut chip = software_chip(8, MismatchConfig::default(), 8);
+        let tuner = default_tts_tuner_params();
+        let mut rows = Vec::new();
+        for seed in 0..3u64 {
+            let r = table1_tts_tuned(
+                &mut chip,
+                100 + seed,
+                16,
+                &tuner,
+                if seed == 0 { Some("table1_tuned") } else { None },
+            )?;
+            println!(
+                "  seed {}: K {:>2} ({})  p_success tuned {:.3} geo {:.3}  \
+                 round trips/sweep tuned {:.4} geo {:.4}",
+                100 + seed,
+                r.ladder.len(),
+                if r.converged { "converged" } else { "unconverged" },
+                r.tuned.p_success,
+                r.geometric.p_success,
+                r.tuned_round_trips_per_sweep,
+                r.geometric_round_trips_per_sweep,
+            );
+            rows.push(vec![
+                (100 + seed) as f64,
+                r.ladder.len() as f64,
+                r.tuned.p_success,
+                r.geometric.p_success,
+                r.tuned_round_trips_per_sweep,
+                r.geometric_round_trips_per_sweep,
+            ]);
+        }
+        write_csv(
+            "table1_tuned_arms",
+            "seed,k,tuned_p_success,geometric_p_success,tuned_rt_per_sweep,geometric_rt_per_sweep",
+            &rows,
+        )?;
+    }
 
     // engine throughput comparison (chip-referred vs host wall-clock)
     println!("\nengine throughput (host wall-clock):");

@@ -12,14 +12,17 @@ use crate::rng::HostRng;
 /// One comparator instance with frozen input-referred offset.
 #[derive(Debug, Clone, Copy)]
 pub struct Comparator {
+    /// Input-referred offset current (nominal 0).
     pub offset: f64,
 }
 
 impl Comparator {
+    /// Draw one instance from the mismatch corner.
     pub fn sample(rng: &mut HostRng, sigma_offset: f64) -> Self {
         Self { offset: rng.normal_ms(0.0, sigma_offset) }
     }
 
+    /// A perfectly matched instance.
     pub fn ideal() -> Self {
         Self { offset: 0.0 }
     }

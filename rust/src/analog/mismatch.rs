@@ -38,8 +38,11 @@ pub struct EdgeCircuits {
 /// Analog instances of one p-bit.
 #[derive(Debug, Clone)]
 pub struct SpinCircuits {
+    /// The p-bit's bias-current DAC.
     pub bias_dac: R2rDac,
+    /// The p-bit's WTA tanh stage.
     pub wta: WtaTanh,
+    /// The p-bit's decision comparator.
     pub comparator: Comparator,
 }
 
@@ -56,6 +59,7 @@ pub struct ProgrammedWeights {
 }
 
 impl ProgrammedWeights {
+    /// All-zero (everything disabled) register image.
     pub fn zeros(n_edges: usize) -> Self {
         Self { j_codes: vec![0; n_edges], enables: vec![false; n_edges], h_codes: vec![0; N_SPINS] }
     }
@@ -87,9 +91,13 @@ impl Folded {
 /// One simulated die's frozen mismatch.
 #[derive(Debug, Clone)]
 pub struct Personality {
+    /// Seed the die was drawn with.
     pub seed: u64,
+    /// Mismatch corner the draws used.
     pub cfg: MismatchConfig,
+    /// Per-coupler analog instances (canonical edge order).
     pub edges: Vec<EdgeCircuits>,
+    /// Per-p-bit analog instances (spin order).
     pub spins: Vec<SpinCircuits>,
 }
 

@@ -20,6 +20,7 @@ pub struct GilbertMultiplier {
 }
 
 impl GilbertMultiplier {
+    /// Draw one instance from the mismatch corner.
     pub fn sample(rng: &mut HostRng, sigma_gain: f64, sigma_offset: f64) -> Self {
         Self {
             gain: rng.normal_ms(1.0, sigma_gain),
@@ -27,6 +28,7 @@ impl GilbertMultiplier {
         }
     }
 
+    /// A perfectly matched instance.
     pub fn ideal() -> Self {
         Self { gain: 1.0, offset: 0.0 }
     }

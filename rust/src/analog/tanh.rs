@@ -19,6 +19,8 @@ pub struct WtaTanh {
 }
 
 impl WtaTanh {
+    /// Draw one instance from the mismatch corner (slope floored at
+    /// 0.05 — a dead tanh stage would make its p-bit deterministic).
     pub fn sample(rng: &mut HostRng, sigma_slope: f64, sigma_offset: f64) -> Self {
         Self {
             slope: rng.normal_ms(1.0, sigma_slope).max(0.05),
@@ -26,6 +28,7 @@ impl WtaTanh {
         }
     }
 
+    /// A perfectly matched instance.
     pub fn ideal() -> Self {
         Self { slope: 1.0, offset: 0.0 }
     }

@@ -15,13 +15,22 @@
 //!   temperatures by Metropolis swap moves every few sweeps. The
 //!   standard algorithmic lever for frustrated instances where a single
 //!   annealed replica stalls.
+//!
+//! The ladder itself is a tunable: [`tune_ladder`] runs the
+//! round-trip-flux feedback loop (measure the up-mover profile,
+//! re-space, auto-size K) and returns a [`TunedLadder`] for reuse
+//! across jobs — `docs/TUNING.md` is the practitioner guide.
 
 mod sa;
 mod schedule;
 mod tempering;
 mod tts;
+mod tuner;
 
 pub use sa::{anneal, AnnealParams};
 pub use schedule::{BetaLadder, BetaSchedule};
-pub use tempering::{temper, temper_observed, TemperingCore, TemperingParams, TemperingRun};
+pub use tempering::{
+    temper, temper_observed, LadderTuning, TemperingCore, TemperingParams, TemperingRun,
+};
 pub use tts::{tts99, tts99_counts, TtsEstimate};
+pub use tuner::{tune_ladder, TuneAction, TuneIteration, TunedLadder, TunerParams};

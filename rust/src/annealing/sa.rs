@@ -10,6 +10,7 @@ use crate::sampler::Sampler;
 /// Annealing run parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct AnnealParams {
+    /// The β ramp shape (V_temp schedule).
     pub schedule: super::BetaSchedule,
     /// Number of β steps in the ramp.
     pub steps: usize,

@@ -33,6 +33,7 @@ impl BetaSchedule {
         self.beta(k as f64 / (n - 1) as f64)
     }
 
+    /// The ramp's end point, β(1).
     pub fn final_beta(&self) -> f64 {
         self.beta(1.0)
     }
@@ -44,9 +45,34 @@ impl BetaSchedule {
 ///
 /// Constructed geometrically — the spacing that equalizes swap
 /// acceptance when the specific heat is roughly constant — and optionally
-/// re-spaced from *measured* acceptance rates with [`BetaLadder::adapted`]
-/// (feedback-optimized parallel tempering: rungs crowd into the gaps
-/// where swaps are rare, typically around a phase transition).
+/// re-spaced from *measured* feedback: acceptance rates with
+/// [`BetaLadder::adapted`], or the round-trip flux profile with
+/// [`BetaLadder::flux_respaced`] (rungs crowd into the gaps where swaps
+/// are rare or diffusion stalls, typically around a phase transition).
+///
+/// The three stages of a ladder's life — geometric guess, acceptance
+/// adaptation, flux tuning:
+///
+/// ```
+/// use pchip::annealing::BetaLadder;
+///
+/// // 1. geometric guess over the β span
+/// let ladder = BetaLadder::geometric(0.1, 4.0, 6);
+///
+/// // 2. re-space from measured pair acceptance (cheap feedback)
+/// let adapted = ladder.adapted(&[0.5, 0.4, 0.1, 0.4, 0.5]);
+///
+/// // 3. re-space from the measured up-mover profile f(β) — what
+/// //    `tune_ladder` iterates to convergence (round-trip flux)
+/// let tuned = adapted.flux_respaced(&[1.0, 0.8, 0.55, 0.45, 0.2, 0.0]);
+///
+/// for l in [&ladder, &adapted, &tuned] {
+///     assert_eq!(l.len(), 6);
+///     assert_eq!(l.hottest(), 0.1);
+///     assert_eq!(l.coldest(), 4.0);
+///     assert!(l.betas.windows(2).all(|w| w[1] > w[0]));
+/// }
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct BetaLadder {
     /// Rung temperatures, strictly ascending.
@@ -78,6 +104,8 @@ impl BetaLadder {
         self.betas.len()
     }
 
+    /// Whether the ladder has no rungs (never true for a constructed
+    /// ladder — kept for the `len`/`is_empty` convention).
     pub fn is_empty(&self) -> bool {
         self.betas.is_empty()
     }
@@ -127,14 +155,141 @@ impl BetaLadder {
     /// placed at equal cumulative resistance, interpolating in ln β.
     /// Endpoints are pinned, ordering is preserved, and a ladder whose
     /// acceptance is already uniform comes back unchanged.
+    ///
+    /// Degenerate input is clamped to a sane re-spacing rather than
+    /// collapsing rung gaps: rates are clamped to `[0.02, 1.0]` (an
+    /// all-rejected gap pulls hard — 50× — but not infinitely, and an
+    /// all-zero vector is uniform, i.e. a fixed point), non-finite rates
+    /// are treated as carrying no information, and the result is
+    /// guaranteed strictly increasing with both endpoints exact.
+    ///
+    /// ```
+    /// use pchip::annealing::BetaLadder;
+    ///
+    /// let ladder = BetaLadder::geometric(0.1, 4.0, 6);
+    /// // measured acceptance: the gap between rungs 2 and 3 is starving
+    /// let tuned = ladder.adapted(&[0.6, 0.6, 0.05, 0.6, 0.6]);
+    /// // rungs crowd into the starving gap; endpoints stay pinned
+    /// assert!(tuned.betas[3] - tuned.betas[2] < ladder.betas[3] - ladder.betas[2]);
+    /// assert_eq!(tuned.hottest(), ladder.hottest());
+    /// assert_eq!(tuned.coldest(), ladder.coldest());
+    /// ```
     pub fn adapted(&self, acceptance: &[f64]) -> Self {
         let k = self.betas.len();
         assert_eq!(acceptance.len(), k - 1, "need one acceptance rate per adjacent pair");
-        // Clamp so an all-rejected gap pulls hard but not infinitely.
-        let resist: Vec<f64> = acceptance.iter().map(|&a| 1.0 / a.clamp(0.02, 1.0)).collect();
+        let resist: Vec<f64> = acceptance
+            .iter()
+            .map(|&a| {
+                if a.is_finite() {
+                    1.0 / a.clamp(0.02, 1.0)
+                } else {
+                    // a NaN / infinite rate carries no information: pass
+                    // it through so `respace_weighted` fills it with the
+                    // mean of the *measured* resistances — neutral, not
+                    // biased toward (or away from) the unknown gap
+                    f64::NAN
+                }
+            })
+            .collect();
+        self.respace_weighted(&resist)
+    }
+
+    /// Re-space the rungs from a measured round-trip flux profile
+    /// `fraction_up` — per-rung fraction of *up-moving* replicas
+    /// ([`crate::metrics::FluxStats::f_profile`]), `len() == len()` —
+    /// the Katzgraber feedback-optimization step.
+    ///
+    /// In the random-walk picture each replica diffuses along the ladder
+    /// with local diffusivity `D(β)`; the steady-state up-mover fraction
+    /// satisfies `j = D(β) · η(β) · df/dβ` with constant round-trip flux
+    /// `j` and rung density `η`. The round-trip rate is maximized by
+    /// `η_opt ∝ 1/√D ∝ √(η_meas · df/dβ)`, which integrated over a gap
+    /// gives the gap a weight `√Δf`. New rungs are placed at equal
+    /// cumulative `√Δf` (interpolating in ln β), so a profile that
+    /// already falls linearly in rung index — the optimality condition —
+    /// is a fixed point.
+    ///
+    /// Flat or noise-inverted stretches of the profile are clamped to a
+    /// small positive weight so every gap survives; endpoints stay
+    /// pinned and the result is strictly increasing.
+    ///
+    /// ```
+    /// use pchip::annealing::BetaLadder;
+    ///
+    /// let ladder = BetaLadder::geometric(0.1, 4.0, 5);
+    /// // f plateaus across the middle rungs (flat stretch = diffusion
+    /// // bottleneck): rungs will crowd into the plateau
+    /// let tuned = ladder.flux_respaced(&[1.0, 0.55, 0.5, 0.45, 0.0]);
+    /// // a linear profile is the optimum and therefore a fixed point
+    /// let fixed = ladder.flux_respaced(&[1.0, 0.75, 0.5, 0.25, 0.0]);
+    /// for (a, b) in ladder.betas.iter().zip(&fixed.betas) {
+    ///     assert!((a - b).abs() < 1e-9);
+    /// }
+    /// assert_eq!(tuned.len(), ladder.len());
+    /// assert!(tuned.betas.windows(2).all(|w| w[1] > w[0]));
+    /// ```
+    pub fn flux_respaced(&self, fraction_up: &[f64]) -> Self {
+        let k = self.betas.len();
+        assert_eq!(fraction_up.len(), k, "need one f(β) sample per rung");
+        // Δf across each gap, clamped so flat / inverted (noisy)
+        // stretches keep a small weight instead of collapsing
+        let floor = 0.01 / (k - 1) as f64;
+        let weights: Vec<f64> = fraction_up
+            .windows(2)
+            .map(|w| {
+                let df = w[0] - w[1];
+                let df = if df.is_finite() { df } else { 0.0 };
+                df.max(floor).sqrt()
+            })
+            .collect();
+        self.respace_weighted(&weights)
+    }
+
+    /// The same ladder re-sampled to `k ≥ 2` rungs: piecewise-linear
+    /// interpolation of the current rung profile in ln β, endpoints
+    /// pinned — the auto-sizing step of [`crate::annealing::tune_ladder`]
+    /// (grow when the acceptance bottleneck is starving, shrink when
+    /// adjacent rungs are redundant). The *shape* the previous feedback
+    /// rounds learned survives the resize; only the density changes.
+    pub fn resized(&self, k: usize) -> Self {
+        assert!(k >= 2, "a ladder needs at least two rungs, got {k}");
+        let n = self.len();
+        if k == n {
+            return self.clone();
+        }
+        let lnb: Vec<f64> = self.betas.iter().map(|b| b.ln()).collect();
+        let mut betas = Vec::with_capacity(k);
+        for j in 0..k {
+            let t = j as f64 / (k - 1) as f64 * (n - 1) as f64;
+            let g = (t.floor() as usize).min(n - 2);
+            let frac = t - g as f64;
+            betas.push((lnb[g] + frac * (lnb[g + 1] - lnb[g])).exp());
+        }
+        betas[0] = self.betas[0];
+        betas[k - 1] = self.betas[n - 1];
+        Self { betas }
+    }
+
+    /// Shared re-spacing core: place `len()` rungs at equal cumulative
+    /// per-gap `weights` (`len() − 1` of them), interpolating in ln β.
+    /// Non-finite / non-positive weights are replaced by the mean of the
+    /// informative ones; endpoints are pinned exactly and strict
+    /// monotonicity is enforced, so no input can collapse two rungs.
+    fn respace_weighted(&self, weights: &[f64]) -> Self {
+        let k = self.betas.len();
+        debug_assert_eq!(weights.len(), k - 1);
+        let finite: Vec<f64> =
+            weights.iter().copied().filter(|w| w.is_finite() && *w > 0.0).collect();
+        let fill = if finite.is_empty() {
+            1.0
+        } else {
+            finite.iter().sum::<f64>() / finite.len() as f64
+        };
+        let w: Vec<f64> =
+            weights.iter().map(|&x| if x.is_finite() && x > 0.0 { x } else { fill }).collect();
         let mut cum = Vec::with_capacity(k);
         cum.push(0.0);
-        for &r in &resist {
+        for &r in &w {
             cum.push(cum.last().unwrap() + r);
         }
         let total = *cum.last().unwrap();
@@ -142,16 +297,31 @@ impl BetaLadder {
         let mut out = Vec::with_capacity(k);
         for j in 0..k {
             let target = total * j as f64 / (k - 1) as f64;
-            let gap = cum
-                .windows(2)
-                .position(|w| target <= w[1] + 1e-12)
-                .unwrap_or(k - 2);
-            let frac = ((target - cum[gap]) / resist[gap].max(1e-300)).clamp(0.0, 1.0);
-            out.push((lnb[gap] + frac * (lnb[gap + 1] - lnb[gap])).exp());
+            let gap = cum.windows(2).position(|c| target <= c[1] + 1e-12).unwrap_or(k - 2);
+            let frac = ((target - cum[gap]) / w[gap].max(1e-300)).clamp(0.0, 1.0);
+            out.push(lnb[gap] + frac * (lnb[gap + 1] - lnb[gap]));
         }
-        out[0] = self.betas[0];
-        out[k - 1] = self.betas[k - 1];
-        Self { betas: out }
+        // pin endpoints, then force strict monotonicity: a degenerate
+        // weight profile may park two targets on the same spot, and two
+        // coincident rungs would freeze their swap pair forever
+        out[0] = lnb[0];
+        out[k - 1] = lnb[k - 1];
+        let eps = (lnb[k - 1] - lnb[0]) * 1e-9 / k as f64;
+        for j in 1..k {
+            if out[j] <= out[j - 1] {
+                out[j] = out[j - 1] + eps;
+            }
+        }
+        out[k - 1] = lnb[k - 1];
+        for j in (1..k - 1).rev() {
+            if out[j] >= out[j + 1] {
+                out[j] = out[j + 1] - eps;
+            }
+        }
+        let mut betas: Vec<f64> = out.iter().map(|l| l.exp()).collect();
+        betas[0] = self.betas[0];
+        betas[k - 1] = self.betas[k - 1];
+        Self { betas }
     }
 }
 
@@ -227,6 +397,120 @@ mod tests {
         assert_eq!(a.betas[0], l.betas[0]);
         assert_eq!(a.betas[4], l.betas[4]);
         assert!(a.betas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn adapted_all_zero_acceptance_is_sane_not_collapsed() {
+        // every pair fully rejecting: no gradient to follow — the clamp
+        // makes the resistance uniform, so the ladder must come back
+        // unchanged instead of collapsing rungs together
+        let l = BetaLadder::geometric(0.1, 4.0, 8);
+        let a = l.adapted(&[0.0; 7]);
+        for (x, y) in l.betas.iter().zip(&a.betas) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn adapted_single_zero_gap_keeps_strict_order_and_endpoints() {
+        let l = BetaLadder::geometric(0.1, 4.0, 8);
+        let mut rates = [0.8; 7];
+        rates[3] = 0.0;
+        let a = l.adapted(&rates);
+        assert_eq!(a.betas[0], l.betas[0]);
+        assert_eq!(a.betas[7], l.betas[7]);
+        assert!(a.betas.windows(2).all(|w| w[1] > w[0]), "rung gap collapsed: {:?}", a.betas);
+        // the dead pair pulls rungs toward it, but the 50× clamp bounds
+        // how far: no surviving gap may collapse below 1/1000 of the
+        // ln-β span
+        let span = l.coldest().ln() - l.hottest().ln();
+        for w in a.betas.windows(2) {
+            assert!(w[1].ln() - w[0].ln() > span / 1000.0, "collapsed gap in {:?}", a.betas);
+        }
+    }
+
+    #[test]
+    fn adapted_non_finite_rates_are_ignored_not_poisonous() {
+        let l = BetaLadder::geometric(0.2, 3.0, 6);
+        let a = l.adapted(&[f64::NAN, 0.4, f64::INFINITY, 0.4, f64::NAN]);
+        assert!(a.betas.iter().all(|b| b.is_finite()), "NaN leaked: {:?}", a.betas);
+        assert_eq!(a.betas[0], l.betas[0]);
+        assert_eq!(a.betas[5], l.betas[5]);
+        assert!(a.betas.windows(2).all(|w| w[1] > w[0]));
+        // "no information" must mean *neutral*: with every measured rate
+        // equal, the unmeasured gaps fill with the same resistance and
+        // the ladder is a fixed point — rungs are not pulled toward or
+        // away from the unknown gaps
+        for (x, y) in l.betas.iter().zip(&a.betas) {
+            assert!((x - y).abs() < 1e-9, "unknown gap biased the ladder: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn flux_respaced_crowds_rungs_into_the_plateau() {
+        // f plateaus across the middle gap: the diffusion bottleneck —
+        // rungs elsewhere carry the f drop, so the bottleneck gap must
+        // shrink relative to the rest of the ladder
+        let l = BetaLadder::geometric(0.1, 4.0, 5);
+        let t = l.flux_respaced(&[1.0, 0.55, 0.5, 0.45, 0.0]);
+        let old_mid = l.betas[3].ln() - l.betas[1].ln();
+        let new_mid = t.betas[3].ln() - t.betas[1].ln();
+        assert!(new_mid < old_mid, "plateau region should shrink: {old_mid} → {new_mid}");
+        assert_eq!(t.betas[0], l.betas[0]);
+        assert_eq!(t.betas[4], l.betas[4]);
+    }
+
+    /// Property: flux re-spacing always pins the endpoints and returns a
+    /// strictly increasing ladder, for any profile — monotone, noisy,
+    /// flat, or outright degenerate (all-equal f).
+    #[test]
+    fn prop_flux_respaced_endpoints_pinned_and_strictly_monotone() {
+        crate::util::prop::check("flux respacing", 300, |rng| {
+            let k = rng.below(20) + 2;
+            let ladder = BetaLadder::geometric(0.05 + rng.uniform(), 3.0 + 4.0 * rng.uniform(), k);
+            // random profile: sometimes a proper decreasing one,
+            // sometimes pure noise, sometimes completely flat
+            let f: Vec<f64> = match rng.below(3) {
+                0 => (0..k).map(|j| 1.0 - j as f64 / (k - 1) as f64).collect(),
+                1 => (0..k).map(|_| rng.uniform()).collect(),
+                _ => vec![0.5; k],
+            };
+            let t = ladder.flux_respaced(&f);
+            assert_eq!(t.len(), k);
+            assert_eq!(t.betas[0], ladder.betas[0], "hot endpoint moved");
+            assert_eq!(t.betas[k - 1], ladder.betas[k - 1], "cold endpoint moved");
+            assert!(
+                t.betas.windows(2).all(|w| w[1] > w[0]),
+                "not strictly increasing: {:?} from f={f:?}",
+                t.betas
+            );
+        });
+    }
+
+    #[test]
+    fn resized_preserves_endpoints_and_order() {
+        let l = BetaLadder::geometric(0.1, 4.0, 8);
+        for k in [2usize, 3, 7, 8, 9, 16] {
+            let r = l.resized(k);
+            assert_eq!(r.len(), k);
+            assert_eq!(r.betas[0], l.betas[0]);
+            assert_eq!(*r.betas.last().unwrap(), *l.betas.last().unwrap());
+            assert!(r.betas.windows(2).all(|w| w[1] > w[0]), "k={k}: {:?}", r.betas);
+        }
+        // resizing to the same K is the identity
+        assert_eq!(l.resized(8).betas, l.betas);
+    }
+
+    #[test]
+    fn resized_of_geometric_stays_geometric() {
+        // a geometric ladder is linear in ln β, so re-sampling it at any
+        // K must reproduce the geometric ladder at that K
+        let l = BetaLadder::geometric(0.1, 4.0, 6);
+        let r = l.resized(11);
+        let want = BetaLadder::geometric(0.1, 4.0, 11);
+        for (x, y) in r.betas.iter().zip(&want.betas) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
     }
 
     #[test]

@@ -31,12 +31,34 @@
 
 use anyhow::{ensure, Result};
 
-use crate::metrics::{EnergyTrace, SwapStats};
+use crate::metrics::{EnergyTrace, FluxStats, ReplicaDirection, SwapStats};
 use crate::problems::IsingProblem;
 use crate::rng::HostRng;
 use crate::sampler::Sampler;
 
 use super::schedule::BetaLadder;
+
+/// Which feedback signal drives in-run ladder re-spacing (applied every
+/// [`TemperingParams::adapt_every`] rounds; irrelevant when that is 0).
+///
+/// For the offline tuning loop that also auto-sizes K, see
+/// [`crate::annealing::tune_ladder`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LadderTuning {
+    /// Never re-space, even when `adapt_every > 0`.
+    Off,
+    /// Equalize measured adjacent-pair swap acceptance
+    /// ([`BetaLadder::adapted`]) — cheap, converges fast, but blind to
+    /// replicas ping-ponging between two rungs. The historical default.
+    #[default]
+    Acceptance,
+    /// Equalize round-trip flux from the measured up-mover profile
+    /// ([`BetaLadder::flux_respaced`], Katzgraber-style feedback) —
+    /// optimizes what actually matters (hot→cold→hot round trips) at
+    /// the cost of needing enough rounds per window for replicas to
+    /// traverse the ladder and earn direction labels.
+    RoundTripFlux,
+}
 
 /// Parameters of one tempering run.
 #[derive(Debug, Clone)]
@@ -49,9 +71,12 @@ pub struct TemperingParams {
     pub sweeps_per_round: usize,
     /// Number of sweep+swap rounds.
     pub rounds: usize,
-    /// Re-space the ladder from measured acceptance every this many
-    /// rounds (0 = fixed ladder). Endpoints stay pinned.
+    /// Re-space the ladder every this many rounds (0 = fixed ladder).
+    /// Endpoints stay pinned; [`TemperingParams::tuning`] picks the
+    /// feedback signal.
     pub adapt_every: usize,
+    /// Which feedback re-spaces the ladder when `adapt_every > 0`.
+    pub tuning: LadderTuning,
     /// Record the energy trace every `record_every` rounds.
     pub record_every: usize,
     /// Seed of the swap-decision RNG (replica dynamics themselves draw
@@ -66,6 +91,7 @@ impl Default for TemperingParams {
             sweeps_per_round: 4,
             rounds: 128,
             adapt_every: 0,
+            tuning: LadderTuning::Acceptance,
             record_every: 4,
             seed: 0x7E6F,
         }
@@ -96,13 +122,31 @@ pub struct TemperingRun {
     pub trace: EnergyTrace,
     /// Best energy seen by any replica at any round.
     pub best_energy: f64,
+    /// The spin state that reached [`TemperingRun::best_energy`].
     pub best_state: Vec<i8>,
     /// Swap acceptance / round-trip diagnostics.
     pub swaps: SwapStats,
+    /// Per-rung up/down-mover occupancy — the measured f(β) profile
+    /// that [`BetaLadder::flux_respaced`] consumes.
+    pub flux: FluxStats,
     /// The final ladder (differs from the input when `adapt_every > 0`).
     pub ladder: BetaLadder,
     /// Per-replica sweeps performed.
     pub total_sweeps: u64,
+}
+
+impl TemperingRun {
+    /// Completed hot→cold→hot round trips per replica-sweep — the
+    /// ladder-mixing figure [`crate::annealing::tune_ladder`] optimizes
+    /// (swap acceptance can look healthy while replicas ping-pong; this
+    /// cannot).
+    pub fn round_trips_per_sweep(&self) -> f64 {
+        if self.total_sweeps == 0 {
+            0.0
+        } else {
+            self.swaps.round_trips as f64 / self.total_sweeps as f64
+        }
+    }
 }
 
 /// The resumable tempering state machine: everything [`temper`] tracks
@@ -131,11 +175,17 @@ pub struct TemperingCore {
     ladder: BetaLadder,
     /// chain_at_rung[r] = chain currently holding rung r's temperature.
     chain_at_rung: Vec<usize>,
-    /// Round-trip labels: which ladder end each chain last visited.
+    /// Round-trip labels: which ladder end each chain last visited —
+    /// doubles as the replica's up/down direction label, and travels
+    /// with the chain (the spin state), not the rung, so a boundary
+    /// swap in the sharded engine carries it along with the
+    /// β-assignment for free.
     last_end: Vec<u8>,
     swaps: SwapStats,
+    flux: FluxStats,
     /// Windowed counters for ladder adaptation (reset after each adapt).
     window: SwapStats,
+    window_flux: FluxStats,
     rng: HostRng,
     trace: EnergyTrace,
     best: (f64, Vec<i8>),
@@ -188,7 +238,9 @@ impl TemperingCore {
             chain_at_rung,
             last_end: vec![END_NONE; batch],
             swaps: SwapStats::new(k),
+            flux: FluxStats::new(k),
             window: SwapStats::new(k),
+            window_flux: FluxStats::new(k),
             rng: HostRng::new(params.seed ^ 0x7E3A_94C1),
             trace: EnergyTrace::default(),
             best: (f64::INFINITY, Vec::new()),
@@ -270,6 +322,21 @@ impl TemperingCore {
         self.last_end[hot_chain] = END_HOT;
         self.last_end[cold_chain] = END_COLD;
 
+        // flux tally: each rung's occupant contributes one visit under
+        // its direction label (END_HOT = up-mover heading cold-ward,
+        // END_COLD = down-mover, END_NONE = not yet labeled). Pure
+        // counter updates — no RNG draw — so the swap decisions and the
+        // sharded engine's bit-exactness are untouched.
+        for (r, &c) in self.chain_at_rung.iter().enumerate() {
+            let dir = match self.last_end[c] {
+                END_HOT => ReplicaDirection::Up,
+                END_COLD => ReplicaDirection::Down,
+                _ => ReplicaDirection::Unlabeled,
+            };
+            self.flux.record(r, dir);
+            self.window_flux.record(r, dir);
+        }
+
         // trace (over the K replicas only — hot scouts would skew the
         // mean against an anneal trace) + optional ladder adaptation
         if round % self.params.record_every == 0 || round == self.params.rounds - 1 {
@@ -279,30 +346,47 @@ impl TemperingCore {
             self.trace.push(self.sweeps_done, self.ladder.coldest(), mean, min);
         }
         if self.params.adapt_every > 0 && round > 0 && round % self.params.adapt_every == 0 {
-            // Pairs never attempted in this window (short windows only
-            // see one parity) carry no information: fill them with the
-            // window's mean acceptance instead of letting a 0 read as
-            // "fully rejecting" and wrench the ladder toward them.
-            let mut rates = self.window.acceptance_rates();
-            let measured: Vec<f64> = self
-                .window
-                .attempts
-                .iter()
-                .zip(&rates)
-                .filter(|(&a, _)| a > 0)
-                .map(|(_, &r)| r)
-                .collect();
-            if !measured.is_empty() {
-                let fill = measured.iter().sum::<f64>() / measured.len() as f64;
-                for (a, r) in self.window.attempts.iter().zip(rates.iter_mut()) {
-                    if *a == 0 {
-                        *r = fill;
+            match self.params.tuning {
+                LadderTuning::Off => {}
+                LadderTuning::Acceptance => {
+                    // Pairs never attempted in this window (short windows
+                    // only see one parity) carry no information: fill them
+                    // with the window's mean acceptance instead of letting
+                    // a 0 read as "fully rejecting" and wrench the ladder
+                    // toward them.
+                    let mut rates = self.window.acceptance_rates();
+                    let measured: Vec<f64> = self
+                        .window
+                        .attempts
+                        .iter()
+                        .zip(&rates)
+                        .filter(|(&a, _)| a > 0)
+                        .map(|(_, &r)| r)
+                        .collect();
+                    if !measured.is_empty() {
+                        let fill = measured.iter().sum::<f64>() / measured.len() as f64;
+                        for (a, r) in self.window.attempts.iter().zip(rates.iter_mut()) {
+                            if *a == 0 {
+                                *r = fill;
+                            }
+                        }
+                        self.ladder = self.ladder.adapted(&rates);
                     }
                 }
-                self.ladder = self.ladder.adapted(&rates);
+                LadderTuning::RoundTripFlux => {
+                    // unmeasured rungs interpolate inside f_profile, so a
+                    // short window cannot wrench the ladder either
+                    self.ladder = self.ladder.flux_respaced(&self.window_flux.f_profile());
+                }
             }
             self.window = SwapStats::new(k);
+            self.window_flux = FluxStats::new(k);
         }
+    }
+
+    /// The cumulative flux counters collected so far.
+    pub fn flux(&self) -> &FluxStats {
+        &self.flux
     }
 
     /// Finalize into a [`TemperingRun`].
@@ -312,6 +396,7 @@ impl TemperingCore {
             best_energy: self.best.0,
             best_state: self.best.1,
             swaps: self.swaps,
+            flux: self.flux,
             ladder: self.ladder,
             total_sweeps: self.sweeps_done,
         }
@@ -447,6 +532,66 @@ mod tests {
         assert!((run.ladder.hottest() - 0.1).abs() < 1e-12);
         assert!((run.ladder.coldest() - 4.0).abs() < 1e-12);
         assert!(run.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn flux_is_recorded_with_pinned_endpoints() {
+        let (mut s, problem, scale) = glass_sampler(3, 16);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.3, 2.0, 8),
+            sweeps_per_round: 2,
+            rounds: 80,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        // one visit per rung per round
+        let visits = run.flux.up[0] + run.flux.down[0] + run.flux.unlabeled[0];
+        assert_eq!(visits, 80);
+        // endpoints are labeled by construction after the first round
+        assert_eq!(run.flux.fraction_up(0), 1.0, "hot end must host up-movers only");
+        assert_eq!(run.flux.fraction_up(7), 0.0, "cold end must host down-movers only");
+        // once warmed up, most visits carry a label
+        assert!(run.flux.labeled_fraction() > 0.5, "{}", run.flux.labeled_fraction());
+        let f = run.flux.f_profile();
+        assert_eq!(f.len(), 8);
+        assert!(f.iter().all(|v| (0.0..=1.0).contains(v)), "{f:?}");
+    }
+
+    #[test]
+    fn flux_tuning_respaces_the_ladder_in_run() {
+        let (mut s, problem, scale) = glass_sampler(5, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 2,
+            rounds: 80,
+            adapt_every: 20,
+            tuning: LadderTuning::RoundTripFlux,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        assert!((run.ladder.hottest() - 0.1).abs() < 1e-12);
+        assert!((run.ladder.coldest() - 4.0).abs() < 1e-12);
+        assert!(run.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+        assert_ne!(
+            run.ladder.betas,
+            BetaLadder::geometric(0.1, 4.0, 8).betas,
+            "flux feedback never moved the ladder"
+        );
+    }
+
+    #[test]
+    fn tuning_off_ignores_adapt_every() {
+        let (mut s, problem, scale) = glass_sampler(5, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 2,
+            rounds: 40,
+            adapt_every: 10,
+            tuning: LadderTuning::Off,
+            ..Default::default()
+        };
+        let run = temper(&mut s, &problem, &params, scale).unwrap();
+        assert_eq!(run.ladder.betas, BetaLadder::geometric(0.1, 4.0, 8).betas);
     }
 
     #[test]

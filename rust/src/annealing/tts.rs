@@ -14,6 +14,7 @@ pub struct TtsEstimate {
     pub t_anneal_ns: f64,
     /// TTS(99 %) in nanoseconds (∞ if no restart succeeded).
     pub tts99_ns: f64,
+    /// Restarts the estimate is based on.
     pub restarts: usize,
 }
 

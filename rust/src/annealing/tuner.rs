@@ -1,0 +1,401 @@
+//! Offline β-ladder tuning: iterate burn-in → measure → re-space until
+//! the ladder converges, auto-sizing K along the way.
+//!
+//! [`LadderTuning::RoundTripFlux`] re-spaces the ladder *inside* a
+//! tempering run; this module is the deliberate, offline version — spend
+//! a bounded tuning budget once, get back a [`BetaLadder`] (plus its
+//! measured diagnostics) that every subsequent job on the same problem
+//! can reuse. The feedback loop:
+//!
+//! ```text
+//!              ┌────────────────────────────────────────────┐
+//!              ▼                                            │
+//!   measurement burst ──▶ SwapStats ──▶ K sizing            │
+//!   (temper, fixed        FluxStats      │ grow: bottleneck │
+//!    ladder)                 │           │ shrink: redundant│
+//!              ▲             ▼           ▼                  │
+//!              │        f(β) profile ──▶ flux re-space ─────┘
+//!              │                         (Katzgraber feedback)
+//!              └── converged when rungs stop moving (and K is stable)
+//! ```
+//!
+//! Each iteration runs one fixed-ladder tempering burst, then takes
+//! exactly one action:
+//!
+//! * **grow K** while the minimum pairwise swap acceptance sits below
+//!   [`TunerParams::acceptance_floor`] — a starving pair means replicas
+//!   cannot cross that gap at any spacing of the current K;
+//! * **shrink K** when even the bottleneck pair accepts above
+//!   [`TunerParams::redundancy_ceiling`] — adjacent rungs are close
+//!   enough to be redundant, and a freed chain is a freed replica slot;
+//! * otherwise **re-space** at constant K from the measured up-mover
+//!   profile ([`BetaLadder::flux_respaced`]), declaring convergence once
+//!   the largest rung movement falls below [`TunerParams::tol`].
+//!
+//! The result maps straight back to silicon: each tuned β is a V_temp
+//! DAC code per replica's rung (see `docs/TUNING.md` for the full
+//! practitioner guide), and the coordinator serves the whole loop as
+//! [`crate::coordinator::JobRequest::TuneLadder`].
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::{FluxStats, SwapStats};
+use crate::problems::IsingProblem;
+use crate::sampler::Sampler;
+
+use super::schedule::BetaLadder;
+use super::tempering::{temper, LadderTuning, TemperingParams};
+
+/// Parameters of one [`tune_ladder`] run.
+#[derive(Debug, Clone)]
+pub struct TunerParams {
+    /// The measurement burst run per iteration: starting ladder, rounds,
+    /// sweeps per round and swap seed. `adapt_every`/`tuning` are
+    /// ignored — the tuner owns the feedback loop and measures each
+    /// candidate ladder *fixed*.
+    pub base: TemperingParams,
+    /// Maximum burn-in → re-space iterations before giving up (the run
+    /// still returns the best ladder found, flagged unconverged).
+    pub max_iters: usize,
+    /// Convergence threshold: largest per-rung movement of one
+    /// re-space, as a fraction of the ladder's ln-β span.
+    pub tol: f64,
+    /// Grow K while the minimum pairwise acceptance is below this.
+    pub acceptance_floor: f64,
+    /// Shrink K when the minimum pairwise acceptance exceeds this.
+    pub redundancy_ceiling: f64,
+    /// Never shrink below this many rungs.
+    pub min_k: usize,
+    /// Never grow beyond this many rungs (additionally capped by the
+    /// sampler's chain count).
+    pub max_k: usize,
+}
+
+impl Default for TunerParams {
+    fn default() -> Self {
+        Self {
+            base: TemperingParams {
+                rounds: 96,
+                sweeps_per_round: 4,
+                ..TemperingParams::default()
+            },
+            max_iters: 12,
+            tol: 0.02,
+            acceptance_floor: 0.2,
+            redundancy_ceiling: 0.9,
+            min_k: 4,
+            max_k: 32,
+        }
+    }
+}
+
+/// What one tuner iteration did, for the diagnostics trail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneAction {
+    /// Re-spaced the ladder at constant K from the flux profile.
+    Respaced,
+    /// Grew the ladder by one rung (acceptance bottleneck starving).
+    Grew,
+    /// Shrank the ladder by one rung (adjacent rungs redundant).
+    Shrank,
+}
+
+/// One row of the tuner's diagnostics trail.
+#[derive(Debug, Clone)]
+pub struct TuneIteration {
+    /// Rung count measured this iteration.
+    pub k: usize,
+    /// Minimum adjacent-pair acceptance of the burst.
+    pub min_acceptance: f64,
+    /// Attempt-weighted mean acceptance of the burst.
+    pub mean_acceptance: f64,
+    /// Hot→cold→hot round trips completed during the burst.
+    pub round_trips: u64,
+    /// Largest rung movement of the re-space, as a fraction of the
+    /// ln-β span (0 for grow/shrink iterations).
+    pub max_shift: f64,
+    /// The action this iteration took.
+    pub action: TuneAction,
+}
+
+/// What [`tune_ladder`] returns: the tuned ladder plus the final
+/// measurement-burst diagnostics, ready to seed production
+/// [`TemperingParams`] (or to lower to per-rung V_temp DAC codes).
+#[derive(Debug, Clone)]
+pub struct TunedLadder {
+    /// The converged (or best-so-far) ladder.
+    pub ladder: BetaLadder,
+    /// Whether the loop converged within the iteration budget.
+    pub converged: bool,
+    /// Per-iteration diagnostics, in order.
+    pub iterations: Vec<TuneIteration>,
+    /// Swap counters of the final measurement burst.
+    pub swaps: SwapStats,
+    /// Flux counters of the final measurement burst.
+    pub flux: FluxStats,
+    /// The final measured f(β) profile (sanitized, endpoints pinned).
+    pub f_profile: Vec<f64>,
+    /// Round trips per replica-sweep of the final burst — compare
+    /// against a geometric baseline at the same K to see what tuning
+    /// bought.
+    pub round_trips_per_sweep: f64,
+    /// Total per-replica sweeps the whole tuning loop spent.
+    pub total_sweeps: u64,
+}
+
+impl TunedLadder {
+    /// Rung count of the tuned ladder.
+    pub fn k(&self) -> usize {
+        self.ladder.len()
+    }
+}
+
+/// Tune a β-ladder for `problem` on `sampler` by round-trip-flux
+/// feedback with auto-sized K (see the [module docs](self) for the
+/// loop). `beta_scale` converts logical β to the chip knob exactly as
+/// in [`temper`]. The sampler keeps its state across bursts (warm
+/// start); like `temper`, per-chain βs are left pinned on exit.
+///
+/// Fails when the starting ladder (or `min_k`) asks for more replicas
+/// than the sampler has chains, or on any engine error inside a burst.
+pub fn tune_ladder<S: Sampler>(
+    sampler: &mut S,
+    problem: &IsingProblem,
+    params: &TunerParams,
+    beta_scale: f64,
+) -> Result<TunedLadder> {
+    ensure!(params.max_iters >= 1, "need at least one tuning iteration");
+    ensure!(params.min_k >= 2, "min_k must be at least 2, got {}", params.min_k);
+    ensure!(
+        params.min_k <= params.max_k,
+        "min_k {} exceeds max_k {}",
+        params.min_k,
+        params.max_k
+    );
+    ensure!(
+        params.acceptance_floor < params.redundancy_ceiling,
+        "acceptance floor {} must sit below the redundancy ceiling {}",
+        params.acceptance_floor,
+        params.redundancy_ceiling
+    );
+    let max_k = params.max_k.min(sampler.batch());
+    ensure!(
+        params.min_k <= max_k,
+        "min_k {} exceeds the sampler's {} chains",
+        params.min_k,
+        sampler.batch()
+    );
+
+    let span = |l: &BetaLadder| l.coldest().ln() - l.hottest().ln();
+    let mut ladder = params.base.ladder.clone();
+    if ladder.len() > max_k {
+        ladder = ladder.resized(max_k);
+    } else if ladder.len() < params.min_k {
+        ladder = ladder.resized(params.min_k);
+    }
+
+    let mut iterations = Vec::with_capacity(params.max_iters);
+    let mut total_sweeps = 0u64;
+    let mut converged = false;
+    let mut last_run = None;
+    for iter in 0..params.max_iters {
+        let burst = TemperingParams {
+            ladder: ladder.clone(),
+            adapt_every: 0,
+            tuning: LadderTuning::Off,
+            seed: params.base.seed.wrapping_add(iter as u64),
+            ..params.base.clone()
+        };
+        let run = temper(sampler, problem, &burst, beta_scale)?;
+        total_sweeps += run.total_sweeps;
+        let k = ladder.len();
+        // bottleneck over pairs that were actually *attempted*: a pair
+        // the even/odd parity alternation never reached carries no
+        // information and must not read as "fully rejecting" (the same
+        // guard the in-run Acceptance path applies) — ∞ when the burst
+        // attempted nothing, which disables both resize branches below
+        let min_acc = run.swaps.min_attempted_acceptance();
+        let mut row = TuneIteration {
+            k,
+            min_acceptance: if min_acc.is_finite() { min_acc } else { 0.0 },
+            mean_acceptance: run.swaps.mean_acceptance(),
+            round_trips: run.swaps.round_trips,
+            max_shift: 0.0,
+            action: TuneAction::Respaced,
+        };
+        if min_acc < params.acceptance_floor && k < max_k {
+            // a starving pair: no re-spacing of K rungs can fix a ladder
+            // that is simply too sparse — add a rung and re-measure
+            ladder = ladder.resized(k + 1);
+            row.action = TuneAction::Grew;
+        } else if min_acc.is_finite() && min_acc > params.redundancy_ceiling && k > params.min_k {
+            // even the bottleneck accepts almost everything: adjacent
+            // rungs are redundant — free a replica slot
+            ladder = ladder.resized(k - 1);
+            row.action = TuneAction::Shrank;
+        } else {
+            let next = ladder.flux_respaced(&run.flux.f_profile());
+            let shift = ladder
+                .betas
+                .iter()
+                .zip(&next.betas)
+                .map(|(a, b)| (a.ln() - b.ln()).abs())
+                .fold(0.0f64, f64::max)
+                / span(&ladder).max(1e-12);
+            row.max_shift = shift;
+            if shift < params.tol {
+                // converged: keep the ladder that was just *measured* —
+                // applying the sub-tol respace would detach the reported
+                // diagnostics from the ladder actually returned
+                converged = true;
+            } else {
+                ladder = next;
+            }
+        }
+        iterations.push(row);
+        last_run = Some(run);
+        if converged {
+            break;
+        }
+    }
+
+    let mut run = last_run.expect("max_iters >= 1 guarantees at least one burst");
+    if run.ladder != ladder {
+        // the iteration budget ran out right after a resize or an
+        // over-tol respace: measure the final ladder once more so the
+        // reported diagnostics (swaps, flux, f-profile) describe the
+        // ladder actually returned
+        let burst = TemperingParams {
+            ladder: ladder.clone(),
+            adapt_every: 0,
+            tuning: LadderTuning::Off,
+            seed: params.base.seed.wrapping_add(params.max_iters as u64),
+            ..params.base.clone()
+        };
+        run = temper(sampler, problem, &burst, beta_scale)?;
+        total_sweeps += run.total_sweeps;
+    }
+    Ok(TunedLadder {
+        f_profile: run.flux.f_profile(),
+        round_trips_per_sweep: run.round_trips_per_sweep(),
+        swaps: run.swaps,
+        flux: run.flux,
+        ladder,
+        converged,
+        iterations,
+        total_sweeps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::Personality;
+    use crate::chimera::Topology;
+    use crate::problems::sk;
+    use crate::sampler::SoftwareSampler;
+
+    fn glass_sampler(seed: u64, batch: usize) -> (SoftwareSampler, IsingProblem, f64) {
+        let topo = Topology::new();
+        let problem = sk::chimera_pm_j(&topo, seed);
+        let personality = Personality::ideal(&topo);
+        let (j, en, h, scale) = problem.to_codes(&topo).unwrap();
+        let mut w = crate::analog::ProgrammedWeights::zeros(topo.edges.len());
+        w.j_codes = j;
+        w.enables = en;
+        w.h_codes = h;
+        let folded = personality.fold(&topo, &w);
+        let mut s = SoftwareSampler::new(batch, seed);
+        s.load(&folded);
+        (s, problem, scale)
+    }
+
+    fn quick_params(k: usize) -> TunerParams {
+        TunerParams {
+            base: TemperingParams {
+                ladder: BetaLadder::geometric(0.2, 3.0, k),
+                sweeps_per_round: 2,
+                rounds: 40,
+                record_every: 8,
+                ..Default::default()
+            },
+            max_iters: 6,
+            tol: 0.08,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn tuner_returns_a_valid_ladder_and_trail() {
+        let (mut s, problem, scale) = glass_sampler(7, 12);
+        let params = quick_params(8);
+        let t = tune_ladder(&mut s, &problem, &params, scale).unwrap();
+        assert!(t.k() >= params.min_k && t.k() <= 12);
+        assert!(t.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+        assert!((t.ladder.hottest() - 0.2).abs() < 1e-9, "hot endpoint moved");
+        assert!((t.ladder.coldest() - 3.0).abs() < 1e-9, "cold endpoint moved");
+        assert!(!t.iterations.is_empty() && t.iterations.len() <= params.max_iters);
+        assert_eq!(t.f_profile.len(), t.k());
+        assert!(t.total_sweeps >= 80, "one burst is 40 × 2 sweeps");
+        assert!(t.round_trips_per_sweep.is_finite());
+    }
+
+    #[test]
+    fn tuner_grows_a_starving_ladder() {
+        let (mut s, problem, scale) = glass_sampler(3, 12);
+        // 3 rungs over a wide span: pairwise acceptance will starve
+        let mut params = quick_params(3);
+        params.base.ladder = BetaLadder::geometric(0.05, 5.0, 3);
+        params.acceptance_floor = 0.3;
+        params.min_k = 2;
+        let t = tune_ladder(&mut s, &problem, &params, scale).unwrap();
+        assert!(
+            t.iterations.iter().any(|i| i.action == TuneAction::Grew),
+            "a 3-rung ladder over β ∈ [0.05, 5] must starve and grow: {:?}",
+            t.iterations
+        );
+        assert!(t.k() > 3);
+    }
+
+    #[test]
+    fn tuner_shrinks_a_redundant_ladder() {
+        let (mut s, problem, scale) = glass_sampler(3, 16);
+        // 12 rungs over a sliver of β: every pair accepts nearly always
+        let mut params = quick_params(12);
+        params.base.ladder = BetaLadder::geometric(1.0, 1.05, 12);
+        params.redundancy_ceiling = 0.5;
+        params.min_k = 4;
+        let t = tune_ladder(&mut s, &problem, &params, scale).unwrap();
+        assert!(
+            t.iterations.iter().any(|i| i.action == TuneAction::Shrank),
+            "a 12-rung ladder over β ∈ [1.0, 1.05] must be redundant: {:?}",
+            t.iterations
+        );
+        assert!(t.k() < 12);
+    }
+
+    #[test]
+    fn tuner_rejects_bad_budgets() {
+        let (mut s, problem, scale) = glass_sampler(1, 8);
+        let mut params = quick_params(4);
+        params.max_iters = 0;
+        assert!(tune_ladder(&mut s, &problem, &params, scale).is_err());
+        let mut params = quick_params(4);
+        params.min_k = 12; // more than the sampler's 8 chains
+        assert!(tune_ladder(&mut s, &problem, &params, scale).is_err());
+        let mut params = quick_params(4);
+        params.acceptance_floor = 0.95;
+        params.redundancy_ceiling = 0.9;
+        assert!(tune_ladder(&mut s, &problem, &params, scale).is_err());
+    }
+
+    #[test]
+    fn tuner_caps_k_at_the_sampler_batch() {
+        let (mut s, problem, scale) = glass_sampler(2, 6);
+        // starting ladder wants 10 rungs but the die has 6 chains
+        let mut params = quick_params(10);
+        params.min_k = 2;
+        let t = tune_ladder(&mut s, &problem, &params, scale).unwrap();
+        assert!(t.k() <= 6, "K must respect the chain budget, got {}", t.k());
+    }
+}

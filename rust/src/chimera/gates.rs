@@ -27,6 +27,7 @@ impl GateLayout {
         v
     }
 
+    /// Number of visible (terminal) spins.
     pub fn n_visible(&self) -> usize {
         self.visible.len()
     }

@@ -120,6 +120,8 @@ pub struct Topology {
 }
 
 impl Topology {
+    /// Build the die's full adjacency (edge list, neighbor lists and
+    /// chromatic color groups).
     pub fn new() -> Self {
         let edges = edges();
         let mut neighbors = vec![Vec::new(); N_SPINS];

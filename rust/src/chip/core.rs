@@ -33,9 +33,13 @@ pub enum UpdateOrder {
 
 /// One simulated die.
 pub struct PbitChip {
+    /// The hardware graph.
     pub topo: Topology,
+    /// This die's frozen process-variation sample.
     pub personality: Personality,
+    /// The SPI-programmable register file.
     pub regs: RegMap,
+    /// The SPI slave (counts wire clocks).
     pub bus: SpiBus,
     rng: ChipRngBank,
     state: Vec<i8>,
@@ -102,6 +106,7 @@ impl PbitChip {
         Ok(())
     }
 
+    /// β implied by the current V_temp register.
     pub fn beta(&self) -> f64 {
         self.regs.beta()
     }
@@ -114,10 +119,12 @@ impl PbitChip {
         }
     }
 
+    /// Current spin state (test-bench view; silicon reads over SPI).
     pub fn state(&self) -> &[i8] {
         &self.state
     }
 
+    /// Re-randomize the spin flip-flops (deterministic per seed).
     pub fn randomize_state(&mut self, seed: u64) {
         let mut hr = crate::rng::HostRng::new(seed);
         for s in self.state.iter_mut() {

@@ -127,19 +127,23 @@ impl ServerConfig {
 /// Top-level config.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Config {
+    /// The fabricated chip corner to simulate.
     pub mismatch: MismatchConfig,
+    /// Coordinator / serving parameters.
     pub server: ServerConfig,
     /// Artifacts directory override (else auto-located).
     pub artifacts: Option<PathBuf>,
 }
 
 impl Config {
+    /// Load and parse a TOML-lite config file.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Parse config text (missing keys fall back to defaults).
     pub fn parse(text: &str) -> Result<Self> {
         let doc = Doc::parse(text).context("parsing config")?;
         Ok(Self {
@@ -149,6 +153,7 @@ impl Config {
         })
     }
 
+    /// The artifacts directory (override or auto-located).
     pub fn artifacts_dir(&self) -> PathBuf {
         self.artifacts.clone().unwrap_or_else(repo_artifacts_dir)
     }

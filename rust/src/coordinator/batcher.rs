@@ -11,14 +11,18 @@ use super::job::{JobId, JobRequest};
 /// A queued job awaiting dispatch.
 #[derive(Debug)]
 pub struct QueuedJob {
+    /// The job's id (ticket correlation).
     pub id: JobId,
+    /// The request itself.
     pub request: JobRequest,
 }
 
 /// A dispatchable batch: same problem, total chains ≤ budget.
 #[derive(Debug)]
 pub struct Batch {
+    /// Problem handle every job in the batch shares.
     pub problem: u64,
+    /// The batched jobs, in FIFO order.
     pub jobs: Vec<QueuedJob>,
 }
 
@@ -40,14 +44,17 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Empty batcher with the given queue depth and chain budget.
     pub fn new(depth: usize, max_chains: usize) -> Self {
         Self { queue: VecDeque::new(), depth, max_chains }
     }
 
+    /// Jobs currently waiting.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether no jobs are waiting.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -9,7 +9,7 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
-use crate::annealing::{AnnealParams, TemperingParams};
+use crate::annealing::{AnnealParams, BetaLadder, TemperingParams, TunerParams};
 
 use super::sharded::ShardedTemperingParams;
 
@@ -36,15 +36,25 @@ pub enum JobRequest {
     /// seats them all. Fails fast when the array is smaller than the
     /// shard count.
     ShardedTempering { problem: ProblemHandle, params: ShardedTemperingParams },
+    /// Tune a β-ladder for the problem by round-trip-flux feedback with
+    /// auto-sized K ([`crate::annealing::tune_ladder`]): a whole-die job
+    /// whose [`JobResult::LadderTuned`] answer carries the tuned
+    /// [`BetaLadder`] plus diagnostics, ready to seed the `params` of
+    /// subsequent [`JobRequest::Tempering`] /
+    /// [`JobRequest::ShardedTempering`] jobs on the same problem.
+    /// Requires a per-chain-β engine, like `Tempering`.
+    TuneLadder { problem: ProblemHandle, params: TunerParams },
 }
 
 impl JobRequest {
+    /// Handle of the registered problem the job runs against.
     pub fn problem(&self) -> ProblemHandle {
         match *self {
             JobRequest::Sample { problem, .. } => problem,
             JobRequest::Anneal { problem, .. } => problem,
             JobRequest::Tempering { problem, .. } => problem,
             JobRequest::ShardedTempering { problem, .. } => problem,
+            JobRequest::TuneLadder { problem, .. } => problem,
         }
     }
 
@@ -52,11 +62,13 @@ impl JobRequest {
     pub fn chains(&self) -> usize {
         match *self {
             JobRequest::Sample { chains, .. } => chains.max(1),
-            // anneals and tempering runs occupy the whole die; sharded
-            // tempering occupies several, but still batches alone
+            // anneals, tempering runs and ladder tuning occupy the whole
+            // die; sharded tempering occupies several, but still batches
+            // alone
             JobRequest::Anneal { .. }
             | JobRequest::Tempering { .. }
-            | JobRequest::ShardedTempering { .. } => usize::MAX,
+            | JobRequest::ShardedTempering { .. }
+            | JobRequest::TuneLadder { .. } => usize::MAX,
         }
     }
 }
@@ -64,6 +76,7 @@ impl JobRequest {
 /// What comes back.
 #[derive(Debug, Clone)]
 pub enum JobResult {
+    /// Answer to [`JobRequest::Sample`].
     Samples {
         /// One state per requested chain.
         states: Vec<Vec<i8>>,
@@ -76,17 +89,24 @@ pub enum JobResult {
         /// Host wall-clock latency.
         latency: Duration,
     },
+    /// Answer to [`JobRequest::Anneal`].
     Annealed {
+        /// Best energy over every chain and step.
         best_energy: f64,
+        /// The spin state that reached `best_energy`.
         best_state: Vec<i8>,
         /// (sweep, beta, mean energy, min energy) rows.
         trace: Vec<(u64, f64, f64, f64)>,
+        /// Which die served it.
         chip: usize,
+        /// Host wall-clock latency.
         latency: Duration,
     },
+    /// Answer to [`JobRequest::Tempering`].
     Tempered {
         /// Best energy over every replica and round.
         best_energy: f64,
+        /// The spin state that reached `best_energy`.
         best_state: Vec<i8>,
         /// (sweep, coldest β, mean energy, min energy) rows.
         trace: Vec<(u64, f64, f64, f64)>,
@@ -94,9 +114,15 @@ pub enum JobResult {
         swap_acceptance: Vec<f64>,
         /// Completed hot → cold → hot replica round trips.
         round_trips: u64,
+        /// Measured per-rung up-mover fraction — the f(β) profile
+        /// ([`crate::metrics::FluxStats::f_profile`]).
+        fraction_up: Vec<f64>,
+        /// Which die served it.
         chip: usize,
+        /// Host wall-clock latency.
         latency: Duration,
     },
+    /// Answer to [`JobRequest::ShardedTempering`].
     ShardedTempered {
         /// Best energy over every replica on every die.
         best_energy: f64,
@@ -116,17 +142,46 @@ pub enum JobResult {
         /// Round trips that crossed dies (= `round_trips` when more
         /// than one shard ran; 0 for a degenerate 1-shard job).
         cross_shard_round_trips: u64,
+        /// Measured per-rung up-mover fraction over the whole sharded
+        /// ladder (direction labels ride through boundary swaps with
+        /// the β-assignments, so the profile is seamless across dies).
+        fraction_up: Vec<f64>,
         /// How many shards (dies) shared the ladder.
         shards: usize,
         /// Which dies were seated, in shard order (hot → cold).
         dies: Vec<usize>,
+        /// Host wall-clock latency.
         latency: Duration,
     },
+    /// Answer to [`JobRequest::TuneLadder`].
+    LadderTuned {
+        /// The tuned ladder — feed it straight into the next tempering
+        /// job's [`crate::annealing::TemperingParams::ladder`].
+        ladder: BetaLadder,
+        /// Whether the feedback loop converged within its budget.
+        converged: bool,
+        /// Burn-in → re-space iterations performed.
+        iterations: usize,
+        /// Minimum adjacent-pair acceptance of the final burst.
+        min_acceptance: f64,
+        /// Round trips per replica-sweep of the final burst.
+        round_trips_per_sweep: f64,
+        /// Final measured f(β) profile, one entry per rung.
+        fraction_up: Vec<f64>,
+        /// Per-replica sweeps the tuning loop spent.
+        tuning_sweeps: u64,
+        /// Which die served it.
+        chip: usize,
+        /// Host wall-clock latency.
+        latency: Duration,
+    },
+    /// The job failed; the string is the diagnostic.
     Failed(String),
 }
 
 /// Handle for awaiting one job's result.
 pub struct JobTicket {
+    /// The job's id, for correlating with logs and stats.
     pub id: JobId,
     pub(crate) rx: mpsc::Receiver<JobResult>,
 }
@@ -159,6 +214,9 @@ mod tests {
         let t = JobRequest::Tempering { problem: 3, params: TemperingParams::default() };
         assert_eq!(t.chains(), usize::MAX, "tempering occupies the whole die");
         assert_eq!(t.problem(), 3);
+        let l = JobRequest::TuneLadder { problem: 5, params: TunerParams::default() };
+        assert_eq!(l.chains(), usize::MAX, "ladder tuning occupies the whole die");
+        assert_eq!(l.problem(), 5);
     }
 
     #[test]

@@ -59,6 +59,13 @@
 //!   `rust/tests/sharded_equivalence.rs` proves a 1-shard run
 //!   bit-identical to the single-die engine.
 //!
+//! The β-ladder those workloads run on is itself servable:
+//! [`JobRequest::TuneLadder`] runs the round-trip-flux feedback tuner
+//! ([`crate::annealing::tune_ladder`]) on one die and answers with the
+//! tuned [`crate::annealing::BetaLadder`] plus diagnostics, which the
+//! client feeds into subsequent tempering / sharded-tempering jobs on
+//! the same problem (`docs/TUNING.md`).
+//!
 //! # Example
 //!
 //! Serve a ±J glass from a two-die array and read back samples:

@@ -36,6 +36,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over `n_workers` dies, all empty and idle.
     pub fn new(n_workers: usize) -> Self {
         assert!(n_workers > 0);
         Self {
@@ -46,6 +47,7 @@ impl Router {
         }
     }
 
+    /// Number of dies being routed over.
     pub fn n_workers(&self) -> usize {
         self.load.len()
     }
@@ -161,6 +163,7 @@ impl Router {
         self.load[w] -= 1;
     }
 
+    /// In-flight batches on die `w` (0 = idle).
     pub fn load(&self, w: usize) -> usize {
         self.load[w]
     }

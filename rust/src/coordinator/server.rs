@@ -44,7 +44,9 @@ pub enum EngineKind {
 
 /// A registered problem: logical form + lowered register codes.
 pub struct ProblemSpec {
+    /// The logical Ising problem.
     pub problem: IsingProblem,
+    /// Its lowered 8-bit register image.
     pub codes: ProgrammedWeights,
     /// code → logical coupling scale (β_chip = β_logical × scale).
     pub scale: f64,
@@ -69,15 +71,22 @@ pub struct FanoutReport {
 /// Aggregate serving metrics.
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Jobs answered successfully.
     pub jobs_completed: AtomicU64,
+    /// Jobs answered with [`JobResult::Failed`].
     pub jobs_failed: AtomicU64,
+    /// Batches dispatched to workers.
     pub batches: AtomicU64,
+    /// Die reprogram events (SPI weight loads).
     pub reprograms: AtomicU64,
+    /// Sum of job latencies in µs (mean = / `jobs_completed`).
     pub total_latency_us: AtomicU64,
+    /// Simulated chip time consumed, in ns.
     pub chip_time_ns: AtomicU64,
 }
 
 impl ServerStats {
+    /// Mean latency over completed jobs.
     pub fn mean_latency(&self) -> Duration {
         let n = self.jobs_completed.load(Ordering::Relaxed).max(1);
         Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
@@ -285,10 +294,12 @@ impl ChipArrayServer {
         self.run(JobRequest::ShardedTempering { problem, params: params.clone() })
     }
 
+    /// Aggregate serving metrics.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
     }
 
+    /// The registered spec behind a problem handle.
     pub fn spec(&self, h: ProblemHandle) -> Option<Arc<ProblemSpec>> {
         self.problems.lock().unwrap().get(&h).cloned()
     }
@@ -397,7 +408,9 @@ fn dispatcher_main(
             }
             let whole_die = matches!(
                 batch.jobs[0].request,
-                JobRequest::Anneal { .. } | JobRequest::Tempering { .. }
+                JobRequest::Anneal { .. }
+                    | JobRequest::Tempering { .. }
+                    | JobRequest::TuneLadder { .. }
             );
             let (w, needs_program) = if whole_die {
                 // long whole-die runs spread over idle dies instead of
@@ -498,6 +511,7 @@ fn dispatch_sharded(
                 trace: sr.run.trace.rows,
                 swap_acceptance: sr.run.swaps.acceptance_rates(),
                 round_trips: sr.run.swaps.round_trips,
+                fraction_up: sr.run.flux.f_profile(),
                 boundary_pairs: sr.boundary_pairs,
                 shards: sr.shards,
                 dies,
@@ -642,6 +656,9 @@ fn run_batch<C: TrainableChip>(
             JobRequest::Tempering { .. } => {
                 groups.entry((f64::INFINITY.to_bits(), usize::MAX)).or_default().push(idx);
             }
+            JobRequest::TuneLadder { .. } => {
+                groups.entry((f64::MIN.to_bits(), usize::MAX)).or_default().push(idx);
+            }
             // never reaches a single-die worker (the dispatcher seats
             // gangs itself); grouped defensively so a routing bug fails
             // the job instead of wedging the batch
@@ -740,12 +757,38 @@ fn run_whole_die_job<C: TrainableChip>(
                     trace: run.trace.rows,
                     swap_acceptance: run.swaps.acceptance_rates(),
                     round_trips: run.swaps.round_trips,
+                    fraction_up: run.flux.f_profile(),
                     chip: k,
                     latency: t0.elapsed(),
                 },
                 Err(e) => JobResult::Failed(format!("tempering: {e}")),
             };
             (msg, params.total_sweeps() as u64)
+        }
+        JobRequest::TuneLadder { params, .. } => {
+            let mut sweeps = 0u64;
+            let msg = match annealing::tune_ladder(chip, &spec.problem, params, spec.scale) {
+                Ok(tuned) => {
+                    sweeps = tuned.total_sweeps;
+                    // the measured bottleneck (0.0 only when the tuning
+                    // bursts were too short to attempt any pair) — same
+                    // convention as the tuner's own diagnostics trail
+                    let m = tuned.swaps.min_attempted_acceptance();
+                    JobResult::LadderTuned {
+                        converged: tuned.converged,
+                        iterations: tuned.iterations.len(),
+                        min_acceptance: if m.is_finite() { m } else { 0.0 },
+                        round_trips_per_sweep: tuned.round_trips_per_sweep,
+                        fraction_up: tuned.f_profile.clone(),
+                        tuning_sweeps: tuned.total_sweeps,
+                        ladder: tuned.ladder,
+                        chip: k,
+                        latency: t0.elapsed(),
+                    }
+                }
+                Err(e) => JobResult::Failed(format!("ladder tuning: {e}")),
+            };
+            (msg, sweeps)
         }
         JobRequest::ShardedTempering { .. } => (
             JobResult::Failed(
@@ -860,6 +903,42 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn tune_ladder_job_roundtrip() {
+        let (srv, h) = server(1);
+        let params = crate::annealing::TunerParams {
+            base: TemperingParams {
+                ladder: crate::annealing::BetaLadder::geometric(0.2, 3.0, 6),
+                sweeps_per_round: 2,
+                rounds: 24,
+                ..Default::default()
+            },
+            max_iters: 4,
+            tol: 0.1,
+            ..Default::default()
+        };
+        match srv.run(JobRequest::TuneLadder { problem: h, params }).unwrap() {
+            JobResult::LadderTuned {
+                ladder,
+                iterations,
+                fraction_up,
+                round_trips_per_sweep,
+                tuning_sweeps,
+                ..
+            } => {
+                assert!(ladder.len() >= 4);
+                assert!(ladder.betas.windows(2).all(|w| w[1] > w[0]));
+                assert!((1..=4).contains(&iterations));
+                assert_eq!(fraction_up.len(), ladder.len());
+                assert!(round_trips_per_sweep.is_finite());
+                assert!(tuning_sweeps >= 48, "one burst is 24 × 2 sweeps");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // the tuned ladder seeds a follow-up tempering job
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 1);
     }
 
     #[test]

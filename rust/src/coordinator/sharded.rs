@@ -42,7 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::annealing::{TemperingCore, TemperingParams, TemperingRun};
-use crate::metrics::SwapStats;
+use crate::metrics::{FluxStats, SwapStats};
 use crate::problems::IsingProblem;
 use crate::sampler::Sampler;
 
@@ -114,6 +114,7 @@ impl ShardPlan {
         Ok(Self { ranges, batches: batches.to_vec(), offsets, total_chains: total })
     }
 
+    /// Number of shards in the plan.
     pub fn shards(&self) -> usize {
         self.ranges.len()
     }
@@ -164,6 +165,13 @@ pub struct ShardedRun {
     /// than one shard its `round_trips` carries the cross-shard round
     /// trips (a hot→cold→hot excursion traverses every boundary).
     pub boundary: SwapStats,
+    /// Round-trip-flux counters attributed to each shard's rung range.
+    /// Direction labels travel with the replica through boundary swaps
+    /// (they live on the chain, exactly like the β-assignment moves
+    /// between chains), so a rung's occupancy is well-defined no matter
+    /// which die its replica last swapped in from; merging these in
+    /// **any order** reproduces `run.flux` ([`FluxStats::merge`]).
+    pub per_shard_flux: Vec<FluxStats>,
     /// Pair indices of the shard boundaries (`pair k` = rungs `k, k+1`).
     pub boundary_pairs: Vec<usize>,
     /// How many dies shared the ladder.
@@ -380,7 +388,14 @@ where
     } else {
         boundary.round_trips = run.swaps.round_trips;
     }
-    Ok(ShardedRun { run, per_shard, boundary, boundary_pairs, shards })
+    // Flux attribution is cleaner than swap attribution: rungs (not
+    // pairs) partition exactly into the shard ranges.
+    let per_shard_flux: Vec<FluxStats> = plan
+        .ranges
+        .iter()
+        .map(|range| run.flux.restricted(&range.clone().collect::<Vec<_>>()))
+        .collect();
+    Ok(ShardedRun { run, per_shard, boundary, per_shard_flux, boundary_pairs, shards })
 }
 
 /// Run one β-ladder across `samplers.len()` dies, one shard each (see

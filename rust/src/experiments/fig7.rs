@@ -15,13 +15,19 @@ use crate::util::bench::write_csv;
 /// Experiment configuration.
 #[derive(Debug, Clone)]
 pub struct GateExperiment {
+    /// Where the gate sits on the die.
     pub layout: GateLayout,
+    /// The truth table to learn.
     pub dataset: Dataset,
+    /// Trainer hyperparameters.
     pub params: CdParams,
+    /// Mismatch corner of the die under test.
     pub mismatch: MismatchConfig,
+    /// Personality seed of the die under test.
     pub chip_seed: u64,
     /// Distribution snapshots at these epochs (Fig 7b panels).
     pub snapshot_epochs: Vec<usize>,
+    /// Samples per distribution evaluation.
     pub eval_samples: usize,
 }
 
@@ -49,7 +55,9 @@ pub struct GateReport {
     pub snapshots: Vec<(usize, Vec<f64>)>,
     /// Target (truth-table) distribution.
     pub target: Vec<f64>,
+    /// KL(target ‖ model) after the last epoch.
     pub final_kl: f64,
+    /// Probability mass on valid truth-table states after training.
     pub final_valid_mass: f64,
 }
 

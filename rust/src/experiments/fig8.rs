@@ -28,6 +28,7 @@ pub struct BiasSweepReport {
     pub offsets: Vec<f64>,
     /// Relative slope spread (σ/μ) — the paper's variability number.
     pub slope_cv: f64,
+    /// Offset spread in DAC codes.
     pub offset_sd_codes: f64,
 }
 

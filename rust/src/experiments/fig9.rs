@@ -5,7 +5,8 @@
 use anyhow::Result;
 
 use crate::annealing::{
-    anneal, temper, AnnealParams, BetaLadder, BetaSchedule, TemperingParams, TemperingRun,
+    anneal, temper, tune_ladder, AnnealParams, BetaLadder, BetaSchedule, LadderTuning,
+    TemperingParams, TemperingRun, TunedLadder, TunerParams,
 };
 use crate::chimera::Topology;
 use crate::config::MismatchConfig;
@@ -19,7 +20,9 @@ use crate::util::bench::write_csv;
 /// Fig 9a output.
 #[derive(Debug, Clone)]
 pub struct SkAnnealReport {
+    /// The recorded (sweep, β, mean E, min E) series.
     pub trace: EnergyTrace,
+    /// Best energy over every chain and step.
     pub best_energy: f64,
     /// Energy of the all-up state (the "random start" reference level).
     pub initial_energy_scale: f64,
@@ -57,11 +60,15 @@ pub fn fig9a_sk_anneal<C: TrainableChip>(
 pub struct MaxCutReport {
     /// (sweep, best cut so far) series for the chip.
     pub chip_cut_trace: Vec<(u64, f64)>,
+    /// Best cut the chip reached.
     pub chip_best_cut: f64,
+    /// Multi-start greedy baseline.
     pub greedy_cut: f64,
     /// Exact optimum when the instance is small enough.
     pub exact_cut: Option<f64>,
+    /// Total edge weight W (the cut's upper bound).
     pub total_weight: f64,
+    /// Edge count of the instance.
     pub n_edges: usize,
 }
 
@@ -136,9 +143,26 @@ pub fn default_sk_temper_params() -> TemperingParams {
         ladder: BetaLadder::geometric(0.08, 4.0, 8),
         sweeps_per_round: 8,
         rounds: 96,
-        adapt_every: 0,
         record_every: 1,
         seed: 0x9A77,
+        ..Default::default()
+    }
+}
+
+/// Default tuner setup for the Fig 9a instance: feedback over the same
+/// β span as [`default_sk_temper_params`], measurement bursts of 48
+/// rounds × 8 sweeps.
+pub fn default_sk_tuner_params() -> TunerParams {
+    TunerParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.08, 4.0, 8),
+            sweeps_per_round: 8,
+            rounds: 48,
+            record_every: 8,
+            seed: 0x9A77,
+            ..Default::default()
+        },
+        ..Default::default()
     }
 }
 
@@ -146,13 +170,16 @@ pub fn default_sk_temper_params() -> TemperingParams {
 /// same instance and die with equal per-replica sweep budgets.
 #[derive(Debug, Clone)]
 pub struct TemperVsAnnealReport {
+    /// The single-replica annealing arm.
     pub anneal: SkAnnealReport,
+    /// The replica-exchange arm.
     pub temper: TemperingRun,
     /// The comparison target: the best energy the anneal reached.
     pub target_energy: f64,
     /// Per-replica sweeps each mode needed to first reach the target
     /// (`None` = never within budget).
     pub anneal_sweeps_to_target: Option<u64>,
+    /// Tempering's sweeps-to-target (see `anneal_sweeps_to_target`).
     pub temper_sweeps_to_target: Option<u64>,
 }
 
@@ -218,6 +245,87 @@ pub fn fig9a_sk_temper_vs_anneal<C: TrainableChip>(
             "sweep,beta,mean_energy,min_energy",
             &report.temper.trace.csv_rows(),
         )?;
+    }
+    Ok(report)
+}
+
+/// The Fig 9a tuning extension: a flux-tuned ladder vs the geometric
+/// baseline at the same K and sweep budget.
+#[derive(Debug, Clone)]
+pub struct TunedLadderReport {
+    /// The tuner's output (ladder, convergence, diagnostics trail).
+    pub tuned: TunedLadder,
+    /// Evaluation run on the tuned ladder.
+    pub tuned_run: TemperingRun,
+    /// Evaluation run on a geometric ladder with the *same K* and β
+    /// span — the fair baseline.
+    pub geometric_run: TemperingRun,
+}
+
+impl TunedLadderReport {
+    /// Round trips per replica-sweep of the tuned-ladder evaluation.
+    pub fn tuned_round_trips_per_sweep(&self) -> f64 {
+        self.tuned_run.round_trips_per_sweep()
+    }
+
+    /// Round trips per replica-sweep of the geometric baseline.
+    pub fn geometric_round_trips_per_sweep(&self) -> f64 {
+        self.geometric_run.round_trips_per_sweep()
+    }
+}
+
+/// Tune a β-ladder for the Fig 9a SK instance by round-trip-flux
+/// feedback, then evaluate the tuned ladder head-to-head against a
+/// geometric ladder at the same K over `eval_rounds` rounds (equal
+/// sweep budget, same swap seed). The CSV (when named) writes one row
+/// per rung: tuned β, geometric β, measured f(β) and acceptance of the
+/// pair below each rung.
+pub fn fig9a_sk_ladder_tuning<C: TrainableChip>(
+    chip: &mut C,
+    seed: u64,
+    tuner: &TunerParams,
+    eval_rounds: usize,
+    csv_name: Option<&str>,
+) -> Result<TunedLadderReport> {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, seed);
+    let scale = super::program_problem(chip, &topo, &problem)?;
+
+    chip.randomize(seed ^ 0x71BE);
+    let tuned = tune_ladder(chip, &problem, tuner, scale)?;
+
+    let eval = |ladder: BetaLadder| TemperingParams {
+        ladder,
+        rounds: eval_rounds,
+        adapt_every: 0,
+        tuning: LadderTuning::Off,
+        ..tuner.base.clone()
+    };
+    chip.randomize(seed ^ 0x7E39);
+    let tuned_run = temper(chip, &problem, &eval(tuned.ladder.clone()), scale)?;
+    let k = tuned.ladder.len();
+    let geometric = BetaLadder::geometric(tuned.ladder.hottest(), tuned.ladder.coldest(), k);
+    chip.randomize(seed ^ 0x7E39);
+    let geometric_run = temper(chip, &problem, &eval(geometric), scale)?;
+    // tempering leaves per-chain βs pinned; restore a uniform knob
+    chip.set_beta(1.0);
+
+    let report = TunedLadderReport { tuned, tuned_run, geometric_run };
+    if let Some(name) = csv_name {
+        let f = report.tuned_run.flux.f_profile();
+        let acc = report.tuned_run.swaps.acceptance_rates();
+        let rows: Vec<Vec<f64>> = (0..k)
+            .map(|r| {
+                vec![
+                    r as f64,
+                    report.tuned_run.ladder.betas[r],
+                    report.geometric_run.ladder.betas[r],
+                    f[r],
+                    if r > 0 { acc[r - 1] } else { f64::NAN },
+                ]
+            })
+            .collect();
+        write_csv(name, "rung,tuned_beta,geometric_beta,fraction_up,pair_acceptance", &rows)?;
     }
     Ok(report)
 }
@@ -368,6 +476,32 @@ mod tests {
         }
         // swap diagnostics were collected
         assert!(r.temper.swaps.attempts.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn ladder_tuning_report_is_consistent() {
+        let mut chip = software_chip(3, MismatchConfig::default(), 10);
+        let tuner = TunerParams {
+            base: TemperingParams {
+                ladder: BetaLadder::geometric(0.15, 3.0, 8),
+                sweeps_per_round: 2,
+                rounds: 32,
+                record_every: 8,
+                ..Default::default()
+            },
+            max_iters: 4,
+            tol: 0.1,
+            ..Default::default()
+        };
+        let r = fig9a_sk_ladder_tuning(&mut chip, 5, &tuner, 48, None).unwrap();
+        // both arms ran at the same K over the same span and budget
+        assert_eq!(r.tuned_run.ladder.len(), r.geometric_run.ladder.len());
+        assert_eq!(r.tuned_run.total_sweeps, r.geometric_run.total_sweeps);
+        assert!((r.tuned_run.ladder.hottest() - 0.15).abs() < 1e-9);
+        assert!((r.tuned_run.ladder.coldest() - 3.0).abs() < 1e-9);
+        assert!(r.tuned_round_trips_per_sweep().is_finite());
+        assert!(r.geometric_round_trips_per_sweep().is_finite());
+        assert_eq!(r.tuned.f_profile.len(), r.tuned.ladder.len());
     }
 
     #[test]

@@ -20,11 +20,13 @@ pub mod table1;
 pub use fig7::{fig7_gate_learning, GateExperiment, GateReport};
 pub use fig8::{fig8a_bias_sweep, fig8b_adder_learning, BiasSweepReport};
 pub use fig9::{
-    fig9a_sk_anneal, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal, fig9b_maxcut,
-    MaxCutReport, ShardedSkReport, SkAnnealReport, TemperVsAnnealReport,
+    fig9a_sk_anneal, fig9a_sk_ladder_tuning, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal,
+    fig9b_maxcut, MaxCutReport, ShardedSkReport, SkAnnealReport, TemperVsAnnealReport,
+    TunedLadderReport,
 };
 pub use table1::{
-    table1_tts, table1_tts_sharded, table1_tts_tempering, ShardedTtsReport, Table1Report,
+    table1_tts, table1_tts_sharded, table1_tts_tempering, table1_tts_tuned, ShardedTtsReport,
+    Table1Report, TunedTtsReport,
 };
 
 use anyhow::Result;

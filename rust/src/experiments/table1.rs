@@ -5,8 +5,8 @@
 use anyhow::Result;
 
 use crate::annealing::{
-    anneal, temper, tts99, tts99_counts, AnnealParams, BetaLadder, BetaSchedule, TemperingParams,
-    TtsEstimate,
+    anneal, temper, tts99, tts99_counts, tune_ladder, AnnealParams, BetaLadder, BetaSchedule,
+    LadderTuning, TemperingParams, TtsEstimate, TunerParams,
 };
 use crate::chimera::Topology;
 use crate::chip::SAMPLE_TIME_NS;
@@ -14,7 +14,7 @@ use crate::config::MismatchConfig;
 use crate::coordinator::{run_sharded_tempering, ShardedTemperingParams};
 use crate::learning::TrainableChip;
 use crate::metrics::SwapStats;
-use crate::problems::sk;
+use crate::problems::{sk, IsingProblem};
 use crate::sampler::Sampler;
 use crate::util::bench::write_csv;
 
@@ -23,6 +23,7 @@ use crate::util::bench::write_csv;
 pub struct Table1Report {
     /// p(reach planted ground state) per anneal restart.
     pub p_success: f64,
+    /// The derived TTS(99 %) estimate.
     pub tts: TtsEstimate,
     /// Simulated chip time per restart (ns) — 50 ns × sweeps.
     pub chip_time_per_restart_ns: f64,
@@ -30,7 +31,9 @@ pub struct Table1Report {
     pub host_flips_per_sec: f64,
     /// Chip-referred flips per second (440 spins / 50 ns).
     pub chip_flips_per_sec: f64,
+    /// Restarts measured.
     pub restarts: usize,
+    /// Per-replica sweeps per restart.
     pub sweeps_per_restart: usize,
 }
 
@@ -112,33 +115,9 @@ pub fn table1_tts_tempering<C: TrainableChip>(
     let topo = Topology::new();
     let (problem, _hidden, e0) = sk::planted(&topo, seed);
     let scale = super::program_problem(chip, &topo, &problem)?;
-
-    let mut successes = 0usize;
-    let t_host = std::time::Instant::now();
-    for r in 0..repeats {
-        chip.randomize(seed ^ (0x7E44 + r as u64));
-        let mut p = params.clone();
-        p.seed = params.seed.wrapping_add(r as u64);
-        let run = temper(chip, &problem, &p, scale)?;
-        if run.best_energy <= e0 + 1e-6 {
-            successes += 1;
-        }
-    }
+    let (report, _rt_per_sweep) =
+        measure_tts_tempering(chip, &problem, e0, scale, seed, repeats, params)?;
     chip.set_beta(1.0);
-    let host_elapsed = t_host.elapsed().as_secs_f64();
-    let total_sweeps = (repeats * params.total_sweeps()) as f64;
-    let host_flips = total_sweeps * chip.batch() as f64 * crate::N_SPINS as f64;
-
-    let tts = tts99_counts(successes, repeats, params.chip_time_ns());
-    let report = Table1Report {
-        p_success: tts.p_success,
-        tts,
-        chip_time_per_restart_ns: params.chip_time_ns(),
-        host_flips_per_sec: host_flips / host_elapsed,
-        chip_flips_per_sec: crate::N_SPINS as f64 / (SAMPLE_TIME_NS * 1e-9),
-        restarts: repeats,
-        sweeps_per_restart: params.total_sweeps(),
-    };
     if let Some(name) = csv_name {
         write_csv(
             name,
@@ -158,6 +137,7 @@ pub fn table1_tts_tempering<C: TrainableChip>(
 /// [`table1_tts_tempering`] with the ladder sharded across a die array.
 #[derive(Debug, Clone)]
 pub struct ShardedTtsReport {
+    /// The TTS measurement itself.
     pub report: Table1Report,
     /// Swap counters merged over every repeat (global: interior and
     /// boundary pairs alike).
@@ -255,6 +235,137 @@ pub fn table1_tts_sharded(
     })
 }
 
+/// The shared TTS measurement loop over `repeats` tempering runs of an
+/// already-programmed planted instance: per-repeat re-randomize and
+/// swap-seed step, success counting against the planted energy `e0`,
+/// host-flips accounting, and round trips per replica-sweep (the datum
+/// the tuned-ladder arm compares across ladders). Leaves per-chain βs
+/// pinned; callers restore the uniform knob.
+fn measure_tts_tempering<C: TrainableChip>(
+    chip: &mut C,
+    problem: &IsingProblem,
+    e0: f64,
+    scale: f64,
+    seed: u64,
+    repeats: usize,
+    params: &TemperingParams,
+) -> Result<(Table1Report, f64)> {
+    let mut successes = 0usize;
+    let mut round_trips = 0u64;
+    let mut sweeps = 0u64;
+    let t_host = std::time::Instant::now();
+    for r in 0..repeats {
+        chip.randomize(seed ^ (0x7E44 + r as u64));
+        let mut p = params.clone();
+        p.seed = params.seed.wrapping_add(r as u64);
+        let run = temper(chip, problem, &p, scale)?;
+        if run.best_energy <= e0 + 1e-6 {
+            successes += 1;
+        }
+        round_trips += run.swaps.round_trips;
+        sweeps += run.total_sweeps;
+    }
+    let host_elapsed = t_host.elapsed().as_secs_f64();
+    let host_flips = sweeps as f64 * chip.batch() as f64 * crate::N_SPINS as f64;
+    let tts = tts99_counts(successes, repeats, params.chip_time_ns());
+    let report = Table1Report {
+        p_success: tts.p_success,
+        tts,
+        chip_time_per_restart_ns: params.chip_time_ns(),
+        host_flips_per_sec: host_flips / host_elapsed,
+        chip_flips_per_sec: crate::N_SPINS as f64 / (SAMPLE_TIME_NS * 1e-9),
+        restarts: repeats,
+        sweeps_per_restart: params.total_sweeps(),
+    };
+    let rt_per_sweep = if sweeps == 0 { 0.0 } else { round_trips as f64 / sweeps as f64 };
+    Ok((report, rt_per_sweep))
+}
+
+/// The tuned-ladder arm of the Table 1 tempering comparison.
+#[derive(Debug, Clone)]
+pub struct TunedTtsReport {
+    /// TTS measured with the flux-tuned ladder.
+    pub tuned: Table1Report,
+    /// TTS measured with a geometric ladder at the same K and span.
+    pub geometric: Table1Report,
+    /// The tuned ladder itself.
+    pub ladder: BetaLadder,
+    /// Whether the tuner converged within its budget.
+    pub converged: bool,
+    /// Round trips per replica-sweep over the tuned-arm repeats.
+    pub tuned_round_trips_per_sweep: f64,
+    /// Round trips per replica-sweep over the geometric-arm repeats.
+    pub geometric_round_trips_per_sweep: f64,
+}
+
+/// [`table1_tts_tempering`] with a flux-tuned ladder: tune once on the
+/// planted instance ([`crate::annealing::tune_ladder`]), then measure
+/// TTS with the tuned ladder *and* with a geometric ladder at the same
+/// K — the round-trips-per-sweep columns say what the tuning bought
+/// (tuning sweeps are reported by the tuner, not charged to TTS, since
+/// a tuned ladder is reused across every subsequent job).
+pub fn table1_tts_tuned<C: TrainableChip>(
+    chip: &mut C,
+    seed: u64,
+    repeats: usize,
+    tuner: &TunerParams,
+    csv_name: Option<&str>,
+) -> Result<TunedTtsReport> {
+    let topo = Topology::new();
+    let (problem, _hidden, e0) = sk::planted(&topo, seed);
+    let scale = super::program_problem(chip, &topo, &problem)?;
+
+    chip.randomize(seed ^ 0x71BE);
+    let tuned = tune_ladder(chip, &problem, tuner, scale)?;
+    let k = tuned.ladder.len();
+    let geometric = BetaLadder::geometric(tuned.ladder.hottest(), tuned.ladder.coldest(), k);
+
+    let arm_params = |ladder: &BetaLadder| TemperingParams {
+        ladder: ladder.clone(),
+        adapt_every: 0,
+        tuning: LadderTuning::Off,
+        ..tuner.base.clone()
+    };
+    let (tuned_report, tuned_rt) = measure_tts_tempering(
+        chip,
+        &problem,
+        e0,
+        scale,
+        seed,
+        repeats,
+        &arm_params(&tuned.ladder),
+    )?;
+    let (geo_report, geo_rt) = measure_tts_tempering(
+        chip,
+        &problem,
+        e0,
+        scale,
+        seed,
+        repeats,
+        &arm_params(&geometric),
+    )?;
+    chip.set_beta(1.0);
+
+    if let Some(name) = csv_name {
+        write_csv(
+            name,
+            "arm,p_success,tts99_ns,round_trips_per_sweep",
+            &[
+                vec![0.0, tuned_report.p_success, tuned_report.tts.tts99_ns, tuned_rt],
+                vec![1.0, geo_report.p_success, geo_report.tts.tts99_ns, geo_rt],
+            ],
+        )?;
+    }
+    Ok(TunedTtsReport {
+        tuned: tuned_report,
+        geometric: geo_report,
+        ladder: tuned.ladder,
+        converged: tuned.converged,
+        tuned_round_trips_per_sweep: tuned_rt,
+        geometric_round_trips_per_sweep: geo_rt,
+    })
+}
+
 /// Default tempering setup matching [`default_tts_params`]'s per-replica
 /// budget (48 × 4 = 192 sweeps) and β span.
 pub fn default_tts_temper_params() -> TemperingParams {
@@ -262,10 +373,16 @@ pub fn default_tts_temper_params() -> TemperingParams {
         ladder: BetaLadder::geometric(0.15, 5.0, 8),
         sweeps_per_round: 4,
         rounds: 48,
-        adapt_every: 0,
         record_every: 8,
         seed: 0x7715,
+        ..Default::default()
     }
+}
+
+/// Default tuner setup for the Table 1 planted glass: feedback over
+/// [`default_tts_temper_params`]'s β span and per-burst budget.
+pub fn default_tts_tuner_params() -> TunerParams {
+    TunerParams { base: default_tts_temper_params(), ..Default::default() }
 }
 
 /// The static spec constants Table 1 quotes for "This Work".
@@ -338,6 +455,30 @@ mod tests {
         assert_eq!(r.sweeps_per_restart, 48 * 4);
         // K replicas run concurrently: restart time must not scale with K
         assert_eq!(r.chip_time_per_restart_ns, 192.0 * SAMPLE_TIME_NS);
+    }
+
+    #[test]
+    fn tuned_tts_on_planted_glass() {
+        let mut chip = software_chip(9, MismatchConfig::ideal(), 8);
+        let tuner = TunerParams {
+            base: TemperingParams {
+                rounds: 24,
+                ..default_tts_temper_params()
+            },
+            max_iters: 3,
+            tol: 0.1,
+            ..Default::default()
+        };
+        let r = table1_tts_tuned(&mut chip, 3, 4, &tuner, None).unwrap();
+        // both arms measured the same budget at the same K
+        assert_eq!(r.tuned.sweeps_per_restart, r.geometric.sweeps_per_restart);
+        assert_eq!(r.tuned.restarts, 4);
+        assert!(r.ladder.betas.windows(2).all(|w| w[1] > w[0]));
+        assert!(r.tuned_round_trips_per_sweep.is_finite());
+        assert!(r.geometric_round_trips_per_sweep.is_finite());
+        // chip time per repeat must not scale with K (replicas run
+        // concurrently on-die), matching the untuned tempering arm
+        assert_eq!(r.tuned.chip_time_per_restart_ns, 24.0 * 4.0 * SAMPLE_TIME_NS);
     }
 
     #[test]

@@ -27,9 +27,11 @@ use super::TrainableChip;
 /// Trainer hyperparameters.
 #[derive(Debug, Clone, Copy)]
 pub struct CdParams {
+    /// Learning rate of the float shadow weights.
     pub lr: f64,
     /// Per-epoch multiplicative learning-rate decay (1.0 = constant).
     pub lr_decay: f64,
+    /// Training epochs.
     pub epochs: usize,
     /// Thermalization sweeps per phase (CD-k).
     pub k_sweeps: usize,
@@ -58,6 +60,7 @@ impl Default for CdParams {
 /// Per-epoch observables (the Fig 7b/7c series).
 #[derive(Debug, Clone)]
 pub struct EpochStats {
+    /// Epoch index (0-based).
     pub epoch: usize,
     /// KL(target ‖ model) over the visible states.
     pub kl: f64,
@@ -69,8 +72,11 @@ pub struct EpochStats {
 
 /// The CD trainer bound to one gate layout on one chip.
 pub struct CdTrainer {
+    /// The gate layout being learned.
     pub layout: GateLayout,
+    /// The truth table it is learned from.
     pub dataset: Dataset,
+    /// Trainer hyperparameters.
     pub params: CdParams,
     #[allow(dead_code)]
     topo: Topology,
@@ -87,6 +93,7 @@ pub struct CdTrainer {
 }
 
 impl CdTrainer {
+    /// Bind a trainer to a gate layout and dataset (weights start at 0).
     pub fn new(layout: GateLayout, dataset: Dataset, params: CdParams) -> Self {
         assert_eq!(layout.n_visible(), dataset.n_visible(), "layout/dataset arity mismatch");
         let topo = Topology::new();

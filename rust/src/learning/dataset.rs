@@ -3,6 +3,7 @@
 /// A named dataset of visible patterns, uniformly weighted.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Gate name the dataset encodes ("AND", "XOR", ...).
     pub name: &'static str,
     /// Each pattern covers the layout's visible spins in order.
     pub patterns: Vec<Vec<i8>>,
@@ -24,6 +25,7 @@ impl Dataset {
         p
     }
 
+    /// Number of visible spins each pattern covers.
     pub fn n_visible(&self) -> usize {
         self.patterns[0].len()
     }

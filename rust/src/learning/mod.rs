@@ -25,6 +25,7 @@ use crate::sampler::{ChipSampler, Sampler};
 /// trainer needs: the cycle-level chip does it over SPI; the software /
 /// XLA engines via a personality fold.
 pub trait TrainableChip: Sampler {
+    /// Program a full register image (couplings, enables, biases).
     fn program_codes(&mut self, w: &ProgrammedWeights) -> Result<()>;
 }
 
@@ -38,12 +39,16 @@ impl TrainableChip for ChipSampler {
 /// [`TrainableChip`]: programming folds codes through the analog models
 /// and reloads the engine.
 pub struct Hw<S: Sampler> {
+    /// The wrapped sampling engine.
     pub engine: S,
+    /// The die's frozen process-variation sample.
     pub personality: Personality,
+    /// The hardware graph (needed for folding).
     pub topo: Topology,
 }
 
 impl<S: Sampler> Hw<S> {
+    /// Bind an engine to a die personality.
     pub fn new(engine: S, personality: Personality) -> Self {
         Self { engine, personality, topo: Topology::new() }
     }

@@ -35,9 +35,22 @@
 //! phases, bit-identical to the single-die engine in the 1-shard case
 //! (`rust/tests/sharded_equivalence.rs`).
 //!
+//! The β-ladder the tempering modes run on is itself tunable:
+//! [`annealing::tune_ladder`] runs Katzgraber-style round-trip-flux
+//! feedback (measure the up-mover profile in [`metrics::FluxStats`],
+//! re-space with [`annealing::BetaLadder::flux_respaced`], auto-size K)
+//! and the coordinator serves it as
+//! [`coordinator::JobRequest::TuneLadder`]; `docs/TUNING.md` is the
+//! practitioner guide.
+//!
 //! The PJRT path is behind the `xla` cargo feature; the default build
 //! substitutes a stub [`runtime`] so everything else works without an
 //! `xla_extension` install.
+
+// Every public item in this crate is part of the reproduction's API
+// surface; CI builds docs with `RUSTDOCFLAGS="-D warnings"`, so a public
+// item without docs fails the build instead of rotting silently.
+#![warn(missing_docs)]
 
 pub mod analog;
 pub mod annealing;

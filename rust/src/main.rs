@@ -6,6 +6,9 @@
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
 //!              [--shards N] [--barrier-timeout-ms T]
+//!              [--tune off|acceptance|flux] [--adapt-every N]
+//! pchip tune-ladder [--seed S] [--replicas K] [--b0 X] [--b1 X]
+//!              [--iters N] [--floor A] [--ceiling A] [--min-k K] [--max-k K]
 //! pchip maxcut [--native-keep P | --clique-n N]
 //! pchip sweep  [--pbits N] [--points N]           (Fig 8a bias sweep)
 //! pchip tts    [--restarts N]                     (Table 1)
@@ -80,6 +83,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "anneal" => cmd_anneal(&args),
         "temper" => cmd_temper(&args),
+        "tune-ladder" => cmd_tune_ladder(&args),
         "maxcut" => cmd_maxcut(&args),
         "sweep" => cmd_sweep(&args),
         "tts" => cmd_tts(&args),
@@ -100,7 +104,9 @@ fn print_help() {
          train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
          temper  replica-exchange sampling vs annealing, head-to-head\n  \
-         \u{20}       (--shards N shards the ladder across N software dies)\n  \
+         \u{20}       (--shards N shards the ladder across N software dies;\n  \
+         \u{20}        --tune flux re-spaces the ladder in-run by round-trip flux)\n  \
+         tune-ladder  feedback-optimize a β-ladder (round-trip flux, auto-K)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
          sweep   bias-sweep variability (Fig 8a)\n  \
          tts     time-to-solution measurement (Table 1)\n  \
@@ -259,7 +265,7 @@ fn cmd_anneal(args: &Args) -> Result<()> {
 }
 
 fn cmd_temper(args: &Args) -> Result<()> {
-    use pchip::annealing::{BetaLadder, TemperingParams};
+    use pchip::annealing::{BetaLadder, LadderTuning, TemperingParams};
     let cfg = load_config(args)?;
     let b0: f64 = args.get("b0", 0.08)?;
     let b1: f64 = args.get("b1", 4.0)?;
@@ -269,6 +275,15 @@ fn cmd_temper(args: &Args) -> Result<()> {
     let rounds: usize = args.get("rounds", 96)?;
     let sweeps_per_round: usize = args.get("sweeps-per-round", 8)?;
     let seed = args.get("seed", 1u64)?;
+    let tuning = match args.str_or("tune", "acceptance").as_str() {
+        "off" => LadderTuning::Off,
+        "acceptance" => LadderTuning::Acceptance,
+        "flux" => LadderTuning::RoundTripFlux,
+        other => bail!("unknown --tune `{other}` (off|acceptance|flux)"),
+    };
+    // --tune flux turns in-run adaptation on by default; the historical
+    // acceptance signal still waits for an explicit --adapt-every
+    let adapt_default = if tuning == LadderTuning::RoundTripFlux { 16 } else { 0 };
     let anneal_params = AnnealParams {
         schedule: BetaSchedule::Geometric { b0, b1 },
         steps: rounds,
@@ -279,7 +294,8 @@ fn cmd_temper(args: &Args) -> Result<()> {
         ladder: BetaLadder::geometric(b0, b1, replicas),
         sweeps_per_round,
         rounds,
-        adapt_every: args.get("adapt-every", 0)?,
+        adapt_every: args.get("adapt-every", adapt_default)?,
+        tuning,
         record_every: 1,
         seed: args.get("swap-seed", 0x9A77u64)?,
     };
@@ -308,6 +324,12 @@ fn cmd_temper(args: &Args) -> Result<()> {
         report.temper.swaps.mean_acceptance(),
         report.temper.swaps.min_acceptance(),
         report.temper.swaps.round_trips
+    );
+    let f = report.temper.flux.f_profile();
+    println!(
+        "  flux: f(β) {:?}  ({:.4} round trips/sweep)",
+        f.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>(),
+        report.temper.round_trips_per_sweep()
     );
     println!("  traces → results/fig9a_temper_{{anneal,temper}}.csv");
 
@@ -350,6 +372,73 @@ fn cmd_temper(args: &Args) -> Result<()> {
         );
         println!("  traces → results/fig9a_sharded_{{single,sharded}}.csv");
     }
+    Ok(())
+}
+
+fn cmd_tune_ladder(args: &Args) -> Result<()> {
+    use pchip::annealing::{BetaLadder, TemperingParams, TunerParams};
+    let cfg = load_config(args)?;
+    let b0: f64 = args.get("b0", 0.08)?;
+    let b1: f64 = args.get("b1", 4.0)?;
+    let replicas: usize = args.get("replicas", 8)?;
+    anyhow::ensure!(replicas >= 2, "--replicas must be at least 2, got {replicas}");
+    anyhow::ensure!(b0 > 0.0 && b1 > b0, "need 0 < --b0 < --b1, got {b0}..{b1}");
+    let rounds: usize = args.get("rounds", 48)?;
+    let seed = args.get("seed", 1u64)?;
+    let tuner = TunerParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(b0, b1, replicas),
+            sweeps_per_round: args.get("sweeps-per-round", 8)?,
+            rounds,
+            record_every: 8,
+            seed: args.get("swap-seed", 0x9A77u64)?,
+            ..Default::default()
+        },
+        max_iters: args.get("iters", 12)?,
+        tol: args.get("tol", 0.02)?,
+        acceptance_floor: args.get("floor", 0.2)?,
+        redundancy_ceiling: args.get("ceiling", 0.9)?,
+        min_k: args.get("min-k", 4)?,
+        max_k: args.get("max-k", 32)?,
+    };
+    // give the auto-sizer room to grow up to max_k replicas on the die
+    let batch = tuner.max_k.max(replicas).max(8);
+    let eval_rounds: usize = args.get("eval-rounds", rounds * 2)?;
+    let report = with_chip(args, &cfg, batch, |mut chip| {
+        exp::fig9a_sk_ladder_tuning(&mut chip, seed, &tuner, eval_rounds, Some("tune_ladder"))
+    })?;
+    let t = &report.tuned;
+    println!(
+        "tuned ladder for SK seed {seed}: K {} ({}) after {} iteration(s), {} tuning sweeps",
+        t.k(),
+        if t.converged { "converged" } else { "NOT converged" },
+        t.iterations.len(),
+        t.total_sweeps,
+    );
+    for (i, it) in t.iterations.iter().enumerate() {
+        println!(
+            "  iter {i}: K {:>2}  acc min {:.2} mean {:.2}  round trips {:>3}  \
+             shift {:.3}  {:?}",
+            it.k, it.min_acceptance, it.mean_acceptance, it.round_trips, it.max_shift, it.action
+        );
+    }
+    println!(
+        "  β ladder: {:?}",
+        t.ladder.betas.iter().map(|b| (b * 1000.0).round() / 1000.0).collect::<Vec<_>>()
+    );
+    println!(
+        "  f(β): {:?}  (labeled {:.0}%)",
+        t.f_profile.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>(),
+        t.flux.labeled_fraction() * 100.0
+    );
+    println!(
+        "evaluation over {eval_rounds} rounds at K {}: round trips/sweep \
+         tuned {:.4} vs geometric {:.4}",
+        report.tuned_run.ladder.len(),
+        report.tuned_round_trips_per_sweep(),
+        report.geometric_round_trips_per_sweep()
+    );
+    println!("  per-rung series → results/tune_ladder.csv");
     Ok(())
 }
 

@@ -1,0 +1,340 @@
+//! Round-trip flux diagnostics: per-rung occupancy of *up-moving* vs
+//! *down-moving* replicas (Katzgraber-style feedback-optimized parallel
+//! tempering).
+//!
+//! Swap acceptance ([`super::SwapStats`]) tells you whether adjacent
+//! replicas trade places; it does **not** tell you whether replicas
+//! actually diffuse across the whole ladder. The flux view does: label
+//! every replica by the ladder end it touched last — *up* when it left
+//! the hot end (heading toward cold), *down* when it left the cold end —
+//! and count, at every rung, how often its occupant carried each label.
+//!
+//! The fraction of up-movers
+//!
+//! ```text
+//!   f(β_k) = up_k / (up_k + down_k)
+//! ```
+//!
+//! runs from 1 at the hot end to 0 at the cold end. On an optimal ladder
+//! f falls **linearly in rung index**; a plateau in f marks a diffusion
+//! bottleneck (usually a phase transition) where rungs must crowd.
+//! [`crate::annealing::BetaLadder::flux_respaced`] consumes this profile
+//! to re-space the ladder, and [`crate::annealing::tune_ladder`] iterates
+//! that feedback loop to convergence.
+//!
+//! # Example
+//!
+//! ```
+//! use pchip::metrics::{FluxStats, ReplicaDirection};
+//!
+//! let mut flux = FluxStats::new(3);
+//! // rung 0 (hot) saw two up-movers; rung 1 one of each; rung 2 (cold)
+//! // one down-mover and one unlabeled (never reached an end yet)
+//! flux.record(0, ReplicaDirection::Up);
+//! flux.record(0, ReplicaDirection::Up);
+//! flux.record(1, ReplicaDirection::Up);
+//! flux.record(1, ReplicaDirection::Down);
+//! flux.record(2, ReplicaDirection::Down);
+//! flux.record(2, ReplicaDirection::Unlabeled);
+//!
+//! assert_eq!(flux.fraction_up(0), 1.0);
+//! assert_eq!(flux.fraction_up(1), 0.5);
+//! assert_eq!(flux.fraction_up(2), 0.0);
+//! let f = flux.f_profile();
+//! assert!(f.windows(2).all(|w| w[1] <= w[0]), "f falls hot → cold");
+//! ```
+
+use crate::util::json::{obj, Json};
+
+/// Which ladder end a replica visited last — the label that travels with
+/// the replica (its spin state), not with the rung it currently holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaDirection {
+    /// Last touched the hot end: diffusing toward cold.
+    Up,
+    /// Last touched the cold end: diffusing toward hot.
+    Down,
+    /// Has not reached either end yet (early in a run).
+    Unlabeled,
+}
+
+/// Per-rung occupancy counters of labeled replicas for one tempering run
+/// (`len = rungs`, unlike [`super::SwapStats`]' per-*pair* counters).
+#[derive(Debug, Clone, Default)]
+pub struct FluxStats {
+    /// Visits by up-movers per rung.
+    pub up: Vec<u64>,
+    /// Visits by down-movers per rung.
+    pub down: Vec<u64>,
+    /// Visits by replicas that never reached an end yet.
+    pub unlabeled: Vec<u64>,
+}
+
+impl FluxStats {
+    /// Zeroed counters for a `rungs`-rung ladder.
+    pub fn new(rungs: usize) -> Self {
+        assert!(rungs >= 2, "need at least two rungs, got {rungs}");
+        Self { up: vec![0; rungs], down: vec![0; rungs], unlabeled: vec![0; rungs] }
+    }
+
+    /// Number of rungs the counters cover.
+    pub fn rungs(&self) -> usize {
+        self.up.len()
+    }
+
+    /// Record one observation: rung `k`'s occupant carried `direction`.
+    pub fn record(&mut self, k: usize, direction: ReplicaDirection) {
+        match direction {
+            ReplicaDirection::Up => self.up[k] += 1,
+            ReplicaDirection::Down => self.down[k] += 1,
+            ReplicaDirection::Unlabeled => self.unlabeled[k] += 1,
+        }
+    }
+
+    /// Fraction of labeled visits at rung `k` that were up-movers
+    /// (`NaN` when the rung never hosted a labeled replica).
+    pub fn fraction_up(&self, k: usize) -> f64 {
+        let labeled = self.up[k] + self.down[k];
+        if labeled == 0 {
+            f64::NAN
+        } else {
+            self.up[k] as f64 / labeled as f64
+        }
+    }
+
+    /// The measured f(β) profile, sanitized for feedback use: endpoints
+    /// pinned to f = 1 (hot) and f = 0 (cold), interior rungs that never
+    /// hosted a labeled replica filled by linear interpolation between
+    /// their nearest measured neighbours. The raw per-rung values are
+    /// [`FluxStats::fraction_up`].
+    pub fn f_profile(&self) -> Vec<f64> {
+        let k = self.rungs();
+        let mut f: Vec<f64> = (0..k).map(|r| self.fraction_up(r)).collect();
+        f[0] = 1.0;
+        f[k - 1] = 0.0;
+        // fill unmeasured interior rungs by interpolating between the
+        // nearest measured rungs (the endpoints are always measured now)
+        for r in 1..k - 1 {
+            if f[r].is_finite() {
+                continue;
+            }
+            let lo = (0..r).rev().find(|&j| f[j].is_finite()).unwrap_or(0);
+            let hi = (r + 1..k).find(|&j| f[j].is_finite()).unwrap_or(k - 1);
+            let t = (r - lo) as f64 / (hi - lo) as f64;
+            f[r] = f[lo] + t * (f[hi] - f[lo]);
+        }
+        f
+    }
+
+    /// Fraction of all recorded visits that carried a label — low early
+    /// in a run (replicas still diffusing toward their first end), near
+    /// 1 once the ladder is warmed up.
+    pub fn labeled_fraction(&self) -> f64 {
+        let labeled: u64 = self.up.iter().chain(&self.down).sum();
+        let total = labeled + self.unlabeled.iter().sum::<u64>();
+        if total == 0 {
+            0.0
+        } else {
+            labeled as f64 / total as f64
+        }
+    }
+
+    /// Merge another run's counters into this one. Element-wise
+    /// addition, so merging is associative and commutative over shard
+    /// order — the same contract as [`super::SwapStats::merge`], which
+    /// the sharded coordinator relies on.
+    pub fn merge(&mut self, other: &FluxStats) {
+        assert_eq!(self.up.len(), other.up.len(), "rung count mismatch");
+        for k in 0..self.up.len() {
+            self.up[k] += other.up[k];
+            self.down[k] += other.down[k];
+            self.unlabeled[k] += other.unlabeled[k];
+        }
+    }
+
+    /// Copy with only the listed rungs' counters kept (same rung count,
+    /// other rungs zeroed) — the attribution helper the sharded
+    /// coordinator uses to split one global [`FluxStats`] into per-shard
+    /// views whose merge reproduces the original.
+    pub fn restricted(&self, rungs: &[usize]) -> FluxStats {
+        let mut out = FluxStats::new(self.rungs());
+        for &k in rungs {
+            out.up[k] = self.up[k];
+            out.down[k] = self.down[k];
+            out.unlabeled[k] = self.unlabeled[k];
+        }
+        out
+    }
+
+    /// JSON report: the sanitized per-rung f(β) profile (never `NaN` —
+    /// JSON has no encoding for it), up/down counts and the labeled
+    /// fraction.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("fraction_up", Json::from(self.f_profile())),
+            ("up", Json::from(self.up.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+            ("down", Json::from(self.down.iter().map(|&v| v as f64).collect::<Vec<_>>())),
+            ("labeled_fraction", Json::from(self.labeled_fraction())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_bookkeeping() {
+        let mut f = FluxStats::new(4);
+        f.record(0, ReplicaDirection::Up);
+        f.record(0, ReplicaDirection::Up);
+        f.record(1, ReplicaDirection::Up);
+        f.record(1, ReplicaDirection::Down);
+        f.record(2, ReplicaDirection::Unlabeled);
+        assert_eq!(f.fraction_up(0), 1.0);
+        assert_eq!(f.fraction_up(1), 0.5);
+        assert!(f.fraction_up(2).is_nan(), "unlabeled visits carry no flux information");
+        assert!(f.fraction_up(3).is_nan());
+        assert!((f.labeled_fraction() - 4.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f_profile_pins_endpoints_and_fills_gaps() {
+        let mut f = FluxStats::new(5);
+        // only rung 2 measured in the interior: f = 0.5
+        f.record(2, ReplicaDirection::Up);
+        f.record(2, ReplicaDirection::Down);
+        let p = f.f_profile();
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[4], 0.0);
+        assert!((p[2] - 0.5).abs() < 1e-12);
+        // rungs 1 and 3 interpolate between their measured neighbours
+        assert!((p[1] - 0.75).abs() < 1e-12);
+        assert!((p[3] - 0.25).abs() < 1e-12);
+        assert!(p.windows(2).all(|w| w[1] <= w[0]), "profile must fall hot → cold: {p:?}");
+    }
+
+    #[test]
+    fn f_profile_with_no_data_is_linear() {
+        let f = FluxStats::new(5);
+        let p = f.f_profile();
+        for (r, &v) in p.iter().enumerate() {
+            let want = 1.0 - r as f64 / 4.0;
+            assert!((v - want).abs() < 1e-12, "rung {r}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = FluxStats::new(3);
+        a.record(0, ReplicaDirection::Up);
+        a.record(2, ReplicaDirection::Down);
+        let mut b = FluxStats::new(3);
+        b.record(0, ReplicaDirection::Down);
+        b.record(1, ReplicaDirection::Unlabeled);
+        a.merge(&b);
+        assert_eq!(a.up, vec![1, 0, 0]);
+        assert_eq!(a.down, vec![1, 0, 1]);
+        assert_eq!(a.unlabeled, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn restricted_keeps_only_listed_rungs() {
+        let mut f = FluxStats::new(4);
+        for k in 0..4 {
+            f.record(k, ReplicaDirection::Up);
+            f.record(k, ReplicaDirection::Down);
+        }
+        let r = f.restricted(&[1, 2]);
+        assert_eq!(r.up, vec![0, 1, 1, 0]);
+        assert_eq!(r.down, vec![0, 1, 1, 0]);
+        // complementary restrictions merge back to the original
+        let mut merged = f.restricted(&[0, 3]);
+        merged.merge(&r);
+        assert_eq!(merged.up, f.up);
+        assert_eq!(merged.down, f.down);
+        assert_eq!(merged.unlabeled, f.unlabeled);
+    }
+
+    fn random_flux(rng: &mut crate::rng::HostRng, rungs: usize) -> FluxStats {
+        let mut f = FluxStats::new(rungs);
+        for _ in 0..rng.below(50) {
+            let k = rng.below(rungs);
+            let dir = match rng.below(3) {
+                0 => ReplicaDirection::Up,
+                1 => ReplicaDirection::Down,
+                _ => ReplicaDirection::Unlabeled,
+            };
+            f.record(k, dir);
+        }
+        f
+    }
+
+    /// Property: merging per-shard flux is commutative and associative
+    /// over shard order (permutation-safe) — the sharded coordinator may
+    /// collect shards in any completion order.
+    #[test]
+    fn prop_merge_is_associative_and_commutative() {
+        crate::util::prop::check("flux-stats merge", 200, |rng| {
+            let rungs = rng.below(10) + 2;
+            let a = random_flux(rng, rungs);
+            let b = random_flux(rng, rungs);
+            let c = random_flux(rng, rungs);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab.up, ba.up);
+            assert_eq!(ab.down, ba.down);
+            assert_eq!(ab.unlabeled, ba.unlabeled);
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c.up, a_bc.up);
+            assert_eq!(ab_c.down, a_bc.down);
+            assert_eq!(ab_c.unlabeled, a_bc.unlabeled);
+        });
+    }
+
+    /// Property: restricting to the ranges of any partition and merging
+    /// the pieces back (in any order) reproduces the original counters.
+    #[test]
+    fn prop_partition_restriction_merges_back() {
+        crate::util::prop::check("flux-stats restrict/merge", 200, |rng| {
+            let rungs = rng.below(12) + 2;
+            let f = random_flux(rng, rungs);
+            let shards = rng.below(rungs) + 1;
+            let ladder = crate::annealing::BetaLadder::geometric(0.1, 4.0, rungs);
+            let mut pieces: Vec<FluxStats> = ladder
+                .partition(shards)
+                .into_iter()
+                .map(|range| f.restricted(&range.collect::<Vec<_>>()))
+                .collect();
+            // merge in a rotated (permuted) order
+            let rot = rng.below(shards);
+            pieces.rotate_left(rot);
+            let mut merged = FluxStats::new(rungs);
+            for p in &pieces {
+                merged.merge(p);
+            }
+            assert_eq!(merged.up, f.up);
+            assert_eq!(merged.down, f.down);
+            assert_eq!(merged.unlabeled, f.unlabeled);
+        });
+    }
+
+    #[test]
+    fn json_shape_roundtrips() {
+        let mut f = FluxStats::new(3);
+        f.record(1, ReplicaDirection::Up);
+        let j = f.to_json();
+        assert_eq!(j.req("up").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.req("labeled_fraction").unwrap().as_f64().unwrap(), 1.0);
+        // the sanitized profile keeps the output valid JSON (no NaN)
+        let text = j.to_string();
+        crate::util::json::Json::parse(&text).unwrap();
+    }
+}

@@ -12,6 +12,7 @@ pub struct StateHistogram {
 }
 
 impl StateHistogram {
+    /// Empty histogram over the given spins (bit b reads `spins[b]`).
     pub fn new(spins: &[usize]) -> Self {
         assert!(spins.len() <= 20, "histogram over {} spins too large", spins.len());
         Self { spins: spins.to_vec(), counts: vec![0; 1 << spins.len()], total: 0 }
@@ -25,6 +26,7 @@ impl StateHistogram {
             .fold(0usize, |acc, (b, &s)| acc | (((state[s] > 0) as usize) << b))
     }
 
+    /// Record one full chip state (restricted to the observed spins).
     pub fn record(&mut self, state: &[i8]) {
         let idx = self.index_of(state);
         self.counts[idx] += 1;
@@ -42,6 +44,7 @@ impl StateHistogram {
         self.total += 1;
     }
 
+    /// Total states recorded.
     pub fn total(&self) -> u64 {
         self.total
     }
@@ -69,6 +72,7 @@ impl StateHistogram {
         idx.into_iter().take(k).map(|i| (i, p[i])).collect()
     }
 
+    /// Reset all counters.
     pub fn clear(&mut self) {
         self.counts.iter_mut().for_each(|c| *c = 0);
         self.total = 0;

@@ -2,11 +2,13 @@
 //! statistics, energy traces and report writers — everything the paper's
 //! figures are made of.
 
+mod flux;
 mod histogram;
 mod stats;
 mod swap;
 mod trace;
 
+pub use flux::{FluxStats, ReplicaDirection};
 pub use histogram::StateHistogram;
 pub use stats::{corr_edges, kl_divergence, magnetization, success_probability, Welford};
 pub use swap::SwapStats;

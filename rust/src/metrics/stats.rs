@@ -46,6 +46,7 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -53,14 +54,17 @@ impl Welford {
         self.m2 += d * (x - self.mean);
     }
 
+    /// Samples seen so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Unbiased sample variance (0 with fewer than two samples).
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -69,6 +73,7 @@ impl Welford {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }

@@ -25,6 +25,7 @@ pub struct SwapStats {
 }
 
 impl SwapStats {
+    /// Zeroed counters for a `rungs`-rung ladder.
     pub fn new(rungs: usize) -> Self {
         assert!(rungs >= 2, "need at least two rungs, got {rungs}");
         Self { attempts: vec![0; rungs - 1], accepts: vec![0; rungs - 1], round_trips: 0 }
@@ -67,6 +68,20 @@ impl SwapStats {
         self.acceptance_rates().into_iter().fold(f64::INFINITY, f64::min)
     }
 
+    /// Lowest acceptance among pairs that were actually *attempted* —
+    /// the measured bottleneck. Unlike [`SwapStats::min_acceptance`], a
+    /// pair the even/odd parity alternation never reached does not read
+    /// as "fully rejecting". `f64::INFINITY` when no pair was attempted
+    /// at all (a burst too short to measure anything).
+    pub fn min_attempted_acceptance(&self) -> f64 {
+        self.attempts
+            .iter()
+            .zip(self.acceptance_rates())
+            .filter(|(&a, _)| a > 0)
+            .map(|(_, r)| r)
+            .fold(f64::INFINITY, f64::min)
+    }
+
     /// Merge another run's counters into this one (fan-out collection,
     /// per-shard attribution). Element-wise addition, so merging is
     /// associative and commutative over shard order — the property
@@ -96,6 +111,7 @@ impl SwapStats {
         out
     }
 
+    /// JSON report: per-pair acceptance, attempts and round trips.
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("acceptance", Json::from(self.acceptance_rates())),
@@ -120,6 +136,10 @@ mod tests {
         assert_eq!(s.acceptance(2), 0.0);
         assert!((s.mean_acceptance() - 2.0 / 3.0).abs() < 1e-12);
         assert_eq!(s.min_acceptance(), 0.0);
+        // the never-attempted pair 2 drags min_acceptance to 0 but must
+        // not count as a measured bottleneck
+        assert_eq!(s.min_attempted_acceptance(), 0.5);
+        assert_eq!(SwapStats::new(3).min_attempted_acceptance(), f64::INFINITY);
     }
 
     #[test]

@@ -10,14 +10,17 @@ pub struct EnergyTrace {
 }
 
 impl EnergyTrace {
+    /// Append one trace row.
     pub fn push(&mut self, sweep: u64, beta: f64, mean_e: f64, min_e: f64) {
         self.rows.push((sweep, beta, mean_e, min_e));
     }
 
+    /// Min energy of the last recorded row.
     pub fn final_min(&self) -> Option<f64> {
         self.rows.last().map(|r| r.3)
     }
 
+    /// Lowest min-energy across all rows.
     pub fn best(&self) -> Option<f64> {
         self.rows.iter().map(|r| r.3).fold(None, |acc, x| {
             Some(match acc {
@@ -45,6 +48,7 @@ impl EnergyTrace {
         self.rows.iter().map(|&(s, b, me, mn)| vec![s as f64, b, me, mn]).collect()
     }
 
+    /// JSON report of the trace series under `name`.
     pub fn to_json(&self, name: &str) -> Json {
         obj(vec![
             ("name", Json::from(name)),

@@ -19,6 +19,7 @@ pub struct IsingProblem {
 }
 
 impl IsingProblem {
+    /// Empty problem (no couplings, zero biases) with the given tag.
     pub fn new(name: impl Into<String>) -> Self {
         Self { couplings: Vec::new(), h: vec![0.0; N_SPINS], name: name.into() }
     }

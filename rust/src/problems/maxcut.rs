@@ -16,6 +16,7 @@ use super::ising::IsingProblem;
 /// An undirected weighted graph.
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// Vertex count.
     pub n: usize,
     /// (u, v, w) with u < v.
     pub edges: Vec<(usize, usize, f64)>,
@@ -49,6 +50,7 @@ impl Graph {
         Self { n: crate::N_SPINS, edges }
     }
 
+    /// Sum of all edge weights (W — the cut's upper bound).
     pub fn total_weight(&self) -> f64 {
         self.edges.iter().map(|&(_, _, w)| w).sum()
     }

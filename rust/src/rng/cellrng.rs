@@ -18,6 +18,7 @@ pub struct CellRng {
 }
 
 impl CellRng {
+    /// One cell LFSR from a (forced-nonzero) power-up seed.
     pub fn new(seed: u64) -> Self {
         Self { lfsr: Lfsr::new(32, &LFSR32_TAPS, seed) }
     }
@@ -96,6 +97,8 @@ pub struct ChipRngBank {
 }
 
 impl ChipRngBank {
+    /// Whole-chip RNG from one seed: the decimator plus per-cell LFSRs
+    /// with distinct derived power-up states.
     pub fn new(seed: u64) -> Self {
         let cells = (0..N_USED)
             .map(|k| {
@@ -108,6 +111,7 @@ impl ChipRngBank {
         Self { clocks: DecimatedClocks::new(seed), cells }
     }
 
+    /// Number of active cell LFSRs (55 on this die).
     pub fn n_cells(&self) -> usize {
         self.cells.len()
     }

@@ -24,6 +24,8 @@ pub struct DecimatedClocks {
 }
 
 impl DecimatedClocks {
+    /// Decimator seeded from one chip seed (both fast LFSRs derive
+    /// distinct nonzero states from it).
     pub fn new(seed: u64) -> Self {
         // Two independent fast LFSRs; distinct derived seeds.
         let a = Lfsr::new(63, &LFSR63_TAPS, seed ^ 0x9E37_79B9_7F4A_7C15);

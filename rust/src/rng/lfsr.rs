@@ -43,10 +43,12 @@ impl Lfsr {
         }
     }
 
+    /// Current register contents.
     pub fn state(&self) -> u64 {
         self.state
     }
 
+    /// Register width in bits.
     pub fn width(&self) -> u32 {
         self.width
     }

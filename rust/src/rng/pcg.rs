@@ -11,6 +11,7 @@ pub struct HostRng {
 }
 
 impl HostRng {
+    /// Generator with state expanded from `seed` via splitmix64.
     pub fn new(seed: u64) -> Self {
         let mut x = seed;
         let mut next = || {
@@ -23,6 +24,7 @@ impl HostRng {
         Self { s: [next(), next(), next(), next()], spare: None }
     }
 
+    /// Next raw 64-bit output.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let r = (self.s[0].wrapping_add(self.s[3]))

@@ -20,10 +20,12 @@ impl Runtime {
         Ok(Self { client })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Devices the client sees.
     pub fn device_count(&self) -> usize {
         self.client.device_count()
     }
@@ -60,6 +62,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Artifact name this executable was loaded as.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -12,32 +12,46 @@ use crate::util::json::Json;
 /// One artifact's entry in `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct ManifestEntry {
+    /// HLO text file name inside the artifacts directory.
     pub file: String,
+    /// Input tensor shapes, in call order.
     pub inputs: Vec<Vec<usize>>,
+    /// Sweeps the artifact advances per call (gibbs artifacts only).
     pub sweeps: Option<usize>,
 }
 
 /// Global facts about the lowered model.
 #[derive(Debug, Clone)]
 pub struct ManifestMeta {
+    /// Padded spin-vector length (MXU alignment).
     pub n_pad: usize,
+    /// Physical spin count.
     pub n_spins: usize,
+    /// Chimera cell rows.
     pub rows: usize,
+    /// Chimera cell columns.
     pub cols: usize,
+    /// Sweeps per gibbs-artifact call.
     pub s_sweeps: usize,
+    /// Trace stride of the anneal artifact.
     pub s_trace: usize,
+    /// Batch sizes a `gibbs_b{B}` artifact exists for.
     pub gibbs_batches: Vec<usize>,
 }
 
 /// Parsed `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact name → entry.
     pub entries: HashMap<String, ManifestEntry>,
+    /// Global model facts.
     pub meta: ManifestMeta,
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
 }
 
 impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -76,6 +90,7 @@ impl Manifest {
         Ok(Self { entries, meta, dir: dir.to_path_buf() })
     }
 
+    /// Look an artifact's entry up by name.
     pub fn entry(&self, name: &str) -> Result<&ManifestEntry> {
         self.entries.get(name).ok_or_else(|| anyhow!("artifact `{name}` not in manifest"))
     }
@@ -83,6 +98,7 @@ impl Manifest {
 
 /// All compiled executables needed to serve the chip model.
 pub struct ArtifactSet {
+    /// The manifest the set was loaded from.
     pub manifest: Manifest,
     exes: HashMap<String, Executable>,
 }
@@ -110,6 +126,7 @@ impl ArtifactSet {
         Ok(Self { manifest, exes })
     }
 
+    /// A loaded executable by artifact name.
     pub fn get(&self, name: &str) -> Result<&Executable> {
         self.exes.get(name).ok_or_else(|| anyhow!("artifact `{name}` not loaded"))
     }
@@ -128,6 +145,7 @@ impl ArtifactSet {
         Ok((self.get(&format!("gibbs_b{cap}"))?, cap))
     }
 
+    /// Names of the loaded executables (unordered).
     pub fn names(&self) -> Vec<&str> {
         self.exes.keys().map(|s| s.as_str()).collect()
     }

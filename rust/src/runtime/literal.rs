@@ -11,11 +11,14 @@ use anyhow::{anyhow, Result};
 /// through it.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorF32 {
+    /// Shape (row-major).
     pub dims: Vec<usize>,
+    /// Flat element data (`dims.iter().product()` long).
     pub data: Vec<f32>,
 }
 
 impl TensorF32 {
+    /// Tensor from shape + data (lengths must agree).
     pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             dims.iter().product::<usize>(),
@@ -26,24 +29,29 @@ impl TensorF32 {
         Self { dims, data }
     }
 
+    /// All-zero tensor of the given shape.
     pub fn zeros(dims: &[usize]) -> Self {
         let len = dims.iter().product();
         Self { dims: dims.to_vec(), data: vec![0.0; len] }
     }
 
+    /// Constant-filled tensor of the given shape.
     pub fn filled(dims: &[usize], v: f32) -> Self {
         let len = dims.iter().product();
         Self { dims: dims.to_vec(), data: vec![v; len] }
     }
 
+    /// A one-element tensor of shape `[1]`.
     pub fn scalar1(v: f32) -> Self {
         Self { dims: vec![1], data: vec![v] }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }

@@ -24,10 +24,12 @@ impl Runtime {
         bail!(NO_XLA)
     }
 
+    /// Platform name ("stub" — the real client reports PJRT's).
     pub fn platform(&self) -> String {
         "stub".into()
     }
 
+    /// Devices available (always 0 without PJRT).
     pub fn device_count(&self) -> usize {
         0
     }
@@ -45,6 +47,7 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Artifact name this executable was loaded as.
     pub fn name(&self) -> &str {
         &self.name
     }

@@ -96,11 +96,13 @@ pub trait Sampler {
 
 /// Adapter: the cycle-level chip as a batch-1 [`Sampler`].
 pub struct ChipSampler {
+    /// The wrapped cycle-level chip (SPI-programmable).
     pub chip: crate::chip::PbitChip,
     clamps: Vec<(usize, i8)>,
 }
 
 impl ChipSampler {
+    /// Wrap a programmed chip.
     pub fn new(chip: crate::chip::PbitChip) -> Self {
         Self { chip, clamps: Vec::new() }
     }

@@ -18,10 +18,13 @@ pub enum NoiseSource {
 }
 
 impl NoiseSource {
+    /// Chip-accurate source: one decimated-LFSR bank per chain, chain
+    /// `c` seeded with `seed + c`.
     pub fn lfsr(seed: u64, chains: usize) -> Self {
         Self::Lfsr((0..chains).map(|c| ChipRngBank::new(seed.wrapping_add(c as u64))).collect())
     }
 
+    /// Fast host source: one xoshiro generator per chain.
     pub fn host(seed: u64, chains: usize) -> Self {
         Self::Host(
             (0..chains)
@@ -30,6 +33,7 @@ impl NoiseSource {
         )
     }
 
+    /// Number of chains the source feeds.
     pub fn chains(&self) -> usize {
         match self {
             Self::Lfsr(v) => v.len(),
@@ -67,7 +71,9 @@ impl NoiseSource {
 
 /// A single chain's noise generator (borrowed out of [`NoiseSource`]).
 pub enum ChainNoise<'a> {
+    /// Borrowed decimated-LFSR bank.
     Lfsr(&'a mut ChipRngBank),
+    /// Borrowed host PRNG.
     Host(&'a mut HostRng),
 }
 

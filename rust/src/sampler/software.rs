@@ -50,6 +50,8 @@ impl SoftwareSampler {
         Self::with_noise(batch, NoiseSource::lfsr(seed, batch), seed)
     }
 
+    /// Create with an explicit noise source (the host-PRNG ablation of
+    /// `benches/sampler_hotpath.rs` swaps the LFSR bank out here).
     pub fn with_noise(batch: usize, noise: NoiseSource, seed: u64) -> Self {
         assert_eq!(noise.chains(), batch);
         let topo = Topology::new();

@@ -20,16 +20,21 @@ pub const FRAME_BITS: usize = 32;
 /// A decoded SPI frame.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SpiFrame {
+    /// Write (true) vs read (false) transaction.
     pub write: bool,
+    /// 16-bit register address.
     pub addr: u16,
+    /// Payload byte (ignored on reads).
     pub data: u8,
 }
 
 impl SpiFrame {
+    /// A write frame.
     pub fn write(addr: u16, data: u8) -> Self {
         Self { write: true, addr, data }
     }
 
+    /// A read frame.
     pub fn read(addr: u16) -> Self {
         Self { write: false, addr, data: 0 }
     }
@@ -82,10 +87,12 @@ fn crc7(payload25: u32) -> u8 {
 /// wire clocks (the basis for program-time accounting in TTS).
 #[derive(Debug)]
 pub struct SpiBus {
+    /// Wire clocks spent so far (32 per frame).
     pub clocks_elapsed: u64,
 }
 
 impl SpiBus {
+    /// A fresh bus with zeroed clock accounting.
     pub fn new() -> Self {
         Self { clocks_elapsed: 0 }
     }

@@ -19,15 +19,22 @@ use crate::chimera::{Topology, N_SPINS};
 /// Decoded register address.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Address {
+    /// Coupling code of canonical edge `e`.
     Coupling(usize),
+    /// Enable bit of edge `e`.
     Enable(usize),
+    /// Bias code of spin `s`.
     Bias(usize),
+    /// Read-only spin readout word `w` (8 spins per byte).
     Readout(usize),
+    /// Control register (run / anneal-enable bits).
     Control,
+    /// V_temp DAC code (β = code/32).
     VTemp,
 }
 
 impl Address {
+    /// Decode a raw 16-bit address, bounds-checked against the die.
     pub fn decode(addr: u16, n_edges: usize) -> Result<Self> {
         let a = addr as usize;
         Ok(match a {
@@ -64,6 +71,7 @@ impl Address {
         })
     }
 
+    /// The raw 16-bit address of this register.
     pub fn encode(&self) -> u16 {
         match *self {
             Address::Coupling(e) => e as u16,
@@ -79,16 +87,21 @@ impl Address {
 /// The programmable register file plus readout shadow.
 #[derive(Debug, Clone)]
 pub struct RegMap {
+    /// The programmed weight registers (couplings, enables, biases).
     pub weights: ProgrammedWeights,
     /// Latched spin states for readout (updated by the chip model).
     pub spin_shadow: Vec<i8>,
+    /// Control bit 0: sampling runs while set.
     pub run: bool,
+    /// Control bit 1: the on-chip V_temp ramp is enabled.
     pub anneal_enable: bool,
+    /// V_temp DAC code (β = code/32).
     pub vtemp_code: u8,
     n_edges: usize,
 }
 
 impl RegMap {
+    /// Power-on register file for the given topology.
     pub fn new(topo: &Topology) -> Self {
         let n_edges = topo.edges.len();
         Self {
@@ -101,6 +114,7 @@ impl RegMap {
         }
     }
 
+    /// Number of physical couplers (addressable edges).
     pub fn n_edges(&self) -> usize {
         self.n_edges
     }
@@ -110,6 +124,7 @@ impl RegMap {
         self.vtemp_code as f64 / 32.0
     }
 
+    /// Write one register (read-only registers reject).
     pub fn write(&mut self, addr: Address, value: u8) -> Result<()> {
         match addr {
             Address::Coupling(e) => self.weights.j_codes[e] = value as i8,
@@ -125,6 +140,7 @@ impl RegMap {
         Ok(())
     }
 
+    /// Read one register back.
     pub fn read(&self, addr: Address) -> Result<u8> {
         Ok(match addr {
             Address::Coupling(e) => self.weights.j_codes[e] as u8,

@@ -8,17 +8,24 @@ use std::time::{Duration, Instant};
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Label the measurement is reported under.
     pub name: String,
+    /// Timed iterations (after warmup).
     pub iters: usize,
+    /// Mean wall-clock time per iteration.
     pub mean: Duration,
+    /// Median iteration time.
     pub p50: Duration,
+    /// 95th-percentile iteration time.
     pub p95: Duration,
+    /// Fastest iteration.
     pub min: Duration,
     /// Optional derived throughput (unit/s), set via [`Bench::throughput`].
     pub throughput: Option<(f64, &'static str)>,
 }
 
 impl Measurement {
+    /// Print the one-line bench report to stdout.
     pub fn report(&self) {
         let t = |d: Duration| {
             if d.as_secs_f64() >= 1.0 {
@@ -59,6 +66,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Runner with `warmup` untimed and `iters` timed iterations.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Self { warmup, iters, elements: None }
     }

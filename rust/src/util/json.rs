@@ -12,15 +12,22 @@ use anyhow::{anyhow, bail, Result};
 /// A JSON value tree.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always held as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted, for deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -33,6 +40,7 @@ impl Json {
     }
 
     // ---- typed accessors ------------------------------------------------
+    /// Object lookup; `None` for missing keys or non-objects.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -40,10 +48,12 @@ impl Json {
         }
     }
 
+    /// Object lookup that errors on a missing key.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).ok_or_else(|| anyhow!("missing key `{key}`"))
     }
 
+    /// The value as a number, or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(x) => Ok(*x),
@@ -51,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The value as an unsigned integer, or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -59,6 +70,7 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a string, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -66,6 +78,7 @@ impl Json {
         }
     }
 
+    /// The value as an array, or a type error.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(v) => Ok(v),
@@ -73,6 +86,7 @@ impl Json {
         }
     }
 
+    /// The value as an object, or a type error.
     pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Ok(m),
@@ -80,11 +94,13 @@ impl Json {
         }
     }
 
+    /// An array of unsigned integers, or a type error.
     pub fn usize_array(&self) -> Result<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
 
     // ---- writer ---------------------------------------------------------
+    /// Serialize to compact JSON text.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

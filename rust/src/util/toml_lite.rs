@@ -9,12 +9,16 @@ use anyhow::{bail, Result};
 /// Parsed value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A quoted string.
     Str(String),
+    /// A number (TOML-lite does not distinguish int from float).
     Num(f64),
+    /// A `true` / `false` literal.
     Bool(bool),
 }
 
 impl Value {
+    /// The value as a number, or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Value::Num(x) => Ok(*x),
@@ -22,6 +26,7 @@ impl Value {
         }
     }
 
+    /// The value as an unsigned integer, or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         let x = self.as_f64()?;
         if x < 0.0 || x.fract() != 0.0 {
@@ -30,10 +35,12 @@ impl Value {
         Ok(x as usize)
     }
 
+    /// The value as a `u64`, or a type error.
     pub fn as_u64(&self) -> Result<u64> {
         Ok(self.as_usize()? as u64)
     }
 
+    /// The value as a string, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Value::Str(s) => Ok(s),
@@ -41,6 +48,7 @@ impl Value {
         }
     }
 
+    /// The value as a boolean, or a type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Value::Bool(b) => Ok(*b),
@@ -52,10 +60,13 @@ impl Value {
 /// A parsed document: map from "section.key" (root keys have no prefix).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Doc {
+    /// Flattened `section.key` → value map.
     pub entries: BTreeMap<String, Value>,
 }
 
 impl Doc {
+    /// Parse a TOML-lite document (line-oriented; errors carry the
+    /// offending line number).
     pub fn parse(text: &str) -> Result<Doc> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
@@ -90,6 +101,7 @@ impl Doc {
         Ok(Doc { entries })
     }
 
+    /// Look a `section.key` entry up.
     pub fn get(&self, key: &str) -> Option<&Value> {
         self.entries.get(key)
     }
@@ -99,14 +111,17 @@ impl Doc {
         self.get(key).map(|v| v.as_f64()).transpose().map(|o| o.unwrap_or(default))
     }
 
+    /// [`Doc::f64_or`] for unsigned integers.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         self.get(key).map(|v| v.as_usize()).transpose().map(|o| o.unwrap_or(default))
     }
 
+    /// [`Doc::f64_or`] for `u64`s.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
         self.get(key).map(|v| v.as_u64()).transpose().map(|o| o.unwrap_or(default))
     }
 
+    /// Read an optional string key (`None` when absent).
     pub fn str_opt(&self, key: &str) -> Result<Option<String>> {
         self.get(key).map(|v| v.as_str().map(str::to_string)).transpose()
     }

@@ -1,0 +1,130 @@
+//! Statistical validation of the flux-feedback ladder tuner
+//! (`annealing/tuner.rs`) on frustrated 440-spin SK instances.
+//!
+//! The tuner only counts if it (a) converges on a real workload within
+//! its budget and (b) the ladder it returns actually mixes at least as
+//! well as the geometric baseline it started from, at the same K and
+//! sweep budget. Round trips per sweep is the figure of merit — it is
+//! what the Katzgraber feedback provably optimizes, and unlike swap
+//! acceptance it cannot be gamed by replicas ping-ponging between two
+//! rungs.
+//!
+//! Everything here is seeded (LFSR sampler noise, swap RNG, mismatch
+//! personalities), so the suite is deterministic.
+
+use pchip::annealing::{BetaLadder, TemperingParams, TuneAction, TunerParams};
+use pchip::config::MismatchConfig;
+use pchip::experiments::{fig9a_sk_ladder_tuning, software_chip};
+
+fn sk_tuner(seed: u64, k: usize) -> TunerParams {
+    TunerParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, k),
+            sweeps_per_round: 2,
+            rounds: 100,
+            record_every: 25,
+            seed: 0x9A77 ^ seed,
+            ..Default::default()
+        },
+        max_iters: 8,
+        tol: 0.1,
+        // pin K: this suite isolates the re-spacing feedback; the
+        // auto-sizer has its own unit tests in annealing/tuner.rs
+        min_k: k,
+        max_k: k,
+        ..Default::default()
+    }
+}
+
+/// The acceptance-criterion test: on fixed-seed frustrated instances
+/// the tuner converges, and the tuned ladder completes at least as many
+/// hot→cold→hot round trips as the geometric ladder at the same K over
+/// the same evaluation budget (identical sweep counts, swap seeds and
+/// starting states).
+#[test]
+fn tuned_ladder_round_trips_match_or_beat_geometric_at_equal_k() {
+    let mut tuned_trips = 0u64;
+    let mut geo_trips = 0u64;
+    let mut converged = 0usize;
+    let seeds = [1u64, 2, 3];
+    for &seed in &seeds {
+        let mut chip = software_chip(5, MismatchConfig::default(), 8);
+        let r = fig9a_sk_ladder_tuning(&mut chip, seed, &sk_tuner(seed, 8), 400, None).unwrap();
+        // every iteration at pinned K must be a re-space
+        assert!(
+            r.tuned.iterations.iter().all(|i| i.action == TuneAction::Respaced),
+            "K was pinned, yet the tuner resized: {:?}",
+            r.tuned.iterations
+        );
+        assert_eq!(r.tuned_run.ladder.len(), 8);
+        assert_eq!(r.geometric_run.ladder.len(), 8);
+        assert_eq!(
+            r.tuned_run.total_sweeps, r.geometric_run.total_sweeps,
+            "arms must get equal sweep budgets"
+        );
+        if r.tuned.converged {
+            converged += 1;
+        }
+        tuned_trips += r.tuned_run.swaps.round_trips;
+        geo_trips += r.geometric_run.swaps.round_trips;
+    }
+    assert!(
+        converged >= 2,
+        "tuner converged on only {converged}/{} fixed-seed instances",
+        seeds.len()
+    );
+    assert!(
+        tuned_trips >= geo_trips,
+        "flux-tuned ladders completed fewer round trips than geometric \
+         baselines at equal K: {tuned_trips} vs {geo_trips}"
+    );
+    assert!(geo_trips + tuned_trips > 0, "no replica ever completed a round trip");
+}
+
+/// The tuned ladder's f(β) profile must be closer to the ideal linear
+/// profile (the constant-flux optimality condition) than the geometric
+/// baseline's, summed over the same fixed-seed instances.
+#[test]
+fn tuned_f_profile_is_closer_to_linear() {
+    let linear_misfit = |f: &[f64]| -> f64 {
+        let k = f.len();
+        f.iter()
+            .enumerate()
+            .map(|(r, &v)| {
+                let ideal = 1.0 - r as f64 / (k - 1) as f64;
+                (v - ideal).abs()
+            })
+            .sum()
+    };
+    let mut tuned_misfit = 0.0f64;
+    let mut geo_misfit = 0.0f64;
+    for seed in [1u64, 2] {
+        let mut chip = software_chip(5, MismatchConfig::default(), 8);
+        let r = fig9a_sk_ladder_tuning(&mut chip, seed, &sk_tuner(seed, 8), 400, None).unwrap();
+        tuned_misfit += linear_misfit(&r.tuned_run.flux.f_profile());
+        geo_misfit += linear_misfit(&r.geometric_run.flux.f_profile());
+    }
+    assert!(
+        tuned_misfit <= geo_misfit * 1.05,
+        "tuning should flatten the f(β) misfit: tuned {tuned_misfit:.3} vs \
+         geometric {geo_misfit:.3}"
+    );
+}
+
+/// Determinism: the whole tuning + evaluation pipeline must reproduce
+/// itself bit-for-bit from the same seeds — the property every other
+/// statistical bound in this suite stands on.
+#[test]
+fn tuning_pipeline_is_deterministic() {
+    let run = |_: ()| {
+        let mut chip = software_chip(5, MismatchConfig::default(), 8);
+        fig9a_sk_ladder_tuning(&mut chip, 1, &sk_tuner(1, 6), 80, None).unwrap()
+    };
+    let a = run(());
+    let b = run(());
+    assert_eq!(a.tuned.ladder.betas, b.tuned.ladder.betas);
+    assert_eq!(a.tuned.converged, b.tuned.converged);
+    assert_eq!(a.tuned_run.swaps.round_trips, b.tuned_run.swaps.round_trips);
+    assert_eq!(a.geometric_run.swaps.round_trips, b.geometric_run.swaps.round_trips);
+    assert_eq!(a.tuned_run.best_energy, b.tuned_run.best_energy);
+}

@@ -82,6 +82,7 @@ fn one_shard_run_is_bit_identical_to_temper() {
         adapt_every: 10, // exercise ladder adaptation through the core
         record_every: 4,
         seed: 0xBEEF,
+        ..Default::default()
     };
 
     // single-die reference
@@ -157,9 +158,9 @@ fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
             ladder: BetaLadder::geometric(0.25, beta_target, 4),
             sweeps_per_round: 2,
             rounds: 4200,
-            adapt_every: 0,
             record_every: 100,
             seed: 0xB017,
+            ..Default::default()
         },
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
@@ -214,6 +215,31 @@ fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
     assert_eq!(merged.attempts, run.run.swaps.attempts);
     assert_eq!(merged.accepts, run.run.swaps.accepts);
     assert_eq!(merged.round_trips, run.run.swaps.round_trips);
+    // flux attribution: per-shard rung occupancy merges back to the
+    // global profile, and the direction labels rode through the
+    // cross-die boundary swaps with the β-assignments — the hot end
+    // hosts only up-movers, the cold end only down-movers, and the
+    // interior saw labeled traffic from both dies
+    assert_eq!(run.per_shard_flux.len(), 2);
+    let mut fmerged = run.per_shard_flux[0].clone();
+    for f in &run.per_shard_flux[1..] {
+        fmerged.merge(f);
+    }
+    assert_eq!(fmerged.up, run.run.flux.up);
+    assert_eq!(fmerged.down, run.run.flux.down);
+    assert_eq!(fmerged.unlabeled, run.run.flux.unlabeled);
+    assert_eq!(run.run.flux.fraction_up(0), 1.0, "hot end must host up-movers only");
+    assert_eq!(run.run.flux.fraction_up(3), 0.0, "cold end must host down-movers only");
+    assert!(
+        run.run.flux.up[1] > 0 && run.run.flux.down[1] > 0,
+        "rung 1 (die 0) never saw both directions: {:?}/{:?}",
+        run.run.flux.up,
+        run.run.flux.down
+    );
+    assert!(
+        run.run.flux.up[2] > 0 && run.run.flux.down[2] > 0,
+        "rung 2 (die 1) never saw both directions"
+    );
 }
 
 /// A sampler whose sweep phase hangs — the failure the barrier timeout

@@ -72,9 +72,9 @@ fn coldest_rung_marginals_match_exact_boltzmann() {
         ladder: BetaLadder::geometric(0.25, beta_target, 4),
         sweeps_per_round: 2,
         rounds: 4200,
-        adapt_every: 0,
         record_every: 100,
         seed: 0xB017,
+        ..Default::default()
     };
     let burn_in = 200usize;
     let mut sums = vec![0.0f64; support.len()];
@@ -131,9 +131,9 @@ fn coldest_rung_mean_energy_matches_exact() {
         ladder: BetaLadder::geometric(0.25, beta_target, 4),
         sweeps_per_round: 2,
         rounds: 4200,
-        adapt_every: 0,
         record_every: 100,
         seed: 0xE4E7,
+        ..Default::default()
     };
     let mut acc = 0.0f64;
     let mut n = 0usize;
@@ -162,9 +162,9 @@ fn swap_acceptance_in_sane_band_on_sk_instance() {
         ladder: BetaLadder::geometric(0.3, 2.0, 16),
         sweeps_per_round: 2,
         rounds: 200,
-        adapt_every: 0,
         record_every: 20,
         seed: 0x5A5A,
+        ..Default::default()
     };
     let run = temper(&mut sampler, &problem, &params, 1.0).unwrap();
 
@@ -196,9 +196,9 @@ fn adaptation_improves_the_bottleneck_acceptance() {
         ladder,
         sweeps_per_round: 2,
         rounds: 240,
-        adapt_every: 0,
         record_every: 40,
         seed: 0xADA7,
+        ..Default::default()
     };
     let mut s1 = loaded_sampler(&problem, &topo, 8, 41);
     let fixed = temper(&mut s1, &problem, &base, 1.0).unwrap();
