@@ -1,18 +1,45 @@
-//! Fig 8b reproduction: the full-adder probability distribution as
-//! hardware-aware learning proceeds (5 visible + 3 hidden spins in one
-//! Chimera cell; 8 valid states of 32).
+//! Fig 8b reproduction through the **training service**: the full-adder
+//! distribution learned die-parallel (5 visible + 3 hidden spins in one
+//! Chimera cell; 8 valid states of 32), with optional persistent and
+//! tempered negative chains.
 //!
 //! ```bash
-//! cargo run --release --example train_adder
+//! cargo run --release --example train_adder                    # 1 die
+//! cargo run --release --example train_adder -- --dies 3        # 3 dies
+//! cargo run --release --example train_adder -- --dies 3 --pcd --tempered
 //! ```
 
-use pchip::config::MismatchConfig;
-use pchip::experiments::{fig8b_adder_learning, software_chip};
-use pchip::learning::CdParams;
+use pchip::config::Config;
+use pchip::coordinator::{ChipArrayServer, EngineKind, JobResult};
+use pchip::learning::{dataset, CdParams, TemperedNegative, TrainParams};
 
 fn main() -> anyhow::Result<()> {
-    let mismatch = MismatchConfig::default();
-    let params = CdParams {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut dies = 1usize;
+    let mut pcd = false;
+    let mut tempered = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--dies" => {
+                dies = argv
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--dies needs a die count"))?;
+                i += 2;
+            }
+            "--pcd" => {
+                pcd = true;
+                i += 1;
+            }
+            "--tempered" => {
+                tempered = true;
+                i += 1;
+            }
+            other => anyhow::bail!("unknown arg `{other}` (--dies N --pcd --tempered)"),
+        }
+    }
+    let cd = CdParams {
         epochs: 260,
         lr: 0.06,
         lr_decay: 0.995,
@@ -21,37 +48,43 @@ fn main() -> anyhow::Result<()> {
         beta: 2.2,
         clip: 1.0,
     };
-    println!("training FULL_ADDER on a mismatched die ({} epochs)…", params.epochs);
-    let mut chip = software_chip(11, mismatch, 8);
-    let report = fig8b_adder_learning(
-        params,
-        mismatch,
-        &mut chip,
-        vec![0, 30, 120, params.epochs - 1],
-        6000,
-        Some("fig8b_adder"),
-    )?;
-
-    println!("\nFig 8b — adder distribution snapshots (top-10 states, bits Cout|S|Cin|B|A):");
-    for (epoch, dist) in &report.snapshots {
-        let mut idx: Vec<usize> = (0..32).collect();
-        idx.sort_by(|&a, &b| dist[b].partial_cmp(&dist[a]).unwrap());
-        let row: Vec<String> = idx
-            .iter()
-            .take(10)
-            .map(|&s| {
-                let bits: String =
-                    (0..5).rev().map(|b| if (s >> b) & 1 == 1 { '1' } else { '0' }).collect();
-                format!("{bits}:{:.3}", dist[s])
-            })
-            .collect();
-        println!("  epoch {epoch:>3}: {}", row.join("  "));
-    }
-    let valid_states = report.target.iter().filter(|&&t| t > 0.0).count();
-    println!(
-        "\nfinal: KL {:.4}, mass on the {} valid states {:.3}  (csv → results/fig8b_adder.csv)",
-        report.final_kl, valid_states, report.final_valid_mass
+    let mut params = TrainParams::new(
+        pchip::chimera::full_adder_layout(0, 1),
+        dataset::full_adder(),
+        cd,
     );
-    anyhow::ensure!(report.final_valid_mass > 0.5, "adder did not converge enough");
-    Ok(())
+    params.dies = dies;
+    params.pcd = pcd;
+    if tempered {
+        params.tempered = Some(TemperedNegative { beta_hot: 0.6, ..Default::default() });
+    }
+    params.eval_every = 20;
+    params.eval_samples = 6000;
+    println!(
+        "training FULL_ADDER across {dies} die(s){}{} ({} epochs)…",
+        if pcd { ", persistent negative chains" } else { "" },
+        if tempered { ", tempered negative phase" } else { "" },
+        cd.epochs
+    );
+
+    let mut cfg = Config::default();
+    cfg.server.chips = dies;
+    let srv = ChipArrayServer::start(&cfg, EngineKind::Software)?;
+    let (ticket, progress) = srv.submit_training(params)?;
+    println!("{:>6} {:>10} {:>10} {:>12}", "epoch", "KL", "corr_gap", "valid_mass");
+    for e in progress {
+        println!("{:>6} {:>10.4} {:>10.4} {:>12.3}", e.epoch, e.kl, e.corr_gap, e.valid_mass);
+    }
+    match ticket.wait() {
+        JobResult::Trained { final_kl, final_valid_mass, checkpoint, dies, .. } => {
+            println!(
+                "\nfinal: KL {final_kl:.4}, mass on the 8 valid states {final_valid_mass:.3} \
+                 (dies {dies:?}, {} epochs applied)",
+                checkpoint.epochs_done
+            );
+            anyhow::ensure!(final_valid_mass > 0.5, "adder did not converge enough");
+            Ok(())
+        }
+        other => anyhow::bail!("training failed: {other:?}"),
+    }
 }

@@ -1,67 +1,115 @@
-//! Fig 7 reproduction: in-situ hardware-aware CD learning of an AND gate
-//! on a mismatched die.
-//!
-//! Prints the Fig 7b distribution snapshots (probability of each visible
-//! state as learning proceeds) and the Fig 7c correlation-gap series,
-//! and writes both to `results/`.
+//! Fig 7 reproduction through the **training service**: in-situ
+//! hardware-aware CD learning of a logic gate, served by the chip-array
+//! coordinator (single die by default, `--dies N` to fan the epoch's
+//! phase work-units across N mismatched dies).
 //!
 //! ```bash
-//! cargo run --release --example train_gate            # default corner
-//! PCHIP_GATE=xor cargo run --release --example train_gate
+//! cargo run --release --example train_gate                  # AND, 1 die
+//! cargo run --release --example train_gate -- --gate xor --dies 2
+//! cargo run --release --example train_gate -- --dies 3 --pcd
+//! PCHIP_GATE=or cargo run --release --example train_gate    # env still works
 //! ```
 
-use pchip::experiments::{fig7_gate_learning, software_chip, GateExperiment};
-use pchip::learning::dataset;
+use pchip::analog::Personality;
+use pchip::chimera::Topology;
+use pchip::config::Config;
+use pchip::coordinator::{ChipArrayServer, EngineKind, JobResult};
+use pchip::learning::{dataset, CdParams, TrainParams};
+use pchip::sampler::{Sampler, SoftwareSampler};
 
 fn main() -> anyhow::Result<()> {
-    let gate = std::env::var("PCHIP_GATE").unwrap_or_else(|_| "and".into());
-    let mut exp = GateExperiment::and_default();
-    exp.dataset = match gate.as_str() {
+    // tiny arg scan: --gate NAME, --dies N, --pcd
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut gate = std::env::var("PCHIP_GATE").unwrap_or_else(|_| "and".into());
+    let mut dies = 1usize;
+    let mut pcd = false;
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--gate" => {
+                gate = argv.get(i + 1).cloned().unwrap_or_default();
+                i += 2;
+            }
+            "--dies" => {
+                dies = argv
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| anyhow::anyhow!("--dies needs a die count"))?;
+                i += 2;
+            }
+            "--pcd" => {
+                pcd = true;
+                i += 1;
+            }
+            other => anyhow::bail!("unknown arg `{other}` (--gate NAME --dies N --pcd)"),
+        }
+    }
+    let data = match gate.as_str() {
         "and" => dataset::and_gate(),
         "or" => dataset::or_gate(),
         "xor" => dataset::xor_gate(),
-        g => anyhow::bail!("PCHIP_GATE={g}? (and|or|xor)"),
+        g => anyhow::bail!("gate {g}? (and|or|xor)"),
     };
+
+    let mut cfg = Config::default();
+    cfg.server.chips = dies;
+    let mut params =
+        TrainParams::new(pchip::chimera::and_gate_layout(0, 0), data, CdParams::default());
+    params.dies = dies;
+    params.pcd = pcd;
+    params.eval_every = 5;
+    params.eval_samples = 4000;
     println!(
-        "training {} on a mismatched die (σ_dac {:.2}, σ_mul {:.2}, σ_beta {:.2})",
-        exp.dataset.name,
-        exp.mismatch.sigma_dac,
-        exp.mismatch.sigma_mul,
-        exp.mismatch.sigma_beta
+        "training {} across {dies} die(s){} (σ_dac {:.2}, σ_mul {:.2}, σ_beta {:.2})",
+        params.dataset.name,
+        if pcd { " with persistent negative chains" } else { "" },
+        cfg.mismatch.sigma_dac,
+        cfg.mismatch.sigma_mul,
+        cfg.mismatch.sigma_beta
     );
 
-    let mut chip = software_chip(exp.chip_seed, exp.mismatch, 8);
-    let report = fig7_gate_learning(&exp, &mut chip, Some(&format!("fig7_{gate}")))?;
-
-    // Fig 7b: distribution snapshots
-    println!("\nFig 7b — visible distribution vs epoch (states as OUT|B|A bits):");
-    print!("{:>8}", "state");
-    for (e, _) in &report.snapshots {
-        print!("{:>10}", format!("ep{e}"));
-    }
-    println!("{:>10}", "target");
-    for s in 0..report.target.len() {
-        let bits: String =
-            (0..3).rev().map(|b| if (s >> b) & 1 == 1 { '1' } else { '0' }).collect();
-        print!("{bits:>8}");
-        for (_, dist) in &report.snapshots {
-            print!("{:>10.3}", dist[s]);
-        }
-        println!("{:>10.3}", report.target[s]);
-    }
-
-    // Fig 7c: correlation convergence
-    println!("\nFig 7c — learning convergence:");
+    // the coordinator path: one gang job, each die sampling its shard
+    // of every epoch through its own personality
+    let srv = ChipArrayServer::start(&cfg, EngineKind::Software)?;
+    let (ticket, progress) = srv.submit_training(params)?;
+    println!("\nFig 7c — learning convergence (streamed from the coordinator):");
     println!("{:>6} {:>10} {:>10} {:>12}", "epoch", "KL", "corr_gap", "valid_mass");
-    for e in &report.epochs {
+    for e in progress {
         println!("{:>6} {:>10.4} {:>10.4} {:>12.3}", e.epoch, e.kl, e.corr_gap, e.valid_mass);
     }
-    println!(
-        "\nfinal: KL {:.4}, valid mass {:.3}  (csv → results/fig7_{gate}.csv)",
-        report.final_kl, report.final_valid_mass
-    );
+    let (codes, final_kl, final_valid) = match ticket.wait() {
+        JobResult::Trained { codes, final_kl, final_valid_mass, .. } => {
+            (codes, final_kl, final_valid_mass)
+        }
+        other => anyhow::bail!("training failed: {other:?}"),
+    };
+
+    // Fig 7b flavor: program the learned register image into a fresh
+    // die and measure the visible distribution it realizes.
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, cfg.server.seed, cfg.mismatch);
+    let mut chip = SoftwareSampler::new(8, cfg.server.seed);
+    chip.load(&personality.fold(&topo, &codes));
+    chip.set_beta(2.0);
+    chip.sweeps(64)?;
+    let layout = pchip::chimera::and_gate_layout(0, 0);
+    let mut hist = pchip::metrics::StateHistogram::new(&layout.visible);
+    while hist.total() < 4000 {
+        chip.sweeps(2)?;
+        for st in chip.states() {
+            hist.record(&st);
+        }
+    }
+    println!("\nFig 7b — learned visible distribution (states as OUT|B|A bits):");
+    let p = hist.probabilities();
+    for (s, prob) in p.iter().enumerate() {
+        let bits: String =
+            (0..3).rev().map(|b| if (s >> b) & 1 == 1 { '1' } else { '0' }).collect();
+        println!("{bits:>8} {prob:>8.3}");
+    }
+    println!("\nfinal: KL {final_kl:.4}, valid mass {final_valid:.3}");
     // The paper's claim: learning *through* the hardware absorbs the
     // mismatch — the gate works although nothing was calibrated.
-    anyhow::ensure!(report.final_valid_mass > 0.8, "gate did not converge");
+    anyhow::ensure!(final_valid > 0.8, "gate did not converge");
     Ok(())
 }

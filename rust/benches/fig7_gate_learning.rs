@@ -8,9 +8,10 @@
 
 use pchip::config::MismatchConfig;
 use pchip::experiments::{fig7_gate_learning, software_chip, GateExperiment};
-use pchip::learning::TrainableChip;
+use pchip::learning::{run_training, CdParams, TrainParams, TrainableChip};
 use pchip::sampler::Sampler;
 use pchip::util::bench::{write_csv, Bench};
+use pchip::util::json::{obj, Json};
 
 fn main() -> anyhow::Result<()> {
     println!("=== fig7: AND-gate CD learning across mismatch corners ===");
@@ -67,5 +68,62 @@ fn main() -> anyhow::Result<()> {
     Bench::new(2, 10).run("cd_epoch(and, batch=8, cd-4)", || {
         trainer.epoch(&mut chip).unwrap();
     });
+
+    // training-service scaling arms: the same AND-gate budget driven
+    // die-parallel; records the perf trajectory in BENCH_train.json
+    println!("\n=== training service: die-parallel CD at equal sample budget ===");
+    let cd = CdParams {
+        epochs: 40,
+        lr: 0.12,
+        lr_decay: 1.0,
+        k_sweeps: 3,
+        samples_per_pattern: 16,
+        ..CdParams::default()
+    };
+    let batch = 8usize;
+    let mut arms = Vec::new();
+    for dies in [1usize, 2, 4] {
+        let layout = GateExperiment::and_default().layout;
+        let mut params = TrainParams::new(layout, pchip::learning::dataset::and_gate(), cd);
+        params.dies = dies;
+        params.eval_every = cd.epochs; // evaluate only at the end
+        params.eval_samples = 2000;
+        let chips: Vec<_> = (0..dies)
+            .map(|k| software_chip(7 + k as u64, MismatchConfig::default(), batch))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let run = run_training(chips, &params)?;
+        let secs = t0.elapsed().as_secs_f64();
+        let n_patterns = params.dataset.patterns.len();
+        // per epoch: (P patterns + 1 negative budget) × S sample sweeps
+        // × batch states — identical for every die count
+        let samples = (cd.epochs * (n_patterns + 1) * cd.samples_per_pattern * batch) as f64;
+        let epochs_per_sec = cd.epochs as f64 / secs;
+        let samples_per_sec_per_die = samples / secs / dies as f64;
+        println!(
+            "{dies:>2} die(s): {epochs_per_sec:>6.2} epochs/s  {samples_per_sec_per_die:>10.0} \
+             samples/s/die  final KL {:.4}",
+            run.final_kl
+        );
+        arms.push(obj(vec![
+            ("dies", Json::from(dies)),
+            ("epochs_per_sec", Json::from(epochs_per_sec)),
+            ("samples_per_sec_per_die", Json::from(samples_per_sec_per_die)),
+            ("final_kl", Json::from(run.final_kl)),
+            ("final_valid_mass", Json::from(run.final_valid_mass)),
+        ]));
+    }
+    let report = obj(vec![
+        ("bench", Json::from("fig7_train_service")),
+        ("epochs", Json::from(cd.epochs)),
+        ("samples_per_pattern", Json::from(cd.samples_per_pattern)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join("BENCH_train.json");
+    std::fs::write(&out, report.to_string())?;
+    println!("perf record → {}", out.display());
     Ok(())
 }

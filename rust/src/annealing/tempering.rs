@@ -389,6 +389,13 @@ impl TemperingCore {
         &self.flux
     }
 
+    /// The current ladder (moves from the input when `adapt_every > 0`)
+    /// — long-lived embedders like the training service's tempered
+    /// negative phase read it for diagnostics between rounds.
+    pub fn ladder(&self) -> &BetaLadder {
+        &self.ladder
+    }
+
     /// Finalize into a [`TemperingRun`].
     pub fn into_run(self) -> TemperingRun {
         TemperingRun {

@@ -20,7 +20,9 @@ pub struct QueuedJob {
 /// A dispatchable batch: same problem, total chains ≤ budget.
 #[derive(Debug)]
 pub struct Batch {
-    /// Problem handle every job in the batch shares.
+    /// Problem handle every job in the batch shares (0 — never a real
+    /// handle, they start at 1 — for problem-less training jobs, which
+    /// always batch alone).
     pub problem: u64,
     /// The batched jobs, in FIFO order.
     pub jobs: Vec<QueuedJob>,
@@ -84,7 +86,7 @@ impl Batcher {
     /// dispatch alone.
     pub fn pop_batch(&mut self) -> Option<Batch> {
         let head = self.queue.pop_front()?;
-        let problem = head.request.problem();
+        let problem = head.request.problem().unwrap_or(0);
         let mut chains = head.request.chains();
         let mut jobs = vec![head];
         if chains < self.max_chains {
@@ -92,7 +94,7 @@ impl Batcher {
             while i < self.queue.len() {
                 let cand = &self.queue[i];
                 let c = cand.request.chains();
-                if cand.request.problem() == problem
+                if cand.request.problem() == Some(problem)
                     && c != usize::MAX
                     && chains.saturating_add(c) <= self.max_chains
                 {
@@ -233,7 +235,10 @@ mod tests {
                     }
                 } else if let Some(batch) = b.pop_batch() {
                     // single problem per batch
-                    assert!(batch.jobs.iter().all(|j| j.request.problem() == batch.problem));
+                    assert!(batch
+                        .jobs
+                        .iter()
+                        .all(|j| j.request.problem() == Some(batch.problem)));
                     // budget: sample-only batches fit max_chains
                     if batch.jobs.iter().all(|j| j.request.chains() != usize::MAX) {
                         assert!(batch.chains() <= max_chains.max(batch.jobs[0].request.chains()));
@@ -264,7 +269,7 @@ mod tests {
             let mut seen: std::collections::HashMap<u64, u64> = Default::default();
             while let Some(batch) = b.pop_batch() {
                 for j in &batch.jobs {
-                    let p = j.request.problem();
+                    let p = j.request.problem().expect("sample jobs carry a handle");
                     if let Some(&prev) = seen.get(&p) {
                         assert!(j.id > prev, "problem {p}: {} after {}", j.id, prev);
                     }

@@ -9,7 +9,9 @@
 use std::sync::mpsc;
 use std::time::Duration;
 
+use crate::analog::ProgrammedWeights;
 use crate::annealing::{AnnealParams, BetaLadder, TemperingParams, TunerParams};
+use crate::learning::{EpochStats, TrainCheckpoint, TrainParams};
 
 use super::sharded::ShardedTemperingParams;
 
@@ -44,17 +46,51 @@ pub enum JobRequest {
     /// [`JobRequest::ShardedTempering`] jobs on the same problem.
     /// Requires a per-chain-β engine, like `Tempering`.
     TuneLadder { problem: ProblemHandle, params: TunerParams },
+    /// A full hardware-aware training run
+    /// ([`crate::learning::run_training`] through the array): a gang
+    /// job seating `params.dies` dies, each running its pattern shard /
+    /// negative-chain share of every epoch through its *own*
+    /// personality. Training jobs learn their own register image, so
+    /// they carry no registered problem handle; the dies they ran on
+    /// are reprogrammed by whatever job claims them next. `progress`,
+    /// when set, streams each recorded [`EpochStats`] as it happens
+    /// (see [`ChipArrayServer::submit_training`]).
+    ///
+    /// [`ChipArrayServer::submit_training`]: crate::coordinator::ChipArrayServer::submit_training
+    Train {
+        /// The distributed run's configuration.
+        params: TrainParams,
+        /// Optional live per-epoch stream.
+        progress: Option<mpsc::Sender<EpochStats>>,
+    },
+    /// Resume a checkpointed training run for `epochs` more epochs —
+    /// the incremental form of [`JobRequest::Train`] (submit, inspect
+    /// the returned checkpoint, submit again), answered by the same
+    /// [`JobResult::Trained`].
+    TrainEpoch {
+        /// The distributed run's configuration.
+        params: TrainParams,
+        /// Where to resume from (shadow weights, lr schedule, chains).
+        checkpoint: TrainCheckpoint,
+        /// How many additional epochs to run.
+        epochs: usize,
+        /// Optional live per-epoch stream.
+        progress: Option<mpsc::Sender<EpochStats>>,
+    },
 }
 
 impl JobRequest {
-    /// Handle of the registered problem the job runs against.
-    pub fn problem(&self) -> ProblemHandle {
+    /// Handle of the registered problem the job runs against — `None`
+    /// for training jobs, which learn their own register image instead
+    /// of sampling a registered one.
+    pub fn problem(&self) -> Option<ProblemHandle> {
         match *self {
-            JobRequest::Sample { problem, .. } => problem,
-            JobRequest::Anneal { problem, .. } => problem,
-            JobRequest::Tempering { problem, .. } => problem,
-            JobRequest::ShardedTempering { problem, .. } => problem,
-            JobRequest::TuneLadder { problem, .. } => problem,
+            JobRequest::Sample { problem, .. } => Some(problem),
+            JobRequest::Anneal { problem, .. } => Some(problem),
+            JobRequest::Tempering { problem, .. } => Some(problem),
+            JobRequest::ShardedTempering { problem, .. } => Some(problem),
+            JobRequest::TuneLadder { problem, .. } => Some(problem),
+            JobRequest::Train { .. } | JobRequest::TrainEpoch { .. } => None,
         }
     }
 
@@ -63,12 +99,14 @@ impl JobRequest {
         match *self {
             JobRequest::Sample { chains, .. } => chains.max(1),
             // anneals, tempering runs and ladder tuning occupy the whole
-            // die; sharded tempering occupies several, but still batches
-            // alone
+            // die; sharded tempering and training occupy several, but
+            // still batch alone
             JobRequest::Anneal { .. }
             | JobRequest::Tempering { .. }
             | JobRequest::ShardedTempering { .. }
-            | JobRequest::TuneLadder { .. } => usize::MAX,
+            | JobRequest::TuneLadder { .. }
+            | JobRequest::Train { .. }
+            | JobRequest::TrainEpoch { .. } => usize::MAX,
         }
     }
 }
@@ -175,6 +213,24 @@ pub enum JobResult {
         /// Host wall-clock latency.
         latency: Duration,
     },
+    /// Answer to [`JobRequest::Train`] / [`JobRequest::TrainEpoch`].
+    Trained {
+        /// Per-epoch observables at the evaluation cadence.
+        stats: Vec<EpochStats>,
+        /// Final shadow state + persistent chains — feed it into a
+        /// [`JobRequest::TrainEpoch`] to continue the run.
+        checkpoint: TrainCheckpoint,
+        /// The learned 8-bit register image.
+        codes: ProgrammedWeights,
+        /// KL(target ‖ model) after the last epoch.
+        final_kl: f64,
+        /// Probability mass on valid truth-table states.
+        final_valid_mass: f64,
+        /// Which dies were seated, in shard order.
+        dies: Vec<usize>,
+        /// Host wall-clock latency.
+        latency: Duration,
+    },
     /// The job failed; the string is the diagnostic.
     Failed(String),
 }
@@ -210,13 +266,23 @@ mod tests {
         assert_eq!(s.chains(), 1, "zero-chain request normalizes to 1");
         let a = JobRequest::Anneal { problem: 2, params: AnnealParams::default() };
         assert_eq!(a.chains(), usize::MAX);
-        assert_eq!(a.problem(), 2);
+        assert_eq!(a.problem(), Some(2));
         let t = JobRequest::Tempering { problem: 3, params: TemperingParams::default() };
         assert_eq!(t.chains(), usize::MAX, "tempering occupies the whole die");
-        assert_eq!(t.problem(), 3);
+        assert_eq!(t.problem(), Some(3));
         let l = JobRequest::TuneLadder { problem: 5, params: TunerParams::default() };
         assert_eq!(l.chains(), usize::MAX, "ladder tuning occupies the whole die");
-        assert_eq!(l.problem(), 5);
+        assert_eq!(l.problem(), Some(5));
+        let tr = JobRequest::Train {
+            params: crate::learning::TrainParams::new(
+                crate::chimera::and_gate_layout(0, 0),
+                crate::learning::dataset::and_gate(),
+                crate::learning::CdParams::default(),
+            ),
+            progress: None,
+        };
+        assert_eq!(tr.chains(), usize::MAX, "training occupies its gang's dies");
+        assert_eq!(tr.problem(), None, "training carries no registered problem");
     }
 
     #[test]

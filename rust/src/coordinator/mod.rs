@@ -66,6 +66,17 @@
 //! client feeds into subsequent tempering / sharded-tempering jobs on
 //! the same problem (`docs/TUNING.md`).
 //!
+//! **Training** is a gang workload too: [`JobRequest::Train`] /
+//! [`JobRequest::TrainEpoch`] seat `dies` idle dies and run the
+//! die-parallel contrastive-divergence service
+//! ([`crate::learning::service`]) — pattern shards and negative-chain
+//! shares per die, an exact [`crate::learning::GradAccum`] all-reduce
+//! per epoch, per-die personality folds of the updated codes — and
+//! answer [`JobResult::Trained`] with the learned register image, the
+//! epoch stats and a resume checkpoint (`docs/TRAINING.md`). Training
+//! jobs carry no registered problem handle (they learn their own
+//! codes); the dies they ran on are reprogrammed by the next tenant.
+//!
 //! # Example
 //!
 //! Serve a ±J glass from a two-die array and read back samples:

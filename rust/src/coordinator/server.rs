@@ -12,7 +12,8 @@ use crate::analog::{Personality, ProgrammedWeights};
 use crate::annealing::{self, TemperingParams};
 use crate::chimera::Topology;
 use crate::config::{Config, MismatchConfig};
-use crate::learning::{Hw, TrainableChip};
+use crate::learning::service::{self, TrainCmd, TrainMsg};
+use crate::learning::{EpochStats, Hw, TrainCheckpoint, TrainParams, TrainableChip};
 use crate::problems::IsingProblem;
 use crate::sampler::{SoftwareSampler, XlaSampler};
 
@@ -119,6 +120,18 @@ enum WorkerMsg {
         cmd_rx: mpsc::Receiver<sharded::ShardCmd>,
         out_tx: mpsc::Sender<sharded::ShardMsg>,
     },
+    /// Seat this die as one shard of a training gang: randomize the
+    /// chains deterministically, then follow the training coordinator's
+    /// epoch protocol (the trainer programs its own codes — there is no
+    /// registered problem spec). The worker reports `Done` when it
+    /// leaves the seat.
+    TrainSeat {
+        shard: usize,
+        params: Arc<TrainParams>,
+        randomize_seed: u64,
+        cmd_rx: mpsc::Receiver<TrainCmd>,
+        out_tx: mpsc::Sender<TrainMsg>,
+    },
     Shutdown,
 }
 
@@ -203,9 +216,11 @@ impl ChipArrayServer {
     /// Submit a job; blocks only when the bounded queue is full
     /// (backpressure).
     pub fn submit(&self, request: JobRequest) -> Result<JobTicket> {
-        let spec_exists = self.problems.lock().unwrap().contains_key(&request.problem());
-        if !spec_exists {
-            return Err(anyhow!("unknown problem handle {}", request.problem()));
+        if let Some(h) = request.problem() {
+            let spec_exists = self.problems.lock().unwrap().contains_key(&h);
+            if !spec_exists {
+                return Err(anyhow!("unknown problem handle {h}"));
+            }
         }
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
@@ -294,6 +309,39 @@ impl ChipArrayServer {
         self.run(JobRequest::ShardedTempering { problem, params: params.clone() })
     }
 
+    /// Run a full hardware-aware training job across `params.dies`
+    /// dies (see [`crate::learning::service`] for the protocol).
+    /// Convenience for submit-and-wait on a [`JobRequest::Train`] job.
+    pub fn run_training(&self, params: TrainParams) -> Result<JobResult> {
+        self.run(JobRequest::Train { params, progress: None })
+    }
+
+    /// Submit a training job and additionally get a live per-epoch
+    /// stream: every recorded [`EpochStats`] is sent on the returned
+    /// channel as the run produces it, ending (by sender drop) when the
+    /// job finishes. The [`JobTicket`] still yields the final
+    /// [`JobResult::Trained`].
+    pub fn submit_training(
+        &self,
+        params: TrainParams,
+    ) -> Result<(JobTicket, mpsc::Receiver<EpochStats>)> {
+        let (tx, rx) = mpsc::channel();
+        let ticket = self.submit(JobRequest::Train { params, progress: Some(tx) })?;
+        Ok((ticket, rx))
+    }
+
+    /// Resume a checkpointed training run for `epochs` more epochs.
+    /// Convenience for submit-and-wait on a [`JobRequest::TrainEpoch`]
+    /// job.
+    pub fn run_training_resumed(
+        &self,
+        params: TrainParams,
+        checkpoint: TrainCheckpoint,
+        epochs: usize,
+    ) -> Result<JobResult> {
+        self.run(JobRequest::TrainEpoch { params, checkpoint, epochs, progress: None })
+    }
+
     /// Aggregate serving metrics.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
@@ -369,6 +417,36 @@ fn dispatcher_main(
             let idle = (0..n).find(|&w| router.load(w) == 0);
             let (Some(_), false) = (idle, batcher.is_empty()) else { break };
             let Some(batch) = batcher.pop_batch() else { break };
+            // Training gangs carry no registered problem: handle them
+            // before the spec lookup. Like sharded tempering they need
+            // `dies` idle dies at once and defer (head-of-line) until
+            // the gang can be seated.
+            if let Some(dies) = train_dies(&batch) {
+                let job = batch.jobs.into_iter().next().expect("singleton batch");
+                let (reply, t0) = replies.remove(&job.id).expect("reply registered");
+                if dies == 0 || dies > n {
+                    stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = reply.send(JobResult::Failed(format!(
+                        "training wants {dies} dies but the array has {n}"
+                    )));
+                    continue;
+                }
+                // claim the gang under a pseudo-handle outside the real
+                // handle space: the dies end up holding the trainer's
+                // codes, so any later job must reprogram them
+                match router.route_gang(train_gang_key(job.id), dies) {
+                    Some(gang) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        dispatch_train(job, gang, &worker_txs, reply, t0, &stats);
+                    }
+                    None => {
+                        replies.insert(job.id, (reply, t0));
+                        batcher.unpop(Batch { problem: 0, jobs: vec![job] });
+                        break;
+                    }
+                }
+                continue;
+            }
             let spec = problems.lock().unwrap().get(&batch.problem).cloned();
             let Some(spec) = spec else {
                 for j in &batch.jobs {
@@ -383,6 +461,7 @@ fn dispatcher_main(
             // once; defer the batch (head-of-line — a gang must not
             // starve behind a trickle of singles) until they free up.
             if let Some(shards) = sharded_shards(&batch) {
+                let problem = batch.problem;
                 let job = batch.jobs.into_iter().next().expect("singleton batch");
                 let (reply, t0) = replies.remove(&job.id).expect("reply registered");
                 if shards == 0 || shards > n {
@@ -392,7 +471,7 @@ fn dispatcher_main(
                     )));
                     continue;
                 }
-                match router.route_gang(job.request.problem(), shards) {
+                match router.route_gang(problem, shards) {
                     Some(gang) => {
                         stats.batches.fetch_add(1, Ordering::Relaxed);
                         dispatch_sharded(job, spec, gang, &worker_txs, reply, t0, &stats);
@@ -400,7 +479,7 @@ fn dispatcher_main(
                     None => {
                         // not enough idle dies yet — wait for Done msgs
                         replies.insert(job.id, (reply, t0));
-                        batcher.unpop(Batch { problem: job.request.problem(), jobs: vec![job] });
+                        batcher.unpop(Batch { problem, jobs: vec![job] });
                         break;
                     }
                 }
@@ -458,6 +537,122 @@ fn sharded_shards(batch: &Batch) -> Option<usize> {
     }
 }
 
+/// `Some(dies)` when the batch is a lone training job.
+fn train_dies(batch: &Batch) -> Option<usize> {
+    match &batch.jobs[..] {
+        [job] => match &job.request {
+            JobRequest::Train { params, .. } | JobRequest::TrainEpoch { params, .. } => {
+                Some(params.dies)
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Router key a training gang claims its dies under. Real problem
+/// handles count up from 1, so folding the job id into the top half of
+/// the space can never collide with one — and two training jobs never
+/// look "warm" to each other (the trainer reprograms per epoch anyway).
+fn train_gang_key(job: JobId) -> u64 {
+    (1u64 << 63) | job
+}
+
+/// Seat the gang's dies and spawn the training-coordinator thread that
+/// drives the epoch protocol and answers the job ticket. Worker load is
+/// released die-by-die through the normal `Done` path as each seat ends.
+fn dispatch_train(
+    job: QueuedJob,
+    gang: Vec<(usize, bool)>,
+    worker_txs: &[mpsc::Sender<WorkerMsg>],
+    reply: mpsc::Sender<JobResult>,
+    t0: Instant,
+    stats: &Arc<ServerStats>,
+) {
+    use crate::chip::SAMPLE_TIME_NS;
+    let (params, resume, epochs, progress) = match job.request {
+        JobRequest::Train { params, progress } => {
+            let epochs = params.cd.epochs;
+            (params, None, epochs, progress)
+        }
+        JobRequest::TrainEpoch { params, checkpoint, epochs, progress } => {
+            (params, Some(checkpoint), epochs, progress)
+        }
+        _ => unreachable!("dispatch_train called on a non-training job"),
+    };
+    let params = Arc::new(params);
+    let (out_tx, out_rx) = mpsc::channel();
+    let mut cmd_txs = Vec::with_capacity(gang.len());
+    let dies: Vec<usize> = gang.iter().map(|&(w, _)| w).collect();
+    for (shard, &(w, _)) in gang.iter().enumerate() {
+        // the trainer programs its own codes — the router's
+        // needs_program flag is irrelevant here
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        cmd_txs.push(cmd_tx);
+        let _ = worker_txs[w].send(WorkerMsg::TrainSeat {
+            shard,
+            params: params.clone(),
+            randomize_seed: service::seat_seed(params.seed, shard),
+            cmd_rx,
+            out_tx: out_tx.clone(),
+        });
+    }
+    drop(out_tx);
+    let stats_err = stats.clone();
+    let stats = stats.clone();
+    let spawned = std::thread::Builder::new().name("train-coordinator".into()).spawn(move || {
+        let result = service::drive_training(
+            &params,
+            resume.as_ref(),
+            epochs,
+            &cmd_txs,
+            &out_rx,
+            |stat| {
+                if let Some(tx) = &progress {
+                    let _ = tx.send(stat.clone());
+                }
+            },
+        );
+        drop(cmd_txs); // hang up on any seat still waiting for a command
+        let msg = match result {
+            Ok(run) => {
+                stats
+                    .chip_time_ns
+                    .fetch_add((run.total_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
+                // the trainer reprograms every die at every epoch (plus
+                // the initial zero-weight image)
+                stats
+                    .reprograms
+                    .fetch_add(((epochs + 1) * params.dies) as u64, Ordering::Relaxed);
+                JobResult::Trained {
+                    final_kl: run.final_kl,
+                    final_valid_mass: run.final_valid_mass,
+                    stats: run.stats,
+                    checkpoint: run.checkpoint,
+                    codes: run.codes,
+                    dies,
+                    latency: t0.elapsed(),
+                }
+            }
+            Err(e) => JobResult::Failed(format!("training: {e:#}")),
+        };
+        if matches!(msg, JobResult::Failed(_)) {
+            stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            stats.jobs_completed.fetch_add(1, Ordering::Relaxed);
+            stats
+                .total_latency_us
+                .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+        }
+        let _ = reply.send(msg);
+    });
+    if spawned.is_err() {
+        // the closure (and with it the reply sender) is dropped: the
+        // ticket sees the hangup; seats exit once their cmd channels do.
+        stats_err.jobs_failed.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Seat the gang's dies and spawn the exchange-coordinator thread that
 /// drives the sweep/swap protocol and answers the job ticket. Worker
 /// load is released die-by-die through the normal `Done` path as each
@@ -496,6 +691,7 @@ fn dispatch_sharded(
         });
     }
     drop(out_tx);
+    let stats_err = stats.clone();
     let stats = stats.clone();
     let scale = spec.scale;
     let spawned = std::thread::Builder::new().name("shard-coordinator".into()).spawn(move || {
@@ -536,7 +732,7 @@ fn dispatch_sharded(
         // the closure (and with it the reply sender) is dropped: the
         // ticket sees the hangup and reports "coordinator shut down";
         // seats exit once their cmd channels drop.
-        stats.jobs_failed.fetch_add(1, Ordering::Relaxed);
+        stats_err.jobs_failed.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -628,6 +824,16 @@ fn worker_loop<C: TrainableChip>(
                 chip.set_beta(1.0);
                 let _ = done_tx.send(Msg::Done(k));
             }
+            WorkerMsg::TrainSeat { shard, params, randomize_seed, cmd_rx, out_tx } => {
+                chip.set_clamps(&[]);
+                chip.randomize(randomize_seed);
+                service::train_worker_loop(shard, &mut chip, &params, &cmd_rx, &out_tx);
+                // training leaves gate clamps / per-chain βs behind;
+                // restore neutral knobs for the next tenant
+                chip.set_clamps(&[]);
+                chip.set_beta(1.0);
+                let _ = done_tx.send(Msg::Done(k));
+            }
         }
     }
 }
@@ -659,10 +865,12 @@ fn run_batch<C: TrainableChip>(
             JobRequest::TuneLadder { .. } => {
                 groups.entry((f64::MIN.to_bits(), usize::MAX)).or_default().push(idx);
             }
-            // never reaches a single-die worker (the dispatcher seats
+            // never reach a single-die worker (the dispatcher seats
             // gangs itself); grouped defensively so a routing bug fails
             // the job instead of wedging the batch
-            JobRequest::ShardedTempering { .. } => {
+            JobRequest::ShardedTempering { .. }
+            | JobRequest::Train { .. }
+            | JobRequest::TrainEpoch { .. } => {
                 groups.entry((f64::NEG_INFINITY.to_bits(), usize::MAX)).or_default().push(idx);
             }
         }
@@ -794,6 +1002,10 @@ fn run_whole_die_job<C: TrainableChip>(
             JobResult::Failed(
                 "sharded tempering reached a single-die worker (dispatcher bug)".into(),
             ),
+            0,
+        ),
+        JobRequest::Train { .. } | JobRequest::TrainEpoch { .. } => (
+            JobResult::Failed("training reached a single-die worker (dispatcher bug)".into()),
             0,
         ),
         JobRequest::Sample { .. } => return,
@@ -1022,6 +1234,93 @@ mod tests {
     // Fan-out failure surfacing (a die that cannot host the ladder) is
     // regression-tested end to end in tests/sharded_equivalence.rs:
     // fanout_reports_the_failing_die_instead_of_hiding_it.
+
+    fn quick_train_params(dies: usize) -> TrainParams {
+        let mut p = TrainParams::new(
+            crate::chimera::and_gate_layout(0, 0),
+            crate::learning::dataset::and_gate(),
+            crate::learning::CdParams {
+                epochs: 6,
+                lr: 0.15,
+                lr_decay: 1.0,
+                k_sweeps: 2,
+                samples_per_pattern: 6,
+                ..Default::default()
+            },
+        );
+        p.dies = dies;
+        p.eval_every = 3;
+        p.eval_samples = 400;
+        p
+    }
+
+    #[test]
+    fn train_job_roundtrip_and_seat_release() {
+        let (srv, h) = server(2);
+        match srv.run_training(quick_train_params(2)).unwrap() {
+            JobResult::Trained { stats, checkpoint, codes, dies, final_kl, .. } => {
+                // epochs 0, 3 and the final epoch 5 evaluate
+                assert_eq!(
+                    stats.iter().map(|s| s.epoch).collect::<Vec<_>>(),
+                    vec![0, 3, 5]
+                );
+                assert!(final_kl.is_finite());
+                assert_eq!(checkpoint.epochs_done, 6);
+                assert_eq!(dies.len(), 2);
+                assert_eq!(codes.enables.iter().filter(|&&e| e).count(), 12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 1);
+        // every seat released its die and the next tenant reprograms
+        srv.run(JobRequest::Sample { problem: h, sweeps: 2, beta: 1.0, chains: 1 }).unwrap();
+        assert_eq!(srv.stats().jobs_completed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn train_job_streams_progress() {
+        let (srv, _) = server(1);
+        let (ticket, rx) = srv.submit_training(quick_train_params(1)).unwrap();
+        let streamed: Vec<usize> = rx.iter().map(|s| s.epoch).collect();
+        match ticket.wait() {
+            JobResult::Trained { stats, .. } => {
+                assert_eq!(streamed, stats.iter().map(|s| s.epoch).collect::<Vec<_>>());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn train_resume_continues_the_schedule() {
+        let (srv, _) = server(1);
+        let mut params = quick_train_params(1);
+        params.cd.epochs = 3;
+        let cp = match srv.run_training(params.clone()).unwrap() {
+            JobResult::Trained { checkpoint, .. } => checkpoint,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(cp.epochs_done, 3);
+        match srv.run_training_resumed(params, cp, 3).unwrap() {
+            JobResult::Trained { checkpoint, stats, .. } => {
+                assert_eq!(checkpoint.epochs_done, 6);
+                // resumed epochs are numbered from the checkpoint
+                assert!(stats.iter().all(|s| (3..6).contains(&s.epoch)), "{stats:?}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn train_job_larger_than_array_fails_fast() {
+        let (srv, _) = server(2);
+        match srv.run_training(quick_train_params(5)).unwrap() {
+            JobResult::Failed(msg) => {
+                assert!(msg.contains("5 dies") && msg.contains("has 2"), "{msg}");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(srv.stats().jobs_failed.load(Ordering::Relaxed), 1);
+    }
 
     #[test]
     fn affinity_avoids_reprogramming() {

@@ -153,6 +153,68 @@ mod tests {
     }
 
     #[test]
+    fn compensate_biases_inverts_a_synthetic_report() {
+        // p-bit 5: slope 0.8, offset 0.1; p-bit 9: slope 1.25, offset
+        // −0.2. To realize h the code must solve ĝ·x + ô = h.
+        let r = CalibrationReport {
+            pbits: vec![5, 9],
+            g_hat: vec![0.8, 1.25],
+            o_hat: vec![0.1, -0.2],
+        };
+        let comp = compensate_biases(&r, &[(5, 0.4), (9, 0.5)]);
+        assert_eq!(comp[0].0, 5);
+        assert_eq!(comp[0].1, (((0.4 - 0.1) / 0.8) * 127.0_f64).round() as i8);
+        assert_eq!(comp[1].0, 9);
+        assert_eq!(comp[1].1, (((0.5 + 0.2) / 1.25) * 127.0_f64).round() as i8);
+        // an ideal p-bit passes the intended bias straight through
+        let ideal = CalibrationReport { pbits: vec![0], g_hat: vec![1.0], o_hat: vec![0.0] };
+        assert_eq!(compensate_biases(&ideal, &[(0, 0.5)])[0].1, 64);
+    }
+
+    #[test]
+    fn compensate_biases_clips_codes_and_guards_tiny_slopes() {
+        let r = CalibrationReport { pbits: vec![3], g_hat: vec![0.01], o_hat: vec![0.0] };
+        // |h/ĝ| ≫ 1: the code saturates at the 8-bit rails
+        assert_eq!(compensate_biases(&r, &[(3, 0.9)])[0].1, 127);
+        assert_eq!(compensate_biases(&r, &[(3, -0.9)])[0].1, -127);
+        // a degenerate ĝ = 0 estimate is floored, not a division blowup
+        let r0 = CalibrationReport { pbits: vec![3], g_hat: vec![0.0], o_hat: vec![0.0] };
+        assert_eq!(compensate_biases(&r0, &[(3, 0.5)])[0].1, 127);
+        assert_eq!(compensate_biases(&r0, &[(3, -0.5)])[0].1, -127);
+    }
+
+    #[test]
+    fn errors_vs_scores_a_synthetic_mismatch_personality() {
+        let topo = Topology::new();
+        let cfg = MismatchConfig {
+            sigma_beta: 0.2,
+            sigma_obeta: 0.1,
+            ..MismatchConfig::default()
+        };
+        let p = Personality::sample(&topo, 5, cfg);
+        let pbits = vec![0usize, 17, 255];
+        // a report that copies the truth exactly scores zero error
+        let exact = CalibrationReport {
+            pbits: pbits.clone(),
+            g_hat: pbits.iter().map(|&i| p.spins[i].wta.slope).collect(),
+            o_hat: pbits.iter().map(|&i| p.spins[i].wta.offset).collect(),
+        };
+        let (ge, oe) = exact.errors_vs(&p);
+        assert!(ge < 1e-12, "slope error {ge}");
+        assert!(oe < 1e-12, "offset error {oe}");
+        // shifting every ĝ by +0.05 shifts the mean |slope error| by
+        // exactly 0.05; the offset error is untouched
+        let biased = CalibrationReport {
+            pbits: exact.pbits.clone(),
+            g_hat: exact.g_hat.iter().map(|g| g + 0.05).collect(),
+            o_hat: exact.o_hat.clone(),
+        };
+        let (ge, oe) = biased.errors_vs(&p);
+        assert!((ge - 0.05).abs() < 1e-12, "slope error {ge}");
+        assert!(oe < 1e-12, "offset error {oe}");
+    }
+
+    #[test]
     fn recovers_mismatch_parameters() {
         let topo = Topology::new();
         let cfg = MismatchConfig {

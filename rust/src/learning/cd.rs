@@ -13,15 +13,22 @@
 //! Because both phases run through the same mismatched silicon, the
 //! learned codes compensate the chip's non-idealities — there is no
 //! place where an idealized model enters.
+//!
+//! The phase sampling itself lives in [`super::grad`] as pure,
+//! mergeable work-units; this synchronous trainer drives them against
+//! one chip, while [`super::service`] fans the same work-units across a
+//! die array (1-die bit-identical to this loop — proven by
+//! `rust/tests/train_service_equivalence.rs`).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::analog::ProgrammedWeights;
 use crate::chimera::{GateLayout, Topology};
 use crate::metrics::{kl_divergence, StateHistogram};
-use crate::problems::edge_index;
+use crate::util::json::{obj, Json};
 
 use super::dataset::Dataset;
+use super::grad::{self, GradAccum, PhaseSpec};
 use super::TrainableChip;
 
 /// Trainer hyperparameters.
@@ -57,6 +64,36 @@ impl Default for CdParams {
     }
 }
 
+impl CdParams {
+    /// Serialize to JSON (the crate's serde substitute: the offline
+    /// vendor set has no serde, so checkpoints and run logs use
+    /// [`crate::util::json`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("lr", Json::from(self.lr)),
+            ("lr_decay", Json::from(self.lr_decay)),
+            ("epochs", Json::from(self.epochs)),
+            ("k_sweeps", Json::from(self.k_sweeps)),
+            ("samples_per_pattern", Json::from(self.samples_per_pattern)),
+            ("beta", Json::from(self.beta)),
+            ("clip", Json::from(self.clip)),
+        ])
+    }
+
+    /// Parse back what [`CdParams::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            lr: v.req("lr")?.as_f64()?,
+            lr_decay: v.req("lr_decay")?.as_f64()?,
+            epochs: v.req("epochs")?.as_usize()?,
+            k_sweeps: v.req("k_sweeps")?.as_usize()?,
+            samples_per_pattern: v.req("samples_per_pattern")?.as_usize()?,
+            beta: v.req("beta")?.as_f64()?,
+            clip: v.req("clip")?.as_f64()?,
+        })
+    }
+}
+
 /// Per-epoch observables (the Fig 7b/7c series).
 #[derive(Debug, Clone)]
 pub struct EpochStats {
@@ -68,6 +105,44 @@ pub struct EpochStats {
     pub corr_gap: f64,
     /// Probability mass on valid truth-table states.
     pub valid_mass: f64,
+}
+
+impl EpochStats {
+    /// Serialize to JSON (for run logs and the training service's
+    /// streamed progress records).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("epoch", Json::from(self.epoch)),
+            ("kl", Json::from(self.kl)),
+            ("corr_gap", Json::from(self.corr_gap)),
+            ("valid_mass", Json::from(self.valid_mass)),
+        ])
+    }
+
+    /// Parse back what [`EpochStats::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            epoch: v.req("epoch")?.as_usize()?,
+            kl: v.req("kl")?.as_f64()?,
+            corr_gap: v.req("corr_gap")?.as_f64()?,
+            valid_mass: v.req("valid_mass")?.as_f64()?,
+        })
+    }
+}
+
+/// KL(target ‖ model) and valid-state mass of a measured visible
+/// distribution — the shared evaluation arithmetic of
+/// [`CdTrainer::evaluate`] and the training service (identical ops, so
+/// the two paths report bit-identical numbers).
+pub(crate) fn kl_and_valid(p_target: &[f64], p_model: &[f64]) -> (f64, f64) {
+    let kl = kl_divergence(p_target, p_model, 1e-4);
+    let valid: f64 = p_target
+        .iter()
+        .zip(p_model)
+        .filter(|&(&t, _)| t > 0.0)
+        .map(|(_, &m)| m)
+        .sum();
+    (kl, valid)
 }
 
 /// The CD trainer bound to one gate layout on one chip.
@@ -97,22 +172,14 @@ impl CdTrainer {
     pub fn new(layout: GateLayout, dataset: Dataset, params: CdParams) -> Self {
         assert_eq!(layout.n_visible(), dataset.n_visible(), "layout/dataset arity mismatch");
         let topo = Topology::new();
-        let spins = layout.spins();
-        let mut edges = Vec::new();
-        for (a, &i) in spins.iter().enumerate() {
-            for &j in &spins[a + 1..] {
-                if let Some(e) = edge_index(&topo, i, j) {
-                    edges.push((i.min(j), i.max(j), e));
-                }
-            }
-        }
+        let edges = grad::learnable_pairs(&topo, &layout);
         let n_edges_hw = topo.edges.len();
         let mut codes = ProgrammedWeights::zeros(n_edges_hw);
         // enable exactly the gate's couplers (everything else leaks only)
         for &(_, _, e) in &edges {
             codes.enables[e] = true;
         }
-        let nb = spins.len();
+        let nb = layout.spins().len();
         let ne = edges.len();
         Self {
             layout,
@@ -132,6 +199,54 @@ impl CdTrainer {
         self.edges.len()
     }
 
+    /// Epochs applied so far (drives the learning-rate decay; restored
+    /// by [`CdTrainer::restore_shadow`] so a resumed run continues the
+    /// schedule instead of restarting it).
+    pub fn epochs_done(&self) -> usize {
+        self.epochs_done
+    }
+
+    /// The float shadow state: (per-edge weights, per-spin biases) in
+    /// the [`grad::learnable_pairs`] / layout-spin order — what a
+    /// checkpoint must persist (the 8-bit codes are derived from it).
+    pub fn shadow(&self) -> (&[f64], &[f64]) {
+        (&self.w, &self.b)
+    }
+
+    /// Restore the float shadow state from a checkpoint and re-quantize
+    /// the register image. `epochs_done` resumes the lr-decay schedule.
+    pub fn restore_shadow(&mut self, w: &[f64], b: &[f64], epochs_done: usize) -> Result<()> {
+        ensure!(
+            w.len() == self.w.len(),
+            "checkpoint has {} edge weights, layout needs {}",
+            w.len(),
+            self.w.len()
+        );
+        ensure!(
+            b.len() == self.b.len(),
+            "checkpoint has {} biases, layout needs {}",
+            b.len(),
+            self.b.len()
+        );
+        self.w.copy_from_slice(w);
+        self.b.copy_from_slice(b);
+        self.epochs_done = epochs_done;
+        self.quantize();
+        Ok(())
+    }
+
+    /// The phase work-unit spec shared with the training service (same
+    /// edge ordering as the shadow weights).
+    pub fn phase_spec(&self) -> PhaseSpec {
+        PhaseSpec {
+            visible: self.layout.visible.clone(),
+            spins: self.layout.spins(),
+            edges: self.edges.iter().map(|&(i, j, _)| (i, j)).collect(),
+            k_sweeps: self.params.k_sweeps,
+            samples_per_pattern: self.params.samples_per_pattern,
+        }
+    }
+
     fn quantize(&mut self) {
         for (k, &(_, _, e)) in self.edges.iter().enumerate() {
             self.codes.j_codes[e] = (self.w[k] * 127.0).round().clamp(-127.0, 127.0) as i8;
@@ -141,76 +256,41 @@ impl CdTrainer {
         }
     }
 
-    /// Collect phase statistics: (⟨m_i m_j⟩ per edge, ⟨m_i⟩ per spin).
-    fn phase_stats<C: TrainableChip>(
-        &self,
-        chip: &mut C,
-        clamp: Option<&[i8]>,
-    ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let spins = self.layout.spins();
-        let mut c_acc = vec![0.0; self.edges.len()];
-        let mut m_acc = vec![0.0; spins.len()];
-        let mut n = 0usize;
-        match clamp {
-            Some(pattern) => {
-                let clamps: Vec<(usize, i8)> =
-                    self.layout.visible.iter().copied().zip(pattern.iter().copied()).collect();
-                chip.set_clamps(&clamps);
-            }
-            None => chip.set_clamps(&[]),
+    /// Apply one epoch's CD gradient to the float shadow weights:
+    /// decayed learning rate, clip, re-quantize the register image.
+    /// Returns the correlation gap (mean |Δ⟨mm⟩| over learned edges).
+    /// The caller still owns programming `self.codes` into hardware.
+    pub fn apply_gradient(&mut self, dc: &[f64], dm: &[f64]) -> f64 {
+        assert_eq!(dc.len(), self.w.len(), "gradient arity (edges)");
+        assert_eq!(dm.len(), self.b.len(), "gradient arity (biases)");
+        let lr = self.params.lr * self.params.lr_decay.powi(self.epochs_done as i32);
+        self.epochs_done += 1;
+        let mut gap = 0.0;
+        for (k, &d) in dc.iter().enumerate() {
+            gap += d.abs();
+            self.w[k] = (self.w[k] + lr * d).clamp(-self.params.clip, self.params.clip);
         }
-        chip.sweeps(self.params.k_sweeps)?;
-        for _ in 0..self.params.samples_per_pattern {
-            chip.sweeps(1)?;
-            for st in chip.states() {
-                for (k, &(i, j, _)) in self.edges.iter().enumerate() {
-                    c_acc[k] += (st[i] * st[j]) as f64;
-                }
-                for (k, &s) in spins.iter().enumerate() {
-                    m_acc[k] += st[s] as f64;
-                }
-                n += 1;
-            }
+        for (k, &d) in dm.iter().enumerate() {
+            self.b[k] = (self.b[k] + lr * d).clamp(-self.params.clip, self.params.clip);
         }
-        let nf = n as f64;
-        Ok((c_acc.iter().map(|x| x / nf).collect(), m_acc.iter().map(|x| x / nf).collect()))
+        self.quantize();
+        gap / self.edges.len() as f64
     }
 
     /// One CD epoch; returns the correlation gap.
     pub fn epoch<C: TrainableChip>(&mut self, chip: &mut C) -> Result<f64> {
-        let ne = self.edges.len();
-        let nb = self.layout.spins().len();
-        let mut c_data = vec![0.0; ne];
-        let mut m_data = vec![0.0; nb];
-        // positive phase over all patterns (uniform data distribution)
+        let spec = self.phase_spec();
         let patterns = self.dataset.patterns.clone();
-        for pattern in &patterns {
-            let (c, m) = self.phase_stats(chip, Some(pattern))?;
-            for k in 0..ne {
-                c_data[k] += c[k] / patterns.len() as f64;
-            }
-            for k in 0..nb {
-                m_data[k] += m[k] / patterns.len() as f64;
-            }
-        }
+        let mut acc =
+            GradAccum::new(patterns.len(), self.edges.len(), self.layout.spins().len());
+        // positive phase over all patterns (uniform data distribution)
+        grad::collect_positive(chip, &spec, &patterns, 0, &mut acc)?;
         // negative phase
-        let (c_model, m_model) = self.phase_stats(chip, None)?;
-        // update (decayed learning rate settles the quantized codes)
-        let lr = self.params.lr * self.params.lr_decay.powi(self.epochs_done as i32);
-        self.epochs_done += 1;
-        let mut gap = 0.0;
-        for k in 0..ne {
-            let d = c_data[k] - c_model[k];
-            gap += d.abs();
-            self.w[k] = (self.w[k] + lr * d).clamp(-self.params.clip, self.params.clip);
-        }
-        for k in 0..nb {
-            let d = m_data[k] - m_model[k];
-            self.b[k] = (self.b[k] + lr * d).clamp(-self.params.clip, self.params.clip);
-        }
-        self.quantize();
+        grad::collect_negative(chip, &spec, spec.samples_per_pattern, true, &mut acc)?;
+        let (dc, dm) = acc.gradient()?;
+        let gap = self.apply_gradient(&dc, &dm);
         chip.program_codes(&self.codes)?;
-        Ok(gap / ne as f64)
+        Ok(gap)
     }
 
     /// Sample the free-running visible distribution (for Fig 7b / 8b).
@@ -240,14 +320,7 @@ impl CdTrainer {
         let hist = self.visible_histogram(chip, n_samples)?;
         let p_model = hist.probabilities();
         let p_target = self.dataset.target_distribution();
-        let kl = kl_divergence(&p_target, &p_model, 1e-4);
-        let valid: f64 = p_target
-            .iter()
-            .zip(&p_model)
-            .filter(|&(&t, _)| t > 0.0)
-            .map(|(_, &m)| m)
-            .sum();
-        Ok((kl, valid))
+        Ok(kl_and_valid(&p_target, &p_model))
     }
 
     /// Full training run with per-epoch stats every `eval_every` epochs.
@@ -302,6 +375,40 @@ mod tests {
         assert_eq!(t.codes.j_codes[e], 64);
         let s = t.layout.spins()[1];
         assert_eq!(t.codes.h_codes[s], -127);
+    }
+
+    #[test]
+    fn shadow_restore_round_trips() {
+        let mut t = trainer(CdParams::default());
+        let w: Vec<f64> = (0..t.n_edges()).map(|k| (k as f64 / 24.0) - 0.2).collect();
+        let b: Vec<f64> = (0..7).map(|k| 0.05 * k as f64).collect();
+        t.restore_shadow(&w, &b, 42).unwrap();
+        assert_eq!(t.epochs_done(), 42);
+        let (w2, b2) = t.shadow();
+        assert_eq!(w2, &w[..]);
+        assert_eq!(b2, &b[..]);
+        // the register image was re-quantized from the restored floats
+        let e = t.edges[2].2;
+        assert_eq!(t.codes.j_codes[e], ((w[2] * 127.0).round()) as i8);
+        // arity mismatches are rejected
+        assert!(t.restore_shadow(&w[1..], &b, 0).is_err());
+        assert!(t.restore_shadow(&w, &b[1..], 0).is_err());
+    }
+
+    #[test]
+    fn params_and_stats_json_round_trip() {
+        let p = CdParams { lr: 0.125, epochs: 33, ..CdParams::default() };
+        let back = CdParams::from_json(&p.to_json()).unwrap();
+        assert_eq!(back.lr, p.lr);
+        assert_eq!(back.epochs, 33);
+        assert_eq!(back.samples_per_pattern, p.samples_per_pattern);
+        let e = EpochStats { epoch: 7, kl: 0.25, corr_gap: 0.125, valid_mass: 0.875 };
+        let text = e.to_json().to_string();
+        let back = EpochStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.epoch, 7);
+        assert_eq!(back.kl, 0.25);
+        assert_eq!(back.corr_gap, 0.125);
+        assert_eq!(back.valid_mass, 0.875);
     }
 
     #[test]

@@ -10,6 +10,37 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Build a dataset from a boolean truth table: enumerate all
+    /// 2^`inputs` input rows (input bit b of row i is `i >> b & 1`, the
+    /// same bit order every gate constructor below always used) and
+    /// append `gate`'s output bits to each row. One pattern per row —
+    /// the uniform data distribution of a combinational gate.
+    ///
+    /// ```
+    /// use pchip::learning::dataset::Dataset;
+    ///
+    /// let implies = Dataset::from_truth_table("IMPLIES", 2, |x| vec![!x[0] || x[1]]);
+    /// assert_eq!(implies.patterns.len(), 4);
+    /// assert_eq!(implies.patterns[1], vec![1, -1, -1]); // 1 → 0 is false
+    /// assert_eq!(implies.n_visible(), 3);
+    /// ```
+    pub fn from_truth_table(
+        name: &'static str,
+        inputs: usize,
+        gate: impl Fn(&[bool]) -> Vec<bool>,
+    ) -> Dataset {
+        assert!((1..=16).contains(&inputs), "truth table over {inputs} inputs");
+        let patterns = (0..1usize << inputs)
+            .map(|i| {
+                let x: Vec<bool> = (0..inputs).map(|bit| (i >> bit) & 1 == 1).collect();
+                let outs = gate(&x);
+                assert!(!outs.is_empty(), "gate produced no output bits");
+                x.into_iter().chain(outs).map(b).collect()
+            })
+            .collect();
+        Dataset { name, patterns }
+    }
+
     /// Target distribution over all 2^k visible states (uniform on the
     /// valid patterns) in the same bit order as
     /// [`crate::metrics::StateHistogram`] (bit b set ⇔ visible b = +1).
@@ -41,84 +72,44 @@ fn b(x: bool) -> i8 {
 
 /// AND gate: (A, B, OUT).
 pub fn and_gate() -> Dataset {
-    let patterns = (0..4)
-        .map(|i| {
-            let (a, bb) = (i & 1 == 1, i & 2 == 2);
-            vec![b(a), b(bb), b(a && bb)]
-        })
-        .collect();
-    Dataset { name: "AND", patterns }
+    Dataset::from_truth_table("AND", 2, |x| vec![x[0] && x[1]])
 }
 
 /// OR gate: (A, B, OUT).
 pub fn or_gate() -> Dataset {
-    let patterns = (0..4)
-        .map(|i| {
-            let (a, bb) = (i & 1 == 1, i & 2 == 2);
-            vec![b(a), b(bb), b(a || bb)]
-        })
-        .collect();
-    Dataset { name: "OR", patterns }
+    Dataset::from_truth_table("OR", 2, |x| vec![x[0] || x[1]])
 }
 
 /// XOR gate: (A, B, OUT) — not linearly separable; needs the hidden
 /// units (a classic stress test for the RBM cell).
 pub fn xor_gate() -> Dataset {
-    let patterns = (0..4)
-        .map(|i| {
-            let (a, bb) = (i & 1 == 1, i & 2 == 2);
-            vec![b(a), b(bb), b(a ^ bb)]
-        })
-        .collect();
-    Dataset { name: "XOR", patterns }
+    Dataset::from_truth_table("XOR", 2, |x| vec![x[0] ^ x[1]])
 }
 
 /// NAND gate: (A, B, OUT).
 pub fn nand_gate() -> Dataset {
-    let patterns = (0..4)
-        .map(|i| {
-            let (a, bb) = (i & 1 == 1, i & 2 == 2);
-            vec![b(a), b(bb), b(!(a && bb))]
-        })
-        .collect();
-    Dataset { name: "NAND", patterns }
+    Dataset::from_truth_table("NAND", 2, |x| vec![!(x[0] && x[1])])
 }
 
 /// NOR gate: (A, B, OUT).
 pub fn nor_gate() -> Dataset {
-    let patterns = (0..4)
-        .map(|i| {
-            let (a, bb) = (i & 1 == 1, i & 2 == 2);
-            vec![b(a), b(bb), b(!(a || bb))]
-        })
-        .collect();
-    Dataset { name: "NOR", patterns }
+    Dataset::from_truth_table("NOR", 2, |x| vec![!(x[0] || x[1])])
 }
 
 /// 3-input majority: (A, B, C, OUT) — 4 visible units; exercises a
 /// 4-visible layout (use the adder layout's first 4 terminals).
 pub fn majority3() -> Dataset {
-    let patterns = (0..8)
-        .map(|i| {
-            let (a, bb, c) = (i & 1 == 1, i & 2 == 2, i & 4 == 4);
-            let maj = (a as u8 + bb as u8 + c as u8) >= 2;
-            vec![b(a), b(bb), b(c), b(maj)]
-        })
-        .collect();
-    Dataset { name: "MAJ3", patterns }
+    Dataset::from_truth_table("MAJ3", 3, |x| {
+        vec![(x[0] as u8 + x[1] as u8 + x[2] as u8) >= 2]
+    })
 }
 
 /// Full adder: (A, B, Cin, S, Cout) — the Fig 8b workload.
 pub fn full_adder() -> Dataset {
-    let patterns = (0..8)
-        .map(|i| {
-            let (a, bb, c) = (i & 1 == 1, i & 2 == 2, i & 4 == 4);
-            let sum = a ^ bb ^ c;
-            let cout = (a && bb) || (c && (a ^ bb));
-            vec![b(a), b(bb), b(c), b(sum), b(cout)]
-        })
-        .collect();
-    Dataset { name: "FULL_ADDER", patterns }
+    Dataset::from_truth_table("FULL_ADDER", 3, |x| {
+        let (a, bb, c) = (x[0], x[1], x[2]);
+        vec![a ^ bb ^ c, (a && bb) || (c && (a ^ bb))]
+    })
 }
 
 #[cfg(test)]
@@ -169,6 +160,17 @@ mod tests {
             let ups = p[..3].iter().filter(|&&v| v > 0).count();
             assert_eq!(p[3] > 0, ups >= 2);
         }
+    }
+
+    #[test]
+    fn builder_supports_multi_output_gates() {
+        let half = Dataset::from_truth_table("HALF_ADDER", 2, |x| {
+            vec![x[0] ^ x[1], x[0] && x[1]]
+        });
+        assert_eq!(half.n_visible(), 4);
+        assert_eq!(half.patterns.len(), 4);
+        // 1 + 1 = 10b: sum 0, carry 1
+        assert_eq!(half.patterns[3], vec![1, 1, -1, 1]);
     }
 
     #[test]

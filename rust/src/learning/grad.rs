@@ -1,0 +1,464 @@
+//! Pure, mergeable contrastive-divergence phase work-units.
+//!
+//! [`CdTrainer::epoch`] used to be one synchronous loop; this module
+//! breaks it into the two primitives a *distributed* trainer needs:
+//!
+//! * [`collect_positive`] — run a shard of truth-table patterns through
+//!   a chip (clamp, thermalize, sample) and accumulate the data-phase
+//!   statistics;
+//! * [`collect_negative`] — sample the free-running model distribution
+//!   and accumulate the model-phase statistics.
+//!
+//! Both write into a [`GradAccum`]: raw per-pattern / per-phase **sums**
+//! (never means), so accumulators from different dies merge exactly —
+//! [`GradAccum::merge`] is element-wise addition with the same
+//! permutation-safe merge/restrict contract as
+//! [`crate::metrics::SwapStats`] and [`crate::metrics::FluxStats`], and
+//! the property tests below pin associativity/commutativity down.
+//! Because every pattern slot is owned by exactly one shard, merging
+//! per-die accumulators in *any* order and then calling
+//! [`GradAccum::gradient`] reproduces the single-die arithmetic
+//! bit-for-bit (`rust/tests/train_service_equivalence.rs`).
+//!
+//! [`CdTrainer::epoch`]: crate::learning::CdTrainer::epoch
+
+use anyhow::{ensure, Result};
+
+use crate::chimera::{GateLayout, Topology};
+use crate::problems::edge_index;
+
+use super::TrainableChip;
+
+/// The static description of one gate-learning problem that a phase
+/// work-unit needs: where the gate sits, which couplers are learnable,
+/// and the per-phase sampling budget. Built once by
+/// [`phase_spec`] so the trainer and every remote worker derive the
+/// *same* edge ordering (the [`GradAccum`] slot layout).
+#[derive(Debug, Clone)]
+pub struct PhaseSpec {
+    /// Visible (terminal) spins, in dataset bit order.
+    pub visible: Vec<usize>,
+    /// All layout spins (visible then hidden), in layout order.
+    pub spins: Vec<usize>,
+    /// Learnable couplers as (i, j) spin pairs, in canonical order.
+    pub edges: Vec<(usize, usize)>,
+    /// Thermalization sweeps before sampling a phase (CD-k).
+    pub k_sweeps: usize,
+    /// Sample sweeps per pattern in the positive phase.
+    pub samples_per_pattern: usize,
+}
+
+/// Learnable couplers of a gate layout: every intra-layout spin pair
+/// that exists on the hardware graph, as (i, j, canonical edge index)
+/// with i < j, in the order [`CdTrainer`] enables them. This is the
+/// single source of the edge ordering shared by the trainer's shadow
+/// weights and every [`GradAccum`] slot.
+///
+/// [`CdTrainer`]: crate::learning::CdTrainer
+pub fn learnable_pairs(topo: &Topology, layout: &GateLayout) -> Vec<(usize, usize, usize)> {
+    let spins = layout.spins();
+    let mut edges = Vec::new();
+    for (a, &i) in spins.iter().enumerate() {
+        for &j in &spins[a + 1..] {
+            if let Some(e) = edge_index(topo, i, j) {
+                edges.push((i.min(j), i.max(j), e));
+            }
+        }
+    }
+    edges
+}
+
+/// Build the [`PhaseSpec`] for a gate layout and CD budget.
+pub fn phase_spec(
+    layout: &GateLayout,
+    k_sweeps: usize,
+    samples_per_pattern: usize,
+) -> PhaseSpec {
+    let topo = Topology::new();
+    PhaseSpec {
+        visible: layout.visible.clone(),
+        spins: layout.spins(),
+        edges: learnable_pairs(&topo, layout).into_iter().map(|(i, j, _)| (i, j)).collect(),
+        k_sweeps,
+        samples_per_pattern,
+    }
+}
+
+/// Mergeable sufficient statistics of one CD epoch: raw sums of
+/// ⟨m_i·m_j⟩ / ⟨m_i⟩ observations, kept **per pattern** for the clamped
+/// (data) phase and pooled for the free (model) phase.
+///
+/// Sums — not means — so accumulation distributes: each positive slot
+/// is owned by whichever die ran that pattern, the negative slot pools
+/// every die's free chains, and [`GradAccum::merge`] is plain addition.
+#[derive(Debug, Clone)]
+pub struct GradAccum {
+    /// Data phase: `pos_c[p][k]` = Σ m_i·m_j over pattern p's samples,
+    /// for learnable edge k.
+    pub pos_c: Vec<Vec<f64>>,
+    /// Data phase: `pos_m[p][s]` = Σ m over pattern p's samples, for
+    /// layout spin slot s.
+    pub pos_m: Vec<Vec<f64>>,
+    /// Data phase: samples collected per pattern.
+    pub pos_n: Vec<u64>,
+    /// Model phase: per-edge Σ m_i·m_j over free-running samples.
+    pub neg_c: Vec<f64>,
+    /// Model phase: per-spin-slot Σ m over free-running samples.
+    pub neg_m: Vec<f64>,
+    /// Model phase: samples collected.
+    pub neg_n: u64,
+}
+
+impl GradAccum {
+    /// Zeroed accumulator for `patterns` truth-table rows over `edges`
+    /// learnable couplers and `spins` layout spins.
+    pub fn new(patterns: usize, edges: usize, spins: usize) -> Self {
+        Self {
+            pos_c: vec![vec![0.0; edges]; patterns],
+            pos_m: vec![vec![0.0; spins]; patterns],
+            pos_n: vec![0; patterns],
+            neg_c: vec![0.0; edges],
+            neg_m: vec![0.0; spins],
+            neg_n: 0,
+        }
+    }
+
+    /// Number of pattern slots.
+    pub fn patterns(&self) -> usize {
+        self.pos_n.len()
+    }
+
+    /// Record one sampled chip state into pattern slot `p`'s data-phase
+    /// counters.
+    pub fn record_positive(&mut self, p: usize, spec: &PhaseSpec, state: &[i8]) {
+        record_into(&mut self.pos_c[p], &mut self.pos_m[p], spec, state);
+        self.pos_n[p] += 1;
+    }
+
+    /// Record one sampled chip state into the model-phase counters.
+    pub fn record_negative(&mut self, spec: &PhaseSpec, state: &[i8]) {
+        record_into(&mut self.neg_c, &mut self.neg_m, spec, state);
+        self.neg_n += 1;
+    }
+
+    /// Merge another accumulator into this one (element-wise addition).
+    /// Associative and commutative over shard order — the training
+    /// coordinator may collect its dies' accumulators in any completion
+    /// order and still compute the same gradient, exactly like
+    /// [`crate::metrics::SwapStats::merge`].
+    pub fn merge(&mut self, other: &GradAccum) {
+        assert_eq!(self.pos_n.len(), other.pos_n.len(), "pattern count mismatch");
+        assert_eq!(self.neg_c.len(), other.neg_c.len(), "edge count mismatch");
+        assert_eq!(self.neg_m.len(), other.neg_m.len(), "spin count mismatch");
+        for p in 0..self.pos_n.len() {
+            for k in 0..self.neg_c.len() {
+                self.pos_c[p][k] += other.pos_c[p][k];
+            }
+            for s in 0..self.neg_m.len() {
+                self.pos_m[p][s] += other.pos_m[p][s];
+            }
+            self.pos_n[p] += other.pos_n[p];
+        }
+        for k in 0..self.neg_c.len() {
+            self.neg_c[k] += other.neg_c[k];
+        }
+        for s in 0..self.neg_m.len() {
+            self.neg_m[s] += other.neg_m[s];
+        }
+        self.neg_n += other.neg_n;
+    }
+
+    /// Copy with only the listed pattern slots kept (other patterns
+    /// zeroed, the pooled negative phase cleared) — the attribution
+    /// helper mirroring [`crate::metrics::SwapStats::restricted`]:
+    /// complementary restrictions merge back to the positive-phase
+    /// counters, and the negative phase (like round trips there) is
+    /// global and claimed by no single shard.
+    pub fn restricted(&self, patterns: &[usize]) -> GradAccum {
+        let mut out = GradAccum::new(self.pos_n.len(), self.neg_c.len(), self.neg_m.len());
+        for &p in patterns {
+            out.pos_c[p] = self.pos_c[p].clone();
+            out.pos_m[p] = self.pos_m[p].clone();
+            out.pos_n[p] = self.pos_n[p];
+        }
+        out
+    }
+
+    /// The CD gradient: (⟨·⟩_data − ⟨·⟩_model) per learnable edge and
+    /// per layout spin, with every pattern's mean weighted equally (the
+    /// uniform data distribution of a truth table).
+    ///
+    /// Fails when any pattern slot or the model phase collected no
+    /// samples — a shard went missing, not a number to paper over.
+    ///
+    /// The arithmetic (per-pattern mean, divide by the pattern count,
+    /// accumulate in pattern order, subtract the model mean) is exactly
+    /// the legacy [`CdTrainer::epoch`] sequence, which is what makes
+    /// the 1-die service run bit-identical to the synchronous trainer.
+    ///
+    /// [`CdTrainer::epoch`]: crate::learning::CdTrainer::epoch
+    pub fn gradient(&self) -> Result<(Vec<f64>, Vec<f64>)> {
+        let np = self.pos_n.len();
+        ensure!(np > 0, "no pattern slots");
+        ensure!(self.neg_n > 0, "model phase collected no samples");
+        let ne = self.neg_c.len();
+        let nb = self.neg_m.len();
+        let mut dc = vec![0.0; ne];
+        let mut dm = vec![0.0; nb];
+        for p in 0..np {
+            ensure!(self.pos_n[p] > 0, "pattern {p} collected no samples (shard missing?)");
+            let nf = self.pos_n[p] as f64;
+            for k in 0..ne {
+                dc[k] += (self.pos_c[p][k] / nf) / np as f64;
+            }
+            for s in 0..nb {
+                dm[s] += (self.pos_m[p][s] / nf) / np as f64;
+            }
+        }
+        let nf = self.neg_n as f64;
+        for k in 0..ne {
+            dc[k] -= self.neg_c[k] / nf;
+        }
+        for s in 0..nb {
+            dm[s] -= self.neg_m[s] / nf;
+        }
+        Ok((dc, dm))
+    }
+}
+
+fn record_into(c: &mut [f64], m: &mut [f64], spec: &PhaseSpec, state: &[i8]) {
+    for (k, &(i, j)) in spec.edges.iter().enumerate() {
+        c[k] += (state[i] * state[j]) as f64;
+    }
+    for (k, &s) in spec.spins.iter().enumerate() {
+        m[k] += state[s] as f64;
+    }
+}
+
+/// Positive-phase work-unit: for each pattern of the shard (in order),
+/// clamp the visible spins, thermalize `k_sweeps`, then collect
+/// `samples_per_pattern` sample sweeps into the accumulator's slot
+/// `first_pattern + local index`. The chip-call sequence is exactly the
+/// legacy trainer's, so a whole-dataset shard on one die reproduces it
+/// bit-for-bit.
+pub fn collect_positive<C: TrainableChip>(
+    chip: &mut C,
+    spec: &PhaseSpec,
+    patterns: &[Vec<i8>],
+    first_pattern: usize,
+    acc: &mut GradAccum,
+) -> Result<()> {
+    for (local, pattern) in patterns.iter().enumerate() {
+        let clamps: Vec<(usize, i8)> =
+            spec.visible.iter().copied().zip(pattern.iter().copied()).collect();
+        chip.set_clamps(&clamps);
+        chip.sweeps(spec.k_sweeps)?;
+        for _ in 0..spec.samples_per_pattern {
+            chip.sweeps(1)?;
+            for st in chip.states() {
+                acc.record_positive(first_pattern + local, spec, &st);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Negative-phase work-unit: release the clamps, optionally thermalize
+/// `k_sweeps` (CD; persistent-chain dies skip the burn-in after their
+/// first epoch), then collect `samples` sample sweeps of the
+/// free-running model into the accumulator's pooled negative slot.
+pub fn collect_negative<C: TrainableChip>(
+    chip: &mut C,
+    spec: &PhaseSpec,
+    samples: usize,
+    burn_in: bool,
+    acc: &mut GradAccum,
+) -> Result<()> {
+    chip.set_clamps(&[]);
+    if burn_in {
+        chip.sweeps(spec.k_sweeps)?;
+    }
+    for _ in 0..samples {
+        chip.sweeps(1)?;
+        for st in chip.states() {
+            acc.record_negative(spec, &st);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chimera::and_gate_layout;
+
+    fn spec() -> PhaseSpec {
+        phase_spec(&and_gate_layout(0, 0), 2, 4)
+    }
+
+    fn random_state(rng: &mut crate::rng::HostRng) -> Vec<i8> {
+        (0..crate::N_SPINS).map(|_| rng.spin()).collect()
+    }
+
+    fn random_accum(rng: &mut crate::rng::HostRng, spec: &PhaseSpec, patterns: usize) -> GradAccum {
+        let mut a = GradAccum::new(patterns, spec.edges.len(), spec.spins.len());
+        for _ in 0..rng.below(30) {
+            let st = random_state(rng);
+            if rng.uniform() < 0.5 {
+                let p = rng.below(patterns);
+                a.record_positive(p, spec, &st);
+            } else {
+                a.record_negative(spec, &st);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn spec_matches_the_and_block() {
+        let s = spec();
+        // AND layout: 3 visible × 4 hidden = 12 learnable couplers
+        assert_eq!(s.edges.len(), 12);
+        assert_eq!(s.spins.len(), 7);
+        assert_eq!(s.visible.len(), 3);
+        assert!(s.edges.iter().all(|&(i, j)| i < j));
+    }
+
+    #[test]
+    fn gradient_of_matching_phases_is_zero() {
+        let s = spec();
+        let mut a = GradAccum::new(2, s.edges.len(), s.spins.len());
+        let mut rng = crate::rng::HostRng::new(3);
+        let st = random_state(&mut rng);
+        a.record_positive(0, &s, &st);
+        a.record_positive(1, &s, &st);
+        a.record_negative(&s, &st);
+        let (dc, dm) = a.gradient().unwrap();
+        assert!(dc.iter().all(|&d| d.abs() < 1e-12), "{dc:?}");
+        assert!(dm.iter().all(|&d| d.abs() < 1e-12), "{dm:?}");
+    }
+
+    #[test]
+    fn gradient_requires_every_slot_filled() {
+        let s = spec();
+        let mut a = GradAccum::new(2, s.edges.len(), s.spins.len());
+        let st = vec![1i8; crate::N_SPINS];
+        a.record_positive(0, &s, &st);
+        a.record_negative(&s, &st);
+        // pattern 1 never sampled: a missing shard must be an error
+        assert!(a.gradient().is_err());
+        a.record_positive(1, &s, &st);
+        assert!(a.gradient().is_ok());
+    }
+
+    #[test]
+    fn restricted_keeps_only_listed_patterns() {
+        let s = spec();
+        let mut rng = crate::rng::HostRng::new(7);
+        let a = {
+            let mut a = GradAccum::new(4, s.edges.len(), s.spins.len());
+            for p in 0..4 {
+                for _ in 0..3 {
+                    let st = random_state(&mut rng);
+                    a.record_positive(p, &s, &st);
+                }
+            }
+            a.record_negative(&s, &random_state(&mut rng));
+            a
+        };
+        let r = a.restricted(&[1, 3]);
+        assert_eq!(r.pos_n, vec![0, 3, 0, 3]);
+        assert_eq!(r.neg_n, 0, "restriction never claims the model phase");
+        // complementary restrictions merge back to the positive counters
+        let mut merged = a.restricted(&[0, 2]);
+        merged.merge(&r);
+        assert_eq!(merged.pos_n, a.pos_n);
+        assert_eq!(merged.pos_c, a.pos_c);
+        assert_eq!(merged.pos_m, a.pos_m);
+    }
+
+    /// Property: merging per-shard accumulators is commutative and
+    /// associative — the coordinator may collect dies in any completion
+    /// order and still see the same counters.
+    #[test]
+    fn prop_merge_is_associative_and_commutative() {
+        let s = spec();
+        crate::util::prop::check("grad-accum merge", 100, |rng| {
+            let patterns = rng.below(4) + 1;
+            let a = random_accum(rng, &s, patterns);
+            let b = random_accum(rng, &s, patterns);
+            let c = random_accum(rng, &s, patterns);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_eq!(ab.pos_c, ba.pos_c);
+            assert_eq!(ab.pos_m, ba.pos_m);
+            assert_eq!(ab.pos_n, ba.pos_n);
+            assert_eq!(ab.neg_c, ba.neg_c);
+            assert_eq!(ab.neg_n, ba.neg_n);
+            let mut ab_c = ab.clone();
+            ab_c.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut a_bc = a.clone();
+            a_bc.merge(&bc);
+            assert_eq!(ab_c.pos_c, a_bc.pos_c);
+            assert_eq!(ab_c.neg_c, a_bc.neg_c);
+            assert_eq!(ab_c.neg_m, a_bc.neg_m);
+            assert_eq!(ab_c.pos_n, a_bc.pos_n);
+        });
+    }
+
+    /// Property: sharding patterns over dies and merging reproduces the
+    /// single-accumulator gradient bit-for-bit (each pattern slot is
+    /// owned by exactly one shard; merging adds zeros elsewhere).
+    #[test]
+    fn prop_sharded_merge_reproduces_single_gradient() {
+        let s = spec();
+        crate::util::prop::check("grad-accum shard equivalence", 60, |rng| {
+            let patterns = rng.below(5) + 2;
+            let shards = rng.below(patterns) + 1;
+            // the reference: every pattern and the model phase in one place
+            let mut single = GradAccum::new(patterns, s.edges.len(), s.spins.len());
+            let mut per_pattern_states: Vec<Vec<Vec<i8>>> = Vec::new();
+            for p in 0..patterns {
+                let mut sts = Vec::new();
+                for _ in 0..rng.below(4) + 1 {
+                    let st = random_state(rng);
+                    single.record_positive(p, &s, &st);
+                    sts.push(st);
+                }
+                per_pattern_states.push(sts);
+            }
+            let neg_states: Vec<Vec<i8>> =
+                (0..rng.below(6) + 1).map(|_| random_state(rng)).collect();
+            for st in &neg_states {
+                single.record_negative(&s, st);
+            }
+            // the sharded version: contiguous pattern ranges + split negs
+            let mut parts: Vec<GradAccum> = (0..shards)
+                .map(|_| GradAccum::new(patterns, s.edges.len(), s.spins.len()))
+                .collect();
+            for p in 0..patterns {
+                let owner = p * shards / patterns;
+                for st in &per_pattern_states[p] {
+                    parts[owner].record_positive(p, &s, st);
+                }
+            }
+            for (i, st) in neg_states.iter().enumerate() {
+                parts[i % shards].record_negative(&s, st);
+            }
+            let mut merged = GradAccum::new(patterns, s.edges.len(), s.spins.len());
+            for part in &parts {
+                merged.merge(part);
+            }
+            let (dc_a, dm_a) = single.gradient().unwrap();
+            let (dc_b, dm_b) = merged.gradient().unwrap();
+            // positive slots are owned by one shard each → exact; the
+            // pooled negative sums are integer-valued → exact too
+            assert_eq!(dc_a, dc_b);
+            assert_eq!(dm_a, dm_b);
+        });
+    }
+}

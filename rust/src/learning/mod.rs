@@ -7,13 +7,27 @@
 //! * [`CdTrainer`] — the CD-k loop: clamped positive phase, free
 //!   negative phase, quantized 8-bit weight updates programmed back over
 //!   SPI (or refolded for the software/XLA engines).
+//! * [`grad`] — the epoch decomposed into pure, mergeable phase
+//!   work-units (pattern shards, free-chain shares) with an exact
+//!   all-reduce ([`GradAccum::merge`]).
+//! * [`service`] — those work-units fanned across the die array: the
+//!   distributed training service behind
+//!   [`crate::coordinator::JobRequest::Train`], with persistent-chain
+//!   (PCD) and tempered negative phases plus checkpoint/resume.
 
 pub mod calibration;
 mod cd;
 pub mod dataset;
+pub mod grad;
+pub mod service;
 
 pub use calibration::{calibrate, calibrate_full_die, compensate_biases, CalibrationReport};
 pub use cd::{CdParams, CdTrainer, EpochStats};
+pub use grad::{collect_negative, collect_positive, GradAccum, PhaseSpec};
+pub use service::{
+    run_training, run_training_observed, run_training_resumed, TemperedNegative, TrainCheckpoint,
+    TrainParams, TrainedRun,
+};
 
 use anyhow::Result;
 
@@ -63,6 +77,9 @@ impl<S: Sampler> Sampler for Hw<S> {
     }
     fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
         self.engine.set_betas(betas)
+    }
+    fn set_states(&mut self, states: &[Vec<i8>]) -> Result<()> {
+        self.engine.set_states(states)
     }
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
         self.engine.set_clamps(clamps);

@@ -1,0 +1,1142 @@
+//! The distributed hardware-aware training service: one contrastive-
+//! divergence run fanned out across the die array.
+//!
+//! [`CdTrainer`] drives both CD phases synchronously against one chip;
+//! this module turns the same epoch into a die-parallel workload built
+//! from the pure work-units of [`super::grad`]:
+//!
+//! ```text
+//!             training coordinator (thread)     die 0     die 1     die 2
+//!                CdTrainer shadow w/b         patterns  patterns  persistent
+//! epoch:   ── EpochShard work-units ──────▶    0..3      4..7     neg chains
+//!          ◀─ GradAccum (per die) ─────────     │         │         │
+//!          ═══ all-reduce barrier ═════════════╧═════════╧═════════╧═══
+//!          merge (shard order) → gradient → w += lr·Δ → quantize
+//!          ── Program(codes) ─────────────▶  each die folds the codes
+//!                                            through ITS OWN personality
+//!          ── Eval shares (on eval epochs) ▶ merged visible histogram
+//! ```
+//!
+//! Three properties make this a faithful scale-out of the paper's
+//! in-situ loop rather than a data-parallel approximation of it:
+//!
+//! * **Both phases stay on silicon.** Each die samples its pattern
+//!   shard and its share of the model distribution through its *own*
+//!   mismatched analog path, so the merged gradient compensates the
+//!   ensemble of dies the codes will actually run on.
+//! * **The all-reduce is exact.** [`GradAccum`] holds mergeable sums
+//!   (one owner per pattern slot, pooled model counters), so merging
+//!   per-die accumulators in shard order reproduces the single-die
+//!   arithmetic bit-for-bit: a 1-die service run equals the legacy
+//!   [`CdTrainer::train`] loop exactly
+//!   (`rust/tests/train_service_equivalence.rs`).
+//! * **The sample budget is fixed.** Pattern shards tile the truth
+//!   table and the negative-phase budget is split across dies, so an
+//!   N-die epoch draws the same number of samples as a 1-die epoch —
+//!   dies buy wall-clock speed and gradient diversity, not extra
+//!   budget.
+//!
+//! Two refinements ride on the fan-out:
+//!
+//! * **Persistent chains (PCD)** — with [`TrainParams::pcd`], one die
+//!   is dedicated to the negative phase: its chains are never clamped,
+//!   so they persist across epochs (true persistent contrastive
+//!   divergence, which a single die cannot do — its chains are
+//!   destroyed by the clamped positive phase every epoch).
+//! * **Tempered negative phase** — [`TrainParams::tempered`] runs the
+//!   negative chains as a replica-exchange ladder
+//!   ([`crate::annealing::TemperingCore`], hottest β →
+//!   [`CdParams::beta`]) and draws model samples from the coldest rung,
+//!   for well-mixed model statistics on multimodal gates; the in-run
+//!   ladder re-spacing of [`crate::annealing::LadderTuning`] applies.
+//!
+//! The coordinator serves all of this as
+//! [`crate::coordinator::JobRequest::Train`] /
+//! [`crate::coordinator::JobRequest::TrainEpoch`] (gang jobs, one die
+//! per shard) answered by [`crate::coordinator::JobResult::Trained`];
+//! `pchip train --dies N [--pcd] [--tempered-negative]` is the CLI
+//! front end, and `docs/TRAINING.md` the practitioner guide.
+//!
+//! [`CdTrainer`]: crate::learning::CdTrainer
+//! [`CdTrainer::train`]: crate::learning::CdTrainer::train
+
+use std::ops::Range;
+use std::path::Path;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::analog::ProgrammedWeights;
+use crate::annealing::{BetaLadder, LadderTuning, TemperingCore, TemperingParams};
+use crate::chimera::GateLayout;
+use crate::metrics::StateHistogram;
+use crate::util::json::{obj, Json};
+
+use super::cd::{kl_and_valid, CdParams, CdTrainer, EpochStats};
+use super::dataset::Dataset;
+use super::grad::{self, GradAccum, PhaseSpec};
+use super::TrainableChip;
+
+/// Parameters of one distributed training run.
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    /// Where the gate sits on each die.
+    pub layout: GateLayout,
+    /// The truth table to learn.
+    pub dataset: Dataset,
+    /// The CD hyperparameters (shared by every die).
+    pub cd: CdParams,
+    /// How many dies share the run. 1 = the legacy single-die loop,
+    /// served through the coordinator.
+    pub dies: usize,
+    /// Persistent contrastive divergence: dedicate the last die to the
+    /// negative phase so its chains survive across epochs (requires
+    /// `dies ≥ 2` — on a single die the clamped positive phase destroys
+    /// the chains every epoch).
+    pub pcd: bool,
+    /// Run the negative phase as a replica-exchange ladder and sample
+    /// the model from the coldest rung (`None` = plain Gibbs at
+    /// [`CdParams::beta`]).
+    pub tempered: Option<TemperedNegative>,
+    /// Evaluate KL / valid mass every this many epochs (the last epoch
+    /// always evaluates).
+    pub eval_every: usize,
+    /// Visible samples per evaluation, split across the dies.
+    pub eval_samples: usize,
+    /// Bounded wait at each all-reduce barrier before a stalled die
+    /// fails the run with a diagnostic (never a deadlock).
+    pub barrier_timeout: Duration,
+    /// Seed for the per-die chain randomization when the run is seated
+    /// by the coordinator (direct [`run_training`] callers prepare
+    /// their own chips and this is unused).
+    pub seed: u64,
+}
+
+impl TrainParams {
+    /// Single-die defaults for a gate + dataset + CD budget.
+    pub fn new(layout: GateLayout, dataset: Dataset, cd: CdParams) -> Self {
+        Self {
+            layout,
+            dataset,
+            cd,
+            dies: 1,
+            pcd: false,
+            tempered: None,
+            eval_every: 10,
+            eval_samples: 3000,
+            barrier_timeout: Duration::from_secs(60),
+            seed: 0x7124,
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        ensure!(self.dies >= 1, "training needs at least one die");
+        ensure!(
+            !(self.pcd && self.dies < 2),
+            "PCD needs --dies ≥ 2: one die must keep its negative chains unclamped \
+             while the others run the clamped positive phase"
+        );
+        ensure!(self.eval_every >= 1, "eval_every must be positive");
+        ensure!(self.eval_samples >= 1, "eval_samples must be positive");
+        ensure!(self.cd.samples_per_pattern >= 1, "samples_per_pattern must be positive");
+        ensure!(
+            self.layout.n_visible() == self.dataset.n_visible(),
+            "layout has {} terminals but dataset patterns cover {}",
+            self.layout.n_visible(),
+            self.dataset.n_visible()
+        );
+        if let Some(t) = &self.tempered {
+            ensure!(t.rungs >= 2, "tempered negative phase needs at least two rungs");
+            ensure!(t.sweeps_per_round >= 1, "sweeps_per_round must be positive");
+            ensure!(
+                t.beta_hot > 0.0 && t.beta_hot < self.cd.beta,
+                "tempered ladder must span 0 < beta_hot ({}) < training beta ({})",
+                t.beta_hot,
+                self.cd.beta
+            );
+        }
+        Ok(())
+    }
+
+    /// The phase work-unit spec this run's workers and trainer share.
+    fn spec(&self) -> PhaseSpec {
+        grad::phase_spec(&self.layout, self.cd.k_sweeps, self.cd.samples_per_pattern)
+    }
+}
+
+/// Configuration of the tempered (replica-exchange) negative phase.
+#[derive(Debug, Clone)]
+pub struct TemperedNegative {
+    /// Ladder rungs (replicas); must not exceed the die's chain count.
+    pub rungs: usize,
+    /// Hottest logical β; the coldest rung is pinned to
+    /// [`CdParams::beta`] so model samples come from the training
+    /// temperature.
+    pub beta_hot: f64,
+    /// Sweeps between swap phases.
+    pub sweeps_per_round: usize,
+    /// Re-space the ladder every this many rounds (0 = fixed ladder).
+    pub adapt_every: usize,
+    /// Feedback signal for the re-spacing (acceptance or round-trip
+    /// flux, exactly as for sampling runs).
+    pub tuning: LadderTuning,
+    /// Seed of the swap-decision RNG.
+    pub seed: u64,
+}
+
+impl Default for TemperedNegative {
+    fn default() -> Self {
+        Self {
+            rungs: 6,
+            beta_hot: 0.5,
+            sweeps_per_round: 2,
+            adapt_every: 0,
+            tuning: LadderTuning::Off,
+            seed: 0x7E6F,
+        }
+    }
+}
+
+/// Everything needed to stop a training run and continue it later —
+/// through [`run_training_resumed`] or a
+/// [`crate::coordinator::JobRequest::TrainEpoch`] job. Serializes to
+/// JSON via [`TrainCheckpoint::save`] / [`TrainCheckpoint::load`]
+/// (the crate's [`crate::util::json`]; the offline vendor set has no
+/// serde).
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    /// Gate name the checkpoint belongs to (sanity-checked on resume).
+    pub gate: String,
+    /// Float shadow weights per learnable edge.
+    pub w: Vec<f64>,
+    /// Float shadow biases per layout spin.
+    pub b: Vec<f64>,
+    /// Epochs applied (resumes the lr-decay schedule).
+    pub epochs_done: usize,
+    /// Persistent negative chains, one state set per PCD negative die
+    /// (empty without PCD). Restored best-effort: an engine that cannot
+    /// set chain states re-thermalizes through the first epoch's
+    /// burn-in instead.
+    pub chains: Vec<Vec<Vec<i8>>>,
+}
+
+impl TrainCheckpoint {
+    /// Serialize to a JSON value.
+    pub fn to_json(&self) -> Json {
+        let chains = Json::Arr(
+            self.chains
+                .iter()
+                .map(|die| {
+                    Json::Arr(
+                        die.iter()
+                            .map(|chain| {
+                                Json::Arr(
+                                    chain.iter().map(|&s| Json::Num(s as f64)).collect(),
+                                )
+                            })
+                            .collect(),
+                    )
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("gate", Json::from(self.gate.clone())),
+            ("w", Json::from(self.w.clone())),
+            ("b", Json::from(self.b.clone())),
+            ("epochs_done", Json::from(self.epochs_done)),
+            ("chains", chains),
+        ])
+    }
+
+    /// Parse back what [`TrainCheckpoint::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            v.req(key)?.as_arr()?.iter().map(|x| x.as_f64()).collect()
+        };
+        let mut chains = Vec::new();
+        for die in v.req("chains")?.as_arr()? {
+            let mut set = Vec::new();
+            for chain in die.as_arr()? {
+                let spins: Result<Vec<i8>> = chain
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        let x = s.as_f64()?;
+                        ensure!(x == 1.0 || x == -1.0, "chain spin {x} is not ±1");
+                        Ok(x as i8)
+                    })
+                    .collect();
+                set.push(spins?);
+            }
+            chains.push(set);
+        }
+        Ok(Self {
+            gate: v.req("gate")?.as_str()?.to_string(),
+            w: floats("w")?,
+            b: floats("b")?,
+            epochs_done: v.req("epochs_done")?.as_usize()?,
+            chains,
+        })
+    }
+
+    /// Write the checkpoint as JSON to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Load a checkpoint written by [`TrainCheckpoint::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// What a training run returns.
+#[derive(Debug, Clone)]
+pub struct TrainedRun {
+    /// Per-epoch observables at the evaluation cadence (the last epoch
+    /// always evaluates, so this is never empty).
+    pub stats: Vec<EpochStats>,
+    /// The final shadow state + persistent chains, ready to resume.
+    pub checkpoint: TrainCheckpoint,
+    /// The final 8-bit register image (what you program into a die).
+    pub codes: ProgrammedWeights,
+    /// KL(target ‖ model) after the last epoch.
+    pub final_kl: f64,
+    /// Probability mass on valid truth-table states after training.
+    pub final_valid_mass: f64,
+    /// Exact per-chain sweeps executed across every die (chip-time
+    /// accounting: × [`crate::chip::SAMPLE_TIME_NS`]).
+    pub total_sweeps: u64,
+}
+
+/// The per-die seat seed the coordinator uses to randomize chains
+/// before a training run — a pure function of the params seed and the
+/// shard, never of the job id, so identical submissions on a fresh
+/// array reproduce identical runs. Public so external reproductions
+/// (and the equivalence suite) can rebuild a seat's exact chain state.
+pub fn seat_seed(params_seed: u64, shard: usize) -> u64 {
+    params_seed ^ 0x7124 ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The float shadow model lowered to an energy function — what the
+/// tempered negative phase's swap moves score states with (the analog
+/// path already perturbs the sampled distribution; the shadow weights
+/// are the best logical model available, exactly as on silicon).
+#[derive(Debug, Clone)]
+pub(crate) struct ShadowEnergy {
+    edges: Vec<(usize, usize)>,
+    w: Vec<f64>,
+    spins: Vec<usize>,
+    b: Vec<f64>,
+}
+
+impl ShadowEnergy {
+    fn new(spec: &PhaseSpec, w: &[f64], b: &[f64]) -> Self {
+        Self { edges: spec.edges.clone(), w: w.to_vec(), spins: spec.spins.clone(), b: b.to_vec() }
+    }
+
+    fn energy(&self, st: &[i8]) -> f64 {
+        let mut e = 0.0;
+        for (k, &(i, j)) in self.edges.iter().enumerate() {
+            e -= self.w[k] * (st[i] * st[j]) as f64;
+        }
+        for (k, &s) in self.spins.iter().enumerate() {
+            e -= self.b[k] * st[s] as f64;
+        }
+        e
+    }
+}
+
+/// One die's share of one epoch.
+#[derive(Debug, Clone)]
+pub(crate) struct EpochShard {
+    /// The pattern shard as a range of dataset rows (workers hold the
+    /// dataset via their shared params — only the range travels),
+    /// possibly empty. `start` is the [`GradAccum`] slot offset.
+    pub patterns: Range<usize>,
+    /// Free-running model samples to collect (0 = no negative work).
+    pub neg_samples: usize,
+    /// Thermalize before the negative samples (every epoch under CD;
+    /// only the first under PCD — the chains persist).
+    pub neg_burn_in: bool,
+    /// Current shadow model, when the negative phase is tempered.
+    pub shadow: Option<ShadowEnergy>,
+}
+
+/// Coordinator → train-worker commands.
+pub(crate) enum TrainCmd {
+    /// Program this register image through the die's own personality
+    /// and pin the training β.
+    Program {
+        /// The quantized register image.
+        codes: ProgrammedWeights,
+        /// Chip β during training.
+        beta: f32,
+    },
+    /// Best-effort restore of persistent chains from a checkpoint.
+    Restore {
+        /// One spin state per chain.
+        states: Vec<Vec<i8>>,
+    },
+    /// Run one epoch's phase work-units and report the accumulator.
+    Epoch(EpochShard),
+    /// Collect ~`samples` free-running visible samples.
+    Eval {
+        /// Target sample count for this die's share.
+        samples: usize,
+    },
+    /// Report the die's current chain states (persistent chains).
+    Checkpoint,
+    /// The run is over; leave the seat.
+    Finish,
+}
+
+/// Train-worker → coordinator messages.
+pub(crate) enum TrainMsg {
+    /// Sent once on joining: how many chains this die has.
+    Ready {
+        /// Shard index of the sender.
+        shard: usize,
+        /// Chain count of the die.
+        batch: usize,
+    },
+    /// One epoch shard's accumulated phase statistics.
+    Grad {
+        /// Shard index of the sender.
+        shard: usize,
+        /// The mergeable phase sums.
+        accum: GradAccum,
+        /// Per-chain sweeps this shard executed for the epoch.
+        sweeps: u64,
+    },
+    /// One evaluation share's visible histogram.
+    Hist {
+        /// Shard index of the sender.
+        shard: usize,
+        /// Histogram over the layout's visible spins.
+        hist: StateHistogram,
+        /// Per-chain sweeps spent evaluating.
+        sweeps: u64,
+    },
+    /// The die's chain states (answer to [`TrainCmd::Checkpoint`]).
+    Chains {
+        /// Shard index of the sender.
+        shard: usize,
+        /// One spin state per chain.
+        states: Vec<Vec<i8>>,
+    },
+    /// The shard failed (engine error, unsupported per-chain β, …).
+    Error {
+        /// Shard index of the sender.
+        shard: usize,
+        /// The diagnostic.
+        message: String,
+    },
+}
+
+/// Persistent tempered-negative state a worker keeps between epochs.
+struct NegCore {
+    core: TemperingCore,
+    round: usize,
+}
+
+/// The train worker's half of the protocol: announce the die, then
+/// execute commands until told (or hung up on) to finish. Runs on the
+/// die-owning thread — a [`ChipArrayServer`] worker seat or a thread
+/// spawned by [`run_training`].
+///
+/// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
+pub(crate) fn train_worker_loop<C: TrainableChip>(
+    shard: usize,
+    chip: &mut C,
+    params: &TrainParams,
+    cmd_rx: &mpsc::Receiver<TrainCmd>,
+    out_tx: &mpsc::Sender<TrainMsg>,
+) {
+    if out_tx.send(TrainMsg::Ready { shard, batch: chip.batch() }).is_err() {
+        return; // coordinator already gone
+    }
+    let spec = params.spec();
+    let mut beta = params.cd.beta as f32;
+    let mut neg_core: Option<NegCore> = None;
+    while let Ok(cmd) = cmd_rx.recv() {
+        let result: Result<Option<TrainMsg>> = match cmd {
+            TrainCmd::Finish => break,
+            TrainCmd::Program { codes, beta: b } => {
+                beta = b;
+                chip.program_codes(&codes).map(|()| {
+                    chip.set_beta(beta);
+                    None
+                })
+            }
+            TrainCmd::Restore { states } => {
+                // best-effort: an engine without set_states support (or
+                // a batch mismatch) re-thermalizes via the first
+                // epoch's burn-in instead
+                let _ = chip.set_states(&states);
+                Ok(None)
+            }
+            TrainCmd::Epoch(work) => {
+                run_epoch_shard(shard, chip, params, &spec, &work, beta, &mut neg_core)
+                    .map(Some)
+            }
+            TrainCmd::Eval { samples } => run_eval_share(shard, chip, &spec, samples).map(Some),
+            TrainCmd::Checkpoint => Ok(Some(TrainMsg::Chains { shard, states: chip.states() })),
+        };
+        let msg = match result {
+            Ok(None) => continue,
+            Ok(Some(m)) => m,
+            Err(e) => TrainMsg::Error { shard, message: format!("{e:#}") },
+        };
+        let failed = matches!(msg, TrainMsg::Error { .. });
+        if out_tx.send(msg).is_err() || failed {
+            break;
+        }
+    }
+}
+
+/// One die's epoch: positive pattern shard, then its negative share
+/// (plain Gibbs or tempered). The chip-call sequence for a whole-
+/// dataset shard with plain negative is exactly the legacy trainer's.
+fn run_epoch_shard<C: TrainableChip>(
+    shard: usize,
+    chip: &mut C,
+    params: &TrainParams,
+    spec: &PhaseSpec,
+    work: &EpochShard,
+    beta: f32,
+    neg_core: &mut Option<NegCore>,
+) -> Result<TrainMsg> {
+    let mut acc =
+        GradAccum::new(params.dataset.patterns.len(), spec.edges.len(), spec.spins.len());
+    let mut sweeps = 0u64;
+    if !work.patterns.is_empty() {
+        let patterns = &params.dataset.patterns[work.patterns.clone()];
+        grad::collect_positive(chip, spec, patterns, work.patterns.start, &mut acc)?;
+        sweeps += (patterns.len() * (spec.k_sweeps + spec.samples_per_pattern)) as u64;
+    }
+    if work.neg_samples > 0 {
+        match (&params.tempered, &work.shadow) {
+            (Some(cfg), Some(shadow)) => {
+                sweeps += tempered_negative(
+                    chip,
+                    spec,
+                    cfg,
+                    shadow,
+                    work.neg_samples,
+                    work.neg_burn_in,
+                    params.cd.beta,
+                    beta,
+                    neg_core,
+                    &mut acc,
+                )?;
+            }
+            _ => {
+                grad::collect_negative(chip, spec, work.neg_samples, work.neg_burn_in, &mut acc)?;
+                sweeps += (work.neg_samples + if work.neg_burn_in { spec.k_sweeps } else { 0 })
+                    as u64;
+            }
+        }
+    }
+    Ok(TrainMsg::Grad { shard, accum: acc, sweeps })
+}
+
+/// The tempered negative phase: run the die's chains as a replica-
+/// exchange ladder (hottest β → the training β) and record the coldest
+/// rung's occupant as the model sample each round. Under PCD the core —
+/// rung↔chain map, swap RNG, adapting ladder — persists across epochs
+/// together with the chain states.
+#[allow(clippy::too_many_arguments)]
+fn tempered_negative<C: TrainableChip>(
+    chip: &mut C,
+    spec: &PhaseSpec,
+    cfg: &TemperedNegative,
+    shadow: &ShadowEnergy,
+    samples: usize,
+    fresh: bool,
+    beta_cold: f64,
+    restore_beta: f32,
+    neg_core: &mut Option<NegCore>,
+    acc: &mut GradAccum,
+) -> Result<u64> {
+    chip.set_clamps(&[]);
+    if fresh || neg_core.is_none() {
+        let tp = TemperingParams {
+            ladder: BetaLadder::geometric(cfg.beta_hot, beta_cold, cfg.rungs),
+            sweeps_per_round: cfg.sweeps_per_round,
+            // the core runs for as long as training lasts; rounds only
+            // bounds trace recording, which record_every already damps
+            rounds: usize::MAX / 2,
+            adapt_every: cfg.adapt_every,
+            tuning: cfg.tuning,
+            record_every: 4096,
+            seed: cfg.seed,
+        };
+        *neg_core = Some(NegCore { core: TemperingCore::new(&tp, chip.batch())?, round: 0 });
+    }
+    let nc = neg_core.as_mut().expect("core installed above");
+    let burn_rounds = if fresh { spec.k_sweeps } else { 0 };
+    let mut sweeps = 0u64;
+    for phase in 0..burn_rounds + samples {
+        chip.set_betas(&nc.core.chain_betas(1.0))?;
+        chip.sweeps(cfg.sweeps_per_round)?;
+        sweeps += cfg.sweeps_per_round as u64;
+        let states = chip.states();
+        let energies: Vec<f64> = states.iter().map(|st| shadow.energy(st)).collect();
+        if phase >= burn_rounds {
+            // the chain that HELD the coldest rung during this sweep
+            // phase (read before the swap moves re-pin the βs)
+            let cold = nc.core.chain_at_rung()[cfg.rungs - 1];
+            acc.record_negative(spec, &states[cold]);
+        }
+        nc.core.finish_round(nc.round, &energies, &states);
+        nc.round += 1;
+    }
+    // leave a uniform β for the next clamped phase / evaluation
+    chip.set_beta(restore_beta);
+    Ok(sweeps)
+}
+
+/// One die's evaluation share: the legacy `visible_histogram` sequence
+/// over `samples` target records.
+fn run_eval_share<C: TrainableChip>(
+    shard: usize,
+    chip: &mut C,
+    spec: &PhaseSpec,
+    samples: usize,
+) -> Result<TrainMsg> {
+    chip.set_clamps(&[]);
+    let mut hist = StateHistogram::new(&spec.visible);
+    let mut sweeps = 0u64;
+    chip.sweeps(spec.k_sweeps * 4)?;
+    sweeps += (spec.k_sweeps * 4) as u64;
+    while (hist.total() as usize) < samples {
+        chip.sweeps(2)?;
+        sweeps += 2;
+        for st in chip.states() {
+            hist.record(&st);
+        }
+    }
+    Ok(TrainMsg::Hist { shard, hist, sweeps })
+}
+
+/// Split `total` into `parts` near-equal counts (earlier parts take the
+/// remainder), summing exactly to `total`.
+fn split_counts(total: usize, parts: usize) -> Vec<usize> {
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// Contiguous near-equal ranges tiling `0..total` across `parts`.
+fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for n in split_counts(total, parts) {
+        out.push(start..start + n);
+        start += n;
+    }
+    out
+}
+
+fn recv_by(
+    rx: &mpsc::Receiver<TrainMsg>,
+    deadline: Instant,
+) -> Result<TrainMsg, mpsc::RecvTimeoutError> {
+    rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
+}
+
+/// The work placement of one run: which dies run the clamped positive
+/// phase, which host the negative chains, and how the budgets split.
+struct Placement {
+    /// Die index → pattern range (empty range = no positive work).
+    pattern_ranges: Vec<Range<usize>>,
+    /// Die index → negative-phase sample share (0 = none).
+    neg_shares: Vec<usize>,
+    /// Dies hosting negative chains, in shard order.
+    neg_dies: Vec<usize>,
+    /// Die index → evaluation sample share (0 = none).
+    eval_shares: Vec<usize>,
+}
+
+impl Placement {
+    fn new(params: &TrainParams) -> Self {
+        let dies = params.dies;
+        let n_patterns = params.dataset.patterns.len();
+        let (pos_dies, neg_dies): (Vec<usize>, Vec<usize>) = if params.pcd {
+            ((0..dies - 1).collect(), vec![dies - 1])
+        } else {
+            ((0..dies).collect(), (0..dies).collect())
+        };
+        let mut pattern_ranges = vec![0..0; dies];
+        for (k, range) in split_ranges(n_patterns, pos_dies.len()).into_iter().enumerate() {
+            pattern_ranges[pos_dies[k]] = range;
+        }
+        let mut neg_shares = vec![0; dies];
+        for (k, share) in
+            split_counts(params.cd.samples_per_pattern, neg_dies.len()).into_iter().enumerate()
+        {
+            neg_shares[neg_dies[k]] = share;
+        }
+        // evaluate on the positive dies under PCD (the negative die's
+        // chains stay undisturbed), on every die otherwise
+        let eval_dies = if params.pcd { &pos_dies } else { &neg_dies };
+        let mut eval_shares = vec![0; dies];
+        for (k, share) in
+            split_counts(params.eval_samples, eval_dies.len()).into_iter().enumerate()
+        {
+            eval_shares[eval_dies[k]] = share;
+        }
+        Self { pattern_ranges, neg_shares, neg_dies, eval_shares }
+    }
+}
+
+/// The coordinator's half of the protocol: handshake with every seat,
+/// then drive the epoch loop — fan the phase work-units out, all-reduce
+/// the [`GradAccum`]s at a bounded barrier, apply the update in the
+/// shared [`CdTrainer`], program the new codes back to every die, and
+/// evaluate at the configured cadence. `on_epoch` observes each
+/// recorded [`EpochStats`] as it is produced (the streaming hook).
+pub(crate) fn drive_training<F>(
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    segment_epochs: usize,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+    mut on_epoch: F,
+) -> Result<TrainedRun>
+where
+    F: FnMut(&EpochStats),
+{
+    params.validate()?;
+    let dies = cmd_txs.len();
+    ensure!(dies == params.dies, "{dies} seats for {} dies", params.dies);
+    ensure!(segment_epochs >= 1, "training needs at least one epoch");
+
+    // Handshake: learn each die's chain count (bounded wait).
+    let mut batches = vec![0usize; dies];
+    let mut joined = vec![false; dies];
+    let deadline = Instant::now() + params.barrier_timeout;
+    for _ in 0..dies {
+        match recv_by(out_rx, deadline) {
+            Ok(TrainMsg::Ready { shard, batch }) => {
+                ensure!(shard < dies, "unknown shard {shard}");
+                batches[shard] = batch;
+                joined[shard] = true;
+            }
+            Ok(TrainMsg::Error { shard, message }) => {
+                bail!("die {shard} failed during setup: {message}")
+            }
+            Ok(_) => bail!("protocol error: a die reported results before joining"),
+            Err(_) => {
+                let missing: Vec<usize> = (0..dies).filter(|&s| !joined[s]).collect();
+                bail!(
+                    "training: die(s) {missing:?} never joined within {:?}",
+                    params.barrier_timeout
+                );
+            }
+        }
+    }
+    if let Some(t) = &params.tempered {
+        for (s, &b) in batches.iter().enumerate() {
+            ensure!(
+                t.rungs <= b,
+                "tempered negative phase wants {} rungs but die {s} has only {b} chains",
+                t.rungs
+            );
+        }
+    }
+
+    let mut trainer =
+        CdTrainer::new(params.layout.clone(), params.dataset.clone(), params.cd);
+    if let Some(cp) = resume {
+        ensure!(
+            cp.gate == params.dataset.name,
+            "checkpoint is for gate {} but the run trains {}",
+            cp.gate,
+            params.dataset.name
+        );
+        trainer.restore_shadow(&cp.w, &cp.b, cp.epochs_done)?;
+    }
+    let spec = trainer.phase_spec();
+    let place = Placement::new(params);
+
+    // restore persistent chains before any programming/sweeping
+    if let Some(cp) = resume {
+        for (k, &die) in place.neg_dies.iter().enumerate() {
+            if let Some(states) = cp.chains.get(k) {
+                if cmd_txs[die].send(TrainCmd::Restore { states: states.clone() }).is_err() {
+                    bail!("training: die {die} hung up before the run started");
+                }
+            }
+        }
+    }
+    let program_all = |trainer: &CdTrainer| -> Result<()> {
+        for (s, tx) in cmd_txs.iter().enumerate() {
+            let cmd = TrainCmd::Program {
+                codes: trainer.codes.clone(),
+                beta: params.cd.beta as f32,
+            };
+            if tx.send(cmd).is_err() {
+                bail!("training: die {s} hung up at a program step");
+            }
+        }
+        Ok(())
+    };
+    program_all(&trainer)?;
+
+    let n_patterns = params.dataset.patterns.len();
+    let mut stats: Vec<EpochStats> = Vec::new();
+    let mut total_sweeps = 0u64;
+    for e in 0..segment_epochs {
+        let epoch_no = trainer.epochs_done();
+        let shadow = params
+            .tempered
+            .as_ref()
+            .map(|_| ShadowEnergy::new(&spec, trainer.shadow().0, trainer.shadow().1));
+        // 1. fan the epoch's work-units out
+        for (s, tx) in cmd_txs.iter().enumerate() {
+            let work = EpochShard {
+                patterns: place.pattern_ranges[s].clone(),
+                neg_samples: place.neg_shares[s],
+                neg_burn_in: e == 0 || !params.pcd,
+                shadow: shadow.clone(),
+            };
+            if tx.send(TrainCmd::Epoch(work)).is_err() {
+                bail!("training: die {s} hung up before epoch {epoch_no}");
+            }
+        }
+        // 2. all-reduce barrier: every die must report within the timeout
+        let mut grads: Vec<Option<GradAccum>> = (0..dies).map(|_| None).collect();
+        let deadline = Instant::now() + params.barrier_timeout;
+        for _ in 0..dies {
+            match recv_by(out_rx, deadline) {
+                Ok(TrainMsg::Grad { shard, accum, sweeps }) => {
+                    ensure!(shard < dies, "unknown shard {shard}");
+                    ensure!(
+                        accum.patterns() == n_patterns,
+                        "die {shard} reported {} pattern slots, expected {n_patterns}",
+                        accum.patterns()
+                    );
+                    total_sweeps += sweeps;
+                    grads[shard] = Some(accum);
+                }
+                Ok(TrainMsg::Error { shard, message }) => {
+                    bail!("training: die {shard} failed at epoch {epoch_no}: {message}")
+                }
+                Ok(_) => bail!("protocol error: unexpected message at epoch {epoch_no}"),
+                Err(_) => {
+                    let stalled: Vec<usize> =
+                        (0..dies).filter(|&s| grads[s].is_none()).collect();
+                    bail!(
+                        "training: gradient barrier timed out after {:?} at epoch \
+                         {epoch_no}; stalled die(s): {stalled:?}",
+                        params.barrier_timeout
+                    );
+                }
+            }
+        }
+        // 3. merge in shard order (deterministic regardless of arrival
+        //    order) and apply the update in the shared trainer
+        let mut total = GradAccum::new(n_patterns, spec.edges.len(), spec.spins.len());
+        for g in grads.iter().flatten() {
+            total.merge(g);
+        }
+        let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
+        let gap = trainer.apply_gradient(&dc, &dm);
+        program_all(&trainer)?;
+        // 4. evaluate at the cadence (last epoch always)
+        if e % params.eval_every == 0 || e == segment_epochs - 1 {
+            let mut expected = 0usize;
+            for (s, tx) in cmd_txs.iter().enumerate() {
+                if place.eval_shares[s] == 0 {
+                    continue;
+                }
+                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                    bail!("training: die {s} hung up before evaluation");
+                }
+                expected += 1;
+            }
+            let mut hists: Vec<Option<StateHistogram>> = (0..dies).map(|_| None).collect();
+            let deadline = Instant::now() + params.barrier_timeout;
+            for _ in 0..expected {
+                match recv_by(out_rx, deadline) {
+                    Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
+                        ensure!(shard < dies, "unknown shard {shard}");
+                        total_sweeps += sweeps;
+                        hists[shard] = Some(hist);
+                    }
+                    Ok(TrainMsg::Error { shard, message }) => {
+                        bail!("training: die {shard} failed evaluating: {message}")
+                    }
+                    Ok(_) => bail!("protocol error: unexpected message during evaluation"),
+                    Err(_) => bail!(
+                        "training: evaluation barrier timed out after {:?} at epoch {epoch_no}",
+                        params.barrier_timeout
+                    ),
+                }
+            }
+            let mut merged = StateHistogram::new(&params.layout.visible);
+            for h in hists.iter().flatten() {
+                merged.merge(h)?;
+            }
+            let p_model = merged.probabilities();
+            let p_target = params.dataset.target_distribution();
+            let (kl, valid) = kl_and_valid(&p_target, &p_model);
+            let stat = EpochStats { epoch: epoch_no, kl, corr_gap: gap, valid_mass: valid };
+            on_epoch(&stat);
+            stats.push(stat);
+        }
+    }
+
+    // collect persistent chains for the checkpoint, then dismiss seats
+    let mut chains: Vec<Vec<Vec<i8>>> = Vec::new();
+    if params.pcd {
+        for &die in &place.neg_dies {
+            if cmd_txs[die].send(TrainCmd::Checkpoint).is_err() {
+                bail!("training: die {die} hung up before checkpointing");
+            }
+        }
+        let mut got: Vec<Option<Vec<Vec<i8>>>> = (0..dies).map(|_| None).collect();
+        let deadline = Instant::now() + params.barrier_timeout;
+        for _ in 0..place.neg_dies.len() {
+            match recv_by(out_rx, deadline) {
+                Ok(TrainMsg::Chains { shard, states }) => {
+                    ensure!(shard < dies, "unknown shard {shard}");
+                    got[shard] = Some(states);
+                }
+                Ok(TrainMsg::Error { shard, message }) => {
+                    bail!("training: die {shard} failed checkpointing: {message}")
+                }
+                Ok(_) => bail!("protocol error: unexpected message while checkpointing"),
+                Err(_) => bail!(
+                    "training: checkpoint barrier timed out after {:?}",
+                    params.barrier_timeout
+                ),
+            }
+        }
+        for &die in &place.neg_dies {
+            chains.push(got[die].take().unwrap_or_default());
+        }
+    }
+    for tx in cmd_txs {
+        let _ = tx.send(TrainCmd::Finish);
+    }
+
+    let (w, b) = trainer.shadow();
+    let last = stats.last().cloned().expect("last epoch always evaluates");
+    Ok(TrainedRun {
+        checkpoint: TrainCheckpoint {
+            gate: params.dataset.name.to_string(),
+            w: w.to_vec(),
+            b: b.to_vec(),
+            epochs_done: trainer.epochs_done(),
+            chains,
+        },
+        codes: trainer.codes.clone(),
+        final_kl: last.kl,
+        final_valid_mass: last.valid_mass,
+        stats,
+        total_sweeps,
+    })
+}
+
+/// Run a training job across `chips.len()` dies, one shard each (see
+/// the [module docs](self) for the protocol). The chips are moved into
+/// per-shard worker threads; the caller prepares them (personality
+/// bound, chains seeded) exactly as for the legacy [`CdTrainer`] — the
+/// 1-chip case reproduces [`CdTrainer::train`] bit-for-bit.
+///
+/// On a barrier timeout the stalled worker thread is *abandoned* (the
+/// run fails with a diagnostic instead of deadlocking), mirroring
+/// [`crate::coordinator::run_sharded_tempering`].
+///
+/// [`CdTrainer`]: crate::learning::CdTrainer
+/// [`CdTrainer::train`]: crate::learning::CdTrainer::train
+pub fn run_training<C>(chips: Vec<C>, params: &TrainParams) -> Result<TrainedRun>
+where
+    C: TrainableChip + Send + 'static,
+{
+    run_training_observed(chips, params, None, params.cd.epochs, |_| {})
+}
+
+/// Resume a checkpointed run on a fresh die array for `epochs` more
+/// epochs (the lr-decay schedule continues from the checkpoint).
+pub fn run_training_resumed<C>(
+    chips: Vec<C>,
+    params: &TrainParams,
+    checkpoint: &TrainCheckpoint,
+    epochs: usize,
+) -> Result<TrainedRun>
+where
+    C: TrainableChip + Send + 'static,
+{
+    run_training_observed(chips, params, Some(checkpoint), epochs, |_| {})
+}
+
+/// [`run_training`] with an explicit resume point, epoch budget and a
+/// per-epoch observer — the streaming hook the CLI and the equivalence
+/// suite use.
+pub fn run_training_observed<C, F>(
+    chips: Vec<C>,
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    epochs: usize,
+    on_epoch: F,
+) -> Result<TrainedRun>
+where
+    C: TrainableChip + Send + 'static,
+    F: FnMut(&EpochStats),
+{
+    ensure!(
+        chips.len() == params.dies,
+        "params ask for {} dies but {} chips were provided",
+        params.dies,
+        chips.len()
+    );
+    let shared = Arc::new(params.clone());
+    let (out_tx, out_rx) = mpsc::channel();
+    let mut cmd_txs = Vec::with_capacity(chips.len());
+    let mut joins = Vec::with_capacity(chips.len());
+    for (shard, mut chip) in chips.into_iter().enumerate() {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<TrainCmd>();
+        cmd_txs.push(cmd_tx);
+        let out = out_tx.clone();
+        let p = shared.clone();
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("train-{shard}"))
+                .spawn(move || train_worker_loop(shard, &mut chip, &p, &cmd_rx, &out))
+                .map_err(|e| anyhow!("spawning train worker {shard}: {e}"))?,
+        );
+    }
+    drop(out_tx);
+    let result = drive_training(params, resume, epochs, &cmd_txs, &out_rx, on_epoch);
+    drop(cmd_txs);
+    if result.is_ok() {
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+    // on error a stalled worker may never return: abandon the handles
+    // (threads exit when their cmd channel drops) rather than deadlock.
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chimera::and_gate_layout;
+    use crate::learning::dataset;
+
+    fn params() -> TrainParams {
+        TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), CdParams::default())
+    }
+
+    #[test]
+    fn placement_single_die_owns_everything() {
+        let p = params();
+        let place = Placement::new(&p);
+        assert_eq!(place.pattern_ranges, vec![0..4]);
+        assert_eq!(place.neg_shares, vec![p.cd.samples_per_pattern]);
+        assert_eq!(place.neg_dies, vec![0]);
+        assert_eq!(place.eval_shares, vec![p.eval_samples]);
+    }
+
+    #[test]
+    fn placement_tiles_patterns_and_budget() {
+        let mut p = params();
+        p.dies = 3;
+        p.cd.samples_per_pattern = 10;
+        p.eval_samples = 7;
+        let place = Placement::new(&p);
+        assert_eq!(place.pattern_ranges, vec![0..2, 2..3, 3..4]);
+        assert_eq!(place.neg_shares.iter().sum::<usize>(), 10);
+        assert_eq!(place.eval_shares.iter().sum::<usize>(), 7);
+        assert_eq!(place.neg_dies, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn placement_pcd_dedicates_the_last_die() {
+        let mut p = params();
+        p.dies = 3;
+        p.pcd = true;
+        let place = Placement::new(&p);
+        // patterns over dies 0..2, negative chains on die 2 only
+        assert_eq!(place.pattern_ranges[2], 0..0);
+        assert_eq!(place.pattern_ranges[0].len() + place.pattern_ranges[1].len(), 4);
+        assert_eq!(place.neg_dies, vec![2]);
+        assert_eq!(place.neg_shares, vec![0, 0, p.cd.samples_per_pattern]);
+        // evaluation avoids the persistent-chain die
+        assert_eq!(place.eval_shares[2], 0);
+        assert_eq!(place.eval_shares[0] + place.eval_shares[1], p.eval_samples);
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut p = params();
+        p.pcd = true; // pcd on one die
+        assert!(p.validate().is_err());
+        p.dies = 2;
+        assert!(p.validate().is_ok());
+        p.tempered = Some(TemperedNegative { beta_hot: 3.0, ..Default::default() });
+        assert!(p.validate().is_err(), "hot end above the training β");
+        p.tempered = Some(TemperedNegative::default());
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn checkpoint_json_round_trips() {
+        let cp = TrainCheckpoint {
+            gate: "AND".into(),
+            w: vec![0.25, -0.5, 0.125],
+            b: vec![0.0, 1.0],
+            epochs_done: 17,
+            chains: vec![vec![vec![1, -1, 1], vec![-1, -1, 1]]],
+        };
+        let text = cp.to_json().to_string();
+        let back = TrainCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.gate, "AND");
+        assert_eq!(back.w, cp.w);
+        assert_eq!(back.b, cp.b);
+        assert_eq!(back.epochs_done, 17);
+        assert_eq!(back.chains, cp.chains);
+        // a corrupted chain spin is rejected
+        let bad = text.replace("[1,-1,1]", "[1,-3,1]");
+        assert!(TrainCheckpoint::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn split_helpers_tile_exactly() {
+        assert_eq!(split_counts(10, 3), vec![4, 3, 3]);
+        assert_eq!(split_counts(2, 4), vec![1, 1, 0, 0]);
+        assert_eq!(split_ranges(5, 2), vec![0..3, 3..5]);
+        let r = split_ranges(7, 3);
+        assert_eq!(r.iter().map(|x| x.len()).sum::<usize>(), 7);
+        assert_eq!(r[0].start, 0);
+        assert_eq!(r.last().unwrap().end, 7);
+    }
+
+    #[test]
+    fn shadow_energy_matches_hand_computation() {
+        let spec = grad::phase_spec(&and_gate_layout(0, 0), 1, 1);
+        let w: Vec<f64> = (0..spec.edges.len()).map(|k| 0.1 * k as f64).collect();
+        let b: Vec<f64> = (0..spec.spins.len()).map(|k| -0.05 * k as f64).collect();
+        let se = ShadowEnergy::new(&spec, &w, &b);
+        let st = vec![1i8; crate::N_SPINS];
+        // all spins +1: E = −Σw − Σb
+        let want = -w.iter().sum::<f64>() - b.iter().sum::<f64>();
+        assert!((se.energy(&st) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seat_seed_is_stable_and_per_shard() {
+        assert_eq!(seat_seed(1, 0), seat_seed(1, 0));
+        assert_ne!(seat_seed(1, 0), seat_seed(1, 1));
+        assert_ne!(seat_seed(1, 0), seat_seed(2, 0));
+    }
+}

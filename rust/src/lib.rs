@@ -35,6 +35,18 @@
 //! phases, bit-identical to the single-die engine in the 1-shard case
 //! (`rust/tests/sharded_equivalence.rs`).
 //!
+//! The in-situ learning loop scales the same way: the **training
+//! service** ([`learning::service`], served as
+//! [`coordinator::JobRequest::Train`], CLI `pchip train --dies N`)
+//! decomposes each contrastive-divergence epoch into pure, mergeable
+//! phase work-units ([`learning::grad`]) and fans them across the die
+//! array — every die samples both phases through its own mismatch
+//! personality, the gradients all-reduce exactly, and a 1-die run is
+//! bit-identical to the synchronous [`learning::CdTrainer`]
+//! (`rust/tests/train_service_equivalence.rs`). Persistent (PCD) and
+//! tempered negative phases plus JSON checkpoint/resume ride on top
+//! (`docs/TRAINING.md`).
+//!
 //! The β-ladder the tempering modes run on is itself tunable:
 //! [`annealing::tune_ladder`] runs Katzgraber-style round-trip-flux
 //! feedback (measure the up-mover profile in [`metrics::FluxStats`],

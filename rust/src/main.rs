@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! pchip info                         chip facts + artifact status
-//! pchip train  [--gate and|or|xor|adder] [--epochs N] [--lr X] …
+//! pchip train  [--gate and|or|xor|nand|nor|adder] [--dies N] [--pcd]
+//!              [--tempered-negative] [--epochs N] [--lr X]
+//!              [--checkpoint-out FILE] [--resume FILE] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
 //!              [--shards N] [--barrier-timeout-ms T]
@@ -32,7 +34,9 @@ use pchip::problems::maxcut::Graph;
 use pchip::runtime::{ArtifactSet, Runtime};
 use pchip::sampler::XlaSampler;
 
-/// Minimal flag parser: `--key value` pairs after the subcommand.
+/// Minimal flag parser: `--key value` pairs after the subcommand;
+/// a `--key` followed by another flag (or the end of the line) is a
+/// bare boolean flag (`--pcd`, `--tempered-negative`).
 struct Args {
     flags: HashMap<String, String>,
 }
@@ -45,9 +49,18 @@ impl Args {
             let k = argv[i]
                 .strip_prefix("--")
                 .ok_or_else(|| anyhow!("expected --flag, got `{}`", argv[i]))?;
-            let v = argv.get(i + 1).ok_or_else(|| anyhow!("--{k} needs a value"))?;
-            flags.insert(k.to_string(), v.clone());
-            i += 2;
+            match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    flags.insert(k.to_string(), v.clone());
+                    i += 2;
+                }
+                _ => {
+                    // bare flag: stored empty so value-taking flags can
+                    // still diagnose a forgotten value (`path_of`)
+                    flags.insert(k.to_string(), String::new());
+                    i += 1;
+                }
+            }
         }
         Ok(Self { flags })
     }
@@ -61,6 +74,19 @@ impl Args {
 
     fn str_or(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(String::as_str), Some("" | "true" | "1" | "yes"))
+    }
+
+    /// A flag that must carry a file path when present.
+    fn path_of(&self, key: &str) -> Result<Option<&str>> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(None),
+            Some("") => Err(anyhow!("--{key} needs a file path")),
+            Some(p) => Ok(Some(p)),
+        }
     }
 }
 
@@ -102,6 +128,9 @@ fn print_help() {
          subcommands:\n  \
          info    chip facts + artifact status\n  \
          train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
+         \u{20}       (--dies N fans the epoch across N dies through the\n  \
+         \u{20}        coordinator; --pcd keeps persistent negative chains;\n  \
+         \u{20}        --tempered-negative mixes the model via a β-ladder)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
          temper  replica-exchange sampling vs annealing, head-to-head\n  \
          \u{20}       (--shards N shards the ladder across N software dies;\n  \
@@ -163,6 +192,9 @@ impl pchip::sampler::Sampler for &mut dyn ErasedChip {
     fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
         (**self).set_betas(betas)
     }
+    fn set_states(&mut self, states: &[Vec<i8>]) -> Result<()> {
+        (**self).set_states(states)
+    }
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
         (**self).set_clamps(clamps)
     }
@@ -205,43 +237,114 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
-    let gate = args.str_or("gate", "and");
-    let epochs: usize = args.get("epochs", 150)?;
-    let mut params = CdParams { epochs, ..CdParams::default() };
-    params.lr = args.get("lr", params.lr)?;
-    params.beta = args.get("beta", params.beta)?;
-    let (layout, data) = match gate.as_str() {
+/// Pick a gate layout + dataset by name.
+fn gate_by_name(gate: &str) -> Result<(pchip::chimera::GateLayout, dataset::Dataset)> {
+    Ok(match gate {
         "and" => (pchip::chimera::and_gate_layout(0, 0), dataset::and_gate()),
         "or" => (pchip::chimera::and_gate_layout(0, 0), dataset::or_gate()),
         "xor" => (pchip::chimera::and_gate_layout(0, 0), dataset::xor_gate()),
+        "nand" => (pchip::chimera::and_gate_layout(0, 0), dataset::nand_gate()),
+        "nor" => (pchip::chimera::and_gate_layout(0, 0), dataset::nor_gate()),
         "adder" => (pchip::chimera::full_adder_layout(0, 1), dataset::full_adder()),
-        g => bail!("unknown gate `{g}`"),
-    };
-    let name = format!("train_{gate}");
-    let exp_cfg = exp::GateExperiment {
-        layout,
-        dataset: data,
-        params,
-        mismatch: cfg.mismatch,
-        chip_seed: args.get("seed", 7)?,
-        snapshot_epochs: vec![0, epochs / 8, epochs / 2, epochs.saturating_sub(1)],
-        eval_samples: 4000,
-    };
-    let report = with_chip(args, &cfg, 8, |mut chip| {
-        exp::fig7_gate_learning(&exp_cfg, &mut chip, Some(&name))
-    })?;
-    println!(
-        "gate {gate}: final KL {:.4}, valid mass {:.3}",
-        report.final_kl, report.final_valid_mass
-    );
-    println!("  per-epoch series → results/{name}.csv");
-    for (epoch, dist) in &report.snapshots {
-        let peak: f64 = dist.iter().cloned().fold(0.0, f64::max);
-        println!("  epoch {epoch}: distribution peak {peak:.3}");
+        g => bail!("unknown gate `{g}` (and|or|xor|nand|nor|adder)"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use pchip::annealing::LadderTuning;
+    use pchip::learning::{TemperedNegative, TrainCheckpoint, TrainParams};
+
+    let mut cfg = load_config(args)?;
+    let gate = args.str_or("gate", "and");
+    let (layout, data) = gate_by_name(&gate)?;
+    let epochs: usize = args.get("epochs", 150)?;
+    let mut cd = CdParams { epochs, ..CdParams::default() };
+    cd.lr = args.get("lr", cd.lr)?;
+    cd.beta = args.get("beta", cd.beta)?;
+    cd.k_sweeps = args.get("k-sweeps", cd.k_sweeps)?;
+    cd.samples_per_pattern = args.get("samples-per-pattern", cd.samples_per_pattern)?;
+    let dies: usize = args.get("dies", 1)?;
+    let mut params = TrainParams::new(layout, data, cd);
+    params.dies = dies;
+    params.pcd = args.flag("pcd");
+    params.eval_every = args.get("eval-every", 5)?;
+    params.eval_samples = args.get("eval-samples", 4000)?;
+    params.seed = args.get("seed", 7u64)?;
+    if args.flag("tempered-negative") {
+        params.tempered = Some(TemperedNegative {
+            rungs: args.get("neg-rungs", 6)?,
+            beta_hot: args.get("neg-beta-hot", 0.5)?,
+            sweeps_per_round: args.get("neg-sweeps-per-round", 2)?,
+            adapt_every: args.get("neg-adapt-every", 0)?,
+            tuning: match args.str_or("neg-tune", "off").as_str() {
+                "off" => LadderTuning::Off,
+                "acceptance" => LadderTuning::Acceptance,
+                "flux" => LadderTuning::RoundTripFlux,
+                other => bail!("unknown --neg-tune `{other}` (off|acceptance|flux)"),
+            },
+            ..Default::default()
+        });
     }
-    Ok(())
+
+    // the array IS the gang: one die per shard, each with its own
+    // personality (cfg.server.seed + k), every phase through silicon
+    cfg.server.chips = dies;
+    let engine = match args.str_or("engine", "sw").as_str() {
+        "sw" => EngineKind::Software,
+        "xla" => EngineKind::Xla { artifacts_dir: cfg.artifacts_dir() },
+        other => bail!("unknown engine `{other}` (sw|xla)"),
+    };
+    let srv = ChipArrayServer::start(&cfg, engine)?;
+
+    let resume = match args.path_of("resume")? {
+        Some(p) => Some(TrainCheckpoint::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    let mode = match (&resume, params.pcd, params.tempered.is_some()) {
+        (Some(_), _, _) => "resumed",
+        (None, true, true) => "PCD + tempered negative",
+        (None, true, false) => "PCD",
+        (None, false, true) => "tempered negative",
+        (None, false, false) => "CD-k",
+    };
+    println!(
+        "training {gate} across {dies} die(s) [{mode}] — {} epochs through the coordinator",
+        epochs
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let request = match resume {
+        Some(checkpoint) => {
+            JobRequest::TrainEpoch { params, checkpoint, epochs, progress: Some(tx) }
+        }
+        None => JobRequest::Train { params, progress: Some(tx) },
+    };
+    let ticket = srv.submit(request)?;
+    println!("{:>6} {:>10} {:>10} {:>12}", "epoch", "KL", "corr_gap", "valid_mass");
+    for s in rx {
+        println!("{:>6} {:>10.4} {:>10.4} {:>12.3}", s.epoch, s.kl, s.corr_gap, s.valid_mass);
+    }
+    match ticket.wait() {
+        JobResult::Trained { stats, checkpoint, final_kl, final_valid_mass, dies, .. } => {
+            println!(
+                "gate {gate}: final KL {final_kl:.4}, valid mass {final_valid_mass:.3} \
+                 (dies {dies:?})"
+            );
+            let name = format!("train_{gate}");
+            let rows: Vec<Vec<f64>> = stats
+                .iter()
+                .map(|e| vec![e.epoch as f64, e.kl, e.corr_gap, e.valid_mass])
+                .collect();
+            pchip::util::bench::write_csv(&name, "epoch,kl,corr_gap,valid_mass", &rows)?;
+            println!("  per-epoch series → results/{name}.csv");
+            if let Some(path) = args.path_of("checkpoint-out")? {
+                checkpoint.save(std::path::Path::new(path))?;
+                println!("  checkpoint → {path} (resume with --resume {path})");
+            }
+            Ok(())
+        }
+        JobResult::Failed(msg) => bail!("training failed: {msg}"),
+        other => bail!("unexpected result {other:?}"),
+    }
 }
 
 fn cmd_anneal(args: &Args) -> Result<()> {

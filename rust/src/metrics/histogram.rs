@@ -72,6 +72,25 @@ impl StateHistogram {
         idx.into_iter().take(k).map(|i| (i, p[i])).collect()
     }
 
+    /// Merge another histogram's counts into this one (exact u64
+    /// addition, so merging per-die evaluation shares in any order
+    /// reproduces the pooled distribution — the training service's
+    /// evaluation all-reduce). Errors when the observed spin sets
+    /// differ.
+    pub fn merge(&mut self, other: &StateHistogram) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.spins == other.spins,
+            "histograms observe different spins: {:?} vs {:?}",
+            self.spins,
+            other.spins
+        );
+        for (c, &o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.total += other.total;
+        Ok(())
+    }
+
     /// Reset all counters.
     pub fn clear(&mut self) {
         self.counts.iter_mut().for_each(|c| *c = 0);
@@ -133,6 +152,21 @@ mod tests {
         let top = h.top(2);
         assert_eq!(top[0].0, 1);
         assert!(top[0].1 > top[1].1);
+    }
+
+    #[test]
+    fn merge_pools_counts() {
+        let mut a = StateHistogram::new(&[0, 1]);
+        a.record_pattern(&[1, -1]);
+        let mut b = StateHistogram::new(&[0, 1]);
+        b.record_pattern(&[1, -1]);
+        b.record_pattern(&[-1, 1]);
+        a.merge(&b).unwrap();
+        assert_eq!(a.total(), 3);
+        assert!((a.probability(&[1, -1]) - 2.0 / 3.0).abs() < 1e-12);
+        // mismatched spin sets are rejected
+        let c = StateHistogram::new(&[2, 3]);
+        assert!(a.merge(&c).is_err());
     }
 
     #[test]

@@ -76,6 +76,18 @@ pub trait Sampler {
         Err(anyhow::anyhow!("this engine does not support per-chain β (tempering)"))
     }
 
+    /// Overwrite every chain's spin state (`states.len()` must equal
+    /// [`Sampler::batch`]; clamped spins are re-asserted) — the
+    /// checkpoint-restore hook for persistent-chain training
+    /// ([`crate::learning::service`]).
+    ///
+    /// Default: unsupported. [`SoftwareSampler`] implements it; the AOT
+    /// artifact and the cycle-level chip expose no state-injection port,
+    /// so their callers re-thermalize instead.
+    fn set_states(&mut self, _states: &[Vec<i8>]) -> Result<()> {
+        Err(anyhow::anyhow!("this engine does not support setting chain states"))
+    }
+
     /// Clamp spins to fixed values (empty to release). Clamping is
     /// implemented the hardware-honest way: slope to 0, offset to ±big,
     /// so the artifact needs no special support.

@@ -165,6 +165,27 @@ impl Sampler for SoftwareSampler {
         Ok(())
     }
 
+    fn set_states(&mut self, states: &[Vec<i8>]) -> Result<()> {
+        anyhow::ensure!(
+            states.len() == self.states.len(),
+            "expected {} chain states, got {}",
+            self.states.len(),
+            states.len()
+        );
+        for (chain, src) in self.states.iter_mut().zip(states) {
+            anyhow::ensure!(
+                src.len() == N_SPINS,
+                "chain state covers {} spins, expected {N_SPINS}",
+                src.len()
+            );
+            chain.copy_from_slice(src);
+            for &(i, v) in &self.clamps {
+                chain[i] = v;
+            }
+        }
+        Ok(())
+    }
+
     fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
         self.clamps = clamps.to_vec();
         self.g.copy_from_slice(&self.g_base);
@@ -375,6 +396,30 @@ mod tests {
         // set_beta resets every chain
         s.set_beta(0.7);
         s.sweeps(1).unwrap();
+    }
+
+    #[test]
+    fn set_states_restores_chains_and_reasserts_clamps() {
+        let (f, (a, _)) = folded_ferro_pair();
+        let mut s = SoftwareSampler::new(2, 3);
+        s.load(&f);
+        let saved = s.states();
+        s.sweeps(5).unwrap();
+        s.set_clamps(&[(a, -1)]);
+        s.set_states(&saved).unwrap();
+        let got = s.states();
+        // every unclamped spin came back; the clamp still holds
+        for (chain, orig) in got.iter().zip(&saved) {
+            assert_eq!(chain[a], -1);
+            for (i, (&x, &y)) in chain.iter().zip(orig).enumerate() {
+                if i != a {
+                    assert_eq!(x, y, "spin {i}");
+                }
+            }
+        }
+        // arity errors are rejected
+        assert!(s.set_states(&saved[..1]).is_err());
+        assert!(s.set_states(&[vec![1i8; 4], vec![-1i8; 4]]).is_err());
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Equivalence + behavior suite for the distributed training service
+//! (`learning/service.rs`).
+//!
+//! The die-parallel trainer only counts if it provably matches the
+//! single-die one:
+//!
+//! 1. **1 die ≡ `CdTrainer`** — with the same chip seed and
+//!    personality, a 1-die service run must reproduce the legacy
+//!    synchronous trainer's epoch stats, learned register image and
+//!    lr schedule *bit-for-bit*.
+//! 2. **N dies at equal budget** — pattern shards tile the truth table
+//!    and the negative budget splits across dies, so an N-die full-adder
+//!    run draws exactly the same per-epoch sample count as 1 die; its
+//!    final KL must not be worse than the single-die baseline (beyond
+//!    the evaluation noise floor), and the whole run is deterministic.
+//! 3. **PCD + tempered negative** — the persistent-chain die keeps its
+//!    chains across epochs, checkpoints them, and a resumed run
+//!    continues the lr schedule.
+//! 4. **Protocol liveness** — a stalled die expires the gradient
+//!    barrier into a diagnostic error, never a deadlock.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pchip::analog::Personality;
+use pchip::chimera::{and_gate_layout, full_adder_layout, Topology};
+use pchip::config::MismatchConfig;
+use pchip::learning::{
+    dataset, run_training, run_training_observed, run_training_resumed, CdParams, CdTrainer,
+    EpochStats, Hw, TemperedNegative, TrainParams, TrainableChip,
+};
+use pchip::sampler::{Sampler, SoftwareSampler};
+
+/// A die exactly as the legacy single-die experiments build it.
+fn die(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
+    Hw::new(SoftwareSampler::new(batch, seed), personality)
+}
+
+fn quick_cd() -> CdParams {
+    CdParams {
+        epochs: 12,
+        lr: 0.15,
+        k_sweeps: 3,
+        samples_per_pattern: 8,
+        ..CdParams::default()
+    }
+}
+
+#[test]
+fn one_die_service_run_is_bit_identical_to_cd_trainer() {
+    let cd = quick_cd();
+
+    // legacy synchronous reference
+    let mut chip = die(7, 8);
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    let legacy = trainer.train(&mut chip, 4, 600).unwrap();
+
+    // the same chip seed driven through the training service
+    let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    params.eval_every = 4;
+    params.eval_samples = 600;
+    let mut streamed: Vec<EpochStats> = Vec::new();
+    let run = run_training_observed(vec![die(7, 8)], &params, None, cd.epochs, |s| {
+        streamed.push(s.clone());
+    })
+    .unwrap();
+
+    // identical epoch stats, bit for bit
+    assert_eq!(legacy.len(), run.stats.len());
+    for (a, b) in legacy.iter().zip(&run.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+        assert_eq!(
+            a.corr_gap.to_bits(),
+            b.corr_gap.to_bits(),
+            "corr gap diverged at epoch {}",
+            a.epoch
+        );
+        assert_eq!(
+            a.valid_mass.to_bits(),
+            b.valid_mass.to_bits(),
+            "valid mass diverged at epoch {}",
+            a.epoch
+        );
+    }
+    // the streamed progress is the recorded series
+    assert_eq!(streamed.len(), run.stats.len());
+    for (a, b) in streamed.iter().zip(&run.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits());
+    }
+    // identical learned register image and shadow schedule
+    assert_eq!(run.codes.j_codes, trainer.codes.j_codes);
+    assert_eq!(run.codes.h_codes, trainer.codes.h_codes);
+    assert_eq!(run.codes.enables, trainer.codes.enables);
+    assert_eq!(run.checkpoint.epochs_done, cd.epochs);
+    let (w, b) = trainer.shadow();
+    assert_eq!(run.checkpoint.w, w);
+    assert_eq!(run.checkpoint.b, b);
+}
+
+#[test]
+fn one_die_coordinator_train_job_is_bit_identical_to_cd_trainer() {
+    use pchip::config::Config;
+    use pchip::coordinator::{ChipArrayServer, EngineKind, JobResult};
+    use pchip::learning::service::seat_seed;
+
+    let cd = quick_cd();
+    let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    params.eval_every = 4;
+    params.eval_samples = 600;
+
+    // Rebuild die 0's seat exactly as the server constructs it: the
+    // personality seeded cfg.server.seed, a 32-chain software engine
+    // with the same seed, chains randomized with the seat seed — then
+    // run the legacy synchronous trainer on it.
+    let cfg = Config::default();
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, cfg.server.seed, cfg.mismatch);
+    let mut chip = Hw::new(SoftwareSampler::new(32, cfg.server.seed), personality);
+    chip.set_clamps(&[]);
+    chip.randomize(seat_seed(params.seed, 0));
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    let legacy = trainer.train(&mut chip, 4, 600).unwrap();
+
+    // the same run served as a JobRequest::Train gang job
+    let mut cfg = Config::default();
+    cfg.server.chips = 1;
+    let srv = ChipArrayServer::start(&cfg, EngineKind::Software).unwrap();
+    match srv.run_training(params).unwrap() {
+        JobResult::Trained { stats, codes, checkpoint, .. } => {
+            assert_eq!(stats.len(), legacy.len());
+            for (a, b) in legacy.iter().zip(&stats) {
+                assert_eq!(a.epoch, b.epoch);
+                assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+                assert_eq!(a.corr_gap.to_bits(), b.corr_gap.to_bits());
+                assert_eq!(a.valid_mass.to_bits(), b.valid_mass.to_bits());
+            }
+            assert_eq!(codes.j_codes, trainer.codes.j_codes);
+            assert_eq!(codes.h_codes, trainer.codes.h_codes);
+            let (w, b) = trainer.shadow();
+            assert_eq!(checkpoint.w, w);
+            assert_eq!(checkpoint.b, b);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+}
+
+fn adder_params(dies: usize) -> TrainParams {
+    let cd = CdParams {
+        epochs: 120,
+        lr: 0.08,
+        lr_decay: 0.995,
+        k_sweeps: 4,
+        samples_per_pattern: 16,
+        beta: 2.2,
+        clip: 1.0,
+    };
+    let mut p = TrainParams::new(full_adder_layout(0, 1), dataset::full_adder(), cd);
+    p.dies = dies;
+    p.eval_every = 40;
+    p.eval_samples = 4000;
+    p
+}
+
+#[test]
+fn multi_die_adder_matches_single_die_kl_at_equal_budget() {
+    // single-die baseline: all 8 patterns + the full negative budget on
+    // die 0
+    let single = run_training(vec![die(11, 8)], &adder_params(1)).unwrap();
+
+    // 3 dies: pattern shards 3/3/2, negative budget split 6/5/5 — the
+    // per-epoch sample count is identical by construction
+    let chips = vec![die(11, 8), die(12, 8), die(13, 8)];
+    let multi = run_training(chips, &adder_params(3)).unwrap();
+
+    // both runs actually learned the adder
+    let first = single.stats.first().unwrap();
+    assert!(
+        single.final_kl < first.kl * 0.8,
+        "single-die run never converged: {} → {}",
+        first.kl,
+        single.final_kl
+    );
+    assert!(multi.final_valid_mass > 0.35, "multi-die valid mass {}", multi.final_valid_mass);
+    // equal budget, no regression: the die-parallel gradient (pooled
+    // negative chains from 3 independent dies) must reach a final KL at
+    // least as good as the single die up to the evaluation noise floor
+    assert!(
+        multi.final_kl <= single.final_kl + 0.3,
+        "multi-die KL {} worse than single-die {}",
+        multi.final_kl,
+        single.final_kl
+    );
+
+    // determinism: an identical 3-die run reproduces every stat bit
+    let chips = vec![die(11, 8), die(12, 8), die(13, 8)];
+    let again = run_training(chips, &adder_params(3)).unwrap();
+    assert_eq!(again.stats.len(), multi.stats.len());
+    for (a, b) in again.stats.iter().zip(&multi.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "nondeterminism at epoch {}", a.epoch);
+        assert_eq!(a.corr_gap.to_bits(), b.corr_gap.to_bits());
+        assert_eq!(a.valid_mass.to_bits(), b.valid_mass.to_bits());
+    }
+    assert_eq!(again.codes.j_codes, multi.codes.j_codes);
+    assert_eq!(again.checkpoint.w, multi.checkpoint.w);
+}
+
+#[test]
+fn pcd_tempered_run_learns_checkpoints_and_resumes() {
+    let cd = CdParams {
+        epochs: 50,
+        lr: 0.15,
+        lr_decay: 1.0,
+        k_sweeps: 3,
+        samples_per_pattern: 12,
+        ..CdParams::default()
+    };
+    let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    params.dies = 2;
+    params.pcd = true;
+    params.tempered = Some(TemperedNegative { beta_hot: 0.5, ..Default::default() });
+    params.eval_every = 10;
+    params.eval_samples = 1500;
+
+    let run = run_training(vec![die(21, 8), die(22, 8)], &params).unwrap();
+    assert!(
+        run.final_valid_mass > 0.55,
+        "PCD + tempered run did not learn: valid mass {}",
+        run.final_valid_mass
+    );
+    // the dedicated negative die checkpointed its persistent chains
+    assert_eq!(run.checkpoint.chains.len(), 1, "one PCD die");
+    assert_eq!(run.checkpoint.chains[0].len(), 8, "all 8 chains saved");
+    assert!(run.checkpoint.chains[0].iter().all(|c| c.len() == pchip::N_SPINS));
+    assert!(run.checkpoint.chains[0]
+        .iter()
+        .all(|c| c.iter().all(|&s| s == 1 || s == -1)));
+    assert_eq!(run.checkpoint.epochs_done, 50);
+
+    // resume on a fresh array: chains restored, lr schedule continues
+    let resumed =
+        run_training_resumed(vec![die(21, 8), die(22, 8)], &params, &run.checkpoint, 6)
+            .unwrap();
+    assert_eq!(resumed.checkpoint.epochs_done, 56);
+    assert!(resumed.stats.iter().all(|s| (50..56).contains(&s.epoch)), "{:?}", resumed.stats);
+    // a (lightly) trained gate stays trained through the resume
+    assert!(
+        resumed.final_valid_mass > 0.5,
+        "resume lost the gate: valid mass {}",
+        resumed.final_valid_mass
+    );
+}
+
+/// A trainable die whose sweep phase hangs — the failure the barrier
+/// timeout exists for (a wedged die, a dead worker, an overloaded
+/// host).
+struct StallingDie {
+    inner: Hw<SoftwareSampler>,
+    stall: Duration,
+}
+
+impl Sampler for StallingDie {
+    fn load(&mut self, folded: &pchip::analog::Folded) {
+        self.inner.load(folded);
+    }
+    fn set_beta(&mut self, beta: f32) {
+        self.inner.set_beta(beta);
+    }
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        self.inner.set_betas(betas)
+    }
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.inner.set_clamps(clamps);
+    }
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        std::thread::sleep(self.stall);
+        self.inner.sweeps(n)
+    }
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.inner.states()
+    }
+    fn randomize(&mut self, seed: u64) {
+        self.inner.randomize(seed);
+    }
+}
+
+impl TrainableChip for StallingDie {
+    fn program_codes(&mut self, w: &pchip::analog::ProgrammedWeights) -> Result<()> {
+        self.inner.program_codes(w)
+    }
+}
+
+#[test]
+fn stalled_die_times_out_with_a_diagnostic_not_a_deadlock() {
+    let cd = CdParams { epochs: 4, k_sweeps: 2, samples_per_pattern: 4, ..CdParams::default() };
+    let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    params.dies = 2;
+    params.barrier_timeout = Duration::from_millis(250);
+    let healthy = StallingDie { inner: die(31, 8), stall: Duration::ZERO };
+    let stalled = StallingDie { inner: die(32, 8), stall: Duration::from_secs(30) };
+    let t0 = Instant::now();
+    let err = run_training(vec![healthy, stalled], &params)
+        .expect_err("a stalled die must fail the run");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("barrier timed out"), "diagnostic missing: {msg}");
+    assert!(msg.contains("[1]"), "stalled die not named: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "timed out the slow way ({elapsed:?}) — the barrier did not bound the wait"
+    );
+}
