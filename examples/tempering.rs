@@ -90,6 +90,10 @@ fn main() -> anyhow::Result<()> {
         base: TemperingParams { adapt_every: 0, ..temper_params },
         shards: 2,
         barrier_timeout: std::time::Duration::from_secs(30),
+        // flip to true for the 1-phase-lag pipelined schedule: swap
+        // phases overlap the next sweep phase on every die (see
+        // `pchip temper --pipeline` and docs/ARCHITECTURE.md)
+        pipeline: false,
     };
     let s = fig9a_sk_temper_sharded(1, &sharded_params, MismatchConfig::default(), 4, None)?;
     println!("\nsharded across 2 dies (4 rungs each):");

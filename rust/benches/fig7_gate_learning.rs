@@ -4,17 +4,26 @@
 //! correlation convergence) on three corners — ideal die, default
 //! mismatch, heavy mismatch — and times the per-epoch cost. The paper's
 //! qualitative claim to reproduce: the mismatched die learns the gate
-//! essentially as well as the ideal one.
+//! essentially as well as the ideal one. Also records the training
+//! service's perf trajectory — die-scaling arms plus the pipelined vs
+//! barrier epoch schedule on a 3-die full-adder — in
+//! `BENCH_train.json` at the repo root (`PCHIP_BENCH_QUICK=1` shrinks
+//! every budget for the CI smoke leg).
 
+use pchip::chimera::full_adder_layout;
 use pchip::config::MismatchConfig;
 use pchip::experiments::{fig7_gate_learning, software_chip, GateExperiment};
-use pchip::learning::{run_training, CdParams, TrainParams, TrainableChip};
+use pchip::learning::{dataset, run_training, CdParams, TrainParams, TrainableChip};
 use pchip::sampler::Sampler;
-use pchip::util::bench::{write_csv, Bench};
+use pchip::util::bench::{quick, write_bench_json, write_csv, Bench};
 use pchip::util::json::{obj, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("=== fig7: AND-gate CD learning across mismatch corners ===");
+    let quick = quick();
+    println!(
+        "=== fig7: AND-gate CD learning across mismatch corners{} ===",
+        if quick { " (quick)" } else { "" }
+    );
     let corners = [
         ("ideal", MismatchConfig::ideal()),
         ("default", MismatchConfig::default()),
@@ -33,6 +42,9 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut rows = Vec::new();
     for (name, corner) in corners {
+        if quick {
+            break; // corners are the slow arms; the smoke leg skips them
+        }
         let mut exp = GateExperiment::and_default();
         exp.mismatch = corner;
         exp.params.epochs = 120;
@@ -59,21 +71,23 @@ fn main() -> anyhow::Result<()> {
     write_csv("fig7_corners", "final_kl,valid_mass,sec_per_epoch", &rows)?;
 
     // per-epoch microbench on the default corner
-    let exp = GateExperiment::and_default();
-    let mut chip = software_chip(7, MismatchConfig::default(), 8);
-    let mut trainer =
-        pchip::learning::CdTrainer::new(exp.layout.clone(), exp.dataset.clone(), exp.params);
-    chip.program_codes(&trainer.codes)?;
-    chip.set_beta(exp.params.beta as f32);
-    Bench::new(2, 10).run("cd_epoch(and, batch=8, cd-4)", || {
-        trainer.epoch(&mut chip).unwrap();
-    });
+    if !quick {
+        let exp = GateExperiment::and_default();
+        let mut chip = software_chip(7, MismatchConfig::default(), 8);
+        let mut trainer =
+            pchip::learning::CdTrainer::new(exp.layout.clone(), exp.dataset.clone(), exp.params);
+        chip.program_codes(&trainer.codes)?;
+        chip.set_beta(exp.params.beta as f32);
+        Bench::new(2, 10).run("cd_epoch(and, batch=8, cd-4)", || {
+            trainer.epoch(&mut chip).unwrap();
+        });
+    }
 
     // training-service scaling arms: the same AND-gate budget driven
     // die-parallel; records the perf trajectory in BENCH_train.json
     println!("\n=== training service: die-parallel CD at equal sample budget ===");
     let cd = CdParams {
-        epochs: 40,
+        epochs: if quick { 8 } else { 40 },
         lr: 0.12,
         lr_decay: 1.0,
         k_sweeps: 3,
@@ -113,17 +127,65 @@ fn main() -> anyhow::Result<()> {
             ("final_valid_mass", Json::from(run.final_valid_mass)),
         ]));
     }
+    // pipelined vs barrier epoch schedule: the 3-die full-adder arm at
+    // an equal sample budget (identical per-die command sequences, so
+    // the two runs compute the same thing — the timing difference is
+    // pure coordination overlap: streaming all-reduce + evaluations
+    // that no longer block the epoch loop)
+    println!("\n=== training service: pipelined vs barrier epoch schedule (3-die adder) ===");
+    let adder_cd = CdParams {
+        epochs: if quick { 8 } else { 30 },
+        lr: 0.12,
+        lr_decay: 1.0,
+        k_sweeps: 3,
+        samples_per_pattern: 12,
+        ..CdParams::default()
+    };
+    let mut pipeline_arms = Vec::new();
+    let mut secs = [0.0f64; 2];
+    for (k, pipeline) in [false, true].into_iter().enumerate() {
+        let mut params =
+            TrainParams::new(full_adder_layout(0, 1), dataset::full_adder(), adder_cd);
+        params.dies = 3;
+        params.eval_every = 2; // frequent evals: the overlap the pipeline hides
+        params.eval_samples = if quick { 600 } else { 1500 };
+        params.pipeline = pipeline;
+        let chips: Vec<_> = (0..3)
+            .map(|k| software_chip(7 + k as u64, MismatchConfig::default(), batch))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let run = run_training(chips, &params)?;
+        secs[k] = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>8}: {:.3}s for {} epochs  final KL {:.4}",
+            if pipeline { "pipeline" } else { "barrier" },
+            secs[k],
+            adder_cd.epochs,
+            run.final_kl
+        );
+        pipeline_arms.push(obj(vec![
+            ("schedule", Json::from(if pipeline { "pipeline" } else { "barrier" })),
+            ("dies", Json::from(3usize)),
+            ("gate", Json::from("full_adder")),
+            ("epochs", Json::from(adder_cd.epochs)),
+            ("secs", Json::from(secs[k])),
+            ("epochs_per_sec", Json::from(adder_cd.epochs as f64 / secs[k])),
+            ("final_kl", Json::from(run.final_kl)),
+            ("final_valid_mass", Json::from(run.final_valid_mass)),
+        ]));
+    }
+    println!("pipeline speedup over the barrier path: {:.2}×", secs[0] / secs[1]);
+
     let report = obj(vec![
         ("bench", Json::from("fig7_train_service")),
+        ("quick", Json::from(usize::from(quick))),
         ("epochs", Json::from(cd.epochs)),
         ("samples_per_pattern", Json::from(cd.samples_per_pattern)),
         ("arms", Json::Arr(arms)),
+        ("pipeline_speedup", Json::from(secs[0] / secs[1])),
+        ("pipeline_arms", Json::Arr(pipeline_arms)),
     ]);
-    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .parent()
-        .expect("crate lives under the repo root")
-        .join("BENCH_train.json");
-    std::fs::write(&out, report.to_string())?;
+    let out = write_bench_json("train", &report)?;
     println!("perf record → {}", out.display());
     Ok(())
 }

@@ -7,17 +7,34 @@
 //! compares single-replica annealing against parallel tempering at an
 //! equal per-replica sweep budget.
 
+use std::time::Instant;
+
 use pchip::annealing::{AnnealParams, BetaLadder, BetaSchedule, TemperingParams, TunerParams};
+use pchip::chimera::Topology;
 use pchip::config::MismatchConfig;
-use pchip::coordinator::ShardedTemperingParams;
+use pchip::coordinator::{run_sharded_tempering, ShardedTemperingParams};
 use pchip::experiments::{
     fig9a_sk_anneal, fig9a_sk_ladder_tuning, fig9a_sk_temper_sharded, fig9a_sk_temper_vs_anneal,
-    software_chip,
+    sharded_die_array, software_chip,
 };
-use pchip::util::bench::{write_csv, Bench};
+use pchip::problems::sk;
+use pchip::util::bench::{quick, write_bench_json, write_csv, Bench};
+use pchip::util::json::{obj, Json};
 
 fn main() -> anyhow::Result<()> {
-    println!("=== fig9a: SK-glass annealing ===");
+    let quick = quick();
+    println!("=== fig9a: SK-glass annealing{} ===", if quick { " (quick)" } else { "" });
+    if !quick {
+        full_anneal_sections()?;
+    }
+    pipeline_section(quick)?;
+    Ok(())
+}
+
+/// Ramp-length / mismatch ablations and the tempering-vs-annealing
+/// head-to-head (the non-pipeline Fig 9a arms; skipped under
+/// `PCHIP_BENCH_QUICK`).
+fn full_anneal_sections() -> anyhow::Result<()> {
     // ramp-length ablation (the paper's Fig 9a single trace + extension)
     let mut rows = Vec::new();
     for (name, steps, spc) in [("fast", 24usize, 4usize), ("medium", 96, 8), ("slow", 256, 8)] {
@@ -130,6 +147,7 @@ fn main() -> anyhow::Result<()> {
             },
             shards,
             barrier_timeout: std::time::Duration::from_secs(60),
+            pipeline: false,
         };
         let r = fig9a_sk_temper_sharded(
             1,
@@ -224,5 +242,78 @@ fn main() -> anyhow::Result<()> {
         .run("fig9a_anneal(96 steps × 8 sweeps × 8 chains)", || {
             fig9a_sk_anneal(&mut chip, 1, &params, None).unwrap();
         });
+    Ok(())
+}
+
+/// Pipelined vs serial sharded tempering at an equal sweep budget — the
+/// wall-clock arm behind `BENCH_temper.json`: every shard count runs
+/// the same ladder/rounds twice, once barrier-synchronized and once
+/// with the 1-phase-lag overlap, timed end to end on identical die
+/// arrays (the single-die reference of `fig9a_sk_temper_sharded` is
+/// deliberately excluded from the timed region).
+fn pipeline_section(quick: bool) -> anyhow::Result<()> {
+    println!("\n--- pipelined vs serial sharded tempering (equal sweep budget) ---");
+    let topo = Topology::new();
+    let seed = 1u64;
+    let problem = sk::chimera_pm_j(&topo, seed);
+    let rounds = if quick { 24usize } else { 96 };
+    let sweeps_per_round = 8usize;
+    let mut arms = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let mut secs = [0.0f64; 2];
+        let mut best = [0.0f64; 2];
+        for (k, pipeline) in [false, true].into_iter().enumerate() {
+            let params = ShardedTemperingParams {
+                base: TemperingParams {
+                    ladder: BetaLadder::geometric(0.08, 4.0, 8),
+                    sweeps_per_round,
+                    rounds,
+                    record_every: 8,
+                    seed: 0x9A77,
+                    ..Default::default()
+                },
+                shards,
+                barrier_timeout: std::time::Duration::from_secs(60),
+                pipeline,
+            };
+            let die_batch = (8 / shards).max(2);
+            let (samplers, scale) = sharded_die_array(
+                &params,
+                &problem,
+                MismatchConfig::default(),
+                die_batch,
+                0xD1E5,
+                |s| seed ^ 0xB04D ^ ((s as u64) << 8),
+            )?;
+            let t0 = Instant::now();
+            let r = run_sharded_tempering(samplers, &problem, &params, scale)?;
+            secs[k] = t0.elapsed().as_secs_f64();
+            best[k] = r.run.best_energy;
+        }
+        let speedup = secs[0] / secs[1];
+        println!(
+            "{shards} shard(s): serial {:.3}s  pipelined {:.3}s  →  {speedup:.2}×  \
+             (best E {:.0} vs {:.0})",
+            secs[0], secs[1], best[0], best[1]
+        );
+        arms.push(obj(vec![
+            ("shards", Json::from(shards)),
+            ("serial_secs", Json::from(secs[0])),
+            ("pipeline_secs", Json::from(secs[1])),
+            ("speedup", Json::from(speedup)),
+            ("serial_best_energy", Json::from(best[0])),
+            ("pipeline_best_energy", Json::from(best[1])),
+        ]));
+    }
+    let report = obj(vec![
+        ("bench", Json::from("fig9a_sharded_pipeline")),
+        ("quick", Json::from(usize::from(quick))),
+        ("rounds", Json::from(rounds)),
+        ("sweeps_per_round", Json::from(sweeps_per_round)),
+        ("ladder_rungs", Json::from(8usize)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    let out = write_bench_json("temper", &report)?;
+    println!("perf record → {}", out.display());
     Ok(())
 }

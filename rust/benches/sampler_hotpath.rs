@@ -1,15 +1,23 @@
 //! Bench: the sampling hot paths (the §Perf instrument).
 //!
 //! * software CSR engine: flips/s vs batch size, LFSR vs host noise;
+//! * per-round energy readback: incremental ΔE ledger (the pipeline
+//!   path) vs the full O(N·deg) rescan (the serial path);
 //! * cycle-level chip: flips/s (the dense reference pipeline);
 //! * XLA engine: sweeps/s vs batch, PJRT dispatch amortization.
+//!
+//! Emits `BENCH_hotpath.json` at the repo root (machine-readable perf
+//! trajectory; `PCHIP_BENCH_QUICK=1` shrinks every budget for the CI
+//! smoke leg).
 
 use pchip::analog::{Personality, ProgrammedWeights};
 use pchip::chimera::{Topology, N_SPINS};
 use pchip::config::{repo_artifacts_dir, MismatchConfig};
+use pchip::problems::{sk, EnergyLedger};
 use pchip::rng::HostRng;
 use pchip::sampler::{NoiseSource, Sampler, SoftwareSampler, XlaSampler};
-use pchip::util::bench::{write_csv, Bench};
+use pchip::util::bench::{quick, write_bench_json, write_csv, Bench};
+use pchip::util::json::{obj, Json};
 
 fn glass_folded(topo: &Topology, seed: u64) -> pchip::analog::Folded {
     let p = Personality::sample(topo, seed, MismatchConfig::default());
@@ -25,8 +33,11 @@ fn glass_folded(topo: &Topology, seed: u64) -> pchip::analog::Folded {
 fn main() -> anyhow::Result<()> {
     let topo = Topology::new();
     let folded = glass_folded(&topo, 3);
-    let sweeps_per_iter = 100usize;
-    println!("=== sampler hot path ===");
+    let quick = quick();
+    let sweeps_per_iter = if quick { 20usize } else { 100 };
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 10) };
+    println!("=== sampler hot path{} ===", if quick { " (quick)" } else { "" });
+    let mut arms: Vec<Json> = Vec::new();
 
     // software engine vs batch
     let mut rows = Vec::new();
@@ -35,11 +46,16 @@ fn main() -> anyhow::Result<()> {
         s.load(&folded);
         s.set_beta(1.5);
         let flips = (sweeps_per_iter * batch * N_SPINS) as f64;
-        let m = Bench::new(2, 10).throughput(flips, "flips").run(
+        let m = Bench::new(warmup, iters).throughput(flips, "flips").run(
             &format!("software_lfsr(batch={batch}, {sweeps_per_iter} sweeps)"),
             || s.sweeps(sweeps_per_iter).unwrap(),
         );
         rows.push(vec![batch as f64, m.throughput.unwrap().0]);
+        arms.push(obj(vec![
+            ("arm", Json::from("software_lfsr")),
+            ("batch", Json::from(batch)),
+            ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+        ]));
     }
     write_csv("hotpath_software_batch", "batch,flips_per_sec", &rows)?;
 
@@ -52,9 +68,54 @@ fn main() -> anyhow::Result<()> {
         s.load(&folded);
         s.set_beta(1.5);
         let flips = (sweeps_per_iter * 8 * N_SPINS) as f64;
-        Bench::new(2, 10)
+        let m = Bench::new(warmup, iters)
             .throughput(flips, "flips")
             .run(&format!("software_{name}(batch=8)"), || s.sweeps(sweeps_per_iter).unwrap());
+        arms.push(obj(vec![
+            ("arm", Json::from(format!("software_{name}"))),
+            ("batch", Json::from(8usize)),
+            ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+        ]));
+    }
+
+    // per-round energy readback: the serial arm rescans the Hamiltonian
+    // after every sweep phase (what the swap barrier used to pay); the
+    // pipeline arm reads the incremental ΔE ledger accumulated during
+    // the sweep. Same sweeps, same phase cadence — only the readback
+    // differs.
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let ledger = EnergyLedger::new(&problem, &topo)?;
+    let rounds = if quick { 5usize } else { 25 };
+    let sweeps_per_round = 4usize;
+    let flips = (rounds * sweeps_per_round * 8 * N_SPINS) as f64;
+    for (name, tracked) in [("readback_serial_rescan", false), ("readback_pipeline_ledger", true)]
+    {
+        let mut s = SoftwareSampler::new(8, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        if tracked {
+            s.track_energies(&ledger)?;
+        }
+        let mut sink = 0.0f64;
+        let m = Bench::new(warmup, iters).throughput(flips, "flips").run(
+            &format!("{name}(batch=8, {rounds}×{sweeps_per_round} sweeps)"),
+            || {
+                for _ in 0..rounds {
+                    s.sweeps(sweeps_per_round).unwrap();
+                    if tracked {
+                        sink += s.energies().unwrap().iter().sum::<f64>();
+                    } else {
+                        s.for_each_state(&mut |_, st| sink += problem.energy(st));
+                    }
+                }
+            },
+        );
+        pchip::util::bench::black_box(sink);
+        arms.push(obj(vec![
+            ("arm", Json::from(name)),
+            ("batch", Json::from(8usize)),
+            ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+        ]));
     }
 
     // cycle-level chip (dense per-p-bit pipeline, batch 1)
@@ -66,13 +127,18 @@ fn main() -> anyhow::Result<()> {
         chip.program(&j, &vec![true; ne], &vec![0; N_SPINS])?;
         chip.set_beta(1.5)?;
     }
-    Bench::new(2, 10)
+    let m = Bench::new(warmup, iters)
         .throughput((sweeps_per_iter * N_SPINS) as f64, "flips")
         .run("cycle_level_chip(batch=1)", || {
             for _ in 0..sweeps_per_iter {
                 chip.sweep();
             }
         });
+    arms.push(obj(vec![
+        ("arm", Json::from("cycle_level_chip")),
+        ("batch", Json::from(1usize)),
+        ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+    ]));
 
     // XLA engine: dispatch amortization (sweeps per PJRT call is fixed
     // per artifact; compare batch variants)
@@ -96,15 +162,27 @@ fn main() -> anyhow::Result<()> {
                 || xs.sweeps(sweeps_per_iter).unwrap(),
             );
             rows.push(vec![batch as f64, m.throughput.unwrap().0]);
+            arms.push(obj(vec![
+                ("arm", Json::from("xla")),
+                ("batch", Json::from(batch)),
+                ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+            ]));
         }
         write_csv("hotpath_xla_batch", "batch,flips_per_sec", &rows)?;
     } else {
         eprintln!("(artifacts not built — skipping XLA hot path)");
     }
 
-    println!(
-        "\nreference: silicon rate 440 spins / 50 ns = {:.2e} flips/s",
-        N_SPINS as f64 / 50e-9
-    );
+    let silicon = N_SPINS as f64 / 50e-9;
+    println!("\nreference: silicon rate 440 spins / 50 ns = {silicon:.2e} flips/s");
+    let report = obj(vec![
+        ("bench", Json::from("sampler_hotpath")),
+        ("quick", Json::from(usize::from(quick))),
+        ("sweeps_per_iter", Json::from(sweeps_per_iter)),
+        ("silicon_flips_per_sec", Json::from(silicon)),
+        ("arms", Json::Arr(arms)),
+    ]);
+    let out = write_bench_json("hotpath", &report)?;
+    println!("perf record → {}", out.display());
     Ok(())
 }

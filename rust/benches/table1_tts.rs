@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
             base: default_tts_temper_params(),
             shards,
             barrier_timeout: std::time::Duration::from_secs(60),
+            pipeline: false,
         };
         let mut p_acc = 0.0;
         let mut tts_acc: Vec<f64> = Vec::new();

@@ -30,7 +30,9 @@ mod tuner;
 pub use sa::{anneal, AnnealParams};
 pub use schedule::{BetaLadder, BetaSchedule};
 pub use tempering::{
-    temper, temper_observed, LadderTuning, TemperingCore, TemperingParams, TemperingRun,
+    temper, temper_observed, temper_pipelined, temper_pipelined_observed, LadderTuning,
+    PipelinedCore, TemperingCore, TemperingParams, TemperingRun,
 };
+pub(crate) use tempering::EnergyReadback;
 pub use tts::{tts99, tts99_counts, TtsEstimate};
 pub use tuner::{tune_ladder, TuneAction, TuneIteration, TunedLadder, TunerParams};

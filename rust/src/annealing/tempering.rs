@@ -27,16 +27,84 @@
 //! natively, while the AOT/XLA artifact (scalar-β signature) and the
 //! cycle-level chip (one V_temp rail) report unsupported.
 //!
+//! Energy readback is incremental where the engine allows it: the run
+//! installs a [`crate::problems::EnergyLedger`]
+//! ([`Sampler::track_energies`]) so each swap phase reads per-chain
+//! energies in O(chains) off exact per-flip ΔE deltas accumulated
+//! during the sweep, instead of an O(chains·N·deg) rescan. On
+//! losslessly-quantized problems (±1 coefficients — every validation
+//! instance) the ledger readback equals [`IsingProblem::energy`] bit
+//! for bit; on a lossy lowering it reads the *code-domain* Hamiltonian,
+//! which is what the die actually samples.
+//!
+//! Two schedules drive the same core: the serial [`temper`] (swap phase
+//! strictly between sweeps) and the pipelined [`temper_pipelined`] /
+//! [`PipelinedCore`] (swap phases resolved one phase behind the sweeps
+//! they feed, so a distributed run never stalls its update pipeline —
+//! see the `--pipeline` flag and [`crate::coordinator`]).
+//!
 //! [`SoftwareSampler`]: crate::sampler::SoftwareSampler
 
 use anyhow::{ensure, Result};
 
 use crate::metrics::{EnergyTrace, FluxStats, ReplicaDirection, SwapStats};
-use crate::problems::IsingProblem;
+use crate::problems::{EnergyLedger, IsingProblem};
 use crate::rng::HostRng;
 use crate::sampler::Sampler;
 
 use super::schedule::BetaLadder;
+
+/// The per-run energy readback: an [`EnergyLedger`] installed on the
+/// engine where it supports incremental tracking, and kept coordinator-
+/// side for the rescan fallback otherwise, so **every** engine scores
+/// swaps against the same code-domain Hamiltonian — the one the die
+/// actually samples. On losslessly-quantized problems (±1 coefficients,
+/// every suite instance) that readback is bit-equal to
+/// [`IsingProblem::energy`]; only when even building the ledger fails
+/// does the readback fall back to the logical rescan.
+pub(crate) struct EnergyReadback {
+    ledger: Option<EnergyLedger>,
+    tracked: bool,
+}
+
+impl EnergyReadback {
+    /// Build the ledger for `problem` and try to install it on the
+    /// engine ([`Sampler::track_energies`]). Engines without a flip
+    /// stream (the AOT artifact) decline; the rescan fallback then
+    /// reads the same ledger so the energies agree bit for bit across
+    /// engines.
+    pub(crate) fn install<S: Sampler + ?Sized>(sampler: &mut S, problem: &IsingProblem) -> Self {
+        match EnergyLedger::for_problem(problem) {
+            Ok(ledger) => {
+                let tracked = sampler.track_energies(&ledger).is_ok();
+                Self { ledger: Some(ledger), tracked }
+            }
+            Err(_) => Self { ledger: None, tracked: false },
+        }
+    }
+
+    /// Per-chain energies after a sweep phase: O(chains) off the
+    /// tracked ledger when live, else the O(chains·N·deg) rescan
+    /// (borrowing each state via [`Sampler::for_each_state`] — no
+    /// clone).
+    pub(crate) fn read<S: Sampler + ?Sized>(
+        &self,
+        sampler: &mut S,
+        problem: &IsingProblem,
+    ) -> Vec<f64> {
+        if self.tracked {
+            if let Ok(e) = sampler.energies() {
+                return e;
+            }
+        }
+        let mut out = Vec::with_capacity(sampler.batch());
+        match &self.ledger {
+            Some(l) => sampler.for_each_state(&mut |_, st| out.push(l.logical(l.full_code(st)))),
+            None => sampler.for_each_state(&mut |_, st| out.push(problem.energy(st))),
+        }
+        out
+    }
+}
 
 /// Which feedback signal drives in-run ladder re-spacing (applied every
 /// [`TemperingParams::adapt_every`] rounds; irrelevant when that is 0).
@@ -410,6 +478,175 @@ impl TemperingCore {
     }
 }
 
+/// The double-buffered half of the pipelined replica-exchange engine:
+/// a [`TemperingCore`] split into a **launch** side (hand out the next
+/// sweep phase's β slice) and a **score** side (swap phase over a
+/// *previous* phase's readback), with at most two phases in flight.
+///
+/// The serial engine alternates `sweep(t) → swap(t) → sweep(t+1)`, so
+/// every sweep stalls behind the energy readback and swap resolution of
+/// the phase before it. The pipelined schedule overlaps them:
+///
+/// ```text
+///   launch:  phase 0   phase 1   phase 2   phase 3      (workers sweep)
+///   score:             phase 0   phase 1   phase 2      (coordinator)
+/// ```
+///
+/// Phase *t+1* therefore sweeps under the rung→chain assignment left by
+/// the swap phase of *t−1* — the **1-phase lag**. Swap decisions are
+/// resolved one phase behind the sweeps they feed: a replica that wins
+/// a β-exchange at phase *t* starts sweeping at its new temperature at
+/// phase *t+2* instead of *t+1*. Everything else — the Metropolis
+/// criterion, RNG stream, round-trip/flux accounting, trace cadence,
+/// ladder adaptation — is the unmodified [`TemperingCore`], consumed in
+/// strict phase order, so the schedule is exactly as deterministic and
+/// seed-reproducible as the serial one (pinned by
+/// `rust/tests/pipelined_equivalence.rs`: the overlapped sharded
+/// execution is bit-identical to [`temper_pipelined`], the serial
+/// reference of the same lagged schedule).
+///
+/// The lag trades one phase of temperature-mixing latency for never
+/// stalling the update pipeline — the asynchronous scheduling PASS
+/// (Patel et al., 2024) shows unlocks throughput in p-bit processors.
+/// It leaves each rung's *sweep* dynamics at most one neighbouring rung
+/// away from its assignment, and the swap criterion itself still
+/// compares exact energies under exact Δβ, so the stationary behaviour
+/// matches the serial engine within statistical error (the suite
+/// checks cold-rung marginals against exact Boltzmann).
+pub struct PipelinedCore {
+    core: TemperingCore,
+    launched: usize,
+    scored: usize,
+}
+
+impl PipelinedCore {
+    /// Pipelined core over `batch` chains with the identity rung→chain
+    /// assignment (mirrors [`TemperingCore::new`]).
+    pub fn new(params: &TemperingParams, batch: usize) -> Result<Self> {
+        Ok(Self { core: TemperingCore::new(params, batch)?, launched: 0, scored: 0 })
+    }
+
+    /// Pipelined core with an explicit initial assignment (mirrors
+    /// [`TemperingCore::with_assignment`] — the sharded coordinator's
+    /// entry point).
+    pub fn with_assignment(
+        params: &TemperingParams,
+        batch: usize,
+        chain_at_rung: Vec<usize>,
+    ) -> Result<Self> {
+        Ok(Self {
+            core: TemperingCore::with_assignment(params, batch, chain_at_rung)?,
+            launched: 0,
+            scored: 0,
+        })
+    }
+
+    /// Rounds the run is configured for.
+    pub fn rounds(&self) -> usize {
+        self.core.rounds()
+    }
+
+    /// Sweeps in each sweep phase.
+    pub fn sweeps_per_round(&self) -> usize {
+        self.core.sweeps_per_round()
+    }
+
+    /// The current rung→chain map (reflects swaps of every *scored*
+    /// phase).
+    pub fn chain_at_rung(&self) -> &[usize] {
+        self.core.chain_at_rung()
+    }
+
+    /// Phases launched but not yet scored (0, 1 or 2 — the double
+    /// buffer never runs deeper).
+    pub fn in_flight(&self) -> usize {
+        self.launched - self.scored
+    }
+
+    /// β slice for the next phase to launch, or `None` once every
+    /// configured round has been handed out. Panics if called with two
+    /// phases already in flight — score the oldest one first.
+    pub fn launch(&mut self, beta_scale: f64) -> Option<Vec<f32>> {
+        if self.launched >= self.core.rounds() {
+            return None;
+        }
+        assert!(self.in_flight() < 2, "pipeline depth is 2: score a phase before launching");
+        self.launched += 1;
+        Some(self.core.chain_betas(beta_scale))
+    }
+
+    /// Swap phase over the oldest in-flight phase's readback — the
+    /// unmodified [`TemperingCore::finish_round`], consumed in strict
+    /// phase order.
+    pub fn score(&mut self, energies: &[f64], states: &[Vec<i8>]) {
+        assert!(self.in_flight() > 0, "no phase in flight to score");
+        self.core.finish_round(self.scored, energies, states);
+        self.scored += 1;
+    }
+
+    /// Finalize into a [`TemperingRun`] (every launched phase must have
+    /// been scored).
+    pub fn into_run(self) -> TemperingRun {
+        assert_eq!(self.launched, self.scored, "pipeline drained with phases still in flight");
+        self.core.into_run()
+    }
+}
+
+/// Run the pipelined (1-phase-lag) replica-exchange schedule against a
+/// single sampler — the serial reference the overlapped sharded
+/// execution is proven bit-identical to, and the `--pipeline` path for
+/// a 1-die run. See [`PipelinedCore`] for the schedule semantics.
+pub fn temper_pipelined<S: Sampler>(
+    sampler: &mut S,
+    problem: &IsingProblem,
+    params: &TemperingParams,
+    beta_scale: f64,
+) -> Result<TemperingRun> {
+    temper_pipelined_observed(sampler, problem, params, beta_scale, |_, _, _| {})
+}
+
+/// [`temper_pipelined`] with the per-round observer of
+/// [`temper_observed`]: `observe(round, states, chain_at_rung)` fires
+/// as each phase is *scored* (one phase behind its sweep), with the
+/// rung→chain map exactly as the swap phase will read it.
+pub fn temper_pipelined_observed<S, F>(
+    sampler: &mut S,
+    problem: &IsingProblem,
+    params: &TemperingParams,
+    beta_scale: f64,
+    mut observe: F,
+) -> Result<TemperingRun>
+where
+    S: Sampler,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let mut core = PipelinedCore::new(params, sampler.batch())?;
+    let readback = EnergyReadback::install(sampler, problem);
+    // One sampler cannot literally overlap compute, but the *data flow*
+    // of the distributed interleave is reproduced exactly: phase t is
+    // launched (and swept) before phase t−1 is scored, so every β
+    // slice, RNG draw and counter update happens against the same
+    // inputs in the same order as in the sharded coordinator.
+    let mut pending: Option<(Vec<f64>, Vec<Vec<i8>>)> = None;
+    for round in 0..params.rounds {
+        let betas = core.launch(beta_scale).expect("one launch per round");
+        sampler.set_betas(&betas)?;
+        sampler.sweeps(params.sweeps_per_round)?;
+        let energies = readback.read(sampler, problem);
+        let states = sampler.states();
+        if let Some((pe, ps)) = pending.take() {
+            observe(round - 1, &ps, core.chain_at_rung());
+            core.score(&pe, &ps);
+        }
+        pending = Some((energies, states));
+    }
+    if let Some((pe, ps)) = pending.take() {
+        observe(params.rounds - 1, &ps, core.chain_at_rung());
+        core.score(&pe, &ps);
+    }
+    Ok(core.into_run())
+}
+
 /// Run replica exchange on a batched sampler. `beta_scale` converts
 /// logical β to the chip knob exactly as in [`super::anneal`]; the swap
 /// criterion uses logical β × logical energy, which equals chip-β ×
@@ -442,12 +679,13 @@ where
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
     let mut core = TemperingCore::new(params, sampler.batch())?;
+    let readback = EnergyReadback::install(sampler, problem);
     for round in 0..params.rounds {
         // sweep phase
         sampler.set_betas(&core.chain_betas(beta_scale))?;
         sampler.sweeps(params.sweeps_per_round)?;
+        let energies = readback.read(sampler, problem);
         let states = sampler.states();
-        let energies: Vec<f64> = states.iter().map(|s| problem.energy(s)).collect();
         observe(round, &states, core.chain_at_rung());
         // swap phase
         core.finish_round(round, &energies, &states);
@@ -631,6 +869,67 @@ mod tests {
         // chains 1 and 3 are scouts: hottest β
         assert!((betas[1] - 0.5).abs() < 1e-6);
         assert!((betas[3] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipelined_schedule_lowers_energy_and_is_deterministic() {
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.1, 4.0, 8),
+            sweeps_per_round: 2,
+            rounds: 48,
+            record_every: 4,
+            ..Default::default()
+        };
+        let (mut s1, problem, scale) = glass_sampler(7, 8);
+        let run1 = temper_pipelined(&mut s1, &problem, &params, scale).unwrap();
+        let first_mean = run1.trace.rows.first().unwrap().2;
+        assert!(
+            run1.best_energy < first_mean - 50.0,
+            "pipelined tempering should drop energy: {first_mean} → {}",
+            run1.best_energy
+        );
+        assert_eq!(run1.total_sweeps, 96);
+        // same seeds, fresh sampler → bit-identical run
+        let (mut s2, problem2, scale2) = glass_sampler(7, 8);
+        let run2 = temper_pipelined(&mut s2, &problem2, &params, scale2).unwrap();
+        assert_eq!(run1.best_energy.to_bits(), run2.best_energy.to_bits());
+        assert_eq!(run1.best_state, run2.best_state);
+        assert_eq!(run1.trace.rows, run2.trace.rows);
+        assert_eq!(run1.swaps.accepts, run2.swaps.accepts);
+        assert_eq!(run1.swaps.round_trips, run2.swaps.round_trips);
+    }
+
+    #[test]
+    fn pipelined_observer_lags_one_phase() {
+        let (mut s, problem, scale) = glass_sampler(2, 8);
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 2.0, 4),
+            sweeps_per_round: 1,
+            rounds: 12,
+            ..Default::default()
+        };
+        let mut seen = 0usize;
+        temper_pipelined_observed(&mut s, &problem, &params, scale, |round, states, map| {
+            assert_eq!(round, seen);
+            assert_eq!(states.len(), 8);
+            assert_eq!(map.len(), 4);
+            seen += 1;
+        })
+        .unwrap();
+        assert_eq!(seen, 12, "every phase is eventually scored and observed");
+    }
+
+    #[test]
+    #[should_panic(expected = "pipeline depth is 2")]
+    fn pipelined_core_refuses_a_third_in_flight_phase() {
+        let params = TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 2.0, 4),
+            ..Default::default()
+        };
+        let mut core = PipelinedCore::new(&params, 8).unwrap();
+        let _ = core.launch(1.0);
+        let _ = core.launch(1.0);
+        let _ = core.launch(1.0); // must panic: nothing scored yet
     }
 
     #[test]

@@ -6,6 +6,7 @@ use anyhow::Result;
 use crate::analog::{Folded, Personality};
 use crate::chimera::{Topology, N_SPINS};
 use crate::config::MismatchConfig;
+use crate::problems::EnergyLedger;
 use crate::rng::ChipRngBank;
 use crate::spi::{SpiBus, SpiFrame, RegMap};
 
@@ -50,6 +51,10 @@ pub struct PbitChip {
     /// Full-array sweeps performed so far.
     pub sweeps: u64,
     scratch_u: Vec<f32>,
+    /// Incremental energy accounting (see [`PbitChip::track_energy`]).
+    ledger: Option<EnergyLedger>,
+    e_code: i64,
+    e_dirty: bool,
 }
 
 impl PbitChip {
@@ -75,6 +80,9 @@ impl PbitChip {
             cycles: 0,
             sweeps: 0,
             scratch_u: vec![0.0; crate::N_PAD],
+            ledger: None,
+            e_code: 0,
+            e_dirty: true,
         }
     }
 
@@ -92,6 +100,8 @@ impl PbitChip {
     pub fn program(&mut self, j_codes: &[i8], enables: &[bool], h_codes: &[i8]) -> Result<()> {
         self.bus.program_problem(&mut self.regs, j_codes, enables, h_codes)?;
         self.folded_dirty = true;
+        // the programmed Hamiltonian changed out from under any ledger
+        self.e_dirty = true;
         Ok(())
     }
 
@@ -117,6 +127,9 @@ impl PbitChip {
         for (&i, &v) in idx.iter().zip(values) {
             self.state[i] = v;
         }
+        if !idx.is_empty() {
+            self.e_dirty = true;
+        }
     }
 
     /// Current spin state (test-bench view; silicon reads over SPI).
@@ -130,6 +143,30 @@ impl PbitChip {
         for s in self.state.iter_mut() {
             *s = hr.spin();
         }
+        self.e_dirty = true;
+    }
+
+    /// Install an [`EnergyLedger`]: from now on every sweep accumulates
+    /// exact per-flip code-domain deltas, and [`PbitChip::energy`]
+    /// reads the state's logical energy back in O(1) — the chip-side
+    /// half of the pipelined tempering readback.
+    pub fn track_energy(&mut self, ledger: EnergyLedger) {
+        self.ledger = Some(ledger);
+        self.e_dirty = true;
+    }
+
+    /// Logical energy of the current state under the tracked ledger
+    /// (`None` until [`PbitChip::track_energy`] installs one). Resyncs
+    /// with a full rescan only after out-of-band state writes
+    /// ([`PbitChip::force_spins`], [`PbitChip::randomize_state`]);
+    /// sweeps keep it incrementally exact.
+    pub fn energy(&mut self) -> Option<f64> {
+        let ledger = self.ledger.as_ref()?;
+        if self.e_dirty {
+            self.e_code = ledger.full_code(&self.state);
+            self.e_dirty = false;
+        }
+        Some(ledger.logical(self.e_code))
     }
 
     /// Folded effective tensors (refolds lazily after programming).
@@ -168,8 +205,8 @@ impl PbitChip {
                     let group = std::mem::take(&mut self.topo.color_groups[phase]);
                     for &i in &group {
                         if !is_clamped[i] {
-                            self.state[i] =
-                                pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                            let new = pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                            self.commit_spin(i, new);
                         }
                     }
                     self.topo.color_groups[phase] = group;
@@ -182,8 +219,8 @@ impl PbitChip {
             UpdateOrder::Sequential => {
                 for i in 0..N_SPINS {
                     if !is_clamped[i] {
-                        self.state[i] =
-                            pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                        let new = pbit::update_pbit(&self.folded, &self.state, i, beta, u[i]);
+                        self.commit_spin(i, new);
                     }
                 }
             }
@@ -191,7 +228,11 @@ impl PbitChip {
                 let snapshot = self.state.clone();
                 for i in 0..N_SPINS {
                     if !is_clamped[i] {
-                        self.state[i] = pbit::update_pbit(&self.folded, &snapshot, i, beta, u[i]);
+                        let new = pbit::update_pbit(&self.folded, &snapshot, i, beta, u[i]);
+                        // energy is a state function: applying the
+                        // writes sequentially with pre-write deltas
+                        // lands on the synchronous config's exact energy
+                        self.commit_spin(i, new);
                     }
                 }
             }
@@ -199,6 +240,21 @@ impl PbitChip {
         self.scratch_u = u;
         self.sweeps += 1;
         self.cycles += (SAMPLE_TIME_NS * MASTER_CLOCK_HZ / 1e9) as u64;
+    }
+
+    /// Write spin `i`'s new value, accumulating the exact code-domain
+    /// ΔE on an actual flip when a ledger is live (skipped while dirty:
+    /// the next [`PbitChip::energy`] rescans anyway).
+    #[inline]
+    fn commit_spin(&mut self, i: usize, new: i8) {
+        if new != self.state[i] {
+            if !self.e_dirty {
+                if let Some(l) = &self.ledger {
+                    self.e_code += l.flip_delta(&self.state, i);
+                }
+            }
+            self.state[i] = new;
+        }
     }
 
     /// Convenience: chromatic sweep, nothing clamped.
@@ -297,6 +353,31 @@ mod tests {
         assert_eq!(chip.sweeps, 10);
         // 10 sweeps × 50 ns
         assert!((chip.elapsed_ns() - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn ledger_tracks_energy_through_sweeps() {
+        let mut chip = PbitChip::ideal(9);
+        let topo = Topology::new();
+        let problem = crate::problems::sk::chimera_pm_j(&topo, 9);
+        let (j, en, h, _) = problem.to_codes(&topo).unwrap();
+        chip.program(&j, &en, &h).unwrap();
+        chip.set_beta(1.0).unwrap();
+        let ledger = EnergyLedger::new(&problem, &topo).unwrap();
+        chip.track_energy(ledger.clone());
+        for order in [UpdateOrder::Chromatic, UpdateOrder::Sequential, UpdateOrder::Synchronous] {
+            for _ in 0..3 {
+                chip.sweep_with(order, &[]);
+                let e = chip.energy().unwrap();
+                let full = ledger.logical(ledger.full_code(chip.state()));
+                assert_eq!(e, full, "incremental diverged from rescan under {order:?}");
+                // ±J lowers losslessly: also exactly the logical energy
+                assert_eq!(e, problem.energy(chip.state()));
+            }
+        }
+        // out-of-band writes resync through the dirty path
+        chip.randomize_state(77);
+        assert_eq!(chip.energy().unwrap(), problem.energy(chip.state()));
     }
 
     #[test]

@@ -695,7 +695,11 @@ fn dispatch_sharded(
     let stats = stats.clone();
     let scale = spec.scale;
     let spawned = std::thread::Builder::new().name("shard-coordinator".into()).spawn(move || {
-        let result = sharded::drive_sharded(&params, scale, &cmd_txs, &out_rx, |_, _, _| {});
+        let result = if params.pipeline {
+            sharded::drive_sharded_pipelined(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+        } else {
+            sharded::drive_sharded(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+        };
         drop(cmd_txs); // hang up on any seat still waiting for a command
         let n_sweeps = params.base.total_sweeps() as u64;
         let msg = match result {
@@ -1184,6 +1188,7 @@ mod tests {
             },
             shards: 3,
             barrier_timeout: Duration::from_secs(30),
+            pipeline: false,
         };
         match srv.run_sharded_tempering(h, &params).unwrap() {
             JobResult::ShardedTempered {
@@ -1221,6 +1226,7 @@ mod tests {
             base: TemperingParams::default(),
             shards: 5,
             barrier_timeout: Duration::from_secs(5),
+            pipeline: false,
         };
         match srv.run_sharded_tempering(h, &params).unwrap() {
             JobResult::Failed(msg) => {

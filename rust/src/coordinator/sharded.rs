@@ -23,6 +23,18 @@
 //! costs the same O(1) as an on-die one; the expensive part is the
 //! barrier, which is why `sweeps_per_round` amortizes it.
 //!
+//! With [`ShardedTemperingParams::pipeline`] the barrier cost is hidden
+//! entirely: phase *t+1*'s β slices are handed out before phase *t*'s
+//! readback is collected, so every shard's command queue stays
+//! non-empty — dies sweep back-to-back at their own pace while the
+//! coordinator scores one phase behind
+//! ([`crate::annealing::PipelinedCore`]'s 1-phase-lag schedule, still
+//! fully deterministic under a fixed seed). Energy readback rides the
+//! exact incremental ΔE ledger of
+//! [`crate::sampler::Sampler::track_energies`] wherever the engine
+//! supports it, so the per-phase readback is O(chains) rather than a
+//! full O(chains·N·deg) Hamiltonian rescan.
+//!
 //! Because the entire swap phase (RNG draws, counters, trace,
 //! adaptation) lives in the shared [`TemperingCore`], a 1-shard run is
 //! **bit-identical** to [`crate::annealing::temper`] and a K-shard run
@@ -41,7 +53,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::annealing::{TemperingCore, TemperingParams, TemperingRun};
+use crate::annealing::{
+    EnergyReadback, PipelinedCore, TemperingCore, TemperingParams, TemperingRun,
+};
 use crate::metrics::{FluxStats, SwapStats};
 use crate::problems::IsingProblem;
 use crate::sampler::Sampler;
@@ -59,6 +73,17 @@ pub struct ShardedTemperingParams {
     /// declaring a worker stalled and failing the run with a
     /// diagnostic (never a deadlock).
     pub barrier_timeout: Duration,
+    /// Overlap coordination with compute: resolve each swap phase one
+    /// phase behind the sweeps it feeds
+    /// ([`crate::annealing::PipelinedCore`]), so a shard that reports
+    /// its readback immediately finds the next phase's β slice already
+    /// queued and never idles at the barrier. Deterministic under a
+    /// fixed seed like the serial schedule; `false` (the default) keeps
+    /// the barrier-synchronized schedule that is bit-identical to
+    /// [`temper`].
+    ///
+    /// [`temper`]: crate::annealing::temper
+    pub pipeline: bool,
 }
 
 impl Default for ShardedTemperingParams {
@@ -67,6 +92,7 @@ impl Default for ShardedTemperingParams {
             base: TemperingParams::default(),
             shards: 2,
             barrier_timeout: Duration::from_secs(30),
+            pipeline: false,
         }
     }
 }
@@ -197,8 +223,8 @@ impl ShardedRun {
 
 /// Coordinator → shard-worker commands.
 pub(crate) enum ShardCmd {
-    /// Run one sweep phase: pin the β slice, sweep, report back.
-    Phase { betas: Vec<f32>, sweeps: usize },
+    /// Run sweep phase `round`: pin the β slice, sweep, report back.
+    Phase { round: usize, betas: Vec<f32>, sweeps: usize },
     /// The run is over; leave the seat.
     Finish,
 }
@@ -208,7 +234,11 @@ pub(crate) enum ShardMsg {
     /// Sent once on joining: how many chains this die contributes.
     Ready { shard: usize, batch: usize },
     /// One sweep phase's output (all of the die's chains, in order).
-    Phase { shard: usize, states: Vec<Vec<i8>>, energies: Vec<f64> },
+    /// `round` echoes the command's phase index — the pipelined
+    /// scheduler keeps two phases in flight, so a fast shard's phase
+    /// t+1 readback can arrive while a slower shard still owes phase t
+    /// and must not be mistaken for it.
+    Phase { shard: usize, round: usize, states: Vec<Vec<i8>>, energies: Vec<f64> },
     /// The shard failed (engine error, unsupported per-chain β, …).
     Error { shard: usize, message: String },
 }
@@ -226,14 +256,20 @@ pub(crate) fn shard_worker_loop<S: Sampler>(
     cmd_rx: &mpsc::Receiver<ShardCmd>,
     out_tx: &mpsc::Sender<ShardMsg>,
 ) {
+    // incremental ΔE readback where the engine supports it; engines
+    // without a flip stream rescan through the same code-domain ledger,
+    // so every shard scores swaps against the same Hamiltonian
+    let readback = EnergyReadback::install(sampler, problem);
     if out_tx.send(ShardMsg::Ready { shard, batch: sampler.batch() }).is_err() {
         return; // coordinator already gone
     }
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             ShardCmd::Finish => break,
-            ShardCmd::Phase { betas, sweeps } => {
-                let msg = match sweep_phase(shard, sampler, problem, &betas, sweeps) {
+            ShardCmd::Phase { round, betas, sweeps } => {
+                let msg = match sweep_phase(
+                    shard, round, sampler, problem, &betas, sweeps, &readback,
+                ) {
                     Ok(m) => m,
                     Err(e) => ShardMsg::Error { shard, message: format!("{e:#}") },
                 };
@@ -247,19 +283,23 @@ pub(crate) fn shard_worker_loop<S: Sampler>(
 }
 
 /// One sweep phase on the shard's die: pin the β slice, sweep, read
-/// back states and (logical) energies.
+/// back states and energies — O(chains) off the tracked ledger instead
+/// of an O(chains·N·deg) rescan when tracking is live.
+#[allow(clippy::too_many_arguments)]
 fn sweep_phase<S: Sampler>(
     shard: usize,
+    round: usize,
     sampler: &mut S,
     problem: &IsingProblem,
     betas: &[f32],
     sweeps: usize,
+    readback: &EnergyReadback,
 ) -> Result<ShardMsg> {
     sampler.set_betas(betas)?;
     sampler.sweeps(sweeps)?;
+    let energies = readback.read(sampler, problem);
     let states = sampler.states();
-    let energies = states.iter().map(|s| problem.energy(s)).collect();
-    Ok(ShardMsg::Phase { shard, states, energies })
+    Ok(ShardMsg::Phase { shard, round, states, energies })
 }
 
 fn recv_by(
@@ -269,29 +309,16 @@ fn recv_by(
     rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
 }
 
-/// The coordinator's half of the protocol: handshake with every seat,
-/// then drive the round loop — fan the β slices out, wait (bounded) at
-/// the swap barrier, run the swap phase in the shared [`TemperingCore`].
-/// `observe(round, global_states, chain_at_rung)` mirrors
-/// [`crate::annealing::temper_observed`] with chains in shard order.
-pub(crate) fn drive_sharded<F>(
-    params: &ShardedTemperingParams,
-    beta_scale: f64,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
+/// Handshake: learn each die's chain count (bounded wait — a worker
+/// that dies before joining must not hang the job).
+fn handshake(
+    shards: usize,
     out_rx: &mpsc::Receiver<ShardMsg>,
-    mut observe: F,
-) -> Result<ShardedRun>
-where
-    F: FnMut(usize, &[Vec<i8>], &[usize]),
-{
-    let shards = cmd_txs.len();
-    ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
-
-    // Handshake: learn each die's chain count (bounded wait — a worker
-    // that dies before joining must not hang the job).
+    timeout: Duration,
+) -> Result<Vec<usize>> {
     let mut batches = vec![0usize; shards];
     let mut joined = vec![false; shards];
-    let deadline = Instant::now() + params.barrier_timeout;
+    let deadline = Instant::now() + timeout;
     for _ in 0..shards {
         match recv_by(out_rx, deadline) {
             Ok(ShardMsg::Ready { shard, batch }) => {
@@ -305,77 +332,123 @@ where
                 bail!("protocol error: shard {shard} sent a sweep phase before joining")
             }
             Err(_) => {
-                let missing: Vec<usize> =
-                    (0..shards).filter(|&s| !joined[s]).collect();
+                let missing: Vec<usize> = (0..shards).filter(|&s| !joined[s]).collect();
+                bail!("sharded tempering: shard(s) {missing:?} never joined within {timeout:?}");
+            }
+        }
+    }
+    Ok(batches)
+}
+
+/// Fan one sweep phase's β slices out to every shard.
+fn send_phase(
+    betas: &[f32],
+    plan: &ShardPlan,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    sweeps: usize,
+    round: usize,
+) -> Result<()> {
+    for (s, tx) in cmd_txs.iter().enumerate() {
+        let slice = betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
+        if tx.send(ShardCmd::Phase { round, betas: slice, sweeps }).is_err() {
+            bail!("sharded tempering: shard {s} hung up before round {round}");
+        }
+    }
+    Ok(())
+}
+
+/// One shard's buffered next-phase readback (see [`collect_phase`]).
+type StashedPhase = Option<(Vec<Vec<i8>>, Vec<f64>)>;
+
+/// Write one shard's phase readback into the global chain arrays.
+fn place_phase(
+    plan: &ShardPlan,
+    shard: usize,
+    st: Vec<Vec<i8>>,
+    en: Vec<f64>,
+    states: &mut [Vec<i8>],
+    energies: &mut [f64],
+) -> Result<()> {
+    ensure!(
+        st.len() == plan.batches[shard] && en.len() == plan.batches[shard],
+        "shard {shard} reported {} chains, expected {}",
+        st.len(),
+        plan.batches[shard]
+    );
+    let off = plan.offsets[shard];
+    for (i, (s_i, e_i)) in st.into_iter().zip(en).enumerate() {
+        states[off + i] = s_i;
+        energies[off + i] = e_i;
+    }
+    Ok(())
+}
+
+/// Collect phase `round`'s readback from every shard into the global
+/// chain arrays — the (bounded) swap barrier. With the pipelined
+/// scheduler two phases are in flight, so a fast shard's phase
+/// `round + 1` message can arrive while a slower shard still owes
+/// `round`; those early arrivals park in `stash` (at most one per
+/// shard — the pipeline is depth 2) and are consumed first on the next
+/// call. Any other round tag is a protocol error.
+fn collect_phase(
+    plan: &ShardPlan,
+    out_rx: &mpsc::Receiver<ShardMsg>,
+    timeout: Duration,
+    round: usize,
+    states: &mut [Vec<i8>],
+    energies: &mut [f64],
+    stash: &mut [StashedPhase],
+) -> Result<()> {
+    let shards = plan.shards();
+    let mut seen = vec![false; shards];
+    let mut remaining = shards;
+    for shard in 0..shards {
+        if let Some((st, en)) = stash[shard].take() {
+            place_phase(plan, shard, st, en, states, energies)?;
+            seen[shard] = true;
+            remaining -= 1;
+        }
+    }
+    let deadline = Instant::now() + timeout;
+    while remaining > 0 {
+        match recv_by(out_rx, deadline) {
+            Ok(ShardMsg::Phase { shard, round: r, states: st, energies: en }) => {
+                ensure!(shard < shards, "unknown shard {shard}");
+                if r == round && !seen[shard] {
+                    place_phase(plan, shard, st, en, states, energies)?;
+                    seen[shard] = true;
+                    remaining -= 1;
+                } else if r == round + 1 && stash[shard].is_none() {
+                    stash[shard] = Some((st, en));
+                } else {
+                    bail!(
+                        "protocol error: shard {shard} reported phase {r} while round {round} \
+                         was being collected"
+                    );
+                }
+            }
+            Ok(ShardMsg::Error { shard, message }) => {
+                bail!("sharded tempering: shard {shard} failed at round {round}: {message}")
+            }
+            Ok(ShardMsg::Ready { shard, .. }) => {
+                bail!("protocol error: shard {shard} re-joined mid-run")
+            }
+            Err(_) => {
+                let stalled: Vec<usize> = (0..shards).filter(|&s| !seen[s]).collect();
                 bail!(
-                    "sharded tempering: shard(s) {missing:?} never joined within {:?}",
-                    params.barrier_timeout
+                    "sharded tempering: swap-phase barrier timed out after {timeout:?} at round \
+                     {round}; stalled shard(s): {stalled:?}"
                 );
             }
         }
     }
+    Ok(())
+}
 
-    let plan = ShardPlan::new(&params.base.ladder, &batches)?;
-    let mut core =
-        TemperingCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
-
-    let sweeps = params.base.sweeps_per_round;
-    let mut states: Vec<Vec<i8>> = vec![Vec::new(); plan.total_chains];
-    let mut energies = vec![0.0f64; plan.total_chains];
-    for round in 0..params.base.rounds {
-        // 1. fan this round's β slices out to the shards
-        let betas = core.chain_betas(beta_scale);
-        for s in 0..shards {
-            let slice = betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
-            if cmd_txs[s].send(ShardCmd::Phase { betas: slice, sweeps }).is_err() {
-                bail!("sharded tempering: shard {s} hung up before round {round}");
-            }
-        }
-        // 2. swap barrier: every shard must report, within the timeout
-        let deadline = Instant::now() + params.barrier_timeout;
-        let mut seen = vec![false; shards];
-        for _ in 0..shards {
-            match recv_by(out_rx, deadline) {
-                Ok(ShardMsg::Phase { shard, states: st, energies: en }) => {
-                    ensure!(
-                        st.len() == plan.batches[shard] && en.len() == plan.batches[shard],
-                        "shard {shard} reported {} chains, expected {}",
-                        st.len(),
-                        plan.batches[shard]
-                    );
-                    let off = plan.offsets[shard];
-                    for (i, (s_i, e_i)) in st.into_iter().zip(en).enumerate() {
-                        states[off + i] = s_i;
-                        energies[off + i] = e_i;
-                    }
-                    seen[shard] = true;
-                }
-                Ok(ShardMsg::Error { shard, message }) => {
-                    bail!("sharded tempering: shard {shard} failed at round {round}: {message}")
-                }
-                Ok(ShardMsg::Ready { shard, .. }) => {
-                    bail!("protocol error: shard {shard} re-joined mid-run")
-                }
-                Err(_) => {
-                    let stalled: Vec<usize> = (0..shards).filter(|&s| !seen[s]).collect();
-                    bail!(
-                        "sharded tempering: swap-phase barrier timed out after {:?} at round \
-                         {round}; stalled shard(s): {stalled:?}",
-                        params.barrier_timeout
-                    );
-                }
-            }
-        }
-        // 3. swap phase — interior and boundary pairs alike, O(1) each
-        //    (β-assignments move, spin states stay on their dies)
-        observe(round, &states, core.chain_at_rung());
-        core.finish_round(round, &energies, &states);
-    }
-    for tx in cmd_txs {
-        let _ = tx.send(ShardCmd::Finish);
-    }
-
-    let run = core.into_run();
+/// Split a finished run's merged diagnostics into the per-shard /
+/// boundary attribution of a [`ShardedRun`].
+fn attribute(run: TemperingRun, plan: &ShardPlan) -> ShardedRun {
+    let shards = plan.shards();
     let boundary_pairs = plan.boundary_pairs();
     let mut per_shard: Vec<SwapStats> =
         (0..shards).map(|s| run.swaps.restricted(&plan.interior_pairs(s))).collect();
@@ -395,7 +468,122 @@ where
         .iter()
         .map(|range| run.flux.restricted(&range.clone().collect::<Vec<_>>()))
         .collect();
-    Ok(ShardedRun { run, per_shard, boundary, per_shard_flux, boundary_pairs, shards })
+    ShardedRun { run, per_shard, boundary, per_shard_flux, boundary_pairs, shards }
+}
+
+/// The coordinator's half of the serial protocol: handshake with every
+/// seat, then drive the round loop — fan the β slices out, wait
+/// (bounded) at the swap barrier, run the swap phase in the shared
+/// [`TemperingCore`]. `observe(round, global_states, chain_at_rung)`
+/// mirrors [`crate::annealing::temper_observed`] with chains in shard
+/// order.
+pub(crate) fn drive_sharded<F>(
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    out_rx: &mpsc::Receiver<ShardMsg>,
+    mut observe: F,
+) -> Result<ShardedRun>
+where
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let shards = cmd_txs.len();
+    ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
+    let batches = handshake(shards, out_rx, params.barrier_timeout)?;
+    let plan = ShardPlan::new(&params.base.ladder, &batches)?;
+    let mut core =
+        TemperingCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
+
+    let sweeps = params.base.sweeps_per_round;
+    let mut states: Vec<Vec<i8>> = vec![Vec::new(); plan.total_chains];
+    let mut energies = vec![0.0f64; plan.total_chains];
+    let mut stash: Vec<StashedPhase> = (0..plan.shards()).map(|_| None).collect();
+    for round in 0..params.base.rounds {
+        // 1. fan this round's β slices out to the shards
+        send_phase(&core.chain_betas(beta_scale), &plan, cmd_txs, sweeps, round)?;
+        // 2. swap barrier: every shard must report, within the timeout
+        //    (serial schedule: one phase in flight, the stash stays
+        //    empty — it exists for the pipelined scheduler)
+        collect_phase(
+            &plan,
+            out_rx,
+            params.barrier_timeout,
+            round,
+            &mut states,
+            &mut energies,
+            &mut stash,
+        )?;
+        // 3. swap phase — interior and boundary pairs alike, O(1) each
+        //    (β-assignments move, spin states stay on their dies)
+        observe(round, &states, core.chain_at_rung());
+        core.finish_round(round, &energies, &states);
+    }
+    for tx in cmd_txs {
+        let _ = tx.send(ShardCmd::Finish);
+    }
+    Ok(attribute(core.into_run(), &plan))
+}
+
+/// The pipelined coordinator: identical protocol, different schedule —
+/// phase *t+1*'s β slices are handed out **before** phase *t*'s
+/// readback is collected, so every worker's command queue stays
+/// non-empty and a shard that reports immediately resumes sweeping
+/// while the coordinator scores the phase it just received. Swap
+/// phases resolve one phase behind the sweeps they feed (the 1-phase
+/// lag of [`crate::annealing::PipelinedCore`]); the run is exactly as
+/// deterministic as the serial schedule and bit-identical to
+/// [`crate::annealing::temper_pipelined`] in the 1-shard case.
+pub(crate) fn drive_sharded_pipelined<F>(
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    out_rx: &mpsc::Receiver<ShardMsg>,
+    mut observe: F,
+) -> Result<ShardedRun>
+where
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let shards = cmd_txs.len();
+    ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
+    ensure!(params.base.rounds >= 1, "pipelined tempering needs at least one round");
+    let batches = handshake(shards, out_rx, params.barrier_timeout)?;
+    let plan = ShardPlan::new(&params.base.ladder, &batches)?;
+    let mut core =
+        PipelinedCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
+
+    let sweeps = params.base.sweeps_per_round;
+    let mut states: Vec<Vec<i8>> = vec![Vec::new(); plan.total_chains];
+    let mut energies = vec![0.0f64; plan.total_chains];
+    let mut stash: Vec<StashedPhase> = (0..plan.shards()).map(|_| None).collect();
+    // prime the double buffer: phase 0 goes out before any readback
+    let betas = core.launch(beta_scale).expect("at least one round");
+    send_phase(&betas, &plan, cmd_txs, sweeps, 0)?;
+    for round in 0..params.base.rounds {
+        // 1. hand out phase round+1 BEFORE collecting phase round, so
+        //    no worker ever idles at the barrier (its queue already
+        //    holds the next phase when it reports this one)
+        if let Some(betas) = core.launch(beta_scale) {
+            send_phase(&betas, &plan, cmd_txs, sweeps, round + 1)?;
+        }
+        // 2. collect phase round's readback (bounded); a fast shard's
+        //    phase round+1 message arriving early parks in the stash
+        collect_phase(
+            &plan,
+            out_rx,
+            params.barrier_timeout,
+            round,
+            &mut states,
+            &mut energies,
+            &mut stash,
+        )?;
+        // 3. … and score it while the dies sweep phase round+1
+        observe(round, &states, core.chain_at_rung());
+        core.score(&energies, &states);
+    }
+    for tx in cmd_txs {
+        let _ = tx.send(ShardCmd::Finish);
+    }
+    Ok(attribute(core.into_run(), &plan))
 }
 
 /// Run one β-ladder across `samplers.len()` dies, one shard each (see
@@ -460,7 +648,11 @@ where
         );
     }
     drop(out_tx);
-    let result = drive_sharded(params, beta_scale, &cmd_txs, &out_rx, observe);
+    let result = if params.pipeline {
+        drive_sharded_pipelined(params, beta_scale, &cmd_txs, &out_rx, observe)
+    } else {
+        drive_sharded(params, beta_scale, &cmd_txs, &out_rx, observe)
+    };
     drop(cmd_txs);
     if result.is_ok() {
         // every worker saw Finish (or a hangup) — reap them

@@ -304,9 +304,8 @@ impl CdTrainer {
         chip.sweeps(self.params.k_sweeps * 4)?;
         while (hist.total() as usize) < n_samples {
             chip.sweeps(2)?;
-            for st in chip.states() {
-                hist.record(&st);
-            }
+            // borrow, don't clone (see Sampler::for_each_state)
+            chip.for_each_state(&mut |_, st| hist.record(st));
         }
         Ok(hist)
     }

@@ -253,11 +253,12 @@ pub fn collect_positive<C: TrainableChip>(
             spec.visible.iter().copied().zip(pattern.iter().copied()).collect();
         chip.set_clamps(&clamps);
         chip.sweeps(spec.k_sweeps)?;
+        let slot = first_pattern + local;
         for _ in 0..spec.samples_per_pattern {
             chip.sweeps(1)?;
-            for st in chip.states() {
-                acc.record_positive(first_pattern + local, spec, &st);
-            }
+            // borrow, don't clone: states() would deep-copy the whole
+            // batch once per sample sweep
+            chip.for_each_state(&mut |_, st| acc.record_positive(slot, spec, st));
         }
     }
     Ok(())
@@ -280,9 +281,7 @@ pub fn collect_negative<C: TrainableChip>(
     }
     for _ in 0..samples {
         chip.sweeps(1)?;
-        for st in chip.states() {
-            acc.record_negative(spec, &st);
-        }
+        chip.for_each_state(&mut |_, st| acc.record_negative(spec, st));
     }
     Ok(())
 }

@@ -93,6 +93,15 @@ impl<S: Sampler> Sampler for Hw<S> {
     fn states(&self) -> Vec<Vec<i8>> {
         self.engine.states()
     }
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        self.engine.for_each_state(f);
+    }
+    fn track_energies(&mut self, ledger: &crate::problems::EnergyLedger) -> Result<()> {
+        self.engine.track_energies(ledger)
+    }
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        self.engine.energies()
+    }
     fn randomize(&mut self, seed: u64) {
         self.engine.randomize(seed);
     }

@@ -60,6 +60,7 @@
 //! [`CdTrainer`]: crate::learning::CdTrainer
 //! [`CdTrainer::train`]: crate::learning::CdTrainer::train
 
+use std::collections::{BTreeMap, VecDeque};
 use std::ops::Range;
 use std::path::Path;
 use std::sync::{mpsc, Arc};
@@ -105,8 +106,22 @@ pub struct TrainParams {
     /// Visible samples per evaluation, split across the dies.
     pub eval_samples: usize,
     /// Bounded wait at each all-reduce barrier before a stalled die
-    /// fails the run with a diagnostic (never a deadlock).
+    /// fails the run with a diagnostic (never a deadlock). In pipelined
+    /// mode the bound applies to the longest *silence* (time without
+    /// any die reporting) rather than to a whole barrier.
     pub barrier_timeout: Duration,
+    /// Overlap coordination with compute: positive and negative phases
+    /// ship as separate work-units whose accumulators stream into the
+    /// all-reduce in completion order (exact — [`GradAccum::merge`] is
+    /// associative and commutative over integer-valued sums), and
+    /// evaluations no longer block the epoch loop — their histograms
+    /// drain while the dies already run the next epoch. Each die's
+    /// epoch arrives as two work-units instead of one, but the
+    /// *chip-call* sequence they trigger is identical to the barrier
+    /// path's, so a pipelined run is bit-identical to the serial one,
+    /// just faster
+    /// (`rust/tests/pipelined_equivalence.rs`).
+    pub pipeline: bool,
     /// Seed for the per-die chain randomization when the run is seated
     /// by the coordinator (direct [`run_training`] callers prepare
     /// their own chips and this is unused).
@@ -126,6 +141,7 @@ impl TrainParams {
             eval_every: 10,
             eval_samples: 3000,
             barrier_timeout: Duration::from_secs(60),
+            pipeline: false,
             seed: 0x7124,
         }
     }
@@ -617,9 +633,9 @@ fn run_eval_share<C: TrainableChip>(
     while (hist.total() as usize) < samples {
         chip.sweeps(2)?;
         sweeps += 2;
-        for st in chip.states() {
-            hist.record(&st);
-        }
+        // borrow, don't clone: the evaluation loop reads thousands of
+        // states and only ever histograms them
+        chip.for_each_state(&mut |_, st| hist.record(st));
     }
     Ok(TrainMsg::Hist { shard, hist, sweeps })
 }
@@ -695,29 +711,13 @@ impl Placement {
     }
 }
 
-/// The coordinator's half of the protocol: handshake with every seat,
-/// then drive the epoch loop — fan the phase work-units out, all-reduce
-/// the [`GradAccum`]s at a bounded barrier, apply the update in the
-/// shared [`CdTrainer`], program the new codes back to every die, and
-/// evaluate at the configured cadence. `on_epoch` observes each
-/// recorded [`EpochStats`] as it is produced (the streaming hook).
-pub(crate) fn drive_training<F>(
+/// Handshake: learn each die's chain count (bounded wait) and check the
+/// tempered ladder fits every die.
+fn handshake_dies(
     params: &TrainParams,
-    resume: Option<&TrainCheckpoint>,
-    segment_epochs: usize,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    dies: usize,
     out_rx: &mpsc::Receiver<TrainMsg>,
-    mut on_epoch: F,
-) -> Result<TrainedRun>
-where
-    F: FnMut(&EpochStats),
-{
-    params.validate()?;
-    let dies = cmd_txs.len();
-    ensure!(dies == params.dies, "{dies} seats for {} dies", params.dies);
-    ensure!(segment_epochs >= 1, "training needs at least one epoch");
-
-    // Handshake: learn each die's chain count (bounded wait).
+) -> Result<Vec<usize>> {
     let mut batches = vec![0usize; dies];
     let mut joined = vec![false; dies];
     let deadline = Instant::now() + params.barrier_timeout;
@@ -750,45 +750,85 @@ where
             );
         }
     }
+    Ok(batches)
+}
 
-    let mut trainer =
-        CdTrainer::new(params.layout.clone(), params.dataset.clone(), params.cd);
-    if let Some(cp) = resume {
-        ensure!(
-            cp.gate == params.dataset.name,
-            "checkpoint is for gate {} but the run trains {}",
-            cp.gate,
-            params.dataset.name
-        );
-        trainer.restore_shadow(&cp.w, &cp.b, cp.epochs_done)?;
+/// Program the trainer's current register image onto every die.
+fn program_all(
+    trainer: &CdTrainer,
+    params: &TrainParams,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+) -> Result<()> {
+    for (s, tx) in cmd_txs.iter().enumerate() {
+        let cmd =
+            TrainCmd::Program { codes: trainer.codes.clone(), beta: params.cd.beta as f32 };
+        if tx.send(cmd).is_err() {
+            bail!("training: die {s} hung up at a program step");
+        }
     }
-    let spec = trainer.phase_spec();
-    let place = Placement::new(params);
+    Ok(())
+}
 
-    // restore persistent chains before any programming/sweeping
-    if let Some(cp) = resume {
-        for (k, &die) in place.neg_dies.iter().enumerate() {
-            if let Some(states) = cp.chains.get(k) {
-                if cmd_txs[die].send(TrainCmd::Restore { states: states.clone() }).is_err() {
-                    bail!("training: die {die} hung up before the run started");
-                }
+/// Collect the persistent negative chains for the checkpoint (PCD only;
+/// empty otherwise).
+fn collect_chains(
+    params: &TrainParams,
+    place: &Placement,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+) -> Result<Vec<Vec<Vec<i8>>>> {
+    let dies = cmd_txs.len();
+    let mut chains: Vec<Vec<Vec<i8>>> = Vec::new();
+    if !params.pcd {
+        return Ok(chains);
+    }
+    for &die in &place.neg_dies {
+        if cmd_txs[die].send(TrainCmd::Checkpoint).is_err() {
+            bail!("training: die {die} hung up before checkpointing");
+        }
+    }
+    let mut got: Vec<Option<Vec<Vec<i8>>>> = (0..dies).map(|_| None).collect();
+    let deadline = Instant::now() + params.barrier_timeout;
+    for _ in 0..place.neg_dies.len() {
+        match recv_by(out_rx, deadline) {
+            Ok(TrainMsg::Chains { shard, states }) => {
+                ensure!(shard < dies, "unknown shard {shard}");
+                got[shard] = Some(states);
+            }
+            Ok(TrainMsg::Error { shard, message }) => {
+                bail!("training: die {shard} failed checkpointing: {message}")
+            }
+            Ok(_) => bail!("protocol error: unexpected message while checkpointing"),
+            Err(_) => {
+                bail!("training: checkpoint barrier timed out after {:?}", params.barrier_timeout)
             }
         }
     }
-    let program_all = |trainer: &CdTrainer| -> Result<()> {
-        for (s, tx) in cmd_txs.iter().enumerate() {
-            let cmd = TrainCmd::Program {
-                codes: trainer.codes.clone(),
-                beta: params.cd.beta as f32,
-            };
-            if tx.send(cmd).is_err() {
-                bail!("training: die {s} hung up at a program step");
-            }
-        }
-        Ok(())
-    };
-    program_all(&trainer)?;
+    for &die in &place.neg_dies {
+        chains.push(got[die].take().unwrap_or_default());
+    }
+    Ok(chains)
+}
 
+/// The barrier-synchronized epoch loop (the serial schedule): fan the
+/// phase work-units out, all-reduce the [`GradAccum`]s at a bounded
+/// barrier, apply the update, program the new codes back, and block on
+/// the evaluation at the configured cadence.
+#[allow(clippy::too_many_arguments)]
+fn run_epochs_barrier<F>(
+    params: &TrainParams,
+    trainer: &mut CdTrainer,
+    spec: &PhaseSpec,
+    place: &Placement,
+    segment_epochs: usize,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+    mut on_epoch: F,
+) -> Result<(Vec<EpochStats>, u64)>
+where
+    F: FnMut(&EpochStats),
+{
+    let dies = cmd_txs.len();
     let n_patterns = params.dataset.patterns.len();
     let mut stats: Vec<EpochStats> = Vec::new();
     let mut total_sweeps = 0u64;
@@ -797,7 +837,7 @@ where
         let shadow = params
             .tempered
             .as_ref()
-            .map(|_| ShadowEnergy::new(&spec, trainer.shadow().0, trainer.shadow().1));
+            .map(|_| ShadowEnergy::new(spec, trainer.shadow().0, trainer.shadow().1));
         // 1. fan the epoch's work-units out
         for (s, tx) in cmd_txs.iter().enumerate() {
             let work = EpochShard {
@@ -848,7 +888,7 @@ where
         }
         let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
         let gap = trainer.apply_gradient(&dc, &dm);
-        program_all(&trainer)?;
+        program_all(trainer, params, cmd_txs)?;
         // 4. evaluate at the cadence (last epoch always)
         if e % params.eval_every == 0 || e == segment_epochs - 1 {
             let mut expected = 0usize;
@@ -892,37 +932,291 @@ where
             stats.push(stat);
         }
     }
+    Ok((stats, total_sweeps))
+}
 
-    // collect persistent chains for the checkpoint, then dismiss seats
-    let mut chains: Vec<Vec<Vec<i8>>> = Vec::new();
-    if params.pcd {
-        for &die in &place.neg_dies {
-            if cmd_txs[die].send(TrainCmd::Checkpoint).is_err() {
-                bail!("training: die {die} hung up before checkpointing");
+/// One evaluation whose histograms are still streaming in.
+struct PendingEval {
+    /// Absolute epoch number the evaluation snapshots.
+    epoch_no: usize,
+    /// Correlation gap recorded when the epoch's update was applied.
+    corr_gap: f64,
+    /// Merged histogram so far (u64 counts: merge order is exact).
+    hist: StateHistogram,
+    /// Die shares still outstanding.
+    remaining: usize,
+}
+
+/// Fold one die's evaluation share into its pending evaluation (dies
+/// answer their eval commands in dispatch order, so the per-die FIFO
+/// `eval_queue` maps each histogram to the right epoch).
+fn absorb_hist(
+    pending: &mut BTreeMap<usize, PendingEval>,
+    eval_queue: &mut [VecDeque<usize>],
+    shard: usize,
+    hist: &StateHistogram,
+) -> Result<()> {
+    ensure!(shard < eval_queue.len(), "unknown shard {shard}");
+    let key = eval_queue[shard].pop_front().ok_or_else(|| {
+        anyhow!("protocol error: die {shard} reported an evaluation that was never requested")
+    })?;
+    let entry = pending.get_mut(&key).expect("pending eval registered at dispatch");
+    entry.hist.merge(hist)?;
+    entry.remaining -= 1;
+    Ok(())
+}
+
+/// Emit every evaluation whose histograms are complete, in epoch order
+/// (the stream never reorders even when a later epoch's shares land
+/// first).
+fn flush_evals<F>(
+    params: &TrainParams,
+    pending: &mut BTreeMap<usize, PendingEval>,
+    stats: &mut Vec<EpochStats>,
+    on_epoch: &mut F,
+) where
+    F: FnMut(&EpochStats),
+{
+    while let Some((&key, entry)) = pending.iter().next() {
+        if entry.remaining > 0 {
+            break;
+        }
+        let entry = pending.remove(&key).expect("entry just observed");
+        let p_model = entry.hist.probabilities();
+        let p_target = params.dataset.target_distribution();
+        let (kl, valid) = kl_and_valid(&p_target, &p_model);
+        let stat =
+            EpochStats { epoch: entry.epoch_no, kl, corr_gap: entry.corr_gap, valid_mass: valid };
+        on_epoch(&stat);
+        stats.push(stat);
+    }
+}
+
+/// The pipelined epoch loop: positive and negative phases ship as
+/// separate work-units whose accumulators stream into the all-reduce in
+/// **completion order** (exact — [`GradAccum::merge`] is associative
+/// and commutative over integer-valued sums), and evaluations never
+/// block the loop — their histograms drain through later epochs'
+/// receive loops while the dies already run the next epoch's phases.
+///
+/// Each die's epoch ships as two `Epoch` work-units instead of the
+/// barrier schedule's one, but `run_epoch_shard` turns both into the
+/// exact chip-call sequence of the combined unit (positive loop, then
+/// negative), and `Program`/`Eval` keep their order — so the run is
+/// bit-identical to [`run_epochs_barrier`]; only the coordinator's
+/// waiting changes. Anyone adding per-`Epoch`-command side effects to
+/// `train_worker_loop` (state resets, extra RNG draws, per-command
+/// burn-in) WILL break that equivalence — the suite pins it. Liveness stays bounded: the run
+/// fails with a diagnostic when no die reports anything for
+/// [`TrainParams::barrier_timeout`].
+#[allow(clippy::too_many_arguments)]
+fn run_epochs_pipelined<F>(
+    params: &TrainParams,
+    trainer: &mut CdTrainer,
+    spec: &PhaseSpec,
+    place: &Placement,
+    segment_epochs: usize,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+    mut on_epoch: F,
+) -> Result<(Vec<EpochStats>, u64)>
+where
+    F: FnMut(&EpochStats),
+{
+    let dies = cmd_txs.len();
+    let n_patterns = params.dataset.patterns.len();
+    let mut stats: Vec<EpochStats> = Vec::new();
+    let mut total_sweeps = 0u64;
+    let mut pending: BTreeMap<usize, PendingEval> = BTreeMap::new();
+    let mut eval_queue: Vec<VecDeque<usize>> = vec![VecDeque::new(); dies];
+    for e in 0..segment_epochs {
+        let epoch_no = trainer.epochs_done();
+        let shadow = params
+            .tempered
+            .as_ref()
+            .map(|_| ShadowEnergy::new(spec, trainer.shadow().0, trainer.shadow().1));
+        // 1. fan the epoch's phases out as separate work-units: the
+        //    clamped-pattern shard's accumulator streams into the
+        //    all-reduce while the same die (and the PCD/tempered dies)
+        //    are still sweeping their negative share
+        let mut expected = 0usize;
+        for (s, tx) in cmd_txs.iter().enumerate() {
+            if !place.pattern_ranges[s].is_empty() {
+                let work = EpochShard {
+                    patterns: place.pattern_ranges[s].clone(),
+                    neg_samples: 0,
+                    neg_burn_in: false,
+                    shadow: None,
+                };
+                if tx.send(TrainCmd::Epoch(work)).is_err() {
+                    bail!("training: die {s} hung up before epoch {epoch_no}");
+                }
+                expected += 1;
+            }
+            if place.neg_shares[s] > 0 {
+                let work = EpochShard {
+                    patterns: 0..0,
+                    neg_samples: place.neg_shares[s],
+                    neg_burn_in: e == 0 || !params.pcd,
+                    shadow: shadow.clone(),
+                };
+                if tx.send(TrainCmd::Epoch(work)).is_err() {
+                    bail!("training: die {s} hung up before epoch {epoch_no}");
+                }
+                expected += 1;
             }
         }
-        let mut got: Vec<Option<Vec<Vec<i8>>>> = (0..dies).map(|_| None).collect();
-        let deadline = Instant::now() + params.barrier_timeout;
-        for _ in 0..place.neg_dies.len() {
+        // 2. completion-ordered all-reduce: merge each accumulator as
+        //    it lands; late evaluation histograms from earlier epochs
+        //    drain through the same loop
+        let mut total = GradAccum::new(n_patterns, spec.edges.len(), spec.spins.len());
+        let mut received = 0usize;
+        let mut deadline = Instant::now() + params.barrier_timeout;
+        while received < expected {
             match recv_by(out_rx, deadline) {
-                Ok(TrainMsg::Chains { shard, states }) => {
+                Ok(TrainMsg::Grad { shard, accum, sweeps }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
-                    got[shard] = Some(states);
+                    ensure!(
+                        accum.patterns() == n_patterns,
+                        "die {shard} reported {} pattern slots, expected {n_patterns}",
+                        accum.patterns()
+                    );
+                    total.merge(&accum);
+                    total_sweeps += sweeps;
+                    received += 1;
+                    deadline = Instant::now() + params.barrier_timeout;
+                }
+                Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
+                    total_sweeps += sweeps;
+                    absorb_hist(&mut pending, &mut eval_queue, shard, &hist)?;
+                    flush_evals(params, &mut pending, &mut stats, &mut on_epoch);
+                    deadline = Instant::now() + params.barrier_timeout;
                 }
                 Ok(TrainMsg::Error { shard, message }) => {
-                    bail!("training: die {shard} failed checkpointing: {message}")
+                    bail!("training: die {shard} failed at epoch {epoch_no}: {message}")
                 }
-                Ok(_) => bail!("protocol error: unexpected message while checkpointing"),
+                Ok(_) => bail!("protocol error: unexpected message at epoch {epoch_no}"),
                 Err(_) => bail!(
-                    "training: checkpoint barrier timed out after {:?}",
+                    "training: pipelined all-reduce went silent for {:?} at epoch {epoch_no} \
+                     ({received} of {expected} phase results in)",
                     params.barrier_timeout
                 ),
             }
         }
-        for &die in &place.neg_dies {
-            chains.push(got[die].take().unwrap_or_default());
+        // 3. apply the update and reprogram every die
+        let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
+        let gap = trainer.apply_gradient(&dc, &dm);
+        program_all(trainer, params, cmd_txs)?;
+        // 4. dispatch the evaluation WITHOUT waiting on it: the dies
+        //    march straight into epoch e+1 as their shares finish
+        if e % params.eval_every == 0 || e == segment_epochs - 1 {
+            let mut remaining = 0usize;
+            for (s, tx) in cmd_txs.iter().enumerate() {
+                if place.eval_shares[s] == 0 {
+                    continue;
+                }
+                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                    bail!("training: die {s} hung up before evaluation");
+                }
+                eval_queue[s].push_back(e);
+                remaining += 1;
+            }
+            let entry = PendingEval {
+                epoch_no,
+                corr_gap: gap,
+                hist: StateHistogram::new(&params.layout.visible),
+                remaining,
+            };
+            pending.insert(e, entry);
         }
     }
+    // drain the tail: histograms still in flight after the last epoch
+    while !pending.is_empty() {
+        let deadline = Instant::now() + params.barrier_timeout;
+        match recv_by(out_rx, deadline) {
+            Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
+                total_sweeps += sweeps;
+                absorb_hist(&mut pending, &mut eval_queue, shard, &hist)?;
+                flush_evals(params, &mut pending, &mut stats, &mut on_epoch);
+            }
+            Ok(TrainMsg::Error { shard, message }) => {
+                bail!("training: die {shard} failed evaluating: {message}")
+            }
+            Ok(_) => bail!("protocol error: unexpected message draining evaluations"),
+            Err(_) => bail!(
+                "training: evaluation drain went silent for {:?} ({} evaluation(s) \
+                 outstanding)",
+                params.barrier_timeout,
+                pending.len()
+            ),
+        }
+    }
+    Ok((stats, total_sweeps))
+}
+
+/// The coordinator's half of the protocol: handshake with every seat,
+/// then drive the epoch loop — barrier-synchronized by default, or the
+/// overlapped schedule of [`run_epochs_pipelined`] when
+/// [`TrainParams::pipeline`] is set (bit-identical results either way)
+/// — apply each update in the shared [`CdTrainer`], program the new
+/// codes back to every die, and evaluate at the configured cadence.
+/// `on_epoch` observes each recorded [`EpochStats`] as it is produced
+/// (the streaming hook).
+pub(crate) fn drive_training<F>(
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    segment_epochs: usize,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+    on_epoch: F,
+) -> Result<TrainedRun>
+where
+    F: FnMut(&EpochStats),
+{
+    params.validate()?;
+    let dies = cmd_txs.len();
+    ensure!(dies == params.dies, "{dies} seats for {} dies", params.dies);
+    ensure!(segment_epochs >= 1, "training needs at least one epoch");
+    handshake_dies(params, dies, out_rx)?;
+
+    let mut trainer =
+        CdTrainer::new(params.layout.clone(), params.dataset.clone(), params.cd);
+    if let Some(cp) = resume {
+        ensure!(
+            cp.gate == params.dataset.name,
+            "checkpoint is for gate {} but the run trains {}",
+            cp.gate,
+            params.dataset.name
+        );
+        trainer.restore_shadow(&cp.w, &cp.b, cp.epochs_done)?;
+    }
+    let spec = trainer.phase_spec();
+    let place = Placement::new(params);
+
+    // restore persistent chains before any programming/sweeping
+    if let Some(cp) = resume {
+        for (k, &die) in place.neg_dies.iter().enumerate() {
+            if let Some(states) = cp.chains.get(k) {
+                if cmd_txs[die].send(TrainCmd::Restore { states: states.clone() }).is_err() {
+                    bail!("training: die {die} hung up before the run started");
+                }
+            }
+        }
+    }
+    program_all(&trainer, params, cmd_txs)?;
+
+    let (stats, total_sweeps) = if params.pipeline {
+        run_epochs_pipelined(
+            params, &mut trainer, &spec, &place, segment_epochs, cmd_txs, out_rx, on_epoch,
+        )?
+    } else {
+        run_epochs_barrier(
+            params, &mut trainer, &spec, &place, segment_epochs, cmd_txs, out_rx, on_epoch,
+        )?
+    };
+
+    // collect persistent chains for the checkpoint, then dismiss seats
+    let chains = collect_chains(params, &place, cmd_txs, out_rx)?;
     for tx in cmd_txs {
         let _ = tx.send(TrainCmd::Finish);
     }

@@ -3,11 +3,11 @@
 //! ```text
 //! pchip info                         chip facts + artifact status
 //! pchip train  [--gate and|or|xor|nand|nor|adder] [--dies N] [--pcd]
-//!              [--tempered-negative] [--epochs N] [--lr X]
+//!              [--tempered-negative] [--pipeline] [--epochs N] [--lr X]
 //!              [--checkpoint-out FILE] [--resume FILE] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
-//!              [--shards N] [--barrier-timeout-ms T]
+//!              [--shards N] [--pipeline] [--barrier-timeout-ms T]
 //!              [--tune off|acceptance|flux] [--adapt-every N]
 //! pchip tune-ladder [--seed S] [--replicas K] [--b0 X] [--b1 X]
 //!              [--iters N] [--floor A] [--ceiling A] [--min-k K] [--max-k K]
@@ -130,10 +130,13 @@ fn print_help() {
          train   hardware-aware CD learning of a gate (Figs 7, 8b)\n  \
          \u{20}       (--dies N fans the epoch across N dies through the\n  \
          \u{20}        coordinator; --pcd keeps persistent negative chains;\n  \
-         \u{20}        --tempered-negative mixes the model via a β-ladder)\n  \
+         \u{20}        --tempered-negative mixes the model via a β-ladder;\n  \
+         \u{20}        --pipeline streams phases into the all-reduce and\n  \
+         \u{20}        overlaps evaluations with the next epoch)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
          temper  replica-exchange sampling vs annealing, head-to-head\n  \
          \u{20}       (--shards N shards the ladder across N software dies;\n  \
+         \u{20}        --pipeline overlaps sweeps with swap/readback, 1-phase lag;\n  \
          \u{20}        --tune flux re-spaces the ladder in-run by round-trip flux)\n  \
          tune-ladder  feedback-optimize a β-ladder (round-trip flux, auto-K)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
@@ -207,6 +210,15 @@ impl pchip::sampler::Sampler for &mut dyn ErasedChip {
     fn states(&self) -> Vec<Vec<i8>> {
         (**self).states()
     }
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        (**self).for_each_state(f)
+    }
+    fn track_energies(&mut self, ledger: &pchip::problems::EnergyLedger) -> Result<()> {
+        (**self).track_energies(ledger)
+    }
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        (**self).energies()
+    }
     fn randomize(&mut self, seed: u64) {
         (**self).randomize(seed)
     }
@@ -267,6 +279,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut params = TrainParams::new(layout, data, cd);
     params.dies = dies;
     params.pcd = args.flag("pcd");
+    params.pipeline = args.flag("pipeline");
     params.eval_every = args.get("eval-every", 5)?;
     params.eval_samples = args.get("eval-samples", 4000)?;
     params.seed = args.get("seed", 7u64)?;
@@ -438,9 +451,12 @@ fn cmd_temper(args: &Args) -> Result<()> {
 
     // --shards N: the same ladder sharded across N software dies with
     // cross-worker swap phases (sw engine only — the sharded protocol
-    // needs per-chain β on every die)
+    // needs per-chain β on every die). --pipeline swaps the barrier
+    // schedule for the 1-phase-lag pipelined one (serial retained as
+    // the default), and works for a single die too.
     let shards: usize = args.get("shards", 1)?;
-    if shards > 1 {
+    let pipeline = args.flag("pipeline");
+    if shards > 1 || pipeline {
         anyhow::ensure!(
             shards <= replicas,
             "--shards {shards} cannot exceed --replicas {replicas}"
@@ -451,6 +467,7 @@ fn cmd_temper(args: &Args) -> Result<()> {
             barrier_timeout: std::time::Duration::from_millis(
                 args.get("barrier-timeout-ms", 30_000u64)?,
             ),
+            pipeline,
         };
         let r = exp::fig9a_sk_temper_sharded(
             seed,
@@ -460,8 +477,9 @@ fn cmd_temper(args: &Args) -> Result<()> {
             Some("fig9a_sharded"),
         )?;
         println!(
-            "sharded ({shards} dies, {} rungs each ±1): best {:.0} vs single-die {:.0}",
+            "sharded ({shards} die(s), {} rungs each ±1{}): best {:.0} vs single-die {:.0}",
             replicas / shards,
+            if pipeline { ", pipelined 1-phase-lag schedule" } else { "" },
             r.sharded.run.best_energy,
             r.single.best_energy
         );

@@ -108,6 +108,125 @@ pub fn edge_index(topo: &Topology, i: usize, j: usize) -> Option<usize> {
     topo.edges.binary_search(&key).ok()
 }
 
+/// Max couplers per p-bit on the Chimera die (the ledger's CSR width).
+const LEDGER_DEG: usize = 6;
+
+/// Incremental, integer code-domain energy accounting for a lowered
+/// problem — the readback half of the pipelined tempering engine.
+///
+/// The samplers run on register codes: [`IsingProblem::to_codes`] maps
+/// every coupling and bias to an 8-bit code plus one global `scale`
+/// with `J = code/127 × scale`. In that domain the Hamiltonian
+/// `E_code(m) = −Σ c_ij·m_i·m_j − Σ ch_i·m_i` is an **integer**, so a
+/// per-flip delta `ΔE_code = 2·m_i·(Σ_j c_ij·m_j + ch_i)` can be
+/// accumulated during the sweep in exact arithmetic: the running sum is
+/// bit-identical to a full recompute no matter how many flips happened
+/// in between — integer addition is associative, which is what makes
+/// the O(deg)-per-flip readback provably equal to the O(N·deg) rescan
+/// (pinned by `rust/tests/pipelined_equivalence.rs`). Logical readback
+/// is `E = E_code × scale / 127`, equal to [`IsingProblem::energy`]
+/// **exactly** whenever the lowering is lossless (±1 coefficients — the
+/// SK and equivalence-suite instances).
+///
+/// Engines opt in through [`crate::sampler::Sampler::track_energies`];
+/// the pure-rust sampler and the cycle-level chip update their ledgers
+/// inside the sweep loop, so a tempering swap phase reads chain
+/// energies in O(chains) instead of O(chains · N · deg).
+#[derive(Debug, Clone)]
+pub struct EnergyLedger {
+    /// `[N_SPINS × LEDGER_DEG]` neighbor ids (padded with self, code 0).
+    nbr_idx: Vec<u32>,
+    /// `[N_SPINS × LEDGER_DEG]` coupling code into the target spin.
+    nbr_c: Vec<i32>,
+    /// Per-spin bias codes.
+    h_c: Vec<i32>,
+    /// Enabled `(i, j, code)` triples, in canonical edge order (the
+    /// full-recompute path).
+    edges: Vec<(u32, u32, i32)>,
+    /// code → logical coupling scale (`J = code/127 × scale`).
+    scale: f64,
+}
+
+impl EnergyLedger {
+    /// Build the ledger from a problem's lossy-quantized register codes
+    /// (fails only when the problem itself fails validation).
+    pub fn new(problem: &IsingProblem, topo: &Topology) -> Result<Self> {
+        let (j_codes, enables, h_codes, scale) = problem.to_codes(topo)?;
+        let mut nbr_idx = vec![0u32; N_SPINS * LEDGER_DEG];
+        let mut nbr_c = vec![0i32; N_SPINS * LEDGER_DEG];
+        let mut fill = vec![0usize; N_SPINS];
+        // pad every row with self (code 0) so the gather is branch-free
+        for i in 0..N_SPINS {
+            for k in 0..LEDGER_DEG {
+                nbr_idx[i * LEDGER_DEG + k] = i as u32;
+            }
+        }
+        let mut edges = Vec::new();
+        for (e, &(i, j)) in topo.edges.iter().enumerate() {
+            if !enables[e] || j_codes[e] == 0 {
+                continue;
+            }
+            let c = j_codes[e] as i32;
+            edges.push((i as u32, j as u32, c));
+            for (a, b) in [(i, j), (j, i)] {
+                let slot = a * LEDGER_DEG + fill[a];
+                nbr_idx[slot] = b as u32;
+                nbr_c[slot] = c;
+                fill[a] += 1;
+            }
+        }
+        Ok(Self {
+            nbr_idx,
+            nbr_c,
+            h_c: h_codes.iter().map(|&c| c as i32).collect(),
+            edges,
+            scale,
+        })
+    }
+
+    /// [`EnergyLedger::new`] with a freshly built hardware topology —
+    /// what engine-side callers (worker threads holding only the
+    /// problem) use.
+    pub fn for_problem(problem: &IsingProblem) -> Result<Self> {
+        Self::new(problem, &Topology::new())
+    }
+
+    /// Full code-domain energy of a ±1 state — the O(N·deg) rescan the
+    /// incremental path replaces (and is checked against).
+    pub fn full_code(&self, state: &[i8]) -> i64 {
+        let mut e = 0i64;
+        for &(i, j, c) in &self.edges {
+            e -= c as i64 * (state[i as usize] * state[j as usize]) as i64;
+        }
+        for (i, &hc) in self.h_c.iter().enumerate() {
+            if hc != 0 {
+                e -= hc as i64 * state[i] as i64;
+            }
+        }
+        e
+    }
+
+    /// Code-domain energy change of flipping spin `i` out of `state`
+    /// (`state` is the *pre-flip* configuration) — O(deg), exact.
+    #[inline]
+    pub fn flip_delta(&self, state: &[i8], i: usize) -> i64 {
+        let base = i * LEDGER_DEG;
+        let mut field = self.h_c[i] as i64;
+        for k in 0..LEDGER_DEG {
+            field += self.nbr_c[base + k] as i64
+                * state[self.nbr_idx[base + k] as usize] as i64;
+        }
+        2 * state[i] as i64 * field
+    }
+
+    /// Convert a code-domain energy to logical units. Computed as
+    /// `e × scale / 127` in that order, so lossless codes (±1
+    /// coefficients) reproduce [`IsingProblem::energy`] bit-for-bit.
+    pub fn logical(&self, e_code: i64) -> f64 {
+        e_code as f64 * self.scale / 127.0
+    }
+}
+
 fn quantize(x: f64) -> i8 {
     (x * 127.0).round().clamp(-127.0, 127.0) as i8
 }
@@ -171,6 +290,45 @@ mod tests {
             assert_eq!(edge_index(&t, j, i), Some(e));
         }
         assert_eq!(edge_index(&t, 0, 1), None);
+    }
+
+    #[test]
+    fn ledger_full_matches_logical_energy_on_pm1() {
+        let t = topo();
+        let mut p = IsingProblem::new("pm1");
+        for (k, &(i, j)) in t.edges.iter().take(40).enumerate() {
+            p.couplings.push((i, j, if k % 3 == 0 { -1.0 } else { 1.0 }));
+        }
+        p.h[2] = 1.0;
+        p.h[9] = -1.0;
+        let ledger = EnergyLedger::new(&p, &t).unwrap();
+        let mut rng = crate::rng::HostRng::new(11);
+        for _ in 0..20 {
+            let st: Vec<i8> = (0..N_SPINS).map(|_| rng.spin()).collect();
+            // ±1 coefficients lower losslessly: logical readback is exact
+            assert_eq!(ledger.logical(ledger.full_code(&st)), p.energy(&st));
+        }
+    }
+
+    #[test]
+    fn ledger_flip_delta_matches_rescan() {
+        let t = topo();
+        let mut p = IsingProblem::new("mixed");
+        for (k, &(i, j)) in t.edges.iter().take(60).enumerate() {
+            p.couplings.push((i, j, 0.1 + 0.07 * k as f64));
+        }
+        p.h[0] = 0.4;
+        let ledger = EnergyLedger::new(&p, &t).unwrap();
+        let mut rng = crate::rng::HostRng::new(5);
+        let mut st: Vec<i8> = (0..N_SPINS).map(|_| rng.spin()).collect();
+        let mut e = ledger.full_code(&st);
+        for _ in 0..200 {
+            let i = rng.below(N_SPINS);
+            e += ledger.flip_delta(&st, i);
+            st[i] = -st[i];
+            // integer arithmetic: the running sum is exactly the rescan
+            assert_eq!(e, ledger.full_code(&st));
+        }
     }
 
     #[test]

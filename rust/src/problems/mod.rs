@@ -14,4 +14,4 @@ pub mod maxcut;
 pub mod sk;
 
 pub use exact::{exact_boltzmann, exact_ground_state};
-pub use ising::{edge_index, IsingProblem};
+pub use ising::{edge_index, EnergyLedger, IsingProblem};

@@ -54,6 +54,16 @@ pub use xla::XlaSampler;
 use anyhow::Result;
 
 use crate::analog::Folded;
+use crate::problems::EnergyLedger;
+
+/// Whether a sweep workload amortizes the cost of fanning chains across
+/// scoped threads — the one spawn-threshold heuristic every batched
+/// sweep path shares (the per-chain sequences are identical either way,
+/// so this is purely a throughput knob).
+pub(crate) fn spawn_worthwhile(batch: usize, sweeps: usize) -> bool {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    cores > 1 && batch >= 4 && sweeps * batch >= 32
+}
 
 /// A batched p-bit sampling engine.
 pub trait Sampler {
@@ -101,6 +111,47 @@ pub trait Sampler {
 
     /// Current spin state of every chain, `[batch][N_SPINS]`.
     fn states(&self) -> Vec<Vec<i8>>;
+
+    /// Visit every chain's state in chain order **without cloning** —
+    /// the hot-loop alternative to [`Sampler::states`] for energy
+    /// readback and histogram accumulation (a `states()` call deep-
+    /// clones `batch × N_SPINS` bytes per invocation; per-round loops
+    /// pay that thousands of times).
+    ///
+    /// Default: iterates a `states()` clone, so engines that cannot
+    /// lend borrows (remote/AOT readout paths) still conform. The
+    /// borrowing engines ([`SoftwareSampler`], [`ChipSampler`])
+    /// override it with a zero-copy walk.
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        for (c, st) in self.states().iter().enumerate() {
+            f(c, st);
+        }
+    }
+
+    /// Start incremental energy accounting against `ledger`: the engine
+    /// accumulates exact per-flip code-domain deltas during its sweep
+    /// loop so [`Sampler::energies`] reads back each chain's energy in
+    /// O(1) instead of an O(N·deg) rescan — the readback half of the
+    /// pipelined tempering engine (see
+    /// [`crate::problems::EnergyLedger`]).
+    ///
+    /// Default: unsupported. [`SoftwareSampler`] and [`ChipSampler`]
+    /// implement it; the AOT artifact exposes no flip stream, so
+    /// [`XlaSampler`] reports an error and callers fall back to the
+    /// full recompute.
+    fn track_energies(&mut self, _ledger: &EnergyLedger) -> Result<()> {
+        Err(anyhow::anyhow!("this engine does not support incremental energy readback"))
+    }
+
+    /// Logical energy of every chain under the ledger installed by
+    /// [`Sampler::track_energies`] (`&mut` so an engine may lazily
+    /// resynchronize after out-of-band state writes — `set_states`,
+    /// `randomize`, clamps — before answering).
+    ///
+    /// Default: unsupported (no ledger is being tracked).
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        Err(anyhow::anyhow!("no energy ledger installed (see Sampler::track_energies)"))
+    }
 
     /// Re-randomize all chain states.
     fn randomize(&mut self, seed: u64);
@@ -150,6 +201,22 @@ impl Sampler for ChipSampler {
 
     fn states(&self) -> Vec<Vec<i8>> {
         vec![self.chip.state().to_vec()]
+    }
+
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        f(0, self.chip.state());
+    }
+
+    fn track_energies(&mut self, ledger: &EnergyLedger) -> Result<()> {
+        self.chip.track_energy(ledger.clone());
+        Ok(())
+    }
+
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        match self.chip.energy() {
+            Some(e) => Ok(vec![e]),
+            None => Err(anyhow::anyhow!("no energy ledger installed on the chip")),
+        }
     }
 
     fn randomize(&mut self, seed: u64) {

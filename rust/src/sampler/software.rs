@@ -10,9 +10,10 @@ use anyhow::Result;
 
 use crate::analog::Folded;
 use crate::chimera::{Topology, N_PAD, N_SPINS};
+use crate::problems::EnergyLedger;
 
 use super::clamp::apply_clamps;
-use super::noise::NoiseSource;
+use super::noise::{ChainNoise, NoiseSource};
 use super::Sampler;
 
 /// Max couplers per p-bit on the Chimera die.
@@ -38,7 +39,16 @@ pub struct SoftwareSampler {
     /// `[batch][N_SPINS]` spin states.
     states: Vec<Vec<i8>>,
     noise: NoiseSource,
-    slab: Vec<f32>,
+    /// One noise slab per chain, allocated once and reused across every
+    /// `sweeps()` call (the thread scope used to allocate a fresh
+    /// `vec![0.0; N_PAD]` per chain per call).
+    slabs: Vec<Vec<f32>>,
+    /// Incremental energy accounting ([`Sampler::track_energies`]).
+    ledger: Option<EnergyLedger>,
+    /// Per-chain code-domain energy, exact while `!e_dirty`.
+    e_codes: Vec<i64>,
+    /// Set by out-of-band state writes; the next sync rescans.
+    e_dirty: bool,
     /// total p-bit updates performed (for flips/s accounting)
     pub updates: u64,
 }
@@ -68,7 +78,10 @@ impl SoftwareSampler {
             betas: vec![1.0; batch],
             states: Vec::new(),
             noise,
-            slab: vec![0.0; N_PAD],
+            slabs: (0..batch).map(|_| vec![0.0; N_PAD]).collect(),
+            ledger: None,
+            e_codes: vec![0; batch],
+            e_dirty: true,
             updates: 0,
         };
         // neighbor indices are a topology fact; weights filled by load()
@@ -84,9 +97,18 @@ impl SoftwareSampler {
         s
     }
 
-    #[inline(always)]
-    fn update_one(&self, state: &[i8], beta: f32, i: usize, u: f32) -> i8 {
-        update_spin(&self.nbr_idx, &self.nbr_w, &self.h_eff, &self.g, &self.o, beta, state, i, u)
+    /// Rescan every chain's code energy after an out-of-band state
+    /// write; incremental deltas stay exact from here until the next
+    /// such write.
+    fn sync_energies(&mut self) {
+        let Some(ledger) = &self.ledger else { return };
+        if !self.e_dirty {
+            return;
+        }
+        for (e, st) in self.e_codes.iter_mut().zip(&self.states) {
+            *e = ledger.full_code(st);
+        }
+        self.e_dirty = false;
     }
 }
 
@@ -134,6 +156,52 @@ fn random_state(seed: u64) -> Vec<i8> {
     (0..N_SPINS).map(|_| r.spin()).collect()
 }
 
+/// `n` chromatic sweeps of one chain over the shared tensors, with
+/// optional exact per-flip ΔE accounting — the one inner loop both the
+/// serial and the scoped-thread sweep paths execute (per-chain update
+/// sequences are identical either way; the ledger branch is hoisted out
+/// of the spin loop so the untracked hot path keeps its plain store).
+#[allow(clippy::too_many_arguments)]
+fn sweep_chain(
+    nbr_idx: &[u32],
+    nbr_w: &[f32],
+    h_eff: &[f32],
+    g: &[f32],
+    o: &[f32],
+    groups: &[Vec<usize>; 2],
+    beta: f32,
+    n: usize,
+    state: &mut [i8],
+    noise: &mut ChainNoise<'_>,
+    slab: &mut [f32],
+    ledger: Option<&EnergyLedger>,
+    e_code: &mut i64,
+) {
+    for _ in 0..n {
+        for group in groups {
+            noise.fill(slab);
+            match ledger {
+                None => {
+                    for &i in group {
+                        state[i] =
+                            update_spin(nbr_idx, nbr_w, h_eff, g, o, beta, state, i, slab[i]);
+                    }
+                }
+                Some(l) => {
+                    for &i in group {
+                        let new =
+                            update_spin(nbr_idx, nbr_w, h_eff, g, o, beta, state, i, slab[i]);
+                        if new != state[i] {
+                            *e_code += l.flip_delta(state, i);
+                            state[i] = new;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 impl Sampler for SoftwareSampler {
     fn load(&mut self, folded: &Folded) {
         for i in 0..N_SPINS {
@@ -148,6 +216,9 @@ impl Sampler for SoftwareSampler {
         let (g, o) = apply_clamps(folded, &self.clamps);
         self.g = g;
         self.o = o;
+        // new tensors usually mean a new problem: any tracked ledger's
+        // energies are conservatively rescanned at the next sync
+        self.e_dirty = true;
     }
 
     fn set_beta(&mut self, beta: f32) {
@@ -183,6 +254,7 @@ impl Sampler for SoftwareSampler {
                 chain[i] = v;
             }
         }
+        self.e_dirty = true;
         Ok(())
     }
 
@@ -199,6 +271,7 @@ impl Sampler for SoftwareSampler {
                 chain[i] = v;
             }
         }
+        self.e_dirty = true;
     }
 
     fn batch(&self) -> usize {
@@ -208,51 +281,46 @@ impl Sampler for SoftwareSampler {
     fn sweeps(&mut self, n: usize) -> Result<()> {
         let batch = self.states.len();
         self.updates += (n * batch * N_SPINS) as u64;
-        // Chains are fully independent (own state, own noise bank), so
-        // spread them over scoped threads when the work amortizes the
-        // spawn cost; the per-chain sequences are identical either way.
-        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-        if cores > 1 && batch >= 4 && n * batch >= 32 {
-            // field-level split borrows: states/noise mutable per chain,
-            // everything else shared read-only
-            let states = &mut self.states;
-            let chains = self.noise.split_chains();
-            let (nbr_idx, nbr_w) = (&self.nbr_idx, &self.nbr_w);
-            let (h_eff, g, o) = (&self.h_eff, &self.g, &self.o);
-            let (betas, groups) = (&self.betas, &self.topo.color_groups);
+        self.sync_energies();
+        // Chains are fully independent (own state, noise bank, scratch
+        // slab and energy cell), so spread them over scoped threads when
+        // the shared heuristic says the work amortizes the spawn cost;
+        // the per-chain sequences are identical either way.
+        let parallel = super::spawn_worthwhile(batch, n);
+        // field-level split borrows: states/noise/slabs/energies mutable
+        // per chain, everything else shared read-only
+        let ledger = self.ledger.as_ref();
+        let states = &mut self.states;
+        let slabs = &mut self.slabs;
+        let e_codes = &mut self.e_codes;
+        let chains = self.noise.split_chains();
+        let (nbr_idx, nbr_w) = (&self.nbr_idx, &self.nbr_w);
+        let (h_eff, g, o) = (&self.h_eff, &self.g, &self.o);
+        let (betas, groups) = (&self.betas, &self.topo.color_groups);
+        let work = states
+            .iter_mut()
+            .zip(chains)
+            .zip(slabs.iter_mut())
+            .zip(e_codes.iter_mut())
+            .enumerate();
+        if parallel {
             std::thread::scope(|scope| {
-                for (c, (state, mut noise)) in states.iter_mut().zip(chains).enumerate() {
+                for (c, (((state, mut noise), slab), e_code)) in work {
                     let beta = betas[c];
                     scope.spawn(move || {
-                        let mut slab = vec![0.0f32; N_PAD];
-                        for _ in 0..n {
-                            for phase in 0..2 {
-                                noise.fill(&mut slab);
-                                for &i in &groups[phase] {
-                                    state[i] = update_spin(
-                                        nbr_idx, nbr_w, h_eff, g, o, beta, state, i, slab[i],
-                                    );
-                                }
-                            }
-                        }
+                        sweep_chain(
+                            nbr_idx, nbr_w, h_eff, g, o, groups, beta, n, state, &mut noise,
+                            slab, ledger, e_code,
+                        );
                     });
                 }
             });
-            return Ok(());
-        }
-        for _ in 0..n {
-            for c in 0..batch {
-                let mut slab = std::mem::take(&mut self.slab);
-                let mut state = std::mem::take(&mut self.states[c]);
-                let beta = self.betas[c];
-                for phase in 0..2 {
-                    self.noise.fill(c, &mut slab);
-                    for &i in &self.topo.color_groups[phase] {
-                        state[i] = self.update_one(&state, beta, i, slab[i]);
-                    }
-                }
-                self.states[c] = state;
-                self.slab = slab;
+        } else {
+            for (c, (((state, mut noise), slab), e_code)) in work {
+                sweep_chain(
+                    nbr_idx, nbr_w, h_eff, g, o, groups, betas[c], n, state, &mut noise, slab,
+                    ledger, e_code,
+                );
             }
         }
         Ok(())
@@ -262,6 +330,27 @@ impl Sampler for SoftwareSampler {
         self.states.clone()
     }
 
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        for (c, st) in self.states.iter().enumerate() {
+            f(c, st);
+        }
+    }
+
+    fn track_energies(&mut self, ledger: &EnergyLedger) -> Result<()> {
+        self.ledger = Some(ledger.clone());
+        self.e_dirty = true;
+        Ok(())
+    }
+
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        self.sync_energies();
+        let ledger = self
+            .ledger
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no energy ledger installed"))?;
+        Ok(self.e_codes.iter().map(|&e| ledger.logical(e)).collect())
+    }
+
     fn randomize(&mut self, seed: u64) {
         for (c, chain) in self.states.iter_mut().enumerate() {
             *chain = random_state(seed ^ (0xF00D + c as u64));
@@ -269,6 +358,7 @@ impl Sampler for SoftwareSampler {
                 chain[i] = v;
             }
         }
+        self.e_dirty = true;
     }
 }
 
@@ -427,5 +517,63 @@ mod tests {
         let mut s = SoftwareSampler::with_noise(2, NoiseSource::host(9, 2), 9);
         s.sweeps(3).unwrap();
         assert_eq!(s.states().len(), 2);
+    }
+
+    #[test]
+    fn for_each_state_matches_states() {
+        let mut s = SoftwareSampler::new(3, 8);
+        s.sweeps(2).unwrap();
+        let cloned = s.states();
+        let mut seen = 0usize;
+        s.for_each_state(&mut |c, st| {
+            assert_eq!(st, cloned[c].as_slice());
+            seen += 1;
+        });
+        assert_eq!(seen, 3);
+    }
+
+    /// The incremental ledger must agree with the O(N·deg) rescan after
+    /// every sweep call, through both the serial (batch 2) and the
+    /// scoped-thread (batch 8, many sweeps) paths, and survive
+    /// out-of-band state writes via the dirty rescan.
+    #[test]
+    fn tracked_energies_match_full_recompute() {
+        let topo = Topology::new();
+        let problem = crate::problems::sk::chimera_pm_j(&topo, 13);
+        let ledger = crate::problems::EnergyLedger::new(&problem, &topo).unwrap();
+        let (j, en, h, _) = problem.to_codes(&topo).unwrap();
+        let mut w = ProgrammedWeights::zeros(topo.edges.len());
+        w.j_codes = j;
+        w.enables = en;
+        w.h_codes = h;
+        let folded = Personality::ideal(&topo).fold(&topo, &w);
+        for batch in [2usize, 8] {
+            let mut s = SoftwareSampler::new(batch, 21);
+            s.load(&folded);
+            s.set_beta(0.8);
+            s.track_energies(&ledger).unwrap();
+            for round in 0..4 {
+                s.sweeps(if batch >= 8 { 10 } else { 1 }).unwrap();
+                let got = s.energies().unwrap();
+                let mut want = Vec::new();
+                s.for_each_state(&mut |_, st| {
+                    want.push(ledger.logical(ledger.full_code(st)));
+                });
+                assert_eq!(got, want, "batch {batch} round {round}");
+                // ±J lowers losslessly: ledger readback IS the logical energy
+                let logical: Vec<f64> = s.states().iter().map(|st| problem.energy(st)).collect();
+                assert_eq!(got, logical, "batch {batch} round {round}");
+            }
+            s.randomize(99);
+            let got = s.energies().unwrap();
+            let logical: Vec<f64> = s.states().iter().map(|st| problem.energy(st)).collect();
+            assert_eq!(got, logical, "post-randomize rescan (batch {batch})");
+        }
+    }
+
+    #[test]
+    fn untracked_energies_report_unsupported() {
+        let mut s = SoftwareSampler::new(2, 3);
+        assert!(s.energies().is_err());
     }
 }

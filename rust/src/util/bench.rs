@@ -126,6 +126,28 @@ pub fn write_csv(
     Ok(path)
 }
 
+/// Whether `PCHIP_BENCH_QUICK` asks for the reduced-budget bench arms —
+/// the CI smoke leg sets it so every PR regenerates the `BENCH_*.json`
+/// perf records in seconds; local runs keep the full budgets.
+pub fn quick() -> bool {
+    std::env::var_os("PCHIP_BENCH_QUICK").is_some()
+}
+
+/// Write a machine-readable bench report to
+/// `<repo root>/BENCH_<name>.json` — the perf-trajectory records the CI
+/// bench-smoke leg regenerates and uploads as workflow artifacts.
+pub fn write_bench_json(
+    name: &str,
+    report: &crate::util::json::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate lives under the repo root")
+        .join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, report.to_string())?;
+    Ok(path)
+}
+
 /// Prevent the optimizer from discarding a value (std::hint::black_box).
 #[inline]
 pub fn black_box<T>(x: T) -> T {

@@ -150,6 +150,7 @@ fn sharded_gang_defers_behind_live_load_without_deadlock() {
         },
         shards: 2,
         barrier_timeout: std::time::Duration::from_secs(30),
+        pipeline: false,
     };
     let gang = srv
         .submit(JobRequest::ShardedTempering { problem: hs[0], params: gang_params })
@@ -217,4 +218,127 @@ fn mixed_anneal_and_sample_load() {
     }
     assert_eq!(anneals, 3);
     assert_eq!(samples, 9);
+}
+
+// ---- pure Router / Batcher coverage under mixed gang/singleton ------
+// head-of-line load (the shapes the dispatcher leans on when sharded
+// tempering and training gangs interleave with sample batches; until
+// now these were only exercised indirectly through the equivalence
+// suites).
+
+use pchip::coordinator::{Batcher, QueuedJob, Router};
+use pchip::learning::{CdParams, TrainParams};
+
+fn sample_job(id: u64, problem: u64, chains: usize) -> QueuedJob {
+    QueuedJob { id, request: JobRequest::Sample { problem, sweeps: 4, beta: 1.0, chains } }
+}
+
+fn gang_job(id: u64, problem: u64) -> QueuedJob {
+    QueuedJob {
+        id,
+        request: JobRequest::ShardedTempering {
+            problem,
+            params: ShardedTemperingParams::default(),
+        },
+    }
+}
+
+fn train_job(id: u64) -> QueuedJob {
+    QueuedJob {
+        id,
+        request: JobRequest::Train {
+            params: TrainParams::new(
+                pchip::chimera::and_gate_layout(0, 0),
+                pchip::learning::dataset::and_gate(),
+                CdParams::default(),
+            ),
+            progress: None,
+        },
+    }
+}
+
+#[test]
+fn route_gang_prefers_warm_dies_and_singles_route_around_a_seated_gang() {
+    let mut r = Router::new(4);
+    // warm die w0 with problem 7 via a sticky route, then free it
+    let (w0, _) = r.route(7);
+    r.complete(w0);
+    // a 2-gang for problem 7 claims the warm die first, no reprogram
+    let gang = r.route_gang(7, 2).unwrap();
+    assert_eq!(gang[0], (w0, false), "warm die must be claimed first, warm");
+    assert!(gang[1].1, "the second (cold) die needs programming");
+    // 2 idle dies left: a 3-gang must defer even though some are idle
+    assert!(r.route_gang(9, 3).is_none(), "partial gang seating is forbidden");
+    // singletons for other problems still route around the seated gang
+    let (w_single, _) = r.route(9);
+    assert!(
+        !gang.iter().any(|&(w, _)| w == w_single),
+        "a singleton landed on a busy gang die"
+    );
+}
+
+#[test]
+fn route_gang_evicts_foreign_warm_dies_last_and_drops_their_affinity() {
+    let mut r = Router::new(3);
+    let (wa, _) = r.route(1);
+    r.complete(wa); // die wa idle, warm with problem 1
+    let gang = r.route_gang(2, 3).unwrap();
+    assert!(gang.iter().all(|&(_, re)| re), "every die was cold for problem 2");
+    // eviction order: empty dies first, the foreign-warm die last
+    assert_eq!(gang.last().unwrap().0, wa, "foreign-warm die must be the last resort");
+    for &(w, _) in &gang {
+        r.complete(w);
+    }
+    // problem 1's residency was evicted: routing it again reprograms
+    let (_, re) = r.route(1);
+    assert!(re, "evicted problem must reprogram on return");
+}
+
+#[test]
+fn route_spread_reuses_gang_warmed_dies_without_reprogramming() {
+    let mut r = Router::new(3);
+    let gang = r.route_gang(5, 2).unwrap();
+    for &(w, _) in &gang {
+        r.complete(w);
+    }
+    // every gang die is idle + warm: a whole-die run takes one for free
+    let (w, re) = r.route_spread(5);
+    assert!(!re, "warm gang die must not reprogram");
+    assert!(gang.iter().any(|&(g, _)| g == w), "spread ignored the warm dies");
+}
+
+#[test]
+fn unpop_preserves_order_under_mixed_gang_singleton_load() {
+    let mut b = Batcher::new(32, 8);
+    b.push(gang_job(1, 3)).unwrap();
+    b.push(sample_job(2, 3, 4)).unwrap();
+    b.push(sample_job(3, 8, 4)).unwrap();
+    b.push(sample_job(4, 3, 4)).unwrap();
+    b.push(train_job(5)).unwrap();
+    // head-of-line: the gang pops first, and every deferral puts it
+    // back at the head — later singletons cannot starve it
+    for _ in 0..3 {
+        let batch = b.pop_batch().unwrap();
+        assert_eq!(batch.jobs.len(), 1, "gangs dispatch alone");
+        assert_eq!(batch.jobs[0].id, 1, "deferred gang must stay at the head");
+        b.unpop(batch);
+    }
+    assert_eq!(b.len(), 5, "no job lost or duplicated across deferrals");
+    // once the gang seats, the singles behind it aggregate per problem
+    // in FIFO order
+    assert_eq!(b.pop_batch().unwrap().jobs[0].id, 1);
+    let batch = b.pop_batch().unwrap();
+    assert_eq!(batch.problem, 3);
+    assert_eq!(batch.jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![2, 4]);
+    let batch = b.pop_batch().unwrap();
+    assert_eq!(batch.jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![3]);
+    // the problem-less training gang dispatches alone under key 0, and
+    // survives its own defer/unpop cycle
+    let train_batch = b.pop_batch().unwrap();
+    assert_eq!(train_batch.problem, 0, "training jobs batch under the sentinel key");
+    assert_eq!(train_batch.jobs[0].id, 5);
+    b.unpop(train_batch);
+    let again = b.pop_batch().unwrap();
+    assert_eq!(again.jobs[0].id, 5);
+    assert!(b.is_empty());
 }

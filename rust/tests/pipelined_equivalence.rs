@@ -1,0 +1,444 @@
+//! Equivalence suite for the pipelined execution layer (the async
+//! sweep/swap/readback overlap of `annealing::PipelinedCore`,
+//! `coordinator::drive_sharded_pipelined` and the training service's
+//! completion-ordered all-reduce).
+//!
+//! The overlapped schedules only count if they are provably the same
+//! computation, just faster:
+//!
+//! 1. **Incremental ΔE ≡ full recompute** — the `EnergyLedger` readback
+//!    accumulated flip-by-flip during engine sweeps must equal the
+//!    O(N·deg) Hamiltonian rescan *bit for bit*, on integral and
+//!    non-integral problems alike (the ledger works in the exact
+//!    integer code domain).
+//! 2. **Overlap ≡ serial reference** — the pipelined sharded
+//!    coordinator with 1 shard must reproduce `temper_pipelined` (the
+//!    serial driver of the same 1-phase-lag schedule) bit for bit,
+//!    every round; K-shard runs must be deterministic under a fixed
+//!    seed and still reach serial-quality energies.
+//! 3. **Pipelined training ≡ barrier training** — every die sees the
+//!    same chip-call sequence and `GradAccum`/histogram merges are exact
+//!    in any completion order, so a pipelined multi-die run must equal
+//!    the barrier path bit for bit (same epoch stats, same learned
+//!    codes, same checkpoint) — which also pins "KL no worse at equal
+//!    sample budget", deterministically.
+//! 4. **Liveness** — a stalled shard still expires into a diagnostic,
+//!    never a deadlock, under the pipelined schedule.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::annealing::{
+    temper, temper_pipelined, temper_pipelined_observed, BetaLadder, TemperingParams,
+};
+use pchip::chimera::{full_adder_layout, Topology};
+use pchip::config::MismatchConfig;
+use pchip::coordinator::{
+    run_sharded_tempering, run_sharded_tempering_observed, ShardedTemperingParams,
+};
+use pchip::learning::{dataset, run_training_observed, CdParams, EpochStats, Hw, TrainParams};
+use pchip::problems::{sk, EnergyLedger, IsingProblem};
+use pchip::rng::HostRng;
+use pchip::sampler::{Sampler, SoftwareSampler};
+
+/// Load `problem` onto an ideal (mismatch-free) die — same helper as
+/// the sharded suite.
+fn loaded_sampler(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+) -> SoftwareSampler {
+    let (j, en, h, _) = problem.to_codes(topo).unwrap();
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    w.j_codes = j;
+    w.enables = en;
+    w.h_codes = h;
+    let folded = Personality::ideal(topo).fold(topo, &w);
+    let mut s = SoftwareSampler::new(batch, seed);
+    s.load(&folded);
+    s
+}
+
+/// Property: across random interleavings of sweeps, clamp writes and
+/// state restores, the tracked incremental energies equal the full
+/// rescan bit for bit — on a ±J instance (where they also equal the
+/// logical energy exactly) and on a Gaussian instance (arbitrary f64
+/// couplings; the ledger is exact in the integer code domain).
+#[test]
+fn incremental_readback_is_bit_identical_to_full_recompute() {
+    let topo = Topology::new();
+    for (name, problem) in [
+        ("pm_j", sk::chimera_pm_j(&topo, 5)),
+        ("gaussian", sk::chimera_gaussian(&topo, 5)),
+    ] {
+        let ledger = EnergyLedger::new(&problem, &topo).unwrap();
+        let mut s = loaded_sampler(&problem, &topo, 4, 17);
+        s.set_beta(0.9);
+        s.track_energies(&ledger).unwrap();
+        let mut rng = HostRng::new(0xD0 ^ problem.name.len() as u64);
+        for step in 0..30 {
+            match rng.below(10) {
+                0 => s.randomize(step as u64 ^ 0xF1),
+                1 => {
+                    let saved = s.states();
+                    s.sweeps(1).unwrap();
+                    s.set_states(&saved).unwrap();
+                }
+                2 => s.set_clamps(&[(rng.below(pchip::N_SPINS), 1)]),
+                3 => s.set_clamps(&[]),
+                _ => s.sweeps(rng.below(4) + 1).unwrap(),
+            }
+            let got = s.energies().unwrap();
+            let mut want = Vec::new();
+            s.for_each_state(&mut |_, st| want.push(ledger.logical(ledger.full_code(st))));
+            for (c, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{name}: chain {c} diverged at step {step}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+fn lag_params(rounds: usize) -> TemperingParams {
+    TemperingParams {
+        ladder: BetaLadder::geometric(0.2, 3.0, 8),
+        sweeps_per_round: 2,
+        rounds,
+        adapt_every: 10, // exercise ladder adaptation through the core
+        record_every: 4,
+        seed: 0x5EED,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn one_shard_pipelined_run_is_bit_identical_to_temper_pipelined() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = lag_params(40);
+
+    // serial reference of the same 1-phase-lag schedule
+    let mut reference = loaded_sampler(&problem, &topo, 8, 77);
+    let mut ref_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let ref_run =
+        temper_pipelined_observed(&mut reference, &problem, &params, 1.0, |round, states, map| {
+            ref_log.push((round, states.to_vec(), map.to_vec()));
+        })
+        .unwrap();
+
+    // the same sampler seed driven through the pipelined coordinator
+    let sharded_sampler = loaded_sampler(&problem, &topo, 8, 77);
+    let sharded_params = ShardedTemperingParams {
+        base: params.clone(),
+        shards: 1,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: true,
+    };
+    let mut sh_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let sharded = run_sharded_tempering_observed(
+        vec![sharded_sampler],
+        &problem,
+        &sharded_params,
+        1.0,
+        |round, states, map| {
+            sh_log.push((round, states.to_vec(), map.to_vec()));
+        },
+    )
+    .unwrap();
+
+    assert_eq!(ref_log.len(), sh_log.len());
+    for ((ra, sa, ma), (rb, sb, mb)) in ref_log.iter().zip(&sh_log) {
+        assert_eq!(ra, rb);
+        assert_eq!(ma, mb, "rung→chain maps diverged at round {ra}");
+        assert_eq!(sa, sb, "spin states diverged at round {ra}");
+    }
+    assert_eq!(ref_run.best_energy.to_bits(), sharded.run.best_energy.to_bits());
+    assert_eq!(ref_run.best_state, sharded.run.best_state);
+    assert_eq!(ref_run.total_sweeps, sharded.run.total_sweeps);
+    assert_eq!(ref_run.trace.rows, sharded.run.trace.rows);
+    assert_eq!(ref_run.swaps.attempts, sharded.run.swaps.attempts);
+    assert_eq!(ref_run.swaps.accepts, sharded.run.swaps.accepts);
+    assert_eq!(ref_run.swaps.round_trips, sharded.run.swaps.round_trips);
+    assert_eq!(ref_run.ladder.betas, sharded.run.ladder.betas, "adapted ladders diverged");
+}
+
+/// The 1-phase lag only re-times *when* a swap's β-exchange takes
+/// effect; the sweep budget and swap-decision RNG stream are identical,
+/// so a K-shard pipelined run must be exactly reproducible under a
+/// fixed seed — the property that makes `pchip temper --pipeline`
+/// debuggable.
+#[test]
+fn multi_shard_pipelined_run_is_deterministic_under_a_fixed_seed() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 9);
+    let params = ShardedTemperingParams {
+        base: lag_params(32),
+        shards: 4,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: true,
+    };
+    let dies = || -> Vec<SoftwareSampler> {
+        (0..4).map(|s| loaded_sampler(&problem, &topo, 2, 11 + 0x1000 * s as u64)).collect()
+    };
+    let a = run_sharded_tempering(dies(), &problem, &params, 1.0).unwrap();
+    let b = run_sharded_tempering(dies(), &problem, &params, 1.0).unwrap();
+    assert_eq!(a.run.best_energy.to_bits(), b.run.best_energy.to_bits());
+    assert_eq!(a.run.best_state, b.run.best_state);
+    assert_eq!(a.run.trace.rows, b.run.trace.rows);
+    assert_eq!(a.run.swaps.attempts, b.run.swaps.attempts);
+    assert_eq!(a.run.swaps.accepts, b.run.swaps.accepts);
+    assert_eq!(a.run.swaps.round_trips, b.run.swaps.round_trips);
+    // and the pipelined schedule still does real replica-exchange work
+    assert!(a.run.swaps.mean_acceptance() > 0.0, "no swap ever accepted");
+    assert_eq!(a.boundary_pairs, vec![1, 3, 5]);
+    assert_eq!(a.shards, 4);
+}
+
+/// A fast shard races one full phase ahead of a slow one: the round-
+/// tagged protocol must park the early readback in the coordinator's
+/// stash instead of letting it be consumed as the slow shard's current
+/// round — timing skew must not change a single bit of the result.
+#[test]
+fn pipelined_run_is_timing_invariant_under_shard_skew() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 4);
+    let params = ShardedTemperingParams {
+        base: lag_params(10),
+        shards: 2,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: true,
+    };
+    let run = |stall: Duration| {
+        let dies = vec![
+            StallingSampler {
+                inner: loaded_sampler(&problem, &topo, 4, 21),
+                stall: Duration::ZERO,
+            },
+            StallingSampler { inner: loaded_sampler(&problem, &topo, 4, 0x1021), stall },
+        ];
+        run_sharded_tempering(dies, &problem, &params, 1.0).unwrap()
+    };
+    let even = run(Duration::ZERO);
+    let skewed = run(Duration::from_millis(30));
+    assert_eq!(even.run.best_energy.to_bits(), skewed.run.best_energy.to_bits());
+    assert_eq!(even.run.best_state, skewed.run.best_state);
+    assert_eq!(even.run.trace.rows, skewed.run.trace.rows);
+    assert_eq!(even.run.swaps.accepts, skewed.run.swaps.accepts);
+    assert_eq!(even.run.swaps.round_trips, skewed.run.swaps.round_trips);
+}
+
+/// At an equal sweep budget the lagged schedule must stay in the same
+/// quality regime as the serial one on a frustrated glass (it is the
+/// same Markov chain up to a one-phase re-timing of β-exchanges).
+#[test]
+fn pipelined_schedule_matches_serial_quality_at_equal_budget() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 7);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.1, 4.0, 8),
+        sweeps_per_round: 4,
+        rounds: 96,
+        record_every: 8,
+        seed: 0xAB,
+        ..Default::default()
+    };
+    let mut serial = loaded_sampler(&problem, &topo, 8, 31);
+    let s_run = temper(&mut serial, &problem, &params, 1.0).unwrap();
+    let mut lagged = loaded_sampler(&problem, &topo, 8, 31);
+    let p_run = temper_pipelined(&mut lagged, &problem, &params, 1.0).unwrap();
+    assert_eq!(s_run.total_sweeps, p_run.total_sweeps, "budgets must match");
+    // same regime: within 10% of the serial best on a 440-spin glass
+    assert!(
+        p_run.best_energy < s_run.best_energy * 0.9,
+        "pipelined best {} vs serial best {}",
+        p_run.best_energy,
+        s_run.best_energy
+    );
+}
+
+fn adder_params(dies: usize, pipeline: bool) -> TrainParams {
+    let cd = CdParams {
+        epochs: 10,
+        lr: 0.15,
+        k_sweeps: 2,
+        samples_per_pattern: 9,
+        ..CdParams::default()
+    };
+    let mut p = TrainParams::new(full_adder_layout(0, 1), dataset::full_adder(), cd);
+    p.dies = dies;
+    p.eval_every = 3;
+    p.eval_samples = 900;
+    p.pipeline = pipeline;
+    p
+}
+
+fn train_die(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
+    Hw::new(SoftwareSampler::new(batch, seed), personality)
+}
+
+/// Pipelined 3-die training is the SAME computation as the barrier
+/// path: identical per-die chip-call sequences, exact completion-ordered
+/// merges. Epoch stats, learned codes and the checkpoint must agree bit
+/// for bit — which subsumes "KL no worse at equal sample budget" — and
+/// a repeat run must reproduce it exactly (determinism).
+#[test]
+fn pipelined_three_die_training_is_bit_identical_to_barrier_path() {
+    let dies = || -> Vec<Hw<SoftwareSampler>> {
+        (0..3).map(|k| train_die(7 + k as u64, 8)).collect()
+    };
+    let mut barrier_stream: Vec<EpochStats> = Vec::new();
+    let barrier = run_training_observed(dies(), &adder_params(3, false), None, 10, |s| {
+        barrier_stream.push(s.clone());
+    })
+    .unwrap();
+    let mut piped_stream: Vec<EpochStats> = Vec::new();
+    let piped = run_training_observed(dies(), &adder_params(3, true), None, 10, |s| {
+        piped_stream.push(s.clone());
+    })
+    .unwrap();
+
+    assert_eq!(barrier.stats.len(), piped.stats.len());
+    for (a, b) in barrier.stats.iter().zip(&piped.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+        assert_eq!(
+            a.corr_gap.to_bits(),
+            b.corr_gap.to_bits(),
+            "corr gap diverged at epoch {}",
+            a.epoch
+        );
+        assert_eq!(
+            a.valid_mass.to_bits(),
+            b.valid_mass.to_bits(),
+            "valid mass diverged at epoch {}",
+            a.epoch
+        );
+    }
+    // the stream arrives in epoch order in both modes
+    assert_eq!(
+        piped_stream.iter().map(|s| s.epoch).collect::<Vec<_>>(),
+        barrier_stream.iter().map(|s| s.epoch).collect::<Vec<_>>()
+    );
+    assert_eq!(barrier.codes.j_codes, piped.codes.j_codes, "learned register images diverged");
+    assert_eq!(barrier.codes.h_codes, piped.codes.h_codes);
+    assert_eq!(barrier.checkpoint.w, piped.checkpoint.w, "shadow weights diverged");
+    assert_eq!(barrier.checkpoint.b, piped.checkpoint.b);
+    assert_eq!(barrier.checkpoint.epochs_done, piped.checkpoint.epochs_done);
+    assert_eq!(barrier.total_sweeps, piped.total_sweeps, "sample budgets diverged");
+    assert_eq!(
+        barrier.final_kl.to_bits(),
+        piped.final_kl.to_bits(),
+        "pipelined KL must equal (hence be no worse than) the barrier path's"
+    );
+    // determinism: a second pipelined run reproduces the first
+    let again = run_training_observed(dies(), &adder_params(3, true), None, 10, |_| {}).unwrap();
+    assert_eq!(again.final_kl.to_bits(), piped.final_kl.to_bits());
+    assert_eq!(again.checkpoint.w, piped.checkpoint.w);
+}
+
+/// PCD + tempered negative under the pipelined schedule: the dedicated
+/// negative die's work-unit streams into the all-reduce like any other
+/// phase, chains checkpoint, and the run stays bit-identical to the
+/// barrier path.
+#[test]
+fn pipelined_pcd_tempered_training_matches_barrier_path() {
+    let mk = |pipeline: bool| {
+        let mut p = adder_params(3, pipeline);
+        p.pcd = true;
+        p.tempered = Some(pchip::learning::TemperedNegative {
+            rungs: 4,
+            beta_hot: 0.6,
+            sweeps_per_round: 1,
+            ..Default::default()
+        });
+        p.cd.epochs = 6;
+        p
+    };
+    let dies = || -> Vec<Hw<SoftwareSampler>> {
+        (0..3).map(|k| train_die(19 + k as u64, 8)).collect()
+    };
+    let barrier = run_training_observed(dies(), &mk(false), None, 6, |_| {}).unwrap();
+    let piped = run_training_observed(dies(), &mk(true), None, 6, |_| {}).unwrap();
+    assert_eq!(barrier.final_kl.to_bits(), piped.final_kl.to_bits());
+    assert_eq!(barrier.checkpoint.w, piped.checkpoint.w);
+    assert_eq!(barrier.checkpoint.chains, piped.checkpoint.chains, "persistent chains diverged");
+    assert_eq!(piped.checkpoint.chains.len(), 1, "one PCD die checkpoints its chains");
+}
+
+/// A sampler whose sweep phase hangs — the pipelined schedule must
+/// still expire into a diagnostic, never a deadlock.
+struct StallingSampler {
+    inner: SoftwareSampler,
+    stall: Duration,
+}
+
+impl Sampler for StallingSampler {
+    fn load(&mut self, folded: &pchip::analog::Folded) {
+        self.inner.load(folded);
+    }
+    fn set_beta(&mut self, beta: f32) {
+        self.inner.set_beta(beta);
+    }
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        self.inner.set_betas(betas)
+    }
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.inner.set_clamps(clamps);
+    }
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        std::thread::sleep(self.stall);
+        self.inner.sweeps(n)
+    }
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.inner.states()
+    }
+    fn randomize(&mut self, seed: u64) {
+        self.inner.randomize(seed);
+    }
+}
+
+#[test]
+fn pipelined_stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 2);
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 4),
+            sweeps_per_round: 2,
+            rounds: 8,
+            ..Default::default()
+        },
+        shards: 2,
+        barrier_timeout: Duration::from_millis(250),
+        pipeline: true,
+    };
+    let healthy = StallingSampler {
+        inner: loaded_sampler(&problem, &topo, 2, 21),
+        stall: Duration::ZERO,
+    };
+    let stalled = StallingSampler {
+        inner: loaded_sampler(&problem, &topo, 2, 0x1021),
+        stall: Duration::from_secs(30),
+    };
+    let t0 = Instant::now();
+    let err = run_sharded_tempering(vec![healthy, stalled], &problem, &params, 1.0)
+        .expect_err("a stalled shard must fail the pipelined run");
+    let elapsed = t0.elapsed();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("barrier timed out"), "diagnostic missing: {msg}");
+    assert!(msg.contains("[1]"), "stalled shard not named: {msg}");
+    assert!(
+        elapsed < Duration::from_secs(10),
+        "timed out the slow way ({elapsed:?}) — the pipelined barrier did not bound the wait"
+    );
+}

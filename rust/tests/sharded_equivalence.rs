@@ -99,6 +99,7 @@ fn one_shard_run_is_bit_identical_to_temper() {
         base: params.clone(),
         shards: 1,
         barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
     };
     let mut sh_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
     let sharded = run_sharded_tempering_observed(
@@ -164,6 +165,7 @@ fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
         },
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
     };
     let dies = vec![
         loaded_sampler(&problem, &topo, 2, 11),
@@ -290,6 +292,7 @@ fn stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
         },
         shards: 2,
         barrier_timeout: Duration::from_millis(250),
+        pipeline: false,
     };
     let healthy = StallingSampler {
         inner: loaded_sampler(&problem, &topo, 2, 21),
@@ -328,6 +331,7 @@ fn try_wait_never_blocks_during_a_sharded_run() {
         },
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
     };
     let ticket = srv.submit(JobRequest::ShardedTempering { problem: h, params }).unwrap();
     let deadline = Instant::now() + Duration::from_secs(120);
