@@ -148,6 +148,7 @@ fn full_anneal_sections() -> anyhow::Result<()> {
             shards,
             barrier_timeout: std::time::Duration::from_secs(60),
             pipeline: false,
+            elastic: false,
         };
         let r = fig9a_sk_temper_sharded(
             1,
@@ -275,6 +276,7 @@ fn pipeline_section(quick: bool) -> anyhow::Result<()> {
                 shards,
                 barrier_timeout: std::time::Duration::from_secs(60),
                 pipeline,
+                elastic: false,
             };
             let die_batch = (8 / shards).max(2);
             let (samplers, scale) = sharded_die_array(

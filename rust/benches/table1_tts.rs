@@ -101,6 +101,7 @@ fn main() -> anyhow::Result<()> {
             shards,
             barrier_timeout: std::time::Duration::from_secs(60),
             pipeline: false,
+            elastic: false,
         };
         let mut p_acc = 0.0;
         let mut tts_acc: Vec<f64> = Vec::new();

@@ -590,6 +590,16 @@ impl PipelinedCore {
         assert_eq!(self.launched, self.scored, "pipeline drained with phases still in flight");
         self.core.into_run()
     }
+
+    /// Finalize even with phases still in flight, discarding their
+    /// (unscored) readbacks. The elastic coordinator uses this when a
+    /// gang member is lost mid-pipeline: the in-flight phase may
+    /// include the dead shard's chains, so it cannot be scored — its
+    /// sweeps are simply dropped and the survivors resume from the last
+    /// *scored* phase.
+    pub fn into_run_abandoning(self) -> TemperingRun {
+        self.core.into_run()
+    }
 }
 
 /// Run the pipelined (1-phase-lag) replica-exchange schedule against a

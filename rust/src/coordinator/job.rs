@@ -12,6 +12,7 @@ use std::time::Duration;
 use crate::analog::ProgrammedWeights;
 use crate::annealing::{AnnealParams, BetaLadder, TemperingParams, TunerParams};
 use crate::learning::{EpochStats, TrainCheckpoint, TrainParams};
+use crate::metrics::MembershipEvent;
 
 use super::sharded::ShardedTemperingParams;
 
@@ -184,10 +185,13 @@ pub enum JobResult {
         /// ladder (direction labels ride through boundary swaps with
         /// the β-assignments, so the profile is seamless across dies).
         fraction_up: Vec<f64>,
-        /// How many shards (dies) shared the ladder.
+        /// How many shards (dies) shared the ladder (final gang size
+        /// for an elastic run).
         shards: usize,
         /// Which dies were seated, in shard order (hot → cold).
         dies: Vec<usize>,
+        /// Membership changes of an elastic run (empty otherwise).
+        membership: Vec<MembershipEvent>,
         /// Host wall-clock latency.
         latency: Duration,
     },
@@ -228,6 +232,8 @@ pub enum JobResult {
         final_valid_mass: f64,
         /// Which dies were seated, in shard order.
         dies: Vec<usize>,
+        /// Membership changes of an elastic run (empty otherwise).
+        membership: Vec<MembershipEvent>,
         /// Host wall-clock latency.
         latency: Duration,
     },

@@ -19,7 +19,7 @@
 //!   idle. Several dies may then hold the same problem; `resident`
 //!   tracks each, `affinity` points at one of them.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// Pure routing state (property-tested; the server wraps it).
 #[derive(Debug)]
@@ -31,6 +31,9 @@ pub struct Router {
     resident: Vec<Option<u64>>,
     /// die → in-flight batches.
     load: Vec<usize>,
+    /// Dies pulled from routing ([`Router::quarantine`]) after failing
+    /// mid-run; no shape routes to them until [`Router::revive`].
+    failed: HashSet<usize>,
     /// count of reprogram events (metric: affinity effectiveness).
     pub reprograms: u64,
 }
@@ -43,8 +46,40 @@ impl Router {
             affinity: HashMap::new(),
             resident: vec![None; n_workers],
             load: vec![0; n_workers],
+            failed: HashSet::new(),
             reprograms: 0,
         }
+    }
+
+    /// Pull die `w` from routing: no batch, spread run or gang claims
+    /// it until [`Router::revive`]. Its affinity entry is dropped so a
+    /// warm problem re-routes elsewhere; in-flight load still drains
+    /// through [`Router::complete`]. Idempotent.
+    pub fn quarantine(&mut self, w: usize) {
+        assert!(w < self.load.len(), "unknown die {w}");
+        self.failed.insert(w);
+        if let Some(p) = self.resident[w] {
+            if self.affinity.get(&p) == Some(&w) {
+                self.affinity.remove(&p);
+            }
+        }
+    }
+
+    /// Return a quarantined die to routing (its weight image is still
+    /// tracked, so a warm claim needs no reprogram). Idempotent.
+    pub fn revive(&mut self, w: usize) {
+        assert!(w < self.load.len(), "unknown die {w}");
+        self.failed.remove(&w);
+    }
+
+    /// Whether die `w` is currently quarantined.
+    pub fn is_quarantined(&self, w: usize) -> bool {
+        self.failed.contains(&w)
+    }
+
+    /// Dies currently usable (not quarantined).
+    pub fn usable(&self) -> usize {
+        self.load.len() - self.failed.len()
     }
 
     /// Number of dies being routed over.
@@ -53,11 +88,17 @@ impl Router {
     }
 
     /// Choose a die for a batch of `problem`; records the dispatch.
-    /// Returns (die, needs_reprogram).
+    /// Returns (die, needs_reprogram). Quarantined dies are never
+    /// chosen — unless *every* die is quarantined, in which case the
+    /// quarantine is ignored (routing somewhere beats routing nowhere;
+    /// the job then fails with the die's own diagnostic instead of a
+    /// routing error).
     pub fn route(&mut self, problem: u64) -> (usize, bool) {
         if let Some(&w) = self.affinity.get(&problem) {
-            self.load[w] += 1;
-            return (w, false);
+            if !self.failed.contains(&w) {
+                self.load[w] += 1;
+                return (w, false);
+            }
         }
         // a die left warm by a gang/spread dispatch: adopt it for free
         if let Some(w) = self.warm_die(problem) {
@@ -65,10 +106,15 @@ impl Router {
             self.load[w] += 1;
             return (w, false);
         }
-        // least-loaded die; prefer one holding no live weight image
+        // least-loaded usable die; prefer one holding no weight image
         let w = (0..self.load.len())
+            .filter(|&w| !self.failed.contains(&w))
             .min_by_key(|&w| (self.load[w], self.resident[w].is_some() as usize, w))
-            .expect("at least one worker");
+            .unwrap_or_else(|| {
+                (0..self.load.len())
+                    .min_by_key(|&w| (self.load[w], w))
+                    .expect("at least one worker")
+            });
         self.claim(w, problem);
         self.affinity.insert(problem, w);
         self.load[w] += 1;
@@ -81,20 +127,20 @@ impl Router {
     /// only serialize behind the warm die when nothing is idle.
     pub fn route_spread(&mut self, problem: u64) -> (usize, bool) {
         if let Some(&w) = self.affinity.get(&problem) {
-            if self.load[w] == 0 {
+            if self.load[w] == 0 && !self.failed.contains(&w) {
                 self.load[w] += 1;
                 return (w, false);
             }
         }
-        if let Some(w) = (0..self.load.len())
-            .find(|&w| self.load[w] == 0 && self.resident[w] == Some(problem))
-        {
+        if let Some(w) = (0..self.load.len()).find(|&w| {
+            self.load[w] == 0 && self.resident[w] == Some(problem) && !self.failed.contains(&w)
+        }) {
             self.affinity.entry(problem).or_insert(w);
             self.load[w] += 1;
             return (w, false);
         }
         let idle = (0..self.load.len())
-            .filter(|&w| self.load[w] == 0)
+            .filter(|&w| self.load[w] == 0 && !self.failed.contains(&w))
             .min_by_key(|&w| (self.resident[w].is_some() as usize, w));
         if let Some(w) = idle {
             self.claim(w, problem);
@@ -108,12 +154,14 @@ impl Router {
 
     /// Claim `n` distinct **idle** dies for a gang job of `problem`
     /// (sharded tempering), or `None` while fewer than `n` are idle.
-    /// Dies are picked warm-first, then empty, then eviction victims,
-    /// and returned as (die, needs_reprogram) in claim order.
+    /// Quarantined dies never join a gang. Dies are picked warm-first,
+    /// then empty, then eviction victims, and returned as
+    /// (die, needs_reprogram) in claim order.
     pub fn route_gang(&mut self, problem: u64, n: usize) -> Option<Vec<(usize, bool)>> {
         assert!(n >= 1, "a gang needs at least one die");
-        let mut idle: Vec<usize> =
-            (0..self.load.len()).filter(|&w| self.load[w] == 0).collect();
+        let mut idle: Vec<usize> = (0..self.load.len())
+            .filter(|&w| self.load[w] == 0 && !self.failed.contains(&w))
+            .collect();
         if idle.len() < n {
             return None;
         }
@@ -152,9 +200,10 @@ impl Router {
         self.reprograms += 1;
     }
 
-    /// Any die already holding `problem`'s weight image.
+    /// Any usable die already holding `problem`'s weight image.
     fn warm_die(&self, problem: u64) -> Option<usize> {
-        (0..self.load.len()).find(|&w| self.resident[w] == Some(problem))
+        (0..self.load.len())
+            .find(|&w| self.resident[w] == Some(problem) && !self.failed.contains(&w))
     }
 
     /// A batch finished on die `w`.
@@ -255,11 +304,64 @@ mod tests {
         assert!(gang2.iter().all(|&(_, re)| !re), "warm gang re-claimed: {gang2:?}");
     }
 
+    #[test]
+    fn quarantined_die_is_skipped_by_every_shape() {
+        let mut r = Router::new(3);
+        let (w, _) = r.route(7);
+        r.complete(w);
+        r.quarantine(w);
+        assert!(r.is_quarantined(w));
+        assert_eq!(r.usable(), 2);
+        // sticky routing: the affinity entry was dropped, so the warm
+        // die is abandoned and problem 7 reprograms elsewhere
+        let (w2, re2) = r.route(7);
+        assert_ne!(w, w2);
+        assert!(re2);
+        r.complete(w2);
+        let (w3, _) = r.route_spread(7);
+        assert_ne!(w, w3);
+        r.complete(w3);
+        // a 3-gang can no longer form; a 2-gang avoids the dead die
+        assert!(r.route_gang(9, 3).is_none());
+        let gang = r.route_gang(9, 2).unwrap();
+        assert!(gang.iter().all(|&(g, _)| g != w), "gang seated a quarantined die: {gang:?}");
+    }
+
+    #[test]
+    fn revived_die_rejoins_warm() {
+        let mut r = Router::new(2);
+        let gang = r.route_gang(5, 2).unwrap();
+        for &(w, _) in &gang {
+            r.complete(w);
+        }
+        r.quarantine(0);
+        r.revive(0);
+        assert_eq!(r.usable(), 2);
+        // its weight image survived the quarantine: no reprogram needed
+        let gang2 = r.route_gang(5, 2).unwrap();
+        assert!(gang2.iter().all(|&(_, re)| !re), "revived die lost its warm image: {gang2:?}");
+    }
+
+    #[test]
+    fn fully_quarantined_array_still_routes_batches() {
+        let mut r = Router::new(2);
+        r.quarantine(0);
+        r.quarantine(1);
+        assert_eq!(r.usable(), 0);
+        // batch routing degrades to ignoring the quarantine...
+        let (w, _) = r.route(3);
+        assert!(w < 2);
+        // ...but gangs and whole-die runs never seat a dead die alone
+        assert!(r.route_gang(3, 1).is_none());
+    }
+
     /// Properties over all three routing shapes: routed dies in range
-    /// and idle when required, load bookkeeping consistent, and every
-    /// affinity entry points at a die resident with that problem
-    /// (gang/spread dispatches may leave extra warm dies without an
-    /// affinity entry — that is allowed, dangling entries are not).
+    /// and idle when required, quarantined dies never chosen (unless
+    /// every die is quarantined, where `route` degrades), load
+    /// bookkeeping consistent, and every affinity entry points at a
+    /// die resident with that problem (gang/spread dispatches may
+    /// leave extra warm dies without an affinity entry — that is
+    /// allowed, dangling entries are not).
     #[test]
     fn prop_router_invariants() {
         prop::check("router invariants", 300, |rng| {
@@ -268,22 +370,31 @@ mod tests {
             let mut inflight: Vec<usize> = vec![0; n];
             for _ in 0..rng.below(100) {
                 let dice = rng.uniform();
-                if dice < 0.45 {
+                if dice < 0.4 {
                     let p = rng.below(8) as u64;
                     let (w, _) = r.route(p);
                     assert!(w < n);
+                    assert!(
+                        !r.is_quarantined(w) || r.usable() == 0,
+                        "routed to quarantined die {w}"
+                    );
+                    inflight[w] += 1;
+                    assert_eq!(r.resident(w), Some(p));
+                } else if dice < 0.5 {
+                    let p = rng.below(8) as u64;
+                    let (w, _) = r.route_spread(p);
+                    assert!(w < n);
+                    assert!(
+                        !r.is_quarantined(w) || r.usable() == 0,
+                        "spread to quarantined die {w}"
+                    );
                     inflight[w] += 1;
                     assert_eq!(r.resident(w), Some(p));
                 } else if dice < 0.6 {
                     let p = rng.below(8) as u64;
-                    let (w, _) = r.route_spread(p);
-                    assert!(w < n);
-                    inflight[w] += 1;
-                    assert_eq!(r.resident(w), Some(p));
-                } else if dice < 0.7 {
-                    let p = rng.below(8) as u64;
                     let want = rng.below(n) + 1;
-                    let idle_before = (0..n).filter(|&w| inflight[w] == 0).count();
+                    let idle_before =
+                        (0..n).filter(|&w| inflight[w] == 0 && !r.is_quarantined(w)).count();
                     match r.route_gang(p, want) {
                         Some(gang) => {
                             assert!(idle_before >= want, "gang granted without enough idle dies");
@@ -294,11 +405,19 @@ mod tests {
                             assert_eq!(dies.len(), want, "gang dies must be distinct");
                             for &(w, _) in &gang {
                                 assert_eq!(inflight[w], 0, "gang claimed a busy die");
+                                assert!(!r.is_quarantined(w), "gang seated quarantined die {w}");
                                 inflight[w] += 1;
                                 assert_eq!(r.resident(w), Some(p));
                             }
                         }
                         None => assert!(idle_before < want, "gang refused despite idle dies"),
+                    }
+                } else if dice < 0.7 {
+                    let w = rng.below(n);
+                    if rng.uniform() < 0.5 {
+                        r.quarantine(w);
+                    } else {
+                        r.revive(w);
                     }
                 } else if let Some(w) = (0..n).find(|&w| inflight[w] > 0) {
                     r.complete(w);

@@ -6,7 +6,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::analog::{Personality, ProgrammedWeights};
 use crate::annealing::{self, TemperingParams};
@@ -14,8 +14,10 @@ use crate::chimera::Topology;
 use crate::config::{Config, MismatchConfig};
 use crate::learning::service::{self, TrainCmd, TrainMsg};
 use crate::learning::{EpochStats, Hw, TrainCheckpoint, TrainParams, TrainableChip};
+use crate::metrics::{MembershipChange, MembershipEvent};
 use crate::problems::IsingProblem;
 use crate::sampler::{SoftwareSampler, XlaSampler};
+use crate::util::fault::{FaultPlan, FaultyChip};
 
 use super::batcher::{Batch, Batcher, QueuedJob};
 use super::job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
@@ -33,6 +35,20 @@ pub enum EngineKind {
     /// (a die with fewer chains than a ladder has rungs fails tempering
     /// jobs while still serving sample jobs).
     SoftwareBatch { batch: usize },
+    /// [`EngineKind::SoftwareBatch`] behind a [`FaultyChip`] wrapper:
+    /// die `k` consults `plan` (keyed by die index) on every `sweeps()`
+    /// call, so deterministic failures can be scripted into any served
+    /// run (see [`crate::util::fault`]). The substrate of the chaos
+    /// suite and of `pchip … --fault-plan`. A `Stall` fault parks the
+    /// die's worker thread mid-sweep — fine for a one-shot CLI process,
+    /// but dropping the server then blocks on the join; plans from
+    /// [`FaultPlan::chaos`] therefore never stall.
+    SoftwareFaulty {
+        /// Chain count per die.
+        batch: usize,
+        /// The shared fault schedule.
+        plan: FaultPlan,
+    },
     /// The AOT PJRT path (loads artifacts from the given directory).
     /// Requires the `xla` cargo feature — without it the worker thread
     /// panics at startup with a pointer at the feature flag. Tempering
@@ -97,6 +113,10 @@ impl ServerStats {
 enum Msg {
     Job(QueuedJob, mpsc::Sender<JobResult>),
     Done(usize),
+    /// Pull a die from routing (a gang run left it dead).
+    Quarantine(usize),
+    /// Return a quarantined die to routing.
+    Revive(usize),
     Shutdown,
 }
 
@@ -184,8 +204,9 @@ impl ChipArrayServer {
         let problems: Arc<Mutex<HashMap<ProblemHandle, Arc<ProblemSpec>>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let problems_d = problems.clone();
+        let feedback = submit_tx.clone();
         let dispatcher = std::thread::Builder::new().name("dispatcher".into()).spawn(move || {
-            dispatcher_main(submit_rx, worker_txs, batcher, window, stats_d, problems_d)
+            dispatcher_main(submit_rx, worker_txs, batcher, window, stats_d, problems_d, feedback)
         })?;
 
         Ok(Self {
@@ -342,6 +363,18 @@ impl ChipArrayServer {
         self.run(JobRequest::TrainEpoch { params, checkpoint, epochs, progress: None })
     }
 
+    /// Return a quarantined die to routing. The dispatcher quarantines
+    /// any die an elastic gang run leaves dead (its fault plan or
+    /// hardware kept it down through the end of the run); once the
+    /// operator clears the fault, revive the die so gangs can seat it
+    /// again — its weight image is still tracked, so a warm claim needs
+    /// no reprogram. Reviving a die that was never quarantined is a
+    /// no-op.
+    pub fn revive_die(&self, die: usize) -> Result<()> {
+        ensure!(die < self.workers.len(), "unknown die {die}");
+        self.submit_tx.send(Msg::Revive(die)).map_err(|_| anyhow!("server shut down"))
+    }
+
     /// Aggregate serving metrics.
     pub fn stats(&self) -> &ServerStats {
         &self.stats
@@ -365,6 +398,7 @@ impl Drop for ChipArrayServer {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn dispatcher_main(
     rx: mpsc::Receiver<Msg>,
     worker_txs: Vec<mpsc::Sender<WorkerMsg>>,
@@ -372,6 +406,7 @@ fn dispatcher_main(
     window: Duration,
     stats: Arc<ServerStats>,
     problems: Arc<Mutex<HashMap<ProblemHandle, Arc<ProblemSpec>>>>,
+    feedback: mpsc::SyncSender<Msg>,
 ) {
     let n = worker_txs.len();
     let mut router = Router::new(n);
@@ -407,6 +442,8 @@ fn dispatcher_main(
                     }
                 }
                 Some(Msg::Done(w)) => router.complete(w),
+                Some(Msg::Quarantine(w)) => router.quarantine(w),
+                Some(Msg::Revive(w)) => router.revive(w),
                 Some(Msg::Shutdown) => shutting_down = true,
                 None => break,
             }
@@ -437,7 +474,7 @@ fn dispatcher_main(
                 match router.route_gang(train_gang_key(job.id), dies) {
                     Some(gang) => {
                         stats.batches.fetch_add(1, Ordering::Relaxed);
-                        dispatch_train(job, gang, &worker_txs, reply, t0, &stats);
+                        dispatch_train(job, gang, &worker_txs, reply, t0, &stats, &feedback);
                     }
                     None => {
                         replies.insert(job.id, (reply, t0));
@@ -474,7 +511,7 @@ fn dispatcher_main(
                 match router.route_gang(problem, shards) {
                     Some(gang) => {
                         stats.batches.fetch_add(1, Ordering::Relaxed);
-                        dispatch_sharded(job, spec, gang, &worker_txs, reply, t0, &stats);
+                        dispatch_sharded(job, spec, gang, &worker_txs, reply, t0, &stats, &feedback);
                     }
                     None => {
                         // not enough idle dies yet — wait for Done msgs
@@ -558,9 +595,29 @@ fn train_gang_key(job: JobId) -> u64 {
     (1u64 << 63) | job
 }
 
+/// Replay a gang run's membership log and return the seats it leaves
+/// dead — Lost/Stalled with no later Rejoined — as seat indices into
+/// the gang (the coordinator speaks seat numbers, not worker ids).
+fn finally_dead(events: &[MembershipEvent]) -> Vec<usize> {
+    let mut dead = std::collections::BTreeSet::new();
+    for e in events {
+        match e.change {
+            MembershipChange::Lost | MembershipChange::Stalled => {
+                dead.insert(e.die);
+            }
+            MembershipChange::Rejoined => {
+                dead.remove(&e.die);
+            }
+        }
+    }
+    dead.into_iter().collect()
+}
+
 /// Seat the gang's dies and spawn the training-coordinator thread that
 /// drives the epoch protocol and answers the job ticket. Worker load is
 /// released die-by-die through the normal `Done` path as each seat ends.
+/// Dies an elastic run leaves dead are quarantined via `feedback`.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_train(
     job: QueuedJob,
     gang: Vec<(usize, bool)>,
@@ -568,6 +625,7 @@ fn dispatch_train(
     reply: mpsc::Sender<JobResult>,
     t0: Instant,
     stats: &Arc<ServerStats>,
+    feedback: &mpsc::SyncSender<Msg>,
 ) {
     use crate::chip::SAMPLE_TIME_NS;
     let (params, resume, epochs, progress) = match job.request {
@@ -600,6 +658,7 @@ fn dispatch_train(
     drop(out_tx);
     let stats_err = stats.clone();
     let stats = stats.clone();
+    let feedback = feedback.clone();
     let spawned = std::thread::Builder::new().name("train-coordinator".into()).spawn(move || {
         let result = service::drive_training(
             &params,
@@ -616,6 +675,9 @@ fn dispatch_train(
         drop(cmd_txs); // hang up on any seat still waiting for a command
         let msg = match result {
             Ok(run) => {
+                for seat in finally_dead(&run.membership) {
+                    let _ = feedback.send(Msg::Quarantine(dies[seat]));
+                }
                 stats
                     .chip_time_ns
                     .fetch_add((run.total_sweeps as f64 * SAMPLE_TIME_NS) as u64, Ordering::Relaxed);
@@ -631,6 +693,7 @@ fn dispatch_train(
                     checkpoint: run.checkpoint,
                     codes: run.codes,
                     dies,
+                    membership: run.membership,
                     latency: t0.elapsed(),
                 }
             }
@@ -656,7 +719,9 @@ fn dispatch_train(
 /// Seat the gang's dies and spawn the exchange-coordinator thread that
 /// drives the sweep/swap protocol and answers the job ticket. Worker
 /// load is released die-by-die through the normal `Done` path as each
-/// seat ends (when the coordinator finishes or hangs up on it).
+/// seat ends (when the coordinator finishes or hangs up on it). Dies an
+/// elastic run leaves dead are quarantined via `feedback`.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_sharded(
     job: QueuedJob,
     spec: Arc<ProblemSpec>,
@@ -665,6 +730,7 @@ fn dispatch_sharded(
     reply: mpsc::Sender<JobResult>,
     t0: Instant,
     stats: &Arc<ServerStats>,
+    feedback: &mpsc::SyncSender<Msg>,
 ) {
     use crate::chip::SAMPLE_TIME_NS;
     let JobRequest::ShardedTempering { params, .. } = job.request else {
@@ -694,8 +760,11 @@ fn dispatch_sharded(
     let stats_err = stats.clone();
     let stats = stats.clone();
     let scale = spec.scale;
+    let feedback = feedback.clone();
     let spawned = std::thread::Builder::new().name("shard-coordinator".into()).spawn(move || {
-        let result = if params.pipeline {
+        let result = if params.elastic {
+            sharded::drive_sharded_elastic(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+        } else if params.pipeline {
             sharded::drive_sharded_pipelined(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
         } else {
             sharded::drive_sharded(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
@@ -703,20 +772,26 @@ fn dispatch_sharded(
         drop(cmd_txs); // hang up on any seat still waiting for a command
         let n_sweeps = params.base.total_sweeps() as u64;
         let msg = match result {
-            Ok(sr) => JobResult::ShardedTempered {
-                best_energy: sr.run.best_energy,
-                boundary_acceptance: sr.boundary_acceptance(),
-                cross_shard_round_trips: sr.cross_shard_round_trips(),
-                best_state: sr.run.best_state,
-                trace: sr.run.trace.rows,
-                swap_acceptance: sr.run.swaps.acceptance_rates(),
-                round_trips: sr.run.swaps.round_trips,
-                fraction_up: sr.run.flux.f_profile(),
-                boundary_pairs: sr.boundary_pairs,
-                shards: sr.shards,
-                dies,
-                latency: t0.elapsed(),
-            },
+            Ok(sr) => {
+                for seat in finally_dead(&sr.membership) {
+                    let _ = feedback.send(Msg::Quarantine(dies[seat]));
+                }
+                JobResult::ShardedTempered {
+                    best_energy: sr.run.best_energy,
+                    boundary_acceptance: sr.boundary_acceptance(),
+                    cross_shard_round_trips: sr.cross_shard_round_trips(),
+                    best_state: sr.run.best_state,
+                    trace: sr.run.trace.rows,
+                    swap_acceptance: sr.run.swaps.acceptance_rates(),
+                    round_trips: sr.run.swaps.round_trips,
+                    fraction_up: sr.run.flux.f_profile(),
+                    boundary_pairs: sr.boundary_pairs,
+                    shards: sr.shards,
+                    dies,
+                    membership: sr.membership,
+                    latency: t0.elapsed(),
+                }
+            }
             Err(e) => JobResult::Failed(format!("sharded tempering: {e:#}")),
         };
         if matches!(msg, JobResult::Failed(_)) {
@@ -768,6 +843,11 @@ fn worker_main(
         }
         EngineKind::SoftwareBatch { batch } => {
             let chip = Hw::new(SoftwareSampler::new(batch.max(1), seed), personality);
+            worker_loop(k, chip, rx, done_tx, stats);
+        }
+        EngineKind::SoftwareFaulty { batch, plan } => {
+            let engine = FaultyChip::new(SoftwareSampler::new(batch.max(1), seed), k, plan);
+            let chip = Hw::new(engine, personality);
             worker_loop(k, chip, rx, done_tx, stats);
         }
         EngineKind::Xla { artifacts_dir } => {
@@ -1189,6 +1269,7 @@ mod tests {
             shards: 3,
             barrier_timeout: Duration::from_secs(30),
             pipeline: false,
+            elastic: false,
         };
         match srv.run_sharded_tempering(h, &params).unwrap() {
             JobResult::ShardedTempered {
@@ -1227,6 +1308,7 @@ mod tests {
             shards: 5,
             barrier_timeout: Duration::from_secs(5),
             pipeline: false,
+            elastic: false,
         };
         match srv.run_sharded_tempering(h, &params).unwrap() {
             JobResult::Failed(msg) => {

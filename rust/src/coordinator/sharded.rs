@@ -54,9 +54,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::annealing::{
-    EnergyReadback, PipelinedCore, TemperingCore, TemperingParams, TemperingRun,
+    BetaLadder, EnergyReadback, PipelinedCore, TemperingCore, TemperingParams, TemperingRun,
 };
-use crate::metrics::{FluxStats, SwapStats};
+use crate::metrics::{FluxStats, MembershipChange, MembershipEvent, SwapStats};
 use crate::problems::IsingProblem;
 use crate::sampler::Sampler;
 
@@ -84,6 +84,19 @@ pub struct ShardedTemperingParams {
     ///
     /// [`temper`]: crate::annealing::temper
     pub pipeline: bool,
+    /// Survive die loss instead of failing the run: when a shard errors
+    /// or stalls past the barrier, the gang **shrinks** — the β-ladder
+    /// is re-partitioned (resized when the survivors cannot host every
+    /// rung) onto the remaining dies and the run resumes from the
+    /// shared [`TemperingCore`] state — and **regrows** when a dropped
+    /// die answers a probe again. Membership changes are recorded in
+    /// [`ShardedRun::membership`]. The round at which a change lands is
+    /// spent but not scored (its readback cannot cover the full chain
+    /// array); with no faults an elastic run is bit-identical to the
+    /// non-elastic schedule.
+    ///
+    /// [`TemperingCore`]: crate::annealing::TemperingCore
+    pub elastic: bool,
 }
 
 impl Default for ShardedTemperingParams {
@@ -93,6 +106,7 @@ impl Default for ShardedTemperingParams {
             shards: 2,
             barrier_timeout: Duration::from_secs(30),
             pipeline: false,
+            elastic: false,
         }
     }
 }
@@ -200,8 +214,12 @@ pub struct ShardedRun {
     pub per_shard_flux: Vec<FluxStats>,
     /// Pair indices of the shard boundaries (`pair k` = rungs `k, k+1`).
     pub boundary_pairs: Vec<usize>,
-    /// How many dies shared the ladder.
+    /// How many dies shared the ladder (the final gang size for an
+    /// elastic run).
     pub shards: usize,
+    /// Membership changes of an elastic run, in round order (empty for
+    /// non-elastic runs and for elastic runs that saw no faults).
+    pub membership: Vec<MembershipEvent>,
 }
 
 impl ShardedRun {
@@ -273,8 +291,12 @@ pub(crate) fn shard_worker_loop<S: Sampler>(
                     Ok(m) => m,
                     Err(e) => ShardMsg::Error { shard, message: format!("{e:#}") },
                 };
-                let failed = matches!(msg, ShardMsg::Error { .. });
-                if out_tx.send(msg).is_err() || failed {
+                // keep serving after an error: the elastic coordinator
+                // probes dropped dies with further Phase commands and
+                // regrows the gang when one answers again. Non-elastic
+                // coordinators bail on the Error and drop this channel,
+                // which ends the loop through the recv below.
+                if out_tx.send(msg).is_err() {
                     break;
                 }
             }
@@ -468,7 +490,15 @@ fn attribute(run: TemperingRun, plan: &ShardPlan) -> ShardedRun {
         .iter()
         .map(|range| run.flux.restricted(&range.clone().collect::<Vec<_>>()))
         .collect();
-    ShardedRun { run, per_shard, boundary, per_shard_flux, boundary_pairs, shards }
+    ShardedRun {
+        run,
+        per_shard,
+        boundary,
+        per_shard_flux,
+        boundary_pairs,
+        shards,
+        membership: Vec::new(),
+    }
 }
 
 /// The coordinator's half of the serial protocol: handshake with every
@@ -586,6 +616,315 @@ where
     Ok(attribute(core.into_run(), &plan))
 }
 
+/// Fold one elastic segment's finished run into the accumulated record:
+/// trace rows shift by the sweeps already banked, the best state is the
+/// global minimum, swap/flux counters merge across segments of equal
+/// rung count (a ladder resize restarts them — pair indices would not
+/// line up — keeping the latest segment's attribution), and the ladder
+/// is always the latest (possibly adapted, possibly resized) one.
+fn merge_segment(acc: &mut Option<TemperingRun>, seg: TemperingRun) {
+    let Some(a) = acc else {
+        *acc = Some(seg);
+        return;
+    };
+    let offset = a.total_sweeps;
+    for &(sweep, beta, mean_e, min_e) in &seg.trace.rows {
+        a.trace.rows.push((sweep + offset, beta, mean_e, min_e));
+    }
+    if seg.best_energy < a.best_energy {
+        a.best_energy = seg.best_energy;
+        a.best_state = seg.best_state;
+    }
+    if a.swaps.attempts.len() == seg.swaps.attempts.len() {
+        a.swaps.merge(&seg.swaps);
+        a.flux.merge(&seg.flux);
+    } else {
+        a.swaps = seg.swaps;
+        a.flux = seg.flux;
+    }
+    a.ladder = seg.ladder;
+    a.total_sweeps += seg.total_sweeps;
+}
+
+/// The rung count an elastic segment over `survivor_batches` can host:
+/// the configured ladder size, capped by the survivors' total capacity
+/// (the balanced [`BetaLadder::partition`] puts at most
+/// `ceil(K / shards)` rungs on one die, so `K ≤ shards · min_batch`
+/// keeps every shard within its chain budget).
+fn elastic_rungs(target: usize, survivor_batches: &[usize]) -> usize {
+    let min_batch = survivor_batches.iter().copied().min().unwrap_or(0);
+    target.min(min_batch * survivor_batches.len())
+}
+
+/// The elastic coordinator: the same sharded protocol, but a shard
+/// error or barrier timeout **shrinks** the gang instead of failing the
+/// run. The run proceeds in *segments* of stable membership; at each
+/// membership change the current [`TemperingCore`] is finalized, its
+/// record merged ([`merge_segment`]), the (possibly adapted) ladder is
+/// re-partitioned — resized when the survivors cannot host every rung —
+/// and a fresh core resumes over the survivors. Dropped dies are probed
+/// with a `Phase` command every round; a probe answered with a readback
+/// **regrows** the gang at the next round boundary. Rounds at which a
+/// membership change lands are spent but not scored (their readback
+/// cannot cover the full chain array). In pipelined mode the in-flight
+/// phase at a change — including any stashed readback from the dead
+/// shard — is discarded, never replayed.
+pub(crate) fn drive_sharded_elastic<F>(
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    out_rx: &mpsc::Receiver<ShardMsg>,
+    mut observe: F,
+) -> Result<ShardedRun>
+where
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let workers = cmd_txs.len();
+    ensure!(workers == params.shards, "{} seats for {} shards", workers, params.shards);
+    ensure!(params.base.rounds >= 1, "elastic tempering needs at least one round");
+    let batches = handshake(workers, out_rx, params.barrier_timeout)?;
+    let total_rounds = params.base.rounds;
+    let sweeps = params.base.sweeps_per_round;
+
+    let mut alive = vec![true; workers];
+    let mut pending_rejoin: Vec<usize> = Vec::new();
+    let mut events: Vec<MembershipEvent> = Vec::new();
+    let mut ladder = params.base.ladder.clone();
+    let mut acc: Option<TemperingRun> = None;
+    let mut last_plan: Option<ShardPlan> = None;
+    let mut done = 0usize;
+    let mut segment = 0u64;
+
+    while done < total_rounds {
+        // regrow: dies that answered a probe rejoin at this boundary
+        for w in pending_rejoin.drain(..) {
+            alive[w] = true;
+            events.push(MembershipEvent {
+                round: done,
+                die: w,
+                change: MembershipChange::Rejoined,
+            });
+        }
+        let survivors: Vec<usize> = (0..workers).filter(|&w| alive[w]).collect();
+        ensure!(
+            !survivors.is_empty(),
+            "elastic tempering: every die was lost by round {done} \
+             (membership: {events:?})"
+        );
+        // re-partition the (possibly adapted) ladder onto the survivors
+        let seg_batches: Vec<usize> = survivors.iter().map(|&w| batches[w]).collect();
+        let rungs = elastic_rungs(params.base.ladder.len(), &seg_batches);
+        ensure!(
+            rungs >= 2,
+            "elastic tempering: the {} surviving die(s) cannot host a 2-rung ladder",
+            survivors.len()
+        );
+        if ladder.len() != rungs {
+            ladder = ladder.resized(rungs);
+        }
+        let plan = ShardPlan::new(&ladder, &seg_batches)?;
+        let mut seat_of: Vec<Option<usize>> = vec![None; workers];
+        for (s, &w) in survivors.iter().enumerate() {
+            seat_of[w] = Some(s);
+        }
+        let seg_params = TemperingParams {
+            ladder: ladder.clone(),
+            rounds: total_rounds - done,
+            seed: params.base.seed ^ segment.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..params.base.clone()
+        };
+        segment += 1;
+
+        // run the segment until it completes, a member is lost, or a
+        // probed die answers (rejoin happens at the segment boundary)
+        let mut serial = (!params.pipeline)
+            .then(|| {
+                TemperingCore::with_assignment(
+                    &seg_params,
+                    plan.total_chains,
+                    plan.chain_at_rung(),
+                )
+            })
+            .transpose()?;
+        let mut piped = params
+            .pipeline
+            .then(|| {
+                PipelinedCore::with_assignment(
+                    &seg_params,
+                    plan.total_chains,
+                    plan.chain_at_rung(),
+                )
+            })
+            .transpose()?;
+
+        let mut states: Vec<Vec<i8>> = vec![Vec::new(); plan.total_chains];
+        let mut energies = vec![0.0f64; plan.total_chains];
+        let mut stash: Vec<StashedPhase> = (0..plan.shards()).map(|_| None).collect();
+        let seg_rounds = seg_params.rounds;
+        let mut sent = 0usize; // phases dispatched (tags done..done+sent)
+        let mut local = 0usize; // phases scored
+        let mut changed = false;
+
+        // a closure would borrow half the state; a macro keeps the
+        // dispatch shared between the prime and the round loop
+        macro_rules! dispatch {
+            ($betas:expr, $tag:expr) => {{
+                let betas = $betas;
+                sent += 1;
+                for (s, &w) in survivors.iter().enumerate() {
+                    let slice =
+                        betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
+                    let cmd = ShardCmd::Phase { round: $tag, betas: slice, sweeps };
+                    if cmd_txs[w].send(cmd).is_err() && alive[w] {
+                        alive[w] = false;
+                        events.push(MembershipEvent {
+                            round: $tag,
+                            die: w,
+                            change: MembershipChange::Lost,
+                        });
+                        changed = true;
+                    }
+                }
+                // probe the dropped dies: a dead engine answers with an
+                // immediate error (ignored), a revived one with a
+                // readback — the regrow signal
+                for w in (0..workers).filter(|&w| !alive[w]) {
+                    let cmd = ShardCmd::Phase {
+                        round: $tag,
+                        betas: vec![1.0; batches[w]],
+                        sweeps,
+                    };
+                    let _ = cmd_txs[w].send(cmd);
+                }
+            }};
+        }
+
+        if let Some(core) = piped.as_mut() {
+            let betas = core.launch(beta_scale).expect("segment has at least one round");
+            dispatch!(betas, done);
+        }
+        while local < seg_rounds && !changed {
+            let tag = done + local;
+            if let Some(core) = serial.as_mut() {
+                dispatch!(core.chain_betas(beta_scale), tag);
+            } else if let Some(core) = piped.as_mut() {
+                // hand out phase tag+1 before collecting phase tag
+                if let Some(betas) = core.launch(beta_scale) {
+                    dispatch!(betas, tag + 1);
+                }
+            }
+            if changed {
+                break;
+            }
+            // bounded collect of phase `tag` from every survivor
+            let mut seen = vec![false; plan.shards()];
+            let mut remaining = plan.shards();
+            for s in 0..plan.shards() {
+                if let Some((st, en)) = stash[s].take() {
+                    place_phase(&plan, s, st, en, &mut states, &mut energies)?;
+                    seen[s] = true;
+                    remaining -= 1;
+                }
+            }
+            let deadline = Instant::now() + params.barrier_timeout;
+            while remaining > 0 && !changed {
+                match recv_by(out_rx, deadline) {
+                    Ok(ShardMsg::Phase { shard: w, round: r, states: st, energies: en }) => {
+                        ensure!(w < workers, "unknown shard {w}");
+                        if !alive[w] {
+                            // a dropped die answered its probe: regrow
+                            // at the next boundary (the probe readback
+                            // itself is discarded — the rejoined die
+                            // re-equilibrates under the new plan)
+                            if !pending_rejoin.contains(&w) {
+                                pending_rejoin.push(w);
+                            }
+                        } else if let Some(s) = seat_of[w] {
+                            if r == tag && !seen[s] {
+                                place_phase(&plan, s, st, en, &mut states, &mut energies)?;
+                                seen[s] = true;
+                                remaining -= 1;
+                            } else if r == tag + 1 && stash[s].is_none() {
+                                stash[s] = Some((st, en));
+                            }
+                            // any other tag is a stale readback from an
+                            // abandoned phase — dropped
+                        }
+                    }
+                    Ok(ShardMsg::Error { shard: w, .. }) => {
+                        ensure!(w < workers, "unknown shard {w}");
+                        if alive[w] {
+                            alive[w] = false;
+                            events.push(MembershipEvent {
+                                round: tag,
+                                die: w,
+                                change: MembershipChange::Lost,
+                            });
+                            changed = true;
+                        }
+                        // a dropped die failing its probe is expected
+                    }
+                    Ok(ShardMsg::Ready { .. }) => {} // late joiner noise
+                    Err(_) => {
+                        for (s, &w) in survivors.iter().enumerate() {
+                            if !seen[s] && alive[w] {
+                                alive[w] = false;
+                                events.push(MembershipEvent {
+                                    round: tag,
+                                    die: w,
+                                    change: MembershipChange::Stalled,
+                                });
+                            }
+                        }
+                        changed = true;
+                    }
+                }
+            }
+            if changed {
+                break;
+            }
+            let assignment = match (&serial, &piped) {
+                (Some(core), _) => core.chain_at_rung(),
+                (_, Some(core)) => core.chain_at_rung(),
+                _ => unreachable!("one scheduler is always active"),
+            };
+            observe(tag, &states, assignment);
+            if let Some(core) = serial.as_mut() {
+                core.finish_round(local, &energies, &states);
+            } else if let Some(core) = piped.as_mut() {
+                core.score(&energies, &states);
+            }
+            local += 1;
+            if !pending_rejoin.is_empty() {
+                // finalize at this boundary so the rejoined die is in
+                // the next segment's plan
+                break;
+            }
+        }
+
+        // every dispatched phase is spent, scored or not: un-scored
+        // rounds (the membership-change round, a pipelined in-flight
+        // phase) are skipped, never replayed
+        done += sent;
+        let seg_run = match (serial, piped) {
+            (Some(core), _) => core.into_run(),
+            (_, Some(core)) => core.into_run_abandoning(),
+            _ => unreachable!("one scheduler is always active"),
+        };
+        merge_segment(&mut acc, seg_run);
+        last_plan = Some(plan);
+    }
+
+    for tx in cmd_txs {
+        let _ = tx.send(ShardCmd::Finish);
+    }
+    let plan = last_plan.expect("at least one segment ran");
+    let run = acc.expect("at least one segment ran");
+    let mut sharded = attribute(run, &plan);
+    sharded.membership = events;
+    Ok(sharded)
+}
+
 /// Run one β-ladder across `samplers.len()` dies, one shard each (see
 /// the [module docs](self) for the protocol). The samplers are moved
 /// into per-shard worker threads; the caller prepares them (problem
@@ -648,18 +987,24 @@ where
         );
     }
     drop(out_tx);
-    let result = if params.pipeline {
+    let result = if params.elastic {
+        drive_sharded_elastic(params, beta_scale, &cmd_txs, &out_rx, observe)
+    } else if params.pipeline {
         drive_sharded_pipelined(params, beta_scale, &cmd_txs, &out_rx, observe)
     } else {
         drive_sharded(params, beta_scale, &cmd_txs, &out_rx, observe)
     };
     drop(cmd_txs);
-    if result.is_ok() {
+    if result.is_ok() && !params.elastic {
         // every worker saw Finish (or a hangup) — reap them
         for j in joins {
             let _ = j.join();
         }
     }
+    // elastic runs can succeed with a die still stalled mid-sweep; its
+    // worker is abandoned like the error path's (it exits when its cmd
+    // channel drops, or dies with the process) instead of blocking the
+    // reap here.
     // on error the stalled worker may never return: abandon the handles
     // (threads exit when their cmd channel drops, or die with the
     // process) rather than deadlocking here.

@@ -517,6 +517,7 @@ mod tests {
             shards: 2,
             barrier_timeout: std::time::Duration::from_secs(30),
             pipeline: false,
+            elastic: false,
         };
         let r = fig9a_sk_temper_sharded(3, &params, MismatchConfig::default(), 4, None).unwrap();
         assert!(r.sharded.run.best_energy.is_finite() && r.sharded.run.best_energy < 0.0);

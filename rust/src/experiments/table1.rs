@@ -435,6 +435,7 @@ mod tests {
             shards: 2,
             barrier_timeout: std::time::Duration::from_secs(30),
             pipeline: false,
+            elastic: false,
         };
         let r = table1_tts_sharded(3, 4, &params, MismatchConfig::ideal(), 4, None).unwrap();
         assert!(r.report.p_success > 0.0, "no sharded run found the planted state");

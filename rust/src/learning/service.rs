@@ -71,7 +71,7 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::analog::ProgrammedWeights;
 use crate::annealing::{BetaLadder, LadderTuning, TemperingCore, TemperingParams};
 use crate::chimera::GateLayout;
-use crate::metrics::StateHistogram;
+use crate::metrics::{MembershipChange, MembershipEvent, StateHistogram};
 use crate::util::json::{obj, Json};
 
 use super::cd::{kl_and_valid, CdParams, CdTrainer, EpochStats};
@@ -122,6 +122,17 @@ pub struct TrainParams {
     /// just faster
     /// (`rust/tests/pipelined_equivalence.rs`).
     pub pipeline: bool,
+    /// Survive die failures instead of failing the run: a die that
+    /// errors or stalls at the all-reduce barrier is dropped from the
+    /// gang, the epoch is **retried** over the survivors (pattern
+    /// shards and the negative budget re-tile, so the per-epoch sample
+    /// budget stays fixed), and a recovered die rejoins at the next
+    /// epoch boundary. Membership changes are recorded in
+    /// [`TrainedRun::membership`]. Requires the barrier schedule
+    /// (incompatible with [`TrainParams::pipeline`]); an elastic run
+    /// is bit-identical to the non-elastic one only while no fault
+    /// fires.
+    pub elastic: bool,
     /// Seed for the per-die chain randomization when the run is seated
     /// by the coordinator (direct [`run_training`] callers prepare
     /// their own chips and this is unused).
@@ -142,6 +153,7 @@ impl TrainParams {
             eval_samples: 3000,
             barrier_timeout: Duration::from_secs(60),
             pipeline: false,
+            elastic: false,
             seed: 0x7124,
         }
     }
@@ -152,6 +164,10 @@ impl TrainParams {
             !(self.pcd && self.dies < 2),
             "PCD needs --dies ≥ 2: one die must keep its negative chains unclamped \
              while the others run the clamped positive phase"
+        );
+        ensure!(
+            !(self.elastic && self.pipeline),
+            "elastic training requires the barrier schedule (drop --pipeline)"
         );
         ensure!(self.eval_every >= 1, "eval_every must be positive");
         ensure!(self.eval_samples >= 1, "eval_samples must be positive");
@@ -230,6 +246,12 @@ pub struct TrainCheckpoint {
     pub b: Vec<f64>,
     /// Epochs applied (resumes the lr-decay schedule).
     pub epochs_done: usize,
+    /// Die count of the run that wrote the checkpoint (0 in
+    /// checkpoints written before this field existed). Recorded so an
+    /// elastic resume can tell when the gang shape changed; resuming
+    /// never *requires* the same count — shards and chain restore are
+    /// re-derived from the resuming run's own params.
+    pub dies: usize,
     /// Persistent negative chains, one state set per PCD negative die
     /// (empty without PCD). Restored best-effort: an engine that cannot
     /// set chain states re-thermalizes through the first epoch's
@@ -261,6 +283,7 @@ impl TrainCheckpoint {
             ("w", Json::from(self.w.clone())),
             ("b", Json::from(self.b.clone())),
             ("epochs_done", Json::from(self.epochs_done)),
+            ("dies", Json::from(self.dies)),
             ("chains", chains),
         ])
     }
@@ -292,6 +315,11 @@ impl TrainCheckpoint {
             w: floats("w")?,
             b: floats("b")?,
             epochs_done: v.req("epochs_done")?.as_usize()?,
+            // absent in checkpoints written before the field existed
+            dies: match v.get("dies") {
+                Some(d) => d.as_usize()?,
+                None => 0,
+            },
             chains,
         })
     }
@@ -327,6 +355,9 @@ pub struct TrainedRun {
     /// Exact per-chain sweeps executed across every die (chip-time
     /// accounting: × [`crate::chip::SAMPLE_TIME_NS`]).
     pub total_sweeps: u64,
+    /// Membership changes of an elastic run, in epoch order (empty for
+    /// non-elastic runs and for elastic runs that saw no faults).
+    pub membership: Vec<MembershipEvent>,
 }
 
 /// The per-die seat seed the coordinator uses to randomize chains
@@ -381,6 +412,12 @@ pub(crate) struct EpochShard {
     pub neg_burn_in: bool,
     /// Current shadow model, when the negative phase is tempered.
     pub shadow: Option<ShadowEnergy>,
+    /// Dispatch tag echoed back in [`TrainMsg::Grad`]: unique per
+    /// dispatched *attempt* under the elastic schedule, so the
+    /// coordinator can drop results of aborted attempts (a retried
+    /// epoch reuses its epoch number but never its tag). Always 0
+    /// outside elastic mode.
+    pub tag: u64,
 }
 
 /// Coordinator → train-worker commands.
@@ -428,6 +465,8 @@ pub(crate) enum TrainMsg {
         accum: GradAccum,
         /// Per-chain sweeps this shard executed for the epoch.
         sweeps: u64,
+        /// The [`EpochShard::tag`] this result answers.
+        tag: u64,
     },
     /// One evaluation share's visible histogram.
     Hist {
@@ -508,8 +547,12 @@ pub(crate) fn train_worker_loop<C: TrainableChip>(
             Ok(Some(m)) => m,
             Err(e) => TrainMsg::Error { shard, message: format!("{e:#}") },
         };
-        let failed = matches!(msg, TrainMsg::Error { .. });
-        if out_tx.send(msg).is_err() || failed {
+        // keep serving after an error: the elastic coordinator probes a
+        // failed die with one-sample work-units and re-admits it when
+        // one answers. Non-elastic drivers fail the run on the first
+        // Error and drop the command channel, which still ends this
+        // loop.
+        if out_tx.send(msg).is_err() {
             break;
         }
     }
@@ -558,7 +601,7 @@ fn run_epoch_shard<C: TrainableChip>(
             }
         }
     }
-    Ok(TrainMsg::Grad { shard, accum: acc, sweeps })
+    Ok(TrainMsg::Grad { shard, accum: acc, sweeps, tag: work.tag })
 }
 
 /// The tempered negative phase: run the die's chains as a replica-
@@ -677,16 +720,33 @@ struct Placement {
     neg_dies: Vec<usize>,
     /// Die index → evaluation sample share (0 = none).
     eval_shares: Vec<usize>,
+    /// Whether a dedicated persistent-chain die is actually in effect:
+    /// PCD was requested *and* the placement spans at least two dies
+    /// (a lone survivor degrades to plain per-epoch CD — its clamped
+    /// positive phase would destroy the chains anyway).
+    pcd_active: bool,
 }
 
 impl Placement {
     fn new(params: &TrainParams) -> Self {
-        let dies = params.dies;
+        Self::over(params, &vec![true; params.dies])
+    }
+
+    /// The placement over the currently-alive subset of the gang
+    /// (elastic mode). With every die alive this is exactly
+    /// [`Placement::new`]; with fewer survivors the pattern shards, the
+    /// negative budget and the evaluation shares re-tile over them, so
+    /// the per-epoch sample budget is preserved across a shrink.
+    fn over(params: &TrainParams, alive: &[bool]) -> Self {
+        let dies = alive.len();
+        let live: Vec<usize> = (0..dies).filter(|&s| alive[s]).collect();
+        assert!(!live.is_empty(), "placement over an empty gang");
         let n_patterns = params.dataset.patterns.len();
-        let (pos_dies, neg_dies): (Vec<usize>, Vec<usize>) = if params.pcd {
-            ((0..dies - 1).collect(), vec![dies - 1])
+        let pcd_active = params.pcd && live.len() >= 2;
+        let (pos_dies, neg_dies): (Vec<usize>, Vec<usize>) = if pcd_active {
+            (live[..live.len() - 1].to_vec(), vec![live[live.len() - 1]])
         } else {
-            ((0..dies).collect(), (0..dies).collect())
+            (live.clone(), live.clone())
         };
         let mut pattern_ranges = vec![0..0; dies];
         for (k, range) in split_ranges(n_patterns, pos_dies.len()).into_iter().enumerate() {
@@ -700,14 +760,14 @@ impl Placement {
         }
         // evaluate on the positive dies under PCD (the negative die's
         // chains stay undisturbed), on every die otherwise
-        let eval_dies = if params.pcd { &pos_dies } else { &neg_dies };
+        let eval_dies = if pcd_active { &pos_dies } else { &neg_dies };
         let mut eval_shares = vec![0; dies];
         for (k, share) in
             split_counts(params.eval_samples, eval_dies.len()).into_iter().enumerate()
         {
             eval_shares[eval_dies[k]] = share;
         }
-        Self { pattern_ranges, neg_shares, neg_dies, eval_shares }
+        Self { pattern_ranges, neg_shares, neg_dies, eval_shares, pcd_active }
     }
 }
 
@@ -770,44 +830,68 @@ fn program_all(
 }
 
 /// Collect the persistent negative chains for the checkpoint (PCD only;
-/// empty otherwise).
+/// empty otherwise). Under [`TrainParams::elastic`] only the alive
+/// negative dies are asked, stale epoch/eval traffic still in the
+/// channel is skipped, and a die that fails or stalls here yields an
+/// empty chain set (the resume re-thermalizes through its first burn-in
+/// instead) rather than failing an otherwise-complete run.
 fn collect_chains(
     params: &TrainParams,
     place: &Placement,
+    alive: &[bool],
     cmd_txs: &[mpsc::Sender<TrainCmd>],
     out_rx: &mpsc::Receiver<TrainMsg>,
 ) -> Result<Vec<Vec<Vec<i8>>>> {
     let dies = cmd_txs.len();
-    let mut chains: Vec<Vec<Vec<i8>>> = Vec::new();
     if !params.pcd {
-        return Ok(chains);
+        return Ok(Vec::new());
     }
+    let mut waiting = vec![false; dies];
+    let mut expected = 0usize;
     for &die in &place.neg_dies {
+        if !alive[die] {
+            continue;
+        }
         if cmd_txs[die].send(TrainCmd::Checkpoint).is_err() {
+            if params.elastic {
+                continue;
+            }
             bail!("training: die {die} hung up before checkpointing");
         }
+        waiting[die] = true;
+        expected += 1;
     }
     let mut got: Vec<Option<Vec<Vec<i8>>>> = (0..dies).map(|_| None).collect();
     let deadline = Instant::now() + params.barrier_timeout;
-    for _ in 0..place.neg_dies.len() {
+    while expected > 0 {
         match recv_by(out_rx, deadline) {
             Ok(TrainMsg::Chains { shard, states }) => {
                 ensure!(shard < dies, "unknown shard {shard}");
-                got[shard] = Some(states);
+                if waiting[shard] {
+                    waiting[shard] = false;
+                    expected -= 1;
+                    got[shard] = Some(states);
+                }
             }
             Ok(TrainMsg::Error { shard, message }) => {
+                if params.elastic {
+                    if shard < dies && waiting[shard] {
+                        waiting[shard] = false;
+                        expected -= 1;
+                    }
+                    continue;
+                }
                 bail!("training: die {shard} failed checkpointing: {message}")
             }
+            Ok(_) if params.elastic => continue, // stale epoch/eval traffic
             Ok(_) => bail!("protocol error: unexpected message while checkpointing"),
+            Err(_) if params.elastic => break,
             Err(_) => {
                 bail!("training: checkpoint barrier timed out after {:?}", params.barrier_timeout)
             }
         }
     }
-    for &die in &place.neg_dies {
-        chains.push(got[die].take().unwrap_or_default());
-    }
-    Ok(chains)
+    Ok(place.neg_dies.iter().map(|&die| got[die].take().unwrap_or_default()).collect())
 }
 
 /// The barrier-synchronized epoch loop (the serial schedule): fan the
@@ -845,6 +929,7 @@ where
                 neg_samples: place.neg_shares[s],
                 neg_burn_in: e == 0 || !params.pcd,
                 shadow: shadow.clone(),
+                tag: 0,
             };
             if tx.send(TrainCmd::Epoch(work)).is_err() {
                 bail!("training: die {s} hung up before epoch {epoch_no}");
@@ -855,7 +940,7 @@ where
         let deadline = Instant::now() + params.barrier_timeout;
         for _ in 0..dies {
             match recv_by(out_rx, deadline) {
-                Ok(TrainMsg::Grad { shard, accum, sweeps }) => {
+                Ok(TrainMsg::Grad { shard, accum, sweeps, tag: _ }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
                     ensure!(
                         accum.patterns() == n_patterns,
@@ -1047,6 +1132,7 @@ where
                     neg_samples: 0,
                     neg_burn_in: false,
                     shadow: None,
+                    tag: 0,
                 };
                 if tx.send(TrainCmd::Epoch(work)).is_err() {
                     bail!("training: die {s} hung up before epoch {epoch_no}");
@@ -1059,6 +1145,7 @@ where
                     neg_samples: place.neg_shares[s],
                     neg_burn_in: e == 0 || !params.pcd,
                     shadow: shadow.clone(),
+                    tag: 0,
                 };
                 if tx.send(TrainCmd::Epoch(work)).is_err() {
                     bail!("training: die {s} hung up before epoch {epoch_no}");
@@ -1074,7 +1161,7 @@ where
         let mut deadline = Instant::now() + params.barrier_timeout;
         while received < expected {
             match recv_by(out_rx, deadline) {
-                Ok(TrainMsg::Grad { shard, accum, sweeps }) => {
+                Ok(TrainMsg::Grad { shard, accum, sweeps, tag: _ }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
                     ensure!(
                         accum.patterns() == n_patterns,
@@ -1154,6 +1241,313 @@ where
     Ok((stats, total_sweeps))
 }
 
+/// The elastic epoch loop: the barrier schedule of
+/// [`run_epochs_barrier`], except that a die failing the all-reduce
+/// shrinks the gang instead of failing the run.
+///
+/// On an `Error` from a live die — or a barrier timeout — the attempt
+/// is aborted, the lost die is recorded in `events`, and the **same**
+/// epoch is retried over the survivors with freshly tiled pattern
+/// shards and negative budget ([`Placement::over`]), so the per-epoch
+/// sample budget stays fixed across a shrink. Every dead die is probed
+/// each attempt with a one-sample work-unit; a probe that answers
+/// proves the die recovered, and it rejoins (chains re-burned-in) at
+/// the next attempt boundary. Results of aborted attempts are dropped
+/// by their dispatch tag — a survivor that finished the old attempt
+/// simply re-runs the epoch, which costs extra sweeps but never skews
+/// the merged gradient.
+///
+/// Evaluation failures shrink the gang too, but never retry the epoch
+/// (its update is already applied): the stat is computed from the
+/// shares that landed, or skipped when none did.
+#[allow(clippy::too_many_arguments)]
+fn run_epochs_elastic<F>(
+    params: &TrainParams,
+    trainer: &mut CdTrainer,
+    spec: &PhaseSpec,
+    segment_epochs: usize,
+    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    out_rx: &mpsc::Receiver<TrainMsg>,
+    alive: &mut [bool],
+    events: &mut Vec<MembershipEvent>,
+    mut on_epoch: F,
+) -> Result<(Vec<EpochStats>, u64)>
+where
+    F: FnMut(&EpochStats),
+{
+    let dies = cmd_txs.len();
+    let n_patterns = params.dataset.patterns.len();
+    let mut stats: Vec<EpochStats> = Vec::new();
+    let mut total_sweeps = 0u64;
+    // chains needing burn-in before their next negative share: all
+    // fresh at the start, and re-set for everyone whenever membership
+    // changes (the negative work may move to a different die)
+    let mut neg_fresh = vec![true; dies];
+    let mut pending_rejoin: Vec<usize> = Vec::new();
+    let mut next_tag: u64 = 1;
+    let mut e = 0usize;
+    while e < segment_epochs {
+        let epoch_no = trainer.epochs_done();
+        // absorb recoveries at the attempt boundary
+        for die in std::mem::take(&mut pending_rejoin) {
+            if !alive[die] {
+                alive[die] = true;
+                neg_fresh.fill(true);
+                events.push(MembershipEvent {
+                    round: epoch_no,
+                    die,
+                    change: MembershipChange::Rejoined,
+                });
+            }
+        }
+        ensure!(
+            alive.iter().any(|&a| a),
+            "elastic training: every die is down at epoch {epoch_no} (membership: {events:?})"
+        );
+        let place = Placement::over(params, alive);
+        let shadow = params
+            .tempered
+            .as_ref()
+            .map(|_| ShadowEnergy::new(spec, trainer.shadow().0, trainer.shadow().1));
+        // 1. fan out: survivors get the re-tiled epoch, dead dies get a
+        //    one-sample probe whose accumulator is discarded
+        let tag = next_tag;
+        next_tag += 1;
+        let mut waiting = vec![false; dies];
+        let mut expected = 0usize;
+        let mut changed = false;
+        for (s, tx) in cmd_txs.iter().enumerate() {
+            let work = if alive[s] {
+                EpochShard {
+                    patterns: place.pattern_ranges[s].clone(),
+                    neg_samples: place.neg_shares[s],
+                    neg_burn_in: neg_fresh[s] || !place.pcd_active,
+                    shadow: shadow.clone(),
+                    tag,
+                }
+            } else {
+                EpochShard { patterns: 0..0, neg_samples: 1, neg_burn_in: true, shadow: None, tag }
+            };
+            if tx.send(TrainCmd::Epoch(work)).is_err() {
+                if alive[s] {
+                    alive[s] = false;
+                    changed = true;
+                    events.push(MembershipEvent {
+                        round: epoch_no,
+                        die: s,
+                        change: MembershipChange::Lost,
+                    });
+                }
+                continue;
+            }
+            if alive[s] {
+                waiting[s] = true;
+                expected += 1;
+            }
+        }
+        if changed {
+            // a survivor's seat hung up mid-dispatch: its shard never
+            // ran, so the attempt cannot produce a full gradient
+            neg_fresh.fill(true);
+            continue;
+        }
+        // 2. all-reduce over the survivors; tag-mismatched results from
+        //    aborted attempts are dropped, and any answer from a dead
+        //    die queues it to rejoin
+        let mut grads: Vec<Option<GradAccum>> = (0..dies).map(|_| None).collect();
+        let mut received = 0usize;
+        let deadline = Instant::now() + params.barrier_timeout;
+        while received < expected {
+            match recv_by(out_rx, deadline) {
+                Ok(TrainMsg::Grad { shard, accum, sweeps, tag: t }) => {
+                    ensure!(shard < dies, "unknown shard {shard}");
+                    total_sweeps += sweeps;
+                    if !alive[shard] {
+                        if !pending_rejoin.contains(&shard) {
+                            pending_rejoin.push(shard);
+                        }
+                    } else if t == tag && waiting[shard] {
+                        ensure!(
+                            accum.patterns() == n_patterns,
+                            "die {shard} reported {} pattern slots, expected {n_patterns}",
+                            accum.patterns()
+                        );
+                        grads[shard] = Some(accum);
+                        waiting[shard] = false;
+                        received += 1;
+                    }
+                }
+                Ok(TrainMsg::Hist { shard, sweeps, .. }) => {
+                    // a stale evaluation share from a shrunken barrier;
+                    // a dead die delivering one is proof of life
+                    ensure!(shard < dies, "unknown shard {shard}");
+                    total_sweeps += sweeps;
+                    if !alive[shard] && !pending_rejoin.contains(&shard) {
+                        pending_rejoin.push(shard);
+                    }
+                }
+                Ok(TrainMsg::Error { shard, .. }) => {
+                    ensure!(shard < dies, "unknown shard {shard}");
+                    // a probe failing just means the die is still down
+                    if alive[shard] {
+                        alive[shard] = false;
+                        changed = true;
+                        events.push(MembershipEvent {
+                            round: epoch_no,
+                            die: shard,
+                            change: MembershipChange::Lost,
+                        });
+                        break;
+                    }
+                }
+                Ok(_) => bail!("protocol error: unexpected message at epoch {epoch_no}"),
+                Err(_) => {
+                    for (s, w) in waiting.iter().enumerate() {
+                        if *w {
+                            alive[s] = false;
+                            events.push(MembershipEvent {
+                                round: epoch_no,
+                                die: s,
+                                change: MembershipChange::Stalled,
+                            });
+                        }
+                    }
+                    changed = true;
+                    break;
+                }
+            }
+        }
+        if changed {
+            neg_fresh.fill(true);
+            continue; // retry the same epoch over the survivors
+        }
+        // 3. merge in shard order and apply the update
+        let mut total = GradAccum::new(n_patterns, spec.edges.len(), spec.spins.len());
+        for g in grads.iter().flatten() {
+            total.merge(g);
+        }
+        let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
+        let gap = trainer.apply_gradient(&dc, &dm);
+        if place.pcd_active {
+            for s in 0..dies {
+                if alive[s] && place.neg_shares[s] > 0 {
+                    neg_fresh[s] = false;
+                }
+            }
+        }
+        // program every seat — dead ones too, so a die that recovers
+        // rejoins with current codes (programming does not sweep, so it
+        // cannot trip a fault)
+        for (s, tx) in cmd_txs.iter().enumerate() {
+            let cmd =
+                TrainCmd::Program { codes: trainer.codes.clone(), beta: params.cd.beta as f32 };
+            if tx.send(cmd).is_err() && alive[s] {
+                alive[s] = false;
+                neg_fresh.fill(true);
+                events.push(MembershipEvent {
+                    round: epoch_no,
+                    die: s,
+                    change: MembershipChange::Lost,
+                });
+            }
+        }
+        // 4. evaluate at the cadence over the surviving eval dies
+        if e % params.eval_every == 0 || e == segment_epochs - 1 {
+            let mut eval_waiting = vec![false; dies];
+            let mut outstanding = 0usize;
+            for (s, tx) in cmd_txs.iter().enumerate() {
+                if !alive[s] || place.eval_shares[s] == 0 {
+                    continue;
+                }
+                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                    alive[s] = false;
+                    neg_fresh.fill(true);
+                    events.push(MembershipEvent {
+                        round: epoch_no,
+                        die: s,
+                        change: MembershipChange::Lost,
+                    });
+                    continue;
+                }
+                eval_waiting[s] = true;
+                outstanding += 1;
+            }
+            let mut merged = StateHistogram::new(&params.layout.visible);
+            let mut landed = 0usize;
+            let deadline = Instant::now() + params.barrier_timeout;
+            while outstanding > 0 {
+                match recv_by(out_rx, deadline) {
+                    Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
+                        ensure!(shard < dies, "unknown shard {shard}");
+                        total_sweeps += sweeps;
+                        if eval_waiting[shard] {
+                            merged.merge(&hist)?;
+                            eval_waiting[shard] = false;
+                            outstanding -= 1;
+                            landed += 1;
+                        } else if !alive[shard] && !pending_rejoin.contains(&shard) {
+                            pending_rejoin.push(shard);
+                        }
+                    }
+                    Ok(TrainMsg::Grad { shard, sweeps, .. }) => {
+                        ensure!(shard < dies, "unknown shard {shard}");
+                        total_sweeps += sweeps;
+                        if !alive[shard] && !pending_rejoin.contains(&shard) {
+                            pending_rejoin.push(shard);
+                        }
+                    }
+                    Ok(TrainMsg::Error { shard, .. }) => {
+                        ensure!(shard < dies, "unknown shard {shard}");
+                        if alive[shard] {
+                            alive[shard] = false;
+                            neg_fresh.fill(true);
+                            events.push(MembershipEvent {
+                                round: epoch_no,
+                                die: shard,
+                                change: MembershipChange::Lost,
+                            });
+                            if eval_waiting[shard] {
+                                eval_waiting[shard] = false;
+                                outstanding -= 1;
+                            }
+                        }
+                    }
+                    Ok(_) => bail!("protocol error: unexpected message during evaluation"),
+                    Err(_) => {
+                        for (s, w) in eval_waiting.iter_mut().enumerate() {
+                            if *w {
+                                alive[s] = false;
+                                events.push(MembershipEvent {
+                                    round: epoch_no,
+                                    die: s,
+                                    change: MembershipChange::Stalled,
+                                });
+                                *w = false;
+                            }
+                        }
+                        neg_fresh.fill(true);
+                        outstanding = 0;
+                    }
+                }
+            }
+            if landed > 0 {
+                let p_model = merged.probabilities();
+                let p_target = params.dataset.target_distribution();
+                let (kl, valid) = kl_and_valid(&p_target, &p_model);
+                let stat = EpochStats { epoch: epoch_no, kl, corr_gap: gap, valid_mass: valid };
+                on_epoch(&stat);
+                stats.push(stat);
+            }
+        }
+        e += 1;
+    }
+    ensure!(
+        !stats.is_empty(),
+        "elastic training: no evaluation ever completed (every evaluating die was lost)"
+    );
+    Ok((stats, total_sweeps))
+}
+
 /// The coordinator's half of the protocol: handshake with every seat,
 /// then drive the epoch loop — barrier-synchronized by default, or the
 /// overlapped schedule of [`run_epochs_pipelined`] when
@@ -1192,6 +1586,8 @@ where
     }
     let spec = trainer.phase_spec();
     let place = Placement::new(params);
+    let mut alive = vec![true; dies];
+    let mut events: Vec<MembershipEvent> = Vec::new();
 
     // restore persistent chains before any programming/sweeping
     if let Some(cp) = resume {
@@ -1205,7 +1601,19 @@ where
     }
     program_all(&trainer, params, cmd_txs)?;
 
-    let (stats, total_sweeps) = if params.pipeline {
+    let (stats, total_sweeps) = if params.elastic {
+        run_epochs_elastic(
+            params,
+            &mut trainer,
+            &spec,
+            segment_epochs,
+            cmd_txs,
+            out_rx,
+            &mut alive,
+            &mut events,
+            on_epoch,
+        )?
+    } else if params.pipeline {
         run_epochs_pipelined(
             params, &mut trainer, &spec, &place, segment_epochs, cmd_txs, out_rx, on_epoch,
         )?
@@ -1215,8 +1623,11 @@ where
         )?
     };
 
-    // collect persistent chains for the checkpoint, then dismiss seats
-    let chains = collect_chains(params, &place, cmd_txs, out_rx)?;
+    // collect persistent chains for the checkpoint (over the FINAL
+    // membership when elastic — the negative work may have moved), then
+    // dismiss the seats
+    let final_place = if params.elastic { Placement::over(params, &alive) } else { place };
+    let chains = collect_chains(params, &final_place, &alive, cmd_txs, out_rx)?;
     for tx in cmd_txs {
         let _ = tx.send(TrainCmd::Finish);
     }
@@ -1229,6 +1640,7 @@ where
             w: w.to_vec(),
             b: b.to_vec(),
             epochs_done: trainer.epochs_done(),
+            dies: params.dies,
             chains,
         },
         codes: trainer.codes.clone(),
@@ -1236,6 +1648,7 @@ where
         final_valid_mass: last.valid_mass,
         stats,
         total_sweeps,
+        membership: events,
     })
 }
 
@@ -1311,13 +1724,15 @@ where
     drop(out_tx);
     let result = drive_training(params, resume, epochs, &cmd_txs, &out_rx, on_epoch);
     drop(cmd_txs);
-    if result.is_ok() {
+    if result.is_ok() && !params.elastic {
         for j in joins {
             let _ = j.join();
         }
     }
     // on error a stalled worker may never return: abandon the handles
     // (threads exit when their cmd channel drops) rather than deadlock.
+    // An elastic run can *succeed* with a die still stalled mid-sweep,
+    // so its handles are abandoned too.
     result
 }
 
@@ -1381,6 +1796,39 @@ mod tests {
         assert!(p.validate().is_err(), "hot end above the training β");
         p.tempered = Some(TemperedNegative::default());
         assert!(p.validate().is_ok());
+        p.elastic = true;
+        p.pipeline = true;
+        assert!(p.validate().is_err(), "elastic needs the barrier schedule");
+        p.pipeline = false;
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn placement_over_survivors_retiles_and_degrades_pcd() {
+        let mut p = params();
+        p.dies = 3;
+        p.pcd = true;
+        p.cd.samples_per_pattern = 10;
+        // die 1 lost: patterns re-tile over die 0, chains move to die 2
+        let place = Placement::over(&p, &[true, false, true]);
+        assert!(place.pcd_active);
+        assert_eq!(place.pattern_ranges, vec![0..4, 0..0, 0..0]);
+        assert_eq!(place.neg_dies, vec![2]);
+        assert_eq!(place.neg_shares, vec![0, 0, 10]);
+        assert_eq!(place.eval_shares[1], 0);
+        // a lone survivor degrades PCD to plain per-epoch CD
+        let lone = Placement::over(&p, &[false, true, false]);
+        assert!(!lone.pcd_active);
+        assert_eq!(lone.pattern_ranges[1], 0..4);
+        assert_eq!(lone.neg_shares[1], 10);
+        assert_eq!(lone.eval_shares[1], p.eval_samples);
+        // full membership reproduces Placement::new exactly
+        let all = Placement::over(&p, &[true, true, true]);
+        let new = Placement::new(&p);
+        assert_eq!(all.pattern_ranges, new.pattern_ranges);
+        assert_eq!(all.neg_shares, new.neg_shares);
+        assert_eq!(all.neg_dies, new.neg_dies);
+        assert_eq!(all.eval_shares, new.eval_shares);
     }
 
     #[test]
@@ -1390,6 +1838,7 @@ mod tests {
             w: vec![0.25, -0.5, 0.125],
             b: vec![0.0, 1.0],
             epochs_done: 17,
+            dies: 3,
             chains: vec![vec![vec![1, -1, 1], vec![-1, -1, 1]]],
         };
         let text = cp.to_json().to_string();
@@ -1398,10 +1847,20 @@ mod tests {
         assert_eq!(back.w, cp.w);
         assert_eq!(back.b, cp.b);
         assert_eq!(back.epochs_done, 17);
+        assert_eq!(back.dies, 3);
         assert_eq!(back.chains, cp.chains);
         // a corrupted chain spin is rejected
         let bad = text.replace("[1,-1,1]", "[1,-3,1]");
         assert!(TrainCheckpoint::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn checkpoint_without_dies_field_still_loads() {
+        // a checkpoint written before the `dies` field existed
+        let text = r#"{"gate":"AND","w":[0.5],"b":[0.0],"epochs_done":2,"chains":[]}"#;
+        let back = TrainCheckpoint::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(back.dies, 0);
+        assert_eq!(back.epochs_done, 2);
     }
 
     #[test]

@@ -3,11 +3,13 @@
 //! ```text
 //! pchip info                         chip facts + artifact status
 //! pchip train  [--gate and|or|xor|nand|nor|adder] [--dies N] [--pcd]
-//!              [--tempered-negative] [--pipeline] [--epochs N] [--lr X]
+//!              [--tempered-negative] [--pipeline] [--elastic]
+//!              [--epochs N] [--lr X] [--fault-plan FILE]
 //!              [--checkpoint-out FILE] [--resume FILE] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
-//!              [--shards N] [--pipeline] [--barrier-timeout-ms T]
+//!              [--shards N] [--pipeline] [--elastic] [--fanout N]
+//!              [--fault-plan FILE] [--barrier-timeout-ms T]
 //!              [--tune off|acceptance|flux] [--adapt-every N]
 //! pchip tune-ladder [--seed S] [--replicas K] [--b0 X] [--b1 X]
 //!              [--iters N] [--floor A] [--ceiling A] [--min-k K] [--max-k K]
@@ -97,6 +99,29 @@ fn load_config(args: &Args) -> Result<Config> {
     }
 }
 
+/// `--fault-plan FILE`: a deterministic fault-injection schedule (JSON
+/// from [`pchip::util::fault::FaultPlan::to_json`]) wired under every
+/// software die. `None` when the flag is absent.
+fn fault_plan(args: &Args) -> Result<Option<pchip::util::fault::FaultPlan>> {
+    match args.path_of("fault-plan")? {
+        None => Ok(None),
+        Some(p) => {
+            let text =
+                std::fs::read_to_string(p).map_err(|e| anyhow!("--fault-plan {p}: {e}"))?;
+            let v = pchip::util::json::Json::parse(&text)?;
+            Ok(Some(pchip::util::fault::FaultPlan::from_json(&v)?))
+        }
+    }
+}
+
+/// Per-die membership-change log of an elastic gang run → stderr, one
+/// line per event, so scripts can grep which die died or rejoined when.
+fn print_membership(events: &[pchip::metrics::MembershipEvent]) {
+    for e in events {
+        eprintln!("membership: round {:>4}  die {}  {:?}", e.round, e.die, e.change);
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -132,11 +157,15 @@ fn print_help() {
          \u{20}        coordinator; --pcd keeps persistent negative chains;\n  \
          \u{20}        --tempered-negative mixes the model via a β-ladder;\n  \
          \u{20}        --pipeline streams phases into the all-reduce and\n  \
-         \u{20}        overlaps evaluations with the next epoch)\n  \
+         \u{20}        overlaps evaluations with the next epoch;\n  \
+         \u{20}        --elastic retries epochs over surviving dies when\n  \
+         \u{20}        one fails mid-run, readmitting it when it recovers)\n  \
          anneal  SK spin-glass annealing (Fig 9a)\n  \
          temper  replica-exchange sampling vs annealing, head-to-head\n  \
          \u{20}       (--shards N shards the ladder across N software dies;\n  \
          \u{20}        --pipeline overlaps sweeps with swap/readback, 1-phase lag;\n  \
+         \u{20}        --elastic re-partitions the ladder onto the surviving\n  \
+         \u{20}        dies when one is lost mid-run;\n  \
          \u{20}        --tune flux re-spaces the ladder in-run by round-trip flux)\n  \
          tune-ladder  feedback-optimize a β-ladder (round-trip flux, auto-K)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
@@ -280,6 +309,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     params.dies = dies;
     params.pcd = args.flag("pcd");
     params.pipeline = args.flag("pipeline");
+    params.elastic = args.flag("elastic");
     params.eval_every = args.get("eval-every", 5)?;
     params.eval_samples = args.get("eval-samples", 4000)?;
     params.seed = args.get("seed", 7u64)?;
@@ -302,10 +332,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     // the array IS the gang: one die per shard, each with its own
     // personality (cfg.server.seed + k), every phase through silicon
     cfg.server.chips = dies;
-    let engine = match args.str_or("engine", "sw").as_str() {
-        "sw" => EngineKind::Software,
-        "xla" => EngineKind::Xla { artifacts_dir: cfg.artifacts_dir() },
-        other => bail!("unknown engine `{other}` (sw|xla)"),
+    let engine = match (args.str_or("engine", "sw").as_str(), fault_plan(args)?) {
+        ("sw", None) => EngineKind::Software,
+        ("sw", Some(plan)) => EngineKind::SoftwareFaulty { batch: 32, plan },
+        ("xla", None) => EngineKind::Xla { artifacts_dir: cfg.artifacts_dir() },
+        ("xla", Some(_)) => bail!("--fault-plan needs the sw engine"),
+        (other, _) => bail!("unknown engine `{other}` (sw|xla)"),
     };
     let srv = ChipArrayServer::start(&cfg, engine)?;
 
@@ -337,10 +369,20 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("{:>6} {:>10.4} {:>10.4} {:>12.3}", s.epoch, s.kl, s.corr_gap, s.valid_mass);
     }
     match ticket.wait() {
-        JobResult::Trained { stats, checkpoint, final_kl, final_valid_mass, dies, .. } => {
+        JobResult::Trained {
+            stats,
+            checkpoint,
+            final_kl,
+            final_valid_mass,
+            dies,
+            membership,
+            ..
+        } => {
+            print_membership(&membership);
             println!(
                 "gate {gate}: final KL {final_kl:.4}, valid mass {final_valid_mass:.3} \
-                 (dies {dies:?})"
+                 (dies {dies:?}{})",
+                if membership.is_empty() { "" } else { ", gang shrank/regrew — see stderr" }
             );
             let name = format!("train_{gate}");
             let rows: Vec<Vec<f64>> = stats
@@ -415,6 +457,48 @@ fn cmd_temper(args: &Args) -> Result<()> {
         record_every: 1,
         seed: args.get("swap-seed", 0x9A77u64)?,
     };
+
+    // --fanout N: N independent runs of this instance through the
+    // chip-array server, one die each, keeping the best. Per-die
+    // failures print to stderr and fail the command — a die that errors
+    // is an array-health event the caller must see, not a statistic the
+    // winning run gets to hide.
+    let fanout: usize = args.get("fanout", 0)?;
+    if fanout > 0 {
+        anyhow::ensure!(
+            args.str_or("engine", "sw") == "sw",
+            "--fanout needs the sw engine (per-chain β)"
+        );
+        let mut scfg = cfg.clone();
+        scfg.server.chips = fanout;
+        let engine = match fault_plan(args)? {
+            Some(plan) => EngineKind::SoftwareFaulty { batch: replicas.max(8), plan },
+            None => EngineKind::SoftwareBatch { batch: replicas.max(8) },
+        };
+        let srv = ChipArrayServer::start(&scfg, engine)?;
+        let topo = Topology::new();
+        let h = srv.register_problem(pchip::problems::sk::chimera_pm_j(&topo, seed))?;
+        let report = srv.run_tempering_fanout(h, &temper_params, fanout)?;
+        for f in &report.failures {
+            eprintln!("die failure: {f}");
+        }
+        match &report.best {
+            JobResult::Tempered { best_energy, .. } => {
+                println!("fanout over {fanout} die(s): best energy {best_energy:.0}");
+            }
+            JobResult::Failed(msg) => eprintln!("no run succeeded: {msg}"),
+            other => bail!("unexpected result {other:?}"),
+        }
+        if !report.failures.is_empty() {
+            bail!(
+                "{} of {} tempering runs failed (per-die diagnostics above)",
+                report.failures.len(),
+                report.runs
+            );
+        }
+        return Ok(());
+    }
+
     let report = with_chip(args, &cfg, replicas.max(8), |mut chip| {
         exp::fig9a_sk_temper_vs_anneal(
             &mut chip,
@@ -453,10 +537,15 @@ fn cmd_temper(args: &Args) -> Result<()> {
     // cross-worker swap phases (sw engine only — the sharded protocol
     // needs per-chain β on every die). --pipeline swaps the barrier
     // schedule for the 1-phase-lag pipelined one (serial retained as
-    // the default), and works for a single die too.
+    // the default), and works for a single die too. --elastic survives
+    // die loss by re-partitioning the ladder over the survivors (the
+    // membership log prints to stderr); combined with --fault-plan the
+    // gang runs through the chip-array server so the scripted faults
+    // land under specific dies.
     let shards: usize = args.get("shards", 1)?;
     let pipeline = args.flag("pipeline");
-    if shards > 1 || pipeline {
+    let elastic = args.flag("elastic");
+    if shards > 1 || pipeline || elastic {
         anyhow::ensure!(
             shards <= replicas,
             "--shards {shards} cannot exceed --replicas {replicas}"
@@ -468,7 +557,34 @@ fn cmd_temper(args: &Args) -> Result<()> {
                 args.get("barrier-timeout-ms", 30_000u64)?,
             ),
             pipeline,
+            elastic,
         };
+        if let Some(plan) = fault_plan(args)? {
+            let mut scfg = cfg.clone();
+            scfg.server.chips = shards;
+            let engine = EngineKind::SoftwareFaulty { batch: replicas.max(8), plan };
+            let srv = ChipArrayServer::start(&scfg, engine)?;
+            let topo = Topology::new();
+            let h = srv.register_problem(pchip::problems::sk::chimera_pm_j(&topo, seed))?;
+            match srv.run_sharded_tempering(h, &sharded_params)? {
+                JobResult::ShardedTempered {
+                    best_energy,
+                    shards: final_shards,
+                    membership,
+                    ..
+                } => {
+                    print_membership(&membership);
+                    println!(
+                        "sharded under fault plan: best {best_energy:.0} \
+                         ({final_shards} shard(s) at the end{})",
+                        if membership.is_empty() { "" } else { ", membership log on stderr" }
+                    );
+                }
+                JobResult::Failed(msg) => bail!("sharded tempering failed: {msg}"),
+                other => bail!("unexpected result {other:?}"),
+            }
+            return Ok(());
+        }
         let r = exp::fig9a_sk_temper_sharded(
             seed,
             &sharded_params,
@@ -476,6 +592,7 @@ fn cmd_temper(args: &Args) -> Result<()> {
             replicas.max(8) / shards.max(1),
             Some("fig9a_sharded"),
         )?;
+        print_membership(&r.sharded.membership);
         println!(
             "sharded ({shards} die(s), {} rungs each ±1{}): best {:.0} vs single-die {:.0}",
             replicas / shards,

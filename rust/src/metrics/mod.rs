@@ -11,5 +11,5 @@ mod trace;
 pub use flux::{FluxStats, ReplicaDirection};
 pub use histogram::StateHistogram;
 pub use stats::{corr_edges, kl_divergence, magnetization, success_probability, Welford};
-pub use swap::SwapStats;
+pub use swap::{MembershipChange, MembershipEvent, SwapStats};
 pub use trace::EnergyTrace;

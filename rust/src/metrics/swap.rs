@@ -13,6 +13,45 @@
 
 use crate::util::json::{obj, Json};
 
+/// How a gang member's status changed mid-run (elastic mode).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipChange {
+    /// The die reported an error and was dropped from the gang.
+    Lost,
+    /// The die went silent past the barrier timeout and was dropped.
+    Stalled,
+    /// A previously-dropped die answered a probe and rejoined.
+    Rejoined,
+}
+
+/// One membership change of an elastic gang, for the run record: which
+/// die changed status, at which round (tempering) or epoch (training).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MembershipEvent {
+    /// Round / epoch index at which the change took effect.
+    pub round: usize,
+    /// The die (worker seat) whose status changed.
+    pub die: usize,
+    /// What happened.
+    pub change: MembershipChange,
+}
+
+impl MembershipEvent {
+    /// Serialize for reports and diagnostics.
+    pub fn to_json(&self) -> Json {
+        let change = match self.change {
+            MembershipChange::Lost => "lost",
+            MembershipChange::Stalled => "stalled",
+            MembershipChange::Rejoined => "rejoined",
+        };
+        obj(vec![
+            ("round", Json::from(self.round)),
+            ("die", Json::from(self.die)),
+            ("change", Json::from(change)),
+        ])
+    }
+}
+
 /// Swap statistics for one tempering run.
 #[derive(Debug, Clone, Default)]
 pub struct SwapStats {

@@ -1,0 +1,359 @@
+//! Deterministic fault injection for gang-recovery testing.
+//!
+//! A [`FaultPlan`] scripts die failures in *logical* time: each entry
+//! names a die, the index of the `sweeps()` call at which the fault
+//! fires, and what happens ([`FaultKind`]). Wrapping a die's engine in
+//! [`FaultyChip`] then makes every recovery path — shrink, regrow,
+//! stall-detection — reproducible in `cargo test` from a seed, with no
+//! wall-clock races:
+//!
+//! ```ignore
+//! let plan = FaultPlan::new(vec![FaultEvent {
+//!     die: 1,
+//!     round: 3,
+//!     kind: FaultKind::Kill { until: Some(6) },
+//! }]);
+//! let chip = FaultyChip::new(inner, 1, plan); // die 1 dies on its 4th
+//!                                             // sweeps() call, revives
+//!                                             // on its 7th
+//! ```
+//!
+//! Faults count a die's **own** `sweeps()` calls, not wall-clock time
+//! or coordinator rounds. For sharded tempering the two coincide (one
+//! `sweeps()` per phase command); for training, a killed die consumes
+//! exactly one call per probe epoch (the first `sweeps()` of the epoch
+//! shard fails), so revival timing is deterministic there too.
+//!
+//! Plans serialize to JSON ([`FaultPlan::to_json`] /
+//! [`FaultPlan::from_json`]) so a failing chaos-suite case can be
+//! uploaded as a CI artifact and replayed verbatim; [`FaultPlan::chaos`]
+//! generates a small random plan from a seed for the chaos matrix.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::analog::Folded;
+use crate::problems::EnergyLedger;
+use crate::rng::HostRng;
+use crate::sampler::Sampler;
+use crate::util::json::{obj, Json};
+
+/// What happens to a die when one of its fault events fires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Every `sweeps()` call in `[round, until)` fails with an error
+    /// (`None` = the die never comes back). The worker reports the
+    /// error immediately, so recovery is prompt and deterministic —
+    /// this is the workhorse of the chaos suite.
+    Kill {
+        /// First call index at which the die works again; `None` kills
+        /// it for good.
+        until: Option<usize>,
+    },
+    /// The `sweeps()` call blocks for an hour — the die goes silent
+    /// without an error, exercising the barrier-timeout path. The
+    /// worker thread is abandoned by the coordinator and dies with the
+    /// process (the same contract the old ad-hoc stalling samplers
+    /// pinned down).
+    Stall,
+    /// The `sweeps()` call completes, but only after sleeping `ms`
+    /// milliseconds — timing skew without failure, for pipelining
+    /// tests.
+    Delay {
+        /// Added latency in milliseconds.
+        ms: u64,
+    },
+}
+
+/// One scripted fault: `die` suffers `kind` at its `round`-th
+/// `sweeps()` call (0-based).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Which die the fault targets.
+    pub die: usize,
+    /// The die-local `sweeps()`-call index at which it fires.
+    pub round: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of die faults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// The scripted events, in no particular order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A plan from explicit events.
+    pub fn new(events: Vec<FaultEvent>) -> Self {
+        Self { events }
+    }
+
+    /// A plan with no faults (every die behaves).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Kill `die` for good at call `round`.
+    pub fn kill(die: usize, round: usize) -> Self {
+        Self::new(vec![FaultEvent { die, round, kind: FaultKind::Kill { until: None } }])
+    }
+
+    /// Kill `die` at call `round` and revive it at call `until`.
+    pub fn kill_until(die: usize, round: usize, until: usize) -> Self {
+        Self::new(vec![FaultEvent { die, round, kind: FaultKind::Kill { until: Some(until) } }])
+    }
+
+    /// Stall `die` (silent, no error) at call `round`.
+    pub fn stall(die: usize, round: usize) -> Self {
+        Self::new(vec![FaultEvent { die, round, kind: FaultKind::Stall }])
+    }
+
+    /// The fault governing `die`'s `call`-th `sweeps()` call, if any.
+    pub fn fault_at(&self, die: usize, call: usize) -> Option<FaultKind> {
+        self.events.iter().find_map(|e| {
+            if e.die != die {
+                return None;
+            }
+            match e.kind {
+                FaultKind::Kill { until } => {
+                    let dead = call >= e.round && until.is_none_or(|u| call < u);
+                    dead.then_some(e.kind)
+                }
+                FaultKind::Stall | FaultKind::Delay { .. } => (call == e.round).then_some(e.kind),
+            }
+        })
+    }
+
+    /// A small random plan over `dies` dies and roughly `rounds`
+    /// logical rounds, derived purely from `seed` — the generator the
+    /// chaos matrix runs over. Only recoverable kinds are drawn (kills
+    /// with and without revival, short delays); stalls are scripted
+    /// explicitly where a test wants the timeout path.
+    pub fn chaos(seed: u64, dies: usize, rounds: usize) -> Self {
+        let mut rng = HostRng::new(seed ^ 0xFA_017);
+        let n = 1 + rng.below(2);
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let die = rng.below(dies.max(1));
+            let round = rng.below(rounds.max(1));
+            let kind = match rng.below(3) {
+                0 => FaultKind::Kill { until: None },
+                1 => FaultKind::Kill { until: Some(round + 1 + rng.below(rounds.max(1))) },
+                _ => FaultKind::Delay { ms: 1 + rng.below(3) as u64 },
+            };
+            events.push(FaultEvent { die, round, kind });
+        }
+        Self::new(events)
+    }
+
+    /// Serialize the plan (for the CI artifact on a red chaos case).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    let (kind, arg) = match e.kind {
+                        FaultKind::Kill { until: None } => ("kill", Json::Null),
+                        FaultKind::Kill { until: Some(u) } => ("kill", Json::from(u)),
+                        FaultKind::Stall => ("stall", Json::Null),
+                        FaultKind::Delay { ms } => ("delay", Json::from(ms as usize)),
+                    };
+                    obj(vec![
+                        ("die", Json::from(e.die)),
+                        ("round", Json::from(e.round)),
+                        ("kind", Json::from(kind)),
+                        ("arg", arg),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse back what [`FaultPlan::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut events = Vec::new();
+        for e in v.as_arr()? {
+            let die = e.req("die")?.as_usize()?;
+            let round = e.req("round")?.as_usize()?;
+            let arg = e.req("arg")?;
+            let kind = match e.req("kind")?.as_str()? {
+                "kill" => FaultKind::Kill {
+                    until: match arg {
+                        Json::Null => None,
+                        other => Some(other.as_usize()?),
+                    },
+                },
+                "stall" => FaultKind::Stall,
+                "delay" => FaultKind::Delay { ms: arg.as_usize()? as u64 },
+                other => bail!("unknown fault kind `{other}`"),
+            };
+            events.push(FaultEvent { die, round, kind });
+        }
+        Ok(Self::new(events))
+    }
+}
+
+/// A [`Sampler`] wrapper that injects the faults a [`FaultPlan`]
+/// scripts for one die. Every method delegates to the inner engine;
+/// only `sweeps()` consults the plan (and counts the die's calls).
+#[derive(Debug)]
+pub struct FaultyChip<S> {
+    /// The wrapped engine.
+    pub inner: S,
+    /// Which die of the plan this chip plays.
+    pub die: usize,
+    /// The fault schedule.
+    pub plan: FaultPlan,
+    calls: usize,
+}
+
+impl<S> FaultyChip<S> {
+    /// Wrap `inner` as die `die` of `plan`.
+    pub fn new(inner: S, die: usize, plan: FaultPlan) -> Self {
+        Self { inner, die, plan, calls: 0 }
+    }
+
+    /// How many `sweeps()` calls this die has seen (failed ones count).
+    pub fn calls(&self) -> usize {
+        self.calls
+    }
+}
+
+impl<S: Sampler> Sampler for FaultyChip<S> {
+    fn load(&mut self, folded: &Folded) {
+        self.inner.load(folded);
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.inner.set_beta(beta);
+    }
+
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        self.inner.set_betas(betas)
+    }
+
+    fn set_states(&mut self, states: &[Vec<i8>]) -> Result<()> {
+        self.inner.set_states(states)
+    }
+
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.inner.set_clamps(clamps);
+    }
+
+    fn batch(&self) -> usize {
+        self.inner.batch()
+    }
+
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        let call = self.calls;
+        self.calls += 1;
+        match self.plan.fault_at(self.die, call) {
+            Some(FaultKind::Kill { .. }) => {
+                bail!("injected fault: die {} is down (call {call})", self.die)
+            }
+            Some(FaultKind::Stall) => {
+                std::thread::sleep(Duration::from_secs(3600));
+                self.inner.sweeps(n)
+            }
+            Some(FaultKind::Delay { ms }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.sweeps(n)
+            }
+            None => self.inner.sweeps(n),
+        }
+    }
+
+    fn states(&self) -> Vec<Vec<i8>> {
+        self.inner.states()
+    }
+
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        self.inner.for_each_state(f);
+    }
+
+    fn track_energies(&mut self, ledger: &EnergyLedger) -> Result<()> {
+        self.inner.track_energies(ledger)
+    }
+
+    fn energies(&mut self) -> Result<Vec<f64>> {
+        self.inner.energies()
+    }
+
+    fn randomize(&mut self, seed: u64) {
+        self.inner.randomize(seed);
+    }
+}
+
+impl<S: crate::learning::TrainableChip> crate::learning::TrainableChip for FaultyChip<S> {
+    fn program_codes(&mut self, w: &crate::analog::ProgrammedWeights) -> Result<()> {
+        self.inner.program_codes(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_window_gates_calls() {
+        let plan = FaultPlan::kill_until(2, 3, 5);
+        assert_eq!(plan.fault_at(2, 2), None);
+        assert!(matches!(plan.fault_at(2, 3), Some(FaultKind::Kill { .. })));
+        assert!(matches!(plan.fault_at(2, 4), Some(FaultKind::Kill { .. })));
+        assert_eq!(plan.fault_at(2, 5), None);
+        // other dies are untouched
+        assert_eq!(plan.fault_at(1, 3), None);
+    }
+
+    #[test]
+    fn permanent_kill_never_revives() {
+        let plan = FaultPlan::kill(0, 1);
+        assert_eq!(plan.fault_at(0, 0), None);
+        for call in 1..100 {
+            assert!(plan.fault_at(0, call).is_some());
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let plan = FaultPlan::new(vec![
+            FaultEvent { die: 0, round: 4, kind: FaultKind::Kill { until: None } },
+            FaultEvent { die: 1, round: 2, kind: FaultKind::Kill { until: Some(9) } },
+            FaultEvent { die: 2, round: 0, kind: FaultKind::Stall },
+            FaultEvent { die: 3, round: 7, kind: FaultKind::Delay { ms: 5 } },
+        ]);
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_in_range() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::chaos(seed, 3, 10);
+            let b = FaultPlan::chaos(seed, 3, 10);
+            assert_eq!(a, b);
+            assert!(!a.events.is_empty());
+            for e in &a.events {
+                assert!(e.die < 3);
+                assert!(e.round < 10);
+                assert!(!matches!(e.kind, FaultKind::Stall), "chaos never stalls");
+            }
+        }
+    }
+
+    #[test]
+    fn faulty_chip_counts_and_fails() {
+        use crate::sampler::SoftwareSampler;
+        let plan = FaultPlan::kill_until(0, 1, 3);
+        let mut chip = FaultyChip::new(SoftwareSampler::new(4, 7), 0, plan);
+        assert!(chip.sweeps(1).is_ok());
+        assert!(chip.sweeps(1).is_err());
+        assert!(chip.sweeps(1).is_err());
+        assert!(chip.sweeps(1).is_ok(), "revives at call 3");
+        assert_eq!(chip.calls(), 4);
+    }
+}

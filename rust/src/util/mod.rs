@@ -4,6 +4,7 @@
 //! (DESIGN.md §Dependencies).
 
 pub mod bench;
+pub mod fault;
 pub mod json;
 pub mod prop;
 pub mod toml_lite;

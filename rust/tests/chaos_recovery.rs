@@ -1,0 +1,421 @@
+//! Gang elasticity under die failure — the kill-a-die suite.
+//!
+//! Every fault here is scripted in logical time (`pchip::util::fault`),
+//! so the chaos is deterministic and every red case names the exact
+//! plan that produced it:
+//!
+//! 1. **Elastic is free** — with no faults, an elastic sharded run is
+//!    bit-identical to the non-elastic one.
+//! 2. **Shrink** — killing a die mid-run shrinks the gang onto the
+//!    survivors, and the coldest rung still samples its exact Boltzmann
+//!    marginals.
+//! 3. **Regrow** — a die that comes back answers a probe, rejoins at a
+//!    round boundary, and the ladder regrows to its target size.
+//! 4. **Training survives** — an elastic 3-die training run that loses
+//!    a die permanently still converges to the single-die equal-budget
+//!    KL; a revived die rejoins and the run keeps learning.
+//! 5. **Chaos matrix** — seeded random fault plans (`FaultPlan::chaos`)
+//!    must always recover; a red case writes its plan to
+//!    `target/chaos-failing-plan.json` for CI to pick up, and prints
+//!    the seed to replay it.
+//! 6. **Served gangs** — the coordinator quarantines a finally-dead
+//!    worker, skips it for the next job, and reuses it after
+//!    `revive_die`.
+
+mod common;
+
+use std::time::Duration;
+
+use common::{
+    faulty_sampler, faulty_train_die, loaded_sampler, small_exact_problem, test_seed, train_die,
+};
+use pchip::annealing::{BetaLadder, TemperingParams};
+use pchip::chimera::{and_gate_layout, Topology};
+use pchip::config::Config;
+use pchip::coordinator::{
+    run_sharded_tempering, run_sharded_tempering_observed, ChipArrayServer, EngineKind, JobResult,
+    ShardedTemperingParams,
+};
+use pchip::learning::{dataset, run_training, CdParams, TrainParams};
+use pchip::metrics::{MembershipChange, MembershipEvent};
+use pchip::problems::{exact_boltzmann, sk};
+use pchip::util::fault::{FaultKind, FaultPlan};
+
+#[test]
+fn elastic_run_without_faults_is_bit_identical_to_non_elastic() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = |elastic| ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 3.0, 8),
+            sweeps_per_round: 2,
+            rounds: 40,
+            adapt_every: 10, // exercise ladder adaptation across segments
+            record_every: 4,
+            seed: 0xE1A5,
+            ..Default::default()
+        },
+        shards: 2,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic,
+    };
+    let dies = || {
+        vec![loaded_sampler(&problem, &topo, 4, 11), loaded_sampler(&problem, &topo, 4, 0x1011)]
+    };
+    let plain = run_sharded_tempering(dies(), &problem, &params(false), 1.0).unwrap();
+    let elastic = run_sharded_tempering(dies(), &problem, &params(true), 1.0).unwrap();
+
+    // segment 0 runs on the base seed, so a fault-free elastic run must
+    // reproduce the rigid protocol bit for bit
+    assert!(elastic.membership.is_empty(), "no faults, no membership changes");
+    assert_eq!(elastic.shards, 2);
+    assert_eq!(plain.run.best_energy.to_bits(), elastic.run.best_energy.to_bits());
+    assert_eq!(plain.run.best_state, elastic.run.best_state);
+    assert_eq!(plain.run.total_sweeps, elastic.run.total_sweeps);
+    assert_eq!(plain.run.trace.rows, elastic.run.trace.rows);
+    assert_eq!(plain.run.swaps.attempts, elastic.run.swaps.attempts);
+    assert_eq!(plain.run.swaps.accepts, elastic.run.swaps.accepts);
+    assert_eq!(plain.run.swaps.round_trips, elastic.run.swaps.round_trips);
+    assert_eq!(plain.run.ladder.betas, elastic.run.ladder.betas, "adapted ladders diverged");
+}
+
+#[test]
+fn losing_a_die_shrinks_the_gang_and_keeps_boltzmann_marginals() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let beta_target = 1.0;
+
+    // ground truth by enumeration
+    let (states, probs) = exact_boltzmann(&problem, beta_target).unwrap();
+    let exact_m: Vec<f64> = (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect();
+
+    // 6 rungs over 3 dies, 2 chains each; die 1 is killed for good at
+    // its 1000th sweep — the survivors re-partition a 4-rung resize of
+    // the ladder (endpoints pinned, so the coldest rung keeps β = 1)
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, beta_target, 6),
+            sweeps_per_round: 2,
+            rounds: 4200,
+            record_every: 100,
+            seed: 0xE117,
+            ..Default::default()
+        },
+        shards: 3,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: true,
+    };
+    let dies = vec![
+        faulty_sampler(&problem, &topo, 2, 11, 0, FaultPlan::none()),
+        faulty_sampler(&problem, &topo, 2, 0x1011, 1, FaultPlan::kill(1, 1000)),
+        faulty_sampler(&problem, &topo, 2, 0x2011, 2, FaultPlan::none()),
+    ];
+    let burn_in = 200usize;
+    let mut sums = vec![0.0f64; support.len()];
+    let mut n = 0usize;
+    let run = run_sharded_tempering_observed(
+        dies,
+        &problem,
+        &params,
+        1.0,
+        |round, states, rungs| {
+            if round < burn_in {
+                return;
+            }
+            let cold = &states[rungs[rungs.len() - 1]];
+            for (k, &s) in support.iter().enumerate() {
+                sums[k] += cold[s] as f64;
+            }
+            n += 1;
+        },
+    )
+    .unwrap();
+
+    // the failure is on the record, once, where the plan scripted it
+    assert_eq!(run.membership.len(), 1, "membership: {:?}", run.membership);
+    let event = run.membership[0];
+    assert_eq!(event.die, 1);
+    assert_eq!(event.change, MembershipChange::Lost);
+    assert!((1000..1100).contains(&event.round), "kill landed at round {}", event.round);
+    assert_eq!(run.shards, 2, "the gang must end shrunk");
+    assert_eq!(run.run.ladder.betas.len(), 4, "2 survivors × 2 chains host 4 rungs");
+    assert_eq!(*run.run.ladder.betas.last().unwrap(), beta_target, "cold endpoint must be pinned");
+
+    // the coldest rung still samples the exact Boltzmann marginals —
+    // same bands as the fault-free suite in `sharded_equivalence.rs`
+    assert!(n > 3500, "expected post-burn-in samples, got {n}");
+    for (k, &s) in support.iter().enumerate() {
+        let got = sums[k] / n as f64;
+        let want = exact_m[k];
+        assert!(
+            (got - want).abs() < 0.15,
+            "spin {s}: post-shrink coldest-rung marginal {got:.3} vs exact {want:.3}"
+        );
+    }
+}
+
+#[test]
+fn a_revived_die_rejoins_and_the_ladder_regrows() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 6),
+            sweeps_per_round: 2,
+            rounds: 200,
+            seed: 0x4E60,
+            ..Default::default()
+        },
+        shards: 3,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: true,
+    };
+    // die 1 is down for sweeps [40, 60): it is dropped at 40, probed
+    // once per round while dead, and its 60th call answers the probe
+    let dies = vec![
+        faulty_sampler(&problem, &topo, 2, 11, 0, FaultPlan::none()),
+        faulty_sampler(&problem, &topo, 2, 0x1011, 1, FaultPlan::kill_until(1, 40, 60)),
+        faulty_sampler(&problem, &topo, 2, 0x2011, 2, FaultPlan::none()),
+    ];
+    let run = run_sharded_tempering(dies, &problem, &params, 1.0).unwrap();
+
+    assert_eq!(run.membership.len(), 2, "membership: {:?}", run.membership);
+    let (lost, back) = (run.membership[0], run.membership[1]);
+    assert_eq!((lost.die, lost.change), (1, MembershipChange::Lost));
+    assert_eq!((back.die, back.change), (1, MembershipChange::Rejoined));
+    assert!((40..45).contains(&lost.round), "lost at round {}", lost.round);
+    assert!(
+        (55..75).contains(&back.round) && back.round > lost.round,
+        "rejoined at round {}",
+        back.round
+    );
+    // the regrown gang hosts the full target ladder again
+    assert_eq!(run.shards, 3, "the revived die must end in the gang");
+    assert_eq!(run.run.ladder.betas.len(), 6, "ladder must regrow to its target size");
+    assert!(run.run.best_energy.is_finite());
+}
+
+fn gate_params(dies: usize, elastic: bool) -> TrainParams {
+    let cd = CdParams {
+        epochs: 60,
+        lr: 0.15,
+        k_sweeps: 3,
+        samples_per_pattern: 8,
+        ..CdParams::default()
+    };
+    let mut p = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    p.dies = dies;
+    p.elastic = elastic;
+    p.eval_every = 10;
+    p.eval_samples = 1500;
+    p
+}
+
+#[test]
+fn elastic_training_survives_a_permanent_die_loss_at_equal_budget() {
+    // single-die baseline at the same per-epoch sample budget
+    let single = run_training(vec![train_die(41, 8)], &gate_params(1, false)).unwrap();
+    let first = single.stats.first().unwrap();
+    assert!(
+        single.final_kl < first.kl * 0.8,
+        "single-die baseline never converged: {} → {}",
+        first.kl,
+        single.final_kl
+    );
+
+    // 3 dies, die 2 killed for good at its 15th sweep: the survivors
+    // re-tile the patterns and the negative budget, keeping the
+    // per-epoch sample count fixed
+    let chips = vec![
+        faulty_train_die(41, 8, 0, FaultPlan::none()),
+        faulty_train_die(42, 8, 1, FaultPlan::none()),
+        faulty_train_die(43, 8, 2, FaultPlan::kill(2, 15)),
+    ];
+    let multi = run_training(chips, &gate_params(3, true)).unwrap();
+
+    assert!(
+        multi.membership.iter().any(|e| e.die == 2 && e.change == MembershipChange::Lost),
+        "the kill never hit the record: {:?}",
+        multi.membership
+    );
+    assert!(
+        multi.membership.iter().all(|e| e.change != MembershipChange::Rejoined),
+        "a permanently killed die cannot rejoin: {:?}",
+        multi.membership
+    );
+    assert!(multi.final_valid_mass > 0.5, "post-loss valid mass {}", multi.final_valid_mass);
+    assert!(
+        multi.final_kl <= single.final_kl + 0.3,
+        "post-loss KL {} worse than the single-die baseline {}",
+        multi.final_kl,
+        single.final_kl
+    );
+}
+
+#[test]
+fn elastic_training_reuses_a_revived_die() {
+    // die 1 goes down at its 10th sweep; while dead it costs one probe
+    // per epoch, so its 26th call lands well inside the run and it
+    // rejoins with most of the schedule left
+    let chips = vec![
+        faulty_train_die(51, 8, 0, FaultPlan::none()),
+        faulty_train_die(52, 8, 1, FaultPlan::kill_until(1, 10, 26)),
+        faulty_train_die(53, 8, 2, FaultPlan::none()),
+    ];
+    let run = run_training(chips, &gate_params(3, true)).unwrap();
+
+    let lost = run
+        .membership
+        .iter()
+        .position(|e| e.die == 1 && e.change == MembershipChange::Lost)
+        .unwrap_or_else(|| panic!("no loss recorded: {:?}", run.membership));
+    let back = run
+        .membership
+        .iter()
+        .position(|e| e.die == 1 && e.change == MembershipChange::Rejoined)
+        .unwrap_or_else(|| panic!("no rejoin recorded: {:?}", run.membership));
+    assert!(back > lost, "rejoin must follow the loss: {:?}", run.membership);
+    assert!(run.final_valid_mass > 0.5, "valid mass {}", run.final_valid_mass);
+    assert_eq!(run.checkpoint.epochs_done, 60);
+    assert_eq!(run.checkpoint.dies, 3, "the checkpoint records the configured gang size");
+}
+
+/// One elastic 3-die run under `plan`; returns its membership record.
+fn chaos_run(plan: &FaultPlan) -> anyhow::Result<Vec<MembershipEvent>> {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 6),
+            sweeps_per_round: 2,
+            rounds: 80,
+            seed: 0xC4A05,
+            ..Default::default()
+        },
+        shards: 3,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: true,
+    };
+    let dies = vec![
+        faulty_sampler(&problem, &topo, 2, 11, 0, plan.clone()),
+        faulty_sampler(&problem, &topo, 2, 0x1011, 1, plan.clone()),
+        faulty_sampler(&problem, &topo, 2, 0x2011, 2, plan.clone()),
+    ];
+    let run = run_sharded_tempering(dies, &problem, &params, 1.0)?;
+    anyhow::ensure!(run.run.best_energy.is_finite(), "non-finite best energy");
+    anyhow::ensure!(run.shards >= 1, "no survivors reported");
+    Ok(run.membership)
+}
+
+/// Persist the failing plan where CI uploads it, then go red loudly.
+fn fail_chaos(seed: u64, plan: &FaultPlan, why: &str) -> ! {
+    let dir = std::path::Path::new("target");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join("chaos-failing-plan.json");
+    let _ = std::fs::write(&path, plan.to_json().to_string());
+    panic!(
+        "chaos seed {seed} failed ({why}); plan {} written to {} — replay with \
+         PCHIP_TEST_SEED={seed}",
+        plan.to_json().to_string(),
+        path.display()
+    );
+}
+
+#[test]
+fn chaos_matrix_always_recovers() {
+    // CI fans this out over a seed matrix via PCHIP_TEST_SEED; locally
+    // it runs the default block of 6 scripted-random plans. chaos()
+    // schedules at most 2 events over 3 dies, so at least one die
+    // always survives and every plan must complete.
+    let base = test_seed(0xC0FFEE);
+    for k in 0..6u64 {
+        let seed = base.wrapping_add(k);
+        let plan = FaultPlan::chaos(seed, 3, 60);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chaos_run(&plan)));
+        let membership = match outcome {
+            Ok(Ok(membership)) => membership,
+            Ok(Err(err)) => fail_chaos(seed, &plan, &format!("{err:#}")),
+            Err(_) => fail_chaos(seed, &plan, "panicked"),
+        };
+        let killed = plan.events.iter().any(|e| matches!(e.kind, FaultKind::Kill { .. }));
+        if killed && membership.is_empty() {
+            fail_chaos(seed, &plan, "a scripted kill left no membership record");
+        }
+    }
+}
+
+#[test]
+fn served_gang_quarantines_a_dead_worker_and_reuses_it_after_revival() {
+    let mut cfg = Config::default();
+    cfg.server.chips = 3;
+    // worker 1 is down for its sweep calls [3, 12): long enough to die
+    // in job A and stay dead, short enough that job C's probes outlive
+    // the window
+    let engine = EngineKind::SoftwareFaulty { batch: 4, plan: FaultPlan::kill_until(1, 3, 12) };
+    let srv = ChipArrayServer::start(&cfg, engine).unwrap();
+    let topo = Topology::new();
+    let h = srv.register_problem(sk::chimera_pm_j(&topo, 3)).unwrap();
+    let params = |shards, rounds, elastic| ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 2.0, 6),
+            sweeps_per_round: 2,
+            rounds,
+            seed: 0x5EED,
+            ..Default::default()
+        },
+        shards,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic,
+    };
+
+    // job A: worker 1 dies at its 4th sweep and is still dead when the
+    // job ends → the gang shrinks and the router quarantines the seat
+    match srv.run_sharded_tempering(h, &params(3, 6, true)).unwrap() {
+        JobResult::ShardedTempered { shards, membership, .. } => {
+            assert_eq!(shards, 2, "the gang must end shrunk");
+            assert!(
+                membership.iter().any(|e| e.die == 1 && e.change == MembershipChange::Lost),
+                "membership: {membership:?}"
+            );
+        }
+        other => panic!("unexpected result: {other:?}"),
+    }
+
+    // job B: seat assignment skips the quarantined worker
+    match srv.run_sharded_tempering(h, &params(2, 6, false)).unwrap() {
+        JobResult::ShardedTempered { shards, dies, membership, .. } => {
+            assert_eq!(shards, 2);
+            assert_eq!(dies, vec![0, 2], "quarantined worker 1 must be skipped");
+            assert!(membership.is_empty());
+        }
+        other => panic!("unexpected result: {other:?}"),
+    }
+
+    // revive: the next gang seats worker 1 again; its kill window has a
+    // few calls left, so it drops out once more, then answers a probe
+    // and rejoins — the full recovery arc through the served path
+    srv.revive_die(1).unwrap();
+    match srv.run_sharded_tempering(h, &params(3, 40, true)).unwrap() {
+        JobResult::ShardedTempered { shards, dies, membership, .. } => {
+            assert_eq!(dies, vec![0, 1, 2], "a revived worker must be seated");
+            assert!(
+                membership.iter().any(|e| e.die == 1 && e.change == MembershipChange::Lost),
+                "membership: {membership:?}"
+            );
+            assert!(
+                membership.iter().any(|e| e.die == 1 && e.change == MembershipChange::Rejoined),
+                "membership: {membership:?}"
+            );
+            assert_eq!(shards, 3, "the revived worker must end back in the gang");
+        }
+        other => panic!("unexpected result: {other:?}"),
+    }
+}

@@ -1,0 +1,144 @@
+//! Property suite for `TrainCheckpoint` (de)serialization — elastic
+//! recovery leans on checkpoints surviving the trip to disk and back:
+//!
+//! 1. `from_json ∘ to_json` is the identity, bit for bit, including
+//!    the elastic-resume `dies` field and the PCD chains.
+//! 2. Corrupted input — truncations, byte flips, dropped fields, wrong
+//!    types — comes back as `Err`, never a panic.
+
+use pchip::learning::TrainCheckpoint;
+use pchip::rng::HostRng;
+use pchip::util::json::Json;
+use pchip::util::prop;
+
+/// A structurally valid random checkpoint (spin chains are ±1).
+fn arb_checkpoint(rng: &mut HostRng) -> TrainCheckpoint {
+    let spins = 1 + rng.below(6);
+    TrainCheckpoint {
+        gate: format!("gate-{}", rng.below(100)),
+        w: (0..rng.below(8)).map(|_| rng.normal()).collect(),
+        b: (0..rng.below(8)).map(|_| rng.normal()).collect(),
+        epochs_done: rng.below(10_000),
+        dies: rng.below(9),
+        chains: (0..rng.below(3))
+            .map(|_| {
+                (0..1 + rng.below(4)).map(|_| (0..spins).map(|_| rng.spin()).collect()).collect()
+            })
+            .collect(),
+    }
+}
+
+/// A small fixed checkpoint for the hand-targeted corruption cases.
+fn fixed_checkpoint() -> TrainCheckpoint {
+    TrainCheckpoint {
+        gate: "and".to_string(),
+        w: vec![0.25, -1.5, 3.0],
+        b: vec![0.125, -0.75],
+        epochs_done: 42,
+        dies: 3,
+        chains: vec![vec![vec![1, -1, 1], vec![-1, -1, 1]]],
+    }
+}
+
+#[test]
+fn checkpoint_json_round_trips_bit_for_bit() {
+    prop::check("checkpoint round-trip", 200, |rng| {
+        let ck = arb_checkpoint(rng);
+        let text = ck.to_json().to_string();
+        let back = TrainCheckpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.gate, ck.gate);
+        assert_eq!(back.epochs_done, ck.epochs_done);
+        assert_eq!(back.dies, ck.dies, "elastic-resume die count must survive the trip");
+        assert_eq!(back.chains, ck.chains);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.w), bits(&ck.w), "shadow weights must round-trip bit for bit");
+        assert_eq!(bits(&back.b), bits(&ck.b), "shadow biases must round-trip bit for bit");
+    });
+}
+
+#[test]
+fn truncated_checkpoints_error_instead_of_panicking() {
+    prop::check("checkpoint truncation", 200, |rng| {
+        let text = arb_checkpoint(rng).to_json().to_string();
+        let cut = rng.below(text.len());
+        // to_json emits ASCII, so any byte cut is a char boundary; a
+        // strict prefix is never complete JSON
+        assert!(
+            Json::parse(&text[..cut]).is_err(),
+            "truncation at byte {cut}/{} parsed as complete JSON",
+            text.len()
+        );
+    });
+}
+
+#[test]
+fn corrupted_checkpoints_never_panic() {
+    prop::check("checkpoint byte corruption", 300, |rng| {
+        let text = arb_checkpoint(rng).to_json().to_string();
+        let mut bytes = text.into_bytes();
+        let at = rng.below(bytes.len());
+        bytes[at] = (32 + rng.below(95)) as u8; // printable ASCII
+        let corrupted = String::from_utf8(bytes).unwrap();
+        // a flipped byte may still parse (e.g. a changed digit) — the
+        // contract is Err-or-a-valid-value, never a panic (prop::check
+        // counts a panic as a failure)
+        if let Ok(v) = Json::parse(&corrupted) {
+            let _ = TrainCheckpoint::from_json(&v);
+        }
+    });
+}
+
+#[test]
+fn missing_required_fields_are_rejected_by_name() {
+    let text = fixed_checkpoint().to_json().to_string();
+    for key in ["gate", "w", "b", "epochs_done", "chains"] {
+        let Json::Obj(mut m) = Json::parse(&text).unwrap() else {
+            panic!("checkpoint JSON is an object")
+        };
+        m.remove(key);
+        let err = TrainCheckpoint::from_json(&Json::Obj(m))
+            .expect_err("parsing without a required field must fail");
+        assert!(format!("{err:#}").contains(key), "diagnostic should name `{key}`: {err:#}");
+    }
+}
+
+#[test]
+fn legacy_checkpoints_without_dies_default_to_zero() {
+    // checkpoints written before the elastic-resume field existed
+    let Json::Obj(mut m) = Json::parse(&fixed_checkpoint().to_json().to_string()).unwrap() else {
+        panic!("checkpoint JSON is an object")
+    };
+    m.remove("dies");
+    let back = TrainCheckpoint::from_json(&Json::Obj(m)).unwrap();
+    assert_eq!(back.dies, 0);
+    assert_eq!(back.epochs_done, 42);
+}
+
+#[test]
+fn non_spin_chain_values_are_rejected() {
+    let mut ck = fixed_checkpoint();
+    ck.chains[0][1][2] = 2; // not ±1
+    let err = TrainCheckpoint::from_json(&ck.to_json()).expect_err("a 2-valued spin must fail");
+    assert!(format!("{err:#}").contains("±1"), "diagnostic should flag the spin: {err:#}");
+}
+
+#[test]
+fn wrong_field_types_are_rejected() {
+    for (key, bad) in [
+        ("gate", Json::Num(3.0)),
+        ("w", Json::Str("not an array".into())),
+        ("epochs_done", Json::Num(-1.0)),
+        ("epochs_done", Json::Num(1.5)),
+        ("chains", Json::Bool(true)),
+    ] {
+        let Json::Obj(mut m) = Json::parse(&fixed_checkpoint().to_json().to_string()).unwrap()
+        else {
+            panic!("checkpoint JSON is an object")
+        };
+        m.insert(key.to_string(), bad);
+        assert!(
+            TrainCheckpoint::from_json(&Json::Obj(m)).is_err(),
+            "a mistyped `{key}` must fail to parse"
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! End-to-end CLI contract for die failure: a per-die fault must reach
+//! the operator as a nonzero exit code plus per-die stderr diagnostics
+//! (never a silently-degraded success), and `--elastic` must turn the
+//! same fault into a surviving run with a membership log on stderr.
+//!
+//! Each test drives the real `pchip` binary (`CARGO_BIN_EXE_pchip`)
+//! against a scripted `FaultPlan` written to a temp file.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use pchip::util::fault::FaultPlan;
+
+fn pchip() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_pchip"))
+}
+
+/// Write `plan` where `--fault-plan` can read it back.
+fn write_plan(name: &str, plan: &FaultPlan) -> PathBuf {
+    let path = std::env::temp_dir().join(format!("pchip-{name}-{}.json", std::process::id()));
+    std::fs::write(&path, plan.to_json().to_string()).unwrap();
+    path
+}
+
+#[test]
+fn train_fails_loudly_when_a_die_dies_without_elastic() {
+    let plan = write_plan("train-kill", &FaultPlan::kill(1, 2));
+    let out = pchip()
+        .args(["train", "--gate", "and", "--dies", "2", "--epochs", "3"])
+        .args(["--eval-every", "2", "--eval-samples", "200"])
+        .arg("--fault-plan")
+        .arg(&plan)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a dead die must fail the command");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("training failed"), "stderr: {err}");
+    // the per-die diagnostic names the dead die
+    assert!(err.contains("injected fault") && err.contains("die 1"), "stderr: {err}");
+}
+
+#[test]
+fn elastic_train_survives_the_same_fault_and_logs_membership() {
+    let plan = write_plan("train-elastic-kill", &FaultPlan::kill(2, 8));
+    let out = pchip()
+        .args(["train", "--gate", "and", "--dies", "3", "--epochs", "8", "--elastic"])
+        .args(["--eval-every", "4", "--eval-samples", "200"])
+        .arg("--fault-plan")
+        .arg(&plan)
+        .output()
+        .unwrap();
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "elastic training must survive a die loss; stderr: {err}");
+    assert!(
+        err.contains("membership:") && err.contains("die 2") && err.contains("Lost"),
+        "membership log missing from stderr: {err}"
+    );
+}
+
+#[test]
+fn fanout_reports_each_failing_die_and_exits_nonzero() {
+    let plan = write_plan("fanout-kill", &FaultPlan::kill(1, 2));
+    let out = pchip()
+        .args(["temper", "--fanout", "2", "--replicas", "4"])
+        .args(["--rounds", "6", "--sweeps-per-round", "2"])
+        .arg("--fault-plan")
+        .arg(&plan)
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a failed fanout run must fail the command");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("die failure:"), "per-die diagnostic missing: {err}");
+    assert!(err.contains("1 of 2 tempering runs failed"), "summary missing: {err}");
+}
+
+#[test]
+fn elastic_sharded_temper_survives_the_fault_plan() {
+    let plan = write_plan("temper-elastic-kill", &FaultPlan::kill(1, 5));
+    let out = pchip()
+        .args(["temper", "--replicas", "4", "--shards", "2", "--elastic"])
+        .args(["--rounds", "30", "--sweeps-per-round", "2"])
+        .arg("--fault-plan")
+        .arg(&plan)
+        .output()
+        .unwrap();
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "an elastic gang must survive a die loss; stderr: {err}");
+    assert!(
+        err.contains("membership:") && err.contains("die 1") && err.contains("Lost"),
+        "membership log missing from stderr: {err}"
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("sharded under fault plan"), "stdout: {stdout}");
+}

@@ -1,0 +1,125 @@
+//! Shared scaffolding for the integration suites: ideal-die sampler
+//! builders, the exactly-enumerable test instance, trainable-die
+//! constructors, and the fault-injection helpers that replaced the
+//! per-suite ad-hoc stalling samplers. Faults are scripted in *logical*
+//! time (`pchip::util::fault`), so no suite sleeps real wall-clock time
+//! to simulate a wedged or skewed die anymore.
+#![allow(dead_code)]
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::chimera::Topology;
+use pchip::config::MismatchConfig;
+use pchip::learning::Hw;
+use pchip::problems::IsingProblem;
+use pchip::sampler::{Sampler, SoftwareSampler};
+use pchip::util::fault::{FaultEvent, FaultKind, FaultPlan, FaultyChip};
+
+/// Load `problem` onto an ideal (mismatch-free) die so the lowered
+/// model is exactly the logical one — same construction as
+/// `tempering_stats.rs`.
+pub fn loaded_sampler(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+) -> SoftwareSampler {
+    let (j, en, h, _) = problem.to_codes(topo).unwrap();
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    w.j_codes = j;
+    w.enables = en;
+    w.h_codes = h;
+    let folded = Personality::ideal(topo).fold(topo, &w);
+    let mut s = SoftwareSampler::new(batch, seed);
+    s.load(&folded);
+    s
+}
+
+/// [`loaded_sampler`] for ±1 instances, asserting the lowering is
+/// lossless (`scale == 1.0`) so bit-exactness comparisons are honest.
+pub fn loaded_sampler_lossless(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+) -> SoftwareSampler {
+    let (_, _, _, scale) = problem.to_codes(topo).unwrap();
+    assert_eq!(scale, 1.0, "±1 coefficients must lower losslessly");
+    loaded_sampler(problem, topo, batch, seed)
+}
+
+/// [`loaded_sampler`] wrapped as die `die` of a [`FaultPlan`].
+pub fn faulty_sampler(
+    problem: &IsingProblem,
+    topo: &Topology,
+    batch: usize,
+    seed: u64,
+    die: usize,
+    plan: FaultPlan,
+) -> FaultyChip<SoftwareSampler> {
+    FaultyChip::new(loaded_sampler(problem, topo, batch, seed), die, plan)
+}
+
+/// A trainable die exactly as the legacy single-die experiments build
+/// it: sampled personality and software engine, both seeded `seed`.
+pub fn train_die(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
+    Hw::new(SoftwareSampler::new(batch, seed), personality)
+}
+
+/// [`train_die`] with its engine wrapped as die `die` of a
+/// [`FaultPlan`].
+pub fn faulty_train_die(
+    seed: u64,
+    batch: usize,
+    die: usize,
+    plan: FaultPlan,
+) -> Hw<FaultyChip<SoftwareSampler>> {
+    let topo = Topology::new();
+    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
+    Hw::new(FaultyChip::new(SoftwareSampler::new(batch, seed), die, plan), personality)
+}
+
+/// A plan that delays each of `die`'s first `calls` `sweeps()` calls by
+/// `ms` milliseconds — pure timing skew, no failure.
+pub fn delay_every(die: usize, calls: usize, ms: u64) -> FaultPlan {
+    FaultPlan::new(
+        (0..calls).map(|round| FaultEvent { die, round, kind: FaultKind::Delay { ms } }).collect(),
+    )
+}
+
+/// Frustrated ±1 problem inside the first Chimera cell with two ±1
+/// biases (exactly-enumerable; quantization-lossless) — the instance
+/// `tempering_stats.rs` validates the single-die engine on.
+pub fn small_exact_problem(topo: &Topology) -> IsingProblem {
+    let cell_edges: Vec<(usize, usize)> =
+        topo.edges.iter().copied().filter(|&(i, j)| i < 8 && j < 8).collect();
+    assert!(cell_edges.len() >= 5, "expected a K4,4 cell at spins 0..8");
+    let mut p = IsingProblem::new("shared-exact");
+    for (k, &(i, j)) in cell_edges.iter().take(5).enumerate() {
+        p.couplings.push((i, j, if k % 2 == 0 { 1.0 } else { -1.0 }));
+    }
+    let (a, b) = cell_edges[0];
+    p.h[a] = 1.0;
+    p.h[b] = -1.0;
+    p
+}
+
+/// The suite seed: `PCHIP_TEST_SEED` (decimal or `0x…` hex) when set,
+/// else `default`. Always printed, so a red seeded case reports how to
+/// replay itself verbatim (`PCHIP_TEST_SEED=… cargo test …`).
+pub fn test_seed(default: u64) -> u64 {
+    let seed = match std::env::var("PCHIP_TEST_SEED") {
+        Ok(s) => {
+            let t = s.trim().to_string();
+            let parsed = match t.strip_prefix("0x") {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => t.parse(),
+            };
+            parsed.unwrap_or_else(|_| panic!("PCHIP_TEST_SEED must be a u64, got `{t}`"))
+        }
+        Err(_) => default,
+    };
+    eprintln!("test seed: {seed} (replay with PCHIP_TEST_SEED={seed})");
+    seed
+}

@@ -151,6 +151,7 @@ fn sharded_gang_defers_behind_live_load_without_deadlock() {
         shards: 2,
         barrier_timeout: std::time::Duration::from_secs(30),
         pipeline: false,
+        elastic: false,
     };
     let gang = srv
         .submit(JobRequest::ShardedTempering { problem: hs[0], params: gang_params })

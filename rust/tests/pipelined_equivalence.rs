@@ -25,41 +25,23 @@
 //! 4. **Liveness** — a stalled shard still expires into a diagnostic,
 //!    never a deadlock, under the pipelined schedule.
 
+mod common;
+
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-use pchip::analog::{Personality, ProgrammedWeights};
+use common::{delay_every, faulty_sampler, loaded_sampler, train_die};
 use pchip::annealing::{
     temper, temper_pipelined, temper_pipelined_observed, BetaLadder, TemperingParams,
 };
 use pchip::chimera::{full_adder_layout, Topology};
-use pchip::config::MismatchConfig;
 use pchip::coordinator::{
     run_sharded_tempering, run_sharded_tempering_observed, ShardedTemperingParams,
 };
 use pchip::learning::{dataset, run_training_observed, CdParams, EpochStats, Hw, TrainParams};
-use pchip::problems::{sk, EnergyLedger, IsingProblem};
+use pchip::problems::{sk, EnergyLedger};
 use pchip::rng::HostRng;
 use pchip::sampler::{Sampler, SoftwareSampler};
-
-/// Load `problem` onto an ideal (mismatch-free) die — same helper as
-/// the sharded suite.
-fn loaded_sampler(
-    problem: &IsingProblem,
-    topo: &Topology,
-    batch: usize,
-    seed: u64,
-) -> SoftwareSampler {
-    let (j, en, h, _) = problem.to_codes(topo).unwrap();
-    let mut w = ProgrammedWeights::zeros(topo.edges.len());
-    w.j_codes = j;
-    w.enables = en;
-    w.h_codes = h;
-    let folded = Personality::ideal(topo).fold(topo, &w);
-    let mut s = SoftwareSampler::new(batch, seed);
-    s.load(&folded);
-    s
-}
+use pchip::util::fault::FaultPlan;
 
 /// Property: across random interleavings of sweeps, clamp writes and
 /// state restores, the tracked incremental energies equal the full
@@ -138,6 +120,7 @@ fn one_shard_pipelined_run_is_bit_identical_to_temper_pipelined() {
         shards: 1,
         barrier_timeout: Duration::from_secs(60),
         pipeline: true,
+        elastic: false,
     };
     let mut sh_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
     let sharded = run_sharded_tempering_observed(
@@ -181,6 +164,7 @@ fn multi_shard_pipelined_run_is_deterministic_under_a_fixed_seed() {
         shards: 4,
         barrier_timeout: Duration::from_secs(60),
         pipeline: true,
+        elastic: false,
     };
     let dies = || -> Vec<SoftwareSampler> {
         (0..4).map(|s| loaded_sampler(&problem, &topo, 2, 11 + 0x1000 * s as u64)).collect()
@@ -202,7 +186,8 @@ fn multi_shard_pipelined_run_is_deterministic_under_a_fixed_seed() {
 /// A fast shard races one full phase ahead of a slow one: the round-
 /// tagged protocol must park the early readback in the coordinator's
 /// stash instead of letting it be consumed as the slow shard's current
-/// round — timing skew must not change a single bit of the result.
+/// round — timing skew (injected per-call delays on die 1, no real
+/// 30 ms sleeps) must not change a single bit of the result.
 #[test]
 fn pipelined_run_is_timing_invariant_under_shard_skew() {
     let topo = Topology::new();
@@ -212,19 +197,17 @@ fn pipelined_run_is_timing_invariant_under_shard_skew() {
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
         pipeline: true,
+        elastic: false,
     };
-    let run = |stall: Duration| {
+    let run = |plan: FaultPlan| {
         let dies = vec![
-            StallingSampler {
-                inner: loaded_sampler(&problem, &topo, 4, 21),
-                stall: Duration::ZERO,
-            },
-            StallingSampler { inner: loaded_sampler(&problem, &topo, 4, 0x1021), stall },
+            faulty_sampler(&problem, &topo, 4, 21, 0, FaultPlan::none()),
+            faulty_sampler(&problem, &topo, 4, 0x1021, 1, plan),
         ];
         run_sharded_tempering(dies, &problem, &params, 1.0).unwrap()
     };
-    let even = run(Duration::ZERO);
-    let skewed = run(Duration::from_millis(30));
+    let even = run(FaultPlan::none());
+    let skewed = run(delay_every(1, 32, 2));
     assert_eq!(even.run.best_energy.to_bits(), skewed.run.best_energy.to_bits());
     assert_eq!(even.run.best_state, skewed.run.best_state);
     assert_eq!(even.run.trace.rows, skewed.run.trace.rows);
@@ -275,12 +258,6 @@ fn adder_params(dies: usize, pipeline: bool) -> TrainParams {
     p.eval_samples = 900;
     p.pipeline = pipeline;
     p
-}
-
-fn train_die(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
-    let topo = Topology::new();
-    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
-    Hw::new(SoftwareSampler::new(batch, seed), personality)
 }
 
 /// Pipelined 3-die training is the SAME computation as the barrier
@@ -372,41 +349,6 @@ fn pipelined_pcd_tempered_training_matches_barrier_path() {
     assert_eq!(piped.checkpoint.chains.len(), 1, "one PCD die checkpoints its chains");
 }
 
-/// A sampler whose sweep phase hangs — the pipelined schedule must
-/// still expire into a diagnostic, never a deadlock.
-struct StallingSampler {
-    inner: SoftwareSampler,
-    stall: Duration,
-}
-
-impl Sampler for StallingSampler {
-    fn load(&mut self, folded: &pchip::analog::Folded) {
-        self.inner.load(folded);
-    }
-    fn set_beta(&mut self, beta: f32) {
-        self.inner.set_beta(beta);
-    }
-    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
-        self.inner.set_betas(betas)
-    }
-    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
-        self.inner.set_clamps(clamps);
-    }
-    fn batch(&self) -> usize {
-        self.inner.batch()
-    }
-    fn sweeps(&mut self, n: usize) -> Result<()> {
-        std::thread::sleep(self.stall);
-        self.inner.sweeps(n)
-    }
-    fn states(&self) -> Vec<Vec<i8>> {
-        self.inner.states()
-    }
-    fn randomize(&mut self, seed: u64) {
-        self.inner.randomize(seed);
-    }
-}
-
 #[test]
 fn pipelined_stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
     let topo = Topology::new();
@@ -421,15 +363,12 @@ fn pipelined_stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
         shards: 2,
         barrier_timeout: Duration::from_millis(250),
         pipeline: true,
+        elastic: false,
     };
-    let healthy = StallingSampler {
-        inner: loaded_sampler(&problem, &topo, 2, 21),
-        stall: Duration::ZERO,
-    };
-    let stalled = StallingSampler {
-        inner: loaded_sampler(&problem, &topo, 2, 0x1021),
-        stall: Duration::from_secs(30),
-    };
+    // die 1's first sweep phase hangs (injected stall) — the pipelined
+    // schedule must still expire into a diagnostic, never a deadlock
+    let healthy = faulty_sampler(&problem, &topo, 2, 21, 0, FaultPlan::none());
+    let stalled = faulty_sampler(&problem, &topo, 2, 0x1021, 1, FaultPlan::stall(1, 0));
     let t0 = Instant::now();
     let err = run_sharded_tempering(vec![healthy, stalled], &problem, &params, 1.0)
         .expect_err("a stalled shard must fail the pipelined run");

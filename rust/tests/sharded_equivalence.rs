@@ -12,17 +12,19 @@
 //!    instance, the coldest rung of a cross-die run must still sample
 //!    its exact Boltzmann marginals (same statistical bands as the
 //!    single-die suite in `tempering_stats.rs`).
-//! 3. **Protocol liveness** — a stalled worker expires the swap
-//!    barrier into a diagnostic error (never a deadlock), and
+//! 3. **Protocol liveness** — a stalled worker (an injected
+//!    `FaultPlan` stall, not a real sleep) expires the swap barrier
+//!    into a diagnostic error (never a deadlock), and
 //!    `JobTicket::try_wait` stays non-blocking while a sharded job is
 //!    in flight.
 //! 4. **Fan-out honesty** — `run_tempering_fanout` reports per-die
 //!    failures instead of silently returning the best surviving die.
 
+mod common;
+
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-use pchip::analog::{Personality, ProgrammedWeights};
+use common::{faulty_sampler, loaded_sampler_lossless as loaded_sampler, small_exact_problem};
 use pchip::annealing::{temper_observed, BetaLadder, TemperingParams};
 use pchip::chimera::Topology;
 use pchip::config::Config;
@@ -30,46 +32,8 @@ use pchip::coordinator::{
     run_sharded_tempering, run_sharded_tempering_observed, ChipArrayServer, EngineKind,
     JobRequest, JobResult, ShardedTemperingParams,
 };
-use pchip::problems::{exact_boltzmann, sk, IsingProblem};
-use pchip::sampler::{Sampler, SoftwareSampler};
-
-/// Load `problem` onto an ideal (mismatch-free) die so the lowered
-/// model is exactly the logical one — same helper as
-/// `tempering_stats.rs`.
-fn loaded_sampler(
-    problem: &IsingProblem,
-    topo: &Topology,
-    batch: usize,
-    seed: u64,
-) -> SoftwareSampler {
-    let (j, en, h, scale) = problem.to_codes(topo).unwrap();
-    assert_eq!(scale, 1.0, "±1 coefficients must lower losslessly");
-    let mut w = ProgrammedWeights::zeros(topo.edges.len());
-    w.j_codes = j;
-    w.enables = en;
-    w.h_codes = h;
-    let folded = Personality::ideal(topo).fold(topo, &w);
-    let mut s = SoftwareSampler::new(batch, seed);
-    s.load(&folded);
-    s
-}
-
-/// Frustrated ±1 problem inside the first Chimera cell with two ±1
-/// biases (exactly-enumerable; quantization-lossless) — the instance
-/// `tempering_stats.rs` validates the single-die engine on.
-fn small_exact_problem(topo: &Topology) -> IsingProblem {
-    let cell_edges: Vec<(usize, usize)> =
-        topo.edges.iter().copied().filter(|&(i, j)| i < 8 && j < 8).collect();
-    assert!(cell_edges.len() >= 5, "expected a K4,4 cell at spins 0..8");
-    let mut p = IsingProblem::new("sharded-exact");
-    for (k, &(i, j)) in cell_edges.iter().take(5).enumerate() {
-        p.couplings.push((i, j, if k % 2 == 0 { 1.0 } else { -1.0 }));
-    }
-    let (a, b) = cell_edges[0];
-    p.h[a] = 1.0;
-    p.h[b] = -1.0;
-    p
-}
+use pchip::problems::{exact_boltzmann, sk};
+use pchip::util::fault::FaultPlan;
 
 #[test]
 fn one_shard_run_is_bit_identical_to_temper() {
@@ -100,6 +64,7 @@ fn one_shard_run_is_bit_identical_to_temper() {
         shards: 1,
         barrier_timeout: Duration::from_secs(60),
         pipeline: false,
+        elastic: false,
     };
     let mut sh_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
     let sharded = run_sharded_tempering_observed(
@@ -166,6 +131,7 @@ fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
         pipeline: false,
+        elastic: false,
     };
     let dies = vec![
         loaded_sampler(&problem, &topo, 2, 11),
@@ -244,41 +210,6 @@ fn sharded_coldest_rung_marginals_match_exact_boltzmann() {
     );
 }
 
-/// A sampler whose sweep phase hangs — the failure the barrier timeout
-/// exists for (a wedged die, a dead worker, an overloaded host).
-struct StallingSampler {
-    inner: SoftwareSampler,
-    stall: Duration,
-}
-
-impl Sampler for StallingSampler {
-    fn load(&mut self, folded: &pchip::analog::Folded) {
-        self.inner.load(folded);
-    }
-    fn set_beta(&mut self, beta: f32) {
-        self.inner.set_beta(beta);
-    }
-    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
-        self.inner.set_betas(betas)
-    }
-    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
-        self.inner.set_clamps(clamps);
-    }
-    fn batch(&self) -> usize {
-        self.inner.batch()
-    }
-    fn sweeps(&mut self, n: usize) -> Result<()> {
-        std::thread::sleep(self.stall);
-        self.inner.sweeps(n)
-    }
-    fn states(&self) -> Vec<Vec<i8>> {
-        self.inner.states()
-    }
-    fn randomize(&mut self, seed: u64) {
-        self.inner.randomize(seed);
-    }
-}
-
 #[test]
 fn stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
     let topo = Topology::new();
@@ -293,15 +224,13 @@ fn stalled_worker_times_out_with_a_diagnostic_not_a_deadlock() {
         shards: 2,
         barrier_timeout: Duration::from_millis(250),
         pipeline: false,
+        elastic: false,
     };
-    let healthy = StallingSampler {
-        inner: loaded_sampler(&problem, &topo, 2, 21),
-        stall: Duration::ZERO,
-    };
-    let stalled = StallingSampler {
-        inner: loaded_sampler(&problem, &topo, 2, 0x1021),
-        stall: Duration::from_secs(30),
-    };
+    // die 1 goes silent on its first sweep phase — the injected stall
+    // the barrier timeout exists for (a wedged die, a dead worker, an
+    // overloaded host)
+    let healthy = faulty_sampler(&problem, &topo, 2, 21, 0, FaultPlan::none());
+    let stalled = faulty_sampler(&problem, &topo, 2, 0x1021, 1, FaultPlan::stall(1, 0));
     let t0 = Instant::now();
     let err = run_sharded_tempering(vec![healthy, stalled], &problem, &params, 1.0)
         .expect_err("a stalled shard must fail the run");
@@ -332,6 +261,7 @@ fn try_wait_never_blocks_during_a_sharded_run() {
         shards: 2,
         barrier_timeout: Duration::from_secs(60),
         pipeline: false,
+        elastic: false,
     };
     let ticket = srv.submit(JobRequest::ShardedTempering { problem: h, params }).unwrap();
     let deadline = Instant::now() + Duration::from_secs(120);

@@ -16,27 +16,23 @@
 //! 3. **PCD + tempered negative** — the persistent-chain die keeps its
 //!    chains across epochs, checkpoints them, and a resumed run
 //!    continues the lr schedule.
-//! 4. **Protocol liveness** — a stalled die expires the gradient
-//!    barrier into a diagnostic error, never a deadlock.
+//! 4. **Protocol liveness** — a stalled die (an injected `FaultPlan`
+//!    stall, not a real sleep) expires the gradient barrier into a
+//!    diagnostic error, never a deadlock.
+
+mod common;
 
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use common::{faulty_train_die, train_die};
 use pchip::analog::Personality;
 use pchip::chimera::{and_gate_layout, full_adder_layout, Topology};
-use pchip::config::MismatchConfig;
 use pchip::learning::{
     dataset, run_training, run_training_observed, run_training_resumed, CdParams, CdTrainer,
-    EpochStats, Hw, TemperedNegative, TrainParams, TrainableChip,
+    EpochStats, Hw, TemperedNegative, TrainParams,
 };
 use pchip::sampler::{Sampler, SoftwareSampler};
-
-/// A die exactly as the legacy single-die experiments build it.
-fn die(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
-    let topo = Topology::new();
-    let personality = Personality::sample(&topo, seed, MismatchConfig::default());
-    Hw::new(SoftwareSampler::new(batch, seed), personality)
-}
+use pchip::util::fault::FaultPlan;
 
 fn quick_cd() -> CdParams {
     CdParams {
@@ -53,7 +49,7 @@ fn one_die_service_run_is_bit_identical_to_cd_trainer() {
     let cd = quick_cd();
 
     // legacy synchronous reference
-    let mut chip = die(7, 8);
+    let mut chip = train_die(7, 8);
     let mut trainer = CdTrainer::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
     let legacy = trainer.train(&mut chip, 4, 600).unwrap();
 
@@ -62,7 +58,7 @@ fn one_die_service_run_is_bit_identical_to_cd_trainer() {
     params.eval_every = 4;
     params.eval_samples = 600;
     let mut streamed: Vec<EpochStats> = Vec::new();
-    let run = run_training_observed(vec![die(7, 8)], &params, None, cd.epochs, |s| {
+    let run = run_training_observed(vec![train_die(7, 8)], &params, None, cd.epochs, |s| {
         streamed.push(s.clone());
     })
     .unwrap();
@@ -169,11 +165,11 @@ fn adder_params(dies: usize) -> TrainParams {
 fn multi_die_adder_matches_single_die_kl_at_equal_budget() {
     // single-die baseline: all 8 patterns + the full negative budget on
     // die 0
-    let single = run_training(vec![die(11, 8)], &adder_params(1)).unwrap();
+    let single = run_training(vec![train_die(11, 8)], &adder_params(1)).unwrap();
 
     // 3 dies: pattern shards 3/3/2, negative budget split 6/5/5 — the
     // per-epoch sample count is identical by construction
-    let chips = vec![die(11, 8), die(12, 8), die(13, 8)];
+    let chips = vec![train_die(11, 8), train_die(12, 8), train_die(13, 8)];
     let multi = run_training(chips, &adder_params(3)).unwrap();
 
     // both runs actually learned the adder
@@ -196,7 +192,7 @@ fn multi_die_adder_matches_single_die_kl_at_equal_budget() {
     );
 
     // determinism: an identical 3-die run reproduces every stat bit
-    let chips = vec![die(11, 8), die(12, 8), die(13, 8)];
+    let chips = vec![train_die(11, 8), train_die(12, 8), train_die(13, 8)];
     let again = run_training(chips, &adder_params(3)).unwrap();
     assert_eq!(again.stats.len(), multi.stats.len());
     for (a, b) in again.stats.iter().zip(&multi.stats) {
@@ -226,7 +222,7 @@ fn pcd_tempered_run_learns_checkpoints_and_resumes() {
     params.eval_every = 10;
     params.eval_samples = 1500;
 
-    let run = run_training(vec![die(21, 8), die(22, 8)], &params).unwrap();
+    let run = run_training(vec![train_die(21, 8), train_die(22, 8)], &params).unwrap();
     assert!(
         run.final_valid_mass > 0.55,
         "PCD + tempered run did not learn: valid mass {}",
@@ -243,7 +239,7 @@ fn pcd_tempered_run_learns_checkpoints_and_resumes() {
 
     // resume on a fresh array: chains restored, lr schedule continues
     let resumed =
-        run_training_resumed(vec![die(21, 8), die(22, 8)], &params, &run.checkpoint, 6)
+        run_training_resumed(vec![train_die(21, 8), train_die(22, 8)], &params, &run.checkpoint, 6)
             .unwrap();
     assert_eq!(resumed.checkpoint.epochs_done, 56);
     assert!(resumed.stats.iter().all(|s| (50..56).contains(&s.epoch)), "{:?}", resumed.stats);
@@ -255,56 +251,17 @@ fn pcd_tempered_run_learns_checkpoints_and_resumes() {
     );
 }
 
-/// A trainable die whose sweep phase hangs — the failure the barrier
-/// timeout exists for (a wedged die, a dead worker, an overloaded
-/// host).
-struct StallingDie {
-    inner: Hw<SoftwareSampler>,
-    stall: Duration,
-}
-
-impl Sampler for StallingDie {
-    fn load(&mut self, folded: &pchip::analog::Folded) {
-        self.inner.load(folded);
-    }
-    fn set_beta(&mut self, beta: f32) {
-        self.inner.set_beta(beta);
-    }
-    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
-        self.inner.set_betas(betas)
-    }
-    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
-        self.inner.set_clamps(clamps);
-    }
-    fn batch(&self) -> usize {
-        self.inner.batch()
-    }
-    fn sweeps(&mut self, n: usize) -> Result<()> {
-        std::thread::sleep(self.stall);
-        self.inner.sweeps(n)
-    }
-    fn states(&self) -> Vec<Vec<i8>> {
-        self.inner.states()
-    }
-    fn randomize(&mut self, seed: u64) {
-        self.inner.randomize(seed);
-    }
-}
-
-impl TrainableChip for StallingDie {
-    fn program_codes(&mut self, w: &pchip::analog::ProgrammedWeights) -> Result<()> {
-        self.inner.program_codes(w)
-    }
-}
-
 #[test]
 fn stalled_die_times_out_with_a_diagnostic_not_a_deadlock() {
     let cd = CdParams { epochs: 4, k_sweeps: 2, samples_per_pattern: 4, ..CdParams::default() };
     let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
     params.dies = 2;
     params.barrier_timeout = Duration::from_millis(250);
-    let healthy = StallingDie { inner: die(31, 8), stall: Duration::ZERO };
-    let stalled = StallingDie { inner: die(32, 8), stall: Duration::from_secs(30) };
+    // die 1's first sweep phase hangs (injected stall) — the failure
+    // the barrier timeout exists for (a wedged die, a dead worker, an
+    // overloaded host)
+    let healthy = faulty_train_die(31, 8, 0, FaultPlan::none());
+    let stalled = faulty_train_die(32, 8, 1, FaultPlan::stall(1, 0));
     let t0 = Instant::now();
     let err = run_training(vec![healthy, stalled], &params)
         .expect_err("a stalled die must fail the run");
