@@ -1,6 +1,11 @@
 //! Bench: the sampling hot paths (the §Perf instrument).
 //!
 //! * software CSR engine: flips/s vs batch size, LFSR vs host noise;
+//! * tiny-workload guard: batch 4 × 8 sweeps, the shape that used to
+//!   spawn a thread per chain (regression arm for the pool heuristic);
+//! * packed code-domain kernel: flips/s vs block count, plus the
+//!   `packed_speedup_batch32` ratio the CI perf gate enforces (≥ 5×
+//!   over the best scalar arm at batch ≥ 32);
 //! * per-round energy readback: incremental ΔE ledger (the pipeline
 //!   path) vs the full O(N·deg) rescan (the serial path);
 //! * cycle-level chip: flips/s (the dense reference pipeline);
@@ -15,7 +20,7 @@ use pchip::chimera::{Topology, N_SPINS};
 use pchip::config::{repo_artifacts_dir, MismatchConfig};
 use pchip::problems::{sk, EnergyLedger};
 use pchip::rng::HostRng;
-use pchip::sampler::{NoiseSource, Sampler, SoftwareSampler, XlaSampler};
+use pchip::sampler::{NoiseSource, PackedSampler, Sampler, SoftwareSampler, XlaSampler, LANES};
 use pchip::util::bench::{quick, write_bench_json, write_csv, Bench};
 use pchip::util::json::{obj, Json};
 
@@ -41,7 +46,8 @@ fn main() -> anyhow::Result<()> {
 
     // software engine vs batch
     let mut rows = Vec::new();
-    for batch in [1usize, 4, 8, 32] {
+    let mut scalar_best = 0.0f64;
+    for batch in [1usize, 4, 8, 32, 64] {
         let mut s = SoftwareSampler::new(batch, 1);
         s.load(&folded);
         s.set_beta(1.5);
@@ -50,14 +56,63 @@ fn main() -> anyhow::Result<()> {
             &format!("software_lfsr(batch={batch}, {sweeps_per_iter} sweeps)"),
             || s.sweeps(sweeps_per_iter).unwrap(),
         );
-        rows.push(vec![batch as f64, m.throughput.unwrap().0]);
+        let fps = m.throughput.unwrap().0;
+        if batch >= 32 {
+            scalar_best = scalar_best.max(fps);
+        }
+        rows.push(vec![batch as f64, fps]);
         arms.push(obj(vec![
             ("arm", Json::from("software_lfsr")),
             ("batch", Json::from(batch)),
-            ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+            ("flips_per_sec", Json::from(fps)),
         ]));
     }
     write_csv("hotpath_software_batch", "batch,flips_per_sec", &rows)?;
+
+    // tiny-workload guard: batch 4 × 8 sweeps cleared the old
+    // spawn-per-chain threshold (32 chain·sweeps) and paid one OS
+    // thread per chain; under the pool heuristic it must run serially.
+    {
+        let mut s = SoftwareSampler::new(4, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        let tiny_sweeps = 8usize;
+        let flips = (tiny_sweeps * 4 * N_SPINS) as f64;
+        let m = Bench::new(warmup, iters * 4)
+            .throughput(flips, "flips")
+            .run("software_tiny(batch=4, 8 sweeps)", || s.sweeps(tiny_sweeps).unwrap());
+        arms.push(obj(vec![
+            ("arm", Json::from("software_tiny")),
+            ("batch", Json::from(4usize)),
+            ("flips_per_sec", Json::from(m.throughput.unwrap().0)),
+        ]));
+    }
+
+    // packed code-domain kernel vs block count (batch = blocks × 64)
+    let mut packed_best = 0.0f64;
+    let mut rows = Vec::new();
+    for blocks in [1usize, 4] {
+        let mut s = PackedSampler::new(blocks, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        let batch = blocks * LANES;
+        let flips = (sweeps_per_iter * batch * N_SPINS) as f64;
+        let m = Bench::new(warmup, iters).throughput(flips, "flips").run(
+            &format!("packed(blocks={blocks}, batch={batch}, {sweeps_per_iter} sweeps)"),
+            || s.sweeps(sweeps_per_iter).unwrap(),
+        );
+        let fps = m.throughput.unwrap().0;
+        packed_best = packed_best.max(fps);
+        rows.push(vec![batch as f64, fps]);
+        arms.push(obj(vec![
+            ("arm", Json::from("packed")),
+            ("batch", Json::from(batch)),
+            ("flips_per_sec", Json::from(fps)),
+        ]));
+    }
+    write_csv("hotpath_packed_batch", "batch,flips_per_sec", &rows)?;
+    let packed_speedup = packed_best / scalar_best;
+    println!("\npacked/scalar speedup (batch ≥ 32): {packed_speedup:.1}×");
 
     // noise-source ablation
     for (name, noise) in [
@@ -180,6 +235,7 @@ fn main() -> anyhow::Result<()> {
         ("quick", Json::from(usize::from(quick))),
         ("sweeps_per_iter", Json::from(sweeps_per_iter)),
         ("silicon_flips_per_sec", Json::from(silicon)),
+        ("packed_speedup_batch32", Json::from(packed_speedup)),
         ("arms", Json::Arr(arms)),
     ]);
     let out = write_bench_json("hotpath", &report)?;

@@ -27,6 +27,14 @@
 //! natively, while the AOT/XLA artifact (scalar-β signature) and the
 //! cycle-level chip (one V_temp rail) report unsupported.
 //!
+//! Sweep work between swap phases rides the engines' own scheduling:
+//! batched engines fan their chains over the persistent core-pinned
+//! sweep-worker pool ([`crate::sampler::workers`]) once a round is
+//! large enough to amortize the hand-off, so tempering no longer pays
+//! thread spawn/join per round (the old per-`sweeps()` spawn). Chain
+//! streams are seed-deterministic, so pooled and serial rounds are
+//! bit-identical.
+//!
 //! Energy readback is incremental where the engine allows it: the run
 //! installs a [`crate::problems::EnergyLedger`]
 //! ([`Sampler::track_energies`]) so each swap phase reads per-chain

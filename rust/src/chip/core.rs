@@ -200,6 +200,15 @@ impl PbitChip {
         }
         match order {
             UpdateOrder::Chromatic => {
+                // Both chromatic phases read their (disjoint) p-bit
+                // lanes from the same register snapshot: the silicon
+                // bank refreshes once per 50 ns sample period, and the
+                // slab was filled once at the top of this sweep.
+                // ⚠ bit-exactness: pre-PR builds refreshed the bank
+                // again between phases (2× the silicon RNG rate);
+                // sampler/software.rs made the matching one-fill-per-
+                // sweep change, so the two engines remain bit-for-bit
+                // identical to each other (tests/cross_engine.rs).
                 for phase in 0..2 {
                     // Split borrows: color groups are part of topo.
                     let group = std::mem::take(&mut self.topo.color_groups[phase]);
@@ -210,10 +219,6 @@ impl PbitChip {
                         }
                     }
                     self.topo.color_groups[phase] = group;
-                    // second phase sees fresh randoms, as on silicon
-                    if phase == 0 {
-                        self.rng.fill_slab(&mut u);
-                    }
                 }
             }
             UpdateOrder::Sequential => {

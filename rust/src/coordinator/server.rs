@@ -193,9 +193,9 @@ impl ChipArrayServer {
             let ekind = engine.clone();
             let stats_k = stats.clone();
             let done_tx = submit_tx.clone();
-            workers.push(std::thread::Builder::new().name(format!("die-{k}")).spawn(
-                move || worker_main(k, seed, mcfg, ekind, rx, done_tx, stats_k),
-            )?);
+            workers.push(crate::sampler::workers::spawn_named(format!("die-{k}"), move || {
+                worker_main(k, seed, mcfg, ekind, rx, done_tx, stats_k)
+            })?);
         }
 
         let stats_d = stats.clone();
@@ -205,7 +205,7 @@ impl ChipArrayServer {
             Arc::new(Mutex::new(HashMap::new()));
         let problems_d = problems.clone();
         let feedback = submit_tx.clone();
-        let dispatcher = std::thread::Builder::new().name("dispatcher".into()).spawn(move || {
+        let dispatcher = crate::sampler::workers::spawn_named("dispatcher", move || {
             dispatcher_main(submit_rx, worker_txs, batcher, window, stats_d, problems_d, feedback)
         })?;
 
@@ -659,7 +659,7 @@ fn dispatch_train(
     let stats_err = stats.clone();
     let stats = stats.clone();
     let feedback = feedback.clone();
-    let spawned = std::thread::Builder::new().name("train-coordinator".into()).spawn(move || {
+    let spawned = crate::sampler::workers::spawn_named("train-coordinator", move || {
         let result = service::drive_training(
             &params,
             resume.as_ref(),
@@ -761,7 +761,7 @@ fn dispatch_sharded(
     let stats = stats.clone();
     let scale = spec.scale;
     let feedback = feedback.clone();
-    let spawned = std::thread::Builder::new().name("shard-coordinator".into()).spawn(move || {
+    let spawned = crate::sampler::workers::spawn_named("shard-coordinator", move || {
         let result = if params.elastic {
             sharded::drive_sharded_elastic(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
         } else if params.pipeline {

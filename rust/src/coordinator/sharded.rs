@@ -980,10 +980,10 @@ where
         let out = out_tx.clone();
         let prob = problem.clone();
         joins.push(
-            std::thread::Builder::new()
-                .name(format!("shard-{shard}"))
-                .spawn(move || shard_worker_loop(shard, &mut sampler, &prob, &cmd_rx, &out))
-                .map_err(|e| anyhow!("spawning shard {shard}: {e}"))?,
+            crate::sampler::workers::spawn_named(format!("shard-{shard}"), move || {
+                shard_worker_loop(shard, &mut sampler, &prob, &cmd_rx, &out)
+            })
+            .map_err(|e| anyhow!("spawning shard {shard}: {e}"))?,
         );
     }
     drop(out_tx);

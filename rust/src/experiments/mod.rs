@@ -64,11 +64,12 @@ pub fn ideal_chip(seed: u64, batch: usize) -> Hw<SoftwareSampler> {
 /// per shard of `params.base.ladder`, each programmed with `problem`
 /// and sized `die_batch` (or its rung count, whichever is larger).
 ///
-/// Die seeds step by 0x1000 from `seed_base` — the LFSR noise banks
-/// seed chain c with (die_seed + c), so nearby die seeds would alias
-/// chain streams across dies. `randomize_seed(shard)` seeds each die's
-/// starting states. Returns the chips in shard (rung) order plus the
-/// shared code→logical scale.
+/// Die seeds step by 0x1000 from `seed_base`. (The LFSR noise banks now
+/// splitmix-hash every chain ≥ 1's seed, so cross-die aliasing is no
+/// longer possible; the stride is kept so each die's chain-0
+/// chip-fidelity bank stays distinct and recorded runs replay.)
+/// `randomize_seed(shard)` seeds each die's starting states. Returns
+/// the chips in shard (rung) order plus the shared code→logical scale.
 pub fn sharded_die_array(
     params: &crate::coordinator::ShardedTemperingParams,
     problem: &IsingProblem,

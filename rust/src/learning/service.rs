@@ -1715,10 +1715,10 @@ where
         let out = out_tx.clone();
         let p = shared.clone();
         joins.push(
-            std::thread::Builder::new()
-                .name(format!("train-{shard}"))
-                .spawn(move || train_worker_loop(shard, &mut chip, &p, &cmd_rx, &out))
-                .map_err(|e| anyhow!("spawning train worker {shard}: {e}"))?,
+            crate::sampler::workers::spawn_named(format!("train-{shard}"), move || {
+                train_worker_loop(shard, &mut chip, &p, &cmd_rx, &out)
+            })
+            .map_err(|e| anyhow!("spawning train worker {shard}: {e}"))?,
         );
     }
     drop(out_tx);

@@ -104,7 +104,7 @@ impl ChipRngBank {
             .map(|k| {
                 // distinct per-cell power-up states (silicon would have
                 // random flop init; we make it reproducible).
-                let s = splitmix(seed.wrapping_add(0x100 + k as u64));
+                let s = splitmix64(seed.wrapping_add(0x100 + k as u64));
                 CellRng::new(s)
             })
             .collect();
@@ -188,7 +188,11 @@ impl ChipRngBank {
     }
 }
 
-fn splitmix(mut x: u64) -> u64 {
+/// SplitMix64 finalizer: one golden-ratio increment and two
+/// multiply-xorshift rounds — the crate's standard way to derive
+/// decorrelated seeds from nearby integers (per-cell power-up states
+/// here; per-chain noise banks in `sampler::NoiseSource`).
+pub fn splitmix64(mut x: u64) -> u64 {
     x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     let mut z = x;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

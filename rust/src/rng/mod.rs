@@ -15,7 +15,7 @@ mod decimator;
 mod lfsr;
 mod pcg;
 
-pub use cellrng::{code_to_uniform, CellRng, ChipRngBank};
+pub use cellrng::{code_to_uniform, splitmix64, CellRng, ChipRngBank};
 pub use decimator::{DecimatedClocks, N_CLOCKS, N_USED};
 pub use lfsr::{Lfsr, LFSR32_TAPS, LFSR63_TAPS};
 pub use pcg::HostRng;

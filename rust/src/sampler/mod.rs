@@ -1,16 +1,22 @@
-//! Samplers: three interchangeable engines for the p-bit update loop.
+//! Samplers: four interchangeable engines for the p-bit update loop.
 //!
 //! * [`SoftwareSampler`] — optimized pure-rust chromatic Gibbs (CSR over
 //!   the ≤6-neighbor Chimera adjacency). The Table 1 software baseline
 //!   and the trainer's fast path.
+//! * [`PackedSampler`] — the code-domain throughput kernel: 64 replicas
+//!   bit-packed per machine word, the tanh + RNG-DAC compare resolved
+//!   through per-(spin, β) integer threshold tables (see
+//!   `sampler/packed.rs`).
 //! * [`XlaSampler`] — the AOT path: executes the L2 `gibbs_b{B}` HLO
 //!   artifacts through PJRT, feeding LFSR-generated uniforms from the
 //!   rust side. This is the production request path.
 //! * [`ChipSampler`] — adapter over the cycle-level [`crate::chip::PbitChip`]
 //!   (batch 1, SPI readout) — the "measured silicon" reference.
 //!
-//! All three consume the same [`crate::analog::Folded`] tensors, so any
+//! All four consume the same [`crate::analog::Folded`] tensors, so any
 //! experiment can swap engines; `rust/tests/` cross-validates them.
+//! Batched sweeps share the persistent [`workers`] pool instead of
+//! spawning per-call threads.
 //!
 //! # Example: sampling a ferromagnetic pair
 //!
@@ -43,11 +49,14 @@
 
 mod clamp;
 mod noise;
+mod packed;
 mod software;
+pub mod workers;
 mod xla;
 
 pub use clamp::apply_clamps;
 pub use noise::{ChainNoise, NoiseSource};
+pub use packed::{field_threshold, flip_threshold, PackedSampler, LANES};
 pub use software::SoftwareSampler;
 pub use xla::XlaSampler;
 
@@ -56,13 +65,37 @@ use anyhow::Result;
 use crate::analog::Folded;
 use crate::problems::EnergyLedger;
 
-/// Whether a sweep workload amortizes the cost of fanning chains across
-/// scoped threads — the one spawn-threshold heuristic every batched
-/// sweep path shares (the per-chain sequences are identical either way,
-/// so this is purely a throughput knob).
-pub(crate) fn spawn_worthwhile(batch: usize, sweeps: usize) -> bool {
-    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
-    cores > 1 && batch >= 4 && sweeps * batch >= 32
+/// How a sampler schedules its per-chain (or per-block) sweep work.
+/// The per-chain update sequences are identical under every policy —
+/// this is purely a throughput knob, and `tests/packed_kernel.rs`
+/// pins the bit-identity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Threading {
+    /// Use the shared worker pool when the crate-wide amortization
+    /// heuristic says the workload covers the dispatch cost (default).
+    #[default]
+    Auto,
+    /// Always sweep on the calling thread.
+    Serial,
+    /// Always fan out over the persistent pool (still correct with a
+    /// zero-worker pool: the caller drains its own jobs inline).
+    Pooled,
+}
+
+/// Whether a sweep workload amortizes handing chain chunks to the
+/// persistent worker pool — the one threshold heuristic every batched
+/// sweep path shares.
+///
+/// The old heuristic spawned one **OS thread per chain** per `sweeps()`
+/// call with no cap at the core count (batch 64 on a 4-core box → 64
+/// threads) and its `batch·sweeps ≥ 32` floor let micro-workloads
+/// (batch 4 × 8 sweeps) pay a thread spawn for microseconds of work.
+/// Chunks now go to at most `workers + 1` runners of the shared
+/// [`workers`] pool, and the raised floor keeps tiny calls serial; the
+/// `software_tiny` arm of `benches/sampler_hotpath.rs` is the
+/// regression guard.
+pub(crate) fn pool_worthwhile(batch: usize, sweeps: usize) -> bool {
+    batch >= 2 && sweeps * batch >= 256 && workers::global().workers() > 0
 }
 
 /// A batched p-bit sampling engine.

@@ -18,10 +18,18 @@ pub enum NoiseSource {
 }
 
 impl NoiseSource {
-    /// Chip-accurate source: one decimated-LFSR bank per chain, chain
-    /// `c` seeded with `seed + c`.
+    /// Chip-accurate source: one decimated-LFSR bank per chain.
+    ///
+    /// Chain 0 keeps the **raw** `seed` — the chip-accurate fidelity
+    /// path: `tests/cross_engine.rs` pins software chain 0 to the
+    /// cycle-level chip's bank bit-for-bit, and recorded single-chain
+    /// runs stay replayable. Chains ≥ 1 get splitmix-hashed seeds: the
+    /// old `seed + c` scheme powered chain c+1's cell-k LFSR up in
+    /// exactly chain c's cell-(k+1) state (the bank derives cell k's
+    /// state from `splitmix64(seed + 0x100 + k)`), shift-correlating
+    /// adjacent chains' noise streams.
     pub fn lfsr(seed: u64, chains: usize) -> Self {
-        Self::Lfsr((0..chains).map(|c| ChipRngBank::new(seed.wrapping_add(c as u64))).collect())
+        Self::Lfsr((0..chains).map(|c| ChipRngBank::new(chain_seed(seed, c))).collect())
     }
 
     /// Fast host source: one xoshiro generator per chain.
@@ -66,6 +74,18 @@ impl NoiseSource {
                 }
             }
         }
+    }
+}
+
+/// Per-chain bank seed: raw for chain 0 (the chip-fidelity path), a
+/// golden-ratio splitmix hash for every other chain (decorrelation —
+/// the same recipe [`NoiseSource::host`] uses, strengthened by the full
+/// SplitMix64 finalizer so no two chains' banks see nearby integers).
+fn chain_seed(seed: u64, c: usize) -> u64 {
+    if c == 0 {
+        seed
+    } else {
+        crate::rng::splitmix64(seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 }
 
@@ -128,5 +148,68 @@ mod tests {
         src.fill(0, &mut a);
         src.fill(1, &mut b);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chain0_keeps_the_raw_seed() {
+        // the chip-accurate fidelity contract: chain 0's bank is
+        // bit-identical to ChipRngBank::new(seed) (cross_engine pins
+        // the chip itself against this).
+        let mut src = NoiseSource::lfsr(7, 3);
+        let mut bank = ChipRngBank::new(7);
+        let mut a = vec![0.0f32; N_PAD];
+        let mut b = vec![0.0f32; N_PAD];
+        for _ in 0..5 {
+            src.fill(0, &mut a);
+            bank.fill_slab(&mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn derived_chain_seeds_break_cell_aliasing() {
+        // the old scheme seeded chain c with seed + c, which powers
+        // chain c+1's cell k up in chain c's cell k+1 state; hashed
+        // seeds must land far from every small offset of the base seed.
+        for seed in [0u64, 7, 0xDEAD_BEEF] {
+            for c in 1..8usize {
+                let s = chain_seed(seed, c);
+                assert!(
+                    s.abs_diff(seed) > 0x1_0000,
+                    "chain {c} seed {s:#x} aliases base {seed:#x}"
+                );
+            }
+        }
+    }
+
+    /// Adjacent chains' uniform streams must be statistically
+    /// independent (the cross-chain correlation regression test for the
+    /// `seed + c` seeding bug).
+    #[test]
+    fn adjacent_chain_streams_decorrelated() {
+        let mut src = NoiseSource::lfsr(11, 2);
+        let mut a = vec![0.0f32; N_PAD];
+        let mut b = vec![0.0f32; N_PAD];
+        // correlate matched lanes across time, several lanes sampled
+        for lane in [0usize, 17, 203, 439] {
+            let (mut sx, mut sy, mut sxy, mut sxx, mut syy) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+            let n = 1500;
+            for _ in 0..n {
+                src.fill(0, &mut a);
+                src.fill(1, &mut b);
+                let (x, y) = (a[lane] as f64, b[lane] as f64);
+                sx += x;
+                sy += y;
+                sxy += x * y;
+                sxx += x * x;
+                syy += y * y;
+            }
+            let nf = n as f64;
+            let cov = sxy / nf - (sx / nf) * (sy / nf);
+            let var_x = sxx / nf - (sx / nf).powi(2);
+            let var_y = syy / nf - (sy / nf).powi(2);
+            let corr = cov / (var_x.sqrt() * var_y.sqrt());
+            assert!(corr.abs() < 0.1, "lane {lane}: cross-chain correlation {corr}");
+        }
     }
 }

@@ -1,0 +1,618 @@
+//! Code-domain bit-packed sweep kernel (multi-spin coding).
+//!
+//! The scalar engines spend their inner loop on a float gather, a tanh
+//! and an RNG-bank refresh per p-bit update. This kernel moves the whole
+//! decision into the integer code domain the chip itself computes in
+//! (the [`crate::problems::EnergyLedger`] already proves the code domain
+//! is exact):
+//!
+//! 1. **Integer local fields.** Couplings and biases are quantized to
+//!    the chip's 8-bit register codes, so a p-bit's local field is a
+//!    small integer determined entirely by the ±1 pattern of its ≤ 6
+//!    Chimera neighbors — 64 possible patterns per spin.
+//! 2. **Threshold tables instead of tanh.** For each (spin, β) the
+//!    kernel precomputes, per neighbor pattern, the smallest 8-bit RNG
+//!    code whose DAC uniform fires the flip predicate
+//!    `tanh(β·g·field + o) + u ≥ 0`. The sweep-time decision collapses
+//!    to one integer compare: `rng_code ≥ table[spin][pattern]` — *by
+//!    construction exactly* the scalar engines' float predicate
+//!    (`tests/packed_kernel.rs` checks every (β, field-code) pair).
+//! 3. **Multi-spin coding.** 64 replicas live in one `u64` per spin
+//!    (bit j = replica j), so neighbor-pattern extraction is an 8×8
+//!    bit-matrix transpose over the gathered neighbor words — a handful
+//!    of shift/xor ops per 8 replicas — and the per-replica work is a
+//!    table lookup and a byte compare. One xoshiro `u64` yields 8 iid
+//!    uniform RNG codes.
+//!
+//! Per 64-replica block the state is 440 words (3.5 KB, L1-resident)
+//! and the sweep walks the chromatic color groups block by block —
+//! cache-blocked traversal — with independent blocks fanned out over
+//! the persistent [`workers`](super::workers) pool.
+//!
+//! Fidelity notes: replica noise comes from the host xoshiro generator
+//! (8 bytes per draw), not the decimated-LFSR bank — statistically
+//! interchangeable (the lfsr-vs-host ablation in
+//! `benches/sampler_hotpath.rs` measures no difference) but not the
+//! chip's bit stream; and analog mismatch (per-edge gain error) is
+//! rounded to the nearest register code, while per-spin slope/offset
+//! mismatch folds into the threshold tables exactly. The scalar
+//! [`SoftwareSampler`](super::SoftwareSampler) LFSR path remains the
+//! bit-exact silicon reference; this engine is the throughput kernel.
+//! Energy readback goes through the generic rescan fallback
+//! ([`Sampler::for_each_state`]) — the packed kernel declines
+//! [`Sampler::track_energies`] rather than unpack per flip.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::analog::Folded;
+use crate::chimera::{Topology, N_SPINS};
+use crate::rng::{code_to_uniform, splitmix64, HostRng};
+
+use super::{Sampler, Threading};
+
+/// Max couplers per p-bit on the Chimera die.
+const DEG: usize = 6;
+
+/// Neighbor-sign patterns per spin (2^DEG).
+const PATTERNS: usize = 1 << DEG;
+
+/// Replicas per machine word — the multi-spin coding width.
+pub const LANES: usize = 64;
+
+/// Bit-packed code-domain Gibbs engine: `blocks × 64` replicas.
+pub struct PackedSampler {
+    topo: Topology,
+    /// `[N_SPINS * DEG]` neighbor ids (padded with self).
+    nbr_idx: Vec<u32>,
+    /// `[N_SPINS * DEG]` coupling codes into the target spin (self-pad
+    /// entries are 0, so padding never shifts the field).
+    nbr_c: Vec<i32>,
+    /// `[N_SPINS]` bias codes.
+    h_c: Vec<i32>,
+    /// `[N_SPINS]` tanh slope (mismatch; 1 on ideal dies).
+    g: Vec<f32>,
+    /// `[N_SPINS]` input-referred offset (0 on ideal dies).
+    o: Vec<f32>,
+    clamps: Vec<(usize, i8)>,
+    /// Per-block β (one temperature per 64-replica word).
+    betas: Vec<f32>,
+    /// Per-block threshold tables `[N_SPINS * PATTERNS]`, shared via
+    /// `Arc` between blocks at equal β.
+    tables: Vec<Arc<Vec<u16>>>,
+    tables_dirty: bool,
+    /// `[blocks * N_SPINS]` packed states, block-major: bit j of
+    /// `words[b * N_SPINS + i]` is replica `b·64 + j`'s spin i (1 = +1).
+    words: Vec<u64>,
+    /// One noise generator per block (independent streams).
+    rngs: Vec<HostRng>,
+    threading: Threading,
+    /// total p-bit updates performed (for flips/s accounting)
+    pub updates: u64,
+}
+
+impl PackedSampler {
+    /// Engine with `blocks` 64-replica words per spin
+    /// (`batch = blocks × 64`), states randomized from `seed`.
+    pub fn new(blocks: usize, seed: u64) -> Self {
+        assert!(blocks >= 1, "at least one 64-replica block");
+        let topo = Topology::new();
+        let mut s = Self {
+            topo,
+            nbr_idx: vec![0; N_SPINS * DEG],
+            nbr_c: vec![0; N_SPINS * DEG],
+            h_c: vec![0; N_SPINS],
+            g: vec![1.0; N_SPINS],
+            o: vec![0.0; N_SPINS],
+            clamps: Vec::new(),
+            betas: vec![1.0; blocks],
+            tables: Vec::new(),
+            tables_dirty: true,
+            words: vec![0; blocks * N_SPINS],
+            rngs: (0..blocks)
+                .map(|b| HostRng::new(splitmix64(seed ^ ((b as u64) << 20) ^ 0xB10C_B10C)))
+                .collect(),
+            threading: Threading::Auto,
+            updates: 0,
+        };
+        for i in 0..N_SPINS {
+            for (k, &j) in s.topo.neighbors[i].iter().enumerate() {
+                s.nbr_idx[i * DEG + k] = j as u32;
+            }
+            for k in s.topo.neighbors[i].len()..DEG {
+                s.nbr_idx[i * DEG + k] = i as u32; // self with code 0
+            }
+        }
+        s.randomize(seed);
+        s
+    }
+
+    /// Number of 64-replica blocks.
+    pub fn blocks(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Override how `sweeps()` schedules blocks (default
+    /// [`Threading::Auto`]); per-block streams are identical under
+    /// every policy.
+    pub fn set_threading(&mut self, threading: Threading) {
+        self.threading = threading;
+    }
+
+    /// Pin each 64-replica block to its own β (the tempering-style knob
+    /// at the packed kernel's word granularity).
+    pub fn set_block_betas(&mut self, betas: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            betas.len() == self.betas.len(),
+            "expected {} per-block β values, got {}",
+            self.betas.len(),
+            betas.len()
+        );
+        self.betas.copy_from_slice(betas);
+        self.tables_dirty = true;
+        Ok(())
+    }
+
+    /// Effective (slope, offset) for spin `i`, with the clamp override
+    /// (slope 0, offset ±CLAMP_OFFSET) applied — identical to the
+    /// scalar engines' hardware-honest clamping, which the threshold
+    /// table then turns into an always-flip/never-flip row.
+    fn effective_gain_offset(&self, i: usize) -> (f32, f32) {
+        for &(c, v) in &self.clamps {
+            if c == i {
+                return (0.0, super::clamp::CLAMP_OFFSET * v as f32);
+            }
+        }
+        (self.g[i], self.o[i])
+    }
+
+    /// Rebuild the per-block threshold tables (deduped by β bits, so a
+    /// uniform batch builds exactly one table).
+    fn rebuild_tables(&mut self) {
+        if !self.tables_dirty {
+            return;
+        }
+        let mut cache: Vec<(u32, Arc<Vec<u16>>)> = Vec::new();
+        let mut tables = Vec::with_capacity(self.betas.len());
+        for &beta in &self.betas {
+            let bits = beta.to_bits();
+            let tab = match cache.iter().find(|(b, _)| *b == bits) {
+                Some((_, t)) => t.clone(),
+                None => {
+                    let t = Arc::new(self.build_table(beta));
+                    cache.push((bits, t.clone()));
+                    t
+                }
+            };
+            tables.push(tab);
+        }
+        self.tables = tables;
+        self.tables_dirty = false;
+    }
+
+    /// One β's threshold table: `tab[i * PATTERNS + p]` is the smallest
+    /// RNG code that flips spin `i` to +1 under neighbor pattern `p`
+    /// (bit k of `p` = neighbor k is +1).
+    fn build_table(&self, beta: f32) -> Vec<u16> {
+        let mut tab = vec![0u16; N_SPINS * PATTERNS];
+        for i in 0..N_SPINS {
+            let (gi, oi) = self.effective_gain_offset(i);
+            let base = i * DEG;
+            for (p, slot) in tab[i * PATTERNS..(i + 1) * PATTERNS].iter_mut().enumerate() {
+                let mut fc = self.h_c[i];
+                for k in 0..DEG {
+                    let m = if (p >> k) & 1 == 1 { 1 } else { -1 };
+                    fc += self.nbr_c[base + k] * m;
+                }
+                *slot = field_threshold(beta, gi, oi, fc);
+            }
+        }
+        tab
+    }
+
+    /// Re-assert every clamp directly on the packed words (the table
+    /// rows keep them asserted through sweeps).
+    fn force_clamped_words(&mut self) {
+        let blocks = self.blocks();
+        for &(i, v) in &self.clamps {
+            for b in 0..blocks {
+                self.words[b * N_SPINS + i] = if v > 0 { u64::MAX } else { 0 };
+            }
+        }
+    }
+
+    /// Unpack replica `c`'s spin state into `buf`.
+    fn unpack_into(&self, c: usize, buf: &mut [i8]) {
+        let base = (c / LANES) * N_SPINS;
+        let lane = c % LANES;
+        for (i, s) in buf.iter_mut().enumerate() {
+            *s = (((self.words[base + i] >> lane) & 1) as i8) * 2 - 1;
+        }
+    }
+}
+
+/// The scalar engines' activation: tanh with the bit-exact saturation
+/// fast path (`chip::TANH_SAT`), applied to `x = β·g·field + o`.
+fn act(x: f32) -> f32 {
+    if x >= crate::chip::TANH_SAT {
+        1.0
+    } else if x <= -crate::chip::TANH_SAT {
+        -1.0
+    } else {
+        x.tanh()
+    }
+}
+
+/// Smallest 8-bit RNG code whose DAC uniform fires the flip predicate
+/// `act + u(code) ≥ 0`, or 256 when no code does. `u(code)` is strictly
+/// monotone in the code, so `code ≥ flip_threshold(act)` is *exactly*
+/// the scalar predicate — the per-entry math behind the packed kernel's
+/// threshold tables.
+pub fn flip_threshold(activation: f32) -> u16 {
+    // analytic guess, then exact fixup against the f32 predicate
+    let guess = (127.5 - 128.0 * activation).ceil();
+    let mut t = guess.clamp(0.0, 256.0) as u16;
+    while t > 0 && activation + code_to_uniform((t - 1) as u8) >= 0.0 {
+        t -= 1;
+    }
+    while t < 256 && activation + code_to_uniform(t as u8) < 0.0 {
+        t += 1;
+    }
+    t
+}
+
+/// Threshold for a (β, slope, offset, integer-field-code) tuple — the
+/// table builder's per-entry math, exposed for the exhaustive
+/// equivalence test in `tests/packed_kernel.rs`.
+pub fn field_threshold(beta: f32, gain: f32, offset: f32, field_code: i32) -> u16 {
+    flip_threshold(act(beta * gain * (field_code as f32 / 127.0) + offset))
+}
+
+/// 8×8 bit-matrix transpose (rows = bytes of the `u64`): output byte j
+/// bit k = input byte k bit j. Three delta-swap rounds, 18 ops.
+#[inline(always)]
+fn transpose8(x: u64) -> u64 {
+    let t = (x ^ (x >> 7)) & 0x00AA_00AA_00AA_00AA;
+    let x = x ^ t ^ (t << 7);
+    let t = (x ^ (x >> 14)) & 0x0000_CCCC_0000_CCCC;
+    let x = x ^ t ^ (t << 14);
+    let t = (x ^ (x >> 28)) & 0x0000_0000_F0F0_F0F0;
+    x ^ t ^ (t << 28)
+}
+
+/// `n` chromatic sweeps of one 64-replica block. Per spin: gather the
+/// ≤ 6 neighbor words, transpose 8-replica byte groups into per-replica
+/// neighbor patterns, then decide all 64 replicas with table lookups
+/// and byte compares against fresh RNG codes (8 per `u64` draw — one
+/// uniform per p-bit per replica per sweep, the chip cadence).
+fn sweep_block(
+    nbr_idx: &[u32],
+    tab: &[u16],
+    groups: &[Vec<usize>; 2],
+    n: usize,
+    words: &mut [u64],
+    rng: &mut HostRng,
+) {
+    for _ in 0..n {
+        for group in groups {
+            for &i in group {
+                let base = i * DEG;
+                let w = [
+                    words[nbr_idx[base] as usize],
+                    words[nbr_idx[base + 1] as usize],
+                    words[nbr_idx[base + 2] as usize],
+                    words[nbr_idx[base + 3] as usize],
+                    words[nbr_idx[base + 4] as usize],
+                    words[nbr_idx[base + 5] as usize],
+                ];
+                let ti: &[u16; PATTERNS] =
+                    tab[i * PATTERNS..(i + 1) * PATTERNS].try_into().unwrap();
+                let mut new_w = 0u64;
+                for gi in 0..8u32 {
+                    let sh = gi * 8;
+                    // 6 neighbor bytes for replicas sh..sh+8, one per row
+                    let m = ((w[0] >> sh) & 0xFF)
+                        | (((w[1] >> sh) & 0xFF) << 8)
+                        | (((w[2] >> sh) & 0xFF) << 16)
+                        | (((w[3] >> sh) & 0xFF) << 24)
+                        | (((w[4] >> sh) & 0xFF) << 32)
+                        | (((w[5] >> sh) & 0xFF) << 40);
+                    let pat = transpose8(m);
+                    let rb = rng.next_u64();
+                    let mut bits = 0u64;
+                    for j in 0..8u32 {
+                        let p = ((pat >> (8 * j)) & 0x3F) as usize;
+                        let r = ((rb >> (8 * j)) & 0xFF) as u16;
+                        bits |= u64::from(r >= ti[p]) << j;
+                    }
+                    new_w |= bits << sh;
+                }
+                words[i] = new_w;
+            }
+        }
+    }
+}
+
+/// Quantize a folded tensor entry to the nearest 8-bit register code
+/// (exact for ideal personalities, where `j_eff = code / 127`).
+fn quantize_code(x: f32) -> i32 {
+    (x * 127.0).round() as i32
+}
+
+impl Sampler for PackedSampler {
+    fn load(&mut self, folded: &Folded) {
+        for i in 0..N_SPINS {
+            for (k, &j) in self.topo.neighbors[i].iter().enumerate() {
+                self.nbr_c[i * DEG + k] = quantize_code(folded.j_eff(i, j));
+            }
+            self.h_c[i] = quantize_code(folded.h_eff[i]);
+        }
+        self.g.copy_from_slice(&folded.g[..N_SPINS]);
+        self.o.copy_from_slice(&folded.o[..N_SPINS]);
+        self.tables_dirty = true;
+    }
+
+    fn set_beta(&mut self, beta: f32) {
+        self.betas.fill(beta);
+        self.tables_dirty = true;
+    }
+
+    fn set_betas(&mut self, betas: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            betas.len() == self.batch(),
+            "expected {} per-replica β values, got {}",
+            self.batch(),
+            betas.len()
+        );
+        for (b, chunk) in betas.chunks(LANES).enumerate() {
+            anyhow::ensure!(
+                chunk.iter().all(|&x| x == chunk[0]),
+                "the packed kernel resolves β per 64-replica word: replicas {}..{} (block {b}) \
+                 must share one β",
+                b * LANES,
+                b * LANES + chunk.len()
+            );
+            self.betas[b] = chunk[0];
+        }
+        self.tables_dirty = true;
+        Ok(())
+    }
+
+    fn set_states(&mut self, states: &[Vec<i8>]) -> Result<()> {
+        anyhow::ensure!(
+            states.len() == self.batch(),
+            "expected {} replica states, got {}",
+            self.batch(),
+            states.len()
+        );
+        for st in states {
+            anyhow::ensure!(
+                st.len() == N_SPINS,
+                "replica state covers {} spins, expected {N_SPINS}",
+                st.len()
+            );
+        }
+        for (b, block) in states.chunks(LANES).enumerate() {
+            for i in 0..N_SPINS {
+                let mut w = 0u64;
+                for (j, st) in block.iter().enumerate() {
+                    w |= u64::from(st[i] > 0) << j;
+                }
+                self.words[b * N_SPINS + i] = w;
+            }
+        }
+        self.force_clamped_words();
+        Ok(())
+    }
+
+    fn set_clamps(&mut self, clamps: &[(usize, i8)]) {
+        self.clamps = clamps.to_vec();
+        self.force_clamped_words();
+        self.tables_dirty = true;
+    }
+
+    fn batch(&self) -> usize {
+        self.blocks() * LANES
+    }
+
+    fn sweeps(&mut self, n: usize) -> Result<()> {
+        if n == 0 {
+            return Ok(());
+        }
+        self.rebuild_tables();
+        self.updates += (n * self.batch() * N_SPINS) as u64;
+        let blocks = self.blocks();
+        let pooled = match self.threading {
+            Threading::Serial => false,
+            Threading::Pooled => true,
+            // a block is 64 replicas of work per sweep, so the
+            // worthwhile check sees the replica count
+            Threading::Auto => blocks >= 2 && super::pool_worthwhile(blocks * LANES, n),
+        };
+        let (nbr_idx, groups) = (&self.nbr_idx, &self.topo.color_groups);
+        let work = self.words.chunks_mut(N_SPINS).zip(self.rngs.iter_mut()).zip(&self.tables);
+        if pooled {
+            let pool = super::workers::global();
+            let mut jobs: Vec<super::workers::ScopedJob<'_>> = Vec::with_capacity(blocks);
+            for ((words, rng), tab) in work {
+                let tab = tab.clone();
+                jobs.push(Box::new(move || sweep_block(nbr_idx, &tab, groups, n, words, rng)));
+            }
+            pool.run(jobs);
+        } else {
+            for ((words, rng), tab) in work {
+                sweep_block(nbr_idx, tab, groups, n, words, rng);
+            }
+        }
+        Ok(())
+    }
+
+    fn states(&self) -> Vec<Vec<i8>> {
+        let mut out = vec![vec![0i8; N_SPINS]; self.batch()];
+        for (c, st) in out.iter_mut().enumerate() {
+            self.unpack_into(c, st);
+        }
+        out
+    }
+
+    fn for_each_state(&self, f: &mut dyn FnMut(usize, &[i8])) {
+        let mut buf = vec![0i8; N_SPINS];
+        for c in 0..self.batch() {
+            self.unpack_into(c, &mut buf);
+            f(c, &buf);
+        }
+    }
+
+    fn randomize(&mut self, seed: u64) {
+        let mut r = HostRng::new(splitmix64(seed ^ 0x9E37_79B9_7F4A_7C15));
+        for w in self.words.iter_mut() {
+            *w = r.next_u64();
+        }
+        self.force_clamped_words();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analog::{Personality, ProgrammedWeights};
+
+    fn naive_transpose(x: u64) -> u64 {
+        let mut y = 0u64;
+        for r in 0..8 {
+            for c in 0..8 {
+                if (x >> (8 * r + c)) & 1 == 1 {
+                    y |= 1 << (8 * c + r);
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn transpose8_matches_naive() {
+        let mut rng = HostRng::new(42);
+        for _ in 0..200 {
+            let x = rng.next_u64();
+            assert_eq!(transpose8(x), naive_transpose(x), "x = {x:#018x}");
+        }
+        assert_eq!(transpose8(0), 0);
+        assert_eq!(transpose8(u64::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn flip_threshold_is_the_minimal_firing_code() {
+        for act_mil in [-1000i32, -999, -500, -3, 0, 3, 500, 999, 1000] {
+            let activation = act_mil as f32 / 1000.0;
+            let brute =
+                (0u16..256).find(|&r| activation + code_to_uniform(r as u8) >= 0.0).unwrap_or(256);
+            assert_eq!(flip_threshold(activation), brute, "act {activation}");
+        }
+    }
+
+    fn folded_ferro_pair() -> (Folded, (usize, usize)) {
+        let t = Topology::new();
+        let p = Personality::ideal(&t);
+        let mut w = ProgrammedWeights::zeros(t.edges.len());
+        w.j_codes[0] = 127;
+        w.enables[0] = true;
+        (p.fold(&t, &w), t.edges[0])
+    }
+
+    #[test]
+    fn ferro_pair_aligns() {
+        let (f, (a, b)) = folded_ferro_pair();
+        let mut s = PackedSampler::new(1, 1);
+        s.load(&f);
+        s.set_beta(6.0);
+        s.sweeps(60).unwrap();
+        let (mut agree, mut total) = (0usize, 0usize);
+        for _ in 0..40 {
+            s.sweeps(1).unwrap();
+            s.for_each_state(&mut |_, st| {
+                agree += (st[a] == st[b]) as usize;
+                total += 1;
+            });
+        }
+        assert!(agree > total * 9 / 10, "{agree}/{total}");
+    }
+
+    #[test]
+    fn clamps_hold_and_release() {
+        let (f, (a, _)) = folded_ferro_pair();
+        let mut s = PackedSampler::new(2, 3);
+        s.load(&f);
+        s.set_clamps(&[(a, -1)]);
+        s.sweeps(20).unwrap();
+        s.for_each_state(&mut |c, st| assert_eq!(st[a], -1, "replica {c}"));
+        s.set_clamps(&[]);
+        s.set_beta(0.1);
+        let mut flipped = false;
+        for _ in 0..20 {
+            s.sweeps(1).unwrap();
+            s.for_each_state(&mut |_, st| flipped |= st[a] == 1);
+        }
+        assert!(flipped, "released clamp never flipped");
+    }
+
+    #[test]
+    fn per_word_beta_granularity_is_enforced() {
+        let mut s = PackedSampler::new(2, 5);
+        // per-replica betas must be uniform within each 64-lane word
+        let mut betas = vec![1.0f32; 128];
+        betas[3] = 2.0;
+        assert!(s.set_betas(&betas).is_err());
+        betas[3] = 1.0;
+        for b in betas.iter_mut().skip(64) {
+            *b = 0.25;
+        }
+        assert!(s.set_betas(&betas).is_ok());
+        assert!(s.set_block_betas(&[1.0, 0.25]).is_ok());
+        assert!(s.set_block_betas(&[1.0]).is_err());
+        s.sweeps(2).unwrap();
+    }
+
+    #[test]
+    fn set_states_roundtrips_and_reasserts_clamps() {
+        let (f, (a, _)) = folded_ferro_pair();
+        let mut s = PackedSampler::new(1, 9);
+        s.load(&f);
+        let saved = s.states();
+        s.sweeps(3).unwrap();
+        s.set_clamps(&[(a, 1)]);
+        s.set_states(&saved).unwrap();
+        for (c, st) in s.states().iter().enumerate() {
+            assert_eq!(st[a], 1);
+            for (i, (&x, &y)) in st.iter().zip(&saved[c]).enumerate() {
+                if i != a {
+                    assert_eq!(x, y, "replica {c} spin {i}");
+                }
+            }
+        }
+        assert!(s.set_states(&saved[..10]).is_err());
+    }
+
+    #[test]
+    fn updates_counter_counts_replica_updates() {
+        let mut s = PackedSampler::new(2, 4);
+        s.sweeps(5).unwrap();
+        assert_eq!(s.updates, (2 * LANES * 5 * N_SPINS) as u64);
+    }
+
+    #[test]
+    fn serial_and_pooled_blocks_are_bit_identical() {
+        let (f, _) = folded_ferro_pair();
+        let mut a = PackedSampler::new(4, 7);
+        let mut b = PackedSampler::new(4, 7);
+        a.load(&f);
+        b.load(&f);
+        a.set_beta(1.3);
+        b.set_beta(1.3);
+        a.set_threading(Threading::Serial);
+        b.set_threading(Threading::Pooled);
+        a.sweeps(25).unwrap();
+        b.sweeps(25).unwrap();
+        assert_eq!(a.states(), b.states());
+    }
+}

@@ -4,7 +4,10 @@
 //! Layout: fixed-width CSR (Chimera degree ≤ 6) with the folded coupling
 //! weights gathered per target spin, so the inner loop is six fused
 //! multiply-adds, a tanh and a compare per p-bit update. Batched chains
-//! amortize noise generation and improve cache reuse of the CSR arrays.
+//! amortize noise generation and improve cache reuse of the CSR arrays;
+//! large batches are chunked over the persistent
+//! [`workers`](super::workers) pool (never more runners than cores —
+//! the old path spawned one OS thread per chain per call).
 
 use anyhow::Result;
 
@@ -14,7 +17,7 @@ use crate::problems::EnergyLedger;
 
 use super::clamp::apply_clamps;
 use super::noise::{ChainNoise, NoiseSource};
-use super::Sampler;
+use super::{Sampler, Threading};
 
 /// Max couplers per p-bit on the Chimera die.
 const DEG: usize = 6;
@@ -49,6 +52,8 @@ pub struct SoftwareSampler {
     e_codes: Vec<i64>,
     /// Set by out-of-band state writes; the next sync rescans.
     e_dirty: bool,
+    /// How `sweeps()` schedules chains (see [`Threading`]).
+    threading: Threading,
     /// total p-bit updates performed (for flips/s accounting)
     pub updates: u64,
 }
@@ -82,6 +87,7 @@ impl SoftwareSampler {
             ledger: None,
             e_codes: vec![0; batch],
             e_dirty: true,
+            threading: Threading::Auto,
             updates: 0,
         };
         // neighbor indices are a topology fact; weights filled by load()
@@ -95,6 +101,14 @@ impl SoftwareSampler {
         }
         s.states = (0..batch).map(|c| random_state(seed ^ (0xA11CE + c as u64))).collect();
         s
+    }
+
+    /// Override how `sweeps()` schedules chains (default
+    /// [`Threading::Auto`]). Per-chain update sequences are identical
+    /// under every policy; `tests/packed_kernel.rs` pins the serial ≡
+    /// pooled bit-identity.
+    pub fn set_threading(&mut self, threading: Threading) {
+        self.threading = threading;
     }
 
     /// Rescan every chain's code energy after an out-of-band state
@@ -178,8 +192,16 @@ fn sweep_chain(
     e_code: &mut i64,
 ) {
     for _ in 0..n {
+        // One RNG sample period per sweep: every p-bit consumes exactly
+        // one uniform (the two color groups read disjoint slab lanes),
+        // matching the silicon cadence of one bank refresh per 50 ns
+        // sample. ⚠ bit-exactness: pre-PR builds refilled the slab per
+        // color group (2× the chip's RNG rate and a misaligned stream);
+        // chip/core.rs dropped its mid-sweep refill in the same change,
+        // so the two engines stay bit-for-bit identical to each other
+        // (tests/cross_engine.rs).
+        noise.fill(slab);
         for group in groups {
-            noise.fill(slab);
             match ledger {
                 None => {
                     for &i in group {
@@ -283,10 +305,14 @@ impl Sampler for SoftwareSampler {
         self.updates += (n * batch * N_SPINS) as u64;
         self.sync_energies();
         // Chains are fully independent (own state, noise bank, scratch
-        // slab and energy cell), so spread them over scoped threads when
-        // the shared heuristic says the work amortizes the spawn cost;
-        // the per-chain sequences are identical either way.
-        let parallel = super::spawn_worthwhile(batch, n);
+        // slab and energy cell), so chunk them over the persistent
+        // worker pool when the workload amortizes the dispatch; the
+        // per-chain sequences are identical either way.
+        let pooled = match self.threading {
+            Threading::Serial => false,
+            Threading::Pooled => true,
+            Threading::Auto => super::pool_worthwhile(batch, n),
+        };
         // field-level split borrows: states/noise/slabs/energies mutable
         // per chain, everything else shared read-only
         let ledger = self.ledger.as_ref();
@@ -303,18 +329,27 @@ impl Sampler for SoftwareSampler {
             .zip(slabs.iter_mut())
             .zip(e_codes.iter_mut())
             .enumerate();
-        if parallel {
-            std::thread::scope(|scope| {
-                for (c, (((state, mut noise), slab), e_code)) in work {
-                    let beta = betas[c];
-                    scope.spawn(move || {
+        if pooled {
+            // contiguous chain chunks over at most workers + 1 runners
+            // (the caller participates in draining the pool queue)
+            let pool = super::workers::global();
+            let mut items: Vec<_> = work.collect();
+            let n_jobs = (pool.workers() + 1).clamp(1, items.len().max(1));
+            let per = items.len().div_ceil(n_jobs);
+            let mut jobs: Vec<super::workers::ScopedJob<'_>> = Vec::with_capacity(n_jobs);
+            while !items.is_empty() {
+                let tail = items.split_off(per.min(items.len()));
+                let chunk = std::mem::replace(&mut items, tail);
+                jobs.push(Box::new(move || {
+                    for (c, (((state, mut noise), slab), e_code)) in chunk {
                         sweep_chain(
-                            nbr_idx, nbr_w, h_eff, g, o, groups, beta, n, state, &mut noise,
+                            nbr_idx, nbr_w, h_eff, g, o, groups, betas[c], n, state, &mut noise,
                             slab, ledger, e_code,
                         );
-                    });
-                }
-            });
+                    }
+                }));
+            }
+            pool.run(jobs);
         } else {
             for (c, (((state, mut noise), slab), e_code)) in work {
                 sweep_chain(

@@ -1,0 +1,441 @@
+//! Persistent, optionally core-pinned sweep worker pool.
+//!
+//! Every batched sweep path used to spawn **one OS thread per chain per
+//! `sweeps()` call** (`std::thread::scope`), which both oversubscribed
+//! the machine (batch 64 on a 4-core box → 64 threads) and paid the
+//! spawn cost on every call. This module replaces that with one
+//! process-wide pool of long-lived workers:
+//!
+//! * [`SweepPool::run`] takes a vec of borrowed closures ("scoped
+//!   jobs"), queues them, and **participates in draining the queue on
+//!   the calling thread** until its own jobs are done — so a
+//!   zero-worker pool (single-core box, `PCHIP_SWEEP_THREADS=0`)
+//!   degrades to plain serial execution and nested callers can never
+//!   deadlock.
+//! * Workers spin briefly on an atomic queue hint before parking on a
+//!   condvar, so back-to-back `sweeps()` calls (the tempering round
+//!   loop) hand off without a futex round trip.
+//! * With `PCHIP_SWEEP_PIN=1` each worker pins itself to a core
+//!   (`sched_setaffinity` via raw syscall — the crate deliberately has
+//!   no libc dependency), leaving core 0 to the caller.
+//!
+//! The pool is shared: [`SoftwareSampler`](super::SoftwareSampler) and
+//! [`PackedSampler`](super::PackedSampler) chunk their chains/blocks
+//! over [`global`], and the coordinator / training-service die threads
+//! go through [`spawn_named`] so thread naming and any future affinity
+//! policy live in one place.
+//!
+//! Env knobs:
+//! * `PCHIP_SWEEP_THREADS` — worker count (default: cores − 1).
+//! * `PCHIP_SWEEP_PIN` — `1`/`true` pins worker `w` to core `w + 1`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A borrowed sweep job handed to [`SweepPool::run`]; it is guaranteed
+/// to have finished executing before `run` returns.
+pub type ScopedJob<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+/// A queued job after lifetime erasure (see the safety note in
+/// [`SweepPool::run`]).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Completion latch for one `run` call's group of jobs.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    pending: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(pending: usize) -> Self {
+        Self { state: Mutex::new(LatchState { pending, panicked: false }), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.pending -= 1;
+        st.panicked |= panicked;
+        if st.pending == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.state.lock().unwrap().pending == 0
+    }
+
+    /// Block until every job in the group completed; returns whether
+    /// any of them panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.pending > 0 {
+            st = self.done.wait(st).unwrap();
+        }
+        st.panicked
+    }
+}
+
+struct PoolState {
+    jobs: VecDeque<(Job, Arc<Latch>)>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+    /// Approximate queued-job count — the workers' pre-park spin hint.
+    hint: AtomicUsize,
+}
+
+/// The persistent sweep worker pool.
+pub struct SweepPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Iterations a worker spins on the queue hint before parking.
+const SPIN_ITERS: usize = 512;
+
+fn run_job(job: Job, latch: &Latch) {
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    latch.complete(result.is_err());
+}
+
+fn worker_loop(shared: Arc<Shared>, core: Option<usize>) {
+    if let Some(c) = core {
+        // best effort: an unsupported target or a restricted cgroup
+        // just leaves the worker floating
+        let _ = pin_thread_to_core(c);
+    }
+    loop {
+        for _ in 0..SPIN_ITERS {
+            if shared.hint.load(Ordering::Acquire) > 0 {
+                break;
+            }
+            std::hint::spin_loop();
+        }
+        let (job, latch) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(next) = st.jobs.pop_front() {
+                    break next;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        shared.hint.fetch_sub(1, Ordering::AcqRel);
+        run_job(job, &latch);
+    }
+}
+
+impl SweepPool {
+    /// Pool with `workers` long-lived threads (0 is valid: every job
+    /// then runs on the calling thread inside [`SweepPool::run`]).
+    /// With `pin`, worker `w` pins itself to core `(w + 1) % cores`.
+    pub fn new(workers: usize, pin: bool) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), shutdown: false }),
+            work_ready: Condvar::new(),
+            hint: AtomicUsize::new(0),
+        });
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let handles = (0..workers)
+            .map(|w| {
+                let sh = shared.clone();
+                let core = pin.then_some((w + 1) % cores);
+                std::thread::Builder::new()
+                    .name(format!("sweep-{w}"))
+                    .spawn(move || worker_loop(sh, core))
+                    .expect("spawning sweep worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Pool sized/configured from the environment: `PCHIP_SWEEP_THREADS`
+    /// workers (default cores − 1, so the caller's core stays free) and
+    /// `PCHIP_SWEEP_PIN` for per-core pinning.
+    pub fn from_env() -> Self {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let workers = std::env::var("PCHIP_SWEEP_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| cores.saturating_sub(1));
+        let pin = matches!(std::env::var("PCHIP_SWEEP_PIN").as_deref(), Ok("1") | Ok("true"));
+        Self::new(workers.min(256), pin)
+    }
+
+    /// Number of worker threads (excluding the participating caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every job to completion, using the workers *and* the calling
+    /// thread. Panics (after all jobs finished) if any job panicked.
+    ///
+    /// Jobs may borrow from the caller's stack: `run` only returns once
+    /// every job has executed, which is what makes the lifetime erasure
+    /// below sound.
+    pub fn run<'scope>(&self, jobs: Vec<ScopedJob<'scope>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        // SAFETY: each job is executed exactly once, and the latch wait
+        // below keeps this stack frame (hence every `'scope` borrow the
+        // jobs capture) alive until the last job has completed. A job
+        // can also be drained by *another* thread's `run` call, but that
+        // caller is itself blocked on its own latch at the time, so the
+        // borrows stay live there too.
+        let erased: Vec<Job> = jobs
+            .into_iter()
+            .map(|j| unsafe { std::mem::transmute::<ScopedJob<'scope>, Job>(j) })
+            .collect();
+        let queued = erased.len();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            for job in erased {
+                st.jobs.push_back((job, latch.clone()));
+            }
+        }
+        self.shared.hint.fetch_add(queued, Ordering::Release);
+        self.shared.work_ready.notify_all();
+        // Participate: drain queued jobs (ours or another caller's)
+        // until our group is done, then block for any stragglers still
+        // running on workers.
+        while !latch.is_done() {
+            let next = self.shared.state.lock().unwrap().jobs.pop_front();
+            match next {
+                Some((job, l)) => {
+                    self.shared.hint.fetch_sub(1, Ordering::AcqRel);
+                    run_job(job, &l);
+                }
+                None => break,
+            }
+        }
+        if latch.wait() {
+            panic!("a sweep job panicked (propagated from the sweep worker pool)");
+        }
+    }
+}
+
+impl Drop for SweepPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The process-wide pool every sweep path shares (created lazily from
+/// the environment on first use, alive for the process lifetime).
+pub fn global() -> &'static SweepPool {
+    static POOL: OnceLock<SweepPool> = OnceLock::new();
+    POOL.get_or_init(SweepPool::from_env)
+}
+
+/// Spawn a named OS thread — the one spawn helper the coordinator and
+/// training-service die/shard workers share, so thread naming (and any
+/// future affinity policy for long-lived service threads) lives here.
+pub fn spawn_named<F, T>(
+    name: impl Into<String>,
+    f: F,
+) -> std::io::Result<std::thread::JoinHandle<T>>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    std::thread::Builder::new().name(name.into()).spawn(f)
+}
+
+// ---- core affinity (raw syscalls: the crate carries no libc) ----------
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod affinity {
+    //! `sched_{set,get}affinity` for the calling thread via raw Linux
+    //! syscalls (pid 0 = self), cfg-gated per architecture.
+
+    /// 16 × 64 bits = 1024 CPUs, the kernel's common CPU_SETSIZE.
+    pub const MASK_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    const NR_SET: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const NR_GET: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const NR_SET: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const NR_GET: usize = 123;
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") nr as isize => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        std::arch::asm!(
+            "svc #0",
+            in("x8") nr,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// Current thread's affinity mask (`None` on syscall failure).
+    /// Exercised by the round-trip unit test; production code only sets.
+    #[cfg_attr(not(test), allow(dead_code))]
+    pub fn get_mask() -> Option<[u64; MASK_WORDS]> {
+        let mut mask = [0u64; MASK_WORDS];
+        let bytes = std::mem::size_of_val(&mask);
+        let r = unsafe { syscall3(NR_GET, 0, bytes, mask.as_mut_ptr() as usize) };
+        (r > 0).then_some(mask)
+    }
+
+    /// Set the current thread's affinity mask.
+    pub fn set_mask(mask: &[u64; MASK_WORDS]) -> bool {
+        let bytes = std::mem::size_of_val(mask);
+        unsafe { syscall3(NR_SET, 0, bytes, mask.as_ptr() as usize) == 0 }
+    }
+}
+
+/// Pin the calling thread to one CPU core. Returns whether the kernel
+/// accepted the affinity change; unsupported targets (non-Linux, or an
+/// architecture without the cfg-gated syscall shim) report `false` and
+/// leave the thread floating.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn pin_thread_to_core(core: usize) -> bool {
+    if core >= affinity::MASK_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; affinity::MASK_WORDS];
+    mask[core / 64] = 1u64 << (core % 64);
+    affinity::set_mask(&mask)
+}
+
+/// Pin the calling thread to one CPU core (unsupported target: no-op,
+/// always `false`).
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+pub fn pin_thread_to_core(_core: usize) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_job_with_borrowed_state() {
+        let pool = SweepPool::new(2, false);
+        let mut results = vec![0u64; 16];
+        let jobs: Vec<ScopedJob<'_>> = results
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| Box::new(move || *slot = i as u64 + 1) as ScopedJob<'_>)
+            .collect();
+        pool.run(jobs);
+        let want: Vec<u64> = (1..=16).collect();
+        assert_eq!(results, want);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = SweepPool::new(0, false);
+        assert_eq!(pool.workers(), 0);
+        let hits = AtomicU64::new(0);
+        let caller = std::thread::current().id();
+        let jobs: Vec<ScopedJob<'_>> = (0..4)
+            .map(|_| {
+                Box::new(|| {
+                    assert_eq!(std::thread::current().id(), caller);
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as ScopedJob<'_>
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn sequential_groups_reuse_the_pool() {
+        let pool = SweepPool::new(1, false);
+        for round in 0..5u64 {
+            let acc = AtomicU64::new(0);
+            let jobs: Vec<ScopedJob<'_>> = (0..8)
+                .map(|_| {
+                    Box::new(|| {
+                        acc.fetch_add(round, Ordering::Relaxed);
+                    }) as ScopedJob<'_>
+                })
+                .collect();
+            pool.run(jobs);
+            assert_eq!(acc.load(Ordering::Relaxed), 8 * round);
+        }
+    }
+
+    #[test]
+    fn job_panic_propagates_and_pool_survives() {
+        let pool = SweepPool::new(1, false);
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(vec![Box::new(|| panic!("sweep job boom")) as ScopedJob<'_>]);
+        }));
+        assert!(boom.is_err(), "pool.run must propagate a job panic");
+        // the pool keeps working afterwards
+        let ok = AtomicU64::new(0);
+        pool.run(vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        }) as ScopedJob<'_>]);
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn spawn_named_names_the_thread() {
+        let h = spawn_named("unit-named", || {
+            std::thread::current().name().map(str::to_owned)
+        })
+        .unwrap();
+        assert_eq!(h.join().unwrap().as_deref(), Some("unit-named"));
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    #[test]
+    fn affinity_roundtrip_restores_mask() {
+        let Some(saved) = affinity::get_mask() else { return };
+        if pin_thread_to_core(0) {
+            let now = affinity::get_mask().expect("getaffinity after pin");
+            assert_eq!(now[0], 1, "pinned mask should be exactly core 0");
+            assert!(now[1..].iter().all(|&w| w == 0));
+        }
+        assert!(affinity::set_mask(&saved), "restoring the original mask");
+    }
+}

@@ -69,9 +69,16 @@ impl XlaSampler {
     fn fill_noise(&mut self) {
         let (s_sweeps, batch) = (self.s_sweeps, self.batch);
         for sweep in 0..s_sweeps {
-            for phase in 0..2 {
-                for c in 0..batch {
-                    self.noise.fill(c, &mut self.slab);
+            for c in 0..batch {
+                // One RNG sample period per sweep: the artifact takes a
+                // per-phase noise tensor, but both chromatic phases read
+                // disjoint spin lanes, so feeding the same slab snapshot
+                // to both phases reproduces the chip cadence exactly
+                // (and keeps this engine bit-aligned with the software
+                // sampler's one-fill-per-sweep stream — pre-PR builds
+                // drew two bank refreshes per sweep here).
+                self.noise.fill(c, &mut self.slab);
+                for phase in 0..2 {
                     let off = ((sweep * 2 + phase) * batch + c) * N_PAD;
                     self.u[off..off + N_PAD].copy_from_slice(&self.slab);
                 }

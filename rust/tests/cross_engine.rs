@@ -34,8 +34,9 @@ fn chip_and_software_sampler_agree_bit_for_bit() {
         chip.set_beta(1.5).unwrap();
         let folded = chip.folded().clone();
 
-        // software chain 0 uses ChipRngBank::new(seed + 0) — same as the
-        // chip's bank when seeded identically.
+        // software chain 0 keeps the raw seed (the chip-fidelity path;
+        // chains ≥ 1 are splitmix-hashed) — same bank as the chip's
+        // when seeded identically.
         let mut sw = SoftwareSampler::new(1, pseed);
         sw.load(&folded);
         sw.set_beta(chip.beta() as f32);

@@ -1,0 +1,187 @@
+//! Validation of the bit-packed code-domain kernel and the persistent
+//! sweep-worker pool.
+//!
+//! 1. **Threshold tables ≡ tanh.** For every (β, slope, offset,
+//!    integer-field-code, RNG-code) tuple over a grid of temperatures
+//!    and the die's full local-field range, the packed kernel's integer
+//!    compare must reproduce the scalar engines' float flip predicate
+//!    `tanh(β·g·field + o) + u ≥ 0` exactly — the tables are a lossless
+//!    re-encoding, not an approximation.
+//! 2. **Exact Boltzmann marginals.** On small instances whose ±1
+//!    coefficients lower losslessly to 8-bit codes (a biased ferro pair
+//!    and a frustrated two-cell problem), the packed kernel's 64-replica
+//!    marginals must match brute-force enumeration — the multi-spin
+//!    coding, transpose extraction, and byte-noise cadence all stand or
+//!    fall here.
+//! 3. **Pool determinism.** Per-chain/per-block streams are fully
+//!    determined by their seeds, so serial and pooled scheduling must be
+//!    bit-identical for both the scalar and packed engines.
+
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::chimera::Topology;
+use pchip::problems::{exact_boltzmann, IsingProblem};
+use pchip::rng::code_to_uniform;
+use pchip::sampler::{field_threshold, PackedSampler, Sampler, SoftwareSampler, Threading};
+
+/// Scalar flip predicate, written exactly as the software engine
+/// computes it (tanh with the ±TANH_SAT saturation fast path).
+fn scalar_flips(beta: f32, gain: f32, offset: f32, field: f32, code: u8) -> bool {
+    let x = beta * gain * field + offset;
+    let act = if x >= pchip::chip::TANH_SAT {
+        1.0
+    } else if x <= -pchip::chip::TANH_SAT {
+        -1.0
+    } else {
+        x.tanh()
+    };
+    act + code_to_uniform(code) >= 0.0
+}
+
+#[test]
+fn threshold_table_matches_tanh_decision_exhaustively() {
+    // β grid spanning hot to frozen, a mismatched (gain, offset) pair,
+    // and every reachable local-field code: 6 couplers × ±127 plus a
+    // ±127 bias ⇒ |field code| ≤ 889.
+    for &beta in &[0.05f32, 0.4, 1.0, 1.5, 3.0, 6.0, 12.0] {
+        for &(gain, offset) in &[(1.0f32, 0.0f32), (0.93, 0.041), (1.08, -0.07)] {
+            for fc in -889i32..=889 {
+                let t = field_threshold(beta, gain, offset, fc);
+                let field = fc as f32 / 127.0;
+                for r in 0u16..256 {
+                    let packed = r >= t;
+                    let scalar = scalar_flips(beta, gain, offset, field, r as u8);
+                    assert_eq!(
+                        packed, scalar,
+                        "β={beta} g={gain} o={offset} field_code={fc} rng_code={r}: \
+                         threshold {t} disagrees with the tanh predicate"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Lower a ±1-coefficient problem losslessly and load it into `s`.
+fn load_exact(s: &mut dyn Sampler, problem: &IsingProblem, topo: &Topology) {
+    let (j, en, h, scale) = problem.to_codes(topo).unwrap();
+    assert_eq!(scale, 1.0, "±1 coefficients must lower losslessly");
+    let mut w = ProgrammedWeights::zeros(topo.edges.len());
+    w.j_codes = j;
+    w.enables = en;
+    w.h_codes = h;
+    s.load(&Personality::ideal(topo).fold(topo, &w));
+}
+
+/// Packed-kernel marginals over all replicas and post-burn-in sweeps,
+/// compared spin-by-spin to brute-force Boltzmann enumeration.
+fn assert_packed_marginals(problem: &IsingProblem, beta: f32, seed: u64, tol: f64) {
+    let topo = Topology::new();
+    let support = problem.support();
+    let (states, probs) = exact_boltzmann(problem, beta as f64).unwrap();
+    let exact_m: Vec<f64> = (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect();
+
+    let mut s = PackedSampler::new(1, seed);
+    load_exact(&mut s, problem, &topo);
+    s.set_beta(beta);
+    s.sweeps(300).unwrap();
+    let mut sums = vec![0.0f64; support.len()];
+    let mut n = 0usize;
+    for _ in 0..400 {
+        s.sweeps(2).unwrap();
+        s.for_each_state(&mut |_, st| {
+            for (k, &spin) in support.iter().enumerate() {
+                sums[k] += st[spin] as f64;
+            }
+            n += 1;
+        });
+    }
+    for (k, &spin) in support.iter().enumerate() {
+        let got = sums[k] / n as f64;
+        let want = exact_m[k];
+        assert!(
+            (got - want).abs() < tol,
+            "spin {spin}: packed marginal {got:.3} vs exact {want:.3} (β={beta})"
+        );
+    }
+}
+
+#[test]
+fn packed_marginals_match_exact_boltzmann_on_a_biased_ferro_pair() {
+    let topo = Topology::new();
+    let (a, b) = topo.edges[0];
+    let mut p = IsingProblem::new("packed-ferro-pair");
+    p.couplings.push((a, b, 1.0));
+    p.h[a] = 1.0;
+    assert_packed_marginals(&p, 0.7, 17, 0.1);
+}
+
+#[test]
+fn packed_marginals_match_exact_boltzmann_on_a_two_cell_problem() {
+    // frustrated instance across the first two Chimera cells (spins
+    // 0..16): intra-cell K4,4 edges from both cells plus the vertical
+    // couplers joining them, alternating signs, two ±1 biases.
+    let topo = Topology::new();
+    let cell_edges: Vec<(usize, usize)> =
+        topo.edges.iter().copied().filter(|&(i, j)| i < 16 && j < 16).collect();
+    assert!(cell_edges.len() >= 9, "expected two coupled K4,4 cells at spins 0..16");
+    let mut p = IsingProblem::new("packed-two-cell");
+    for (k, &(i, j)) in cell_edges.iter().take(9).enumerate() {
+        p.couplings.push((i, j, if k % 2 == 0 { 1.0 } else { -1.0 }));
+    }
+    let (a, _) = cell_edges[0];
+    let (_, b) = cell_edges[8];
+    p.h[a] = 1.0;
+    p.h[b] = -1.0;
+    let support = p.support();
+    assert!(support.len() <= 20, "keep enumeration tractable, got {}", support.len());
+    assert_packed_marginals(&p, 1.0, 29, 0.12);
+}
+
+#[test]
+fn software_pooled_sweeps_bit_identical_to_serial() {
+    let topo = Topology::new();
+    let (a, b) = topo.edges[0];
+    let mut p = IsingProblem::new("pool-determinism");
+    p.couplings.push((a, b, 1.0));
+    p.h[a] = 1.0;
+
+    let mut serial = SoftwareSampler::new(8, 5);
+    let mut pooled = SoftwareSampler::new(8, 5);
+    load_exact(&mut serial, &p, &topo);
+    load_exact(&mut pooled, &p, &topo);
+    serial.set_beta(1.2);
+    pooled.set_beta(1.2);
+    serial.set_threading(Threading::Serial);
+    pooled.set_threading(Threading::Pooled);
+    // uneven call pattern so chunk boundaries shift between calls
+    for n in [1usize, 7, 32, 3] {
+        serial.sweeps(n).unwrap();
+        pooled.sweeps(n).unwrap();
+        assert_eq!(serial.states(), pooled.states(), "diverged after {n}-sweep call");
+    }
+}
+
+#[test]
+fn packed_pooled_sweeps_bit_identical_to_serial() {
+    let topo = Topology::new();
+    let (a, b) = topo.edges[0];
+    let mut p = IsingProblem::new("packed-pool-determinism");
+    p.couplings.push((a, b, 1.0));
+    p.h[b] = -1.0;
+
+    let mut serial = PackedSampler::new(3, 13);
+    let mut pooled = PackedSampler::new(3, 13);
+    load_exact(&mut serial, &p, &topo);
+    load_exact(&mut pooled, &p, &topo);
+    serial.set_beta(0.9);
+    pooled.set_beta(0.9);
+    serial.set_threading(Threading::Serial);
+    pooled.set_threading(Threading::Pooled);
+    for n in [2usize, 11, 40] {
+        serial.sweeps(n).unwrap();
+        pooled.sweeps(n).unwrap();
+        assert_eq!(serial.states(), pooled.states(), "diverged after {n}-sweep call");
+    }
+}

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Perf-regression gate for the sampler hot-path bench.
+
+Compares a freshly measured ``BENCH_hotpath.json`` against the committed
+baseline (``rust/benches/baselines/BENCH_hotpath.json``) and fails CI
+when:
+
+* the packed kernel's speedup over the best scalar arm at batch >= 32
+  (``packed_speedup_batch32``, computed by the bench itself on the
+  *fresh* machine, so both sides of the ratio share one noise level)
+  falls below ``--min-speedup``; or
+* any arm present in both reports regresses by more than
+  ``--max-regression`` relative to the baseline.
+
+Baselines carry a ``"provisional": true`` flag when they were recorded
+on a different class of machine than CI (e.g. seeded by a dev box); a
+provisional baseline skips the per-arm regression comparison (absolute
+flips/s do not transfer across machines) but still enforces the speedup
+ratio, which does. Re-record the baseline from a CI artifact to drop
+the flag:  cp BENCH_hotpath.json rust/benches/baselines/  (and delete
+the "provisional" key).
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def arm_map(report):
+    """(arm, batch) -> flips/s for every measured arm."""
+    return {
+        (a["arm"], a["batch"]): a["flips_per_sec"]
+        for a in report.get("arms", [])
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("fresh", help="freshly measured BENCH_hotpath.json")
+    ap.add_argument("baseline", help="committed baseline BENCH_hotpath.json")
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=5.0,
+        help="minimum packed/scalar speedup at batch >= 32 (default 5.0)",
+    )
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.20,
+        help="maximum fractional per-arm slowdown vs baseline (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    base = load(args.baseline)
+    failures = []
+
+    speedup = fresh.get("packed_speedup_batch32")
+    if speedup is None:
+        failures.append("fresh report lacks packed_speedup_batch32")
+    elif speedup < args.min_speedup:
+        failures.append(
+            f"packed speedup {speedup:.2f}x < required {args.min_speedup:.1f}x"
+        )
+    else:
+        print(f"packed/scalar speedup: {speedup:.1f}x (>= {args.min_speedup:.1f}x)")
+
+    if base.get("provisional"):
+        print(
+            "baseline is provisional (recorded off-CI): "
+            "skipping per-arm regression comparison"
+        )
+    else:
+        fresh_arms = arm_map(fresh)
+        for key, ref in sorted(arm_map(base).items()):
+            got = fresh_arms.get(key)
+            if got is None:
+                continue  # arm removed or renamed: not a perf regression
+            drop = (ref - got) / ref
+            tag = f"{key[0]}(batch={key[1]})"
+            if drop > args.max_regression:
+                failures.append(
+                    f"{tag}: {got:.3e} flips/s is {drop:.0%} below "
+                    f"baseline {ref:.3e}"
+                )
+            else:
+                print(f"{tag}: {got:.3e} vs baseline {ref:.3e} ({-drop:+.0%})")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
