@@ -47,7 +47,7 @@ pub struct SpinCircuits {
 }
 
 /// Register state the personality folds (owned by [`crate::spi::RegMap`]).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ProgrammedWeights {
     /// 8-bit coupling code per canonical edge (same order as
     /// `Topology::edges`).

@@ -17,6 +17,7 @@ use crate::learning::{EpochStats, Hw, TrainCheckpoint, TrainParams, TrainableChi
 use crate::metrics::{MembershipChange, MembershipEvent};
 use crate::problems::IsingProblem;
 use crate::sampler::{SoftwareSampler, XlaSampler};
+use crate::transport::{Endpoint, MpscEndpoint, MpscTransport};
 use crate::util::fault::{FaultPlan, FaultyChip};
 
 use super::batcher::{Batch, Batcher, QueuedJob};
@@ -660,19 +661,13 @@ fn dispatch_train(
     let stats = stats.clone();
     let feedback = feedback.clone();
     let spawned = crate::sampler::workers::spawn_named("train-coordinator", move || {
-        let result = service::drive_training(
-            &params,
-            resume.as_ref(),
-            epochs,
-            &cmd_txs,
-            &out_rx,
-            |stat| {
-                if let Some(tx) = &progress {
-                    let _ = tx.send(stat.clone());
-                }
-            },
-        );
-        drop(cmd_txs); // hang up on any seat still waiting for a command
+        let net = MpscTransport::new(cmd_txs, out_rx);
+        let result = service::drive_training(&params, resume.as_ref(), epochs, &net, |stat| {
+            if let Some(tx) = &progress {
+                let _ = tx.send(stat.clone());
+            }
+        });
+        drop(net); // hang up on any seat still waiting for a command
         let msg = match result {
             Ok(run) => {
                 for seat in finally_dead(&run.membership) {
@@ -762,14 +757,15 @@ fn dispatch_sharded(
     let scale = spec.scale;
     let feedback = feedback.clone();
     let spawned = crate::sampler::workers::spawn_named("shard-coordinator", move || {
+        let net = MpscTransport::new(cmd_txs, out_rx);
         let result = if params.elastic {
-            sharded::drive_sharded_elastic(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+            sharded::drive_sharded_elastic(&params, scale, &net, |_, _, _| {})
         } else if params.pipeline {
-            sharded::drive_sharded_pipelined(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+            sharded::drive_sharded_pipelined(&params, scale, &net, |_, _, _| {})
         } else {
-            sharded::drive_sharded(&params, scale, &cmd_txs, &out_rx, |_, _, _| {})
+            sharded::drive_sharded(&params, scale, &net, |_, _, _| {})
         };
-        drop(cmd_txs); // hang up on any seat still waiting for a command
+        drop(net); // hang up on any seat still waiting for a command
         let n_sweeps = params.base.total_sweeps() as u64;
         let msg = match result {
             Ok(sr) => {
@@ -890,9 +886,10 @@ fn worker_loop<C: TrainableChip>(
                 let _ = done_tx.send(Msg::Done(k));
             }
             WorkerMsg::ShardSeat { shard, spec, needs_program, randomize_seed, cmd_rx, out_tx } => {
+                let ep = MpscEndpoint::new(cmd_rx, out_tx);
                 if needs_program {
                     if let Err(e) = chip.program_codes(&spec.codes) {
-                        let _ = out_tx.send(sharded::ShardMsg::Error {
+                        let _ = ep.send(sharded::ShardMsg::Error {
                             shard,
                             message: format!("program (die {k}): {e}"),
                         });
@@ -902,16 +899,17 @@ fn worker_loop<C: TrainableChip>(
                 }
                 chip.set_clamps(&[]);
                 chip.randomize(randomize_seed);
-                sharded::shard_worker_loop(shard, &mut chip, &spec.problem, &cmd_rx, &out_tx);
+                sharded::shard_worker_loop(shard, &mut chip, &spec.problem, &ep);
                 // the seat pinned per-chain βs; restore a uniform knob
                 // for whatever runs on this die next
                 chip.set_beta(1.0);
                 let _ = done_tx.send(Msg::Done(k));
             }
             WorkerMsg::TrainSeat { shard, params, randomize_seed, cmd_rx, out_tx } => {
+                let ep = MpscEndpoint::new(cmd_rx, out_tx);
                 chip.set_clamps(&[]);
                 chip.randomize(randomize_seed);
-                service::train_worker_loop(shard, &mut chip, &params, &cmd_rx, &out_tx);
+                service::train_worker_loop(shard, &mut chip, &params, &ep);
                 // training leaves gate clamps / per-chain βs behind;
                 // restore neutral knobs for the next tenant
                 chip.set_clamps(&[]);

@@ -45,10 +45,19 @@
 //! timeout ([`ShardedTemperingParams::barrier_timeout`]) and expires
 //! into a diagnostic error naming the stalled shard(s).
 //!
+//! The coordinator↔worker seam is a pluggable
+//! [`crate::transport::Transport`]: every driver below is generic over
+//! it, [`run_sharded_tempering`] wires the in-process mpsc default
+//! (bit-identical to the historical hard-wired channels), and
+//! [`run_sharded_tempering_simnet`] runs the same gang over the
+//! deterministic network simulator with a scripted
+//! [`crate::transport::NetPlan`] — the harness behind
+//! `rust/tests/transport_sim.rs`.
+//!
 //! [`TemperingCore`]: crate::annealing::TemperingCore
 
 use std::ops::Range;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Result};
@@ -56,9 +65,14 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::annealing::{
     BetaLadder, EnergyReadback, PipelinedCore, TemperingCore, TemperingParams, TemperingRun,
 };
-use crate::metrics::{FluxStats, MembershipChange, MembershipEvent, SwapStats};
+use crate::metrics::{FluxStats, LinkStats, MembershipChange, MembershipEvent, SwapStats};
 use crate::problems::IsingProblem;
 use crate::sampler::Sampler;
+use crate::transport::{
+    f32s_from_wire, f32s_to_wire, f64s_from_wire, f64s_to_wire, mpsc_net, sim_net,
+    spins_from_wire, spins_to_wire, Endpoint, NetPlan, Transport, Wire,
+};
+use crate::util::json::{obj, Json};
 
 /// Parameters of one sharded tempering run.
 #[derive(Debug, Clone)]
@@ -220,6 +234,11 @@ pub struct ShardedRun {
     /// Membership changes of an elastic run, in round order (empty for
     /// non-elastic runs and for elastic runs that saw no faults).
     pub membership: Vec<MembershipEvent>,
+    /// Per-link delivery counters of the transport the gang ran over
+    /// (all zeros on the lossless in-process default; the network
+    /// simulator reports exactly what its
+    /// [`crate::transport::NetPlan`] did to each lane).
+    pub net: Vec<LinkStats>,
 }
 
 impl ShardedRun {
@@ -239,26 +258,126 @@ impl ShardedRun {
     }
 }
 
-/// Coordinator → shard-worker commands.
-pub(crate) enum ShardCmd {
+/// Coordinator → shard-worker commands (crosses the gang
+/// [`Transport`]; [`Wire`]-serializable for non-shared-memory links).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardCmd {
     /// Run sweep phase `round`: pin the β slice, sweep, report back.
-    Phase { round: usize, betas: Vec<f32>, sweeps: usize },
+    Phase {
+        /// Phase index, echoed back in the readback's tag.
+        round: usize,
+        /// The β slice for this die's chain block.
+        betas: Vec<f32>,
+        /// Sweeps to run before reporting.
+        sweeps: usize,
+    },
     /// The run is over; leave the seat.
     Finish,
 }
 
-/// Shard-worker → coordinator messages.
-pub(crate) enum ShardMsg {
+/// Shard-worker → coordinator messages (crosses the gang
+/// [`Transport`]; [`Wire`]-serializable for non-shared-memory links).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardMsg {
     /// Sent once on joining: how many chains this die contributes.
-    Ready { shard: usize, batch: usize },
+    Ready {
+        /// The sender's seat number.
+        shard: usize,
+        /// Chains on the sender's die.
+        batch: usize,
+    },
     /// One sweep phase's output (all of the die's chains, in order).
     /// `round` echoes the command's phase index — the pipelined
     /// scheduler keeps two phases in flight, so a fast shard's phase
     /// t+1 readback can arrive while a slower shard still owes phase t
     /// and must not be mistaken for it.
-    Phase { shard: usize, round: usize, states: Vec<Vec<i8>>, energies: Vec<f64> },
+    Phase {
+        /// The sender's seat number.
+        shard: usize,
+        /// The phase tag of the command this answers.
+        round: usize,
+        /// Post-sweep chain states, in the die's chain order.
+        states: Vec<Vec<i8>>,
+        /// Post-sweep chain energies, aligned with `states`.
+        energies: Vec<f64>,
+    },
     /// The shard failed (engine error, unsupported per-chain β, …).
-    Error { shard: usize, message: String },
+    Error {
+        /// The sender's seat number.
+        shard: usize,
+        /// The failure, formatted for the diagnostic.
+        message: String,
+    },
+}
+
+impl Wire for ShardCmd {
+    fn to_wire(&self) -> Json {
+        match self {
+            ShardCmd::Phase { round, betas, sweeps } => obj(vec![
+                ("t", Json::from("sweep")),
+                ("round", Json::from(*round)),
+                ("betas", f32s_to_wire(betas)),
+                ("sweeps", Json::from(*sweeps)),
+            ]),
+            ShardCmd::Finish => obj(vec![("t", Json::from("finish"))]),
+        }
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        match v.req("t")?.as_str()? {
+            "sweep" => Ok(ShardCmd::Phase {
+                round: v.req("round")?.as_usize()?,
+                betas: f32s_from_wire(v.req("betas")?)?,
+                sweeps: v.req("sweeps")?.as_usize()?,
+            }),
+            "finish" => Ok(ShardCmd::Finish),
+            other => bail!("unknown ShardCmd tag `{other}`"),
+        }
+    }
+}
+
+impl Wire for ShardMsg {
+    fn to_wire(&self) -> Json {
+        match self {
+            ShardMsg::Ready { shard, batch } => obj(vec![
+                ("t", Json::from("join")),
+                ("shard", Json::from(*shard)),
+                ("batch", Json::from(*batch)),
+            ]),
+            ShardMsg::Phase { shard, round, states, energies } => obj(vec![
+                ("t", Json::from("phase")),
+                ("shard", Json::from(*shard)),
+                ("round", Json::from(*round)),
+                ("states", spins_to_wire(states)),
+                ("energies", f64s_to_wire(energies)),
+            ]),
+            ShardMsg::Error { shard, message } => obj(vec![
+                ("t", Json::from("fail")),
+                ("shard", Json::from(*shard)),
+                ("message", Json::from(message.as_str())),
+            ]),
+        }
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        match v.req("t")?.as_str()? {
+            "join" => Ok(ShardMsg::Ready {
+                shard: v.req("shard")?.as_usize()?,
+                batch: v.req("batch")?.as_usize()?,
+            }),
+            "phase" => Ok(ShardMsg::Phase {
+                shard: v.req("shard")?.as_usize()?,
+                round: v.req("round")?.as_usize()?,
+                states: spins_from_wire(v.req("states")?)?,
+                energies: f64s_from_wire(v.req("energies")?)?,
+            }),
+            "fail" => Ok(ShardMsg::Error {
+                shard: v.req("shard")?.as_usize()?,
+                message: v.req("message")?.as_str()?.to_string(),
+            }),
+            other => bail!("unknown ShardMsg tag `{other}`"),
+        }
+    }
 }
 
 /// The shard worker's half of the protocol: announce the die, then
@@ -267,21 +386,20 @@ pub(crate) enum ShardMsg {
 /// spawned by [`run_sharded_tempering`].
 ///
 /// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
-pub(crate) fn shard_worker_loop<S: Sampler>(
+pub(crate) fn shard_worker_loop<S: Sampler, E: Endpoint<ShardCmd, ShardMsg>>(
     shard: usize,
     sampler: &mut S,
     problem: &IsingProblem,
-    cmd_rx: &mpsc::Receiver<ShardCmd>,
-    out_tx: &mpsc::Sender<ShardMsg>,
+    ep: &E,
 ) {
     // incremental ΔE readback where the engine supports it; engines
     // without a flip stream rescan through the same code-domain ledger,
     // so every shard scores swaps against the same Hamiltonian
     let readback = EnergyReadback::install(sampler, problem);
-    if out_tx.send(ShardMsg::Ready { shard, batch: sampler.batch() }).is_err() {
+    if ep.send(ShardMsg::Ready { shard, batch: sampler.batch() }).is_err() {
         return; // coordinator already gone
     }
-    while let Ok(cmd) = cmd_rx.recv() {
+    while let Ok(cmd) = ep.recv() {
         match cmd {
             ShardCmd::Finish => break,
             ShardCmd::Phase { round, betas, sweeps } => {
@@ -296,7 +414,7 @@ pub(crate) fn shard_worker_loop<S: Sampler>(
                 // regrows the gang when one answers again. Non-elastic
                 // coordinators bail on the Error and drop this channel,
                 // which ends the loop through the recv below.
-                if out_tx.send(msg).is_err() {
+                if ep.send(msg).is_err() {
                     break;
                 }
             }
@@ -324,25 +442,18 @@ fn sweep_phase<S: Sampler>(
     Ok(ShardMsg::Phase { shard, round, states, energies })
 }
 
-fn recv_by(
-    rx: &mpsc::Receiver<ShardMsg>,
-    deadline: Instant,
-) -> Result<ShardMsg, mpsc::RecvTimeoutError> {
-    rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
-}
-
 /// Handshake: learn each die's chain count (bounded wait — a worker
 /// that dies before joining must not hang the job).
-fn handshake(
+fn handshake<T: Transport<ShardCmd, ShardMsg>>(
     shards: usize,
-    out_rx: &mpsc::Receiver<ShardMsg>,
+    net: &T,
     timeout: Duration,
 ) -> Result<Vec<usize>> {
     let mut batches = vec![0usize; shards];
     let mut joined = vec![false; shards];
     let deadline = Instant::now() + timeout;
     for _ in 0..shards {
-        match recv_by(out_rx, deadline) {
+        match net.recv_deadline(deadline) {
             Ok(ShardMsg::Ready { shard, batch }) => {
                 batches[shard] = batch;
                 joined[shard] = true;
@@ -363,16 +474,16 @@ fn handshake(
 }
 
 /// Fan one sweep phase's β slices out to every shard.
-fn send_phase(
+fn send_phase<T: Transport<ShardCmd, ShardMsg>>(
     betas: &[f32],
     plan: &ShardPlan,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
+    net: &T,
     sweeps: usize,
     round: usize,
 ) -> Result<()> {
-    for (s, tx) in cmd_txs.iter().enumerate() {
+    for s in 0..plan.shards() {
         let slice = betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
-        if tx.send(ShardCmd::Phase { round, betas: slice, sweeps }).is_err() {
+        if net.send(s, ShardCmd::Phase { round, betas: slice, sweeps }).is_err() {
             bail!("sharded tempering: shard {s} hung up before round {round}");
         }
     }
@@ -412,9 +523,9 @@ fn place_phase(
 /// `round`; those early arrivals park in `stash` (at most one per
 /// shard — the pipeline is depth 2) and are consumed first on the next
 /// call. Any other round tag is a protocol error.
-fn collect_phase(
+fn collect_phase<T: Transport<ShardCmd, ShardMsg>>(
     plan: &ShardPlan,
-    out_rx: &mpsc::Receiver<ShardMsg>,
+    net: &T,
     timeout: Duration,
     round: usize,
     states: &mut [Vec<i8>],
@@ -433,7 +544,7 @@ fn collect_phase(
     }
     let deadline = Instant::now() + timeout;
     while remaining > 0 {
-        match recv_by(out_rx, deadline) {
+        match net.recv_deadline(deadline) {
             Ok(ShardMsg::Phase { shard, round: r, states: st, energies: en }) => {
                 ensure!(shard < shards, "unknown shard {shard}");
                 if r == round && !seen[shard] {
@@ -498,6 +609,7 @@ fn attribute(run: TemperingRun, plan: &ShardPlan) -> ShardedRun {
         boundary_pairs,
         shards,
         membership: Vec::new(),
+        net: Vec::new(),
     }
 }
 
@@ -507,19 +619,19 @@ fn attribute(run: TemperingRun, plan: &ShardPlan) -> ShardedRun {
 /// [`TemperingCore`]. `observe(round, global_states, chain_at_rung)`
 /// mirrors [`crate::annealing::temper_observed`] with chains in shard
 /// order.
-pub(crate) fn drive_sharded<F>(
+pub(crate) fn drive_sharded<T, F>(
     params: &ShardedTemperingParams,
     beta_scale: f64,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
-    out_rx: &mpsc::Receiver<ShardMsg>,
+    net: &T,
     mut observe: F,
 ) -> Result<ShardedRun>
 where
+    T: Transport<ShardCmd, ShardMsg>,
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
-    let shards = cmd_txs.len();
+    let shards = net.links();
     ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
-    let batches = handshake(shards, out_rx, params.barrier_timeout)?;
+    let batches = handshake(shards, net, params.barrier_timeout)?;
     let plan = ShardPlan::new(&params.base.ladder, &batches)?;
     let mut core =
         TemperingCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
@@ -530,13 +642,13 @@ where
     let mut stash: Vec<StashedPhase> = (0..plan.shards()).map(|_| None).collect();
     for round in 0..params.base.rounds {
         // 1. fan this round's β slices out to the shards
-        send_phase(&core.chain_betas(beta_scale), &plan, cmd_txs, sweeps, round)?;
+        send_phase(&core.chain_betas(beta_scale), &plan, net, sweeps, round)?;
         // 2. swap barrier: every shard must report, within the timeout
         //    (serial schedule: one phase in flight, the stash stays
         //    empty — it exists for the pipelined scheduler)
         collect_phase(
             &plan,
-            out_rx,
+            net,
             params.barrier_timeout,
             round,
             &mut states,
@@ -548,10 +660,12 @@ where
         observe(round, &states, core.chain_at_rung());
         core.finish_round(round, &energies, &states);
     }
-    for tx in cmd_txs {
-        let _ = tx.send(ShardCmd::Finish);
+    for s in 0..shards {
+        let _ = net.send(s, ShardCmd::Finish);
     }
-    Ok(attribute(core.into_run(), &plan))
+    let mut sharded = attribute(core.into_run(), &plan);
+    sharded.net = net.link_stats();
+    Ok(sharded)
 }
 
 /// The pipelined coordinator: identical protocol, different schedule —
@@ -563,20 +677,20 @@ where
 /// lag of [`crate::annealing::PipelinedCore`]); the run is exactly as
 /// deterministic as the serial schedule and bit-identical to
 /// [`crate::annealing::temper_pipelined`] in the 1-shard case.
-pub(crate) fn drive_sharded_pipelined<F>(
+pub(crate) fn drive_sharded_pipelined<T, F>(
     params: &ShardedTemperingParams,
     beta_scale: f64,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
-    out_rx: &mpsc::Receiver<ShardMsg>,
+    net: &T,
     mut observe: F,
 ) -> Result<ShardedRun>
 where
+    T: Transport<ShardCmd, ShardMsg>,
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
-    let shards = cmd_txs.len();
+    let shards = net.links();
     ensure!(shards == params.shards, "{} seats for {} shards", shards, params.shards);
     ensure!(params.base.rounds >= 1, "pipelined tempering needs at least one round");
-    let batches = handshake(shards, out_rx, params.barrier_timeout)?;
+    let batches = handshake(shards, net, params.barrier_timeout)?;
     let plan = ShardPlan::new(&params.base.ladder, &batches)?;
     let mut core =
         PipelinedCore::with_assignment(&params.base, plan.total_chains, plan.chain_at_rung())?;
@@ -587,19 +701,19 @@ where
     let mut stash: Vec<StashedPhase> = (0..plan.shards()).map(|_| None).collect();
     // prime the double buffer: phase 0 goes out before any readback
     let betas = core.launch(beta_scale).expect("at least one round");
-    send_phase(&betas, &plan, cmd_txs, sweeps, 0)?;
+    send_phase(&betas, &plan, net, sweeps, 0)?;
     for round in 0..params.base.rounds {
         // 1. hand out phase round+1 BEFORE collecting phase round, so
         //    no worker ever idles at the barrier (its queue already
         //    holds the next phase when it reports this one)
         if let Some(betas) = core.launch(beta_scale) {
-            send_phase(&betas, &plan, cmd_txs, sweeps, round + 1)?;
+            send_phase(&betas, &plan, net, sweeps, round + 1)?;
         }
         // 2. collect phase round's readback (bounded); a fast shard's
         //    phase round+1 message arriving early parks in the stash
         collect_phase(
             &plan,
-            out_rx,
+            net,
             params.barrier_timeout,
             round,
             &mut states,
@@ -610,10 +724,12 @@ where
         observe(round, &states, core.chain_at_rung());
         core.score(&energies, &states);
     }
-    for tx in cmd_txs {
-        let _ = tx.send(ShardCmd::Finish);
+    for s in 0..shards {
+        let _ = net.send(s, ShardCmd::Finish);
     }
-    Ok(attribute(core.into_run(), &plan))
+    let mut sharded = attribute(core.into_run(), &plan);
+    sharded.net = net.link_stats();
+    Ok(sharded)
 }
 
 /// Fold one elastic segment's finished run into the accumulated record:
@@ -669,20 +785,20 @@ fn elastic_rungs(target: usize, survivor_batches: &[usize]) -> usize {
 /// cannot cover the full chain array). In pipelined mode the in-flight
 /// phase at a change — including any stashed readback from the dead
 /// shard — is discarded, never replayed.
-pub(crate) fn drive_sharded_elastic<F>(
+pub(crate) fn drive_sharded_elastic<T, F>(
     params: &ShardedTemperingParams,
     beta_scale: f64,
-    cmd_txs: &[mpsc::Sender<ShardCmd>],
-    out_rx: &mpsc::Receiver<ShardMsg>,
+    net: &T,
     mut observe: F,
 ) -> Result<ShardedRun>
 where
+    T: Transport<ShardCmd, ShardMsg>,
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
-    let workers = cmd_txs.len();
+    let workers = net.links();
     ensure!(workers == params.shards, "{} seats for {} shards", workers, params.shards);
     ensure!(params.base.rounds >= 1, "elastic tempering needs at least one round");
-    let batches = handshake(workers, out_rx, params.barrier_timeout)?;
+    let batches = handshake(workers, net, params.barrier_timeout)?;
     let total_rounds = params.base.rounds;
     let sweeps = params.base.sweeps_per_round;
 
@@ -775,7 +891,7 @@ where
                     let slice =
                         betas[plan.offsets[s]..plan.offsets[s] + plan.batches[s]].to_vec();
                     let cmd = ShardCmd::Phase { round: $tag, betas: slice, sweeps };
-                    if cmd_txs[w].send(cmd).is_err() && alive[w] {
+                    if net.send(w, cmd).is_err() && alive[w] {
                         alive[w] = false;
                         events.push(MembershipEvent {
                             round: $tag,
@@ -794,7 +910,7 @@ where
                         betas: vec![1.0; batches[w]],
                         sweeps,
                     };
-                    let _ = cmd_txs[w].send(cmd);
+                    let _ = net.send(w, cmd);
                 }
             }};
         }
@@ -828,7 +944,7 @@ where
             }
             let deadline = Instant::now() + params.barrier_timeout;
             while remaining > 0 && !changed {
-                match recv_by(out_rx, deadline) {
+                match net.recv_deadline(deadline) {
                     Ok(ShardMsg::Phase { shard: w, round: r, states: st, energies: en }) => {
                         ensure!(w < workers, "unknown shard {w}");
                         if !alive[w] {
@@ -915,13 +1031,14 @@ where
         last_plan = Some(plan);
     }
 
-    for tx in cmd_txs {
-        let _ = tx.send(ShardCmd::Finish);
+    for w in 0..workers {
+        let _ = net.send(w, ShardCmd::Finish);
     }
     let plan = last_plan.expect("at least one segment ran");
     let run = acc.expect("at least one segment ran");
     let mut sharded = attribute(run, &plan);
     sharded.membership = events;
+    sharded.net = net.link_stats();
     Ok(sharded)
 }
 
@@ -964,6 +1081,52 @@ where
     S: Sampler + Send + 'static,
     F: FnMut(usize, &[Vec<i8>], &[usize]),
 {
+    let (net, endpoints) = mpsc_net::<ShardCmd, ShardMsg>(samplers.len());
+    run_sharded_over(samplers, problem, params, beta_scale, net, endpoints, observe)
+}
+
+/// [`run_sharded_tempering_observed`] over the deterministic network
+/// simulator: every protocol message crosses the
+/// [`crate::transport::Wire`] codec and the impairments scripted in
+/// `net_plan` ([`crate::transport::SimNet`]). With
+/// [`NetPlan::none`] the run is bit-identical to the in-process mpsc
+/// path; with drops or partitions the elastic machinery
+/// ([`ShardedTemperingParams::elastic`]) shrinks and regrows the gang
+/// exactly as it does for die faults. [`ShardedRun::net`] reports what
+/// the plan did to each link.
+pub fn run_sharded_tempering_simnet<S, F>(
+    samplers: Vec<S>,
+    problem: &IsingProblem,
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    net_plan: &NetPlan,
+    observe: F,
+) -> Result<ShardedRun>
+where
+    S: Sampler + Send + 'static,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let (net, endpoints) = sim_net::<ShardCmd, ShardMsg>(samplers.len(), net_plan);
+    run_sharded_over(samplers, problem, params, beta_scale, net, endpoints, observe)
+}
+
+/// Shared gang bring-up: seat each sampler on a worker thread behind
+/// its transport endpoint, drive the configured scheduler, tear down.
+fn run_sharded_over<S, E, T, F>(
+    samplers: Vec<S>,
+    problem: &IsingProblem,
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    net: T,
+    endpoints: Vec<E>,
+    observe: F,
+) -> Result<ShardedRun>
+where
+    S: Sampler + Send + 'static,
+    E: Endpoint<ShardCmd, ShardMsg> + Send + 'static,
+    T: Transport<ShardCmd, ShardMsg>,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
     ensure!(
         samplers.len() == params.shards,
         "params ask for {} shards but {} samplers were provided",
@@ -971,30 +1134,25 @@ where
         samplers.len()
     );
     let problem = Arc::new(problem.clone());
-    let (out_tx, out_rx) = mpsc::channel();
-    let mut cmd_txs = Vec::with_capacity(samplers.len());
     let mut joins = Vec::with_capacity(samplers.len());
-    for (shard, mut sampler) in samplers.into_iter().enumerate() {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<ShardCmd>();
-        cmd_txs.push(cmd_tx);
-        let out = out_tx.clone();
+    for (shard, (mut sampler, ep)) in samplers.into_iter().zip(endpoints).enumerate() {
         let prob = problem.clone();
         joins.push(
             crate::sampler::workers::spawn_named(format!("shard-{shard}"), move || {
-                shard_worker_loop(shard, &mut sampler, &prob, &cmd_rx, &out)
+                shard_worker_loop(shard, &mut sampler, &prob, &ep)
             })
             .map_err(|e| anyhow!("spawning shard {shard}: {e}"))?,
         );
     }
-    drop(out_tx);
     let result = if params.elastic {
-        drive_sharded_elastic(params, beta_scale, &cmd_txs, &out_rx, observe)
+        drive_sharded_elastic(params, beta_scale, &net, observe)
     } else if params.pipeline {
-        drive_sharded_pipelined(params, beta_scale, &cmd_txs, &out_rx, observe)
+        drive_sharded_pipelined(params, beta_scale, &net, observe)
     } else {
-        drive_sharded(params, beta_scale, &cmd_txs, &out_rx, observe)
+        drive_sharded(params, beta_scale, &net, observe)
     };
-    drop(cmd_txs);
+    // hang up on any worker still waiting for a command
+    drop(net);
     if result.is_ok() && !params.elastic {
         // every worker saw Finish (or a hangup) — reap them
         for j in joins {

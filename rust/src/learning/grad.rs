@@ -91,7 +91,7 @@ pub fn phase_spec(
 /// Sums — not means — so accumulation distributes: each positive slot
 /// is owned by whichever die ran that pattern, the negative slot pools
 /// every die's free chains, and [`GradAccum::merge`] is plain addition.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GradAccum {
     /// Data phase: `pos_c[p][k]` = Σ m_i·m_j over pattern p's samples,
     /// for learnable edge k.

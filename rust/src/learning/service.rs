@@ -57,13 +57,21 @@
 //! `pchip train --dies N [--pcd] [--tempered-negative]` is the CLI
 //! front end, and `docs/TRAINING.md` the practitioner guide.
 //!
+//! The coordinator↔worker seam itself is pluggable: the epoch protocol
+//! runs over any [`crate::transport::Transport`] /
+//! [`crate::transport::Endpoint`] pair — the in-process mpsc default
+//! ([`run_training`]), or the deterministic network simulator
+//! ([`run_training_simnet`], exercised by `tests/transport_sim.rs`) —
+//! with [`TrainCmd`] / [`TrainMsg`] crossing lossy links serialized
+//! through [`crate::transport::Wire`].
+//!
 //! [`CdTrainer`]: crate::learning::CdTrainer
 //! [`CdTrainer::train`]: crate::learning::CdTrainer::train
 
 use std::collections::{BTreeMap, VecDeque};
 use std::ops::Range;
 use std::path::Path;
-use std::sync::{mpsc, Arc};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
@@ -71,7 +79,11 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use crate::analog::ProgrammedWeights;
 use crate::annealing::{BetaLadder, LadderTuning, TemperingCore, TemperingParams};
 use crate::chimera::GateLayout;
-use crate::metrics::{MembershipChange, MembershipEvent, StateHistogram};
+use crate::metrics::{LinkStats, MembershipChange, MembershipEvent, StateHistogram};
+use crate::transport::{
+    bools_from_wire, bools_to_wire, f64s_from_wire, f64s_to_wire, i8s_from_wire, i8s_to_wire,
+    mpsc_net, sim_net, spins_from_wire, spins_to_wire, Endpoint, NetPlan, Transport, Wire,
+};
 use crate::util::json::{obj, Json};
 
 use super::cd::{kl_and_valid, CdParams, CdTrainer, EpochStats};
@@ -373,12 +385,49 @@ pub fn seat_seed(params_seed: u64, shard: usize) -> u64 {
 /// tempered negative phase's swap moves score states with (the analog
 /// path already perturbs the sampled distribution; the shadow weights
 /// are the best logical model available, exactly as on silicon).
-#[derive(Debug, Clone)]
-pub(crate) struct ShadowEnergy {
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShadowEnergy {
     edges: Vec<(usize, usize)>,
     w: Vec<f64>,
     spins: Vec<usize>,
     b: Vec<f64>,
+}
+
+impl Wire for ShadowEnergy {
+    fn to_wire(&self) -> Json {
+        let edges = Json::Arr(
+            self.edges
+                .iter()
+                .map(|&(i, j)| Json::Arr(vec![Json::Num(i as f64), Json::Num(j as f64)]))
+                .collect(),
+        );
+        obj(vec![
+            ("edges", edges),
+            ("w", f64s_to_wire(&self.w)),
+            ("spins", Json::Arr(self.spins.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ("b", f64s_to_wire(&self.b)),
+        ])
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        let edges: Result<Vec<(usize, usize)>> = v
+            .req("edges")?
+            .as_arr()?
+            .iter()
+            .map(|pair| {
+                let p = pair.as_arr()?;
+                ensure!(p.len() == 2, "edge is not an (i, j) pair");
+                Ok((p[0].as_usize()?, p[1].as_usize()?))
+            })
+            .collect();
+        let edges = edges?;
+        let w = f64s_from_wire(v.req("w")?)?;
+        let spins = v.req("spins")?.usize_array()?;
+        let b = f64s_from_wire(v.req("b")?)?;
+        ensure!(w.len() == edges.len(), "shadow has {} weights for {} edges", w.len(), edges.len());
+        ensure!(b.len() == spins.len(), "shadow has {} biases for {} spins", b.len(), spins.len());
+        Ok(Self { edges, w, spins, b })
+    }
 }
 
 impl ShadowEnergy {
@@ -399,8 +448,8 @@ impl ShadowEnergy {
 }
 
 /// One die's share of one epoch.
-#[derive(Debug, Clone)]
-pub(crate) struct EpochShard {
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochShard {
     /// The pattern shard as a range of dataset rows (workers hold the
     /// dataset via their shared params — only the range travels),
     /// possibly empty. `start` is the [`GradAccum`] slot offset.
@@ -420,8 +469,114 @@ pub(crate) struct EpochShard {
     pub tag: u64,
 }
 
+impl Wire for EpochShard {
+    fn to_wire(&self) -> Json {
+        let mut pairs = vec![
+            ("start", Json::from(self.patterns.start)),
+            ("end", Json::from(self.patterns.end)),
+            ("neg_samples", Json::from(self.neg_samples)),
+            ("neg_burn_in", Json::Bool(self.neg_burn_in)),
+            ("tag", Json::Num(self.tag as f64)),
+        ];
+        if let Some(shadow) = &self.shadow {
+            pairs.push(("shadow", shadow.to_wire()));
+        }
+        obj(pairs)
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        let start = v.req("start")?.as_usize()?;
+        let end = v.req("end")?.as_usize()?;
+        ensure!(start <= end, "pattern range {start}..{end} is inverted");
+        Ok(Self {
+            patterns: start..end,
+            neg_samples: v.req("neg_samples")?.as_usize()?,
+            neg_burn_in: v.req("neg_burn_in")?.as_bool()?,
+            shadow: match v.get("shadow") {
+                Some(s) => Some(ShadowEnergy::from_wire(s)?),
+                None => None,
+            },
+            tag: v.req("tag")?.as_usize()? as u64,
+        })
+    }
+}
+
+/// Encode a register image for [`TrainCmd::Program`].
+fn codes_to_wire(c: &ProgrammedWeights) -> Json {
+    obj(vec![
+        ("j_codes", i8s_to_wire(&c.j_codes)),
+        ("enables", bools_to_wire(&c.enables)),
+        ("h_codes", i8s_to_wire(&c.h_codes)),
+    ])
+}
+
+/// Decode what [`codes_to_wire`] wrote, validating that the enables
+/// cover the coupling codes.
+fn codes_from_wire(v: &Json) -> Result<ProgrammedWeights> {
+    let c = ProgrammedWeights {
+        j_codes: i8s_from_wire(v.req("j_codes")?)?,
+        enables: bools_from_wire(v.req("enables")?)?,
+        h_codes: i8s_from_wire(v.req("h_codes")?)?,
+    };
+    ensure!(
+        c.enables.len() == c.j_codes.len(),
+        "{} enables for {} coupling codes",
+        c.enables.len(),
+        c.j_codes.len()
+    );
+    Ok(c)
+}
+
+/// Encode a phase accumulator for [`TrainMsg::Grad`]. Exact: every sum
+/// is integer-valued (±1-product counts) and the counts are `u64`s far
+/// below 2⁵³, so the JSON round trip is lossless.
+fn accum_to_wire(a: &GradAccum) -> Json {
+    obj(vec![
+        ("pos_c", Json::Arr(a.pos_c.iter().map(|row| f64s_to_wire(row)).collect())),
+        ("pos_m", Json::Arr(a.pos_m.iter().map(|row| f64s_to_wire(row)).collect())),
+        ("pos_n", Json::Arr(a.pos_n.iter().map(|&n| Json::Num(n as f64)).collect())),
+        ("neg_c", f64s_to_wire(&a.neg_c)),
+        ("neg_m", f64s_to_wire(&a.neg_m)),
+        ("neg_n", Json::Num(a.neg_n as f64)),
+    ])
+}
+
+/// Decode what [`accum_to_wire`] wrote, validating the cross-field
+/// shape invariants [`GradAccum::merge`] asserts on.
+fn accum_from_wire(v: &Json) -> Result<GradAccum> {
+    let rows = |key: &str| -> Result<Vec<Vec<f64>>> {
+        v.req(key)?.as_arr()?.iter().map(f64s_from_wire).collect()
+    };
+    let a = GradAccum {
+        pos_c: rows("pos_c")?,
+        pos_m: rows("pos_m")?,
+        pos_n: v
+            .req("pos_n")?
+            .as_arr()?
+            .iter()
+            .map(|n| Ok(n.as_usize()? as u64))
+            .collect::<Result<Vec<u64>>>()?,
+        neg_c: f64s_from_wire(v.req("neg_c")?)?,
+        neg_m: f64s_from_wire(v.req("neg_m")?)?,
+        neg_n: v.req("neg_n")?.as_usize()? as u64,
+    };
+    let patterns = a.pos_n.len();
+    ensure!(
+        a.pos_c.len() == patterns && a.pos_m.len() == patterns,
+        "accumulator rows disagree on the pattern count"
+    );
+    for p in 0..patterns {
+        ensure!(
+            a.pos_c[p].len() == a.neg_c.len() && a.pos_m[p].len() == a.neg_m.len(),
+            "accumulator pattern slot {p} disagrees on the edge/spin count"
+        );
+    }
+    Ok(a)
+}
+
 /// Coordinator → train-worker commands.
-pub(crate) enum TrainCmd {
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainCmd {
     /// Program this register image through the die's own personality
     /// and pin the training β.
     Program {
@@ -449,7 +604,8 @@ pub(crate) enum TrainCmd {
 }
 
 /// Train-worker → coordinator messages.
-pub(crate) enum TrainMsg {
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainMsg {
     /// Sent once on joining: how many chains this die has.
     Ready {
         /// Shard index of the sender.
@@ -493,6 +649,108 @@ pub(crate) enum TrainMsg {
     },
 }
 
+impl Wire for TrainCmd {
+    fn to_wire(&self) -> Json {
+        match self {
+            TrainCmd::Program { codes, beta } => obj(vec![
+                ("tag", Json::from("program")),
+                ("codes", codes_to_wire(codes)),
+                ("beta", Json::Num(*beta as f64)),
+            ]),
+            TrainCmd::Restore { states } => {
+                obj(vec![("tag", Json::from("restore")), ("states", spins_to_wire(states))])
+            }
+            TrainCmd::Epoch(work) => {
+                obj(vec![("tag", Json::from("epoch")), ("work", work.to_wire())])
+            }
+            TrainCmd::Eval { samples } => {
+                obj(vec![("tag", Json::from("eval")), ("samples", Json::from(*samples))])
+            }
+            TrainCmd::Checkpoint => obj(vec![("tag", Json::from("checkpoint"))]),
+            TrainCmd::Finish => obj(vec![("tag", Json::from("done"))]),
+        }
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        match v.req("tag")?.as_str()? {
+            "program" => Ok(TrainCmd::Program {
+                codes: codes_from_wire(v.req("codes")?)?,
+                beta: v.req("beta")?.as_f64()? as f32,
+            }),
+            "restore" => Ok(TrainCmd::Restore { states: spins_from_wire(v.req("states")?)? }),
+            "epoch" => Ok(TrainCmd::Epoch(EpochShard::from_wire(v.req("work")?)?)),
+            "eval" => Ok(TrainCmd::Eval { samples: v.req("samples")?.as_usize()? }),
+            "checkpoint" => Ok(TrainCmd::Checkpoint),
+            "done" => Ok(TrainCmd::Finish),
+            other => bail!("unknown TrainCmd tag {other:?}"),
+        }
+    }
+}
+
+impl Wire for TrainMsg {
+    fn to_wire(&self) -> Json {
+        match self {
+            TrainMsg::Ready { shard, batch } => obj(vec![
+                ("tag", Json::from("ready")),
+                ("shard", Json::from(*shard)),
+                ("batch", Json::from(*batch)),
+            ]),
+            TrainMsg::Grad { shard, accum, sweeps, tag } => obj(vec![
+                ("tag", Json::from("grad")),
+                ("shard", Json::from(*shard)),
+                ("accum", accum_to_wire(accum)),
+                ("sweeps", Json::Num(*sweeps as f64)),
+                ("attempt", Json::Num(*tag as f64)),
+            ]),
+            TrainMsg::Hist { shard, hist, sweeps } => obj(vec![
+                ("tag", Json::from("hist")),
+                ("shard", Json::from(*shard)),
+                ("hist", hist.to_json()),
+                ("sweeps", Json::Num(*sweeps as f64)),
+            ]),
+            TrainMsg::Chains { shard, states } => obj(vec![
+                ("tag", Json::from("chains")),
+                ("shard", Json::from(*shard)),
+                ("states", spins_to_wire(states)),
+            ]),
+            TrainMsg::Error { shard, message } => obj(vec![
+                ("tag", Json::from("error")),
+                ("shard", Json::from(*shard)),
+                ("message", Json::from(message.clone())),
+            ]),
+        }
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        let shard = || v.req("shard")?.as_usize();
+        match v.req("tag")?.as_str()? {
+            "ready" => {
+                Ok(TrainMsg::Ready { shard: shard()?, batch: v.req("batch")?.as_usize()? })
+            }
+            "grad" => Ok(TrainMsg::Grad {
+                shard: shard()?,
+                accum: accum_from_wire(v.req("accum")?)?,
+                sweeps: v.req("sweeps")?.as_usize()? as u64,
+                tag: v.req("attempt")?.as_usize()? as u64,
+            }),
+            "hist" => Ok(TrainMsg::Hist {
+                shard: shard()?,
+                hist: StateHistogram::from_json(v.req("hist")?)?,
+                sweeps: v.req("sweeps")?.as_usize()? as u64,
+            }),
+            "chains" => Ok(TrainMsg::Chains {
+                shard: shard()?,
+                states: spins_from_wire(v.req("states")?)?,
+            }),
+            "error" => Ok(TrainMsg::Error {
+                shard: shard()?,
+                message: v.req("message")?.as_str()?.to_string(),
+            }),
+            other => bail!("unknown TrainMsg tag {other:?}"),
+        }
+    }
+}
+
 /// Persistent tempered-negative state a worker keeps between epochs.
 struct NegCore {
     core: TemperingCore,
@@ -505,20 +763,19 @@ struct NegCore {
 /// spawned by [`run_training`].
 ///
 /// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
-pub(crate) fn train_worker_loop<C: TrainableChip>(
+pub(crate) fn train_worker_loop<C: TrainableChip, E: Endpoint<TrainCmd, TrainMsg>>(
     shard: usize,
     chip: &mut C,
     params: &TrainParams,
-    cmd_rx: &mpsc::Receiver<TrainCmd>,
-    out_tx: &mpsc::Sender<TrainMsg>,
+    ep: &E,
 ) {
-    if out_tx.send(TrainMsg::Ready { shard, batch: chip.batch() }).is_err() {
+    if ep.send(TrainMsg::Ready { shard, batch: chip.batch() }).is_err() {
         return; // coordinator already gone
     }
     let spec = params.spec();
     let mut beta = params.cd.beta as f32;
     let mut neg_core: Option<NegCore> = None;
-    while let Ok(cmd) = cmd_rx.recv() {
+    while let Ok(cmd) = ep.recv() {
         let result: Result<Option<TrainMsg>> = match cmd {
             TrainCmd::Finish => break,
             TrainCmd::Program { codes, beta: b } => {
@@ -552,7 +809,7 @@ pub(crate) fn train_worker_loop<C: TrainableChip>(
         // one answers. Non-elastic drivers fail the run on the first
         // Error and drop the command channel, which still ends this
         // loop.
-        if out_tx.send(msg).is_err() {
+        if ep.send(msg).is_err() {
             break;
         }
     }
@@ -702,13 +959,6 @@ fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-fn recv_by(
-    rx: &mpsc::Receiver<TrainMsg>,
-    deadline: Instant,
-) -> Result<TrainMsg, mpsc::RecvTimeoutError> {
-    rx.recv_timeout(deadline.saturating_duration_since(Instant::now()))
-}
-
 /// The work placement of one run: which dies run the clamped positive
 /// phase, which host the negative chains, and how the budgets split.
 struct Placement {
@@ -773,16 +1023,16 @@ impl Placement {
 
 /// Handshake: learn each die's chain count (bounded wait) and check the
 /// tempered ladder fits every die.
-fn handshake_dies(
+fn handshake_dies<T: Transport<TrainCmd, TrainMsg>>(
     params: &TrainParams,
     dies: usize,
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
 ) -> Result<Vec<usize>> {
     let mut batches = vec![0usize; dies];
     let mut joined = vec![false; dies];
     let deadline = Instant::now() + params.barrier_timeout;
     for _ in 0..dies {
-        match recv_by(out_rx, deadline) {
+        match net.recv_deadline(deadline) {
             Ok(TrainMsg::Ready { shard, batch }) => {
                 ensure!(shard < dies, "unknown shard {shard}");
                 batches[shard] = batch;
@@ -814,15 +1064,15 @@ fn handshake_dies(
 }
 
 /// Program the trainer's current register image onto every die.
-fn program_all(
+fn program_all<T: Transport<TrainCmd, TrainMsg>>(
     trainer: &CdTrainer,
     params: &TrainParams,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
+    net: &T,
 ) -> Result<()> {
-    for (s, tx) in cmd_txs.iter().enumerate() {
+    for s in 0..net.links() {
         let cmd =
             TrainCmd::Program { codes: trainer.codes.clone(), beta: params.cd.beta as f32 };
-        if tx.send(cmd).is_err() {
+        if net.send(s, cmd).is_err() {
             bail!("training: die {s} hung up at a program step");
         }
     }
@@ -835,14 +1085,13 @@ fn program_all(
 /// channel is skipped, and a die that fails or stalls here yields an
 /// empty chain set (the resume re-thermalizes through its first burn-in
 /// instead) rather than failing an otherwise-complete run.
-fn collect_chains(
+fn collect_chains<T: Transport<TrainCmd, TrainMsg>>(
     params: &TrainParams,
     place: &Placement,
     alive: &[bool],
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
 ) -> Result<Vec<Vec<Vec<i8>>>> {
-    let dies = cmd_txs.len();
+    let dies = net.links();
     if !params.pcd {
         return Ok(Vec::new());
     }
@@ -852,7 +1101,7 @@ fn collect_chains(
         if !alive[die] {
             continue;
         }
-        if cmd_txs[die].send(TrainCmd::Checkpoint).is_err() {
+        if net.send(die, TrainCmd::Checkpoint).is_err() {
             if params.elastic {
                 continue;
             }
@@ -864,7 +1113,7 @@ fn collect_chains(
     let mut got: Vec<Option<Vec<Vec<i8>>>> = (0..dies).map(|_| None).collect();
     let deadline = Instant::now() + params.barrier_timeout;
     while expected > 0 {
-        match recv_by(out_rx, deadline) {
+        match net.recv_deadline(deadline) {
             Ok(TrainMsg::Chains { shard, states }) => {
                 ensure!(shard < dies, "unknown shard {shard}");
                 if waiting[shard] {
@@ -899,20 +1148,20 @@ fn collect_chains(
 /// barrier, apply the update, program the new codes back, and block on
 /// the evaluation at the configured cadence.
 #[allow(clippy::too_many_arguments)]
-fn run_epochs_barrier<F>(
+fn run_epochs_barrier<T, F>(
     params: &TrainParams,
     trainer: &mut CdTrainer,
     spec: &PhaseSpec,
     place: &Placement,
     segment_epochs: usize,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
     mut on_epoch: F,
 ) -> Result<(Vec<EpochStats>, u64)>
 where
+    T: Transport<TrainCmd, TrainMsg>,
     F: FnMut(&EpochStats),
 {
-    let dies = cmd_txs.len();
+    let dies = net.links();
     let n_patterns = params.dataset.patterns.len();
     let mut stats: Vec<EpochStats> = Vec::new();
     let mut total_sweeps = 0u64;
@@ -923,7 +1172,7 @@ where
             .as_ref()
             .map(|_| ShadowEnergy::new(spec, trainer.shadow().0, trainer.shadow().1));
         // 1. fan the epoch's work-units out
-        for (s, tx) in cmd_txs.iter().enumerate() {
+        for s in 0..dies {
             let work = EpochShard {
                 patterns: place.pattern_ranges[s].clone(),
                 neg_samples: place.neg_shares[s],
@@ -931,7 +1180,7 @@ where
                 shadow: shadow.clone(),
                 tag: 0,
             };
-            if tx.send(TrainCmd::Epoch(work)).is_err() {
+            if net.send(s, TrainCmd::Epoch(work)).is_err() {
                 bail!("training: die {s} hung up before epoch {epoch_no}");
             }
         }
@@ -939,7 +1188,7 @@ where
         let mut grads: Vec<Option<GradAccum>> = (0..dies).map(|_| None).collect();
         let deadline = Instant::now() + params.barrier_timeout;
         for _ in 0..dies {
-            match recv_by(out_rx, deadline) {
+            match net.recv_deadline(deadline) {
                 Ok(TrainMsg::Grad { shard, accum, sweeps, tag: _ }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
                     ensure!(
@@ -973,15 +1222,15 @@ where
         }
         let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
         let gap = trainer.apply_gradient(&dc, &dm);
-        program_all(trainer, params, cmd_txs)?;
+        program_all(trainer, params, net)?;
         // 4. evaluate at the cadence (last epoch always)
         if e % params.eval_every == 0 || e == segment_epochs - 1 {
             let mut expected = 0usize;
-            for (s, tx) in cmd_txs.iter().enumerate() {
+            for s in 0..dies {
                 if place.eval_shares[s] == 0 {
                     continue;
                 }
-                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                if net.send(s, TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
                     bail!("training: die {s} hung up before evaluation");
                 }
                 expected += 1;
@@ -989,7 +1238,7 @@ where
             let mut hists: Vec<Option<StateHistogram>> = (0..dies).map(|_| None).collect();
             let deadline = Instant::now() + params.barrier_timeout;
             for _ in 0..expected {
-                match recv_by(out_rx, deadline) {
+                match net.recv_deadline(deadline) {
                     Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
                         ensure!(shard < dies, "unknown shard {shard}");
                         total_sweeps += sweeps;
@@ -1095,20 +1344,20 @@ fn flush_evals<F>(
 /// fails with a diagnostic when no die reports anything for
 /// [`TrainParams::barrier_timeout`].
 #[allow(clippy::too_many_arguments)]
-fn run_epochs_pipelined<F>(
+fn run_epochs_pipelined<T, F>(
     params: &TrainParams,
     trainer: &mut CdTrainer,
     spec: &PhaseSpec,
     place: &Placement,
     segment_epochs: usize,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
     mut on_epoch: F,
 ) -> Result<(Vec<EpochStats>, u64)>
 where
+    T: Transport<TrainCmd, TrainMsg>,
     F: FnMut(&EpochStats),
 {
-    let dies = cmd_txs.len();
+    let dies = net.links();
     let n_patterns = params.dataset.patterns.len();
     let mut stats: Vec<EpochStats> = Vec::new();
     let mut total_sweeps = 0u64;
@@ -1125,7 +1374,7 @@ where
         //    all-reduce while the same die (and the PCD/tempered dies)
         //    are still sweeping their negative share
         let mut expected = 0usize;
-        for (s, tx) in cmd_txs.iter().enumerate() {
+        for s in 0..dies {
             if !place.pattern_ranges[s].is_empty() {
                 let work = EpochShard {
                     patterns: place.pattern_ranges[s].clone(),
@@ -1134,7 +1383,7 @@ where
                     shadow: None,
                     tag: 0,
                 };
-                if tx.send(TrainCmd::Epoch(work)).is_err() {
+                if net.send(s, TrainCmd::Epoch(work)).is_err() {
                     bail!("training: die {s} hung up before epoch {epoch_no}");
                 }
                 expected += 1;
@@ -1147,7 +1396,7 @@ where
                     shadow: shadow.clone(),
                     tag: 0,
                 };
-                if tx.send(TrainCmd::Epoch(work)).is_err() {
+                if net.send(s, TrainCmd::Epoch(work)).is_err() {
                     bail!("training: die {s} hung up before epoch {epoch_no}");
                 }
                 expected += 1;
@@ -1160,7 +1409,7 @@ where
         let mut received = 0usize;
         let mut deadline = Instant::now() + params.barrier_timeout;
         while received < expected {
-            match recv_by(out_rx, deadline) {
+            match net.recv_deadline(deadline) {
                 Ok(TrainMsg::Grad { shard, accum, sweeps, tag: _ }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
                     ensure!(
@@ -1193,16 +1442,16 @@ where
         // 3. apply the update and reprogram every die
         let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
         let gap = trainer.apply_gradient(&dc, &dm);
-        program_all(trainer, params, cmd_txs)?;
+        program_all(trainer, params, net)?;
         // 4. dispatch the evaluation WITHOUT waiting on it: the dies
         //    march straight into epoch e+1 as their shares finish
         if e % params.eval_every == 0 || e == segment_epochs - 1 {
             let mut remaining = 0usize;
-            for (s, tx) in cmd_txs.iter().enumerate() {
+            for s in 0..dies {
                 if place.eval_shares[s] == 0 {
                     continue;
                 }
-                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                if net.send(s, TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
                     bail!("training: die {s} hung up before evaluation");
                 }
                 eval_queue[s].push_back(e);
@@ -1220,7 +1469,7 @@ where
     // drain the tail: histograms still in flight after the last epoch
     while !pending.is_empty() {
         let deadline = Instant::now() + params.barrier_timeout;
-        match recv_by(out_rx, deadline) {
+        match net.recv_deadline(deadline) {
             Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
                 total_sweeps += sweeps;
                 absorb_hist(&mut pending, &mut eval_queue, shard, &hist)?;
@@ -1261,21 +1510,21 @@ where
 /// (its update is already applied): the stat is computed from the
 /// shares that landed, or skipped when none did.
 #[allow(clippy::too_many_arguments)]
-fn run_epochs_elastic<F>(
+fn run_epochs_elastic<T, F>(
     params: &TrainParams,
     trainer: &mut CdTrainer,
     spec: &PhaseSpec,
     segment_epochs: usize,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
     alive: &mut [bool],
     events: &mut Vec<MembershipEvent>,
     mut on_epoch: F,
 ) -> Result<(Vec<EpochStats>, u64)>
 where
+    T: Transport<TrainCmd, TrainMsg>,
     F: FnMut(&EpochStats),
 {
-    let dies = cmd_txs.len();
+    let dies = net.links();
     let n_patterns = params.dataset.patterns.len();
     let mut stats: Vec<EpochStats> = Vec::new();
     let mut total_sweeps = 0u64;
@@ -1316,7 +1565,7 @@ where
         let mut waiting = vec![false; dies];
         let mut expected = 0usize;
         let mut changed = false;
-        for (s, tx) in cmd_txs.iter().enumerate() {
+        for s in 0..dies {
             let work = if alive[s] {
                 EpochShard {
                     patterns: place.pattern_ranges[s].clone(),
@@ -1328,7 +1577,7 @@ where
             } else {
                 EpochShard { patterns: 0..0, neg_samples: 1, neg_burn_in: true, shadow: None, tag }
             };
-            if tx.send(TrainCmd::Epoch(work)).is_err() {
+            if net.send(s, TrainCmd::Epoch(work)).is_err() {
                 if alive[s] {
                     alive[s] = false;
                     changed = true;
@@ -1358,7 +1607,7 @@ where
         let mut received = 0usize;
         let deadline = Instant::now() + params.barrier_timeout;
         while received < expected {
-            match recv_by(out_rx, deadline) {
+            match net.recv_deadline(deadline) {
                 Ok(TrainMsg::Grad { shard, accum, sweeps, tag: t }) => {
                     ensure!(shard < dies, "unknown shard {shard}");
                     total_sweeps += sweeps;
@@ -1438,10 +1687,10 @@ where
         // program every seat — dead ones too, so a die that recovers
         // rejoins with current codes (programming does not sweep, so it
         // cannot trip a fault)
-        for (s, tx) in cmd_txs.iter().enumerate() {
+        for s in 0..dies {
             let cmd =
                 TrainCmd::Program { codes: trainer.codes.clone(), beta: params.cd.beta as f32 };
-            if tx.send(cmd).is_err() && alive[s] {
+            if net.send(s, cmd).is_err() && alive[s] {
                 alive[s] = false;
                 neg_fresh.fill(true);
                 events.push(MembershipEvent {
@@ -1455,11 +1704,11 @@ where
         if e % params.eval_every == 0 || e == segment_epochs - 1 {
             let mut eval_waiting = vec![false; dies];
             let mut outstanding = 0usize;
-            for (s, tx) in cmd_txs.iter().enumerate() {
+            for s in 0..dies {
                 if !alive[s] || place.eval_shares[s] == 0 {
                     continue;
                 }
-                if tx.send(TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
+                if net.send(s, TrainCmd::Eval { samples: place.eval_shares[s] }).is_err() {
                     alive[s] = false;
                     neg_fresh.fill(true);
                     events.push(MembershipEvent {
@@ -1476,7 +1725,7 @@ where
             let mut landed = 0usize;
             let deadline = Instant::now() + params.barrier_timeout;
             while outstanding > 0 {
-                match recv_by(out_rx, deadline) {
+                match net.recv_deadline(deadline) {
                     Ok(TrainMsg::Hist { shard, hist, sweeps }) => {
                         ensure!(shard < dies, "unknown shard {shard}");
                         total_sweeps += sweeps;
@@ -1556,22 +1805,22 @@ where
 /// codes back to every die, and evaluate at the configured cadence.
 /// `on_epoch` observes each recorded [`EpochStats`] as it is produced
 /// (the streaming hook).
-pub(crate) fn drive_training<F>(
+pub(crate) fn drive_training<T, F>(
     params: &TrainParams,
     resume: Option<&TrainCheckpoint>,
     segment_epochs: usize,
-    cmd_txs: &[mpsc::Sender<TrainCmd>],
-    out_rx: &mpsc::Receiver<TrainMsg>,
+    net: &T,
     on_epoch: F,
 ) -> Result<TrainedRun>
 where
+    T: Transport<TrainCmd, TrainMsg>,
     F: FnMut(&EpochStats),
 {
     params.validate()?;
-    let dies = cmd_txs.len();
+    let dies = net.links();
     ensure!(dies == params.dies, "{dies} seats for {} dies", params.dies);
     ensure!(segment_epochs >= 1, "training needs at least one epoch");
-    handshake_dies(params, dies, out_rx)?;
+    handshake_dies(params, dies, net)?;
 
     let mut trainer =
         CdTrainer::new(params.layout.clone(), params.dataset.clone(), params.cd);
@@ -1593,13 +1842,13 @@ where
     if let Some(cp) = resume {
         for (k, &die) in place.neg_dies.iter().enumerate() {
             if let Some(states) = cp.chains.get(k) {
-                if cmd_txs[die].send(TrainCmd::Restore { states: states.clone() }).is_err() {
+                if net.send(die, TrainCmd::Restore { states: states.clone() }).is_err() {
                     bail!("training: die {die} hung up before the run started");
                 }
             }
         }
     }
-    program_all(&trainer, params, cmd_txs)?;
+    program_all(&trainer, params, net)?;
 
     let (stats, total_sweeps) = if params.elastic {
         run_epochs_elastic(
@@ -1607,19 +1856,18 @@ where
             &mut trainer,
             &spec,
             segment_epochs,
-            cmd_txs,
-            out_rx,
+            net,
             &mut alive,
             &mut events,
             on_epoch,
         )?
     } else if params.pipeline {
         run_epochs_pipelined(
-            params, &mut trainer, &spec, &place, segment_epochs, cmd_txs, out_rx, on_epoch,
+            params, &mut trainer, &spec, &place, segment_epochs, net, on_epoch,
         )?
     } else {
         run_epochs_barrier(
-            params, &mut trainer, &spec, &place, segment_epochs, cmd_txs, out_rx, on_epoch,
+            params, &mut trainer, &spec, &place, segment_epochs, net, on_epoch,
         )?
     };
 
@@ -1627,9 +1875,9 @@ where
     // membership when elastic — the negative work may have moved), then
     // dismiss the seats
     let final_place = if params.elastic { Placement::over(params, &alive) } else { place };
-    let chains = collect_chains(params, &final_place, &alive, cmd_txs, out_rx)?;
-    for tx in cmd_txs {
-        let _ = tx.send(TrainCmd::Finish);
+    let chains = collect_chains(params, &final_place, &alive, net)?;
+    for s in 0..dies {
+        let _ = net.send(s, TrainCmd::Finish);
     }
 
     let (w, b) = trainer.shadow();
@@ -1699,6 +1947,57 @@ where
     C: TrainableChip + Send + 'static,
     F: FnMut(&EpochStats),
 {
+    let (net, endpoints) = mpsc_net::<TrainCmd, TrainMsg>(chips.len());
+    run_training_over(chips, params, resume, epochs, net, endpoints, on_epoch).map(|(run, _)| run)
+}
+
+/// [`run_training_observed`] over the deterministic network simulator:
+/// every [`TrainCmd`] / [`TrainMsg`] is serialized through
+/// [`crate::transport::Wire`] and subjected to the impairments scripted
+/// in `net_plan` (see [`NetPlan`]). With [`NetPlan::none`] the run is
+/// bit-identical to the mpsc path — the serialization round trip is
+/// lossless and ordering is FIFO. Returns the run plus the per-link
+/// delivery counters the simulator recorded.
+///
+/// Lost frames surface exactly like die stalls: non-elastic runs fail
+/// at the next barrier timeout, elastic runs shrink around the silent
+/// die and re-admit it when traffic gets through again — which is what
+/// `tests/transport_sim.rs` exercises.
+pub fn run_training_simnet<C, F>(
+    chips: Vec<C>,
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    epochs: usize,
+    net_plan: &NetPlan,
+    on_epoch: F,
+) -> Result<(TrainedRun, Vec<LinkStats>)>
+where
+    C: TrainableChip + Send + 'static,
+    F: FnMut(&EpochStats),
+{
+    let (net, endpoints) = sim_net::<TrainCmd, TrainMsg>(chips.len(), net_plan);
+    run_training_over(chips, params, resume, epochs, net, endpoints, on_epoch)
+}
+
+/// The transport-generic body of [`run_training_observed`] /
+/// [`run_training_simnet`]: spawn one worker thread per chip on its
+/// endpoint, drive the epoch protocol over the coordinator side, and
+/// report the transport's per-link delivery counters alongside the run.
+fn run_training_over<C, E, T, F>(
+    chips: Vec<C>,
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    epochs: usize,
+    net: T,
+    endpoints: Vec<E>,
+    on_epoch: F,
+) -> Result<(TrainedRun, Vec<LinkStats>)>
+where
+    C: TrainableChip + Send + 'static,
+    E: Endpoint<TrainCmd, TrainMsg> + Send + 'static,
+    T: Transport<TrainCmd, TrainMsg>,
+    F: FnMut(&EpochStats),
+{
     ensure!(
         chips.len() == params.dies,
         "params ask for {} dies but {} chips were provided",
@@ -1706,24 +2005,19 @@ where
         chips.len()
     );
     let shared = Arc::new(params.clone());
-    let (out_tx, out_rx) = mpsc::channel();
-    let mut cmd_txs = Vec::with_capacity(chips.len());
     let mut joins = Vec::with_capacity(chips.len());
-    for (shard, mut chip) in chips.into_iter().enumerate() {
-        let (cmd_tx, cmd_rx) = mpsc::channel::<TrainCmd>();
-        cmd_txs.push(cmd_tx);
-        let out = out_tx.clone();
+    for (shard, (mut chip, ep)) in chips.into_iter().zip(endpoints).enumerate() {
         let p = shared.clone();
         joins.push(
             crate::sampler::workers::spawn_named(format!("train-{shard}"), move || {
-                train_worker_loop(shard, &mut chip, &p, &cmd_rx, &out)
+                train_worker_loop(shard, &mut chip, &p, &ep)
             })
             .map_err(|e| anyhow!("spawning train worker {shard}: {e}"))?,
         );
     }
-    drop(out_tx);
-    let result = drive_training(params, resume, epochs, &cmd_txs, &out_rx, on_epoch);
-    drop(cmd_txs);
+    let result = drive_training(params, resume, epochs, &net, on_epoch);
+    let link_stats = net.link_stats();
+    drop(net); // hang up on any seat still waiting for a command
     if result.is_ok() && !params.elastic {
         for j in joins {
             let _ = j.join();
@@ -1733,7 +2027,7 @@ where
     // (threads exit when their cmd channel drops) rather than deadlock.
     // An elastic run can *succeed* with a die still stalled mid-sweep,
     // so its handles are abandoned too.
-    result
+    result.map(|run| (run, link_stats))
 }
 
 #[cfg(test)]
@@ -1891,5 +2185,78 @@ mod tests {
         assert_eq!(seat_seed(1, 0), seat_seed(1, 0));
         assert_ne!(seat_seed(1, 0), seat_seed(1, 1));
         assert_ne!(seat_seed(1, 0), seat_seed(2, 0));
+    }
+
+    #[test]
+    fn train_cmd_wire_round_trips() {
+        let spec = grad::phase_spec(&and_gate_layout(0, 0), 2, 3);
+        let w = vec![0.25; spec.edges.len()];
+        let b = vec![-0.5; spec.spins.len()];
+        let shadow = ShadowEnergy::new(&spec, &w, &b);
+        let cmds = vec![
+            TrainCmd::Program {
+                codes: ProgrammedWeights {
+                    j_codes: vec![3, -7, 127, -128],
+                    enables: vec![true, false, true, true],
+                    h_codes: vec![0, -1],
+                },
+                beta: 1.25,
+            },
+            TrainCmd::Restore { states: vec![vec![1, -1, 1], vec![-1, -1, -1]] },
+            TrainCmd::Epoch(EpochShard {
+                patterns: 1..3,
+                neg_samples: 5,
+                neg_burn_in: true,
+                shadow: Some(shadow),
+                tag: 42,
+            }),
+            TrainCmd::Epoch(EpochShard {
+                patterns: 0..0,
+                neg_samples: 0,
+                neg_burn_in: false,
+                shadow: None,
+                tag: 0,
+            }),
+            TrainCmd::Eval { samples: 1000 },
+            TrainCmd::Checkpoint,
+            TrainCmd::Finish,
+        ];
+        for cmd in cmds {
+            let back = TrainCmd::decode(&cmd.encode()).unwrap();
+            assert_eq!(back, cmd);
+        }
+    }
+
+    #[test]
+    fn train_msg_wire_round_trips() {
+        let mut accum = GradAccum::new(2, 3, 2);
+        accum.pos_c[0][1] = 7.0;
+        accum.pos_m[1][0] = -3.0;
+        accum.pos_n = vec![4, 4];
+        accum.neg_c[2] = -11.0;
+        accum.neg_n = 9;
+        let mut hist = StateHistogram::new(&[3, 5]);
+        hist.record(&[1i8; 8]);
+        let msgs = vec![
+            TrainMsg::Ready { shard: 1, batch: 32 },
+            TrainMsg::Grad { shard: 0, accum, sweeps: 1234, tag: 7 },
+            TrainMsg::Hist { shard: 2, hist, sweeps: 99 },
+            TrainMsg::Chains { shard: 1, states: vec![vec![1, -1], vec![-1, 1]] },
+            TrainMsg::Error { shard: 3, message: "die \"3\" tripped".into() },
+        ];
+        for msg in msgs {
+            let back = TrainMsg::decode(&msg.encode()).unwrap();
+            assert_eq!(back, msg);
+        }
+    }
+
+    #[test]
+    fn wire_rejects_cross_protocol_frames() {
+        // a command never decodes as a message and vice versa: the tag
+        // namespaces are disjoint
+        let cmd = TrainCmd::Eval { samples: 10 }.encode();
+        assert!(TrainMsg::decode(&cmd).is_err());
+        let msg = TrainMsg::Ready { shard: 0, batch: 8 }.encode();
+        assert!(TrainCmd::decode(&msg).is_err());
     }
 }

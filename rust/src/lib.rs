@@ -78,6 +78,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod spi;
+pub mod transport;
 pub mod util;
 
 /// Number of physical spins on the die (7x8 Chimera cells, one replaced

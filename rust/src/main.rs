@@ -9,7 +9,7 @@
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
 //!              [--shards N] [--pipeline] [--elastic] [--fanout N]
-//!              [--fault-plan FILE] [--barrier-timeout-ms T]
+//!              [--fault-plan FILE] [--net-plan FILE] [--barrier-timeout-ms T]
 //!              [--tune off|acceptance|flux] [--adapt-every N]
 //! pchip tune-ladder [--seed S] [--replicas K] [--b0 X] [--b1 X]
 //!              [--iters N] [--floor A] [--ceiling A] [--min-k K] [--max-k K]
@@ -114,6 +114,21 @@ fn fault_plan(args: &Args) -> Result<Option<pchip::util::fault::FaultPlan>> {
     }
 }
 
+/// `--net-plan FILE`: a deterministic per-link impairment schedule
+/// (JSON from [`pchip::transport::NetPlan::to_json`], e.g. a plan the
+/// transport-sim suite dumped to `target/net-failing-plan.json`) laid
+/// over the coordinator↔die lanes. `None` when the flag is absent.
+fn net_plan(args: &Args) -> Result<Option<pchip::transport::NetPlan>> {
+    match args.path_of("net-plan")? {
+        None => Ok(None),
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| anyhow!("--net-plan {p}: {e}"))?;
+            let v = pchip::util::json::Json::parse(&text)?;
+            Ok(Some(pchip::transport::NetPlan::from_json(&v)?))
+        }
+    }
+}
+
 /// Per-die membership-change log of an elastic gang run → stderr, one
 /// line per event, so scripts can grep which die died or rejoined when.
 fn print_membership(events: &[pchip::metrics::MembershipEvent]) {
@@ -166,6 +181,8 @@ fn print_help() {
          \u{20}        --pipeline overlaps sweeps with swap/readback, 1-phase lag;\n  \
          \u{20}        --elastic re-partitions the ladder onto the surviving\n  \
          \u{20}        dies when one is lost mid-run;\n  \
+         \u{20}        --net-plan FILE runs the gang over the network simulator\n  \
+         \u{20}        with that scripted per-link impairment schedule;\n  \
          \u{20}        --tune flux re-spaces the ladder in-run by round-trip flux)\n  \
          tune-ladder  feedback-optimize a β-ladder (round-trip flux, auto-K)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
@@ -541,7 +558,9 @@ fn cmd_temper(args: &Args) -> Result<()> {
     // die loss by re-partitioning the ladder over the survivors (the
     // membership log prints to stderr); combined with --fault-plan the
     // gang runs through the chip-array server so the scripted faults
-    // land under specific dies.
+    // land under specific dies, and with --net-plan it runs over the
+    // in-process network simulator so scripted link impairments land
+    // on the coordinator↔die lanes instead.
     let shards: usize = args.get("shards", 1)?;
     let pipeline = args.flag("pipeline");
     let elastic = args.flag("elastic");
@@ -559,6 +578,54 @@ fn cmd_temper(args: &Args) -> Result<()> {
             pipeline,
             elastic,
         };
+        if let Some(plan) = net_plan(args)? {
+            anyhow::ensure!(
+                fault_plan(args)?.is_none(),
+                "--fault-plan injects chip faults, --net-plan link faults; pick one per run"
+            );
+            let topo = Topology::new();
+            let problem = pchip::problems::sk::chimera_pm_j(&topo, seed);
+            let (samplers, scale) = exp::sharded_die_array(
+                &sharded_params,
+                &problem,
+                cfg.mismatch,
+                replicas.max(8) / shards.max(1),
+                0xD1E5,
+                |s| seed ^ 0xB04D ^ ((s as u64) << 8),
+            )?;
+            let r = pchip::coordinator::run_sharded_tempering_simnet(
+                samplers,
+                &problem,
+                &sharded_params,
+                scale,
+                &plan,
+                |_, _, _| {},
+            )?;
+            print_membership(&r.membership);
+            println!(
+                "sharded over simulated network: best {:.0} ({} shard(s) at the end{})",
+                r.run.best_energy,
+                r.shards,
+                if r.membership.is_empty() { "" } else { ", membership log on stderr" }
+            );
+            for (k, l) in r.net.iter().enumerate() {
+                println!(
+                    "  link {k}: down {}/{} delivered ({} dropped, {} dup, {} reordered), \
+                     up {}/{} ({} dropped, {} dup, {} reordered)",
+                    l.down.delivered,
+                    l.down.sent,
+                    l.down.dropped,
+                    l.down.duplicated,
+                    l.down.reordered,
+                    l.up.delivered,
+                    l.up.sent,
+                    l.up.dropped,
+                    l.up.duplicated,
+                    l.up.reordered
+                );
+            }
+            return Ok(());
+        }
         if let Some(plan) = fault_plan(args)? {
             let mut scfg = cfg.clone();
             scfg.server.chips = shards;

@@ -2,8 +2,10 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::json::{obj, Json};
+
 /// Histogram over the 2^k states of k chosen spins (k ≤ 20).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StateHistogram {
     /// The spins being observed, in bit order (bit b = spins[b] > 0).
     pub spins: Vec<usize>,
@@ -97,6 +99,40 @@ impl StateHistogram {
         self.total = 0;
     }
 
+    /// Serialize to a JSON value (the training service ships evaluation
+    /// shares over the gang transport as [`crate::transport::Wire`]
+    /// payloads). The total is not written — it is re-derived as the
+    /// count sum on parse, so the two can never disagree.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("spins", Json::Arr(self.spins.iter().map(|&s| Json::Num(s as f64)).collect())),
+            ("counts", Json::Arr(self.counts.iter().map(|&c| Json::Num(c as f64)).collect())),
+        ])
+    }
+
+    /// Parse back what [`StateHistogram::to_json`] wrote, validating the
+    /// spin-set size and the count-table shape.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let spins = v.req("spins")?.usize_array()?;
+        anyhow::ensure!(spins.len() <= 20, "histogram over {} spins too large", spins.len());
+        let counts: anyhow::Result<Vec<u64>> = v
+            .req("counts")?
+            .as_arr()?
+            .iter()
+            .map(|c| Ok(c.as_usize()? as u64))
+            .collect();
+        let counts = counts?;
+        anyhow::ensure!(
+            counts.len() == 1 << spins.len(),
+            "histogram over {} spins needs {} counts, got {}",
+            spins.len(),
+            1usize << spins.len(),
+            counts.len()
+        );
+        let total = counts.iter().sum();
+        Ok(Self { spins, counts, total })
+    }
+
     /// Pretty map of bit-pattern string → probability (for reports).
     pub fn as_map(&self) -> BTreeMap<String, f64> {
         let k = self.spins.len();
@@ -167,6 +203,23 @@ mod tests {
         // mismatched spin sets are rejected
         let c = StateHistogram::new(&[2, 3]);
         assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn json_round_trips_and_validates() {
+        let mut h = StateHistogram::new(&[3, 5]);
+        let mut state = vec![-1i8; 10];
+        h.record(&state);
+        state[3] = 1;
+        h.record(&state);
+        h.record(&state);
+        let text = h.to_json().to_string();
+        let back = StateHistogram::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, h);
+        assert_eq!(back.total(), 3);
+        // a count table that doesn't match the spin set is rejected
+        let bad = text.replace("\"spins\":[3,5]", "\"spins\":[3]");
+        assert!(StateHistogram::from_json(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

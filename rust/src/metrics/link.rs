@@ -1,0 +1,87 @@
+//! Per-link delivery counters for pluggable die-array transports.
+//!
+//! Every [`crate::transport::Transport`] implementation can report one
+//! [`LinkStats`] per coordinator↔worker link. The in-process mpsc
+//! transport reports zeros (nothing is ever lost); the network
+//! simulator ([`crate::transport::SimNet`]) fills in exactly what its
+//! [`crate::transport::NetPlan`] did to each lane, so a chaos test can
+//! assert *both* that the run converged *and* that the impairments it
+//! scripted actually fired.
+
+/// Counters for one direction of one link (coordinator→worker is the
+/// *down* lane, worker→coordinator the *up* lane).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaneStats {
+    /// Frames handed to the transport by the sender.
+    pub sent: u64,
+    /// Frames decoded and delivered to the receiver.
+    pub delivered: u64,
+    /// Frames the impairment plan discarded in flight.
+    pub dropped: u64,
+    /// Extra copies injected by duplication impairments.
+    pub duplicated: u64,
+    /// Duplicate frames suppressed at the receiving end (the transport
+    /// delivers exactly-once among the frames that survive drops).
+    pub suppressed: u64,
+    /// Frames delivered out of order by reordering impairments.
+    pub reordered: u64,
+}
+
+impl LaneStats {
+    /// Fold another lane's counters into this one.
+    pub fn merge(&mut self, other: &LaneStats) {
+        self.sent += other.sent;
+        self.delivered += other.delivered;
+        self.dropped += other.dropped;
+        self.duplicated += other.duplicated;
+        self.suppressed += other.suppressed;
+        self.reordered += other.reordered;
+    }
+}
+
+/// Delivery counters for one coordinator↔worker link: the down (command)
+/// lane and the up (reply) lane.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LinkStats {
+    /// Coordinator→worker lane.
+    pub down: LaneStats,
+    /// Worker→coordinator lane.
+    pub up: LaneStats,
+}
+
+impl LinkStats {
+    /// Total frames the plan discarded on either lane.
+    pub fn dropped(&self) -> u64 {
+        self.down.dropped + self.up.dropped
+    }
+
+    /// Total frames delivered on either lane.
+    pub fn delivered(&self) -> u64 {
+        self.down.delivered + self.up.delivered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_every_counter() {
+        let mut a = LaneStats { sent: 1, delivered: 2, dropped: 3, duplicated: 4, suppressed: 5, reordered: 6 };
+        a.merge(&LaneStats { sent: 10, delivered: 20, dropped: 30, duplicated: 40, suppressed: 50, reordered: 60 });
+        assert_eq!(
+            a,
+            LaneStats { sent: 11, delivered: 22, dropped: 33, duplicated: 44, suppressed: 55, reordered: 66 }
+        );
+    }
+
+    #[test]
+    fn link_totals() {
+        let l = LinkStats {
+            down: LaneStats { dropped: 2, delivered: 7, ..Default::default() },
+            up: LaneStats { dropped: 1, delivered: 3, ..Default::default() },
+        };
+        assert_eq!(l.dropped(), 3);
+        assert_eq!(l.delivered(), 10);
+    }
+}

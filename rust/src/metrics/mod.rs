@@ -4,12 +4,14 @@
 
 mod flux;
 mod histogram;
+mod link;
 mod stats;
 mod swap;
 mod trace;
 
 pub use flux::{FluxStats, ReplicaDirection};
 pub use histogram::StateHistogram;
+pub use link::{LaneStats, LinkStats};
 pub use stats::{corr_edges, kl_divergence, magnetization, success_probability, Welford};
 pub use swap::{MembershipChange, MembershipEvent, SwapStats};
 pub use trace::EnergyTrace;

@@ -1,0 +1,335 @@
+//! Pluggable coordinator↔worker transport for die-array gangs.
+//!
+//! The sharded-tempering coordinator (`coordinator/sharded.rs`) and the
+//! die-parallel training service (`learning/service.rs`) speak
+//! round-tagged phase protocols to their gang over per-worker command
+//! channels and one aggregated reply channel. Historically that seam
+//! was hard-wired `std::sync::mpsc`; this module abstracts it so a gang
+//! can (eventually) span machines:
+//!
+//! * [`Transport`] — the coordinator's side: `links()` command lanes
+//!   down to the workers, one merged reply stream back up, with a
+//!   single deadline-bounded receive that defines barrier-timeout
+//!   semantics once for both protocols.
+//! * [`Endpoint`] — one worker's side: blocking command receive, reply
+//!   send.
+//! * [`Wire`] — the serialization contract (through [`crate::util::json`])
+//!   every message type crosses a non-shared-memory transport with.
+//!   `ShardCmd`/`ShardMsg` (tempering) and `TrainCmd`/`TrainMsg`
+//!   (training) all implement it; `tests/wire_codec_props.rs` property-
+//!   tests the round trip.
+//!
+//! Two implementations ship:
+//!
+//! * [`MpscTransport`] / [`MpscEndpoint`] ([`mpsc_net`]) — the
+//!   in-process default, a zero-copy passthrough over `std::sync::mpsc`
+//!   that is bit-identical to the pre-trait code path.
+//! * [`SimNet`] / [`SimEndpoint`] ([`sim_net`]) — an in-process
+//!   "remote" transport that serializes every message through [`Wire`]
+//!   and injects per-link latency, bounded reordering, duplication and
+//!   drops from a scripted, seedable [`NetPlan`] — the deterministic
+//!   network simulator behind `tests/transport_sim.rs`.
+
+mod simnet;
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::metrics::LinkStats;
+use crate::util::json::Json;
+
+pub use simnet::{sim_net, NetDir, NetEvent, NetFault, NetPlan, SimEndpoint, SimNet};
+
+/// Error from [`Transport::send`] / [`Endpoint::send`]: the peer hung
+/// up (its endpoint or its relay was dropped). Protocol drivers treat a
+/// closed link as a dead die.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkClosed;
+
+impl std::fmt::Display for LinkClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "transport link closed")
+    }
+}
+
+impl std::error::Error for LinkClosed {}
+
+/// Error from a deadline-bounded receive on the coordinator's merged
+/// reply stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvError {
+    /// The deadline expired with no message available — the barrier
+    /// timeout, on whichever transport.
+    Timeout,
+    /// Every worker endpoint hung up; no message can ever arrive.
+    Closed,
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::Timeout => write!(f, "transport receive timed out"),
+            RecvError::Closed => write!(f, "transport closed"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// The coordinator's side of a gang transport: `links()` command lanes
+/// down (one per seated worker), one merged reply stream up.
+///
+/// Send is fire-and-forget — an `Err` means the link is *known* dead
+/// (peer hung up); a lossy transport may accept a frame and silently
+/// drop it, in which case the coordinator discovers the loss through
+/// [`Transport::recv_deadline`] timing out, exactly like a stalled die.
+pub trait Transport<C, M> {
+    /// Number of command lanes (gang seats).
+    fn links(&self) -> usize;
+
+    /// Send a command down `link`.
+    fn send(&self, link: usize, cmd: C) -> Result<(), LinkClosed>;
+
+    /// Receive the next worker reply, waiting until `deadline` at the
+    /// longest. This is the *one* definition of barrier-timeout
+    /// receive semantics shared by the tempering and training drivers.
+    fn recv_deadline(&self, deadline: Instant) -> Result<M, RecvError>;
+
+    /// Per-link delivery counters. Lossless transports report zeros.
+    fn link_stats(&self) -> Vec<LinkStats> {
+        vec![LinkStats::default(); self.links()]
+    }
+}
+
+/// One worker's side of a gang transport.
+pub trait Endpoint<C, M> {
+    /// Block for the next command; `Err` once the coordinator hangs up.
+    fn recv(&self) -> Result<C, LinkClosed>;
+
+    /// Send a reply up to the coordinator.
+    fn send(&self, msg: M) -> Result<(), LinkClosed>;
+}
+
+/// The serialization contract for messages crossing a non-shared-memory
+/// transport, through the crate's own JSON ([`crate::util::json`]).
+///
+/// Implementations must round-trip losslessly: `from_wire(&to_wire(m))`
+/// reconstructs `m` exactly (the JSON writer emits integral `f64`s as
+/// integers and non-integral ones via Rust's shortest round-tripping
+/// `{}` repr, so `f64`/`f32`/`i8`/sub-2⁵³ `u64` payloads all survive).
+pub trait Wire: Sized {
+    /// Serialize to a JSON value.
+    fn to_wire(&self) -> Json;
+
+    /// Decode a value [`Wire::to_wire`] wrote; `Err` on truncated,
+    /// corrupted or type-confused input — never panic.
+    fn from_wire(v: &Json) -> Result<Self>;
+
+    /// Serialize to compact JSON text (what actually crosses a link).
+    fn encode(&self) -> String {
+        self.to_wire().to_string()
+    }
+
+    /// Parse and decode JSON text.
+    fn decode(text: &str) -> Result<Self> {
+        Self::from_wire(&Json::parse(text)?)
+    }
+}
+
+// ---- wire helpers shared by the protocol codecs -----------------------
+
+/// Encode an `f32` slice (β ladders) — exact: every `f32` is exactly
+/// representable as `f64`, and the JSON writer round-trips `f64`.
+pub fn f32s_to_wire(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Decode what [`f32s_to_wire`] wrote.
+pub fn f32s_from_wire(v: &Json) -> Result<Vec<f32>> {
+    v.as_arr()?.iter().map(|x| Ok(x.as_f64()? as f32)).collect()
+}
+
+/// Encode an `f64` slice (energies, gradient sums).
+pub fn f64s_to_wire(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+}
+
+/// Decode what [`f64s_to_wire`] wrote.
+pub fn f64s_from_wire(v: &Json) -> Result<Vec<f64>> {
+    v.as_arr()?.iter().map(|x| x.as_f64()).collect()
+}
+
+/// Encode an `i8` slice (register codes).
+pub fn i8s_to_wire(xs: &[i8]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// Decode what [`i8s_to_wire`] wrote, validating the `i8` range.
+pub fn i8s_from_wire(v: &Json) -> Result<Vec<i8>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| {
+            let f = x.as_f64()?;
+            ensure!(f.fract() == 0.0 && (-128.0..=127.0).contains(&f), "not an i8 value: {f}");
+            Ok(f as i8)
+        })
+        .collect()
+}
+
+/// Encode a `bool` slice (edge enables).
+pub fn bools_to_wire(xs: &[bool]) -> Json {
+    Json::Arr(xs.iter().map(|&b| Json::Bool(b)).collect())
+}
+
+/// Decode what [`bools_to_wire`] wrote.
+pub fn bools_from_wire(v: &Json) -> Result<Vec<bool>> {
+    v.as_arr()?.iter().map(|x| x.as_bool()).collect()
+}
+
+/// Encode a chain-state array (`i8` spins).
+pub fn spins_to_wire(states: &[Vec<i8>]) -> Json {
+    Json::Arr(
+        states
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|&s| Json::Num(s as f64)).collect()))
+            .collect(),
+    )
+}
+
+/// Decode what [`spins_to_wire`] wrote, validating the `i8` range.
+pub fn spins_from_wire(v: &Json) -> Result<Vec<Vec<i8>>> {
+    v.as_arr()?
+        .iter()
+        .map(|row| {
+            row.as_arr()?
+                .iter()
+                .map(|x| {
+                    let f = x.as_f64()?;
+                    ensure!(
+                        f.fract() == 0.0 && (-128.0..=127.0).contains(&f),
+                        "not an i8 spin value: {f}"
+                    );
+                    Ok(f as i8)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+// ---- in-process mpsc implementation (the default) ---------------------
+
+/// The default in-process transport: a zero-copy passthrough over
+/// `std::sync::mpsc`, bit-identical to the pre-trait channel wiring.
+/// Messages are moved, never serialized.
+pub struct MpscTransport<C, M> {
+    txs: Vec<mpsc::Sender<C>>,
+    rx: mpsc::Receiver<M>,
+}
+
+impl<C, M> MpscTransport<C, M> {
+    /// Wrap explicit channel halves (the chip-array server seats
+    /// workers itself and hands the coordinator the assembled set).
+    pub fn new(txs: Vec<mpsc::Sender<C>>, rx: mpsc::Receiver<M>) -> Self {
+        Self { txs, rx }
+    }
+}
+
+impl<C, M> Transport<C, M> for MpscTransport<C, M> {
+    fn links(&self) -> usize {
+        self.txs.len()
+    }
+
+    fn send(&self, link: usize, cmd: C) -> Result<(), LinkClosed> {
+        self.txs[link].send(cmd).map_err(|_| LinkClosed)
+    }
+
+    fn recv_deadline(&self, deadline: Instant) -> Result<M, RecvError> {
+        match self.rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(m) => Ok(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvError::Closed),
+        }
+    }
+}
+
+/// One worker's half of [`MpscTransport`].
+pub struct MpscEndpoint<C, M> {
+    rx: mpsc::Receiver<C>,
+    tx: mpsc::Sender<M>,
+}
+
+impl<C, M> MpscEndpoint<C, M> {
+    /// Wrap explicit channel halves (see [`MpscTransport::new`]).
+    pub fn new(rx: mpsc::Receiver<C>, tx: mpsc::Sender<M>) -> Self {
+        Self { rx, tx }
+    }
+}
+
+impl<C, M> Endpoint<C, M> for MpscEndpoint<C, M> {
+    fn recv(&self) -> Result<C, LinkClosed> {
+        self.rx.recv().map_err(|_| LinkClosed)
+    }
+
+    fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        self.tx.send(msg).map_err(|_| LinkClosed)
+    }
+}
+
+/// Build a fully-wired in-process gang transport: the coordinator's
+/// [`MpscTransport`] plus one [`MpscEndpoint`] per link.
+pub fn mpsc_net<C, M>(links: usize) -> (MpscTransport<C, M>, Vec<MpscEndpoint<C, M>>) {
+    let (out_tx, out_rx) = mpsc::channel();
+    let mut txs = Vec::with_capacity(links);
+    let mut endpoints = Vec::with_capacity(links);
+    for _ in 0..links {
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        txs.push(cmd_tx);
+        endpoints.push(MpscEndpoint::new(cmd_rx, out_tx.clone()));
+    }
+    (MpscTransport::new(txs, out_rx), endpoints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn mpsc_net_routes_commands_and_merges_replies() {
+        let (net, eps) = mpsc_net::<u32, (usize, u32)>(3);
+        for (k, ep) in eps.iter().enumerate() {
+            net.send(k, k as u32 * 10).unwrap();
+            let got = ep.recv().unwrap();
+            assert_eq!(got, k as u32 * 10);
+            ep.send((k, got + 1)).unwrap();
+        }
+        let mut seen = vec![false; 3];
+        for _ in 0..3 {
+            let (k, v) = net.recv_deadline(Instant::now() + Duration::from_secs(1)).unwrap();
+            assert_eq!(v, k as u32 * 10 + 1);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(net.link_stats().len(), 3);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_reports_closed() {
+        let (net, eps) = mpsc_net::<u8, u8>(1);
+        let early = net.recv_deadline(Instant::now() + Duration::from_millis(10));
+        assert_eq!(early, Err(RecvError::Timeout));
+        drop(eps);
+        let gone = net.recv_deadline(Instant::now() + Duration::from_secs(5));
+        assert_eq!(gone, Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn send_to_a_dropped_endpoint_reports_closed() {
+        let (net, mut eps) = mpsc_net::<u8, u8>(2);
+        eps.remove(0);
+        assert_eq!(net.send(0, 1), Err(LinkClosed));
+        assert_eq!(net.send(1, 2), Ok(()));
+    }
+}

@@ -1,0 +1,670 @@
+//! `SimNet` — a deterministic in-process network simulator.
+//!
+//! The simulator gives the gang protocols a hostile network without
+//! leaving the process or the test runner: every message is serialized
+//! through [`Wire`] (so the codec is on the hot path, exactly as it
+//! would be on sockets), carried over per-link relay threads, and
+//! subjected to the impairments a scripted [`NetPlan`] calls for.
+//!
+//! Impairments fire in *logical* time, mirroring
+//! [`crate::util::fault::FaultPlan`]: each lane (one link × one
+//! direction) numbers its frames with a sequence counter, and a plan
+//! event names `(link, dir, seq)` — so a plan's effect on a lane is a
+//! pure function of the protocol's own message order, reproducible from
+//! a seed with no wall-clock races. The supported faults:
+//!
+//! * [`NetFault::Drop`] — discard frames in a seq window (`until:
+//!   None` = a permanent partition). The coordinator discovers loss
+//!   through its barrier timeout, exactly like a stalled die.
+//! * [`NetFault::Delay`] — deliver after `ms` milliseconds (the lane
+//!   is FIFO, so later frames queue behind the sleep).
+//! * [`NetFault::Dup`] — inject a second copy. The receiving relay
+//!   suppresses re-delivery by seq, so protocols see exactly-once
+//!   among surviving frames (counted in
+//!   [`crate::metrics::LaneStats::suppressed`]).
+//! * [`NetFault::Reorder`] — bounded reordering: the frame is held and
+//!   delivered *behind* the lane's next frame (a pairwise swap).
+//!
+//! Plans serialize to JSON ([`NetPlan::to_json`] /
+//! [`NetPlan::from_json`]) so a failing simulator case can be uploaded
+//! as a CI artifact and replayed verbatim; [`NetPlan::chaos`] draws a
+//! small random plan from a seed — recoverable faults only, the way
+//! [`crate::util::fault::FaultPlan::chaos`] never draws a stall.
+
+use std::collections::HashSet;
+use std::marker::PhantomData;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::metrics::{LaneStats, LinkStats};
+use crate::rng::HostRng;
+use crate::util::json::{obj, Json};
+
+use super::{Endpoint, LinkClosed, RecvError, Transport, Wire};
+
+/// Which direction of a link a [`NetEvent`] targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetDir {
+    /// Coordinator → worker (commands).
+    Down,
+    /// Worker → coordinator (replies).
+    Up,
+}
+
+/// What happens to a lane's frame(s) when a [`NetEvent`] fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NetFault {
+    /// Every frame with seq in `[seq, until)` is discarded (`None` =
+    /// the lane never recovers — a partition).
+    Drop {
+        /// First sequence number that gets through again; `None`
+        /// partitions the lane for good.
+        until: Option<u64>,
+    },
+    /// The frame is delivered twice (the receiver suppresses the
+    /// duplicate, and counts it).
+    Dup,
+    /// The frame is delivered after `ms` milliseconds.
+    Delay {
+        /// Added latency in milliseconds.
+        ms: u64,
+    },
+    /// The frame is held and delivered behind the lane's next frame.
+    Reorder,
+}
+
+/// One scripted impairment: lane `(link, dir)` suffers `kind` at frame
+/// `seq` (0-based, per-lane).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetEvent {
+    /// Which coordinator↔worker link.
+    pub link: usize,
+    /// Which direction of that link.
+    pub dir: NetDir,
+    /// The lane-local frame index at which the fault fires.
+    pub seq: u64,
+    /// What happens.
+    pub kind: NetFault,
+}
+
+/// A deterministic schedule of network impairments.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetPlan {
+    /// The scripted events, in no particular order.
+    pub events: Vec<NetEvent>,
+}
+
+impl NetPlan {
+    /// A plan from explicit events.
+    pub fn new(events: Vec<NetEvent>) -> Self {
+        Self { events }
+    }
+
+    /// A plan with no impairments (the network behaves).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Permanently partition `link` right after bring-up: the worker's
+    /// join frame (up seq 0) gets through — the protocols treat a seat
+    /// that never joins as a setup failure, not a fault — and every
+    /// later frame is lost in both directions. To the coordinator the
+    /// die goes dark exactly like a killed one.
+    pub fn partition(link: usize) -> Self {
+        Self::new(vec![
+            NetEvent { link, dir: NetDir::Down, seq: 0, kind: NetFault::Drop { until: None } },
+            NetEvent { link, dir: NetDir::Up, seq: 1, kind: NetFault::Drop { until: None } },
+        ])
+    }
+
+    /// Drop lane `(link, dir)` frames with seq in `[from, until)` — an
+    /// outage with reconnect.
+    pub fn drop_window(link: usize, dir: NetDir, from: u64, until: u64) -> Self {
+        Self::new(vec![NetEvent { link, dir, seq: from, kind: NetFault::Drop { until: Some(until) } }])
+    }
+
+    /// Delay lane `(link, dir)` frame `seq` by `ms` milliseconds.
+    pub fn delay(link: usize, dir: NetDir, seq: u64, ms: u64) -> Self {
+        Self::new(vec![NetEvent { link, dir, seq, kind: NetFault::Delay { ms } }])
+    }
+
+    /// Duplicate lane `(link, dir)` frame `seq`.
+    pub fn dup(link: usize, dir: NetDir, seq: u64) -> Self {
+        Self::new(vec![NetEvent { link, dir, seq, kind: NetFault::Dup }])
+    }
+
+    /// Swap lane `(link, dir)` frame `seq` with the frame after it.
+    pub fn reorder(link: usize, dir: NetDir, seq: u64) -> Self {
+        Self::new(vec![NetEvent { link, dir, seq, kind: NetFault::Reorder }])
+    }
+
+    /// The impairment governing frame `seq` of lane `(link, dir)`, if
+    /// any.
+    pub fn event_at(&self, link: usize, dir: NetDir, seq: u64) -> Option<NetFault> {
+        self.events.iter().find_map(|e| {
+            if e.link != link || e.dir != dir {
+                return None;
+            }
+            match e.kind {
+                NetFault::Drop { until } => {
+                    let dropped = seq >= e.seq && until.is_none_or(|u| seq < u);
+                    dropped.then_some(e.kind)
+                }
+                NetFault::Dup | NetFault::Delay { .. } | NetFault::Reorder => {
+                    (seq == e.seq).then_some(e.kind)
+                }
+            }
+        })
+    }
+
+    /// A small random plan over `links` links and roughly `msgs` frames
+    /// per lane, derived purely from `seed` — the generator the
+    /// transport-sim impairment matrix runs over. Only recoverable
+    /// kinds are drawn (short delays, duplicates, pairwise reorders,
+    /// drop windows *with* reconnect); permanent partitions are
+    /// scripted explicitly where a test wants the shrink path. Events
+    /// land in frames `[2, msgs + 2)` — the first two frames of every
+    /// lane are spared so the join/program handshake always brings the
+    /// link up — and at most two drop windows are drawn per plan, so a
+    /// three-die gang always keeps a survivor (mirroring how
+    /// [`crate::util::fault::FaultPlan::chaos`] bounds its kills).
+    pub fn chaos(seed: u64, links: usize, msgs: u64) -> Self {
+        let mut rng = HostRng::new(seed ^ 0x5EA_017);
+        let n = 2 + rng.below(3);
+        let mut events = Vec::with_capacity(n);
+        let mut drops = 0usize;
+        for _ in 0..n {
+            let link = rng.below(links.max(1));
+            let dir = if rng.below(2) == 0 { NetDir::Down } else { NetDir::Up };
+            let seq = 2 + rng.below(msgs.max(1) as usize) as u64;
+            let kind = match rng.below(4) {
+                0 => NetFault::Delay { ms: 1 + rng.below(3) as u64 },
+                1 => NetFault::Dup,
+                2 => NetFault::Reorder,
+                _ if drops == 2 => NetFault::Delay { ms: 1 },
+                _ => {
+                    drops += 1;
+                    let until = seq + 1 + rng.below(msgs.max(1) as usize) as u64;
+                    NetFault::Drop { until: Some(until) }
+                }
+            };
+            events.push(NetEvent { link, dir, seq, kind });
+        }
+        Self::new(events)
+    }
+
+    /// Serialize the plan (for the CI artifact on a red simulator case).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.events
+                .iter()
+                .map(|e| {
+                    let (kind, arg) = match e.kind {
+                        NetFault::Drop { until: None } => ("drop", Json::Null),
+                        NetFault::Drop { until: Some(u) } => ("drop", Json::from(u as usize)),
+                        NetFault::Dup => ("dup", Json::Null),
+                        NetFault::Delay { ms } => ("delay", Json::from(ms as usize)),
+                        NetFault::Reorder => ("reorder", Json::Null),
+                    };
+                    obj(vec![
+                        ("link", Json::from(e.link)),
+                        ("dir", Json::from(match e.dir {
+                            NetDir::Down => "down",
+                            NetDir::Up => "up",
+                        })),
+                        ("seq", Json::from(e.seq as usize)),
+                        ("kind", Json::from(kind)),
+                        ("arg", arg),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Parse back what [`NetPlan::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut events = Vec::new();
+        for e in v.as_arr()? {
+            let link = e.req("link")?.as_usize()?;
+            let dir = match e.req("dir")?.as_str()? {
+                "down" => NetDir::Down,
+                "up" => NetDir::Up,
+                other => bail!("unknown net direction `{other}`"),
+            };
+            let seq = e.req("seq")?.as_usize()? as u64;
+            let arg = e.req("arg")?;
+            let kind = match e.req("kind")?.as_str()? {
+                "drop" => NetFault::Drop {
+                    until: match arg {
+                        Json::Null => None,
+                        other => Some(other.as_usize()? as u64),
+                    },
+                },
+                "dup" => NetFault::Dup,
+                "delay" => NetFault::Delay { ms: arg.as_usize()? as u64 },
+                "reorder" => NetFault::Reorder,
+                other => bail!("unknown net fault kind `{other}`"),
+            };
+            events.push(NetEvent { link, dir, seq, kind });
+        }
+        Ok(Self::new(events))
+    }
+}
+
+// ---- the simulator ----------------------------------------------------
+
+/// One serialized frame in flight on a lane.
+#[derive(Clone)]
+struct SimFrame {
+    seq: u64,
+    text: String,
+    delay_ms: u64,
+}
+
+/// Sender-side per-lane state: the next frame number and (at most) one
+/// frame held back by a [`NetFault::Reorder`].
+#[derive(Default)]
+struct LaneState {
+    next_seq: u64,
+    held: Option<SimFrame>,
+}
+
+/// Apply the plan to one outgoing frame and hand the survivors to the
+/// lane's relay. Shared by the down (coordinator) and up (worker)
+/// sides — the impairment semantics are defined exactly once.
+fn lane_send(
+    plan: &NetPlan,
+    link: usize,
+    dir: NetDir,
+    raw: &mpsc::Sender<SimFrame>,
+    state: &Mutex<LaneState>,
+    stats: &Mutex<LinkStats>,
+    text: String,
+) -> Result<(), LinkClosed> {
+    let mut st = state.lock().unwrap();
+    let seq = st.next_seq;
+    st.next_seq += 1;
+    let mut frame = SimFrame { seq, text, delay_ms: 0 };
+    let ev = plan.event_at(link, dir, seq);
+    let mut out: Vec<SimFrame> = Vec::with_capacity(2);
+    {
+        let mut s = stats.lock().unwrap();
+        let lane: &mut LaneStats = match dir {
+            NetDir::Down => &mut s.down,
+            NetDir::Up => &mut s.up,
+        };
+        lane.sent += 1;
+        match ev {
+            Some(NetFault::Drop { .. }) => lane.dropped += 1,
+            Some(NetFault::Dup) => {
+                lane.duplicated += 1;
+                out.push(frame.clone());
+                out.push(frame);
+            }
+            Some(NetFault::Delay { ms }) => {
+                frame.delay_ms = ms;
+                out.push(frame);
+            }
+            Some(NetFault::Reorder) => {
+                lane.reordered += 1;
+                // at most one frame rides in the reorder slot: an
+                // already-held frame is released first
+                if let Some(prev) = st.held.take() {
+                    out.push(prev);
+                }
+                st.held = Some(frame);
+            }
+            None => out.push(frame),
+        }
+    }
+    // a held frame goes out *behind* whatever the lane carried next —
+    // even a dropped frame vacates the slot, so reorder can't wedge a
+    // lane that keeps talking
+    if !matches!(ev, Some(NetFault::Reorder)) {
+        if let Some(prev) = st.held.take() {
+            out.push(prev);
+        }
+    }
+    drop(st);
+    for f in out {
+        raw.send(f).map_err(|_| LinkClosed)?;
+    }
+    Ok(())
+}
+
+/// The receiving half of a lane: sleep out injected latency, suppress
+/// duplicate seqs, decode, deliver. Runs on its own relay thread; exits
+/// when the sending side hangs up or the receiver is gone.
+fn relay<T: Wire>(
+    raw_rx: mpsc::Receiver<SimFrame>,
+    deliver: mpsc::Sender<T>,
+    stats: Arc<Vec<Mutex<LinkStats>>>,
+    link: usize,
+    dir: NetDir,
+) {
+    let mut seen: HashSet<u64> = HashSet::new();
+    while let Ok(frame) = raw_rx.recv() {
+        if frame.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(frame.delay_ms));
+        }
+        if !seen.insert(frame.seq) {
+            let mut s = stats[link].lock().unwrap();
+            match dir {
+                NetDir::Down => s.down.suppressed += 1,
+                NetDir::Up => s.up.suppressed += 1,
+            }
+            continue;
+        }
+        // the frame was serialized by this process's own Wire impl — a
+        // decode failure is a codec bug, and the loudest thing a relay
+        // can do about it is die (the run then fails its barrier
+        // timeout, with this panic on stderr naming the frame)
+        let msg = T::decode(&frame.text).unwrap_or_else(|e| {
+            panic!("SimNet relay {link}/{dir:?}: wire codec failed on frame {}: {e:#}", frame.seq)
+        });
+        {
+            let mut s = stats[link].lock().unwrap();
+            match dir {
+                NetDir::Down => s.down.delivered += 1,
+                NetDir::Up => s.up.delivered += 1,
+            }
+        }
+        if deliver.send(msg).is_err() {
+            return;
+        }
+    }
+}
+
+/// One down lane as the coordinator holds it.
+struct DownLane {
+    raw: mpsc::Sender<SimFrame>,
+    state: Mutex<LaneState>,
+}
+
+/// The coordinator's side of the simulated network: a [`Transport`]
+/// whose every frame crosses the [`Wire`] codec and a scripted
+/// [`NetPlan`]. Build with [`sim_net`].
+pub struct SimNet<C, M> {
+    plan: NetPlan,
+    down: Vec<DownLane>,
+    agg_rx: mpsc::Receiver<M>,
+    stats: Arc<Vec<Mutex<LinkStats>>>,
+    _c: PhantomData<fn(C)>,
+}
+
+impl<C: Wire, M> Transport<C, M> for SimNet<C, M> {
+    fn links(&self) -> usize {
+        self.down.len()
+    }
+
+    fn send(&self, link: usize, cmd: C) -> Result<(), LinkClosed> {
+        let lane = &self.down[link];
+        lane_send(
+            &self.plan,
+            link,
+            NetDir::Down,
+            &lane.raw,
+            &lane.state,
+            &self.stats[link],
+            cmd.encode(),
+        )
+    }
+
+    fn recv_deadline(&self, deadline: Instant) -> Result<M, RecvError> {
+        match self.agg_rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(m) => Ok(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvError::Closed),
+        }
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        self.stats.iter().map(|m| *m.lock().unwrap()).collect()
+    }
+}
+
+impl<C, M> Drop for SimNet<C, M> {
+    fn drop(&mut self) {
+        // release any frame still parked in a reorder slot so the lane
+        // drains before the relays see the hangup
+        for lane in &self.down {
+            if let Some(f) = lane.state.lock().unwrap().held.take() {
+                let _ = lane.raw.send(f);
+            }
+        }
+    }
+}
+
+/// One worker's side of the simulated network. Build with [`sim_net`].
+pub struct SimEndpoint<C, M> {
+    link: usize,
+    plan: NetPlan,
+    cmd_rx: mpsc::Receiver<C>,
+    up_raw: mpsc::Sender<SimFrame>,
+    state: Mutex<LaneState>,
+    stats: Arc<Vec<Mutex<LinkStats>>>,
+    _m: PhantomData<fn(M)>,
+}
+
+impl<C, M: Wire> Endpoint<C, M> for SimEndpoint<C, M> {
+    fn recv(&self) -> Result<C, LinkClosed> {
+        self.cmd_rx.recv().map_err(|_| LinkClosed)
+    }
+
+    fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        lane_send(
+            &self.plan,
+            self.link,
+            NetDir::Up,
+            &self.up_raw,
+            &self.state,
+            &self.stats[self.link],
+            msg.encode(),
+        )
+    }
+}
+
+impl<C, M> Drop for SimEndpoint<C, M> {
+    fn drop(&mut self) {
+        if let Some(f) = self.state.lock().unwrap().held.take() {
+            let _ = self.up_raw.send(f);
+        }
+    }
+}
+
+/// Build a fully-wired simulated network over `links` links: the
+/// coordinator's [`SimNet`] plus one [`SimEndpoint`] per link, with two
+/// relay threads (down and up) per link applying `plan`.
+pub fn sim_net<C, M>(links: usize, plan: &NetPlan) -> (SimNet<C, M>, Vec<SimEndpoint<C, M>>)
+where
+    C: Wire + Send + 'static,
+    M: Wire + Send + 'static,
+{
+    let stats: Arc<Vec<Mutex<LinkStats>>> =
+        Arc::new((0..links).map(|_| Mutex::new(LinkStats::default())).collect());
+    let (agg_tx, agg_rx) = mpsc::channel::<M>();
+    let mut down = Vec::with_capacity(links);
+    let mut endpoints = Vec::with_capacity(links);
+    for k in 0..links {
+        let (draw_tx, draw_rx) = mpsc::channel::<SimFrame>();
+        let (cmd_tx, cmd_rx) = mpsc::channel::<C>();
+        let st = stats.clone();
+        crate::sampler::workers::spawn_named(format!("net-down-{k}"), move || {
+            relay::<C>(draw_rx, cmd_tx, st, k, NetDir::Down)
+        })
+        .expect("spawn SimNet down relay");
+        let (uraw_tx, uraw_rx) = mpsc::channel::<SimFrame>();
+        let st = stats.clone();
+        let up_tx = agg_tx.clone();
+        crate::sampler::workers::spawn_named(format!("net-up-{k}"), move || {
+            relay::<M>(uraw_rx, up_tx, st, k, NetDir::Up)
+        })
+        .expect("spawn SimNet up relay");
+        down.push(DownLane { raw: draw_tx, state: Mutex::new(LaneState::default()) });
+        endpoints.push(SimEndpoint {
+            link: k,
+            plan: plan.clone(),
+            cmd_rx,
+            up_raw: uraw_tx,
+            state: Mutex::new(LaneState::default()),
+            stats: stats.clone(),
+            _m: PhantomData,
+        });
+    }
+    (SimNet { plan: plan.clone(), down, agg_rx, stats, _c: PhantomData }, endpoints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal wire type for exercising the simulator itself.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Ping(u64);
+
+    impl Wire for Ping {
+        fn to_wire(&self) -> Json {
+            obj(vec![("ping", Json::from(self.0 as usize))])
+        }
+
+        fn from_wire(v: &Json) -> Result<Self> {
+            Ok(Ping(v.req("ping")?.as_usize()? as u64))
+        }
+    }
+
+    fn deadline() -> Instant {
+        Instant::now() + Duration::from_secs(5)
+    }
+
+    #[test]
+    fn zero_impairment_is_fifo_exactly_once() {
+        let (net, eps) = sim_net::<Ping, Ping>(2, &NetPlan::none());
+        for i in 0..10u64 {
+            net.send((i % 2) as usize, Ping(i)).unwrap();
+        }
+        let mut got = [Vec::new(), Vec::new()];
+        for (k, ep) in eps.iter().enumerate() {
+            for _ in 0..5 {
+                got[k].push(ep.recv().unwrap().0);
+            }
+            ep.send(Ping(100 + k as u64)).unwrap();
+        }
+        assert_eq!(got[0], vec![0, 2, 4, 6, 8]);
+        assert_eq!(got[1], vec![1, 3, 5, 7, 9]);
+        let mut ups: Vec<u64> = (0..2).map(|_| net.recv_deadline(deadline()).unwrap().0).collect();
+        ups.sort_unstable();
+        assert_eq!(ups, vec![100, 101]);
+        let stats = net.link_stats();
+        assert_eq!(stats.iter().map(|s| s.down.sent).sum::<u64>(), 10);
+        assert_eq!(stats.iter().map(|s| s.dropped()).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn dup_is_suppressed_at_the_receiver() {
+        let (net, eps) = sim_net::<Ping, Ping>(1, &NetPlan::dup(0, NetDir::Down, 1));
+        for i in 0..3u64 {
+            net.send(0, Ping(i)).unwrap();
+        }
+        let got: Vec<u64> = (0..3).map(|_| eps[0].recv().unwrap().0).collect();
+        assert_eq!(got, vec![0, 1, 2], "duplicate frame must not reach the endpoint");
+        // the duplicate has certainly been relayed once frame 2 is out
+        let s = net.link_stats()[0].down;
+        assert_eq!(s.duplicated, 1);
+        assert_eq!(s.suppressed, 1);
+        assert_eq!(s.delivered, 3);
+    }
+
+    #[test]
+    fn reorder_swaps_with_the_next_frame() {
+        let (net, eps) = sim_net::<Ping, Ping>(1, &NetPlan::reorder(0, NetDir::Down, 0));
+        for i in 0..3u64 {
+            net.send(0, Ping(i)).unwrap();
+        }
+        let got: Vec<u64> = (0..3).map(|_| eps[0].recv().unwrap().0).collect();
+        assert_eq!(got, vec![1, 0, 2]);
+        assert_eq!(net.link_stats()[0].down.reordered, 1);
+    }
+
+    #[test]
+    fn dropped_frames_vanish_without_a_send_error() {
+        let (net, eps) = sim_net::<Ping, Ping>(1, &NetPlan::drop_window(0, NetDir::Down, 1, 3));
+        for i in 0..4u64 {
+            net.send(0, Ping(i)).unwrap();
+        }
+        let got: Vec<u64> = (0..2).map(|_| eps[0].recv().unwrap().0).collect();
+        assert_eq!(got, vec![0, 3]);
+        assert_eq!(net.link_stats()[0].down.dropped, 2);
+    }
+
+    #[test]
+    fn partition_spares_the_join_frame_then_goes_dark() {
+        let (net, eps) = sim_net::<Ping, Ping>(2, &NetPlan::partition(0));
+        net.send(0, Ping(1)).unwrap(); // down seq 0: dropped
+        net.send(1, Ping(2)).unwrap();
+        eps[0].send(Ping(3)).unwrap(); // up seq 0: the join frame — delivered
+        eps[0].send(Ping(4)).unwrap(); // up seq 1: dropped
+        eps[1].send(Ping(5)).unwrap();
+        assert_eq!(eps[1].recv().unwrap().0, 2, "healthy link unaffected");
+        let mut ups: Vec<u64> = (0..2).map(|_| net.recv_deadline(deadline()).unwrap().0).collect();
+        ups.sort_unstable();
+        assert_eq!(ups, vec![3, 5], "only the join frame crosses the partitioned link");
+        assert_eq!(
+            net.recv_deadline(Instant::now() + Duration::from_millis(50)),
+            Err(RecvError::Timeout),
+            "the partitioned link delivers nothing after the join"
+        );
+        let s = net.link_stats()[0];
+        assert_eq!(s.down.dropped, 1);
+        assert_eq!(s.up.dropped, 1);
+        assert_eq!(s.up.delivered, 1);
+    }
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = NetPlan::new(vec![
+            NetEvent { link: 0, dir: NetDir::Down, seq: 4, kind: NetFault::Drop { until: None } },
+            NetEvent { link: 1, dir: NetDir::Up, seq: 2, kind: NetFault::Drop { until: Some(9) } },
+            NetEvent { link: 2, dir: NetDir::Down, seq: 0, kind: NetFault::Dup },
+            NetEvent { link: 0, dir: NetDir::Up, seq: 7, kind: NetFault::Delay { ms: 5 } },
+            NetEvent { link: 3, dir: NetDir::Down, seq: 1, kind: NetFault::Reorder },
+        ]);
+        let text = plan.to_json().to_string();
+        let back = NetPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn chaos_is_deterministic_and_recoverable() {
+        for seed in 0..32u64 {
+            let a = NetPlan::chaos(seed, 3, 12);
+            let b = NetPlan::chaos(seed, 3, 12);
+            assert_eq!(a, b);
+            assert!(!a.events.is_empty());
+            let drops =
+                a.events.iter().filter(|e| matches!(e.kind, NetFault::Drop { .. })).count();
+            assert!(drops <= 2, "at most two drop windows per plan, got {drops}");
+            for e in &a.events {
+                assert!(e.link < 3);
+                assert!((2..14).contains(&e.seq), "handshake frames are off-limits: {}", e.seq);
+                assert!(
+                    !matches!(e.kind, NetFault::Drop { until: None }),
+                    "chaos never partitions for good"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn drop_window_gates_seqs() {
+        let plan = NetPlan::drop_window(1, NetDir::Up, 3, 5);
+        assert_eq!(plan.event_at(1, NetDir::Up, 2), None);
+        assert!(matches!(plan.event_at(1, NetDir::Up, 3), Some(NetFault::Drop { .. })));
+        assert!(matches!(plan.event_at(1, NetDir::Up, 4), Some(NetFault::Drop { .. })));
+        assert_eq!(plan.event_at(1, NetDir::Up, 5), None);
+        assert_eq!(plan.event_at(1, NetDir::Down, 3), None, "other lane untouched");
+        assert_eq!(plan.event_at(0, NetDir::Up, 3), None, "other link untouched");
+    }
+}

@@ -70,6 +70,14 @@ impl Json {
         Ok(x as usize)
     }
 
+    /// The value as a boolean, or a type error.
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
     /// The value as a string, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {

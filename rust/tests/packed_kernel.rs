@@ -16,6 +16,11 @@
 //! 3. **Pool determinism.** Per-chain/per-block streams are fully
 //!    determined by their seeds, so serial and pooled scheduling must be
 //!    bit-identical for both the scalar and packed engines.
+//!
+//! The statistical and determinism checks derive their engine seeds
+//! from `PCHIP_TEST_SEED` (defaults reproduce the recorded run).
+
+mod common;
 
 use pchip::analog::{Personality, ProgrammedWeights};
 use pchip::chimera::Topology;
@@ -114,7 +119,7 @@ fn packed_marginals_match_exact_boltzmann_on_a_biased_ferro_pair() {
     let mut p = IsingProblem::new("packed-ferro-pair");
     p.couplings.push((a, b, 1.0));
     p.h[a] = 1.0;
-    assert_packed_marginals(&p, 0.7, 17, 0.1);
+    assert_packed_marginals(&p, 0.7, common::test_seed(17), 0.1);
 }
 
 #[test]
@@ -136,7 +141,7 @@ fn packed_marginals_match_exact_boltzmann_on_a_two_cell_problem() {
     p.h[b] = -1.0;
     let support = p.support();
     assert!(support.len() <= 20, "keep enumeration tractable, got {}", support.len());
-    assert_packed_marginals(&p, 1.0, 29, 0.12);
+    assert_packed_marginals(&p, 1.0, common::test_seed(29), 0.12);
 }
 
 #[test]
@@ -147,8 +152,9 @@ fn software_pooled_sweeps_bit_identical_to_serial() {
     p.couplings.push((a, b, 1.0));
     p.h[a] = 1.0;
 
-    let mut serial = SoftwareSampler::new(8, 5);
-    let mut pooled = SoftwareSampler::new(8, 5);
+    let seed = common::test_seed(5);
+    let mut serial = SoftwareSampler::new(8, seed);
+    let mut pooled = SoftwareSampler::new(8, seed);
     load_exact(&mut serial, &p, &topo);
     load_exact(&mut pooled, &p, &topo);
     serial.set_beta(1.2);
@@ -171,8 +177,9 @@ fn packed_pooled_sweeps_bit_identical_to_serial() {
     p.couplings.push((a, b, 1.0));
     p.h[b] = -1.0;
 
-    let mut serial = PackedSampler::new(3, 13);
-    let mut pooled = PackedSampler::new(3, 13);
+    let seed = common::test_seed(13);
+    let mut serial = PackedSampler::new(3, seed);
+    let mut pooled = PackedSampler::new(3, seed);
     load_exact(&mut serial, &p, &topo);
     load_exact(&mut pooled, &p, &topo);
     serial.set_beta(0.9);

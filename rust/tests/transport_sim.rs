@@ -1,0 +1,458 @@
+//! The pluggable-transport network-simulation suite: the gang
+//! protocols driven over `transport::SimNet`, a deterministic
+//! in-process "remote" network whose every frame crosses the
+//! [`pchip::transport::Wire`] codec and a scripted [`NetPlan`].
+//!
+//! 1. **Zero impairment ≡ mpsc** — with [`NetPlan::none`], a 1-shard
+//!    tempering run over the simulator is bit-identical to the serial
+//!    engine, and a 1-die training run is bit-identical to the
+//!    in-process service: the codec is lossless and delivery is FIFO
+//!    exactly-once.
+//! 2. **Impairment matrix** — seeded [`NetPlan::chaos`] schedules of
+//!    latency, duplication, bounded reordering and drop-with-reconnect:
+//!    elastic sharded tempering still samples its exact Boltzmann
+//!    marginals on the coldest rung, and elastic training still
+//!    converges to the single-die baseline. CI fans the matrix out
+//!    over `PCHIP_TEST_SEED`.
+//! 3. **Partition ≡ kill** — a permanently partitioned die is
+//!    operationally indistinguishable from a killed one (the PR 6
+//!    shrink path): same shrunk gang, same surviving ladder, same
+//!    marginals.
+//!
+//! A red seeded case writes its plan to `target/net-failing-plan.json`
+//! (the CI artifact) and prints the seed to replay it verbatim.
+
+mod common;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use common::{
+    faulty_sampler, loaded_sampler, loaded_sampler_lossless, small_exact_problem, test_seed,
+    train_die,
+};
+use pchip::annealing::{temper_observed, BetaLadder, TemperingParams};
+use pchip::chimera::{and_gate_layout, Topology};
+use pchip::coordinator::{
+    run_sharded_tempering_observed, run_sharded_tempering_simnet, ShardedRun,
+    ShardedTemperingParams,
+};
+use pchip::learning::{
+    dataset, run_training, run_training_observed, run_training_simnet, CdParams, TrainParams,
+};
+use pchip::metrics::{MembershipChange, MembershipEvent};
+use pchip::problems::{exact_boltzmann, sk, IsingProblem};
+use pchip::transport::{NetDir, NetFault, NetPlan};
+use pchip::util::fault::FaultPlan;
+
+/// Persist the failing plan where CI uploads it, then go red loudly.
+fn fail_net(seed: u64, plan: &NetPlan, why: &str) -> ! {
+    let dir = std::path::Path::new("target");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join("net-failing-plan.json");
+    let _ = std::fs::write(&path, plan.to_json().to_string());
+    panic!(
+        "net seed {seed} failed ({why}); plan {} written to {} — replay with \
+         PCHIP_TEST_SEED={seed}",
+        plan.to_json().to_string(),
+        path.display()
+    );
+}
+
+/// Exact Boltzmann marginals of `problem`'s support spins at `beta`.
+fn exact_marginals(problem: &IsingProblem, beta: f64) -> Vec<f64> {
+    let support = problem.support();
+    let (states, probs) = exact_boltzmann(problem, beta).unwrap();
+    (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect()
+}
+
+/// Coldest-rung marginal accumulator shared by the sharded runs here —
+/// the same observer the fault-free and chaos suites use.
+struct MarginalAcc {
+    burn_in: usize,
+    sums: Vec<f64>,
+    n: usize,
+}
+
+impl MarginalAcc {
+    fn new(spins: usize) -> Self {
+        Self { burn_in: 200, sums: vec![0.0; spins], n: 0 }
+    }
+
+    fn take(&mut self, round: usize, states: &[Vec<i8>], rungs: &[usize], support: &[usize]) {
+        if round < self.burn_in {
+            return;
+        }
+        let cold = &states[rungs[rungs.len() - 1]];
+        for (k, &s) in support.iter().enumerate() {
+            self.sums[k] += cold[s] as f64;
+        }
+        self.n += 1;
+    }
+
+    fn marginals(&self) -> Vec<f64> {
+        self.sums.iter().map(|s| s / self.n.max(1) as f64).collect()
+    }
+}
+
+/// The elastic 3-die marginal-run parameters — the exact setup the
+/// chaos suite validated over in-process channels, so any drift seen
+/// here is the network's doing.
+fn marginal_params() -> ShardedTemperingParams {
+    ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 6),
+            sweeps_per_round: 2,
+            rounds: 4200,
+            record_every: 100,
+            seed: 0xE117,
+            ..Default::default()
+        },
+        shards: 3,
+        barrier_timeout: Duration::from_secs(2),
+        pipeline: false,
+        elastic: true,
+    }
+}
+
+/// One elastic 3-die tempering run over the simulator under `plan`,
+/// returning the run and the coldest-rung marginals it sampled.
+fn marginal_simnet_run(
+    problem: &IsingProblem,
+    topo: &Topology,
+    plan: &NetPlan,
+) -> anyhow::Result<(ShardedRun, Vec<f64>)> {
+    let support = problem.support();
+    let dies = vec![
+        loaded_sampler(problem, topo, 2, 11),
+        loaded_sampler(problem, topo, 2, 0x1011),
+        loaded_sampler(problem, topo, 2, 0x2011),
+    ];
+    let mut acc = MarginalAcc::new(support.len());
+    let run = run_sharded_tempering_simnet(
+        dies,
+        problem,
+        &marginal_params(),
+        1.0,
+        plan,
+        |round, states, rungs| acc.take(round, states, rungs, &support),
+    )?;
+    anyhow::ensure!(acc.n > 3500, "expected post-burn-in samples, got {}", acc.n);
+    anyhow::ensure!(run.run.best_energy.is_finite(), "non-finite best energy");
+    Ok((run, acc.marginals()))
+}
+
+/// Seats that ended the run dead (Lost/Stalled with no later rejoin).
+fn finally_dead(events: &[MembershipEvent]) -> Vec<usize> {
+    let mut dead = std::collections::BTreeSet::new();
+    for e in events {
+        match e.change {
+            MembershipChange::Lost | MembershipChange::Stalled => {
+                dead.insert(e.die);
+            }
+            MembershipChange::Rejoined => {
+                dead.remove(&e.die);
+            }
+        }
+    }
+    dead.into_iter().collect()
+}
+
+/// The training setup of the chaos suite, with a transport-sized
+/// barrier: silence (a dropped frame) must expire quickly so the
+/// elastic machinery gets to react within the test budget.
+fn gate_params(dies: usize, elastic: bool) -> TrainParams {
+    let cd = CdParams {
+        epochs: 60,
+        lr: 0.15,
+        k_sweeps: 3,
+        samples_per_pattern: 8,
+        ..CdParams::default()
+    };
+    let mut p = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    p.dies = dies;
+    p.elastic = elastic;
+    p.eval_every = 10;
+    p.eval_samples = 1500;
+    p.barrier_timeout = Duration::from_secs(2);
+    p
+}
+
+#[test]
+fn zero_impairment_one_shard_run_is_bit_identical_to_the_serial_engine() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = TemperingParams {
+        ladder: BetaLadder::geometric(0.2, 3.0, 8),
+        sweeps_per_round: 2,
+        rounds: 40,
+        adapt_every: 10, // exercise ladder adaptation through the codec
+        record_every: 4,
+        seed: 0xBEEF,
+        ..Default::default()
+    };
+
+    // single-die reference
+    let mut reference = loaded_sampler_lossless(&problem, &topo, 8, 77);
+    let mut ref_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let ref_run = temper_observed(&mut reference, &problem, &params, 1.0, |round, states, map| {
+        ref_log.push((round, states.to_vec(), map.to_vec()));
+    })
+    .unwrap();
+
+    // the same sampler seed, driven over the simulated network with no
+    // impairments: every command and readback crosses the Wire codec
+    let sharded_params = ShardedTemperingParams {
+        base: params.clone(),
+        shards: 1,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: false,
+    };
+    let mut sim_log: Vec<(usize, Vec<Vec<i8>>, Vec<usize>)> = Vec::new();
+    let sim = run_sharded_tempering_simnet(
+        vec![loaded_sampler_lossless(&problem, &topo, 8, 77)],
+        &problem,
+        &sharded_params,
+        1.0,
+        &NetPlan::none(),
+        |round, states, map| {
+            sim_log.push((round, states.to_vec(), map.to_vec()));
+        },
+    )
+    .unwrap();
+
+    // every round: identical spin states and rung→chain maps
+    assert_eq!(ref_log.len(), sim_log.len());
+    for ((ra, sa, ma), (rb, sb, mb)) in ref_log.iter().zip(&sim_log) {
+        assert_eq!(ra, rb);
+        assert_eq!(ma, mb, "rung→chain maps diverged at round {ra}");
+        assert_eq!(sa, sb, "spin states diverged at round {ra}");
+    }
+    // identical outputs, bit for bit
+    assert_eq!(ref_run.best_energy.to_bits(), sim.run.best_energy.to_bits());
+    assert_eq!(ref_run.best_state, sim.run.best_state);
+    assert_eq!(ref_run.total_sweeps, sim.run.total_sweeps);
+    assert_eq!(ref_run.trace.rows, sim.run.trace.rows);
+    assert_eq!(ref_run.swaps.attempts, sim.run.swaps.attempts);
+    assert_eq!(ref_run.swaps.accepts, sim.run.swaps.accepts);
+    assert_eq!(ref_run.swaps.round_trips, sim.run.swaps.round_trips);
+    assert_eq!(ref_run.ladder.betas, sim.run.ladder.betas, "adapted ladders diverged");
+    // a behaving network: exactly-once FIFO, nothing impaired
+    let s = &sim.net[0];
+    assert_eq!((s.down.dropped, s.up.dropped), (0, 0));
+    assert_eq!((s.down.duplicated, s.up.duplicated), (0, 0));
+    assert_eq!((s.down.suppressed, s.up.suppressed), (0, 0));
+    assert_eq!((s.down.reordered, s.up.reordered), (0, 0));
+    assert_eq!(s.up.delivered, s.up.sent, "every readback frame must have been delivered");
+    assert!(s.down.sent >= params.rounds as u64, "commands must have crossed the wire");
+}
+
+#[test]
+fn zero_impairment_one_die_training_is_bit_identical_to_the_mpsc_service() {
+    let params = gate_params(1, false);
+    let reference =
+        run_training_observed(vec![train_die(41, 8)], &params, None, params.cd.epochs, |_| {})
+            .unwrap();
+    let (sim, links) = run_training_simnet(
+        vec![train_die(41, 8)],
+        &params,
+        None,
+        params.cd.epochs,
+        &NetPlan::none(),
+        |_| {},
+    )
+    .unwrap();
+
+    // the whole learning trajectory must match, not just the endpoint:
+    // a lossy codec would show up as an early drift in the KL curve
+    assert_eq!(reference.stats.len(), sim.stats.len());
+    for (a, b) in reference.stats.iter().zip(&sim.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+        assert_eq!(a.corr_gap.to_bits(), b.corr_gap.to_bits(), "corr gap at epoch {}", a.epoch);
+        assert_eq!(a.valid_mass.to_bits(), b.valid_mass.to_bits(), "mass at epoch {}", a.epoch);
+    }
+    assert_eq!(reference.final_kl.to_bits(), sim.final_kl.to_bits());
+    assert_eq!(reference.final_valid_mass.to_bits(), sim.final_valid_mass.to_bits());
+    assert_eq!(reference.total_sweeps, sim.total_sweeps);
+    assert_eq!(reference.codes, sim.codes, "final register images diverged");
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&reference.checkpoint.w), bits(&sim.checkpoint.w));
+    assert_eq!(bits(&reference.checkpoint.b), bits(&sim.checkpoint.b));
+    assert_eq!(reference.checkpoint.chains, sim.checkpoint.chains);
+    assert!(sim.membership.is_empty(), "no impairments, no membership changes");
+    // clean-network accounting on the single link
+    let s = &links[0];
+    assert_eq!(s.up.delivered, s.up.sent, "every report frame must have been delivered");
+    assert_eq!((s.down.dropped + s.up.dropped, s.down.duplicated + s.up.duplicated), (0, 0));
+    assert!(s.down.sent > params.cd.epochs as u64, "one program + one command per epoch");
+}
+
+#[test]
+fn impairment_matrix_keeps_coldest_rung_boltzmann_marginals() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let exact_m = exact_marginals(&problem, 1.0);
+    // CI fans this out over a seed matrix via PCHIP_TEST_SEED; locally
+    // it runs the default block of 6 scripted-random plans
+    let base = test_seed(0x7E11_0);
+    for k in 0..6u64 {
+        let seed = base.wrapping_add(k);
+        let plan = NetPlan::chaos(seed, 3, 600);
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| marginal_simnet_run(&problem, &topo, &plan)));
+        let (run, got) = match outcome {
+            Ok(Ok(r)) => r,
+            Ok(Err(err)) => fail_net(seed, &plan, &format!("{err:#}")),
+            Err(_) => fail_net(seed, &plan, "panicked"),
+        };
+        for (j, &s) in support.iter().enumerate() {
+            if (got[j] - exact_m[j]).abs() >= 0.15 {
+                fail_net(
+                    seed,
+                    &plan,
+                    &format!(
+                        "spin {s}: coldest-rung marginal {:.3} vs exact {:.3}",
+                        got[j], exact_m[j]
+                    ),
+                );
+            }
+        }
+        // every scripted impairment must have left its audit trail in
+        // the per-link delivery counters (the run is long enough that
+        // each lane certainly reached the scripted frame)
+        for e in &plan.events {
+            let lane = match e.dir {
+                NetDir::Down => &run.net[e.link].down,
+                NetDir::Up => &run.net[e.link].up,
+            };
+            match e.kind {
+                NetFault::Drop { .. } => {
+                    assert!(lane.dropped > 0, "seed {seed}: drop event uncounted on {e:?}")
+                }
+                NetFault::Dup => {
+                    assert!(lane.duplicated > 0, "seed {seed}: dup event uncounted on {e:?}")
+                }
+                NetFault::Reorder => {
+                    assert!(lane.reordered > 0, "seed {seed}: reorder event uncounted on {e:?}")
+                }
+                NetFault::Delay { .. } => {}
+            }
+        }
+    }
+}
+
+#[test]
+fn impairment_matrix_training_still_converges() {
+    // single-die baseline at the same per-epoch sample budget
+    let single = run_training(vec![train_die(41, 8)], &gate_params(1, false)).unwrap();
+    let first = single.stats.first().unwrap();
+    assert!(
+        single.final_kl < first.kl * 0.8,
+        "single-die baseline never converged: {} → {}",
+        first.kl,
+        single.final_kl
+    );
+
+    let base = test_seed(0x7E11_1);
+    let params = gate_params(3, true);
+    for k in 0..6u64 {
+        let seed = base.wrapping_add(k);
+        // ~70 frames per lane over 60 epochs: events land mid-run, and
+        // a drop window may well outlast the schedule — a permanent
+        // loss the elastic service must absorb at equal budget
+        let plan = NetPlan::chaos(seed, 3, 40);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            let chips = vec![train_die(41, 8), train_die(42, 8), train_die(43, 8)];
+            run_training_simnet(chips, &params, None, params.cd.epochs, &plan, |_| {})
+        }));
+        let (run, links) = match outcome {
+            Ok(Ok(r)) => r,
+            Ok(Err(err)) => fail_net(seed, &plan, &format!("{err:#}")),
+            Err(_) => fail_net(seed, &plan, "panicked"),
+        };
+        if run.final_valid_mass <= 0.5 {
+            fail_net(seed, &plan, &format!("valid mass collapsed to {}", run.final_valid_mass));
+        }
+        if run.final_kl > single.final_kl + 0.3 {
+            fail_net(
+                seed,
+                &plan,
+                &format!("KL {} vs single-die baseline {}", run.final_kl, single.final_kl),
+            );
+        }
+        assert_eq!(run.checkpoint.epochs_done, 60, "every epoch must complete");
+        let delivered: u64 = links.iter().map(|l| l.up.delivered).sum();
+        assert!(delivered > 0, "the matrix run never carried traffic");
+    }
+}
+
+#[test]
+fn a_partitioned_die_is_indistinguishable_from_a_killed_one() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let exact_m = exact_marginals(&problem, 1.0);
+    let params = marginal_params();
+
+    // reference: die 1's chip errors out at its 5th sweep — the PR 6
+    // shrink path over in-process channels
+    let killed_dies = vec![
+        faulty_sampler(&problem, &topo, 2, 11, 0, FaultPlan::none()),
+        faulty_sampler(&problem, &topo, 2, 0x1011, 1, FaultPlan::kill(1, 5)),
+        faulty_sampler(&problem, &topo, 2, 0x2011, 2, FaultPlan::none()),
+    ];
+    let mut killed_acc = MarginalAcc::new(support.len());
+    let killed = run_sharded_tempering_observed(
+        killed_dies,
+        &problem,
+        &params,
+        1.0,
+        |round, states, rungs| killed_acc.take(round, states, rungs, &support),
+    )
+    .unwrap();
+
+    // same gang, all chips healthy, but die 1's link goes dark right
+    // after the join — the coordinator can only see silence
+    let (parted, parted_m) =
+        marginal_simnet_run(&problem, &topo, &NetPlan::partition(1)).unwrap();
+
+    // both runs end identically shrunk: die 1 finally dead, the gang
+    // re-tiled onto 2 survivors hosting a 4-rung ladder with the cold
+    // endpoint still pinned at the target β
+    assert_eq!(finally_dead(&killed.membership), vec![1]);
+    assert_eq!(finally_dead(&parted.membership), vec![1]);
+    assert_eq!((killed.shards, parted.shards), (2, 2));
+    assert_eq!(killed.run.ladder.betas.len(), 4);
+    assert_eq!(parted.run.ladder.betas.len(), killed.run.ladder.betas.len());
+    assert_eq!(*parted.run.ladder.betas.last().unwrap(), 1.0, "cold endpoint must stay pinned");
+
+    // and both still sample the exact Boltzmann marginals
+    assert!(killed_acc.n > 3500, "expected post-burn-in samples, got {}", killed_acc.n);
+    let killed_m = killed_acc.marginals();
+    for (j, &s) in support.iter().enumerate() {
+        assert!(
+            (killed_m[j] - exact_m[j]).abs() < 0.15,
+            "spin {s}: post-kill marginal {:.3} vs exact {:.3}",
+            killed_m[j],
+            exact_m[j]
+        );
+        assert!(
+            (parted_m[j] - exact_m[j]).abs() < 0.15,
+            "spin {s}: post-partition marginal {:.3} vs exact {:.3}",
+            parted_m[j],
+            exact_m[j]
+        );
+    }
+
+    // the partitioned link's audit trail: the join frame got through,
+    // nothing was delivered after it in either direction
+    let s = &parted.net[1];
+    assert_eq!(s.up.delivered, 1, "only the join frame crosses the partitioned link");
+    assert_eq!(s.down.delivered, 0, "no command survives the partition");
+    assert!(s.down.dropped > 0, "the coordinator kept trying (probes) and the net ate them");
+}

@@ -1,0 +1,221 @@
+//! Property suite for the transport wire codec — the serialized
+//! protocol frames ([`ShardMsg`], [`TrainMsg`]) that cross `SimNet`
+//! links and, eventually, real sockets:
+//!
+//! 1. `decode ∘ encode` is the identity — spins, counters and the
+//!    all-reduce's integer-valued f64 sums round-trip bit for bit
+//!    (this is what makes the zero-impairment simulator runs
+//!    bit-identical to the in-process service).
+//! 2. Truncated frames always error, never panic.
+//! 3. Byte-corrupted frames come back as `Err`-or-a-valid-value,
+//!    never a panic.
+//! 4. Type confusion — a frame of one protocol fed to another's
+//!    decoder — is rejected by construction: the four frame families
+//!    use disjoint tag namespaces.
+
+use pchip::coordinator::{ShardCmd, ShardMsg};
+use pchip::learning::{GradAccum, TrainCmd, TrainMsg};
+use pchip::metrics::StateHistogram;
+use pchip::rng::HostRng;
+use pchip::transport::Wire;
+use pchip::util::json::Json;
+use pchip::util::prop;
+
+/// Random ±1 chain states: `chains` chains of `n` spins.
+fn arb_spins(rng: &mut HostRng, chains: usize, n: usize) -> Vec<Vec<i8>> {
+    (0..chains).map(|_| (0..n).map(|_| rng.spin()).collect()).collect()
+}
+
+/// A structurally valid random sharded-tempering readback frame.
+fn arb_shard_msg(rng: &mut HostRng) -> ShardMsg {
+    match rng.below(3) {
+        0 => ShardMsg::Ready { shard: rng.below(8), batch: 1 + rng.below(8) },
+        1 => {
+            let chains = 1 + rng.below(4);
+            let spins = 1 + rng.below(6);
+            ShardMsg::Phase {
+                shard: rng.below(8),
+                round: rng.below(10_000),
+                states: arb_spins(rng, chains, spins),
+                energies: (0..chains).map(|_| rng.normal()).collect(),
+            }
+        }
+        _ => ShardMsg::Error { shard: rng.below(8), message: format!("fault {}", rng.below(99)) },
+    }
+}
+
+/// A random phase accumulator with the sums the protocol actually
+/// carries: integer- and half-integer-valued f64 (exactly what spin
+/// products and their halves accumulate to), so `merge` exactness
+/// survives the wire.
+fn arb_accum(rng: &mut HostRng) -> GradAccum {
+    let patterns = rng.below(3);
+    let edges = 1 + rng.below(5);
+    let spins = 1 + rng.below(5);
+    let half = |rng: &mut HostRng| (rng.below(101) as f64 - 50.0) * 0.5;
+    let mut a = GradAccum::new(patterns, edges, spins);
+    for p in 0..patterns {
+        a.pos_n[p] = rng.below(100) as u64;
+        for e in 0..edges {
+            a.pos_c[p][e] = half(rng);
+        }
+        for s in 0..spins {
+            a.pos_m[p][s] = half(rng);
+        }
+    }
+    a.neg_n = rng.below(100) as u64;
+    for e in 0..edges {
+        a.neg_c[e] = half(rng);
+    }
+    for s in 0..spins {
+        a.neg_m[s] = half(rng);
+    }
+    a
+}
+
+/// A random visible-state histogram over a few distinct spins.
+fn arb_hist(rng: &mut HostRng) -> StateHistogram {
+    let k = 1 + rng.below(4);
+    let spins: Vec<usize> = (0..k).map(|b| b * 2 + rng.below(2)).collect();
+    let mut h = StateHistogram::new(&spins);
+    for _ in 0..rng.below(20) {
+        let pat: Vec<i8> = (0..k).map(|_| rng.spin()).collect();
+        h.record_pattern(&pat);
+    }
+    h
+}
+
+/// A structurally valid random training-service report frame.
+fn arb_train_msg(rng: &mut HostRng) -> TrainMsg {
+    match rng.below(5) {
+        0 => TrainMsg::Ready { shard: rng.below(8), batch: 1 + rng.below(16) },
+        1 => TrainMsg::Grad {
+            shard: rng.below(8),
+            accum: arb_accum(rng),
+            sweeps: rng.below(100_000) as u64,
+            tag: rng.next_u64() >> 12, // < 2^52: exact through the codec
+        },
+        2 => TrainMsg::Hist {
+            shard: rng.below(8),
+            hist: arb_hist(rng),
+            sweeps: rng.below(100_000) as u64,
+        },
+        3 => TrainMsg::Chains {
+            shard: rng.below(8),
+            states: arb_spins(rng, rng.below(4), 1 + rng.below(6)),
+        },
+        _ => TrainMsg::Error {
+            shard: rng.below(8),
+            message: format!("die fault {}", rng.below(1000)),
+        },
+    }
+}
+
+#[test]
+fn shard_msg_round_trips_bit_for_bit() {
+    prop::check("shard-msg round-trip", 300, |rng| {
+        let msg = arb_shard_msg(rng);
+        let back = ShardMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        // f64 energies must survive to the bit, not just approximately
+        if let (ShardMsg::Phase { energies: a, .. }, ShardMsg::Phase { energies: b, .. }) =
+            (&msg, &back)
+        {
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(a), bits(b), "energy readbacks must round-trip bit for bit");
+        }
+    });
+}
+
+#[test]
+fn train_msg_round_trips_bit_for_bit() {
+    prop::check("train-msg round-trip", 300, |rng| {
+        let msg = arb_train_msg(rng);
+        let back = TrainMsg::decode(&msg.encode()).unwrap();
+        assert_eq!(back, msg);
+        // the all-reduce's exactness rests on these sums being exact
+        if let (TrainMsg::Grad { accum: a, .. }, TrainMsg::Grad { accum: b, .. }) = (&msg, &back) {
+            let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a.neg_c), bits(&b.neg_c));
+            assert_eq!(bits(&a.neg_m), bits(&b.neg_m));
+            for (pa, pb) in a.pos_c.iter().zip(&b.pos_c) {
+                assert_eq!(bits(pa), bits(pb));
+            }
+        }
+    });
+}
+
+#[test]
+fn truncated_frames_error_instead_of_panicking() {
+    prop::check("wire truncation", 300, |rng| {
+        let text = if rng.below(2) == 0 {
+            arb_shard_msg(rng).encode()
+        } else {
+            arb_train_msg(rng).encode()
+        };
+        let cut = rng.below(text.len());
+        // frames are ASCII objects, so any byte cut is a char boundary
+        // and a strict prefix is never complete JSON
+        assert!(
+            Json::parse(&text[..cut]).is_err(),
+            "truncation at byte {cut}/{} parsed as complete JSON",
+            text.len()
+        );
+    });
+}
+
+#[test]
+fn corrupted_frames_never_panic() {
+    prop::check("wire byte corruption", 400, |rng| {
+        let text = if rng.below(2) == 0 {
+            arb_shard_msg(rng).encode()
+        } else {
+            arb_train_msg(rng).encode()
+        };
+        let mut bytes = text.into_bytes();
+        let at = rng.below(bytes.len());
+        bytes[at] = (32 + rng.below(95)) as u8; // printable ASCII
+        let corrupted = String::from_utf8(bytes).unwrap();
+        // a flipped byte may still decode (e.g. a changed digit) — the
+        // contract is Err-or-a-valid-value, never a panic, for BOTH
+        // decoders (a relay can't know which protocol a rotten frame
+        // belonged to)
+        let _ = ShardMsg::decode(&corrupted);
+        let _ = TrainMsg::decode(&corrupted);
+    });
+}
+
+#[test]
+fn cross_protocol_frames_are_rejected() {
+    prop::check("wire type confusion", 200, |rng| {
+        let shard = arb_shard_msg(rng).encode();
+        let train = arb_train_msg(rng).encode();
+        // across protocols: different discriminator keys ("t" / "tag")
+        assert!(TrainMsg::decode(&shard).is_err(), "ShardMsg decoded as TrainMsg: {shard}");
+        assert!(ShardMsg::decode(&train).is_err(), "TrainMsg decoded as ShardMsg: {train}");
+        // within a protocol: command and report tags are disjoint
+        let shard_cmd = ShardCmd::Phase {
+            round: rng.below(100),
+            betas: vec![0.5, 1.0],
+            sweeps: 1 + rng.below(4),
+        }
+        .encode();
+        assert!(ShardMsg::decode(&shard_cmd).is_err(), "ShardCmd decoded as ShardMsg");
+        assert!(ShardCmd::decode(&shard).is_err(), "ShardMsg decoded as ShardCmd");
+        let train_cmd = TrainCmd::Eval { samples: 1 + rng.below(100) }.encode();
+        assert!(TrainMsg::decode(&train_cmd).is_err(), "TrainCmd decoded as TrainMsg");
+        assert!(TrainCmd::decode(&train).is_err(), "TrainMsg decoded as TrainCmd");
+    });
+}
+
+#[test]
+fn grad_attempt_echo_never_collides_with_the_discriminator() {
+    // TrainMsg::Grad's `tag` field (the EpochShard attempt echo) rides
+    // under the wire key "attempt" — the "tag" key is the frame
+    // discriminator. A rename that merged them would decode every
+    // gradient as a malformed frame.
+    let msg = TrainMsg::Grad { shard: 1, accum: GradAccum::new(1, 2, 3), sweeps: 9, tag: 77 };
+    let Json::Obj(m) = msg.to_wire() else { panic!("a wire frame is an object") };
+    assert_eq!(m.get("tag").unwrap().as_str().unwrap(), "grad");
+    assert_eq!(m.get("attempt").unwrap().as_usize().unwrap(), 77);
+}
