@@ -173,6 +173,42 @@ fn main() -> anyhow::Result<()> {
         ]));
     }
 
+    // telemetry overhead: the same software arm with recording off vs
+    // on. The off arm is the product default — the per-arm regression
+    // gate holds it to baseline, which is the "disabled telemetry is
+    // near-free" guarantee. The on arm is display-only context for how
+    // much a recorded run pays.
+    let telemetry_overhead_pct = {
+        let mut s = SoftwareSampler::new(8, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        let flips = (sweeps_per_iter * 8 * N_SPINS) as f64;
+        let m_off = Bench::new(warmup, iters)
+            .throughput(flips, "flips")
+            .run("telemetry_off(batch=8)", || s.sweeps(sweeps_per_iter).unwrap());
+        pchip::telemetry::set_enabled(true);
+        let m_on = Bench::new(warmup, iters)
+            .throughput(flips, "flips")
+            .run("telemetry_on(batch=8)", || s.sweeps(sweeps_per_iter).unwrap());
+        pchip::telemetry::set_enabled(false);
+        pchip::telemetry::reset();
+        let off = m_off.throughput.unwrap().0;
+        let on = m_on.throughput.unwrap().0;
+        arms.push(obj(vec![
+            ("arm", Json::from("telemetry_off")),
+            ("batch", Json::from(8usize)),
+            ("flips_per_sec", Json::from(off)),
+        ]));
+        arms.push(obj(vec![
+            ("arm", Json::from("telemetry_on")),
+            ("batch", Json::from(8usize)),
+            ("flips_per_sec", Json::from(on)),
+        ]));
+        let pct = (off - on) / off * 100.0;
+        println!("\ntelemetry recording overhead (batch 8): {pct:.1}%");
+        pct
+    };
+
     // cycle-level chip (dense per-p-bit pipeline, batch 1)
     let mut chip = pchip::chip::PbitChip::power_up(3, MismatchConfig::default());
     {
@@ -230,12 +266,25 @@ fn main() -> anyhow::Result<()> {
 
     let silicon = N_SPINS as f64 / 50e-9;
     println!("\nreference: silicon rate 440 spins / 50 ns = {silicon:.2e} flips/s");
+    // derived flips/s rollup: the best software arm, and how far it
+    // sits from the silicon rate (the paper's cross-platform currency)
+    let best_fps = arms
+        .iter()
+        .filter_map(|a| a.req("flips_per_sec").ok()?.as_f64().ok())
+        .fold(0.0f64, f64::max);
+    println!(
+        "best software arm: {best_fps:.2e} flips/s ({:.1}% of silicon)",
+        best_fps / silicon * 100.0
+    );
     let report = obj(vec![
         ("bench", Json::from("sampler_hotpath")),
         ("quick", Json::from(usize::from(quick))),
         ("sweeps_per_iter", Json::from(sweeps_per_iter)),
         ("silicon_flips_per_sec", Json::from(silicon)),
         ("packed_speedup_batch32", Json::from(packed_speedup)),
+        ("best_flips_per_sec", Json::from(best_fps)),
+        ("silicon_fraction", Json::from(best_fps / silicon)),
+        ("telemetry_overhead_pct", Json::from(telemetry_overhead_pct)),
         ("arms", Json::Arr(arms)),
     ]);
     let out = write_bench_json("hotpath", &report)?;

@@ -239,6 +239,9 @@ pub struct ShardedRun {
     /// simulator reports exactly what its
     /// [`crate::transport::NetPlan`] did to each lane).
     pub net: Vec<LinkStats>,
+    /// Run telemetry rollup (`None` unless [`crate::telemetry`]
+    /// recording was enabled for the run).
+    pub telemetry: Option<crate::telemetry::RunTelemetry>,
 }
 
 impl ShardedRun {
@@ -392,6 +395,9 @@ pub(crate) fn shard_worker_loop<S: Sampler, E: Endpoint<ShardCmd, ShardMsg>>(
     problem: &IsingProblem,
     ep: &E,
 ) {
+    // this thread owns die `shard` for the run: label it so telemetry
+    // counters/spans recorded here (flips, sweep timing) attribute
+    crate::telemetry::set_die(shard);
     // incremental ΔE readback where the engine supports it; engines
     // without a flip stream rescan through the same code-domain ledger,
     // so every shard scores swaps against the same Hamiltonian
@@ -403,11 +409,13 @@ pub(crate) fn shard_worker_loop<S: Sampler, E: Endpoint<ShardCmd, ShardMsg>>(
         match cmd {
             ShardCmd::Finish => break,
             ShardCmd::Phase { round, betas, sweeps } => {
-                let msg = match sweep_phase(
-                    shard, round, sampler, problem, &betas, sweeps, &readback,
-                ) {
-                    Ok(m) => m,
-                    Err(e) => ShardMsg::Error { shard, message: format!("{e:#}") },
+                let msg = {
+                    let _span = crate::span!("sweep_phase");
+                    match sweep_phase(shard, round, sampler, problem, &betas, sweeps, &readback)
+                    {
+                        Ok(m) => m,
+                        Err(e) => ShardMsg::Error { shard, message: format!("{e:#}") },
+                    }
                 };
                 // keep serving after an error: the elastic coordinator
                 // probes dropped dies with further Phase commands and
@@ -449,6 +457,7 @@ fn handshake<T: Transport<ShardCmd, ShardMsg>>(
     net: &T,
     timeout: Duration,
 ) -> Result<Vec<usize>> {
+    let _span = crate::span!("handshake");
     let mut batches = vec![0usize; shards];
     let mut joined = vec![false; shards];
     let deadline = Instant::now() + timeout;
@@ -532,6 +541,9 @@ fn collect_phase<T: Transport<ShardCmd, ShardMsg>>(
     energies: &mut [f64],
     stash: &mut [StashedPhase],
 ) -> Result<()> {
+    // the whole collect IS the swap barrier: the span/histogram feeds
+    // the barrier-wait p50/p99 of the run summary
+    let _span = crate::span!("barrier_wait");
     let shards = plan.shards();
     let mut seen = vec![false; shards];
     let mut remaining = shards;
@@ -610,6 +622,7 @@ fn attribute(run: TemperingRun, plan: &ShardPlan) -> ShardedRun {
         shards,
         membership: Vec::new(),
         net: Vec::new(),
+        telemetry: None,
     }
 }
 
@@ -657,6 +670,7 @@ where
         )?;
         // 3. swap phase — interior and boundary pairs alike, O(1) each
         //    (β-assignments move, spin states stay on their dies)
+        let _span = crate::span!("swap_phase");
         observe(round, &states, core.chain_at_rung());
         core.finish_round(round, &energies, &states);
     }
@@ -721,6 +735,7 @@ where
             &mut stash,
         )?;
         // 3. … and score it while the dies sweep phase round+1
+        let _span = crate::span!("swap_phase");
         observe(round, &states, core.chain_at_rung());
         core.score(&energies, &states);
     }
@@ -814,6 +829,7 @@ where
     while done < total_rounds {
         // regrow: dies that answered a probe rejoin at this boundary
         for w in pending_rejoin.drain(..) {
+            crate::counter_add!("retry", 1);
             alive[w] = true;
             events.push(MembershipEvent {
                 round: done,
@@ -905,6 +921,7 @@ where
                 // immediate error (ignored), a revived one with a
                 // readback — the regrow signal
                 for w in (0..workers).filter(|&w| !alive[w]) {
+                    crate::counter_add!("probe", 1);
                     let cmd = ShardCmd::Phase {
                         round: $tag,
                         betas: vec![1.0; batches[w]],
@@ -933,6 +950,7 @@ where
                 break;
             }
             // bounded collect of phase `tag` from every survivor
+            let _barrier = crate::span!("barrier_wait");
             let mut seen = vec![false; plan.shards()];
             let mut remaining = plan.shards();
             for s in 0..plan.shards() {
@@ -999,6 +1017,8 @@ where
             if changed {
                 break;
             }
+            drop(_barrier);
+            let _swap = crate::span!("swap_phase");
             let assignment = match (&serial, &piped) {
                 (Some(core), _) => core.chain_at_rung(),
                 (_, Some(core)) => core.chain_at_rung(),
@@ -1134,6 +1154,10 @@ where
         samplers.len()
     );
     let problem = Arc::new(problem.clone());
+    // telemetry window: snapshot before the gang spawns so the rollup
+    // covers handshake + every phase (None when recording is off)
+    let window = crate::telemetry::enabled()
+        .then(|| (crate::telemetry::registry::snapshot(), Instant::now()));
     let mut joins = Vec::with_capacity(samplers.len());
     for (shard, (mut sampler, ep)) in samplers.into_iter().zip(endpoints).enumerate() {
         let prob = problem.clone();
@@ -1144,7 +1168,7 @@ where
             .map_err(|e| anyhow!("spawning shard {shard}: {e}"))?,
         );
     }
-    let result = if params.elastic {
+    let mut result = if params.elastic {
         drive_sharded_elastic(params, beta_scale, &net, observe)
     } else if params.pipeline {
         drive_sharded_pipelined(params, beta_scale, &net, observe)
@@ -1158,6 +1182,13 @@ where
         for j in joins {
             let _ = j.join();
         }
+    }
+    if let (Ok(run), Some((before, started))) = (&mut result, window) {
+        run.telemetry = Some(crate::telemetry::RunTelemetry::capture(
+            &before,
+            started.elapsed().as_secs_f64(),
+            &run.net,
+        ));
     }
     // elastic runs can succeed with a die still stalled mid-sweep; its
     // worker is abandoned like the error path's (it exits when its cmd

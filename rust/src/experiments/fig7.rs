@@ -88,7 +88,7 @@ pub fn fig7_gate_learning<C: TrainableChip>(
                 .filter(|&(&t, _)| t > 0.0)
                 .map(|(_, &m)| m)
                 .sum();
-            epochs.push(EpochStats { epoch, kl, corr_gap: gap, valid_mass: valid });
+            epochs.push(EpochStats::new(epoch, kl, gap, valid));
             if want_snapshot {
                 snapshots.push((epoch, p_model));
             }

@@ -15,7 +15,7 @@ use crate::learning::TrainableChip;
 use crate::metrics::EnergyTrace;
 use crate::problems::{maxcut::Graph, sk, IsingProblem};
 use crate::sampler::Sampler;
-use crate::util::bench::write_csv;
+use crate::util::bench::{write_csv, write_csv_text};
 
 /// Fig 9a output.
 #[derive(Debug, Clone)]
@@ -45,7 +45,7 @@ pub fn fig9a_sk_anneal<C: TrainableChip>(
     let best_energy =
         best.iter().map(|(e, _)| *e).fold(f64::INFINITY, f64::min);
     if let Some(name) = csv_name {
-        write_csv(name, "sweep,beta,mean_energy,min_energy", &trace.csv_rows())?;
+        write_csv_text(name, "sweep,beta,mean_energy,min_energy", &trace.csv_rows())?;
     }
     Ok(SkAnnealReport {
         best_energy,
@@ -235,12 +235,12 @@ pub fn fig9a_sk_temper_vs_anneal<C: TrainableChip>(
         target_energy: target,
     };
     if let Some(name) = csv_name {
-        write_csv(
+        write_csv_text(
             &format!("{name}_anneal"),
             "sweep,beta,mean_energy,min_energy",
             &report.anneal.trace.csv_rows(),
         )?;
-        write_csv(
+        write_csv_text(
             &format!("{name}_temper"),
             "sweep,beta,mean_energy,min_energy",
             &report.temper.trace.csv_rows(),
@@ -374,12 +374,12 @@ pub fn fig9a_sk_temper_sharded(
     let sharded = run_sharded_tempering(samplers, &problem, params, scale)?;
 
     if let Some(name) = csv_name {
-        write_csv(
+        write_csv_text(
             &format!("{name}_single"),
             "sweep,beta,mean_energy,min_energy",
             &single.trace.csv_rows(),
         )?;
-        write_csv(
+        write_csv_text(
             &format!("{name}_sharded"),
             "sweep,beta,mean_energy,min_energy",
             &sharded.run.trace.csv_rows(),

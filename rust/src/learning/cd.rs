@@ -105,18 +105,35 @@ pub struct EpochStats {
     pub corr_gap: f64,
     /// Probability mass on valid truth-table states.
     pub valid_mass: f64,
+    /// Cumulative telemetry rollup at evaluation time (`None` unless
+    /// [`crate::telemetry`] recording was enabled). Omitted from the
+    /// JSON when `None`, so disabled runs serialize exactly as before.
+    pub telemetry: Option<crate::telemetry::RunTelemetry>,
 }
 
 impl EpochStats {
+    /// Build one epoch record, stamping the cumulative telemetry
+    /// rollup (flips so far, phase latency quantiles) when recording
+    /// is enabled.
+    pub fn new(epoch: usize, kl: f64, corr_gap: f64, valid_mass: f64) -> Self {
+        let telemetry = crate::telemetry::enabled()
+            .then(crate::telemetry::RunTelemetry::capture_cumulative);
+        Self { epoch, kl, corr_gap, valid_mass, telemetry }
+    }
+
     /// Serialize to JSON (for run logs and the training service's
     /// streamed progress records).
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("epoch", Json::from(self.epoch)),
             ("kl", Json::from(self.kl)),
             ("corr_gap", Json::from(self.corr_gap)),
             ("valid_mass", Json::from(self.valid_mass)),
-        ])
+        ];
+        if let Some(t) = &self.telemetry {
+            pairs.push(("telemetry", t.to_json()));
+        }
+        obj(pairs)
     }
 
     /// Parse back what [`EpochStats::to_json`] wrote.
@@ -126,6 +143,10 @@ impl EpochStats {
             kl: v.req("kl")?.as_f64()?,
             corr_gap: v.req("corr_gap")?.as_f64()?,
             valid_mass: v.req("valid_mass")?.as_f64()?,
+            telemetry: v
+                .get("telemetry")
+                .map(crate::telemetry::RunTelemetry::from_json)
+                .transpose()?,
         })
     }
 }
@@ -336,7 +357,7 @@ impl CdTrainer {
             let gap = self.epoch(chip)?;
             if epoch % eval_every == 0 || epoch == self.params.epochs - 1 {
                 let (kl, valid) = self.evaluate(chip, eval_samples)?;
-                stats.push(EpochStats { epoch, kl, corr_gap: gap, valid_mass: valid });
+                stats.push(EpochStats::new(epoch, kl, gap, valid));
             }
         }
         Ok(stats)
@@ -401,7 +422,7 @@ mod tests {
         assert_eq!(back.lr, p.lr);
         assert_eq!(back.epochs, 33);
         assert_eq!(back.samples_per_pattern, p.samples_per_pattern);
-        let e = EpochStats { epoch: 7, kl: 0.25, corr_gap: 0.125, valid_mass: 0.875 };
+        let e = EpochStats::new(7, 0.25, 0.125, 0.875);
         let text = e.to_json().to_string();
         let back = EpochStats::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.epoch, 7);

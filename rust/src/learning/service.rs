@@ -370,6 +370,9 @@ pub struct TrainedRun {
     /// Membership changes of an elastic run, in epoch order (empty for
     /// non-elastic runs and for elastic runs that saw no faults).
     pub membership: Vec<MembershipEvent>,
+    /// Run telemetry rollup (`None` unless [`crate::telemetry`]
+    /// recording was enabled for the run).
+    pub telemetry: Option<crate::telemetry::RunTelemetry>,
 }
 
 /// The per-die seat seed the coordinator uses to randomize chains
@@ -769,6 +772,8 @@ pub(crate) fn train_worker_loop<C: TrainableChip, E: Endpoint<TrainCmd, TrainMsg
     params: &TrainParams,
     ep: &E,
 ) {
+    // label this die-owning thread so flips/spans attribute per die
+    crate::telemetry::set_die(shard);
     if ep.send(TrainMsg::Ready { shard, batch: chip.batch() }).is_err() {
         return; // coordinator already gone
     }
@@ -827,15 +832,18 @@ fn run_epoch_shard<C: TrainableChip>(
     beta: f32,
     neg_core: &mut Option<NegCore>,
 ) -> Result<TrainMsg> {
+    let _epoch_span = crate::span!("epoch");
     let mut acc =
         GradAccum::new(params.dataset.patterns.len(), spec.edges.len(), spec.spins.len());
     let mut sweeps = 0u64;
     if !work.patterns.is_empty() {
+        let _span = crate::span!("positive_phase");
         let patterns = &params.dataset.patterns[work.patterns.clone()];
         grad::collect_positive(chip, spec, patterns, work.patterns.start, &mut acc)?;
         sweeps += (patterns.len() * (spec.k_sweeps + spec.samples_per_pattern)) as u64;
     }
     if work.neg_samples > 0 {
+        let _span = crate::span!("negative_phase");
         match (&params.tempered, &work.shadow) {
             (Some(cfg), Some(shadow)) => {
                 sweeps += tempered_negative(
@@ -1185,6 +1193,7 @@ where
             }
         }
         // 2. all-reduce barrier: every die must report within the timeout
+        let _ar = crate::span!("all_reduce");
         let mut grads: Vec<Option<GradAccum>> = (0..dies).map(|_| None).collect();
         let deadline = Instant::now() + params.barrier_timeout;
         for _ in 0..dies {
@@ -1222,6 +1231,7 @@ where
         }
         let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
         let gap = trainer.apply_gradient(&dc, &dm);
+        drop(_ar); // all-reduce span covers barrier + merge + update
         program_all(trainer, params, net)?;
         // 4. evaluate at the cadence (last epoch always)
         if e % params.eval_every == 0 || e == segment_epochs - 1 {
@@ -1261,7 +1271,7 @@ where
             let p_model = merged.probabilities();
             let p_target = params.dataset.target_distribution();
             let (kl, valid) = kl_and_valid(&p_target, &p_model);
-            let stat = EpochStats { epoch: epoch_no, kl, corr_gap: gap, valid_mass: valid };
+            let stat = EpochStats::new(epoch_no, kl, gap, valid);
             on_epoch(&stat);
             stats.push(stat);
         }
@@ -1319,8 +1329,7 @@ fn flush_evals<F>(
         let p_model = entry.hist.probabilities();
         let p_target = params.dataset.target_distribution();
         let (kl, valid) = kl_and_valid(&p_target, &p_model);
-        let stat =
-            EpochStats { epoch: entry.epoch_no, kl, corr_gap: entry.corr_gap, valid_mass: valid };
+        let stat = EpochStats::new(entry.epoch_no, kl, entry.corr_gap, valid);
         on_epoch(&stat);
         stats.push(stat);
     }
@@ -1540,6 +1549,7 @@ where
         // absorb recoveries at the attempt boundary
         for die in std::mem::take(&mut pending_rejoin) {
             if !alive[die] {
+                crate::counter_add!("retry", 1);
                 alive[die] = true;
                 neg_fresh.fill(true);
                 events.push(MembershipEvent {
@@ -1575,6 +1585,7 @@ where
                     tag,
                 }
             } else {
+                crate::counter_add!("probe", 1);
                 EpochShard { patterns: 0..0, neg_samples: 1, neg_burn_in: true, shadow: None, tag }
             };
             if net.send(s, TrainCmd::Epoch(work)).is_err() {
@@ -1603,6 +1614,7 @@ where
         // 2. all-reduce over the survivors; tag-mismatched results from
         //    aborted attempts are dropped, and any answer from a dead
         //    die queues it to rejoin
+        let _ar = crate::span!("all_reduce");
         let mut grads: Vec<Option<GradAccum>> = (0..dies).map(|_| None).collect();
         let mut received = 0usize;
         let deadline = Instant::now() + params.barrier_timeout;
@@ -1677,6 +1689,7 @@ where
         }
         let (dc, dm) = total.gradient().with_context(|| format!("epoch {epoch_no}"))?;
         let gap = trainer.apply_gradient(&dc, &dm);
+        drop(_ar); // an aborted attempt's span already dropped at its `continue`
         if place.pcd_active {
             for s in 0..dies {
                 if alive[s] && place.neg_shares[s] > 0 {
@@ -1783,7 +1796,7 @@ where
                 let p_model = merged.probabilities();
                 let p_target = params.dataset.target_distribution();
                 let (kl, valid) = kl_and_valid(&p_target, &p_model);
-                let stat = EpochStats { epoch: epoch_no, kl, corr_gap: gap, valid_mass: valid };
+                let stat = EpochStats::new(epoch_no, kl, gap, valid);
                 on_epoch(&stat);
                 stats.push(stat);
             }
@@ -1897,6 +1910,7 @@ where
         stats,
         total_sweeps,
         membership: events,
+        telemetry: None, // attached by run_training_over, which owns the window
     })
 }
 
@@ -2005,6 +2019,10 @@ where
         chips.len()
     );
     let shared = Arc::new(params.clone());
+    // telemetry window: snapshot before the seats spawn so the rollup
+    // covers handshake + every epoch (None when recording is off)
+    let window = crate::telemetry::enabled()
+        .then(|| (crate::telemetry::registry::snapshot(), Instant::now()));
     let mut joins = Vec::with_capacity(chips.len());
     for (shard, (mut chip, ep)) in chips.into_iter().zip(endpoints).enumerate() {
         let p = shared.clone();
@@ -2015,13 +2033,20 @@ where
             .map_err(|e| anyhow!("spawning train worker {shard}: {e}"))?,
         );
     }
-    let result = drive_training(params, resume, epochs, &net, on_epoch);
+    let mut result = drive_training(params, resume, epochs, &net, on_epoch);
     let link_stats = net.link_stats();
     drop(net); // hang up on any seat still waiting for a command
     if result.is_ok() && !params.elastic {
         for j in joins {
             let _ = j.join();
         }
+    }
+    if let (Ok(run), Some((before, started))) = (&mut result, window) {
+        run.telemetry = Some(crate::telemetry::RunTelemetry::capture(
+            &before,
+            started.elapsed().as_secs_f64(),
+            &link_stats,
+        ));
     }
     // on error a stalled worker may never return: abandon the handles
     // (threads exit when their cmd channel drops) rather than deadlock.

@@ -78,6 +78,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sampler;
 pub mod spi;
+pub mod telemetry;
 pub mod transport;
 pub mod util;
 

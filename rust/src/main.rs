@@ -17,10 +17,15 @@
 //! pchip sweep  [--pbits N] [--points N]           (Fig 8a bias sweep)
 //! pchip tts    [--restarts N]                     (Table 1)
 //! pchip serve  [--jobs N] [--chips K] [--engine sw|xla]   E2E demo load
+//! pchip report FILE                  render a --trace-out JSONL trace
 //! ```
 //!
 //! All subcommands accept `--config path.toml` and `--engine sw|xla` and
-//! write CSV series into `results/`.
+//! write CSV series into `results/`. `train` and `temper` also accept
+//! `--trace-out FILE` / `--trace-perfetto FILE`, which enable the
+//! telemetry plane (see `docs/OBSERVABILITY.md`) for the run and export
+//! the recorded stream; `PCHIP_LOG=debug|info|warn` sets the stderr
+//! log level and `PCHIP_TELEMETRY=1` enables recording without export.
 
 use std::collections::HashMap;
 
@@ -129,20 +134,71 @@ fn net_plan(args: &Args) -> Result<Option<pchip::transport::NetPlan>> {
     }
 }
 
-/// Per-die membership-change log of an elastic gang run → stderr, one
-/// line per event, so scripts can grep which die died or rejoined when.
+/// Per-die membership-change log of an elastic gang run → the leveled
+/// logger (stderr at warn), one line per event, so scripts can grep
+/// which die died or rejoined when.
 fn print_membership(events: &[pchip::metrics::MembershipEvent]) {
     for e in events {
-        eprintln!("membership: round {:>4}  die {}  {:?}", e.round, e.die, e.change);
+        pchip::log_warn!("membership: round {:>4}  die {}  {:?}", e.round, e.die, e.change);
+    }
+}
+
+/// `--trace-out FILE` (JSONL event stream) / `--trace-perfetto FILE`
+/// (Chrome `trace_event` JSON). Either flag turns telemetry recording
+/// on for the whole run.
+struct TraceArgs {
+    jsonl: Option<String>,
+    perfetto: Option<String>,
+}
+
+fn trace_args(args: &Args) -> Result<TraceArgs> {
+    let t = TraceArgs {
+        jsonl: args.path_of("trace-out")?.map(str::to_string),
+        perfetto: args.path_of("trace-perfetto")?.map(str::to_string),
+    };
+    if t.jsonl.is_some() || t.perfetto.is_some() {
+        pchip::telemetry::set_enabled(true);
+    }
+    Ok(t)
+}
+
+impl TraceArgs {
+    /// Write the requested exports — `summary` becomes the JSONL
+    /// `summary` record, `extra` rows (e.g. the energy trace) are
+    /// appended to the stream — and say where they went.
+    fn export(
+        &self,
+        summary: Option<&pchip::telemetry::RunTelemetry>,
+        extra: &[pchip::util::json::Json],
+    ) -> Result<()> {
+        if let Some(p) = &self.jsonl {
+            pchip::telemetry::export::write_jsonl(std::path::Path::new(p), summary, extra)?;
+            println!("  telemetry stream → {p} (read with `pchip report {p}`)");
+        }
+        if let Some(p) = &self.perfetto {
+            pchip::telemetry::export::write_perfetto(std::path::Path::new(p))?;
+            println!("  perfetto trace → {p} (open in ui.perfetto.dev)");
+        }
+        Ok(())
+    }
+
+    /// The cumulative run summary when recording is on (the paths that
+    /// don't get a per-run [`pchip::telemetry::RunTelemetry`] attached).
+    fn cumulative_summary(&self) -> Option<pchip::telemetry::RunTelemetry> {
+        pchip::telemetry::enabled().then(pchip::telemetry::RunTelemetry::capture_cumulative)
     }
 }
 
 fn main() -> Result<()> {
+    pchip::telemetry::init_from_env();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         print_help();
         return Ok(());
     };
+    if cmd == "report" {
+        return cmd_report(&argv[1..]);
+    }
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
@@ -160,6 +216,17 @@ fn main() -> Result<()> {
         }
         other => bail!("unknown subcommand `{other}` (try `pchip help`)"),
     }
+}
+
+/// `pchip report FILE` — render the summary/counter/histogram tables of
+/// a JSONL trace written by `--trace-out`.
+fn cmd_report(argv: &[String]) -> Result<()> {
+    let Some(path) = argv.first() else {
+        bail!("usage: pchip report FILE (a .jsonl trace from --trace-out)");
+    };
+    let text = pchip::telemetry::export::report_from_jsonl(std::path::Path::new(path))?;
+    print!("{text}");
+    Ok(())
 }
 
 fn print_help() {
@@ -188,8 +255,11 @@ fn print_help() {
          maxcut  Max-Cut optimization (Fig 9b)\n  \
          sweep   bias-sweep variability (Fig 8a)\n  \
          tts     time-to-solution measurement (Table 1)\n  \
-         serve   chip-array serving demo (batched sampling jobs)\n\n\
-         common flags: --config FILE --engine sw|xla --seed N"
+         serve   chip-array serving demo (batched sampling jobs)\n  \
+         report  render a JSONL telemetry trace written by --trace-out\n\n\
+         common flags: --config FILE --engine sw|xla --seed N\n\
+         telemetry: --trace-out FILE --trace-perfetto FILE (train, temper)\n\
+         \u{20}          PCHIP_LOG=debug|info|warn   PCHIP_TELEMETRY=1"
     );
 }
 
@@ -313,6 +383,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     use pchip::learning::{TemperedNegative, TrainCheckpoint, TrainParams};
 
     let mut cfg = load_config(args)?;
+    let trace = trace_args(args)?; // before the run so recording covers it
     let gate = args.str_or("gate", "and");
     let (layout, data) = gate_by_name(&gate)?;
     let epochs: usize = args.get("epochs", 150)?;
@@ -412,6 +483,13 @@ fn cmd_train(args: &Args) -> Result<()> {
                 checkpoint.save(std::path::Path::new(path))?;
                 println!("  checkpoint → {path} (resume with --resume {path})");
             }
+            // the last epoch's stamped rollup is the run summary; fall
+            // back to the cumulative capture if evaluation never ran
+            let summary = stats
+                .last()
+                .and_then(|s| s.telemetry.clone())
+                .or_else(|| trace.cumulative_summary());
+            trace.export(summary.as_ref(), &[])?;
             Ok(())
         }
         JobResult::Failed(msg) => bail!("training failed: {msg}"),
@@ -442,6 +520,7 @@ fn cmd_anneal(args: &Args) -> Result<()> {
 fn cmd_temper(args: &Args) -> Result<()> {
     use pchip::annealing::{BetaLadder, LadderTuning, TemperingParams};
     let cfg = load_config(args)?;
+    let trace = trace_args(args)?; // before the run so recording covers it
     let b0: f64 = args.get("b0", 0.08)?;
     let b1: f64 = args.get("b1", 4.0)?;
     let replicas: usize = args.get("replicas", 8)?;
@@ -497,15 +576,18 @@ fn cmd_temper(args: &Args) -> Result<()> {
         let h = srv.register_problem(pchip::problems::sk::chimera_pm_j(&topo, seed))?;
         let report = srv.run_tempering_fanout(h, &temper_params, fanout)?;
         for f in &report.failures {
-            eprintln!("die failure: {f}");
+            pchip::log_warn!("die failure: {f}");
         }
         match &report.best {
             JobResult::Tempered { best_energy, .. } => {
                 println!("fanout over {fanout} die(s): best energy {best_energy:.0}");
             }
-            JobResult::Failed(msg) => eprintln!("no run succeeded: {msg}"),
+            JobResult::Failed(msg) => pchip::log_warn!("no run succeeded: {msg}"),
             other => bail!("unexpected result {other:?}"),
         }
+        // export before the failure bail so a partly-failed fanout still
+        // leaves its trace behind
+        trace.export(trace.cumulative_summary().as_ref(), &[])?;
         if !report.failures.is_empty() {
             bail!(
                 "{} of {} tempering runs failed (per-die diagnostics above)",
@@ -609,8 +691,8 @@ fn cmd_temper(args: &Args) -> Result<()> {
                 if r.membership.is_empty() { "" } else { ", membership log on stderr" }
             );
             for (k, l) in r.net.iter().enumerate() {
-                println!(
-                    "  link {k}: down {}/{} delivered ({} dropped, {} dup, {} reordered), \
+                pchip::log_info!(
+                    "link {k}: down {}/{} delivered ({} dropped, {} dup, {} reordered), \
                      up {}/{} ({} dropped, {} dup, {} reordered)",
                     l.down.delivered,
                     l.down.sent,
@@ -624,6 +706,7 @@ fn cmd_temper(args: &Args) -> Result<()> {
                     l.up.reordered
                 );
             }
+            trace.export(r.telemetry.as_ref(), &r.run.trace.jsonl_rows())?;
             return Ok(());
         }
         if let Some(plan) = fault_plan(args)? {
@@ -650,6 +733,9 @@ fn cmd_temper(args: &Args) -> Result<()> {
                 JobResult::Failed(msg) => bail!("sharded tempering failed: {msg}"),
                 other => bail!("unexpected result {other:?}"),
             }
+            // the run happened server-side; only the cumulative rollup
+            // (this process's coordinator view) is available here
+            trace.export(trace.cumulative_summary().as_ref(), &[])?;
             return Ok(());
         }
         let r = exp::fig9a_sk_temper_sharded(
@@ -676,7 +762,12 @@ fn cmd_temper(args: &Args) -> Result<()> {
             r.sharded.cross_shard_round_trips()
         );
         println!("  traces → results/fig9a_sharded_{{single,sharded}}.csv");
+        trace.export(r.sharded.telemetry.as_ref(), &r.sharded.run.trace.jsonl_rows())?;
+        return Ok(());
     }
+    // single-die path: no gang rollup, but the energy trace still rides
+    // along with whatever the cumulative capture recorded
+    trace.export(trace.cumulative_summary().as_ref(), &report.temper.trace.jsonl_rows())?;
     Ok(())
 }
 
@@ -861,7 +952,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 ok += 1;
                 lat_us.push(latency.as_micros() as u64);
             }
-            JobResult::Failed(e) => eprintln!("job failed: {e}"),
+            JobResult::Failed(e) => pchip::log_warn!("job failed: {e}"),
             _ => {}
         }
     }

@@ -28,14 +28,16 @@ pub struct LaneStats {
 }
 
 impl LaneStats {
-    /// Fold another lane's counters into this one.
+    /// Fold another lane's counters into this one. Saturating: a
+    /// pathological accumulation pins at `u64::MAX` instead of
+    /// wrapping back through zero (merge stays monotone).
     pub fn merge(&mut self, other: &LaneStats) {
-        self.sent += other.sent;
-        self.delivered += other.delivered;
-        self.dropped += other.dropped;
-        self.duplicated += other.duplicated;
-        self.suppressed += other.suppressed;
-        self.reordered += other.reordered;
+        self.sent = self.sent.saturating_add(other.sent);
+        self.delivered = self.delivered.saturating_add(other.delivered);
+        self.dropped = self.dropped.saturating_add(other.dropped);
+        self.duplicated = self.duplicated.saturating_add(other.duplicated);
+        self.suppressed = self.suppressed.saturating_add(other.suppressed);
+        self.reordered = self.reordered.saturating_add(other.reordered);
     }
 }
 
@@ -50,6 +52,13 @@ pub struct LinkStats {
 }
 
 impl LinkStats {
+    /// Fold another link's counters into this one (both lanes,
+    /// saturating — see [`LaneStats::merge`]).
+    pub fn merge(&mut self, other: &LinkStats) {
+        self.down.merge(&other.down);
+        self.up.merge(&other.up);
+    }
+
     /// Total frames the plan discarded on either lane.
     pub fn dropped(&self) -> u64 {
         self.down.dropped + self.up.dropped
@@ -64,6 +73,97 @@ impl LinkStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::HostRng;
+    use crate::util::prop;
+
+    /// Random counters, occasionally pinned near `u64::MAX` so the
+    /// saturating paths get exercised, not just the additive ones.
+    fn arb_lane(rng: &mut HostRng) -> LaneStats {
+        let mut field = |rng: &mut HostRng| {
+            if rng.below(8) == 0 {
+                u64::MAX - rng.below(4) as u64
+            } else {
+                rng.below(1_000_000) as u64
+            }
+        };
+        LaneStats {
+            sent: field(rng),
+            delivered: field(rng),
+            dropped: field(rng),
+            duplicated: field(rng),
+            suppressed: field(rng),
+            reordered: field(rng),
+        }
+    }
+
+    fn arb_link(rng: &mut HostRng) -> LinkStats {
+        LinkStats { down: arb_lane(rng), up: arb_lane(rng) }
+    }
+
+    fn merged(mut a: LinkStats, b: &LinkStats) -> LinkStats {
+        a.merge(b);
+        a
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        prop::check("LinkStats merge commutes", 300, |rng| {
+            let (a, b) = (arb_link(rng), arb_link(rng));
+            assert_eq!(merged(a, &b), merged(b, &a));
+        });
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        prop::check("LinkStats merge associates", 300, |rng| {
+            let (a, b, c) = (arb_link(rng), arb_link(rng), arb_link(rng));
+            assert_eq!(merged(merged(a, &b), &c), merged(a, &merged(b, &c)));
+        });
+    }
+
+    #[test]
+    fn default_is_merge_identity() {
+        prop::check("LinkStats default is identity", 300, |rng| {
+            let a = arb_link(rng);
+            assert_eq!(merged(a, &LinkStats::default()), a);
+            assert_eq!(merged(LinkStats::default(), &a), a);
+        });
+    }
+
+    #[test]
+    fn merge_saturates_and_stays_monotone() {
+        prop::check("LinkStats merge is monotone under saturation", 300, |rng| {
+            let (a, b) = (arb_link(rng), arb_link(rng));
+            let m = merged(a, &b);
+            for (out, (x, y)) in [
+                (m.down.sent, (a.down.sent, b.down.sent)),
+                (m.down.delivered, (a.down.delivered, b.down.delivered)),
+                (m.down.dropped, (a.down.dropped, b.down.dropped)),
+                (m.down.duplicated, (a.down.duplicated, b.down.duplicated)),
+                (m.down.suppressed, (a.down.suppressed, b.down.suppressed)),
+                (m.down.reordered, (a.down.reordered, b.down.reordered)),
+                (m.up.sent, (a.up.sent, b.up.sent)),
+                (m.up.delivered, (a.up.delivered, b.up.delivered)),
+                (m.up.dropped, (a.up.dropped, b.up.dropped)),
+                (m.up.duplicated, (a.up.duplicated, b.up.duplicated)),
+                (m.up.suppressed, (a.up.suppressed, b.up.suppressed)),
+                (m.up.reordered, (a.up.reordered, b.up.reordered)),
+            ] {
+                // never wraps: the merge result dominates both inputs
+                assert!(out >= x.max(y));
+                assert_eq!(out, x.saturating_add(y));
+            }
+        });
+    }
+
+    #[test]
+    fn merge_pins_at_max_instead_of_wrapping() {
+        let mut a = LaneStats { sent: u64::MAX - 1, ..Default::default() };
+        a.merge(&LaneStats { sent: 10, ..Default::default() });
+        assert_eq!(a.sent, u64::MAX);
+        a.merge(&LaneStats { sent: u64::MAX, ..Default::default() });
+        assert_eq!(a.sent, u64::MAX);
+    }
 
     #[test]
     fn merge_sums_every_counter() {

@@ -43,9 +43,36 @@ impl EnergyTrace {
             .collect()
     }
 
-    /// CSV rows: sweep, beta, mean_energy, min_energy.
-    pub fn csv_rows(&self) -> Vec<Vec<f64>> {
-        self.rows.iter().map(|&(s, b, me, mn)| vec![s as f64, b, me, mn]).collect()
+    /// CSV rows: sweep, beta, mean_energy, min_energy. Cells are
+    /// pre-formatted strings so the u64 sweep index keeps exact width
+    /// (an `as f64` cell rounds above 2^53) — pair with
+    /// [`crate::util::bench::write_csv_text`].
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        self.rows
+            .iter()
+            .map(|&(s, b, me, mn)| {
+                vec![format!("{s}"), format!("{b}"), format!("{me}"), format!("{mn}")]
+            })
+            .collect()
+    }
+
+    /// One JSONL event per row (`{"type":"energy",...}`) — what
+    /// `pchip temper --trace-out` appends to the telemetry stream.
+    /// The sweep index rides as a string for the same exactness reason
+    /// as [`EnergyTrace::csv_rows`].
+    pub fn jsonl_rows(&self) -> Vec<Json> {
+        self.rows
+            .iter()
+            .map(|&(s, b, me, mn)| {
+                obj(vec![
+                    ("type", Json::from("energy")),
+                    ("sweep", Json::from(format!("{s}"))),
+                    ("beta", Json::from(b)),
+                    ("mean_energy", Json::from(me)),
+                    ("min_energy", Json::from(mn)),
+                ])
+            })
+            .collect()
     }
 
     /// JSON report of the trace series under `name`.

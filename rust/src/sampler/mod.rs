@@ -225,6 +225,7 @@ impl Sampler for ChipSampler {
     }
 
     fn sweeps(&mut self, n: usize) -> Result<()> {
+        crate::counter_add!("flips", (n * crate::N_SPINS) as u64);
         let clamped: Vec<usize> = self.clamps.iter().map(|&(i, _)| i).collect();
         for _ in 0..n {
             self.chip.sweep_with(crate::chip::UpdateOrder::Chromatic, &clamped);

@@ -422,6 +422,9 @@ impl Sampler for PackedSampler {
         }
         self.rebuild_tables();
         self.updates += (n * self.batch() * N_SPINS) as u64;
+        // telemetry mirrors the engine's own accounting: one "flip" per
+        // replica p-bit update, attributed to the calling die thread
+        crate::counter_add!("flips", (n * self.batch() * N_SPINS) as u64);
         let blocks = self.blocks();
         let pooled = match self.threading {
             Threading::Serial => false,

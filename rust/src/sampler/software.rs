@@ -303,6 +303,7 @@ impl Sampler for SoftwareSampler {
     fn sweeps(&mut self, n: usize) -> Result<()> {
         let batch = self.states.len();
         self.updates += (n * batch * N_SPINS) as u64;
+        crate::counter_add!("flips", (n * batch * N_SPINS) as u64);
         self.sync_energies();
         // Chains are fully independent (own state, noise bank, scratch
         // slab and energy cell), so chunk them over the persistent

@@ -103,6 +103,9 @@ pub struct SweepPool {
 const SPIN_ITERS: usize = 512;
 
 fn run_job(job: Job, latch: &Latch) {
+    // per-worker sweep-job timing; inert (one relaxed load) when
+    // telemetry is off
+    let _span = crate::span!("sweep_job");
     let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
     latch.complete(result.is_err());
 }

@@ -148,6 +148,7 @@ impl Sampler for XlaSampler {
     /// calls of `s_sweeps` each).
     fn sweeps(&mut self, n: usize) -> Result<()> {
         let blocks = n.div_ceil(self.s_sweeps);
+        crate::counter_add!("flips", (blocks * self.s_sweeps * self.batch * crate::N_SPINS) as u64);
         for _ in 0..blocks {
             self.run_block()?;
         }

@@ -1,0 +1,161 @@
+//! The crate's leveled diagnostic logger.
+//!
+//! One sink replaces the ad-hoc `eprintln!` diagnostics that used to be
+//! scattered through `main.rs`, the sharded coordinator and the
+//! training service: messages at or above the `PCHIP_LOG` threshold
+//! (`debug|info|warn`, default `info`) go to stderr prefixed
+//! `pchip[level]`, and — whenever telemetry recording is enabled —
+//! every message (regardless of threshold) is also captured into the
+//! trace event stream, so a `--trace-out` JSONL carries the membership
+//! / failure narrative alongside the spans it explains.
+//!
+//! Use the [`crate::log_debug!`], [`crate::log_info!`] and
+//! [`crate::log_warn!`] macros.
+
+use std::sync::{Mutex, OnceLock};
+
+/// Log severity, ordered `Debug < Info < Warn`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// High-volume diagnostics (per-link counter dumps, retry detail).
+    Debug,
+    /// Run narrative (membership changes, trace file locations).
+    Info,
+    /// Faults and degraded operation (die failures, timeouts).
+    Warn,
+}
+
+impl Level {
+    /// Lowercase name, as used in `PCHIP_LOG` and the stderr prefix.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+        }
+    }
+
+    /// Parse a `PCHIP_LOG` value (unknown values fall back to `Info`).
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "debug" => Level::Debug,
+            "warn" | "warning" | "error" => Level::Warn,
+            _ => Level::Info,
+        }
+    }
+}
+
+/// The stderr threshold: messages below it are not printed (they are
+/// still recorded into the trace stream when telemetry is enabled).
+/// Read once from `PCHIP_LOG`; defaults to [`Level::Info`].
+pub fn threshold() -> Level {
+    static THRESHOLD: OnceLock<Level> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("PCHIP_LOG").map(|v| Level::parse(&v)).unwrap_or(Level::Info)
+    })
+}
+
+/// Whether a message at `level` would reach stderr.
+pub fn stderr_enabled(level: Level) -> bool {
+    level >= threshold()
+}
+
+/// One captured log record (trace event stream).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogEvent {
+    /// Timestamp on the [`super::now_ns`] clock.
+    pub ts_ns: u64,
+    /// Severity.
+    pub level: Level,
+    /// Formatted message.
+    pub msg: String,
+    /// Recording thread's registry index.
+    pub tid: u32,
+}
+
+/// Captured events are low-rate (membership changes, failures), so a
+/// plain mutex-guarded vec is fine — this is not a recording hot path.
+fn events() -> &'static Mutex<Vec<LogEvent>> {
+    static EVENTS: OnceLock<Mutex<Vec<LogEvent>>> = OnceLock::new();
+    EVENTS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Cap on captured events; beyond it new events are dropped (the drop
+/// count is visible as the gap in trace sequence, and a run that logs
+/// this much has bigger problems).
+const MAX_EVENTS: usize = 65_536;
+
+/// Route one message: stderr when at/above the [`threshold`], trace
+/// capture when telemetry is enabled. Prefer the `log_*!` macros.
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    let to_stderr = stderr_enabled(level);
+    let to_trace = super::enabled();
+    if !to_stderr && !to_trace {
+        return;
+    }
+    let msg = std::fmt::format(args);
+    if to_stderr {
+        eprintln!("pchip[{}] {}", level.as_str(), msg);
+    }
+    if to_trace {
+        let ev = LogEvent {
+            ts_ns: super::now_ns(),
+            level,
+            msg,
+            tid: super::registry::current_tid(),
+        };
+        let mut v = events().lock().unwrap_or_else(|e| e.into_inner());
+        if v.len() < MAX_EVENTS {
+            v.push(ev);
+        }
+    }
+}
+
+/// Copy of every captured event (exporters).
+pub fn events_snapshot() -> Vec<LogEvent> {
+    events().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Drop all captured events (see [`super::reset`]).
+pub(super) fn clear_events() {
+    events().lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Log at debug level (suppressed on stderr unless `PCHIP_LOG=debug`).
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::log($crate::telemetry::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+/// Log at info level (the default stderr threshold).
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::log($crate::telemetry::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+/// Log at warn level (always on stderr under every `PCHIP_LOG` value).
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::telemetry::log::log($crate::telemetry::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_parse() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert_eq!(Level::parse("debug"), Level::Debug);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("error"), Level::Warn);
+        assert_eq!(Level::parse("nonsense"), Level::Info);
+    }
+}

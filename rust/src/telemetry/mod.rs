@@ -1,0 +1,337 @@
+//! Unified runtime telemetry: spans, per-die counters, trace export.
+//!
+//! An always-compiled-in, **off-by-default** instrumentation plane for
+//! the whole gang stack. When disabled (the default) every
+//! instrumentation point is one relaxed atomic load and a branch — the
+//! hot paths stay bit-identical and effectively free (guarded by the
+//! `telemetry_on` arm in `benches/sampler_hotpath.rs`). When enabled
+//! (CLI `--trace-out` / `--trace-perfetto`, env `PCHIP_TELEMETRY=1`, or
+//! [`set_enabled`]) each thread lazily registers a private shard of
+//! atomic counters, fixed-bucket duration histograms, and a span ring
+//! buffer; readers merge shards on demand, mirroring the
+//! `GradAccum` / `SwapStats` merge-on-read idiom — no lock is ever
+//! taken on a recording path.
+//!
+//! The pieces:
+//!
+//! * [`registry`] — interned counter/histogram names, the per-thread
+//!   [`registry::ThreadShard`]s, and merged [`registry::Snapshot`]s.
+//! * [`crate::span!`] — lightweight scope timing; each completed span
+//!   lands in the owning thread's ring buffer *and* feeds the duration
+//!   histogram of the same name (so `barrier_wait` p50/p99 come free).
+//! * [`export`] — two exporters over the same recorded state: a JSONL
+//!   event stream and a Chrome/Perfetto `trace_event` JSON that opens
+//!   directly in [ui.perfetto.dev](https://ui.perfetto.dev).
+//! * [`summary::RunTelemetry`] — the per-run rollup (flips/s per die,
+//!   barrier-wait p50/p99, swap-phase latency, probe/retry counts, link
+//!   delivery totals) attached to `ShardedRun` / `EpochStats` and
+//!   printed by `pchip report`.
+//! * [`log`] — the leveled logger (`PCHIP_LOG=debug|info|warn`) that
+//!   replaced the ad-hoc `eprintln!` diagnostics; records route into
+//!   the telemetry event stream when tracing is on.
+//!
+//! Per-die attribution: a die/shard worker thread labels itself once
+//! with [`set_die`]; every counter increment, histogram record and span
+//! from that thread is tagged with the label. Threads without a label
+//! (the CLI main thread, pool workers) aggregate under "no die".
+//!
+//! `docs/OBSERVABILITY.md` is the practitioner guide.
+
+pub mod export;
+pub mod log;
+pub mod registry;
+pub mod summary;
+
+pub use registry::{Id, Snapshot};
+pub use summary::RunTelemetry;
+
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The global enable flag. Relaxed is enough: enabling mid-run only
+/// affects *when* threads start recording, never memory safety.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether telemetry recording is on. This is the whole cost of a
+/// disabled instrumentation point (one relaxed load + branch).
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Enable telemetry if `PCHIP_TELEMETRY=1|true` is set (called once
+/// from `main`; library embedders call [`set_enabled`] directly).
+pub fn init_from_env() {
+    if matches!(std::env::var("PCHIP_TELEMETRY").as_deref(), Ok("1") | Ok("true")) {
+        set_enabled(true);
+    }
+}
+
+// ---- monotonic clock ---------------------------------------------------
+
+struct Epoch {
+    started: Instant,
+    /// Wall-clock at process start, for trace metadata only.
+    unix_ms: u128,
+}
+
+fn epoch() -> &'static Epoch {
+    static EPOCH: OnceLock<Epoch> = OnceLock::new();
+    EPOCH.get_or_init(|| Epoch {
+        started: Instant::now(),
+        unix_ms: std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis())
+            .unwrap_or(0),
+    })
+}
+
+/// Monotonic nanoseconds since the process's telemetry epoch.
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().started.elapsed().as_nanos() as u64
+}
+
+/// Wall-clock milliseconds (unix) at the telemetry epoch — trace
+/// metadata so exported timestamps can be anchored to real time.
+pub fn epoch_unix_ms() -> u128 {
+    epoch().unix_ms
+}
+
+// ---- per-thread die label ----------------------------------------------
+
+thread_local! {
+    /// This thread's die label + 1 (0 = unlabeled), mirrored into its
+    /// registry shard when one exists.
+    static DIE: AtomicI64 = const { AtomicI64::new(0) };
+}
+
+/// Label the current thread as belonging to die/shard `die`. Called
+/// once by die-owning worker threads (shard workers, train workers);
+/// every subsequent record from this thread carries the label.
+pub fn set_die(die: usize) {
+    DIE.with(|d| d.store(die as i64 + 1, Ordering::Relaxed));
+    registry::relabel_current_shard(die as i64 + 1);
+}
+
+/// Remove the current thread's die label.
+pub fn clear_die() {
+    DIE.with(|d| d.store(0, Ordering::Relaxed));
+    registry::relabel_current_shard(0);
+}
+
+/// The current thread's die label, if any.
+#[inline]
+pub fn current_die() -> Option<usize> {
+    let raw = DIE.with(|d| d.load(Ordering::Relaxed));
+    (raw > 0).then(|| raw as usize - 1)
+}
+
+// ---- spans -------------------------------------------------------------
+
+/// An open span; records one complete (begin, duration) record into the
+/// owning thread's ring buffer — and the same-named duration histogram —
+/// when dropped. Obtained via the [`crate::span!`] macro; a guard
+/// created while telemetry is disabled is inert (no clock read, no
+/// allocation).
+#[must_use = "a span measures the scope it is bound to; drop it at the end"]
+pub struct SpanGuard {
+    /// `None` when telemetry was disabled at entry.
+    armed: Option<ArmedSpan>,
+}
+
+struct ArmedSpan {
+    name: Id,
+    /// Die override (+1, 0 = use the thread label at drop time).
+    die: i64,
+    start_ns: u64,
+}
+
+impl SpanGuard {
+    /// Open a span named `name`, attributed to the current thread's die
+    /// label (if any).
+    #[inline]
+    pub fn enter(name: Id) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { armed: None };
+        }
+        SpanGuard { armed: Some(ArmedSpan { name, die: 0, start_ns: now_ns() }) }
+    }
+
+    /// Open a span with an explicit die label (overrides the thread's).
+    #[inline]
+    pub fn enter_with_die(name: Id, die: usize) -> SpanGuard {
+        if !enabled() {
+            return SpanGuard { armed: None };
+        }
+        SpanGuard { armed: Some(ArmedSpan { name, die: die as i64 + 1, start_ns: now_ns() }) }
+    }
+}
+
+impl Drop for SpanGuard {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(armed) = self.armed.take() {
+            let dur = now_ns().saturating_sub(armed.start_ns);
+            let die = if armed.die > 0 {
+                armed.die
+            } else {
+                DIE.with(|d| d.load(Ordering::Relaxed))
+            };
+            registry::record_span(armed.name, die, armed.start_ns, dur);
+            registry::record_ns(armed.name, dur);
+        }
+    }
+}
+
+/// Open a [`SpanGuard`] for the enclosing scope.
+///
+/// The span name is interned once per call site (a `static OnceLock`),
+/// so steady-state cost is a relaxed enable check plus, when enabled,
+/// two clock reads and a handful of relaxed atomic stores.
+///
+/// ```
+/// # fn barrier_wait() {}
+/// {
+///     let _span = pchip::span!("swap_phase");
+///     barrier_wait(); // ... timed work ...
+/// } // record lands here
+/// let _tagged = pchip::span!("sweep_phase", die = 3);
+/// ```
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {{
+        static __PCHIP_SPAN_ID: ::std::sync::OnceLock<$crate::telemetry::Id> =
+            ::std::sync::OnceLock::new();
+        $crate::telemetry::SpanGuard::enter(
+            *__PCHIP_SPAN_ID.get_or_init(|| $crate::telemetry::registry::intern($name)),
+        )
+    }};
+    ($name:literal, die = $die:expr) => {{
+        static __PCHIP_SPAN_ID: ::std::sync::OnceLock<$crate::telemetry::Id> =
+            ::std::sync::OnceLock::new();
+        $crate::telemetry::SpanGuard::enter_with_die(
+            *__PCHIP_SPAN_ID.get_or_init(|| $crate::telemetry::registry::intern($name)),
+            $die,
+        )
+    }};
+}
+
+/// Add `n` to the named counter (interned once per call site). The
+/// counter is attributed to the calling thread's die label.
+///
+/// ```
+/// pchip::counter_add!("flips", 440);
+/// ```
+#[macro_export]
+macro_rules! counter_add {
+    ($name:literal, $n:expr) => {{
+        if $crate::telemetry::enabled() {
+            static __PCHIP_CTR_ID: ::std::sync::OnceLock<$crate::telemetry::Id> =
+                ::std::sync::OnceLock::new();
+            $crate::telemetry::registry::add(
+                *__PCHIP_CTR_ID.get_or_init(|| $crate::telemetry::registry::intern($name)),
+                $n,
+            );
+        }
+    }};
+}
+
+/// Reset all recorded telemetry (counters, histograms, span rings, log
+/// events) to zero across every registered thread shard. For tests and
+/// long-lived tools that scope recording to one run; the interned name
+/// table and thread registrations survive.
+pub fn reset() {
+    registry::reset();
+    log::clear_events();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Telemetry state is process-global; every test that enables it
+    // must hold this lock (shared with tests/telemetry.rs via its own
+    // static — unit tests and integration tests run in separate
+    // processes, so one lock per process suffices).
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _g = lock();
+        set_enabled(false);
+        reset();
+        {
+            let _s = crate::span!("unit_inert");
+        }
+        crate::counter_add!("unit_inert_ctr", 7);
+        let snap = registry::snapshot();
+        assert!(snap.counters.is_empty());
+        assert!(snap.hists.is_empty());
+    }
+
+    #[test]
+    fn counters_attribute_to_die_label() {
+        let _g = lock();
+        set_enabled(true);
+        reset();
+        // Die attribution is per *thread* (a worker labels itself once
+        // at spawn), so the labeled counting runs on its own thread.
+        std::thread::spawn(|| {
+            set_die(4);
+            crate::counter_add!("unit_flips", 10);
+            crate::counter_add!("unit_flips", 5);
+        })
+        .join()
+        .unwrap();
+        clear_die();
+        crate::counter_add!("unit_flips", 3);
+        let snap = registry::snapshot();
+        assert_eq!(snap.counter("unit_flips", Some(4)), 15);
+        assert_eq!(snap.counter("unit_flips", None), 3);
+        assert_eq!(snap.counter_total("unit_flips"), 18);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn span_records_ring_and_histogram() {
+        let _g = lock();
+        set_enabled(true);
+        reset();
+        for _ in 0..32 {
+            let _s = crate::span!("unit_span", die = 2);
+        }
+        let snap = registry::snapshot();
+        let spans = registry::spans_snapshot();
+        let mine: Vec<_> = spans
+            .iter()
+            .filter(|s| registry::name_of(s.name).as_deref() == Some("unit_span"))
+            .collect();
+        assert_eq!(mine.len(), 32);
+        assert!(mine.iter().all(|s| s.die == Some(2)));
+        // the histogram is attributed to the recording thread (here
+        // unlabeled), independent of the span's die override
+        let hist = snap.hist_total("unit_span").expect("histogram fed by span");
+        assert_eq!(hist.count, 32);
+        set_enabled(false);
+    }
+
+    #[test]
+    fn current_die_roundtrip() {
+        let _g = lock();
+        assert_eq!(current_die(), None);
+        set_die(7);
+        assert_eq!(current_die(), Some(7));
+        clear_die();
+        assert_eq!(current_die(), None);
+    }
+}

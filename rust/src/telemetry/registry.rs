@@ -1,0 +1,513 @@
+//! The lock-free telemetry registry: interned names, per-thread shards
+//! of atomic counters / fixed-bucket duration histograms / span rings,
+//! merged on read.
+//!
+//! Writers never contend: each thread owns one [`ThreadShard`] (created
+//! lazily on its first enabled record) and touches only relaxed atomics
+//! inside it. Readers ([`snapshot`], [`spans_snapshot`]) walk the global
+//! shard list and sum — the same owner-writes / reader-merges idiom as
+//! `GradAccum` all-reduce and `SwapStats` folding, lifted to runtime
+//! metrics.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Counter / histogram / span name slots per thread shard. Interning
+/// more distinct names than this is allowed (the name table is
+/// unbounded) but records beyond the slot capacity are dropped.
+pub const MAX_IDS: usize = 128;
+
+/// Histogram bucket count. Bucket `i` holds durations in
+/// `[2^(i-1), 2^i)` nanoseconds, so 40 buckets cover ~9 minutes.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Span records retained per thread (a ring: oldest are overwritten).
+pub const SPAN_RING: usize = 1 << 14;
+
+/// An interned telemetry name (counter, histogram and span names share
+/// one table; a span feeds the histogram of the same id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Id(u32);
+
+fn names() -> &'static Mutex<Vec<&'static str>> {
+    static NAMES: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    NAMES.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Intern `name`, returning a stable [`Id`]. Idempotent; call sites
+/// cache the result in a `static OnceLock` (the `span!` /
+/// `counter_add!` macros do this automatically).
+pub fn intern(name: &'static str) -> Id {
+    let mut t = names().lock().unwrap_or_else(|e| e.into_inner());
+    if let Some(pos) = t.iter().position(|&n| n == name) {
+        return Id(pos as u32);
+    }
+    t.push(name);
+    Id((t.len() - 1) as u32)
+}
+
+/// The name interned as `id`, if it exists.
+pub fn name_of(id: Id) -> Option<String> {
+    let t = names().lock().unwrap_or_else(|e| e.into_inner());
+    t.get(id.0 as usize).map(|s| s.to_string())
+}
+
+// ---- per-thread shard --------------------------------------------------
+
+/// One span slot: `meta` packs `(name_id + 1) << 32 | die_raw`
+/// (`meta == 0` after reset means "empty"). Written only by the owning
+/// thread; read by exporters when the run is quiescent.
+struct SpanSlot {
+    meta: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+/// One thread's private telemetry storage. All fields are written with
+/// relaxed ordering by the owner and summed by readers.
+pub struct ThreadShard {
+    /// Sequential registration index (stable per thread).
+    tid: u32,
+    /// OS thread name at registration time (for trace display).
+    name: String,
+    /// Die label + 1 (0 = unlabeled); kept in sync with
+    /// [`super::set_die`].
+    die: AtomicI64,
+    /// One slot per interned name.
+    counters: Vec<AtomicU64>,
+    /// Flattened `[MAX_IDS][HIST_BUCKETS + 2]`: buckets, then count,
+    /// then sum-of-ns per name.
+    hists: Vec<AtomicU64>,
+    /// Span ring storage.
+    spans: Vec<SpanSlot>,
+    /// Total spans ever recorded; `head % SPAN_RING` is the next slot.
+    span_head: AtomicU64,
+}
+
+const HIST_STRIDE: usize = HIST_BUCKETS + 2;
+
+impl ThreadShard {
+    fn new(tid: u32, die_raw: i64) -> Self {
+        Self {
+            tid,
+            name: std::thread::current().name().unwrap_or("?").to_string(),
+            die: AtomicI64::new(die_raw),
+            counters: (0..MAX_IDS).map(|_| AtomicU64::new(0)).collect(),
+            hists: (0..MAX_IDS * HIST_STRIDE).map(|_| AtomicU64::new(0)).collect(),
+            spans: (0..SPAN_RING)
+                .map(|_| SpanSlot {
+                    meta: AtomicU64::new(0),
+                    start_ns: AtomicU64::new(0),
+                    dur_ns: AtomicU64::new(0),
+                })
+                .collect(),
+            span_head: AtomicU64::new(0),
+        }
+    }
+
+    fn die_label(&self) -> Option<usize> {
+        let raw = self.die.load(Ordering::Relaxed);
+        (raw > 0).then(|| raw as usize - 1)
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadShard>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<ThreadShard>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static SHARD: std::cell::OnceCell<Arc<ThreadShard>> = const { std::cell::OnceCell::new() };
+}
+
+fn shard() -> Arc<ThreadShard> {
+    SHARD.with(|s| {
+        s.get_or_init(|| {
+            let die_raw = super::current_die().map(|d| d as i64 + 1).unwrap_or(0);
+            let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+            let sh = Arc::new(ThreadShard::new(reg.len() as u32, die_raw));
+            reg.push(sh.clone());
+            sh
+        })
+        .clone()
+    })
+}
+
+/// Update the registered shard's die label after [`super::set_die`] /
+/// [`super::clear_die`] — only if this thread already has a shard (a
+/// label set before the first record is picked up at shard creation).
+pub(super) fn relabel_current_shard(die_raw: i64) {
+    SHARD.with(|s| {
+        if let Some(sh) = s.get() {
+            sh.die.store(die_raw, Ordering::Relaxed);
+        }
+    });
+}
+
+/// The calling thread's registration index (creates the shard).
+pub fn current_tid() -> u32 {
+    shard().tid
+}
+
+/// Add `n` to counter `id` on the calling thread's shard. Callers gate
+/// on [`super::enabled`] (the `counter_add!` macro does).
+#[inline]
+pub fn add(id: Id, n: u64) {
+    let sh = shard();
+    if let Some(slot) = sh.counters.get(id.0 as usize) {
+        slot.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Bucket index for a duration: `[2^(i-1), 2^i)` ns, clamped.
+#[inline]
+fn bucket_of(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Record a duration into histogram `id` on the calling thread's shard.
+#[inline]
+pub fn record_ns(id: Id, ns: u64) {
+    let sh = shard();
+    let base = id.0 as usize * HIST_STRIDE;
+    if base + HIST_STRIDE <= sh.hists.len() {
+        sh.hists[base + bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        sh.hists[base + HIST_BUCKETS].fetch_add(1, Ordering::Relaxed);
+        sh.hists[base + HIST_BUCKETS + 1].fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+/// Record a completed span into the calling thread's ring.
+#[inline]
+pub fn record_span(name: Id, die_raw: i64, start_ns: u64, dur_ns: u64) {
+    let sh = shard();
+    let head = sh.span_head.fetch_add(1, Ordering::Relaxed);
+    let slot = &sh.spans[(head % SPAN_RING as u64) as usize];
+    slot.meta.store(
+        ((name.0 as u64 + 1) << 32) | (die_raw.clamp(0, u32::MAX as i64) as u64),
+        Ordering::Relaxed,
+    );
+    slot.start_ns.store(start_ns, Ordering::Relaxed);
+    slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+}
+
+// ---- reading -----------------------------------------------------------
+
+/// A merged histogram: power-of-two-ns buckets plus exact count/sum.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistData {
+    /// Occupancy per power-of-two bucket (see [`HIST_BUCKETS`]).
+    pub buckets: Vec<u64>,
+    /// Number of recorded durations.
+    pub count: u64,
+    /// Sum of recorded durations in nanoseconds.
+    pub sum_ns: u64,
+}
+
+impl HistData {
+    fn zeroed() -> Self {
+        Self { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ns: 0 }
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &HistData) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; HIST_BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+    }
+
+    /// Approximate quantile in nanoseconds: the upper bound of the
+    /// bucket containing the `q`-th recorded duration (so p99 is an
+    /// upper estimate, never below the true value by more than 2×).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= target {
+                return 1u64 << i;
+            }
+        }
+        1u64 << (HIST_BUCKETS - 1)
+    }
+
+    /// Exact mean duration in nanoseconds.
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// `self - earlier`, element-wise saturating (for run-scoped diffs).
+    pub fn diff(&self, earlier: &HistData) -> HistData {
+        let mut out = self.clone();
+        for (a, b) in out.buckets.iter_mut().zip(&earlier.buckets) {
+            *a = a.saturating_sub(*b);
+        }
+        out.count = out.count.saturating_sub(earlier.count);
+        out.sum_ns = out.sum_ns.saturating_sub(earlier.sum_ns);
+        out
+    }
+}
+
+/// A merged, keyed view of every shard's counters and histograms at one
+/// instant. Keys are `(name, die label)`.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// Counter totals by `(name, die)`.
+    pub counters: BTreeMap<(String, Option<usize>), u64>,
+    /// Histograms by `(name, die)`.
+    pub hists: BTreeMap<(String, Option<usize>), HistData>,
+}
+
+impl Snapshot {
+    /// One counter's value for one die (0 when absent).
+    pub fn counter(&self, name: &str, die: Option<usize>) -> u64 {
+        self.counters.get(&(name.to_string(), die)).copied().unwrap_or(0)
+    }
+
+    /// One counter summed over all die labels.
+    pub fn counter_total(&self, name: &str) -> u64 {
+        self.counters.iter().filter(|((n, _), _)| n == name).map(|(_, v)| v).sum()
+    }
+
+    /// One histogram for one die, if recorded.
+    pub fn hist(&self, name: &str, die: Option<usize>) -> Option<&HistData> {
+        self.hists.get(&(name.to_string(), die))
+    }
+
+    /// One histogram merged over all die labels.
+    pub fn hist_total(&self, name: &str) -> Option<HistData> {
+        let mut out: Option<HistData> = None;
+        for ((n, _), h) in &self.hists {
+            if n == name {
+                out.get_or_insert_with(HistData::zeroed).merge(h);
+            }
+        }
+        out
+    }
+
+    /// Per-die values of one counter, sorted by die (unlabeled first).
+    pub fn counter_by_die(&self, name: &str) -> Vec<(Option<usize>, u64)> {
+        self.counters
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|((_, d), v)| (*d, *v))
+            .collect()
+    }
+
+    /// `self - earlier` per key, dropping keys that reach zero — the
+    /// run-scoped view used by [`super::RunTelemetry::capture`].
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        let mut out = Snapshot::default();
+        for (k, v) in &self.counters {
+            let base = earlier.counters.get(k).copied().unwrap_or(0);
+            let d = v.saturating_sub(base);
+            if d > 0 {
+                out.counters.insert(k.clone(), d);
+            }
+        }
+        for (k, h) in &self.hists {
+            let d = match earlier.hists.get(k) {
+                Some(e) => h.diff(e),
+                None => h.clone(),
+            };
+            if d.count > 0 {
+                out.hists.insert(k.clone(), d);
+            }
+        }
+        out
+    }
+}
+
+/// Merge every thread shard's counters and histograms into a
+/// [`Snapshot`]. Cheap enough for per-epoch capture; zero-valued
+/// entries are skipped so an idle registry yields empty maps.
+pub fn snapshot() -> Snapshot {
+    let shards: Vec<Arc<ThreadShard>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let name_table: Vec<String> = {
+        let t = names().lock().unwrap_or_else(|e| e.into_inner());
+        t.iter().map(|s| s.to_string()).collect()
+    };
+    let mut snap = Snapshot::default();
+    for sh in &shards {
+        let die = sh.die_label();
+        for (i, slot) in sh.counters.iter().enumerate().take(name_table.len()) {
+            let v = slot.load(Ordering::Relaxed);
+            if v > 0 {
+                *snap.counters.entry((name_table[i].clone(), die)).or_insert(0) += v;
+            }
+        }
+        for i in 0..name_table.len().min(MAX_IDS) {
+            let base = i * HIST_STRIDE;
+            let count = sh.hists[base + HIST_BUCKETS].load(Ordering::Relaxed);
+            if count == 0 {
+                continue;
+            }
+            let mut h = HistData::zeroed();
+            for (b, slot) in h.buckets.iter_mut().zip(&sh.hists[base..base + HIST_BUCKETS]) {
+                *b = slot.load(Ordering::Relaxed);
+            }
+            h.count = count;
+            h.sum_ns = sh.hists[base + HIST_BUCKETS + 1].load(Ordering::Relaxed);
+            snap.hists
+                .entry((name_table[i].clone(), die))
+                .or_insert_with(HistData::zeroed)
+                .merge(&h);
+        }
+    }
+    snap
+}
+
+/// One completed span, as read back from a thread's ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanRec {
+    /// Interned span name.
+    pub name: Id,
+    /// Die label the span was attributed to.
+    pub die: Option<usize>,
+    /// Owning thread's registration index.
+    pub tid: u32,
+    /// Owning thread's OS name at registration.
+    pub thread: String,
+    /// Begin timestamp ([`super::now_ns`] clock).
+    pub start_ns: u64,
+    /// Wall duration.
+    pub dur_ns: u64,
+}
+
+/// Copy every retained span out of every thread ring (read-only; call
+/// when the instrumented run is quiescent — records being overwritten
+/// concurrently may tear). Returns spans in per-thread recording order.
+pub fn spans_snapshot() -> Vec<SpanRec> {
+    let shards: Vec<Arc<ThreadShard>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut out = Vec::new();
+    for sh in &shards {
+        let head = sh.span_head.load(Ordering::Relaxed);
+        let kept = head.min(SPAN_RING as u64);
+        let first = head - kept; // oldest retained record index
+        for rec in first..head {
+            let slot = &sh.spans[(rec % SPAN_RING as u64) as usize];
+            let meta = slot.meta.load(Ordering::Relaxed);
+            if meta == 0 {
+                continue;
+            }
+            let name = Id((meta >> 32) as u32 - 1);
+            let die_raw = (meta & 0xffff_ffff) as i64;
+            out.push(SpanRec {
+                name,
+                die: (die_raw > 0).then(|| die_raw as usize - 1),
+                tid: sh.tid,
+                thread: sh.name.clone(),
+                start_ns: slot.start_ns.load(Ordering::Relaxed),
+                dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+            });
+        }
+    }
+    out
+}
+
+/// Spans lost to ring overwrite across all threads (exported as trace
+/// metadata so truncation is visible rather than silent).
+pub fn spans_overwritten() -> u64 {
+    let shards: Vec<Arc<ThreadShard>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    shards
+        .iter()
+        .map(|sh| sh.span_head.load(Ordering::Relaxed).saturating_sub(SPAN_RING as u64))
+        .sum()
+}
+
+/// Registered threads as `(tid, name, die)` rows (trace metadata).
+pub fn threads() -> Vec<(u32, String, Option<usize>)> {
+    let shards: Vec<Arc<ThreadShard>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    shards.iter().map(|sh| (sh.tid, sh.name.clone(), sh.die_label())).collect()
+}
+
+/// Zero every shard's counters, histograms and span ring heads (see
+/// [`super::reset`]). Racy-but-safe against concurrent recorders.
+pub(super) fn reset() {
+    let shards: Vec<Arc<ThreadShard>> =
+        registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    for sh in &shards {
+        for c in &sh.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for h in &sh.hists {
+            h.store(0, Ordering::Relaxed);
+        }
+        for s in &sh.spans {
+            s.meta.store(0, Ordering::Relaxed);
+        }
+        sh.span_head.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let a = intern("unit_reg_name");
+        let b = intern("unit_reg_name");
+        assert_eq!(a, b);
+        assert_eq!(name_of(a).as_deref(), Some("unit_reg_name"));
+    }
+
+    #[test]
+    fn bucket_bounds() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn hist_quantiles_bracket_the_data() {
+        let mut h = HistData::zeroed();
+        // 99 fast records (~1µs) and 1 slow (~1ms)
+        for _ in 0..99 {
+            h.buckets[bucket_of(1_000)] += 1;
+        }
+        h.buckets[bucket_of(1_000_000)] += 1;
+        h.count = 100;
+        h.sum_ns = 99 * 1_000 + 1_000_000;
+        assert!(h.quantile_ns(0.5) >= 1_000 && h.quantile_ns(0.5) < 4_000);
+        assert!(h.quantile_ns(0.99) < 1_000_000); // 99th record is still fast
+        assert!(h.quantile_ns(1.0) >= 1_000_000);
+        assert!((h.mean_ns() - 10_990.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn hist_diff_subtracts() {
+        let mut a = HistData::zeroed();
+        a.buckets[3] = 10;
+        a.count = 10;
+        a.sum_ns = 80;
+        let mut b = HistData::zeroed();
+        b.buckets[3] = 4;
+        b.count = 4;
+        b.sum_ns = 30;
+        let d = a.diff(&b);
+        assert_eq!(d.buckets[3], 6);
+        assert_eq!(d.count, 6);
+        assert_eq!(d.sum_ns, 50);
+    }
+}

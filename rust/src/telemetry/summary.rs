@@ -1,0 +1,358 @@
+//! Per-run telemetry rollup: the numbers the paper reports, for a run
+//! that just happened.
+//!
+//! [`RunTelemetry::capture`] diffs a registry [`Snapshot`] taken at run
+//! start against the registry now, folds in the transport's per-link
+//! [`LinkStats`], and produces the headline figures: flips/s per die,
+//! barrier-wait and swap-phase latency quantiles, probe/retry counts.
+//! It is attached (as an `Option`, `None` when telemetry is off) to
+//! `ShardedRun`, `TrainedRun` and `EpochStats`, serialized with the
+//! crate's JSON substitute, and printed by `pchip report`.
+
+use crate::metrics::LinkStats;
+use crate::util::json::{obj, Json};
+use anyhow::Result;
+
+use super::registry::{HistData, Snapshot};
+
+/// Quantile summary of one duration histogram, in microseconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistSummary {
+    /// Recorded durations.
+    pub count: u64,
+    /// Median (bucket upper bound — see
+    /// [`HistData::quantile_ns`]).
+    pub p50_us: f64,
+    /// 99th percentile (same caveat).
+    pub p99_us: f64,
+    /// Exact mean.
+    pub mean_us: f64,
+}
+
+impl HistSummary {
+    fn from_hist(h: &HistData) -> Option<HistSummary> {
+        (h.count > 0).then(|| HistSummary {
+            count: h.count,
+            p50_us: h.quantile_ns(0.50) as f64 / 1_000.0,
+            p99_us: h.quantile_ns(0.99) as f64 / 1_000.0,
+            mean_us: h.mean_ns() / 1_000.0,
+        })
+    }
+
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("count", Json::from(self.count as f64)),
+            ("p50_us", Json::from(self.p50_us)),
+            ("p99_us", Json::from(self.p99_us)),
+            ("mean_us", Json::from(self.mean_us)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<HistSummary> {
+        Ok(HistSummary {
+            count: v.req("count")?.as_f64()? as u64,
+            p50_us: v.req("p50_us")?.as_f64()?,
+            p99_us: v.req("p99_us")?.as_f64()?,
+            mean_us: v.req("mean_us")?.as_f64()?,
+        })
+    }
+}
+
+/// Flip throughput attributed to one die (or to unlabeled threads).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DieFlips {
+    /// Die label; `None` aggregates threads without one (the serial
+    /// CLI path, pool workers).
+    pub die: Option<usize>,
+    /// Probabilistic flips (spin updates) recorded for this die.
+    pub flips: u64,
+    /// `flips / wall_s`.
+    pub flips_per_sec: f64,
+}
+
+/// The per-run telemetry summary (see module docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RunTelemetry {
+    /// Wall-clock duration of the captured window, seconds.
+    pub wall_s: f64,
+    /// Total flips across all dies.
+    pub total_flips: u64,
+    /// `total_flips / wall_s`.
+    pub flips_per_sec: f64,
+    /// Per-die flip throughput.
+    pub per_die: Vec<DieFlips>,
+    /// Time dies spend blocked at the swap barrier.
+    pub barrier_wait: Option<HistSummary>,
+    /// Whole swap-phase latency (send + collect + resolve).
+    pub swap_phase: Option<HistSummary>,
+    /// Per-die sweep-phase latency.
+    pub sweep_phase: Option<HistSummary>,
+    /// Gradient all-reduce latency (training runs).
+    pub all_reduce: Option<HistSummary>,
+    /// Probe commands sent to unresponsive dies (elastic runs).
+    pub probes: u64,
+    /// Recovery retries (rejoin attempts, re-seated work).
+    pub retries: u64,
+    /// Link delivery totals folded across every transport link.
+    pub link: Option<LinkStats>,
+}
+
+impl RunTelemetry {
+    /// Summarize everything recorded since `before` (a [`Snapshot`]
+    /// taken at run start) over `wall_s` seconds, folding per-link
+    /// delivery stats in from the transport.
+    pub fn capture(before: &Snapshot, wall_s: f64, links: &[LinkStats]) -> RunTelemetry {
+        let now = super::registry::snapshot();
+        let d = now.diff(before);
+        let per_die: Vec<DieFlips> = d
+            .counter_by_die("flips")
+            .into_iter()
+            .map(|(die, flips)| DieFlips {
+                die,
+                flips,
+                flips_per_sec: if wall_s > 0.0 { flips as f64 / wall_s } else { 0.0 },
+            })
+            .collect();
+        let total_flips: u64 = per_die.iter().map(|f| f.flips).sum();
+        let link = (!links.is_empty()).then(|| {
+            let mut folded = LinkStats::default();
+            for l in links {
+                folded.merge(l);
+            }
+            folded
+        });
+        RunTelemetry {
+            wall_s,
+            total_flips,
+            flips_per_sec: if wall_s > 0.0 { total_flips as f64 / wall_s } else { 0.0 },
+            per_die,
+            barrier_wait: d.hist_total("barrier_wait").as_ref().and_then(HistSummary::from_hist),
+            swap_phase: d.hist_total("swap_phase").as_ref().and_then(HistSummary::from_hist),
+            sweep_phase: d.hist_total("sweep_phase").as_ref().and_then(HistSummary::from_hist),
+            all_reduce: d.hist_total("all_reduce").as_ref().and_then(HistSummary::from_hist),
+            probes: d.counter_total("probe"),
+            retries: d.counter_total("retry"),
+            link,
+        }
+    }
+
+    /// Cumulative rollup of everything recorded since the telemetry
+    /// epoch (or the last [`crate::telemetry::reset`]) — the variant
+    /// stamped onto per-epoch records, where no run-start snapshot
+    /// exists. `wall_s` is measured from the telemetry epoch, so the
+    /// flips/s figure is a whole-process average.
+    pub fn capture_cumulative() -> RunTelemetry {
+        RunTelemetry::capture(&Snapshot::default(), super::now_ns() as f64 / 1e9, &[])
+    }
+
+    /// Serialize (round-trips through [`RunTelemetry::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("wall_s", Json::from(self.wall_s)),
+            ("total_flips", Json::from(self.total_flips as f64)),
+            ("flips_per_sec", Json::from(self.flips_per_sec)),
+            (
+                "per_die",
+                Json::Arr(
+                    self.per_die
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                (
+                                    "die",
+                                    f.die.map(|d| Json::from(d as f64)).unwrap_or(Json::Null),
+                                ),
+                                ("flips", Json::from(f.flips as f64)),
+                                ("flips_per_sec", Json::from(f.flips_per_sec)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("probes", Json::from(self.probes as f64)),
+            ("retries", Json::from(self.retries as f64)),
+        ];
+        for (key, h) in [
+            ("barrier_wait", &self.barrier_wait),
+            ("swap_phase", &self.swap_phase),
+            ("sweep_phase", &self.sweep_phase),
+            ("all_reduce", &self.all_reduce),
+        ] {
+            if let Some(h) = h {
+                pairs.push((key, h.to_json()));
+            }
+        }
+        if let Some(l) = &self.link {
+            pairs.push(("link", link_to_json(l)));
+        }
+        obj(pairs)
+    }
+
+    /// Parse back what [`RunTelemetry::to_json`] wrote.
+    pub fn from_json(v: &Json) -> Result<RunTelemetry> {
+        let hist = |key: &str| -> Result<Option<HistSummary>> {
+            v.get(key).map(HistSummary::from_json).transpose()
+        };
+        let mut per_die = Vec::new();
+        if let Some(arr) = v.get("per_die") {
+            for f in arr.as_arr()? {
+                let die = match f.req("die")? {
+                    Json::Null => None,
+                    d => Some(d.as_usize()?),
+                };
+                per_die.push(DieFlips {
+                    die,
+                    flips: f.req("flips")?.as_f64()? as u64,
+                    flips_per_sec: f.req("flips_per_sec")?.as_f64()?,
+                });
+            }
+        }
+        Ok(RunTelemetry {
+            wall_s: v.req("wall_s")?.as_f64()?,
+            total_flips: v.req("total_flips")?.as_f64()? as u64,
+            flips_per_sec: v.req("flips_per_sec")?.as_f64()?,
+            per_die,
+            barrier_wait: hist("barrier_wait")?,
+            swap_phase: hist("swap_phase")?,
+            sweep_phase: hist("sweep_phase")?,
+            all_reduce: hist("all_reduce")?,
+            probes: v.req("probes")?.as_f64()? as u64,
+            retries: v.req("retries")?.as_f64()? as u64,
+            link: v.get("link").map(link_from_json).transpose()?,
+        })
+    }
+
+    /// Human-readable summary table (what `pchip report` prints).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "== run telemetry ==");
+        let _ = writeln!(s, "{:<16} {:.3} s", "wall time", self.wall_s);
+        let _ = writeln!(
+            s,
+            "{:<16} {} ({:.3e} flips/s)",
+            "total flips", self.total_flips, self.flips_per_sec
+        );
+        for f in &self.per_die {
+            let label = match f.die {
+                Some(d) => format!("die {d}"),
+                None => "(no die)".to_string(),
+            };
+            let _ = writeln!(
+                s,
+                "{:<16} {} flips ({:.3e} flips/s)",
+                label, f.flips, f.flips_per_sec
+            );
+        }
+        for (name, h) in [
+            ("sweep_phase", &self.sweep_phase),
+            ("swap_phase", &self.swap_phase),
+            ("barrier_wait", &self.barrier_wait),
+            ("all_reduce", &self.all_reduce),
+        ] {
+            if let Some(h) = h {
+                let _ = writeln!(
+                    s,
+                    "{:<16} p50 {:>10.1} µs   p99 {:>10.1} µs   mean {:>10.1} µs   (n={})",
+                    name, h.p50_us, h.p99_us, h.mean_us, h.count
+                );
+            }
+        }
+        if self.probes > 0 || self.retries > 0 {
+            let _ =
+                writeln!(s, "{:<16} {} probes, {} retries", "recovery", self.probes, self.retries);
+        }
+        if let Some(l) = &self.link {
+            let _ = writeln!(
+                s,
+                "{:<16} {} sent, {} delivered, {} dropped, {} duplicated, {} suppressed, {} reordered",
+                "links",
+                l.down.sent + l.up.sent,
+                l.delivered(),
+                l.dropped(),
+                l.down.duplicated + l.up.duplicated,
+                l.down.suppressed + l.up.suppressed,
+                l.down.reordered + l.up.reordered,
+            );
+        }
+        s
+    }
+}
+
+fn lane_to_json(l: &crate::metrics::LaneStats) -> Json {
+    obj(vec![
+        ("sent", Json::from(l.sent as f64)),
+        ("delivered", Json::from(l.delivered as f64)),
+        ("dropped", Json::from(l.dropped as f64)),
+        ("duplicated", Json::from(l.duplicated as f64)),
+        ("suppressed", Json::from(l.suppressed as f64)),
+        ("reordered", Json::from(l.reordered as f64)),
+    ])
+}
+
+fn lane_from_json(v: &Json) -> Result<crate::metrics::LaneStats> {
+    Ok(crate::metrics::LaneStats {
+        sent: v.req("sent")?.as_f64()? as u64,
+        delivered: v.req("delivered")?.as_f64()? as u64,
+        dropped: v.req("dropped")?.as_f64()? as u64,
+        duplicated: v.req("duplicated")?.as_f64()? as u64,
+        suppressed: v.req("suppressed")?.as_f64()? as u64,
+        reordered: v.req("reordered")?.as_f64()? as u64,
+    })
+}
+
+/// Serialize one [`LinkStats`] (used by the summary and the exporters).
+pub fn link_to_json(l: &LinkStats) -> Json {
+    obj(vec![("down", lane_to_json(&l.down)), ("up", lane_to_json(&l.up))])
+}
+
+/// Parse back what [`link_to_json`] wrote.
+pub fn link_from_json(v: &Json) -> Result<LinkStats> {
+    Ok(LinkStats { down: lane_from_json(v.req("down")?)?, up: lane_from_json(v.req("up")?)? })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::LaneStats;
+
+    #[test]
+    fn json_roundtrip() {
+        let t = RunTelemetry {
+            wall_s: 1.5,
+            total_flips: 440_000,
+            flips_per_sec: 440_000.0 / 1.5,
+            per_die: vec![
+                DieFlips { die: Some(0), flips: 220_000, flips_per_sec: 220_000.0 / 1.5 },
+                DieFlips { die: None, flips: 220_000, flips_per_sec: 220_000.0 / 1.5 },
+            ],
+            barrier_wait: Some(HistSummary { count: 10, p50_us: 4.0, p99_us: 16.0, mean_us: 5.5 }),
+            swap_phase: None,
+            sweep_phase: None,
+            all_reduce: None,
+            probes: 2,
+            retries: 1,
+            link: Some(LinkStats {
+                down: LaneStats { sent: 5, delivered: 4, dropped: 1, ..Default::default() },
+                up: LaneStats { sent: 3, delivered: 3, ..Default::default() },
+            }),
+        };
+        let back = RunTelemetry::from_json(&t.to_json()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn render_mentions_the_headline_numbers() {
+        let t = RunTelemetry {
+            wall_s: 2.0,
+            total_flips: 1000,
+            flips_per_sec: 500.0,
+            per_die: vec![DieFlips { die: Some(3), flips: 1000, flips_per_sec: 500.0 }],
+            ..Default::default()
+        };
+        let s = t.render();
+        assert!(s.contains("die 3"));
+        assert!(s.contains("1000"));
+        assert!(s.contains("wall time"));
+    }
+}

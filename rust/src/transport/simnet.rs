@@ -262,6 +262,9 @@ struct SimFrame {
     seq: u64,
     text: String,
     delay_ms: u64,
+    /// Telemetry timestamp at send (0 when recording was off), so the
+    /// receiving relay can record the frame's in-flight span.
+    sent_ns: u64,
 }
 
 /// Sender-side per-lane state: the next frame number and (at most) one
@@ -287,7 +290,8 @@ fn lane_send(
     let mut st = state.lock().unwrap();
     let seq = st.next_seq;
     st.next_seq += 1;
-    let mut frame = SimFrame { seq, text, delay_ms: 0 };
+    let sent_ns = if crate::telemetry::enabled() { crate::telemetry::now_ns() } else { 0 };
+    let mut frame = SimFrame { seq, text, delay_ms: 0, sent_ns };
     let ev = plan.event_at(link, dir, seq);
     let mut out: Vec<SimFrame> = Vec::with_capacity(2);
     {
@@ -345,6 +349,9 @@ fn relay<T: Wire>(
     link: usize,
     dir: NetDir,
 ) {
+    // a relay thread serves exactly one link, so labeling it keys every
+    // frame counter/span it records by that link
+    crate::telemetry::set_die(link);
     let mut seen: HashSet<u64> = HashSet::new();
     while let Ok(frame) = raw_rx.recv() {
         if frame.delay_ms > 0 {
@@ -362,9 +369,26 @@ fn relay<T: Wire>(
         // decode failure is a codec bug, and the loudest thing a relay
         // can do about it is die (the run then fails its barrier
         // timeout, with this panic on stderr naming the frame)
-        let msg = T::decode(&frame.text).unwrap_or_else(|e| {
-            panic!("SimNet relay {link}/{dir:?}: wire codec failed on frame {}: {e:#}", frame.seq)
-        });
+        let msg = {
+            let _s = crate::span!("frame_decode");
+            T::decode(&frame.text).unwrap_or_else(|e| {
+                panic!(
+                    "SimNet relay {link}/{dir:?}: wire codec failed on frame {}: {e:#}",
+                    frame.seq
+                )
+            })
+        };
+        if crate::telemetry::enabled() && frame.sent_ns > 0 {
+            // the frame's whole in-flight window (send → decoded),
+            // recorded on the receiving relay, keyed by link
+            static IN_FLIGHT: std::sync::OnceLock<crate::telemetry::Id> =
+                std::sync::OnceLock::new();
+            let id =
+                *IN_FLIGHT.get_or_init(|| crate::telemetry::registry::intern("frame_in_flight"));
+            let dur = crate::telemetry::now_ns().saturating_sub(frame.sent_ns);
+            crate::telemetry::registry::record_span(id, link as i64 + 1, frame.sent_ns, dur);
+            crate::telemetry::registry::record_ns(id, dur);
+        }
         {
             let mut s = stats[link].lock().unwrap();
             match dir {
@@ -402,15 +426,11 @@ impl<C: Wire, M> Transport<C, M> for SimNet<C, M> {
 
     fn send(&self, link: usize, cmd: C) -> Result<(), LinkClosed> {
         let lane = &self.down[link];
-        lane_send(
-            &self.plan,
-            link,
-            NetDir::Down,
-            &lane.raw,
-            &lane.state,
-            &self.stats[link],
-            cmd.encode(),
-        )
+        let text = {
+            let _s = crate::span!("frame_encode", die = link);
+            cmd.encode()
+        };
+        lane_send(&self.plan, link, NetDir::Down, &lane.raw, &lane.state, &self.stats[link], text)
     }
 
     fn recv_deadline(&self, deadline: Instant) -> Result<M, RecvError> {
@@ -455,6 +475,10 @@ impl<C, M: Wire> Endpoint<C, M> for SimEndpoint<C, M> {
     }
 
     fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        let text = {
+            let _s = crate::span!("frame_encode", die = self.link);
+            msg.encode()
+        };
         lane_send(
             &self.plan,
             self.link,
@@ -462,7 +486,7 @@ impl<C, M: Wire> Endpoint<C, M> for SimEndpoint<C, M> {
             &self.up_raw,
             &self.state,
             &self.stats[self.link],
-            msg.encode(),
+            text,
         )
     }
 }

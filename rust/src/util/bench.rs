@@ -112,14 +112,26 @@ pub fn write_csv(
     header: &str,
     rows: &[Vec<f64>],
 ) -> std::io::Result<std::path::PathBuf> {
+    let text_rows: Vec<Vec<String>> =
+        rows.iter().map(|row| row.iter().map(|x| format!("{x}")).collect()).collect();
+    write_csv_text(name, header, &text_rows)
+}
+
+/// Write pre-formatted cells to `results/<name>.csv` — the exact-width
+/// variant for columns (u64 sweep counters) that an f64 cell would
+/// round above 2^53.
+pub fn write_csv_text(
+    name: &str,
+    header: &str,
+    rows: &[Vec<String>],
+) -> std::io::Result<std::path::PathBuf> {
     let dir = crate::config::results_dir();
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(format!("{name}.csv"));
     let mut text = String::from(header);
     text.push('\n');
     for row in rows {
-        let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
-        text.push_str(&cells.join(","));
+        text.push_str(&row.join(","));
         text.push('\n');
     }
     std::fs::write(&path, text)?;

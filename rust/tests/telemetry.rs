@@ -1,0 +1,306 @@
+//! Telemetry subsystem acceptance suite (`src/telemetry/`).
+//!
+//! The instrumentation layer only counts if it is invisible when off
+//! and honest when on:
+//!
+//! 1. **Disabled ≡ today** — with recording off, a sharded tempering
+//!    run and a 1-die training run are bit-identical to the
+//!    uninstrumented reference paths, nothing is recorded, and no
+//!    `telemetry` field appears in serialized `EpochStats`.
+//! 2. **Enabled is non-perturbing** — turning recording on changes no
+//!    sampled state, energy, or swap decision; it only adds the
+//!    `RunTelemetry` stamp.
+//! 3. **Exports are well-formed** — every JSONL line parses, span
+//!    begin/end events balance per thread, the Perfetto document is
+//!    valid `trace_event` JSON, and `pchip report` renders the stream.
+//! 4. **Counters are exact** — the packed kernel's per-die flip
+//!    counter equals `sweeps × replicas × N_SPINS`.
+//!
+//! Telemetry enablement is process-global, so every test here
+//! serializes on one mutex and restores the disabled state on exit.
+
+mod common;
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use common::{loaded_sampler_lossless as loaded_sampler, train_die};
+use pchip::analog::{Personality, ProgrammedWeights};
+use pchip::annealing::{temper_observed, BetaLadder, TemperingParams};
+use pchip::chimera::{and_gate_layout, Topology, N_SPINS};
+use pchip::config::MismatchConfig;
+use pchip::coordinator::{run_sharded_tempering_observed, ShardedTemperingParams};
+use pchip::learning::{dataset, run_training, CdParams, CdTrainer, EpochStats, TrainParams};
+use pchip::problems::sk;
+use pchip::rng::HostRng;
+use pchip::sampler::{PackedSampler, Sampler, LANES};
+use pchip::util::json::Json;
+
+/// Recording state is process-global: serialize the suite.
+static TELEMETRY_GATE: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    TELEMETRY_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn quick_params() -> TemperingParams {
+    TemperingParams {
+        ladder: BetaLadder::geometric(0.2, 3.0, 6),
+        sweeps_per_round: 2,
+        rounds: 20,
+        record_every: 4,
+        seed: 0xBEEF,
+        ..Default::default()
+    }
+}
+
+fn sharded_params(base: TemperingParams, shards: usize) -> ShardedTemperingParams {
+    ShardedTemperingParams {
+        base,
+        shards,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: false,
+    }
+}
+
+fn quick_cd() -> CdParams {
+    CdParams { epochs: 8, lr: 0.15, k_sweeps: 2, samples_per_pattern: 8, ..CdParams::default() }
+}
+
+#[test]
+fn disabled_sharded_run_is_bit_identical_and_unstamped() {
+    let _g = lock();
+    pchip::telemetry::set_enabled(false);
+    pchip::telemetry::reset();
+
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = quick_params();
+
+    let mut reference = loaded_sampler(&problem, &topo, 8, 77);
+    let ref_run =
+        temper_observed(&mut reference, &problem, &params, 1.0, |_, _, _| {}).unwrap();
+
+    let sharded = run_sharded_tempering_observed(
+        vec![loaded_sampler(&problem, &topo, 8, 77)],
+        &problem,
+        &sharded_params(params, 1),
+        1.0,
+        |_, _, _| {},
+    )
+    .unwrap();
+
+    assert_eq!(ref_run.best_energy.to_bits(), sharded.run.best_energy.to_bits());
+    assert_eq!(ref_run.best_state, sharded.run.best_state);
+    assert_eq!(ref_run.trace.rows, sharded.run.trace.rows);
+    // off means off: no stamp, and nothing recorded anywhere
+    assert!(sharded.telemetry.is_none());
+    let snap = pchip::telemetry::registry::snapshot();
+    assert!(snap.counters.is_empty(), "disabled run recorded counters: {:?}", snap.counters);
+    assert!(snap.hists.is_empty(), "disabled run recorded histograms");
+    assert!(pchip::telemetry::registry::spans_snapshot().is_empty());
+}
+
+#[test]
+fn enabled_recording_does_not_perturb_results() {
+    let _g = lock();
+    pchip::telemetry::set_enabled(false);
+    pchip::telemetry::reset();
+
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let run = |topo: &Topology| {
+        run_sharded_tempering_observed(
+            vec![
+                loaded_sampler(&problem, topo, 4, 77),
+                loaded_sampler(&problem, topo, 4, 177),
+            ],
+            &problem,
+            &sharded_params(quick_params(), 2),
+            1.0,
+            |_, _, _| {},
+        )
+        .unwrap()
+    };
+
+    let off = run(&topo);
+    pchip::telemetry::set_enabled(true);
+    pchip::telemetry::reset();
+    let on = run(&topo);
+    pchip::telemetry::set_enabled(false);
+
+    // bit-identical results either way
+    assert_eq!(off.run.best_energy.to_bits(), on.run.best_energy.to_bits());
+    assert_eq!(off.run.best_state, on.run.best_state);
+    assert_eq!(off.run.trace.rows, on.run.trace.rows);
+    assert_eq!(off.run.swaps.attempts, on.run.swaps.attempts);
+    assert_eq!(off.run.swaps.accepts, on.run.swaps.accepts);
+
+    // only the enabled run carries the rollup
+    assert!(off.telemetry.is_none());
+    let t = on.telemetry.expect("enabled run must stamp RunTelemetry");
+    // software engine: every die swept rounds × sweeps_per_round with 4
+    // chains of N_SPINS p-bits — the flip accounting is exact
+    let per_die = (20u64 * 2) * 4 * N_SPINS as u64;
+    assert_eq!(t.per_die.len(), 2, "per-die flips: {:?}", t.per_die);
+    for d in &t.per_die {
+        assert_eq!(d.flips, per_die, "die {:?} flip count", d.die);
+    }
+    assert_eq!(t.total_flips, 2 * per_die);
+    assert!(t.flips_per_sec > 0.0);
+    assert!(t.sweep_phase.is_some(), "sweep_phase histogram missing");
+    assert!(t.barrier_wait.is_some(), "barrier_wait histogram missing");
+    pchip::telemetry::reset();
+}
+
+#[test]
+fn disabled_training_matches_cd_trainer_and_serializes_identically() {
+    let _g = lock();
+    pchip::telemetry::set_enabled(false);
+    pchip::telemetry::reset();
+
+    let cd = quick_cd();
+    let mut chip = train_die(7, 8);
+    let mut trainer = CdTrainer::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    let legacy = trainer.train(&mut chip, 4, 400).unwrap();
+
+    let mut params = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    params.eval_every = 4;
+    params.eval_samples = 400;
+    let run = run_training(vec![train_die(7, 8)], &params).unwrap();
+
+    assert_eq!(legacy.len(), run.stats.len());
+    for (a, b) in legacy.iter().zip(&run.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+        assert_eq!(a.corr_gap.to_bits(), b.corr_gap.to_bits());
+        assert_eq!(a.valid_mass.to_bits(), b.valid_mass.to_bits());
+    }
+    assert!(run.telemetry.is_none());
+    for s in &run.stats {
+        // the JSON wire is unchanged when telemetry is off — no key at
+        // all, so pre-telemetry readers and goldens agree byte-for-byte
+        assert!(s.telemetry.is_none());
+        let text = s.to_json().to_string();
+        assert!(!text.contains("telemetry"), "unexpected field in {text}");
+        let back = EpochStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.kl.to_bits(), s.kl.to_bits());
+        assert!(back.telemetry.is_none());
+    }
+}
+
+#[test]
+fn exports_parse_and_spans_balance() {
+    let _g = lock();
+    pchip::telemetry::set_enabled(true);
+    pchip::telemetry::reset();
+
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let r = run_sharded_tempering_observed(
+        vec![loaded_sampler(&problem, &topo, 4, 77), loaded_sampler(&problem, &topo, 4, 177)],
+        &problem,
+        &sharded_params(quick_params(), 2),
+        1.0,
+        |_, _, _| {},
+    )
+    .unwrap();
+    pchip::log_info!("telemetry suite export marker");
+
+    let dir = std::env::temp_dir().join("pchip_telemetry_suite");
+    std::fs::create_dir_all(&dir).unwrap();
+    let jsonl = dir.join("run.jsonl");
+    let perfetto = dir.join("run_perfetto.json");
+    pchip::telemetry::export::write_jsonl(&jsonl, r.telemetry.as_ref(), &r.run.trace.jsonl_rows())
+        .unwrap();
+    pchip::telemetry::export::write_perfetto(&perfetto).unwrap();
+    pchip::telemetry::set_enabled(false);
+
+    // every JSONL line parses; the stream opens with the meta record
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let mut kinds: BTreeMap<String, u64> = BTreeMap::new();
+    let mut balance: BTreeMap<u64, i64> = BTreeMap::new();
+    let mut span_names: Vec<String> = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("line {}: {e:#}", i + 1));
+        let kind = v.req("type").unwrap().as_str().unwrap().to_string();
+        if i == 0 {
+            assert_eq!(kind, "meta");
+        }
+        match kind.as_str() {
+            "span_begin" => {
+                *balance.entry(v.req("tid").unwrap().as_usize().unwrap() as u64).or_insert(0) += 1;
+                span_names.push(v.req("name").unwrap().as_str().unwrap().to_string());
+            }
+            "span_end" => {
+                *balance.entry(v.req("tid").unwrap().as_usize().unwrap() as u64).or_insert(0) -= 1;
+            }
+            _ => {}
+        }
+        *kinds.entry(kind).or_insert(0) += 1;
+    }
+    assert!(kinds.get("span_begin").copied().unwrap_or(0) > 0, "no spans in stream: {kinds:?}");
+    for (tid, b) in &balance {
+        assert_eq!(*b, 0, "unbalanced span events on tid {tid}");
+    }
+    assert!(span_names.iter().any(|n| n == "sweep_phase"), "missing sweep_phase: {span_names:?}");
+    assert_eq!(kinds.get("summary").copied().unwrap_or(0), 1);
+    assert!(kinds.get("energy").copied().unwrap_or(0) > 0, "energy rows missing: {kinds:?}");
+    assert!(kinds.get("log").copied().unwrap_or(0) > 0, "log events missing: {kinds:?}");
+
+    // the Perfetto document is valid trace_event JSON with real events
+    let doc = Json::parse(&std::fs::read_to_string(&perfetto).unwrap()).unwrap();
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    assert!(events.iter().any(|e| {
+        e.get("ph").and_then(|p| p.as_str().ok().map(str::to_string)).as_deref() == Some("X")
+    }));
+
+    // and `pchip report` can render the stream back
+    let report = pchip::telemetry::export::report_from_jsonl(&jsonl).unwrap();
+    assert!(report.contains("== stream =="), "report missing stream section:\n{report}");
+    assert!(report.contains("flips"), "report missing flips counters:\n{report}");
+    pchip::telemetry::reset();
+}
+
+#[test]
+fn packed_flip_counter_is_exact() {
+    let _g = lock();
+    pchip::telemetry::set_enabled(true);
+    pchip::telemetry::reset();
+
+    // a labeled die thread running the packed kernel, as the sweep
+    // pool's workers do
+    std::thread::spawn(|| {
+        pchip::telemetry::set_die(5);
+        let topo = Topology::new();
+        let p = Personality::sample(&topo, 3, MismatchConfig::default());
+        let mut rng = HostRng::new(3);
+        let mut w = ProgrammedWeights::zeros(topo.edges.len());
+        for e in 0..topo.edges.len() {
+            w.j_codes[e] = if rng.spin() > 0 { 127 } else { -127 };
+            w.enables[e] = true;
+        }
+        let folded = p.fold(&topo, &w);
+        let mut s = PackedSampler::new(1, 1);
+        s.load(&folded);
+        s.set_beta(1.5);
+        s.sweeps(3).unwrap();
+    })
+    .join()
+    .unwrap();
+    pchip::telemetry::set_enabled(false);
+
+    let snap = pchip::telemetry::registry::snapshot();
+    // one packed block is LANES replicas; flips = sweeps × replicas × spins
+    let expect = (3 * LANES * N_SPINS) as u64;
+    assert_eq!(
+        snap.counter("flips", Some(5)),
+        expect,
+        "packed flip counter off (counters: {:?})",
+        snap.counters
+    );
+    pchip::telemetry::reset();
+}

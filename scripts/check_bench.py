@@ -61,6 +61,20 @@ def main():
     base = load(args.baseline)
     failures = []
 
+    # Derived flips/s rollup (display only, no gate): the bench's best
+    # software arm against the paper's silicon rate, plus the measured
+    # telemetry recording overhead when the report carries it.
+    best = fresh.get("best_flips_per_sec")
+    if best:
+        line = f"best arm: {best:.3e} flips/s"
+        silicon = fresh.get("silicon_flips_per_sec")
+        if silicon:
+            line += f" ({best / silicon:.1%} of the silicon rate)"
+        print(line)
+    overhead = fresh.get("telemetry_overhead_pct")
+    if overhead is not None:
+        print(f"telemetry recording overhead: {overhead:.1f}% (display only)")
+
     speedup = fresh.get("packed_speedup_batch32")
     if speedup is None:
         failures.append("fresh report lacks packed_speedup_batch32")
