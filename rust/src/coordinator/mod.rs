@@ -113,6 +113,7 @@ pub use job::{JobId, JobRequest, JobResult, JobTicket, ProblemHandle};
 pub use router::Router;
 pub use server::{ChipArrayServer, EngineKind, FanoutReport, ProblemSpec, ServerStats};
 pub use sharded::{
-    run_sharded_tempering, run_sharded_tempering_observed, run_sharded_tempering_simnet,
-    ShardCmd, ShardMsg, ShardPlan, ShardedRun, ShardedTemperingParams,
+    run_sharded_tempering, run_sharded_tempering_net, run_sharded_tempering_observed,
+    run_sharded_tempering_simnet, shard_worker_loop, ShardCmd, ShardMsg, ShardPlan, ShardedRun,
+    ShardedTemperingParams,
 };

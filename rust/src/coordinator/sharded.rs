@@ -52,7 +52,11 @@
 //! [`run_sharded_tempering_simnet`] runs the same gang over the
 //! deterministic network simulator with a scripted
 //! [`crate::transport::NetPlan`] — the harness behind
-//! `rust/tests/transport_sim.rs`.
+//! `rust/tests/transport_sim.rs`. [`run_sharded_tempering_net`] drives
+//! the coordinator half alone over any pre-seated transport (the TCP
+//! [`crate::transport::SocketTransport`] of `pchip temper --listen`),
+//! with remote workers running [`shard_worker_loop`] behind
+//! [`crate::transport::SocketEndpoint`]s.
 //!
 //! [`TemperingCore`]: crate::annealing::TemperingCore
 
@@ -70,7 +74,7 @@ use crate::problems::IsingProblem;
 use crate::sampler::Sampler;
 use crate::transport::{
     f32s_from_wire, f32s_to_wire, f64s_from_wire, f64s_to_wire, mpsc_net, sim_net,
-    spins_from_wire, spins_to_wire, Endpoint, NetPlan, Transport, Wire,
+    spins_from_wire, spins_to_wire, Endpoint, NetPlan, Transport, Wire, WireProtocol,
 };
 use crate::util::json::{obj, Json};
 
@@ -339,6 +343,13 @@ impl Wire for ShardCmd {
     }
 }
 
+impl WireProtocol for ShardCmd {
+    /// The tempering gang's seat namespace: a socket handshake carrying
+    /// any other tag (say the training service's `"train"`) is rejected
+    /// before it can sit down at a tempering seat.
+    const PROTOCOL: &'static str = "temper";
+}
+
 impl Wire for ShardMsg {
     fn to_wire(&self) -> Json {
         match self {
@@ -385,11 +396,13 @@ impl Wire for ShardMsg {
 
 /// The shard worker's half of the protocol: announce the die, then
 /// sweep on command until told (or hung up on) to finish. Runs on the
-/// die-owning thread — a [`ChipArrayServer`] worker seat or a thread
-/// spawned by [`run_sharded_tempering`].
+/// die-owning thread — a [`ChipArrayServer`] worker seat, a thread
+/// spawned by [`run_sharded_tempering`], or a remote `pchip worker`
+/// process holding a [`crate::transport::SocketEndpoint`] dialed into
+/// a `--listen`ing coordinator.
 ///
 /// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
-pub(crate) fn shard_worker_loop<S: Sampler, E: Endpoint<ShardCmd, ShardMsg>>(
+pub fn shard_worker_loop<S: Sampler, E: Endpoint<ShardCmd, ShardMsg>>(
     shard: usize,
     sampler: &mut S,
     problem: &IsingProblem,
@@ -1128,6 +1141,50 @@ where
 {
     let (net, endpoints) = sim_net::<ShardCmd, ShardMsg>(samplers.len(), net_plan);
     run_sharded_over(samplers, problem, params, beta_scale, net, endpoints, observe)
+}
+
+/// Drive a sharded tempering run over an **externally seated**
+/// transport — the coordinator half only. Unlike
+/// [`run_sharded_tempering`], no samplers are spawned here: every seat
+/// of `net` is expected to be (or become) occupied by a worker running
+/// [`shard_worker_loop`] somewhere else — typically a remote
+/// `pchip worker --connect` process on the other end of a
+/// [`crate::transport::SocketTransport`]. Scheduler selection
+/// (serial / pipelined / elastic) and the barrier/timeout semantics are
+/// identical to the in-process drivers; a remote worker that dies
+/// mid-round surfaces exactly like a lost die (barrier timeout →
+/// elastic shrink, reconnect → regrow). [`ShardedRun::net`] carries the
+/// transport's per-link delivery and session counters.
+/// `observe(round, global_states, chain_at_rung)` streams rounds
+/// exactly as [`run_sharded_tempering_observed`] does (pass
+/// `|_, _, _| {}` when not observing).
+pub fn run_sharded_tempering_net<T, F>(
+    params: &ShardedTemperingParams,
+    beta_scale: f64,
+    net: &T,
+    observe: F,
+) -> Result<ShardedRun>
+where
+    T: Transport<ShardCmd, ShardMsg>,
+    F: FnMut(usize, &[Vec<i8>], &[usize]),
+{
+    let window = crate::telemetry::enabled()
+        .then(|| (crate::telemetry::registry::snapshot(), Instant::now()));
+    let mut result = if params.elastic {
+        drive_sharded_elastic(params, beta_scale, net, observe)
+    } else if params.pipeline {
+        drive_sharded_pipelined(params, beta_scale, net, observe)
+    } else {
+        drive_sharded(params, beta_scale, net, observe)
+    };
+    if let (Ok(run), Some((before, started))) = (&mut result, window) {
+        run.telemetry = Some(crate::telemetry::RunTelemetry::capture(
+            &before,
+            started.elapsed().as_secs_f64(),
+            &run.net,
+        ));
+    }
+    result
 }
 
 /// Shared gang bring-up: seat each sampler on a worker thread behind

@@ -25,8 +25,9 @@ pub use calibration::{calibrate, calibrate_full_die, compensate_biases, Calibrat
 pub use cd::{CdParams, CdTrainer, EpochStats};
 pub use grad::{collect_negative, collect_positive, GradAccum, PhaseSpec};
 pub use service::{
-    run_training, run_training_observed, run_training_resumed, run_training_simnet, EpochShard,
-    ShadowEnergy, TemperedNegative, TrainCheckpoint, TrainCmd, TrainMsg, TrainParams, TrainedRun,
+    run_training, run_training_net, run_training_observed, run_training_resumed,
+    run_training_simnet, train_worker_loop, EpochShard, ShadowEnergy, TemperedNegative,
+    TrainCheckpoint, TrainCmd, TrainMsg, TrainParams, TrainedRun,
 };
 
 use anyhow::Result;

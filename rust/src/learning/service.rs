@@ -60,10 +60,13 @@
 //! The coordinator↔worker seam itself is pluggable: the epoch protocol
 //! runs over any [`crate::transport::Transport`] /
 //! [`crate::transport::Endpoint`] pair — the in-process mpsc default
-//! ([`run_training`]), or the deterministic network simulator
-//! ([`run_training_simnet`], exercised by `tests/transport_sim.rs`) —
-//! with [`TrainCmd`] / [`TrainMsg`] crossing lossy links serialized
-//! through [`crate::transport::Wire`].
+//! ([`run_training`]), the deterministic network simulator
+//! ([`run_training_simnet`], exercised by `tests/transport_sim.rs`), or
+//! real TCP ([`run_training_net`] over a
+//! [`crate::transport::SocketTransport`], with remote `pchip worker`
+//! processes running [`train_worker_loop`]) — with [`TrainCmd`] /
+//! [`TrainMsg`] crossing lossy links serialized through
+//! [`crate::transport::Wire`].
 //!
 //! [`CdTrainer`]: crate::learning::CdTrainer
 //! [`CdTrainer::train`]: crate::learning::CdTrainer::train
@@ -83,6 +86,7 @@ use crate::metrics::{LinkStats, MembershipChange, MembershipEvent, StateHistogra
 use crate::transport::{
     bools_from_wire, bools_to_wire, f64s_from_wire, f64s_to_wire, i8s_from_wire, i8s_to_wire,
     mpsc_net, sim_net, spins_from_wire, spins_to_wire, Endpoint, NetPlan, Transport, Wire,
+    WireProtocol,
 };
 use crate::util::json::{obj, Json};
 
@@ -690,6 +694,13 @@ impl Wire for TrainCmd {
     }
 }
 
+impl WireProtocol for TrainCmd {
+    /// The training gang's seat namespace: a socket handshake carrying
+    /// any other tag (say the tempering gang's `"temper"`) is rejected
+    /// before it can sit down at a training seat.
+    const PROTOCOL: &'static str = "train";
+}
+
 impl Wire for TrainMsg {
     fn to_wire(&self) -> Json {
         match self {
@@ -762,11 +773,13 @@ struct NegCore {
 
 /// The train worker's half of the protocol: announce the die, then
 /// execute commands until told (or hung up on) to finish. Runs on the
-/// die-owning thread — a [`ChipArrayServer`] worker seat or a thread
-/// spawned by [`run_training`].
+/// die-owning thread — a [`ChipArrayServer`] worker seat, a thread
+/// spawned by [`run_training`], or a remote `pchip worker` process
+/// holding a [`crate::transport::SocketEndpoint`] dialed into a
+/// `--listen`ing coordinator.
 ///
 /// [`ChipArrayServer`]: crate::coordinator::ChipArrayServer
-pub(crate) fn train_worker_loop<C: TrainableChip, E: Endpoint<TrainCmd, TrainMsg>>(
+pub fn train_worker_loop<C: TrainableChip, E: Endpoint<TrainCmd, TrainMsg>>(
     shard: usize,
     chip: &mut C,
     params: &TrainParams,
@@ -1991,6 +2004,41 @@ where
 {
     let (net, endpoints) = sim_net::<TrainCmd, TrainMsg>(chips.len(), net_plan);
     run_training_over(chips, params, resume, epochs, net, endpoints, on_epoch)
+}
+
+/// Drive a training run over an **externally seated** transport — the
+/// coordinator half only. Unlike [`run_training`], no chips are moved
+/// into worker threads here: every seat of `net` is expected to be (or
+/// become) occupied by a worker running [`train_worker_loop`] somewhere
+/// else — typically a remote `pchip worker --connect` process on the
+/// other end of a [`crate::transport::SocketTransport`]. Epoch
+/// scheduling (barrier / pipelined / elastic) and the all-reduce
+/// semantics are identical to the in-process drivers; a remote die that
+/// dies mid-epoch surfaces exactly like a local die fault. Returns the
+/// run plus the transport's per-link delivery and session counters.
+pub fn run_training_net<T, F>(
+    params: &TrainParams,
+    resume: Option<&TrainCheckpoint>,
+    epochs: usize,
+    net: &T,
+    on_epoch: F,
+) -> Result<(TrainedRun, Vec<LinkStats>)>
+where
+    T: Transport<TrainCmd, TrainMsg>,
+    F: FnMut(&EpochStats),
+{
+    let window = crate::telemetry::enabled()
+        .then(|| (crate::telemetry::registry::snapshot(), Instant::now()));
+    let mut result = drive_training(params, resume, epochs, net, on_epoch);
+    let link_stats = net.link_stats();
+    if let (Ok(run), Some((before, started))) = (&mut result, window) {
+        run.telemetry = Some(crate::telemetry::RunTelemetry::capture(
+            &before,
+            started.elapsed().as_secs_f64(),
+            &link_stats,
+        ));
+    }
+    result.map(|run| (run, link_stats))
 }
 
 /// The transport-generic body of [`run_training_observed`] /

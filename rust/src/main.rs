@@ -5,12 +5,16 @@
 //! pchip train  [--gate and|or|xor|nand|nor|adder] [--dies N] [--pcd]
 //!              [--tempered-negative] [--pipeline] [--elastic]
 //!              [--epochs N] [--lr X] [--fault-plan FILE]
-//!              [--checkpoint-out FILE] [--resume FILE] …
+//!              [--checkpoint-out FILE] [--resume FILE]
+//!              [--listen HOST:PORT] …
 //! pchip anneal [--seed S] [--steps N] [--b0 X] [--b1 X]
 //! pchip temper [--seed S] [--replicas K] [--rounds N] [--b0 X] [--b1 X]
 //!              [--shards N] [--pipeline] [--elastic] [--fanout N]
 //!              [--fault-plan FILE] [--net-plan FILE] [--barrier-timeout-ms T]
 //!              [--tune off|acceptance|flux] [--adapt-every N]
+//!              [--listen HOST:PORT]
+//! pchip worker --connect HOST:PORT [--protocol temper|train] [--seat K]
+//!              (+ the same problem flags as the listening coordinator)
 //! pchip tune-ladder [--seed S] [--replicas K] [--b0 X] [--b1 X]
 //!              [--iters N] [--floor A] [--ceiling A] [--min-k K] [--max-k K]
 //! pchip maxcut [--native-keep P | --clique-n N]
@@ -95,6 +99,15 @@ impl Args {
             Some(p) => Ok(Some(p)),
         }
     }
+
+    /// A flag that must carry a value when present (`--listen HOST:PORT`).
+    fn value_of(&self, key: &str) -> Result<Option<&str>> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(None),
+            Some("") => Err(anyhow!("--{key} needs a value")),
+            Some(v) => Ok(Some(v)),
+        }
+    }
 }
 
 fn load_config(args: &Args) -> Result<Config> {
@@ -131,6 +144,45 @@ fn net_plan(args: &Args) -> Result<Option<pchip::transport::NetPlan>> {
             let v = pchip::util::json::Json::parse(&text)?;
             Ok(Some(pchip::transport::NetPlan::from_json(&v)?))
         }
+    }
+}
+
+/// Socket-transport knobs shared by `--listen` coordinators and `pchip
+/// worker`: `--heartbeat-ms`, `--idle-timeout-ms` and `--max-reconnects`
+/// override the [`pchip::transport::SocketConfig`] defaults.
+fn socket_config_from_args(args: &Args) -> Result<pchip::transport::SocketConfig> {
+    let d = pchip::transport::SocketConfig::default();
+    Ok(pchip::transport::SocketConfig {
+        heartbeat: std::time::Duration::from_millis(
+            args.get("heartbeat-ms", d.heartbeat.as_millis() as u64)?,
+        ),
+        idle_timeout: std::time::Duration::from_millis(
+            args.get("idle-timeout-ms", d.idle_timeout.as_millis() as u64)?,
+        ),
+        max_reconnects: args.get("max-reconnects", d.max_reconnects)?,
+        ..d
+    })
+}
+
+/// Per-link delivery + session counters of a socket (or simulated) gang
+/// → the leveled logger (stderr at info), one line per link.
+fn print_link_sessions(links: &[pchip::metrics::LinkStats]) {
+    for (k, l) in links.iter().enumerate() {
+        pchip::log_info!(
+            "link {k}: down {}/{} delivered ({} dropped), up {}/{} ({} dropped); sessions: \
+             {} connect(s), {} reconnect(s), {} reject(s), {} heartbeat(s), {} corrupt",
+            l.down.delivered,
+            l.down.sent,
+            l.down.dropped,
+            l.up.delivered,
+            l.up.sent,
+            l.up.dropped,
+            l.connects,
+            l.reconnects,
+            l.rejects,
+            l.heartbeats,
+            l.corrupt
+        );
     }
 }
 
@@ -205,6 +257,7 @@ fn main() -> Result<()> {
         "train" => cmd_train(&args),
         "anneal" => cmd_anneal(&args),
         "temper" => cmd_temper(&args),
+        "worker" => cmd_worker(&args),
         "tune-ladder" => cmd_tune_ladder(&args),
         "maxcut" => cmd_maxcut(&args),
         "sweep" => cmd_sweep(&args),
@@ -250,7 +303,12 @@ fn print_help() {
          \u{20}        dies when one is lost mid-run;\n  \
          \u{20}        --net-plan FILE runs the gang over the network simulator\n  \
          \u{20}        with that scripted per-link impairment schedule;\n  \
+         \u{20}        --listen HOST:PORT seats the gang over TCP — each seat\n  \
+         \u{20}        is a remote `pchip worker --connect` process;\n  \
          \u{20}        --tune flux re-spaces the ladder in-run by round-trip flux)\n  \
+         worker  one remote die: dial a --listen'ing temper/train\n  \
+         \u{20}       coordinator (--connect HOST:PORT --protocol temper|train\n  \
+         \u{20}        --seat K, plus the coordinator's problem flags)\n  \
          tune-ladder  feedback-optimize a β-ladder (round-trip flux, auto-K)\n  \
          maxcut  Max-Cut optimization (Fig 9b)\n  \
          sweep   bias-sweep variability (Fig 8a)\n  \
@@ -378,12 +436,14 @@ fn gate_by_name(gate: &str) -> Result<(pchip::chimera::GateLayout, dataset::Data
     })
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// The [`pchip::learning::TrainParams`] a `pchip train` flag set
+/// describes, plus the gate name for reporting. Shared with
+/// `pchip worker --protocol train`, which must rebuild exactly the run
+/// its coordinator is serving from the same flags.
+fn train_params_from_args(args: &Args) -> Result<(String, pchip::learning::TrainParams)> {
     use pchip::annealing::LadderTuning;
-    use pchip::learning::{TemperedNegative, TrainCheckpoint, TrainParams};
+    use pchip::learning::{TemperedNegative, TrainParams};
 
-    let mut cfg = load_config(args)?;
-    let trace = trace_args(args)?; // before the run so recording covers it
     let gate = args.str_or("gate", "and");
     let (layout, data) = gate_by_name(&gate)?;
     let epochs: usize = args.get("epochs", 150)?;
@@ -392,9 +452,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     cd.beta = args.get("beta", cd.beta)?;
     cd.k_sweeps = args.get("k-sweeps", cd.k_sweeps)?;
     cd.samples_per_pattern = args.get("samples-per-pattern", cd.samples_per_pattern)?;
-    let dies: usize = args.get("dies", 1)?;
     let mut params = TrainParams::new(layout, data, cd);
-    params.dies = dies;
+    params.dies = args.get("dies", 1)?;
     params.pcd = args.flag("pcd");
     params.pipeline = args.flag("pipeline");
     params.elastic = args.flag("elastic");
@@ -416,6 +475,28 @@ fn cmd_train(args: &Args) -> Result<()> {
             ..Default::default()
         });
     }
+    Ok((gate, params))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use pchip::learning::TrainCheckpoint;
+
+    let mut cfg = load_config(args)?;
+    let trace = trace_args(args)?; // before the run so recording covers it
+    let (gate, params) = train_params_from_args(args)?;
+    let epochs = params.cd.epochs;
+    let dies = params.dies;
+    let resume = match args.path_of("resume")? {
+        Some(p) => Some(TrainCheckpoint::load(std::path::Path::new(p))?),
+        None => None,
+    };
+
+    // --listen HOST:PORT: the gang's dies are remote `pchip worker`
+    // processes dialing in over TCP instead of in-process threads.
+    if let Some(addr) = args.value_of("listen")? {
+        let addr = addr.to_string();
+        return train_over_sockets(args, &addr, &trace, &gate, params, resume);
+    }
 
     // the array IS the gang: one die per shard, each with its own
     // personality (cfg.server.seed + k), every phase through silicon
@@ -428,11 +509,6 @@ fn cmd_train(args: &Args) -> Result<()> {
         (other, _) => bail!("unknown engine `{other}` (sw|xla)"),
     };
     let srv = ChipArrayServer::start(&cfg, engine)?;
-
-    let resume = match args.path_of("resume")? {
-        Some(p) => Some(TrainCheckpoint::load(std::path::Path::new(p))?),
-        None => None,
-    };
     let mode = match (&resume, params.pcd, params.tempered.is_some()) {
         (Some(_), _, _) => "resumed",
         (None, true, true) => "PCD + tempered negative",
@@ -495,6 +571,72 @@ fn cmd_train(args: &Args) -> Result<()> {
         JobResult::Failed(msg) => bail!("training failed: {msg}"),
         other => bail!("unexpected result {other:?}"),
     }
+}
+
+/// `pchip train --listen HOST:PORT`: drive the epoch protocol over a
+/// TCP-seated gang. Every one of the run's `--dies` seats must be
+/// claimed by a remote `pchip worker --connect HOST:PORT --protocol
+/// train --seat K` process started from the same flag set (the worker
+/// rebuilds its die and chain seeds from the flags, so a mismatched
+/// flag set means a mismatched run, not an error).
+fn train_over_sockets(
+    args: &Args,
+    addr: &str,
+    trace: &TraceArgs,
+    gate: &str,
+    params: pchip::learning::TrainParams,
+    resume: Option<pchip::learning::TrainCheckpoint>,
+) -> Result<()> {
+    use pchip::learning::{run_training_net, TrainCmd, TrainMsg};
+    use pchip::transport::SocketTransport;
+
+    anyhow::ensure!(
+        fault_plan(args)?.is_none(),
+        "--fault-plan injects faults under the in-process array; a socket gang's faults \
+         are real worker deaths (kill the worker instead)"
+    );
+    anyhow::ensure!(
+        args.str_or("engine", "sw") == "sw",
+        "--listen seats remote software workers; --engine does not apply"
+    );
+    let epochs = params.cd.epochs;
+    let sock = socket_config_from_args(args)?;
+    let net = SocketTransport::<TrainCmd, TrainMsg>::listen(addr, params.dies, sock)?;
+    println!(
+        "listening on {} for {} training worker(s) — seat each with \
+         `pchip worker --connect {} --protocol train --seat K …` (same problem flags)",
+        net.local_addr(),
+        params.dies,
+        net.local_addr()
+    );
+    let dies = params.dies;
+    println!("{:>6} {:>10} {:>10} {:>12}", "epoch", "KL", "corr_gap", "valid_mass");
+    let (run, links) = run_training_net(&params, resume.as_ref(), epochs, &net, |s| {
+        println!("{:>6} {:>10.4} {:>10.4} {:>12.3}", s.epoch, s.kl, s.corr_gap, s.valid_mass);
+    })?;
+    print_membership(&run.membership);
+    println!(
+        "gate {gate}: final KL {:.4}, valid mass {:.3} (socket gang of {dies}{})",
+        run.final_kl,
+        run.final_valid_mass,
+        if run.membership.is_empty() { "" } else { ", gang shrank/regrew — see stderr" }
+    );
+    print_link_sessions(&links);
+    let name = format!("train_{gate}");
+    let rows: Vec<Vec<f64>> = run
+        .stats
+        .iter()
+        .map(|e| vec![e.epoch as f64, e.kl, e.corr_gap, e.valid_mass])
+        .collect();
+    pchip::util::bench::write_csv(&name, "epoch,kl,corr_gap,valid_mass", &rows)?;
+    println!("  per-epoch series → results/{name}.csv");
+    if let Some(path) = args.path_of("checkpoint-out")? {
+        run.checkpoint.save(std::path::Path::new(path))?;
+        println!("  checkpoint → {path} (resume with --resume {path})");
+    }
+    let summary = run.telemetry.clone().or_else(|| trace.cumulative_summary());
+    trace.export(summary.as_ref(), &[])?;
+    Ok(())
 }
 
 fn cmd_anneal(args: &Args) -> Result<()> {
@@ -595,6 +737,65 @@ fn cmd_temper(args: &Args) -> Result<()> {
                 report.runs
             );
         }
+        return Ok(());
+    }
+
+    // --listen HOST:PORT: serve the sharded gang over TCP — every seat
+    // is a remote `pchip worker --connect … --protocol temper` process
+    // rebuilding its die from this same flag set (--seed/--replicas/
+    // --shards/--b0/--b1). This process is the coordinator only: no
+    // local die, no single-die head-to-head.
+    if let Some(addr) = args.value_of("listen")? {
+        anyhow::ensure!(
+            net_plan(args)?.is_none() && fault_plan(args)?.is_none(),
+            "--listen drives real sockets; --net-plan/--fault-plan script the in-process \
+             harnesses — pick one per run"
+        );
+        let shards: usize = args.get("shards", 1)?;
+        anyhow::ensure!(
+            shards <= replicas,
+            "--shards {shards} cannot exceed --replicas {replicas}"
+        );
+        let sharded_params = pchip::coordinator::ShardedTemperingParams {
+            base: temper_params.clone(),
+            shards,
+            barrier_timeout: std::time::Duration::from_millis(
+                args.get("barrier-timeout-ms", 30_000u64)?,
+            ),
+            pipeline: args.flag("pipeline"),
+            elastic: args.flag("elastic"),
+        };
+        let topo = Topology::new();
+        let problem = pchip::problems::sk::chimera_pm_j(&topo, seed);
+        // the code→logical β scale is a pure function of the problem's
+        // lowering; every worker programs the same codes and lands on
+        // the same value, so the coordinator needs no die to know it
+        let (_, _, _, scale) = problem.to_codes(&topo)?;
+        use pchip::coordinator::{ShardCmd, ShardMsg};
+        let sock = socket_config_from_args(args)?;
+        let net =
+            pchip::transport::SocketTransport::<ShardCmd, ShardMsg>::listen(addr, shards, sock)?;
+        println!(
+            "listening on {} for {shards} tempering worker(s) — seat each with \
+             `pchip worker --connect {} --protocol temper --seat K …` (same problem flags)",
+            net.local_addr(),
+            net.local_addr()
+        );
+        let r = pchip::coordinator::run_sharded_tempering_net(
+            &sharded_params,
+            scale,
+            &net,
+            |_, _, _| {},
+        )?;
+        print_membership(&r.membership);
+        println!(
+            "sharded over TCP: best {:.0} ({} shard(s) at the end{})",
+            r.run.best_energy,
+            r.shards,
+            if r.membership.is_empty() { "" } else { ", membership log on stderr" }
+        );
+        print_link_sessions(&r.net);
+        trace.export(r.telemetry.as_ref(), &r.run.trace.jsonl_rows())?;
         return Ok(());
     }
 
@@ -768,6 +969,87 @@ fn cmd_temper(args: &Args) -> Result<()> {
     // single-die path: no gang rollup, but the energy trace still rides
     // along with whatever the cumulative capture recorded
     trace.export(trace.cumulative_summary().as_ref(), &report.temper.trace.jsonl_rows())?;
+    Ok(())
+}
+
+/// `pchip worker --connect HOST:PORT`: one remote die. Rebuilds the die
+/// its seat would hold in the coordinator's in-process array — same
+/// seeds, same mismatch personality, same problem codes — dials the
+/// `--listen`ing coordinator and serves the seat's command loop until
+/// the run finishes or the link dies for good (reconnect-backoff
+/// exhausted). Bit-identical to the in-process run by construction;
+/// `rust/tests/transport_socket.rs` holds the proof.
+fn cmd_worker(args: &Args) -> Result<()> {
+    use pchip::sampler::Sampler as _;
+    use pchip::transport::SocketEndpoint;
+
+    let cfg = load_config(args)?;
+    let addr = args
+        .value_of("connect")?
+        .ok_or_else(|| anyhow!("worker needs --connect HOST:PORT"))?
+        .to_string();
+    let seat: usize = args.get("seat", 0)?;
+    let sock = socket_config_from_args(args)?;
+    let protocol = args.str_or("protocol", "temper");
+    match protocol.as_str() {
+        "temper" => {
+            use pchip::coordinator::{ShardCmd, ShardMsg};
+            // mirror cmd_temper's flag set so the rebuilt die is the one
+            // the coordinator's in-process run would have seated
+            let b0: f64 = args.get("b0", 0.08)?;
+            let b1: f64 = args.get("b1", 4.0)?;
+            let replicas: usize = args.get("replicas", 8)?;
+            let shards: usize = args.get("shards", 1)?;
+            let seed = args.get("seed", 1u64)?;
+            anyhow::ensure!(seat < shards, "--seat {seat} out of range for --shards {shards}");
+            let die_params = pchip::coordinator::ShardedTemperingParams {
+                base: pchip::annealing::TemperingParams {
+                    ladder: pchip::annealing::BetaLadder::geometric(b0, b1, replicas),
+                    ..Default::default()
+                },
+                shards,
+                ..Default::default()
+            };
+            let topo = Topology::new();
+            let problem = pchip::problems::sk::chimera_pm_j(&topo, seed);
+            // exactly the constants cmd_temper's in-process gang paths
+            // use, so seat K's die is bit-identical to the local one
+            let (mut chips, _scale) = exp::sharded_die_array(
+                &die_params,
+                &problem,
+                cfg.mismatch,
+                replicas.max(8) / shards.max(1),
+                0xD1E5,
+                |s| seed ^ 0xB04D ^ ((s as u64) << 8),
+            )?;
+            let mut chip = chips.swap_remove(seat); // the other seats drop
+            println!("dialing {addr} for tempering seat {seat}/{shards}…");
+            let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr.as_str(), seat, sock)?;
+            println!("seated; serving die {seat} until the run finishes");
+            pchip::coordinator::shard_worker_loop(seat, &mut chip, &problem, &ep);
+        }
+        "train" => {
+            use pchip::learning::{TrainCmd, TrainMsg};
+            let (_, params) = train_params_from_args(args)?;
+            anyhow::ensure!(
+                seat < params.dies,
+                "--seat {seat} out of range for --dies {}",
+                params.dies
+            );
+            // the same die the in-process array seats at shard `seat`:
+            // personality seed cfg.server.seed + seat, batch 32, free
+            // clamps, chains randomized from the seat seed
+            let mut chip = exp::software_chip(cfg.server.seed + seat as u64, cfg.mismatch, 32);
+            chip.set_clamps(&[]);
+            chip.randomize(pchip::learning::service::seat_seed(params.seed, seat));
+            println!("dialing {addr} for training seat {seat}/{}…", params.dies);
+            let ep = SocketEndpoint::<TrainCmd, TrainMsg>::connect(addr.as_str(), seat, sock)?;
+            println!("seated; serving die {seat} until the run finishes");
+            pchip::learning::train_worker_loop(seat, &mut chip, &params, &ep);
+        }
+        other => bail!("unknown --protocol `{other}` (temper|train)"),
+    }
+    println!("worker seat {seat} done (run finished or link closed)");
     Ok(())
 }
 

@@ -42,21 +42,43 @@ impl LaneStats {
 }
 
 /// Delivery counters for one coordinator↔worker link: the down (command)
-/// lane and the up (reply) lane.
+/// lane and the up (reply) lane, plus connection-lifecycle counters for
+/// transports that actually have connections (the socket transport; the
+/// network simulator fills in `reconnects` for scripted
+/// [`crate::transport::NetFault::Disconnect`] outages; in-process
+/// transports leave them zero).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct LinkStats {
     /// Coordinator→worker lane.
     pub down: LaneStats,
     /// Worker→coordinator lane.
     pub up: LaneStats,
+    /// Fresh seatings completed on this link (handshake with a zero
+    /// session nonce).
+    pub connects: u64,
+    /// Re-seatings of an existing session after a connection loss.
+    pub reconnects: u64,
+    /// Connections turned away at the handshake (bad magic, version
+    /// skew, protocol mismatch, unknown seat, stale session).
+    pub rejects: u64,
+    /// Heartbeat frames received on otherwise-idle connections.
+    pub heartbeats: u64,
+    /// Frames whose payload failed to decode (the connection is torn
+    /// down and the link degrades rather than a thread panicking).
+    pub corrupt: u64,
 }
 
 impl LinkStats {
-    /// Fold another link's counters into this one (both lanes,
-    /// saturating — see [`LaneStats::merge`]).
+    /// Fold another link's counters into this one (both lanes plus the
+    /// lifecycle counters, saturating — see [`LaneStats::merge`]).
     pub fn merge(&mut self, other: &LinkStats) {
         self.down.merge(&other.down);
         self.up.merge(&other.up);
+        self.connects = self.connects.saturating_add(other.connects);
+        self.reconnects = self.reconnects.saturating_add(other.reconnects);
+        self.rejects = self.rejects.saturating_add(other.rejects);
+        self.heartbeats = self.heartbeats.saturating_add(other.heartbeats);
+        self.corrupt = self.corrupt.saturating_add(other.corrupt);
     }
 
     /// Total frames the plan discarded on either lane.
@@ -97,7 +119,22 @@ mod tests {
     }
 
     fn arb_link(rng: &mut HostRng) -> LinkStats {
-        LinkStats { down: arb_lane(rng), up: arb_lane(rng) }
+        let mut field = |rng: &mut HostRng| {
+            if rng.below(8) == 0 {
+                u64::MAX - rng.below(4) as u64
+            } else {
+                rng.below(1_000_000) as u64
+            }
+        };
+        LinkStats {
+            down: arb_lane(rng),
+            up: arb_lane(rng),
+            connects: field(rng),
+            reconnects: field(rng),
+            rejects: field(rng),
+            heartbeats: field(rng),
+            corrupt: field(rng),
+        }
     }
 
     fn merged(mut a: LinkStats, b: &LinkStats) -> LinkStats {
@@ -148,6 +185,11 @@ mod tests {
                 (m.up.duplicated, (a.up.duplicated, b.up.duplicated)),
                 (m.up.suppressed, (a.up.suppressed, b.up.suppressed)),
                 (m.up.reordered, (a.up.reordered, b.up.reordered)),
+                (m.connects, (a.connects, b.connects)),
+                (m.reconnects, (a.reconnects, b.reconnects)),
+                (m.rejects, (a.rejects, b.rejects)),
+                (m.heartbeats, (a.heartbeats, b.heartbeats)),
+                (m.corrupt, (a.corrupt, b.corrupt)),
             ] {
                 // never wraps: the merge result dominates both inputs
                 assert!(out >= x.max(y));
@@ -180,6 +222,7 @@ mod tests {
         let l = LinkStats {
             down: LaneStats { dropped: 2, delivered: 7, ..Default::default() },
             up: LaneStats { dropped: 1, delivered: 3, ..Default::default() },
+            ..Default::default()
         };
         assert_eq!(l.dropped(), 3);
         assert_eq!(l.delivered(), 10);

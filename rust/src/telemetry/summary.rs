@@ -274,6 +274,13 @@ impl RunTelemetry {
                 l.down.suppressed + l.up.suppressed,
                 l.down.reordered + l.up.reordered,
             );
+            if l.connects + l.reconnects + l.rejects + l.heartbeats + l.corrupt > 0 {
+                let _ = writeln!(
+                    s,
+                    "{:<16} {} connects, {} reconnects, {} rejects, {} heartbeats, {} corrupt",
+                    "sessions", l.connects, l.reconnects, l.rejects, l.heartbeats, l.corrupt,
+                );
+            }
         }
         s
     }
@@ -303,12 +310,36 @@ fn lane_from_json(v: &Json) -> Result<crate::metrics::LaneStats> {
 
 /// Serialize one [`LinkStats`] (used by the summary and the exporters).
 pub fn link_to_json(l: &LinkStats) -> Json {
-    obj(vec![("down", lane_to_json(&l.down)), ("up", lane_to_json(&l.up))])
+    obj(vec![
+        ("down", lane_to_json(&l.down)),
+        ("up", lane_to_json(&l.up)),
+        ("connects", Json::from(l.connects as f64)),
+        ("reconnects", Json::from(l.reconnects as f64)),
+        ("rejects", Json::from(l.rejects as f64)),
+        ("heartbeats", Json::from(l.heartbeats as f64)),
+        ("corrupt", Json::from(l.corrupt as f64)),
+    ])
 }
 
-/// Parse back what [`link_to_json`] wrote.
+/// Parse back what [`link_to_json`] wrote. The lifecycle counters are
+/// optional on parse so traces recorded before the socket transport
+/// (no `connects`/`reconnects`/... keys) still load.
 pub fn link_from_json(v: &Json) -> Result<LinkStats> {
-    Ok(LinkStats { down: lane_from_json(v.req("down")?)?, up: lane_from_json(v.req("up")?)? })
+    let opt = |key: &str| -> Result<u64> {
+        Ok(match v.get(key) {
+            Some(x) => x.as_f64()? as u64,
+            None => 0,
+        })
+    };
+    Ok(LinkStats {
+        down: lane_from_json(v.req("down")?)?,
+        up: lane_from_json(v.req("up")?)?,
+        connects: opt("connects")?,
+        reconnects: opt("reconnects")?,
+        rejects: opt("rejects")?,
+        heartbeats: opt("heartbeats")?,
+        corrupt: opt("corrupt")?,
+    })
 }
 
 #[cfg(test)]
@@ -335,6 +366,10 @@ mod tests {
             link: Some(LinkStats {
                 down: LaneStats { sent: 5, delivered: 4, dropped: 1, ..Default::default() },
                 up: LaneStats { sent: 3, delivered: 3, ..Default::default() },
+                connects: 2,
+                reconnects: 1,
+                heartbeats: 9,
+                ..Default::default()
             }),
         };
         let back = RunTelemetry::from_json(&t.to_json()).unwrap();

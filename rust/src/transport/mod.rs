@@ -29,8 +29,20 @@
 //!   and injects per-link latency, bounded reordering, duplication and
 //!   drops from a scripted, seedable [`NetPlan`] — the deterministic
 //!   network simulator behind `tests/transport_sim.rs`.
+//!
+//! And one that actually leaves the process:
+//!
+//! * [`SocketTransport`] / [`SocketEndpoint`] — length-prefixed
+//!   [`Wire`] frames over TCP, with the versioned seating handshake,
+//!   heartbeat keepalives, and reconnect-with-backoff state machine of
+//!   [`session`]. Connection loss surfaces to the drivers exactly like
+//!   die loss (barrier timeout → elastic shrink; a later reconnect →
+//!   regrow), so graceful degradation is the single recovery path for
+//!   process death, TCP reset, and partition alike.
 
+pub mod session;
 mod simnet;
+mod socket;
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -40,7 +52,11 @@ use anyhow::{ensure, Result};
 use crate::metrics::LinkStats;
 use crate::util::json::Json;
 
-pub use simnet::{sim_net, NetDir, NetEvent, NetFault, NetPlan, SimEndpoint, SimNet};
+pub use simnet::{
+    reconnect_delay, sim_net, NetDir, NetEvent, NetFault, NetPlan, SimEndpoint, SimNet,
+};
+pub use session::SocketConfig;
+pub use socket::{SocketEndpoint, SocketTransport};
 
 /// Error from [`Transport::send`] / [`Endpoint::send`]: the peer hung
 /// up (its endpoint or its relay was dropped). Protocol drivers treat a
@@ -136,6 +152,19 @@ pub trait Wire: Sized {
     fn decode(text: &str) -> Result<Self> {
         Self::from_wire(&Json::parse(text)?)
     }
+}
+
+/// The protocol tag a command type belongs to, named in the socket
+/// handshake so a coordinator only ever seats workers speaking its own
+/// protocol — a tempering gang can never seat a training worker.
+///
+/// Implemented by the command ("down") types: `ShardCmd` tags
+/// `"temper"`, `TrainCmd` tags `"train"`. The tags live in the same
+/// disjoint namespace the wire discriminators do
+/// (`tests/wire_codec_props.rs` pins cross-protocol rejection).
+pub trait WireProtocol {
+    /// The namespace tag (`"temper"` / `"train"`).
+    const PROTOCOL: &'static str;
 }
 
 // ---- wire helpers shared by the protocol codecs -----------------------

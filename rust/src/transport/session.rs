@@ -1,0 +1,502 @@
+//! The connection-lifecycle layer under the socket transport: framing,
+//! the versioned seating handshake, and reconnect backoff.
+//!
+//! Everything here is pure protocol logic over `Read`/`Write` — no
+//! `TcpStream` in sight — so the framing guards and the backoff
+//! schedule are unit- and property-testable without opening a port
+//! (`tests/wire_codec_props.rs` drives the codec against byte buffers;
+//! [`crate::transport::NetFault::Disconnect`] drives [`Backoff`]
+//! inside the network simulator).
+//!
+//! A connection's life:
+//!
+//! ```text
+//!   dial ──▶ preamble (magic + version) ──▶ HELLO {proto, seat, session}
+//!                   │ bad magic /                 │ wrong protocol tag /
+//!                   │ version skew                │ unknown seat /
+//!                   ▼                             │ stale session nonce
+//!                REJECT ◀─────────────────────────┘
+//!                                                 │ ok
+//!                                                 ▼
+//!                          WELCOME {session} ──▶ DATA / HEARTBEAT frames
+//! ```
+//!
+//! * The 8-byte **preamble** ([`write_preamble`] / [`read_preamble`])
+//!   carries the magic bytes and the protocol version, so a stray
+//!   client speaking the wrong protocol — or an old build — is turned
+//!   away before a single frame is parsed.
+//! * **Frames** ([`Frame`], [`write_frame`] / [`read_frame`]) are
+//!   length-prefixed: `[u32 len][u8 kind][u64 seq][payload]`, all
+//!   big-endian, payload a [`crate::transport::Wire`]-encoded JSON
+//!   text. The length prefix is validated against
+//!   [`SocketConfig::max_frame`] *before* any allocation — a corrupt
+//!   header errors, it never attempts a multi-GB `Vec`.
+//! * The **seating handshake** ([`Hello`] / [`Welcome`] / [`Reject`])
+//!   names the protocol tag ([`crate::transport::WireProtocol`]), the
+//!   seat, and the session nonce, so a tempering coordinator can never
+//!   seat a training worker, and a reconnecting worker either resumes
+//!   its own session or is told to stand down.
+//! * [`Backoff`] is the reconnect schedule — capped exponential with
+//!   seeded jitter, a pure deterministic function of its seed and the
+//!   attempt count.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::rng::HostRng;
+use crate::util::json::{obj, Json};
+
+use super::Wire;
+
+/// Magic bytes opening every socket connection.
+pub const MAGIC: [u8; 6] = *b"PCHIPs";
+
+/// The socket protocol version this build speaks. Bumped on any frame
+/// or handshake change; a version skew is rejected at the preamble.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Default ceiling on a frame's payload size (64 MiB — an order of
+/// magnitude above the largest real gang frame, small enough that a
+/// corrupt length prefix can never balloon into a multi-GB allocation).
+pub const MAX_FRAME: u32 = 64 * 1024 * 1024;
+
+/// Frame header overhead past the length prefix: 1 kind byte + 8 seq
+/// bytes.
+const FRAME_HEADER: u32 = 9;
+
+// ---- preamble ----------------------------------------------------------
+
+/// Write the 8-byte connection preamble (magic + version).
+pub fn write_preamble(w: &mut impl Write) -> std::io::Result<()> {
+    let mut buf = [0u8; 8];
+    buf[..6].copy_from_slice(&MAGIC);
+    buf[6..].copy_from_slice(&PROTOCOL_VERSION.to_be_bytes());
+    w.write_all(&buf)
+}
+
+/// Read and validate the peer's preamble: wrong magic and version skew
+/// are distinct, diagnosable errors.
+pub fn read_preamble(r: &mut impl Read) -> Result<()> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf).context("reading connection preamble")?;
+    ensure!(
+        buf[..6] == MAGIC,
+        "bad magic: expected {:02x?}, got {:02x?} (not a pchip socket peer)",
+        MAGIC,
+        &buf[..6]
+    );
+    let version = u16::from_be_bytes([buf[6], buf[7]]);
+    ensure!(
+        version == PROTOCOL_VERSION,
+        "protocol version skew: peer speaks v{version}, this build speaks v{PROTOCOL_VERSION}"
+    );
+    Ok(())
+}
+
+// ---- frames ------------------------------------------------------------
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Worker → coordinator seating request ([`Hello`] payload).
+    Hello,
+    /// Coordinator → worker seating grant ([`Welcome`] payload).
+    Welcome,
+    /// Coordinator → worker seating refusal ([`Reject`] payload);
+    /// terminal for the connection.
+    Reject,
+    /// A protocol message ([`crate::transport::Wire`]-encoded payload),
+    /// sequence-numbered for resync/dedup across reconnects.
+    Data,
+    /// Keepalive on an idle link; empty payload, never sequenced.
+    Heartbeat,
+}
+
+impl FrameKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            FrameKind::Hello => 1,
+            FrameKind::Welcome => 2,
+            FrameKind::Reject => 3,
+            FrameKind::Data => 4,
+            FrameKind::Heartbeat => 5,
+        }
+    }
+
+    fn from_u8(b: u8) -> Result<Self> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Welcome,
+            3 => FrameKind::Reject,
+            4 => FrameKind::Data,
+            5 => FrameKind::Heartbeat,
+            other => bail!("unknown frame kind byte 0x{other:02x}"),
+        })
+    }
+}
+
+/// One length-prefixed frame: `[u32 len][u8 kind][u64 seq][payload]`,
+/// big-endian, where `len` covers everything after the prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    /// What the payload is.
+    pub kind: FrameKind,
+    /// Lane-monotonic sequence number ([`FrameKind::Data`] only; 0 on
+    /// control frames).
+    pub seq: u64,
+    /// The payload text (JSON for data/handshake frames, empty for
+    /// heartbeats).
+    pub payload: String,
+}
+
+impl Frame {
+    /// A data frame.
+    pub fn data(seq: u64, payload: String) -> Self {
+        Frame { kind: FrameKind::Data, seq, payload }
+    }
+
+    /// A control frame (unsequenced).
+    pub fn control(kind: FrameKind, payload: String) -> Self {
+        Frame { kind, seq: 0, payload }
+    }
+
+    /// Serialize to the on-wire byte layout (for property tests; the
+    /// I/O paths use [`write_frame`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let len = FRAME_HEADER + self.payload.len() as u32;
+        let mut out = Vec::with_capacity(4 + len as usize);
+        out.extend_from_slice(&len.to_be_bytes());
+        out.push(self.kind.to_u8());
+        out.extend_from_slice(&self.seq.to_be_bytes());
+        out.extend_from_slice(self.payload.as_bytes());
+        out
+    }
+}
+
+/// Write one frame.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.to_bytes())
+}
+
+/// Read one frame, validating the length prefix against `max_frame`
+/// **before** allocating — a corrupt header errors instead of
+/// attempting a multi-GB buffer. Truncation anywhere (prefix, header,
+/// payload) is a clean error, never a panic.
+pub fn read_frame(r: &mut impl Read, max_frame: u32) -> Result<Frame> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).context("reading frame length prefix")?;
+    let len = u32::from_be_bytes(len_buf);
+    ensure!(len >= FRAME_HEADER, "corrupt frame header: length {len} < {FRAME_HEADER}");
+    ensure!(
+        len - FRAME_HEADER <= max_frame,
+        "oversized frame: payload {} exceeds the {max_frame}-byte cap (corrupt length prefix?)",
+        len - FRAME_HEADER
+    );
+    let mut head = [0u8; FRAME_HEADER as usize];
+    r.read_exact(&mut head).context("truncated frame header")?;
+    let kind = FrameKind::from_u8(head[0])?;
+    let seq = u64::from_be_bytes(head[1..9].try_into().expect("8 header bytes"));
+    let mut payload = vec![0u8; (len - FRAME_HEADER) as usize];
+    r.read_exact(&mut payload).context("truncated frame payload")?;
+    let payload = String::from_utf8(payload).context("frame payload is not UTF-8")?;
+    Ok(Frame { kind, seq, payload })
+}
+
+// ---- handshake messages ------------------------------------------------
+
+/// The worker's seating request (rides a [`FrameKind::Hello`] frame).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Protocol tag namespace of the gang the worker wants to join
+    /// ([`crate::transport::WireProtocol::PROTOCOL`]): `"temper"` or
+    /// `"train"`. A mismatch is rejected — a tempering coordinator can
+    /// never seat a training worker.
+    pub proto: String,
+    /// The seat (link index) the worker claims.
+    pub seat: usize,
+    /// 0 for a fresh seating; the [`Welcome::session`] nonce when
+    /// reconnecting. A nonce the coordinator doesn't recognize marks a
+    /// stale session and is rejected.
+    pub session: u64,
+}
+
+impl Wire for Hello {
+    fn to_wire(&self) -> Json {
+        obj(vec![
+            ("t", Json::from("hello")),
+            ("proto", Json::from(self.proto.as_str())),
+            ("seat", Json::from(self.seat)),
+            ("session", Json::Num(self.session as f64)),
+        ])
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        ensure!(v.req("t")?.as_str()? == "hello", "not a hello frame");
+        Ok(Hello {
+            proto: v.req("proto")?.as_str()?.to_string(),
+            seat: v.req("seat")?.as_usize()?,
+            session: v.req("session")?.as_usize()? as u64,
+        })
+    }
+}
+
+/// The coordinator's seating grant (rides a [`FrameKind::Welcome`]
+/// frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Welcome {
+    /// The session nonce the worker must echo on any reconnect.
+    pub session: u64,
+}
+
+impl Wire for Welcome {
+    fn to_wire(&self) -> Json {
+        obj(vec![("t", Json::from("welcome")), ("session", Json::Num(self.session as f64))])
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        ensure!(v.req("t")?.as_str()? == "welcome", "not a welcome frame");
+        Ok(Welcome { session: v.req("session")?.as_usize()? as u64 })
+    }
+}
+
+/// The coordinator's seating refusal (rides a [`FrameKind::Reject`]
+/// frame). Terminal: the worker must not retry this session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reject {
+    /// Why the seat was refused, formatted for the worker's log.
+    pub reason: String,
+}
+
+impl Wire for Reject {
+    fn to_wire(&self) -> Json {
+        obj(vec![("t", Json::from("reject")), ("reason", Json::from(self.reason.as_str()))])
+    }
+
+    fn from_wire(v: &Json) -> Result<Self> {
+        ensure!(v.req("t")?.as_str()? == "reject", "not a reject frame");
+        Ok(Reject { reason: v.req("reason")?.as_str()?.to_string() })
+    }
+}
+
+// ---- reconnect backoff -------------------------------------------------
+
+/// Reconnect backoff: capped exponential with seeded jitter. Pure and
+/// deterministic — the delay sequence is a function of `(base, cap,
+/// seed)` alone, so tests (and the network simulator's
+/// [`crate::transport::NetFault::Disconnect`]) can assert the exact
+/// schedule without a socket in sight.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    attempt: u32,
+    rng: HostRng,
+    seed: u64,
+}
+
+impl Backoff {
+    /// A schedule starting at `base`, doubling per attempt, capped at
+    /// `cap`, jittered by `seed`.
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Self {
+        Self { base, cap, attempt: 0, rng: HostRng::new(seed ^ 0xBAC0_FF), seed }
+    }
+
+    /// The next delay: `min(cap, base · 2^attempt)` scaled into
+    /// `[50%, 100%)` by the jitter draw, so a gang of workers dropped
+    /// by one partition doesn't redial in lockstep.
+    pub fn next_delay(&mut self) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << self.attempt.min(16));
+        let ceiling = exp.min(self.cap);
+        self.attempt = self.attempt.saturating_add(1);
+        ceiling.mul_f64(0.5 + 0.5 * self.rng.uniform())
+    }
+
+    /// Consecutive failures so far (reset on a successful connect).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Back to attempt 0 (the peer answered); the jitter stream
+    /// restarts so a reset schedule replays exactly.
+    pub fn reset(&mut self) {
+        self.attempt = 0;
+        self.rng = HostRng::new(self.seed ^ 0xBAC0_FF);
+    }
+
+    /// The first `n` delays of a fresh schedule with these parameters —
+    /// the planning view the network simulator uses to shape a
+    /// [`crate::transport::NetFault::Disconnect`] outage.
+    pub fn schedule(base: Duration, cap: Duration, seed: u64, n: usize) -> Vec<Duration> {
+        let mut b = Backoff::new(base, cap, seed);
+        (0..n).map(|_| b.next_delay()).collect()
+    }
+}
+
+// ---- socket configuration ----------------------------------------------
+
+/// Tunables of the socket transport (one struct for both sides, so a
+/// test can tighten every timer at once).
+#[derive(Debug, Clone)]
+pub struct SocketConfig {
+    /// A side with nothing to say writes a heartbeat after this long,
+    /// keeping the peer's idle detector quiet.
+    pub heartbeat: Duration,
+    /// A side that has heard *nothing* (data or heartbeat) for this
+    /// long declares the connection dead and tears it down — the
+    /// worker's session manager then redials with backoff; the
+    /// coordinator waits for that redial (the gang-level barrier
+    /// timeout remains the authority on giving up on a die).
+    pub idle_timeout: Duration,
+    /// Ceiling on a frame's payload size (see [`MAX_FRAME`]).
+    pub max_frame: u32,
+    /// Bound on each lane's outgoing queue. The queue survives
+    /// disconnects so reconnecting workers find the coordinator's
+    /// probes waiting; past the bound the **oldest** frame is dropped
+    /// (counted in [`crate::metrics::LaneStats::dropped`]) — exactly a
+    /// lossy link, which the drivers already survive.
+    pub queue_cap: usize,
+    /// First reconnect delay.
+    pub backoff_base: Duration,
+    /// Reconnect delay ceiling.
+    pub backoff_cap: Duration,
+    /// Seed of the backoff jitter stream (mixed with the seat).
+    pub backoff_seed: u64,
+    /// Consecutive failed dials after which the worker declares the
+    /// coordinator gone and stands down (its endpoint reports
+    /// [`crate::transport::LinkClosed`]).
+    pub max_reconnects: u32,
+}
+
+impl Default for SocketConfig {
+    fn default() -> Self {
+        Self {
+            heartbeat: Duration::from_millis(500),
+            idle_timeout: Duration::from_secs(5),
+            max_frame: MAX_FRAME,
+            queue_cap: 1024,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            backoff_seed: 0x50C4_E7,
+            max_reconnects: 12,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn preamble_round_trips_and_rejects_skew() {
+        let mut buf = Vec::new();
+        write_preamble(&mut buf).unwrap();
+        assert_eq!(buf.len(), 8);
+        read_preamble(&mut Cursor::new(&buf)).unwrap();
+
+        let mut bad_magic = buf.clone();
+        bad_magic[0] ^= 0xFF;
+        let err = read_preamble(&mut Cursor::new(&bad_magic)).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        let mut skew = buf.clone();
+        skew[7] = skew[7].wrapping_add(1);
+        let err = read_preamble(&mut Cursor::new(&skew)).unwrap_err();
+        assert!(err.to_string().contains("version skew"), "{err}");
+
+        let err = read_preamble(&mut Cursor::new(&buf[..5])).unwrap_err();
+        assert!(format!("{err:#}").contains("preamble"), "{err:#}");
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        for frame in [
+            Frame::data(42, "{\"t\":\"sweep\"}".to_string()),
+            Frame::control(FrameKind::Heartbeat, String::new()),
+            Frame::control(FrameKind::Hello, "{\"t\":\"hello\"}".to_string()),
+        ] {
+            let bytes = frame.to_bytes();
+            let back = read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap();
+            assert_eq!(back, frame);
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_errors_without_allocating() {
+        // length prefix claims ~4 GB: must error on the guard, not OOM
+        let mut bytes = Frame::data(1, "x".into()).to_bytes();
+        bytes[0] = 0xFF;
+        let err = read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("oversized frame"), "{err}");
+        // length below the header floor is equally corrupt
+        let short = 3u32.to_be_bytes().to_vec();
+        let err = read_frame(&mut Cursor::new(&short), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("corrupt frame header"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        let bytes = Frame::data(7, "{\"t\":\"sweep\",\"round\":3}".to_string()).to_bytes();
+        for cut in 0..bytes.len() {
+            let err = read_frame(&mut Cursor::new(&bytes[..cut]), MAX_FRAME).unwrap_err();
+            let text = format!("{err:#}");
+            assert!(
+                text.contains("length prefix")
+                    || text.contains("truncated frame")
+                    || text.contains("corrupt frame header"),
+                "cut at {cut}: {text}"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_kind_byte_is_rejected() {
+        let mut bytes = Frame::data(1, String::new()).to_bytes();
+        bytes[4] = 0x7E;
+        let err = read_frame(&mut Cursor::new(&bytes), MAX_FRAME).unwrap_err();
+        assert!(err.to_string().contains("unknown frame kind"), "{err}");
+    }
+
+    #[test]
+    fn handshake_messages_round_trip() {
+        let hello = Hello { proto: "temper".into(), seat: 3, session: 0xBEEF };
+        assert_eq!(Hello::decode(&hello.encode()).unwrap(), hello);
+        let welcome = Welcome { session: 77 };
+        assert_eq!(Welcome::decode(&welcome.encode()).unwrap(), welcome);
+        let reject = Reject { reason: "protocol tag mismatch".into() };
+        assert_eq!(Reject::decode(&reject.encode()).unwrap(), reject);
+        // cross-kind decodes fail instead of aliasing
+        assert!(Welcome::decode(&hello.encode()).is_err());
+        assert!(Hello::decode(&reject.encode()).is_err());
+    }
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_monotone_in_expectation() {
+        let base = Duration::from_millis(50);
+        let cap = Duration::from_secs(2);
+        let a = Backoff::schedule(base, cap, 9, 8);
+        let b = Backoff::schedule(base, cap, 9, 8);
+        assert_eq!(a, b, "same seed, same schedule");
+        let c = Backoff::schedule(base, cap, 10, 8);
+        assert_ne!(a, c, "different seed, different jitter");
+        for (k, d) in a.iter().enumerate() {
+            let ceiling = base.saturating_mul(1 << k.min(16)).min(cap);
+            assert!(*d <= ceiling, "attempt {k}: {d:?} > {ceiling:?}");
+            assert!(*d >= ceiling / 2, "attempt {k}: {d:?} < half of {ceiling:?}");
+        }
+        assert!(a[7] <= cap, "schedule respects the cap");
+    }
+
+    #[test]
+    fn backoff_reset_replays_the_schedule() {
+        let mut b = Backoff::new(Duration::from_millis(10), Duration::from_millis(500), 4);
+        let first: Vec<_> = (0..4).map(|_| b.next_delay()).collect();
+        assert_eq!(b.attempts(), 4);
+        b.reset();
+        assert_eq!(b.attempts(), 0);
+        let again: Vec<_> = (0..4).map(|_| b.next_delay()).collect();
+        assert_eq!(first, again);
+    }
+}

@@ -24,6 +24,14 @@
 //!   [`crate::metrics::LaneStats::suppressed`]).
 //! * [`NetFault::Reorder`] — bounded reordering: the frame is held and
 //!   delivered *behind* the lane's next frame (a pairwise swap).
+//! * [`NetFault::Disconnect`] — a connection outage with reconnect:
+//!   frames in `[seq, until)` are lost like a [`NetFault::Drop`]
+//!   window, and the *resuming* frame is additionally delayed by the
+//!   deterministic redial-backoff schedule
+//!   ([`crate::transport::session::Backoff`]) a real socket endpoint
+//!   would have slept through — so reconnect-backoff scheduling is
+//!   testable without opening a socket. The link's
+//!   [`LinkStats::reconnects`] counter ticks when the lane resumes.
 //!
 //! Plans serialize to JSON ([`NetPlan::to_json`] /
 //! [`NetPlan::from_json`]) so a failing simulator case can be uploaded
@@ -43,7 +51,24 @@ use crate::metrics::{LaneStats, LinkStats};
 use crate::rng::HostRng;
 use crate::util::json::{obj, Json};
 
-use super::{Endpoint, LinkClosed, RecvError, Transport, Wire};
+use super::{session, Endpoint, LinkClosed, RecvError, Transport, Wire};
+
+/// The deterministic redial latency the simulator charges the resuming
+/// frame of a [`NetFault::Disconnect`]: the summed first three delays
+/// of the same capped-exponential-with-jitter schedule a real socket
+/// endpoint sleeps through ([`session::Backoff`]), seeded by the lane
+/// and the outage start — distinct outages jitter differently, but
+/// every replay of a plan sleeps identically.
+pub fn reconnect_delay(link: usize, dir: NetDir, from: u64) -> Duration {
+    let dir_bit = match dir {
+        NetDir::Down => 0u64,
+        NetDir::Up => 1u64,
+    };
+    let seed = ((link as u64) << 33) | (from << 1) | dir_bit;
+    session::Backoff::schedule(Duration::from_millis(2), Duration::from_millis(16), seed, 3)
+        .into_iter()
+        .sum()
+}
 
 /// Which direction of a link a [`NetEvent`] targets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -74,6 +99,17 @@ pub enum NetFault {
     },
     /// The frame is held and delivered behind the lane's next frame.
     Reorder,
+    /// A connection outage with reconnect: frames in `[seq, until)` are
+    /// lost, and the resuming frame (`until`) pays the deterministic
+    /// redial-backoff latency (see [`reconnect_delay`]) before
+    /// delivery. Distinct from [`NetFault::Drop`]-until-timeout: the
+    /// lane comes back *with* the backoff schedule, and the link's
+    /// [`LinkStats::reconnects`] counter records the resume.
+    Disconnect {
+        /// First sequence number delivered again (after the backoff
+        /// delay).
+        until: u64,
+    },
 }
 
 /// One scripted impairment: lane `(link, dir)` suffers `kind` at frame
@@ -141,6 +177,13 @@ impl NetPlan {
         Self::new(vec![NetEvent { link, dir, seq, kind: NetFault::Reorder }])
     }
 
+    /// Disconnect lane `(link, dir)` for frames `[from, until)`: the
+    /// outage loses them, and frame `until` resumes the lane after the
+    /// deterministic reconnect-backoff delay.
+    pub fn disconnect(link: usize, dir: NetDir, from: u64, until: u64) -> Self {
+        Self::new(vec![NetEvent { link, dir, seq: from, kind: NetFault::Disconnect { until } }])
+    }
+
     /// The impairment governing frame `seq` of lane `(link, dir)`, if
     /// any.
     pub fn event_at(&self, link: usize, dir: NetDir, seq: u64) -> Option<NetFault> {
@@ -153,10 +196,23 @@ impl NetPlan {
                     let dropped = seq >= e.seq && until.is_none_or(|u| seq < u);
                     dropped.then_some(e.kind)
                 }
+                NetFault::Disconnect { until } => {
+                    (seq >= e.seq && seq < until).then_some(e.kind)
+                }
                 NetFault::Dup | NetFault::Delay { .. } | NetFault::Reorder => {
                     (seq == e.seq).then_some(e.kind)
                 }
             }
+        })
+    }
+
+    /// The [`NetFault::Disconnect`] whose outage ends exactly at `seq`
+    /// (i.e. `seq` is the resuming frame), if any.
+    pub fn reconnect_at(&self, link: usize, dir: NetDir, seq: u64) -> Option<NetEvent> {
+        self.events.iter().copied().find(|e| {
+            e.link == link
+                && e.dir == dir
+                && matches!(e.kind, NetFault::Disconnect { until } if until == seq)
         })
     }
 
@@ -208,6 +264,7 @@ impl NetPlan {
                         NetFault::Dup => ("dup", Json::Null),
                         NetFault::Delay { ms } => ("delay", Json::from(ms as usize)),
                         NetFault::Reorder => ("reorder", Json::Null),
+                        NetFault::Disconnect { until: u } => ("disconnect", Json::from(u as usize)),
                     };
                     obj(vec![
                         ("link", Json::from(e.link)),
@@ -246,6 +303,7 @@ impl NetPlan {
                 "dup" => NetFault::Dup,
                 "delay" => NetFault::Delay { ms: arg.as_usize()? as u64 },
                 "reorder" => NetFault::Reorder,
+                "disconnect" => NetFault::Disconnect { until: arg.as_usize()? as u64 },
                 other => bail!("unknown net fault kind `{other}`"),
             };
             events.push(NetEvent { link, dir, seq, kind });
@@ -287,29 +345,38 @@ fn lane_send(
     stats: &Mutex<LinkStats>,
     text: String,
 ) -> Result<(), LinkClosed> {
-    let mut st = state.lock().unwrap();
+    let mut st = state.lock().unwrap_or_else(|e| e.into_inner());
     let seq = st.next_seq;
     st.next_seq += 1;
     let sent_ns = if crate::telemetry::enabled() { crate::telemetry::now_ns() } else { 0 };
     let mut frame = SimFrame { seq, text, delay_ms: 0, sent_ns };
     let ev = plan.event_at(link, dir, seq);
+    // A frame that ends a Disconnect outage pays the redial-backoff
+    // latency before anything else the plan does to it.
+    let resume = plan.reconnect_at(link, dir, seq);
+    if let Some(e) = resume {
+        frame.delay_ms += reconnect_delay(link, dir, e.seq).as_millis() as u64;
+    }
     let mut out: Vec<SimFrame> = Vec::with_capacity(2);
     {
-        let mut s = stats.lock().unwrap();
+        let mut s = stats.lock().unwrap_or_else(|e| e.into_inner());
+        if resume.is_some() {
+            s.reconnects += 1;
+        }
         let lane: &mut LaneStats = match dir {
             NetDir::Down => &mut s.down,
             NetDir::Up => &mut s.up,
         };
         lane.sent += 1;
         match ev {
-            Some(NetFault::Drop { .. }) => lane.dropped += 1,
+            Some(NetFault::Drop { .. }) | Some(NetFault::Disconnect { .. }) => lane.dropped += 1,
             Some(NetFault::Dup) => {
                 lane.duplicated += 1;
                 out.push(frame.clone());
                 out.push(frame);
             }
             Some(NetFault::Delay { ms }) => {
-                frame.delay_ms = ms;
+                frame.delay_ms += ms;
                 out.push(frame);
             }
             Some(NetFault::Reorder) => {
@@ -358,25 +425,35 @@ fn relay<T: Wire>(
             std::thread::sleep(Duration::from_millis(frame.delay_ms));
         }
         if !seen.insert(frame.seq) {
-            let mut s = stats[link].lock().unwrap();
+            let mut s = stats[link].lock().unwrap_or_else(|e| e.into_inner());
             match dir {
                 NetDir::Down => s.down.suppressed += 1,
                 NetDir::Up => s.up.suppressed += 1,
             }
             continue;
         }
-        // the frame was serialized by this process's own Wire impl — a
-        // decode failure is a codec bug, and the loudest thing a relay
-        // can do about it is die (the run then fails its barrier
-        // timeout, with this panic on stderr naming the frame)
-        let msg = {
+        // a decode failure (a codec bug, or scripted corruption) must
+        // degrade the *link*, not panic the relay: the relay counts the
+        // frame, logs it, and retires — to the protocols the lane goes
+        // dark, and the run takes the barrier-timeout → elastic-shrink
+        // path exactly as it would for a killed die
+        let decoded = {
             let _s = crate::span!("frame_decode");
-            T::decode(&frame.text).unwrap_or_else(|e| {
-                panic!(
-                    "SimNet relay {link}/{dir:?}: wire codec failed on frame {}: {e:#}",
+            T::decode(&frame.text)
+        };
+        let msg = match decoded {
+            Ok(m) => m,
+            Err(e) => {
+                {
+                    let mut s = stats[link].lock().unwrap_or_else(|e| e.into_inner());
+                    s.corrupt += 1;
+                }
+                crate::log_warn!(
+                    "SimNet relay {link}/{dir:?}: wire codec failed on frame {}, degrading link: {e:#}",
                     frame.seq
-                )
-            })
+                );
+                return;
+            }
         };
         if crate::telemetry::enabled() && frame.sent_ns > 0 {
             // the frame's whole in-flight window (send → decoded),
@@ -390,7 +467,7 @@ fn relay<T: Wire>(
             crate::telemetry::registry::record_ns(id, dur);
         }
         {
-            let mut s = stats[link].lock().unwrap();
+            let mut s = stats[link].lock().unwrap_or_else(|e| e.into_inner());
             match dir {
                 NetDir::Down => s.down.delivered += 1,
                 NetDir::Up => s.up.delivered += 1,
@@ -442,7 +519,7 @@ impl<C: Wire, M> Transport<C, M> for SimNet<C, M> {
     }
 
     fn link_stats(&self) -> Vec<LinkStats> {
-        self.stats.iter().map(|m| *m.lock().unwrap()).collect()
+        self.stats.iter().map(|m| *m.lock().unwrap_or_else(|e| e.into_inner())).collect()
     }
 }
 
@@ -451,7 +528,7 @@ impl<C, M> Drop for SimNet<C, M> {
         // release any frame still parked in a reorder slot so the lane
         // drains before the relays see the hangup
         for lane in &self.down {
-            if let Some(f) = lane.state.lock().unwrap().held.take() {
+            if let Some(f) = lane.state.lock().unwrap_or_else(|e| e.into_inner()).held.take() {
                 let _ = lane.raw.send(f);
             }
         }
@@ -493,7 +570,7 @@ impl<C, M: Wire> Endpoint<C, M> for SimEndpoint<C, M> {
 
 impl<C, M> Drop for SimEndpoint<C, M> {
     fn drop(&mut self) {
-        if let Some(f) = self.state.lock().unwrap().held.take() {
+        if let Some(f) = self.state.lock().unwrap_or_else(|e| e.into_inner()).held.take() {
             let _ = self.up_raw.send(f);
         }
     }
@@ -654,6 +731,7 @@ mod tests {
             NetEvent { link: 2, dir: NetDir::Down, seq: 0, kind: NetFault::Dup },
             NetEvent { link: 0, dir: NetDir::Up, seq: 7, kind: NetFault::Delay { ms: 5 } },
             NetEvent { link: 3, dir: NetDir::Down, seq: 1, kind: NetFault::Reorder },
+            NetEvent { link: 1, dir: NetDir::Down, seq: 6, kind: NetFault::Disconnect { until: 9 } },
         ]);
         let text = plan.to_json().to_string();
         let back = NetPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -679,6 +757,68 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn disconnect_loses_the_outage_then_resumes_with_backoff_delay() {
+        let (net, eps) = sim_net::<Ping, Ping>(1, &NetPlan::disconnect(0, NetDir::Down, 1, 3));
+        let t0 = Instant::now();
+        for i in 0..4u64 {
+            net.send(0, Ping(i)).unwrap();
+        }
+        let got: Vec<u64> = (0..2).map(|_| eps[0].recv().unwrap().0).collect();
+        assert_eq!(got, vec![0, 3], "frames 1 and 2 are lost to the outage");
+        // the resuming frame slept (at least) the whole-ms floor of the
+        // deterministic backoff schedule before delivery
+        let floor = Duration::from_millis(reconnect_delay(0, NetDir::Down, 1).as_millis() as u64);
+        assert!(floor >= Duration::from_millis(5), "schedule is non-trivial: {floor:?}");
+        assert!(t0.elapsed() >= floor, "resume paid the backoff delay");
+        let s = net.link_stats()[0];
+        assert_eq!(s.down.dropped, 2);
+        assert_eq!(s.down.delivered, 2);
+        assert_eq!(s.reconnects, 1, "the resume is counted as a reconnect");
+    }
+
+    #[test]
+    fn reconnect_delay_is_deterministic_and_lane_distinct() {
+        let a = reconnect_delay(0, NetDir::Down, 5);
+        assert_eq!(a, reconnect_delay(0, NetDir::Down, 5));
+        assert!(a > Duration::ZERO);
+        assert_ne!(a, reconnect_delay(1, NetDir::Down, 5), "different links jitter differently");
+        assert_ne!(a, reconnect_delay(0, NetDir::Up, 5), "directions jitter differently");
+    }
+
+    /// A wire type with scripted decode failures, for the relay
+    /// degrade-not-panic contract.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Fussy(u64);
+
+    impl Wire for Fussy {
+        fn to_wire(&self) -> Json {
+            obj(vec![("fussy", Json::from(self.0 as usize))])
+        }
+
+        fn from_wire(v: &Json) -> Result<Self> {
+            let x = v.req("fussy")?.as_usize()? as u64;
+            if x >= 100 {
+                bail!("scripted corruption at {x}");
+            }
+            Ok(Fussy(x))
+        }
+    }
+
+    #[test]
+    fn corrupt_frame_degrades_the_link_instead_of_panicking() {
+        let (net, eps) = sim_net::<Fussy, Fussy>(1, &NetPlan::none());
+        net.send(0, Fussy(1)).unwrap();
+        assert_eq!(eps[0].recv().unwrap().0, 1);
+        // this frame decodes Err at the relay: the relay must retire,
+        // not panic the process
+        net.send(0, Fussy(100)).unwrap();
+        assert!(eps[0].recv().is_err(), "the lane goes dark, like a dead die");
+        let s = net.link_stats()[0];
+        assert_eq!(s.corrupt, 1, "the corrupt frame is counted");
+        assert_eq!(s.down.delivered, 1);
     }
 
     #[test]

@@ -1,0 +1,1208 @@
+//! TCP socket transport: [`Wire`] frames over real sockets.
+//!
+//! The first transport that actually leaves the process. The
+//! coordinator side ([`SocketTransport::listen`]) binds a listener and
+//! seats workers through the versioned handshake of
+//! [`super::session`]; the worker side ([`SocketEndpoint::connect`])
+//! dials in, seats itself, and thereafter maintains the connection —
+//! heartbeating when idle, redialing with capped, jittered exponential
+//! backoff when the connection dies, presenting its session nonce so
+//! the coordinator can tell a resuming worker from a stale one.
+//!
+//! The robustness contract mirrors the rest of the gang stack: the
+//! socket layer never *hides* a failure and never *adds* a recovery
+//! path. A lost connection, a corrupt frame, a worker that redials too
+//! late — all of them surface to the drivers exactly like PR 6/8 die
+//! loss (silence → barrier timeout → elastic shrink; a successful
+//! re-seat → probe answered → regrow), so graceful degradation is the
+//! single recovery path for process death, TCP reset, and partition
+//! alike.
+//!
+//! Delivery mechanics:
+//!
+//! * Outgoing frames queue in a bounded per-link lane that *survives*
+//!   disconnects, so a reconnecting worker finds the coordinator's
+//!   elastic probes waiting for it. Past the bound the oldest frame is
+//!   dropped and counted — the lossy-link behavior the drivers already
+//!   tolerate.
+//! * Every data frame carries a lane-monotonic sequence number; the
+//!   receiver keeps a watermark per session, suppressing anything at or
+//!   below it, so a confused peer can never double-deliver. Fresh
+//!   sessions reset the watermark; resumed sessions keep it.
+//! * A side that has heard nothing for
+//!   [`session::SocketConfig::idle_timeout`] declares the connection
+//!   dead (healthy peers heartbeat far more often) and tears it down;
+//!   the worker's session manager then redials.
+//!
+//! Everything is instrumented: connect/reconnect/reject/heartbeat/
+//! corrupt-frame counts land in [`LinkStats`], and the
+//! `socket_connect` / `socket_handshake` telemetry spans plus
+//! `socket_*` counters feed the PR 9 trace exporters.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::LinkStats;
+use crate::sampler::workers::spawn_named;
+
+use super::session::{
+    self, read_frame, read_preamble, write_frame, write_preamble, Frame, FrameKind, Hello, Reject,
+    SocketConfig, Welcome,
+};
+use super::{Endpoint, LinkClosed, RecvError, Transport, Wire, WireProtocol};
+
+/// Lock a mutex, riding through poisoning: a panicking peer thread must
+/// degrade its link, never wedge the whole transport.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Whether a frame-read error is connection loss (any I/O error in the
+/// chain: reset, EOF, idle timeout) as opposed to frame corruption
+/// (guard violations, unknown kinds, bad UTF-8 — no I/O error anywhere).
+fn is_io_loss(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<std::io::Error>().is_some())
+}
+
+/// Session nonces handed out by a coordinator: unique per process
+/// lifetime, never zero (zero marks a fresh seating in [`Hello`]), and
+/// comfortably below 2⁵³ so they survive the JSON number round trip.
+fn fresh_nonce(seat: usize) -> u64 {
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    let c = NONCE.fetch_add(1, Ordering::Relaxed) + 1;
+    ((c & 0xFF_FFFF) << 16) | (seat as u64 & 0xFFFF)
+}
+
+// ---- outgoing lane -----------------------------------------------------
+
+/// What a writer gets back from [`OutLane::pop_wait`].
+enum Pop {
+    /// A frame to put on the wire.
+    Frame(Frame),
+    /// Nothing to say for a whole heartbeat interval — send a keepalive.
+    Idle,
+    /// The lane closed or a newer connection took over — stop writing.
+    Retire,
+}
+
+struct LaneInner {
+    frames: VecDeque<Frame>,
+    /// Last sequence number assigned (sequences start at 1 and persist
+    /// across reconnects within a session).
+    last_seq: u64,
+    /// Bumped once per accepted connection; a writer born under an
+    /// older epoch retires instead of stealing frames.
+    epoch: u64,
+    closed: bool,
+    /// Frames dropped: queue overflow (drop-oldest) + write failures.
+    dropped: u64,
+}
+
+/// The bounded outgoing frame queue for one link. It outlives
+/// connections — frames queued while the link is down are flushed to
+/// whichever connection next seats the peer.
+struct OutLane {
+    inner: Mutex<LaneInner>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl OutLane {
+    fn new(cap: usize) -> Self {
+        Self {
+            inner: Mutex::new(LaneInner {
+                frames: VecDeque::new(),
+                last_seq: 0,
+                epoch: 0,
+                closed: false,
+                dropped: 0,
+            }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Queue a data frame, assigning the next sequence number. Past the
+    /// capacity bound the oldest queued frame is dropped (counted).
+    fn push(&self, payload: String) -> Result<u64, LinkClosed> {
+        let mut g = lock(&self.inner);
+        if g.closed {
+            return Err(LinkClosed);
+        }
+        g.last_seq += 1;
+        let seq = g.last_seq;
+        g.frames.push_back(Frame::data(seq, payload));
+        if g.frames.len() > self.cap {
+            g.frames.pop_front();
+            g.dropped += 1;
+        }
+        self.cv.notify_all();
+        Ok(seq)
+    }
+
+    /// Block up to `idle` for a frame. Returns [`Pop::Idle`] when the
+    /// interval elapses quietly (time for a heartbeat), [`Pop::Retire`]
+    /// when the lane closed or `epoch` is no longer current.
+    fn pop_wait(&self, epoch: u64, idle: Duration) -> Pop {
+        let mut g = lock(&self.inner);
+        let deadline = Instant::now() + idle;
+        loop {
+            if g.closed || g.epoch != epoch {
+                return Pop::Retire;
+            }
+            if let Some(f) = g.frames.pop_front() {
+                return Pop::Frame(f);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::Idle;
+            }
+            g = self
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
+        }
+    }
+
+    /// Start a new connection epoch (retiring any older writer) and
+    /// return it.
+    fn bump_epoch(&self) -> u64 {
+        let mut g = lock(&self.inner);
+        g.epoch += 1;
+        self.cv.notify_all();
+        g.epoch
+    }
+
+    /// Retire `epoch` if it is still current (a reader/writer tearing
+    /// down its own connection must not kill a newer one).
+    fn retire(&self, epoch: u64) {
+        let mut g = lock(&self.inner);
+        if g.epoch == epoch {
+            g.epoch += 1;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Current connection epoch.
+    fn epoch(&self) -> u64 {
+        lock(&self.inner).epoch
+    }
+
+    /// Close permanently (transport/endpoint drop): writers retire,
+    /// pushes fail with [`LinkClosed`].
+    fn close(&self) {
+        let mut g = lock(&self.inner);
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Count a frame lost on a failed write.
+    fn count_write_drop(&self) {
+        lock(&self.inner).dropped += 1;
+    }
+
+    /// Total frames this lane dropped (overflow + write failures).
+    fn dropped(&self) -> u64 {
+        lock(&self.inner).dropped
+    }
+}
+
+/// The shared writer loop: drain `lane` onto `stream`, heartbeating
+/// through idle intervals, until the lane closes, a newer connection
+/// takes over, or a write fails (which severs the connection so the
+/// reader notices immediately). `on_data(ok)` reports each data-frame
+/// write for stats.
+fn pump_frames(
+    lane: &OutLane,
+    stream: &TcpStream,
+    epoch: u64,
+    heartbeat: Duration,
+    mut on_data: impl FnMut(bool),
+) {
+    let mut w = stream;
+    loop {
+        match lane.pop_wait(epoch, heartbeat) {
+            Pop::Retire => return,
+            Pop::Idle => {
+                let hb = Frame::control(FrameKind::Heartbeat, String::new());
+                if write_frame(&mut w, &hb).is_err() {
+                    lane.retire(epoch);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+            Pop::Frame(f) => {
+                let ok = write_frame(&mut w, &f).is_ok();
+                on_data(ok);
+                if !ok {
+                    lane.count_write_drop();
+                    lane.retire(epoch);
+                    let _ = stream.shutdown(Shutdown::Both);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+// ---- coordinator side --------------------------------------------------
+
+/// Per-seat coordinator state guarded by one mutex.
+struct SeatState {
+    /// The session nonce of the worker seated here (0 = never seated).
+    session: u64,
+    /// Highest up-lane sequence delivered this session (dedup
+    /// watermark; reset on a fresh seating, kept on a reconnect).
+    up_watermark: u64,
+    stats: LinkStats,
+}
+
+/// One coordinator↔worker link: outgoing lane, session state, and the
+/// live connection (kept so a newer seating — or transport drop — can
+/// sever the old socket deterministically).
+struct Seat {
+    lane: OutLane,
+    state: Mutex<SeatState>,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl Seat {
+    fn new(cap: usize) -> Self {
+        Seat {
+            lane: OutLane::new(cap),
+            state: Mutex::new(SeatState {
+                session: 0,
+                up_watermark: 0,
+                stats: LinkStats::default(),
+            }),
+            conn: Mutex::new(None),
+        }
+    }
+}
+
+/// Context shared by the acceptor and every per-connection thread.
+struct ConnCtx<M> {
+    proto: &'static str,
+    seats: Arc<Vec<Arc<Seat>>>,
+    agg_tx: mpsc::Sender<M>,
+    cfg: SocketConfig,
+    shutdown: Arc<AtomicBool>,
+    /// Rejections before a valid seat was named (bad magic, version
+    /// skew, out-of-range seat) — reported on link 0.
+    orphan_rejects: Arc<AtomicU64>,
+}
+
+impl<M> Clone for ConnCtx<M> {
+    fn clone(&self) -> Self {
+        ConnCtx {
+            proto: self.proto,
+            seats: self.seats.clone(),
+            agg_tx: self.agg_tx.clone(),
+            cfg: self.cfg.clone(),
+            shutdown: self.shutdown.clone(),
+            orphan_rejects: self.orphan_rejects.clone(),
+        }
+    }
+}
+
+/// The coordinator's side of the TCP transport: a listener seating
+/// workers into `links` seats through the versioned handshake, plus
+/// one persistent outgoing lane and session state per seat.
+///
+/// Implements [`Transport`] with the exact semantics the drivers
+/// already rely on: `send` is fire-and-forget (frames queue whether or
+/// not the worker is currently connected), and worker loss is
+/// discovered through [`Transport::recv_deadline`] timing out — the
+/// barrier timeout — never through a send error.
+pub struct SocketTransport<C, M> {
+    addr: SocketAddr,
+    seats: Arc<Vec<Arc<Seat>>>,
+    agg_rx: mpsc::Receiver<M>,
+    shutdown: Arc<AtomicBool>,
+    orphan_rejects: Arc<AtomicU64>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    _cmd: PhantomData<C>,
+}
+
+impl<C, M> SocketTransport<C, M>
+where
+    C: Wire + WireProtocol,
+    M: Wire + Send + 'static,
+{
+    /// Bind `addr` (use port 0 for an ephemeral port — see
+    /// [`SocketTransport::local_addr`]) and start seating workers into
+    /// `links` seats. Returns as soon as the listener is up; workers
+    /// seat themselves asynchronously, and the drivers' own handshake
+    /// ("wait for `Ready` from every seat") supplies the
+    /// all-workers-present barrier.
+    pub fn listen(addr: impl ToSocketAddrs, links: usize, cfg: SocketConfig) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("binding socket-transport listener")?;
+        let addr = listener.local_addr().context("resolving listener address")?;
+        let seats: Arc<Vec<Arc<Seat>>> =
+            Arc::new((0..links).map(|_| Arc::new(Seat::new(cfg.queue_cap))).collect());
+        let (agg_tx, agg_rx) = mpsc::channel();
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let orphan_rejects = Arc::new(AtomicU64::new(0));
+        let ctx = ConnCtx {
+            proto: C::PROTOCOL,
+            seats: seats.clone(),
+            agg_tx,
+            cfg,
+            shutdown: shutdown.clone(),
+            orphan_rejects: orphan_rejects.clone(),
+        };
+        let acceptor = spawn_named("sock-accept", move || accept_loop(listener, ctx))
+            .context("spawning socket acceptor thread")?;
+        crate::log_info!(
+            "socket transport listening on {addr} ({links} seats, protocol {})",
+            C::PROTOCOL
+        );
+        Ok(Self {
+            addr,
+            seats,
+            agg_rx,
+            shutdown,
+            orphan_rejects,
+            acceptor: Some(acceptor),
+            _cmd: PhantomData,
+        })
+    }
+
+    /// The bound listener address (the real port when bound with
+    /// port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl<C, M> Transport<C, M> for SocketTransport<C, M>
+where
+    C: Wire + WireProtocol,
+    M: Wire + Send + 'static,
+{
+    fn links(&self) -> usize {
+        self.seats.len()
+    }
+
+    fn send(&self, link: usize, cmd: C) -> Result<(), LinkClosed> {
+        let text = {
+            let _sp = crate::span!("frame_encode");
+            cmd.encode()
+        };
+        let seat = &self.seats[link];
+        lock(&seat.state).stats.down.sent += 1;
+        seat.lane.push(text).map(|_| ())
+    }
+
+    fn recv_deadline(&self, deadline: Instant) -> Result<M, RecvError> {
+        match self.agg_rx.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+            Ok(m) => Ok(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(RecvError::Timeout),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(RecvError::Closed),
+        }
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        let mut out: Vec<LinkStats> = self
+            .seats
+            .iter()
+            .map(|seat| {
+                let mut s = lock(&seat.state).stats;
+                s.down.dropped = s.down.dropped.saturating_add(seat.lane.dropped());
+                s
+            })
+            .collect();
+        if let Some(first) = out.first_mut() {
+            first.rejects =
+                first.rejects.saturating_add(self.orphan_rejects.load(Ordering::Relaxed));
+        }
+        out
+    }
+}
+
+impl<C, M> Drop for SocketTransport<C, M> {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for seat in self.seats.iter() {
+            seat.lane.close();
+            if let Some(s) = lock(&seat.conn).take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        // Wake the acceptor out of `accept()` with a throwaway dial.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(200));
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop<M: Wire + Send + 'static>(listener: TcpListener, ctx: ConnCtx<M>) {
+    let mut n = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                n += 1;
+                let c = ctx.clone();
+                if spawn_named(format!("sock-conn-{n}"), move || serve_conn(stream, c)).is_err() {
+                    crate::log_warn!("socket transport: failed to spawn connection thread");
+                }
+            }
+            Err(e) => {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                crate::log_warn!("socket transport: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Send a best-effort REJECT and close (the peer may already be gone —
+/// errors here are irrelevant).
+fn send_reject(stream: &TcpStream, reason: &str) {
+    let frame = Frame::control(FrameKind::Reject, Reject { reason: reason.to_string() }.encode());
+    let _ = write_frame(&mut { stream }, &frame);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Handle one accepted connection: handshake, seat, then run the
+/// reader until the connection dies or a newer one takes the seat.
+fn serve_conn<M: Wire + Send + 'static>(stream: TcpStream, ctx: ConnCtx<M>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(ctx.cfg.idle_timeout));
+    let mut r = &stream;
+
+    // ---- handshake ----
+    let (seat_idx, epoch) = {
+        let _sp = crate::span!("socket_handshake");
+        if let Err(e) = read_preamble(&mut r) {
+            ctx.orphan_rejects.fetch_add(1, Ordering::Relaxed);
+            crate::counter_add!("socket_rejects", 1);
+            crate::log_warn!("socket transport: rejected connection: {e:#}");
+            send_reject(&stream, &format!("{e:#}"));
+            return;
+        }
+        let hello = match read_frame(&mut r, ctx.cfg.max_frame) {
+            Ok(f) if f.kind == FrameKind::Hello => match Hello::decode(&f.payload) {
+                Ok(h) => h,
+                Err(e) => {
+                    ctx.orphan_rejects.fetch_add(1, Ordering::Relaxed);
+                    crate::counter_add!("socket_rejects", 1);
+                    send_reject(&stream, &format!("malformed hello: {e:#}"));
+                    return;
+                }
+            },
+            Ok(f) => {
+                ctx.orphan_rejects.fetch_add(1, Ordering::Relaxed);
+                crate::counter_add!("socket_rejects", 1);
+                send_reject(&stream, &format!("expected HELLO, got {:?}", f.kind));
+                return;
+            }
+            Err(e) => {
+                if !is_io_loss(&e) {
+                    ctx.orphan_rejects.fetch_add(1, Ordering::Relaxed);
+                    crate::counter_add!("socket_rejects", 1);
+                    send_reject(&stream, &format!("{e:#}"));
+                }
+                return;
+            }
+        };
+        if hello.seat >= ctx.seats.len() {
+            ctx.orphan_rejects.fetch_add(1, Ordering::Relaxed);
+            crate::counter_add!("socket_rejects", 1);
+            send_reject(
+                &stream,
+                &format!("unknown seat {} (gang has {})", hello.seat, ctx.seats.len()),
+            );
+            return;
+        }
+        let seat = &ctx.seats[hello.seat];
+        if hello.proto != ctx.proto {
+            lock(&seat.state).stats.rejects += 1;
+            crate::counter_add!("socket_rejects", 1);
+            crate::log_warn!(
+                "socket transport: seat {} rejected: gang speaks `{}`, worker speaks `{}`",
+                hello.seat,
+                ctx.proto,
+                hello.proto
+            );
+            send_reject(
+                &stream,
+                &format!(
+                    "protocol mismatch: gang speaks `{}`, you speak `{}`",
+                    ctx.proto, hello.proto
+                ),
+            );
+            return;
+        }
+        let session = {
+            let mut st = lock(&seat.state);
+            if hello.session == 0 {
+                // Fresh seating: new nonce, fresh dedup watermark.
+                st.session = fresh_nonce(hello.seat);
+                st.up_watermark = 0;
+                st.stats.connects += 1;
+                crate::counter_add!("socket_connects", 1);
+                st.session
+            } else if hello.session == st.session {
+                // The same worker resuming after a connection loss.
+                st.stats.reconnects += 1;
+                crate::counter_add!("socket_reconnects", 1);
+                st.session
+            } else {
+                st.stats.rejects += 1;
+                crate::counter_add!("socket_rejects", 1);
+                drop(st);
+                send_reject(&stream, "stale session nonce (the seat moved on)");
+                return;
+            }
+        };
+        let welcome = Frame::control(FrameKind::Welcome, Welcome { session }.encode());
+        if write_frame(&mut { &stream }, &welcome).is_err() {
+            return;
+        }
+        // Newest connection wins the seat: sever any previous socket
+        // and retire its reader/writer via the epoch bump.
+        let epoch = seat.lane.bump_epoch();
+        if let Some(old) = lock(&seat.conn).replace(match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => {
+                return;
+            }
+        }) {
+            let _ = old.shutdown(Shutdown::Both);
+        }
+        (hello.seat, epoch)
+    };
+
+    // ---- writer ----
+    let seat = ctx.seats[seat_idx].clone();
+    let wseat = seat.clone();
+    let wstream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let heartbeat = ctx.cfg.heartbeat;
+    if spawn_named(format!("sock-w{seat_idx}"), move || {
+        pump_frames(&wseat.lane, &wstream, epoch, heartbeat, |ok| {
+            let mut st = lock(&wseat.state);
+            if ok {
+                st.stats.down.delivered += 1;
+            }
+        });
+    })
+    .is_err()
+    {
+        return;
+    }
+
+    // ---- reader (inline) ----
+    loop {
+        if ctx.shutdown.load(Ordering::Relaxed) || seat.lane.epoch() != epoch {
+            break;
+        }
+        match read_frame(&mut r, ctx.cfg.max_frame) {
+            Ok(f) => match f.kind {
+                FrameKind::Heartbeat => {
+                    lock(&seat.state).stats.heartbeats += 1;
+                    crate::counter_add!("socket_heartbeats", 1);
+                }
+                FrameKind::Data => {
+                    let mut st = lock(&seat.state);
+                    if seat.lane.epoch() != epoch {
+                        break;
+                    }
+                    st.stats.up.sent += 1;
+                    if f.seq <= st.up_watermark {
+                        st.stats.up.suppressed += 1;
+                        continue;
+                    }
+                    st.up_watermark = f.seq;
+                    match M::decode(&f.payload) {
+                        Ok(m) => {
+                            st.stats.up.delivered += 1;
+                            drop(st);
+                            let _sp = crate::span!("frame_decode", die = seat_idx);
+                            if ctx.agg_tx.send(m).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            st.stats.corrupt += 1;
+                            crate::counter_add!("socket_corrupt", 1);
+                            drop(st);
+                            crate::log_warn!(
+                                "socket transport: seat {seat_idx}: corrupt frame, degrading link: {e:#}"
+                            );
+                            break;
+                        }
+                    }
+                }
+                other => {
+                    crate::log_warn!(
+                        "socket transport: seat {seat_idx}: unexpected {other:?} frame mid-session"
+                    );
+                    break;
+                }
+            },
+            Err(e) => {
+                if !is_io_loss(&e) {
+                    lock(&seat.state).stats.corrupt += 1;
+                    crate::counter_add!("socket_corrupt", 1);
+                    crate::log_warn!(
+                        "socket transport: seat {seat_idx}: corrupt frame, degrading link: {e:#}"
+                    );
+                }
+                break;
+            }
+        }
+    }
+    // Tear down this connection only (a newer seating stays live — its
+    // stream in `seat.conn` is left untouched; a dead stream lingering
+    // there until the next seating is harmless).
+    seat.lane.retire(epoch);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+// ---- worker side -------------------------------------------------------
+
+/// Why a dial attempt failed.
+enum DialError {
+    /// The coordinator said no (handshake REJECT) — fatal, do not retry.
+    Rejected(String),
+    /// Connection-level failure — retry with backoff.
+    Io(anyhow::Error),
+}
+
+/// One dial + handshake attempt.
+fn dial_once(
+    addr: &SocketAddr,
+    proto: &'static str,
+    seat: usize,
+    session: u64,
+    cfg: &SocketConfig,
+) -> Result<(TcpStream, u64), DialError> {
+    let _sp = crate::span!("socket_connect");
+    let stream = TcpStream::connect_timeout(addr, cfg.idle_timeout)
+        .map_err(|e| DialError::Io(anyhow!(e).context("dialing coordinator")))?;
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(cfg.idle_timeout));
+    let mut s = &stream;
+    write_preamble(&mut s).map_err(|e| DialError::Io(anyhow!(e).context("writing preamble")))?;
+    let hello = Hello { proto: proto.to_string(), seat, session };
+    write_frame(&mut s, &Frame::control(FrameKind::Hello, hello.encode()))
+        .map_err(|e| DialError::Io(anyhow!(e).context("writing hello")))?;
+    let reply = read_frame(&mut s, cfg.max_frame).map_err(DialError::Io)?;
+    match reply.kind {
+        FrameKind::Welcome => {
+            let w = Welcome::decode(&reply.payload).map_err(DialError::Io)?;
+            Ok((stream, w.session))
+        }
+        FrameKind::Reject => {
+            let reason = Reject::decode(&reply.payload)
+                .map(|r| r.reason)
+                .unwrap_or_else(|_| "unreadable reject".to_string());
+            Err(DialError::Rejected(reason))
+        }
+        other => Err(DialError::Io(anyhow!("expected WELCOME, got {other:?}"))),
+    }
+}
+
+/// Dial until seated, sleeping the backoff schedule between failures.
+/// A REJECT is fatal immediately; `max_reconnects` consecutive
+/// connection failures give up.
+fn dial_seated(
+    addr: &SocketAddr,
+    proto: &'static str,
+    seat: usize,
+    session: u64,
+    cfg: &SocketConfig,
+    backoff: &mut session::Backoff,
+    dead: &AtomicBool,
+) -> Result<(TcpStream, u64)> {
+    loop {
+        if dead.load(Ordering::Relaxed) {
+            anyhow::bail!("endpoint dropped while dialing");
+        }
+        match dial_once(addr, proto, seat, session, cfg) {
+            Ok(ok) => {
+                backoff.reset();
+                return Ok(ok);
+            }
+            Err(DialError::Rejected(reason)) => {
+                anyhow::bail!("seat {seat} rejected by coordinator: {reason}")
+            }
+            Err(DialError::Io(e)) => {
+                if backoff.attempts() >= cfg.max_reconnects {
+                    return Err(e.context(format!(
+                        "seat {seat}: giving up after {} failed dials",
+                        cfg.max_reconnects
+                    )));
+                }
+                let delay = backoff.next_delay();
+                crate::log_info!(
+                    "seat {seat}: dial failed ({e:#}); retrying in {:.0} ms (attempt {})",
+                    delay.as_secs_f64() * 1e3,
+                    backoff.attempts()
+                );
+                std::thread::sleep(delay);
+            }
+        }
+    }
+}
+
+/// Everything the worker's session-manager thread needs.
+struct EpCtx<C> {
+    addr: SocketAddr,
+    proto: &'static str,
+    seat: usize,
+    session: u64,
+    cfg: SocketConfig,
+    lane: Arc<OutLane>,
+    cmd_tx: mpsc::Sender<C>,
+    dead: Arc<AtomicBool>,
+    conn: Arc<Mutex<Option<TcpStream>>>,
+}
+
+/// One worker's side of the TCP transport. [`SocketEndpoint::connect`]
+/// seats the worker (retrying with backoff if the coordinator is not
+/// up yet); afterwards a session-manager thread keeps the link alive —
+/// heartbeats on idle, reconnect-with-backoff presenting the session
+/// nonce on connection loss — until the coordinator rejects the
+/// session or `max_reconnects` consecutive dials fail, at which point
+/// the endpoint reports [`LinkClosed`] and the worker loop winds down.
+pub struct SocketEndpoint<C, M> {
+    cmd_rx: mpsc::Receiver<C>,
+    lane: Arc<OutLane>,
+    dead: Arc<AtomicBool>,
+    conn: Arc<Mutex<Option<TcpStream>>>,
+    manager: Option<std::thread::JoinHandle<()>>,
+    _msg: PhantomData<M>,
+}
+
+impl<C, M> SocketEndpoint<C, M>
+where
+    C: Wire + WireProtocol + Send + 'static,
+    M: Wire,
+{
+    /// Dial `addr` and seat into `seat`, retrying with the configured
+    /// backoff until the coordinator answers (so workers may start
+    /// before the coordinator listens). Returns once seated — or with
+    /// the handshake rejection / exhaustion error.
+    pub fn connect(addr: impl ToSocketAddrs, seat: usize, cfg: SocketConfig) -> Result<Self> {
+        let addr = addr
+            .to_socket_addrs()
+            .context("resolving coordinator address")?
+            .next()
+            .ok_or_else(|| anyhow!("coordinator address resolved to nothing"))?;
+        let dead = Arc::new(AtomicBool::new(false));
+        let mut backoff = session::Backoff::new(
+            cfg.backoff_base,
+            cfg.backoff_cap,
+            cfg.backoff_seed ^ (seat as u64).wrapping_mul(0x9E37_79B9),
+        );
+        let (stream, session) =
+            dial_seated(&addr, C::PROTOCOL, seat, 0, &cfg, &mut backoff, &dead)?;
+        crate::log_info!("seat {seat}: connected to {addr} (session {session:#x})");
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let lane = Arc::new(OutLane::new(cfg.queue_cap));
+        let conn = Arc::new(Mutex::new(stream.try_clone().ok()));
+        let ctx = EpCtx {
+            addr,
+            proto: C::PROTOCOL,
+            seat,
+            session,
+            cfg,
+            lane: lane.clone(),
+            cmd_tx,
+            dead: dead.clone(),
+            conn: conn.clone(),
+        };
+        let manager = spawn_named(format!("sock-ep-{seat}"), move || {
+            endpoint_session(stream, backoff, ctx)
+        })
+        .context("spawning endpoint session thread")?;
+        Ok(Self { cmd_rx, lane, dead, conn, manager: Some(manager), _msg: PhantomData })
+    }
+}
+
+/// The worker session loop: run reader+writer over the current
+/// connection; on loss, redial with backoff presenting the session
+/// nonce; on REJECT or exhaustion, mark the endpoint dead (dropping
+/// `cmd_tx` on exit unblocks `recv` with [`LinkClosed`]).
+fn endpoint_session<C: Wire>(mut stream: TcpStream, mut backoff: session::Backoff, ctx: EpCtx<C>) {
+    crate::telemetry::set_die(ctx.seat);
+    let mut watermark = 0u64;
+    loop {
+        let epoch = ctx.lane.bump_epoch();
+        let wlane = ctx.lane.clone();
+        let heartbeat = ctx.cfg.heartbeat;
+        match stream.try_clone() {
+            Ok(ws) => {
+                if spawn_named(format!("sock-epw-{}", ctx.seat), move || {
+                    pump_frames(&wlane, &ws, epoch, heartbeat, |_| {});
+                })
+                .is_err()
+                {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+        *lock(&ctx.conn) = stream.try_clone().ok();
+
+        let mut r = &stream;
+        loop {
+            if ctx.dead.load(Ordering::Relaxed) {
+                break;
+            }
+            match read_frame(&mut r, ctx.cfg.max_frame) {
+                Ok(f) => match f.kind {
+                    FrameKind::Heartbeat => {
+                        crate::counter_add!("socket_heartbeats", 1);
+                    }
+                    FrameKind::Data => {
+                        if f.seq <= watermark {
+                            continue;
+                        }
+                        watermark = f.seq;
+                        match C::decode(&f.payload) {
+                            Ok(c) => {
+                                if ctx.cmd_tx.send(c).is_err() {
+                                    ctx.dead.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                            Err(e) => {
+                                crate::counter_add!("socket_corrupt", 1);
+                                crate::log_warn!(
+                                    "seat {}: corrupt command frame, reconnecting: {e:#}",
+                                    ctx.seat
+                                );
+                                break;
+                            }
+                        }
+                    }
+                    other => {
+                        crate::log_warn!(
+                            "seat {}: unexpected {other:?} frame mid-session",
+                            ctx.seat
+                        );
+                        break;
+                    }
+                },
+                Err(_) => break,
+            }
+        }
+
+        ctx.lane.retire(epoch);
+        let _ = stream.shutdown(Shutdown::Both);
+        lock(&ctx.conn).take();
+        if ctx.dead.load(Ordering::Relaxed) {
+            break;
+        }
+        match dial_seated(
+            &ctx.addr,
+            ctx.proto,
+            ctx.seat,
+            ctx.session,
+            &ctx.cfg,
+            &mut backoff,
+            &ctx.dead,
+        ) {
+            Ok((s, _session)) => {
+                crate::counter_add!("socket_reconnects", 1);
+                crate::log_info!("seat {}: reconnected to {}", ctx.seat, ctx.addr);
+                stream = s;
+            }
+            Err(e) => {
+                crate::log_warn!("seat {}: link dead: {e:#}", ctx.seat);
+                ctx.dead.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    ctx.lane.close();
+}
+
+impl<C, M> Endpoint<C, M> for SocketEndpoint<C, M>
+where
+    C: Wire + WireProtocol + Send + 'static,
+    M: Wire,
+{
+    fn recv(&self) -> Result<C, LinkClosed> {
+        self.cmd_rx.recv().map_err(|_| LinkClosed)
+    }
+
+    fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        if self.dead.load(Ordering::Relaxed) {
+            return Err(LinkClosed);
+        }
+        let text = {
+            let _sp = crate::span!("frame_encode");
+            msg.encode()
+        };
+        self.lane.push(text).map(|_| ())
+    }
+}
+
+impl<C, M> Drop for SocketEndpoint<C, M> {
+    fn drop(&mut self) {
+        self.dead.store(true, Ordering::Relaxed);
+        self.lane.close();
+        if let Some(s) = lock(&self.conn).take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.manager.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+    use crate::util::json::Json;
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Ping(u32);
+
+    impl Wire for Ping {
+        fn to_wire(&self) -> Json {
+            obj(vec![("t", Json::from("ping")), ("v", Json::from(self.0 as f64))])
+        }
+        fn from_wire(v: &Json) -> Result<Self> {
+            anyhow::ensure!(v.req("t")?.as_str()? == "ping", "not a ping");
+            Ok(Ping(v.req("v")?.as_f64()? as u32))
+        }
+    }
+
+    impl WireProtocol for Ping {
+        const PROTOCOL: &'static str = "ping";
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Pong(u32);
+
+    impl Wire for Pong {
+        fn to_wire(&self) -> Json {
+            obj(vec![("t", Json::from("pong")), ("v", Json::from(self.0 as f64))])
+        }
+        fn from_wire(v: &Json) -> Result<Self> {
+            anyhow::ensure!(v.req("t")?.as_str()? == "pong", "not a pong");
+            Ok(Pong(v.req("v")?.as_f64()? as u32))
+        }
+    }
+
+    /// A second protocol for cross-seating rejection tests.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Other(u32);
+
+    impl Wire for Other {
+        fn to_wire(&self) -> Json {
+            obj(vec![("t", Json::from("other")), ("v", Json::from(self.0 as f64))])
+        }
+        fn from_wire(v: &Json) -> Result<Self> {
+            anyhow::ensure!(v.req("t")?.as_str()? == "other", "not an other");
+            Ok(Other(v.req("v")?.as_f64()? as u32))
+        }
+    }
+
+    impl WireProtocol for Other {
+        const PROTOCOL: &'static str = "other";
+    }
+
+    fn quick_cfg() -> SocketConfig {
+        SocketConfig {
+            heartbeat: Duration::from_millis(40),
+            idle_timeout: Duration::from_millis(1500),
+            backoff_base: Duration::from_millis(20),
+            backoff_cap: Duration::from_millis(200),
+            max_reconnects: 4,
+            ..SocketConfig::default()
+        }
+    }
+
+    #[test]
+    fn loopback_round_trip_with_link_stats() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 2, quick_cfg()).unwrap();
+        let addr = net.local_addr();
+        let eps: Vec<SocketEndpoint<Ping, Pong>> = (0..2)
+            .map(|k| SocketEndpoint::connect(addr, k, quick_cfg()).unwrap())
+            .collect();
+        let workers: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                std::thread::spawn(move || {
+                    while let Ok(Ping(v)) = ep.recv() {
+                        if ep.send(Pong(v + 1)).is_err() {
+                            break;
+                        }
+                        if v >= 100 {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        for k in 0..2usize {
+            net.send(k, Ping(10 * k as u32)).unwrap();
+        }
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            got.push(net.recv_deadline(Instant::now() + Duration::from_secs(5)).unwrap());
+        }
+        got.sort_by_key(|p| p.0);
+        assert_eq!(got, vec![Pong(1), Pong(11)]);
+        for k in 0..2usize {
+            net.send(k, Ping(100)).unwrap();
+        }
+        for _ in 0..2 {
+            net.recv_deadline(Instant::now() + Duration::from_secs(5)).unwrap();
+        }
+        for w in workers {
+            w.join().unwrap();
+        }
+        let stats = net.link_stats();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.connects, 1);
+            assert_eq!(s.rejects, 0);
+            assert_eq!(s.corrupt, 0);
+            assert_eq!(s.down.sent, 2);
+            assert_eq!(s.down.delivered, 2);
+            assert_eq!(s.up.delivered, 2);
+            assert_eq!(s.up.suppressed, 0);
+        }
+    }
+
+    #[test]
+    fn cross_protocol_seat_is_rejected() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 1, quick_cfg()).unwrap();
+        let err = SocketEndpoint::<Other, Pong>::connect(net.local_addr(), 0, quick_cfg())
+            .err()
+            .expect("cross-protocol seating must fail");
+        let text = format!("{err:#}");
+        assert!(text.contains("protocol mismatch"), "{text}");
+        assert!(text.contains("rejected"), "{text}");
+        // Give the seat-level reject counter a beat to land.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(net.link_stats()[0].rejects, 1);
+    }
+
+    #[test]
+    fn unknown_seat_and_bad_magic_are_rejected() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 1, quick_cfg()).unwrap();
+        let err = SocketEndpoint::<Ping, Pong>::connect(net.local_addr(), 5, quick_cfg())
+            .err()
+            .expect("out-of-range seat must fail");
+        assert!(format!("{err:#}").contains("unknown seat"), "{err:#}");
+
+        // Raw garbage instead of the magic preamble.
+        use std::io::Write as _;
+        let mut s = TcpStream::connect(net.local_addr()).unwrap();
+        s.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        let reply = read_frame(&mut &s, session::MAX_FRAME);
+        // Either a REJECT frame or a straight hangup is acceptable.
+        if let Ok(f) = reply {
+            assert_eq!(f.kind, FrameKind::Reject);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let stats = net.link_stats();
+        assert!(stats[0].rejects >= 2, "rejects = {}", stats[0].rejects);
+    }
+
+    #[test]
+    fn session_nonce_gates_reseating() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 1, quick_cfg()).unwrap();
+        let addr = net.local_addr();
+        let cfg = quick_cfg();
+
+        // Fresh seat by hand.
+        let dial = |session: u64| dial_once(&addr, "ping", 0, session, &cfg);
+        let (s1, nonce) = dial(0).map_err(|_| "fresh dial failed").unwrap();
+        assert_ne!(nonce, 0);
+        // Reconnect presenting the nonce: accepted, same session.
+        let (s2, nonce2) = dial(nonce).map_err(|_| "reconnect dial failed").unwrap();
+        assert_eq!(nonce2, nonce);
+        // A stale nonce is turned away.
+        match dial(nonce ^ 0xDEAD) {
+            Err(DialError::Rejected(reason)) => {
+                assert!(reason.contains("stale session"), "{reason}")
+            }
+            _ => panic!("stale nonce must be rejected"),
+        }
+        std::thread::sleep(Duration::from_millis(50));
+        let stats = net.link_stats();
+        assert_eq!(stats[0].connects, 1);
+        assert_eq!(stats[0].reconnects, 1);
+        assert_eq!(stats[0].rejects, 1);
+        drop((s1, s2));
+    }
+
+    #[test]
+    fn heartbeats_keep_an_idle_link_warm() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 1, quick_cfg()).unwrap();
+        let ep: SocketEndpoint<Ping, Pong> =
+            SocketEndpoint::connect(net.local_addr(), 0, quick_cfg()).unwrap();
+        // Say nothing for several heartbeat intervals.
+        std::thread::sleep(Duration::from_millis(200));
+        let stats = net.link_stats();
+        assert!(stats[0].heartbeats >= 2, "heartbeats = {}", stats[0].heartbeats);
+        // The link still works after the quiet spell.
+        net.send(0, Ping(7)).unwrap();
+        let pong = std::thread::spawn(move || {
+            let Ping(v) = ep.recv().unwrap();
+            ep.send(Pong(v * 2)).unwrap();
+        });
+        let got = net.recv_deadline(Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(got, Pong(14));
+        pong.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_frame_degrades_the_link_not_the_process() {
+        let net: SocketTransport<Ping, Pong> =
+            SocketTransport::listen("127.0.0.1:0", 1, quick_cfg()).unwrap();
+        let addr = net.local_addr();
+        let cfg = quick_cfg();
+        let (s, _nonce) = dial_once(&addr, "ping", 0, 0, &cfg).map_err(|_| "dial").unwrap();
+        // A frame whose length prefix claims ~4 GB.
+        use std::io::Write as _;
+        let mut w = &s;
+        w.write_all(&0xFFFF_FFF0u32.to_be_bytes()).unwrap();
+        w.write_all(&[4u8]).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let stats = net.link_stats();
+        assert_eq!(stats[0].corrupt, 1);
+        // The transport survives: a fresh endpoint can seat again.
+        let ep: SocketEndpoint<Ping, Pong> = SocketEndpoint::connect(addr, 0, cfg).unwrap();
+        net.send(0, Ping(1)).unwrap();
+        let t = std::thread::spawn(move || {
+            let Ping(v) = ep.recv().unwrap();
+            ep.send(Pong(v + 1)).unwrap();
+        });
+        let got = net.recv_deadline(Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(got, Pong(2));
+        t.join().unwrap();
+    }
+}

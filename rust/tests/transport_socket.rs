@@ -1,0 +1,600 @@
+//! The hardened network edge, end to end over real loopback TCP: the
+//! gang protocols driven through `transport::SocketTransport` /
+//! `SocketEndpoint`, with every frame crossing the versioned seating
+//! handshake, the length-prefixed codec and the per-seat lanes.
+//!
+//! 1. **Loopback ≡ mpsc** — a 1-shard tempering run and a 1-die
+//!    training run over a real socket are bit-identical to the same
+//!    runs over in-process channels: TCP adds latency, never meaning.
+//! 2. **Kill ≡ die loss** — a worker whose process dies mid-round
+//!    surfaces exactly like the PR 6 fault paths: barrier timeout,
+//!    elastic shrink, and the survivors still sample the exact
+//!    Boltzmann marginals on the coldest rung.
+//! 3. **Reconnect ≡ regrow** — a fresh worker re-seating the lost
+//!    link answers the coordinator's probes and the gang regrows to
+//!    its full ladder.
+//! 4. **Handshake rejections** — bad magic, version skew,
+//!    cross-protocol seating and unknown seats are each turned away
+//!    with a named `REJECT`, audited in the link counters, and none of
+//!    it poisons the gang for a well-formed worker.
+//!
+//! A red seeded case writes its membership/link transcript to
+//! `target/socket-failing-transcript.json` (the CI artifact) and
+//! prints the seed to replay it verbatim.
+
+mod common;
+
+use std::cell::Cell;
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use common::{loaded_sampler, loaded_sampler_lossless, small_exact_problem, test_seed, train_die};
+use pchip::annealing::{BetaLadder, TemperingParams};
+use pchip::chimera::{and_gate_layout, Topology};
+use pchip::coordinator::{
+    run_sharded_tempering_net, shard_worker_loop, ShardCmd, ShardMsg, ShardedRun,
+    ShardedTemperingParams,
+};
+use pchip::learning::{
+    dataset, run_training_net, train_worker_loop, CdParams, TrainCmd, TrainMsg, TrainParams,
+    TrainableChip, TrainedRun,
+};
+use pchip::metrics::{LinkStats, MembershipChange, MembershipEvent};
+use pchip::problems::{exact_boltzmann, sk, IsingProblem};
+use pchip::sampler::Sampler;
+use pchip::transport::session::{
+    read_frame, write_frame, write_preamble, Frame, FrameKind, Hello, Reject, MAGIC, MAX_FRAME,
+    PROTOCOL_VERSION,
+};
+use pchip::transport::{
+    mpsc_net, Endpoint, LinkClosed, SocketConfig, SocketEndpoint, SocketTransport, Transport, Wire,
+};
+
+/// Persist the failing run's membership/link transcript where CI
+/// uploads it, then go red loudly.
+fn fail_socket(seed: u64, run: Option<&ShardedRun>, why: &str) -> ! {
+    let dir = std::path::Path::new("target");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join("socket-failing-transcript.json");
+    let (membership, links) = match run {
+        Some(r) => (format!("{:?}", r.membership), format!("{:?}", r.net)),
+        None => (String::new(), String::new()),
+    };
+    let body = format!(
+        "{{\"seed\": {seed}, \"why\": {why:?}, \"membership\": {membership:?}, \
+         \"links\": {links:?}}}"
+    );
+    let _ = std::fs::write(&path, body);
+    panic!(
+        "socket seed {seed} failed ({why}); transcript written to {} — replay with \
+         PCHIP_TEST_SEED={seed}",
+        path.display()
+    );
+}
+
+/// Exact Boltzmann marginals of `problem`'s support spins at `beta`.
+fn exact_marginals(problem: &IsingProblem, beta: f64) -> Vec<f64> {
+    let support = problem.support();
+    let (states, probs) = exact_boltzmann(problem, beta).unwrap();
+    (0..support.len())
+        .map(|k| states.iter().zip(&probs).map(|(s, &p)| s[k] as f64 * p).sum())
+        .collect()
+}
+
+/// Coldest-rung marginal accumulator — the same observer the fault
+/// and network-simulation suites use, now fed over real sockets.
+struct MarginalAcc {
+    burn_in: usize,
+    sums: Vec<f64>,
+    n: usize,
+}
+
+impl MarginalAcc {
+    fn new(spins: usize) -> Self {
+        Self { burn_in: 200, sums: vec![0.0; spins], n: 0 }
+    }
+
+    fn take(&mut self, round: usize, states: &[Vec<i8>], rungs: &[usize], support: &[usize]) {
+        if round < self.burn_in {
+            return;
+        }
+        let cold = &states[rungs[rungs.len() - 1]];
+        for (k, &s) in support.iter().enumerate() {
+            self.sums[k] += cold[s] as f64;
+        }
+        self.n += 1;
+    }
+
+    fn marginals(&self) -> Vec<f64> {
+        self.sums.iter().map(|s| s / self.n.max(1) as f64).collect()
+    }
+}
+
+/// The elastic 3-die marginal-run parameters — the exact setup the
+/// chaos and SimNet suites validated, so any drift seen here is the
+/// socket edge's doing.
+fn marginal_params() -> ShardedTemperingParams {
+    ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.25, 1.0, 6),
+            sweeps_per_round: 2,
+            rounds: 4200,
+            record_every: 100,
+            seed: 0xE117,
+            ..Default::default()
+        },
+        shards: 3,
+        barrier_timeout: Duration::from_secs(2),
+        pipeline: false,
+        elastic: true,
+    }
+}
+
+/// Seats that ended the run dead (Lost/Stalled with no later rejoin).
+fn finally_dead(events: &[MembershipEvent]) -> Vec<usize> {
+    let mut dead = std::collections::BTreeSet::new();
+    for e in events {
+        match e.change {
+            MembershipChange::Lost | MembershipChange::Stalled => {
+                dead.insert(e.die);
+            }
+            MembershipChange::Rejoined => {
+                dead.remove(&e.die);
+            }
+        }
+    }
+    dead.into_iter().collect()
+}
+
+/// The training setup of the chaos and SimNet suites.
+fn gate_params(dies: usize, elastic: bool) -> TrainParams {
+    let cd = CdParams {
+        epochs: 60,
+        lr: 0.15,
+        k_sweeps: 3,
+        samples_per_pattern: 8,
+        ..CdParams::default()
+    };
+    let mut p = TrainParams::new(and_gate_layout(0, 0), dataset::and_gate(), cd);
+    p.dies = dies;
+    p.elastic = elastic;
+    p.eval_every = 10;
+    p.eval_samples = 1500;
+    p.barrier_timeout = Duration::from_secs(2);
+    p
+}
+
+/// A worker endpoint that dies after a scripted number of commands:
+/// `recv` reports the link closed, the worker loop exits, and dropping
+/// the inner endpoint severs the TCP connection mid-round — a worker
+/// crash exactly as the coordinator experiences one.
+struct Severed<E> {
+    inner: E,
+    left: Cell<usize>,
+}
+
+impl<C, M, E: Endpoint<C, M>> Endpoint<C, M> for Severed<E> {
+    fn recv(&self) -> Result<C, LinkClosed> {
+        if self.left.get() == 0 {
+            return Err(LinkClosed);
+        }
+        self.left.set(self.left.get() - 1);
+        self.inner.recv()
+    }
+
+    fn send(&self, msg: M) -> Result<(), LinkClosed> {
+        self.inner.send(msg)
+    }
+}
+
+type TemperLog = Vec<(usize, Vec<Vec<i8>>, Vec<usize>)>;
+
+/// Drive a 1-shard tempering run over `net` with an in-thread worker
+/// owning `chip` and seated through `ep`, logging every round.
+fn temper_over<S, E>(
+    params: &ShardedTemperingParams,
+    problem: &IsingProblem,
+    net: &impl Transport<ShardCmd, ShardMsg>,
+    ep: E,
+    chip: S,
+) -> (ShardedRun, TemperLog)
+where
+    S: Sampler + Send,
+    E: Endpoint<ShardCmd, ShardMsg> + Send,
+{
+    let mut log: TemperLog = Vec::new();
+    let run = std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut chip = chip;
+            shard_worker_loop(0, &mut chip, problem, &ep);
+        });
+        run_sharded_tempering_net(params, 1.0, net, |round, states, map| {
+            log.push((round, states.to_vec(), map.to_vec()));
+        })
+    })
+    .expect("net tempering run");
+    (run, log)
+}
+
+/// Drive a 1-die training run over `net` with an in-thread worker.
+fn train_over<C, E>(
+    params: &TrainParams,
+    net: &impl Transport<TrainCmd, TrainMsg>,
+    ep: E,
+    chip: C,
+) -> (TrainedRun, Vec<LinkStats>)
+where
+    C: TrainableChip + Send,
+    E: Endpoint<TrainCmd, TrainMsg> + Send,
+{
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut chip = chip;
+            train_worker_loop(0, &mut chip, params, &ep);
+        });
+        run_training_net(params, None, params.cd.epochs, net, |_| {})
+    })
+    .expect("net training run")
+}
+
+#[test]
+fn loopback_socket_tempering_is_bit_identical_to_mpsc() {
+    let topo = Topology::new();
+    let problem = sk::chimera_pm_j(&topo, 3);
+    let params = ShardedTemperingParams {
+        base: TemperingParams {
+            ladder: BetaLadder::geometric(0.2, 3.0, 8),
+            sweeps_per_round: 2,
+            rounds: 40,
+            adapt_every: 10, // exercise ladder adaptation through the frames
+            record_every: 4,
+            seed: 0xBEEF,
+            ..Default::default()
+        },
+        shards: 1,
+        barrier_timeout: Duration::from_secs(60),
+        pipeline: false,
+        elastic: false,
+    };
+
+    // reference: the same driver over in-process channels
+    let (mpsc, mut eps) = mpsc_net::<ShardCmd, ShardMsg>(1);
+    let ep = eps.pop().expect("one endpoint");
+    let chip = loaded_sampler_lossless(&problem, &topo, 8, 77);
+    let (reference, ref_log) = temper_over(&params, &problem, &mpsc, ep, chip);
+
+    // the same sampler seed, but every frame rides loopback TCP
+    let cfg = SocketConfig::default();
+    let net = SocketTransport::<ShardCmd, ShardMsg>::listen("127.0.0.1:0", 1, cfg.clone())
+        .expect("bind loopback listener");
+    let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(net.local_addr(), 0, cfg)
+        .expect("seat the loopback worker");
+    let chip = loaded_sampler_lossless(&problem, &topo, 8, 77);
+    let (sock, sock_log) = temper_over(&params, &problem, &net, ep, chip);
+
+    // every round: identical spin states and rung→chain maps
+    assert_eq!(ref_log.len(), sock_log.len());
+    for ((ra, sa, ma), (rb, sb, mb)) in ref_log.iter().zip(&sock_log) {
+        assert_eq!(ra, rb);
+        assert_eq!(ma, mb, "rung→chain maps diverged at round {ra}");
+        assert_eq!(sa, sb, "spin states diverged at round {ra}");
+    }
+    // identical outputs, bit for bit
+    assert_eq!(reference.run.best_energy.to_bits(), sock.run.best_energy.to_bits());
+    assert_eq!(reference.run.best_state, sock.run.best_state);
+    assert_eq!(reference.run.total_sweeps, sock.run.total_sweeps);
+    assert_eq!(reference.run.trace.rows, sock.run.trace.rows);
+    assert_eq!(reference.run.swaps.attempts, sock.run.swaps.attempts);
+    assert_eq!(reference.run.swaps.accepts, sock.run.swaps.accepts);
+    assert_eq!(reference.run.ladder.betas, sock.run.ladder.betas, "adapted ladders diverged");
+    assert!(sock.membership.is_empty(), "a healthy loopback run changes no membership");
+    // TCP loopback accounting: one fresh seating, everything delivered
+    let s = &sock.net[0];
+    assert_eq!((s.connects, s.reconnects, s.rejects, s.corrupt), (1, 0, 0, 0));
+    assert_eq!(s.up.delivered, s.up.sent, "every readback frame must have been delivered");
+    assert!(s.down.sent >= params.base.rounds as u64, "commands must have crossed the wire");
+}
+
+#[test]
+fn loopback_socket_training_is_bit_identical_to_mpsc() {
+    let params = gate_params(1, false);
+
+    // reference: the same driver over in-process channels
+    let (mpsc, mut eps) = mpsc_net::<TrainCmd, TrainMsg>(1);
+    let ep = eps.pop().expect("one endpoint");
+    let (reference, _) = train_over(&params, &mpsc, ep, train_die(41, 8));
+
+    // the same die, but every program/command/report rides TCP
+    let cfg = SocketConfig::default();
+    let net = SocketTransport::<TrainCmd, TrainMsg>::listen("127.0.0.1:0", 1, cfg.clone())
+        .expect("bind loopback listener");
+    let ep = SocketEndpoint::<TrainCmd, TrainMsg>::connect(net.local_addr(), 0, cfg)
+        .expect("seat the loopback worker");
+    let (sock, links) = train_over(&params, &net, ep, train_die(41, 8));
+
+    // the whole learning trajectory must match, not just the endpoint
+    assert_eq!(reference.stats.len(), sock.stats.len());
+    for (a, b) in reference.stats.iter().zip(&sock.stats) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.kl.to_bits(), b.kl.to_bits(), "KL diverged at epoch {}", a.epoch);
+        assert_eq!(a.corr_gap.to_bits(), b.corr_gap.to_bits(), "corr gap at epoch {}", a.epoch);
+        assert_eq!(a.valid_mass.to_bits(), b.valid_mass.to_bits(), "mass at epoch {}", a.epoch);
+    }
+    assert_eq!(reference.final_kl.to_bits(), sock.final_kl.to_bits());
+    assert_eq!(reference.final_valid_mass.to_bits(), sock.final_valid_mass.to_bits());
+    assert_eq!(reference.total_sweeps, sock.total_sweeps);
+    assert_eq!(reference.codes, sock.codes, "final register images diverged");
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&reference.checkpoint.w), bits(&sock.checkpoint.w));
+    assert_eq!(bits(&reference.checkpoint.b), bits(&sock.checkpoint.b));
+    assert_eq!(reference.checkpoint.chains, sock.checkpoint.chains);
+    assert!(sock.membership.is_empty(), "a healthy loopback run changes no membership");
+    // TCP loopback accounting on the single link
+    let s = &links[0];
+    assert_eq!((s.connects, s.reconnects, s.corrupt), (1, 0, 0));
+    assert_eq!(s.up.delivered, s.up.sent, "every report frame must have been delivered");
+    assert!(s.down.sent > params.cd.epochs as u64, "one program + one command per epoch");
+}
+
+#[test]
+fn a_killed_socket_worker_is_absorbed_by_elastic_shrink() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let exact_m = exact_marginals(&problem, 1.0);
+    // CI fans the kill round out over a seed matrix via PCHIP_TEST_SEED
+    let seed = test_seed(0x50C7_0);
+    let sever_after = 12 + (seed % 48) as usize;
+
+    let params = marginal_params();
+    let cfg = SocketConfig::default();
+    let net = SocketTransport::<ShardCmd, ShardMsg>::listen("127.0.0.1:0", 3, cfg.clone())
+        .expect("bind loopback listener");
+    let addr = net.local_addr();
+
+    let mut acc = MarginalAcc::new(support.len());
+    let result = std::thread::scope(|s| {
+        for (seat, chip_seed) in [(0usize, 11u64), (2, 0x2011)] {
+            let cfg = cfg.clone();
+            let (problem, topo) = (&problem, &topo);
+            s.spawn(move || {
+                let mut chip = loaded_sampler(problem, topo, 2, chip_seed);
+                let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, seat, cfg)
+                    .expect("seat worker");
+                shard_worker_loop(seat, &mut chip, problem, &ep);
+            });
+        }
+        {
+            let cfg = cfg.clone();
+            let (problem, topo) = (&problem, &topo);
+            s.spawn(move || {
+                let mut chip = loaded_sampler(problem, topo, 2, 0x1011);
+                let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, 1, cfg)
+                    .expect("seat worker");
+                let ep = Severed { inner: ep, left: Cell::new(sever_after) };
+                shard_worker_loop(1, &mut chip, problem, &ep);
+                // the loop exited on the severed recv; dropping the
+                // endpoint closes the socket mid-round — all the
+                // coordinator ever sees is silence at the barrier
+            });
+        }
+        run_sharded_tempering_net(&params, 1.0, &net, |round, states, rungs| {
+            acc.take(round, states, rungs, &support)
+        })
+    });
+    let run = match result {
+        Ok(r) => r,
+        Err(e) => fail_socket(seed, None, &format!("{e:#}")),
+    };
+
+    // the break surfaces exactly like PR 6 die loss: seat 1 finally
+    // dead, the gang re-tiled onto 2 survivors hosting a 4-rung ladder
+    // with the cold endpoint still pinned at the target β
+    if finally_dead(&run.membership) != vec![1] {
+        fail_socket(seed, Some(&run), "seat 1 must end the run dead");
+    }
+    if run.shards != 2 {
+        fail_socket(seed, Some(&run), &format!("gang ended with {} shards, want 2", run.shards));
+    }
+    assert_eq!(run.run.ladder.betas.len(), 4, "2 survivors × 2 chains host 4 rungs");
+    assert_eq!(*run.run.ladder.betas.last().unwrap(), 1.0, "cold endpoint must stay pinned");
+    // the survivors still sample the exact Boltzmann marginals
+    if acc.n <= 3500 {
+        fail_socket(seed, Some(&run), &format!("expected post-burn-in samples, got {}", acc.n));
+    }
+    let got = acc.marginals();
+    for (j, &s) in support.iter().enumerate() {
+        if (got[j] - exact_m[j]).abs() >= 0.15 {
+            fail_socket(
+                seed,
+                Some(&run),
+                &format!(
+                    "spin {s}: post-shrink marginal {:.3} vs exact {:.3}",
+                    got[j], exact_m[j]
+                ),
+            );
+        }
+    }
+    // the link audit: one seating, then the coordinator's probes piled
+    // up behind a dead connection instead of being delivered
+    assert_eq!(run.net[1].connects, 1, "seat 1 seated exactly once");
+    assert!(run.net[1].down.sent > run.net[1].down.delivered, "probes must outrun delivery");
+}
+
+#[test]
+fn a_reconnecting_worker_rejoins_and_the_ladder_regrows() {
+    let topo = Topology::new();
+    let problem = small_exact_problem(&topo);
+    let support = problem.support();
+    let exact_m = exact_marginals(&problem, 1.0);
+    let seed = test_seed(0x50C7_1);
+    let sever_after = 12 + (seed % 48) as usize;
+
+    let params = marginal_params();
+    let cfg = SocketConfig::default();
+    let net = SocketTransport::<ShardCmd, ShardMsg>::listen("127.0.0.1:0", 3, cfg.clone())
+        .expect("bind loopback listener");
+    let addr = net.local_addr();
+
+    let mut acc = MarginalAcc::new(support.len());
+    let round_seen = AtomicUsize::new(0);
+    let done = AtomicBool::new(false);
+    let result = std::thread::scope(|s| {
+        for (seat, chip_seed) in [(0usize, 11u64), (2, 0x2011)] {
+            let cfg = cfg.clone();
+            let (problem, topo) = (&problem, &topo);
+            s.spawn(move || {
+                let mut chip = loaded_sampler(problem, topo, 2, chip_seed);
+                let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, seat, cfg)
+                    .expect("seat worker");
+                shard_worker_loop(seat, &mut chip, problem, &ep);
+            });
+        }
+        {
+            let cfg = cfg.clone();
+            let (problem, topo) = (&problem, &topo);
+            let (round_seen, done) = (&round_seen, &done);
+            s.spawn(move || {
+                {
+                    let mut chip = loaded_sampler(problem, topo, 2, 0x1011);
+                    let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, 1, cfg.clone())
+                        .expect("seat worker");
+                    let ep = Severed { inner: ep, left: Cell::new(sever_after) };
+                    shard_worker_loop(1, &mut chip, problem, &ep);
+                }
+                // the endpoint dropped above, severing the connection;
+                // reconnect only once the coordinator has demonstrably
+                // declared the loss and moved on (rounds advanced past
+                // the break — seat 1 was required at every barrier
+                // until the shrink)
+                let died_at = round_seen.load(Ordering::Relaxed);
+                let deadline = Instant::now() + Duration::from_secs(30);
+                while round_seen.load(Ordering::Relaxed) < died_at + 5
+                    && Instant::now() < deadline
+                {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                if done.load(Ordering::Relaxed) {
+                    return; // the run ended before the seat could return
+                }
+                // a fresh die, a fresh session nonce: the seat's probe
+                // lane answers again and the gang regrows
+                let mut chip = loaded_sampler(problem, topo, 2, 0x3011);
+                let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, 1, cfg)
+                    .expect("reseat the revived worker");
+                shard_worker_loop(1, &mut chip, problem, &ep);
+            });
+        }
+        let r = run_sharded_tempering_net(&params, 1.0, &net, |round, st, rg| {
+            acc.take(round, st, rg, &support);
+            round_seen.store(round, Ordering::Relaxed);
+        });
+        done.store(true, Ordering::Relaxed);
+        r
+    });
+    let run = match result {
+        Ok(r) => r,
+        Err(e) => fail_socket(seed, None, &format!("{e:#}")),
+    };
+
+    // loss then rejoin, in that order — and nobody ends the run dead
+    let lost =
+        run.membership.iter().position(|e| e.die == 1 && e.change == MembershipChange::Lost);
+    let back =
+        run.membership.iter().position(|e| e.die == 1 && e.change == MembershipChange::Rejoined);
+    match (lost, back) {
+        (Some(l), Some(b)) if l < b => {}
+        _ => fail_socket(seed, Some(&run), "want seat 1 Lost then Rejoined"),
+    }
+    if !finally_dead(&run.membership).is_empty() {
+        fail_socket(seed, Some(&run), "every seat must end the run alive");
+    }
+    if run.shards != 3 {
+        fail_socket(seed, Some(&run), &format!("gang ended with {} shards, want 3", run.shards));
+    }
+    assert_eq!(run.run.ladder.betas.len(), 6, "ladder must regrow to its target size");
+    assert!(run.run.best_energy.is_finite());
+    // the regrown gang still samples the exact Boltzmann marginals
+    if acc.n <= 3500 {
+        fail_socket(seed, Some(&run), &format!("expected post-burn-in samples, got {}", acc.n));
+    }
+    let got = acc.marginals();
+    for (j, &s) in support.iter().enumerate() {
+        if (got[j] - exact_m[j]).abs() >= 0.15 {
+            fail_socket(
+                seed,
+                Some(&run),
+                &format!(
+                    "spin {s}: post-regrow marginal {:.3} vs exact {:.3}",
+                    got[j], exact_m[j]
+                ),
+            );
+        }
+    }
+    // the link audit: two fresh seatings on seat 1 (the crash, then
+    // the replacement), each a full handshake
+    assert_eq!(run.net[1].connects, 2, "seat 1 must have seated twice: {:?}", run.net[1]);
+}
+
+/// Dial raw bytes at the listener and return the `REJECT` reason it
+/// answers with before closing the connection.
+fn rejected(addr: SocketAddr, knock: impl FnOnce(&mut TcpStream) -> std::io::Result<()>) -> String {
+    let mut stream = TcpStream::connect(addr).expect("dial listener");
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    knock(&mut stream).expect("write handshake bytes");
+    let mut r = &stream;
+    let frame = read_frame(&mut r, MAX_FRAME).expect("a REJECT frame before the close");
+    assert_eq!(frame.kind, FrameKind::Reject, "expected a REJECT, got {:?}", frame.kind);
+    Reject::decode(&frame.payload).expect("well-formed reject payload").reason
+}
+
+#[test]
+fn handshake_rejections_name_their_reason_and_leave_the_gang_seatable() {
+    let cfg = SocketConfig::default();
+    let net = SocketTransport::<ShardCmd, ShardMsg>::listen("127.0.0.1:0", 2, cfg.clone())
+        .expect("bind loopback listener");
+    let addr = net.local_addr();
+
+    // wrong magic: not a pchip socket peer at all
+    let reason = rejected(addr, |s| s.write_all(b"NOTPCH\x00\x01"));
+    assert!(reason.contains("bad magic"), "got: {reason}");
+
+    // right magic, wrong protocol version
+    let reason = rejected(addr, |s| {
+        let mut buf = [0u8; 8];
+        buf[..6].copy_from_slice(&MAGIC);
+        buf[6..].copy_from_slice(&(PROTOCOL_VERSION + 1).to_be_bytes());
+        s.write_all(&buf)
+    });
+    assert!(reason.contains("version skew"), "got: {reason}");
+
+    // a training worker knocking on a tempering gang's door
+    let reason = rejected(addr, |s| {
+        write_preamble(s)?;
+        let hello = Hello { proto: "train".into(), seat: 0, session: 0 };
+        write_frame(s, &Frame::control(FrameKind::Hello, hello.encode()))
+    });
+    assert!(reason.contains("protocol mismatch"), "got: {reason}");
+
+    // a seat the gang doesn't have
+    let reason = rejected(addr, |s| {
+        write_preamble(s)?;
+        let hello = Hello { proto: "temper".into(), seat: 9, session: 0 };
+        write_frame(s, &Frame::control(FrameKind::Hello, hello.encode()))
+    });
+    assert!(reason.contains("unknown seat"), "got: {reason}");
+
+    // none of it poisons the gang: a well-formed worker still seats
+    // and its traffic flows — and every refusal was audited
+    let ep = SocketEndpoint::<ShardCmd, ShardMsg>::connect(addr, 0, cfg).expect("seat worker");
+    ep.send(ShardMsg::Ready { shard: 0, batch: 2 }).expect("send ready");
+    match net.recv_deadline(Instant::now() + Duration::from_secs(5)) {
+        Ok(ShardMsg::Ready { shard, batch }) => assert_eq!((shard, batch), (0, 2)),
+        other => panic!("expected the worker's Ready, got {other:?}"),
+    }
+    let stats = net.link_stats();
+    assert_eq!(stats[0].connects, 1);
+    assert!(stats[0].rejects >= 4, "refusals must be audited: {:?}", stats[0]);
+}

@@ -208,6 +208,98 @@ fn cross_protocol_frames_are_rejected() {
     });
 }
 
+// ---- socket framing (`transport/session.rs`) ---------------------------
+//
+// The byte layer under the JSON codec: `[u32 len][u8 kind][u64 seq]
+// [payload]`. Same contract as the text layer — round-trip exact,
+// truncation and corruption error instead of panicking — plus the
+// robustness property the text layer can't state: a corrupt length
+// prefix is rejected *before* any allocation happens.
+
+use pchip::transport::session::{read_frame, Frame, FrameKind, MAX_FRAME};
+
+/// A random frame of the kinds that actually cross a socket: sequenced
+/// data carrying a real protocol message, or an unsequenced control.
+fn arb_frame(rng: &mut HostRng) -> Frame {
+    match rng.below(4) {
+        0 => Frame::data(rng.next_u64(), arb_shard_msg(rng).encode()),
+        1 => Frame::data(rng.next_u64(), arb_train_msg(rng).encode()),
+        2 => Frame::control(FrameKind::Heartbeat, String::new()),
+        _ => Frame::control(FrameKind::Reject, format!("seat {} taken", rng.below(8))),
+    }
+}
+
+#[test]
+fn socket_frames_round_trip_bit_for_bit() {
+    prop::check("socket frame round-trip", 300, |rng| {
+        // a short stream, not just one frame: framing must also find
+        // each frame's end exactly so the next one starts clean
+        let frames: Vec<Frame> = (0..1 + rng.below(4)).map(|_| arb_frame(rng)).collect();
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.to_bytes());
+        }
+        let mut r = &bytes[..];
+        for f in &frames {
+            let back = read_frame(&mut r, MAX_FRAME).expect("valid frame");
+            assert_eq!(&back, f, "kind, seq and payload must survive the byte layer");
+        }
+        assert!(r.is_empty(), "framing must consume each frame exactly");
+    });
+}
+
+#[test]
+fn truncated_socket_frames_error_instead_of_panicking() {
+    prop::check("socket frame truncation", 300, |rng| {
+        let bytes = arb_frame(rng).to_bytes();
+        // every strict prefix — mid-length-prefix, mid-header,
+        // mid-payload — must surface as Err, never a panic or a hang
+        let cut = rng.below(bytes.len());
+        let err = read_frame(&mut &bytes[..cut], MAX_FRAME)
+            .expect_err("a truncated frame decoded cleanly");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("length prefix"),
+            "truncation at {cut}/{} gave an unrelated error: {msg}",
+            bytes.len()
+        );
+    });
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // a corrupt length prefix claiming a multi-GB payload must be
+    // refused by the guard, not handed to an allocator — the test
+    // passing at all (no OOM) is half the point
+    for len in [MAX_FRAME + 9 + 1, u32::MAX / 2, u32::MAX] {
+        let mut bytes = len.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[4; 64]); // far fewer bytes than claimed
+        let err = read_frame(&mut &bytes[..], MAX_FRAME).expect_err("oversized frame accepted");
+        assert!(format!("{err:#}").contains("oversized"), "wrong rejection: {err:#}");
+    }
+    // and a length too small to even hold the header is corrupt, not
+    // an empty frame
+    for len in 0u32..9 {
+        let mut bytes = len.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0; 16]);
+        let err = read_frame(&mut &bytes[..], MAX_FRAME).expect_err("undersized frame accepted");
+        assert!(format!("{err:#}").contains("corrupt"), "wrong rejection: {err:#}");
+    }
+}
+
+#[test]
+fn corrupted_socket_frames_never_panic() {
+    prop::check("socket frame corruption", 400, |rng| {
+        let mut bytes = arb_frame(rng).to_bytes();
+        let at = rng.below(bytes.len());
+        bytes[at] ^= 1u8 << rng.below(8); // any byte, any bit — headers included
+        // a modest ceiling keeps a corrupted length prefix from turning
+        // the property run into an allocation benchmark; the contract
+        // (Err-or-a-valid-frame, never a panic) is ceiling-independent
+        let _ = read_frame(&mut &bytes[..], 1 << 20);
+    });
+}
+
 #[test]
 fn grad_attempt_echo_never_collides_with_the_discriminator() {
     // TrainMsg::Grad's `tag` field (the EpochShard attempt echo) rides
